@@ -1,0 +1,28 @@
+//! Cluster-scale simulation: reproduce the paper's headline run — 36,848
+//! tiles on 8..100 hybrid nodes (Fig. 14) — with the calibrated
+//! discrete-event simulator driving the *production* scheduler code.
+//!
+//!     cargo run --release --example cluster_sim [n_tiles]
+
+use htap::sim::experiments::fig14;
+
+fn main() {
+    let n_tiles: usize = std::env::args().nth(1).and_then(|s| s.parse().ok()).unwrap_or(36_848);
+    println!("strong scaling, {n_tiles} tiles (paper: 340 WSIs = 36,848 4Kx4K tiles)\n");
+    println!(
+        "{:>6} {:>12} {:>14} {:>10} {:>12} {:>14}",
+        "nodes", "FCFS (s)", "PATS+DL+PF (s)", "tiles/s", "efficiency", "compute-only"
+    );
+    for r in fig14(&[8, 16, 32, 50, 75, 100], n_tiles) {
+        println!(
+            "{:>6} {:>12.1} {:>14.1} {:>10.1} {:>11.1}% {:>13.1}%",
+            r.nodes,
+            r.fcfs_secs,
+            r.pats_all_secs,
+            r.tiles_per_second,
+            r.efficiency * 100.0,
+            r.compute_efficiency * 100.0
+        );
+    }
+    println!("\npaper reference: ~150 tiles/s at 100 nodes, 77% efficiency (93% compute-only)");
+}

@@ -1,0 +1,66 @@
+//! Distributed mode demo: a Manager served over TCP and two Worker
+//! processes' worth of Workers (in threads here so the example is
+//! self-contained; `htap manager` / `htap worker` run them as separate
+//! processes across machines).
+//!
+//!     make artifacts && cargo run --release --example distributed
+
+use htap::app::{build_workflow, stage_bindings, AppParams};
+use htap::config::RunConfig;
+use htap::coordinator::{worker::run_worker, Manager};
+use htap::data::{SynthConfig, TileStore};
+use htap::metrics::MetricsHub;
+use htap::net::{ManagerServer, RemoteManager};
+use htap::runtime::ArtifactManifest;
+use std::sync::Arc;
+
+fn main() -> Result<(), Box<dyn std::error::Error>> {
+    let tile_size = 64;
+    let n_tiles = 6;
+    let n_workers = 2;
+
+    let params = AppParams::for_tile_size(tile_size);
+    let workflow = Arc::new(build_workflow(&params, false));
+    let store = Arc::new(TileStore::new(SynthConfig::for_tile_size(tile_size, 3), n_tiles));
+
+    let manager = Manager::new(workflow.clone(), store.loader(), n_tiles)?;
+    let server = ManagerServer::bind("127.0.0.1:0", manager.clone())?;
+    let addr = server.local_addr();
+    println!("manager listening on {addr}");
+    let server_thread = std::thread::spawn(move || server.serve(n_workers));
+
+    let mut workers = Vec::new();
+    for w in 0..n_workers {
+        let addr = addr.clone();
+        let workflow = workflow.clone();
+        workers.push(std::thread::spawn(move || {
+            let source = Arc::new(RemoteManager::connect(&addr).expect("connect"));
+            let cfg = RunConfig {
+                tile_size,
+                n_tiles,
+                cpu_workers: 1,
+                gpu_workers: 1,
+                window: 2,
+                ..Default::default()
+            };
+            let metrics = Arc::new(MetricsHub::new());
+            run_worker(
+                source,
+                workflow,
+                cfg,
+                Arc::new(ArtifactManifest::discover().expect("artifacts")),
+                metrics.clone(),
+                stage_bindings(),
+            )
+            .expect("worker");
+            println!("worker {w}: executed {} op instances", metrics.report().total_executed());
+        }));
+    }
+    for w in workers {
+        w.join().unwrap();
+    }
+    server_thread.join().unwrap()?;
+    let (done, total) = manager.progress();
+    println!("workflow complete: {done}/{total} stage instances");
+    Ok(())
+}

@@ -1,0 +1,43 @@
+//! Quickstart: build the WSI workflow, run it on a few synthetic tiles with
+//! the hybrid coordinator (CPU threads + a PJRT "GPU" device), print the
+//! execution profile.
+//!
+//!     make artifacts && cargo run --release --example quickstart
+
+use htap::app::{build_workflow, stage_bindings, AppParams};
+use htap::config::RunConfig;
+use htap::coordinator::run_local;
+use htap::data::{SynthConfig, TileStore};
+use std::sync::Arc;
+
+fn main() -> Result<(), Box<dyn std::error::Error>> {
+    let tile_size = 64;
+    let n_tiles = 8;
+
+    // 1. describe the analysis as a hierarchical workflow (paper Fig. 1/2)
+    let params = AppParams::for_tile_size(tile_size);
+    let workflow = Arc::new(build_workflow(&params, /*with_classification=*/ true));
+    println!(
+        "workflow '{}': {} stages, {} fine-grain ops",
+        workflow.name,
+        workflow.stages.len(),
+        workflow.total_ops()
+    );
+
+    // 2. a data source: synthetic H&E tiles
+    let store = Arc::new(TileStore::new(SynthConfig::for_tile_size(tile_size, 42), n_tiles));
+
+    // 3. run: Manager + Worker with 2 CPU threads and 1 accelerator thread
+    let cfg = RunConfig { tile_size, n_tiles, cpu_workers: 2, gpu_workers: 1, ..Default::default() };
+    let outcome = run_local(workflow, store.loader(), n_tiles, cfg, stage_bindings())?;
+
+    // 4. results
+    let report = outcome.metrics;
+    println!("\n{}", report.profile_table());
+    println!("wall time: {:?} ({:.2} tiles/s)", report.wall, n_tiles as f64 / report.wall.as_secs_f64());
+    if let Some(cls) = outcome.manager.reduce_outputs(2) {
+        let assign = cls[0].as_tensor()?;
+        println!("k-means tile clusters: {:?}", assign.data());
+    }
+    Ok(())
+}

@@ -1,0 +1,87 @@
+"""AOT: lower every L2 graph to HLO *text* + write the artifact manifest.
+
+HLO text (NOT ``lowered.compiler_ir("hlo").as_hlo_proto().serialize()``) is
+the interchange format: jax >= 0.5 emits HloModuleProto with 64-bit
+instruction ids, which the xla_extension 0.5.1 used by the rust ``xla``
+crate rejects (``proto.id() <= INT_MAX``).  The text parser reassigns ids,
+so text round-trips cleanly (see /opt/xla-example/README.md).
+
+Modules are lowered with ``return_tuple=False`` so single-output graphs
+yield a plain array root: the rust side can then keep results device-resident
+for the data-locality optimisation (multi-output roots are tuples and are
+downloaded + decomposed).  Each graph is lowered once per configured
+tile size — HLO is shape-specialised, exactly like the paper's
+per-resolution CUDA launches.
+
+Usage:  cd python && python -m compile.aot --out-dir ../artifacts [--sizes 64,256]
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+
+import jax
+from jax._src.lib import xla_client as xc
+
+from .model import GRAPHS
+
+DEFAULT_SIZES = (64, 256)
+
+
+def to_hlo_text(lowered) -> str:
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=False
+    )
+    return comp.as_hlo_text()
+
+
+def _spec_desc(spec) -> dict:
+    return {"shape": list(spec.shape), "dtype": str(spec.dtype)}
+
+
+def lower_all(out_dir: str, sizes) -> dict:
+    os.makedirs(out_dir, exist_ok=True)
+    manifest = {"tile_sizes": list(sizes), "modules": []}
+    for name, (fn, arg_builder) in sorted(GRAPHS.items()):
+        for size in sizes:
+            args = arg_builder(size)
+            lowered = jax.jit(fn).lower(*args)
+            text = to_hlo_text(lowered)
+            fname = f"{name}_{size}.hlo.txt"
+            with open(os.path.join(out_dir, fname), "w") as f:
+                f.write(text)
+            out_tree = jax.eval_shape(fn, *args)
+            outs = list(out_tree) if isinstance(out_tree, (tuple, list)) else [out_tree]
+            manifest["modules"].append(
+                {
+                    "name": name,
+                    "size": size,
+                    "file": fname,
+                    "inputs": [_spec_desc(a) for a in args],
+                    "outputs": [_spec_desc(o) for o in outs],
+                }
+            )
+            print(f"lowered {name}@{size}: {len(text)} chars, "
+                  f"{len(args)} inputs, {len(outs)} outputs")
+    return manifest
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out-dir", default="../artifacts")
+    ap.add_argument("--sizes", default=",".join(str(s) for s in DEFAULT_SIZES),
+                    help="comma-separated tile sizes to specialise for")
+    args = ap.parse_args()
+    sizes = tuple(int(s) for s in args.sizes.split(",") if s)
+    manifest = lower_all(args.out_dir, sizes)
+    # manifest written last: it is the Makefile's freshness stamp.
+    with open(os.path.join(args.out_dir, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=1)
+    print(f"wrote {len(manifest['modules'])} modules + manifest.json to {args.out_dir}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,13 @@
+"""L1: Pallas kernels for the paper's compute hot-spots (build-time only)."""
+
+from .color_deconv import color_deconv, stain_inverse, STAIN_MATRIX
+from .conv2d import gaussian3, sobel_magnitude, stencil3x3, GAUSSIAN3, SOBEL_X, SOBEL_Y
+from .morph import dilate3x3, erode3x3, dilate_clip
+from .stats import tile_stats, STATS_LEN, HIST_BINS, HIST_RANGE
+
+__all__ = [
+    "color_deconv", "stain_inverse", "STAIN_MATRIX",
+    "gaussian3", "sobel_magnitude", "stencil3x3", "GAUSSIAN3", "SOBEL_X", "SOBEL_Y",
+    "dilate3x3", "erode3x3", "dilate_clip",
+    "tile_stats", "STATS_LEN", "HIST_BINS", "HIST_RANGE",
+]

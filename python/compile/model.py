@@ -1,0 +1,261 @@
+"""L2: the paper's analysis-pipeline operations as JAX graphs (build-time).
+
+Each function here is the "GPU variant" of one operation in the Fig. 1
+segmentation + feature-computation pipeline.  The functions call the L1
+Pallas kernels (python/compile/kernels/) so that, when `aot.py` lowers a
+graph, the kernel lands in the same HLO module; the rust coordinator then
+loads and executes the module via PJRT as the accelerator side of the
+operation's *function variant* (paper §III-A).
+
+Algorithm notes (paper Table I parallel):
+
+* ``morph_recon`` — the paper's hot-spot.  Their CUDA kernel is a
+  hierarchical-queue wave propagation (CCI-TR-2012-2); queues do not map to
+  a systolic array, so here it is the iterated geodesic dilation fixed point
+  with the per-step kernel in Pallas and the loop as ``lax.while_loop`` —
+  the lowered HLO contains a single ``while``.
+* ``bwlabel`` — CPU variant is union-find; this variant is iterative
+  max-label propagation (labels are **component-max flat indices + 1**, not
+  compacted; the rust side compares components, not raw values).
+* ``watershed`` — CPU variant is priority-flood; this variant is an
+  iterative marker flood (adopt the min-valued labelled neighbour).  Like
+  the paper's OpenCV-vs-Körbes pair, the two variants produce slightly
+  different (both valid) tessellations.
+
+Masks are f32 0/1; labels are f32 holding exact small integers (< 2^24) so
+the rust Literal bridge only ever moves f32 buffers.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from . import kernels
+
+BIG = 1.0e9
+
+
+# ---------------------------------------------------------------------------
+# fixed-point helpers
+# ---------------------------------------------------------------------------
+
+def _fixpoint(step, init):
+    """Run ``x = step(x)`` to convergence inside a single HLO while loop."""
+
+    def cond(state):
+        _, changed = state
+        return changed
+
+    def body(state):
+        x, _ = state
+        nxt = step(x)
+        return nxt, jnp.any(nxt != x)
+
+    out, _ = jax.lax.while_loop(cond, body, (init, jnp.array(True)))
+    return out
+
+
+def morph_recon(marker: jnp.ndarray, mask: jnp.ndarray, connectivity: int = 8) -> jnp.ndarray:
+    """Grayscale morphological reconstruction of ``mask`` from ``marker``."""
+    init = jnp.minimum(marker, mask)
+    return _fixpoint(lambda m: kernels.dilate_clip(m, mask, connectivity), init)
+
+
+# ---------------------------------------------------------------------------
+# pipeline operations (one per Fig. 1 / Table I entry)
+# ---------------------------------------------------------------------------
+
+def rbc_detect(rgb: jnp.ndarray, ratio: jnp.ndarray) -> jnp.ndarray:
+    """Red-blood-cell mask: eosin-dominant pixels, denoised by a 3x3 open."""
+    stains = kernels.color_deconv(rgb)
+    hema, eosin = stains[..., 0], stains[..., 1]
+    raw = jnp.where(eosin > ratio * hema, 1.0, 0.0)
+    opened = kernels.dilate3x3(kernels.erode3x3(raw))
+    return (opened,)
+
+
+def morph_open(gray: jnp.ndarray) -> jnp.ndarray:
+    """Opening by the radius-2 diamond (two 4-conn erosions then dilations).
+
+    The paper opens with a 19x19 disk on 4Kx4K tiles; scaled to our tile
+    sizes a radius-2 element plays the same role (remove small bright
+    specks) — documented substitution, matched by the CPU variant.
+    """
+    e = kernels.erode3x3(kernels.erode3x3(gray, 4), 4)
+    return (kernels.dilate3x3(kernels.dilate3x3(e, 4), 4),)
+
+
+def recon_to_nuclei(gray: jnp.ndarray, h: jnp.ndarray, thresh: jnp.ndarray) -> jnp.ndarray:
+    """Nuclei candidate mask via the h-dome transform (recon-based).
+
+    dome = gray - recon(gray - h, gray); candidates are dome > thresh.
+    """
+    recon = morph_recon(gray - h, gray)
+    dome = gray - recon
+    return (jnp.where(dome > thresh, 1.0, 0.0),)
+
+
+def fill_holes(mask: jnp.ndarray) -> jnp.ndarray:
+    """Fill holes: background reconstruction seeded from the tile border."""
+    comp = 1.0 - mask
+    h, w = mask.shape
+    border = jnp.zeros((h, w), jnp.float32)
+    border = border.at[0, :].set(1.0).at[-1, :].set(1.0)
+    border = border.at[:, 0].set(1.0).at[:, -1].set(1.0)
+    reachable = morph_recon(comp * border, comp, connectivity=4)
+    return (1.0 - reachable,)
+
+
+def bwlabel(mask: jnp.ndarray) -> jnp.ndarray:
+    """Connected components (8-conn) by max-label propagation."""
+    hgt, wid = mask.shape
+    idx = (jnp.arange(hgt * wid, dtype=jnp.float32) + 1.0).reshape(hgt, wid)
+    init = jnp.where(mask > 0.5, idx, 0.0)
+
+    def step(lab):
+        d = kernels.dilate3x3(lab)
+        return jnp.where(mask > 0.5, jnp.maximum(lab, d), 0.0)
+
+    return (_fixpoint(step, init),)
+
+
+def _areas_of(labels_f: jnp.ndarray, mask: jnp.ndarray) -> jnp.ndarray:
+    n = labels_f.size
+    labels_i = labels_f.astype(jnp.int32).reshape(-1)
+    return jnp.zeros((n + 1,), jnp.float32).at[labels_i].add(mask.reshape(-1))
+
+
+def area_threshold(mask: jnp.ndarray, lo: jnp.ndarray, hi: jnp.ndarray) -> jnp.ndarray:
+    """Drop components whose pixel area is outside [lo, hi]."""
+    (labels,) = bwlabel(mask)
+    areas = _areas_of(labels, mask)
+    a = areas[labels.astype(jnp.int32)]
+    keep = (mask > 0.5) & (a >= lo) & (a <= hi)
+    return (jnp.where(keep, 1.0, 0.0),)
+
+
+def distance(mask: jnp.ndarray) -> jnp.ndarray:
+    """Chessboard distance-to-background by iterated min-plus relaxation."""
+    init = jnp.where(mask > 0.5, BIG, 0.0)
+
+    def step(d):
+        return jnp.minimum(d, kernels.erode3x3(d) + 1.0)
+
+    return (_fixpoint(step, init),)
+
+
+def pre_watershed(mask: jnp.ndarray) -> tuple[jnp.ndarray, jnp.ndarray]:
+    """Distance transform + markers (regional maxima of the distance map).
+
+    Returns (negated distance — the watershed relief, marker labels).
+    """
+    (dist,) = distance(mask)
+    recon = morph_recon(dist - 1.0, dist)
+    maxima = jnp.where((dist - recon > 0.5) & (mask > 0.5), 1.0, 0.0)
+    (markers,) = bwlabel(maxima)
+    return (-dist, markers)
+
+
+def watershed(relief: jnp.ndarray, markers: jnp.ndarray, mask: jnp.ndarray) -> jnp.ndarray:
+    """Iterative marker-based flood of ``relief`` restricted to ``mask``."""
+    v = jnp.where(mask > 0.5, relief, BIG)
+    hgt, wid = mask.shape
+
+    def shift2(a, fill, dy, dx):
+        padded = jnp.pad(a, 1, mode="constant", constant_values=fill)
+        return jax.lax.dynamic_slice(padded, (1 + dy, 1 + dx), (hgt, wid))
+
+    offsets = [(dy, dx) for dy in (-1, 0, 1) for dx in (-1, 0, 1) if (dy, dx) != (0, 0)]
+
+    def step(lab):
+        best_v = jnp.full_like(v, BIG)
+        best_l = jnp.zeros_like(lab)
+        for dy, dx in offsets:
+            nv = shift2(v, BIG, dy, dx)
+            nl = shift2(lab, 0.0, dy, dx)
+            cand_v = jnp.where(nl > 0.0, nv, BIG)
+            take = cand_v < best_v
+            best_v = jnp.where(take, cand_v, best_v)
+            best_l = jnp.where(take, nl, best_l)
+        adopt = (lab == 0.0) & (mask > 0.5) & (best_v < BIG)
+        return jnp.where(adopt, best_l, lab)
+
+    labels = _fixpoint(step, markers * jnp.where(mask > 0.5, 1.0, 0.0))
+    return (labels,)
+
+
+def feature_graph(rgb: jnp.ndarray, edge_thresh: jnp.ndarray):
+    """Tile-level feature computation: deconv -> smooth -> gradient -> stats.
+
+    Outputs: (hematoxylin image scaled to [0,256), gradient magnitude,
+    edge mask, f32[41] stats vector = stats(hema) ++ stats(grad) ++ [#edges]).
+    """
+    stains = kernels.color_deconv(rgb)
+    hema = jnp.clip(stains[..., 0] * 100.0, 0.0, 255.0)
+    smooth = kernels.gaussian3(hema)
+    gmag = kernels.sobel_magnitude(smooth)
+    edges = jnp.where(gmag > edge_thresh, 1.0, 0.0)
+    stats = jnp.concatenate(
+        [kernels.tile_stats(hema), kernels.tile_stats(gmag), jnp.sum(edges)[None]]
+    )
+    return (hema, gmag, edges, stats)
+
+
+def hema_prep(rgb: jnp.ndarray) -> jnp.ndarray:
+    """Hematoxylin channel scaled to [0, 256) — the segmentation stage's
+    grayscale input (cheap preprocessing; CPU-only in the rust workflow)."""
+    stains = kernels.color_deconv(rgb)
+    return (jnp.clip(stains[..., 0] * 100.0, 0.0, 255.0),)
+
+
+def segment_tile(rgb: jnp.ndarray, h: jnp.ndarray, thresh: jnp.ndarray,
+                 lo: jnp.ndarray, hi: jnp.ndarray) -> jnp.ndarray:
+    """The whole segmentation stage fused into one module (the
+    *non-pipelined* / monolithic variant used by the Fig. 9 comparison).
+
+    Mirrors the pipelined chain exactly (rust/src/app assembles the same
+    sequence from individual artifacts): hema -> open -> recon-to-nuclei ->
+    fill-holes -> area-threshold -> pre-watershed -> watershed.
+    """
+    (hema,) = hema_prep(rgb)
+    (opened,) = morph_open(hema)
+    (cand,) = recon_to_nuclei(opened, h, thresh)
+    (filled,) = fill_holes(cand)
+    (kept,) = area_threshold(filled, lo, hi)
+    relief, markers = pre_watershed(kept)
+    (labels,) = watershed(relief, markers, kept)
+    return (labels,)
+
+
+# ---------------------------------------------------------------------------
+# AOT registry: name -> (fn, example-arg builder)
+# ---------------------------------------------------------------------------
+
+def _img(size):
+    return jax.ShapeDtypeStruct((size, size), jnp.float32)
+
+
+def _rgb(size):
+    return jax.ShapeDtypeStruct((size, size, 3), jnp.float32)
+
+
+def _scalar():
+    return jax.ShapeDtypeStruct((), jnp.float32)
+
+
+GRAPHS = {
+    "rbc_detect": (rbc_detect, lambda s: (_rgb(s), _scalar())),
+    "morph_open": (morph_open, lambda s: (_img(s),)),
+    "recon_to_nuclei": (recon_to_nuclei, lambda s: (_img(s), _scalar(), _scalar())),
+    "morph_recon": (lambda m, k: (morph_recon(m, k),), lambda s: (_img(s), _img(s))),
+    "fill_holes": (fill_holes, lambda s: (_img(s),)),
+    "bwlabel": (bwlabel, lambda s: (_img(s),)),
+    "area_threshold": (area_threshold, lambda s: (_img(s), _scalar(), _scalar())),
+    "distance": (distance, lambda s: (_img(s),)),
+    "pre_watershed": (pre_watershed, lambda s: (_img(s),)),
+    "watershed": (watershed, lambda s: (_img(s), _img(s), _img(s))),
+    "feature_graph": (feature_graph, lambda s: (_rgb(s), _scalar())),
+    "hema_prep": (hema_prep, lambda s: (_rgb(s),)),
+    "segment_tile": (segment_tile, lambda s: (_rgb(s), _scalar(), _scalar(), _scalar(), _scalar())),
+}

@@ -1,0 +1,64 @@
+"""pytest: AOT artifact manifest consistency.
+
+Validates the build products the rust runtime consumes: every module in
+GRAPHS is present per tile size, files exist and parse as HLO text, and the
+declared input/output specs match what jax.eval_shape reports.
+"""
+
+import json
+import os
+
+import jax
+import pytest
+
+from compile.model import GRAPHS
+
+ART = os.path.join(os.path.dirname(os.path.dirname(os.path.dirname(os.path.abspath(__file__)))), "artifacts")
+
+
+@pytest.fixture(scope="module")
+def manifest():
+    path = os.path.join(ART, "manifest.json")
+    if not os.path.exists(path):
+        pytest.skip("run `make artifacts` first")
+    with open(path) as f:
+        return json.load(f)
+
+
+def test_every_graph_lowered_at_every_size(manifest):
+    names = {(m["name"], m["size"]) for m in manifest["modules"]}
+    for g in GRAPHS:
+        for s in manifest["tile_sizes"]:
+            assert (g, s) in names, f"missing {g}@{s}"
+
+
+def test_files_exist_and_look_like_hlo(manifest):
+    for m in manifest["modules"]:
+        path = os.path.join(ART, m["file"])
+        assert os.path.exists(path), m["file"]
+        head = open(path).read(200)
+        assert "HloModule" in head, f"{m['file']} is not HLO text"
+
+
+def test_specs_match_eval_shape(manifest):
+    by_key = {(m["name"], m["size"]): m for m in manifest["modules"]}
+    for name, (fn, arg_builder) in GRAPHS.items():
+        size = min(manifest["tile_sizes"])
+        m = by_key[(name, size)]
+        args = arg_builder(size)
+        assert len(m["inputs"]) == len(args)
+        for spec, arg in zip(m["inputs"], args):
+            assert spec["shape"] == list(arg.shape)
+        out = jax.eval_shape(fn, *args)
+        outs = list(out) if isinstance(out, (tuple, list)) else [out]
+        assert len(m["outputs"]) == len(outs)
+        for spec, o in zip(m["outputs"], outs):
+            assert spec["shape"] == list(o.shape)
+
+
+def test_no_typed_ffi_custom_calls(manifest):
+    # xla_extension 0.5.1 cannot compile API_VERSION_TYPED_FFI custom calls
+    # (e.g. from jnp.linalg.inv) — guard against regressions.
+    for m in manifest["modules"]:
+        text = open(os.path.join(ART, m["file"])).read()
+        assert "custom_call_target=\"lapack" not in text.lower(), m["file"]

@@ -1,0 +1,175 @@
+"""pytest: every L1 Pallas kernel vs its pure-jnp oracle (ref.py).
+
+Hypothesis sweeps shapes and value distributions; this is the core
+correctness signal for the compute layer — the rust integration tests
+compare against artifacts that these tests validate.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile import kernels
+from compile.kernels import ref
+
+jax.config.update("jax_platform_name", "cpu")
+
+SHAPES = st.tuples(st.integers(4, 33), st.integers(4, 33))
+
+
+def img_like(shape, lo=0.0, hi=255.0, seed=0):
+    rng = np.random.RandomState(seed)
+    return jnp.asarray(rng.uniform(lo, hi, shape).astype(np.float32))
+
+
+# ---------------------------------------------------------------------------
+# color deconvolution
+# ---------------------------------------------------------------------------
+
+class TestColorDeconv:
+    def test_matches_ref_fixed(self):
+        rgb = img_like((16, 16, 3))
+        got = kernels.color_deconv(rgb)
+        want = ref.color_deconv_ref(rgb)
+        np.testing.assert_allclose(got, want, rtol=1e-5, atol=1e-5)
+
+    @settings(max_examples=20, deadline=None)
+    @given(shape=SHAPES, seed=st.integers(0, 2**16))
+    def test_matches_ref_hypothesis(self, shape, seed):
+        rgb = img_like((*shape, 3), seed=seed)
+        np.testing.assert_allclose(
+            kernels.color_deconv(rgb), ref.color_deconv_ref(rgb), rtol=1e-5, atol=1e-5
+        )
+
+    def test_block_boundary_shapes(self):
+        # Exercise grids that do / do not divide BLOCK_ROWS evenly.
+        for h, w in [(64, 128), (91, 7), (1, 1)]:
+            rgb = img_like((h, w, 3), seed=h * 131 + w)
+            np.testing.assert_allclose(
+                kernels.color_deconv(rgb), ref.color_deconv_ref(rgb), rtol=1e-5, atol=1e-5
+            )
+
+    def test_white_pixel_near_zero_density(self):
+        rgb = jnp.full((4, 4, 3), 255.0, jnp.float32)
+        out = kernels.color_deconv(rgb)
+        assert float(jnp.abs(out).max()) < 1e-2
+
+    def test_stain_inverse_is_inverse(self):
+        m = jnp.asarray(kernels.STAIN_MATRIX, jnp.float32)
+        m = m / jnp.linalg.norm(m, axis=1, keepdims=True)
+        np.testing.assert_allclose(m @ kernels.stain_inverse(), jnp.eye(3), atol=1e-5)
+
+
+# ---------------------------------------------------------------------------
+# stencils
+# ---------------------------------------------------------------------------
+
+class TestStencils:
+    @settings(max_examples=20, deadline=None)
+    @given(shape=SHAPES, seed=st.integers(0, 2**16))
+    def test_gaussian_matches_ref(self, shape, seed):
+        img = img_like(shape, seed=seed)
+        np.testing.assert_allclose(
+            kernels.gaussian3(img), ref.stencil3x3_ref(img, kernels.GAUSSIAN3),
+            rtol=1e-5, atol=1e-4,
+        )
+
+    @settings(max_examples=20, deadline=None)
+    @given(shape=SHAPES, seed=st.integers(0, 2**16))
+    def test_sobel_matches_ref(self, shape, seed):
+        img = img_like(shape, seed=seed)
+        np.testing.assert_allclose(
+            kernels.sobel_magnitude(img), ref.sobel_magnitude_ref(img),
+            rtol=1e-4, atol=1e-3,
+        )
+
+    def test_gaussian_preserves_constant(self):
+        img = jnp.full((12, 17), 42.0, jnp.float32)
+        np.testing.assert_allclose(kernels.gaussian3(img), img, rtol=1e-6)
+
+    def test_sobel_zero_on_constant(self):
+        img = jnp.full((9, 9), 7.0, jnp.float32)
+        assert float(kernels.sobel_magnitude(img).max()) < 1e-4
+
+    def test_sobel_detects_vertical_edge(self):
+        img = jnp.concatenate(
+            [jnp.zeros((8, 4), jnp.float32), jnp.full((8, 4), 100.0, jnp.float32)], axis=1
+        )
+        mag = kernels.sobel_magnitude(img)
+        assert float(mag[:, 3:5].min()) > 100.0
+        assert float(mag[:, 0].max()) < 1e-4
+
+
+# ---------------------------------------------------------------------------
+# morphology
+# ---------------------------------------------------------------------------
+
+class TestMorph:
+    @settings(max_examples=20, deadline=None)
+    @given(shape=SHAPES, seed=st.integers(0, 2**16), conn=st.sampled_from([4, 8]))
+    def test_dilate_matches_ref(self, shape, seed, conn):
+        img = img_like(shape, seed=seed)
+        np.testing.assert_allclose(
+            kernels.dilate3x3(img, conn), ref.dilate3x3_ref(img, conn), rtol=1e-6
+        )
+
+    @settings(max_examples=20, deadline=None)
+    @given(shape=SHAPES, seed=st.integers(0, 2**16), conn=st.sampled_from([4, 8]))
+    def test_erode_matches_ref(self, shape, seed, conn):
+        img = img_like(shape, seed=seed)
+        np.testing.assert_allclose(
+            kernels.erode3x3(img, conn), ref.erode3x3_ref(img, conn), rtol=1e-6
+        )
+
+    @settings(max_examples=20, deadline=None)
+    @given(shape=SHAPES, seed=st.integers(0, 2**16))
+    def test_dilate_clip_matches_ref(self, shape, seed):
+        marker = img_like(shape, seed=seed)
+        mask = marker + img_like(shape, 0, 50, seed=seed + 1)
+        np.testing.assert_allclose(
+            kernels.dilate_clip(marker, mask), ref.dilate_clip_ref(marker, mask), rtol=1e-6
+        )
+
+    @settings(max_examples=15, deadline=None)
+    @given(shape=SHAPES, seed=st.integers(0, 2**16))
+    def test_dilate_geq_erode_leq(self, shape, seed):
+        img = img_like(shape, seed=seed)
+        assert bool(jnp.all(kernels.dilate3x3(img) >= img))
+        assert bool(jnp.all(kernels.erode3x3(img) <= img))
+
+    def test_dilate_extensive_on_point(self):
+        img = jnp.zeros((7, 7), jnp.float32).at[3, 3].set(9.0)
+        d = kernels.dilate3x3(img)
+        assert float(d[2:5, 2:5].min()) == 9.0
+        assert float(d[0, 0]) == 0.0
+
+
+# ---------------------------------------------------------------------------
+# stats
+# ---------------------------------------------------------------------------
+
+class TestStats:
+    @settings(max_examples=20, deadline=None)
+    @given(shape=SHAPES, seed=st.integers(0, 2**16))
+    def test_matches_ref(self, shape, seed):
+        img = img_like(shape, seed=seed)
+        np.testing.assert_allclose(
+            kernels.tile_stats(img), ref.tile_stats_ref(img), rtol=1e-4, atol=1e-2
+        )
+
+    @settings(max_examples=15, deadline=None)
+    @given(shape=SHAPES, seed=st.integers(0, 2**16))
+    def test_histogram_sums_to_pixel_count(self, shape, seed):
+        img = img_like(shape, seed=seed)
+        s = kernels.tile_stats(img)
+        assert float(jnp.sum(s[4:])) == pytest.approx(img.size)
+
+    def test_constant_image(self):
+        img = jnp.full((8, 8), 100.0, jnp.float32)
+        s = np.asarray(kernels.tile_stats(img))
+        assert s[0] == pytest.approx(6400.0)
+        assert s[2] == 100.0 and s[3] == 100.0
+        # all mass lands in bin 6 (100 / 16 = 6.25)
+        assert s[4 + 6] == 64.0

@@ -1,0 +1,158 @@
+"""pytest: L2 graph semantics (shapes, invariants, convergence).
+
+These test the *model* layer: the while-loop fixed points converge, masks
+stay binary, labels are consistent components, and the fused segment_tile
+agrees with composing the individual stage graphs — the property the
+pipelined/non-pipelined comparison (paper Fig. 9) relies on.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile import model
+from compile.kernels import ref
+
+jax.config.update("jax_platform_name", "cpu")
+
+
+def blob_mask(s=24, seed=0):
+    rng = np.random.RandomState(seed)
+    m = np.zeros((s, s), np.float32)
+    for _ in range(rng.randint(1, 5)):
+        cy, cx = rng.randint(3, s - 3, 2)
+        r = rng.randint(2, 5)
+        yy, xx = np.mgrid[0:s, 0:s]
+        m[(yy - cy) ** 2 + (xx - cx) ** 2 <= r * r] = 1.0
+    return jnp.asarray(m)
+
+
+class TestMorphRecon:
+    @settings(max_examples=10, deadline=None)
+    @given(seed=st.integers(0, 2**16))
+    def test_matches_eager_oracle(self, seed):
+        rng = np.random.RandomState(seed)
+        mask = jnp.asarray(rng.uniform(0, 255, (12, 12)).astype(np.float32))
+        marker = mask - jnp.asarray(rng.uniform(0, 60, (12, 12)).astype(np.float32))
+        got = jax.jit(model.morph_recon)(marker, mask)
+        want = ref.morph_recon_ref(marker, mask)
+        np.testing.assert_allclose(got, want, rtol=1e-6)
+
+    def test_recon_leq_mask_and_idempotent(self):
+        mask = blob_mask(20, 3) * 200.0
+        marker = mask * 0.5
+        r1 = jax.jit(model.morph_recon)(marker, mask)
+        assert bool(jnp.all(r1 <= mask + 1e-6))
+        r2 = jax.jit(model.morph_recon)(r1, mask)
+        np.testing.assert_allclose(r1, r2, rtol=1e-6)
+
+
+class TestBwlabel:
+    def test_two_components(self):
+        m = jnp.zeros((16, 16), jnp.float32)
+        m = m.at[2:5, 2:5].set(1.0).at[10:13, 10:13].set(1.0)
+        (lab,) = jax.jit(model.bwlabel)(m)
+        lab = np.asarray(lab)
+        ids = set(np.unique(lab)) - {0.0}
+        assert len(ids) == 2
+        # every component has exactly one id
+        assert len(set(np.unique(lab[2:5, 2:5]))) == 1
+
+    def test_diagonal_is_connected(self):
+        m = jnp.zeros((8, 8), jnp.float32)
+        m = m.at[1, 1].set(1.0).at[2, 2].set(1.0).at[3, 3].set(1.0)
+        (lab,) = jax.jit(model.bwlabel)(m)
+        assert len(set(np.unique(np.asarray(lab))) - {0.0}) == 1
+
+    @settings(max_examples=10, deadline=None)
+    @given(seed=st.integers(0, 2**16))
+    def test_background_stays_zero(self, seed):
+        m = blob_mask(seed=seed)
+        (lab,) = jax.jit(model.bwlabel)(m)
+        assert bool(jnp.all((lab > 0) == (m > 0.5)))
+
+
+class TestFillHoles:
+    def test_fills_a_hole(self):
+        m = jnp.ones((10, 10), jnp.float32)
+        m = m.at[0, :].set(0).at[-1, :].set(0).at[:, 0].set(0).at[:, -1].set(0)
+        m = m.at[5, 5].set(0.0)  # interior hole
+        (f,) = jax.jit(model.fill_holes)(m)
+        assert float(f[5, 5]) == 1.0
+        # border background must remain background
+        assert float(f[0, 0]) == 0.0
+
+    @settings(max_examples=10, deadline=None)
+    @given(seed=st.integers(0, 2**16))
+    def test_extensive_and_binary(self, seed):
+        m = blob_mask(seed=seed)
+        (f,) = jax.jit(model.fill_holes)(m)
+        assert bool(jnp.all(f >= m))
+        assert set(np.unique(np.asarray(f))) <= {0.0, 1.0}
+
+
+class TestAreaThreshold:
+    def test_drops_small_keeps_large(self):
+        m = jnp.zeros((16, 16), jnp.float32)
+        m = m.at[1, 1].set(1.0)              # area 1
+        m = m.at[8:12, 8:12].set(1.0)        # area 16
+        (out,) = jax.jit(model.area_threshold)(m, jnp.float32(4.0), jnp.float32(100.0))
+        assert float(out[1, 1]) == 0.0
+        assert float(out[8:12, 8:12].min()) == 1.0
+
+
+class TestDistanceWatershed:
+    def test_distance_values(self):
+        m = jnp.zeros((9, 9), jnp.float32).at[2:7, 2:7].set(1.0)
+        (d,) = jax.jit(model.distance)(m)
+        assert float(d[4, 4]) == 3.0  # chessboard distance to background
+        assert float(d[2, 2]) == 1.0
+        assert float(d[0, 0]) == 0.0
+
+    def test_watershed_separates_two_nuclei(self):
+        # two overlapping disks -> one component, watershed must split it
+        s = 24
+        yy, xx = np.mgrid[0:s, 0:s]
+        m = (((yy - 12) ** 2 + (xx - 7) ** 2 <= 25)
+             | ((yy - 12) ** 2 + (xx - 17) ** 2 <= 25)).astype(np.float32)
+        m = jnp.asarray(m)
+        relief, markers = jax.jit(model.pre_watershed)(m)
+        n_markers = len(set(np.unique(np.asarray(markers))) - {0.0})
+        assert n_markers >= 2
+        (lab,) = jax.jit(model.watershed)(relief, markers, m)
+        lab = np.asarray(lab)
+        assert len(set(np.unique(lab)) - {0.0}) == n_markers
+        # full coverage of the mask
+        assert bool(((lab > 0) == (np.asarray(m) > 0)).all())
+        # the two lobes' centres get different labels
+        assert lab[12, 7] != lab[12, 17]
+
+
+class TestFusedVsComposed:
+    def test_segment_tile_matches_stage_composition(self):
+        rng = np.random.RandomState(7)
+        rgb = jnp.asarray(rng.uniform(0, 255, (24, 24, 3)).astype(np.float32))
+        h, t, lo, hi = (jnp.float32(v) for v in (20.0, 5.0, 4.0, 400.0))
+        (fused,) = jax.jit(model.segment_tile)(rgb, h, t, lo, hi)
+
+        (hema,) = jax.jit(model.hema_prep)(rgb)
+        (opened,) = jax.jit(model.morph_open)(hema)
+        (cand,) = jax.jit(model.recon_to_nuclei)(opened, h, t)
+        (filled,) = jax.jit(model.fill_holes)(cand)
+        (kept,) = jax.jit(model.area_threshold)(filled, lo, hi)
+        relief, markers = jax.jit(model.pre_watershed)(kept)
+        (lab,) = jax.jit(model.watershed)(relief, markers, kept)
+        np.testing.assert_allclose(fused, lab, rtol=1e-5)
+
+
+class TestFeatureGraph:
+    def test_shapes_and_finiteness(self):
+        rng = np.random.RandomState(1)
+        rgb = jnp.asarray(rng.uniform(0, 255, (16, 16, 3)).astype(np.float32))
+        hema, gmag, edges, stats = jax.jit(model.feature_graph)(rgb, jnp.float32(30.0))
+        assert hema.shape == (16, 16) and gmag.shape == (16, 16)
+        assert stats.shape == (41,)
+        assert bool(jnp.isfinite(stats).all())
+        assert float(stats[40]) == pytest.approx(float(edges.sum()))

@@ -1,0 +1,40 @@
+//! Paper Fig. 11: data-locality conscious assignment (DL) + prefetching.
+//!
+//! Expected shape: DL improves both policies (paper: 1.1x FCFS, 1.04x
+//! PATS); FCFS pipelined+DL >= 1.1x over non-pipelined; prefetch is a small
+//! additional effect.  Includes a transferImpact sweep (ablation).
+
+use htap::bench_util::{f, Table};
+use htap::sim::experiments::fig11;
+use htap::sim::{simulate, SimParams, SimWorkflow};
+
+fn main() {
+    let rows = fig11(300);
+    let mut t = Table::new(&["configuration", "makespan (s)", "speedup vs 1 core"]);
+    for r in &rows {
+        t.row(&[r.label.clone(), f(r.makespan, 1), f(r.speedup_vs_1core, 2)]);
+    }
+    t.print("Fig. 11 — DL and prefetching impact");
+
+    let get = |l: &str| rows.iter().find(|r| r.label == l).unwrap().makespan;
+    println!("\nDL gain FCFS = {:.3}x (paper ~1.1x)", get("FCFS pipelined") / get("FCFS pipelined +DL"));
+    println!("DL gain PATS = {:.3}x (paper ~1.04x)", get("PATS pipelined") / get("PATS pipelined +DL"));
+    println!(
+        "prefetch on PATS+DL = {:.3}x (paper ~1.03x)",
+        get("PATS pipelined +DL") / get("PATS pipelined +DL +Prefetch")
+    );
+
+    // ablation: how the DL decision rule responds to transfer impact
+    let mut t = Table::new(&["transferImpact scale", "PATS+DL makespan (s)"]);
+    for scale in [0.5f32, 1.0, 2.0] {
+        let mut wf = SimWorkflow::pipelined();
+        for st in &mut wf.stages {
+            for op in &mut st.ops {
+                op.transfer_impact = (op.transfer_impact * scale).min(0.9);
+            }
+        }
+        let r = simulate(&SimParams { workflow: wf, n_tiles: 300, ..Default::default() });
+        t.row(&[f(scale as f64, 1), f(r.makespan, 1)]);
+    }
+    t.print("Ablation — transferImpact sweep (DL rule sensitivity)");
+}

@@ -1,0 +1,23 @@
+//! Paper Fig. 13: PATS sensitivity to speedup-estimation error.
+//!
+//! Expected shape: flat until ~40-60% error (order preserved), degrading at
+//! 70-100% (adversarial confounded inversion), staying within ~1.35x of
+//! FCFS at full inversion.  The random-error column is an ablation beyond
+//! the paper showing only the *order* matters.
+
+use htap::bench_util::{f, Table};
+use htap::sim::experiments::fig13;
+
+fn main() {
+    let (rows, fcfs) = fig13(&[0, 10, 20, 30, 40, 50, 60, 70, 80, 90, 100], 300);
+    let mut t = Table::new(&["error %", "PATS confounded (s)", "PATS random (s)"]);
+    for r in &rows {
+        t.row(&[r.error_pct.to_string(), f(r.pats_secs, 1), f(r.pats_random_secs, 1)]);
+    }
+    t.print("Fig. 13 — PATS under speedup-estimation error");
+    println!("\nFCFS reference = {fcfs:.1}s");
+    let e0 = rows[0].pats_secs;
+    let e100 = rows.last().unwrap().pats_secs;
+    println!("0% error: {:.2}x faster than FCFS", fcfs / e0);
+    println!("100% error vs FCFS: {:.2}x (paper: ~1.1x)", e100 / fcfs);
+}

@@ -1,0 +1,38 @@
+//! Paper Fig. 14: multi-node strong scaling, 36,848 tiles.
+//!
+//! Expected shape: near-linear to ~32 nodes, I/O contention degrading
+//! efficiency to ~70-80% at 100 nodes while compute-only efficiency stays
+//! ~90%+; absolute throughput ~150 tiles/s at 100 nodes.
+
+use htap::bench_util::{f, Table};
+use htap::sim::experiments::fig14;
+
+fn main() {
+    let rows = fig14(&[8, 16, 32, 50, 75, 100], 36_848);
+    let mut t = Table::new(&[
+        "nodes",
+        "FCFS (s)",
+        "PATS+DL+PF (s)",
+        "tiles/s",
+        "efficiency",
+        "compute-only eff.",
+    ]);
+    for r in &rows {
+        t.row(&[
+            r.nodes.to_string(),
+            f(r.fcfs_secs, 1),
+            f(r.pats_all_secs, 1),
+            f(r.tiles_per_second, 1),
+            f(r.efficiency * 100.0, 1),
+            f(r.compute_efficiency * 100.0, 1),
+        ]);
+    }
+    t.print("Fig. 14 — strong scaling, 36,848 4Kx4K-equivalent tiles");
+    let last = rows.last().unwrap();
+    println!(
+        "\n100 nodes: {:.1} tiles/s (paper: ~150), efficiency {:.0}% (paper: ~77%), compute-only {:.0}% (paper: ~93%)",
+        last.tiles_per_second,
+        last.efficiency * 100.0,
+        last.compute_efficiency * 100.0
+    );
+}

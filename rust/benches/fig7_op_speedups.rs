@@ -1,0 +1,130 @@
+//! Paper Fig. 7: per-operation performance on the accelerator.
+//!
+//! Unlike the other figure benches (simulated at Keeneland scale), this one
+//! *measures* the real function variants on this machine: the rust CPU
+//! implementation vs the AOT-compiled XLA executable via PJRT, per pipeline
+//! operation, on synthetic tiles.  The PJRT CPU backend is obviously not an
+//! M2090 GPU, so the measured "speedups" here characterise this testbed;
+//! the paper-calibrated profile (app::profile) is printed alongside.
+//!
+//! Requires `make artifacts`.
+
+use htap::app::{ops, profile};
+use htap::bench_util::{f, measure, Table};
+use htap::data::{SynthConfig, TileSynthesizer};
+use htap::imgproc::Gray;
+use htap::runtime::pjrt::DeviceExecutor;
+use htap::runtime::{ArtifactManifest, Value};
+
+const TILE: usize = 64;
+const ITERS: usize = 5;
+
+fn main() {
+    let manifest = ArtifactManifest::discover().expect("run `make artifacts` first");
+    let mut executor = DeviceExecutor::new(manifest).expect("pjrt client");
+    let synth = TileSynthesizer::new(SynthConfig::for_tile_size(TILE, 7));
+    let rgb = Value::Tensor(synth.tissue_tile(0).to_tensor());
+
+    // precompute chain inputs with the CPU variants
+    let hema = ops::hema_prep(&[rgb.clone()]).unwrap().remove(0);
+    let opened = ops::morph_open(&[hema.clone()]).unwrap().remove(0);
+    let cand = ops::recon_to_nuclei(&[opened.clone(), Value::Scalar(20.0), Value::Scalar(5.0)])
+        .unwrap()
+        .remove(0);
+    let filled = ops::fill_holes(&[cand.clone()]).unwrap().remove(0);
+    let kept = ops::area_threshold(&[filled.clone(), Value::Scalar(5.0), Value::Scalar(500.0)])
+        .unwrap();
+    let kept = kept[0].clone();
+    let pw = ops::pre_watershed(&[kept.clone()]).unwrap();
+    let (relief, markers) = (pw[0].clone(), pw[1].clone());
+
+    type CpuCall = Box<dyn Fn() -> ()>;
+    let cases: Vec<(&str, Vec<Value>, CpuCall)> = vec![
+        ("rbc_detect", vec![rgb.clone(), Value::Scalar(1.2)], {
+            let a = [rgb.clone(), Value::Scalar(1.2)];
+            Box::new(move || {
+                ops::rbc_detect(&a).unwrap();
+            })
+        }),
+        ("morph_open", vec![hema.clone()], {
+            let a = [hema.clone()];
+            Box::new(move || {
+                ops::morph_open(&a).unwrap();
+            })
+        }),
+        ("recon_to_nuclei", vec![opened.clone(), Value::Scalar(20.0), Value::Scalar(5.0)], {
+            let a = [opened.clone(), Value::Scalar(20.0), Value::Scalar(5.0)];
+            Box::new(move || {
+                ops::recon_to_nuclei(&a).unwrap();
+            })
+        }),
+        ("fill_holes", vec![cand.clone()], {
+            let a = [cand.clone()];
+            Box::new(move || {
+                ops::fill_holes(&a).unwrap();
+            })
+        }),
+        ("area_threshold", vec![filled.clone(), Value::Scalar(5.0), Value::Scalar(500.0)], {
+            let a = [filled.clone(), Value::Scalar(5.0), Value::Scalar(500.0)];
+            Box::new(move || {
+                ops::area_threshold(&a).unwrap();
+            })
+        }),
+        ("bwlabel", vec![kept.clone()], {
+            let a = [kept.clone()];
+            Box::new(move || {
+                ops::bwlabel(&a).unwrap();
+            })
+        }),
+        ("pre_watershed", vec![kept.clone()], {
+            let a = [kept.clone()];
+            Box::new(move || {
+                ops::pre_watershed(&a).unwrap();
+            })
+        }),
+        ("watershed", vec![relief.clone(), markers.clone(), kept.clone()], {
+            let a = [relief.clone(), markers.clone(), kept.clone()];
+            Box::new(move || {
+                ops::watershed_op(&a).unwrap();
+            })
+        }),
+        ("feature_graph", vec![rgb.clone(), Value::Scalar(30.0)], {
+            let a = [rgb.clone(), Value::Scalar(30.0)];
+            Box::new(move || {
+                ops::feature_graph(&a).unwrap();
+            })
+        }),
+    ];
+
+    let mut t = Table::new(&[
+        "operation",
+        "CPU (ms)",
+        "PJRT (ms)",
+        "measured ratio",
+        "paper speedup",
+        "paper +transfer",
+    ]);
+    let mut cpu_total = 0.0;
+    for (name, gpu_args, cpu_call) in &cases {
+        let cpu = measure(name, 1, ITERS, || cpu_call());
+        let gpu = measure(name, 1, ITERS, || {
+            executor.run(name, TILE, gpu_args).unwrap();
+        });
+        cpu_total += cpu.mean_ms();
+        let e = profile::entry(name).unwrap();
+        t.row(&[
+            name.to_string(),
+            f(cpu.mean_ms(), 3),
+            f(gpu.mean_ms(), 3),
+            f(cpu.mean_ms() / gpu.mean_ms(), 2),
+            f(e.speedup as f64, 1),
+            f(e.speedup_with_transfer() as f64, 1),
+        ]);
+    }
+    t.print("Fig. 7 — per-operation CPU variant vs PJRT artifact (this testbed)");
+    println!("\nsingle-core total per tile: {:.2} ms ({TILE}x{TILE} synthetic tile)", cpu_total);
+    println!("note: PJRT CPU backend stands in for the GPU; the paper-calibrated");
+    println!("speedup columns drive PATS and the cluster simulator.");
+    // keep the borrow checker happy about the Gray import used in docs
+    let _ = Gray::zeros(1, 1);
+}

@@ -1,0 +1,24 @@
+//! Paper Fig. 8: end-to-end multi-GPU speedup, OS vs Closest placement.
+//!
+//! Expected shape: Closest >= OS at every GPU count, delta growing with
+//! GPUs (paper: ~3%, 6%, 8%); multi-GPU scaling near-linear.
+
+use htap::bench_util::{f, Table};
+use htap::sim::experiments::fig8;
+
+fn main() {
+    let rows = fig8(300);
+    let mut t = Table::new(&["GPUs", "placement", "speedup vs 1 core"]);
+    for r in &rows {
+        t.row(&[r.gpus.to_string(), r.placement.name().into(), f(r.speedup_vs_1core, 2)]);
+    }
+    t.print("Fig. 8 — multi-GPU end-to-end speedup (includes tile I/O)");
+    for g in 1..=3usize {
+        let os = rows.iter().find(|r| r.gpus == g && r.placement.name() == "OS").unwrap();
+        let cl = rows.iter().find(|r| r.gpus == g && r.placement.name() == "Closest").unwrap();
+        println!(
+            "gpus={g}: Closest/OS = {:.3} (paper: 1.03 / 1.06 / 1.08)",
+            cl.speedup_vs_1core / os.speedup_vs_1core
+        );
+    }
+}

@@ -1,0 +1,29 @@
+//! Paper Fig. 9 + Fig. 10: coordinated CPU+GPU execution.
+//!
+//! Expected shape: 12-core CPU speedup ~9 (memory-bound sub-linear); 3-GPU
+//! near-linear; PATS pipelined ~1.33x over FCFS; non-pipelined PATS ~ FCFS;
+//! Fig. 10: low-speedup ops mostly on CPU, high-speedup ops on GPU.
+
+use htap::bench_util::{f, Table};
+use htap::sim::experiments::{fig10, fig9};
+
+fn main() {
+    let rows = fig9(300);
+    let mut t = Table::new(&["configuration", "makespan (s)", "speedup vs 1 core"]);
+    for r in &rows {
+        t.row(&[r.label.clone(), f(r.makespan, 1), f(r.speedup_vs_1core, 2)]);
+    }
+    t.print("Fig. 9 — application scalability across device configurations");
+
+    let get = |l: &str| rows.iter().find(|r| r.label == l).unwrap().makespan;
+    println!(
+        "\nPATS/FCFS (pipelined) = {:.2}x  (paper: ~1.33x)",
+        get("3GPU+9CPU FCFS pipelined") / get("3GPU+9CPU PATS pipelined")
+    );
+
+    let mut t = Table::new(&["operation", "% on GPU (PATS)"]);
+    for (op, frac) in fig10(300) {
+        t.row(&[op, f(frac * 100.0, 1)]);
+    }
+    t.print("Fig. 10 — execution profile per pipeline operation (PATS)");
+}

@@ -1,0 +1,116 @@
+//! Hot-path microbenchmarks (the §Perf deliverable's measurement tool).
+//!
+//! Measures the coordinator's per-task overheads — scheduler push/pop,
+//! WRM dispatch bookkeeping, tensor<->literal conversion — which must stay
+//! well below op execution times for the middleware to claim "overhead-
+//! free" fine-grain scheduling.
+
+use htap::bench_util::{f, measure, Table};
+use htap::config::Policy;
+use htap::coordinator::sched::{make_scheduler, ReadyTask};
+use htap::imgproc::convolve::{sobel_magnitude, stencil3x3, SOBEL_X, SOBEL_Y};
+use htap::imgproc::reconstruct::{reconstruct, reconstruct_iterative};
+use htap::imgproc::{Conn, Gray};
+use htap::metrics::DeviceKind;
+use htap::runtime::{HostTensor, Value};
+use htap::testing::Rng;
+
+fn task(i: u64, speedup: f32) -> ReadyTask {
+    ReadyTask {
+        key: (i, 0),
+        name: String::new(),
+        speedup,
+        transfer_impact: 0.1,
+        seq: i,
+        resident_on: if i % 3 == 0 { Some(0) } else { None },
+        has_gpu_impl: true,
+    }
+}
+
+fn main() {
+    let mut t = Table::new(&["operation", "mean", "unit"]);
+
+    for (policy, label) in [(Policy::Fcfs, "FCFS"), (Policy::Pats, "PATS")] {
+        for n in [16usize, 64, 256] {
+            let s = measure(label, 10, 200, || {
+                let mut q = make_scheduler(policy);
+                let mut rng = Rng::new(7);
+                for i in 0..n as u64 {
+                    q.push(task(i, rng.f32_range(1.0, 16.0)));
+                }
+                let mut dev = 0u64;
+                while !q.is_empty() {
+                    let kind = if dev % 4 == 0 { DeviceKind::Gpu } else { DeviceKind::Cpu };
+                    q.pop(kind, 0, true);
+                    dev += 1;
+                }
+            });
+            t.row(&[
+                format!("{label} push+pop x{n}"),
+                f(s.mean.as_nanos() as f64 / n as f64, 0),
+                "ns/task".into(),
+            ]);
+        }
+    }
+
+    // tensor <-> literal conversion (the upload/download host cost)
+    for size in [64usize, 256] {
+        let tensor = HostTensor::new(vec![size, size, 3], vec![1.0; size * size * 3]).unwrap();
+        let v = Value::Tensor(tensor);
+        let s = measure("to_literal", 5, 50, || {
+            let _ = v.to_literal().unwrap();
+        });
+        t.row(&[format!("tensor->literal {size}x{size}x3"), f(s.mean_ms(), 3), "ms".into()]);
+    }
+
+    // payload clone (Arc) — must be O(1)
+    let big = Value::Tensor(HostTensor::new(vec![512, 512], vec![0.0; 512 * 512]).unwrap());
+    let s = measure("value clone", 10, 1000, || {
+        let _ = big.clone();
+    });
+    t.row(&["value clone 512x512 (Arc)".into(), f(s.mean.as_nanos() as f64, 0), "ns".into()]);
+
+    t.print("hot-path microbenchmarks");
+
+    // §Perf before/after pairs: both implementations ship in the crate, so
+    // the optimization log in EXPERIMENTS.md §Perf is reproducible.
+    let mut t = Table::new(&["hot path", "before (ms)", "after (ms)", "speedup"]);
+    let mut rng = Rng::new(3);
+    let size = 128;
+    let mask = Gray::new(size, size, rng.image(size, size)).unwrap();
+    let marker = Gray {
+        h: size,
+        w: size,
+        px: mask.px.iter().map(|v| (v - 40.0).max(0.0)).collect(),
+    };
+    let naive = measure("recon naive", 1, 3, || {
+        reconstruct_iterative(&marker, &mask, Conn::Eight);
+    });
+    let fast = measure("recon vincent", 1, 3, || {
+        reconstruct(&marker, &mask, Conn::Eight);
+    });
+    t.row(&[
+        format!("morph. reconstruction {size}x{size} (fixed-point -> Vincent hybrid)"),
+        f(naive.mean_ms(), 2),
+        f(fast.mean_ms(), 2),
+        f(naive.mean_ms() / fast.mean_ms(), 1),
+    ]);
+
+    let img = Gray::new(size, size, rng.image(size, size)).unwrap();
+    let two_pass = measure("sobel 2pass", 2, 10, || {
+        let gx = stencil3x3(&img, &SOBEL_X);
+        let gy = stencil3x3(&img, &SOBEL_Y);
+        let _m: Vec<f32> =
+            gx.px.iter().zip(&gy.px).map(|(a, b)| (a * a + b * b).sqrt()).collect();
+    });
+    let fused = measure("sobel fused", 2, 10, || {
+        sobel_magnitude(&img);
+    });
+    t.row(&[
+        format!("sobel magnitude {size}x{size} (two-pass -> fused)"),
+        f(two_pass.mean_ms(), 3),
+        f(fused.mean_ms(), 3),
+        f(two_pass.mean_ms() / fused.mean_ms(), 1),
+    ]);
+    t.print("§Perf — optimization before/after (see EXPERIMENTS.md)");
+}

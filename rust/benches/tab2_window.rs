@@ -1,0 +1,36 @@
+//! Paper Table II + Fig. 12: demand-driven window size.
+//!
+//! Expected shape: FCFS flat across 12..19; PATS >= FCFS; at windows below
+//! the device count both policies starve (our WRM keeps choice at window =
+//! #devices, so PATS's knee sits below the paper's — see EXPERIMENTS.md).
+
+use htap::bench_util::{f, Table};
+use htap::sim::experiments::table2;
+
+fn main() {
+    let windows = [4, 6, 8, 10, 12, 13, 14, 15, 16, 17, 18, 19, 24, 32];
+    let rows = table2(&windows, 300);
+    let mut t = Table::new(&["window", "FCFS (s)", "PATS (s)"]);
+    for r in &rows {
+        t.row(&[r.window.to_string(), f(r.fcfs_secs, 1), f(r.pats_secs, 1)]);
+    }
+    t.print("Table II — execution time vs demand-driven window size");
+
+    // Fig. 12: per-op GPU share vs window (PATS)
+    let ops = ["morph_open", "recon_to_nuclei", "watershed", "feature_graph"];
+    let mut t = Table::new(&["window", "morph_open", "recon_to_nuclei", "watershed", "feature_graph"]);
+    for r in rows.iter().filter(|r| [4, 8, 12, 16, 19].contains(&r.window)) {
+        let mut cells = vec![r.window.to_string()];
+        for op in ops {
+            let frac = r
+                .pats_gpu_fraction
+                .iter()
+                .find(|(n, _)| n == op)
+                .map(|(_, v)| *v)
+                .unwrap_or(0.0);
+            cells.push(f(frac * 100.0, 1));
+        }
+        t.row(&cells);
+    }
+    t.print("Fig. 12 — % of op instances on GPU vs window size (PATS)");
+}

@@ -1,0 +1,193 @@
+//! Classification stage: k-means over per-tile feature vectors.
+//!
+//! The paper's fourth stage aggregates feature vectors and classifies
+//! images/patients with machine-learning methods such as k-means [31]; the
+//! conclusions name integrating it as future work.  We implement it as a
+//! `Reduce` stage (Fig. 3's second instantiation style): the Manager feeds
+//! it the stats vectors of *all* tiles, and it clusters them.
+
+use crate::runtime::{HostTensor, Value};
+use crate::testing::Rng;
+use crate::{Error, Result};
+
+/// k-means result: centroids (k x d) and per-point assignment.
+#[derive(Debug, Clone)]
+pub struct KMeansResult {
+    pub centroids: Vec<Vec<f32>>,
+    pub assignment: Vec<usize>,
+    pub inertia: f32,
+}
+
+/// Lloyd's algorithm with deterministic seeding (k-means++ style greedy
+/// farthest-point init on a fixed RNG).
+pub fn kmeans(points: &[Vec<f32>], k: usize, iters: usize, seed: u64) -> Result<KMeansResult> {
+    if points.is_empty() {
+        return Err(Error::Dataflow("kmeans: no points".into()));
+    }
+    let d = points[0].len();
+    if points.iter().any(|p| p.len() != d) {
+        return Err(Error::Dataflow("kmeans: ragged points".into()));
+    }
+    let k = k.min(points.len()).max(1);
+    let mut rng = Rng::new(seed);
+    // farthest-point init
+    let mut centroids: Vec<Vec<f32>> = vec![points[rng.below(points.len())].clone()];
+    while centroids.len() < k {
+        let (best, _) = points
+            .iter()
+            .enumerate()
+            .map(|(i, p)| {
+                let dmin = centroids.iter().map(|c| dist2(p, c)).fold(f32::INFINITY, f32::min);
+                (i, dmin)
+            })
+            .max_by(|a, b| a.1.partial_cmp(&b.1).unwrap())
+            .unwrap();
+        centroids.push(points[best].clone());
+    }
+    let mut assignment = vec![0usize; points.len()];
+    for _ in 0..iters {
+        // assign
+        let mut changed = false;
+        for (i, p) in points.iter().enumerate() {
+            let (best, _) = centroids
+                .iter()
+                .enumerate()
+                .map(|(j, c)| (j, dist2(p, c)))
+                .min_by(|a, b| a.1.partial_cmp(&b.1).unwrap())
+                .unwrap();
+            if assignment[i] != best {
+                assignment[i] = best;
+                changed = true;
+            }
+        }
+        // update
+        let mut sums = vec![vec![0.0f32; d]; k];
+        let mut counts = vec![0usize; k];
+        for (p, &a) in points.iter().zip(&assignment) {
+            counts[a] += 1;
+            for (s, v) in sums[a].iter_mut().zip(p) {
+                *s += v;
+            }
+        }
+        for j in 0..k {
+            if counts[j] > 0 {
+                for s in sums[j].iter_mut() {
+                    *s /= counts[j] as f32;
+                }
+                centroids[j] = sums[j].clone();
+            }
+        }
+        if !changed {
+            break;
+        }
+    }
+    let inertia = points
+        .iter()
+        .zip(&assignment)
+        .map(|(p, &a)| dist2(p, &centroids[a]))
+        .sum();
+    Ok(KMeansResult { centroids, assignment, inertia })
+}
+
+fn dist2(a: &[f32], b: &[f32]) -> f32 {
+    a.iter().zip(b).map(|(x, y)| (x - y) * (x - y)).sum()
+}
+
+/// The Reduce-stage CPU variant: takes N stats vectors (one Value each),
+/// z-normalises the dimensions, clusters into k groups; outputs
+/// (assignment [N], centroids [k*d]).
+pub fn classify_tiles(args: &[Value]) -> Result<Vec<Value>> {
+    let mut points: Vec<Vec<f32>> = Vec::with_capacity(args.len());
+    for v in args {
+        points.push(v.as_tensor()?.data().to_vec());
+    }
+    if points.is_empty() {
+        return Err(Error::Dataflow("classify: no tiles".into()));
+    }
+    let d = points[0].len();
+    // z-normalise
+    for j in 0..d {
+        let mean = points.iter().map(|p| p[j]).sum::<f32>() / points.len() as f32;
+        let var = points.iter().map(|p| (p[j] - mean) * (p[j] - mean)).sum::<f32>()
+            / points.len() as f32;
+        let sd = var.sqrt().max(1e-6);
+        for p in points.iter_mut() {
+            p[j] = (p[j] - mean) / sd;
+        }
+    }
+    let k = 3.min(points.len());
+    let res = kmeans(&points, k, 50, 0xC1A55)?;
+    let assign: Vec<f32> = res.assignment.iter().map(|&a| a as f32).collect();
+    let flat: Vec<f32> = res.centroids.iter().flatten().copied().collect();
+    Ok(vec![
+        Value::Tensor(HostTensor::new(vec![assign.len()], assign)?),
+        Value::Tensor(HostTensor::new(vec![res.centroids.len(), d], flat)?),
+    ])
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn cluster_points() -> Vec<Vec<f32>> {
+        let mut pts = Vec::new();
+        for i in 0..10 {
+            pts.push(vec![0.0 + (i as f32) * 0.01, 0.0]);
+            pts.push(vec![10.0 + (i as f32) * 0.01, 10.0]);
+        }
+        pts
+    }
+
+    #[test]
+    fn separates_two_clear_clusters() {
+        let pts = cluster_points();
+        let r = kmeans(&pts, 2, 20, 1).unwrap();
+        // points 0,2,4.. belong together
+        let a0 = r.assignment[0];
+        for i in (0..20).step_by(2) {
+            assert_eq!(r.assignment[i], a0);
+        }
+        assert_ne!(r.assignment[0], r.assignment[1]);
+        assert!(r.inertia < 1.0);
+    }
+
+    #[test]
+    fn k_clamped_to_n_points() {
+        let pts = vec![vec![1.0, 2.0]];
+        let r = kmeans(&pts, 5, 10, 0).unwrap();
+        assert_eq!(r.centroids.len(), 1);
+    }
+
+    #[test]
+    fn deterministic_given_seed() {
+        let pts = cluster_points();
+        let a = kmeans(&pts, 2, 20, 7).unwrap();
+        let b = kmeans(&pts, 2, 20, 7).unwrap();
+        assert_eq!(a.assignment, b.assignment);
+    }
+
+    #[test]
+    fn ragged_input_rejected() {
+        let pts = vec![vec![1.0], vec![1.0, 2.0]];
+        assert!(kmeans(&pts, 2, 5, 0).is_err());
+        assert!(kmeans(&[], 2, 5, 0).is_err());
+    }
+
+    #[test]
+    fn classify_tiles_outputs_assignment_and_centroids() {
+        let vals: Vec<Value> = (0..6)
+            .map(|i| {
+                let base = if i < 3 { 0.0 } else { 100.0 };
+                Value::Tensor(
+                    HostTensor::new(vec![4], vec![base, base + 1.0, base, base]).unwrap(),
+                )
+            })
+            .collect();
+        let out = classify_tiles(&vals).unwrap();
+        let assign = out[0].as_tensor().unwrap();
+        assert_eq!(assign.shape(), &[6]);
+        // the two groups of tiles get different clusters
+        assert_ne!(assign.data()[0], assign.data()[5]);
+        assert_eq!(assign.data()[0], assign.data()[1]);
+    }
+}

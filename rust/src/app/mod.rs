@@ -1,0 +1,354 @@
+//! The example application (paper §II, Fig. 1): whole-slide-image nuclear
+//! segmentation + feature computation, assembled as a hierarchical
+//! two-level workflow over the `htap` middleware.
+//!
+//! * Stage "segmentation": RBC detection, Morph. Open, ReconToNuclei,
+//!   FillHolles, AreaThreshold, Pre-Watershed, Watershed, BWLabel — each a
+//!   fine-grain operation with a CPU variant ([`ops`], rust imgproc) and an
+//!   accelerator variant (AOT artifact via PJRT).
+//! * Stage "features": the fused tile-level feature graph (deconvolution,
+//!   smoothing, gradients, statistics) + per-object morphometry + Haralick
+//!   texture (CPU-only, irregular).
+//! * Optional stage "classification" (`Reduce`): k-means over all tiles'
+//!   feature vectors — the paper's future-work MapReduce stage.
+
+pub mod classify;
+pub mod ops;
+pub mod profile;
+
+use crate::dataflow::{FunctionVariant, OpDef, PortRef, StageDef, StageInput, StageKind, Workflow};
+use crate::runtime::Value;
+use std::collections::HashMap;
+
+/// Tunable analysis parameters (thresholds scale with tile size).
+#[derive(Debug, Clone)]
+pub struct AppParams {
+    pub tile_size: usize,
+    /// h-dome height for nucleus candidate detection
+    pub hdome_h: f32,
+    /// dome threshold
+    pub dome_thresh: f32,
+    /// component area band
+    pub area_lo: f32,
+    pub area_hi: f32,
+    /// eosin/hema ratio for RBC detection
+    pub rbc_ratio: f32,
+    /// edge threshold in the feature stage
+    pub edge_thresh: f32,
+}
+
+impl AppParams {
+    pub fn for_tile_size(tile_size: usize) -> Self {
+        let scale = (tile_size as f32 / 64.0).max(0.25);
+        AppParams {
+            tile_size,
+            hdome_h: 20.0,
+            dome_thresh: 5.0,
+            area_lo: 6.0 * scale * scale,
+            area_hi: 2000.0 * scale * scale,
+            rbc_ratio: 1.2,
+            edge_thresh: 30.0,
+        }
+    }
+}
+
+fn op(
+    name: &str,
+    cpu: impl Fn(&[Value]) -> crate::Result<Vec<Value>> + Send + Sync + 'static,
+    artifact: Option<&str>,
+    inputs: Vec<PortRef>,
+    n_outputs: usize,
+) -> OpDef {
+    OpDef {
+        name: name.to_string(),
+        variant: match artifact {
+            Some(a) => FunctionVariant::hybrid(cpu, a),
+            None => FunctionVariant::cpu_only(cpu),
+        },
+        inputs,
+        n_outputs,
+        speedup: profile::speedup_of(name),
+        transfer_impact: profile::transfer_impact_of(name),
+    }
+}
+
+/// Build the **pipelined** two-stage workflow (optionally + classification).
+///
+/// Segmentation op wiring (stage input 0 = RGB tile):
+/// ```text
+///   rgb ─┬─ hema_prep ── morph_open ── recon_to_nuclei ── fill_holes ──
+///        │                             area_threshold ─┬─ bwlabel   (out 2)
+///        │                                             ├─ pre_watershed ── watershed (out 0)
+///        └─ rbc_detect (out 1)
+/// ```
+pub fn build_workflow(params: &AppParams, with_classification: bool) -> Workflow {
+    let p = params.clone();
+    let mut wf = Workflow::new("wsi-analysis");
+
+    let seg = StageDef {
+        name: "segmentation".into(),
+        kind: StageKind::PerChunk,
+        inputs: vec![StageInput::Chunk],
+        ops: vec![
+            // 0: cheap preprocessing (CPU-only; paper stage 1)
+            op("hema_prep", ops::hema_prep, None, vec![PortRef::StageInput(0)], 1),
+            // 1: RBC detection (side chain)
+            op(
+                "rbc_detect",
+                ops::rbc_detect,
+                Some("rbc_detect"),
+                vec![PortRef::StageInput(0), PortRef::Param(Value::Scalar(p.rbc_ratio))],
+                1,
+            ),
+            // 2: morphological open
+            op(
+                "morph_open",
+                ops::morph_open,
+                Some("morph_open"),
+                vec![PortRef::Op { op: 0, output: 0 }],
+                1,
+            ),
+            // 3: reconstruction-based candidate detection
+            op(
+                "recon_to_nuclei",
+                ops::recon_to_nuclei,
+                Some("recon_to_nuclei"),
+                vec![
+                    PortRef::Op { op: 2, output: 0 },
+                    PortRef::Param(Value::Scalar(p.hdome_h)),
+                    PortRef::Param(Value::Scalar(p.dome_thresh)),
+                ],
+                1,
+            ),
+            // 4: fill holes
+            op(
+                "fill_holes",
+                ops::fill_holes,
+                Some("fill_holes"),
+                vec![PortRef::Op { op: 3, output: 0 }],
+                1,
+            ),
+            // 5: area threshold
+            op(
+                "area_threshold",
+                ops::area_threshold,
+                Some("area_threshold"),
+                vec![
+                    PortRef::Op { op: 4, output: 0 },
+                    PortRef::Param(Value::Scalar(p.area_lo)),
+                    PortRef::Param(Value::Scalar(p.area_hi)),
+                ],
+                1,
+            ),
+            // 6: BWLabel (exported component labels)
+            op(
+                "bwlabel",
+                ops::bwlabel,
+                Some("bwlabel"),
+                vec![PortRef::Op { op: 5, output: 0 }],
+                1,
+            ),
+            // 7: pre-watershed (distance + markers)
+            op(
+                "pre_watershed",
+                ops::pre_watershed,
+                Some("pre_watershed"),
+                vec![PortRef::Op { op: 5, output: 0 }],
+                2,
+            ),
+            // 8: watershed
+            op(
+                "watershed",
+                ops::watershed_op,
+                Some("watershed"),
+                vec![
+                    PortRef::Op { op: 7, output: 0 },
+                    PortRef::Op { op: 7, output: 1 },
+                    PortRef::Op { op: 5, output: 0 },
+                ],
+                1,
+            ),
+        ],
+        outputs: vec![
+            PortRef::Op { op: 8, output: 0 }, // nucleus labels
+            PortRef::Op { op: 1, output: 0 }, // rbc mask
+            PortRef::Op { op: 6, output: 0 }, // component labels
+        ],
+    };
+    let seg_idx = wf.add_stage(seg);
+
+    let feat = StageDef {
+        name: "features".into(),
+        kind: StageKind::PerChunk,
+        inputs: vec![
+            StageInput::Chunk,
+            StageInput::Upstream { stage: seg_idx, output: 0 },
+        ],
+        ops: vec![
+            // 0: fused tile-level feature graph
+            op(
+                "feature_graph",
+                ops::feature_graph,
+                Some("feature_graph"),
+                vec![PortRef::StageInput(0), PortRef::Param(Value::Scalar(p.edge_thresh))],
+                4,
+            ),
+            // 1: per-object morphometry (irregular, CPU-only)
+            op(
+                "object_features",
+                ops::object_features,
+                None,
+                vec![
+                    PortRef::StageInput(1),
+                    PortRef::Op { op: 0, output: 0 },
+                    PortRef::Op { op: 0, output: 1 },
+                    PortRef::Op { op: 0, output: 2 },
+                ],
+                1,
+            ),
+            // 2: Haralick texture over tissue (CPU-only)
+            op(
+                "haralick",
+                ops::haralick_op,
+                None,
+                vec![PortRef::Op { op: 0, output: 0 }, PortRef::StageInput(1)],
+                1,
+            ),
+        ],
+        outputs: vec![
+            PortRef::Op { op: 0, output: 3 }, // 41-stats vector
+            PortRef::Op { op: 1, output: 0 }, // object features
+            PortRef::Op { op: 2, output: 0 }, // haralick
+        ],
+    };
+    let feat_idx = wf.add_stage(feat);
+
+    if with_classification {
+        wf.add_stage(StageDef {
+            name: "classification".into(),
+            kind: StageKind::Reduce,
+            inputs: vec![StageInput::Upstream { stage: feat_idx, output: 0 }],
+            ops: vec![OpDef {
+                name: "kmeans".into(),
+                variant: FunctionVariant::cpu_only(classify::classify_tiles),
+                // Reduce stage: the WRM passes ALL stage inputs to the op.
+                inputs: vec![],
+                n_outputs: 2,
+                speedup: 1.0,
+                transfer_impact: 0.0,
+            }],
+            outputs: vec![PortRef::Op { op: 0, output: 0 }, PortRef::Op { op: 0, output: 1 }],
+        });
+    }
+    wf
+}
+
+/// The non-pipelined (monolithic) version for the Fig. 9 comparison: each
+/// stage folded into a single task with the time-blended speedup.
+pub fn build_monolithic(params: &AppParams, with_classification: bool) -> Workflow {
+    let wf = build_workflow(params, with_classification);
+    let seg_blend = profile::blended_speedup(&[
+        "hema_prep",
+        "rbc_detect",
+        "morph_open",
+        "recon_to_nuclei",
+        "fill_holes",
+        "area_threshold",
+        "bwlabel",
+        "pre_watershed",
+        "watershed",
+    ]);
+    let feat_blend = profile::blended_speedup(&["feature_graph", "object_features", "haralick"]);
+    let mut blends = vec![seg_blend, feat_blend];
+    if with_classification {
+        blends.push(1.0);
+    }
+    wf.monolithic(&blends).expect("stage count matches")
+}
+
+/// Bindings of `@stage:<name>` tags to fused artifacts (monolithic mode).
+pub fn stage_bindings() -> HashMap<String, String> {
+    let mut m = HashMap::new();
+    m.insert("segmentation".to_string(), "segment_tile".to_string());
+    m
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::dataflow::run_stage_serial;
+    use crate::data::{SynthConfig, TileSynthesizer};
+    use crate::imgproc::Gray;
+
+    #[test]
+    fn workflow_validates() {
+        let wf = build_workflow(&AppParams::for_tile_size(64), true);
+        wf.validate().unwrap();
+        assert_eq!(wf.stages.len(), 3);
+        assert_eq!(wf.stages[0].ops.len(), 9);
+    }
+
+    #[test]
+    fn monolithic_validates_and_blends() {
+        let wf = build_monolithic(&AppParams::for_tile_size(64), false);
+        wf.validate().unwrap();
+        assert_eq!(wf.total_ops(), 2);
+        let seg = &wf.stages[0].ops[0];
+        assert!(seg.speedup > 1.0 && seg.speedup < 15.0);
+        assert_eq!(seg.variant.gpu_artifact.as_deref(), None); // hema_prep is CPU-only
+    }
+
+    #[test]
+    fn serial_pipelined_segmentation_segments_synthetic_tile() {
+        let params = AppParams::for_tile_size(32);
+        let wf = build_workflow(&params, false);
+        let synth = TileSynthesizer::new(SynthConfig::small());
+        let tile = Value::Tensor(synth.tissue_tile(3).to_tensor());
+        let outs = run_stage_serial(&wf.stages[0], &[tile]).unwrap();
+        assert_eq!(outs.len(), 3);
+        let labels = Gray::from_tensor(outs[0].as_tensor().unwrap()).unwrap();
+        let n = labels.px.iter().fold(0.0f32, |a, &b| a.max(b)) as usize;
+        assert!(n >= 1, "no nuclei segmented");
+    }
+
+    #[test]
+    fn pipelined_equals_monolithic_on_cpu() {
+        // The Fig. 9 comparison requires both versions compute the same thing.
+        let params = AppParams::for_tile_size(32);
+        let pipe = build_workflow(&params, false);
+        let mono = build_monolithic(&params, false);
+        let synth = TileSynthesizer::new(SynthConfig::small());
+        let tile = Value::Tensor(synth.tissue_tile(5).to_tensor());
+        let a = run_stage_serial(&pipe.stages[0], &[tile.clone()]).unwrap();
+        let b = run_stage_serial(&mono.stages[0], &[tile]).unwrap();
+        assert_eq!(a[0], b[0]);
+        assert_eq!(a[1], b[1]);
+    }
+
+    #[test]
+    fn every_table1_op_is_present() {
+        let wf = build_workflow(&AppParams::for_tile_size(64), false);
+        let names: Vec<&str> =
+            wf.stages.iter().flat_map(|s| s.ops.iter().map(|o| o.name.as_str())).collect();
+        for expected in [
+            "rbc_detect",
+            "morph_open",
+            "recon_to_nuclei",
+            "area_threshold",
+            "fill_holes",
+            "pre_watershed",
+            "watershed",
+            "bwlabel",
+            "feature_graph",
+        ] {
+            assert!(names.contains(&expected), "missing {expected}");
+        }
+    }
+
+    #[test]
+    fn speedups_come_from_profile() {
+        let wf = build_workflow(&AppParams::for_tile_size(64), false);
+        let ws = wf.stages[0].ops.iter().find(|o| o.name == "watershed").unwrap();
+        assert_eq!(ws.speedup, profile::speedup_of("watershed"));
+    }
+}

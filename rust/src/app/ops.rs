@@ -1,0 +1,254 @@
+//! CPU function-variant closures for the WSI pipeline operations.
+//!
+//! Each function here matches the semantics of the same-named JAX graph in
+//! `python/compile/model.py` (the accelerator member of the variant); the
+//! documented exceptions are label numbering (bwlabel) and the watershed
+//! algorithm (priority-flood vs synchronous flood) — the same CPU/GPU
+//! algorithmic divergence the paper had with OpenCV vs Körbes.
+
+use crate::imgproc::{
+    canny, color, convolve, distance, haralick, label, morphology, objfeatures, reconstruct,
+    stats, threshold, watershed, Conn, Gray, Rgb,
+};
+use crate::runtime::{HostTensor, Value};
+use crate::{Error, Result};
+
+fn gray_arg(args: &[Value], i: usize) -> Result<Gray> {
+    Gray::from_tensor(args.get(i).ok_or_else(|| miss(i))?.as_tensor()?)
+}
+
+fn rgb_arg(args: &[Value], i: usize) -> Result<Rgb> {
+    Rgb::from_tensor(args.get(i).ok_or_else(|| miss(i))?.as_tensor()?)
+}
+
+fn scalar_arg(args: &[Value], i: usize) -> Result<f32> {
+    args.get(i).ok_or_else(|| miss(i))?.as_scalar()
+}
+
+fn miss(i: usize) -> Error {
+    Error::Dataflow(format!("missing argument {i}"))
+}
+
+fn out(g: Gray) -> Value {
+    Value::Tensor(g.to_tensor())
+}
+
+/// hema_prep: rgb -> hematoxylin channel scaled to [0, 256).
+pub fn hema_prep(args: &[Value]) -> Result<Vec<Value>> {
+    let rgb = rgb_arg(args, 0)?;
+    Ok(vec![out(color::hema_image(&rgb)?)])
+}
+
+/// rbc_detect: rgb, ratio -> binary RBC mask (eosin-dominant, opened).
+pub fn rbc_detect(args: &[Value]) -> Result<Vec<Value>> {
+    let rgb = rgb_arg(args, 0)?;
+    let ratio = scalar_arg(args, 1)?;
+    let stains = color::color_deconv(&rgb)?;
+    let mut raw = Gray::zeros(rgb.h, rgb.w);
+    for i in 0..raw.px.len() {
+        if stains.eosin.px[i] > ratio * stains.hematoxylin.px[i] {
+            raw.px[i] = 1.0;
+        }
+    }
+    let opened = morphology::dilate3x3(&morphology::erode3x3(&raw, Conn::Eight), Conn::Eight);
+    Ok(vec![out(opened)])
+}
+
+/// morph_open: gray -> opening by the radius-2 diamond.
+pub fn morph_open(args: &[Value]) -> Result<Vec<Value>> {
+    let g = gray_arg(args, 0)?;
+    Ok(vec![out(morphology::morph_open(&g))])
+}
+
+/// recon_to_nuclei: gray, h, thresh -> candidate nuclei mask (h-dome).
+pub fn recon_to_nuclei(args: &[Value]) -> Result<Vec<Value>> {
+    let g = gray_arg(args, 0)?;
+    let h = scalar_arg(args, 1)?;
+    let t = scalar_arg(args, 2)?;
+    let dome = reconstruct::hdome(&g, h, Conn::Eight);
+    Ok(vec![out(threshold::threshold(&dome, t))])
+}
+
+/// fill_holes: mask -> mask with interior holes filled.
+pub fn fill_holes(args: &[Value]) -> Result<Vec<Value>> {
+    let m = gray_arg(args, 0)?;
+    Ok(vec![out(morphology::fill_holes(&m))])
+}
+
+/// area_threshold: mask, lo, hi -> components within the area band.
+pub fn area_threshold(args: &[Value]) -> Result<Vec<Value>> {
+    let m = gray_arg(args, 0)?;
+    let lo = scalar_arg(args, 1)?;
+    let hi = scalar_arg(args, 2)?;
+    Ok(vec![out(threshold::area_threshold(&m, lo, hi))])
+}
+
+/// bwlabel: mask -> component labels (compact 1..K numbering).
+pub fn bwlabel(args: &[Value]) -> Result<Vec<Value>> {
+    let m = gray_arg(args, 0)?;
+    let (labels, _) = label::bwlabel(&m, Conn::Eight);
+    Ok(vec![out(labels)])
+}
+
+/// pre_watershed: mask -> (relief = -distance, marker labels).
+pub fn pre_watershed(args: &[Value]) -> Result<Vec<Value>> {
+    let m = gray_arg(args, 0)?;
+    let (relief, markers) = watershed::pre_watershed(&m);
+    Ok(vec![out(relief), out(markers)])
+}
+
+/// watershed: relief, markers, mask -> nucleus labels.
+pub fn watershed_op(args: &[Value]) -> Result<Vec<Value>> {
+    let relief = gray_arg(args, 0)?;
+    let markers = gray_arg(args, 1)?;
+    let mask = gray_arg(args, 2)?;
+    Ok(vec![out(watershed::watershed(&relief, &markers, &mask))])
+}
+
+/// distance: mask -> chessboard distance map.
+pub fn distance_op(args: &[Value]) -> Result<Vec<Value>> {
+    let m = gray_arg(args, 0)?;
+    Ok(vec![out(distance::distance_chessboard(&m))])
+}
+
+/// morph_recon: marker, mask -> grayscale reconstruction.
+pub fn morph_recon(args: &[Value]) -> Result<Vec<Value>> {
+    let marker = gray_arg(args, 0)?;
+    let mask = gray_arg(args, 1)?;
+    Ok(vec![out(reconstruct::reconstruct(&marker, &mask, Conn::Eight))])
+}
+
+/// feature_graph: rgb, edge_t -> (hema, gradient magnitude, edges, stats41).
+/// Matches `model.feature_graph` exactly (simple threshold edges).
+pub fn feature_graph(args: &[Value]) -> Result<Vec<Value>> {
+    let rgb = rgb_arg(args, 0)?;
+    let edge_t = scalar_arg(args, 1)?;
+    let hema = color::hema_image(&rgb)?;
+    let smooth = convolve::gaussian3(&hema);
+    let gmag = convolve::sobel_magnitude(&smooth);
+    let edges = threshold::threshold(&gmag, edge_t);
+    let s_h = stats::tile_stats(&hema);
+    let s_g = stats::tile_stats(&gmag);
+    let edge_count: f32 = edges.px.iter().sum();
+    let mut v = Vec::with_capacity(41);
+    v.extend_from_slice(&s_h);
+    v.extend_from_slice(&s_g);
+    v.push(edge_count);
+    Ok(vec![
+        out(hema),
+        out(gmag),
+        out(edges),
+        Value::Tensor(HostTensor::new(vec![41], v)?),
+    ])
+}
+
+/// object_features: labels, hema, gmag, edges -> flat [n, 12] matrix of
+/// per-nucleus morphometry + intensity features (CPU-only; irregular).
+pub fn object_features(args: &[Value]) -> Result<Vec<Value>> {
+    let labels = gray_arg(args, 0)?;
+    let hema = gray_arg(args, 1)?;
+    let gmag = gray_arg(args, 2)?;
+    let edges = gray_arg(args, 3)?;
+    let n_labels = labels.px.iter().fold(0.0f32, |a, &b| a.max(b)) as usize;
+    let feats = objfeatures::object_features(&labels, n_labels, &hema, &gmag, &edges);
+    let n = feats.len();
+    let mut flat = Vec::with_capacity(n * 12);
+    for f in &feats {
+        flat.extend_from_slice(&f.to_vec());
+    }
+    Ok(vec![Value::Tensor(HostTensor::new(vec![n, 12], flat)?)])
+}
+
+/// haralick: hema, labels -> 5 mean Haralick texture features over tissue.
+pub fn haralick_op(args: &[Value]) -> Result<Vec<Value>> {
+    let hema = gray_arg(args, 0)?;
+    let labels = gray_arg(args, 1)?;
+    let mask = Gray {
+        h: labels.h,
+        w: labels.w,
+        px: labels.px.iter().map(|&v| if v > 0.0 { 1.0 } else { 0.0 }).collect(),
+    };
+    let f = haralick::haralick(&hema, &mask);
+    Ok(vec![Value::Tensor(HostTensor::new(vec![5], f.to_vec().to_vec())?)])
+}
+
+/// canny edges (extension op; richer than the threshold edge mask).
+pub fn canny_op(args: &[Value]) -> Result<Vec<Value>> {
+    let g = gray_arg(args, 0)?;
+    let lo = scalar_arg(args, 1)?;
+    let hi = scalar_arg(args, 2)?;
+    Ok(vec![out(canny::canny(&g, lo, hi))])
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::{SynthConfig, TileSynthesizer};
+
+    fn tile() -> Value {
+        let synth = TileSynthesizer::new(SynthConfig::small());
+        Value::Tensor(synth.tissue_tile(0).to_tensor())
+    }
+
+    #[test]
+    fn segmentation_chain_finds_nuclei() {
+        let rgb = tile();
+        let hema = hema_prep(&[rgb.clone()]).unwrap();
+        let opened = morph_open(&hema).unwrap();
+        let cand = recon_to_nuclei(&[opened[0].clone(), Value::Scalar(20.0), Value::Scalar(5.0)])
+            .unwrap();
+        let filled = fill_holes(&cand).unwrap();
+        let kept =
+            area_threshold(&[filled[0].clone(), Value::Scalar(5.0), Value::Scalar(500.0)]).unwrap();
+        let pw = pre_watershed(&kept).unwrap();
+        let labels =
+            watershed_op(&[pw[0].clone(), pw[1].clone(), kept[0].clone()]).unwrap();
+        let lab = Gray::from_tensor(labels[0].as_tensor().unwrap()).unwrap();
+        let n = lab.px.iter().fold(0.0f32, |a, &b| a.max(b)) as usize;
+        assert!(n >= 1, "expected at least one nucleus, got {n}");
+    }
+
+    #[test]
+    fn rbc_mask_is_binary() {
+        let m = rbc_detect(&[tile(), Value::Scalar(1.2)]).unwrap();
+        let g = Gray::from_tensor(m[0].as_tensor().unwrap()).unwrap();
+        assert!(g.px.iter().all(|&v| v == 0.0 || v == 1.0));
+    }
+
+    #[test]
+    fn feature_graph_consistency() {
+        let outs = feature_graph(&[tile(), Value::Scalar(30.0)]).unwrap();
+        assert_eq!(outs.len(), 4);
+        let stats = outs[3].as_tensor().unwrap();
+        assert_eq!(stats.shape(), &[41]);
+        let edges = outs[2].as_tensor().unwrap();
+        let edge_sum: f32 = edges.data().iter().sum();
+        assert_eq!(stats.data()[40], edge_sum);
+    }
+
+    #[test]
+    fn object_features_shape() {
+        let rgb = tile();
+        let hema = hema_prep(&[rgb.clone()]).unwrap();
+        let cand = recon_to_nuclei(&[hema[0].clone(), Value::Scalar(20.0), Value::Scalar(5.0)])
+            .unwrap();
+        let labels = bwlabel(&cand).unwrap();
+        let fg = feature_graph(&[rgb, Value::Scalar(30.0)]).unwrap();
+        let of = object_features(&[
+            labels[0].clone(),
+            fg[0].clone(),
+            fg[1].clone(),
+            fg[2].clone(),
+        ])
+        .unwrap();
+        let t = of[0].as_tensor().unwrap();
+        assert_eq!(t.shape().len(), 2);
+        assert_eq!(t.shape()[1], 12);
+    }
+
+    #[test]
+    fn wrong_arity_is_error() {
+        assert!(hema_prep(&[]).is_err());
+        assert!(recon_to_nuclei(&[tile()]).is_err());
+    }
+}

@@ -1,0 +1,132 @@
+//! Measurement harness for `cargo bench` (criterion is not in the offline
+//! crate set).  Provides warmup + repeated timing with mean/std, and table
+//! printers that emit the same rows the paper's tables/figures report, so
+//! every bench target regenerates one paper artifact.
+
+use std::time::{Duration, Instant};
+
+/// Result of measuring one configuration.
+#[derive(Debug, Clone)]
+pub struct Sample {
+    pub name: String,
+    pub mean: Duration,
+    pub std_dev: Duration,
+    pub iters: usize,
+}
+
+impl Sample {
+    pub fn mean_ms(&self) -> f64 {
+        self.mean.as_secs_f64() * 1e3
+    }
+}
+
+/// Run `f` `warmup` + `iters` times; time only the measured iterations.
+pub fn measure<F: FnMut()>(name: &str, warmup: usize, iters: usize, mut f: F) -> Sample {
+    for _ in 0..warmup {
+        f();
+    }
+    let mut times = Vec::with_capacity(iters);
+    for _ in 0..iters {
+        let t0 = Instant::now();
+        f();
+        times.push(t0.elapsed().as_secs_f64());
+    }
+    let mean = times.iter().sum::<f64>() / times.len() as f64;
+    let var = times.iter().map(|t| (t - mean) * (t - mean)).sum::<f64>()
+        / times.len().max(1) as f64;
+    Sample {
+        name: name.to_string(),
+        mean: Duration::from_secs_f64(mean),
+        std_dev: Duration::from_secs_f64(var.sqrt()),
+        iters,
+    }
+}
+
+/// Measure a function that returns its own metric (e.g. simulated seconds).
+pub fn measure_value<F: FnMut() -> f64>(name: &str, reps: usize, mut f: F) -> (String, f64, f64) {
+    let vals: Vec<f64> = (0..reps).map(|_| f()).collect();
+    let mean = vals.iter().sum::<f64>() / vals.len() as f64;
+    let var = vals.iter().map(|v| (v - mean) * (v - mean)).sum::<f64>() / vals.len() as f64;
+    (name.to_string(), mean, var.sqrt())
+}
+
+/// Fixed-width table printer for bench output.
+pub struct Table {
+    headers: Vec<String>,
+    widths: Vec<usize>,
+    rows: Vec<Vec<String>>,
+}
+
+impl Table {
+    pub fn new(headers: &[&str]) -> Self {
+        Self {
+            headers: headers.iter().map(|s| s.to_string()).collect(),
+            widths: headers.iter().map(|s| s.len().max(8)).collect(),
+            rows: Vec::new(),
+        }
+    }
+
+    pub fn row(&mut self, cells: &[String]) {
+        assert_eq!(cells.len(), self.headers.len(), "column count mismatch");
+        for (w, c) in self.widths.iter_mut().zip(cells) {
+            *w = (*w).max(c.len());
+        }
+        self.rows.push(cells.to_vec());
+    }
+
+    pub fn print(&self, title: &str) {
+        println!("\n=== {title} ===");
+        let line: Vec<String> = self
+            .headers
+            .iter()
+            .zip(&self.widths)
+            .map(|(h, w)| format!("{h:>w$}", w = w))
+            .collect();
+        println!("{}", line.join("  "));
+        println!("{}", "-".repeat(line.join("  ").len()));
+        for r in &self.rows {
+            let line: Vec<String> = r
+                .iter()
+                .zip(&self.widths)
+                .map(|(c, w)| format!("{c:>w$}", w = w))
+                .collect();
+            println!("{}", line.join("  "));
+        }
+    }
+}
+
+/// Format a float with fixed decimals (bench rows).
+pub fn f(v: f64, dec: usize) -> String {
+    format!("{v:.dec$}")
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn measure_counts_iters() {
+        let mut n = 0;
+        let s = measure("inc", 2, 5, || n += 1);
+        assert_eq!(n, 7);
+        assert_eq!(s.iters, 5);
+    }
+
+    #[test]
+    fn measure_value_stats() {
+        let mut i = 0.0;
+        let (_, mean, sd) = measure_value("seq", 3, || {
+            i += 1.0;
+            i
+        });
+        assert!((mean - 2.0).abs() < 1e-9);
+        assert!(sd > 0.0);
+    }
+
+    #[test]
+    #[should_panic(expected = "column count mismatch")]
+    fn table_checks_columns() {
+        let mut t = Table::new(&["a", "b"]);
+        t.row(&["1".into()]);
+    }
+}

@@ -1,0 +1,145 @@
+//! Hand-rolled CLI parsing (clap is not in the offline crate set).
+//!
+//! `htap <command> [--key value ...]`; commands map to the launcher modes
+//! in `main.rs`: `run`, `sim`, `manager`, `worker`, `bench-all`.
+
+use crate::config::RunConfig;
+use crate::{Error, Result};
+use std::collections::BTreeMap;
+
+/// Parsed command line.
+#[derive(Debug, Clone)]
+pub struct Cli {
+    pub command: String,
+    pub flags: BTreeMap<String, String>,
+}
+
+impl Cli {
+    /// Parse `args` (excluding argv[0]).
+    pub fn parse(args: &[String]) -> Result<Cli> {
+        let mut it = args.iter();
+        let command = it
+            .next()
+            .cloned()
+            .ok_or_else(|| Error::Config(USAGE.trim().to_string()))?;
+        let mut flags = BTreeMap::new();
+        while let Some(arg) = it.next() {
+            let key = arg
+                .strip_prefix("--")
+                .ok_or_else(|| Error::Config(format!("expected --flag, got '{arg}'")))?;
+            let val = it
+                .next()
+                .cloned()
+                .ok_or_else(|| Error::Config(format!("flag --{key} needs a value")))?;
+            flags.insert(key.to_string(), val);
+        }
+        Ok(Cli { command, flags })
+    }
+
+    pub fn get(&self, key: &str) -> Option<&str> {
+        self.flags.get(key).map(|s| s.as_str())
+    }
+
+    pub fn get_usize(&self, key: &str, default: usize) -> Result<usize> {
+        match self.flags.get(key) {
+            None => Ok(default),
+            Some(v) => v
+                .parse()
+                .map_err(|_| Error::Config(format!("--{key} must be a number, got '{v}'"))),
+        }
+    }
+
+    /// Build a [`RunConfig`] from `--config file.json` plus flag overrides.
+    pub fn run_config(&self) -> Result<RunConfig> {
+        let mut cfg = match self.get("config") {
+            Some(path) => RunConfig::from_file(path)?,
+            None => RunConfig::default(),
+        };
+        if let Some(v) = self.get("tile-size") {
+            cfg.tile_size = v.parse().map_err(|_| Error::Config("bad --tile-size".into()))?;
+        }
+        if let Some(v) = self.get("tiles") {
+            cfg.n_tiles = v.parse().map_err(|_| Error::Config("bad --tiles".into()))?;
+        }
+        if let Some(v) = self.get("cpus") {
+            cfg.cpu_workers = v.parse().map_err(|_| Error::Config("bad --cpus".into()))?;
+        }
+        if let Some(v) = self.get("gpus") {
+            cfg.gpu_workers = v.parse().map_err(|_| Error::Config("bad --gpus".into()))?;
+        }
+        if let Some(v) = self.get("window") {
+            cfg.window = v.parse().map_err(|_| Error::Config("bad --window".into()))?;
+        }
+        if let Some(v) = self.get("policy") {
+            cfg.policy = crate::config::Policy::parse(v)?;
+        }
+        if let Some(v) = self.get("placement") {
+            cfg.placement = crate::config::Placement::parse(v)?;
+        }
+        if let Some(v) = self.get("no-dl") {
+            cfg.data_locality = v != "true";
+        }
+        if let Some(v) = self.get("no-prefetch") {
+            cfg.prefetch = v != "true";
+        }
+        cfg.validate()?;
+        Ok(cfg)
+    }
+}
+
+pub const USAGE: &str = "
+htap — high-throughput hierarchical analysis pipelines (Teodoro et al. 2012)
+
+USAGE:
+    htap run     [--tiles N] [--tile-size S] [--cpus N] [--gpus N]
+                 [--policy fcfs|pats] [--window N] [--config file.json]
+        run the WSI workflow locally on synthetic tiles
+
+    htap sim     [--nodes N] [--tiles N] [--policy fcfs|pats]
+        discrete-event simulation at cluster scale (Keeneland model)
+
+    htap manager --listen HOST:PORT [--tiles N] [--tile-size S] [--workers N]
+        serve stage instances to TCP workers
+
+    htap worker  --connect HOST:PORT [--cpus N] [--gpus N] [--window N]
+        join a distributed run
+";
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn args(s: &[&str]) -> Vec<String> {
+        s.iter().map(|v| v.to_string()).collect()
+    }
+
+    #[test]
+    fn parses_command_and_flags() {
+        let c = Cli::parse(&args(&["run", "--tiles", "32", "--policy", "fcfs"])).unwrap();
+        assert_eq!(c.command, "run");
+        let cfg = c.run_config().unwrap();
+        assert_eq!(cfg.n_tiles, 32);
+        assert_eq!(cfg.policy, crate::config::Policy::Fcfs);
+    }
+
+    #[test]
+    fn missing_value_rejected() {
+        assert!(Cli::parse(&args(&["run", "--tiles"])).is_err());
+        assert!(Cli::parse(&args(&["run", "tiles", "3"])).is_err());
+        assert!(Cli::parse(&args(&[])).is_err());
+    }
+
+    #[test]
+    fn bad_number_rejected() {
+        let c = Cli::parse(&args(&["run", "--tiles", "many"])).unwrap();
+        assert!(c.run_config().is_err());
+    }
+
+    #[test]
+    fn defaults_apply() {
+        let c = Cli::parse(&args(&["run"])).unwrap();
+        let cfg = c.run_config().unwrap();
+        assert_eq!(cfg.window, RunConfig::default().window);
+        assert_eq!(c.get_usize("nodes", 4).unwrap(), 4);
+    }
+}

@@ -1,0 +1,233 @@
+//! Configuration: typed run settings + the JSON layer they parse from.
+//!
+//! `htap` is a framework: the launcher (`rust/src/main.rs`) builds a
+//! [`RunConfig`] from CLI flags and/or a JSON config file, and every layer
+//! (coordinator, sim, benches) consumes the same struct, so the real
+//! executor and the calibrated simulator are always configured identically.
+
+pub mod json;
+
+use crate::{Error, Result};
+use json::Json;
+
+/// Scheduling policy for the Worker Resource Manager (paper §IV).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum Policy {
+    /// First-come-first-served baseline.
+    Fcfs,
+    /// Performance-Aware Task Scheduling: speedup-sorted queue.
+    Pats,
+}
+
+impl Policy {
+    pub fn parse(s: &str) -> Result<Policy> {
+        match s.to_ascii_lowercase().as_str() {
+            "fcfs" => Ok(Policy::Fcfs),
+            "pats" | "priority" => Ok(Policy::Pats),
+            other => Err(Error::Config(format!("unknown policy '{other}'"))),
+        }
+    }
+
+    pub fn name(self) -> &'static str {
+        match self {
+            Policy::Fcfs => "FCFS",
+            Policy::Pats => "PATS",
+        }
+    }
+}
+
+/// GPU-controller thread placement strategy (paper §IV-A).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Placement {
+    /// Let the OS scheduler place threads.
+    Os,
+    /// Bind each GPU controller to the CPU socket closest to that GPU.
+    Closest,
+}
+
+impl Placement {
+    pub fn parse(s: &str) -> Result<Placement> {
+        match s.to_ascii_lowercase().as_str() {
+            "os" => Ok(Placement::Os),
+            "closest" => Ok(Placement::Closest),
+            other => Err(Error::Config(format!("unknown placement '{other}'"))),
+        }
+    }
+
+    pub fn name(self) -> &'static str {
+        match self {
+            Placement::Os => "OS",
+            Placement::Closest => "Closest",
+        }
+    }
+}
+
+/// Pipeline granularity exposed to the runtime (paper Fig. 9 comparison).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Granularity {
+    /// Each stage is a single monolithic task (CPU *or* GPU end-to-end).
+    NonPipelined,
+    /// Stages decompose into fine-grain operations scheduled individually.
+    Pipelined,
+}
+
+/// One coherent run description, shared by executor / simulator / benches.
+#[derive(Debug, Clone)]
+pub struct RunConfig {
+    /// Tile edge in pixels (must match an AOT artifact size).
+    pub tile_size: usize,
+    /// Number of tiles to process.
+    pub n_tiles: usize,
+    /// CPU compute threads (paper: cores not running GPU controllers).
+    pub cpu_workers: usize,
+    /// Accelerator ("GPU") controller threads.
+    pub gpu_workers: usize,
+    /// WRM scheduling policy.
+    pub policy: Policy,
+    /// GPU-controller placement strategy.
+    pub placement: Placement,
+    /// Task granularity.
+    pub granularity: Granularity,
+    /// Demand-driven window: max stage instances assigned per worker.
+    pub window: usize,
+    /// Data-locality-conscious assignment (paper §IV-C).
+    pub data_locality: bool,
+    /// Prefetch + async copy (paper §IV-D).
+    pub prefetch: bool,
+    /// RNG seed for synthetic data.
+    pub seed: u64,
+}
+
+impl Default for RunConfig {
+    fn default() -> Self {
+        Self {
+            tile_size: 64,
+            n_tiles: 16,
+            cpu_workers: 2,
+            gpu_workers: 1,
+            policy: Policy::Pats,
+            placement: Placement::Closest,
+            granularity: Granularity::Pipelined,
+            window: 15,
+            data_locality: true,
+            prefetch: true,
+            seed: 42,
+        }
+    }
+}
+
+impl RunConfig {
+    /// Merge fields present in a JSON object into this config.
+    pub fn apply_json(&mut self, j: &Json) -> Result<()> {
+        let obj = j
+            .as_obj()
+            .ok_or_else(|| Error::Config("config root must be an object".into()))?;
+        for (k, v) in obj {
+            match k.as_str() {
+                "tile_size" => self.tile_size = req_usize(v, k)?,
+                "n_tiles" => self.n_tiles = req_usize(v, k)?,
+                "cpu_workers" => self.cpu_workers = req_usize(v, k)?,
+                "gpu_workers" => self.gpu_workers = req_usize(v, k)?,
+                "window" => self.window = req_usize(v, k)?,
+                "seed" => self.seed = req_usize(v, k)? as u64,
+                "policy" => self.policy = Policy::parse(req_str(v, k)?)?,
+                "placement" => self.placement = Placement::parse(req_str(v, k)?)?,
+                "granularity" => {
+                    self.granularity = match req_str(v, k)? {
+                        "pipelined" => Granularity::Pipelined,
+                        "non-pipelined" | "monolithic" => Granularity::NonPipelined,
+                        other => {
+                            return Err(Error::Config(format!("bad granularity '{other}'")))
+                        }
+                    }
+                }
+                "data_locality" => {
+                    self.data_locality =
+                        v.as_bool().ok_or_else(|| Error::Config("bad bool".into()))?
+                }
+                "prefetch" => {
+                    self.prefetch = v.as_bool().ok_or_else(|| Error::Config("bad bool".into()))?
+                }
+                other => return Err(Error::Config(format!("unknown config key '{other}'"))),
+            }
+        }
+        Ok(())
+    }
+
+    /// Load from a JSON file path.
+    pub fn from_file(path: &str) -> Result<Self> {
+        let text = std::fs::read_to_string(path)?;
+        let mut cfg = RunConfig::default();
+        cfg.apply_json(&Json::parse(&text)?)?;
+        Ok(cfg)
+    }
+
+    pub fn validate(&self) -> Result<()> {
+        if self.cpu_workers + self.gpu_workers == 0 {
+            return Err(Error::Config("need at least one worker device".into()));
+        }
+        if self.window == 0 {
+            return Err(Error::Config("window must be >= 1".into()));
+        }
+        Ok(())
+    }
+}
+
+fn req_usize(v: &Json, k: &str) -> Result<usize> {
+    v.as_usize()
+        .ok_or_else(|| Error::Config(format!("'{k}' must be a number")))
+}
+
+fn req_str<'a>(v: &'a Json, k: &str) -> Result<&'a str> {
+    v.as_str()
+        .ok_or_else(|| Error::Config(format!("'{k}' must be a string")))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn default_is_valid() {
+        RunConfig::default().validate().unwrap();
+    }
+
+    #[test]
+    fn apply_json_overrides() {
+        let mut c = RunConfig::default();
+        c.apply_json(
+            &Json::parse(
+                r#"{"tile_size": 256, "policy": "fcfs", "granularity": "non-pipelined",
+                    "window": 12, "data_locality": false}"#,
+            )
+            .unwrap(),
+        )
+        .unwrap();
+        assert_eq!(c.tile_size, 256);
+        assert_eq!(c.policy, Policy::Fcfs);
+        assert_eq!(c.granularity, Granularity::NonPipelined);
+        assert_eq!(c.window, 12);
+        assert!(!c.data_locality);
+    }
+
+    #[test]
+    fn unknown_key_rejected() {
+        let mut c = RunConfig::default();
+        assert!(c.apply_json(&Json::parse(r#"{"wat": 1}"#).unwrap()).is_err());
+    }
+
+    #[test]
+    fn zero_devices_invalid() {
+        let mut c = RunConfig::default();
+        c.cpu_workers = 0;
+        c.gpu_workers = 0;
+        assert!(c.validate().is_err());
+    }
+
+    #[test]
+    fn policy_parse_aliases() {
+        assert_eq!(Policy::parse("PRIORITY").unwrap(), Policy::Pats);
+        assert_eq!(Policy::parse("fcfs").unwrap(), Policy::Fcfs);
+        assert!(Policy::parse("lifo").is_err());
+    }
+}

@@ -1,0 +1,576 @@
+//! The Manager (paper §III-B): instantiates the abstract workflow over the
+//! dataset's chunks, tracks inter-stage dependencies, and hands *stage
+//! instances* to Workers with demand-driven, window-limited assignment.
+//!
+//! Stage instances are assigned **in creation order**; Workers request more
+//! as they finish (the window size bounds how many a Worker holds — paper
+//! §V-F / Table II).  Both Fig. 3 instantiation styles are supported:
+//! per-chunk replication (`StageKind::PerChunk`) and aggregation of
+//! intermediary results (`StageKind::Reduce`).
+
+use crate::dataflow::{StageInput, StageKind, Workflow};
+use crate::runtime::Value;
+use crate::{Error, Result};
+use std::collections::{BTreeMap, HashMap, VecDeque};
+use std::sync::{Arc, Condvar, Mutex};
+
+/// Identifies a data chunk (e.g. one image tile).
+pub type ChunkId = u64;
+
+/// Chunk payload provider (tile loader).  Called once per chunk at
+/// instantiation time; the paper's equivalent is the Worker reading tiles
+/// from Lustre, and the Fig. 8/14 experiments include this I/O.
+pub type ChunkLoader = Arc<dyn Fn(ChunkId) -> Result<Vec<Value>> + Send + Sync>;
+
+/// Sentinel chunk id for Reduce-stage instances.
+pub const REDUCE_CHUNK: ChunkId = u64::MAX;
+
+/// One unit of Worker-level work: a `(chunk, stage)` tuple plus its inputs.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Assignment {
+    pub instance_id: u64,
+    pub stage_idx: usize,
+    pub chunk: ChunkId,
+    pub inputs: Vec<Value>,
+}
+
+/// Work-source abstraction: the in-process [`Manager`] and the TCP client
+/// (`net::RemoteManager`) implement the same demand-driven protocol.
+pub trait WorkSource: Send + Sync {
+    /// Blocking: wait until up to `capacity` assignments are available.
+    /// An empty result means the workflow has fully completed.
+    fn request(&self, capacity: usize) -> Vec<Assignment>;
+
+    /// Report a finished stage instance with its outputs.
+    fn complete(&self, instance_id: u64, outputs: Vec<Value>);
+}
+
+struct MgrState {
+    pending: VecDeque<Assignment>,
+    next_id: u64,
+    /// (stage, chunk) -> remaining upstream completions.
+    waiting: HashMap<(usize, ChunkId), usize>,
+    /// (stage, chunk) -> that instance's outputs (kept only if consumed
+    /// downstream).
+    outputs: HashMap<(usize, ChunkId), Vec<Value>>,
+    /// leased assignments, kept whole so they can be re-issued if the
+    /// holding Worker dies (fault tolerance, cf. the authors' earlier
+    /// "reliable scientific workflow system" [13])
+    inflight: HashMap<u64, Assignment>,
+    /// completions for ids no longer inflight (stale duplicates from
+    /// workers presumed dead) — counted, not fatal
+    stale_completions: u64,
+    /// Reduce stage -> per-chunk upstream outputs (ordered by chunk).
+    reduce_acc: HashMap<usize, BTreeMap<ChunkId, Vec<Value>>>,
+    reduce_remaining: HashMap<usize, usize>,
+    remaining_instances: usize,
+    completed_instances: usize,
+    error: Option<String>,
+}
+
+/// In-process Manager.
+pub struct Manager {
+    workflow: Arc<Workflow>,
+    loader: ChunkLoader,
+    n_chunks: usize,
+    /// stages that someone downstream consumes (outputs must be retained)
+    has_dependents: Vec<bool>,
+    state: Mutex<MgrState>,
+    cv: Condvar,
+}
+
+impl Manager {
+    pub fn new(workflow: Arc<Workflow>, loader: ChunkLoader, n_chunks: usize) -> Result<Arc<Self>> {
+        workflow.validate()?;
+        let n_stages = workflow.stages.len();
+        let mut has_dependents = vec![false; n_stages];
+        for stage in &workflow.stages {
+            for input in &stage.inputs {
+                if let StageInput::Upstream { stage: up, .. } = input {
+                    has_dependents[*up] = true;
+                }
+            }
+        }
+        let mut remaining = 0usize;
+        for s in &workflow.stages {
+            remaining += match s.kind {
+                StageKind::PerChunk => n_chunks,
+                StageKind::Reduce => 1,
+            };
+        }
+        let mgr = Arc::new(Manager {
+            workflow: workflow.clone(),
+            loader,
+            n_chunks,
+            has_dependents,
+            state: Mutex::new(MgrState {
+                pending: VecDeque::new(),
+                next_id: 0,
+                waiting: HashMap::new(),
+                outputs: HashMap::new(),
+                inflight: HashMap::new(),
+                reduce_acc: HashMap::new(),
+                reduce_remaining: HashMap::new(),
+                remaining_instances: remaining,
+                completed_instances: 0,
+                stale_completions: 0,
+                error: None,
+            }),
+            cv: Condvar::new(),
+        });
+        mgr.seed()?;
+        Ok(mgr)
+    }
+
+    /// Create the initial instances: every PerChunk stage whose inputs are
+    /// all `Chunk` (no upstream), chunk-major so tiles flow in order.
+    fn seed(&self) -> Result<()> {
+        let mut st = self.state.lock().unwrap();
+        // initialise waiting counters for dependent stages
+        for (si, stage) in self.workflow.stages.iter().enumerate() {
+            let ups = self.workflow.upstream_of(si);
+            match stage.kind {
+                StageKind::PerChunk if !ups.is_empty() => {
+                    for c in 0..self.n_chunks {
+                        st.waiting.insert((si, c as ChunkId), ups.len());
+                    }
+                }
+                StageKind::Reduce => {
+                    // each upstream contributes n_chunks completions
+                    st.reduce_remaining.insert(si, ups.len() * self.n_chunks);
+                    st.reduce_acc.insert(si, BTreeMap::new());
+                }
+                _ => {}
+            }
+        }
+        for c in 0..self.n_chunks {
+            for (si, stage) in self.workflow.stages.iter().enumerate() {
+                if stage.kind == StageKind::PerChunk && self.workflow.upstream_of(si).is_empty() {
+                    let inputs = self.assemble_chunk_only_inputs(si, c as ChunkId)?;
+                    let id = st.next_id;
+                    st.next_id += 1;
+                    let a = Assignment {
+                        instance_id: id,
+                        stage_idx: si,
+                        chunk: c as ChunkId,
+                        inputs,
+                    };
+                    st.inflight.insert(id, a.clone());
+                    st.pending.push_back(a);
+                }
+            }
+        }
+        drop(st);
+        self.cv.notify_all();
+        Ok(())
+    }
+
+    fn assemble_chunk_only_inputs(&self, stage: usize, chunk: ChunkId) -> Result<Vec<Value>> {
+        let mut inputs = Vec::new();
+        for si in &self.workflow.stages[stage].inputs {
+            match si {
+                StageInput::Chunk => inputs.extend((self.loader)(chunk)?),
+                StageInput::Upstream { .. } => {
+                    return Err(Error::Scheduler("stage has upstream inputs".into()))
+                }
+            }
+        }
+        Ok(inputs)
+    }
+
+    /// Assemble a dependent PerChunk instance's inputs from chunk data +
+    /// retained upstream outputs.
+    fn assemble_dependent_inputs(
+        &self,
+        st: &MgrState,
+        stage: usize,
+        chunk: ChunkId,
+    ) -> Result<Vec<Value>> {
+        let mut inputs = Vec::new();
+        for si in &self.workflow.stages[stage].inputs {
+            match si {
+                StageInput::Chunk => inputs.extend((self.loader)(chunk)?),
+                StageInput::Upstream { stage: up, output } => {
+                    let outs = st
+                        .outputs
+                        .get(&(*up, chunk))
+                        .ok_or_else(|| Error::Scheduler(format!("missing outputs of ({up},{chunk})")))?;
+                    inputs.push(
+                        outs.get(*output)
+                            .cloned()
+                            .ok_or_else(|| Error::Scheduler("upstream output index".into()))?,
+                    );
+                }
+            }
+        }
+        Ok(inputs)
+    }
+
+    /// Progress counters: (completed, total).
+    pub fn progress(&self) -> (usize, usize) {
+        let st = self.state.lock().unwrap();
+        let total = st.completed_instances + st.remaining_instances;
+        (st.completed_instances, total)
+    }
+
+    /// First error reported by a worker, if any.
+    pub fn error(&self) -> Option<String> {
+        self.state.lock().unwrap().error.clone()
+    }
+
+    /// Record a fatal worker error; unblocks all requesters.
+    pub fn fail(&self, msg: String) {
+        let mut st = self.state.lock().unwrap();
+        st.error = Some(msg);
+        st.remaining_instances = 0;
+        st.pending.clear();
+        drop(st);
+        self.cv.notify_all();
+    }
+
+    /// Re-issue the leases a dead Worker held: any of `ids` still inflight
+    /// goes back to the front of the pending queue (fault tolerance; the
+    /// demand-driven protocol makes this safe — instance ids are stable and
+    /// duplicate completions are ignored).  Returns how many were requeued.
+    pub fn requeue_stale(&self, ids: &[u64]) -> usize {
+        let mut st = self.state.lock().unwrap();
+        let mut n = 0;
+        for id in ids {
+            if let Some(a) = st.inflight.get(id).cloned() {
+                // only requeue if not already sitting in pending (a lease is
+                // "held" once popped by request(); seeding also pre-inserts)
+                if !st.pending.iter().any(|p| p.instance_id == *id) {
+                    st.pending.push_front(a);
+                    n += 1;
+                }
+            }
+        }
+        drop(st);
+        if n > 0 {
+            self.cv.notify_all();
+        }
+        n
+    }
+
+    /// Number of duplicate/stale completions observed (metrics).
+    pub fn stale_completions(&self) -> u64 {
+        self.state.lock().unwrap().stale_completions
+    }
+
+    /// Outputs of a Reduce stage (after completion) — e.g. classification
+    /// results.  None if the stage didn't run or isn't Reduce.
+    pub fn reduce_outputs(&self, stage: usize) -> Option<Vec<Value>> {
+        let st = self.state.lock().unwrap();
+        st.outputs.get(&(stage, REDUCE_CHUNK)).cloned()
+    }
+}
+
+impl WorkSource for Manager {
+    fn request(&self, capacity: usize) -> Vec<Assignment> {
+        let mut st = self.state.lock().unwrap();
+        loop {
+            if !st.pending.is_empty() {
+                let n = capacity.min(st.pending.len()).max(1);
+                let out: Vec<Assignment> = (0..n).filter_map(|_| st.pending.pop_front()).collect();
+                return out;
+            }
+            if st.remaining_instances == 0 || st.error.is_some() {
+                return Vec::new();
+            }
+            st = self.cv.wait(st).unwrap();
+        }
+    }
+
+    fn complete(&self, instance_id: u64, outs: Vec<Value>) {
+        let mut st = self.state.lock().unwrap();
+        let Some(assignment) = st.inflight.remove(&instance_id) else {
+            // duplicate completion from a worker presumed dead whose lease
+            // was re-issued and already completed — ignore, count it
+            st.stale_completions += 1;
+            self.cv.notify_all();
+            return;
+        };
+        let (stage, chunk) = (assignment.stage_idx, assignment.chunk);
+        st.completed_instances += 1;
+        st.remaining_instances = st.remaining_instances.saturating_sub(1);
+        // retain outputs consumed downstream; Reduce outputs are final
+        // results the caller reads back via `reduce_outputs`.
+        if self.has_dependents[stage] || self.workflow.stages[stage].kind == StageKind::Reduce {
+            st.outputs.insert((stage, chunk), outs.clone());
+        }
+        // unblock dependents
+        let mut to_create: Vec<(usize, ChunkId)> = Vec::new();
+        for (di, dstage) in self.workflow.stages.iter().enumerate() {
+            let depends = self
+                .workflow
+                .upstream_of(di)
+                .contains(&stage);
+            if !depends {
+                continue;
+            }
+            match dstage.kind {
+                StageKind::PerChunk => {
+                    if let Some(rem) = st.waiting.get_mut(&(di, chunk)) {
+                        *rem -= 1;
+                        if *rem == 0 {
+                            st.waiting.remove(&(di, chunk));
+                            to_create.push((di, chunk));
+                        }
+                    }
+                }
+                StageKind::Reduce => {
+                    // append only the outputs this Reduce stage's inputs
+                    // reference (in input-spec order)
+                    let mut picked = Vec::new();
+                    for input in &dstage.inputs {
+                        if let StageInput::Upstream { stage: s, output } = input {
+                            if *s == stage {
+                                if let Some(v) = outs.get(*output) {
+                                    picked.push(v.clone());
+                                }
+                            }
+                        }
+                    }
+                    st.reduce_acc
+                        .get_mut(&di)
+                        .unwrap()
+                        .entry(chunk)
+                        .or_default()
+                        .extend(picked);
+                    let rem = st.reduce_remaining.get_mut(&di).unwrap();
+                    *rem -= 1;
+                    if *rem == 0 {
+                        to_create.push((di, REDUCE_CHUNK));
+                    }
+                }
+            }
+        }
+        for (di, c) in to_create {
+            let inputs = if c == REDUCE_CHUNK {
+                // concatenate per-chunk outputs in chunk order
+                let acc = st.reduce_acc.remove(&di).unwrap_or_default();
+                acc.into_values().flatten().collect()
+            } else {
+                match self.assemble_dependent_inputs(&st, di, c) {
+                    Ok(v) => v,
+                    Err(e) => {
+                        st.error = Some(e.to_string());
+                        self.cv.notify_all();
+                        return;
+                    }
+                }
+            };
+            let id = st.next_id;
+            st.next_id += 1;
+            let a = Assignment { instance_id: id, stage_idx: di, chunk: c, inputs };
+            st.inflight.insert(id, a.clone());
+            st.pending.push_back(a);
+        }
+        // garbage-collect upstream outputs once every dependent of this
+        // chunk has been created (simple heuristic: when nothing waits on
+        // this (stage, chunk) pair any more and it's not a reduce input).
+        drop(st);
+        self.cv.notify_all();
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::dataflow::{FunctionVariant, OpDef, PortRef, StageDef};
+
+    fn scalar_stage(name: &str, kind: StageKind, inputs: Vec<StageInput>, add: f32) -> StageDef {
+        StageDef {
+            name: name.into(),
+            kind,
+            inputs,
+            ops: vec![OpDef {
+                name: format!("{name}-op"),
+                variant: FunctionVariant::cpu_only(move |args| {
+                    let s: f32 = args.iter().map(|v| v.as_scalar().unwrap()).sum();
+                    Ok(vec![Value::Scalar(s + add)])
+                }),
+                inputs: vec![PortRef::StageInput(0)],
+                n_outputs: 1,
+                speedup: 1.0,
+                transfer_impact: 0.0,
+            }],
+            outputs: vec![PortRef::Op { op: 0, output: 0 }],
+        }
+    }
+
+    fn loader() -> ChunkLoader {
+        Arc::new(|c| Ok(vec![Value::Scalar(c as f32)]))
+    }
+
+    fn drive_serial(mgr: &Arc<Manager>) -> usize {
+        // single synthetic worker that executes instances serially
+        let mut executed = 0;
+        loop {
+            let batch = mgr.request(4);
+            if batch.is_empty() {
+                return executed;
+            }
+            for a in batch {
+                let stage = &mgr.workflow.stages[a.stage_idx];
+                let outs = crate::dataflow::run_stage_serial(stage, &a.inputs).unwrap();
+                executed += 1;
+                mgr.complete(a.instance_id, outs);
+            }
+        }
+    }
+
+    #[test]
+    fn single_stage_bag_of_tasks() {
+        let mut wf = Workflow::new("t");
+        wf.add_stage(scalar_stage("a", StageKind::PerChunk, vec![StageInput::Chunk], 1.0));
+        let mgr = Manager::new(Arc::new(wf), loader(), 5).unwrap();
+        assert_eq!(drive_serial(&mgr), 5);
+        let (done, total) = mgr.progress();
+        assert_eq!((done, total), (5, 5));
+    }
+
+    #[test]
+    fn two_stage_chain_routes_outputs() {
+        let mut wf = Workflow::new("t");
+        wf.add_stage(scalar_stage("a", StageKind::PerChunk, vec![StageInput::Chunk], 10.0));
+        wf.add_stage(scalar_stage(
+            "b",
+            StageKind::PerChunk,
+            vec![StageInput::Upstream { stage: 0, output: 0 }],
+            100.0,
+        ));
+        let mgr = Manager::new(Arc::new(wf), loader(), 3).unwrap();
+        assert_eq!(drive_serial(&mgr), 6);
+    }
+
+    #[test]
+    fn reduce_stage_sees_all_chunks() {
+        let mut wf = Workflow::new("t");
+        wf.add_stage(scalar_stage("a", StageKind::PerChunk, vec![StageInput::Chunk], 0.0));
+        // reduce stage: sums everything it receives
+        let mut red = scalar_stage(
+            "sum",
+            StageKind::Reduce,
+            vec![StageInput::Upstream { stage: 0, output: 0 }],
+            0.0,
+        );
+        red.ops[0].variant = FunctionVariant::cpu_only(|args| {
+            Ok(vec![Value::Scalar(args.iter().map(|v| v.as_scalar().unwrap()).sum())])
+        });
+        // reduce op consumes all its stage inputs
+        red.ops[0].inputs = (0..4).map(PortRef::StageInput).collect();
+        wf.add_stage(red);
+        let mgr = Manager::new(Arc::new(wf), loader(), 4).unwrap();
+        assert_eq!(drive_serial(&mgr), 5);
+        let out = mgr.reduce_outputs(1).unwrap();
+        // chunks 0..4 pass through stage a unchanged, reduce sums: 0+1+2+3
+        assert_eq!(out[0].as_scalar().unwrap(), 6.0);
+    }
+
+    #[test]
+    fn assignments_created_in_chunk_order() {
+        let mut wf = Workflow::new("t");
+        wf.add_stage(scalar_stage("a", StageKind::PerChunk, vec![StageInput::Chunk], 0.0));
+        let mgr = Manager::new(Arc::new(wf), loader(), 4).unwrap();
+        let batch = mgr.request(10);
+        let chunks: Vec<ChunkId> = batch.iter().map(|a| a.chunk).collect();
+        assert_eq!(chunks, vec![0, 1, 2, 3]);
+        for a in batch {
+            mgr.complete(a.instance_id, vec![Value::Scalar(0.0)]);
+        }
+    }
+
+    #[test]
+    fn window_capacity_respected() {
+        let mut wf = Workflow::new("t");
+        wf.add_stage(scalar_stage("a", StageKind::PerChunk, vec![StageInput::Chunk], 0.0));
+        let mgr = Manager::new(Arc::new(wf), loader(), 10).unwrap();
+        let batch = mgr.request(3);
+        assert_eq!(batch.len(), 3);
+        for a in batch {
+            mgr.complete(a.instance_id, vec![]);
+        }
+    }
+
+    #[test]
+    fn unknown_completion_is_counted_not_fatal() {
+        let mut wf = Workflow::new("t");
+        wf.add_stage(scalar_stage("a", StageKind::PerChunk, vec![StageInput::Chunk], 0.0));
+        let mgr = Manager::new(Arc::new(wf), loader(), 1).unwrap();
+        mgr.complete(999, vec![]);
+        assert!(mgr.error().is_none());
+        assert_eq!(mgr.stale_completions(), 1);
+        drive_serial(&mgr);
+    }
+
+    #[test]
+    fn requeue_reissues_unfinished_leases() {
+        let mut wf = Workflow::new("t");
+        wf.add_stage(scalar_stage("a", StageKind::PerChunk, vec![StageInput::Chunk], 1.0));
+        let mgr = Manager::new(Arc::new(wf), loader(), 3).unwrap();
+        // "worker 1" takes two leases and dies
+        let batch = mgr.request(2);
+        let ids: Vec<u64> = batch.iter().map(|a| a.instance_id).collect();
+        assert_eq!(mgr.requeue_stale(&ids), 2);
+        // a healthy worker now drains everything exactly once
+        assert_eq!(drive_serial(&mgr), 3);
+        // the dead worker's late completion is ignored
+        mgr.complete(ids[0], vec![Value::Scalar(0.0)]);
+        assert!(mgr.error().is_none());
+        assert_eq!(mgr.stale_completions(), 1);
+    }
+
+    #[test]
+    fn reduce_picks_only_referenced_outputs() {
+        // upstream produces 2 outputs; the reduce stage references only
+        // output 1 — the aggregate must contain exactly those values.
+        let mut wf = Workflow::new("t");
+        let mut up = scalar_stage("a", StageKind::PerChunk, vec![StageInput::Chunk], 0.0);
+        up.ops[0].variant = FunctionVariant::cpu_only(|args| {
+            let v = args[0].as_scalar()?;
+            Ok(vec![Value::Scalar(v), Value::Scalar(v * 10.0)])
+        });
+        up.ops[0].n_outputs = 2;
+        up.outputs =
+            vec![PortRef::Op { op: 0, output: 0 }, PortRef::Op { op: 0, output: 1 }];
+        wf.add_stage(up);
+        let mut red = scalar_stage(
+            "sum",
+            StageKind::Reduce,
+            vec![StageInput::Upstream { stage: 0, output: 1 }],
+            0.0,
+        );
+        red.ops[0].variant = FunctionVariant::cpu_only(|args| {
+            Ok(vec![Value::Scalar(args.iter().map(|v| v.as_scalar().unwrap()).sum())])
+        });
+        red.ops[0].inputs = vec![]; // all-stage-inputs convention
+        wf.add_stage(red);
+        let mgr = Manager::new(Arc::new(wf), loader(), 3).unwrap();
+        drive_serial(&mgr);
+        let out = mgr.reduce_outputs(1).unwrap();
+        // sum of v*10 over chunks 0..3 = (0+1+2)*10 = 30
+        assert_eq!(out[0].as_scalar().unwrap(), 30.0);
+    }
+
+    #[test]
+    fn concurrent_workers_drain_everything() {
+        let mut wf = Workflow::new("t");
+        wf.add_stage(scalar_stage("a", StageKind::PerChunk, vec![StageInput::Chunk], 1.0));
+        wf.add_stage(scalar_stage(
+            "b",
+            StageKind::PerChunk,
+            vec![StageInput::Upstream { stage: 0, output: 0 }],
+            2.0,
+        ));
+        let mgr = Manager::new(Arc::new(wf), loader(), 20).unwrap();
+        let mut handles = Vec::new();
+        for _ in 0..4 {
+            let m = mgr.clone();
+            handles.push(std::thread::spawn(move || drive_serial(&m)));
+        }
+        let total: usize = handles.into_iter().map(|h| h.join().unwrap()).sum();
+        assert_eq!(total, 40);
+        assert!(mgr.error().is_none());
+    }
+}

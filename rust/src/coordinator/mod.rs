@@ -1,0 +1,63 @@
+//! The runtime middleware (the paper's contribution): Manager–Worker
+//! demand-driven execution + within-node hybrid scheduling.
+//!
+//! * [`manager`] — workflow instantiation, dependency tracking, windowed
+//!   demand-driven assignment (§III-B).
+//! * [`worker`] — the Worker process: WCC + WRM (§III-B, Fig. 5).
+//! * [`wrm`] — fine-grain operation scheduling onto CPU cores and GPUs.
+//! * [`sched`] — FCFS / PATS policies with data-locality assignment
+//!   (§IV-B, §IV-C); shared with the simulator.
+//! * [`placement`] — architecture-aware GPU-controller placement (§IV-A).
+
+pub mod manager;
+pub mod placement;
+pub mod sched;
+pub mod worker;
+pub mod wrm;
+
+pub use manager::{Assignment, ChunkId, ChunkLoader, Manager, WorkSource};
+pub use placement::NodeTopology;
+
+use crate::config::RunConfig;
+use crate::dataflow::Workflow;
+use crate::metrics::{MetricsHub, MetricsReport};
+use crate::runtime::ArtifactManifest;
+use crate::Result;
+use std::collections::HashMap;
+use std::sync::Arc;
+
+/// Result of a local run.
+pub struct RunOutcome {
+    pub metrics: MetricsReport,
+    pub manager: Arc<Manager>,
+}
+
+/// Execute a workflow on this machine: one in-process Manager + one Worker
+/// using the configured device threads.  This is the single-node execution
+/// mode (the cluster modes are `net::` for real distribution and `sim::`
+/// for calibrated scale).
+pub fn run_local(
+    workflow: Arc<Workflow>,
+    loader: ChunkLoader,
+    n_chunks: usize,
+    cfg: RunConfig,
+    stage_bindings: HashMap<String, String>,
+) -> Result<RunOutcome> {
+    let manifest = Arc::new(ArtifactManifest::discover()?);
+    let metrics = Arc::new(MetricsHub::new());
+    let manager = Manager::new(workflow.clone(), loader, n_chunks)?;
+    metrics.mark_start();
+    worker::run_worker(
+        manager.clone(),
+        workflow,
+        cfg,
+        manifest,
+        metrics.clone(),
+        stage_bindings,
+    )?;
+    metrics.mark_finish();
+    if let Some(e) = manager.error() {
+        return Err(crate::Error::Scheduler(e));
+    }
+    Ok(RunOutcome { metrics: metrics.report(), manager })
+}

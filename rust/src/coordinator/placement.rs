@@ -1,0 +1,165 @@
+//! Architecture-aware placement of GPU controller threads (paper §IV-A).
+//!
+//! On a Keeneland node (Fig. 6) two Westmere sockets connect to three GPUs
+//! through two I/O hubs: GPU 0 hangs off socket 0's IOH; GPUs 1 and 2 off
+//! socket 1's.  The *Closest* strategy pins each GPU controller thread to a
+//! core of the socket with the fewest QPI/IOH links to its GPU; *OS* leaves
+//! placement to the kernel scheduler.
+//!
+//! The same [`NodeTopology`] model feeds the simulator's transfer-cost
+//! model (extra links -> lower effective PCIe bandwidth, reproducing the
+//! 3/6/8% Fig. 8 deltas) and, on the real executor, drives an actual
+//! `sched_setaffinity` call.
+
+use crate::config::Placement;
+
+/// CPU-socket / GPU-link topology of one hybrid node.
+#[derive(Debug, Clone)]
+pub struct NodeTopology {
+    /// Core ids per socket.
+    pub sockets: Vec<Vec<usize>>,
+    /// For each GPU: number of links from each socket (index = socket id).
+    /// Lower = closer.
+    pub gpu_links: Vec<Vec<u32>>,
+}
+
+impl NodeTopology {
+    /// The Keeneland node of paper Fig. 6: 2 sockets x 6 cores, 3 GPUs.
+    /// GPU 0 is adjacent to socket 0 (1 link) and 2 links from socket 1;
+    /// GPUs 1, 2 are adjacent to socket 1.
+    pub fn keeneland() -> Self {
+        NodeTopology {
+            sockets: vec![(0..6).collect(), (6..12).collect()],
+            gpu_links: vec![vec![1, 2], vec![2, 1], vec![2, 1]],
+        }
+    }
+
+    /// A degenerate single-socket topology sized to this machine.
+    pub fn host() -> Self {
+        let n = std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1);
+        NodeTopology { sockets: vec![(0..n).collect()], gpu_links: vec![vec![1]; 3] }
+    }
+
+    pub fn n_cores(&self) -> usize {
+        self.sockets.iter().map(|s| s.len()).sum()
+    }
+
+    /// Socket closest to `gpu` (fewest links).
+    pub fn closest_socket(&self, gpu: usize) -> usize {
+        let links = &self.gpu_links[gpu % self.gpu_links.len()];
+        links
+            .iter()
+            .enumerate()
+            .min_by_key(|(_, &l)| l)
+            .map(|(s, _)| s)
+            .unwrap_or(0)
+    }
+
+    /// Number of links traversed when `gpu`'s controller runs on `socket`.
+    pub fn links(&self, gpu: usize, socket: usize) -> u32 {
+        self.gpu_links[gpu % self.gpu_links.len()][socket % self.sockets.len()]
+    }
+
+    /// Core assignment for GPU controller threads under a strategy.
+    ///
+    /// * `Closest` — round-robin over the closest socket's cores.
+    /// * `Os` — `None`: let the OS place the thread.
+    pub fn gpu_controller_core(&self, gpu: usize, strategy: Placement) -> Option<usize> {
+        match strategy {
+            Placement::Os => None,
+            Placement::Closest => {
+                let socket = self.closest_socket(gpu);
+                let cores = &self.sockets[socket];
+                Some(cores[gpu % cores.len()])
+            }
+        }
+    }
+
+    /// Effective number of links for a transfer under a strategy, assuming
+    /// the OS scheduler places controllers uniformly at random (expected
+    /// value used by the simulator's Fig. 8 model).
+    pub fn expected_links(&self, gpu: usize, strategy: Placement) -> f64 {
+        match strategy {
+            Placement::Closest => {
+                self.links(gpu, self.closest_socket(gpu)) as f64
+            }
+            Placement::Os => {
+                let total: u32 = (0..self.sockets.len()).map(|s| self.links(gpu, s)).sum();
+                total as f64 / self.sockets.len() as f64
+            }
+        }
+    }
+}
+
+/// Pin the calling thread to one core (no-op if the core doesn't exist).
+pub fn pin_to_core(core: usize) -> bool {
+    unsafe {
+        let mut set: libc::cpu_set_t = std::mem::zeroed();
+        libc::CPU_ZERO(&mut set);
+        libc::CPU_SET(core % libc::CPU_SETSIZE as usize, &mut set);
+        libc::sched_setaffinity(0, std::mem::size_of::<libc::cpu_set_t>(), &set) == 0
+    }
+}
+
+/// Apply the placement strategy for one GPU controller thread (call from
+/// within the thread).  Returns the pinned core, if any.
+pub fn place_gpu_controller(
+    topo: &NodeTopology,
+    gpu: usize,
+    strategy: Placement,
+) -> Option<usize> {
+    let core = topo.gpu_controller_core(gpu, strategy)?;
+    if pin_to_core(core) {
+        Some(core)
+    } else {
+        None
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn keeneland_shape() {
+        let t = NodeTopology::keeneland();
+        assert_eq!(t.n_cores(), 12);
+        assert_eq!(t.closest_socket(0), 0);
+        assert_eq!(t.closest_socket(1), 1);
+        assert_eq!(t.closest_socket(2), 1);
+    }
+
+    #[test]
+    fn closest_assigns_gpu0_to_socket0_cores() {
+        let t = NodeTopology::keeneland();
+        let c0 = t.gpu_controller_core(0, Placement::Closest).unwrap();
+        assert!(t.sockets[0].contains(&c0));
+        let c1 = t.gpu_controller_core(1, Placement::Closest).unwrap();
+        let c2 = t.gpu_controller_core(2, Placement::Closest).unwrap();
+        assert!(t.sockets[1].contains(&c1));
+        assert!(t.sockets[1].contains(&c2));
+        assert_ne!(c1, c2, "controllers spread over distinct cores");
+    }
+
+    #[test]
+    fn os_strategy_does_not_pin() {
+        let t = NodeTopology::keeneland();
+        assert!(t.gpu_controller_core(0, Placement::Os).is_none());
+    }
+
+    #[test]
+    fn expected_links_closest_beats_os() {
+        let t = NodeTopology::keeneland();
+        for gpu in 0..3 {
+            assert!(t.expected_links(gpu, Placement::Closest) < t.expected_links(gpu, Placement::Os));
+        }
+        assert_eq!(t.expected_links(0, Placement::Closest), 1.0);
+        assert_eq!(t.expected_links(0, Placement::Os), 1.5);
+    }
+
+    #[test]
+    fn pin_to_core_zero_succeeds() {
+        // core 0 always exists
+        assert!(pin_to_core(0));
+    }
+}

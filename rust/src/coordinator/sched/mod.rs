@@ -1,0 +1,339 @@
+//! WRM scheduling policies (paper §IV): FCFS baseline and PATS, both with
+//! optional data-locality-conscious (DL) assignment.
+//!
+//! The policy implementations are **engine-agnostic**: the real Worker
+//! Resource Manager (threads + PJRT) and the discrete-event simulator both
+//! drive the same `OpScheduler` objects, so every benchmark exercises the
+//! actual production scheduling code.
+
+use crate::metrics::DeviceKind;
+use std::collections::VecDeque;
+
+/// Key of an operation instance: (stage instance id, op index).
+pub type OpInstKey = (u64, usize);
+
+/// A ready-to-run operation instance, as seen by the scheduler.
+#[derive(Debug, Clone)]
+pub struct ReadyTask {
+    pub key: OpInstKey,
+    pub name: String,
+    /// Estimated GPU-vs-CPU speedup (paper Fig. 7; possibly perturbed for
+    /// the Fig. 13 sensitivity experiments).
+    pub speedup: f32,
+    /// Fraction of GPU execution spent in data transfer (paper §IV-C).
+    pub transfer_impact: f32,
+    /// FIFO sequence number (creation order).
+    pub seq: u64,
+    /// Device id (GPU) whose memory already holds an input of this task.
+    pub resident_on: Option<usize>,
+    /// Whether the op's function variant has an accelerator member.
+    pub has_gpu_impl: bool,
+}
+
+/// A scheduling policy over ready operation instances.
+pub trait OpScheduler: Send {
+    /// Add a newly-ready task.
+    fn push(&mut self, task: ReadyTask);
+
+    /// Pick a task for an idle device, honouring data locality if `dl`.
+    /// Returns `None` when no *eligible* task exists (e.g. a GPU asking
+    /// while only CPU-only tasks are queued).
+    fn pop(&mut self, device: DeviceKind, device_id: usize, dl: bool) -> Option<ReadyTask>;
+
+    fn len(&self) -> usize;
+
+    fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    fn name(&self) -> &'static str;
+}
+
+/// First-come-first-served (paper's baseline, §IV intro).
+#[derive(Default)]
+pub struct Fcfs {
+    queue: VecDeque<ReadyTask>,
+}
+
+impl Fcfs {
+    pub fn new() -> Self {
+        Self::default()
+    }
+}
+
+impl OpScheduler for Fcfs {
+    fn push(&mut self, task: ReadyTask) {
+        self.queue.push_back(task);
+    }
+
+    fn pop(&mut self, device: DeviceKind, device_id: usize, dl: bool) -> Option<ReadyTask> {
+        match device {
+            DeviceKind::Cpu => self.queue.pop_front(),
+            DeviceKind::Gpu => {
+                // With DL, prefer the first task whose data is resident here.
+                if dl {
+                    if let Some(pos) = self
+                        .queue
+                        .iter()
+                        .position(|t| t.has_gpu_impl && t.resident_on == Some(device_id))
+                    {
+                        return self.queue.remove(pos);
+                    }
+                }
+                let pos = self.queue.iter().position(|t| t.has_gpu_impl)?;
+                self.queue.remove(pos)
+            }
+        }
+    }
+
+    fn len(&self) -> usize {
+        self.queue.len()
+    }
+
+    fn name(&self) -> &'static str {
+        "FCFS"
+    }
+}
+
+/// PATS — Performance-Aware Task Scheduling (paper §IV-B, formerly
+/// PRIORITY [36]).  The queue is kept sorted by estimated speedup; an idle
+/// CPU takes the minimum-speedup task, an idle GPU the maximum-speedup one.
+/// Correct behaviour relies only on the *relative order* of estimates.
+///
+/// With DL (§IV-C): when a GPU asks and a dependent task's data is already
+/// resident there, the dependent is chosen iff
+/// `S_d >= S_q * (1 - transferImpact)` where `S_q` is the best-speedup
+/// non-resident candidate.
+pub struct Pats {
+    /// Sorted ascending by (speedup, seq).  Insertion keeps order; windows
+    /// are small (paper Table II sweeps 12..19) so O(n) insert is the
+    /// right trade-off vs tree overhead.
+    queue: Vec<ReadyTask>,
+}
+
+impl Pats {
+    pub fn new() -> Self {
+        Pats { queue: Vec::new() }
+    }
+
+    fn insert_sorted(&mut self, task: ReadyTask) {
+        let pos = self
+            .queue
+            .partition_point(|t| (t.speedup, t.seq) <= (task.speedup, task.seq));
+        self.queue.insert(pos, task);
+    }
+
+    /// Index of the best GPU candidate (max speedup with a GPU impl),
+    /// optionally restricted to tasks resident on `device_id`.
+    fn best_gpu_idx(&self, resident_on: Option<usize>) -> Option<usize> {
+        self.queue
+            .iter()
+            .enumerate()
+            .rev()
+            .find(|(_, t)| {
+                t.has_gpu_impl
+                    && match resident_on {
+                        Some(d) => t.resident_on == Some(d),
+                        None => true,
+                    }
+            })
+            .map(|(i, _)| i)
+    }
+}
+
+impl OpScheduler for Pats {
+    fn push(&mut self, task: ReadyTask) {
+        self.insert_sorted(task);
+    }
+
+    fn pop(&mut self, device: DeviceKind, device_id: usize, dl: bool) -> Option<ReadyTask> {
+        match device {
+            DeviceKind::Cpu => {
+                if self.queue.is_empty() {
+                    None
+                } else {
+                    Some(self.queue.remove(0))
+                }
+            }
+            DeviceKind::Gpu => {
+                let best_any = self.best_gpu_idx(None)?;
+                if dl {
+                    if let Some(best_dep) = self.best_gpu_idx(Some(device_id)) {
+                        let s_d = self.queue[best_dep].speedup;
+                        let q = &self.queue[best_any];
+                        // paper §IV-C: reuse data unless a non-resident task
+                        // gains enough to pay its transfer penalty.
+                        if best_dep == best_any
+                            || s_d >= q.speedup * (1.0 - q.transfer_impact)
+                        {
+                            return Some(self.queue.remove(best_dep));
+                        }
+                    }
+                }
+                Some(self.queue.remove(best_any))
+            }
+        }
+    }
+
+    fn len(&self) -> usize {
+        self.queue.len()
+    }
+
+    fn name(&self) -> &'static str {
+        "PATS"
+    }
+}
+
+/// Build a scheduler from the config policy.
+pub fn make_scheduler(policy: crate::config::Policy) -> Box<dyn OpScheduler> {
+    match policy {
+        crate::config::Policy::Fcfs => Box::new(Fcfs::new()),
+        crate::config::Policy::Pats => Box::new(Pats::new()),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn task(key: u64, speedup: f32, seq: u64) -> ReadyTask {
+        ReadyTask {
+            key: (key, 0),
+            name: format!("op{key}"),
+            speedup,
+            transfer_impact: 0.1,
+            seq,
+            resident_on: None,
+            has_gpu_impl: true,
+        }
+    }
+
+    #[test]
+    fn fcfs_is_fifo_for_cpu() {
+        let mut s = Fcfs::new();
+        for i in 0..5 {
+            s.push(task(i, (5 - i) as f32, i));
+        }
+        for i in 0..5 {
+            assert_eq!(s.pop(DeviceKind::Cpu, 0, false).unwrap().key.0, i);
+        }
+        assert!(s.is_empty());
+    }
+
+    #[test]
+    fn fcfs_gpu_skips_cpu_only_tasks() {
+        let mut s = Fcfs::new();
+        let mut t0 = task(0, 1.0, 0);
+        t0.has_gpu_impl = false;
+        s.push(t0);
+        s.push(task(1, 2.0, 1));
+        assert_eq!(s.pop(DeviceKind::Gpu, 0, false).unwrap().key.0, 1);
+        // cpu still sees the cpu-only task
+        assert_eq!(s.pop(DeviceKind::Cpu, 0, false).unwrap().key.0, 0);
+    }
+
+    #[test]
+    fn pats_cpu_takes_min_gpu_takes_max() {
+        let mut s = Pats::new();
+        s.push(task(0, 3.0, 0));
+        s.push(task(1, 30.0, 1));
+        s.push(task(2, 1.5, 2));
+        assert_eq!(s.pop(DeviceKind::Cpu, 0, false).unwrap().key.0, 2);
+        assert_eq!(s.pop(DeviceKind::Gpu, 0, false).unwrap().key.0, 1);
+        assert_eq!(s.pop(DeviceKind::Cpu, 0, false).unwrap().key.0, 0);
+    }
+
+    #[test]
+    fn pats_queue_stays_sorted_under_random_pushes() {
+        use crate::testing::{forall, Rng};
+        forall(
+            "pats sorted",
+            30,
+            |r: &mut Rng| {
+                let n = r.range(1, 40);
+                (0..n).map(|i| task(i as u64, r.f32_range(0.5, 50.0), i as u64)).collect::<Vec<_>>()
+            },
+            |tasks| {
+                let mut s = Pats::new();
+                for t in tasks.clone() {
+                    s.push(t);
+                }
+                let mut last = f32::NEG_INFINITY;
+                for t in &s.queue {
+                    if t.speedup < last {
+                        return Err("queue out of order".into());
+                    }
+                    last = t.speedup;
+                }
+                Ok(())
+            },
+        );
+    }
+
+    #[test]
+    fn pats_ties_broken_by_fifo() {
+        let mut s = Pats::new();
+        s.push(task(0, 2.0, 0));
+        s.push(task(1, 2.0, 1));
+        assert_eq!(s.pop(DeviceKind::Cpu, 0, false).unwrap().key.0, 0);
+    }
+
+    #[test]
+    fn pats_dl_prefers_resident_when_close() {
+        let mut s = Pats::new();
+        let mut dep = task(0, 9.0, 0);
+        dep.resident_on = Some(2);
+        s.push(dep);
+        s.push(task(1, 10.0, 1)); // ti = 0.1 -> threshold 9.0
+        // S_d = 9.0 >= 10.0 * 0.9 = 9.0 -> dependent wins
+        assert_eq!(s.pop(DeviceKind::Gpu, 2, true).unwrap().key.0, 0);
+    }
+
+    #[test]
+    fn pats_dl_defers_to_much_faster_task() {
+        let mut s = Pats::new();
+        let mut dep = task(0, 2.0, 0);
+        dep.resident_on = Some(2);
+        s.push(dep);
+        s.push(task(1, 10.0, 1));
+        // S_d = 2.0 < 9.0 -> the faster non-resident task wins
+        assert_eq!(s.pop(DeviceKind::Gpu, 2, true).unwrap().key.0, 1);
+    }
+
+    #[test]
+    fn pats_dl_ignores_other_devices_residency() {
+        let mut s = Pats::new();
+        let mut dep = task(0, 2.0, 0);
+        dep.resident_on = Some(7); // resident on a *different* GPU
+        s.push(dep);
+        s.push(task(1, 3.0, 1));
+        assert_eq!(s.pop(DeviceKind::Gpu, 2, true).unwrap().key.0, 1);
+    }
+
+    #[test]
+    fn fcfs_dl_prefers_resident() {
+        let mut s = Fcfs::new();
+        s.push(task(0, 1.0, 0));
+        let mut dep = task(1, 1.0, 1);
+        dep.resident_on = Some(0);
+        s.push(dep);
+        assert_eq!(s.pop(DeviceKind::Gpu, 0, true).unwrap().key.0, 1);
+        // without DL it would have been FIFO
+        let mut s = Fcfs::new();
+        s.push(task(0, 1.0, 0));
+        let mut dep = task(1, 1.0, 1);
+        dep.resident_on = Some(0);
+        s.push(dep);
+        assert_eq!(s.pop(DeviceKind::Gpu, 0, false).unwrap().key.0, 0);
+    }
+
+    #[test]
+    fn gpu_returns_none_when_nothing_eligible() {
+        let mut s = Pats::new();
+        let mut t = task(0, 5.0, 0);
+        t.has_gpu_impl = false;
+        s.push(t);
+        assert!(s.pop(DeviceKind::Gpu, 0, false).is_none());
+        assert_eq!(s.len(), 1);
+    }
+}

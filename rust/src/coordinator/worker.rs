@@ -1,0 +1,144 @@
+//! The Worker (paper §III-B, Fig. 5): a multi-thread process combining the
+//! Worker Communication Controller (WCC) with the Worker Resource Manager.
+//!
+//! The WCC is split into two cooperating threads so that requesting new
+//! stage instances overlaps executing the current ones (the paper's "the
+//! assignment of a stage instance and the retrieval of necessary input data
+//! chunks can be overlapped with the processing of an already assigned
+//! stage instance"):
+//!
+//! * **requester** — keeps up to `window` stage instances in flight by
+//!   demand-driven requests to the Manager.  With `prefetch` off it only
+//!   refills when the Worker drains (the naive cyclic pattern).
+//! * **completer** — drains WRM completions and reports them back.
+
+use super::manager::WorkSource;
+use super::placement::NodeTopology;
+use super::wrm::{spawn_device_threads, Wrm};
+use crate::config::RunConfig;
+use crate::dataflow::Workflow;
+use crate::metrics::MetricsHub;
+use crate::runtime::ArtifactManifest;
+use crate::{Error, Result};
+use std::collections::HashMap;
+use std::sync::{Arc, Condvar, Mutex};
+
+struct Flight {
+    in_flight: usize,
+    requester_done: bool,
+    failed: Option<String>,
+}
+
+/// Run one Worker against a work source until the workflow completes.
+///
+/// Blocks the calling thread; spawns `cpu_workers` + `gpu_workers` device
+/// threads plus the requester thread internally.
+pub fn run_worker(
+    source: Arc<dyn WorkSource>,
+    workflow: Arc<Workflow>,
+    cfg: RunConfig,
+    manifest: Arc<ArtifactManifest>,
+    metrics: Arc<MetricsHub>,
+    stage_bindings: HashMap<String, String>,
+) -> Result<()> {
+    cfg.validate()?;
+    let topo = NodeTopology::host();
+    let wrm = Wrm::new(workflow.clone(), cfg.clone(), manifest, metrics, stage_bindings);
+    let device_threads = spawn_device_threads(&wrm, &cfg, &topo);
+
+    let flight = Arc::new((Mutex::new(Flight { in_flight: 0, requester_done: false, failed: None }), Condvar::new()));
+
+    // requester thread
+    let requester = {
+        let flight = flight.clone();
+        let wrm = wrm.clone();
+        let source = source.clone();
+        let window = cfg.window;
+        let prefetch = cfg.prefetch;
+        std::thread::Builder::new()
+            .name("htap-wcc-req".into())
+            .spawn(move || {
+                let (lock, cv) = &*flight;
+                loop {
+                    // wait for capacity
+                    let capacity = {
+                        let mut fl = lock.lock().unwrap();
+                        loop {
+                            if fl.failed.is_some() {
+                                fl.requester_done = true;
+                                cv.notify_all();
+                                wrm.poke();
+                                return;
+                            }
+                            let cap = window.saturating_sub(fl.in_flight);
+                            let ready = if prefetch { cap > 0 } else { fl.in_flight == 0 };
+                            if ready {
+                                break cap.max(1);
+                            }
+                            fl = cv.wait(fl).unwrap();
+                        }
+                    };
+                    let batch = source.request(capacity);
+                    if batch.is_empty() {
+                        let mut fl = lock.lock().unwrap();
+                        fl.requester_done = true;
+                        cv.notify_all();
+                        drop(fl);
+                        wrm.poke();
+                        return;
+                    }
+                    {
+                        let mut fl = lock.lock().unwrap();
+                        fl.in_flight += batch.len();
+                    }
+                    for a in batch {
+                        wrm.submit(a);
+                    }
+                }
+            })
+            .expect("spawn requester")
+    };
+
+    // completer loop (this thread)
+    let (lock, cv) = &*flight;
+    loop {
+        let events = wrm.wait_completions();
+        let mut newly_done = 0usize;
+        for (id, result) in events {
+            match result {
+                Ok(outs) => {
+                    source.complete(id, outs);
+                    newly_done += 1;
+                }
+                Err(msg) => {
+                    let mut fl = lock.lock().unwrap();
+                    fl.failed = Some(msg);
+                    cv.notify_all();
+                }
+            }
+        }
+        let mut fl = lock.lock().unwrap();
+        fl.in_flight = fl.in_flight.saturating_sub(newly_done);
+        cv.notify_all();
+        let finished = fl.in_flight == 0 && fl.requester_done;
+        let failed = fl.failed.clone();
+        drop(fl);
+        if let Some(msg) = failed {
+            wrm.shutdown();
+            for h in device_threads {
+                let _ = h.join();
+            }
+            let _ = requester.join();
+            return Err(Error::Scheduler(format!("worker failed: {msg}")));
+        }
+        if finished {
+            break;
+        }
+    }
+    wrm.shutdown();
+    for h in device_threads {
+        let _ = h.join();
+    }
+    let _ = requester.join();
+    Ok(())
+}

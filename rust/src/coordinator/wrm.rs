@@ -1,0 +1,595 @@
+//! Worker Resource Manager (paper §III-B, Fig. 5): schedules and executes
+//! the fine-grain operation instances of the stage instances assigned to a
+//! Worker, across CPU-core threads and GPU-controller threads.
+//!
+//! * one computing thread per CPU core executes the **CPU member** of each
+//!   function variant (rust imgproc code);
+//! * one controller thread per GPU owns a [`DeviceExecutor`] (PJRT) and
+//!   executes the **accelerator member** with explicit upload / process /
+//!   download phases; single-output results stay device-resident so the DL
+//!   policy can chain dependent operations without re-uploading.
+//!
+//! The scheduling policy object (`sched::OpScheduler`) is shared with the
+//! discrete-event simulator: the decisions benchmarked at cluster scale are
+//! made by exactly this code.
+
+use super::manager::Assignment;
+use super::placement::{place_gpu_controller, NodeTopology};
+use super::sched::{OpInstKey, OpScheduler, ReadyTask};
+use crate::config::{Placement, RunConfig};
+use crate::dataflow::{PortRef, StageDef, Workflow};
+use crate::metrics::{DeviceKind, MetricsHub};
+use crate::runtime::pjrt::{DeviceExecutor, ExecInput, PayloadKey};
+use crate::runtime::{ArtifactManifest, Value};
+use crate::{Error, Result};
+use std::collections::{HashMap, VecDeque};
+use std::sync::{Arc, Condvar, Mutex};
+use std::time::Instant;
+
+/// A finished stage instance: (instance id, outputs or error message).
+pub type Completion = (u64, std::result::Result<Vec<Value>, String>);
+
+struct InstExec {
+    stage_idx: usize,
+    inputs: Vec<Value>,
+    produced: Vec<Option<Vec<Value>>>,
+    /// per op: count of distinct producer ops not yet finished
+    dep_remaining: Vec<usize>,
+    ops_remaining: usize,
+    /// op idx -> (gpu id, resident payload key) for single-output results
+    resident: HashMap<usize, (usize, PayloadKey)>,
+}
+
+struct WrmInner {
+    queue: Box<dyn OpScheduler>,
+    insts: HashMap<u64, InstExec>,
+    completions: VecDeque<Completion>,
+    seq: u64,
+    shutdown: bool,
+    poked: bool,
+}
+
+/// Shared WRM state + the device threads' rendezvous.
+pub struct Wrm {
+    inner: Mutex<WrmInner>,
+    cv: Condvar,
+    workflow: Arc<Workflow>,
+    manifest: Arc<ArtifactManifest>,
+    metrics: Arc<MetricsHub>,
+    cfg: RunConfig,
+    /// resolution of "@stage:<name>" tags to fused artifact names
+    stage_bindings: HashMap<String, String>,
+}
+
+impl Wrm {
+    pub fn new(
+        workflow: Arc<Workflow>,
+        cfg: RunConfig,
+        manifest: Arc<ArtifactManifest>,
+        metrics: Arc<MetricsHub>,
+        stage_bindings: HashMap<String, String>,
+    ) -> Arc<Self> {
+        Arc::new(Wrm {
+            inner: Mutex::new(WrmInner {
+                queue: super::sched::make_scheduler(cfg.policy),
+                insts: HashMap::new(),
+                completions: VecDeque::new(),
+                seq: 0,
+                shutdown: false,
+                poked: false,
+            }),
+            cv: Condvar::new(),
+            workflow,
+            manifest,
+            metrics,
+            cfg,
+            stage_bindings,
+        })
+    }
+
+    /// Whether the scheduler may hand this op to a GPU controller: either a
+    /// real artifact exists, or the worker has no CPU compute threads and
+    /// the controller must run the CPU member itself (fallback — mirrors
+    /// the simulator's GPU-only mode).
+    fn gpu_eligible(&self, gpu_artifact: &Option<String>) -> bool {
+        self.cfg.cpu_workers == 0 || self.resolve_artifact(gpu_artifact).is_some()
+    }
+
+    /// Resolve an op's accelerator artifact name (handles `@stage:` tags)
+    /// and check it exists at the configured tile size.
+    fn resolve_artifact(&self, gpu_artifact: &Option<String>) -> Option<String> {
+        let name = gpu_artifact.as_ref()?;
+        let resolved = if let Some(stage) = name.strip_prefix("@stage:") {
+            self.stage_bindings.get(stage)?.clone()
+        } else {
+            name.clone()
+        };
+        if self.manifest.has(&resolved, self.cfg.tile_size) {
+            Some(resolved)
+        } else {
+            None
+        }
+    }
+
+    /// Enqueue a stage instance: instantiate its fine-grain operations as
+    /// `(data, op)` tuples and push the dependency-free ones.
+    pub fn submit(&self, a: Assignment) {
+        let stage = &self.workflow.stages[a.stage_idx];
+        let n_ops = stage.ops.len();
+        let mut dep_remaining = vec![0usize; n_ops];
+        for (oi, op) in stage.ops.iter().enumerate() {
+            let mut producers: Vec<usize> = op
+                .inputs
+                .iter()
+                .filter_map(|p| match p {
+                    PortRef::Op { op, .. } => Some(*op),
+                    _ => None,
+                })
+                .collect();
+            producers.sort_unstable();
+            producers.dedup();
+            dep_remaining[oi] = producers.len();
+        }
+        let mut inner = self.inner.lock().unwrap();
+        let exec = InstExec {
+            stage_idx: a.stage_idx,
+            inputs: a.inputs,
+            produced: vec![None; n_ops],
+            dep_remaining: dep_remaining.clone(),
+            ops_remaining: n_ops,
+            resident: HashMap::new(),
+        };
+        inner.insts.insert(a.instance_id, exec);
+        for (oi, op) in stage.ops.iter().enumerate() {
+            if dep_remaining[oi] == 0 {
+                let seq = inner.seq;
+                inner.seq += 1;
+                inner.queue.push(ReadyTask {
+                    key: (a.instance_id, oi),
+                    name: op.name.clone(),
+                    speedup: op.speedup,
+                    transfer_impact: op.transfer_impact,
+                    seq,
+                    resident_on: None,
+                    has_gpu_impl: self.gpu_eligible(&op.variant.gpu_artifact),
+                });
+            }
+        }
+        drop(inner);
+        self.cv.notify_all();
+    }
+
+    /// Stop all device threads (after the queue drains).
+    pub fn shutdown(&self) {
+        self.inner.lock().unwrap().shutdown = true;
+        self.cv.notify_all();
+    }
+
+    /// Wake a `wait_completions` caller even if nothing completed.
+    pub fn poke(&self) {
+        self.inner.lock().unwrap().poked = true;
+        self.cv.notify_all();
+    }
+
+    /// Block until at least one completion (or a poke); drain all pending.
+    pub fn wait_completions(&self) -> Vec<Completion> {
+        let mut inner = self.inner.lock().unwrap();
+        loop {
+            if !inner.completions.is_empty() {
+                return inner.completions.drain(..).collect();
+            }
+            if inner.poked || inner.shutdown {
+                inner.poked = false;
+                return Vec::new();
+            }
+            inner = self.cv.wait(inner).unwrap();
+        }
+    }
+
+    /// Gather host values for an op's inputs (caller holds the lock).
+    fn gather_host_inputs(
+        inner: &WrmInner,
+        workflow: &Workflow,
+        key: OpInstKey,
+    ) -> std::result::Result<Vec<Value>, String> {
+        let exec = inner.insts.get(&key.0).ok_or("instance vanished")?;
+        let stage = &workflow.stages[exec.stage_idx];
+        let op = &stage.ops[key.1];
+        // empty port list = consume all stage inputs (Reduce convention)
+        let mut vals = Vec::with_capacity(op.inputs.len().max(exec.inputs.len()));
+        if op.inputs.is_empty() {
+            vals.extend_from_slice(&exec.inputs);
+        }
+        for port in &op.inputs {
+            match port {
+                PortRef::StageInput(k) => vals.push(
+                    exec.inputs.get(*k).cloned().ok_or(format!("missing stage input {k}"))?,
+                ),
+                PortRef::Op { op: p, output } => {
+                    let outs = exec.produced[*p].as_ref().ok_or("dependency not produced")?;
+                    vals.push(outs.get(*output).cloned().ok_or("bad output index")?);
+                }
+                PortRef::Param(v) => vals.push(v.clone()),
+            }
+        }
+        Ok(vals)
+    }
+
+    /// Record an op's results; push newly-ready dependents; emit the stage
+    /// completion if this was the last op.  Returns instance ids that
+    /// completed (so GPU threads can evict their resident payloads).
+    #[allow(clippy::too_many_arguments)]
+    fn finish_op(
+        &self,
+        key: OpInstKey,
+        outs: Vec<Value>,
+        resident: Option<(usize, PayloadKey)>,
+    ) -> Vec<u64> {
+        let mut inner = self.inner.lock().unwrap();
+        let mut completed = Vec::new();
+        let workflow = self.workflow.clone();
+        let Some(exec) = inner.insts.get_mut(&key.0) else {
+            return completed;
+        };
+        exec.produced[key.1] = Some(outs);
+        if let Some(r) = resident {
+            exec.resident.insert(key.1, r);
+        }
+        exec.ops_remaining -= 1;
+        let stage = &workflow.stages[exec.stage_idx];
+        // decrement dependents
+        let mut newly_ready: Vec<usize> = Vec::new();
+        for (oi, op) in stage.ops.iter().enumerate() {
+            if exec.produced[oi].is_some() || exec.dep_remaining[oi] == 0 {
+                continue;
+            }
+            let depends = op.inputs.iter().any(|p| matches!(p, PortRef::Op { op, .. } if *op == key.1));
+            if depends {
+                exec.dep_remaining[oi] -= 1;
+                if exec.dep_remaining[oi] == 0 {
+                    newly_ready.push(oi);
+                }
+            }
+        }
+        // compute residency hints for the new tasks
+        let hints: Vec<(usize, Option<usize>)> = newly_ready
+            .iter()
+            .map(|&oi| {
+                let op = &stage.ops[oi];
+                let hint = op.inputs.iter().find_map(|p| match p {
+                    PortRef::Op { op: prod, .. } => {
+                        exec.resident.get(prod).map(|(gpu, _)| *gpu)
+                    }
+                    _ => None,
+                });
+                (oi, hint)
+            })
+            .collect();
+        let stage_done = exec.ops_remaining == 0;
+        let stage_idx = exec.stage_idx;
+        if stage_done {
+            let exec = inner.insts.remove(&key.0).unwrap();
+            let stage = &workflow.stages[stage_idx];
+            let result: std::result::Result<Vec<Value>, String> = stage
+                .outputs
+                .iter()
+                .map(|p| {
+                    crate::dataflow::resolve_port(
+                        p,
+                        &exec.inputs,
+                        &exec
+                            .produced
+                            .iter()
+                            .map(|o| o.clone().unwrap_or_default())
+                            .collect::<Vec<_>>(),
+                    )
+                    .map_err(|e| e.to_string())
+                })
+                .collect();
+            inner.completions.push_back((key.0, result));
+            completed.push(key.0);
+        } else {
+            for (oi, hint) in hints {
+                let op = &stage.ops[oi];
+                let seq = inner.seq;
+                inner.seq += 1;
+                inner.queue.push(ReadyTask {
+                    key: (key.0, oi),
+                    name: op.name.clone(),
+                    speedup: op.speedup,
+                    transfer_impact: op.transfer_impact,
+                    seq,
+                    resident_on: hint,
+                    has_gpu_impl: self.gpu_eligible(&op.variant.gpu_artifact),
+                });
+            }
+        }
+        drop(inner);
+        self.cv.notify_all();
+        completed
+    }
+
+    /// CPU computing-thread main loop.
+    pub fn cpu_thread(self: &Arc<Self>, _core: usize) {
+        loop {
+            let (task, vals) = {
+                let mut inner = self.inner.lock().unwrap();
+                loop {
+                    if inner.shutdown {
+                        return;
+                    }
+                    if let Some(task) = inner.queue.pop(DeviceKind::Cpu, 0, false) {
+                        match Self::gather_host_inputs(&inner, &self.workflow, task.key) {
+                            Ok(vals) => break (task, vals),
+                            Err(e) => {
+                                inner.completions.push_back((task.key.0, Err(e)));
+                                continue;
+                            }
+                        }
+                    }
+                    inner = self.cv.wait(inner).unwrap();
+                }
+            };
+            let stage_idx = {
+                let inner = self.inner.lock().unwrap();
+                inner.insts.get(&task.key.0).map(|e| e.stage_idx)
+            };
+            let Some(stage_idx) = stage_idx else { continue };
+            let op = &self.workflow.stages[stage_idx].ops[task.key.1];
+            let t0 = Instant::now();
+            // a panicking op must not silently kill the device thread: turn
+            // it into an error completion so the Worker aborts cleanly
+            let result = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+                (op.variant.cpu)(&vals)
+            }))
+            .unwrap_or_else(|p| {
+                let msg = p
+                    .downcast_ref::<&str>()
+                    .map(|s| s.to_string())
+                    .or_else(|| p.downcast_ref::<String>().cloned())
+                    .unwrap_or_else(|| "op panicked".into());
+                Err(Error::Dataflow(format!("op '{}' panicked: {msg}", op.name)))
+            });
+            self.metrics.record_op(&op.name, DeviceKind::Cpu, t0.elapsed());
+            match result {
+                Ok(outs) => {
+                    self.finish_op(task.key, outs, None);
+                }
+                Err(e) => {
+                    let mut inner = self.inner.lock().unwrap();
+                    inner.completions.push_back((task.key.0, Err(e.to_string())));
+                    drop(inner);
+                    self.cv.notify_all();
+                }
+            }
+        }
+    }
+
+    /// GPU controller-thread main loop.  Owns the PJRT executor; applies
+    /// the placement strategy on entry (paper §IV-A).
+    pub fn gpu_thread(self: &Arc<Self>, gpu_id: usize, topo: &NodeTopology, placement: Placement) {
+        place_gpu_controller(topo, gpu_id, placement);
+        let mut executor = match DeviceExecutor::new((*self.manifest).clone()) {
+            Ok(e) => e,
+            Err(e) => {
+                let mut inner = self.inner.lock().unwrap();
+                inner.completions.push_back((u64::MAX, Err(format!("gpu {gpu_id}: {e}"))));
+                return;
+            }
+        };
+        // NOTE on artifact compilation: executables compile lazily on first
+        // use and are cached for the worker's lifetime (compile-once /
+        // execute-many — verified by runtime_artifacts::executable_cache_
+        // compiles_once).  Eager preloading here measurably *hurts* on
+        // small hosts: on a single-core machine the preload monopolises the
+        // CPU the compute threads need (measured 0.10s -> 1.90s wall for a
+        // 48-tile run), so we keep the lazy policy.
+        // inst id -> payload keys this GPU holds (for eviction)
+        let mut held: HashMap<u64, Vec<PayloadKey>> = HashMap::new();
+        loop {
+            // pick a task + snapshot its inputs under the lock
+            let picked = {
+                let mut inner = self.inner.lock().unwrap();
+                loop {
+                    if inner.shutdown {
+                        return;
+                    }
+                    if let Some(task) =
+                        inner.queue.pop(DeviceKind::Gpu, gpu_id, self.cfg.data_locality)
+                    {
+                        let stage_idx = match inner.insts.get(&task.key.0) {
+                            Some(e) => e.stage_idx,
+                            None => continue,
+                        };
+                        // per-port: resident key on THIS gpu, or host value
+                        let exec = inner.insts.get(&task.key.0).unwrap();
+                        let op = &self.workflow.stages[stage_idx].ops[task.key.1];
+                        let mut plan: Vec<std::result::Result<(usize, PayloadKey), Value>> =
+                            Vec::with_capacity(op.inputs.len().max(exec.inputs.len()));
+                        let mut ok = true;
+                        if op.inputs.is_empty() {
+                            for v in &exec.inputs {
+                                plan.push(Err(v.clone()));
+                            }
+                        }
+                        for port in &op.inputs {
+                            match port {
+                                PortRef::Op { op: p, output } => {
+                                    match exec.resident.get(p) {
+                                        Some(&(g, k)) if g == gpu_id && *output == 0 => {
+                                            plan.push(Ok((g, k)));
+                                        }
+                                        _ => match exec.produced[*p]
+                                            .as_ref()
+                                            .and_then(|o| o.get(*output))
+                                        {
+                                            Some(v) => plan.push(Err(v.clone())),
+                                            None => {
+                                                ok = false;
+                                                break;
+                                            }
+                                        },
+                                    }
+                                }
+                                PortRef::StageInput(k) => match exec.inputs.get(*k) {
+                                    Some(v) => plan.push(Err(v.clone())),
+                                    None => {
+                                        ok = false;
+                                        break;
+                                    }
+                                },
+                                PortRef::Param(v) => plan.push(Err(v.clone())),
+                            }
+                        }
+                        if !ok {
+                            inner
+                                .completions
+                                .push_back((task.key.0, Err("missing op input".into())));
+                            continue;
+                        }
+                        break Some((task, stage_idx, plan));
+                    }
+                    inner = self.cv.wait(inner).unwrap();
+                }
+            };
+            let Some((task, stage_idx, plan)) = picked else { return };
+            let op = &self.workflow.stages[stage_idx].ops[task.key.1];
+            let artifact = match self.resolve_artifact(&op.variant.gpu_artifact) {
+                Some(a) => a,
+                None => {
+                    // no accelerator member (GPU-only worker fallback, or a
+                    // missing artifact): the controller runs the CPU member.
+                    // Resident inputs are downloaded first.
+                    let mut vals: Vec<Value> = Vec::with_capacity(plan.len());
+                    let mut dl_err = None;
+                    for p in &plan {
+                        match p {
+                            Err(v) => vals.push(v.clone()),
+                            Ok((_, k)) => match executor.download(*k) {
+                                Ok(mut outs) if !outs.is_empty() => vals.push(outs.remove(0)),
+                                Ok(_) => dl_err = Some("empty resident payload".to_string()),
+                                Err(e) => dl_err = Some(e.to_string()),
+                            },
+                        }
+                    }
+                    if let Some(e) = dl_err {
+                        let mut inner = self.inner.lock().unwrap();
+                        inner.completions.push_back((task.key.0, Err(e)));
+                        drop(inner);
+                        self.cv.notify_all();
+                        continue;
+                    }
+                    let t0 = Instant::now();
+                    match (op.variant.cpu)(&vals) {
+                        Ok(outs) => {
+                            self.metrics.record_op(&op.name, DeviceKind::Gpu, t0.elapsed());
+                            self.finish_op(task.key, outs, None);
+                        }
+                        Err(e) => {
+                            let mut inner = self.inner.lock().unwrap();
+                            inner.completions.push_back((task.key.0, Err(e.to_string())));
+                            drop(inner);
+                            self.cv.notify_all();
+                        }
+                    }
+                    continue;
+                }
+            };
+            // upload -> process -> download (paper §IV-D phases)
+            let t0 = Instant::now();
+            let up0 = (executor.stats.bytes_up, executor.stats.bytes_down);
+            let inputs: Vec<ExecInput<'_>> = plan
+                .iter()
+                .map(|p| match p {
+                    Ok((_, k)) => ExecInput::Resident(*k),
+                    Err(v) => ExecInput::Host(v),
+                })
+                .collect();
+            let exec_result = executor
+                .execute_resident(&artifact, self.cfg.tile_size, &inputs)
+                .and_then(|key| executor.download(key).map(|outs| (key, outs)));
+            match exec_result {
+                Ok((key, outs)) => {
+                    let n_outputs = outs.len();
+                    self.metrics.record_op(&op.name, DeviceKind::Gpu, t0.elapsed());
+                    let (u1, d1) = (executor.stats.bytes_up, executor.stats.bytes_down);
+                    self.metrics.record_transfer(&op.name, u1 - up0.0, d1 - up0.1);
+                    // keep single-output results resident for DL chaining
+                    let resident = if self.cfg.data_locality && n_outputs == 1 {
+                        held.entry(task.key.0).or_default().push(key);
+                        Some((gpu_id, key))
+                    } else {
+                        executor.evict(key);
+                        None
+                    };
+                    let finished = self.finish_op(task.key, outs, resident);
+                    for inst in finished {
+                        if let Some(keys) = held.remove(&inst) {
+                            for k in keys {
+                                executor.evict(k);
+                            }
+                        }
+                    }
+                    // also evict payloads of instances completed elsewhere
+                    let live: Vec<u64> = {
+                        let inner = self.inner.lock().unwrap();
+                        held.keys().filter(|k| !inner.insts.contains_key(k)).copied().collect()
+                    };
+                    for inst in live {
+                        if let Some(keys) = held.remove(&inst) {
+                            for k in keys {
+                                executor.evict(k);
+                            }
+                        }
+                    }
+                }
+                Err(e) => {
+                    let mut inner = self.inner.lock().unwrap();
+                    inner.completions.push_back((task.key.0, Err(e.to_string())));
+                    drop(inner);
+                    self.cv.notify_all();
+                }
+            }
+        }
+    }
+}
+
+/// Spawn the device threads for a WRM; returns their join handles.
+pub fn spawn_device_threads(
+    wrm: &Arc<Wrm>,
+    cfg: &RunConfig,
+    topo: &NodeTopology,
+) -> Vec<std::thread::JoinHandle<()>> {
+    let mut handles = Vec::new();
+    for c in 0..cfg.cpu_workers {
+        let w = wrm.clone();
+        handles.push(
+            std::thread::Builder::new()
+                .name(format!("htap-cpu-{c}"))
+                .spawn(move || w.cpu_thread(c))
+                .expect("spawn cpu thread"),
+        );
+    }
+    for g in 0..cfg.gpu_workers {
+        let w = wrm.clone();
+        let topo = topo.clone();
+        let placement = cfg.placement;
+        handles.push(
+            std::thread::Builder::new()
+                .name(format!("htap-gpu-{g}"))
+                .spawn(move || w.gpu_thread(g, &topo, placement))
+                .expect("spawn gpu thread"),
+        );
+    }
+    handles
+}
+
+/// Convenience: execute one assignment's stage fully on the current thread
+/// with CPU variants (used by tests as the concurrency oracle).
+pub fn execute_serial(workflow: &Workflow, a: &Assignment) -> Result<Vec<Value>> {
+    let stage: &StageDef = workflow
+        .stages
+        .get(a.stage_idx)
+        .ok_or_else(|| Error::Scheduler("bad stage idx".into()))?;
+    crate::dataflow::run_stage_serial(stage, &a.inputs)
+}

@@ -1,0 +1,126 @@
+//! Synthetic WSI data: the dataset substrate.
+//!
+//! The paper processes 340 glioblastoma whole-slide images partitioned into
+//! 36,848 4Kx4K tiles stored on Lustre.  We cannot ship those, so this
+//! module generates **synthetic H&E-like tiles** with the structure the
+//! pipeline cares about: elliptical nuclei (hematoxylin-dark), eosin-pink
+//! stroma, red-blood-cell blobs, texture noise, and background-only tiles
+//! that get discarded exactly like the paper's preprocessing ("tiles with
+//! background only pixels were discarded beforehand").
+//!
+//! [`TileStore`] serves tiles by chunk id with a configurable artificial
+//! read latency, standing in for the shared-filesystem reads whose cost the
+//! paper's Figs. 8 and 14 include.
+
+pub mod synth;
+
+pub use synth::{SynthConfig, TileSynthesizer};
+
+use crate::coordinator::ChunkLoader;
+use crate::imgproc::Rgb;
+use crate::runtime::Value;
+
+use std::sync::Arc;
+use std::time::Duration;
+
+/// A set of synthetic tiles addressable by chunk id.
+pub struct TileStore {
+    cfg: SynthConfig,
+    n_tiles: usize,
+    /// artificial per-read latency (models shared-FS access)
+    read_latency: Duration,
+    /// chunk ids that simulate "background-only" tiles (pre-discarded)
+    background: Vec<bool>,
+}
+
+impl TileStore {
+    /// Create a store of `n_tiles` tiles; roughly half of raw tiles in the
+    /// paper's images were background-only, but those are discarded before
+    /// scheduling, so by default every tile here is tissue.
+    pub fn new(cfg: SynthConfig, n_tiles: usize) -> Self {
+        TileStore { cfg, n_tiles, read_latency: Duration::ZERO, background: vec![false; n_tiles] }
+    }
+
+    /// Add an artificial per-read latency (Lustre stand-in).
+    pub fn with_read_latency(mut self, lat: Duration) -> Self {
+        self.read_latency = lat;
+        self
+    }
+
+    /// Mark a fraction of tiles as background-only (for discard tests).
+    pub fn with_background_fraction(mut self, frac: f32, seed: u64) -> Self {
+        let mut rng = crate::testing::Rng::new(seed);
+        for b in self.background.iter_mut() {
+            *b = rng.f32() < frac;
+        }
+        self
+    }
+
+    pub fn len(&self) -> usize {
+        self.n_tiles
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.n_tiles == 0
+    }
+
+    /// Generate tile `chunk` (deterministic in (seed, chunk)).
+    pub fn tile(&self, chunk: u64) -> Rgb {
+        let synth = TileSynthesizer::new(self.cfg.clone());
+        if self.background.get(chunk as usize).copied().unwrap_or(false) {
+            synth.background_tile(chunk)
+        } else {
+            synth.tissue_tile(chunk)
+        }
+    }
+
+    /// Chunk ids that survive the background discard.
+    pub fn tissue_chunks(&self) -> Vec<u64> {
+        (0..self.n_tiles as u64)
+            .filter(|&c| !self.background[c as usize])
+            .collect()
+    }
+
+    /// Adapt to the coordinator's [`ChunkLoader`] interface.
+    pub fn loader(self: Arc<Self>) -> ChunkLoader {
+        Arc::new(move |chunk| {
+            if !self.read_latency.is_zero() {
+                std::thread::sleep(self.read_latency);
+            }
+            let tile = self.tile(chunk);
+            Ok(vec![Value::Tensor(tile.to_tensor())])
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn deterministic_tiles() {
+        let store = TileStore::new(SynthConfig::small(), 4);
+        let a = store.tile(2);
+        let b = store.tile(2);
+        assert_eq!(a, b);
+        let c = store.tile(3);
+        assert_ne!(a, c);
+    }
+
+    #[test]
+    fn loader_returns_tensor() {
+        let store = Arc::new(TileStore::new(SynthConfig::small(), 2));
+        let loader = store.loader();
+        let vals = loader(0).unwrap();
+        assert_eq!(vals.len(), 1);
+        let t = vals[0].as_tensor().unwrap();
+        assert_eq!(t.shape(), &[32, 32, 3]);
+    }
+
+    #[test]
+    fn background_fraction_discard() {
+        let store = TileStore::new(SynthConfig::small(), 100).with_background_fraction(0.5, 7);
+        let tissue = store.tissue_chunks();
+        assert!(tissue.len() > 20 && tissue.len() < 80, "got {}", tissue.len());
+    }
+}

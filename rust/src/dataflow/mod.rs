@@ -1,0 +1,433 @@
+//! Hierarchical dataflow model (paper §III-A).
+//!
+//! An analysis application is an **abstract workflow**: a DAG of
+//! coarse-grain *stages* connected by logical streams.  Each stage is
+//! itself a pipeline of fine-grain *operations* — the two-level hierarchy
+//! of Fig. 2.  Binding a stage to an input data chunk yields a *stage
+//! instance* `(chunk, stage)`; instantiating its operations yields
+//! *operation instances* `(data, op)` — the units the Worker Resource
+//! Manager schedules onto CPU cores and GPUs.
+//!
+//! Every operation is bound to a **function variant** (paper §III-A,
+//! citing Merge/practical predicate dispatch): a CPU closure over host
+//! tensors plus, optionally, the name of an AOT artifact executed through
+//! PJRT as the accelerator implementation.  The WRM picks the member of
+//! the variant that matches the device claiming the task.
+
+pub mod variant;
+
+pub use variant::{CpuFn, FunctionVariant};
+
+use crate::runtime::Value;
+use crate::{Error, Result};
+
+/// Where an operation input comes from.
+#[derive(Debug, Clone)]
+pub enum PortRef {
+    /// The stage instance's k-th external input (a chunk payload or an
+    /// upstream stage output routed by the Manager).
+    StageInput(usize),
+    /// Output `output` of fine-grain operation `op` in the same stage.
+    Op { op: usize, output: usize },
+    /// A constant parameter baked into the workflow (thresholds etc.).
+    Param(Value),
+}
+
+/// A fine-grain operation inside a stage (second hierarchy level).
+#[derive(Clone)]
+pub struct OpDef {
+    pub name: String,
+    pub variant: FunctionVariant,
+    pub inputs: Vec<PortRef>,
+    pub n_outputs: usize,
+    /// Estimated GPU-vs-1-CPU-core speedup (paper Fig. 7; drives PATS).
+    pub speedup: f32,
+    /// Fraction of GPU execution time spent moving data (paper §IV-C).
+    pub transfer_impact: f32,
+}
+
+impl std::fmt::Debug for OpDef {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("OpDef")
+            .field("name", &self.name)
+            .field("inputs", &self.inputs.len())
+            .field("n_outputs", &self.n_outputs)
+            .field("speedup", &self.speedup)
+            .finish()
+    }
+}
+
+/// How a stage consumes data (paper Fig. 3's two instantiation styles).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum StageKind {
+    /// One instance per data chunk (bag-of-tasks replication).
+    PerChunk,
+    /// One instance consuming the outputs of *all* chunk instances of the
+    /// upstream stage (the "computation involving intermediary results from
+    /// multiple inputs" instantiation — used by the classification stage).
+    Reduce,
+}
+
+/// Where a stage's external inputs come from.
+#[derive(Debug, Clone)]
+pub enum StageInput {
+    /// The raw data chunk (e.g. the RGB tile).
+    Chunk,
+    /// Output `output` of upstream stage `stage` (same chunk for PerChunk
+    /// stages; concatenated over all chunks for Reduce stages).
+    Upstream { stage: usize, output: usize },
+}
+
+/// A coarse-grain stage (first hierarchy level).
+#[derive(Debug, Clone)]
+pub struct StageDef {
+    pub name: String,
+    pub kind: StageKind,
+    pub inputs: Vec<StageInput>,
+    /// Fine-grain pipeline (must be in a valid topological order).
+    pub ops: Vec<OpDef>,
+    /// Which op outputs are exported as the stage's outputs.
+    pub outputs: Vec<PortRef>,
+}
+
+/// An abstract workflow: the DAG of stages.
+#[derive(Debug, Clone, Default)]
+pub struct Workflow {
+    pub name: String,
+    pub stages: Vec<StageDef>,
+}
+
+impl Workflow {
+    pub fn new(name: &str) -> Self {
+        Workflow { name: name.to_string(), stages: Vec::new() }
+    }
+
+    /// Append a stage, returning its index.
+    pub fn add_stage(&mut self, stage: StageDef) -> usize {
+        self.stages.push(stage);
+        self.stages.len() - 1
+    }
+
+    /// Upstream stage indices of stage `s`.
+    pub fn upstream_of(&self, s: usize) -> Vec<usize> {
+        let mut ups: Vec<usize> = self.stages[s]
+            .inputs
+            .iter()
+            .filter_map(|i| match i {
+                StageInput::Upstream { stage, .. } => Some(*stage),
+                StageInput::Chunk => None,
+            })
+            .collect();
+        ups.sort_unstable();
+        ups.dedup();
+        ups
+    }
+
+    /// Validate the graph: stage deps acyclic + forward-only, op inputs
+    /// reference earlier ops only (pipeline order is topological), port
+    /// indices in range.
+    pub fn validate(&self) -> Result<()> {
+        for (si, stage) in self.stages.iter().enumerate() {
+            for input in &stage.inputs {
+                if let StageInput::Upstream { stage: up, .. } = input {
+                    if *up >= si {
+                        return Err(Error::Dataflow(format!(
+                            "stage '{}' depends on stage {up} which is not earlier",
+                            stage.name
+                        )));
+                    }
+                    if self.stages[*up].kind == StageKind::Reduce
+                        && stage.kind == StageKind::Reduce
+                    {
+                        return Err(Error::Dataflow(
+                            "chained Reduce stages are not supported".into(),
+                        ));
+                    }
+                }
+            }
+            if stage.ops.is_empty() {
+                return Err(Error::Dataflow(format!("stage '{}' has no ops", stage.name)));
+            }
+            for (oi, op) in stage.ops.iter().enumerate() {
+                if op.n_outputs == 0 {
+                    return Err(Error::Dataflow(format!(
+                        "op '{}' declares zero outputs",
+                        op.name
+                    )));
+                }
+                for port in &op.inputs {
+                    match port {
+                        PortRef::Op { op: src, output } => {
+                            if *src >= oi {
+                                return Err(Error::Dataflow(format!(
+                                    "op '{}' input references op {src} not earlier in the pipeline",
+                                    op.name
+                                )));
+                            }
+                            if *output >= stage.ops[*src].n_outputs {
+                                return Err(Error::Dataflow(format!(
+                                    "op '{}' references output {output} of '{}' (has {})",
+                                    op.name,
+                                    stage.ops[*src].name,
+                                    stage.ops[*src].n_outputs
+                                )));
+                            }
+                        }
+                        PortRef::StageInput(k) => {
+                            if *k >= stage.inputs.len() && stage.kind == StageKind::PerChunk {
+                                return Err(Error::Dataflow(format!(
+                                    "op '{}' references stage input {k} (stage has {})",
+                                    op.name,
+                                    stage.inputs.len()
+                                )));
+                            }
+                        }
+                        PortRef::Param(_) => {}
+                    }
+                }
+            }
+            for port in &stage.outputs {
+                if let PortRef::Op { op, output } = port {
+                    if *op >= stage.ops.len() || *output >= stage.ops[*op].n_outputs {
+                        return Err(Error::Dataflow(format!(
+                            "stage '{}' output references invalid port",
+                            stage.name
+                        )));
+                    }
+                }
+            }
+        }
+        Ok(())
+    }
+
+    /// Total fine-grain op count across stages (metrics / tests).
+    pub fn total_ops(&self) -> usize {
+        self.stages.iter().map(|s| s.ops.len()).sum()
+    }
+
+    /// Fold a whole stage's pipeline into a single monolithic op — the
+    /// *non-pipelined* version of the paper's Fig. 9 comparison.  The
+    /// resulting stage has one op that runs the entire chain on one device;
+    /// its speedup estimate is the time-weighted blend passed per stage.
+    pub fn monolithic(&self, speedups: &[f32]) -> Result<Workflow> {
+        if speedups.len() != self.stages.len() {
+            return Err(Error::Dataflow("need one blended speedup per stage".into()));
+        }
+        let mut out = Workflow::new(&format!("{}-monolithic", self.name));
+        for (stage, &speedup) in self.stages.iter().zip(speedups) {
+            let inner = stage.clone();
+            let n_outputs = stage.outputs.len().max(1);
+            let n_inputs = stage.inputs.len();
+            let cpu_chain: CpuFn = {
+                let inner = inner.clone();
+                std::sync::Arc::new(move |inputs: &[Value]| run_stage_serial(&inner, inputs))
+            };
+            // A monolithic stage can only run on the accelerator if a fused
+            // artifact exists for the whole chain; the executor resolves the
+            // "@stage:<name>" tag against the manifest (e.g. segment_tile).
+            let all_gpu = inner.ops.iter().all(|o| o.variant.gpu_artifact.is_some());
+            out.add_stage(StageDef {
+                name: stage.name.clone(),
+                kind: stage.kind,
+                inputs: stage.inputs.clone(),
+                ops: vec![OpDef {
+                    name: format!("{}-monolith", stage.name),
+                    variant: FunctionVariant {
+                        cpu: cpu_chain,
+                        gpu_artifact: if all_gpu {
+                            Some(format!("@stage:{}", stage.name))
+                        } else {
+                            None
+                        },
+                    },
+                    inputs: (0..n_inputs).map(PortRef::StageInput).collect(),
+                    n_outputs,
+                    speedup,
+                    transfer_impact: 0.1,
+                }],
+                outputs: (0..n_outputs).map(|o| PortRef::Op { op: 0, output: o }).collect(),
+            });
+        }
+        Ok(out)
+    }
+}
+
+/// Run one stage's fine-grain pipeline serially on the calling thread with
+/// the CPU variants.  Used by monolithic stages and as a test oracle for
+/// the concurrent WRM execution.
+pub fn run_stage_serial(stage: &StageDef, inputs: &[Value]) -> Result<Vec<Value>> {
+    let mut produced: Vec<Vec<Value>> = Vec::with_capacity(stage.ops.len());
+    for op in &stage.ops {
+        // Convention: an op with no declared ports consumes ALL stage
+        // inputs (needed by Reduce stages, whose input arity is dynamic).
+        let mut args: Vec<Value> = Vec::with_capacity(op.inputs.len().max(inputs.len()));
+        if op.inputs.is_empty() {
+            args.extend_from_slice(inputs);
+        }
+        for port in &op.inputs {
+            args.push(resolve_port(port, inputs, &produced)?);
+        }
+        let outs = (op.variant.cpu)(&args)?;
+        if outs.len() != op.n_outputs {
+            return Err(Error::Dataflow(format!(
+                "op '{}' produced {} outputs, declared {}",
+                op.name,
+                outs.len(),
+                op.n_outputs
+            )));
+        }
+        produced.push(outs);
+    }
+    stage
+        .outputs
+        .iter()
+        .map(|p| resolve_port(p, inputs, &produced))
+        .collect()
+}
+
+/// Resolve a port reference against stage inputs + already-produced values.
+pub fn resolve_port(
+    port: &PortRef,
+    stage_inputs: &[Value],
+    produced: &[Vec<Value>],
+) -> Result<Value> {
+    match port {
+        PortRef::StageInput(k) => stage_inputs
+            .get(*k)
+            .cloned()
+            .ok_or_else(|| Error::Dataflow(format!("missing stage input {k}"))),
+        PortRef::Op { op, output } => produced
+            .get(*op)
+            .and_then(|outs| outs.get(*output))
+            .cloned()
+            .ok_or_else(|| Error::Dataflow(format!("missing op output {op}:{output}"))),
+        PortRef::Param(v) => Ok(v.clone()),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::Arc;
+
+    fn passthrough(name: &str, inputs: Vec<PortRef>) -> OpDef {
+        OpDef {
+            name: name.into(),
+            variant: FunctionVariant {
+                cpu: Arc::new(|args: &[Value]| Ok(vec![args[0].clone()])),
+                gpu_artifact: None,
+            },
+            inputs,
+            n_outputs: 1,
+            speedup: 1.0,
+            transfer_impact: 0.0,
+        }
+    }
+
+    fn adder(name: &str, inputs: Vec<PortRef>) -> OpDef {
+        OpDef {
+            name: name.into(),
+            variant: FunctionVariant {
+                cpu: Arc::new(|args: &[Value]| {
+                    let s = args.iter().map(|v| v.as_scalar().unwrap()).sum();
+                    Ok(vec![Value::Scalar(s)])
+                }),
+                gpu_artifact: None,
+            },
+            inputs,
+            n_outputs: 1,
+            speedup: 2.0,
+            transfer_impact: 0.1,
+        }
+    }
+
+    fn small_stage() -> StageDef {
+        StageDef {
+            name: "s".into(),
+            kind: StageKind::PerChunk,
+            inputs: vec![StageInput::Chunk],
+            ops: vec![
+                passthrough("a", vec![PortRef::StageInput(0)]),
+                adder(
+                    "b",
+                    vec![PortRef::Op { op: 0, output: 0 }, PortRef::Param(Value::Scalar(10.0))],
+                ),
+            ],
+            outputs: vec![PortRef::Op { op: 1, output: 0 }],
+        }
+    }
+
+    #[test]
+    fn valid_workflow_passes() {
+        let mut w = Workflow::new("t");
+        w.add_stage(small_stage());
+        w.validate().unwrap();
+        assert_eq!(w.total_ops(), 2);
+    }
+
+    #[test]
+    fn forward_reference_rejected() {
+        let mut stage = small_stage();
+        stage.ops[0].inputs = vec![PortRef::Op { op: 1, output: 0 }];
+        let mut w = Workflow::new("t");
+        w.add_stage(stage);
+        assert!(w.validate().is_err());
+    }
+
+    #[test]
+    fn bad_output_port_rejected() {
+        let mut stage = small_stage();
+        stage.outputs = vec![PortRef::Op { op: 1, output: 3 }];
+        let mut w = Workflow::new("t");
+        w.add_stage(stage);
+        assert!(w.validate().is_err());
+    }
+
+    #[test]
+    fn stage_dependency_must_be_earlier() {
+        let mut w = Workflow::new("t");
+        let mut s0 = small_stage();
+        s0.inputs = vec![StageInput::Upstream { stage: 1, output: 0 }];
+        w.add_stage(s0);
+        w.add_stage(small_stage());
+        assert!(w.validate().is_err());
+    }
+
+    #[test]
+    fn serial_execution_resolves_ports() {
+        let stage = small_stage();
+        let out = run_stage_serial(&stage, &[Value::Scalar(5.0)]).unwrap();
+        assert_eq!(out[0].as_scalar().unwrap(), 15.0);
+    }
+
+    #[test]
+    fn upstream_listing() {
+        let mut w = Workflow::new("t");
+        w.add_stage(small_stage());
+        let mut s1 = small_stage();
+        s1.inputs = vec![StageInput::Chunk, StageInput::Upstream { stage: 0, output: 0 }];
+        let i = w.add_stage(s1);
+        assert_eq!(w.upstream_of(i), vec![0]);
+        assert_eq!(w.upstream_of(0), Vec::<usize>::new());
+    }
+
+    #[test]
+    fn monolithic_folds_ops() {
+        let mut w = Workflow::new("t");
+        w.add_stage(small_stage());
+        let m = w.monolithic(&[3.0]).unwrap();
+        m.validate().unwrap();
+        assert_eq!(m.total_ops(), 1);
+        let out = run_stage_serial(&m.stages[0], &[Value::Scalar(1.0)]).unwrap();
+        assert_eq!(out[0].as_scalar().unwrap(), 11.0);
+        assert_eq!(m.stages[0].ops[0].speedup, 3.0);
+    }
+
+    #[test]
+    fn wrong_output_arity_detected() {
+        let mut stage = small_stage();
+        stage.ops[1].n_outputs = 2; // lies about its arity
+        let err = run_stage_serial(&stage, &[Value::Scalar(0.0)]);
+        assert!(err.is_err());
+    }
+}

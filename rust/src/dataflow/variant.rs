@@ -1,0 +1,57 @@
+//! Function variants (paper §III-A): one logical operation, multiple
+//! device-specific implementations.
+
+use crate::runtime::Value;
+use crate::Result;
+use std::sync::Arc;
+
+/// CPU implementation: a pure function over host values.
+pub type CpuFn = Arc<dyn Fn(&[Value]) -> Result<Vec<Value>> + Send + Sync>;
+
+/// A function variant: CPU closure + optional accelerator artifact.
+///
+/// The accelerator member is *named*, not held: PJRT state is per device
+/// thread, so the GPU controller resolves the name against its own
+/// [`DeviceExecutor`](crate::runtime::DeviceExecutor) at execution time.
+/// Names of the form `@stage:<name>` refer to fused whole-stage artifacts
+/// (used by monolithic workflows) and are resolved by the executor's
+/// binding table.
+#[derive(Clone)]
+pub struct FunctionVariant {
+    pub cpu: CpuFn,
+    pub gpu_artifact: Option<String>,
+}
+
+impl FunctionVariant {
+    /// CPU-only variant.
+    pub fn cpu_only(f: impl Fn(&[Value]) -> Result<Vec<Value>> + Send + Sync + 'static) -> Self {
+        FunctionVariant { cpu: Arc::new(f), gpu_artifact: None }
+    }
+
+    /// CPU + accelerator variant.
+    pub fn hybrid(
+        f: impl Fn(&[Value]) -> Result<Vec<Value>> + Send + Sync + 'static,
+        artifact: &str,
+    ) -> Self {
+        FunctionVariant { cpu: Arc::new(f), gpu_artifact: Some(artifact.to_string()) }
+    }
+
+    pub fn has_gpu(&self) -> bool {
+        self.gpu_artifact.is_some()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn constructors() {
+        let v = FunctionVariant::cpu_only(|args| Ok(args.to_vec()));
+        assert!(!v.has_gpu());
+        let h = FunctionVariant::hybrid(|args| Ok(args.to_vec()), "morph_open");
+        assert_eq!(h.gpu_artifact.as_deref(), Some("morph_open"));
+        let out = (h.cpu)(&[Value::Scalar(1.0)]).unwrap();
+        assert_eq!(out.len(), 1);
+    }
+}

@@ -1,0 +1,60 @@
+//! Crate-wide error type.
+
+use std::fmt;
+
+/// Unified error for all htap layers.
+#[derive(Debug)]
+pub enum Error {
+    /// Configuration / manifest / JSON problems.
+    Config(String),
+    /// PJRT runtime (load / compile / execute) failures.
+    Runtime(String),
+    /// Dataflow graph construction or binding problems.
+    Dataflow(String),
+    /// Scheduling protocol violations (should never fire in production).
+    Scheduler(String),
+    /// Image-processing substrate errors (shape mismatches etc.).
+    ImgProc(String),
+    /// Networking (TCP manager/worker transport) errors.
+    Net(String),
+    /// Wrapped I/O error.
+    Io(std::io::Error),
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            Error::Config(m) => write!(f, "config error: {m}"),
+            Error::Runtime(m) => write!(f, "runtime error: {m}"),
+            Error::Dataflow(m) => write!(f, "dataflow error: {m}"),
+            Error::Scheduler(m) => write!(f, "scheduler error: {m}"),
+            Error::ImgProc(m) => write!(f, "imgproc error: {m}"),
+            Error::Net(m) => write!(f, "net error: {m}"),
+            Error::Io(e) => write!(f, "io error: {e}"),
+        }
+    }
+}
+
+impl std::error::Error for Error {}
+
+impl From<std::io::Error> for Error {
+    fn from(e: std::io::Error) -> Self {
+        Error::Io(e)
+    }
+}
+
+impl From<xla::Error> for Error {
+    fn from(e: xla::Error) -> Self {
+        Error::Runtime(e.to_string())
+    }
+}
+
+/// Crate-wide result alias.
+pub type Result<T> = std::result::Result<T, Error>;
+
+#[macro_export]
+macro_rules! bail {
+    ($kind:ident, $($arg:tt)*) => {
+        return Err($crate::Error::$kind(format!($($arg)*)))
+    };
+}

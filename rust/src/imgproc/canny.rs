@@ -1,0 +1,180 @@
+//! Canny edge detection (CPU variant of the feature stage's edge operation).
+//!
+//! The AOT feature graph uses a simple `gradient > t` edge mask
+//! ([`simple_edges`], identical semantics to `model.feature_graph`); the
+//! full Canny (non-maximum suppression + hysteresis) is the richer CPU
+//! implementation the paper gets from OpenCV, used by the object feature
+//! extractor for edge-density features.
+
+use super::convolve::{gaussian3, stencil3x3, SOBEL_X, SOBEL_Y};
+use super::Gray;
+use std::collections::VecDeque;
+
+/// Edge mask = sobel magnitude of gaussian-smoothed image > t.
+/// Matches the AOT `feature_graph`'s edge output.
+pub fn simple_edges(img: &Gray, t: f32) -> Gray {
+    let smooth = gaussian3(img);
+    let mag = super::convolve::sobel_magnitude(&smooth);
+    Gray {
+        h: img.h,
+        w: img.w,
+        px: mag.px.iter().map(|&v| if v > t { 1.0 } else { 0.0 }).collect(),
+    }
+}
+
+/// Full Canny: gaussian smooth, sobel, NMS along the gradient direction,
+/// double threshold + hysteresis linking (8-connected).
+pub fn canny(img: &Gray, low: f32, high: f32) -> Gray {
+    assert!(low <= high, "canny thresholds must satisfy low <= high");
+    let (h, w) = (img.h, img.w);
+    let smooth = gaussian3(img);
+    let gx = stencil3x3(&smooth, &SOBEL_X);
+    let gy = stencil3x3(&smooth, &SOBEL_Y);
+    let mut mag = vec![0.0f32; h * w];
+    for i in 0..h * w {
+        mag[i] = (gx.px[i] * gx.px[i] + gy.px[i] * gy.px[i]).sqrt();
+    }
+    // non-maximum suppression: quantise direction to 0/45/90/135 degrees
+    let mut nms = vec![0.0f32; h * w];
+    for y in 0..h {
+        for x in 0..w {
+            let i = y * w + x;
+            if mag[i] == 0.0 {
+                continue;
+            }
+            let angle = gy.px[i].atan2(gx.px[i]);
+            let deg = angle.to_degrees();
+            let deg = if deg < 0.0 { deg + 180.0 } else { deg };
+            let (dy, dx): (isize, isize) = if !(22.5..157.5).contains(&deg) {
+                (0, 1) // ~horizontal gradient
+            } else if deg < 67.5 {
+                (1, 1)
+            } else if deg < 112.5 {
+                (1, 0)
+            } else {
+                (1, -1)
+            };
+            let get = |yy: isize, xx: isize| -> f32 {
+                if yy < 0 || xx < 0 || yy >= h as isize || xx >= w as isize {
+                    0.0
+                } else {
+                    mag[yy as usize * w + xx as usize]
+                }
+            };
+            let a = get(y as isize + dy, x as isize + dx);
+            let b = get(y as isize - dy, x as isize - dx);
+            if mag[i] >= a && mag[i] >= b {
+                nms[i] = mag[i];
+            }
+        }
+    }
+    // double threshold + hysteresis
+    let mut out = vec![0.0f32; h * w];
+    let mut queue = VecDeque::new();
+    for y in 0..h {
+        for x in 0..w {
+            let i = y * w + x;
+            if nms[i] > high {
+                out[i] = 1.0;
+                queue.push_back((y, x));
+            }
+        }
+    }
+    while let Some((y, x)) = queue.pop_front() {
+        for &(dy, dx) in super::Conn::Eight.offsets() {
+            let ny = y as isize + dy;
+            let nx = x as isize + dx;
+            if ny < 0 || nx < 0 || ny >= h as isize || nx >= w as isize {
+                continue;
+            }
+            let q = ny as usize * w + nx as usize;
+            if out[q] == 0.0 && nms[q] > low {
+                out[q] = 1.0;
+                queue.push_back((ny as usize, nx as usize));
+            }
+        }
+    }
+    Gray { h, w, px: out }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn step_image(h: usize, w: usize) -> Gray {
+        let mut img = Gray::zeros(h, w);
+        for y in 0..h {
+            for x in w / 2..w {
+                img.set(y, x, 200.0);
+            }
+        }
+        img
+    }
+
+    #[test]
+    fn finds_step_edge() {
+        let img = step_image(16, 16);
+        let e = canny(&img, 50.0, 150.0);
+        // an edge column near the step
+        let mid_row = 8;
+        let edge_count: f32 = (0..16).map(|x| e.at(mid_row, x)).sum();
+        assert!(edge_count >= 1.0, "no edge found on step");
+        // edges only near the step (columns 6..10)
+        for x in 0..4 {
+            assert_eq!(e.at(mid_row, x), 0.0);
+        }
+        for x in 12..16 {
+            assert_eq!(e.at(mid_row, x), 0.0);
+        }
+    }
+
+    #[test]
+    fn nms_thins_edges() {
+        let img = step_image(16, 16);
+        let e = canny(&img, 50.0, 150.0);
+        // per row, at most 2 edge pixels after NMS (vs 3+ for raw threshold)
+        for y in 2..14 {
+            let row_count: f32 = (0..16).map(|x| e.at(y, x)).sum();
+            assert!(row_count <= 2.0, "row {y} has {row_count} edge px");
+        }
+    }
+
+    #[test]
+    fn flat_image_no_edges() {
+        let img = Gray::filled(12, 12, 77.0);
+        let e = canny(&img, 10.0, 30.0);
+        assert!(e.px.iter().all(|&v| v == 0.0));
+    }
+
+    #[test]
+    fn hysteresis_links_weak_to_strong() {
+        // ramp edge whose magnitude varies along the edge: weak segments
+        // adjacent to strong ones must be kept.
+        let mut img = Gray::zeros(12, 12);
+        for y in 0..12 {
+            let amp = if y < 6 { 200.0 } else { 80.0 };
+            for x in 6..12 {
+                img.set(y, x, amp);
+            }
+        }
+        let e = canny(&img, 20.0, 150.0);
+        // strong rows present
+        assert!((0..6).any(|y| (0..12).any(|x| e.at(y, x) > 0.0)));
+        // weak rows linked through hysteresis
+        assert!((7..12).any(|y| (0..12).any(|x| e.at(y, x) > 0.0)));
+    }
+
+    #[test]
+    fn simple_edges_matches_threshold_semantics() {
+        let img = step_image(10, 10);
+        let e = simple_edges(&img, 100.0);
+        assert!(e.px.iter().all(|&v| v == 0.0 || v == 1.0));
+        assert!(e.px.iter().any(|&v| v == 1.0));
+    }
+
+    #[test]
+    #[should_panic(expected = "low <= high")]
+    fn rejects_inverted_thresholds() {
+        canny(&Gray::zeros(4, 4), 10.0, 5.0);
+    }
+}

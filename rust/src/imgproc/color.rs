@@ -1,0 +1,172 @@
+//! Color deconvolution (Ruifrok–Johnston): CPU variant.
+//!
+//! Must match `python/compile/kernels/color_deconv.py` bit-for-bit in
+//! structure: od = -log10((I + 1) / 256), stains = od @ inv(normalize(M)).
+//! The 3x3 inverse is computed here with the adjugate formula in f64 and
+//! truncated to f32, which stays within integration-test tolerance of
+//! jnp.linalg.inv.
+
+use super::{Gray, Rgb};
+use crate::{Error, Result};
+
+/// Default H&E stain matrix (rows: hematoxylin, eosin, residual).
+pub const STAIN_MATRIX: [[f64; 3]; 3] = [
+    [0.650, 0.704, 0.286],
+    [0.072, 0.990, 0.105],
+    [0.268, 0.570, 0.776],
+];
+
+/// Row-normalise then invert a 3x3 matrix (adjugate / determinant).
+pub fn stain_inverse(m: &[[f64; 3]; 3]) -> Result<[[f32; 3]; 3]> {
+    let mut n = [[0.0f64; 3]; 3];
+    for r in 0..3 {
+        let norm = (m[r][0] * m[r][0] + m[r][1] * m[r][1] + m[r][2] * m[r][2]).sqrt();
+        if norm == 0.0 {
+            return Err(Error::ImgProc("zero row in stain matrix".into()));
+        }
+        for c in 0..3 {
+            n[r][c] = m[r][c] / norm;
+        }
+    }
+    let det = n[0][0] * (n[1][1] * n[2][2] - n[1][2] * n[2][1])
+        - n[0][1] * (n[1][0] * n[2][2] - n[1][2] * n[2][0])
+        + n[0][2] * (n[1][0] * n[2][1] - n[1][1] * n[2][0]);
+    if det.abs() < 1e-12 {
+        return Err(Error::ImgProc("singular stain matrix".into()));
+    }
+    let adj = [
+        [
+            n[1][1] * n[2][2] - n[1][2] * n[2][1],
+            n[0][2] * n[2][1] - n[0][1] * n[2][2],
+            n[0][1] * n[1][2] - n[0][2] * n[1][1],
+        ],
+        [
+            n[1][2] * n[2][0] - n[1][0] * n[2][2],
+            n[0][0] * n[2][2] - n[0][2] * n[2][0],
+            n[0][2] * n[1][0] - n[0][0] * n[1][2],
+        ],
+        [
+            n[1][0] * n[2][1] - n[1][1] * n[2][0],
+            n[0][1] * n[2][0] - n[0][0] * n[2][1],
+            n[0][0] * n[1][1] - n[0][1] * n[1][0],
+        ],
+    ];
+    let mut out = [[0.0f32; 3]; 3];
+    for r in 0..3 {
+        for c in 0..3 {
+            out[r][c] = (adj[r][c] / det) as f32;
+        }
+    }
+    Ok(out)
+}
+
+/// Deconvolved stain channels of an RGB tile.
+pub struct Stains {
+    pub hematoxylin: Gray,
+    pub eosin: Gray,
+    pub residual: Gray,
+}
+
+/// Deconvolve an RGB tile (values 0..255) into optical-density stain space.
+pub fn color_deconv(rgb: &Rgb) -> Result<Stains> {
+    let minv = stain_inverse(&STAIN_MATRIX)?;
+    color_deconv_with(rgb, &minv)
+}
+
+/// Deconvolution with an explicit (already inverted) stain matrix.
+pub fn color_deconv_with(rgb: &Rgb, minv: &[[f32; 3]; 3]) -> Result<Stains> {
+    let n = rgb.h * rgb.w;
+    let mut hema = vec![0.0f32; n];
+    let mut eosin = vec![0.0f32; n];
+    let mut resid = vec![0.0f32; n];
+    const INV_LN10: f32 = std::f32::consts::LOG10_E; // 1/ln(10)
+    for i in 0..n {
+        // optical density per channel: -log10((I+1)/256)
+        let od = [
+            -((rgb.px[i * 3] + 1.0) / 256.0).ln() * INV_LN10,
+            -((rgb.px[i * 3 + 1] + 1.0) / 256.0).ln() * INV_LN10,
+            -((rgb.px[i * 3 + 2] + 1.0) / 256.0).ln() * INV_LN10,
+        ];
+        hema[i] = od[0] * minv[0][0] + od[1] * minv[1][0] + od[2] * minv[2][0];
+        eosin[i] = od[0] * minv[0][1] + od[1] * minv[1][1] + od[2] * minv[2][1];
+        resid[i] = od[0] * minv[0][2] + od[1] * minv[1][2] + od[2] * minv[2][2];
+    }
+    Ok(Stains {
+        hematoxylin: Gray::new(rgb.h, rgb.w, hema)?,
+        eosin: Gray::new(rgb.h, rgb.w, eosin)?,
+        residual: Gray::new(rgb.h, rgb.w, resid)?,
+    })
+}
+
+/// The hematoxylin channel scaled into [0, 256) image range — the grayscale
+/// input of the segmentation stage (matches `model.feature_graph`).
+pub fn hema_image(rgb: &Rgb) -> Result<Gray> {
+    let stains = color_deconv(rgb)?;
+    let mut g = stains.hematoxylin;
+    for v in &mut g.px {
+        *v = (*v * 100.0).clamp(0.0, 255.0);
+    }
+    Ok(g)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn inverse_times_matrix_is_identity() {
+        let minv = stain_inverse(&STAIN_MATRIX).unwrap();
+        // normalised matrix
+        let mut n = [[0.0f64; 3]; 3];
+        for r in 0..3 {
+            let norm = STAIN_MATRIX[r].iter().map(|v| v * v).sum::<f64>().sqrt();
+            for c in 0..3 {
+                n[r][c] = STAIN_MATRIX[r][c] / norm;
+            }
+        }
+        for i in 0..3 {
+            for j in 0..3 {
+                let mut acc = 0.0f64;
+                for k in 0..3 {
+                    acc += n[i][k] * minv[k][j] as f64;
+                }
+                let expect = if i == j { 1.0 } else { 0.0 };
+                assert!((acc - expect).abs() < 1e-5, "({i},{j}) = {acc}");
+            }
+        }
+    }
+
+    #[test]
+    fn white_pixel_has_near_zero_density() {
+        let rgb = Rgb::filled(2, 2, [255.0, 255.0, 255.0]);
+        let s = color_deconv(&rgb).unwrap();
+        assert!(s.hematoxylin.px.iter().all(|v| v.abs() < 1e-2));
+        assert!(s.eosin.px.iter().all(|v| v.abs() < 1e-2));
+    }
+
+    #[test]
+    fn hematoxylin_like_pixel_scores_high_on_h_channel() {
+        // A bluish-purple pixel (strong absorption in R, less in B).
+        let rgb = Rgb::filled(1, 1, [80.0, 60.0, 160.0]);
+        let s = color_deconv(&rgb).unwrap();
+        assert!(
+            s.hematoxylin.px[0] > s.eosin.px[0],
+            "h={} e={}",
+            s.hematoxylin.px[0],
+            s.eosin.px[0]
+        );
+    }
+
+    #[test]
+    fn singular_matrix_rejected() {
+        let m = [[1.0, 0.0, 0.0], [2.0, 0.0, 0.0], [0.0, 0.0, 1.0]];
+        assert!(stain_inverse(&m).is_err());
+    }
+
+    #[test]
+    fn hema_image_in_range() {
+        let rgb = Rgb::filled(3, 3, [10.0, 200.0, 30.0]);
+        let g = hema_image(&rgb).unwrap();
+        assert!(g.px.iter().all(|&v| (0.0..=255.0).contains(&v)));
+    }
+}

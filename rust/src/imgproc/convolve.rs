@@ -1,0 +1,178 @@
+//! 3x3 stencils with replicate-edge padding: gaussian smoothing and sobel
+//! gradients (CPU variants of `python/compile/kernels/conv2d.py`).
+
+use super::Gray;
+
+pub const GAUSSIAN3: [[f32; 3]; 3] = [
+    [1.0 / 16.0, 2.0 / 16.0, 1.0 / 16.0],
+    [2.0 / 16.0, 4.0 / 16.0, 2.0 / 16.0],
+    [1.0 / 16.0, 2.0 / 16.0, 1.0 / 16.0],
+];
+pub const SOBEL_X: [[f32; 3]; 3] = [[-1.0, 0.0, 1.0], [-2.0, 0.0, 2.0], [-1.0, 0.0, 1.0]];
+pub const SOBEL_Y: [[f32; 3]; 3] = [[-1.0, -2.0, -1.0], [0.0, 0.0, 0.0], [1.0, 2.0, 1.0]];
+
+/// Apply a 3x3 stencil with replicate-edge padding.
+///
+/// The interior is computed with direct indexing (no clamping) — this is the
+/// hot path of the feature stage; only the 1-pixel border pays the clamp.
+pub fn stencil3x3(img: &Gray, taps: &[[f32; 3]; 3]) -> Gray {
+    let (h, w) = (img.h, img.w);
+    let mut out = vec![0.0f32; h * w];
+    if h >= 3 && w >= 3 {
+        // interior
+        for y in 1..h - 1 {
+            let row = y * w;
+            for x in 1..w - 1 {
+                let mut acc = 0.0f32;
+                for (dy, taps_row) in taps.iter().enumerate() {
+                    let base = row + (dy as isize - 1) as usize * 0; // silence lint
+                    let _ = base;
+                    let r = (y + dy - 1) * w;
+                    acc += taps_row[0] * img.px[r + x - 1]
+                        + taps_row[1] * img.px[r + x]
+                        + taps_row[2] * img.px[r + x + 1];
+                }
+                out[row + x] = acc;
+            }
+        }
+    }
+    // border (replicate padding)
+    let mut do_border = |y: usize, x: usize| {
+        let mut acc = 0.0f32;
+        for dy in -1isize..=1 {
+            for dx in -1isize..=1 {
+                acc += taps[(dy + 1) as usize][(dx + 1) as usize]
+                    * img.at_clamped(y as isize + dy, x as isize + dx);
+            }
+        }
+        out[y * w + x] = acc;
+    };
+    for x in 0..w {
+        do_border(0, x);
+        do_border(h - 1, x);
+    }
+    for y in 0..h {
+        do_border(y, 0);
+        do_border(y, w - 1);
+    }
+    Gray { h, w, px: out }
+}
+
+/// 3x3 gaussian blur.
+pub fn gaussian3(img: &Gray) -> Gray {
+    stencil3x3(img, &GAUSSIAN3)
+}
+
+/// Sobel gradient magnitude sqrt(gx^2 + gy^2) (fused single pass).
+pub fn sobel_magnitude(img: &Gray) -> Gray {
+    let (h, w) = (img.h, img.w);
+    let mut out = vec![0.0f32; h * w];
+    if h >= 3 && w >= 3 {
+        for y in 1..h - 1 {
+            let up = (y - 1) * w;
+            let mid = y * w;
+            let dn = (y + 1) * w;
+            for x in 1..w - 1 {
+                let (a, b, c) = (img.px[up + x - 1], img.px[up + x], img.px[up + x + 1]);
+                let (d, f) = (img.px[mid + x - 1], img.px[mid + x + 1]);
+                let (g, hh, i) = (img.px[dn + x - 1], img.px[dn + x], img.px[dn + x + 1]);
+                let gx = (c + 2.0 * f + i) - (a + 2.0 * d + g);
+                let gy = (g + 2.0 * hh + i) - (a + 2.0 * b + c);
+                out[mid + x] = (gx * gx + gy * gy).sqrt();
+            }
+        }
+    }
+    let mut do_border = |y: usize, x: usize| {
+        let mut gx = 0.0f32;
+        let mut gy = 0.0f32;
+        for dy in -1isize..=1 {
+            for dx in -1isize..=1 {
+                let v = img.at_clamped(y as isize + dy, x as isize + dx);
+                gx += SOBEL_X[(dy + 1) as usize][(dx + 1) as usize] * v;
+                gy += SOBEL_Y[(dy + 1) as usize][(dx + 1) as usize] * v;
+            }
+        }
+        out[y * w + x] = (gx * gx + gy * gy).sqrt();
+    };
+    for x in 0..w {
+        do_border(0, x);
+        do_border(h - 1, x);
+    }
+    for y in 0..h {
+        do_border(y, 0);
+        do_border(y, w - 1);
+    }
+    Gray { h, w, px: out }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::testing::{forall, Rng};
+
+    #[test]
+    fn gaussian_preserves_constant() {
+        let img = Gray::filled(8, 11, 42.0);
+        let out = gaussian3(&img);
+        for v in out.px {
+            assert!((v - 42.0).abs() < 1e-4);
+        }
+    }
+
+    #[test]
+    fn sobel_zero_on_constant() {
+        let img = Gray::filled(7, 7, 9.0);
+        let out = sobel_magnitude(&img);
+        assert!(out.px.iter().all(|&v| v.abs() < 1e-4));
+    }
+
+    #[test]
+    fn sobel_detects_vertical_edge() {
+        let mut img = Gray::zeros(8, 8);
+        for y in 0..8 {
+            for x in 4..8 {
+                img.set(y, x, 100.0);
+            }
+        }
+        let mag = sobel_magnitude(&img);
+        assert!(mag.at(4, 3) > 100.0 && mag.at(4, 4) > 100.0);
+        assert!(mag.at(4, 0) < 1e-4);
+    }
+
+    #[test]
+    fn fused_sobel_matches_two_pass() {
+        forall(
+            "sobel-fused == two-pass",
+            20,
+            |r: &mut Rng| {
+                let h = r.range(3, 12);
+                let w = r.range(3, 12);
+                (h, w, r.image(h, w))
+            },
+            |(h, w, px)| {
+                let img = Gray::new(*h, *w, px.clone()).unwrap();
+                let fused = sobel_magnitude(&img);
+                let gx = stencil3x3(&img, &SOBEL_X);
+                let gy = stencil3x3(&img, &SOBEL_Y);
+                for i in 0..px.len() {
+                    let want = (gx.px[i] * gx.px[i] + gy.px[i] * gy.px[i]).sqrt();
+                    if (fused.px[i] - want).abs() > 1e-3 {
+                        return Err(format!("pixel {i}: {} vs {want}", fused.px[i]));
+                    }
+                }
+                Ok(())
+            },
+        );
+    }
+
+    #[test]
+    fn tiny_images_dont_panic() {
+        for (h, w) in [(1, 1), (1, 5), (2, 2), (3, 1)] {
+            let img = Gray::filled(h, w, 5.0);
+            let g = gaussian3(&img);
+            assert_eq!(g.px.len(), h * w);
+            let s = sobel_magnitude(&img);
+            assert!(s.px.iter().all(|&v| v.abs() < 1e-4));
+        }
+    }
+}

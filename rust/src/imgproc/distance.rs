@@ -1,0 +1,147 @@
+//! Chessboard distance transform (two-pass chamfer).
+//!
+//! `model.distance` computes the same metric as a min-plus fixed point; the
+//! chessboard metric is exactly computed by one forward + one backward
+//! chamfer pass, which is the O(n) CPU formulation (OpenCV-style, as in the
+//! paper's Pre-Watershed).
+
+use super::Gray;
+
+const BIG: f32 = 1.0e9;
+
+/// Distance of each foreground pixel to the nearest background pixel,
+/// chessboard metric.  Background pixels get 0.  A mask with no background
+/// yields BIG-clamped values (callers always have background in practice).
+pub fn distance_chessboard(mask: &Gray) -> Gray {
+    let (h, w) = (mask.h, mask.w);
+    let mut d: Vec<f32> = mask
+        .px
+        .iter()
+        .map(|&v| if v > 0.5 { BIG } else { 0.0 })
+        .collect();
+    let idx = |y: usize, x: usize| y * w + x;
+    // forward pass: N, NW, NE, W
+    for y in 0..h {
+        for x in 0..w {
+            let mut v = d[idx(y, x)];
+            if v == 0.0 {
+                continue;
+            }
+            if y > 0 {
+                v = v.min(d[idx(y - 1, x)] + 1.0);
+                if x > 0 {
+                    v = v.min(d[idx(y - 1, x - 1)] + 1.0);
+                }
+                if x + 1 < w {
+                    v = v.min(d[idx(y - 1, x + 1)] + 1.0);
+                }
+            }
+            if x > 0 {
+                v = v.min(d[idx(y, x - 1)] + 1.0);
+            }
+            d[idx(y, x)] = v;
+        }
+    }
+    // backward pass: S, SE, SW, E
+    for y in (0..h).rev() {
+        for x in (0..w).rev() {
+            let mut v = d[idx(y, x)];
+            if v == 0.0 {
+                continue;
+            }
+            if y + 1 < h {
+                v = v.min(d[idx(y + 1, x)] + 1.0);
+                if x > 0 {
+                    v = v.min(d[idx(y + 1, x - 1)] + 1.0);
+                }
+                if x + 1 < w {
+                    v = v.min(d[idx(y + 1, x + 1)] + 1.0);
+                }
+            }
+            if x + 1 < w {
+                v = v.min(d[idx(y, x + 1)] + 1.0);
+            }
+            d[idx(y, x)] = v;
+        }
+    }
+    Gray { h, w, px: d }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::testing::{forall, Rng};
+
+    /// Brute-force chessboard distance (O(n^2) oracle).
+    fn brute(mask: &Gray) -> Vec<f32> {
+        let (h, w) = (mask.h, mask.w);
+        let mut out = vec![0.0f32; h * w];
+        for y in 0..h {
+            for x in 0..w {
+                if mask.at(y, x) <= 0.5 {
+                    continue;
+                }
+                let mut best = BIG;
+                for by in 0..h {
+                    for bx in 0..w {
+                        if mask.at(by, bx) <= 0.5 {
+                            let dy = (y as isize - by as isize).unsigned_abs();
+                            let dx = (x as isize - bx as isize).unsigned_abs();
+                            best = best.min(dy.max(dx) as f32);
+                        }
+                    }
+                }
+                out[y * w + x] = best;
+            }
+        }
+        out
+    }
+
+    #[test]
+    fn square_blob_radius() {
+        let mut m = Gray::zeros(9, 9);
+        for y in 2..7 {
+            for x in 2..7 {
+                m.set(y, x, 1.0);
+            }
+        }
+        let d = distance_chessboard(&m);
+        assert_eq!(d.at(4, 4), 3.0);
+        assert_eq!(d.at(2, 2), 1.0);
+        assert_eq!(d.at(0, 0), 0.0);
+    }
+
+    #[test]
+    fn matches_brute_force() {
+        forall(
+            "chamfer == brute chessboard",
+            25,
+            |r: &mut Rng| {
+                let h = r.range(2, 14);
+                let w = r.range(2, 14);
+                let mut px = r.mask(h, w, 0.7);
+                // guarantee at least one background pixel
+                px[r.below(h * w)] = 0.0;
+                (h, w, px)
+            },
+            |(h, w, px)| {
+                let m = Gray::new(*h, *w, px.clone()).unwrap();
+                let d = distance_chessboard(&m);
+                let want = brute(&m);
+                for i in 0..px.len() {
+                    if (d.px[i] - want[i]).abs() > 1e-6 {
+                        return Err(format!("at {i}: {} vs {}", d.px[i], want[i]));
+                    }
+                }
+                Ok(())
+            },
+        );
+    }
+
+    #[test]
+    fn all_foreground_stays_big() {
+        let m = Gray::filled(4, 4, 1.0);
+        let d = distance_chessboard(&m);
+        assert!(d.px.iter().all(|&v| v >= 4.0), "no background -> huge distances");
+    }
+}

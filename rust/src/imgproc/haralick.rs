@@ -1,0 +1,203 @@
+//! Haralick texture features from gray-level co-occurrence matrices (GLCM).
+//!
+//! The paper's feature-computation stage includes "Haralick features [30]".
+//! We quantise to 16 gray levels, accumulate symmetric GLCMs for the four
+//! standard directions (0°, 45°, 90°, 135°) at distance 1, and derive the
+//! five classic scalar features per direction plus their mean.
+
+use super::Gray;
+
+pub const GLCM_LEVELS: usize = 16;
+
+/// The four standard direction offsets (dy, dx).
+pub const DIRECTIONS: [(isize, isize); 4] = [(0, 1), (-1, 1), (-1, 0), (-1, -1)];
+
+/// Scalar Haralick features of one GLCM.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct HaralickFeatures {
+    pub contrast: f32,
+    pub energy: f32,
+    pub homogeneity: f32,
+    pub entropy: f32,
+    pub correlation: f32,
+}
+
+impl HaralickFeatures {
+    pub fn to_vec(self) -> [f32; 5] {
+        [self.contrast, self.energy, self.homogeneity, self.entropy, self.correlation]
+    }
+}
+
+fn quantise(v: f32) -> usize {
+    let clipped = v.clamp(0.0, 255.999);
+    (clipped / (256.0 / GLCM_LEVELS as f32)) as usize
+}
+
+/// Symmetric, normalised GLCM for one direction, restricted to `mask`
+/// (both pixels of a pair must be foreground; pass an all-ones mask for
+/// whole-tile texture).
+pub fn glcm(img: &Gray, mask: &Gray, dir: (isize, isize)) -> [[f32; GLCM_LEVELS]; GLCM_LEVELS] {
+    let (h, w) = (img.h, img.w);
+    let mut m = [[0.0f32; GLCM_LEVELS]; GLCM_LEVELS];
+    let mut total = 0.0f32;
+    for y in 0..h {
+        for x in 0..w {
+            if mask.at(y, x) <= 0.5 {
+                continue;
+            }
+            let ny = y as isize + dir.0;
+            let nx = x as isize + dir.1;
+            if ny < 0 || nx < 0 || ny >= h as isize || nx >= w as isize {
+                continue;
+            }
+            if mask.at(ny as usize, nx as usize) <= 0.5 {
+                continue;
+            }
+            let a = quantise(img.at(y, x));
+            let b = quantise(img.at(ny as usize, nx as usize));
+            m[a][b] += 1.0;
+            m[b][a] += 1.0; // symmetric
+            total += 2.0;
+        }
+    }
+    if total > 0.0 {
+        for row in &mut m {
+            for v in row.iter_mut() {
+                *v /= total;
+            }
+        }
+    }
+    m
+}
+
+/// Features of one normalised GLCM.
+pub fn glcm_features(m: &[[f32; GLCM_LEVELS]; GLCM_LEVELS]) -> HaralickFeatures {
+    let mut contrast = 0.0f32;
+    let mut energy = 0.0f32;
+    let mut homogeneity = 0.0f32;
+    let mut entropy = 0.0f32;
+    // marginal stats for correlation
+    let mut mean = 0.0f32;
+    for (i, row) in m.iter().enumerate() {
+        for (j, &p) in row.iter().enumerate() {
+            let d = i as f32 - j as f32;
+            contrast += p * d * d;
+            energy += p * p;
+            homogeneity += p / (1.0 + d.abs());
+            if p > 0.0 {
+                entropy -= p * p.ln();
+            }
+            mean += i as f32 * p;
+        }
+    }
+    let mut var = 0.0f32;
+    for (i, row) in m.iter().enumerate() {
+        let pi: f32 = row.iter().sum();
+        var += (i as f32 - mean) * (i as f32 - mean) * pi;
+    }
+    let mut correlation = 0.0f32;
+    if var > 1e-12 {
+        for (i, row) in m.iter().enumerate() {
+            for (j, &p) in row.iter().enumerate() {
+                correlation += p * (i as f32 - mean) * (j as f32 - mean);
+            }
+        }
+        correlation /= var;
+    }
+    HaralickFeatures { contrast, energy, homogeneity, entropy, correlation }
+}
+
+/// Mean Haralick features across the four standard directions.
+pub fn haralick(img: &Gray, mask: &Gray) -> HaralickFeatures {
+    let mut acc = [0.0f32; 5];
+    for dir in DIRECTIONS {
+        let f = glcm_features(&glcm(img, mask, dir)).to_vec();
+        for (a, v) in acc.iter_mut().zip(f) {
+            *a += v;
+        }
+    }
+    HaralickFeatures {
+        contrast: acc[0] / 4.0,
+        energy: acc[1] / 4.0,
+        homogeneity: acc[2] / 4.0,
+        entropy: acc[3] / 4.0,
+        correlation: acc[4] / 4.0,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::testing::Rng;
+
+    #[test]
+    fn constant_image_is_maximally_homogeneous() {
+        let img = Gray::filled(16, 16, 100.0);
+        let mask = Gray::filled(16, 16, 1.0);
+        let f = haralick(&img, &mask);
+        assert!(f.contrast.abs() < 1e-6);
+        assert!((f.energy - 1.0).abs() < 1e-5);
+        assert!((f.homogeneity - 1.0).abs() < 1e-5);
+        assert!(f.entropy.abs() < 1e-5);
+    }
+
+    #[test]
+    fn checkerboard_has_high_contrast() {
+        let mut img = Gray::zeros(16, 16);
+        for y in 0..16 {
+            for x in 0..16 {
+                if (y + x) % 2 == 0 {
+                    img.set(y, x, 255.0);
+                }
+            }
+        }
+        let mask = Gray::filled(16, 16, 1.0);
+        let f0 = glcm_features(&glcm(&img, &mask, (0, 1)));
+        // horizontal neighbours always differ by 15 levels
+        assert!(f0.contrast > 200.0, "contrast = {}", f0.contrast);
+        let fc = haralick(&Gray::filled(16, 16, 1.0), &mask);
+        assert!(f0.contrast > fc.contrast);
+    }
+
+    #[test]
+    fn glcm_is_normalised_and_symmetric() {
+        let mut r = Rng::new(5);
+        let img = Gray::new(12, 12, r.image(12, 12)).unwrap();
+        let mask = Gray::filled(12, 12, 1.0);
+        let m = glcm(&img, &mask, (0, 1));
+        let total: f32 = m.iter().flatten().sum();
+        assert!((total - 1.0).abs() < 1e-4);
+        for i in 0..GLCM_LEVELS {
+            for j in 0..GLCM_LEVELS {
+                assert!((m[i][j] - m[j][i]).abs() < 1e-6);
+            }
+        }
+    }
+
+    #[test]
+    fn mask_restricts_pairs() {
+        let mut img = Gray::zeros(8, 8);
+        for y in 0..8 {
+            for x in 0..8 {
+                img.set(y, x, (x * 32) as f32);
+            }
+        }
+        let empty = Gray::zeros(8, 8);
+        let m = glcm(&img, &empty, (0, 1));
+        assert!(m.iter().flatten().all(|&v| v == 0.0));
+    }
+
+    #[test]
+    fn correlation_of_smooth_gradient_is_high() {
+        let mut img = Gray::zeros(16, 16);
+        for y in 0..16 {
+            for x in 0..16 {
+                img.set(y, x, (y * 16) as f32);
+            }
+        }
+        let mask = Gray::filled(16, 16, 1.0);
+        let f = glcm_features(&glcm(&img, &mask, (0, 1)));
+        // horizontal pairs have identical values -> perfect correlation
+        assert!(f.correlation > 0.99, "corr = {}", f.correlation);
+    }
+}

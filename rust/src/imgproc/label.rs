@@ -1,0 +1,244 @@
+//! Connected-component labelling (the paper's `BWLabel`).
+//!
+//! Two-pass union-find with compact 1..K relabelling — the classic CPU
+//! algorithm.  The "GPU" variant (`model.bwlabel`) produces max-flat-index
+//! labels instead; [`canonical_labels`] maps either convention to a
+//! canonical form so tests can compare components across variants.
+
+use super::{Conn, Gray};
+
+/// Union-find with path halving.
+struct Dsu {
+    parent: Vec<u32>,
+}
+
+impl Dsu {
+    fn new(n: usize) -> Self {
+        Dsu { parent: (0..n as u32).collect() }
+    }
+
+    fn find(&mut self, mut x: u32) -> u32 {
+        while self.parent[x as usize] != x {
+            self.parent[x as usize] = self.parent[self.parent[x as usize] as usize];
+            x = self.parent[x as usize];
+        }
+        x
+    }
+
+    fn union(&mut self, a: u32, b: u32) {
+        let ra = self.find(a);
+        let rb = self.find(b);
+        if ra != rb {
+            // attach larger id under smaller so roots are stable-ish
+            if ra < rb {
+                self.parent[rb as usize] = ra;
+            } else {
+                self.parent[ra as usize] = rb;
+            }
+        }
+    }
+}
+
+/// Label the connected components of a binary (0/1) mask.
+///
+/// Returns a [`Gray`] whose pixels hold the component id (1..=K) as f32,
+/// plus K itself.
+pub fn bwlabel(mask: &Gray, conn: Conn) -> (Gray, usize) {
+    let (h, w) = (mask.h, mask.w);
+    let n = h * w;
+    let mut dsu = Dsu::new(n);
+    // pass 1: union with already-visited neighbours (raster order)
+    let prior: &[(isize, isize)] = match conn {
+        Conn::Four => &[(-1, 0), (0, -1)],
+        Conn::Eight => &[(-1, -1), (-1, 0), (-1, 1), (0, -1)],
+    };
+    for y in 0..h {
+        for x in 0..w {
+            if mask.at(y, x) <= 0.5 {
+                continue;
+            }
+            let p = (y * w + x) as u32;
+            for &(dy, dx) in prior {
+                let ny = y as isize + dy;
+                let nx = x as isize + dx;
+                if ny >= 0 && nx >= 0 && nx < w as isize && mask.at(ny as usize, nx as usize) > 0.5
+                {
+                    dsu.union(p, (ny as usize * w + nx as usize) as u32);
+                }
+            }
+        }
+    }
+    // pass 2: compact roots to 1..K
+    let mut next = 0u32;
+    let mut compact = vec![0u32; n];
+    let mut out = vec![0.0f32; n];
+    for i in 0..n {
+        if mask.px[i] <= 0.5 {
+            continue;
+        }
+        let root = dsu.find(i as u32) as usize;
+        if compact[root] == 0 {
+            next += 1;
+            compact[root] = next;
+        }
+        out[i] = compact[root] as f32;
+    }
+    (Gray { h, w, px: out }, next as usize)
+}
+
+/// Pixel areas per label; index 0 counts background.
+pub fn label_areas(labels: &Gray, n_labels: usize) -> Vec<usize> {
+    let mut areas = vec![0usize; n_labels + 1];
+    for &v in &labels.px {
+        let id = v as usize;
+        if id <= n_labels {
+            areas[id] += 1;
+        }
+    }
+    areas
+}
+
+/// Canonicalise an arbitrary label image: components are renumbered 1..K in
+/// raster order of their first pixel.  Two label images describe the same
+/// segmentation iff their canonical forms are equal.
+pub fn canonical_labels(labels: &Gray) -> Gray {
+    let mut map: std::collections::HashMap<u64, f32> = std::collections::HashMap::new();
+    let mut next = 0.0f32;
+    let mut out = vec![0.0f32; labels.px.len()];
+    for (i, &v) in labels.px.iter().enumerate() {
+        if v <= 0.0 {
+            continue;
+        }
+        let key = v.to_bits() as u64;
+        let id = *map.entry(key).or_insert_with(|| {
+            next += 1.0;
+            next
+        });
+        out[i] = id;
+    }
+    Gray { h: labels.h, w: labels.w, px: out }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::testing::{forall, Rng};
+
+    #[test]
+    fn two_blocks_two_labels() {
+        let mut m = Gray::zeros(10, 10);
+        for y in 1..4 {
+            for x in 1..4 {
+                m.set(y, x, 1.0);
+            }
+        }
+        for y in 6..9 {
+            for x in 6..9 {
+                m.set(y, x, 1.0);
+            }
+        }
+        let (lab, k) = bwlabel(&m, Conn::Eight);
+        assert_eq!(k, 2);
+        assert_ne!(lab.at(2, 2), lab.at(7, 7));
+        assert_eq!(lab.at(0, 0), 0.0);
+        let areas = label_areas(&lab, k);
+        assert_eq!(areas[1], 9);
+        assert_eq!(areas[2], 9);
+    }
+
+    #[test]
+    fn diagonal_conn_matters() {
+        let mut m = Gray::zeros(4, 4);
+        m.set(0, 0, 1.0);
+        m.set(1, 1, 1.0);
+        m.set(2, 2, 1.0);
+        let (_, k8) = bwlabel(&m, Conn::Eight);
+        assert_eq!(k8, 1);
+        let (_, k4) = bwlabel(&m, Conn::Four);
+        assert_eq!(k4, 3);
+    }
+
+    #[test]
+    fn labels_partition_foreground() {
+        forall(
+            "bwlabel partitions fg",
+            25,
+            |r: &mut Rng| {
+                let h = r.range(2, 16);
+                let w = r.range(2, 16);
+                (h, w, r.mask(h, w, 0.4))
+            },
+            |(h, w, px)| {
+                let m = Gray::new(*h, *w, px.clone()).unwrap();
+                let (lab, k) = bwlabel(&m, Conn::Eight);
+                for i in 0..px.len() {
+                    let fg = px[i] > 0.5;
+                    if fg != (lab.px[i] > 0.0) {
+                        return Err(format!("support mismatch at {i}"));
+                    }
+                    if lab.px[i] > k as f32 {
+                        return Err(format!("label out of range at {i}"));
+                    }
+                }
+                // areas sum to foreground count
+                let areas = label_areas(&lab, k);
+                let fg: usize = px.iter().filter(|&&v| v > 0.5).count();
+                if areas[1..].iter().sum::<usize>() != fg {
+                    return Err("areas don't sum".into());
+                }
+                // each label 1..k non-empty
+                if areas[1..].iter().any(|&a| a == 0) {
+                    return Err("empty label id".into());
+                }
+                Ok(())
+            },
+        );
+    }
+
+    #[test]
+    fn neighbours_share_labels() {
+        forall(
+            "adjacent fg pixels share label",
+            20,
+            |r: &mut Rng| {
+                let h = r.range(3, 12);
+                let w = r.range(3, 12);
+                (h, w, r.mask(h, w, 0.6))
+            },
+            |(h, w, px)| {
+                let m = Gray::new(*h, *w, px.clone()).unwrap();
+                let (lab, _) = bwlabel(&m, Conn::Eight);
+                for y in 0..*h {
+                    for x in 0..*w {
+                        if m.at(y, x) <= 0.5 {
+                            continue;
+                        }
+                        for &(dy, dx) in Conn::Eight.offsets() {
+                            let ny = y as isize + dy;
+                            let nx = x as isize + dx;
+                            if ny >= 0
+                                && nx >= 0
+                                && ny < *h as isize
+                                && nx < *w as isize
+                                && m.at(ny as usize, nx as usize) > 0.5
+                                && lab.at(y, x) != lab.at(ny as usize, nx as usize)
+                            {
+                                return Err(format!("split component at ({y},{x})"));
+                            }
+                        }
+                    }
+                }
+                Ok(())
+            },
+        );
+    }
+
+    #[test]
+    fn canonical_labels_identifies_equivalent_labelings() {
+        let a = Gray::new(1, 6, vec![5.0, 5.0, 0.0, 9.0, 9.0, 5.0]).unwrap();
+        let b = Gray::new(1, 6, vec![2.0, 2.0, 0.0, 1.0, 1.0, 2.0]).unwrap();
+        assert_eq!(canonical_labels(&a).px, canonical_labels(&b).px);
+        let c = Gray::new(1, 6, vec![2.0, 2.0, 0.0, 1.0, 1.0, 1.0]).unwrap();
+        assert_ne!(canonical_labels(&a).px, canonical_labels(&c).px);
+    }
+}

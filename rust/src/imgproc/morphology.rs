@@ -1,0 +1,208 @@
+//! Grayscale/binary morphology: erosion, dilation, opening, closing,
+//! geodesic dilation and hole filling.
+//!
+//! Padding semantics mirror `python/compile/kernels/morph.py`: dilation pads
+//! with -inf, erosion with +inf (i.e. the border does not invent extrema).
+
+use super::reconstruct::reconstruct;
+use super::{Conn, Gray};
+
+/// Dilation by the 3x3 square (8-conn) or cross (4-conn) structuring element.
+pub fn dilate3x3(img: &Gray, conn: Conn) -> Gray {
+    nbr_reduce(img, conn, f32::NEG_INFINITY, f32::max)
+}
+
+/// Erosion by the 3x3 square (8-conn) or cross (4-conn) structuring element.
+pub fn erode3x3(img: &Gray, conn: Conn) -> Gray {
+    nbr_reduce(img, conn, f32::INFINITY, f32::min)
+}
+
+fn nbr_reduce(img: &Gray, conn: Conn, pad: f32, op: fn(f32, f32) -> f32) -> Gray {
+    let (h, w) = (img.h, img.w);
+    let mut out = vec![pad; h * w];
+    for y in 0..h {
+        for x in 0..w {
+            let mut acc = img.at(y, x); // centre always included
+            for &(dy, dx) in conn.offsets() {
+                let ny = y as isize + dy;
+                let nx = x as isize + dx;
+                let v = if ny < 0 || nx < 0 || ny >= h as isize || nx >= w as isize {
+                    pad
+                } else {
+                    img.at(ny as usize, nx as usize)
+                };
+                acc = op(acc, v);
+            }
+            out[y * w + x] = acc;
+        }
+    }
+    Gray { h, w, px: out }
+}
+
+/// Opening by the radius-2 diamond: two 4-conn erosions then two 4-conn
+/// dilations.  Matches `model.morph_open` (the paper's 19x19-disk opening,
+/// scaled to our tile sizes — see DESIGN.md §Hardware-Adaptation).
+pub fn morph_open(img: &Gray) -> Gray {
+    let e = erode3x3(&erode3x3(img, Conn::Four), Conn::Four);
+    dilate3x3(&dilate3x3(&e, Conn::Four), Conn::Four)
+}
+
+/// One geodesic dilation step: min(dilate(marker), mask).
+pub fn dilate_clip(marker: &Gray, mask: &Gray, conn: Conn) -> Gray {
+    let mut d = dilate3x3(marker, conn);
+    for (v, m) in d.px.iter_mut().zip(&mask.px) {
+        *v = v.min(*m);
+    }
+    d
+}
+
+/// Fill holes of a binary (0/1) mask: a hole is background not reachable
+/// from the tile border (4-connected), matching `model.fill_holes`.
+pub fn fill_holes(mask: &Gray) -> Gray {
+    let (h, w) = (mask.h, mask.w);
+    // complement
+    let comp = Gray {
+        h,
+        w,
+        px: mask.px.iter().map(|&v| 1.0 - v).collect(),
+    };
+    // marker: complement restricted to the border
+    let mut marker = Gray::zeros(h, w);
+    for x in 0..w {
+        marker.set(0, x, comp.at(0, x));
+        marker.set(h - 1, x, comp.at(h - 1, x));
+    }
+    for y in 0..h {
+        marker.set(y, 0, comp.at(y, 0));
+        marker.set(y, w - 1, comp.at(y, w - 1));
+    }
+    let reachable = reconstruct(&marker, &comp, Conn::Four);
+    Gray {
+        h,
+        w,
+        px: reachable.px.iter().map(|&v| 1.0 - v).collect(),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::testing::{forall, Rng};
+
+    #[test]
+    fn dilate_erode_point() {
+        let mut img = Gray::zeros(5, 5);
+        img.set(2, 2, 7.0);
+        let d8 = dilate3x3(&img, Conn::Eight);
+        assert_eq!(d8.at(1, 1), 7.0);
+        assert_eq!(d8.at(0, 0), 0.0);
+        let d4 = dilate3x3(&img, Conn::Four);
+        assert_eq!(d4.at(1, 2), 7.0);
+        assert_eq!(d4.at(1, 1), 0.0); // diagonal excluded in 4-conn
+        let e = erode3x3(&d8, Conn::Eight);
+        assert_eq!(e.at(2, 2), 7.0);
+    }
+
+    #[test]
+    fn open_removes_specks_keeps_blocks() {
+        let mut img = Gray::zeros(16, 16);
+        img.set(3, 3, 200.0); // single-pixel speck
+        for y in 8..14 {
+            for x in 8..14 {
+                img.set(y, x, 200.0); // 6x6 block survives radius-2 opening
+            }
+        }
+        let o = morph_open(&img);
+        assert_eq!(o.at(3, 3), 0.0, "speck should vanish");
+        assert_eq!(o.at(10, 10), 200.0, "block interior should survive");
+    }
+
+    #[test]
+    fn duality_and_ordering_properties() {
+        forall(
+            "erode <= img <= dilate; open anti-extensive",
+            25,
+            |r: &mut Rng| {
+                let h = r.range(2, 12);
+                let w = r.range(2, 12);
+                (h, w, r.image(h, w))
+            },
+            |(h, w, px)| {
+                let img = Gray::new(*h, *w, px.clone()).unwrap();
+                let d = dilate3x3(&img, Conn::Eight);
+                let e = erode3x3(&img, Conn::Eight);
+                let o = morph_open(&img);
+                for i in 0..px.len() {
+                    if e.px[i] > px[i] + 1e-6 || d.px[i] < px[i] - 1e-6 {
+                        return Err(format!("extremes violated at {i}"));
+                    }
+                    if o.px[i] > px[i] + 1e-6 {
+                        return Err(format!("open not anti-extensive at {i}"));
+                    }
+                }
+                Ok(())
+            },
+        );
+    }
+
+    #[test]
+    fn fill_holes_basic() {
+        // ring with interior hole
+        let mut m = Gray::zeros(8, 8);
+        for y in 2..6 {
+            for x in 2..6 {
+                m.set(y, x, 1.0);
+            }
+        }
+        m.set(3, 3, 0.0);
+        m.set(4, 4, 0.0);
+        let f = fill_holes(&m);
+        assert_eq!(f.at(3, 3), 1.0);
+        assert_eq!(f.at(4, 4), 1.0);
+        assert_eq!(f.at(0, 0), 0.0);
+    }
+
+    #[test]
+    fn fill_holes_open_bay_not_filled() {
+        // a "C" shape: concavity touches outside, must NOT be filled
+        let mut m = Gray::zeros(7, 7);
+        for y in 1..6 {
+            for x in 1..6 {
+                m.set(y, x, 1.0);
+            }
+        }
+        for y in 2..5 {
+            for x in 3..7 {
+                m.set(y, x.min(6), 0.0);
+            }
+        }
+        let f = fill_holes(&m);
+        assert_eq!(f.at(3, 4), 0.0, "open bay must stay background");
+    }
+
+    #[test]
+    fn fill_holes_extensive_property() {
+        forall(
+            "fill_holes >= mask, binary",
+            20,
+            |r: &mut Rng| {
+                let h = r.range(3, 14);
+                let w = r.range(3, 14);
+                (h, w, r.mask(h, w, 0.55))
+            },
+            |(h, w, px)| {
+                let m = Gray::new(*h, *w, px.clone()).unwrap();
+                let f = fill_holes(&m);
+                for i in 0..px.len() {
+                    if f.px[i] < px[i] {
+                        return Err(format!("not extensive at {i}"));
+                    }
+                    if f.px[i] != 0.0 && f.px[i] != 1.0 {
+                        return Err(format!("non-binary output {}", f.px[i]));
+                    }
+                }
+                Ok(())
+            },
+        );
+    }
+}

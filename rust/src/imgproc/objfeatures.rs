@@ -1,0 +1,266 @@
+//! Per-object morphometry + intensity features.
+//!
+//! The paper's feature stage computes "pixel statistics, gradient
+//! statistics, Haralick features, edge, and morphometry" per segmented
+//! nucleus.  This is the morphometry/per-object part: one pass over the
+//! label image accumulates geometric moments and intensity sums per label,
+//! then derives the feature vector.  Per-object work is irregular and stays
+//! on the CPU (in the paper, too, object features are computed from
+//! boundaries after the pixel transforms).
+
+use super::{Conn, Gray};
+
+/// Features of one segmented object.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ObjectFeatures {
+    pub label: u32,
+    pub area: f32,
+    pub centroid: (f32, f32),
+    pub bbox: (u32, u32, u32, u32), // (y0, x0, y1, x1) inclusive
+    pub perimeter: f32,
+    pub eccentricity: f32,
+    pub circularity: f32,
+    pub mean_intensity: f32,
+    pub std_intensity: f32,
+    pub mean_gradient: f32,
+    pub edge_pixels: f32,
+}
+
+impl ObjectFeatures {
+    /// Flatten to the fixed-width vector stored per nucleus.
+    pub fn to_vec(&self) -> [f32; 12] {
+        [
+            self.area,
+            self.centroid.0,
+            self.centroid.1,
+            self.bbox.0 as f32,
+            self.bbox.1 as f32,
+            self.bbox.2 as f32,
+            self.bbox.3 as f32,
+            self.perimeter,
+            self.eccentricity,
+            self.circularity,
+            self.mean_intensity,
+            self.std_intensity,
+        ]
+    }
+}
+
+#[derive(Clone)]
+struct Acc {
+    area: f64,
+    sy: f64,
+    sx: f64,
+    syy: f64,
+    sxx: f64,
+    sxy: f64,
+    y0: u32,
+    x0: u32,
+    y1: u32,
+    x1: u32,
+    perim: f64,
+    isum: f64,
+    isumsq: f64,
+    gsum: f64,
+    edges: f64,
+}
+
+impl Acc {
+    fn new() -> Self {
+        Acc {
+            area: 0.0,
+            sy: 0.0,
+            sx: 0.0,
+            syy: 0.0,
+            sxx: 0.0,
+            sxy: 0.0,
+            y0: u32::MAX,
+            x0: u32::MAX,
+            y1: 0,
+            x1: 0,
+            perim: 0.0,
+            isum: 0.0,
+            isumsq: 0.0,
+            gsum: 0.0,
+            edges: 0.0,
+        }
+    }
+}
+
+/// Extract features of every labelled object.
+///
+/// * `labels` — label image (ids 1..=n_labels, 0 = background)
+/// * `intensity` — e.g. hematoxylin channel
+/// * `gradient` — gradient magnitude image
+/// * `edges` — binary edge mask
+pub fn object_features(
+    labels: &Gray,
+    n_labels: usize,
+    intensity: &Gray,
+    gradient: &Gray,
+    edges: &Gray,
+) -> Vec<ObjectFeatures> {
+    let (h, w) = (labels.h, labels.w);
+    let mut accs = vec![Acc::new(); n_labels + 1];
+    for y in 0..h {
+        for x in 0..w {
+            let id = labels.at(y, x) as usize;
+            if id == 0 || id > n_labels {
+                continue;
+            }
+            let a = &mut accs[id];
+            let (yf, xf) = (y as f64, x as f64);
+            a.area += 1.0;
+            a.sy += yf;
+            a.sx += xf;
+            a.syy += yf * yf;
+            a.sxx += xf * xf;
+            a.sxy += yf * xf;
+            a.y0 = a.y0.min(y as u32);
+            a.x0 = a.x0.min(x as u32);
+            a.y1 = a.y1.max(y as u32);
+            a.x1 = a.x1.max(x as u32);
+            a.isum += intensity.at(y, x) as f64;
+            a.isumsq += (intensity.at(y, x) as f64).powi(2);
+            a.gsum += gradient.at(y, x) as f64;
+            a.edges += edges.at(y, x) as f64;
+            // boundary pixel: any 4-neighbour outside the object
+            let mut boundary = false;
+            for &(dy, dx) in Conn::Four.offsets() {
+                let ny = y as isize + dy;
+                let nx = x as isize + dx;
+                if ny < 0 || nx < 0 || ny >= h as isize || nx >= w as isize {
+                    boundary = true;
+                    break;
+                }
+                if labels.at(ny as usize, nx as usize) as usize != id {
+                    boundary = true;
+                    break;
+                }
+            }
+            if boundary {
+                a.perim += 1.0;
+            }
+        }
+    }
+    let mut out = Vec::new();
+    for (id, a) in accs.iter().enumerate().skip(1) {
+        if a.area == 0.0 {
+            continue;
+        }
+        let n = a.area;
+        let cy = a.sy / n;
+        let cx = a.sx / n;
+        // central second moments
+        let myy = a.syy / n - cy * cy;
+        let mxx = a.sxx / n - cx * cx;
+        let mxy = a.sxy / n - cx * cy;
+        // eigenvalues of the covariance matrix
+        let tr = myy + mxx;
+        let det = myy * mxx - mxy * mxy;
+        let disc = (tr * tr / 4.0 - det).max(0.0).sqrt();
+        let l1 = (tr / 2.0 + disc).max(1e-12);
+        let l2 = (tr / 2.0 - disc).max(0.0);
+        let eccentricity = (1.0 - (l2 / l1)).max(0.0).sqrt();
+        let circularity = if a.perim > 0.0 {
+            (4.0 * std::f64::consts::PI * n / (a.perim * a.perim)).min(1.5)
+        } else {
+            1.0
+        };
+        let mean_i = a.isum / n;
+        let var_i = (a.isumsq / n - mean_i * mean_i).max(0.0);
+        out.push(ObjectFeatures {
+            label: id as u32,
+            area: n as f32,
+            centroid: (cy as f32, cx as f32),
+            bbox: (a.y0, a.x0, a.y1, a.x1),
+            perimeter: a.perim as f32,
+            eccentricity: eccentricity as f32,
+            circularity: circularity as f32,
+            mean_intensity: mean_i as f32,
+            std_intensity: var_i.sqrt() as f32,
+            mean_gradient: (a.gsum / n) as f32,
+            edge_pixels: a.edges as f32,
+        });
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn setup(mask_fn: impl Fn(usize, usize) -> f32) -> (Gray, Gray, Gray, Gray) {
+        let (h, w) = (16, 16);
+        let mut labels = Gray::zeros(h, w);
+        for y in 0..h {
+            for x in 0..w {
+                labels.set(y, x, mask_fn(y, x));
+            }
+        }
+        let intensity = Gray::filled(h, w, 50.0);
+        let gradient = Gray::filled(h, w, 2.0);
+        let edges = Gray::zeros(h, w);
+        (labels, intensity, gradient, edges)
+    }
+
+    #[test]
+    fn square_object_metrics() {
+        let (labels, i, g, e) =
+            setup(|y, x| if (4..8).contains(&y) && (4..8).contains(&x) { 1.0 } else { 0.0 });
+        let f = object_features(&labels, 1, &i, &g, &e);
+        assert_eq!(f.len(), 1);
+        let o = &f[0];
+        assert_eq!(o.area, 16.0);
+        assert_eq!(o.centroid, (5.5, 5.5));
+        assert_eq!(o.bbox, (4, 4, 7, 7));
+        assert_eq!(o.perimeter, 12.0); // 4x4 square boundary
+        assert!(o.eccentricity < 1e-3, "square is round: {}", o.eccentricity);
+        assert_eq!(o.mean_intensity, 50.0);
+        assert!(o.std_intensity < 1e-4);
+        assert_eq!(o.mean_gradient, 2.0);
+    }
+
+    #[test]
+    fn elongated_object_is_eccentric() {
+        let (labels, i, g, e) =
+            setup(|y, x| if y == 8 && (2..14).contains(&x) { 1.0 } else { 0.0 });
+        let f = object_features(&labels, 1, &i, &g, &e);
+        assert!(f[0].eccentricity > 0.95, "line ecc = {}", f[0].eccentricity);
+    }
+
+    #[test]
+    fn multiple_objects_separated() {
+        let (labels, i, g, e) = setup(|y, x| {
+            if y < 4 && x < 4 {
+                1.0
+            } else if y > 10 && x > 10 {
+                2.0
+            } else {
+                0.0
+            }
+        });
+        let f = object_features(&labels, 2, &i, &g, &e);
+        assert_eq!(f.len(), 2);
+        assert_eq!(f[0].label, 1);
+        assert_eq!(f[1].label, 2);
+        assert_eq!(f[0].area, 16.0);
+        assert_eq!(f[1].area, 25.0);
+    }
+
+    #[test]
+    fn empty_labels_no_features() {
+        let (labels, i, g, e) = setup(|_, _| 0.0);
+        assert!(object_features(&labels, 0, &i, &g, &e).is_empty());
+    }
+
+    #[test]
+    fn to_vec_roundtrip_fields() {
+        let (labels, i, g, e) =
+            setup(|y, x| if (4..8).contains(&y) && (4..8).contains(&x) { 1.0 } else { 0.0 });
+        let f = object_features(&labels, 1, &i, &g, &e);
+        let v = f[0].to_vec();
+        assert_eq!(v[0], 16.0);
+        assert_eq!(v[1], 5.5);
+    }
+}

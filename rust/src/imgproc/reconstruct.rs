@@ -1,0 +1,241 @@
+//! Morphological grayscale reconstruction — the paper's compute hot-spot.
+//!
+//! Two implementations:
+//!
+//! * [`reconstruct`] — Vincent's **hybrid algorithm** (raster scan,
+//!   anti-raster scan, then FIFO-queue wave propagation).  This is the fast
+//!   CPU implementation the paper cites ([39] L. Vincent 1993) and uses for
+//!   `ReconToNuclei`, `FillHolles` and `Pre-Watershed`.
+//! * [`reconstruct_iterative`] — the naive fixed-point of geodesic
+//!   dilations.  Semantically identical; used as a cross-check oracle in
+//!   tests and as the cost model for the "GPU" variant (which is the same
+//!   iteration inside an HLO `while` — see python/compile/model.py).
+
+use super::{Conn, Gray};
+use std::collections::VecDeque;
+
+/// Vincent's hybrid grayscale reconstruction of `mask` from `marker`.
+///
+/// Requires `marker <= mask` pointwise for the usual interpretation; values
+/// above the mask are clipped first (same as the JAX variant).
+pub fn reconstruct(marker: &Gray, mask: &Gray, conn: Conn) -> Gray {
+    assert_eq!(marker.h, mask.h);
+    assert_eq!(marker.w, mask.w);
+    let (h, w) = (mask.h, mask.w);
+    let mut out: Vec<f32> = marker
+        .px
+        .iter()
+        .zip(&mask.px)
+        .map(|(&m, &k)| m.min(k))
+        .collect();
+
+    let idx = |y: usize, x: usize| y * w + x;
+
+    // N+(p): neighbours visited *before* p in raster order.
+    let plus: &[(isize, isize)] = match conn {
+        Conn::Four => &[(-1, 0), (0, -1)],
+        Conn::Eight => &[(-1, -1), (-1, 0), (-1, 1), (0, -1)],
+    };
+    // N-(p): neighbours visited before p in anti-raster order.
+    let minus: &[(isize, isize)] = match conn {
+        Conn::Four => &[(1, 0), (0, 1)],
+        Conn::Eight => &[(1, -1), (1, 0), (1, 1), (0, 1)],
+    };
+
+    // 1) raster scan
+    for y in 0..h {
+        for x in 0..w {
+            let mut v = out[idx(y, x)];
+            for &(dy, dx) in plus {
+                let ny = y as isize + dy;
+                let nx = x as isize + dx;
+                if ny >= 0 && nx >= 0 && nx < w as isize {
+                    v = v.max(out[idx(ny as usize, nx as usize)]);
+                }
+            }
+            out[idx(y, x)] = v.min(mask.px[idx(y, x)]);
+        }
+    }
+
+    // 2) anti-raster scan + queue seeding
+    let mut queue: VecDeque<(usize, usize)> = VecDeque::new();
+    for y in (0..h).rev() {
+        for x in (0..w).rev() {
+            let mut v = out[idx(y, x)];
+            for &(dy, dx) in minus {
+                let ny = y as isize + dy;
+                let nx = x as isize + dx;
+                if ny < h as isize && nx >= 0 && nx < w as isize {
+                    v = v.max(out[idx(ny as usize, nx as usize)]);
+                }
+            }
+            let v = v.min(mask.px[idx(y, x)]);
+            out[idx(y, x)] = v;
+            // queue p if some anti-raster neighbour could still grow
+            for &(dy, dx) in minus {
+                let ny = y as isize + dy;
+                let nx = x as isize + dx;
+                if ny < h as isize && nx >= 0 && nx < w as isize {
+                    let q = idx(ny as usize, nx as usize);
+                    if out[q] < v && out[q] < mask.px[q] {
+                        queue.push_back((y, x));
+                        break;
+                    }
+                }
+            }
+        }
+    }
+
+    // 3) FIFO wave propagation
+    while let Some((y, x)) = queue.pop_front() {
+        let vp = out[idx(y, x)];
+        for &(dy, dx) in conn.offsets() {
+            let ny = y as isize + dy;
+            let nx = x as isize + dx;
+            if ny < 0 || nx < 0 || ny >= h as isize || nx >= w as isize {
+                continue;
+            }
+            let q = idx(ny as usize, nx as usize);
+            if out[q] < vp && mask.px[q] != out[q] {
+                let nv = vp.min(mask.px[q]);
+                if nv > out[q] {
+                    out[q] = nv;
+                    queue.push_back((ny as usize, nx as usize));
+                }
+            }
+        }
+    }
+
+    Gray { h, w, px: out }
+}
+
+/// Naive fixed-point reconstruction (oracle; O(iterations * pixels)).
+pub fn reconstruct_iterative(marker: &Gray, mask: &Gray, conn: Conn) -> Gray {
+    let mut cur = Gray {
+        h: marker.h,
+        w: marker.w,
+        px: marker
+            .px
+            .iter()
+            .zip(&mask.px)
+            .map(|(&m, &k)| m.min(k))
+            .collect(),
+    };
+    loop {
+        let nxt = super::morphology::dilate_clip(&cur, mask, conn);
+        if nxt.px == cur.px {
+            return nxt;
+        }
+        cur = nxt;
+    }
+}
+
+/// h-dome transform: gray - reconstruct(gray - h, gray).  Bright structures
+/// of height > h.  This is the core of `ReconToNuclei`.
+pub fn hdome(gray: &Gray, h: f32, conn: Conn) -> Gray {
+    let marker = Gray {
+        h: gray.h,
+        w: gray.w,
+        px: gray.px.iter().map(|&v| v - h).collect(),
+    };
+    let recon = reconstruct(&marker, gray, conn);
+    Gray {
+        h: gray.h,
+        w: gray.w,
+        px: gray
+            .px
+            .iter()
+            .zip(&recon.px)
+            .map(|(&g, &r)| g - r)
+            .collect(),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::testing::{forall, Rng};
+
+    fn random_pair(r: &mut Rng) -> (usize, usize, Vec<f32>, Vec<f32>) {
+        let h = r.range(2, 14);
+        let w = r.range(2, 14);
+        let mask = r.image(h, w);
+        let marker: Vec<f32> = mask.iter().map(|&v| v - r.f32_range(0.0, 80.0)).collect();
+        (h, w, marker, mask)
+    }
+
+    #[test]
+    fn hybrid_matches_iterative_oracle() {
+        for conn in [Conn::Four, Conn::Eight] {
+            forall(
+                "vincent == fixpoint",
+                30,
+                random_pair,
+                |(h, w, marker, mask)| {
+                    let marker = Gray::new(*h, *w, marker.clone()).unwrap();
+                    let mask = Gray::new(*h, *w, mask.clone()).unwrap();
+                    let fast = reconstruct(&marker, &mask, conn);
+                    let slow = reconstruct_iterative(&marker, &mask, conn);
+                    if fast.max_abs_diff(&slow) > 1e-6 {
+                        return Err(format!("diff {}", fast.max_abs_diff(&slow)));
+                    }
+                    Ok(())
+                },
+            );
+        }
+    }
+
+    #[test]
+    fn recon_bounded_by_mask_and_idempotent() {
+        forall("recon <= mask; idempotent", 20, random_pair, |(h, w, marker, mask)| {
+            let marker = Gray::new(*h, *w, marker.clone()).unwrap();
+            let mask = Gray::new(*h, *w, mask.clone()).unwrap();
+            let r1 = reconstruct(&marker, &mask, Conn::Eight);
+            for i in 0..r1.px.len() {
+                if r1.px[i] > mask.px[i] + 1e-6 {
+                    return Err(format!("exceeds mask at {i}"));
+                }
+            }
+            let r2 = reconstruct(&r1, &mask, Conn::Eight);
+            if r1.max_abs_diff(&r2) > 1e-6 {
+                return Err("not idempotent".into());
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn plateau_propagates_from_single_seed() {
+        // mask: two plateaus (100 and 50) connected by a bridge of 50
+        let mut mask = Gray::zeros(5, 9);
+        for y in 1..4 {
+            for x in 1..4 {
+                mask.set(y, x, 100.0);
+            }
+            for x in 5..8 {
+                mask.set(y, x, 50.0);
+            }
+        }
+        mask.set(2, 4, 50.0); // bridge
+        let mut marker = Gray::zeros(5, 9);
+        marker.set(2, 2, 100.0); // seed inside the tall plateau
+        let r = reconstruct(&marker, &mask, Conn::Eight);
+        assert_eq!(r.at(1, 1), 100.0);
+        assert_eq!(r.at(2, 4), 50.0, "bridge fills to mask level");
+        assert_eq!(r.at(2, 6), 50.0, "second plateau reached through bridge");
+        assert_eq!(r.at(0, 0), 0.0);
+    }
+
+    #[test]
+    fn hdome_extracts_peaks() {
+        // background ramp 10, one peak of 100, one bump of 15
+        let mut g = Gray::filled(7, 7, 10.0);
+        g.set(2, 2, 100.0);
+        g.set(5, 5, 15.0);
+        let d = hdome(&g, 20.0, Conn::Eight);
+        assert!((d.at(2, 2) - 20.0).abs() < 1e-5, "peak capped at h");
+        assert!(d.at(5, 5) < 20.0, "small bump dome = 5");
+        assert!((d.at(5, 5) - 5.0).abs() < 1e-5);
+        assert_eq!(d.at(0, 0), 0.0);
+    }
+}

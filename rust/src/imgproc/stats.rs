@@ -1,0 +1,94 @@
+//! Per-tile pixel statistics — CPU variant of
+//! `python/compile/kernels/stats.py` (identical layout: sum, sumsq, min,
+//! max, 16-bin histogram over [0, 256)).
+
+use super::Gray;
+
+pub const STATS_LEN: usize = 20;
+pub const HIST_BINS: usize = 16;
+pub const HIST_RANGE: f32 = 256.0;
+
+/// f32[20] statistics vector: [sum, sumsq, min, max, hist16...].
+pub fn tile_stats(img: &Gray) -> [f32; STATS_LEN] {
+    let mut sum = 0.0f64;
+    let mut sumsq = 0.0f64;
+    let mut min = f32::INFINITY;
+    let mut max = f32::NEG_INFINITY;
+    let mut hist = [0.0f32; HIST_BINS];
+    let width = HIST_RANGE / HIST_BINS as f32;
+    for &v in &img.px {
+        sum += v as f64;
+        sumsq += (v as f64) * (v as f64);
+        min = min.min(v);
+        max = max.max(v);
+        let clipped = v.clamp(0.0, HIST_RANGE - 1e-3);
+        hist[(clipped / width) as usize] += 1.0;
+    }
+    let mut out = [0.0f32; STATS_LEN];
+    out[0] = sum as f32;
+    out[1] = sumsq as f32;
+    out[2] = min;
+    out[3] = max;
+    out[4..].copy_from_slice(&hist);
+    out
+}
+
+/// Mean and (population) standard deviation from a stats vector.
+pub fn mean_std(stats: &[f32; STATS_LEN], n_pixels: usize) -> (f32, f32) {
+    let n = n_pixels as f64;
+    let mean = stats[0] as f64 / n;
+    let var = (stats[1] as f64 / n - mean * mean).max(0.0);
+    (mean as f32, var.sqrt() as f32)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::testing::{forall, Rng};
+
+    #[test]
+    fn constant_image_stats() {
+        let img = Gray::filled(8, 8, 100.0);
+        let s = tile_stats(&img);
+        assert_eq!(s[0], 6400.0);
+        assert_eq!(s[2], 100.0);
+        assert_eq!(s[3], 100.0);
+        assert_eq!(s[4 + 6], 64.0); // 100/16 = 6.25 -> bin 6
+        let (mean, std) = mean_std(&s, 64);
+        assert_eq!(mean, 100.0);
+        assert!(std.abs() < 1e-3);
+    }
+
+    #[test]
+    fn histogram_mass_equals_pixels() {
+        forall(
+            "hist sums to n",
+            20,
+            |r: &mut Rng| {
+                let h = r.range(1, 20);
+                let w = r.range(1, 20);
+                (h, w, r.image(h, w))
+            },
+            |(h, w, px)| {
+                let img = Gray::new(*h, *w, px.clone()).unwrap();
+                let s = tile_stats(&img);
+                let mass: f32 = s[4..].iter().sum();
+                if mass != (h * w) as f32 {
+                    return Err(format!("mass {mass} != {}", h * w));
+                }
+                if s[2] > s[3] {
+                    return Err("min > max".into());
+                }
+                Ok(())
+            },
+        );
+    }
+
+    #[test]
+    fn out_of_range_values_clamp_into_edge_bins() {
+        let img = Gray::new(1, 3, vec![-50.0, 300.0, 255.9]).unwrap();
+        let s = tile_stats(&img);
+        assert_eq!(s[4], 1.0); // -50 clamps to bin 0
+        assert_eq!(s[4 + 15], 2.0); // 300 and 255.9 clamp to last bin
+    }
+}

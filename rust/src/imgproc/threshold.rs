@@ -1,0 +1,110 @@
+//! Thresholding operations: binary threshold and the paper's
+//! `AreaThreshold` (drop components outside an area band).
+
+use super::label::{bwlabel, label_areas};
+use super::{Conn, Gray};
+
+/// Binary threshold: 1.0 where `img > t`, else 0.0.
+pub fn threshold(img: &Gray, t: f32) -> Gray {
+    Gray {
+        h: img.h,
+        w: img.w,
+        px: img.px.iter().map(|&v| if v > t { 1.0 } else { 0.0 }).collect(),
+    }
+}
+
+/// Keep only connected components whose area lies in `[lo, hi]` (inclusive),
+/// 8-connected — semantics of `model.area_threshold`.
+pub fn area_threshold(mask: &Gray, lo: f32, hi: f32) -> Gray {
+    let (labels, k) = bwlabel(mask, Conn::Eight);
+    let areas = label_areas(&labels, k);
+    let mut out = vec![0.0f32; mask.px.len()];
+    for (i, &l) in labels.px.iter().enumerate() {
+        let id = l as usize;
+        if id > 0 {
+            let a = areas[id] as f32;
+            if a >= lo && a <= hi {
+                out[i] = 1.0;
+            }
+        }
+    }
+    Gray { h: mask.h, w: mask.w, px: out }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::testing::{forall, Rng};
+
+    #[test]
+    fn threshold_strict() {
+        let g = Gray::new(1, 3, vec![1.0, 2.0, 3.0]).unwrap();
+        let t = threshold(&g, 2.0);
+        assert_eq!(t.px, vec![0.0, 0.0, 1.0]);
+    }
+
+    #[test]
+    fn drops_small_keeps_mid_drops_large() {
+        let mut m = Gray::zeros(16, 16);
+        m.set(0, 0, 1.0); // area 1
+        for y in 3..6 {
+            for x in 3..6 {
+                m.set(y, x, 1.0); // area 9
+            }
+        }
+        for y in 8..16 {
+            for x in 8..16 {
+                m.set(y, x, 1.0); // area 64
+            }
+        }
+        let out = area_threshold(&m, 2.0, 20.0);
+        assert_eq!(out.at(0, 0), 0.0);
+        assert_eq!(out.at(4, 4), 1.0);
+        assert_eq!(out.at(12, 12), 0.0);
+    }
+
+    #[test]
+    fn inclusive_bounds() {
+        let mut m = Gray::zeros(4, 8);
+        m.set(0, 0, 1.0); // area 1
+        m.set(2, 2, 1.0);
+        m.set(2, 3, 1.0); // area 2
+        let out = area_threshold(&m, 1.0, 1.0);
+        assert_eq!(out.at(0, 0), 1.0);
+        assert_eq!(out.at(2, 2), 0.0);
+    }
+
+    #[test]
+    fn area_threshold_is_restriction() {
+        forall(
+            "area_threshold subset of mask; kept components untouched",
+            20,
+            |r: &mut Rng| {
+                let h = r.range(3, 14);
+                let w = r.range(3, 14);
+                let lo = r.range(1, 4) as f32;
+                let hi = lo + r.range(0, 20) as f32;
+                (h, w, r.mask(h, w, 0.45), lo, hi)
+            },
+            |(h, w, px, lo, hi)| {
+                let m = Gray::new(*h, *w, px.clone()).unwrap();
+                let out = area_threshold(&m, *lo, *hi);
+                for i in 0..px.len() {
+                    if out.px[i] > px[i] {
+                        return Err("output not subset of input".into());
+                    }
+                }
+                // surviving components must have their whole area intact
+                let (lab, k) = bwlabel(&out, Conn::Eight);
+                let areas = label_areas(&lab, k);
+                for a in &areas[1..] {
+                    let a = *a as f32;
+                    if a < *lo || a > *hi {
+                        return Err(format!("surviving area {a} outside [{lo},{hi}]"));
+                    }
+                }
+                Ok(())
+            },
+        );
+    }
+}

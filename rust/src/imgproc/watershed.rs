@@ -1,0 +1,235 @@
+//! Marker-based watershed by priority-flood (the CPU variant).
+//!
+//! The paper uses OpenCV's watershed on the CPU and the Körbes kernel on the
+//! GPU, noting the two "are not the same [algorithm]; hence, the results ...
+//! are slightly different".  We reproduce that situation deliberately:
+//!
+//! * CPU (this file): sequential **priority-flood** — grow markers in order
+//!   of relief height (a BinaryHeap keyed on (value, FIFO tiebreak)).
+//! * "GPU" (`model.watershed`): synchronous iterative flooding inside an
+//!   HLO `while` loop.
+//!
+//! Both produce valid tessellations of the mask into one region per marker;
+//! tests compare region counts and seed ownership, not exact boundaries.
+//!
+//! Also provides [`regional_maxima`] + [`pre_watershed`], the CPU variant of
+//! the paper's Pre-Watershed stage (distance transform + marker extraction).
+
+use super::distance::distance_chessboard;
+use super::label::bwlabel;
+use super::reconstruct::reconstruct;
+use super::{Conn, Gray};
+use std::cmp::Ordering;
+use std::collections::BinaryHeap;
+
+#[derive(PartialEq)]
+struct Item {
+    value: f32,
+    order: u64,
+    y: u32,
+    x: u32,
+    label: f32,
+}
+
+impl Eq for Item {}
+
+impl PartialOrd for Item {
+    fn partial_cmp(&self, other: &Self) -> Option<Ordering> {
+        Some(self.cmp(other))
+    }
+}
+
+impl Ord for Item {
+    fn cmp(&self, other: &Self) -> Ordering {
+        // BinaryHeap is a max-heap; we want the *lowest* relief first.
+        other
+            .value
+            .partial_cmp(&self.value)
+            .unwrap_or(Ordering::Equal)
+            .then_with(|| other.order.cmp(&self.order))
+    }
+}
+
+/// Flood `relief` from `markers` restricted to `mask` (8-connected).
+///
+/// Returns a label image: 0 outside the mask; otherwise the marker id whose
+/// flood reached the pixel first.
+pub fn watershed(relief: &Gray, markers: &Gray, mask: &Gray) -> Gray {
+    let (h, w) = (mask.h, mask.w);
+    let mut labels = vec![0.0f32; h * w];
+    let mut heap: BinaryHeap<Item> = BinaryHeap::new();
+    let mut order = 0u64;
+    for y in 0..h {
+        for x in 0..w {
+            let i = y * w + x;
+            if markers.px[i] > 0.0 && mask.px[i] > 0.5 {
+                labels[i] = markers.px[i];
+                heap.push(Item {
+                    value: relief.px[i],
+                    order,
+                    y: y as u32,
+                    x: x as u32,
+                    label: markers.px[i],
+                });
+                order += 1;
+            }
+        }
+    }
+    while let Some(it) = heap.pop() {
+        for &(dy, dx) in Conn::Eight.offsets() {
+            let ny = it.y as isize + dy;
+            let nx = it.x as isize + dx;
+            if ny < 0 || nx < 0 || ny >= h as isize || nx >= w as isize {
+                continue;
+            }
+            let q = ny as usize * w + nx as usize;
+            if mask.px[q] > 0.5 && labels[q] == 0.0 {
+                labels[q] = it.label;
+                heap.push(Item {
+                    // flood never goes "below" the current level: classic
+                    // priority-flood uses max(relief[q], current)
+                    value: relief.px[q].max(it.value),
+                    order,
+                    y: ny as u32,
+                    x: nx as u32,
+                    label: it.label,
+                });
+                order += 1;
+            }
+        }
+    }
+    Gray { h, w, px: labels }
+}
+
+/// Regional maxima via the h-maxima criterion with h = 1:
+/// maxima = (img - reconstruct(img - 1, img)) > 0.5, restricted to `mask`.
+pub fn regional_maxima(img: &Gray, mask: &Gray) -> Gray {
+    let marker = Gray {
+        h: img.h,
+        w: img.w,
+        px: img.px.iter().map(|&v| v - 1.0).collect(),
+    };
+    let recon = reconstruct(&marker, img, Conn::Eight);
+    let px = img
+        .px
+        .iter()
+        .zip(&recon.px)
+        .zip(&mask.px)
+        .map(|((&g, &r), &m)| if g - r > 0.5 && m > 0.5 { 1.0 } else { 0.0 })
+        .collect();
+    Gray { h: img.h, w: img.w, px }
+}
+
+/// The Pre-Watershed stage: distance transform + labelled maxima markers.
+/// Returns (relief = -distance, markers).  Matches `model.pre_watershed`.
+pub fn pre_watershed(mask: &Gray) -> (Gray, Gray) {
+    let dist = distance_chessboard(mask);
+    let maxima = regional_maxima(&dist, mask);
+    let (markers, _) = bwlabel(&maxima, Conn::Eight);
+    let relief = Gray {
+        h: dist.h,
+        w: dist.w,
+        px: dist.px.iter().map(|&v| -v).collect(),
+    };
+    (relief, markers)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn two_lobes(s: usize) -> Gray {
+        // two overlapping disks -> single 8-connected component
+        let mut m = Gray::zeros(s, s);
+        let c = s as isize / 2;
+        for y in 0..s {
+            for x in 0..s {
+                let dy = y as isize - c;
+                let dx1 = x as isize - (c - 5);
+                let dx2 = x as isize - (c + 5);
+                if dy * dy + dx1 * dx1 <= 25 || dy * dy + dx2 * dx2 <= 25 {
+                    m.set(y, x, 1.0);
+                }
+            }
+        }
+        m
+    }
+
+    #[test]
+    fn splits_touching_nuclei() {
+        let mask = two_lobes(24);
+        let (relief, markers) = pre_watershed(&mask);
+        let marker_ids: std::collections::BTreeSet<u32> = markers
+            .px
+            .iter()
+            .filter(|&&v| v > 0.0)
+            .map(|&v| v as u32)
+            .collect();
+        assert!(marker_ids.len() >= 2, "expected >= 2 markers, got {marker_ids:?}");
+        let labels = watershed(&relief, &markers, &mask);
+        // coverage: every mask pixel labelled, background untouched
+        for i in 0..mask.px.len() {
+            assert_eq!(labels.px[i] > 0.0, mask.px[i] > 0.5);
+        }
+        // the two lobe centres belong to different regions
+        let c = 12;
+        assert_ne!(labels.at(c, c - 5), labels.at(c, c + 5));
+        // number of regions == number of markers
+        let region_ids: std::collections::BTreeSet<u32> =
+            labels.px.iter().filter(|&&v| v > 0.0).map(|&v| v as u32).collect();
+        assert_eq!(region_ids, marker_ids);
+    }
+
+    #[test]
+    fn markers_keep_their_pixels() {
+        let mask = two_lobes(20);
+        let (relief, markers) = pre_watershed(&mask);
+        let labels = watershed(&relief, &markers, &mask);
+        for i in 0..mask.px.len() {
+            if markers.px[i] > 0.0 {
+                assert_eq!(labels.px[i], markers.px[i], "marker pixel must keep its id");
+            }
+        }
+    }
+
+    #[test]
+    fn isolated_blobs_one_region_each() {
+        let mut mask = Gray::zeros(16, 16);
+        for y in 2..6 {
+            for x in 2..6 {
+                mask.set(y, x, 1.0);
+            }
+        }
+        for y in 10..14 {
+            for x in 10..14 {
+                mask.set(y, x, 1.0);
+            }
+        }
+        let (relief, markers) = pre_watershed(&mask);
+        let labels = watershed(&relief, &markers, &mask);
+        assert_ne!(labels.at(3, 3), labels.at(12, 12));
+        assert_eq!(labels.at(3, 3), labels.at(4, 4), "blob interior single region");
+    }
+
+    #[test]
+    fn empty_mask_yields_empty_labels() {
+        let mask = Gray::zeros(8, 8);
+        let (relief, markers) = pre_watershed(&mask);
+        let labels = watershed(&relief, &markers, &mask);
+        assert!(labels.px.iter().all(|&v| v == 0.0));
+    }
+
+    #[test]
+    fn regional_maxima_finds_plateau_tops() {
+        let mut img = Gray::filled(7, 7, 1.0);
+        img.set(2, 2, 5.0);
+        img.set(2, 3, 5.0); // plateau maximum of two pixels
+        img.set(5, 5, 3.0); // second maximum
+        let mask = Gray::filled(7, 7, 1.0);
+        let mx = regional_maxima(&img, &mask);
+        assert_eq!(mx.at(2, 2), 1.0);
+        assert_eq!(mx.at(2, 3), 1.0);
+        assert_eq!(mx.at(5, 5), 1.0);
+        assert_eq!(mx.at(0, 0), 0.0);
+    }
+}

@@ -1,0 +1,42 @@
+//! # htap — High-Throughput Hierarchical Analysis Pipelines on Hybrid Clusters
+//!
+//! A reproduction of Teodoro et al., *"High-throughput Execution of
+//! Hierarchical Analysis Pipelines on Hybrid Cluster Platforms"* (2012).
+//!
+//! The crate implements the paper's runtime middleware in three layers:
+//!
+//! * **Coordinator** ([`coordinator`]) — the paper's contribution: a
+//!   Manager/Worker, demand-driven, window-based bag-of-tasks layer combined
+//!   with a coarse-grain dataflow layer inside each node (the Worker Resource
+//!   Manager), with the PATS / FCFS schedulers, data-locality-conscious
+//!   assignment, prefetching and architecture-aware thread placement.
+//! * **Dataflow model** ([`dataflow`]) — hierarchical two-level pipelines
+//!   (coarse-grain stages made of fine-grain operations), abstract vs
+//!   concrete workflows, and *function variants* (CPU + accelerator
+//!   implementations of each operation).
+//! * **Compute substrate** — [`imgproc`] holds the CPU variants of every
+//!   operation in the paper's Fig. 1 WSI pipeline; [`runtime`] loads the
+//!   AOT-compiled JAX/Pallas artifacts (`artifacts/*.hlo.txt`) through PJRT
+//!   and serves as the "GPU" side of each function variant.
+//!
+//! Cluster-scale behaviour (the paper's 100-node Keeneland runs) is
+//! reproduced by a calibrated discrete-event simulator ([`sim`]) that runs
+//! the *same* scheduler implementations against the measured cost model, and
+//! by a TCP Manager/Worker transport ([`net`]) standing in for MPI.
+
+pub mod app;
+pub mod bench_util;
+pub mod cli;
+pub mod config;
+pub mod coordinator;
+pub mod data;
+pub mod dataflow;
+pub mod error;
+pub mod imgproc;
+pub mod metrics;
+pub mod net;
+pub mod runtime;
+pub mod sim;
+pub mod testing;
+
+pub use error::{Error, Result};

@@ -1,0 +1,128 @@
+//! `htap` launcher: run / simulate / serve / join.
+
+use htap::app::{build_workflow, stage_bindings, AppParams};
+use htap::cli::{Cli, USAGE};
+use htap::config::Policy;
+use htap::coordinator::{run_local, worker::run_worker, Manager};
+use htap::data::{SynthConfig, TileStore};
+use htap::metrics::MetricsHub;
+use htap::net::{ManagerServer, RemoteManager};
+use htap::runtime::ArtifactManifest;
+use htap::sim::{simulate, SimParams};
+use std::sync::Arc;
+
+fn main() {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let cli = match Cli::parse(&args) {
+        Ok(c) => c,
+        Err(e) => {
+            eprintln!("{e}\n{USAGE}");
+            std::process::exit(2);
+        }
+    };
+    if let Err(e) = dispatch(&cli) {
+        eprintln!("error: {e}");
+        std::process::exit(1);
+    }
+}
+
+fn dispatch(cli: &Cli) -> htap::Result<()> {
+    match cli.command.as_str() {
+        "run" => cmd_run(cli),
+        "sim" => cmd_sim(cli),
+        "manager" => cmd_manager(cli),
+        "worker" => cmd_worker(cli),
+        "help" | "--help" | "-h" => {
+            println!("{USAGE}");
+            Ok(())
+        }
+        other => Err(htap::Error::Config(format!("unknown command '{other}'\n{USAGE}"))),
+    }
+}
+
+fn cmd_run(cli: &Cli) -> htap::Result<()> {
+    let cfg = cli.run_config()?;
+    let params = AppParams::for_tile_size(cfg.tile_size);
+    let workflow = Arc::new(build_workflow(&params, true));
+    let store = Arc::new(TileStore::new(
+        SynthConfig::for_tile_size(cfg.tile_size, cfg.seed),
+        cfg.n_tiles,
+    ));
+    let n = cfg.n_tiles;
+    println!(
+        "running {} tiles ({}x{}) with {} ({} cpu + {} gpu threads, window {})",
+        n, cfg.tile_size, cfg.tile_size, cfg.policy.name(), cfg.cpu_workers, cfg.gpu_workers, cfg.window
+    );
+    let outcome = run_local(workflow, store.loader(), n, cfg, stage_bindings())?;
+    let report = outcome.metrics;
+    println!("\n{}", report.profile_table());
+    println!(
+        "wall {:.2}s  ({:.2} tiles/s)",
+        report.wall.as_secs_f64(),
+        n as f64 / report.wall.as_secs_f64()
+    );
+    Ok(())
+}
+
+fn cmd_sim(cli: &Cli) -> htap::Result<()> {
+    let nodes = cli.get_usize("nodes", 1)?;
+    let tiles = cli.get_usize("tiles", 100)?;
+    let policy = match cli.get("policy") {
+        Some(p) => Policy::parse(p)?,
+        None => Policy::Pats,
+    };
+    let p = SimParams { n_nodes: nodes, n_tiles: tiles, policy, ..Default::default() };
+    let r = simulate(&p);
+    println!(
+        "simulated {} tiles on {} Keeneland nodes ({}): makespan {:.1}s, {:.1} tiles/s",
+        tiles, nodes, policy.name(), r.makespan, r.tiles_per_second()
+    );
+    println!(
+        "device busy {:.1}s, transfers {:.1}s, tile I/O {:.1}s",
+        r.busy_time, r.transfer_time, r.io_time
+    );
+    Ok(())
+}
+
+fn cmd_manager(cli: &Cli) -> htap::Result<()> {
+    let listen = cli
+        .get("listen")
+        .ok_or_else(|| htap::Error::Config("manager needs --listen HOST:PORT".into()))?;
+    let cfg = cli.run_config()?;
+    let workers = cli.get_usize("workers", 1)?;
+    let params = AppParams::for_tile_size(cfg.tile_size);
+    let workflow = Arc::new(build_workflow(&params, false));
+    let store = Arc::new(TileStore::new(
+        SynthConfig::for_tile_size(cfg.tile_size, cfg.seed),
+        cfg.n_tiles,
+    ));
+    let manager = Manager::new(workflow, store.loader(), cfg.n_tiles)?;
+    let server = ManagerServer::bind(listen, manager.clone())?;
+    println!("manager on {} ({} tiles, expecting {workers} workers)", server.local_addr(), cfg.n_tiles);
+    server.serve(workers)?;
+    let (done, total) = manager.progress();
+    println!("workflow complete: {done}/{total}");
+    Ok(())
+}
+
+fn cmd_worker(cli: &Cli) -> htap::Result<()> {
+    let addr = cli
+        .get("connect")
+        .ok_or_else(|| htap::Error::Config("worker needs --connect HOST:PORT".into()))?;
+    let cfg = cli.run_config()?;
+    let params = AppParams::for_tile_size(cfg.tile_size);
+    let workflow = Arc::new(build_workflow(&params, false));
+    let source = Arc::new(RemoteManager::connect(addr)?);
+    let metrics = Arc::new(MetricsHub::new());
+    println!("worker connected to {addr}");
+    run_worker(
+        source,
+        workflow,
+        cfg,
+        Arc::new(ArtifactManifest::discover()?),
+        metrics.clone(),
+        stage_bindings(),
+    )?;
+    println!("{}", metrics.report().profile_table());
+    Ok(())
+}

@@ -1,0 +1,211 @@
+//! Execution metrics: per-device/per-operation counters and timers.
+//!
+//! The paper's evaluation reports (a) end-to-end times, (b) the *execution
+//! profile* — what fraction of each operation type ran on CPU vs GPU
+//! (Figs. 10 and 12) — and (c) data-transfer overheads.  [`MetricsHub`] is a
+//! cheap, lock-sharded collector the coordinator threads write into; benches
+//! and EXPERIMENTS.md read the aggregated [`MetricsReport`].
+
+use std::collections::BTreeMap;
+use std::sync::Mutex;
+use std::time::{Duration, Instant};
+
+/// Which kind of device executed an operation.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord, Hash)]
+pub enum DeviceKind {
+    Cpu,
+    Gpu,
+}
+
+impl DeviceKind {
+    pub fn name(self) -> &'static str {
+        match self {
+            DeviceKind::Cpu => "CPU",
+            DeviceKind::Gpu => "GPU",
+        }
+    }
+}
+
+#[derive(Debug, Default, Clone)]
+struct OpRecord {
+    cpu_count: u64,
+    gpu_count: u64,
+    cpu_time: Duration,
+    gpu_time: Duration,
+    upload_bytes: u64,
+    download_bytes: u64,
+}
+
+/// Aggregated view handed to benches / reports.
+#[derive(Debug, Clone)]
+pub struct OpProfile {
+    pub op: String,
+    pub cpu_count: u64,
+    pub gpu_count: u64,
+    pub cpu_time: Duration,
+    pub gpu_time: Duration,
+    pub upload_bytes: u64,
+    pub download_bytes: u64,
+}
+
+impl OpProfile {
+    /// Fraction of instances of this op that ran on the GPU (Fig. 10 metric).
+    pub fn gpu_fraction(&self) -> f64 {
+        let total = self.cpu_count + self.gpu_count;
+        if total == 0 {
+            0.0
+        } else {
+            self.gpu_count as f64 / total as f64
+        }
+    }
+}
+
+/// Thread-safe metrics collector.
+#[derive(Debug, Default)]
+pub struct MetricsHub {
+    ops: Mutex<BTreeMap<String, OpRecord>>,
+    started: Mutex<Option<Instant>>,
+    finished: Mutex<Option<Instant>>,
+}
+
+impl MetricsHub {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn mark_start(&self) {
+        *self.started.lock().unwrap() = Some(Instant::now());
+    }
+
+    pub fn mark_finish(&self) {
+        *self.finished.lock().unwrap() = Some(Instant::now());
+    }
+
+    /// Record one executed operation instance.
+    pub fn record_op(&self, op: &str, device: DeviceKind, elapsed: Duration) {
+        let mut map = self.ops.lock().unwrap();
+        let rec = map.entry(op.to_string()).or_default();
+        match device {
+            DeviceKind::Cpu => {
+                rec.cpu_count += 1;
+                rec.cpu_time += elapsed;
+            }
+            DeviceKind::Gpu => {
+                rec.gpu_count += 1;
+                rec.gpu_time += elapsed;
+            }
+        }
+    }
+
+    /// Record bytes moved across the host/device boundary for an op.
+    pub fn record_transfer(&self, op: &str, up: u64, down: u64) {
+        let mut map = self.ops.lock().unwrap();
+        let rec = map.entry(op.to_string()).or_default();
+        rec.upload_bytes += up;
+        rec.download_bytes += down;
+    }
+
+    /// Wall-clock between mark_start and mark_finish (or now).
+    pub fn wall_time(&self) -> Duration {
+        let s = self.started.lock().unwrap();
+        let f = self.finished.lock().unwrap();
+        match (*s, *f) {
+            (Some(s), Some(f)) => f.duration_since(s),
+            (Some(s), None) => s.elapsed(),
+            _ => Duration::ZERO,
+        }
+    }
+
+    pub fn report(&self) -> MetricsReport {
+        let ops = self
+            .ops
+            .lock()
+            .unwrap()
+            .iter()
+            .map(|(k, r)| OpProfile {
+                op: k.clone(),
+                cpu_count: r.cpu_count,
+                gpu_count: r.gpu_count,
+                cpu_time: r.cpu_time,
+                gpu_time: r.gpu_time,
+                upload_bytes: r.upload_bytes,
+                download_bytes: r.download_bytes,
+            })
+            .collect();
+        MetricsReport { ops, wall: self.wall_time() }
+    }
+}
+
+/// Immutable aggregate of a run.
+#[derive(Debug, Clone)]
+pub struct MetricsReport {
+    pub ops: Vec<OpProfile>,
+    pub wall: Duration,
+}
+
+impl MetricsReport {
+    pub fn op(&self, name: &str) -> Option<&OpProfile> {
+        self.ops.iter().find(|o| o.op == name)
+    }
+
+    pub fn total_executed(&self) -> u64 {
+        self.ops.iter().map(|o| o.cpu_count + o.gpu_count).sum()
+    }
+
+    /// Pretty profile table (Fig. 10-style) as text rows.
+    pub fn profile_table(&self) -> String {
+        let mut out = String::from(format!(
+            "{:<20} {:>8} {:>8} {:>7}\n",
+            "operation", "CPU", "GPU", "%GPU"
+        ));
+        for o in &self.ops {
+            out.push_str(&format!(
+                "{:<20} {:>8} {:>8} {:>6.1}%\n",
+                o.op,
+                o.cpu_count,
+                o.gpu_count,
+                o.gpu_fraction() * 100.0
+            ));
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn records_and_aggregates() {
+        let m = MetricsHub::new();
+        m.record_op("watershed", DeviceKind::Cpu, Duration::from_millis(5));
+        m.record_op("watershed", DeviceKind::Gpu, Duration::from_millis(2));
+        m.record_op("watershed", DeviceKind::Gpu, Duration::from_millis(2));
+        m.record_transfer("watershed", 100, 50);
+        let r = m.report();
+        let p = r.op("watershed").unwrap();
+        assert_eq!(p.cpu_count, 1);
+        assert_eq!(p.gpu_count, 2);
+        assert!((p.gpu_fraction() - 2.0 / 3.0).abs() < 1e-9);
+        assert_eq!(p.upload_bytes, 100);
+        assert_eq!(r.total_executed(), 3);
+    }
+
+    #[test]
+    fn wall_time_monotone() {
+        let m = MetricsHub::new();
+        m.mark_start();
+        std::thread::sleep(Duration::from_millis(5));
+        m.mark_finish();
+        assert!(m.wall_time() >= Duration::from_millis(4));
+    }
+
+    #[test]
+    fn profile_table_contains_ops() {
+        let m = MetricsHub::new();
+        m.record_op("canny", DeviceKind::Gpu, Duration::from_millis(1));
+        let t = m.report().profile_table();
+        assert!(t.contains("canny"));
+        assert!(t.contains("100.0%"));
+    }
+}

@@ -1,0 +1,215 @@
+//! Distributed Manager/Worker over TCP (the MPI substitute).
+//!
+//! The paper runs the Manager and Workers as MPI processes; MPI is not
+//! available here, so the same demand-driven window protocol (paper
+//! §III-B) runs over two TCP connections per Worker:
+//!
+//! * a **work channel** — the Worker's requester sends `Request{capacity}`
+//!   and blocks until the Manager answers `Assign{...}` (empty = workflow
+//!   complete, shut down);
+//! * a **completion channel** — the Worker's completer streams
+//!   `Complete{instance, outputs}` messages back.
+//!
+//! Splitting the channels lets requesting overlap completing exactly like
+//! the in-process Worker (worker.rs); message framing is length-prefixed
+//! binary (`proto`).
+
+pub mod proto;
+
+use crate::coordinator::manager::{Assignment, Manager, WorkSource};
+use crate::{Error, Result};
+use proto::Message;
+use std::io::{BufReader, BufWriter};
+use std::net::{TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::{Arc, Mutex};
+
+/// Serve an in-process [`Manager`] to remote Workers.  Returns once the
+/// workflow completes and all workers disconnected.
+pub struct ManagerServer {
+    listener: TcpListener,
+    manager: Arc<Manager>,
+    stop: Arc<AtomicBool>,
+}
+
+impl ManagerServer {
+    pub fn bind(addr: &str, manager: Arc<Manager>) -> Result<Self> {
+        let listener = TcpListener::bind(addr).map_err(|e| Error::Net(e.to_string()))?;
+        Ok(ManagerServer { listener, manager, stop: Arc::new(AtomicBool::new(false)) })
+    }
+
+    pub fn local_addr(&self) -> String {
+        self.listener.local_addr().map(|a| a.to_string()).unwrap_or_default()
+    }
+
+    /// Accept-and-serve loop.  Spawns one thread per connection; exits when
+    /// the workflow finishes (detected via Manager progress after each
+    /// serve thread ends) or `stop_handle` is set.
+    pub fn serve(&self, expected_workers: usize) -> Result<()> {
+        let mut handles = Vec::new();
+        // Expect 2 connections per worker (work + completion channels).
+        for _ in 0..expected_workers * 2 {
+            if self.stop.load(Ordering::SeqCst) {
+                break;
+            }
+            let (stream, _) = self.listener.accept().map_err(|e| Error::Net(e.to_string()))?;
+            let mgr = self.manager.clone();
+            handles.push(std::thread::spawn(move || serve_connection(stream, mgr)));
+        }
+        for h in handles {
+            let _ = h.join();
+        }
+        Ok(())
+    }
+
+    pub fn stop_handle(&self) -> Arc<AtomicBool> {
+        self.stop.clone()
+    }
+}
+
+fn serve_connection(stream: TcpStream, mgr: Arc<Manager>) {
+    // leases handed out on this connection; if the worker dies (EOF or
+    // protocol error) before completing them, they are re-issued to the
+    // surviving workers — the fault-tolerance path.
+    let mut leases: Vec<u64> = Vec::new();
+    let result = serve_connection_inner(stream, &mgr, &mut leases);
+    let requeued = mgr.requeue_stale(&leases);
+    if let Err(e) = result {
+        if requeued > 0 {
+            eprintln!("htap manager: worker lost ({e}); re-issued {requeued} stage instances");
+        }
+    }
+}
+
+fn serve_connection_inner(
+    stream: TcpStream,
+    mgr: &Arc<Manager>,
+    leases: &mut Vec<u64>,
+) -> Result<()> {
+    stream.set_nodelay(true).ok();
+    let mut reader = BufReader::new(stream.try_clone().map_err(|e| Error::Net(e.to_string()))?);
+    let mut writer = BufWriter::new(stream);
+    loop {
+        let msg = match proto::read_message(&mut reader) {
+            Ok(m) => m,
+            Err(Error::Net(ref e)) if e == "eof" => return Ok(()),
+            Err(e) => return Err(e),
+        };
+        match msg {
+            Message::Request { capacity } => {
+                let batch = mgr.request(capacity.max(1) as usize);
+                leases.extend(batch.iter().map(|a| a.instance_id));
+                proto::write_message(&mut writer, &Message::Assign { assignments: batch })?;
+            }
+            Message::Complete { instance, outputs } => {
+                mgr.complete(instance, outputs);
+                // completion channel is one-way; no ack needed
+            }
+            Message::Fail { msg } => {
+                mgr.fail(msg);
+            }
+            other => {
+                return Err(Error::Net(format!("unexpected message {other:?} on server")));
+            }
+        }
+    }
+}
+
+/// Client-side [`WorkSource`] speaking the protocol over two sockets.
+pub struct RemoteManager {
+    work: Mutex<(BufReader<TcpStream>, BufWriter<TcpStream>)>,
+    completion: Mutex<BufWriter<TcpStream>>,
+}
+
+impl RemoteManager {
+    pub fn connect(addr: &str) -> Result<Self> {
+        let work = TcpStream::connect(addr).map_err(|e| Error::Net(e.to_string()))?;
+        work.set_nodelay(true).ok();
+        let completion = TcpStream::connect(addr).map_err(|e| Error::Net(e.to_string()))?;
+        completion.set_nodelay(true).ok();
+        let wr = work.try_clone().map_err(|e| Error::Net(e.to_string()))?;
+        Ok(RemoteManager {
+            work: Mutex::new((BufReader::new(work), BufWriter::new(wr))),
+            completion: Mutex::new(BufWriter::new(completion)),
+        })
+    }
+}
+
+impl WorkSource for RemoteManager {
+    fn request(&self, capacity: usize) -> Vec<Assignment> {
+        let mut chan = self.work.lock().unwrap();
+        let (reader, writer) = &mut *chan;
+        if proto::write_message(writer, &Message::Request { capacity: capacity as u32 }).is_err() {
+            return Vec::new();
+        }
+        match proto::read_message(reader) {
+            Ok(Message::Assign { assignments }) => assignments,
+            _ => Vec::new(),
+        }
+    }
+
+    fn complete(&self, instance_id: u64, outputs: Vec<crate::runtime::Value>) {
+        let mut chan = self.completion.lock().unwrap();
+        let _ =
+            proto::write_message(&mut *chan, &Message::Complete { instance: instance_id, outputs });
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::dataflow::{FunctionVariant, OpDef, PortRef, StageDef, StageInput, StageKind, Workflow};
+    use crate::runtime::Value;
+
+    fn tiny_workflow() -> Arc<Workflow> {
+        let mut wf = Workflow::new("net-test");
+        wf.add_stage(StageDef {
+            name: "double".into(),
+            kind: StageKind::PerChunk,
+            inputs: vec![StageInput::Chunk],
+            ops: vec![OpDef {
+                name: "double".into(),
+                variant: FunctionVariant::cpu_only(|args| {
+                    Ok(vec![Value::Scalar(args[0].as_scalar()? * 2.0)])
+                }),
+                inputs: vec![PortRef::StageInput(0)],
+                n_outputs: 1,
+                speedup: 1.0,
+                transfer_impact: 0.0,
+            }],
+            outputs: vec![PortRef::Op { op: 0, output: 0 }],
+        });
+        Arc::new(wf)
+    }
+
+    #[test]
+    fn remote_protocol_round_trip() {
+        let wf = tiny_workflow();
+        let loader: crate::coordinator::ChunkLoader =
+            Arc::new(|c| Ok(vec![Value::Scalar(c as f32)]));
+        let mgr = Manager::new(wf, loader, 5).unwrap();
+        let server = ManagerServer::bind("127.0.0.1:0", mgr.clone()).unwrap();
+        let addr = server.local_addr();
+        let srv = std::thread::spawn(move || server.serve(1));
+
+        let remote = RemoteManager::connect(&addr).unwrap();
+        let mut executed = 0;
+        loop {
+            let batch = remote.request(2);
+            if batch.is_empty() {
+                break;
+            }
+            for a in batch {
+                let v = a.inputs[0].as_scalar().unwrap();
+                remote.complete(a.instance_id, vec![Value::Scalar(v * 2.0)]);
+                executed += 1;
+            }
+        }
+        assert_eq!(executed, 5);
+        drop(remote);
+        srv.join().unwrap().unwrap();
+        let (done, total) = mgr.progress();
+        assert_eq!(done, total);
+        assert!(mgr.error().is_none());
+    }
+}

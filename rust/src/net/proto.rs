@@ -1,0 +1,294 @@
+//! Length-prefixed binary framing for the Manager/Worker protocol.
+//!
+//! Frame layout: `u32 LE length` + payload.  Payload starts with a one-byte
+//! message tag; tensors are shipped as rank + dims + raw f32 LE bytes (a
+//! 4Kx4K tile is ~192 MB as JSON but 64 MB raw — binary matters here).
+
+use crate::coordinator::manager::Assignment;
+use crate::runtime::{HostTensor, Value};
+use crate::{Error, Result};
+use std::io::{Read, Write};
+
+/// Maximum accepted frame (guards against corrupt length prefixes).
+const MAX_FRAME: u32 = 1 << 30;
+
+/// Protocol messages.
+#[derive(Debug, Clone, PartialEq)]
+pub enum Message {
+    /// Worker -> Manager: give me up to `capacity` stage instances.
+    Request { capacity: u32 },
+    /// Manager -> Worker: assignments (empty = workflow complete).
+    Assign { assignments: Vec<Assignment> },
+    /// Worker -> Manager: stage instance finished.
+    Complete { instance: u64, outputs: Vec<Value> },
+    /// Worker -> Manager: fatal worker error.
+    Fail { msg: String },
+}
+
+const TAG_REQUEST: u8 = 1;
+const TAG_ASSIGN: u8 = 2;
+const TAG_COMPLETE: u8 = 3;
+const TAG_FAIL: u8 = 4;
+
+fn put_u32(buf: &mut Vec<u8>, v: u32) {
+    buf.extend_from_slice(&v.to_le_bytes());
+}
+
+fn put_u64(buf: &mut Vec<u8>, v: u64) {
+    buf.extend_from_slice(&v.to_le_bytes());
+}
+
+fn put_value(buf: &mut Vec<u8>, v: &Value) {
+    match v {
+        Value::Scalar(s) => {
+            buf.push(0);
+            buf.extend_from_slice(&s.to_le_bytes());
+        }
+        Value::Tensor(t) => {
+            buf.push(1);
+            put_u32(buf, t.shape().len() as u32);
+            for &d in t.shape() {
+                put_u64(buf, d as u64);
+            }
+            for &f in t.data() {
+                buf.extend_from_slice(&f.to_le_bytes());
+            }
+        }
+    }
+}
+
+fn put_values(buf: &mut Vec<u8>, vals: &[Value]) {
+    put_u32(buf, vals.len() as u32);
+    for v in vals {
+        put_value(buf, v);
+    }
+}
+
+struct Cursor<'a> {
+    data: &'a [u8],
+    pos: usize,
+}
+
+impl<'a> Cursor<'a> {
+    fn take(&mut self, n: usize) -> Result<&'a [u8]> {
+        if self.pos + n > self.data.len() {
+            return Err(Error::Net("truncated frame".into()));
+        }
+        let s = &self.data[self.pos..self.pos + n];
+        self.pos += n;
+        Ok(s)
+    }
+
+    fn u8(&mut self) -> Result<u8> {
+        Ok(self.take(1)?[0])
+    }
+
+    fn u32(&mut self) -> Result<u32> {
+        Ok(u32::from_le_bytes(self.take(4)?.try_into().unwrap()))
+    }
+
+    fn u64(&mut self) -> Result<u64> {
+        Ok(u64::from_le_bytes(self.take(8)?.try_into().unwrap()))
+    }
+
+    fn f32(&mut self) -> Result<f32> {
+        Ok(f32::from_le_bytes(self.take(4)?.try_into().unwrap()))
+    }
+
+    fn value(&mut self) -> Result<Value> {
+        match self.u8()? {
+            0 => Ok(Value::Scalar(self.f32()?)),
+            1 => {
+                let rank = self.u32()? as usize;
+                if rank > 8 {
+                    return Err(Error::Net(format!("tensor rank {rank} too large")));
+                }
+                let mut dims = Vec::with_capacity(rank);
+                for _ in 0..rank {
+                    dims.push(self.u64()? as usize);
+                }
+                let n: usize = dims.iter().product();
+                let bytes = self.take(n * 4)?;
+                let mut data = Vec::with_capacity(n);
+                for c in bytes.chunks_exact(4) {
+                    data.push(f32::from_le_bytes(c.try_into().unwrap()));
+                }
+                Ok(Value::Tensor(HostTensor::new(dims, data)?))
+            }
+            t => Err(Error::Net(format!("bad value tag {t}"))),
+        }
+    }
+
+    fn values(&mut self) -> Result<Vec<Value>> {
+        let n = self.u32()? as usize;
+        (0..n).map(|_| self.value()).collect()
+    }
+
+    fn string(&mut self) -> Result<String> {
+        let n = self.u32()? as usize;
+        String::from_utf8(self.take(n)?.to_vec()).map_err(|_| Error::Net("bad utf8".into()))
+    }
+}
+
+/// Encode a message (without the length prefix).
+pub fn encode(msg: &Message) -> Vec<u8> {
+    let mut buf = Vec::new();
+    match msg {
+        Message::Request { capacity } => {
+            buf.push(TAG_REQUEST);
+            put_u32(&mut buf, *capacity);
+        }
+        Message::Assign { assignments } => {
+            buf.push(TAG_ASSIGN);
+            put_u32(&mut buf, assignments.len() as u32);
+            for a in assignments {
+                put_u64(&mut buf, a.instance_id);
+                put_u32(&mut buf, a.stage_idx as u32);
+                put_u64(&mut buf, a.chunk);
+                put_values(&mut buf, &a.inputs);
+            }
+        }
+        Message::Complete { instance, outputs } => {
+            buf.push(TAG_COMPLETE);
+            put_u64(&mut buf, *instance);
+            put_values(&mut buf, outputs);
+        }
+        Message::Fail { msg } => {
+            buf.push(TAG_FAIL);
+            put_u32(&mut buf, msg.len() as u32);
+            buf.extend_from_slice(msg.as_bytes());
+        }
+    }
+    buf
+}
+
+/// Decode a message payload.
+pub fn decode(data: &[u8]) -> Result<Message> {
+    let mut c = Cursor { data, pos: 0 };
+    let msg = match c.u8()? {
+        TAG_REQUEST => Message::Request { capacity: c.u32()? },
+        TAG_ASSIGN => {
+            let n = c.u32()? as usize;
+            let mut assignments = Vec::with_capacity(n);
+            for _ in 0..n {
+                let instance_id = c.u64()?;
+                let stage_idx = c.u32()? as usize;
+                let chunk = c.u64()?;
+                let inputs = c.values()?;
+                assignments.push(Assignment { instance_id, stage_idx, chunk, inputs });
+            }
+            Message::Assign { assignments }
+        }
+        TAG_COMPLETE => {
+            let instance = c.u64()?;
+            let outputs = c.values()?;
+            Message::Complete { instance, outputs }
+        }
+        TAG_FAIL => Message::Fail { msg: c.string()? },
+        t => return Err(Error::Net(format!("unknown message tag {t}"))),
+    };
+    if c.pos != data.len() {
+        return Err(Error::Net("trailing bytes in frame".into()));
+    }
+    Ok(msg)
+}
+
+/// Write one framed message.
+pub fn write_message<W: Write>(w: &mut W, msg: &Message) -> Result<()> {
+    let payload = encode(msg);
+    w.write_all(&(payload.len() as u32).to_le_bytes())
+        .and_then(|_| w.write_all(&payload))
+        .and_then(|_| w.flush())
+        .map_err(|e| Error::Net(e.to_string()))
+}
+
+/// Read one framed message.  Returns `Error::Net("eof")` on clean EOF.
+pub fn read_message<R: Read>(r: &mut R) -> Result<Message> {
+    let mut len_buf = [0u8; 4];
+    match r.read_exact(&mut len_buf) {
+        Ok(()) => {}
+        Err(e) if e.kind() == std::io::ErrorKind::UnexpectedEof => {
+            return Err(Error::Net("eof".into()))
+        }
+        Err(e) => return Err(Error::Net(e.to_string())),
+    }
+    let len = u32::from_le_bytes(len_buf);
+    if len > MAX_FRAME {
+        return Err(Error::Net(format!("frame of {len} bytes exceeds cap")));
+    }
+    let mut payload = vec![0u8; len as usize];
+    r.read_exact(&mut payload).map_err(|e| Error::Net(e.to_string()))?;
+    decode(&payload)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn roundtrip(msg: Message) {
+        let enc = encode(&msg);
+        assert_eq!(decode(&enc).unwrap(), msg);
+        // also through the framed writer/reader
+        let mut buf = Vec::new();
+        write_message(&mut buf, &msg).unwrap();
+        let mut cur = std::io::Cursor::new(buf);
+        assert_eq!(read_message(&mut cur).unwrap(), msg);
+    }
+
+    #[test]
+    fn request_roundtrip() {
+        roundtrip(Message::Request { capacity: 7 });
+    }
+
+    #[test]
+    fn assign_roundtrip_with_tensors() {
+        roundtrip(Message::Assign {
+            assignments: vec![Assignment {
+                instance_id: 42,
+                stage_idx: 1,
+                chunk: 9,
+                inputs: vec![
+                    Value::Scalar(3.5),
+                    Value::Tensor(HostTensor::new(vec![2, 3], vec![1.0; 6]).unwrap()),
+                ],
+            }],
+        });
+    }
+
+    #[test]
+    fn complete_and_fail_roundtrip() {
+        roundtrip(Message::Complete {
+            instance: 1,
+            outputs: vec![Value::Tensor(HostTensor::new(vec![4], vec![0.5; 4]).unwrap())],
+        });
+        roundtrip(Message::Fail { msg: "boom — unicode ✓".into() });
+    }
+
+    #[test]
+    fn empty_assign_means_done() {
+        roundtrip(Message::Assign { assignments: vec![] });
+    }
+
+    #[test]
+    fn corrupt_frames_rejected() {
+        assert!(decode(&[99]).is_err());
+        assert!(decode(&[TAG_REQUEST, 1]).is_err()); // truncated
+        let mut enc = encode(&Message::Request { capacity: 1 });
+        enc.push(0); // trailing byte
+        assert!(decode(&enc).is_err());
+        // oversized frame header
+        let mut buf = Vec::new();
+        buf.extend_from_slice(&(MAX_FRAME + 1).to_le_bytes());
+        let mut cur = std::io::Cursor::new(buf);
+        assert!(read_message(&mut cur).is_err());
+    }
+
+    #[test]
+    fn eof_is_distinguishable() {
+        let mut cur = std::io::Cursor::new(Vec::<u8>::new());
+        match read_message(&mut cur) {
+            Err(crate::Error::Net(e)) => assert_eq!(e, "eof"),
+            other => panic!("expected eof, got {other:?}"),
+        }
+    }
+}

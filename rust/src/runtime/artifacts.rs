@@ -1,0 +1,193 @@
+//! Artifact manifest: what `make artifacts` produced and where.
+//!
+//! `python/compile/aot.py` writes `artifacts/manifest.json` describing every
+//! lowered module (name, tile size, file, input/output specs).  The
+//! coordinator consults the manifest to bind function variants; the
+//! [`DeviceExecutor`](super::pjrt::DeviceExecutor) uses it to locate and
+//! validate HLO files.
+
+use crate::config::json::Json;
+use crate::{Error, Result};
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+
+/// Shape + dtype of one module input or output.
+#[derive(Debug, Clone, PartialEq)]
+pub struct TensorSpec {
+    pub shape: Vec<usize>,
+    pub dtype: String,
+}
+
+impl TensorSpec {
+    fn from_json(j: &Json) -> Result<Self> {
+        let shape = j
+            .field("shape")?
+            .as_arr()
+            .ok_or_else(|| Error::Config("shape must be array".into()))?
+            .iter()
+            .map(|v| v.as_usize().ok_or_else(|| Error::Config("bad dim".into())))
+            .collect::<Result<Vec<_>>>()?;
+        let dtype = j
+            .field("dtype")?
+            .as_str()
+            .ok_or_else(|| Error::Config("dtype must be string".into()))?
+            .to_string();
+        Ok(Self { shape, dtype })
+    }
+
+    pub fn num_elements(&self) -> usize {
+        self.shape.iter().product()
+    }
+}
+
+/// One AOT-lowered module (a graph specialised to one tile size).
+#[derive(Debug, Clone)]
+pub struct ModuleMeta {
+    pub name: String,
+    pub size: usize,
+    pub file: PathBuf,
+    pub inputs: Vec<TensorSpec>,
+    pub outputs: Vec<TensorSpec>,
+}
+
+/// Parsed `artifacts/manifest.json`.
+#[derive(Debug, Clone)]
+pub struct ArtifactManifest {
+    pub dir: PathBuf,
+    pub tile_sizes: Vec<usize>,
+    modules: BTreeMap<(String, usize), ModuleMeta>,
+}
+
+impl ArtifactManifest {
+    /// Load `<dir>/manifest.json`.
+    pub fn load(dir: impl AsRef<Path>) -> Result<Self> {
+        let dir = dir.as_ref().to_path_buf();
+        let text = std::fs::read_to_string(dir.join("manifest.json")).map_err(|e| {
+            Error::Config(format!(
+                "cannot read {}/manifest.json (run `make artifacts`): {e}",
+                dir.display()
+            ))
+        })?;
+        let root = Json::parse(&text)?;
+        let tile_sizes = root
+            .field("tile_sizes")?
+            .as_arr()
+            .ok_or_else(|| Error::Config("tile_sizes must be array".into()))?
+            .iter()
+            .filter_map(|v| v.as_usize())
+            .collect();
+        let mut modules = BTreeMap::new();
+        for m in root
+            .field("modules")?
+            .as_arr()
+            .ok_or_else(|| Error::Config("modules must be array".into()))?
+        {
+            let name = m.field("name")?.as_str().unwrap_or_default().to_string();
+            let size = m
+                .field("size")?
+                .as_usize()
+                .ok_or_else(|| Error::Config("bad module size".into()))?;
+            let file = dir.join(m.field("file")?.as_str().unwrap_or_default());
+            let inputs = m
+                .field("inputs")?
+                .as_arr()
+                .unwrap_or(&[])
+                .iter()
+                .map(TensorSpec::from_json)
+                .collect::<Result<Vec<_>>>()?;
+            let outputs = m
+                .field("outputs")?
+                .as_arr()
+                .unwrap_or(&[])
+                .iter()
+                .map(TensorSpec::from_json)
+                .collect::<Result<Vec<_>>>()?;
+            modules.insert((name.clone(), size), ModuleMeta { name, size, file, inputs, outputs });
+        }
+        Ok(Self { dir, tile_sizes, modules })
+    }
+
+    /// Locate the default artifact directory: `$HTAP_ARTIFACTS` or
+    /// `artifacts/` relative to the workspace root (walking up from cwd).
+    pub fn discover() -> Result<Self> {
+        if let Ok(dir) = std::env::var("HTAP_ARTIFACTS") {
+            return Self::load(dir);
+        }
+        let mut cur = std::env::current_dir()?;
+        loop {
+            let cand = cur.join("artifacts");
+            if cand.join("manifest.json").exists() {
+                return Self::load(cand);
+            }
+            if !cur.pop() {
+                return Err(Error::Config(
+                    "no artifacts/manifest.json found; run `make artifacts` or set HTAP_ARTIFACTS"
+                        .into(),
+                ));
+            }
+        }
+    }
+
+    pub fn get(&self, name: &str, size: usize) -> Result<&ModuleMeta> {
+        self.modules.get(&(name.to_string(), size)).ok_or_else(|| {
+            Error::Config(format!(
+                "artifact '{name}' at tile size {size} not in manifest (have sizes {:?})",
+                self.tile_sizes
+            ))
+        })
+    }
+
+    pub fn has(&self, name: &str, size: usize) -> bool {
+        self.modules.contains_key(&(name.to_string(), size))
+    }
+
+    pub fn module_names(&self) -> Vec<String> {
+        let mut names: Vec<String> = self.modules.keys().map(|(n, _)| n.clone()).collect();
+        names.dedup();
+        names
+    }
+
+    pub fn len(&self) -> usize {
+        self.modules.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.modules.is_empty()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn write_manifest(dir: &Path, body: &str) {
+        std::fs::create_dir_all(dir).unwrap();
+        std::fs::write(dir.join("manifest.json"), body).unwrap();
+    }
+
+    #[test]
+    fn loads_and_indexes() {
+        let dir = std::env::temp_dir().join("htap_manifest_test");
+        write_manifest(
+            &dir,
+            r#"{"tile_sizes": [64], "modules": [
+                {"name": "morph_open", "size": 64, "file": "morph_open_64.hlo.txt",
+                 "inputs": [{"shape": [64, 64], "dtype": "float32"}],
+                 "outputs": [{"shape": [64, 64], "dtype": "float32"}]}]}"#,
+        );
+        let m = ArtifactManifest::load(&dir).unwrap();
+        assert_eq!(m.tile_sizes, vec![64]);
+        assert!(m.has("morph_open", 64));
+        assert!(!m.has("morph_open", 256));
+        let meta = m.get("morph_open", 64).unwrap();
+        assert_eq!(meta.inputs[0].shape, vec![64, 64]);
+        assert_eq!(meta.inputs[0].num_elements(), 4096);
+        assert!(m.get("nope", 64).is_err());
+    }
+
+    #[test]
+    fn missing_dir_is_config_error() {
+        let err = ArtifactManifest::load("/definitely/not/here").unwrap_err();
+        assert!(matches!(err, Error::Config(_)));
+    }
+}

@@ -1,0 +1,18 @@
+//! PJRT runtime: load AOT artifacts (HLO text) and execute them.
+//!
+//! This is the accelerator half of every *function variant*: the python
+//! build step (`make artifacts`) lowers each JAX/Pallas graph to HLO text;
+//! this module loads, compiles (once) and executes them through the `xla`
+//! crate's PJRT CPU client.  Python never runs on the request path.
+//!
+//! PJRT wrapper types hold raw pointers and are not `Send`, so every device
+//! thread owns its own [`DeviceExecutor`] — mirroring the paper's design of
+//! one GPU-controller thread per GPU.
+
+pub mod artifacts;
+pub mod pjrt;
+pub mod tensor;
+
+pub use artifacts::{ArtifactManifest, ModuleMeta};
+pub use pjrt::DeviceExecutor;
+pub use tensor::{HostTensor, Value};

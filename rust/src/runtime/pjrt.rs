@@ -1,0 +1,241 @@
+//! Per-device PJRT executor: compile-once / execute-many + a device-resident
+//! buffer cache.
+//!
+//! The paper's GPU controller threads own a CUDA context, launch kernels and
+//! move data over PCIe; here each accelerator device thread owns a
+//! [`DeviceExecutor`] (PJRT wrapper types are not `Send`), which:
+//!
+//! * compiles each HLO artifact lazily, once, and caches the executable;
+//! * implements the three data-movement phases the paper optimises —
+//!   **upload** (host value -> PJRT buffer), **process** (`execute_b`),
+//!   **download** (buffer -> host value) — with byte/transfer accounting so
+//!   the data-locality (DL) optimisation is observable;
+//! * keeps single-output results **device-resident** (keyed buffers) so a
+//!   dependent operation scheduled on the same device reuses them without a
+//!   round trip — the DL mechanism of paper §IV-C.
+
+use super::artifacts::ArtifactManifest;
+use super::tensor::{HostTensor, Value};
+use crate::{Error, Result};
+use std::collections::HashMap;
+use std::sync::atomic::{AtomicU64, Ordering};
+
+/// Identifies a device-resident payload (an op output kept on the device).
+pub type PayloadKey = u64;
+
+static NEXT_KEY: AtomicU64 = AtomicU64::new(1);
+
+fn fresh_key() -> PayloadKey {
+    NEXT_KEY.fetch_add(1, Ordering::Relaxed)
+}
+
+/// Input to an accelerator execution: either host data (must be uploaded)
+/// or a payload already resident on this device.
+pub enum ExecInput<'a> {
+    Host(&'a Value),
+    Resident(PayloadKey),
+}
+
+/// Transfer / execution counters (drives EXPERIMENTS.md data-movement plots).
+#[derive(Debug, Default, Clone)]
+pub struct ExecStats {
+    pub executions: u64,
+    pub uploads: u64,
+    pub downloads: u64,
+    pub bytes_up: u64,
+    pub bytes_down: u64,
+    pub cache_hits: u64,
+    pub compile_count: u64,
+}
+
+struct Resident {
+    buffer: xla::PjRtBuffer,
+    /// Number of outputs encoded in the buffer (1 = plain array root).
+    n_outputs: usize,
+    bytes: usize,
+}
+
+/// One device's compiled-artifact cache + resident-buffer store.
+pub struct DeviceExecutor {
+    client: xla::PjRtClient,
+    manifest: ArtifactManifest,
+    executables: HashMap<(String, usize), xla::PjRtLoadedExecutable>,
+    resident: HashMap<PayloadKey, Resident>,
+    pub stats: ExecStats,
+}
+
+impl DeviceExecutor {
+    /// Create an executor bound to the PJRT CPU client.
+    pub fn new(manifest: ArtifactManifest) -> Result<Self> {
+        let client = xla::PjRtClient::cpu()?;
+        Ok(Self {
+            client,
+            manifest,
+            executables: HashMap::new(),
+            resident: HashMap::new(),
+            stats: ExecStats::default(),
+        })
+    }
+
+    pub fn manifest(&self) -> &ArtifactManifest {
+        &self.manifest
+    }
+
+    /// Compile (once) the executable for `name` at `size`.
+    fn ensure_compiled(&mut self, name: &str, size: usize) -> Result<()> {
+        let key = (name.to_string(), size);
+        if !self.executables.contains_key(&key) {
+            let meta = self.manifest.get(name, size)?;
+            let proto = xla::HloModuleProto::from_text_file(&meta.file)?;
+            let comp = xla::XlaComputation::from_proto(&proto);
+            let exe = self.client.compile(&comp)?;
+            self.stats.compile_count += 1;
+            self.executables.insert(key, exe);
+        }
+        Ok(())
+    }
+
+    /// Eagerly compile a set of artifacts (start-up, off the hot path).
+    pub fn preload(&mut self, names: &[&str], size: usize) -> Result<()> {
+        for n in names {
+            self.ensure_compiled(n, size)?;
+        }
+        Ok(())
+    }
+
+    /// Upload a host value; counts the transfer.  (The paper's *upload* phase.)
+    fn upload(&mut self, v: &Value) -> Result<xla::PjRtBuffer> {
+        let buf = match v {
+            Value::Tensor(t) => {
+                self.client
+                    .buffer_from_host_buffer::<f32>(t.data(), t.shape(), None)?
+            }
+            Value::Scalar(s) => self
+                .client
+                .buffer_from_host_buffer::<f32>(&[*s], &[], None)?,
+        };
+        self.stats.uploads += 1;
+        self.stats.bytes_up += v.size_bytes() as u64;
+        Ok(buf)
+    }
+
+    /// Execute `name@size`, leaving the result resident on the device.
+    ///
+    /// Returns the payload key of the resident result.  Single-output
+    /// modules can later feed dependent executions without a download.
+    pub fn execute_resident(
+        &mut self,
+        name: &str,
+        size: usize,
+        inputs: &[ExecInput<'_>],
+    ) -> Result<PayloadKey> {
+        let meta = self.manifest.get(name, size)?.clone();
+        if meta.inputs.len() != inputs.len() {
+            return Err(Error::Runtime(format!(
+                "{name}@{size}: expected {} inputs, got {}",
+                meta.inputs.len(),
+                inputs.len()
+            )));
+        }
+        // Phase 1: upload host inputs / resolve resident ones.
+        let mut owned: Vec<xla::PjRtBuffer> = Vec::new();
+        let mut order: Vec<(bool, usize, PayloadKey)> = Vec::new(); // (is_owned, idx, key)
+        for inp in inputs {
+            match inp {
+                ExecInput::Host(v) => {
+                    owned.push(self.upload(v)?);
+                    order.push((true, owned.len() - 1, 0));
+                }
+                ExecInput::Resident(k) => {
+                    let r = self
+                        .resident
+                        .get(k)
+                        .ok_or_else(|| Error::Runtime(format!("payload {k} not resident")))?;
+                    if r.n_outputs != 1 {
+                        return Err(Error::Runtime(format!(
+                            "payload {k} is a {}-tuple; only single-output results are reusable",
+                            r.n_outputs
+                        )));
+                    }
+                    self.stats.cache_hits += 1;
+                    order.push((false, 0, *k));
+                }
+            }
+        }
+        // Phase 2: process.
+        let n_outputs = meta.outputs.len();
+        let out_bytes: usize = meta.outputs.iter().map(|o| o.num_elements() * 4).sum();
+        self.ensure_compiled(name, size)?;
+        let exe = &self.executables[&(name.to_string(), size)];
+        let arg_refs: Vec<&xla::PjRtBuffer> = order
+            .iter()
+            .map(|(is_owned, idx, key)| {
+                if *is_owned {
+                    &owned[*idx]
+                } else {
+                    &self.resident[key].buffer
+                }
+            })
+            .collect();
+        let mut results = exe.execute_b(&arg_refs)?;
+        let buffer = results
+            .pop()
+            .and_then(|mut v| if v.is_empty() { None } else { Some(v.remove(0)) })
+            .ok_or_else(|| Error::Runtime(format!("{name}@{size}: empty result")))?;
+        self.stats.executions += 1;
+        let key = fresh_key();
+        self.resident
+            .insert(key, Resident { buffer, n_outputs, bytes: out_bytes });
+        Ok(key)
+    }
+
+    /// Download a resident result to host values.  (The *download* phase.)
+    pub fn download(&mut self, key: PayloadKey) -> Result<Vec<Value>> {
+        let r = self
+            .resident
+            .get(&key)
+            .ok_or_else(|| Error::Runtime(format!("payload {key} not resident")))?;
+        let lit = r.buffer.to_literal_sync()?;
+        self.stats.downloads += 1;
+        self.stats.bytes_down += r.bytes as u64;
+        let parts = if r.n_outputs == 1 {
+            vec![lit]
+        } else {
+            let mut l = lit;
+            l.decompose_tuple()?
+        };
+        parts
+            .iter()
+            .map(|l| HostTensor::from_literal(l).map(Value::Tensor))
+            .collect()
+    }
+
+    /// Whether a payload is still resident (DL scheduling asks this).
+    pub fn is_resident(&self, key: PayloadKey) -> bool {
+        self.resident.contains_key(&key)
+    }
+
+    /// Drop a resident payload (frees device memory).
+    pub fn evict(&mut self, key: PayloadKey) {
+        self.resident.remove(&key);
+    }
+
+    /// Drop everything resident (end of a stage instance).
+    pub fn evict_all(&mut self) {
+        self.resident.clear();
+    }
+
+    /// Number of resident payloads (tests / metrics).
+    pub fn resident_count(&self) -> usize {
+        self.resident.len()
+    }
+
+    /// Convenience: upload -> execute -> download in one go.
+    pub fn run(&mut self, name: &str, size: usize, inputs: &[Value]) -> Result<Vec<Value>> {
+        let refs: Vec<ExecInput<'_>> = inputs.iter().map(ExecInput::Host).collect();
+        let key = self.execute_resident(name, size, &refs)?;
+        let out = self.download(key)?;
+        self.evict(key);
+        Ok(out)
+    }
+}

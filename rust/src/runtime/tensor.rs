@@ -1,0 +1,191 @@
+//! Host-side tensors: the payloads that flow between pipeline operations.
+//!
+//! All artifact I/O is f32 (labels are exact small integers stored in f32 —
+//! see python/compile/model.py), so a single dense f32 tensor type plus a
+//! scalar wrapper covers every stream in the application.
+
+use crate::{Error, Result};
+use std::sync::Arc;
+
+/// Dense row-major f32 tensor.
+#[derive(Debug, Clone, PartialEq)]
+pub struct HostTensor {
+    shape: Vec<usize>,
+    data: Arc<Vec<f32>>,
+}
+
+impl HostTensor {
+    pub fn new(shape: Vec<usize>, data: Vec<f32>) -> Result<Self> {
+        let n: usize = shape.iter().product();
+        if n != data.len() {
+            return Err(Error::ImgProc(format!(
+                "shape {:?} implies {} elements, got {}",
+                shape,
+                n,
+                data.len()
+            )));
+        }
+        Ok(Self { shape, data: Arc::new(data) })
+    }
+
+    pub fn zeros(shape: Vec<usize>) -> Self {
+        let n = shape.iter().product();
+        Self { shape, data: Arc::new(vec![0.0; n]) }
+    }
+
+    pub fn scalar(v: f32) -> Self {
+        Self { shape: vec![], data: Arc::new(vec![v]) }
+    }
+
+    pub fn shape(&self) -> &[usize] {
+        &self.shape
+    }
+
+    pub fn len(&self) -> usize {
+        self.data.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.data.is_empty()
+    }
+
+    pub fn size_bytes(&self) -> usize {
+        self.data.len() * std::mem::size_of::<f32>()
+    }
+
+    pub fn data(&self) -> &[f32] {
+        &self.data
+    }
+
+    /// Mutable access; clones the buffer if it is shared (copy-on-write).
+    pub fn data_mut(&mut self) -> &mut Vec<f32> {
+        Arc::make_mut(&mut self.data)
+    }
+
+    pub fn at2(&self, y: usize, x: usize) -> f32 {
+        debug_assert_eq!(self.shape.len(), 2);
+        self.data[y * self.shape[1] + x]
+    }
+
+    /// Convert to an XLA literal (reshaped to this tensor's dims).
+    pub fn to_literal(&self) -> Result<xla::Literal> {
+        let lit = xla::Literal::vec1(&self.data);
+        if self.shape.is_empty() {
+            // rank-0: reshape to scalar
+            Ok(lit.reshape(&[])?)
+        } else {
+            let dims: Vec<i64> = self.shape.iter().map(|&d| d as i64).collect();
+            Ok(lit.reshape(&dims)?)
+        }
+    }
+
+    /// Build from an XLA literal (must be f32).
+    pub fn from_literal(lit: &xla::Literal) -> Result<Self> {
+        let shape = lit.array_shape()?;
+        let dims: Vec<usize> = shape.dims().iter().map(|&d| d as usize).collect();
+        let data = lit.to_vec::<f32>()?;
+        HostTensor::new(dims, data)
+    }
+
+    /// Max absolute difference against another tensor (shape-checked).
+    pub fn max_abs_diff(&self, other: &HostTensor) -> Result<f32> {
+        if self.shape != other.shape {
+            return Err(Error::ImgProc(format!(
+                "shape mismatch {:?} vs {:?}",
+                self.shape, other.shape
+            )));
+        }
+        Ok(self
+            .data
+            .iter()
+            .zip(other.data.iter())
+            .map(|(a, b)| (a - b).abs())
+            .fold(0.0, f32::max))
+    }
+}
+
+/// A value on a dataflow stream.
+#[derive(Debug, Clone, PartialEq)]
+pub enum Value {
+    Tensor(HostTensor),
+    Scalar(f32),
+}
+
+impl Value {
+    pub fn tensor(shape: Vec<usize>, data: Vec<f32>) -> Result<Value> {
+        Ok(Value::Tensor(HostTensor::new(shape, data)?))
+    }
+
+    pub fn as_tensor(&self) -> Result<&HostTensor> {
+        match self {
+            Value::Tensor(t) => Ok(t),
+            Value::Scalar(_) => Err(Error::Dataflow("expected tensor, got scalar".into())),
+        }
+    }
+
+    pub fn as_scalar(&self) -> Result<f32> {
+        match self {
+            Value::Scalar(s) => Ok(*s),
+            Value::Tensor(t) if t.len() == 1 => Ok(t.data()[0]),
+            _ => Err(Error::Dataflow("expected scalar, got tensor".into())),
+        }
+    }
+
+    /// Bytes moved when this value crosses the host/device boundary.
+    pub fn size_bytes(&self) -> usize {
+        match self {
+            Value::Tensor(t) => t.size_bytes(),
+            Value::Scalar(_) => 4,
+        }
+    }
+
+    pub fn to_literal(&self) -> Result<xla::Literal> {
+        match self {
+            Value::Tensor(t) => t.to_literal(),
+            Value::Scalar(s) => Ok(xla::Literal::scalar(*s)),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn shape_checked() {
+        assert!(HostTensor::new(vec![2, 3], vec![0.0; 6]).is_ok());
+        assert!(HostTensor::new(vec![2, 3], vec![0.0; 5]).is_err());
+    }
+
+    #[test]
+    fn cow_semantics() {
+        let a = HostTensor::new(vec![2], vec![1.0, 2.0]).unwrap();
+        let mut b = a.clone();
+        b.data_mut()[0] = 9.0;
+        assert_eq!(a.data()[0], 1.0);
+        assert_eq!(b.data()[0], 9.0);
+    }
+
+    #[test]
+    fn at2_indexing() {
+        let t = HostTensor::new(vec![2, 3], (0..6).map(|v| v as f32).collect()).unwrap();
+        assert_eq!(t.at2(1, 2), 5.0);
+        assert_eq!(t.at2(0, 0), 0.0);
+    }
+
+    #[test]
+    fn max_abs_diff_works() {
+        let a = HostTensor::new(vec![3], vec![1.0, 2.0, 3.0]).unwrap();
+        let b = HostTensor::new(vec![3], vec![1.0, 2.5, 2.0]).unwrap();
+        assert_eq!(a.max_abs_diff(&b).unwrap(), 1.0);
+        let c = HostTensor::new(vec![2], vec![0.0; 2]).unwrap();
+        assert!(a.max_abs_diff(&c).is_err());
+    }
+
+    #[test]
+    fn value_scalar_coercion() {
+        let v = Value::Tensor(HostTensor::scalar(4.0));
+        assert_eq!(v.as_scalar().unwrap(), 4.0);
+        assert_eq!(Value::Scalar(2.0).size_bytes(), 4);
+    }
+}

@@ -1,0 +1,441 @@
+//! Experiment drivers: one function per paper table/figure.
+//!
+//! Each returns structured rows so the `cargo bench` targets (and the
+//! cluster_sim example) can print the same series the paper reports.
+//! Configurations follow the paper's §V setups exactly: which
+//! optimizations are enabled grows section by section (Fig. 8 has no
+//! DL/prefetch; Fig. 9 adds PATS; Fig. 11 adds DL then prefetch; ...).
+
+use super::{simulate, SimParams, SimResult, SimWorkflow};
+use crate::config::{Placement, Policy};
+
+/// Baseline: 1 CPU core, the reference for all speedup numbers.
+pub fn single_core_makespan(n_tiles: usize) -> f64 {
+    let p = SimParams {
+        cpus_per_node: 1,
+        gpus_per_node: 0,
+        data_locality: false,
+        prefetch: false,
+        n_tiles,
+        ..Default::default()
+    };
+    simulate(&p).makespan
+}
+
+// ---------------------------------------------------------------------------
+// Fig. 8 — multi-GPU end-to-end speedup, OS vs Closest placement
+// ---------------------------------------------------------------------------
+
+#[derive(Debug, Clone)]
+pub struct Fig8Row {
+    pub gpus: usize,
+    pub placement: Placement,
+    pub speedup_vs_1core: f64,
+}
+
+pub fn fig8(n_tiles: usize) -> Vec<Fig8Row> {
+    let base = single_core_makespan(n_tiles);
+    let mut rows = Vec::new();
+    for gpus in 1..=3 {
+        for placement in [Placement::Os, Placement::Closest] {
+            let p = SimParams {
+                cpus_per_node: 0,
+                gpus_per_node: gpus,
+                policy: Policy::Fcfs,
+                data_locality: false,
+                prefetch: false,
+                placement,
+                n_tiles,
+                ..Default::default()
+            };
+            let r = simulate(&p);
+            rows.push(Fig8Row { gpus, placement, speedup_vs_1core: base / r.makespan });
+        }
+    }
+    rows
+}
+
+// ---------------------------------------------------------------------------
+// Fig. 9 — CPU/GPU coordination: configs x {policy} x {granularity}
+// ---------------------------------------------------------------------------
+
+#[derive(Debug, Clone)]
+pub struct Fig9Row {
+    pub label: String,
+    pub makespan: f64,
+    pub speedup_vs_1core: f64,
+    /// the run (for Fig. 10 profile extraction)
+    pub result: SimResult,
+}
+
+fn run_cfg(
+    label: &str,
+    cpus: usize,
+    gpus: usize,
+    policy: Policy,
+    monolithic: bool,
+    dl: bool,
+    prefetch: bool,
+    n_tiles: usize,
+) -> Fig9Row {
+    let p = SimParams {
+        workflow: if monolithic { SimWorkflow::monolithic() } else { SimWorkflow::pipelined() },
+        cpus_per_node: cpus,
+        gpus_per_node: gpus,
+        policy,
+        data_locality: dl,
+        prefetch,
+        n_tiles,
+        ..Default::default()
+    };
+    let r = simulate(&p);
+    Fig9Row {
+        label: label.to_string(),
+        makespan: r.makespan,
+        speedup_vs_1core: 0.0, // filled by caller
+        result: r,
+    }
+}
+
+pub fn fig9(n_tiles: usize) -> Vec<Fig9Row> {
+    let base = single_core_makespan(n_tiles);
+    let mut rows = vec![
+        run_cfg("12 CPU cores", 12, 0, Policy::Fcfs, false, false, false, n_tiles),
+        run_cfg("3 GPUs", 0, 3, Policy::Fcfs, false, false, false, n_tiles),
+        run_cfg("3GPU+9CPU FCFS non-pipelined", 9, 3, Policy::Fcfs, true, false, false, n_tiles),
+        run_cfg("3GPU+9CPU PATS non-pipelined", 9, 3, Policy::Pats, true, false, false, n_tiles),
+        run_cfg("3GPU+9CPU FCFS pipelined", 9, 3, Policy::Fcfs, false, false, false, n_tiles),
+        run_cfg("3GPU+9CPU PATS pipelined", 9, 3, Policy::Pats, false, false, false, n_tiles),
+    ];
+    for r in &mut rows {
+        r.speedup_vs_1core = base / r.makespan;
+    }
+    rows
+}
+
+/// Fig. 10: the per-op CPU/GPU split of the PATS pipelined run.
+pub fn fig10(n_tiles: usize) -> Vec<(String, f64)> {
+    let row = run_cfg("pats", 9, 3, Policy::Pats, false, false, false, n_tiles);
+    let mut profile: Vec<(String, f64)> = row
+        .result
+        .profile
+        .iter()
+        .map(|(k, &(c, g))| (k.clone(), if c + g > 0 { g as f64 / (c + g) as f64 } else { 0.0 }))
+        .collect();
+    profile.sort_by(|a, b| a.0.cmp(&b.0));
+    profile
+}
+
+// ---------------------------------------------------------------------------
+// Fig. 11 — DL + prefetch impact on FCFS and PATS
+// ---------------------------------------------------------------------------
+
+pub fn fig11(n_tiles: usize) -> Vec<Fig9Row> {
+    let base = single_core_makespan(n_tiles);
+    let mut rows = vec![
+        run_cfg("FCFS non-pipelined", 9, 3, Policy::Fcfs, true, false, false, n_tiles),
+        run_cfg("FCFS pipelined", 9, 3, Policy::Fcfs, false, false, false, n_tiles),
+        run_cfg("FCFS pipelined +DL", 9, 3, Policy::Fcfs, false, true, false, n_tiles),
+        run_cfg("FCFS pipelined +DL +Prefetch", 9, 3, Policy::Fcfs, false, true, true, n_tiles),
+        run_cfg("PATS pipelined", 9, 3, Policy::Pats, false, false, false, n_tiles),
+        run_cfg("PATS pipelined +DL", 9, 3, Policy::Pats, false, true, false, n_tiles),
+        run_cfg("PATS pipelined +DL +Prefetch", 9, 3, Policy::Pats, false, true, true, n_tiles),
+    ];
+    for r in &mut rows {
+        r.speedup_vs_1core = base / r.makespan;
+    }
+    rows
+}
+
+// ---------------------------------------------------------------------------
+// Table II + Fig. 12 — demand-driven window size
+// ---------------------------------------------------------------------------
+
+#[derive(Debug, Clone)]
+pub struct WindowRow {
+    pub window: usize,
+    pub fcfs_secs: f64,
+    pub pats_secs: f64,
+    /// per-op GPU fraction under PATS (Fig. 12 series)
+    pub pats_gpu_fraction: Vec<(String, f64)>,
+}
+
+pub fn table2(windows: &[usize], n_tiles: usize) -> Vec<WindowRow> {
+    windows
+        .iter()
+        .map(|&window| {
+            let mk = |policy: Policy| {
+                let p = SimParams {
+                    policy,
+                    window,
+                    n_tiles,
+                    data_locality: false,
+                    prefetch: false,
+                    ..Default::default()
+                };
+                simulate(&p)
+            };
+            let fcfs = mk(Policy::Fcfs);
+            let pats = mk(Policy::Pats);
+            let mut fracs: Vec<(String, f64)> = pats
+                .profile
+                .iter()
+                .map(|(k, &(c, g))| {
+                    (k.clone(), if c + g > 0 { g as f64 / (c + g) as f64 } else { 0.0 })
+                })
+                .collect();
+            fracs.sort_by(|a, b| a.0.cmp(&b.0));
+            WindowRow {
+                window,
+                fcfs_secs: fcfs.makespan,
+                pats_secs: pats.makespan,
+                pats_gpu_fraction: fracs,
+            }
+        })
+        .collect()
+}
+
+// ---------------------------------------------------------------------------
+// Fig. 13 — sensitivity to speedup-estimation error
+// ---------------------------------------------------------------------------
+
+#[derive(Debug, Clone)]
+pub struct Fig13Row {
+    pub error_pct: u32,
+    pub pats_secs: f64,
+    /// same error applied with random (unconfounded) signs — extension
+    pub pats_random_secs: f64,
+}
+
+pub fn fig13(errors_pct: &[u32], n_tiles: usize) -> (Vec<Fig13Row>, f64) {
+    let fcfs = simulate(&SimParams {
+        policy: Policy::Fcfs,
+        n_tiles,
+        data_locality: false,
+        prefetch: false,
+        ..Default::default()
+    })
+    .makespan;
+    let rows = errors_pct
+        .iter()
+        .map(|&pct| {
+            let e = pct as f32 / 100.0;
+            let run = |wf: SimWorkflow| {
+                simulate(&SimParams {
+                    workflow: wf,
+                    policy: Policy::Pats,
+                    n_tiles,
+                    data_locality: false,
+                    prefetch: false,
+                    ..Default::default()
+                })
+                .makespan
+            };
+            Fig13Row {
+                error_pct: pct,
+                pats_secs: run(SimWorkflow::pipelined().with_estimation_error(e)),
+                pats_random_secs: run(SimWorkflow::pipelined().with_random_error(e, 17)),
+            }
+        })
+        .collect();
+    (rows, fcfs)
+}
+
+// ---------------------------------------------------------------------------
+// Fig. 14 — multi-node strong scaling
+// ---------------------------------------------------------------------------
+
+#[derive(Debug, Clone)]
+pub struct Fig14Row {
+    pub nodes: usize,
+    pub fcfs_secs: f64,
+    pub pats_all_secs: f64,
+    pub tiles_per_second: f64,
+    /// efficiency vs linear scaling from the smallest node count
+    pub efficiency: f64,
+    /// efficiency ignoring I/O (compute-only)
+    pub compute_efficiency: f64,
+}
+
+pub fn fig14(node_counts: &[usize], n_tiles: usize) -> Vec<Fig14Row> {
+    let mut rows: Vec<Fig14Row> = Vec::new();
+    let mut base: Option<(usize, f64, f64)> = None; // (nodes, pats_secs, compute_secs)
+    for &nodes in node_counts {
+        let mk = |policy: Policy, dl: bool, pf: bool| {
+            simulate(&SimParams {
+                policy,
+                data_locality: dl,
+                prefetch: pf,
+                n_nodes: nodes,
+                n_tiles,
+                ..Default::default()
+            })
+        };
+        let fcfs = mk(Policy::Fcfs, false, false);
+        let pats = mk(Policy::Pats, true, true);
+        // compute-only proxy: same run with free I/O
+        let compute_only = simulate(&SimParams {
+            policy: Policy::Pats,
+            data_locality: true,
+            prefetch: true,
+            n_nodes: nodes,
+            n_tiles,
+            tile_io_base: 0.0,
+            ..Default::default()
+        });
+        let (b_nodes, b_secs, b_csecs) =
+            *base.get_or_insert((nodes, pats.makespan, compute_only.makespan));
+        let eff = (b_secs * b_nodes as f64) / (pats.makespan * nodes as f64);
+        let ceff = (b_csecs * b_nodes as f64) / (compute_only.makespan * nodes as f64);
+        rows.push(Fig14Row {
+            nodes,
+            fcfs_secs: fcfs.makespan,
+            pats_all_secs: pats.makespan,
+            tiles_per_second: pats.tiles_per_second(),
+            efficiency: eff,
+            compute_efficiency: ceff,
+        });
+    }
+    rows
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const TILES: usize = 100;
+
+    #[test]
+    fn fig8_closest_wins_and_grows_with_gpus() {
+        let rows = fig8(TILES);
+        assert_eq!(rows.len(), 6);
+        let s = |g: usize, p: Placement| {
+            rows.iter().find(|r| r.gpus == g && r.placement == p).unwrap().speedup_vs_1core
+        };
+        for g in 1..=3 {
+            assert!(s(g, Placement::Closest) >= s(g, Placement::Os), "gpu count {g}");
+        }
+        // multi-GPU scales
+        assert!(s(3, Placement::Closest) > 2.0 * s(1, Placement::Closest) * 0.8);
+        // 1-GPU end-to-end speedup lands in the paper's ballpark (~5.3x)
+        let s1 = s(1, Placement::Closest);
+        assert!((3.0..8.0).contains(&s1), "1-GPU speedup {s1}");
+    }
+
+    #[test]
+    fn fig9_shape_holds() {
+        let rows = fig9(TILES);
+        let get = |label: &str| {
+            rows.iter().find(|r| r.label == label).unwrap_or_else(|| panic!("{label}"))
+        };
+        // 12-core CPU speedup is sub-linear (paper: ~9)
+        let cpu12 = get("12 CPU cores").speedup_vs_1core;
+        assert!((7.0..11.0).contains(&cpu12), "12-core speedup {cpu12}");
+        // PATS pipelined is the best config and beats FCFS pipelined by
+        // roughly the paper's 1.33x
+        let pats = get("3GPU+9CPU PATS pipelined").makespan;
+        let fcfs = get("3GPU+9CPU FCFS pipelined").makespan;
+        let ratio = fcfs / pats;
+        assert!((1.1..1.7).contains(&ratio), "PATS/FCFS ratio {ratio:.2}");
+        // non-pipelined PATS ~ FCFS (variability not exposed)
+        let np_ratio = get("3GPU+9CPU FCFS non-pipelined").makespan
+            / get("3GPU+9CPU PATS non-pipelined").makespan;
+        assert!((0.92..1.08).contains(&np_ratio), "non-pipelined ratio {np_ratio:.2}");
+    }
+
+    #[test]
+    fn fig10_low_speedup_ops_stay_on_cpu() {
+        let profile = fig10(TILES);
+        let frac = |name: &str| profile.iter().find(|(n, _)| n == name).unwrap().1;
+        assert!(frac("feature_graph") > 0.75, "feature_graph {}", frac("feature_graph"));
+        assert!(frac("morph_open") < 0.5, "morph_open {}", frac("morph_open"));
+        assert!(frac("hema_prep") == 0.0);
+    }
+
+    #[test]
+    fn fig11_dl_and_prefetch_shapes() {
+        let rows = fig11(TILES);
+        let get = |label: &str| rows.iter().find(|r| r.label == label).unwrap().makespan;
+        // DL improves both policies (paper: 1.1x FCFS, 1.04x PATS)
+        let fcfs_gain = get("FCFS pipelined") / get("FCFS pipelined +DL");
+        let pats_gain = get("PATS pipelined") / get("PATS pipelined +DL");
+        assert!(fcfs_gain >= 1.01, "DL should help FCFS: {fcfs_gain:.3}");
+        assert!(pats_gain >= 1.01, "DL should help PATS: {pats_gain:.3}");
+        // paper's headline for this figure: FCFS pipelined + DL beats the
+        // non-pipelined version by >= 1.1x
+        let vs_np = get("FCFS non-pipelined") / get("FCFS pipelined +DL");
+        assert!(vs_np >= 1.1, "pipelined+DL vs non-pipelined: {vs_np:.3}");
+        // PATS dominates FCFS at every optimization level
+        for (a, b) in [
+            ("PATS pipelined", "FCFS pipelined"),
+            ("PATS pipelined +DL", "FCFS pipelined +DL"),
+        ] {
+            assert!(get(a) <= get(b) * 1.02, "{a} should beat {b}");
+        }
+        // prefetch is a small effect either way (paper: 1.03x for PATS+DL,
+        // nil for FCFS+DL; magnitudes diverge here — see EXPERIMENTS.md)
+        let pats_pf = get("PATS pipelined +DL") / get("PATS pipelined +DL +Prefetch");
+        assert!((0.9..1.15).contains(&pats_pf), "prefetch effect out of band: {pats_pf:.3}");
+    }
+
+    #[test]
+    fn table2_fcfs_flat_pats_window_knee() {
+        // 300 tiles damps tail noise.  Paper: FCFS flat 12..19; PATS poor at
+        // 12 improving to ~15.  Our WRM retains scheduling choice at window
+        // = #devices, so PATS's knee sits *below* 12 (divergence documented
+        // in EXPERIMENTS.md §TableII); the starved regime shows at window 4.
+        let rows = table2(&[4, 12, 19], 300);
+        let (w4, w12, w19) = (&rows[0], &rows[1], &rows[2]);
+        // FCFS flat across the paper's sweep range
+        assert!(
+            (w12.fcfs_secs / w19.fcfs_secs - 1.0).abs() < 0.05,
+            "FCFS window-sensitive: {:.1} vs {:.1}",
+            w12.fcfs_secs,
+            w19.fcfs_secs
+        );
+        // a too-small window starves devices and erases PATS's advantage
+        assert!(
+            w4.pats_secs > w12.pats_secs * 1.05,
+            "window 4 should starve PATS: {:.1} vs {:.1}",
+            w4.pats_secs,
+            w12.pats_secs
+        );
+        // in the choice-rich regime PATS beats FCFS by the Fig. 9 margin
+        for r in [w12, w19] {
+            assert!(
+                r.fcfs_secs / r.pats_secs > 1.2,
+                "window {}: PATS {:.1} vs FCFS {:.1}",
+                r.window,
+                r.pats_secs,
+                r.fcfs_secs
+            );
+        }
+    }
+
+    #[test]
+    fn fig13_confounded_error_degrades_bounded() {
+        let (rows, fcfs) = fig13(&[0, 60, 100], 300);
+        let e0 = rows[0].pats_secs;
+        let e60 = rows[1].pats_secs;
+        let e100 = rows[2].pats_secs;
+        assert!(e60 / e0 < 1.35, "60% error degraded {:.2}x", e60 / e0);
+        assert!(e60 / e0 >= 1.0, "error can't speed things up meaningfully");
+        // even full inversion stays within ~1.35x of FCFS (paper saw ~10%
+        // worse; our profile has stronger speedup heterogeneity, so the
+        // adversarial inversion costs more — see EXPERIMENTS.md §Fig13)
+        assert!(e100 / fcfs < 1.35, "100% error vs FCFS: {:.2}", e100 / fcfs);
+        // random error is no worse than the adversarial confounded one
+        // (PATS only needs relative order — ablation beyond the paper)
+        assert!(rows[1].pats_random_secs <= e60 * 1.05);
+    }
+
+    #[test]
+    fn fig14_efficiency_declines_and_compute_stays_high() {
+        let rows = fig14(&[4, 32], 4000);
+        assert!((rows[0].efficiency - 1.0).abs() < 1e-9);
+        assert!(rows[1].efficiency < 1.0);
+        // compute-only efficiency stays higher than end-to-end (I/O is the
+        // bottleneck), modulo tail noise
+        assert!(rows[1].compute_efficiency >= rows[1].efficiency - 0.03);
+    }
+}

@@ -1,0 +1,156 @@
+//! Distributed mode: the demand-driven window protocol over real sockets —
+//! one Manager serving multiple Workers, each running the full WRM with
+//! CPU + PJRT device threads.
+
+use htap::app::{build_workflow, stage_bindings, AppParams};
+use htap::config::RunConfig;
+use htap::coordinator::{worker::run_worker, Manager, WorkSource};
+use htap::data::{SynthConfig, TileStore};
+use htap::metrics::MetricsHub;
+use htap::net::{ManagerServer, RemoteManager};
+use htap::runtime::ArtifactManifest;
+use std::sync::Arc;
+
+const TILE: usize = 64;
+
+#[test]
+fn two_tcp_workers_complete_the_workflow() {
+    let n_tiles = 6;
+    let params = AppParams::for_tile_size(TILE);
+    let workflow = Arc::new(build_workflow(&params, false));
+    let store = Arc::new(TileStore::new(SynthConfig::for_tile_size(TILE, 31), n_tiles));
+    let manager = Manager::new(workflow.clone(), store.loader(), n_tiles).unwrap();
+    let server = ManagerServer::bind("127.0.0.1:0", manager.clone()).unwrap();
+    let addr = server.local_addr();
+    let srv = std::thread::spawn(move || server.serve(2));
+
+    let mut workers = Vec::new();
+    for i in 0..2 {
+        let addr = addr.clone();
+        let workflow = workflow.clone();
+        workers.push(std::thread::spawn(move || {
+            let source = Arc::new(RemoteManager::connect(&addr).unwrap());
+            let metrics = Arc::new(MetricsHub::new());
+            let cfg = RunConfig {
+                tile_size: TILE,
+                n_tiles,
+                cpu_workers: 1,
+                gpu_workers: i, // worker 0 cpu-only, worker 1 hybrid
+                window: 2,
+                ..Default::default()
+            };
+            run_worker(
+                source,
+                workflow,
+                cfg,
+                Arc::new(ArtifactManifest::discover().unwrap()),
+                metrics.clone(),
+                stage_bindings(),
+            )
+            .unwrap();
+            metrics.report().total_executed()
+        }));
+    }
+    let executed: Vec<u64> = workers.into_iter().map(|w| w.join().unwrap()).collect();
+    srv.join().unwrap().unwrap();
+
+    assert!(manager.error().is_none(), "{:?}", manager.error());
+    let (done, total) = manager.progress();
+    assert_eq!(done, total);
+    assert_eq!(total, 2 * n_tiles);
+    // all fine-grain ops ran somewhere: 9 seg + 3 feat ops per tile
+    assert_eq!(executed.iter().sum::<u64>(), (12 * n_tiles) as u64);
+    // both workers actually participated (demand-driven balance)
+    assert!(executed.iter().all(|&e| e > 0), "a worker starved: {executed:?}");
+}
+
+#[test]
+fn tensor_payloads_survive_the_wire() {
+    // large tile tensors must round-trip through the binary framing
+    let n_tiles = 2;
+    let params = AppParams::for_tile_size(TILE);
+    let workflow = Arc::new(build_workflow(&params, false));
+    let store = Arc::new(TileStore::new(SynthConfig::for_tile_size(TILE, 77), n_tiles));
+    let manager = Manager::new(workflow.clone(), store.clone().loader(), n_tiles).unwrap();
+    let server = ManagerServer::bind("127.0.0.1:0", manager.clone()).unwrap();
+    let addr = server.local_addr();
+    let srv = std::thread::spawn(move || server.serve(1));
+
+    let remote = RemoteManager::connect(&addr).unwrap();
+    let mut seen_tiles = 0;
+    loop {
+        let batch = remote.request(4);
+        if batch.is_empty() {
+            break;
+        }
+        for a in batch {
+            if a.stage_idx == 0 {
+                // verify the tile arrived intact
+                let got = a.inputs[0].as_tensor().unwrap();
+                let want = store.tile(a.chunk).to_tensor();
+                assert_eq!(got, &want, "tile {} corrupted in transit", a.chunk);
+                seen_tiles += 1;
+            }
+            let outs =
+                htap::dataflow::run_stage_serial(&workflow.stages[a.stage_idx], &a.inputs)
+                    .unwrap();
+            remote.complete(a.instance_id, outs);
+        }
+    }
+    drop(remote);
+    srv.join().unwrap().unwrap();
+    assert_eq!(seen_tiles, n_tiles);
+    assert!(manager.error().is_none());
+}
+
+#[test]
+fn dead_worker_leases_are_reissued() {
+    // A worker takes assignments, then vanishes without completing them; a
+    // healthy worker must still finish the whole workflow.
+    let n_tiles = 5;
+    let params = AppParams::for_tile_size(TILE);
+    let workflow = Arc::new(build_workflow(&params, false));
+    let store = Arc::new(TileStore::new(SynthConfig::for_tile_size(TILE, 13), n_tiles));
+    let manager = Manager::new(workflow.clone(), store.loader(), n_tiles).unwrap();
+    let server = ManagerServer::bind("127.0.0.1:0", manager.clone()).unwrap();
+    let addr = server.local_addr();
+    let srv = std::thread::spawn(move || server.serve(2));
+
+    // the dying worker: grab 3 leases on its work channel, open the
+    // completion channel too (so the server's accept count lines up), die.
+    {
+        let victim = RemoteManager::connect(&addr).unwrap();
+        let batch = victim.request(3);
+        assert!(!batch.is_empty());
+        // drops both sockets here without completing anything
+    }
+
+    // a healthy worker finishes everything, including the re-issued leases
+    let workflow2 = workflow.clone();
+    let addr2 = addr.clone();
+    let healthy = std::thread::spawn(move || {
+        let source = Arc::new(RemoteManager::connect(&addr2).unwrap());
+        run_worker(
+            source,
+            workflow2,
+            RunConfig {
+                tile_size: TILE,
+                n_tiles,
+                cpu_workers: 2,
+                gpu_workers: 0,
+                window: 3,
+                ..Default::default()
+            },
+            Arc::new(ArtifactManifest::discover().unwrap()),
+            Arc::new(MetricsHub::new()),
+            stage_bindings(),
+        )
+        .unwrap();
+    });
+    healthy.join().unwrap();
+    srv.join().unwrap().unwrap();
+    assert!(manager.error().is_none(), "{:?}", manager.error());
+    let (done, total) = manager.progress();
+    assert_eq!(done, total);
+    assert_eq!(total, 2 * n_tiles);
+}

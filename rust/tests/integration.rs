@@ -1,0 +1,219 @@
+//! Function-variant equivalence: the rust CPU implementations vs the AOT
+//! JAX/Pallas artifacts, per pipeline operation, on synthetic tiles.
+//!
+//! This is the cross-layer correctness contract: the WRM may execute either
+//! member of a variant, so the two must agree (exactly for masks and maps;
+//! structurally for labelling ops, whose algorithms legitimately differ —
+//! see DESIGN.md).
+
+use htap::app::ops;
+use htap::data::{SynthConfig, TileSynthesizer};
+use htap::imgproc::label::canonical_labels;
+use htap::imgproc::Gray;
+use htap::runtime::pjrt::DeviceExecutor;
+use htap::runtime::{ArtifactManifest, Value};
+
+const TILE: usize = 64;
+
+fn executor() -> DeviceExecutor {
+    DeviceExecutor::new(ArtifactManifest::discover().expect("make artifacts")).unwrap()
+}
+
+fn tile(seed: u64) -> Value {
+    let synth = TileSynthesizer::new(SynthConfig::for_tile_size(TILE, 21));
+    Value::Tensor(synth.tissue_tile(seed).to_tensor())
+}
+
+fn gray(v: &Value) -> Gray {
+    Gray::from_tensor(v.as_tensor().unwrap()).unwrap()
+}
+
+fn max_diff(a: &Value, b: &Value) -> f32 {
+    a.as_tensor().unwrap().max_abs_diff(b.as_tensor().unwrap()).unwrap()
+}
+
+#[test]
+fn hema_prep_variants_agree() {
+    let mut ex = executor();
+    for seed in 0..3 {
+        let rgb = tile(seed);
+        let cpu = ops::hema_prep(&[rgb.clone()]).unwrap();
+        let gpu = ex.run("hema_prep", TILE, &[rgb]).unwrap();
+        assert!(max_diff(&cpu[0], &gpu[0]) < 0.05, "seed {seed}");
+    }
+}
+
+#[test]
+fn morph_open_variants_agree() {
+    let mut ex = executor();
+    let rgb = tile(1);
+    let hema = ops::hema_prep(&[rgb]).unwrap().remove(0);
+    let cpu = ops::morph_open(&[hema.clone()]).unwrap();
+    let gpu = ex.run("morph_open", TILE, &[hema]).unwrap();
+    assert!(max_diff(&cpu[0], &gpu[0]) < 0.05);
+}
+
+#[test]
+fn recon_to_nuclei_variants_agree() {
+    let mut ex = executor();
+    let rgb = tile(2);
+    let hema = ops::hema_prep(&[rgb]).unwrap().remove(0);
+    let opened = ops::morph_open(&[hema]).unwrap().remove(0);
+    let args = [opened, Value::Scalar(20.0), Value::Scalar(5.0)];
+    let cpu = ops::recon_to_nuclei(&args).unwrap();
+    let gpu = ex.run("recon_to_nuclei", TILE, &args).unwrap();
+    // binary masks: tolerate a tiny fringe of pixels where the dome height
+    // sits within float rounding of the threshold
+    let a = gray(&cpu[0]);
+    let b = gray(&gpu[0]);
+    let differing = a.px.iter().zip(&b.px).filter(|(x, y)| x != y).count();
+    assert!(differing <= (TILE * TILE) / 200, "masks differ in {differing} px");
+}
+
+#[test]
+fn fill_holes_and_area_threshold_variants_agree() {
+    let mut ex = executor();
+    let rgb = tile(3);
+    let hema = ops::hema_prep(&[rgb]).unwrap().remove(0);
+    let opened = ops::morph_open(&[hema]).unwrap().remove(0);
+    let cand = ops::recon_to_nuclei(&[opened, Value::Scalar(20.0), Value::Scalar(5.0)])
+        .unwrap()
+        .remove(0);
+    let cpu_fill = ops::fill_holes(&[cand.clone()]).unwrap();
+    let gpu_fill = ex.run("fill_holes", TILE, &[cand]).unwrap();
+    assert_eq!(max_diff(&cpu_fill[0], &gpu_fill[0]), 0.0, "fill_holes is exact");
+
+    let args = [cpu_fill[0].clone(), Value::Scalar(5.0), Value::Scalar(500.0)];
+    let cpu_area = ops::area_threshold(&args).unwrap();
+    let gpu_area = ex.run("area_threshold", TILE, &args).unwrap();
+    assert_eq!(max_diff(&cpu_area[0], &gpu_area[0]), 0.0, "area_threshold is exact");
+}
+
+#[test]
+fn bwlabel_variants_same_components() {
+    // CPU: compact union-find ids; GPU: max-flat-index propagation.
+    // Canonical forms must match exactly.
+    let mut ex = executor();
+    let rgb = tile(4);
+    let hema = ops::hema_prep(&[rgb]).unwrap().remove(0);
+    let cand = ops::recon_to_nuclei(&[hema, Value::Scalar(20.0), Value::Scalar(5.0)])
+        .unwrap()
+        .remove(0);
+    let cpu = ops::bwlabel(&[cand.clone()]).unwrap();
+    let gpu = ex.run("bwlabel", TILE, &[cand]).unwrap();
+    let ca = canonical_labels(&gray(&cpu[0]));
+    let cb = canonical_labels(&gray(&gpu[0]));
+    assert_eq!(ca.px, cb.px, "same connected components");
+}
+
+#[test]
+fn distance_variants_agree() {
+    let mut ex = executor();
+    let rgb = tile(5);
+    let hema = ops::hema_prep(&[rgb]).unwrap().remove(0);
+    let cand = ops::recon_to_nuclei(&[hema, Value::Scalar(20.0), Value::Scalar(5.0)])
+        .unwrap()
+        .remove(0);
+    let cpu = ops::distance_op(&[cand.clone()]).unwrap();
+    let gpu = ex.run("distance", TILE, &[cand]).unwrap();
+    assert_eq!(max_diff(&cpu[0], &gpu[0]), 0.0, "chessboard distance is exact");
+}
+
+#[test]
+fn morph_recon_variants_agree() {
+    let mut ex = executor();
+    let rgb = tile(6);
+    let mask = ops::hema_prep(&[rgb]).unwrap().remove(0);
+    let marker = {
+        let g = gray(&mask);
+        let px = g.px.iter().map(|v| (v - 30.0).max(0.0)).collect();
+        Value::Tensor(Gray::new(g.h, g.w, px).unwrap().to_tensor())
+    };
+    let cpu = ops::morph_recon(&[marker.clone(), mask.clone()]).unwrap();
+    let gpu = ex.run("morph_recon", TILE, &[marker, mask]).unwrap();
+    assert!(max_diff(&cpu[0], &gpu[0]) < 1e-3, "reconstruction agrees");
+}
+
+#[test]
+fn watershed_variants_same_region_count_and_coverage() {
+    // Priority-flood (CPU) vs synchronous flood (artifact): different
+    // algorithms like the paper's OpenCV/Körbes pair — compare structure.
+    let mut ex = executor();
+    let rgb = tile(7);
+    let hema = ops::hema_prep(&[rgb]).unwrap().remove(0);
+    let opened = ops::morph_open(&[hema]).unwrap().remove(0);
+    let cand = ops::recon_to_nuclei(&[opened, Value::Scalar(20.0), Value::Scalar(5.0)])
+        .unwrap()
+        .remove(0);
+    let filled = ops::fill_holes(&[cand]).unwrap().remove(0);
+    let kept = ops::area_threshold(&[filled, Value::Scalar(5.0), Value::Scalar(500.0)])
+        .unwrap()
+        .remove(0);
+    let pw_cpu = ops::pre_watershed(&[kept.clone()]).unwrap();
+    let cpu = ops::watershed_op(&[pw_cpu[0].clone(), pw_cpu[1].clone(), kept.clone()]).unwrap();
+
+    let k = ex
+        .execute_resident("pre_watershed", TILE, &[htap::runtime::pjrt::ExecInput::Host(&kept)])
+        .unwrap();
+    let pw_gpu = ex.download(k).unwrap();
+    let gpu = ex
+        .run("watershed", TILE, &[pw_gpu[0].clone(), pw_gpu[1].clone(), kept.clone()])
+        .unwrap();
+
+    let a = gray(&cpu[0]);
+    let b = gray(&gpu[0]);
+    // identical support
+    let support_mismatch =
+        a.px.iter().zip(&b.px).filter(|(x, y)| (**x > 0.0) != (**y > 0.0)).count();
+    assert_eq!(support_mismatch, 0, "watershed coverage differs");
+    // same number of regions
+    let count = |g: &Gray| {
+        let mut ids: Vec<u32> = g.px.iter().filter(|&&v| v > 0.0).map(|&v| v as u32).collect();
+        ids.sort_unstable();
+        ids.dedup();
+        ids.len()
+    };
+    assert_eq!(count(&a), count(&b), "watershed region counts differ");
+}
+
+#[test]
+fn feature_graph_variants_agree() {
+    let mut ex = executor();
+    let rgb = tile(8);
+    let args = [rgb, Value::Scalar(30.0)];
+    let cpu = ops::feature_graph(&args).unwrap();
+    let gpu = ex.run("feature_graph", TILE, &args).unwrap();
+    assert!(max_diff(&cpu[0], &gpu[0]) < 0.05, "hema image");
+    assert!(max_diff(&cpu[1], &gpu[1]) < 0.5, "gradient magnitude");
+    // stats sum over 4096 px: compare with fp accumulation tolerance
+    let a = cpu[3].as_tensor().unwrap();
+    let b = gpu[3].as_tensor().unwrap();
+    for (i, (x, y)) in a.data().iter().zip(b.data()).enumerate() {
+        let tol = (x.abs() * 1e-3).max(2.0);
+        assert!((x - y).abs() <= tol, "stats[{i}]: {x} vs {y}");
+    }
+}
+
+#[test]
+fn fused_segment_tile_matches_pipelined_chain() {
+    // the monolithic artifact equals composing the per-op artifacts
+    let mut ex = executor();
+    let rgb = tile(9);
+    let (h, t, lo, hi) = (
+        Value::Scalar(20.0),
+        Value::Scalar(5.0),
+        Value::Scalar(5.0),
+        Value::Scalar(500.0),
+    );
+    let fused = ex
+        .run("segment_tile", TILE, &[rgb.clone(), h.clone(), t.clone(), lo.clone(), hi.clone()])
+        .unwrap();
+    let hema = ex.run("hema_prep", TILE, &[rgb]).unwrap().remove(0);
+    let opened = ex.run("morph_open", TILE, &[hema]).unwrap().remove(0);
+    let cand = ex.run("recon_to_nuclei", TILE, &[opened, h, t]).unwrap().remove(0);
+    let filled = ex.run("fill_holes", TILE, &[cand]).unwrap().remove(0);
+    let kept = ex.run("area_threshold", TILE, &[filled, lo, hi]).unwrap().remove(0);
+    let pw = ex.run("pre_watershed", TILE, &[kept.clone()]).unwrap();
+    let labels = ex.run("watershed", TILE, &[pw[0].clone(), pw[1].clone(), kept]).unwrap();
+    assert_eq!(max_diff(&fused[0], &labels[0]), 0.0);
+}

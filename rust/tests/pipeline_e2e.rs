@@ -1,0 +1,206 @@
+//! End-to-end coordinator tests: Manager + Worker + WRM + device threads
+//! executing the real WSI workflow on synthetic tiles, with the accelerator
+//! variants running through PJRT.
+//!
+//! These are the paper's execution modes in miniature: pipelined vs
+//! monolithic, FCFS vs PATS, CPU-only vs hybrid, with and without DL.
+
+use htap::app::{build_monolithic, build_workflow, stage_bindings, AppParams};
+use htap::config::{Granularity, Placement, Policy, RunConfig};
+use htap::coordinator::{run_local, Manager};
+use htap::data::{SynthConfig, TileStore};
+use htap::dataflow::run_stage_serial;
+use htap::imgproc::label::canonical_labels;
+use htap::imgproc::Gray;
+use htap::runtime::Value;
+use std::sync::Arc;
+
+const TILE: usize = 64;
+const N_TILES: usize = 6;
+
+fn cfg(policy: Policy, cpu: usize, gpu: usize) -> RunConfig {
+    RunConfig {
+        tile_size: TILE,
+        n_tiles: N_TILES,
+        cpu_workers: cpu,
+        gpu_workers: gpu,
+        policy,
+        placement: Placement::Closest,
+        granularity: Granularity::Pipelined,
+        window: 4,
+        data_locality: true,
+        prefetch: true,
+        seed: 7,
+    }
+}
+
+fn store() -> Arc<TileStore> {
+    Arc::new(TileStore::new(SynthConfig::for_tile_size(TILE, 99), N_TILES))
+}
+
+#[test]
+fn cpu_only_parallel_matches_serial_oracle() {
+    let params = AppParams::for_tile_size(TILE);
+    let wf = Arc::new(build_workflow(&params, false));
+    let outcome = run_local(
+        wf,
+        store().loader(),
+        N_TILES,
+        cfg(Policy::Fcfs, 3, 0),
+        stage_bindings(),
+    )
+    .unwrap();
+    // all instances executed: 2 stages x N_TILES
+    let (done, total) = outcome.manager.progress();
+    assert_eq!(done, total);
+    assert_eq!(total, 2 * N_TILES);
+    // profile shows every op ran N_TILES times, all on CPU
+    let report = outcome.metrics;
+    for op in ["recon_to_nuclei", "watershed", "feature_graph", "haralick"] {
+        let p = report.op(op).unwrap_or_else(|| panic!("no metrics for {op}"));
+        assert_eq!(p.cpu_count + p.gpu_count, N_TILES as u64, "{op}");
+        assert_eq!(p.gpu_count, 0, "{op} must stay on CPU in cpu-only mode");
+    }
+}
+
+#[test]
+fn hybrid_pats_execution_completes_and_uses_gpu() {
+    let params = AppParams::for_tile_size(TILE);
+    let wf = Arc::new(build_workflow(&params, false));
+    let outcome = run_local(
+        wf,
+        store().loader(),
+        N_TILES,
+        cfg(Policy::Pats, 2, 1),
+        stage_bindings(),
+    )
+    .unwrap();
+    let report = outcome.metrics;
+    let total: u64 = report.ops.iter().map(|o| o.cpu_count + o.gpu_count).sum();
+    assert_eq!(total, (9 + 3) * N_TILES as u64);
+    // the GPU must have done something, and feature_graph (highest speedup)
+    // should be GPU-heavy under PATS
+    let gpu_total: u64 = report.ops.iter().map(|o| o.gpu_count).sum();
+    assert!(gpu_total > 0, "accelerator never used");
+    let fg = report.op("feature_graph").unwrap();
+    let mo = report.op("morph_open").unwrap();
+    assert!(
+        fg.gpu_fraction() >= mo.gpu_fraction(),
+        "PATS should bias high-speedup ops to GPU: fg={} mo={}",
+        fg.gpu_fraction(),
+        mo.gpu_fraction()
+    );
+    // CPU-only ops never ran on the accelerator
+    assert_eq!(report.op("object_features").unwrap().gpu_count, 0);
+}
+
+#[test]
+fn classification_reduce_stage_assigns_every_tile() {
+    let params = AppParams::for_tile_size(TILE);
+    let wf = Arc::new(build_workflow(&params, true));
+    let outcome = run_local(
+        wf,
+        store().loader(),
+        N_TILES,
+        cfg(Policy::Pats, 2, 1),
+        stage_bindings(),
+    )
+    .unwrap();
+    let cls = outcome.manager.reduce_outputs(2).expect("classification output");
+    let assign = cls[0].as_tensor().unwrap();
+    assert_eq!(assign.shape(), &[N_TILES]);
+    assert!(assign.data().iter().all(|&a| a >= 0.0 && a < 3.0));
+}
+
+#[test]
+fn fcfs_and_pats_complete_without_errors() {
+    let params = AppParams::for_tile_size(TILE);
+    let store = store();
+    for policy in [Policy::Fcfs, Policy::Pats] {
+        let wf = Arc::new(build_workflow(&params, false));
+        let manager = Manager::new(wf.clone(), store.clone().loader(), 2).unwrap();
+        htap::coordinator::worker::run_worker(
+            manager.clone(),
+            wf,
+            cfg(policy, 2, 0),
+            Arc::new(htap::runtime::ArtifactManifest::discover().unwrap()),
+            Arc::new(htap::metrics::MetricsHub::new()),
+            stage_bindings(),
+        )
+        .unwrap();
+        assert!(manager.error().is_none());
+        let (done, total) = manager.progress();
+        assert_eq!(done, total);
+    }
+}
+
+#[test]
+fn monolithic_workflow_runs_hybrid() {
+    let params = AppParams::for_tile_size(TILE);
+    let wf = Arc::new(build_monolithic(&params, false));
+    let outcome = run_local(
+        wf,
+        store().loader(),
+        N_TILES,
+        RunConfig { granularity: Granularity::NonPipelined, ..cfg(Policy::Pats, 2, 1) },
+        stage_bindings(),
+    )
+    .unwrap();
+    let report = outcome.metrics;
+    // exactly two monolithic ops per tile
+    assert_eq!(report.total_executed(), 2 * N_TILES as u64);
+}
+
+#[test]
+fn pipelined_and_monolithic_segmentations_agree_serially() {
+    // canonical-label equivalence between the two granularities (CPU path)
+    let params = AppParams::for_tile_size(TILE);
+    let pipe = build_workflow(&params, false);
+    let mono = build_monolithic(&params, false);
+    let store = store();
+    for c in 0..2u64 {
+        let tile = Value::Tensor(store.tile(c).to_tensor());
+        let a = run_stage_serial(&pipe.stages[0], &[tile.clone()]).unwrap();
+        let b = run_stage_serial(&mono.stages[0], &[tile]).unwrap();
+        let la = canonical_labels(&Gray::from_tensor(a[0].as_tensor().unwrap()).unwrap());
+        let lb = canonical_labels(&Gray::from_tensor(b[0].as_tensor().unwrap()).unwrap());
+        assert_eq!(la.px, lb.px, "tile {c} segmentation differs");
+    }
+}
+
+#[test]
+fn window_one_still_completes() {
+    let params = AppParams::for_tile_size(TILE);
+    let wf = Arc::new(build_workflow(&params, false));
+    let mut c = cfg(Policy::Pats, 1, 1);
+    c.window = 1;
+    c.prefetch = false;
+    let outcome = run_local(wf, store().loader(), 3, c, stage_bindings()).unwrap();
+    let (done, total) = outcome.manager.progress();
+    assert_eq!(done, total);
+}
+
+#[test]
+fn data_locality_reduces_uploads() {
+    // With DL on, chained GPU ops reuse resident data: upload bytes for the
+    // whole run must be strictly lower than with DL off.
+    let params = AppParams::for_tile_size(TILE);
+    let mut with_dl = 0u64;
+    let mut without_dl = 0u64;
+    for (dl, acc) in [(true, &mut with_dl), (false, &mut without_dl)] {
+        let wf = Arc::new(build_workflow(&params, false));
+        let mut c = cfg(Policy::Pats, 0, 1); // GPU-only: forces chains
+        c.data_locality = dl;
+        let outcome = run_local(wf, store().loader(), 2, c, stage_bindings()).unwrap();
+        *acc = outcome
+            .metrics
+            .ops
+            .iter()
+            .map(|o| o.upload_bytes)
+            .sum::<u64>();
+    }
+    assert!(
+        with_dl < without_dl,
+        "DL should cut uploads: {with_dl} vs {without_dl}"
+    );
+}

@@ -1,0 +1,190 @@
+//! Integration: load real AOT artifacts through PJRT and sanity-check the
+//! numerics + the device-resident (DL) path.
+//!
+//! Requires `make artifacts` to have run (the Makefile `test` target
+//! guarantees this).
+
+use htap::runtime::pjrt::{DeviceExecutor, ExecInput};
+use htap::runtime::{ArtifactManifest, HostTensor, Value};
+
+fn executor() -> DeviceExecutor {
+    let manifest = ArtifactManifest::discover().expect("run `make artifacts` first");
+    DeviceExecutor::new(manifest).expect("PJRT CPU client")
+}
+
+fn blob_mask(s: usize) -> HostTensor {
+    // Two rectangular blobs, one containing a hole.
+    let mut px = vec![0.0f32; s * s];
+    for y in 4..14 {
+        for x in 4..14 {
+            px[y * s + x] = 1.0;
+        }
+    }
+    px[8 * s + 8] = 0.0; // hole
+    for y in 20..28 {
+        for x in 30..44 {
+            px[y * s + x] = 1.0;
+        }
+    }
+    HostTensor::new(vec![s, s], px).unwrap()
+}
+
+#[test]
+fn manifest_covers_all_pipeline_ops() {
+    let m = ArtifactManifest::discover().unwrap();
+    for op in [
+        "rbc_detect",
+        "morph_open",
+        "recon_to_nuclei",
+        "morph_recon",
+        "fill_holes",
+        "bwlabel",
+        "area_threshold",
+        "distance",
+        "pre_watershed",
+        "watershed",
+        "feature_graph",
+        "segment_tile",
+    ] {
+        assert!(m.has(op, 64), "missing artifact {op}@64");
+    }
+}
+
+#[test]
+fn fill_holes_fills_interior_hole() {
+    let mut ex = executor();
+    let mask = blob_mask(64);
+    let out = ex.run("fill_holes", 64, &[Value::Tensor(mask.clone())]).unwrap();
+    let filled = out[0].as_tensor().unwrap();
+    // the hole at (8, 8) must now be foreground
+    assert_eq!(filled.at2(8, 8), 1.0);
+    // background far away untouched
+    assert_eq!(filled.at2(0, 0), 0.0);
+    // extensivity: filled >= mask everywhere
+    for (a, b) in filled.data().iter().zip(mask.data()) {
+        assert!(a >= b);
+    }
+}
+
+#[test]
+fn bwlabel_finds_two_components() {
+    let mut ex = executor();
+    let mask = blob_mask(64);
+    let out = ex.run("bwlabel", 64, &[Value::Tensor(mask.clone())]).unwrap();
+    let labels = out[0].as_tensor().unwrap();
+    let mut ids: Vec<u32> = labels
+        .data()
+        .iter()
+        .filter(|&&v| v > 0.0)
+        .map(|&v| v as u32)
+        .collect();
+    ids.sort_unstable();
+    ids.dedup();
+    assert_eq!(ids.len(), 2, "expected 2 components");
+    // label support == mask support
+    for (l, m) in labels.data().iter().zip(mask.data()) {
+        assert_eq!(*l > 0.0, *m > 0.0);
+    }
+}
+
+#[test]
+fn distance_max_matches_blob_radius() {
+    let mut ex = executor();
+    let mask = blob_mask(64);
+    let out = ex.run("distance", 64, &[Value::Tensor(mask)]).unwrap();
+    let d = out[0].as_tensor().unwrap();
+    let max = d.data().iter().fold(0.0f32, |a, &b| a.max(b));
+    // 10x10 blob would have in-radius 5, but the hole at (8,8) caps the
+    // farthest-from-background pixel at chessboard distance 4.
+    assert_eq!(max, 4.0);
+}
+
+#[test]
+fn resident_chaining_avoids_transfers() {
+    // fill_holes -> bwlabel chained on-device: the intermediate mask must
+    // not cross the host boundary (paper §IV-C data-locality assignment).
+    let mut ex = executor();
+    let mask = blob_mask(64);
+    let v = Value::Tensor(mask);
+
+    let k1 = ex.execute_resident("fill_holes", 64, &[ExecInput::Host(&v)]).unwrap();
+    let up_before = ex.stats.uploads;
+    let down_before = ex.stats.downloads;
+    let k2 = ex.execute_resident("bwlabel", 64, &[ExecInput::Resident(k1)]).unwrap();
+    assert_eq!(ex.stats.uploads, up_before, "resident input must not re-upload");
+    assert_eq!(ex.stats.downloads, down_before, "chaining must not download");
+    assert_eq!(ex.stats.cache_hits, 1);
+
+    let labels = ex.download(k2).unwrap();
+    let labels = labels[0].as_tensor().unwrap().clone();
+    assert!(labels.data().iter().any(|&v| v > 0.0));
+    ex.evict(k1);
+    ex.evict(k2);
+    assert_eq!(ex.resident_count(), 0);
+
+    // chained result equals unchained result
+    let mut ex2 = executor();
+    let out = ex2.run("fill_holes", 64, &[v.clone()]).unwrap();
+    let out = ex2.run("bwlabel", 64, &[out[0].clone()]).unwrap();
+    assert_eq!(out[0].as_tensor().unwrap().data(), labels.data());
+}
+
+#[test]
+fn multi_output_module_downloads_tuple() {
+    let mut ex = executor();
+    let mask = blob_mask(64);
+    let k = ex
+        .execute_resident("pre_watershed", 64, &[ExecInput::Host(&Value::Tensor(mask))])
+        .unwrap();
+    let outs = ex.download(k).unwrap();
+    assert_eq!(outs.len(), 2, "pre_watershed returns (relief, markers)");
+    let relief = outs[0].as_tensor().unwrap();
+    let markers = outs[1].as_tensor().unwrap();
+    assert_eq!(relief.shape(), &[64, 64]);
+    // relief is negated distance: non-positive everywhere
+    assert!(relief.data().iter().all(|&v| v <= 0.0));
+    // markers exist inside the blobs
+    assert!(markers.data().iter().any(|&v| v > 0.0));
+    // tuple payloads cannot feed execute_resident
+    let err = ex.execute_resident("bwlabel", 64, &[ExecInput::Resident(k)]);
+    assert!(err.is_err());
+}
+
+#[test]
+fn feature_graph_stats_vector() {
+    let mut ex = executor();
+    // deterministic pseudo-random rgb tile
+    let mut state = 0x1234_5678u64;
+    let mut px = Vec::with_capacity(64 * 64 * 3);
+    for _ in 0..64 * 64 * 3 {
+        state = state.wrapping_mul(6364136223846793005).wrapping_add(1442695040888963407);
+        px.push(((state >> 33) % 256) as f32);
+    }
+    let rgb = HostTensor::new(vec![64, 64, 3], px).unwrap();
+    let out = ex
+        .run("feature_graph", 64, &[Value::Tensor(rgb), Value::Scalar(30.0)])
+        .unwrap();
+    assert_eq!(out.len(), 4);
+    let stats = out[3].as_tensor().unwrap();
+    assert_eq!(stats.shape(), &[41]);
+    assert!(stats.data().iter().all(|v| v.is_finite()));
+    // histogram of hema image sums to pixel count
+    let hist_sum: f32 = stats.data()[4..20].iter().sum();
+    assert_eq!(hist_sum, (64 * 64) as f32);
+    // edge count consistency: stats[40] == sum(edges)
+    let edges = out[2].as_tensor().unwrap();
+    let edge_sum: f32 = edges.data().iter().sum();
+    assert_eq!(stats.data()[40], edge_sum);
+}
+
+#[test]
+fn executable_cache_compiles_once() {
+    let mut ex = executor();
+    let mask = blob_mask(64);
+    let v = Value::Tensor(mask);
+    ex.run("fill_holes", 64, &[v.clone()]).unwrap();
+    ex.run("fill_holes", 64, &[v.clone()]).unwrap();
+    ex.run("fill_holes", 64, &[v]).unwrap();
+    assert_eq!(ex.stats.compile_count, 1);
+    assert_eq!(ex.stats.executions, 3);
+}

@@ -1,0 +1,284 @@
+//! Property tests on coordinator invariants, driven by random workflows
+//! and random device interleavings (the offline proptest substitute —
+//! htap::testing).
+//!
+//! Invariants (DESIGN.md §5):
+//! * every operation instance executes exactly once;
+//! * dependencies are never violated (an op never runs before its
+//!   producers);
+//! * the PATS queue always returns the global min (CPU) / max (GPU)
+//!   speedup among eligible tasks;
+//! * the window protocol never over-assigns and always drains;
+//! * random DAG workflows complete under random device mixes.
+
+use htap::config::Policy;
+use htap::coordinator::sched::{make_scheduler, OpScheduler, ReadyTask};
+use htap::coordinator::{Manager, WorkSource};
+use htap::dataflow::{FunctionVariant, OpDef, PortRef, StageDef, StageInput, StageKind, Workflow};
+use htap::metrics::DeviceKind;
+use htap::runtime::Value;
+use htap::testing::{forall, Rng};
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::Arc;
+
+fn ready(key: u64, speedup: f32, seq: u64, gpu: bool) -> ReadyTask {
+    ReadyTask {
+        key: (key, 0),
+        name: format!("t{key}"),
+        speedup,
+        transfer_impact: 0.1,
+        seq,
+        resident_on: None,
+        has_gpu_impl: gpu,
+    }
+}
+
+#[test]
+fn prop_pats_pop_is_extremal() {
+    forall(
+        "pats pop extremal",
+        100,
+        |r: &mut Rng| {
+            let n = r.range(1, 60);
+            (0..n)
+                .map(|i| (r.f32_range(0.5, 20.0), r.bool()))
+                .enumerate()
+                .map(|(i, (s, g))| ready(i as u64, s, i as u64, g))
+                .collect::<Vec<_>>()
+        },
+        |tasks| {
+            let mut q = make_scheduler(Policy::Pats);
+            for t in tasks.clone() {
+                q.push(t);
+            }
+            // CPU pop must be the global minimum
+            let min = tasks.iter().map(|t| t.speedup).fold(f32::INFINITY, f32::min);
+            let got = q.pop(DeviceKind::Cpu, 0, false).unwrap();
+            if (got.speedup - min).abs() > 1e-6 {
+                return Err(format!("cpu pop {} != min {min}", got.speedup));
+            }
+            // GPU pop must be the max among gpu-capable leftovers
+            let leftovers: Vec<&ReadyTask> =
+                tasks.iter().filter(|t| t.key != got.key && t.has_gpu_impl).collect();
+            match q.pop(DeviceKind::Gpu, 0, false) {
+                Some(g) => {
+                    let max = leftovers.iter().map(|t| t.speedup).fold(f32::NEG_INFINITY, f32::max);
+                    if (g.speedup - max).abs() > 1e-6 {
+                        return Err(format!("gpu pop {} != max {max}", g.speedup));
+                    }
+                }
+                None => {
+                    if !leftovers.is_empty() {
+                        return Err("gpu pop empty with eligible tasks".into());
+                    }
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_schedulers_conserve_tasks() {
+    forall(
+        "push count == pop count",
+        60,
+        |r: &mut Rng| {
+            let n = r.range(1, 80);
+            let policy = if r.bool() { Policy::Pats } else { Policy::Fcfs };
+            let tasks: Vec<ReadyTask> = (0..n)
+                .map(|i| ready(i as u64, r.f32_range(0.5, 9.0), i as u64, true))
+                .collect();
+            (policy, tasks)
+        },
+        |(policy, tasks)| {
+            let mut q = make_scheduler(*policy);
+            for t in tasks.clone() {
+                q.push(t);
+            }
+            let mut seen = std::collections::HashSet::new();
+            let mut rng = Rng::new(9);
+            while !q.is_empty() {
+                let kind = if rng.bool() { DeviceKind::Cpu } else { DeviceKind::Gpu };
+                if let Some(t) = q.pop(kind, rng.below(3), rng.bool()) {
+                    if !seen.insert(t.key) {
+                        return Err(format!("task {:?} popped twice", t.key));
+                    }
+                }
+            }
+            if seen.len() != tasks.len() {
+                return Err(format!("{} of {} tasks popped", seen.len(), tasks.len()));
+            }
+            Ok(())
+        },
+    );
+}
+
+/// Build a random linear-ish DAG stage whose ops record execution order.
+fn random_stage(
+    rng: &mut Rng,
+    log: Arc<std::sync::Mutex<Vec<(u64, usize, usize)>>>,
+    counter: Arc<AtomicUsize>,
+) -> StageDef {
+    let n_ops = rng.range(1, 7);
+    let mut ops = Vec::with_capacity(n_ops);
+    for oi in 0..n_ops {
+        // each op depends on a random subset of earlier ops (or the input)
+        let mut inputs = vec![PortRef::StageInput(0)];
+        for p in 0..oi {
+            if rng.bool() {
+                inputs.push(PortRef::Op { op: p, output: 0 });
+            }
+        }
+        let log = log.clone();
+        let counter = counter.clone();
+        ops.push(OpDef {
+            name: format!("op{oi}"),
+            variant: FunctionVariant::cpu_only(move |args: &[Value]| {
+                let chunk = args[0].as_scalar()? as u64;
+                let order = counter.fetch_add(1, Ordering::SeqCst);
+                log.lock().unwrap().push((chunk, oi, order));
+                Ok(vec![Value::Scalar(chunk as f32)])
+            }),
+            inputs,
+            n_outputs: 1,
+            speedup: rng.f32_range(1.0, 10.0),
+            transfer_impact: 0.1,
+        });
+    }
+    StageDef {
+        name: "rand".into(),
+        kind: StageKind::PerChunk,
+        inputs: vec![StageInput::Chunk],
+        ops,
+        outputs: vec![PortRef::Op { op: n_ops - 1, output: 0 }],
+    }
+}
+
+#[test]
+fn prop_random_dags_execute_once_in_dependency_order() {
+    forall(
+        "random dag executes once, deps respected",
+        12,
+        |r: &mut Rng| (r.next_u64(), r.range(1, 6), r.range(1, 3), r.range(1, 4)),
+        |&(seed, n_chunks, cpus, window)| {
+            let log = Arc::new(std::sync::Mutex::new(Vec::new()));
+            let counter = Arc::new(AtomicUsize::new(0));
+            let mut rng = Rng::new(seed);
+            let mut wf = Workflow::new("prop");
+            let stage = random_stage(&mut rng, log.clone(), counter.clone());
+            let deps: Vec<Vec<usize>> = stage
+                .ops
+                .iter()
+                .map(|o| {
+                    o.inputs
+                        .iter()
+                        .filter_map(|p| match p {
+                            PortRef::Op { op, .. } => Some(*op),
+                            _ => None,
+                        })
+                        .collect()
+                })
+                .collect();
+            let n_ops = stage.ops.len();
+            wf.add_stage(stage);
+            wf.validate().map_err(|e| e.to_string())?;
+            let wf = Arc::new(wf);
+            let loader: htap::coordinator::ChunkLoader =
+                Arc::new(|c| Ok(vec![Value::Scalar(c as f32)]));
+            let mgr = Manager::new(wf.clone(), loader, n_chunks).map_err(|e| e.to_string())?;
+            let cfg = htap::config::RunConfig {
+                cpu_workers: cpus,
+                gpu_workers: 0,
+                window,
+                n_tiles: n_chunks,
+                ..Default::default()
+            };
+            htap::coordinator::worker::run_worker(
+                mgr.clone(),
+                wf,
+                cfg,
+                Arc::new(htap::runtime::ArtifactManifest::discover().map_err(|e| e.to_string())?),
+                Arc::new(htap::metrics::MetricsHub::new()),
+                Default::default(),
+            )
+            .map_err(|e| e.to_string())?;
+            // every (chunk, op) exactly once
+            let log = log.lock().unwrap();
+            if log.len() != n_chunks * n_ops {
+                return Err(format!("{} executions != {}", log.len(), n_chunks * n_ops));
+            }
+            let mut order = std::collections::HashMap::new();
+            for (chunk, op, ord) in log.iter() {
+                if order.insert((*chunk, *op), *ord).is_some() {
+                    return Err(format!("({chunk},{op}) executed twice"));
+                }
+            }
+            // dependency order per chunk
+            for chunk in 0..n_chunks as u64 {
+                for (oi, dep_list) in deps.iter().enumerate() {
+                    for &d in dep_list {
+                        let me = order[&(chunk, oi)];
+                        let dep = order[&(chunk, d)];
+                        if dep > me {
+                            return Err(format!(
+                                "chunk {chunk}: op{oi} (at {me}) ran before dep op{d} (at {dep})"
+                            ));
+                        }
+                    }
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_manager_never_exceeds_window() {
+    forall(
+        "window cap respected",
+        20,
+        |r: &mut Rng| (r.range(1, 20), r.range(1, 8)),
+        |&(n_chunks, window)| {
+            let mut wf = Workflow::new("w");
+            wf.add_stage(StageDef {
+                name: "s".into(),
+                kind: StageKind::PerChunk,
+                inputs: vec![StageInput::Chunk],
+                ops: vec![OpDef {
+                    name: "id".into(),
+                    variant: FunctionVariant::cpu_only(|a: &[Value]| Ok(vec![a[0].clone()])),
+                    inputs: vec![PortRef::StageInput(0)],
+                    n_outputs: 1,
+                    speedup: 1.0,
+                    transfer_impact: 0.0,
+                }],
+                outputs: vec![PortRef::Op { op: 0, output: 0 }],
+            });
+            let loader: htap::coordinator::ChunkLoader =
+                Arc::new(|c| Ok(vec![Value::Scalar(c as f32)]));
+            let mgr = Manager::new(Arc::new(wf), loader, n_chunks).map_err(|e| e.to_string())?;
+            let mut outstanding = 0usize;
+            let mut total = 0usize;
+            loop {
+                let batch = mgr.request(window - outstanding.min(window - 1));
+                if batch.is_empty() {
+                    break;
+                }
+                outstanding += batch.len();
+                if outstanding > window {
+                    return Err(format!("outstanding {outstanding} > window {window}"));
+                }
+                for a in batch {
+                    mgr.complete(a.instance_id, vec![]);
+                    outstanding -= 1;
+                    total += 1;
+                }
+            }
+            if total != n_chunks {
+                return Err(format!("{total} != {n_chunks}"));
+            }
+            Ok(())
+        },
+    );
+}
