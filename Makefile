@@ -1,0 +1,28 @@
+# htap build entry points.
+#
+#   make build      — compile the rust crate (release)
+#   make test       — tier-1: cargo build --release && cargo test -q
+#   make artifacts  — AOT-lower the JAX graphs to artifacts/*.hlo.txt
+#   make lint       — clippy -D warnings + rustfmt check
+
+CARGO ?= cargo
+PYTHON ?= python3
+
+.PHONY: build test artifacts lint clean
+
+build:
+	cd rust && $(CARGO) build --release
+
+test: build
+	cd rust && $(CARGO) test -q
+
+artifacts:
+	cd python && $(PYTHON) -m compile.aot --out-dir ../artifacts
+
+lint:
+	cd rust && $(CARGO) clippy -- -D warnings
+	cd rust && $(CARGO) fmt --check
+
+clean:
+	cd rust && $(CARGO) clean
+	rm -rf artifacts

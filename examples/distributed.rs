@@ -48,7 +48,7 @@ fn main() -> Result<(), Box<dyn std::error::Error>> {
                 source,
                 workflow,
                 cfg,
-                Arc::new(ArtifactManifest::discover().expect("artifacts")),
+                Arc::new(ArtifactManifest::discover_or_empty()),
                 metrics.clone(),
                 stage_bindings(),
             )

@@ -1,8 +1,11 @@
-//! Quickstart: build the WSI workflow, run it on a few synthetic tiles with
-//! the hybrid coordinator (CPU threads + a PJRT "GPU" device), print the
-//! execution profile.
+//! Quickstart: build the WSI workflow with the typed `WorkflowBuilder` +
+//! `OpRegistry` API, run it on a few synthetic tiles with the hybrid
+//! coordinator (CPU threads + a PJRT "GPU" device), print the execution
+//! profile.
 //!
 //!     make artifacts && cargo run --release --example quickstart
+//!
+//! (Without `make artifacts` every operation runs on its CPU member.)
 
 use htap::app::{build_workflow, stage_bindings, AppParams};
 use htap::config::RunConfig;
@@ -14,7 +17,10 @@ fn main() -> Result<(), Box<dyn std::error::Error>> {
     let tile_size = 64;
     let n_tiles = 8;
 
-    // 1. describe the analysis as a hierarchical workflow (paper Fig. 1/2)
+    // 1. describe the analysis as a hierarchical workflow (paper Fig. 1/2).
+    //    `build_workflow` assembles it through the typed builder: every op
+    //    comes from `htap::app::registry()` with its function variant and
+    //    calibrated profile attached, and all wiring is validated eagerly.
     let params = AppParams::for_tile_size(tile_size);
     let workflow = Arc::new(build_workflow(&params, /*with_classification=*/ true));
     println!(
@@ -31,11 +37,11 @@ fn main() -> Result<(), Box<dyn std::error::Error>> {
     let cfg = RunConfig { tile_size, n_tiles, cpu_workers: 2, gpu_workers: 1, ..Default::default() };
     let outcome = run_local(workflow, store.loader(), n_tiles, cfg, stage_bindings())?;
 
-    // 4. results
+    // 4. results — Reduce-stage outputs are looked up by stage *name*
     let report = outcome.metrics;
     println!("\n{}", report.profile_table());
     println!("wall time: {:?} ({:.2} tiles/s)", report.wall, n_tiles as f64 / report.wall.as_secs_f64());
-    if let Some(cls) = outcome.manager.reduce_outputs(2) {
+    if let Some(cls) = outcome.manager.reduce_outputs("classification") {
         let assign = cls[0].as_tensor()?;
         println!("k-means tile clusters: {:?}", assign.data());
     }

@@ -55,7 +55,7 @@ fn main() -> Result<(), Box<dyn std::error::Error>> {
     let down: u64 = report.ops.iter().map(|o| o.download_bytes).sum();
     println!("host->device {:.1} MiB, device->host {:.1} MiB", up as f64 / 1048576.0, down as f64 / 1048576.0);
 
-    if let Some(cls) = outcome.manager.reduce_outputs(2) {
+    if let Some(cls) = outcome.manager.reduce_outputs("classification") {
         let assign = cls[0].as_tensor()?;
         let mut counts = [0usize; 3];
         for &a in assign.data() {

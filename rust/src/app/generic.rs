@@ -1,0 +1,236 @@
+//! A generic, non-WSI demo workload: convolve → threshold → label → stats.
+//!
+//! The point of this module is to prove the [`OpRegistry`] +
+//! [`WorkflowBuilder`](crate::dataflow::WorkflowBuilder) + JSON-loader API
+//! is workload-agnostic: none of these operations know anything about H&E
+//! staining or the paper's pipeline, yet the same Manager/WRM machinery
+//! executes them end-to-end (see `examples/generic_pipeline.rs` and the
+//! `workflow_builder` integration tests).
+//!
+//! The workload ("cell-stats") counts bright blobs per image chunk:
+//!
+//! * stage `detect` (per-chunk): grayscale → invert → Gaussian smooth →
+//!   binarize → connected components → per-chunk region statistics;
+//! * stage `aggregate` (reduce): element-wise mean of every chunk's
+//!   statistics vector.
+//!
+//! The whole workflow is described as data ([`CELL_STATS_JSON`]) and loaded
+//! against [`generic_registry`].
+
+use crate::dataflow::{workflow_from_str, OpRegistry, OpSpec, Workflow};
+use crate::imgproc::{convolve, label, threshold, Conn, Gray, Rgb};
+use crate::runtime::{HostTensor, Value};
+use crate::{Error, Result};
+use std::sync::Arc;
+
+fn gray_arg(args: &[Value], i: usize) -> Result<Gray> {
+    Gray::from_tensor(
+        args.get(i)
+            .ok_or_else(|| Error::Dataflow(format!("missing argument {i}")))?
+            .as_tensor()?,
+    )
+}
+
+fn out(g: Gray) -> Value {
+    Value::Tensor(g.to_tensor())
+}
+
+/// rgb -> gray: per-pixel channel mean.
+pub fn grayscale(args: &[Value]) -> Result<Vec<Value>> {
+    let rgb = Rgb::from_tensor(
+        args.first()
+            .ok_or_else(|| Error::Dataflow("missing argument 0".into()))?
+            .as_tensor()?,
+    )?;
+    let mut g = Gray::zeros(rgb.h, rgb.w);
+    for y in 0..rgb.h {
+        for x in 0..rgb.w {
+            let v = (rgb.at(y, x, 0) + rgb.at(y, x, 1) + rgb.at(y, x, 2)) / 3.0;
+            g.set(y, x, v);
+        }
+    }
+    Ok(vec![out(g)])
+}
+
+/// gray -> 255 - gray (dark blobs become bright).
+pub fn invert(args: &[Value]) -> Result<Vec<Value>> {
+    let g = gray_arg(args, 0)?;
+    let px = g.px.iter().map(|&v| 255.0 - v).collect();
+    Ok(vec![out(Gray::new(g.h, g.w, px)?)])
+}
+
+/// gray -> 3x3 Gaussian smooth.
+pub fn gauss3(args: &[Value]) -> Result<Vec<Value>> {
+    let g = gray_arg(args, 0)?;
+    Ok(vec![out(convolve::gaussian3(&g))])
+}
+
+/// gray -> Sobel gradient magnitude.
+pub fn sobel(args: &[Value]) -> Result<Vec<Value>> {
+    let g = gray_arg(args, 0)?;
+    Ok(vec![out(convolve::sobel_magnitude(&g))])
+}
+
+/// gray, t -> binary mask (1.0 where gray > t).
+pub fn binarize(args: &[Value]) -> Result<Vec<Value>> {
+    let g = gray_arg(args, 0)?;
+    let t = args
+        .get(1)
+        .ok_or_else(|| Error::Dataflow("missing argument 1".into()))?
+        .as_scalar()?;
+    Ok(vec![out(threshold::threshold(&g, t))])
+}
+
+/// mask -> 8-connected component labels (compact 1..K numbering).
+pub fn cc_label(args: &[Value]) -> Result<Vec<Value>> {
+    let m = gray_arg(args, 0)?;
+    let (labels, _) = label::bwlabel(&m, Conn::Eight);
+    Ok(vec![out(labels)])
+}
+
+/// labels -> [n_regions, mean_area, max_area, coverage] (length-4 vector).
+pub fn region_stats(args: &[Value]) -> Result<Vec<Value>> {
+    let labels = gray_arg(args, 0)?;
+    let n = labels.px.iter().fold(0.0f32, |a, &b| a.max(b)) as usize;
+    let (mean_area, max_area) = if n == 0 {
+        (0.0, 0.0)
+    } else {
+        let areas = label::label_areas(&labels, n);
+        let fg: usize = areas.iter().skip(1).sum();
+        let max = areas.iter().skip(1).copied().max().unwrap_or(0);
+        (fg as f32 / n as f32, max as f32)
+    };
+    let coverage = labels.px.iter().filter(|&&v| v > 0.0).count() as f32
+        / labels.px.len().max(1) as f32;
+    Ok(vec![Value::Tensor(HostTensor::new(
+        vec![4],
+        vec![n as f32, mean_area, max_area, coverage],
+    )?)])
+}
+
+/// Reduce member: element-wise mean over every chunk's stats vector.
+pub fn mean_stats(args: &[Value]) -> Result<Vec<Value>> {
+    if args.is_empty() {
+        return Err(Error::Dataflow("mean_stats needs at least one input".into()));
+    }
+    let first = args[0].as_tensor()?;
+    let len = first.len();
+    let mut acc = vec![0.0f32; len];
+    for a in args {
+        let t = a.as_tensor()?;
+        if t.len() != len {
+            return Err(Error::Dataflow(format!(
+                "mean_stats: inconsistent vector lengths {} vs {len}",
+                t.len()
+            )));
+        }
+        for (s, v) in acc.iter_mut().zip(t.data()) {
+            *s += v;
+        }
+    }
+    let n = args.len() as f32;
+    for s in &mut acc {
+        *s /= n;
+    }
+    Ok(vec![Value::Tensor(HostTensor::new(vec![len], acc)?)])
+}
+
+/// The generic image-analysis registry (all CPU-only variants).
+pub fn generic_registry() -> OpRegistry {
+    let mut r = OpRegistry::new();
+    for spec in [
+        OpSpec::cpu("grayscale", 1, grayscale),
+        OpSpec::cpu("invert", 1, invert),
+        OpSpec::cpu("gauss3", 1, gauss3),
+        OpSpec::cpu("sobel", 1, sobel),
+        OpSpec::cpu("binarize", 1, binarize),
+        OpSpec::cpu("cc_label", 1, cc_label),
+        OpSpec::cpu("region_stats", 1, region_stats),
+        OpSpec::cpu("mean_stats", 1, mean_stats),
+    ] {
+        r.register(spec).expect("generic op names are unique");
+    }
+    r
+}
+
+/// The cell-stats workflow as data: the JSON form consumed by
+/// [`workflow_from_str`] against [`generic_registry`].
+pub const CELL_STATS_JSON: &str = r#"{
+    "name": "cell-stats",
+    "stages": [
+        {
+            "name": "detect",
+            "kind": "per_chunk",
+            "inputs": ["chunk"],
+            "ops": [
+                { "op": "grayscale",    "inputs": [ {"input": 0} ] },
+                { "op": "invert",       "inputs": [ {"op": "grayscale"} ] },
+                { "op": "gauss3",       "inputs": [ {"op": "invert"} ] },
+                { "op": "binarize",     "inputs": [ {"op": "gauss3"}, {"param": 140.0} ] },
+                { "op": "cc_label",     "inputs": [ {"op": "binarize"} ] },
+                { "op": "region_stats", "inputs": [ {"op": "cc_label"} ] }
+            ],
+            "outputs": [ {"op": "cc_label"}, {"op": "region_stats"} ]
+        },
+        {
+            "name": "aggregate",
+            "kind": "reduce",
+            "inputs": [ {"stage": "detect", "output": 1} ],
+            "ops": [ { "op": "mean_stats", "inputs": "all" } ],
+            "outputs": [ {"op": "mean_stats"} ]
+        }
+    ]
+}"#;
+
+/// Load the cell-stats workflow from its JSON description.
+pub fn cell_stats_workflow() -> Result<Workflow> {
+    workflow_from_str(CELL_STATS_JSON, Arc::new(generic_registry()))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::{SynthConfig, TileSynthesizer};
+    use crate::dataflow::{run_stage_serial, StageKind};
+
+    fn tile(seed: u64) -> Value {
+        let synth = TileSynthesizer::new(SynthConfig::for_tile_size(64, 9));
+        Value::Tensor(synth.tissue_tile(seed).to_tensor())
+    }
+
+    #[test]
+    fn workflow_loads_from_json_and_validates() {
+        let wf = cell_stats_workflow().unwrap();
+        assert_eq!(wf.name, "cell-stats");
+        assert_eq!(wf.stages.len(), 2);
+        assert_eq!(wf.stages[1].kind, StageKind::Reduce);
+        assert_eq!(wf.stage_index("aggregate"), Some(1));
+    }
+
+    #[test]
+    fn detect_stage_finds_blobs_on_synthetic_tiles() {
+        let wf = cell_stats_workflow().unwrap();
+        let outs = run_stage_serial(&wf.stages[0], &[tile(0)]).unwrap();
+        assert_eq!(outs.len(), 2);
+        let stats = outs[1].as_tensor().unwrap();
+        assert_eq!(stats.shape(), &[4]);
+        assert!(stats.data()[0] >= 1.0, "expected at least one region");
+        assert!(stats.data()[3] > 0.0 && stats.data()[3] < 1.0, "coverage in (0,1)");
+    }
+
+    #[test]
+    fn mean_stats_averages_vectors() {
+        let a = Value::Tensor(HostTensor::new(vec![2], vec![2.0, 4.0]).unwrap());
+        let b = Value::Tensor(HostTensor::new(vec![2], vec![4.0, 8.0]).unwrap());
+        let m = mean_stats(&[a, b]).unwrap();
+        assert_eq!(m[0].as_tensor().unwrap().data(), &[3.0, 6.0]);
+        assert!(mean_stats(&[]).is_err());
+    }
+
+    #[test]
+    fn region_stats_on_empty_mask_is_zero() {
+        let empty = Value::Tensor(Gray::zeros(8, 8).to_tensor());
+        let s = region_stats(&[empty]).unwrap();
+        assert_eq!(s[0].as_tensor().unwrap().data(), &[0.0, 0.0, 0.0, 0.0]);
+    }
+}

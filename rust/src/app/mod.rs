@@ -11,14 +11,23 @@
 //!   texture (CPU-only, irregular).
 //! * Optional stage "classification" (`Reduce`): k-means over all tiles'
 //!   feature vectors — the paper's future-work MapReduce stage.
+//!
+//! All operations live in the central [`OpRegistry`] returned by
+//! [`registry`], each carrying its function variant and the calibrated
+//! Fig. 7 profile ([`profile`]); the workflow itself is assembled through
+//! the typed [`WorkflowBuilder`].  A non-WSI workload built on the same
+//! API lives in [`generic`].
 
 pub mod classify;
+pub mod generic;
 pub mod ops;
 pub mod profile;
 
-use crate::dataflow::{FunctionVariant, OpDef, PortRef, StageDef, StageInput, StageKind, Workflow};
+use crate::dataflow::{param, OpRegistry, OpSpec, StageKind, Workflow, WorkflowBuilder};
 use crate::runtime::Value;
+use crate::Result;
 use std::collections::HashMap;
+use std::sync::Arc;
 
 /// Tunable analysis parameters (thresholds scale with tile size).
 #[derive(Debug, Clone)]
@@ -52,27 +61,55 @@ impl AppParams {
     }
 }
 
-fn op(
-    name: &str,
-    cpu: impl Fn(&[Value]) -> crate::Result<Vec<Value>> + Send + Sync + 'static,
-    artifact: Option<&str>,
-    inputs: Vec<PortRef>,
-    n_outputs: usize,
-) -> OpDef {
-    OpDef {
-        name: name.to_string(),
-        variant: match artifact {
-            Some(a) => FunctionVariant::hybrid(cpu, a),
-            None => FunctionVariant::cpu_only(cpu),
-        },
-        inputs,
-        n_outputs,
-        speedup: profile::speedup_of(name),
-        transfer_impact: profile::transfer_impact_of(name),
+/// Attach the spec's calibrated Fig. 7 profile (neutral when uncalibrated).
+fn profiled(spec: OpSpec) -> OpSpec {
+    match profile::entry(&spec.name) {
+        Some(e) => spec.with_profile(e.speedup, e.transfer_impact, e.cpu_fraction),
+        None => spec,
     }
 }
 
-/// Build the **pipelined** two-stage workflow (optionally + classification).
+/// An [`OpSpec`] with the calibrated profile and a same-named artifact.
+fn hybrid_op(name: &str, n_outputs: usize, f: fn(&[Value]) -> Result<Vec<Value>>) -> OpSpec {
+    profiled(OpSpec::hybrid(name, n_outputs, f, name))
+}
+
+/// A CPU-only [`OpSpec`] with the calibrated profile.
+fn cpu_op(name: &str, n_outputs: usize, f: fn(&[Value]) -> Result<Vec<Value>>) -> OpSpec {
+    profiled(OpSpec::cpu(name, n_outputs, f))
+}
+
+/// The WSI operation registry: every paper Table I operation (plus the
+/// extension ops with standalone artifacts), with function variants and
+/// the calibrated Fig. 7 performance profile attached.
+pub fn registry() -> OpRegistry {
+    let mut r = OpRegistry::new();
+    for spec in [
+        cpu_op("hema_prep", 1, ops::hema_prep),
+        hybrid_op("rbc_detect", 1, ops::rbc_detect),
+        hybrid_op("morph_open", 1, ops::morph_open),
+        hybrid_op("recon_to_nuclei", 1, ops::recon_to_nuclei),
+        hybrid_op("fill_holes", 1, ops::fill_holes),
+        hybrid_op("area_threshold", 1, ops::area_threshold),
+        hybrid_op("bwlabel", 1, ops::bwlabel),
+        hybrid_op("pre_watershed", 2, ops::pre_watershed),
+        hybrid_op("watershed", 1, ops::watershed_op),
+        hybrid_op("feature_graph", 4, ops::feature_graph),
+        cpu_op("object_features", 1, ops::object_features),
+        cpu_op("haralick", 1, ops::haralick_op),
+        // extension ops with standalone artifacts / CPU members
+        hybrid_op("distance", 1, ops::distance_op),
+        hybrid_op("morph_recon", 1, ops::morph_recon),
+        cpu_op("canny", 1, ops::canny_op),
+        cpu_op("kmeans", 2, classify::classify_tiles),
+    ] {
+        r.register(spec).expect("WSI op names are unique");
+    }
+    r
+}
+
+/// Build the **pipelined** two-stage workflow (optionally + classification)
+/// over a caller-supplied registry.
 ///
 /// Segmentation op wiring (stage input 0 = RGB tile):
 /// ```text
@@ -81,166 +118,73 @@ fn op(
 ///        │                                             ├─ pre_watershed ── watershed (out 0)
 ///        └─ rbc_detect (out 1)
 /// ```
-pub fn build_workflow(params: &AppParams, with_classification: bool) -> Workflow {
-    let p = params.clone();
-    let mut wf = Workflow::new("wsi-analysis");
+pub fn build_workflow_with(
+    registry: Arc<OpRegistry>,
+    params: &AppParams,
+    with_classification: bool,
+) -> Result<Workflow> {
+    let p = params;
+    let mut wb = WorkflowBuilder::with_shared_registry("wsi-analysis", registry);
 
-    let seg = StageDef {
-        name: "segmentation".into(),
-        kind: StageKind::PerChunk,
-        inputs: vec![StageInput::Chunk],
-        ops: vec![
-            // 0: cheap preprocessing (CPU-only; paper stage 1)
-            op("hema_prep", ops::hema_prep, None, vec![PortRef::StageInput(0)], 1),
-            // 1: RBC detection (side chain)
-            op(
-                "rbc_detect",
-                ops::rbc_detect,
-                Some("rbc_detect"),
-                vec![PortRef::StageInput(0), PortRef::Param(Value::Scalar(p.rbc_ratio))],
-                1,
-            ),
-            // 2: morphological open
-            op(
-                "morph_open",
-                ops::morph_open,
-                Some("morph_open"),
-                vec![PortRef::Op { op: 0, output: 0 }],
-                1,
-            ),
-            // 3: reconstruction-based candidate detection
-            op(
-                "recon_to_nuclei",
-                ops::recon_to_nuclei,
-                Some("recon_to_nuclei"),
-                vec![
-                    PortRef::Op { op: 2, output: 0 },
-                    PortRef::Param(Value::Scalar(p.hdome_h)),
-                    PortRef::Param(Value::Scalar(p.dome_thresh)),
-                ],
-                1,
-            ),
-            // 4: fill holes
-            op(
-                "fill_holes",
-                ops::fill_holes,
-                Some("fill_holes"),
-                vec![PortRef::Op { op: 3, output: 0 }],
-                1,
-            ),
-            // 5: area threshold
-            op(
-                "area_threshold",
-                ops::area_threshold,
-                Some("area_threshold"),
-                vec![
-                    PortRef::Op { op: 4, output: 0 },
-                    PortRef::Param(Value::Scalar(p.area_lo)),
-                    PortRef::Param(Value::Scalar(p.area_hi)),
-                ],
-                1,
-            ),
-            // 6: BWLabel (exported component labels)
-            op(
-                "bwlabel",
-                ops::bwlabel,
-                Some("bwlabel"),
-                vec![PortRef::Op { op: 5, output: 0 }],
-                1,
-            ),
-            // 7: pre-watershed (distance + markers)
-            op(
-                "pre_watershed",
-                ops::pre_watershed,
-                Some("pre_watershed"),
-                vec![PortRef::Op { op: 5, output: 0 }],
-                2,
-            ),
-            // 8: watershed
-            op(
-                "watershed",
-                ops::watershed_op,
-                Some("watershed"),
-                vec![
-                    PortRef::Op { op: 7, output: 0 },
-                    PortRef::Op { op: 7, output: 1 },
-                    PortRef::Op { op: 5, output: 0 },
-                ],
-                1,
-            ),
-        ],
-        outputs: vec![
-            PortRef::Op { op: 8, output: 0 }, // nucleus labels
-            PortRef::Op { op: 1, output: 0 }, // rbc mask
-            PortRef::Op { op: 6, output: 0 }, // component labels
-        ],
-    };
-    let seg_idx = wf.add_stage(seg);
+    let mut seg = wb.stage("segmentation", StageKind::PerChunk);
+    let rgb = seg.input_chunk();
+    // cheap preprocessing (CPU-only; paper stage 1)
+    let hema = seg.add_op("hema_prep", &[rgb.clone()])?;
+    // RBC detection (side chain)
+    let rbc = seg.add_op("rbc_detect", &[rgb, param(p.rbc_ratio)])?;
+    let opened = seg.add_op("morph_open", &[hema.out()])?;
+    // reconstruction-based candidate detection
+    let cand = seg.add_op(
+        "recon_to_nuclei",
+        &[opened.out(), param(p.hdome_h), param(p.dome_thresh)],
+    )?;
+    let filled = seg.add_op("fill_holes", &[cand.out()])?;
+    let kept = seg.add_op(
+        "area_threshold",
+        &[filled.out(), param(p.area_lo), param(p.area_hi)],
+    )?;
+    let components = seg.add_op("bwlabel", &[kept.out()])?;
+    // distance + markers, then the watershed split
+    let pw = seg.add_op("pre_watershed", &[kept.out()])?;
+    let nuclei = seg.add_op("watershed", &[pw.output(0), pw.output(1), kept.out()])?;
+    seg.export(nuclei.out())?; // 0: nucleus labels
+    seg.export(rbc.out())?; // 1: rbc mask
+    seg.export(components.out())?; // 2: component labels
+    let seg = wb.add_stage(seg)?;
 
-    let feat = StageDef {
-        name: "features".into(),
-        kind: StageKind::PerChunk,
-        inputs: vec![
-            StageInput::Chunk,
-            StageInput::Upstream { stage: seg_idx, output: 0 },
-        ],
-        ops: vec![
-            // 0: fused tile-level feature graph
-            op(
-                "feature_graph",
-                ops::feature_graph,
-                Some("feature_graph"),
-                vec![PortRef::StageInput(0), PortRef::Param(Value::Scalar(p.edge_thresh))],
-                4,
-            ),
-            // 1: per-object morphometry (irregular, CPU-only)
-            op(
-                "object_features",
-                ops::object_features,
-                None,
-                vec![
-                    PortRef::StageInput(1),
-                    PortRef::Op { op: 0, output: 0 },
-                    PortRef::Op { op: 0, output: 1 },
-                    PortRef::Op { op: 0, output: 2 },
-                ],
-                1,
-            ),
-            // 2: Haralick texture over tissue (CPU-only)
-            op(
-                "haralick",
-                ops::haralick_op,
-                None,
-                vec![PortRef::Op { op: 0, output: 0 }, PortRef::StageInput(1)],
-                1,
-            ),
-        ],
-        outputs: vec![
-            PortRef::Op { op: 0, output: 3 }, // 41-stats vector
-            PortRef::Op { op: 1, output: 0 }, // object features
-            PortRef::Op { op: 2, output: 0 }, // haralick
-        ],
-    };
-    let feat_idx = wf.add_stage(feat);
+    let mut feat = wb.stage("features", StageKind::PerChunk);
+    let rgb = feat.input_chunk();
+    let labels = feat.input_upstream(seg.output(0));
+    // fused tile-level feature graph
+    let fg = feat.add_op("feature_graph", &[rgb, param(p.edge_thresh)])?;
+    // per-object morphometry (irregular, CPU-only)
+    let objf = feat.add_op(
+        "object_features",
+        &[labels.clone(), fg.output(0), fg.output(1), fg.output(2)],
+    )?;
+    // Haralick texture over tissue (CPU-only)
+    let har = feat.add_op("haralick", &[fg.output(0), labels])?;
+    feat.export(fg.output(3))?; // 0: 41-stats vector
+    feat.export(objf.out())?; // 1: object features
+    feat.export(har.out())?; // 2: haralick
+    let feat = wb.add_stage(feat)?;
 
     if with_classification {
-        wf.add_stage(StageDef {
-            name: "classification".into(),
-            kind: StageKind::Reduce,
-            inputs: vec![StageInput::Upstream { stage: feat_idx, output: 0 }],
-            ops: vec![OpDef {
-                name: "kmeans".into(),
-                variant: FunctionVariant::cpu_only(classify::classify_tiles),
-                // Reduce stage: the WRM passes ALL stage inputs to the op.
-                inputs: vec![],
-                n_outputs: 2,
-                speedup: 1.0,
-                transfer_impact: 0.0,
-            }],
-            outputs: vec![PortRef::Op { op: 0, output: 0 }, PortRef::Op { op: 0, output: 1 }],
-        });
+        let mut cls = wb.stage("classification", StageKind::Reduce);
+        cls.input_upstream(feat.output(0));
+        // Reduce stage: the WRM passes ALL stage inputs to the op.
+        let km = cls.add_reduce_op("kmeans")?;
+        cls.export(km.output(0))?;
+        cls.export(km.output(1))?;
+        wb.add_stage(cls)?;
     }
-    wf
+    wb.build()
+}
+
+/// Build the pipelined WSI workflow over the default [`registry`].
+pub fn build_workflow(params: &AppParams, with_classification: bool) -> Workflow {
+    build_workflow_with(Arc::new(registry()), params, with_classification)
+        .expect("the WSI pipeline is statically valid")
 }
 
 /// The non-pipelined (monolithic) version for the Fig. 9 comparison: each
@@ -276,8 +220,8 @@ pub fn stage_bindings() -> HashMap<String, String> {
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::dataflow::run_stage_serial;
     use crate::data::{SynthConfig, TileSynthesizer};
+    use crate::dataflow::run_stage_serial;
     use crate::imgproc::Gray;
 
     #[test]
@@ -286,6 +230,7 @@ mod tests {
         wf.validate().unwrap();
         assert_eq!(wf.stages.len(), 3);
         assert_eq!(wf.stages[0].ops.len(), 9);
+        assert_eq!(wf.stage_index("classification"), Some(2));
     }
 
     #[test]
@@ -350,5 +295,28 @@ mod tests {
         let wf = build_workflow(&AppParams::for_tile_size(64), false);
         let ws = wf.stages[0].ops.iter().find(|o| o.name == "watershed").unwrap();
         assert_eq!(ws.speedup, profile::speedup_of("watershed"));
+    }
+
+    #[test]
+    fn registry_carries_profiles_and_variants() {
+        let r = registry();
+        for e in profile::PROFILE {
+            let spec = r.get(e.name).unwrap();
+            assert_eq!(spec.speedup, e.speedup, "{}", e.name);
+            assert_eq!(spec.transfer_impact, e.transfer_impact, "{}", e.name);
+            assert_eq!(spec.cpu_fraction, e.cpu_fraction, "{}", e.name);
+        }
+        assert!(r.get("watershed").unwrap().variant.has_gpu());
+        assert!(!r.get("hema_prep").unwrap().variant.has_gpu());
+        assert_eq!(r.get("kmeans").unwrap().n_outputs, 2);
+    }
+
+    #[test]
+    fn unknown_op_in_custom_workflow_fails_eagerly() {
+        let reg = Arc::new(registry());
+        let wb = WorkflowBuilder::with_shared_registry("bad", reg);
+        let mut s = wb.stage("s", StageKind::PerChunk);
+        let chunk = s.input_chunk();
+        assert!(s.add_op("not_a_wsi_op", &[chunk]).is_err());
     }
 }

@@ -93,7 +93,10 @@ htap — high-throughput hierarchical analysis pipelines (Teodoro et al. 2012)
 USAGE:
     htap run     [--tiles N] [--tile-size S] [--cpus N] [--gpus N]
                  [--policy fcfs|pats] [--window N] [--config file.json]
-        run the WSI workflow locally on synthetic tiles
+                 [--workflow wf.json]
+        run a workflow locally on synthetic tiles (default: the built-in
+        WSI app; --workflow loads a declarative JSON workflow over the
+        registered op set — see docs/workflow_api.md)
 
     htap sim     [--nodes N] [--tiles N] [--policy fcfs|pats]
         discrete-event simulation at cluster scale (Keeneland model)

@@ -257,11 +257,13 @@ impl Manager {
         self.state.lock().unwrap().stale_completions
     }
 
-    /// Outputs of a Reduce stage (after completion) — e.g. classification
-    /// results.  None if the stage didn't run or isn't Reduce.
-    pub fn reduce_outputs(&self, stage: usize) -> Option<Vec<Value>> {
+    /// Outputs of a Reduce stage (after completion), looked up by stage
+    /// *name* — e.g. `reduce_outputs("classification")`.  None if no such
+    /// stage exists, it hasn't completed, or it isn't a Reduce stage.
+    pub fn reduce_outputs(&self, stage: &str) -> Option<Vec<Value>> {
+        let idx = self.workflow.stage_index(stage)?;
         let st = self.state.lock().unwrap();
-        st.outputs.get(&(stage, REDUCE_CHUNK)).cloned()
+        st.outputs.get(&(idx, REDUCE_CHUNK)).cloned()
     }
 }
 
@@ -377,26 +379,52 @@ impl WorkSource for Manager {
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::dataflow::{FunctionVariant, OpDef, PortRef, StageDef};
+    use crate::dataflow::{param, OpRegistry, OpSpec, StageHandle, WorkflowBuilder};
 
-    fn scalar_stage(name: &str, kind: StageKind, inputs: Vec<StageInput>, add: f32) -> StageDef {
-        StageDef {
-            name: name.into(),
-            kind,
-            inputs,
-            ops: vec![OpDef {
-                name: format!("{name}-op"),
-                variant: FunctionVariant::cpu_only(move |args| {
-                    let s: f32 = args.iter().map(|v| v.as_scalar().unwrap()).sum();
-                    Ok(vec![Value::Scalar(s + add)])
-                }),
-                inputs: vec![PortRef::StageInput(0)],
-                n_outputs: 1,
-                speedup: 1.0,
-                transfer_impact: 0.0,
-            }],
-            outputs: vec![PortRef::Op { op: 0, output: 0 }],
+    /// Scalar test ops: "add" sums its wired inputs (value + param),
+    /// "sum" is the Reduce consume-all aggregator, "fan2" produces (v, 10v).
+    fn test_registry() -> OpRegistry {
+        let mut r = OpRegistry::new();
+        r.register_cpu("add", 1, |args: &[Value]| {
+            let mut s = 0.0;
+            for v in args {
+                s += v.as_scalar()?;
+            }
+            Ok(vec![Value::Scalar(s)])
+        })
+        .unwrap();
+        r.register_cpu("sum", 1, |args: &[Value]| {
+            let mut s = 0.0;
+            for v in args {
+                s += v.as_scalar()?;
+            }
+            Ok(vec![Value::Scalar(s)])
+        })
+        .unwrap();
+        r.register(OpSpec::cpu("fan2", 2, |args: &[Value]| {
+            let v = args[0].as_scalar()?;
+            Ok(vec![Value::Scalar(v), Value::Scalar(v * 10.0)])
+        }))
+        .unwrap();
+        r
+    }
+
+    /// A linear chain of PerChunk stages s0 -> s1 -> ..., stage i adding
+    /// `adds[i]` to its input.
+    fn chain_workflow(adds: &[f32]) -> Arc<Workflow> {
+        let mut wb = WorkflowBuilder::new("t", test_registry());
+        let mut prev: Option<StageHandle> = None;
+        for (i, &add) in adds.iter().enumerate() {
+            let mut s = wb.stage(&format!("s{i}"), StageKind::PerChunk);
+            let inp = match &prev {
+                None => s.input_chunk(),
+                Some(h) => s.input_upstream(h.output(0)),
+            };
+            let op = s.add_op("add", &[inp, param(add)]).unwrap();
+            s.export(op.out()).unwrap();
+            prev = Some(wb.add_stage(s).unwrap());
         }
+        Arc::new(wb.build().unwrap())
     }
 
     fn loader() -> ChunkLoader {
@@ -422,9 +450,7 @@ mod tests {
 
     #[test]
     fn single_stage_bag_of_tasks() {
-        let mut wf = Workflow::new("t");
-        wf.add_stage(scalar_stage("a", StageKind::PerChunk, vec![StageInput::Chunk], 1.0));
-        let mgr = Manager::new(Arc::new(wf), loader(), 5).unwrap();
+        let mgr = Manager::new(chain_workflow(&[1.0]), loader(), 5).unwrap();
         assert_eq!(drive_serial(&mgr), 5);
         let (done, total) = mgr.progress();
         assert_eq!((done, total), (5, 5));
@@ -432,47 +458,36 @@ mod tests {
 
     #[test]
     fn two_stage_chain_routes_outputs() {
-        let mut wf = Workflow::new("t");
-        wf.add_stage(scalar_stage("a", StageKind::PerChunk, vec![StageInput::Chunk], 10.0));
-        wf.add_stage(scalar_stage(
-            "b",
-            StageKind::PerChunk,
-            vec![StageInput::Upstream { stage: 0, output: 0 }],
-            100.0,
-        ));
-        let mgr = Manager::new(Arc::new(wf), loader(), 3).unwrap();
+        let mgr = Manager::new(chain_workflow(&[10.0, 100.0]), loader(), 3).unwrap();
         assert_eq!(drive_serial(&mgr), 6);
     }
 
     #[test]
     fn reduce_stage_sees_all_chunks() {
-        let mut wf = Workflow::new("t");
-        wf.add_stage(scalar_stage("a", StageKind::PerChunk, vec![StageInput::Chunk], 0.0));
-        // reduce stage: sums everything it receives
-        let mut red = scalar_stage(
-            "sum",
-            StageKind::Reduce,
-            vec![StageInput::Upstream { stage: 0, output: 0 }],
-            0.0,
-        );
-        red.ops[0].variant = FunctionVariant::cpu_only(|args| {
-            Ok(vec![Value::Scalar(args.iter().map(|v| v.as_scalar().unwrap()).sum())])
-        });
-        // reduce op consumes all its stage inputs
-        red.ops[0].inputs = (0..4).map(PortRef::StageInput).collect();
-        wf.add_stage(red);
-        let mgr = Manager::new(Arc::new(wf), loader(), 4).unwrap();
+        let mut wb = WorkflowBuilder::new("t", test_registry());
+        let mut a = wb.stage("a", StageKind::PerChunk);
+        let c = a.input_chunk();
+        let op = a.add_op("add", &[c, param(0.0)]).unwrap();
+        a.export(op.out()).unwrap();
+        let a = wb.add_stage(a).unwrap();
+        // reduce stage: sums everything it receives (all-inputs convention)
+        let mut red = wb.stage("sum", StageKind::Reduce);
+        red.input_upstream(a.output(0));
+        let s = red.add_reduce_op("sum").unwrap();
+        red.export(s.out()).unwrap();
+        wb.add_stage(red).unwrap();
+        let mgr = Manager::new(Arc::new(wb.build().unwrap()), loader(), 4).unwrap();
         assert_eq!(drive_serial(&mgr), 5);
-        let out = mgr.reduce_outputs(1).unwrap();
+        let out = mgr.reduce_outputs("sum").unwrap();
         // chunks 0..4 pass through stage a unchanged, reduce sums: 0+1+2+3
         assert_eq!(out[0].as_scalar().unwrap(), 6.0);
+        // unknown stage names resolve to None, not a panic
+        assert!(mgr.reduce_outputs("nope").is_none());
     }
 
     #[test]
     fn assignments_created_in_chunk_order() {
-        let mut wf = Workflow::new("t");
-        wf.add_stage(scalar_stage("a", StageKind::PerChunk, vec![StageInput::Chunk], 0.0));
-        let mgr = Manager::new(Arc::new(wf), loader(), 4).unwrap();
+        let mgr = Manager::new(chain_workflow(&[0.0]), loader(), 4).unwrap();
         let batch = mgr.request(10);
         let chunks: Vec<ChunkId> = batch.iter().map(|a| a.chunk).collect();
         assert_eq!(chunks, vec![0, 1, 2, 3]);
@@ -483,9 +498,7 @@ mod tests {
 
     #[test]
     fn window_capacity_respected() {
-        let mut wf = Workflow::new("t");
-        wf.add_stage(scalar_stage("a", StageKind::PerChunk, vec![StageInput::Chunk], 0.0));
-        let mgr = Manager::new(Arc::new(wf), loader(), 10).unwrap();
+        let mgr = Manager::new(chain_workflow(&[0.0]), loader(), 10).unwrap();
         let batch = mgr.request(3);
         assert_eq!(batch.len(), 3);
         for a in batch {
@@ -495,9 +508,7 @@ mod tests {
 
     #[test]
     fn unknown_completion_is_counted_not_fatal() {
-        let mut wf = Workflow::new("t");
-        wf.add_stage(scalar_stage("a", StageKind::PerChunk, vec![StageInput::Chunk], 0.0));
-        let mgr = Manager::new(Arc::new(wf), loader(), 1).unwrap();
+        let mgr = Manager::new(chain_workflow(&[0.0]), loader(), 1).unwrap();
         mgr.complete(999, vec![]);
         assert!(mgr.error().is_none());
         assert_eq!(mgr.stale_completions(), 1);
@@ -506,9 +517,7 @@ mod tests {
 
     #[test]
     fn requeue_reissues_unfinished_leases() {
-        let mut wf = Workflow::new("t");
-        wf.add_stage(scalar_stage("a", StageKind::PerChunk, vec![StageInput::Chunk], 1.0));
-        let mgr = Manager::new(Arc::new(wf), loader(), 3).unwrap();
+        let mgr = Manager::new(chain_workflow(&[1.0]), loader(), 3).unwrap();
         // "worker 1" takes two leases and dies
         let batch = mgr.request(2);
         let ids: Vec<u64> = batch.iter().map(|a| a.instance_id).collect();
@@ -525,45 +534,28 @@ mod tests {
     fn reduce_picks_only_referenced_outputs() {
         // upstream produces 2 outputs; the reduce stage references only
         // output 1 — the aggregate must contain exactly those values.
-        let mut wf = Workflow::new("t");
-        let mut up = scalar_stage("a", StageKind::PerChunk, vec![StageInput::Chunk], 0.0);
-        up.ops[0].variant = FunctionVariant::cpu_only(|args| {
-            let v = args[0].as_scalar()?;
-            Ok(vec![Value::Scalar(v), Value::Scalar(v * 10.0)])
-        });
-        up.ops[0].n_outputs = 2;
-        up.outputs =
-            vec![PortRef::Op { op: 0, output: 0 }, PortRef::Op { op: 0, output: 1 }];
-        wf.add_stage(up);
-        let mut red = scalar_stage(
-            "sum",
-            StageKind::Reduce,
-            vec![StageInput::Upstream { stage: 0, output: 1 }],
-            0.0,
-        );
-        red.ops[0].variant = FunctionVariant::cpu_only(|args| {
-            Ok(vec![Value::Scalar(args.iter().map(|v| v.as_scalar().unwrap()).sum())])
-        });
-        red.ops[0].inputs = vec![]; // all-stage-inputs convention
-        wf.add_stage(red);
-        let mgr = Manager::new(Arc::new(wf), loader(), 3).unwrap();
+        let mut wb = WorkflowBuilder::new("t", test_registry());
+        let mut up = wb.stage("a", StageKind::PerChunk);
+        let c = up.input_chunk();
+        let f = up.add_op("fan2", &[c]).unwrap();
+        up.export(f.output(0)).unwrap();
+        up.export(f.output(1)).unwrap();
+        let a = wb.add_stage(up).unwrap();
+        let mut red = wb.stage("sum", StageKind::Reduce);
+        red.input_upstream(a.output(1));
+        let s = red.add_reduce_op("sum").unwrap();
+        red.export(s.out()).unwrap();
+        wb.add_stage(red).unwrap();
+        let mgr = Manager::new(Arc::new(wb.build().unwrap()), loader(), 3).unwrap();
         drive_serial(&mgr);
-        let out = mgr.reduce_outputs(1).unwrap();
+        let out = mgr.reduce_outputs("sum").unwrap();
         // sum of v*10 over chunks 0..3 = (0+1+2)*10 = 30
         assert_eq!(out[0].as_scalar().unwrap(), 30.0);
     }
 
     #[test]
     fn concurrent_workers_drain_everything() {
-        let mut wf = Workflow::new("t");
-        wf.add_stage(scalar_stage("a", StageKind::PerChunk, vec![StageInput::Chunk], 1.0));
-        wf.add_stage(scalar_stage(
-            "b",
-            StageKind::PerChunk,
-            vec![StageInput::Upstream { stage: 0, output: 0 }],
-            2.0,
-        ));
-        let mgr = Manager::new(Arc::new(wf), loader(), 20).unwrap();
+        let mgr = Manager::new(chain_workflow(&[1.0, 2.0]), loader(), 20).unwrap();
         let mut handles = Vec::new();
         for _ in 0..4 {
             let m = mgr.clone();

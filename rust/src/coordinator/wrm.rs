@@ -87,12 +87,15 @@ impl Wrm {
         })
     }
 
-    /// Whether the scheduler may hand this op to a GPU controller: either a
-    /// real artifact exists, or the worker has no CPU compute threads and
-    /// the controller must run the CPU member itself (fallback — mirrors
-    /// the simulator's GPU-only mode).
+    /// Whether the scheduler may hand this op to a GPU controller: the op
+    /// declares an accelerator member, or the worker has no CPU compute
+    /// threads and the controller must run the CPU member itself.  When a
+    /// declared artifact is absent from the manifest (e.g. `make artifacts`
+    /// hasn't run, or an unbuilt tile size), the controller still takes the
+    /// task and degrades to the CPU member (`resolve_artifact` decides at
+    /// execution time), so hybrid configurations run everywhere.
     fn gpu_eligible(&self, gpu_artifact: &Option<String>) -> bool {
-        self.cfg.cpu_workers == 0 || self.resolve_artifact(gpu_artifact).is_some()
+        self.cfg.cpu_workers == 0 || gpu_artifact.is_some()
     }
 
     /// Resolve an op's accelerator artifact name (handles `@stage:` tags)
@@ -386,6 +389,8 @@ impl Wrm {
         // 48-tile run), so we keep the lazy policy.
         // inst id -> payload keys this GPU holds (for eviction)
         let mut held: HashMap<u64, Vec<PayloadKey>> = HashMap::new();
+        // one-time notice when accelerator execution degrades to CPU members
+        let mut warned_fallback = false;
         loop {
             // pick a task + snapshot its inputs under the lock
             let picked = {
@@ -454,94 +459,105 @@ impl Wrm {
             };
             let Some((task, stage_idx, plan)) = picked else { return };
             let op = &self.workflow.stages[stage_idx].ops[task.key.1];
-            let artifact = match self.resolve_artifact(&op.variant.gpu_artifact) {
-                Some(a) => a,
-                None => {
-                    // no accelerator member (GPU-only worker fallback, or a
-                    // missing artifact): the controller runs the CPU member.
-                    // Resident inputs are downloaded first.
-                    let mut vals: Vec<Value> = Vec::with_capacity(plan.len());
-                    let mut dl_err = None;
-                    for p in &plan {
-                        match p {
-                            Err(v) => vals.push(v.clone()),
-                            Ok((_, k)) => match executor.download(*k) {
-                                Ok(mut outs) if !outs.is_empty() => vals.push(outs.remove(0)),
-                                Ok(_) => dl_err = Some("empty resident payload".to_string()),
-                                Err(e) => dl_err = Some(e.to_string()),
-                            },
+            // Try the accelerator member first.  A missing artifact or a
+            // failed accelerator execution (e.g. the offline xla shim, or a
+            // driver error) degrades to the CPU member below rather than
+            // failing the stage instance.
+            if let Some(artifact) = self.resolve_artifact(&op.variant.gpu_artifact) {
+                // upload -> process -> download (paper §IV-D phases)
+                let t0 = Instant::now();
+                let up0 = (executor.stats.bytes_up, executor.stats.bytes_down);
+                let inputs: Vec<ExecInput<'_>> = plan
+                    .iter()
+                    .map(|p| match p {
+                        Ok((_, k)) => ExecInput::Resident(*k),
+                        Err(v) => ExecInput::Host(v),
+                    })
+                    .collect();
+                let exec_result = executor
+                    .execute_resident(&artifact, self.cfg.tile_size, &inputs)
+                    .and_then(|key| executor.download(key).map(|outs| (key, outs)));
+                match exec_result {
+                    Ok((key, outs)) => {
+                        let n_outputs = outs.len();
+                        self.metrics.record_op(&op.name, DeviceKind::Gpu, t0.elapsed());
+                        let (u1, d1) = (executor.stats.bytes_up, executor.stats.bytes_down);
+                        self.metrics.record_transfer(&op.name, u1 - up0.0, d1 - up0.1);
+                        // keep single-output results resident for DL chaining
+                        let resident = if self.cfg.data_locality && n_outputs == 1 {
+                            held.entry(task.key.0).or_default().push(key);
+                            Some((gpu_id, key))
+                        } else {
+                            executor.evict(key);
+                            None
+                        };
+                        let finished = self.finish_op(task.key, outs, resident);
+                        for inst in finished {
+                            if let Some(keys) = held.remove(&inst) {
+                                for k in keys {
+                                    executor.evict(k);
+                                }
+                            }
                         }
-                    }
-                    if let Some(e) = dl_err {
-                        let mut inner = self.inner.lock().unwrap();
-                        inner.completions.push_back((task.key.0, Err(e)));
-                        drop(inner);
-                        self.cv.notify_all();
+                        // also evict payloads of instances completed elsewhere
+                        let live: Vec<u64> = {
+                            let inner = self.inner.lock().unwrap();
+                            held.keys()
+                                .filter(|k| !inner.insts.contains_key(k))
+                                .copied()
+                                .collect()
+                        };
+                        for inst in live {
+                            if let Some(keys) = held.remove(&inst) {
+                                for k in keys {
+                                    executor.evict(k);
+                                }
+                            }
+                        }
                         continue;
                     }
-                    let t0 = Instant::now();
-                    match (op.variant.cpu)(&vals) {
-                        Ok(outs) => {
-                            self.metrics.record_op(&op.name, DeviceKind::Gpu, t0.elapsed());
-                            self.finish_op(task.key, outs, None);
-                        }
-                        Err(e) => {
-                            let mut inner = self.inner.lock().unwrap();
-                            inner.completions.push_back((task.key.0, Err(e.to_string())));
-                            drop(inner);
-                            self.cv.notify_all();
+                    Err(e) => {
+                        if !warned_fallback {
+                            warned_fallback = true;
+                            eprintln!(
+                                "htap: gpu {gpu_id}: accelerator execution of '{artifact}' \
+                                 failed ({e}); degrading to CPU members"
+                            );
                         }
                     }
-                    continue;
                 }
-            };
-            // upload -> process -> download (paper §IV-D phases)
+            }
+            // No accelerator member (GPU-only worker fallback, a missing
+            // artifact, or a failed accelerator execution): the controller
+            // runs the CPU member itself.  Resident inputs are downloaded
+            // first.  Execution time is recorded against this controller's
+            // device (DeviceKind::Gpu) — the controller *emulates* the
+            // accelerator, which keeps the hybrid scheduling paths and the
+            // profile table exercised on artifactless hosts.
+            let mut vals: Vec<Value> = Vec::with_capacity(plan.len());
+            let mut dl_err = None;
+            for p in &plan {
+                match p {
+                    Err(v) => vals.push(v.clone()),
+                    Ok((_, k)) => match executor.download(*k) {
+                        Ok(mut outs) if !outs.is_empty() => vals.push(outs.remove(0)),
+                        Ok(_) => dl_err = Some("empty resident payload".to_string()),
+                        Err(e) => dl_err = Some(e.to_string()),
+                    },
+                }
+            }
+            if let Some(e) = dl_err {
+                let mut inner = self.inner.lock().unwrap();
+                inner.completions.push_back((task.key.0, Err(e)));
+                drop(inner);
+                self.cv.notify_all();
+                continue;
+            }
             let t0 = Instant::now();
-            let up0 = (executor.stats.bytes_up, executor.stats.bytes_down);
-            let inputs: Vec<ExecInput<'_>> = plan
-                .iter()
-                .map(|p| match p {
-                    Ok((_, k)) => ExecInput::Resident(*k),
-                    Err(v) => ExecInput::Host(v),
-                })
-                .collect();
-            let exec_result = executor
-                .execute_resident(&artifact, self.cfg.tile_size, &inputs)
-                .and_then(|key| executor.download(key).map(|outs| (key, outs)));
-            match exec_result {
-                Ok((key, outs)) => {
-                    let n_outputs = outs.len();
+            match (op.variant.cpu)(&vals) {
+                Ok(outs) => {
                     self.metrics.record_op(&op.name, DeviceKind::Gpu, t0.elapsed());
-                    let (u1, d1) = (executor.stats.bytes_up, executor.stats.bytes_down);
-                    self.metrics.record_transfer(&op.name, u1 - up0.0, d1 - up0.1);
-                    // keep single-output results resident for DL chaining
-                    let resident = if self.cfg.data_locality && n_outputs == 1 {
-                        held.entry(task.key.0).or_default().push(key);
-                        Some((gpu_id, key))
-                    } else {
-                        executor.evict(key);
-                        None
-                    };
-                    let finished = self.finish_op(task.key, outs, resident);
-                    for inst in finished {
-                        if let Some(keys) = held.remove(&inst) {
-                            for k in keys {
-                                executor.evict(k);
-                            }
-                        }
-                    }
-                    // also evict payloads of instances completed elsewhere
-                    let live: Vec<u64> = {
-                        let inner = self.inner.lock().unwrap();
-                        held.keys().filter(|k| !inner.insts.contains_key(k)).copied().collect()
-                    };
-                    for inst in live {
-                        if let Some(keys) = held.remove(&inst) {
-                            for k in keys {
-                                executor.evict(k);
-                            }
-                        }
-                    }
+                    self.finish_op(task.key, outs, None);
                 }
                 Err(e) => {
                     let mut inner = self.inner.lock().unwrap();

@@ -1,0 +1,718 @@
+//! Typed workflow construction: the [`OpRegistry`] + [`WorkflowBuilder`] API.
+//!
+//! The raw [`StageDef`]/[`OpDef`] structs wire operations together with
+//! bare indices — easy to get wrong, and errors only surface at
+//! `Workflow::validate()` (or worse, at runtime).  This module makes
+//! workload definition a first-class, *eagerly validated* API:
+//!
+//! * an [`OpRegistry`] maps operation names to their [`FunctionVariant`]
+//!   and performance profile (GPU speedup, transfer impact, CPU cost
+//!   share) — one registration per logical operation, shared by every
+//!   workflow, the scheduler, and the simulator;
+//! * a [`WorkflowBuilder`] assembles stages from registered ops through
+//!   typed handles: [`StageBuilder::add_op`] returns an [`OpHandle`],
+//!   `handle.output(k)` names one of its outputs, and stages reference
+//!   each other through [`StageHandle`]s instead of magic indices.
+//!
+//! Every wiring mistake — unknown op, duplicate name, out-of-range port,
+//! backward reference, chained Reduce stages — is reported at the call
+//! that introduces it, with the offending names in the message.
+//!
+//! Workflows can also be described as data and loaded against a registry;
+//! see [`super::json`].
+
+use super::{FunctionVariant, OpDef, PortRef, StageDef, StageInput, StageKind, Workflow};
+use crate::runtime::Value;
+use crate::{Error, Result};
+use std::collections::BTreeMap;
+use std::sync::Arc;
+
+/// Everything the runtime needs to know about one logical operation:
+/// its function variant (CPU member + optional accelerator artifact), its
+/// output arity, and its calibrated performance profile.
+#[derive(Clone)]
+pub struct OpSpec {
+    pub name: String,
+    pub variant: FunctionVariant,
+    pub n_outputs: usize,
+    /// Estimated GPU-vs-1-CPU-core speedup (paper Fig. 7; drives PATS).
+    pub speedup: f32,
+    /// Fraction of GPU execution time spent moving data (paper §IV-C).
+    pub transfer_impact: f32,
+    /// Fraction of single-core per-chunk CPU time this op accounts for
+    /// (cost-model calibration; 0.0 when unknown).
+    pub cpu_fraction: f64,
+}
+
+impl OpSpec {
+    /// A CPU-only operation with a neutral profile.
+    pub fn cpu(
+        name: &str,
+        n_outputs: usize,
+        f: impl Fn(&[Value]) -> Result<Vec<Value>> + Send + Sync + 'static,
+    ) -> Self {
+        OpSpec {
+            name: name.to_string(),
+            variant: FunctionVariant::cpu_only(f),
+            n_outputs,
+            speedup: 1.0,
+            transfer_impact: 0.0,
+            cpu_fraction: 0.0,
+        }
+    }
+
+    /// A CPU + accelerator operation (artifact named in the AOT manifest).
+    pub fn hybrid(
+        name: &str,
+        n_outputs: usize,
+        f: impl Fn(&[Value]) -> Result<Vec<Value>> + Send + Sync + 'static,
+        artifact: &str,
+    ) -> Self {
+        OpSpec {
+            name: name.to_string(),
+            variant: FunctionVariant::hybrid(f, artifact),
+            n_outputs,
+            speedup: 1.0,
+            transfer_impact: 0.0,
+            cpu_fraction: 0.0,
+        }
+    }
+
+    /// Attach the calibrated performance profile.
+    pub fn with_profile(mut self, speedup: f32, transfer_impact: f32, cpu_fraction: f64) -> Self {
+        self.speedup = speedup;
+        self.transfer_impact = transfer_impact;
+        self.cpu_fraction = cpu_fraction;
+        self
+    }
+}
+
+impl std::fmt::Debug for OpSpec {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("OpSpec")
+            .field("name", &self.name)
+            .field("n_outputs", &self.n_outputs)
+            .field("speedup", &self.speedup)
+            .field("transfer_impact", &self.transfer_impact)
+            .field("cpu_fraction", &self.cpu_fraction)
+            .finish()
+    }
+}
+
+/// Central operation registry: op name -> [`OpSpec`].
+///
+/// The registry is the single source of truth for function variants and
+/// performance profiles.  Workflows (hand-built or JSON-loaded) reference
+/// operations by name; the builder resolves them here.
+#[derive(Clone, Default)]
+pub struct OpRegistry {
+    ops: BTreeMap<String, OpSpec>,
+}
+
+impl OpRegistry {
+    pub fn new() -> Self {
+        OpRegistry { ops: BTreeMap::new() }
+    }
+
+    /// Register an operation.  Duplicate names are rejected.
+    pub fn register(&mut self, spec: OpSpec) -> Result<()> {
+        if spec.name.is_empty() {
+            return Err(Error::Dataflow("op name must be non-empty".into()));
+        }
+        if spec.n_outputs == 0 {
+            return Err(Error::Dataflow(format!(
+                "op '{}' must declare at least one output",
+                spec.name
+            )));
+        }
+        if self.ops.contains_key(&spec.name) {
+            return Err(Error::Dataflow(format!(
+                "op '{}' is already registered",
+                spec.name
+            )));
+        }
+        self.ops.insert(spec.name.clone(), spec);
+        Ok(())
+    }
+
+    /// Convenience: register a CPU-only op with a neutral profile.
+    pub fn register_cpu(
+        &mut self,
+        name: &str,
+        n_outputs: usize,
+        f: impl Fn(&[Value]) -> Result<Vec<Value>> + Send + Sync + 'static,
+    ) -> Result<()> {
+        self.register(OpSpec::cpu(name, n_outputs, f))
+    }
+
+    /// Look up an op, with a helpful error naming close alternatives.
+    pub fn get(&self, name: &str) -> Result<&OpSpec> {
+        self.ops.get(name).ok_or_else(|| {
+            Error::Dataflow(format!(
+                "op '{name}' is not registered (registry has: {})",
+                self.ops.keys().cloned().collect::<Vec<_>>().join(", ")
+            ))
+        })
+    }
+
+    pub fn contains(&self, name: &str) -> bool {
+        self.ops.contains_key(name)
+    }
+
+    pub fn names(&self) -> impl Iterator<Item = &str> {
+        self.ops.keys().map(|s| s.as_str())
+    }
+
+    pub fn len(&self) -> usize {
+        self.ops.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.ops.is_empty()
+    }
+
+    /// Fold another registry into this one (duplicate names rejected).
+    pub fn merge(&mut self, other: OpRegistry) -> Result<()> {
+        for (_, spec) in other.ops {
+            self.register(spec)?;
+        }
+        Ok(())
+    }
+}
+
+impl std::fmt::Debug for OpRegistry {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("OpRegistry").field("ops", &self.ops.keys()).finish()
+    }
+}
+
+/// A data source for one op input, expressed through typed references
+/// instead of raw [`PortRef`] indices.
+#[derive(Debug, Clone)]
+pub enum PortSpec {
+    /// The stage's k-th declared external input (from [`StageBuilder::input_chunk`]
+    /// / [`StageBuilder::input_upstream`]).
+    Input(usize),
+    /// Output `output` of an earlier op in the same stage (from
+    /// [`OpHandle::output`]).
+    Output { op: usize, output: usize },
+    /// A constant parameter baked into the workflow.
+    Param(Value),
+}
+
+/// Shorthand for a scalar parameter port.
+pub fn param(v: f32) -> PortSpec {
+    PortSpec::Param(Value::Scalar(v))
+}
+
+/// Handle to an op added to a [`StageBuilder`]; names its outputs.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct OpHandle {
+    op: usize,
+    n_outputs: usize,
+}
+
+impl OpHandle {
+    /// Reference this op's k-th output (bounds-checked when the reference
+    /// is consumed by `add_op` / `export`).
+    pub fn output(self, k: usize) -> PortSpec {
+        PortSpec::Output { op: self.op, output: k }
+    }
+
+    /// Reference this op's first output.
+    pub fn out(self) -> PortSpec {
+        self.output(0)
+    }
+
+    /// Position of the op inside its stage's pipeline.
+    pub fn index(self) -> usize {
+        self.op
+    }
+
+    pub fn n_outputs(self) -> usize {
+        self.n_outputs
+    }
+}
+
+/// Handle to a stage added to a [`WorkflowBuilder`]; names its outputs for
+/// downstream stages.
+#[derive(Debug, Clone)]
+pub struct StageHandle {
+    idx: usize,
+    name: String,
+    n_outputs: usize,
+}
+
+impl StageHandle {
+    /// Reference this stage's k-th exported output.
+    pub fn output(&self, k: usize) -> UpstreamRef {
+        UpstreamRef { stage: self.idx, output: k }
+    }
+
+    pub fn index(&self) -> usize {
+        self.idx
+    }
+
+    pub fn name(&self) -> &str {
+        &self.name
+    }
+
+    pub fn n_outputs(&self) -> usize {
+        self.n_outputs
+    }
+}
+
+/// A reference to one output of an upstream stage.
+#[derive(Debug, Clone, Copy)]
+pub struct UpstreamRef {
+    stage: usize,
+    output: usize,
+}
+
+/// Builds one stage: declare external inputs, add registered ops wired
+/// through handles, export outputs.  Finish with
+/// [`WorkflowBuilder::add_stage`].
+pub struct StageBuilder {
+    name: String,
+    kind: StageKind,
+    registry: Arc<OpRegistry>,
+    inputs: Vec<StageInput>,
+    ops: Vec<OpDef>,
+    outputs: Vec<PortRef>,
+}
+
+impl StageBuilder {
+    fn new(name: &str, kind: StageKind, registry: Arc<OpRegistry>) -> Self {
+        StageBuilder {
+            name: name.to_string(),
+            kind,
+            registry,
+            inputs: Vec::new(),
+            ops: Vec::new(),
+            outputs: Vec::new(),
+        }
+    }
+
+    /// Declare a raw-chunk external input; returns the port to wire ops to.
+    pub fn input_chunk(&mut self) -> PortSpec {
+        self.inputs.push(StageInput::Chunk);
+        PortSpec::Input(self.inputs.len() - 1)
+    }
+
+    /// Declare an external input fed by an upstream stage's output.
+    /// (Bounds on the upstream output are checked at `add_stage` time,
+    /// when the upstream stage definition is in scope.)
+    pub fn input_upstream(&mut self, from: UpstreamRef) -> PortSpec {
+        self.inputs
+            .push(StageInput::Upstream { stage: from.stage, output: from.output });
+        PortSpec::Input(self.inputs.len() - 1)
+    }
+
+    fn resolve(&self, port: &PortSpec, ctx: &str) -> Result<PortRef> {
+        match port {
+            PortSpec::Input(k) => {
+                if *k >= self.inputs.len() {
+                    return Err(Error::Dataflow(format!(
+                        "stage '{}': {ctx} references stage input {k} (stage declares {})",
+                        self.name,
+                        self.inputs.len()
+                    )));
+                }
+                Ok(PortRef::StageInput(*k))
+            }
+            PortSpec::Output { op, output } => {
+                let def = self.ops.get(*op).ok_or_else(|| {
+                    Error::Dataflow(format!(
+                        "stage '{}': {ctx} references op {op}, which is not an earlier op \
+                         of this stage",
+                        self.name
+                    ))
+                })?;
+                if *output >= def.n_outputs {
+                    return Err(Error::Dataflow(format!(
+                        "stage '{}': {ctx} references output {output} of '{}' (has {})",
+                        self.name, def.name, def.n_outputs
+                    )));
+                }
+                Ok(PortRef::Op { op: *op, output: *output })
+            }
+            PortSpec::Param(v) => Ok(PortRef::Param(v.clone())),
+        }
+    }
+
+    /// Append a registered op wired to `inputs`; the instance is named
+    /// after the op.  Returns a handle for referencing its outputs.
+    pub fn add_op(&mut self, op: &str, inputs: &[PortSpec]) -> Result<OpHandle> {
+        self.add_op_as(op, op, inputs)
+    }
+
+    /// Append a registered op under an explicit instance name (required
+    /// when the same op appears more than once in a stage).
+    pub fn add_op_as(&mut self, instance: &str, op: &str, inputs: &[PortSpec]) -> Result<OpHandle> {
+        let spec = self.registry.get(op)?.clone();
+        if self.ops.iter().any(|o| o.name == instance) {
+            return Err(Error::Dataflow(format!(
+                "stage '{}': duplicate op instance name '{instance}' \
+                 (use add_op_as to disambiguate repeated ops)",
+                self.name
+            )));
+        }
+        let mut resolved = Vec::with_capacity(inputs.len());
+        for p in inputs {
+            resolved.push(self.resolve(p, &format!("op '{instance}' input"))?);
+        }
+        if resolved.is_empty() {
+            // The empty port list is the runtime's consume-all-stage-inputs
+            // convention; require it to be requested explicitly.
+            return Err(Error::Dataflow(format!(
+                "stage '{}': op '{instance}' declares no inputs; use add_reduce_op for \
+                 the consume-all-inputs convention",
+                self.name
+            )));
+        }
+        self.ops.push(OpDef {
+            name: instance.to_string(),
+            op: op.to_string(),
+            variant: spec.variant.clone(),
+            inputs: resolved,
+            n_outputs: spec.n_outputs,
+            speedup: spec.speedup,
+            transfer_impact: spec.transfer_impact,
+        });
+        Ok(OpHandle { op: self.ops.len() - 1, n_outputs: spec.n_outputs })
+    }
+
+    /// Append a registered op that consumes *all* stage inputs (the Reduce
+    /// convention: a Reduce instance receives one value per upstream chunk
+    /// output, so its arity is only known at run time).
+    pub fn add_reduce_op(&mut self, op: &str) -> Result<OpHandle> {
+        if self.kind != StageKind::Reduce {
+            return Err(Error::Dataflow(format!(
+                "stage '{}': add_reduce_op (consume-all-inputs) is only valid in Reduce \
+                 stages",
+                self.name
+            )));
+        }
+        let spec = self.registry.get(op)?.clone();
+        if self.ops.iter().any(|o| o.name == op) {
+            return Err(Error::Dataflow(format!(
+                "stage '{}': duplicate op instance name '{op}'",
+                self.name
+            )));
+        }
+        self.ops.push(OpDef {
+            name: op.to_string(),
+            op: op.to_string(),
+            variant: spec.variant.clone(),
+            inputs: Vec::new(),
+            n_outputs: spec.n_outputs,
+            speedup: spec.speedup,
+            transfer_impact: spec.transfer_impact,
+        });
+        Ok(OpHandle { op: self.ops.len() - 1, n_outputs: spec.n_outputs })
+    }
+
+    /// Export a port as the stage's next output; returns its output index.
+    pub fn export(&mut self, port: PortSpec) -> Result<usize> {
+        let r = self.resolve(&port, "stage output")?;
+        self.outputs.push(r);
+        Ok(self.outputs.len() - 1)
+    }
+
+    pub fn name(&self) -> &str {
+        &self.name
+    }
+}
+
+/// Assembles a validated [`Workflow`] from [`StageBuilder`]s.
+pub struct WorkflowBuilder {
+    name: String,
+    registry: Arc<OpRegistry>,
+    stages: Vec<StageDef>,
+}
+
+impl WorkflowBuilder {
+    /// Start a workflow over an owned registry.
+    pub fn new(name: &str, registry: OpRegistry) -> Self {
+        Self::with_shared_registry(name, Arc::new(registry))
+    }
+
+    /// Start a workflow over a shared registry.
+    pub fn with_shared_registry(name: &str, registry: Arc<OpRegistry>) -> Self {
+        WorkflowBuilder { name: name.to_string(), registry, stages: Vec::new() }
+    }
+
+    pub fn registry(&self) -> Arc<OpRegistry> {
+        self.registry.clone()
+    }
+
+    /// Open a new stage builder (attach it with [`WorkflowBuilder::add_stage`]).
+    pub fn stage(&self, name: &str, kind: StageKind) -> StageBuilder {
+        StageBuilder::new(name, kind, self.registry.clone())
+    }
+
+    /// Validate and append a finished stage; returns its handle.
+    pub fn add_stage(&mut self, sb: StageBuilder) -> Result<StageHandle> {
+        if self.stages.iter().any(|s| s.name == sb.name) {
+            return Err(Error::Dataflow(format!("duplicate stage name '{}'", sb.name)));
+        }
+        if sb.ops.is_empty() {
+            return Err(Error::Dataflow(format!("stage '{}' has no ops", sb.name)));
+        }
+        let mut has_upstream = false;
+        for input in &sb.inputs {
+            match input {
+                StageInput::Chunk => {
+                    if sb.kind == StageKind::Reduce {
+                        return Err(Error::Dataflow(format!(
+                            "Reduce stage '{}' cannot take raw chunk inputs; it aggregates \
+                             upstream outputs",
+                            sb.name
+                        )));
+                    }
+                }
+                StageInput::Upstream { stage, output } => {
+                    has_upstream = true;
+                    let up = self.stages.get(*stage).ok_or_else(|| {
+                        Error::Dataflow(format!(
+                            "stage '{}' references unknown upstream stage {stage}",
+                            sb.name
+                        ))
+                    })?;
+                    if *output >= up.outputs.len() {
+                        return Err(Error::Dataflow(format!(
+                            "stage '{}' references output {output} of stage '{}' (has {})",
+                            sb.name,
+                            up.name,
+                            up.outputs.len()
+                        )));
+                    }
+                    if up.kind == StageKind::Reduce && sb.kind == StageKind::Reduce {
+                        return Err(Error::Dataflow(format!(
+                            "chained Reduce stages are not supported ('{}' -> '{}')",
+                            up.name, sb.name
+                        )));
+                    }
+                }
+            }
+        }
+        if sb.kind == StageKind::Reduce && !has_upstream {
+            return Err(Error::Dataflow(format!(
+                "Reduce stage '{}' must reference at least one upstream output \
+                 (otherwise it would never become ready)",
+                sb.name
+            )));
+        }
+        let n_outputs = sb.outputs.len();
+        let idx = self.stages.len();
+        self.stages.push(StageDef {
+            name: sb.name.clone(),
+            kind: sb.kind,
+            inputs: sb.inputs,
+            ops: sb.ops,
+            outputs: sb.outputs,
+        });
+        Ok(StageHandle { idx, name: sb.name, n_outputs })
+    }
+
+    /// Finish: run the full graph validation and hand back the workflow.
+    pub fn build(self) -> Result<Workflow> {
+        let wf = Workflow { name: self.name, stages: self.stages };
+        wf.validate()?;
+        Ok(wf)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn identity(args: &[Value]) -> Result<Vec<Value>> {
+        Ok(vec![args[0].clone()])
+    }
+
+    fn sum_all(args: &[Value]) -> Result<Vec<Value>> {
+        let mut s = 0.0;
+        for a in args {
+            s += a.as_scalar()?;
+        }
+        Ok(vec![Value::Scalar(s)])
+    }
+
+    fn reg() -> OpRegistry {
+        let mut r = OpRegistry::new();
+        r.register(OpSpec::cpu("id", 1, identity).with_profile(2.0, 0.1, 0.5)).unwrap();
+        r.register_cpu("sum", 1, sum_all).unwrap();
+        r.register(OpSpec::cpu("fan2", 2, |args| {
+            let v = args[0].as_scalar()?;
+            Ok(vec![Value::Scalar(v), Value::Scalar(v * 10.0)])
+        }))
+        .unwrap();
+        r
+    }
+
+    #[test]
+    fn registry_rejects_duplicates_and_unknowns() {
+        let mut r = reg();
+        assert!(r.register_cpu("id", 1, identity).is_err());
+        assert!(r.get("nope").is_err());
+        assert!(r.contains("sum"));
+        assert_eq!(r.len(), 3);
+    }
+
+    #[test]
+    fn registry_merge_detects_collisions() {
+        let mut a = reg();
+        let mut b = OpRegistry::new();
+        b.register_cpu("other", 1, identity).unwrap();
+        a.merge(b).unwrap();
+        assert!(a.contains("other"));
+        let mut c = OpRegistry::new();
+        c.register_cpu("sum", 1, sum_all).unwrap();
+        assert!(a.merge(c).is_err());
+    }
+
+    #[test]
+    fn builds_linear_stage() {
+        let mut wb = WorkflowBuilder::new("t", reg());
+        let mut s = wb.stage("s", StageKind::PerChunk);
+        let chunk = s.input_chunk();
+        let a = s.add_op("id", &[chunk]).unwrap();
+        let b = s.add_op("sum", &[a.out(), param(10.0)]).unwrap();
+        s.export(b.out()).unwrap();
+        let h = wb.add_stage(s).unwrap();
+        assert_eq!(h.index(), 0);
+        assert_eq!(h.n_outputs(), 1);
+        let wf = wb.build().unwrap();
+        assert_eq!(wf.total_ops(), 2);
+        assert_eq!(wf.stages[0].ops[0].speedup, 2.0);
+        let out =
+            super::super::run_stage_serial(&wf.stages[0], &[Value::Scalar(5.0)]).unwrap();
+        assert_eq!(out[0].as_scalar().unwrap(), 15.0);
+    }
+
+    #[test]
+    fn unknown_op_rejected_eagerly() {
+        let wb = WorkflowBuilder::new("t", reg());
+        let mut s = wb.stage("s", StageKind::PerChunk);
+        let chunk = s.input_chunk();
+        let err = s.add_op("nope", &[chunk]).unwrap_err();
+        assert!(err.to_string().contains("not registered"), "{err}");
+    }
+
+    #[test]
+    fn out_of_range_ports_rejected_eagerly() {
+        let wb = WorkflowBuilder::new("t", reg());
+        let mut s = wb.stage("s", StageKind::PerChunk);
+        let _chunk = s.input_chunk();
+        // stage input index out of range
+        assert!(s.add_op("id", &[PortSpec::Input(3)]).is_err());
+        let a = s.add_op("id", &[PortSpec::Input(0)]).unwrap();
+        // op output index out of range
+        assert!(s.add_op("id", &[a.output(1)]).is_err());
+        // export of a bad port
+        assert!(s.export(a.output(2)).is_err());
+    }
+
+    #[test]
+    fn duplicate_instance_names_rejected() {
+        let wb = WorkflowBuilder::new("t", reg());
+        let mut s = wb.stage("s", StageKind::PerChunk);
+        let chunk = s.input_chunk();
+        s.add_op("id", &[chunk.clone()]).unwrap();
+        assert!(s.add_op("id", &[chunk.clone()]).is_err());
+        // explicit instance naming resolves the collision
+        let second = s.add_op_as("id2", "id", &[chunk]).unwrap();
+        assert_eq!(second.index(), 1);
+    }
+
+    #[test]
+    fn duplicate_stage_names_rejected() {
+        let mut wb = WorkflowBuilder::new("t", reg());
+        let mut s = wb.stage("s", StageKind::PerChunk);
+        let chunk = s.input_chunk();
+        let a = s.add_op("id", &[chunk]).unwrap();
+        s.export(a.out()).unwrap();
+        wb.add_stage(s).unwrap();
+        let mut s2 = wb.stage("s", StageKind::PerChunk);
+        let chunk = s2.input_chunk();
+        s2.add_op("id", &[chunk]).unwrap();
+        assert!(wb.add_stage(s2).is_err());
+    }
+
+    #[test]
+    fn upstream_refs_are_bounds_checked() {
+        let mut wb = WorkflowBuilder::new("t", reg());
+        let mut s = wb.stage("a", StageKind::PerChunk);
+        let chunk = s.input_chunk();
+        let op = s.add_op("id", &[chunk]).unwrap();
+        s.export(op.out()).unwrap();
+        let a = wb.add_stage(s).unwrap();
+        // referencing output 1 of a 1-output stage fails at add_stage
+        let mut s2 = wb.stage("b", StageKind::PerChunk);
+        let inp = s2.input_upstream(a.output(1));
+        s2.add_op("id", &[inp]).unwrap();
+        assert!(wb.add_stage(s2).is_err());
+    }
+
+    #[test]
+    fn chained_reduce_rejected() {
+        let mut wb = WorkflowBuilder::new("t", reg());
+        let mut s = wb.stage("a", StageKind::PerChunk);
+        let chunk = s.input_chunk();
+        let op = s.add_op("id", &[chunk]).unwrap();
+        s.export(op.out()).unwrap();
+        let a = wb.add_stage(s).unwrap();
+
+        let mut r1 = wb.stage("r1", StageKind::Reduce);
+        r1.input_upstream(a.output(0));
+        let op = r1.add_reduce_op("sum").unwrap();
+        r1.export(op.out()).unwrap();
+        let r1 = wb.add_stage(r1).unwrap();
+
+        let mut r2 = wb.stage("r2", StageKind::Reduce);
+        r2.input_upstream(r1.output(0));
+        r2.add_reduce_op("sum").unwrap();
+        assert!(wb.add_stage(r2).is_err());
+    }
+
+    #[test]
+    fn reduce_stage_requires_upstream_and_rejects_chunks() {
+        let mut wb = WorkflowBuilder::new("t", reg());
+        let mut r = wb.stage("r", StageKind::Reduce);
+        r.add_reduce_op("sum").unwrap();
+        assert!(wb.add_stage(r).is_err(), "reduce without upstream must fail");
+
+        let mut r = wb.stage("r", StageKind::Reduce);
+        r.input_chunk();
+        r.add_reduce_op("sum").unwrap();
+        assert!(wb.add_stage(r).is_err(), "reduce with chunk input must fail");
+    }
+
+    #[test]
+    fn reduce_op_only_in_reduce_stages_and_empty_inputs_rejected() {
+        let wb = WorkflowBuilder::new("t", reg());
+        let mut s = wb.stage("s", StageKind::PerChunk);
+        s.input_chunk();
+        assert!(s.add_reduce_op("sum").is_err());
+        assert!(s.add_op("sum", &[]).is_err(), "empty explicit inputs rejected");
+    }
+
+    #[test]
+    fn multi_output_wiring() {
+        let mut wb = WorkflowBuilder::new("t", reg());
+        let mut s = wb.stage("s", StageKind::PerChunk);
+        let chunk = s.input_chunk();
+        let f = s.add_op("fan2", &[chunk]).unwrap();
+        assert_eq!(f.n_outputs(), 2);
+        let t = s.add_op("sum", &[f.output(0), f.output(1)]).unwrap();
+        s.export(t.out()).unwrap();
+        s.export(f.output(1)).unwrap();
+        wb.add_stage(s).unwrap();
+        let wf = wb.build().unwrap();
+        let out =
+            super::super::run_stage_serial(&wf.stages[0], &[Value::Scalar(3.0)]).unwrap();
+        assert_eq!(out[0].as_scalar().unwrap(), 33.0);
+        assert_eq!(out[1].as_scalar().unwrap(), 30.0);
+    }
+}

@@ -1,0 +1,476 @@
+//! Declarative JSON workflow descriptions.
+//!
+//! A workflow is data: stages, op instances drawn from an [`OpRegistry`],
+//! and wiring — everything except the function bodies, which the registry
+//! supplies.  This module loads such a description through the
+//! [`WorkflowBuilder`] (so every eager validation applies identically) and
+//! serialises a built workflow back to the same format.
+//!
+//! ```json
+//! {
+//!   "name": "cell-stats",
+//!   "stages": [
+//!     {
+//!       "name": "detect",
+//!       "kind": "per_chunk",
+//!       "inputs": ["chunk"],
+//!       "ops": [
+//!         { "op": "grayscale", "inputs": [ {"input": 0} ] },
+//!         { "op": "binarize",  "inputs": [ {"op": "grayscale"}, {"param": 140.0} ] }
+//!       ],
+//!       "outputs": [ {"op": "binarize"} ]
+//!     },
+//!     {
+//!       "name": "aggregate",
+//!       "kind": "reduce",
+//!       "inputs": [ {"stage": "detect", "output": 0} ],
+//!       "ops": [ { "op": "mean_stats", "inputs": "all" } ],
+//!       "outputs": [ {"op": "mean_stats"} ]
+//!     }
+//!   ]
+//! }
+//! ```
+//!
+//! Reference forms inside `ops[].inputs` / `outputs`:
+//! * `{"input": k}` — the stage's k-th declared external input;
+//! * `{"op": "<instance>", "output": j}` — output `j` (default 0) of an
+//!   earlier op instance in the same stage;
+//! * `{"param": <number>}` — a scalar constant;
+//! * the string `"all"` in place of the `inputs` array — the Reduce
+//!   consume-all-inputs convention.
+//!
+//! Op entries take an optional `"as"` instance name so the same registry op
+//! can appear repeatedly in one stage.
+
+use super::builder::{OpHandle, OpRegistry, PortSpec, StageHandle, WorkflowBuilder};
+use super::{PortRef, StageInput, StageKind, Workflow};
+use crate::config::json::Json;
+use crate::runtime::Value;
+use crate::{Error, Result};
+use std::collections::{BTreeMap, HashMap};
+use std::sync::Arc;
+
+fn cfg_err(msg: String) -> Error {
+    Error::Config(msg)
+}
+
+fn stage_kind(s: &str) -> Result<StageKind> {
+    match s {
+        "per_chunk" => Ok(StageKind::PerChunk),
+        "reduce" => Ok(StageKind::Reduce),
+        other => Err(cfg_err(format!(
+            "unknown stage kind '{other}' (expected 'per_chunk' or 'reduce')"
+        ))),
+    }
+}
+
+fn kind_name(k: StageKind) -> &'static str {
+    match k {
+        StageKind::PerChunk => "per_chunk",
+        StageKind::Reduce => "reduce",
+    }
+}
+
+/// Parse one `{"input": ..}` / `{"op": ..}` / `{"param": ..}` reference.
+fn port_spec(j: &Json, ops: &HashMap<String, OpHandle>, ctx: &str) -> Result<PortSpec> {
+    let obj = j
+        .as_obj()
+        .ok_or_else(|| cfg_err(format!("{ctx}: port reference must be an object")))?;
+    if let Some(k) = obj.get("input") {
+        let k = k
+            .as_usize()
+            .ok_or_else(|| cfg_err(format!("{ctx}: 'input' must be a number")))?;
+        return Ok(PortSpec::Input(k));
+    }
+    if let Some(name) = obj.get("op") {
+        let name = name
+            .as_str()
+            .ok_or_else(|| cfg_err(format!("{ctx}: 'op' must be a string")))?;
+        let handle = ops.get(name).ok_or_else(|| {
+            cfg_err(format!("{ctx}: no earlier op instance named '{name}' in this stage"))
+        })?;
+        let output = match obj.get("output") {
+            None => 0,
+            Some(o) => o
+                .as_usize()
+                .ok_or_else(|| cfg_err(format!("{ctx}: 'output' must be a number")))?,
+        };
+        return Ok(handle.output(output));
+    }
+    if let Some(p) = obj.get("param") {
+        let v = p
+            .as_f64()
+            .ok_or_else(|| cfg_err(format!("{ctx}: 'param' must be a number")))?;
+        return Ok(PortSpec::Param(Value::Scalar(v as f32)));
+    }
+    Err(cfg_err(format!(
+        "{ctx}: port reference needs one of 'input', 'op', 'param'"
+    )))
+}
+
+/// Load a workflow description against a registry.
+pub fn workflow_from_json(root: &Json, registry: Arc<OpRegistry>) -> Result<Workflow> {
+    let name = root
+        .field("name")?
+        .as_str()
+        .ok_or_else(|| cfg_err("workflow 'name' must be a string".into()))?;
+    let mut wb = WorkflowBuilder::with_shared_registry(name, registry);
+    let mut stage_handles: HashMap<String, StageHandle> = HashMap::new();
+    let stages = root
+        .field("stages")?
+        .as_arr()
+        .ok_or_else(|| cfg_err("'stages' must be an array".into()))?;
+    for sj in stages {
+        let sname = sj
+            .field("name")?
+            .as_str()
+            .ok_or_else(|| cfg_err("stage 'name' must be a string".into()))?;
+        let kind = stage_kind(
+            sj.field("kind")?
+                .as_str()
+                .ok_or_else(|| cfg_err(format!("stage '{sname}': 'kind' must be a string")))?,
+        )?;
+        let mut sb = wb.stage(sname, kind);
+        for inp in sj
+            .field("inputs")?
+            .as_arr()
+            .ok_or_else(|| cfg_err(format!("stage '{sname}': 'inputs' must be an array")))?
+        {
+            match inp {
+                Json::Str(s) if s == "chunk" => {
+                    sb.input_chunk();
+                }
+                Json::Obj(o) => {
+                    let up = o
+                        .get("stage")
+                        .and_then(|v| v.as_str())
+                        .ok_or_else(|| {
+                            cfg_err(format!(
+                                "stage '{sname}': upstream input needs a 'stage' name"
+                            ))
+                        })?;
+                    let handle = stage_handles.get(up).ok_or_else(|| {
+                        cfg_err(format!(
+                            "stage '{sname}': upstream stage '{up}' is not defined earlier"
+                        ))
+                    })?;
+                    let output = match o.get("output") {
+                        None => 0,
+                        Some(v) => v.as_usize().ok_or_else(|| {
+                            cfg_err(format!("stage '{sname}': 'output' must be a number"))
+                        })?,
+                    };
+                    sb.input_upstream(handle.output(output));
+                }
+                other => {
+                    return Err(cfg_err(format!(
+                        "stage '{sname}': input must be \"chunk\" or an upstream object, \
+                         got {other}"
+                    )))
+                }
+            }
+        }
+        let mut op_handles: HashMap<String, OpHandle> = HashMap::new();
+        for oj in sj
+            .field("ops")?
+            .as_arr()
+            .ok_or_else(|| cfg_err(format!("stage '{sname}': 'ops' must be an array")))?
+        {
+            let op = oj
+                .field("op")?
+                .as_str()
+                .ok_or_else(|| cfg_err(format!("stage '{sname}': op 'op' must be a string")))?;
+            let instance = match oj.as_obj().and_then(|o| o.get("as")) {
+                None => op.to_string(),
+                Some(a) => a
+                    .as_str()
+                    .ok_or_else(|| cfg_err(format!("stage '{sname}': 'as' must be a string")))?
+                    .to_string(),
+            };
+            let ctx = format!("stage '{sname}' op '{instance}'");
+            let inputs = oj.field("inputs").map_err(|_| {
+                cfg_err(format!("{ctx}: missing 'inputs' (use \"all\" for consume-all)"))
+            })?;
+            let handle = match inputs {
+                Json::Str(s) if s == "all" => {
+                    // add_reduce_op names the instance after the op itself
+                    if instance != op {
+                        return Err(cfg_err(format!(
+                            "{ctx}: \"all\"-input ops cannot be aliased"
+                        )));
+                    }
+                    sb.add_reduce_op(op)?
+                }
+                Json::Arr(items) => {
+                    let mut specs = Vec::with_capacity(items.len());
+                    for item in items {
+                        specs.push(port_spec(item, &op_handles, &ctx)?);
+                    }
+                    sb.add_op_as(&instance, op, &specs)?
+                }
+                other => {
+                    return Err(cfg_err(format!(
+                        "{ctx}: 'inputs' must be an array or \"all\", got {other}"
+                    )))
+                }
+            };
+            op_handles.insert(instance, handle);
+        }
+        for oj in sj
+            .field("outputs")?
+            .as_arr()
+            .ok_or_else(|| cfg_err(format!("stage '{sname}': 'outputs' must be an array")))?
+        {
+            let spec = port_spec(oj, &op_handles, &format!("stage '{sname}' output"))?;
+            sb.export(spec)?;
+        }
+        let handle = wb.add_stage(sb)?;
+        stage_handles.insert(sname.to_string(), handle);
+    }
+    wb.build()
+}
+
+/// Load a workflow description from JSON text.
+pub fn workflow_from_str(text: &str, registry: Arc<OpRegistry>) -> Result<Workflow> {
+    workflow_from_json(&Json::parse(text)?, registry)
+}
+
+/// Load a workflow description from a file.
+pub fn workflow_from_file(path: &str, registry: Arc<OpRegistry>) -> Result<Workflow> {
+    let text = std::fs::read_to_string(path)
+        .map_err(|e| cfg_err(format!("cannot read workflow file '{path}': {e}")))?;
+    workflow_from_str(&text, registry)
+}
+
+fn obj(entries: Vec<(&str, Json)>) -> Json {
+    let mut m = BTreeMap::new();
+    for (k, v) in entries {
+        m.insert(k.to_string(), v);
+    }
+    Json::Obj(m)
+}
+
+fn port_ref_json(p: &PortRef, stage_ops: &[super::OpDef], ctx: &str) -> Result<Json> {
+    match p {
+        PortRef::StageInput(k) => Ok(obj(vec![("input", Json::Num(*k as f64))])),
+        PortRef::Op { op, output } => {
+            let name = stage_ops
+                .get(*op)
+                .map(|o| o.name.clone())
+                .ok_or_else(|| cfg_err(format!("{ctx}: dangling op reference {op}")))?;
+            let mut entries = vec![("op", Json::Str(name))];
+            if *output != 0 {
+                entries.push(("output", Json::Num(*output as f64)));
+            }
+            Ok(obj(entries))
+        }
+        PortRef::Param(Value::Scalar(s)) => Ok(obj(vec![("param", Json::Num(*s as f64))])),
+        PortRef::Param(Value::Tensor(_)) => Err(cfg_err(format!(
+            "{ctx}: tensor params cannot be serialised to JSON"
+        ))),
+    }
+}
+
+/// Serialise a workflow's structure back to the JSON description format.
+/// Function bodies are not serialised — loading requires a registry that
+/// provides every `op` name used.
+pub fn workflow_to_json(wf: &Workflow) -> Result<Json> {
+    let mut stages = Vec::with_capacity(wf.stages.len());
+    for stage in &wf.stages {
+        let mut inputs = Vec::new();
+        for inp in &stage.inputs {
+            match inp {
+                StageInput::Chunk => inputs.push(Json::Str("chunk".into())),
+                StageInput::Upstream { stage: up, output } => {
+                    let up_name = wf
+                        .stages
+                        .get(*up)
+                        .map(|s| s.name.clone())
+                        .ok_or_else(|| {
+                            cfg_err(format!("stage '{}': dangling upstream {up}", stage.name))
+                        })?;
+                    inputs.push(obj(vec![
+                        ("stage", Json::Str(up_name)),
+                        ("output", Json::Num(*output as f64)),
+                    ]));
+                }
+            }
+        }
+        let mut ops = Vec::new();
+        for def in &stage.ops {
+            let ctx = format!("stage '{}' op '{}'", stage.name, def.name);
+            let inputs_json = if def.inputs.is_empty() {
+                Json::Str("all".into())
+            } else {
+                let mut items = Vec::with_capacity(def.inputs.len());
+                for p in &def.inputs {
+                    items.push(port_ref_json(p, &stage.ops, &ctx)?);
+                }
+                Json::Arr(items)
+            };
+            let mut entries = vec![("op", Json::Str(def.op.clone()))];
+            if def.name != def.op {
+                entries.push(("as", Json::Str(def.name.clone())));
+            }
+            entries.push(("inputs", inputs_json));
+            ops.push(obj(entries));
+        }
+        let mut outputs = Vec::new();
+        for p in &stage.outputs {
+            outputs.push(port_ref_json(p, &stage.ops, &format!("stage '{}'", stage.name))?);
+        }
+        stages.push(obj(vec![
+            ("name", Json::Str(stage.name.clone())),
+            ("kind", Json::Str(kind_name(stage.kind).into())),
+            ("inputs", Json::Arr(inputs)),
+            ("ops", Json::Arr(ops)),
+            ("outputs", Json::Arr(outputs)),
+        ]));
+    }
+    Ok(obj(vec![
+        ("name", Json::Str(wf.name.clone())),
+        ("stages", Json::Arr(stages)),
+    ]))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::dataflow::builder::OpSpec;
+
+    fn reg() -> Arc<OpRegistry> {
+        let mut r = OpRegistry::new();
+        r.register_cpu("inc", 1, |args| Ok(vec![Value::Scalar(args[0].as_scalar()? + 1.0)]))
+            .unwrap();
+        r.register(OpSpec::cpu("fan2", 2, |args| {
+            let v = args[0].as_scalar()?;
+            Ok(vec![Value::Scalar(v), Value::Scalar(v * 10.0)])
+        }))
+        .unwrap();
+        r.register_cpu("sum", 1, |args| {
+            let mut s = 0.0;
+            for a in args {
+                s += a.as_scalar()?;
+            }
+            Ok(vec![Value::Scalar(s)])
+        })
+        .unwrap();
+        Arc::new(r)
+    }
+
+    const DOC: &str = r#"{
+        "name": "demo",
+        "stages": [
+            {
+                "name": "front",
+                "kind": "per_chunk",
+                "inputs": ["chunk"],
+                "ops": [
+                    { "op": "inc", "inputs": [ {"input": 0} ] },
+                    { "op": "fan2", "inputs": [ {"op": "inc"} ] },
+                    { "op": "inc", "as": "inc2", "inputs": [ {"op": "fan2", "output": 1} ] }
+                ],
+                "outputs": [ {"op": "inc2"}, {"op": "fan2", "output": 0} ]
+            },
+            {
+                "name": "agg",
+                "kind": "reduce",
+                "inputs": [ {"stage": "front", "output": 0} ],
+                "ops": [ { "op": "sum", "inputs": "all" } ],
+                "outputs": [ {"op": "sum"} ]
+            }
+        ]
+    }"#;
+
+    #[test]
+    fn loads_and_executes() {
+        let wf = workflow_from_str(DOC, reg()).unwrap();
+        assert_eq!(wf.stages.len(), 2);
+        assert_eq!(wf.stages[0].ops.len(), 3);
+        assert_eq!(wf.stages[1].kind, StageKind::Reduce);
+        // chunk value 2 -> inc = 3 -> fan2 = (3, 30) -> inc2 = 31
+        let out = crate::dataflow::run_stage_serial(&wf.stages[0], &[Value::Scalar(2.0)])
+            .unwrap();
+        assert_eq!(out[0].as_scalar().unwrap(), 31.0);
+        assert_eq!(out[1].as_scalar().unwrap(), 3.0);
+    }
+
+    #[test]
+    fn round_trips_through_json() {
+        let wf = workflow_from_str(DOC, reg()).unwrap();
+        let json = workflow_to_json(&wf).unwrap();
+        let wf2 = workflow_from_json(&json, reg()).unwrap();
+        let json2 = workflow_to_json(&wf2).unwrap();
+        assert_eq!(json.to_string(), json2.to_string());
+        // and the reloaded workflow computes the same thing
+        let a = crate::dataflow::run_stage_serial(&wf.stages[0], &[Value::Scalar(5.0)])
+            .unwrap();
+        let b = crate::dataflow::run_stage_serial(&wf2.stages[0], &[Value::Scalar(5.0)])
+            .unwrap();
+        assert_eq!(a, b);
+    }
+
+    #[test]
+    fn unknown_op_instance_reference_rejected() {
+        let doc = r#"{
+            "name": "bad",
+            "stages": [{
+                "name": "s", "kind": "per_chunk", "inputs": ["chunk"],
+                "ops": [ { "op": "inc", "inputs": [ {"op": "ghost"} ] } ],
+                "outputs": [ {"op": "inc"} ]
+            }]
+        }"#;
+        let err = workflow_from_str(doc, reg()).unwrap_err();
+        assert!(err.to_string().contains("ghost"), "{err}");
+    }
+
+    #[test]
+    fn unknown_registry_op_rejected() {
+        let doc = r#"{
+            "name": "bad",
+            "stages": [{
+                "name": "s", "kind": "per_chunk", "inputs": ["chunk"],
+                "ops": [ { "op": "nope", "inputs": [ {"input": 0} ] } ],
+                "outputs": [ {"op": "nope"} ]
+            }]
+        }"#;
+        assert!(workflow_from_str(doc, reg()).is_err());
+    }
+
+    #[test]
+    fn bad_kind_and_missing_inputs_rejected() {
+        let doc = r#"{
+            "name": "bad",
+            "stages": [{
+                "name": "s", "kind": "mapreduce", "inputs": ["chunk"],
+                "ops": [], "outputs": []
+            }]
+        }"#;
+        assert!(workflow_from_str(doc, reg()).is_err());
+        let doc2 = r#"{
+            "name": "bad",
+            "stages": [{
+                "name": "s", "kind": "per_chunk", "inputs": ["chunk"],
+                "ops": [ { "op": "inc" } ],
+                "outputs": []
+            }]
+        }"#;
+        assert!(workflow_from_str(doc2, reg()).is_err());
+    }
+
+    #[test]
+    fn upstream_by_name_resolves_order() {
+        // referencing a later stage fails (must be defined earlier)
+        let doc = r#"{
+            "name": "bad",
+            "stages": [{
+                "name": "s", "kind": "per_chunk",
+                "inputs": [ {"stage": "later", "output": 0} ],
+                "ops": [ { "op": "inc", "inputs": [ {"input": 0} ] } ],
+                "outputs": [ {"op": "inc"} ]
+            }]
+        }"#;
+        let err = workflow_from_str(doc, reg()).unwrap_err();
+        assert!(err.to_string().contains("later"), "{err}");
+    }
+}

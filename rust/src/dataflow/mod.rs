@@ -14,8 +14,15 @@
 //! PJRT as the accelerator implementation.  The WRM picks the member of
 //! the variant that matches the device claiming the task.
 
+pub mod builder;
+pub mod json;
 pub mod variant;
 
+pub use builder::{
+    param, OpHandle, OpRegistry, OpSpec, PortSpec, StageBuilder, StageHandle, UpstreamRef,
+    WorkflowBuilder,
+};
+pub use json::{workflow_from_file, workflow_from_json, workflow_from_str, workflow_to_json};
 pub use variant::{CpuFn, FunctionVariant};
 
 use crate::runtime::Value;
@@ -34,9 +41,17 @@ pub enum PortRef {
 }
 
 /// A fine-grain operation inside a stage (second hierarchy level).
+///
+/// Constructed through [`builder::WorkflowBuilder`] (or internally); the
+/// raw struct stays public so the coordinator and simulator can *read*
+/// wiring, but consumers should not assemble it by hand.
 #[derive(Clone)]
 pub struct OpDef {
+    /// Instance name, unique within the stage (metrics / diagnostics key).
     pub name: String,
+    /// Registry op name this instance was drawn from (equals `name` for
+    /// ad-hoc ops); keys profile lookups and JSON serialisation.
+    pub op: String,
     pub variant: FunctionVariant,
     pub inputs: Vec<PortRef>,
     pub n_outputs: usize,
@@ -108,6 +123,16 @@ impl Workflow {
         self.stages.len() - 1
     }
 
+    /// Index of the stage named `name`.
+    pub fn stage_index(&self, name: &str) -> Option<usize> {
+        self.stages.iter().position(|s| s.name == name)
+    }
+
+    /// The stage named `name`.
+    pub fn stage_named(&self, name: &str) -> Option<&StageDef> {
+        self.stage_index(name).map(|i| &self.stages[i])
+    }
+
     /// Upstream stage indices of stage `s`.
     pub fn upstream_of(&self, s: usize) -> Vec<usize> {
         let mut ups: Vec<usize> = self.stages[s]
@@ -128,6 +153,9 @@ impl Workflow {
     /// indices in range.
     pub fn validate(&self) -> Result<()> {
         for (si, stage) in self.stages.iter().enumerate() {
+            if self.stages[..si].iter().any(|s| s.name == stage.name) {
+                return Err(Error::Dataflow(format!("duplicate stage name '{}'", stage.name)));
+            }
             for input in &stage.inputs {
                 if let StageInput::Upstream { stage: up, .. } = input {
                     if *up >= si {
@@ -155,6 +183,12 @@ impl Workflow {
                         op.name
                     )));
                 }
+                if stage.ops[..oi].iter().any(|o| o.name == op.name) {
+                    return Err(Error::Dataflow(format!(
+                        "stage '{}': duplicate op name '{}'",
+                        stage.name, op.name
+                    )));
+                }
                 for port in &op.inputs {
                     match port {
                         PortRef::Op { op: src, output } => {
@@ -173,8 +207,14 @@ impl Workflow {
                                 )));
                             }
                         }
+                        // Both stage kinds are bounds-checked.  A Reduce
+                        // instance receives >= one value per declared
+                        // upstream ref at run time (n_chunks >= 1), so any
+                        // k within the declared inputs is always
+                        // resolvable; ops that want the full dynamic input
+                        // set use the empty-port-list convention instead.
                         PortRef::StageInput(k) => {
-                            if *k >= stage.inputs.len() && stage.kind == StageKind::PerChunk {
+                            if *k >= stage.inputs.len() {
                                 return Err(Error::Dataflow(format!(
                                     "op '{}' references stage input {k} (stage has {})",
                                     op.name,
@@ -232,6 +272,7 @@ impl Workflow {
                 inputs: stage.inputs.clone(),
                 ops: vec![OpDef {
                     name: format!("{}-monolith", stage.name),
+                    op: format!("{}-monolith", stage.name),
                     variant: FunctionVariant {
                         cpu: cpu_chain,
                         gpu_artifact: if all_gpu {
@@ -313,6 +354,7 @@ mod tests {
     fn passthrough(name: &str, inputs: Vec<PortRef>) -> OpDef {
         OpDef {
             name: name.into(),
+            op: name.into(),
             variant: FunctionVariant {
                 cpu: Arc::new(|args: &[Value]| Ok(vec![args[0].clone()])),
                 gpu_artifact: None,
@@ -327,6 +369,7 @@ mod tests {
     fn adder(name: &str, inputs: Vec<PortRef>) -> OpDef {
         OpDef {
             name: name.into(),
+            op: name.into(),
             variant: FunctionVariant {
                 cpu: Arc::new(|args: &[Value]| {
                     let s = args.iter().map(|v| v.as_scalar().unwrap()).sum();
@@ -391,6 +434,56 @@ mod tests {
         w.add_stage(s0);
         w.add_stage(small_stage());
         assert!(w.validate().is_err());
+    }
+
+    #[test]
+    fn reduce_stage_input_bounds_checked() {
+        // Regression: StageInput bounds used to be checked only for
+        // PerChunk stages, so a Reduce stage could reference a nonexistent
+        // stage input and fail at runtime instead of validation.
+        let mut w = Workflow::new("t");
+        w.add_stage(small_stage());
+        let mut red = small_stage();
+        red.name = "r".into();
+        red.kind = StageKind::Reduce;
+        red.inputs = vec![StageInput::Upstream { stage: 0, output: 0 }];
+        red.ops[0].inputs = vec![PortRef::StageInput(3)];
+        w.add_stage(red);
+        let err = w.validate().unwrap_err();
+        assert!(err.to_string().contains("stage input 3"), "{err}");
+
+        // an in-range reference on a Reduce stage still validates
+        let mut w = Workflow::new("t");
+        w.add_stage(small_stage());
+        let mut red = small_stage();
+        red.name = "r".into();
+        red.kind = StageKind::Reduce;
+        red.inputs = vec![StageInput::Upstream { stage: 0, output: 0 }];
+        w.add_stage(red);
+        w.validate().unwrap();
+    }
+
+    #[test]
+    fn duplicate_names_rejected() {
+        let mut w = Workflow::new("t");
+        w.add_stage(small_stage());
+        w.add_stage(small_stage()); // same stage name "s"
+        assert!(w.validate().unwrap_err().to_string().contains("duplicate stage"));
+
+        let mut stage = small_stage();
+        stage.ops[1].name = "a".into(); // collides with ops[0]
+        let mut w = Workflow::new("t");
+        w.add_stage(stage);
+        assert!(w.validate().unwrap_err().to_string().contains("duplicate op"));
+    }
+
+    #[test]
+    fn stage_lookup_by_name() {
+        let mut w = Workflow::new("t");
+        w.add_stage(small_stage());
+        assert_eq!(w.stage_index("s"), Some(0));
+        assert_eq!(w.stage_index("nope"), None);
+        assert_eq!(w.stage_named("s").unwrap().ops.len(), 2);
     }
 
     #[test]

@@ -1,10 +1,11 @@
 //! `htap` launcher: run / simulate / serve / join.
 
-use htap::app::{build_workflow, stage_bindings, AppParams};
+use htap::app::{self, build_workflow, stage_bindings, AppParams};
 use htap::cli::{Cli, USAGE};
 use htap::config::Policy;
 use htap::coordinator::{run_local, worker::run_worker, Manager};
 use htap::data::{SynthConfig, TileStore};
+use htap::dataflow::{workflow_from_file, StageKind, Workflow};
 use htap::metrics::MetricsHub;
 use htap::net::{ManagerServer, RemoteManager};
 use htap::runtime::ArtifactManifest;
@@ -42,18 +43,30 @@ fn dispatch(cli: &Cli) -> htap::Result<()> {
 
 fn cmd_run(cli: &Cli) -> htap::Result<()> {
     let cfg = cli.run_config()?;
-    let params = AppParams::for_tile_size(cfg.tile_size);
-    let workflow = Arc::new(build_workflow(&params, true));
+    // `--workflow wf.json` runs any declarative workflow over the full op
+    // registry (WSI + generic ops); the default is the built-in WSI app.
+    let workflow: Arc<Workflow> = match cli.get("workflow") {
+        Some(path) => {
+            let mut registry = app::registry();
+            registry.merge(app::generic::generic_registry())?;
+            Arc::new(workflow_from_file(path, Arc::new(registry))?)
+        }
+        None => {
+            let params = AppParams::for_tile_size(cfg.tile_size);
+            Arc::new(build_workflow(&params, true))
+        }
+    };
     let store = Arc::new(TileStore::new(
         SynthConfig::for_tile_size(cfg.tile_size, cfg.seed),
         cfg.n_tiles,
     ));
     let n = cfg.n_tiles;
     println!(
-        "running {} tiles ({}x{}) with {} ({} cpu + {} gpu threads, window {})",
-        n, cfg.tile_size, cfg.tile_size, cfg.policy.name(), cfg.cpu_workers, cfg.gpu_workers, cfg.window
+        "running workflow '{}': {} tiles ({}x{}) with {} ({} cpu + {} gpu threads, window {})",
+        workflow.name, n, cfg.tile_size, cfg.tile_size, cfg.policy.name(), cfg.cpu_workers,
+        cfg.gpu_workers, cfg.window
     );
-    let outcome = run_local(workflow, store.loader(), n, cfg, stage_bindings())?;
+    let outcome = run_local(workflow.clone(), store.loader(), n, cfg, stage_bindings())?;
     let report = outcome.metrics;
     println!("\n{}", report.profile_table());
     println!(
@@ -61,6 +74,11 @@ fn cmd_run(cli: &Cli) -> htap::Result<()> {
         report.wall.as_secs_f64(),
         n as f64 / report.wall.as_secs_f64()
     );
+    for stage in workflow.stages.iter().filter(|s| s.kind == StageKind::Reduce) {
+        if let Some(outs) = outcome.manager.reduce_outputs(&stage.name) {
+            println!("reduce stage '{}' produced {} output value(s)", stage.name, outs.len());
+        }
+    }
     Ok(())
 }
 
@@ -119,7 +137,7 @@ fn cmd_worker(cli: &Cli) -> htap::Result<()> {
         source,
         workflow,
         cfg,
-        Arc::new(ArtifactManifest::discover()?),
+        Arc::new(ArtifactManifest::discover_or_empty()),
         metrics.clone(),
         stage_bindings(),
     )?;

@@ -158,28 +158,22 @@ impl WorkSource for RemoteManager {
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::dataflow::{FunctionVariant, OpDef, PortRef, StageDef, StageInput, StageKind, Workflow};
+    use crate::dataflow::{OpRegistry, StageKind, Workflow, WorkflowBuilder};
     use crate::runtime::Value;
 
     fn tiny_workflow() -> Arc<Workflow> {
-        let mut wf = Workflow::new("net-test");
-        wf.add_stage(StageDef {
-            name: "double".into(),
-            kind: StageKind::PerChunk,
-            inputs: vec![StageInput::Chunk],
-            ops: vec![OpDef {
-                name: "double".into(),
-                variant: FunctionVariant::cpu_only(|args| {
-                    Ok(vec![Value::Scalar(args[0].as_scalar()? * 2.0)])
-                }),
-                inputs: vec![PortRef::StageInput(0)],
-                n_outputs: 1,
-                speedup: 1.0,
-                transfer_impact: 0.0,
-            }],
-            outputs: vec![PortRef::Op { op: 0, output: 0 }],
-        });
-        Arc::new(wf)
+        let mut reg = OpRegistry::new();
+        reg.register_cpu("double", 1, |args: &[Value]| {
+            Ok(vec![Value::Scalar(args[0].as_scalar()? * 2.0)])
+        })
+        .unwrap();
+        let mut wb = WorkflowBuilder::new("net-test", reg);
+        let mut s = wb.stage("double", StageKind::PerChunk);
+        let chunk = s.input_chunk();
+        let d = s.add_op("double", &[chunk]).unwrap();
+        s.export(d.out()).unwrap();
+        wb.add_stage(s).unwrap();
+        Arc::new(wb.build().unwrap())
     }
 
     #[test]

@@ -107,24 +107,58 @@ impl ArtifactManifest {
         Ok(Self { dir, tile_sizes, modules })
     }
 
-    /// Locate the default artifact directory: `$HTAP_ARTIFACTS` or
-    /// `artifacts/` relative to the workspace root (walking up from cwd).
-    pub fn discover() -> Result<Self> {
-        if let Ok(dir) = std::env::var("HTAP_ARTIFACTS") {
-            return Self::load(dir);
+    /// A manifest with no modules: every function variant degrades to its
+    /// CPU member (pure-CPU execution).
+    pub fn empty() -> Self {
+        Self { dir: PathBuf::from("artifacts"), tile_sizes: Vec::new(), modules: BTreeMap::new() }
+    }
+
+    /// [`ArtifactManifest::discover`], degrading to [`ArtifactManifest::empty`]
+    /// when no artifacts have been built — the coordinator then runs every
+    /// operation on its CPU member.  A manifest that *exists* but fails to
+    /// load (corrupt JSON, unreadable dir) is not silently ignored: a
+    /// warning is printed before degrading, so a hybrid-looking run never
+    /// quietly turns pure-CPU.
+    pub fn discover_or_empty() -> Self {
+        match Self::default_dir() {
+            None => Self::empty(),
+            Some(dir) => Self::load(&dir).unwrap_or_else(|e| {
+                eprintln!(
+                    "htap: warning: ignoring artifacts at {}: {e}; running CPU-only",
+                    dir.display()
+                );
+                Self::empty()
+            }),
         }
-        let mut cur = std::env::current_dir()?;
+    }
+
+    /// The directory `discover` would load from: `$HTAP_ARTIFACTS`, or the
+    /// nearest `artifacts/manifest.json` walking up from the cwd.
+    fn default_dir() -> Option<PathBuf> {
+        if let Ok(dir) = std::env::var("HTAP_ARTIFACTS") {
+            return Some(PathBuf::from(dir));
+        }
+        let mut cur = std::env::current_dir().ok()?;
         loop {
             let cand = cur.join("artifacts");
             if cand.join("manifest.json").exists() {
-                return Self::load(cand);
+                return Some(cand);
             }
             if !cur.pop() {
-                return Err(Error::Config(
-                    "no artifacts/manifest.json found; run `make artifacts` or set HTAP_ARTIFACTS"
-                        .into(),
-                ));
+                return None;
             }
+        }
+    }
+
+    /// Locate the default artifact directory: `$HTAP_ARTIFACTS` or
+    /// `artifacts/` relative to the workspace root (walking up from cwd).
+    pub fn discover() -> Result<Self> {
+        match Self::default_dir() {
+            Some(dir) => Self::load(dir),
+            None => Err(Error::Config(
+                "no artifacts/manifest.json found; run `make artifacts` or set HTAP_ARTIFACTS"
+                    .into(),
+            )),
         }
     }
 

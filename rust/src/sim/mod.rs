@@ -27,6 +27,7 @@ pub mod experiments;
 use crate::config::{Placement, Policy};
 use crate::coordinator::placement::NodeTopology;
 use crate::coordinator::sched::{make_scheduler, OpScheduler, ReadyTask};
+use crate::dataflow::OpRegistry;
 use crate::metrics::DeviceKind;
 use crate::testing::Rng;
 use std::cmp::Reverse;
@@ -63,96 +64,88 @@ pub struct SimWorkflow {
 }
 
 impl SimWorkflow {
-    /// The WSI pipeline in its *pipelined* form, ops + wiring matching
-    /// `app::build_workflow`, costs from `app::profile`.
-    pub fn pipelined() -> Self {
-        use crate::app::profile::entry;
-        let op = |name: &str, deps: Vec<usize>| {
-            let e = entry(name).unwrap();
-            SimOp {
-                name: name.to_string(),
-                cpu_fraction: e.cpu_fraction,
-                speedup_true: e.speedup,
-                speedup_est: e.speedup,
-                transfer_impact: e.transfer_impact,
-                has_gpu: e.speedup > 1.0,
-                deps,
-            }
-        };
-        SimWorkflow {
-            stages: vec![
-                SimStage {
-                    name: "segmentation".into(),
-                    ops: vec![
-                        op("hema_prep", vec![]),
-                        op("rbc_detect", vec![]),
-                        op("morph_open", vec![0]),
-                        op("recon_to_nuclei", vec![2]),
-                        op("fill_holes", vec![3]),
-                        op("area_threshold", vec![4]),
-                        op("bwlabel", vec![5]),
-                        op("pre_watershed", vec![5]),
-                        op("watershed", vec![7]),
-                    ],
-                },
-                SimStage {
-                    name: "features".into(),
-                    ops: vec![
-                        op("feature_graph", vec![]),
-                        op("object_features", vec![0]),
-                        op("haralick", vec![0]),
-                    ],
-                },
-            ],
-        }
+    /// Derive a simulated workflow from a real (builder-built) [`Workflow`]:
+    /// op wiring comes from the dataflow graph, calibrated costs from the
+    /// [`OpRegistry`] the workflow was built against.  `Reduce` stages are
+    /// skipped — the simulator models the per-chunk pipeline (the paper's
+    /// evaluation predates the MapReduce classification stage).
+    pub fn from_workflow(wf: &crate::dataflow::Workflow, registry: &OpRegistry) -> Self {
+        let stages = wf
+            .stages
+            .iter()
+            .filter(|s| s.kind == crate::dataflow::StageKind::PerChunk)
+            .map(|s| SimStage {
+                name: s.name.clone(),
+                ops: s
+                    .ops
+                    .iter()
+                    .map(|o| {
+                        let cpu_fraction =
+                            registry.get(&o.op).map(|spec| spec.cpu_fraction).unwrap_or(0.0);
+                        let mut deps: Vec<usize> = o
+                            .inputs
+                            .iter()
+                            .filter_map(|p| match p {
+                                crate::dataflow::PortRef::Op { op, .. } => Some(*op),
+                                _ => None,
+                            })
+                            .collect();
+                        deps.sort_unstable();
+                        deps.dedup();
+                        SimOp {
+                            name: o.name.clone(),
+                            cpu_fraction,
+                            speedup_true: o.speedup,
+                            speedup_est: o.speedup,
+                            transfer_impact: o.transfer_impact,
+                            has_gpu: o.variant.gpu_artifact.is_some(),
+                            deps,
+                        }
+                    })
+                    .collect(),
+            })
+            .collect();
+        SimWorkflow { stages }
     }
 
-    /// The *non-pipelined* (monolithic) form: one op per stage with the
-    /// blended speedup (paper Fig. 9 comparison).
+    /// The WSI pipeline in its *pipelined* form: derived from the same
+    /// `app::build_workflow` + `app::registry` the real executor runs.
+    pub fn pipelined() -> Self {
+        let registry = crate::app::registry();
+        let wf = crate::app::build_workflow(&crate::app::AppParams::for_tile_size(64), false);
+        Self::from_workflow(&wf, &registry)
+    }
+
+    /// The *non-pipelined* (monolithic) form: each stage folded into one op
+    /// with the Amdahl-blended speedup (paper Fig. 9 comparison).
     pub fn monolithic() -> Self {
-        use crate::app::profile::{blended_speedup, entry};
-        let seg_ops = [
-            "hema_prep",
-            "rbc_detect",
-            "morph_open",
-            "recon_to_nuclei",
-            "fill_holes",
-            "area_threshold",
-            "bwlabel",
-            "pre_watershed",
-            "watershed",
-        ];
-        let feat_ops = ["feature_graph", "object_features", "haralick"];
-        let frac = |names: &[&str]| -> f64 {
-            names.iter().filter_map(|n| entry(n)).map(|e| e.cpu_fraction).sum()
-        };
+        let p = Self::pipelined();
         SimWorkflow {
-            stages: vec![
-                SimStage {
-                    name: "segmentation".into(),
-                    ops: vec![SimOp {
-                        name: "segmentation-monolith".into(),
-                        cpu_fraction: frac(&seg_ops),
-                        speedup_true: blended_speedup(&seg_ops),
-                        speedup_est: blended_speedup(&seg_ops),
-                        transfer_impact: 0.1,
-                        has_gpu: true,
-                        deps: vec![],
-                    }],
-                },
-                SimStage {
-                    name: "features".into(),
-                    ops: vec![SimOp {
-                        name: "features-monolith".into(),
-                        cpu_fraction: frac(&feat_ops),
-                        speedup_true: blended_speedup(&feat_ops),
-                        speedup_est: blended_speedup(&feat_ops),
-                        transfer_impact: 0.1,
-                        has_gpu: true,
-                        deps: vec![],
-                    }],
-                },
-            ],
+            stages: p
+                .stages
+                .iter()
+                .map(|s| {
+                    let frac: f64 = s.ops.iter().map(|o| o.cpu_fraction).sum();
+                    let gpu: f64 = s
+                        .ops
+                        .iter()
+                        .map(|o| o.cpu_fraction / o.speedup_true.max(0.05) as f64)
+                        .sum();
+                    let blended = if gpu > 0.0 { (frac / gpu) as f32 } else { 1.0 };
+                    SimStage {
+                        name: s.name.clone(),
+                        ops: vec![SimOp {
+                            name: format!("{}-monolith", s.name),
+                            cpu_fraction: frac,
+                            speedup_true: blended,
+                            speedup_est: blended,
+                            transfer_impact: 0.1,
+                            has_gpu: true,
+                            deps: vec![],
+                        }],
+                    }
+                })
+                .collect(),
         }
     }
 
@@ -663,6 +656,25 @@ mod tests {
 
     fn base(n_tiles: usize) -> SimParams {
         SimParams { n_tiles, jitter: 0.1, ..Default::default() }
+    }
+
+    #[test]
+    fn sim_workflow_is_derived_from_the_builder_workflow() {
+        let p = SimWorkflow::pipelined();
+        assert_eq!(p.stages.len(), 2);
+        assert_eq!(p.stages[0].ops.len(), 9);
+        assert_eq!(p.stages[1].ops.len(), 3);
+        // registry cost fractions cover the whole profile
+        let total: f64 =
+            p.stages.iter().flat_map(|s| s.ops.iter()).map(|o| o.cpu_fraction).sum();
+        assert!((total - 1.0).abs() < 1e-9, "total = {total}");
+        // wiring came from the dataflow graph: watershed waits on pre_watershed
+        let seg = &p.stages[0];
+        let ws = seg.ops.iter().position(|o| o.name == "watershed").unwrap();
+        let pw = seg.ops.iter().position(|o| o.name == "pre_watershed").unwrap();
+        assert!(seg.ops[ws].deps.contains(&pw));
+        // CPU-only ops are not GPU-eligible in the model
+        assert!(!seg.ops.iter().find(|o| o.name == "hema_prep").unwrap().has_gpu);
     }
 
     #[test]

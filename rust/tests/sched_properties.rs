@@ -14,7 +14,9 @@
 use htap::config::Policy;
 use htap::coordinator::sched::{make_scheduler, OpScheduler, ReadyTask};
 use htap::coordinator::{Manager, WorkSource};
-use htap::dataflow::{FunctionVariant, OpDef, PortRef, StageDef, StageInput, StageKind, Workflow};
+use htap::dataflow::{
+    OpRegistry, OpSpec, PortRef, PortSpec, StageKind, Workflow, WorkflowBuilder,
+};
 use htap::metrics::DeviceKind;
 use htap::runtime::Value;
 use htap::testing::{forall, Rng};
@@ -114,45 +116,49 @@ fn prop_schedulers_conserve_tasks() {
     );
 }
 
-/// Build a random linear-ish DAG stage whose ops record execution order.
-fn random_stage(
+/// Build a random linear-ish DAG workflow (one PerChunk stage) through the
+/// typed builder; its ops record execution order into `log`.
+fn random_workflow(
     rng: &mut Rng,
     log: Arc<std::sync::Mutex<Vec<(u64, usize, usize)>>>,
     counter: Arc<AtomicUsize>,
-) -> StageDef {
+) -> Workflow {
     let n_ops = rng.range(1, 7);
-    let mut ops = Vec::with_capacity(n_ops);
+    let mut registry = OpRegistry::new();
     for oi in 0..n_ops {
-        // each op depends on a random subset of earlier ops (or the input)
-        let mut inputs = vec![PortRef::StageInput(0)];
-        for p in 0..oi {
-            if rng.bool() {
-                inputs.push(PortRef::Op { op: p, output: 0 });
-            }
-        }
         let log = log.clone();
         let counter = counter.clone();
-        ops.push(OpDef {
-            name: format!("op{oi}"),
-            variant: FunctionVariant::cpu_only(move |args: &[Value]| {
-                let chunk = args[0].as_scalar()? as u64;
-                let order = counter.fetch_add(1, Ordering::SeqCst);
-                log.lock().unwrap().push((chunk, oi, order));
-                Ok(vec![Value::Scalar(chunk as f32)])
-            }),
-            inputs,
-            n_outputs: 1,
-            speedup: rng.f32_range(1.0, 10.0),
-            transfer_impact: 0.1,
-        });
+        registry
+            .register(
+                OpSpec::cpu(&format!("op{oi}"), 1, move |args: &[Value]| {
+                    let chunk = args[0].as_scalar()? as u64;
+                    let order = counter.fetch_add(1, Ordering::SeqCst);
+                    log.lock().unwrap().push((chunk, oi, order));
+                    Ok(vec![Value::Scalar(chunk as f32)])
+                })
+                .with_profile(rng.f32_range(1.0, 10.0), 0.1, 0.0),
+            )
+            .unwrap();
     }
-    StageDef {
-        name: "rand".into(),
-        kind: StageKind::PerChunk,
-        inputs: vec![StageInput::Chunk],
-        ops,
-        outputs: vec![PortRef::Op { op: n_ops - 1, output: 0 }],
+    let mut wb = WorkflowBuilder::new("prop", registry);
+    let mut stage = wb.stage("rand", StageKind::PerChunk);
+    let chunk = stage.input_chunk();
+    let mut handles = Vec::with_capacity(n_ops);
+    for oi in 0..n_ops {
+        // each op depends on a random subset of earlier ops (or the input)
+        let mut inputs: Vec<PortSpec> = vec![chunk.clone()];
+        for p in 0..oi {
+            if rng.bool() {
+                inputs.push(handles[p].clone());
+            }
+        }
+        let h = stage.add_op(&format!("op{oi}"), &inputs).unwrap();
+        handles.push(h.out());
     }
+    let last = handles.last().cloned().unwrap();
+    stage.export(last).unwrap();
+    wb.add_stage(stage).unwrap();
+    wb.build().unwrap()
 }
 
 #[test]
@@ -165,9 +171,8 @@ fn prop_random_dags_execute_once_in_dependency_order() {
             let log = Arc::new(std::sync::Mutex::new(Vec::new()));
             let counter = Arc::new(AtomicUsize::new(0));
             let mut rng = Rng::new(seed);
-            let mut wf = Workflow::new("prop");
-            let stage = random_stage(&mut rng, log.clone(), counter.clone());
-            let deps: Vec<Vec<usize>> = stage
+            let wf = random_workflow(&mut rng, log.clone(), counter.clone());
+            let deps: Vec<Vec<usize>> = wf.stages[0]
                 .ops
                 .iter()
                 .map(|o| {
@@ -180,8 +185,7 @@ fn prop_random_dags_execute_once_in_dependency_order() {
                         .collect()
                 })
                 .collect();
-            let n_ops = stage.ops.len();
-            wf.add_stage(stage);
+            let n_ops = wf.stages[0].ops.len();
             wf.validate().map_err(|e| e.to_string())?;
             let wf = Arc::new(wf);
             let loader: htap::coordinator::ChunkLoader =
@@ -198,7 +202,7 @@ fn prop_random_dags_execute_once_in_dependency_order() {
                 mgr.clone(),
                 wf,
                 cfg,
-                Arc::new(htap::runtime::ArtifactManifest::discover().map_err(|e| e.to_string())?),
+                Arc::new(htap::runtime::ArtifactManifest::discover_or_empty()),
                 Arc::new(htap::metrics::MetricsHub::new()),
                 Default::default(),
             )
@@ -240,21 +244,17 @@ fn prop_manager_never_exceeds_window() {
         20,
         |r: &mut Rng| (r.range(1, 20), r.range(1, 8)),
         |&(n_chunks, window)| {
-            let mut wf = Workflow::new("w");
-            wf.add_stage(StageDef {
-                name: "s".into(),
-                kind: StageKind::PerChunk,
-                inputs: vec![StageInput::Chunk],
-                ops: vec![OpDef {
-                    name: "id".into(),
-                    variant: FunctionVariant::cpu_only(|a: &[Value]| Ok(vec![a[0].clone()])),
-                    inputs: vec![PortRef::StageInput(0)],
-                    n_outputs: 1,
-                    speedup: 1.0,
-                    transfer_impact: 0.0,
-                }],
-                outputs: vec![PortRef::Op { op: 0, output: 0 }],
-            });
+            let mut registry = OpRegistry::new();
+            registry
+                .register_cpu("id", 1, |a: &[Value]| Ok(vec![a[0].clone()]))
+                .unwrap();
+            let mut wb = WorkflowBuilder::new("w", registry);
+            let mut s = wb.stage("s", StageKind::PerChunk);
+            let chunk = s.input_chunk();
+            let op = s.add_op("id", &[chunk]).unwrap();
+            s.export(op.out()).unwrap();
+            wb.add_stage(s).unwrap();
+            let wf = wb.build().map_err(|e| e.to_string())?;
             let loader: htap::coordinator::ChunkLoader =
                 Arc::new(|c| Ok(vec![Value::Scalar(c as f32)]));
             let mgr = Manager::new(Arc::new(wf), loader, n_chunks).map_err(|e| e.to_string())?;

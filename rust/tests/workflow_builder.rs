@@ -1,0 +1,198 @@
+//! Integration coverage for the typed WorkflowBuilder + OpRegistry API and
+//! the declarative JSON workflow loader:
+//!
+//! * a second, non-WSI workflow (generic convolve→threshold→label→stats)
+//!   runs end-to-end through `run_local` from its JSON description;
+//! * wiring mistakes are rejected eagerly, with both stage kinds
+//!   bounds-checked;
+//! * JSON descriptions round-trip.
+
+use htap::app::generic::{cell_stats_workflow, generic_registry, CELL_STATS_JSON};
+use htap::config::RunConfig;
+use htap::coordinator::run_local;
+use htap::data::{SynthConfig, TileStore};
+use htap::dataflow::{
+    param, workflow_from_str, workflow_to_json, PortSpec, StageKind, WorkflowBuilder,
+};
+use std::collections::HashMap;
+use std::sync::Arc;
+
+#[test]
+fn generic_json_workflow_runs_end_to_end() {
+    let n_tiles = 5;
+    let tile_size = 64;
+    let wf = Arc::new(cell_stats_workflow().unwrap());
+    assert_eq!(wf.name, "cell-stats");
+    let store = Arc::new(TileStore::new(SynthConfig::for_tile_size(tile_size, 3), n_tiles));
+    let cfg = RunConfig {
+        tile_size,
+        n_tiles,
+        cpu_workers: 2,
+        gpu_workers: 0,
+        ..Default::default()
+    };
+    let outcome = run_local(wf, store.loader(), n_tiles, cfg, HashMap::new()).unwrap();
+    let (done, total) = outcome.manager.progress();
+    assert_eq!(done, total);
+    // n per-chunk detect instances + 1 reduce instance
+    assert_eq!(total, n_tiles + 1);
+    let agg = outcome.manager.reduce_outputs("aggregate").expect("aggregate output");
+    let stats = agg[0].as_tensor().unwrap();
+    assert_eq!(stats.shape(), &[4]);
+    assert!(stats.data()[0] >= 1.0, "mean region count >= 1, got {}", stats.data()[0]);
+    assert!(stats.data()[3] > 0.0 && stats.data()[3] < 1.0, "coverage in (0,1)");
+}
+
+#[test]
+fn generic_workflow_survives_hybrid_device_mix() {
+    // All generic ops are CPU-only; a worker with an accelerator thread
+    // must still complete (the GPU controller simply finds no eligible
+    // tasks, or falls back to CPU members).
+    let n_tiles = 3;
+    let wf = Arc::new(cell_stats_workflow().unwrap());
+    let store = Arc::new(TileStore::new(SynthConfig::for_tile_size(64, 5), n_tiles));
+    let cfg = RunConfig { tile_size: 64, n_tiles, cpu_workers: 1, gpu_workers: 1, ..Default::default() };
+    let outcome = run_local(wf, store.loader(), n_tiles, cfg, HashMap::new()).unwrap();
+    let (done, total) = outcome.manager.progress();
+    assert_eq!(done, total);
+    assert!(outcome.manager.reduce_outputs("aggregate").is_some());
+}
+
+#[test]
+fn json_round_trip_preserves_structure_and_behaviour() {
+    let reg = Arc::new(generic_registry());
+    let wf = workflow_from_str(CELL_STATS_JSON, reg.clone()).unwrap();
+    let j = workflow_to_json(&wf).unwrap();
+    let wf2 = workflow_from_str(&j.to_string(), reg).unwrap();
+    let j2 = workflow_to_json(&wf2).unwrap();
+    assert_eq!(j.to_string(), j2.to_string(), "serialise(load(x)) must be a fixpoint");
+    assert_eq!(wf2.stages.len(), wf.stages.len());
+    assert_eq!(wf2.total_ops(), wf.total_ops());
+    // behavioural equivalence on one chunk
+    let store = TileStore::new(SynthConfig::for_tile_size(64, 11), 1);
+    let tile = htap::runtime::Value::Tensor(store.tile(0).to_tensor());
+    let a = htap::dataflow::run_stage_serial(&wf.stages[0], &[tile.clone()]).unwrap();
+    let b = htap::dataflow::run_stage_serial(&wf2.stages[0], &[tile]).unwrap();
+    assert_eq!(a, b);
+}
+
+#[test]
+fn wsi_registry_builds_custom_workflows() {
+    // The WSI ops compose into new pipelines too: a minimal two-op
+    // segmentation front-end, assembled from the same registry as the
+    // full app.
+    let reg = Arc::new(htap::app::registry());
+    let mut wb = WorkflowBuilder::with_shared_registry("mini", reg);
+    let mut s = wb.stage("front", StageKind::PerChunk);
+    let rgb = s.input_chunk();
+    let hema = s.add_op("hema_prep", &[rgb]).unwrap();
+    let opened = s.add_op("morph_open", &[hema.out()]).unwrap();
+    s.export(opened.out()).unwrap();
+    wb.add_stage(s).unwrap();
+    let wf = wb.build().unwrap();
+    assert_eq!(wf.total_ops(), 2);
+    // profile flowed in from the registry
+    assert_eq!(
+        wf.stages[0].ops[1].speedup,
+        htap::app::profile::speedup_of("morph_open")
+    );
+}
+
+#[test]
+fn eager_validation_rejects_wiring_mistakes() {
+    let reg = Arc::new(htap::app::registry());
+    let wb = WorkflowBuilder::with_shared_registry("bad", reg);
+    let mut s = wb.stage("seg", StageKind::PerChunk);
+    let rgb = s.input_chunk();
+    // unknown registry op
+    assert!(s.add_op("sharpen", &[rgb.clone()]).is_err());
+    // reference to an op that doesn't exist yet (forward-only by handles;
+    // raw indices are bounds-checked)
+    assert!(s
+        .add_op("morph_open", &[PortSpec::Output { op: 4, output: 0 }])
+        .is_err());
+    // out-of-range stage input on a PerChunk stage
+    assert!(s.add_op("morph_open", &[PortSpec::Input(7)]).is_err());
+    // duplicate instance name
+    let h = s.add_op("hema_prep", &[rgb.clone()]).unwrap();
+    assert!(s.add_op("hema_prep", &[rgb]).is_err());
+    // out-of-range output of a real handle
+    assert!(s.export(h.output(1)).is_err());
+}
+
+#[test]
+fn reduce_stages_are_bounds_checked_too() {
+    // The historical foot-gun: StageInput bounds were only checked for
+    // PerChunk stages.  Both the builder and Workflow::validate now check
+    // Reduce stages as well.
+    let reg = Arc::new(generic_registry());
+    let mut wb = WorkflowBuilder::with_shared_registry("t", reg);
+    let mut d = wb.stage("detect", StageKind::PerChunk);
+    let c = d.input_chunk();
+    let g = d.add_op("grayscale", &[c]).unwrap();
+    let r = d.add_op("region_stats", &[g.out()]).unwrap();
+    d.export(r.out()).unwrap();
+    let d = wb.add_stage(d).unwrap();
+
+    let mut red = wb.stage("agg", StageKind::Reduce);
+    red.input_upstream(d.output(0));
+    // an explicit out-of-range stage input inside a Reduce stage is an
+    // immediate error (not a deferred runtime failure)
+    assert!(red.add_op("mean_stats", &[PortSpec::Input(5)]).is_err());
+    // in-range explicit input is fine
+    let m = red.add_op("mean_stats", &[PortSpec::Input(0)]).unwrap();
+    red.export(m.out()).unwrap();
+    wb.add_stage(red).unwrap();
+    wb.build().unwrap();
+}
+
+#[test]
+fn cross_builder_stage_handles_cannot_forward_reference() {
+    let reg = Arc::new(generic_registry());
+    // build a two-stage workflow and keep the *second* stage's handle
+    let mut wb1 = WorkflowBuilder::with_shared_registry("w1", reg.clone());
+    let mut a = wb1.stage("a", StageKind::PerChunk);
+    let c = a.input_chunk();
+    let g = a.add_op("grayscale", &[c]).unwrap();
+    a.export(g.out()).unwrap();
+    let a = wb1.add_stage(a).unwrap();
+    let mut b = wb1.stage("b", StageKind::PerChunk);
+    let inp = b.input_upstream(a.output(0));
+    let i = b.add_op("invert", &[inp]).unwrap();
+    b.export(i.out()).unwrap();
+    let b_handle = wb1.add_stage(b).unwrap();
+
+    // a fresh builder has no stage 1 yet: the stolen handle is rejected
+    let mut wb2 = WorkflowBuilder::with_shared_registry("w2", reg);
+    let mut s = wb2.stage("s", StageKind::PerChunk);
+    let inp = s.input_upstream(b_handle.output(0));
+    let op = s.add_op("grayscale", &[inp]).unwrap();
+    s.export(op.out()).unwrap();
+    assert!(wb2.add_stage(s).is_err());
+}
+
+#[test]
+fn scalar_params_wire_through_json_and_builder_identically() {
+    let reg = Arc::new(generic_registry());
+    // builder version of the detect stage's binarize threshold
+    let mut wb = WorkflowBuilder::with_shared_registry("p", reg.clone());
+    let mut s = wb.stage("detect", StageKind::PerChunk);
+    let c = s.input_chunk();
+    let g = s.add_op("grayscale", &[c]).unwrap();
+    let inv = s.add_op("invert", &[g.out()]).unwrap();
+    let sm = s.add_op("gauss3", &[inv.out()]).unwrap();
+    let bin = s.add_op("binarize", &[sm.out(), param(140.0)]).unwrap();
+    let lab = s.add_op("cc_label", &[bin.out()]).unwrap();
+    let st = s.add_op("region_stats", &[lab.out()]).unwrap();
+    s.export(lab.out()).unwrap();
+    s.export(st.out()).unwrap();
+    wb.add_stage(s).unwrap();
+    let built = wb.build().unwrap();
+
+    let loaded = workflow_from_str(CELL_STATS_JSON, reg).unwrap();
+    let store = TileStore::new(SynthConfig::for_tile_size(64, 2), 1);
+    let tile = htap::runtime::Value::Tensor(store.tile(0).to_tensor());
+    let a = htap::dataflow::run_stage_serial(&built.stages[0], &[tile.clone()]).unwrap();
+    let b = htap::dataflow::run_stage_serial(&loaded.stages[0], &[tile]).unwrap();
+    assert_eq!(a, b, "builder and JSON descriptions define the same computation");
+}

@@ -1,0 +1,252 @@
+//! Offline shim for the `xla` (xla-rs) bindings.
+//!
+//! The real crate links `xla_extension` and executes HLO through PJRT.
+//! That native bundle is not available in the offline build environment,
+//! so this crate provides the *exact API surface* `htap` uses with a null
+//! accelerator backend:
+//!
+//! * host-side types ([`Literal`], [`ArrayShape`], [`PjRtBuffer`]) are fully
+//!   functional — they carry f32 data in host memory;
+//! * [`PjRtClient::compile`] returns an error, so any attempt to actually
+//!   execute an AOT artifact fails with a clear message.  The htap Worker
+//!   Resource Manager degrades both *unresolvable* accelerator members and
+//!   *failed* accelerator executions to the CPU member of the function
+//!   variant (with a one-time warning), so whole-app runs complete even
+//!   with artifacts present under this shim.
+//!
+//! To run the AOT artifacts for real, point the `xla` dependency in
+//! `rust/Cargo.toml` at the actual xla-rs crate; no htap source changes
+//! are required.
+
+use std::fmt;
+use std::path::Path;
+
+/// Error type mirroring `xla::Error`.
+#[derive(Debug)]
+pub struct Error(pub String);
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "xla: {}", self.0)
+    }
+}
+
+impl std::error::Error for Error {}
+
+pub type Result<T> = std::result::Result<T, Error>;
+
+/// Marker trait for element types the shim can move in and out of literals.
+/// Only f32 is used by htap (all artifact I/O is f32).
+pub trait NativeType: Copy {
+    fn from_f32(v: f32) -> Self;
+    fn to_f32(self) -> f32;
+}
+
+impl NativeType for f32 {
+    fn from_f32(v: f32) -> Self {
+        v
+    }
+    fn to_f32(self) -> f32 {
+        self
+    }
+}
+
+/// Dimensions of a (dense, f32) array literal.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct ArrayShape {
+    dims: Vec<i64>,
+}
+
+impl ArrayShape {
+    pub fn dims(&self) -> &[i64] {
+        &self.dims
+    }
+}
+
+/// A host-side literal: shape + f32 data (tuples hold element literals).
+#[derive(Debug, Clone, PartialEq)]
+pub struct Literal {
+    dims: Vec<i64>,
+    data: Vec<f32>,
+    tuple: Option<Vec<Literal>>,
+}
+
+impl Literal {
+    /// Rank-0 scalar literal.
+    pub fn scalar(v: f32) -> Literal {
+        Literal { dims: vec![], data: vec![v], tuple: None }
+    }
+
+    /// Rank-1 literal over a host slice.
+    pub fn vec1(data: &[f32]) -> Literal {
+        Literal { dims: vec![data.len() as i64], data: data.to_vec(), tuple: None }
+    }
+
+    /// Reshape (element count must match).
+    pub fn reshape(&self, dims: &[i64]) -> Result<Literal> {
+        let n: i64 = dims.iter().product();
+        if n as usize != self.data.len() {
+            return Err(Error(format!(
+                "reshape to {:?} ({n} elements) from {} elements",
+                dims,
+                self.data.len()
+            )));
+        }
+        Ok(Literal { dims: dims.to_vec(), data: self.data.clone(), tuple: None })
+    }
+
+    pub fn array_shape(&self) -> Result<ArrayShape> {
+        if self.tuple.is_some() {
+            return Err(Error("literal is a tuple, not an array".into()));
+        }
+        Ok(ArrayShape { dims: self.dims.clone() })
+    }
+
+    pub fn to_vec<T: NativeType>(&self) -> Result<Vec<T>> {
+        if self.tuple.is_some() {
+            return Err(Error("literal is a tuple, not an array".into()));
+        }
+        Ok(self.data.iter().map(|&v| T::from_f32(v)).collect())
+    }
+
+    /// Split a tuple literal into its elements.
+    pub fn decompose_tuple(&mut self) -> Result<Vec<Literal>> {
+        match self.tuple.take() {
+            Some(parts) => Ok(parts),
+            None => Err(Error("literal is not a tuple".into())),
+        }
+    }
+}
+
+/// Parsed HLO module text.  The shim only retains the raw text; it cannot
+/// lower or verify it.
+#[derive(Debug, Clone)]
+pub struct HloModuleProto {
+    #[allow(dead_code)]
+    text: String,
+}
+
+impl HloModuleProto {
+    pub fn from_text_file<P: AsRef<Path>>(path: P) -> Result<HloModuleProto> {
+        let text = std::fs::read_to_string(path.as_ref())
+            .map_err(|e| Error(format!("read {}: {e}", path.as_ref().display())))?;
+        Ok(HloModuleProto { text })
+    }
+}
+
+/// An XLA computation wrapping an HLO module.
+#[derive(Debug, Clone)]
+pub struct XlaComputation {
+    #[allow(dead_code)]
+    module: HloModuleProto,
+}
+
+impl XlaComputation {
+    pub fn from_proto(proto: &HloModuleProto) -> XlaComputation {
+        XlaComputation { module: proto.clone() }
+    }
+}
+
+/// A device-resident buffer.  In the shim, "device" memory is host memory.
+#[derive(Debug, Clone)]
+pub struct PjRtBuffer {
+    literal: Literal,
+}
+
+impl PjRtBuffer {
+    pub fn to_literal_sync(&self) -> Result<Literal> {
+        Ok(self.literal.clone())
+    }
+}
+
+/// A compiled executable.  Never constructed by the shim (compilation
+/// fails), but the type must exist for the caller's executable cache.
+#[derive(Debug)]
+pub struct PjRtLoadedExecutable {
+    _private: (),
+}
+
+impl PjRtLoadedExecutable {
+    pub fn execute_b(&self, _args: &[&PjRtBuffer]) -> Result<Vec<Vec<PjRtBuffer>>> {
+        Err(Error("offline xla shim cannot execute HLO".into()))
+    }
+}
+
+/// The PJRT client.  `cpu()` succeeds so device controller threads can
+/// start; `compile` reports that this build has no accelerator backend.
+#[derive(Debug)]
+pub struct PjRtClient {
+    _private: (),
+}
+
+impl PjRtClient {
+    pub fn cpu() -> Result<PjRtClient> {
+        Ok(PjRtClient { _private: () })
+    }
+
+    pub fn compile(&self, _comp: &XlaComputation) -> Result<PjRtLoadedExecutable> {
+        Err(Error(
+            "offline xla shim cannot compile HLO artifacts; swap rust/xla for the real \
+             xla-rs crate to enable accelerator execution"
+                .into(),
+        ))
+    }
+
+    pub fn buffer_from_host_buffer<T: NativeType>(
+        &self,
+        data: &[T],
+        dims: &[usize],
+        _device: Option<usize>,
+    ) -> Result<PjRtBuffer> {
+        let n: usize = dims.iter().product();
+        if n != data.len() {
+            return Err(Error(format!(
+                "host buffer has {} elements, dims {:?} imply {n}",
+                data.len(),
+                dims
+            )));
+        }
+        let f32s: Vec<f32> = data.iter().map(|&v| v.to_f32()).collect();
+        let dims_i64: Vec<i64> = dims.iter().map(|&d| d as i64).collect();
+        Ok(PjRtBuffer {
+            literal: Literal { dims: dims_i64, data: f32s, tuple: None },
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn literal_roundtrip() {
+        let l = Literal::vec1(&[1.0, 2.0, 3.0, 4.0]);
+        let r = l.reshape(&[2, 2]).unwrap();
+        assert_eq!(r.array_shape().unwrap().dims(), &[2, 2]);
+        assert_eq!(r.to_vec::<f32>().unwrap(), vec![1.0, 2.0, 3.0, 4.0]);
+        assert!(l.reshape(&[3]).is_err());
+    }
+
+    #[test]
+    fn scalar_literal() {
+        let s = Literal::scalar(7.5);
+        assert!(s.array_shape().unwrap().dims().is_empty());
+        assert_eq!(s.to_vec::<f32>().unwrap(), vec![7.5]);
+    }
+
+    #[test]
+    fn tuple_decompose_only_for_tuples() {
+        let mut s = Literal::scalar(1.0);
+        assert!(s.decompose_tuple().is_err());
+    }
+
+    #[test]
+    fn client_compiles_nothing() {
+        let c = PjRtClient::cpu().unwrap();
+        let proto = HloModuleProto { text: String::new() };
+        assert!(c.compile(&XlaComputation::from_proto(&proto)).is_err());
+        let buf = c.buffer_from_host_buffer::<f32>(&[1.0, 2.0], &[2], None).unwrap();
+        assert_eq!(buf.to_literal_sync().unwrap().to_vec::<f32>().unwrap(), vec![1.0, 2.0]);
+        assert!(c.buffer_from_host_buffer::<f32>(&[1.0], &[2], None).is_err());
+    }
+}
