@@ -4,11 +4,13 @@
 #   make test       — tier-1: cargo build --release && cargo test -q
 #   make artifacts  — AOT-lower the JAX graphs to artifacts/*.hlo.txt
 #   make lint       — clippy -D warnings + rustfmt check
+#   make calibrate  — measure op costs on this host -> profiles.json
+#   make bench-baseline — record the fig7/8/9 snapshot (BENCH_seed.json)
 
 CARGO ?= cargo
 PYTHON ?= python3
 
-.PHONY: build test artifacts lint clean
+.PHONY: build test artifacts lint calibrate bench-baseline clean
 
 build:
 	cd rust && $(CARGO) build --release
@@ -22,6 +24,12 @@ artifacts:
 lint:
 	cd rust && $(CARGO) clippy -- -D warnings
 	cd rust && $(CARGO) fmt --check
+
+calibrate:
+	cd rust && $(CARGO) run --release -- calibrate --out ../profiles.json
+
+bench-baseline:
+	./scripts/bench_baseline.sh BENCH_seed.json
 
 clean:
 	cd rust && $(CARGO) clean

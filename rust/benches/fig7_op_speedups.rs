@@ -7,12 +7,13 @@
 //! M2090 GPU, so the measured "speedups" here characterise this testbed;
 //! the paper-calibrated profile (app::profile) is printed alongside.
 //!
-//! Requires `make artifacts`.
+//! Without `make artifacts` (or under the offline xla shim) the PJRT
+//! column degrades to "-" and only the CPU members are measured — the same
+//! graceful degradation the WRM applies, so the bench runs everywhere.
 
 use htap::app::{ops, profile};
 use htap::bench_util::{f, measure, Table};
 use htap::data::{SynthConfig, TileSynthesizer};
-use htap::imgproc::Gray;
 use htap::runtime::pjrt::DeviceExecutor;
 use htap::runtime::{ArtifactManifest, Value};
 
@@ -20,8 +21,13 @@ const TILE: usize = 64;
 const ITERS: usize = 5;
 
 fn main() {
-    let manifest = ArtifactManifest::discover().expect("run `make artifacts` first");
-    let mut executor = DeviceExecutor::new(manifest).expect("pjrt client");
+    let manifest = ArtifactManifest::discover_or_empty();
+    let mut executor = if manifest.is_empty() {
+        eprintln!("fig7: no AOT artifacts (run `make artifacts`); measuring CPU members only");
+        None
+    } else {
+        DeviceExecutor::new(manifest).ok()
+    };
     let synth = TileSynthesizer::new(SynthConfig::for_tile_size(TILE, 7));
     let rgb = Value::Tensor(synth.tissue_tile(0).to_tensor());
 
@@ -107,16 +113,28 @@ fn main() {
     let mut cpu_total = 0.0;
     for (name, gpu_args, cpu_call) in &cases {
         let cpu = measure(name, 1, ITERS, || cpu_call());
-        let gpu = measure(name, 1, ITERS, || {
-            executor.run(name, TILE, gpu_args).unwrap();
+        // probe once; a failed execution (missing artifact, offline shim)
+        // leaves the PJRT column unmeasured
+        let gpu_ms: Option<f64> = executor.as_mut().and_then(|ex| {
+            if ex.run(name, TILE, gpu_args).is_err() {
+                return None;
+            }
+            let s = measure(name, 1, ITERS, || {
+                ex.run(name, TILE, gpu_args).unwrap();
+            });
+            Some(s.mean_ms())
         });
         cpu_total += cpu.mean_ms();
         let e = profile::entry(name).unwrap();
+        let (gpu_cell, ratio_cell) = match gpu_ms {
+            Some(g) => (f(g, 3), f(cpu.mean_ms() / g, 2)),
+            None => ("-".to_string(), "-".to_string()),
+        };
         t.row(&[
             name.to_string(),
             f(cpu.mean_ms(), 3),
-            f(gpu.mean_ms(), 3),
-            f(cpu.mean_ms() / gpu.mean_ms(), 2),
+            gpu_cell,
+            ratio_cell,
             f(e.speedup as f64, 1),
             f(e.speedup_with_transfer() as f64, 1),
         ]);
@@ -125,6 +143,4 @@ fn main() {
     println!("\nsingle-core total per tile: {:.2} ms ({TILE}x{TILE} synthetic tile)", cpu_total);
     println!("note: PJRT CPU backend stands in for the GPU; the paper-calibrated");
     println!("speedup columns drive PATS and the cluster simulator.");
-    // keep the borrow checker happy about the Gray import used in docs
-    let _ = Gray::zeros(1, 1);
 }

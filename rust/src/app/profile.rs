@@ -94,6 +94,30 @@ pub fn transfer_impact_of(name: &str) -> f32 {
     entry(name).map(|e| e.transfer_impact).unwrap_or(0.0)
 }
 
+/// The static Fig. 7 table expressed as a [`ProfileStore`], as if an
+/// offline calibration pass had measured exactly the paper's numbers: per
+/// op, CPU time = `cpu_fraction` of a 1000 ms tile and GPU time =
+/// CPU/speedup, so `store.speedup(op)` reproduces the table.  Useful as a
+/// baseline to diff measured stores against, and in tests that need a
+/// fully-populated store without running a calibration pass.
+pub fn fig7_store() -> crate::runtime::calibrate::ProfileStore {
+    use crate::metrics::DeviceKind;
+    use std::time::Duration;
+    const TILE_MS: f64 = 1000.0;
+    let mut store = crate::runtime::calibrate::ProfileStore::new(64);
+    for e in PROFILE {
+        let cpu_ms = e.cpu_fraction * TILE_MS;
+        store.record(e.name, DeviceKind::Cpu, Duration::from_secs_f64(cpu_ms / 1e3));
+        store.record(
+            e.name,
+            DeviceKind::Gpu,
+            Duration::from_secs_f64(cpu_ms / e.speedup as f64 / 1e3),
+        );
+        store.record_transfer_impact(e.name, e.transfer_impact);
+    }
+    store
+}
+
 /// Time-weighted blended speedup over a set of ops — the effective speedup
 /// of a *monolithic* stage (Amdahl over the op mix).
 pub fn blended_speedup(names: &[&str]) -> f32 {
@@ -158,5 +182,17 @@ mod tests {
     fn unknown_ops_default_neutral() {
         assert_eq!(speedup_of("nope"), 1.0);
         assert_eq!(transfer_impact_of("nope"), 0.0);
+    }
+
+    #[test]
+    fn fig7_store_reproduces_the_static_table() {
+        let store = fig7_store();
+        assert_eq!(store.len(), PROFILE.len());
+        for e in PROFILE {
+            let s = store.speedup(e.name).unwrap();
+            assert!((s - e.speedup).abs() < 1e-3, "{}: {s} vs {}", e.name, e.speedup);
+            let est = store.estimate(e.name).unwrap();
+            assert_eq!(est.transfer_impact, Some(e.transfer_impact), "{}", e.name);
+        }
     }
 }

@@ -1,11 +1,18 @@
 //! Hand-rolled CLI parsing (clap is not in the offline crate set).
 //!
 //! `htap <command> [--key value ...]`; commands map to the launcher modes
-//! in `main.rs`: `run`, `sim`, `manager`, `worker`, `bench-all`.
+//! in `main.rs`: `run`, `sim`, `calibrate`, `manager`, `worker`.  A flag
+//! followed by another flag (or nothing) is boolean: `--quick` parses as
+//! `--quick true`.
 
 use crate::config::RunConfig;
 use crate::{Error, Result};
 use std::collections::BTreeMap;
+
+/// Flags that take no value.  Everything else still requires one, so a
+/// forgotten value for a string/path flag is an error, not a silent
+/// `"true"`.
+const BOOL_FLAGS: &[&str] = &["quick", "no-dl", "no-prefetch"];
 
 /// Parsed command line.
 #[derive(Debug, Clone)]
@@ -27,10 +34,23 @@ impl Cli {
             let key = arg
                 .strip_prefix("--")
                 .ok_or_else(|| Error::Config(format!("expected --flag, got '{arg}'")))?;
-            let val = it
-                .next()
-                .cloned()
-                .ok_or_else(|| Error::Config(format!("flag --{key} needs a value")))?;
+            let val = if BOOL_FLAGS.contains(&key) {
+                // boolean flags need no value; an explicit true/false is
+                // accepted (`--quick` == `--quick true`)
+                match it.clone().next() {
+                    Some(v) if matches!(v.as_str(), "true" | "false") => {
+                        it.next().cloned().unwrap()
+                    }
+                    _ => "true".to_string(),
+                }
+            } else {
+                // every other flag still requires a value, so a forgotten
+                // one (`--out` with nothing after) stays a hard error
+                // instead of silently becoming the string "true"
+                it.next()
+                    .cloned()
+                    .ok_or_else(|| Error::Config(format!("flag --{key} needs a value")))?
+            };
             flags.insert(key.to_string(), val);
         }
         Ok(Cli { command, flags })
@@ -38,6 +58,11 @@ impl Cli {
 
     pub fn get(&self, key: &str) -> Option<&str> {
         self.flags.get(key).map(|s| s.as_str())
+    }
+
+    /// A boolean flag: present with value "true" (bare `--flag` counts).
+    pub fn get_flag(&self, key: &str) -> bool {
+        matches!(self.get(key), Some("true") | Some("1") | Some("yes"))
     }
 
     pub fn get_usize(&self, key: &str, default: usize) -> Result<usize> {
@@ -93,13 +118,24 @@ htap — high-throughput hierarchical analysis pipelines (Teodoro et al. 2012)
 USAGE:
     htap run     [--tiles N] [--tile-size S] [--cpus N] [--gpus N]
                  [--policy fcfs|pats] [--window N] [--config file.json]
-                 [--workflow wf.json]
+                 [--workflow wf.json] [--profiles profiles.json]
+                 [--save-profiles out.json]
         run a workflow locally on synthetic tiles (default: the built-in
         WSI app; --workflow loads a declarative JSON workflow over the
-        registered op set — see docs/workflow_api.md)
+        registered op set — see docs/workflow_api.md).  --profiles seeds
+        PATS with measured estimates from `htap calibrate`;
+        --save-profiles writes the post-run EWMA estimates back out
 
     htap sim     [--nodes N] [--tiles N] [--policy fcfs|pats]
-        discrete-event simulation at cluster scale (Keeneland model)
+                 [--profiles profiles.json]
+        discrete-event simulation at cluster scale (Keeneland model);
+        --profiles calibrates the cost model from measured estimates
+
+    htap calibrate [--quick] [--tile-size S] [--tiles N] [--reps N]
+                   [--seed N] [--out profiles.json]
+        microbenchmark every registered op on synthetic tiles across the
+        device kinds this host can execute, and write a versioned
+        profiles.json consumed by run/sim/PATS (--quick: CI-sized pass)
 
     htap manager --listen HOST:PORT [--tiles N] [--tile-size S] [--workers N]
         serve stage instances to TCP workers
@@ -126,8 +162,26 @@ mod tests {
     }
 
     #[test]
+    fn boolean_flags_parse_without_values() {
+        // trailing boolean flag
+        let c = Cli::parse(&args(&["calibrate", "--quick"])).unwrap();
+        assert!(c.get_flag("quick"));
+        assert!(!c.get_flag("absent"));
+        // boolean flag followed by another flag
+        let c = Cli::parse(&args(&["run", "--no-dl", "--tiles", "4"])).unwrap();
+        assert_eq!(c.get("no-dl"), Some("true"));
+        assert_eq!(c.get("tiles"), Some("4"));
+        // an explicit value still wins
+        let c = Cli::parse(&args(&["calibrate", "--quick", "false"])).unwrap();
+        assert!(!c.get_flag("quick"));
+    }
+
+    #[test]
     fn missing_value_rejected() {
+        // non-boolean flags still require a value — a forgotten one must
+        // not silently become the string "true"
         assert!(Cli::parse(&args(&["run", "--tiles"])).is_err());
+        assert!(Cli::parse(&args(&["calibrate", "--out"])).is_err());
         assert!(Cli::parse(&args(&["run", "tiles", "3"])).is_err());
         assert!(Cli::parse(&args(&[])).is_err());
     }

@@ -21,6 +21,7 @@ pub use placement::NodeTopology;
 use crate::config::RunConfig;
 use crate::dataflow::Workflow;
 use crate::metrics::{MetricsHub, MetricsReport};
+use crate::runtime::calibrate::SharedProfiles;
 use crate::runtime::ArtifactManifest;
 use crate::Result;
 use std::collections::HashMap;
@@ -30,6 +31,10 @@ use std::sync::Arc;
 pub struct RunOutcome {
     pub metrics: MetricsReport,
     pub manager: Arc<Manager>,
+    /// The run's live profile store: offline seed (if any) + the online
+    /// EWMA updates recorded by the WRM.  Snapshot it to persist measured
+    /// estimates (`htap run --save-profiles`).
+    pub profiles: Arc<SharedProfiles>,
 }
 
 /// Execute a workflow on this machine: one in-process Manager + one Worker
@@ -43,22 +48,36 @@ pub fn run_local(
     cfg: RunConfig,
     stage_bindings: HashMap<String, String>,
 ) -> Result<RunOutcome> {
+    run_local_profiled(workflow, loader, n_chunks, cfg, stage_bindings, SharedProfiles::fresh())
+}
+
+/// [`run_local`] with a caller-supplied profile store (seeded from a
+/// calibrated `profiles.json`); completion times fold into it online.
+pub fn run_local_profiled(
+    workflow: Arc<Workflow>,
+    loader: ChunkLoader,
+    n_chunks: usize,
+    cfg: RunConfig,
+    stage_bindings: HashMap<String, String>,
+    profiles: Arc<SharedProfiles>,
+) -> Result<RunOutcome> {
     // No artifacts built => every variant degrades to its CPU member.
     let manifest = Arc::new(ArtifactManifest::discover_or_empty());
     let metrics = Arc::new(MetricsHub::new());
     let manager = Manager::new(workflow.clone(), loader, n_chunks)?;
     metrics.mark_start();
-    worker::run_worker(
+    worker::run_worker_profiled(
         manager.clone(),
         workflow,
         cfg,
         manifest,
         metrics.clone(),
         stage_bindings,
+        profiles.clone(),
     )?;
     metrics.mark_finish();
     if let Some(e) = manager.error() {
         return Err(crate::Error::Scheduler(e));
     }
-    Ok(RunOutcome { metrics: metrics.report(), manager })
+    Ok(RunOutcome { metrics: metrics.report(), manager, profiles })
 }

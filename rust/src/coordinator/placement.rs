@@ -91,14 +91,28 @@ impl NodeTopology {
     }
 }
 
-/// Pin the calling thread to one core (no-op if the core doesn't exist).
+/// Pin the calling thread to one core (returns false if the core doesn't
+/// exist or the platform doesn't support affinity).
+///
+/// The `libc` crate is not in the offline dependency set, so the Linux
+/// implementation declares `sched_setaffinity` directly against the C
+/// library std already links.  `cpu_set_t` is a 1024-bit mask.
+#[cfg(target_os = "linux")]
 pub fn pin_to_core(core: usize) -> bool {
-    unsafe {
-        let mut set: libc::cpu_set_t = std::mem::zeroed();
-        libc::CPU_ZERO(&mut set);
-        libc::CPU_SET(core % libc::CPU_SETSIZE as usize, &mut set);
-        libc::sched_setaffinity(0, std::mem::size_of::<libc::cpu_set_t>(), &set) == 0
+    const CPU_SETSIZE: usize = 1024;
+    extern "C" {
+        fn sched_setaffinity(pid: i32, cpusetsize: usize, mask: *const u64) -> i32;
     }
+    let mut mask = [0u64; CPU_SETSIZE / 64];
+    let c = core % CPU_SETSIZE;
+    mask[c / 64] |= 1u64 << (c % 64);
+    unsafe { sched_setaffinity(0, std::mem::size_of_val(&mask), mask.as_ptr()) == 0 }
+}
+
+/// Non-Linux fallback: affinity is not applied; the OS places the thread.
+#[cfg(not(target_os = "linux"))]
+pub fn pin_to_core(_core: usize) -> bool {
+    false
 }
 
 /// Apply the placement strategy for one GPU controller thread (call from
@@ -158,6 +172,7 @@ mod tests {
     }
 
     #[test]
+    #[cfg(target_os = "linux")]
     fn pin_to_core_zero_succeeds() {
         // core 0 always exists
         assert!(pin_to_core(0));

@@ -18,6 +18,7 @@ use super::wrm::{spawn_device_threads, Wrm};
 use crate::config::RunConfig;
 use crate::dataflow::Workflow;
 use crate::metrics::MetricsHub;
+use crate::runtime::calibrate::SharedProfiles;
 use crate::runtime::ArtifactManifest;
 use crate::{Error, Result};
 use std::collections::HashMap;
@@ -29,7 +30,8 @@ struct Flight {
     failed: Option<String>,
 }
 
-/// Run one Worker against a work source until the workflow completes.
+/// Run one Worker against a work source until the workflow completes,
+/// recording task completion times into a fresh online profile store.
 ///
 /// Blocks the calling thread; spawns `cpu_workers` + `gpu_workers` device
 /// threads plus the requester thread internally.
@@ -41,9 +43,33 @@ pub fn run_worker(
     metrics: Arc<MetricsHub>,
     stage_bindings: HashMap<String, String>,
 ) -> Result<()> {
+    run_worker_profiled(
+        source,
+        workflow,
+        cfg,
+        manifest,
+        metrics,
+        stage_bindings,
+        SharedProfiles::fresh(),
+    )
+}
+
+/// [`run_worker`] with a caller-supplied profile store: seed it from a
+/// calibrated `profiles.json` and/or read the EWMA estimates back after
+/// the run.  Completion times fold into the store as the run progresses,
+/// so PATS ready-queue ordering tracks the measured host.
+pub fn run_worker_profiled(
+    source: Arc<dyn WorkSource>,
+    workflow: Arc<Workflow>,
+    cfg: RunConfig,
+    manifest: Arc<ArtifactManifest>,
+    metrics: Arc<MetricsHub>,
+    stage_bindings: HashMap<String, String>,
+    profiles: Arc<SharedProfiles>,
+) -> Result<()> {
     cfg.validate()?;
     let topo = NodeTopology::host();
-    let wrm = Wrm::new(workflow.clone(), cfg.clone(), manifest, metrics, stage_bindings);
+    let wrm = Wrm::new(workflow.clone(), cfg.clone(), manifest, metrics, stage_bindings, profiles);
     let device_threads = spawn_device_threads(&wrm, &cfg, &topo);
 
     let flight = Arc::new((Mutex::new(Flight { in_flight: 0, requester_done: false, failed: None }), Condvar::new()));

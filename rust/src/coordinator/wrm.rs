@@ -17,8 +17,9 @@ use super::manager::Assignment;
 use super::placement::{place_gpu_controller, NodeTopology};
 use super::sched::{OpInstKey, OpScheduler, ReadyTask};
 use crate::config::{Placement, RunConfig};
-use crate::dataflow::{PortRef, StageDef, Workflow};
+use crate::dataflow::{OpDef, PortRef, StageDef, Workflow};
 use crate::metrics::{DeviceKind, MetricsHub};
+use crate::runtime::calibrate::SharedProfiles;
 use crate::runtime::pjrt::{DeviceExecutor, ExecInput, PayloadKey};
 use crate::runtime::{ArtifactManifest, Value};
 use crate::{Error, Result};
@@ -59,6 +60,9 @@ pub struct Wrm {
     cfg: RunConfig,
     /// resolution of "@stage:<name>" tags to fused artifact names
     stage_bindings: HashMap<String, String>,
+    /// live per-(op, device) EWMA cost estimates; completions fold in here
+    /// and ready-task speedups are drawn from here when measured
+    profiles: Arc<SharedProfiles>,
 }
 
 impl Wrm {
@@ -68,6 +72,7 @@ impl Wrm {
         manifest: Arc<ArtifactManifest>,
         metrics: Arc<MetricsHub>,
         stage_bindings: HashMap<String, String>,
+        profiles: Arc<SharedProfiles>,
     ) -> Arc<Self> {
         Arc::new(Wrm {
             inner: Mutex::new(WrmInner {
@@ -84,7 +89,19 @@ impl Wrm {
             metrics,
             cfg,
             stage_bindings,
+            profiles,
         })
+    }
+
+    /// Speedup / transfer-impact estimates for one ready op: the live EWMA
+    /// measurement when this run (or a loaded `profiles.json`) has one,
+    /// else the op's static Fig. 7 profile.  This is where PATS's input
+    /// turns from a constant into a signal.
+    fn task_estimates(&self, op: &OpDef) -> (f32, f32) {
+        match self.profiles.estimate(&op.op) {
+            Some(e) => (e.speedup, e.transfer_impact.unwrap_or(op.transfer_impact)),
+            None => (op.speedup, op.transfer_impact),
+        }
     }
 
     /// Whether the scheduler may hand this op to a GPU controller: the op
@@ -147,11 +164,12 @@ impl Wrm {
             if dep_remaining[oi] == 0 {
                 let seq = inner.seq;
                 inner.seq += 1;
+                let (speedup, transfer_impact) = self.task_estimates(op);
                 inner.queue.push(ReadyTask {
                     key: (a.instance_id, oi),
                     name: op.name.clone(),
-                    speedup: op.speedup,
-                    transfer_impact: op.transfer_impact,
+                    speedup,
+                    transfer_impact,
                     seq,
                     resident_on: None,
                     has_gpu_impl: self.gpu_eligible(&op.variant.gpu_artifact),
@@ -296,11 +314,12 @@ impl Wrm {
                 let op = &stage.ops[oi];
                 let seq = inner.seq;
                 inner.seq += 1;
+                let (speedup, transfer_impact) = self.task_estimates(op);
                 inner.queue.push(ReadyTask {
                     key: (key.0, oi),
                     name: op.name.clone(),
-                    speedup: op.speedup,
-                    transfer_impact: op.transfer_impact,
+                    speedup,
+                    transfer_impact,
                     seq,
                     resident_on: hint,
                     has_gpu_impl: self.gpu_eligible(&op.variant.gpu_artifact),
@@ -353,7 +372,9 @@ impl Wrm {
                     .unwrap_or_else(|| "op panicked".into());
                 Err(Error::Dataflow(format!("op '{}' panicked: {msg}", op.name)))
             });
-            self.metrics.record_op(&op.name, DeviceKind::Cpu, t0.elapsed());
+            let elapsed = t0.elapsed();
+            self.metrics.record_op(&op.name, DeviceKind::Cpu, elapsed);
+            self.profiles.record(&op.op, DeviceKind::Cpu, elapsed);
             match result {
                 Ok(outs) => {
                     self.finish_op(task.key, outs, None);
@@ -480,7 +501,14 @@ impl Wrm {
                 match exec_result {
                     Ok((key, outs)) => {
                         let n_outputs = outs.len();
-                        self.metrics.record_op(&op.name, DeviceKind::Gpu, t0.elapsed());
+                        let elapsed = t0.elapsed();
+                        self.metrics.record_op(&op.name, DeviceKind::Gpu, elapsed);
+                        // a *real* accelerator execution: fold the
+                        // end-to-end (transfer-inclusive) time into the
+                        // online GPU estimate; record_accelerator pins the
+                        // measured transfer impact to 0 so the DL rule
+                        // doesn't discount the transfer cost twice
+                        self.profiles.record_accelerator(&op.op, elapsed);
                         let (u1, d1) = (executor.stats.bytes_up, executor.stats.bytes_down);
                         self.metrics.record_transfer(&op.name, u1 - up0.0, d1 - up0.1);
                         // keep single-output results resident for DL chaining
@@ -556,7 +584,14 @@ impl Wrm {
             let t0 = Instant::now();
             match (op.variant.cpu)(&vals) {
                 Ok(outs) => {
-                    self.metrics.record_op(&op.name, DeviceKind::Gpu, t0.elapsed());
+                    let elapsed = t0.elapsed();
+                    // metrics attribute this to the controller's device,
+                    // but the *profile* records it as a CPU-member sample —
+                    // the controller only emulated the accelerator, and a
+                    // GPU sample here would drive the measured speedup to
+                    // ~1 and corrupt PATS ordering
+                    self.metrics.record_op(&op.name, DeviceKind::Gpu, elapsed);
+                    self.profiles.record(&op.op, DeviceKind::Cpu, elapsed);
                     self.finish_op(task.key, outs, None);
                 }
                 Err(e) => {

@@ -178,6 +178,28 @@ impl OpRegistry {
         }
         Ok(())
     }
+
+    /// Override static Fig. 7 profiles with measured estimates from a
+    /// calibration [`ProfileStore`](crate::runtime::calibrate::ProfileStore).
+    ///
+    /// Ops the store has no measurable speedup for keep their static
+    /// profile, so partial calibration degrades gracefully.  Returns how
+    /// many registered ops were recalibrated.  Workflows built *after*
+    /// this call carry the measured estimates into every `OpDef` (and so
+    /// into PATS queue ordering and the DL decision rule).
+    pub fn apply_profiles(&mut self, store: &crate::runtime::calibrate::ProfileStore) -> usize {
+        let mut n = 0;
+        for (name, spec) in self.ops.iter_mut() {
+            if let Some(e) = store.estimate(name) {
+                spec.speedup = e.speedup;
+                if let Some(ti) = e.transfer_impact {
+                    spec.transfer_impact = ti;
+                }
+                n += 1;
+            }
+        }
+        n
+    }
 }
 
 impl std::fmt::Debug for OpRegistry {
@@ -558,6 +580,32 @@ mod tests {
         assert!(r.get("nope").is_err());
         assert!(r.contains("sum"));
         assert_eq!(r.len(), 3);
+    }
+
+    #[test]
+    fn apply_profiles_overrides_measured_ops_only() {
+        use crate::metrics::DeviceKind;
+        use crate::runtime::calibrate::ProfileStore;
+        use std::time::Duration;
+        let mut r = reg();
+        let mut store = ProfileStore::new(64);
+        // "id" measured at 8x (vs static 2.0); "sum" left unmeasured
+        store.record("id", DeviceKind::Cpu, Duration::from_millis(80));
+        store.record("id", DeviceKind::Gpu, Duration::from_millis(10));
+        store.record_transfer_impact("id", 0.2);
+        assert_eq!(r.apply_profiles(&store), 1);
+        assert!((r.get("id").unwrap().speedup - 8.0).abs() < 0.1);
+        assert_eq!(r.get("id").unwrap().transfer_impact, 0.2);
+        assert_eq!(r.get("sum").unwrap().speedup, 1.0, "unmeasured op keeps static profile");
+        // workflows built after calibration carry the measured estimate
+        let mut wb = WorkflowBuilder::new("t", r);
+        let mut s = wb.stage("s", StageKind::PerChunk);
+        let chunk = s.input_chunk();
+        let a = s.add_op("id", &[chunk]).unwrap();
+        s.export(a.out()).unwrap();
+        wb.add_stage(s).unwrap();
+        let wf = wb.build().unwrap();
+        assert!((wf.stages[0].ops[0].speedup - 8.0).abs() < 0.1);
     }
 
     #[test]

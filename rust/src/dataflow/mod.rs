@@ -293,21 +293,37 @@ impl Workflow {
     }
 }
 
+/// Assemble one op's argument list from its stage's external inputs and
+/// the outputs produced by earlier ops.
+///
+/// Convention: an op with no declared ports consumes ALL stage inputs
+/// (needed by Reduce stages, whose input arity is dynamic).  The serial
+/// runner and the calibration microbenchmarks share this helper so the
+/// convention cannot drift between them; the WRM implements the same
+/// rules over its sparse `Option<Vec<Value>>` storage
+/// (`wrm::Wrm::gather_host_inputs`).
+pub fn gather_op_inputs(
+    op: &OpDef,
+    stage_inputs: &[Value],
+    produced: &[Vec<Value>],
+) -> Result<Vec<Value>> {
+    let mut args: Vec<Value> = Vec::with_capacity(op.inputs.len().max(stage_inputs.len()));
+    if op.inputs.is_empty() {
+        args.extend_from_slice(stage_inputs);
+    }
+    for port in &op.inputs {
+        args.push(resolve_port(port, stage_inputs, produced)?);
+    }
+    Ok(args)
+}
+
 /// Run one stage's fine-grain pipeline serially on the calling thread with
 /// the CPU variants.  Used by monolithic stages and as a test oracle for
 /// the concurrent WRM execution.
 pub fn run_stage_serial(stage: &StageDef, inputs: &[Value]) -> Result<Vec<Value>> {
     let mut produced: Vec<Vec<Value>> = Vec::with_capacity(stage.ops.len());
     for op in &stage.ops {
-        // Convention: an op with no declared ports consumes ALL stage
-        // inputs (needed by Reduce stages, whose input arity is dynamic).
-        let mut args: Vec<Value> = Vec::with_capacity(op.inputs.len().max(inputs.len()));
-        if op.inputs.is_empty() {
-            args.extend_from_slice(inputs);
-        }
-        for port in &op.inputs {
-            args.push(resolve_port(port, inputs, &produced)?);
-        }
+        let args = gather_op_inputs(op, inputs, &produced)?;
         let outs = (op.variant.cpu)(&args)?;
         if outs.len() != op.n_outputs {
             return Err(Error::Dataflow(format!(

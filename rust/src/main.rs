@@ -1,15 +1,16 @@
-//! `htap` launcher: run / simulate / serve / join.
+//! `htap` launcher: run / simulate / calibrate / serve / join.
 
-use htap::app::{self, build_workflow, stage_bindings, AppParams};
+use htap::app::{self, build_workflow_with, stage_bindings, AppParams};
 use htap::cli::{Cli, USAGE};
 use htap::config::Policy;
-use htap::coordinator::{run_local, worker::run_worker, Manager};
+use htap::coordinator::{run_local_profiled, worker::run_worker_profiled, Manager};
 use htap::data::{SynthConfig, TileStore};
 use htap::dataflow::{workflow_from_file, StageKind, Workflow};
 use htap::metrics::MetricsHub;
 use htap::net::{ManagerServer, RemoteManager};
-use htap::runtime::ArtifactManifest;
-use htap::sim::{simulate, SimParams};
+use htap::runtime::calibrate::{calibrate_workflows, CalibrationConfig, SharedProfiles};
+use htap::runtime::{ArtifactManifest, ProfileStore};
+use htap::sim::{simulate, SimParams, SimWorkflow};
 use std::sync::Arc;
 
 fn main() {
@@ -31,6 +32,7 @@ fn dispatch(cli: &Cli) -> htap::Result<()> {
     match cli.command.as_str() {
         "run" => cmd_run(cli),
         "sim" => cmd_sim(cli),
+        "calibrate" => cmd_calibrate(cli),
         "manager" => cmd_manager(cli),
         "worker" => cmd_worker(cli),
         "help" | "--help" | "-h" => {
@@ -41,10 +43,41 @@ fn dispatch(cli: &Cli) -> htap::Result<()> {
     }
 }
 
+/// Load `--profiles` when given (version-checked).  `expected_tile_size`
+/// is what this invocation will process; measurements from another tile
+/// size still load (relative op costs are better than the static table)
+/// but with a visible warning, since op costs scale non-uniformly.
+fn load_profiles(cli: &Cli, expected_tile_size: usize) -> htap::Result<Option<ProfileStore>> {
+    match cli.get("profiles") {
+        Some(path) => {
+            let store = ProfileStore::load(path)?;
+            println!(
+                "loaded measured profiles from {path} ({} ops, tile size {})",
+                store.len(),
+                store.tile_size
+            );
+            if store.tile_size != 0 && store.tile_size != expected_tile_size {
+                eprintln!(
+                    "warning: profiles were calibrated at tile size {} but this run uses {}; \
+                     op costs scale non-uniformly with tile size — re-run `htap calibrate \
+                     --tile-size {}` for accurate estimates",
+                    store.tile_size, expected_tile_size, expected_tile_size
+                );
+            }
+            Ok(Some(store))
+        }
+        None => Ok(None),
+    }
+}
+
 fn cmd_run(cli: &Cli) -> htap::Result<()> {
     let cfg = cli.run_config()?;
+    let store = load_profiles(cli, cfg.tile_size)?;
     // `--workflow wf.json` runs any declarative workflow over the full op
     // registry (WSI + generic ops); the default is the built-in WSI app.
+    // Measured profiles reach PATS through the run's SharedProfiles seed
+    // below — the WRM overrides the static OpDef estimates at every task
+    // push, so no registry rewrite is needed here.
     let workflow: Arc<Workflow> = match cli.get("workflow") {
         Some(path) => {
             let mut registry = app::registry();
@@ -53,10 +86,10 @@ fn cmd_run(cli: &Cli) -> htap::Result<()> {
         }
         None => {
             let params = AppParams::for_tile_size(cfg.tile_size);
-            Arc::new(build_workflow(&params, true))
+            Arc::new(build_workflow_with(Arc::new(app::registry()), &params, true)?)
         }
     };
-    let store = Arc::new(TileStore::new(
+    let store_arc = Arc::new(TileStore::new(
         SynthConfig::for_tile_size(cfg.tile_size, cfg.seed),
         cfg.n_tiles,
     ));
@@ -66,7 +99,20 @@ fn cmd_run(cli: &Cli) -> htap::Result<()> {
         workflow.name, n, cfg.tile_size, cfg.tile_size, cfg.policy.name(), cfg.cpu_workers,
         cfg.gpu_workers, cfg.window
     );
-    let outcome = run_local(workflow.clone(), store.loader(), n, cfg, stage_bindings())?;
+    // seed the online store with the offline measurements, so PATS starts
+    // from them and the run's EWMA updates refine them
+    let profiles = match store {
+        Some(s) => SharedProfiles::from_store(s),
+        None => SharedProfiles::fresh(),
+    };
+    let outcome = run_local_profiled(
+        workflow.clone(),
+        store_arc.loader(),
+        n,
+        cfg,
+        stage_bindings(),
+        profiles,
+    )?;
     let report = outcome.metrics;
     println!("\n{}", report.profile_table());
     println!(
@@ -79,6 +125,11 @@ fn cmd_run(cli: &Cli) -> htap::Result<()> {
             println!("reduce stage '{}' produced {} output value(s)", stage.name, outs.len());
         }
     }
+    if let Some(path) = cli.get("save-profiles") {
+        let snap = outcome.profiles.snapshot();
+        snap.save(path)?;
+        println!("saved {} measured op profiles to {path}", snap.len());
+    }
     Ok(())
 }
 
@@ -89,7 +140,12 @@ fn cmd_sim(cli: &Cli) -> htap::Result<()> {
         Some(p) => Policy::parse(p)?,
         None => Policy::Pats,
     };
-    let p = SimParams { n_nodes: nodes, n_tiles: tiles, policy, ..Default::default() };
+    // the simulated pipeline is derived at the 64-px reference tile size
+    let workflow = match load_profiles(cli, 64)? {
+        Some(store) => SimWorkflow::pipelined_profiled(&store),
+        None => SimWorkflow::pipelined(),
+    };
+    let p = SimParams { workflow, n_nodes: nodes, n_tiles: tiles, policy, ..Default::default() };
     let r = simulate(&p);
     println!(
         "simulated {} tiles on {} Keeneland nodes ({}): makespan {:.1}s, {:.1} tiles/s",
@@ -102,6 +158,35 @@ fn cmd_sim(cli: &Cli) -> htap::Result<()> {
     Ok(())
 }
 
+fn cmd_calibrate(cli: &Cli) -> htap::Result<()> {
+    let mut cfg = if cli.get_flag("quick") {
+        CalibrationConfig::quick()
+    } else {
+        CalibrationConfig::default()
+    };
+    cfg.tile_size = cli.get_usize("tile-size", cfg.tile_size)?;
+    cfg.n_chunks = cli.get_usize("tiles", cfg.n_chunks)?;
+    cfg.reps = cli.get_usize("reps", cfg.reps)?.max(1);
+    cfg.seed = cli.get_usize("seed", cfg.seed as usize)? as u64;
+    let out = cli.get("out").unwrap_or("profiles.json");
+    println!(
+        "calibrating registered ops: {} chunks of {}x{}, {} reps (+{} warmup) per op",
+        cfg.n_chunks, cfg.tile_size, cfg.tile_size, cfg.reps, cfg.warmup
+    );
+    let store = calibrate_workflows(&cfg)?;
+    println!("\n{}", store.summary_table());
+    let gpu_measured = store.op_names().filter(|op| store.gpu_ms(op).is_some()).count();
+    if gpu_measured == 0 {
+        println!(
+            "no accelerator measurements on this host (artifacts absent or not executable);\n\
+             GPU-side estimates keep the static Fig. 7 defaults until a run records them"
+        );
+    }
+    store.save(out)?;
+    println!("wrote {} op profiles to {out}", store.len());
+    Ok(())
+}
+
 fn cmd_manager(cli: &Cli) -> htap::Result<()> {
     let listen = cli
         .get("listen")
@@ -109,7 +194,7 @@ fn cmd_manager(cli: &Cli) -> htap::Result<()> {
     let cfg = cli.run_config()?;
     let workers = cli.get_usize("workers", 1)?;
     let params = AppParams::for_tile_size(cfg.tile_size);
-    let workflow = Arc::new(build_workflow(&params, false));
+    let workflow = Arc::new(build_workflow_with(Arc::new(app::registry()), &params, false)?);
     let store = Arc::new(TileStore::new(
         SynthConfig::for_tile_size(cfg.tile_size, cfg.seed),
         cfg.n_tiles,
@@ -129,18 +214,30 @@ fn cmd_worker(cli: &Cli) -> htap::Result<()> {
         .ok_or_else(|| htap::Error::Config("worker needs --connect HOST:PORT".into()))?;
     let cfg = cli.run_config()?;
     let params = AppParams::for_tile_size(cfg.tile_size);
-    let workflow = Arc::new(build_workflow(&params, false));
+    // measured profiles reach PATS through the SharedProfiles seed below
+    let store = load_profiles(cli, cfg.tile_size)?;
+    let workflow = Arc::new(build_workflow_with(Arc::new(app::registry()), &params, false)?);
     let source = Arc::new(RemoteManager::connect(addr)?);
     let metrics = Arc::new(MetricsHub::new());
+    let profiles = match store {
+        Some(s) => SharedProfiles::from_store(s),
+        None => SharedProfiles::fresh(),
+    };
     println!("worker connected to {addr}");
-    run_worker(
+    run_worker_profiled(
         source,
         workflow,
         cfg,
         Arc::new(ArtifactManifest::discover_or_empty()),
         metrics.clone(),
         stage_bindings(),
+        profiles.clone(),
     )?;
     println!("{}", metrics.report().profile_table());
+    if let Some(path) = cli.get("save-profiles") {
+        let snap = profiles.snapshot();
+        snap.save(path)?;
+        println!("saved {} measured op profiles to {path}", snap.len());
+    }
     Ok(())
 }

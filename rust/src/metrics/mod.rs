@@ -154,10 +154,10 @@ impl MetricsReport {
 
     /// Pretty profile table (Fig. 10-style) as text rows.
     pub fn profile_table(&self) -> String {
-        let mut out = String::from(format!(
+        let mut out = format!(
             "{:<20} {:>8} {:>8} {:>7}\n",
             "operation", "CPU", "GPU", "%GPU"
-        ));
+        );
         for o in &self.ops {
             out.push_str(&format!(
                 "{:<20} {:>8} {:>8} {:>6.1}%\n",

@@ -1,0 +1,663 @@
+//! Performance-profile calibration: measured, host-specific cost models
+//! feeding PATS and the simulator (ROADMAP: "per-registry runtime profile
+//! calibration").
+//!
+//! The paper's PATS scheduler (§IV-B) and data-locality rule (§IV-C) rank
+//! tasks by *estimated* GPU-vs-CPU speedup and transfer impact.  The seed
+//! shipped those estimates as a static copy of the Fig. 7 table baked into
+//! every [`OpSpec`](crate::dataflow::OpSpec).  This module replaces that
+//! constant with a live signal:
+//!
+//! * **offline** — [`calibrate_workflows`] microbenchmarks every op of a
+//!   workflow set on synthetic chunks, on each device kind that can
+//!   actually execute it (CPU member always; accelerator member when the
+//!   artifact compiles on this host), and produces a versioned
+//!   [`ProfileStore`] that serialises to `profiles.json`;
+//! * **online** — the Worker Resource Manager records every task
+//!   completion into a [`SharedProfiles`] and folds it into per-(op,
+//!   device) EWMA estimates, so queue ordering tracks the real host as the
+//!   run progresses;
+//! * **one store, three consumers** — `OpRegistry::apply_profiles`, the
+//!   WRM's ready-task estimates and `SimWorkflow::from_workflow_profiled`
+//!   all read the same [`ProfileStore`]; ops without measurements fall
+//!   back to the static Fig. 7 defaults, so partial calibration degrades
+//!   gracefully.
+
+use crate::config::json::Json;
+use crate::dataflow::{StageInput, StageKind, Workflow};
+use crate::metrics::DeviceKind;
+use crate::runtime::pjrt::DeviceExecutor;
+use crate::runtime::Value;
+use crate::{Error, Result};
+use std::collections::BTreeMap;
+use std::sync::Mutex;
+use std::time::{Duration, Instant};
+
+/// Format version written to / required from `profiles.json`.
+pub const PROFILE_FORMAT_VERSION: u64 = 1;
+
+/// Default EWMA smoothing factor for online updates.
+pub const DEFAULT_ALPHA: f64 = 0.2;
+
+/// Exponentially-weighted running estimate of one (op, device) execution
+/// time, in milliseconds.
+#[derive(Debug, Clone, Copy, PartialEq, Default)]
+pub struct DeviceEstimate {
+    pub mean_ms: f64,
+    /// EW variance of the samples (dispersion diagnostic; the paper's
+    /// "data-dependent performance variability", §IV-B).
+    pub var_ms: f64,
+    pub samples: u64,
+}
+
+impl DeviceEstimate {
+    fn fold(&mut self, x_ms: f64, alpha: f64) {
+        if self.samples == 0 {
+            self.mean_ms = x_ms;
+            self.var_ms = 0.0;
+        } else {
+            let delta = x_ms - self.mean_ms;
+            self.mean_ms += alpha * delta;
+            self.var_ms = (1.0 - alpha) * (self.var_ms + alpha * delta * delta);
+        }
+        self.samples += 1;
+    }
+}
+
+/// Calibration record for one logical operation (registry op name).
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct OpCalibration {
+    pub cpu: Option<DeviceEstimate>,
+    pub gpu: Option<DeviceEstimate>,
+    /// Measured fraction of accelerator time spent moving data, when the
+    /// host could observe it (None -> fall back to the static profile).
+    pub transfer_impact: Option<f32>,
+}
+
+impl OpCalibration {
+    /// Measured GPU-vs-CPU speedup; None until both sides have samples.
+    pub fn speedup(&self) -> Option<f32> {
+        match (&self.cpu, &self.gpu) {
+            (Some(c), Some(g)) if c.samples > 0 && g.samples > 0 && g.mean_ms > 0.0 => {
+                Some((c.mean_ms / g.mean_ms) as f32)
+            }
+            _ => None,
+        }
+    }
+}
+
+/// A measured estimate handed to schedulers.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct Estimate {
+    pub speedup: f32,
+    /// None -> the caller keeps its static transfer-impact value.
+    pub transfer_impact: Option<f32>,
+}
+
+/// Versioned, serialisable store of per-op performance calibrations.
+///
+/// Keys are *registry op names* (`OpDef::op`), so one store covers every
+/// workflow built over a registry.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ProfileStore {
+    /// Tile edge the offline pass measured at (0 = online-only store).
+    pub tile_size: usize,
+    /// EWMA smoothing factor used by `record`.
+    pub alpha: f64,
+    ops: BTreeMap<String, OpCalibration>,
+}
+
+impl ProfileStore {
+    pub fn new(tile_size: usize) -> Self {
+        ProfileStore { tile_size, alpha: DEFAULT_ALPHA, ops: BTreeMap::new() }
+    }
+
+    pub fn with_alpha(mut self, alpha: f64) -> Self {
+        self.alpha = alpha.clamp(0.0, 1.0);
+        self
+    }
+
+    pub fn len(&self) -> usize {
+        self.ops.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.ops.is_empty()
+    }
+
+    pub fn op_names(&self) -> impl Iterator<Item = &str> {
+        self.ops.keys().map(|s| s.as_str())
+    }
+
+    pub fn get(&self, op: &str) -> Option<&OpCalibration> {
+        self.ops.get(op)
+    }
+
+    /// Fold one measured execution into the (op, device) EWMA.
+    pub fn record(&mut self, op: &str, device: DeviceKind, elapsed: Duration) {
+        let alpha = self.alpha;
+        let cal = self.ops.entry(op.to_string()).or_default();
+        let est = match device {
+            DeviceKind::Cpu => cal.cpu.get_or_insert_with(DeviceEstimate::default),
+            DeviceKind::Gpu => cal.gpu.get_or_insert_with(DeviceEstimate::default),
+        };
+        est.fold(elapsed.as_secs_f64() * 1e3, alpha);
+    }
+
+    /// Record a measured transfer-impact fraction for an op.
+    pub fn record_transfer_impact(&mut self, op: &str, ti: f32) {
+        let cal = self.ops.entry(op.to_string()).or_default();
+        cal.transfer_impact = Some(ti.clamp(0.0, 1.0));
+    }
+
+    /// Measured mean CPU milliseconds for one execution of `op`.
+    pub fn cpu_ms(&self, op: &str) -> Option<f64> {
+        self.ops.get(op).and_then(|c| c.cpu).filter(|e| e.samples > 0).map(|e| e.mean_ms)
+    }
+
+    /// Measured mean accelerator milliseconds for one execution of `op`.
+    pub fn gpu_ms(&self, op: &str) -> Option<f64> {
+        self.ops.get(op).and_then(|c| c.gpu).filter(|e| e.samples > 0).map(|e| e.mean_ms)
+    }
+
+    /// Measured speedup of `op`, when both device kinds have samples.
+    pub fn speedup(&self, op: &str) -> Option<f32> {
+        self.ops.get(op).and_then(|c| c.speedup())
+    }
+
+    /// The estimate PATS/DL should use for `op`; None -> static fallback.
+    pub fn estimate(&self, op: &str) -> Option<Estimate> {
+        let cal = self.ops.get(op)?;
+        Some(Estimate { speedup: cal.speedup()?, transfer_impact: cal.transfer_impact })
+    }
+
+    // -- serialisation ------------------------------------------------------
+
+    pub fn to_json(&self) -> Json {
+        fn est_json(e: &DeviceEstimate) -> Json {
+            let mut m = BTreeMap::new();
+            m.insert("mean_ms".to_string(), Json::Num(e.mean_ms));
+            m.insert("var_ms".to_string(), Json::Num(e.var_ms));
+            m.insert("samples".to_string(), Json::Num(e.samples as f64));
+            Json::Obj(m)
+        }
+        let mut ops = BTreeMap::new();
+        for (name, cal) in &self.ops {
+            let mut m = BTreeMap::new();
+            if let Some(c) = &cal.cpu {
+                m.insert("cpu".to_string(), est_json(c));
+            }
+            if let Some(g) = &cal.gpu {
+                m.insert("gpu".to_string(), est_json(g));
+            }
+            if let Some(ti) = cal.transfer_impact {
+                m.insert("transfer_impact".to_string(), Json::Num(ti as f64));
+            }
+            ops.insert(name.clone(), Json::Obj(m));
+        }
+        let mut root = BTreeMap::new();
+        root.insert("version".to_string(), Json::Num(PROFILE_FORMAT_VERSION as f64));
+        root.insert("tile_size".to_string(), Json::Num(self.tile_size as f64));
+        root.insert("alpha".to_string(), Json::Num(self.alpha));
+        root.insert("ops".to_string(), Json::Obj(ops));
+        Json::Obj(root)
+    }
+
+    pub fn from_json(root: &Json) -> Result<Self> {
+        let version = root
+            .field("version")?
+            .as_f64()
+            .ok_or_else(|| Error::Config("profiles: 'version' must be a number".into()))?
+            as u64;
+        if version != PROFILE_FORMAT_VERSION {
+            return Err(Error::Config(format!(
+                "profiles: format version {version} unsupported (this build reads \
+                 {PROFILE_FORMAT_VERSION}); re-run `htap calibrate`"
+            )));
+        }
+        fn est(j: &Json, ctx: &str) -> Result<DeviceEstimate> {
+            let num = |k: &str| -> Result<f64> {
+                j.field(k)?
+                    .as_f64()
+                    .ok_or_else(|| Error::Config(format!("profiles: {ctx}.{k} must be a number")))
+            };
+            Ok(DeviceEstimate {
+                mean_ms: num("mean_ms")?,
+                var_ms: num("var_ms")?,
+                samples: num("samples")? as u64,
+            })
+        }
+        let mut store = ProfileStore::new(
+            root.field("tile_size")?.as_usize().unwrap_or(0),
+        );
+        if let Ok(a) = root.field("alpha") {
+            store.alpha = a.as_f64().unwrap_or(DEFAULT_ALPHA).clamp(0.0, 1.0);
+        }
+        let ops = root
+            .field("ops")?
+            .as_obj()
+            .ok_or_else(|| Error::Config("profiles: 'ops' must be an object".into()))?;
+        for (name, oj) in ops {
+            let mut cal = OpCalibration::default();
+            if let Some(obj) = oj.as_obj() {
+                if obj.contains_key("cpu") {
+                    cal.cpu = Some(est(oj.field("cpu")?, name)?);
+                }
+                if obj.contains_key("gpu") {
+                    cal.gpu = Some(est(oj.field("gpu")?, name)?);
+                }
+                if let Some(ti) = obj.get("transfer_impact").and_then(|v| v.as_f64()) {
+                    cal.transfer_impact = Some(ti as f32);
+                }
+            }
+            store.ops.insert(name.clone(), cal);
+        }
+        Ok(store)
+    }
+
+    /// Write `profiles.json`.
+    pub fn save(&self, path: &str) -> Result<()> {
+        std::fs::write(path, format!("{}\n", self.to_json()))
+            .map_err(|e| Error::Config(format!("cannot write profiles to '{path}': {e}")))
+    }
+
+    /// Load `profiles.json` (version-checked).
+    pub fn load(path: &str) -> Result<Self> {
+        let text = std::fs::read_to_string(path)
+            .map_err(|e| Error::Config(format!("cannot read profiles from '{path}': {e}")))?;
+        Self::from_json(&Json::parse(&text)?)
+    }
+
+    /// Human-readable summary (CLI output).
+    pub fn summary_table(&self) -> String {
+        let mut out = format!(
+            "{:<18} {:>10} {:>10} {:>9} {:>8}\n",
+            "operation", "CPU (ms)", "GPU (ms)", "speedup", "samples"
+        );
+        for (name, cal) in &self.ops {
+            let fmt_ms = |e: &Option<DeviceEstimate>| match e {
+                Some(e) if e.samples > 0 => format!("{:.3}", e.mean_ms),
+                _ => "-".to_string(),
+            };
+            let speed = match cal.speedup() {
+                Some(s) => format!("{s:.2}x"),
+                None => "-".to_string(),
+            };
+            let samples = cal.cpu.map(|e| e.samples).unwrap_or(0)
+                + cal.gpu.map(|e| e.samples).unwrap_or(0);
+            out.push_str(&format!(
+                "{:<18} {:>10} {:>10} {:>9} {:>8}\n",
+                name,
+                fmt_ms(&cal.cpu),
+                fmt_ms(&cal.gpu),
+                speed,
+                samples
+            ));
+        }
+        out
+    }
+}
+
+/// Thread-safe wrapper the WRM's device threads record completions into.
+///
+/// Push-time estimates come from here when an op has measurements; the
+/// static Fig. 7 profile carried by the `OpDef` is the fallback, so an
+/// empty store reproduces the seed behaviour exactly.
+#[derive(Debug)]
+pub struct SharedProfiles {
+    inner: Mutex<ProfileStore>,
+}
+
+impl SharedProfiles {
+    /// An empty online-only store (static estimates until samples arrive).
+    pub fn fresh() -> std::sync::Arc<Self> {
+        Self::from_store(ProfileStore::new(0))
+    }
+
+    /// Seed the online store with offline measurements (`--profiles`).
+    pub fn from_store(store: ProfileStore) -> std::sync::Arc<Self> {
+        std::sync::Arc::new(SharedProfiles { inner: Mutex::new(store) })
+    }
+
+    /// Fold a completed task's execution time into the EWMA estimates.
+    pub fn record(&self, op: &str, device: DeviceKind, elapsed: Duration) {
+        self.inner.lock().unwrap().record(op, device, elapsed);
+    }
+
+    /// Fold a measured *end-to-end* accelerator execution (upload +
+    /// process + download).  Because the sample already contains the
+    /// transfer time, the measured transfer impact is pinned to 0.0 —
+    /// otherwise the DL rule would discount the (already
+    /// transfer-inclusive) measured speedup by the static Fig. 7
+    /// transfer impact a second time.
+    pub fn record_accelerator(&self, op: &str, elapsed: Duration) {
+        let mut inner = self.inner.lock().unwrap();
+        inner.record(op, DeviceKind::Gpu, elapsed);
+        inner.record_transfer_impact(op, 0.0);
+    }
+
+    /// Current measured estimate for an op (None -> static fallback).
+    pub fn estimate(&self, op: &str) -> Option<Estimate> {
+        self.inner.lock().unwrap().estimate(op)
+    }
+
+    /// Clone the current store (for saving back to `profiles.json`).
+    pub fn snapshot(&self) -> ProfileStore {
+        self.inner.lock().unwrap().clone()
+    }
+}
+
+/// Offline calibration parameters.
+#[derive(Debug, Clone)]
+pub struct CalibrationConfig {
+    /// Tile edge of the synthetic chunks.
+    pub tile_size: usize,
+    /// Distinct chunks per workflow (captures data-dependent variability).
+    pub n_chunks: usize,
+    /// Measured repetitions per (op, chunk).
+    pub reps: usize,
+    /// Unmeasured warmup repetitions per chunk.
+    pub warmup: usize,
+    pub seed: u64,
+    pub alpha: f64,
+}
+
+impl Default for CalibrationConfig {
+    fn default() -> Self {
+        CalibrationConfig {
+            tile_size: 64,
+            n_chunks: 4,
+            reps: 3,
+            warmup: 1,
+            seed: 42,
+            alpha: DEFAULT_ALPHA,
+        }
+    }
+}
+
+impl CalibrationConfig {
+    /// Cheap smoke-level pass (CI's `htap calibrate --quick`).
+    pub fn quick() -> Self {
+        CalibrationConfig { tile_size: 32, n_chunks: 2, reps: 1, warmup: 0, ..Self::default() }
+    }
+}
+
+/// Microbenchmark every op of `workflow` on the given per-chunk inputs and
+/// fold the timings into `store`.
+///
+/// PerChunk stages execute serially per chunk, timing each fine-grain op's
+/// CPU member individually (inputs are always valid because the real
+/// upstream ops produce them).  When `executor` is given, ops with an
+/// accelerator artifact also run through PJRT and record a GPU estimate —
+/// a failed accelerator execution (e.g. the offline xla shim) simply
+/// leaves the GPU side unmeasured.  Reduce stages are skipped: their
+/// consume-all arity depends on the run's chunk count, so their cost is
+/// captured by the online path instead.
+pub fn calibrate_workflow(
+    workflow: &Workflow,
+    chunks: &[Vec<Value>],
+    cfg: &CalibrationConfig,
+    store: &mut ProfileStore,
+    mut executor: Option<&mut DeviceExecutor>,
+) -> Result<()> {
+    // artifacts that already absorbed their one-time lazy compile/load
+    // cost in a discarded execution (compile-once / execute-many)
+    let mut warmed: std::collections::HashSet<String> = std::collections::HashSet::new();
+    for chunk_inputs in chunks {
+        // outputs of each completed stage, indexed by stage position
+        let mut stage_outputs: Vec<Vec<Value>> = Vec::with_capacity(workflow.stages.len());
+        for stage in &workflow.stages {
+            if stage.kind != StageKind::PerChunk {
+                stage_outputs.push(Vec::new());
+                continue;
+            }
+            // assemble this stage's external inputs
+            let mut inputs: Vec<Value> = Vec::new();
+            for si in &stage.inputs {
+                match si {
+                    StageInput::Chunk => inputs.extend_from_slice(chunk_inputs),
+                    StageInput::Upstream { stage: up, output } => {
+                        let v = stage_outputs
+                            .get(*up)
+                            .and_then(|outs| outs.get(*output))
+                            .cloned()
+                            .ok_or_else(|| {
+                                Error::Dataflow(format!(
+                                    "calibrate: stage '{}' upstream ({up},{output}) missing",
+                                    stage.name
+                                ))
+                            })?;
+                        inputs.push(v);
+                    }
+                }
+            }
+            let mut produced: Vec<Vec<Value>> = Vec::with_capacity(stage.ops.len());
+            for rep in 0..cfg.warmup + cfg.reps {
+                produced.clear();
+                for op in &stage.ops {
+                    let args = crate::dataflow::gather_op_inputs(op, &inputs, &produced)?;
+                    let t0 = Instant::now();
+                    let outs = (op.variant.cpu)(&args)?;
+                    if rep >= cfg.warmup {
+                        store.record(&op.op, DeviceKind::Cpu, t0.elapsed());
+                    }
+                    // accelerator member, when this host can execute it
+                    if let (Some(ex), Some(artifact)) =
+                        (executor.as_deref_mut(), op.variant.gpu_artifact.as_deref())
+                    {
+                        if !artifact.starts_with("@stage:")
+                            && ex.manifest().has(artifact, cfg.tile_size)
+                        {
+                            // the first execution of each artifact pays
+                            // the lazy compile/load; always discard it so
+                            // it can never dominate the EWMA (quick mode
+                            // has warmup = 0)
+                            if warmed.insert(artifact.to_string()) {
+                                let _ = ex.run(artifact, cfg.tile_size, &args);
+                            }
+                            if rep >= cfg.warmup {
+                                let t0 = Instant::now();
+                                if ex.run(artifact, cfg.tile_size, &args).is_ok() {
+                                    // `run` is end-to-end (upload +
+                                    // process + download), so the sample
+                                    // already contains the transfer cost:
+                                    // pair it with transfer_impact 0 so
+                                    // the DL rule doesn't discount twice
+                                    store.record(&op.op, DeviceKind::Gpu, t0.elapsed());
+                                    store.record_transfer_impact(&op.op, 0.0);
+                                }
+                            }
+                        }
+                    }
+                    produced.push(outs);
+                }
+            }
+            let outs: Vec<Value> = stage
+                .outputs
+                .iter()
+                .map(|p| crate::dataflow::resolve_port(p, &inputs, &produced))
+                .collect::<Result<Vec<_>>>()?;
+            stage_outputs.push(outs);
+        }
+    }
+    Ok(())
+}
+
+/// The `htap calibrate` pass: microbenchmark the full registered op set —
+/// the WSI pipeline over `app::registry()` plus the generic cell-stats
+/// workflow — on synthetic tiles, returning the populated store.
+pub fn calibrate_workflows(cfg: &CalibrationConfig) -> Result<ProfileStore> {
+    use crate::data::{SynthConfig, TileSynthesizer};
+    let mut store = ProfileStore::new(cfg.tile_size).with_alpha(cfg.alpha);
+
+    let synth = TileSynthesizer::new(SynthConfig::for_tile_size(cfg.tile_size, cfg.seed));
+    let chunks: Vec<Vec<Value>> = (0..cfg.n_chunks)
+        .map(|c| vec![Value::Tensor(synth.tissue_tile(c as u64).to_tensor())])
+        .collect();
+
+    let manifest = crate::runtime::ArtifactManifest::discover_or_empty();
+    let mut executor =
+        if manifest.is_empty() { None } else { DeviceExecutor::new(manifest).ok() };
+
+    let params = crate::app::AppParams::for_tile_size(cfg.tile_size);
+    let wsi = crate::app::build_workflow_with(
+        std::sync::Arc::new(crate::app::registry()),
+        &params,
+        false,
+    )?;
+    calibrate_workflow(&wsi, &chunks, cfg, &mut store, executor.as_mut())?;
+
+    let generic = crate::app::generic::cell_stats_workflow()?;
+    calibrate_workflow(&generic, &chunks, cfg, &mut store, None)?;
+    Ok(store)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn ms(v: f64) -> Duration {
+        Duration::from_secs_f64(v / 1e3)
+    }
+
+    #[test]
+    fn ewma_tracks_recent_samples() {
+        let mut s = ProfileStore::new(64).with_alpha(0.5);
+        s.record("op", DeviceKind::Cpu, ms(10.0));
+        assert_eq!(s.cpu_ms("op"), Some(10.0));
+        s.record("op", DeviceKind::Cpu, ms(20.0));
+        // mean moves half-way toward the new sample
+        assert!((s.cpu_ms("op").unwrap() - 15.0).abs() < 1e-9);
+        s.record("op", DeviceKind::Cpu, ms(20.0));
+        assert!(s.cpu_ms("op").unwrap() > 15.0);
+        assert_eq!(s.get("op").unwrap().cpu.unwrap().samples, 3);
+        // variance is positive once samples disagree
+        assert!(s.get("op").unwrap().cpu.unwrap().var_ms > 0.0);
+    }
+
+    #[test]
+    fn speedup_requires_both_sides() {
+        let mut s = ProfileStore::new(64);
+        s.record("op", DeviceKind::Cpu, ms(100.0));
+        assert_eq!(s.speedup("op"), None);
+        assert!(s.estimate("op").is_none());
+        s.record("op", DeviceKind::Gpu, ms(10.0));
+        assert!((s.speedup("op").unwrap() - 10.0).abs() < 1e-4);
+        let e = s.estimate("op").unwrap();
+        assert!((e.speedup - 10.0).abs() < 1e-4);
+        assert_eq!(e.transfer_impact, None);
+        s.record_transfer_impact("op", 0.25);
+        assert_eq!(s.estimate("op").unwrap().transfer_impact, Some(0.25));
+    }
+
+    #[test]
+    fn json_round_trip_is_exact() {
+        let mut s = ProfileStore::new(64).with_alpha(0.3);
+        s.record("a", DeviceKind::Cpu, ms(3.5));
+        s.record("a", DeviceKind::Cpu, ms(4.5));
+        s.record("a", DeviceKind::Gpu, ms(0.7));
+        s.record_transfer_impact("a", 0.125);
+        s.record("b", DeviceKind::Cpu, ms(9.0));
+        let j = s.to_json();
+        let back = ProfileStore::from_json(&j).unwrap();
+        assert_eq!(back.tile_size, 64);
+        assert_eq!(back.alpha, 0.3);
+        assert_eq!(back.len(), 2);
+        // identical estimates after the round trip
+        assert_eq!(back.cpu_ms("a"), s.cpu_ms("a"));
+        assert_eq!(back.gpu_ms("a"), s.gpu_ms("a"));
+        assert_eq!(back.speedup("a"), s.speedup("a"));
+        assert_eq!(back.estimate("a"), s.estimate("a"));
+        assert_eq!(back.cpu_ms("b"), s.cpu_ms("b"));
+        assert_eq!(back.speedup("b"), None);
+        assert_eq!(back, s);
+    }
+
+    #[test]
+    fn version_mismatch_rejected() {
+        let mut s = ProfileStore::new(64);
+        s.record("a", DeviceKind::Cpu, ms(1.0));
+        let mut j = s.to_json();
+        if let Json::Obj(o) = &mut j {
+            o.insert("version".to_string(), Json::Num(99.0));
+        }
+        let err = ProfileStore::from_json(&j).unwrap_err();
+        assert!(err.to_string().contains("version"), "{err}");
+    }
+
+    #[test]
+    fn file_round_trip() {
+        let mut s = ProfileStore::new(32);
+        s.record("x", DeviceKind::Cpu, ms(2.0));
+        s.record("x", DeviceKind::Gpu, ms(1.0));
+        let path = std::env::temp_dir().join("htap_profiles_test.json");
+        let path = path.to_str().unwrap();
+        s.save(path).unwrap();
+        let back = ProfileStore::load(path).unwrap();
+        assert_eq!(back, s);
+        assert!(ProfileStore::load("/definitely/not/here.json").is_err());
+    }
+
+    #[test]
+    fn shared_profiles_record_and_estimate() {
+        let shared = SharedProfiles::fresh();
+        assert!(shared.estimate("op").is_none());
+        shared.record("op", DeviceKind::Cpu, ms(50.0));
+        shared.record("op", DeviceKind::Gpu, ms(5.0));
+        let e = shared.estimate("op").unwrap();
+        assert!((e.speedup - 10.0).abs() < 1e-4);
+        let snap = shared.snapshot();
+        assert_eq!(snap.get("op").unwrap().cpu.unwrap().samples, 1);
+    }
+
+    #[test]
+    fn accelerator_samples_pin_transfer_impact_to_zero() {
+        let shared = SharedProfiles::fresh();
+        shared.record("op", DeviceKind::Cpu, ms(8.0));
+        shared.record_accelerator("op", ms(4.0));
+        let e = shared.estimate("op").unwrap();
+        assert!((e.speedup - 2.0).abs() < 1e-4);
+        // the end-to-end sample already contains the transfer cost, so the
+        // DL rule must not discount it a second time
+        assert_eq!(e.transfer_impact, Some(0.0));
+    }
+
+    #[test]
+    fn summary_table_lists_ops() {
+        let mut s = ProfileStore::new(64);
+        s.record("watershed", DeviceKind::Cpu, ms(4.0));
+        let t = s.summary_table();
+        assert!(t.contains("watershed"));
+        assert!(t.contains("4.000"));
+    }
+
+    #[test]
+    fn quick_calibration_measures_every_cpu_op() {
+        let store = calibrate_workflows(&CalibrationConfig::quick()).unwrap();
+        // every WSI pipeline op and every generic op has a CPU estimate
+        for op in [
+            "hema_prep",
+            "rbc_detect",
+            "morph_open",
+            "recon_to_nuclei",
+            "fill_holes",
+            "area_threshold",
+            "bwlabel",
+            "pre_watershed",
+            "watershed",
+            "feature_graph",
+            "object_features",
+            "haralick",
+            "grayscale",
+            "binarize",
+            "cc_label",
+            "region_stats",
+        ] {
+            let ms = store.cpu_ms(op);
+            assert!(ms.is_some(), "no CPU estimate for {op}");
+            assert!(ms.unwrap() >= 0.0);
+        }
+        // the reduce-stage ops are deliberately not offline-calibrated
+        assert!(store.cpu_ms("mean_stats").is_none());
+    }
+}

@@ -10,9 +10,11 @@
 //! one GPU-controller thread per GPU.
 
 pub mod artifacts;
+pub mod calibrate;
 pub mod pjrt;
 pub mod tensor;
 
 pub use artifacts::{ArtifactManifest, ModuleMeta};
+pub use calibrate::{CalibrationConfig, ProfileStore, SharedProfiles};
 pub use pjrt::DeviceExecutor;
 pub use tensor::{HostTensor, Value};

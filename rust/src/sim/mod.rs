@@ -29,6 +29,7 @@ use crate::coordinator::placement::NodeTopology;
 use crate::coordinator::sched::{make_scheduler, OpScheduler, ReadyTask};
 use crate::dataflow::OpRegistry;
 use crate::metrics::DeviceKind;
+use crate::runtime::calibrate::ProfileStore;
 use crate::testing::Rng;
 use std::cmp::Reverse;
 use std::collections::{BinaryHeap, HashMap};
@@ -70,7 +71,37 @@ impl SimWorkflow {
     /// skipped — the simulator models the per-chunk pipeline (the paper's
     /// evaluation predates the MapReduce classification stage).
     pub fn from_workflow(wf: &crate::dataflow::Workflow, registry: &OpRegistry) -> Self {
-        let stages = wf
+        Self::from_workflow_inner(wf, registry, None)
+    }
+
+    /// Like [`SimWorkflow::from_workflow`], but calibrated from a measured
+    /// [`ProfileStore`]: measured speedups/transfer impacts replace the
+    /// static Fig. 7 values (both the cost-model truth and the scheduler
+    /// estimate — the store describes *this* host), and when every op has
+    /// a measured CPU time the per-op cost fractions are renormalised from
+    /// those measurements instead of the static table.  This is the same
+    /// store `OpRegistry::apply_profiles` and the WRM consume.
+    pub fn from_workflow_profiled(
+        wf: &crate::dataflow::Workflow,
+        registry: &OpRegistry,
+        store: &ProfileStore,
+    ) -> Self {
+        Self::from_workflow_inner(wf, registry, Some(store))
+    }
+
+    /// The WSI pipeline calibrated from measured profiles.
+    pub fn pipelined_profiled(store: &ProfileStore) -> Self {
+        let registry = crate::app::registry();
+        let wf = crate::app::build_workflow(&crate::app::AppParams::for_tile_size(64), false);
+        Self::from_workflow_profiled(&wf, &registry, store)
+    }
+
+    fn from_workflow_inner(
+        wf: &crate::dataflow::Workflow,
+        registry: &OpRegistry,
+        store: Option<&ProfileStore>,
+    ) -> Self {
+        let stages: Vec<SimStage> = wf
             .stages
             .iter()
             .filter(|s| s.kind == crate::dataflow::StageKind::PerChunk)
@@ -92,12 +123,18 @@ impl SimWorkflow {
                             .collect();
                         deps.sort_unstable();
                         deps.dedup();
+                        let (speedup, ti) = match store.and_then(|st| st.estimate(&o.op)) {
+                            Some(e) => {
+                                (e.speedup, e.transfer_impact.unwrap_or(o.transfer_impact))
+                            }
+                            None => (o.speedup, o.transfer_impact),
+                        };
                         SimOp {
                             name: o.name.clone(),
                             cpu_fraction,
-                            speedup_true: o.speedup,
-                            speedup_est: o.speedup,
-                            transfer_impact: o.transfer_impact,
+                            speedup_true: speedup,
+                            speedup_est: speedup,
+                            transfer_impact: ti,
                             has_gpu: o.variant.gpu_artifact.is_some(),
                             deps,
                         }
@@ -105,7 +142,27 @@ impl SimWorkflow {
                     .collect(),
             })
             .collect();
-        SimWorkflow { stages }
+        let mut out = SimWorkflow { stages };
+        // measured cost fractions: only when the store covers every op, so
+        // a partially-calibrated store never skews the relative mix
+        if let Some(st) = store {
+            let measured: Vec<Vec<Option<f64>>> = wf
+                .stages
+                .iter()
+                .filter(|s| s.kind == crate::dataflow::StageKind::PerChunk)
+                .map(|s| s.ops.iter().map(|o| st.cpu_ms(&o.op)).collect())
+                .collect();
+            let all = measured.iter().flatten().all(|m| m.is_some());
+            let total: f64 = measured.iter().flatten().filter_map(|m| *m).sum();
+            if all && total > 0.0 {
+                for (stage, ms_row) in out.stages.iter_mut().zip(&measured) {
+                    for (op, ms) in stage.ops.iter_mut().zip(ms_row) {
+                        op.cpu_fraction = ms.unwrap() / total;
+                    }
+                }
+            }
+        }
+        out
     }
 
     /// The WSI pipeline in its *pipelined* form: derived from the same
@@ -675,6 +732,52 @@ mod tests {
         assert!(seg.ops[ws].deps.contains(&pw));
         // CPU-only ops are not GPU-eligible in the model
         assert!(!seg.ops.iter().find(|o| o.name == "hema_prep").unwrap().has_gpu);
+    }
+
+    #[test]
+    fn profiled_workflow_uses_measured_estimates_and_fractions() {
+        use std::time::Duration;
+        let mut store = ProfileStore::new(64);
+        // measure every WSI pipeline op: 10 ms CPU each except morph_open
+        // (40 ms), so measured fractions differ from the static table; give
+        // morph_open a large measured speedup and feature_graph a tiny one
+        // (the inverse of Fig. 7)
+        let p = SimWorkflow::pipelined();
+        for stage in &p.stages {
+            for op in &stage.ops {
+                let cpu = if op.name == "morph_open" { 40.0 } else { 10.0 };
+                store.record("ignore_me", DeviceKind::Cpu, Duration::ZERO);
+                store.record(&op.name, DeviceKind::Cpu, Duration::from_secs_f64(cpu / 1e3));
+            }
+        }
+        store.record("morph_open", DeviceKind::Gpu, Duration::from_secs_f64(2.0 / 1e3));
+        store.record("feature_graph", DeviceKind::Gpu, Duration::from_secs_f64(8.0 / 1e3));
+        let wf = SimWorkflow::pipelined_profiled(&store);
+        let find = |name: &str| {
+            wf.stages
+                .iter()
+                .flat_map(|s| s.ops.iter())
+                .find(|o| o.name == name)
+                .unwrap()
+                .clone()
+        };
+        // measured speedups invert the static Fig. 7 ranking
+        let mo = find("morph_open");
+        let fg = find("feature_graph");
+        assert!((mo.speedup_est - 20.0).abs() < 0.5, "morph_open est {}", mo.speedup_est);
+        assert!((fg.speedup_est - 1.25).abs() < 0.1, "feature_graph est {}", fg.speedup_est);
+        assert!(mo.speedup_est > fg.speedup_est, "measured ranking must invert Fig. 7");
+        // unmeasured-speedup ops fall back to static estimates
+        let ws = find("watershed");
+        assert_eq!(ws.speedup_est, crate::app::profile::speedup_of("watershed"));
+        // fractions renormalised from measured CPU times and sum to 1
+        let total: f64 =
+            wf.stages.iter().flat_map(|s| s.ops.iter()).map(|o| o.cpu_fraction).sum();
+        assert!((total - 1.0).abs() < 1e-9, "total = {total}");
+        assert!(mo.cpu_fraction > fg.cpu_fraction, "40ms op outweighs 10ms op");
+        // the profiled workflow still simulates to completion
+        let r = simulate(&SimParams { workflow: wf, n_tiles: 20, ..Default::default() });
+        assert_eq!(r.tiles, 20);
     }
 
     #[test]

@@ -1,0 +1,218 @@
+//! Calibration subsystem integration: profiles.json round-trips, measured
+//! estimates flow into PATS queue ordering (inverting the static Fig. 7
+//! ranking when the measurements say so), the simulator consumes the same
+//! store, and the online EWMA path records real executions.
+
+use htap::app::{self, profile};
+use htap::config::{Policy, RunConfig};
+use htap::coordinator::run_local;
+use htap::coordinator::sched::{make_scheduler, OpScheduler, ReadyTask};
+use htap::data::{SynthConfig, TileStore};
+use htap::metrics::DeviceKind;
+use htap::runtime::calibrate::{calibrate_workflows, CalibrationConfig};
+use htap::runtime::ProfileStore;
+use htap::sim::SimWorkflow;
+use std::collections::HashMap;
+use std::sync::Arc;
+use std::time::Duration;
+
+fn ms(v: f64) -> Duration {
+    Duration::from_secs_f64(v / 1e3)
+}
+
+/// A store whose measurements invert the static Fig. 7 ranking of
+/// morph_open (static 1.6x -> measured 20x) and feature_graph (static
+/// 16x -> measured 1.25x).
+fn inverted_store() -> ProfileStore {
+    let mut store = ProfileStore::new(64);
+    store.record("morph_open", DeviceKind::Cpu, ms(100.0));
+    store.record("morph_open", DeviceKind::Gpu, ms(5.0));
+    store.record("feature_graph", DeviceKind::Cpu, ms(100.0));
+    store.record("feature_graph", DeviceKind::Gpu, ms(80.0));
+    store
+}
+
+fn temp_path(name: &str) -> String {
+    std::env::temp_dir().join(name).to_str().unwrap().to_string()
+}
+
+#[test]
+fn profiles_json_round_trip_preserves_estimates() {
+    let mut store = inverted_store();
+    store.record_transfer_impact("morph_open", 0.12);
+    let path = temp_path("htap_calibration_roundtrip.json");
+    store.save(&path).unwrap();
+    let loaded = ProfileStore::load(&path).unwrap();
+    assert_eq!(loaded, store, "serialize -> load must preserve the store exactly");
+    for op in ["morph_open", "feature_graph"] {
+        assert_eq!(loaded.speedup(op), store.speedup(op), "{op}");
+        assert_eq!(loaded.cpu_ms(op), store.cpu_ms(op), "{op}");
+        assert_eq!(loaded.estimate(op), store.estimate(op), "{op}");
+    }
+}
+
+/// The acceptance path: a saved+loaded profiles.json, applied to the
+/// registry, flips which op PATS hands to an idle GPU first.
+#[test]
+fn loaded_profiles_invert_pats_dequeue_order() {
+    // static ranking: feature_graph (16x) far above morph_open (1.6x)
+    assert!(profile::speedup_of("feature_graph") > profile::speedup_of("morph_open"));
+
+    let path = temp_path("htap_calibration_invert.json");
+    inverted_store().save(&path).unwrap();
+    let loaded = ProfileStore::load(&path).unwrap();
+
+    let push_both = |registry: &htap::dataflow::OpRegistry| {
+        let mut q = make_scheduler(Policy::Pats);
+        for (i, name) in ["morph_open", "feature_graph"].iter().enumerate() {
+            let spec = registry.get(name).unwrap();
+            q.push(ReadyTask {
+                key: (i as u64, 0),
+                name: name.to_string(),
+                speedup: spec.speedup,
+                transfer_impact: spec.transfer_impact,
+                seq: i as u64,
+                resident_on: None,
+                has_gpu_impl: true,
+            });
+        }
+        q
+    };
+
+    // before calibration the GPU takes feature_graph first…
+    let static_registry = app::registry();
+    let mut q = push_both(&static_registry);
+    assert_eq!(q.pop(DeviceKind::Gpu, 0, false).unwrap().name, "feature_graph");
+
+    // …after loading measured profiles it takes morph_open first, and the
+    // CPU gets the now-low-speedup feature_graph
+    let mut calibrated = app::registry();
+    assert_eq!(calibrated.apply_profiles(&loaded), 2);
+    let mut q = push_both(&calibrated);
+    assert_eq!(
+        q.pop(DeviceKind::Gpu, 0, false).unwrap().name,
+        "morph_open",
+        "measured speedups must override the static Fig. 7 ranking"
+    );
+    assert_eq!(q.pop(DeviceKind::Cpu, 0, false).unwrap().name, "feature_graph");
+
+    // the estimates also flow into workflows built over the registry
+    let wf = app::build_workflow_with(
+        Arc::new(calibrated),
+        &app::AppParams::for_tile_size(64),
+        false,
+    )
+    .unwrap();
+    let op = |name: &str| {
+        wf.stages
+            .iter()
+            .flat_map(|s| s.ops.iter())
+            .find(|o| o.name == name)
+            .unwrap()
+            .speedup
+    };
+    assert!(op("morph_open") > op("feature_graph"));
+}
+
+/// The simulator consumes the same store: measured estimates replace the
+/// static table in `SimWorkflow`, unmeasured ops fall back.
+#[test]
+fn simulator_consumes_the_same_store() {
+    let path = temp_path("htap_calibration_sim.json");
+    inverted_store().save(&path).unwrap();
+    let loaded = ProfileStore::load(&path).unwrap();
+    let wf = SimWorkflow::pipelined_profiled(&loaded);
+    let est = |name: &str| {
+        wf.stages
+            .iter()
+            .flat_map(|s| s.ops.iter())
+            .find(|o| o.name == name)
+            .unwrap()
+            .speedup_est
+    };
+    assert!((est("morph_open") - 20.0).abs() < 0.5);
+    assert!((est("feature_graph") - 1.25).abs() < 0.1);
+    // watershed was never measured: static Fig. 7 fallback
+    assert_eq!(est("watershed"), profile::speedup_of("watershed"));
+}
+
+/// Offline pass -> profiles.json -> load: the calibrate CLI path in
+/// library form, on the quick (CI-sized) configuration.
+#[test]
+fn quick_offline_pass_round_trips_through_disk() {
+    let store = calibrate_workflows(&CalibrationConfig::quick()).unwrap();
+    assert!(store.len() >= 16, "expected WSI + generic coverage, got {}", store.len());
+    let path = temp_path("htap_calibration_offline.json");
+    store.save(&path).unwrap();
+    let loaded = ProfileStore::load(&path).unwrap();
+    assert_eq!(loaded, store);
+    // every measured op has a usable CPU mean
+    for op in loaded.op_names() {
+        assert!(loaded.cpu_ms(op).unwrap_or(0.0) >= 0.0);
+    }
+}
+
+/// The online path: a real run folds completion times into the outcome's
+/// shared store via the WRM.
+#[test]
+fn run_local_records_online_cpu_estimates() {
+    let n_tiles = 3;
+    let wf = Arc::new(app::generic::cell_stats_workflow().unwrap());
+    let tiles = Arc::new(TileStore::new(SynthConfig::for_tile_size(64, 17), n_tiles));
+    let cfg = RunConfig {
+        tile_size: 64,
+        n_tiles,
+        cpu_workers: 2,
+        gpu_workers: 0,
+        ..Default::default()
+    };
+    let outcome = run_local(wf, tiles.loader(), n_tiles, cfg, HashMap::new()).unwrap();
+    let snap = outcome.profiles.snapshot();
+    for op in ["grayscale", "invert", "gauss3", "binarize", "cc_label", "region_stats"] {
+        let cal = snap.get(op).unwrap_or_else(|| panic!("no online samples for {op}"));
+        let cpu = cal.cpu.expect("cpu estimate");
+        assert_eq!(cpu.samples, n_tiles as u64, "{op} folded once per tile");
+        assert!(cpu.mean_ms >= 0.0);
+    }
+    // the reduce op ran once
+    assert_eq!(snap.get("mean_stats").unwrap().cpu.unwrap().samples, 1);
+}
+
+/// An EWMA stream that flips two ops' relative speedups reorders a PATS
+/// queue fed from the shared store (the WRM's push path in miniature).
+#[test]
+fn ewma_updates_flip_pats_relative_order() {
+    use htap::runtime::SharedProfiles;
+    let shared = SharedProfiles::fresh();
+    // initial measurements: a=2x, b=10x
+    shared.record("a", DeviceKind::Cpu, ms(20.0));
+    shared.record("a", DeviceKind::Gpu, ms(10.0));
+    shared.record("b", DeviceKind::Cpu, ms(100.0));
+    shared.record("b", DeviceKind::Gpu, ms(10.0));
+    assert!(shared.estimate("b").unwrap().speedup > shared.estimate("a").unwrap().speedup);
+
+    // the host turns out to run b's accelerator member terribly and a's
+    // superbly; EWMA folding must flip the relative order
+    for _ in 0..30 {
+        shared.record("a", DeviceKind::Gpu, ms(1.0));
+        shared.record("b", DeviceKind::Gpu, ms(200.0));
+    }
+    let (ea, eb) = (shared.estimate("a").unwrap(), shared.estimate("b").unwrap());
+    assert!(ea.speedup > eb.speedup, "EWMA must track the drift: a={} b={}", ea.speedup, eb.speedup);
+
+    // and a PATS queue built from the live estimates hands a to the GPU
+    let mut q = make_scheduler(Policy::Pats);
+    for (i, (name, est)) in [("a", ea), ("b", eb)].into_iter().enumerate() {
+        q.push(ReadyTask {
+            key: (i as u64, 0),
+            name: name.to_string(),
+            speedup: est.speedup,
+            transfer_impact: est.transfer_impact.unwrap_or(0.1),
+            seq: i as u64,
+            resident_on: None,
+            has_gpu_impl: true,
+        });
+    }
+    assert_eq!(q.pop(DeviceKind::Gpu, 0, false).unwrap().name, "a");
+    assert_eq!(q.pop(DeviceKind::Cpu, 0, false).unwrap().name, "b");
+}

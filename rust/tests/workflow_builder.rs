@@ -59,6 +59,21 @@ fn generic_workflow_survives_hybrid_device_mix() {
 }
 
 #[test]
+fn cell_stats_example_file_matches_embedded_constant() {
+    // examples/cell_stats.json (CI's smoke-test workflow) must stay in
+    // sync with the CELL_STATS_JSON constant the tests and the
+    // generic_pipeline example load — compare semantically so whitespace
+    // differs but the workflow cannot.
+    let file = include_str!("../../examples/cell_stats.json");
+    let a = htap::config::json::Json::parse(file).unwrap();
+    let b = htap::config::json::Json::parse(CELL_STATS_JSON).unwrap();
+    assert_eq!(
+        a, b,
+        "examples/cell_stats.json drifted from app::generic::CELL_STATS_JSON"
+    );
+}
+
+#[test]
 fn json_round_trip_preserves_structure_and_behaviour() {
     let reg = Arc::new(generic_registry());
     let wf = workflow_from_str(CELL_STATS_JSON, reg.clone()).unwrap();

@@ -1,0 +1,43 @@
+#!/usr/bin/env bash
+# Record a perf-trajectory snapshot: run the fig7/fig8/fig9 bench
+# harnesses once and write their raw output (plus host metadata) as JSON.
+#
+#   scripts/bench_baseline.sh [out.json]     # default: BENCH_seed.json
+#
+# The snapshot keeps the benches' full stdout so any row can be diffed
+# across PRs; the fig7 harness degrades to CPU-only columns when AOT
+# artifacts are absent (see benches/fig7_op_speedups.rs).
+set -euo pipefail
+
+cd "$(dirname "$0")/.."
+out="${1:-BENCH_seed.json}"
+tmpdir="$(mktemp -d)"
+trap 'rm -rf "$tmpdir"' EXIT
+
+benches=(fig7_op_speedups fig8_placement fig9_coordination)
+for b in "${benches[@]}"; do
+    echo "=== cargo bench --bench $b ===" >&2
+    (cd rust && cargo bench --locked --bench "$b") >"$tmpdir/$b.txt" 2>&1
+done
+
+python3 - "$out" "$tmpdir" "${benches[@]}" <<'EOF'
+import json, pathlib, platform, subprocess, sys, datetime
+
+out, tmpdir, *benches = sys.argv[1:]
+rustc = subprocess.run(["rustc", "--version"], capture_output=True, text=True).stdout.strip()
+snapshot = {
+    "version": 1,
+    "status": "recorded",
+    "date": datetime.datetime.now(datetime.timezone.utc).isoformat(timespec="seconds"),
+    "host": {
+        "platform": platform.platform(),
+        "machine": platform.machine(),
+        "rustc": rustc,
+    },
+    "benches": {
+        b: pathlib.Path(tmpdir, f"{b}.txt").read_text() for b in benches
+    },
+}
+pathlib.Path(out).write_text(json.dumps(snapshot, indent=2) + "\n")
+print(f"wrote {out}")
+EOF
