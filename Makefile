@@ -6,11 +6,12 @@
 #   make lint       — clippy -D warnings + rustfmt check
 #   make calibrate  — measure op costs on this host -> profiles.json
 #   make bench-baseline — record the fig7/8/9 snapshot (BENCH_seed.json)
+#   make smoke-distributed — localhost staged Manager + 2 TCP workers
 
 CARGO ?= cargo
 PYTHON ?= python3
 
-.PHONY: build test artifacts lint calibrate bench-baseline clean
+.PHONY: build test artifacts lint calibrate bench-baseline smoke-distributed clean
 
 build:
 	cd rust && $(CARGO) build --release
@@ -30,6 +31,10 @@ calibrate:
 
 bench-baseline:
 	./scripts/bench_baseline.sh BENCH_seed.json
+
+smoke-distributed: build
+	./scripts/smoke_distributed.sh
+	HTAP_NO_LOCALITY=1 ./scripts/smoke_distributed.sh 47132
 
 clean:
 	cd rust && $(CARGO) clean

@@ -12,7 +12,7 @@ use std::collections::BTreeMap;
 /// Flags that take no value.  Everything else still requires one, so a
 /// forgotten value for a string/path flag is an error, not a silent
 /// `"true"`.
-const BOOL_FLAGS: &[&str] = &["quick", "no-dl", "no-prefetch"];
+const BOOL_FLAGS: &[&str] = &["quick", "no-dl", "no-prefetch", "no-locality"];
 
 /// Parsed command line.
 #[derive(Debug, Clone)]
@@ -107,6 +107,21 @@ impl Cli {
         if let Some(v) = self.get("no-prefetch") {
             cfg.prefetch = v != "true";
         }
+        if let Some(v) = self.get("no-locality") {
+            cfg.chunk_locality = v != "true";
+        }
+        if let Some(v) = self.get("staging-cap") {
+            cfg.staging_cap =
+                v.parse().map_err(|_| Error::Config("bad --staging-cap".into()))?;
+        }
+        if let Some(v) = self.get("prefetch-depth") {
+            cfg.prefetch_depth =
+                v.parse().map_err(|_| Error::Config("bad --prefetch-depth".into()))?;
+        }
+        if let Some(v) = self.get("read-latency-ms") {
+            cfg.read_latency_ms =
+                v.parse().map_err(|_| Error::Config("bad --read-latency-ms".into()))?;
+        }
         cfg.validate()?;
         Ok(cfg)
     }
@@ -119,17 +134,25 @@ USAGE:
     htap run     [--tiles N] [--tile-size S] [--cpus N] [--gpus N]
                  [--policy fcfs|pats] [--window N] [--config file.json]
                  [--workflow wf.json] [--profiles profiles.json]
-                 [--save-profiles out.json]
-        run a workflow locally on synthetic tiles (default: the built-in
-        WSI app; --workflow loads a declarative JSON workflow over the
-        registered op set — see docs/workflow_api.md).  --profiles seeds
-        PATS with measured estimates from `htap calibrate`;
-        --save-profiles writes the post-run EWMA estimates back out
+                 [--save-profiles out.json] [--chunk-source synth|dir:PATH]
+                 [--staging-cap N] [--prefetch-depth N] [--no-locality]
+                 [--read-latency-ms MS]
+        run a workflow locally (default: the built-in WSI app; --workflow
+        loads a declarative JSON workflow over the registered op set — see
+        docs/workflow_api.md).  Chunks come from --chunk-source (synthetic
+        tiles, or .tile files under a directory — see docs/staging.md) and
+        stage through a bounded cache with async prefetch
+        (--staging-cap/--prefetch-depth; --no-locality disables
+        catalog-driven assignment; --read-latency-ms simulates shared-FS
+        reads).  --profiles seeds PATS with measured estimates from `htap
+        calibrate`; --save-profiles writes the post-run EWMA estimates out
 
     htap sim     [--nodes N] [--tiles N] [--policy fcfs|pats]
-                 [--profiles profiles.json]
+                 [--profiles profiles.json] [--no-locality]
         discrete-event simulation at cluster scale (Keeneland model);
-        --profiles calibrates the cost model from measured estimates
+        --profiles calibrates the cost model from measured estimates;
+        --no-locality makes repeat stages migrate across nodes and re-read
+        their tiles (the Fig. 8-style locality-off control)
 
     htap calibrate [--quick] [--tile-size S] [--tiles N] [--reps N]
                    [--seed N] [--out profiles.json]
@@ -138,10 +161,21 @@ USAGE:
         profiles.json consumed by run/sim/PATS (--quick: CI-sized pass)
 
     htap manager --listen HOST:PORT [--tiles N] [--tile-size S] [--workers N]
-        serve stage instances to TCP workers
+                 [--chunk-source synth|dir:PATH] [--no-locality]
+        serve stage instances to TCP workers.  Staged protocol: workers
+        read chunk payloads from their own --chunk-source (tiles never
+        cross the wire) and assignment is locality-aware via the chunk
+        catalog unless --no-locality
 
     htap worker  --connect HOST:PORT [--cpus N] [--gpus N] [--window N]
-        join a distributed run
+                 [--chunk-source synth|dir:PATH] [--worker-id N]
+                 [--staging-cap N] [--prefetch-depth N] [--read-latency-ms MS]
+        join a distributed run; --chunk-source must serve the same dataset
+        the manager was pointed at (same synth seed/tile count, or the
+        same shared directory)
+
+    htap export-tiles --dir PATH [--tiles N] [--tile-size S] [--seed N]
+        write the synthetic dataset as .tile files for dir: chunk sources
 ";
 
 #[cfg(test)]
@@ -190,6 +224,29 @@ mod tests {
     fn bad_number_rejected() {
         let c = Cli::parse(&args(&["run", "--tiles", "many"])).unwrap();
         assert!(c.run_config().is_err());
+    }
+
+    #[test]
+    fn staging_flags_override_config() {
+        let c = Cli::parse(&args(&[
+            "run",
+            "--staging-cap",
+            "8",
+            "--prefetch-depth",
+            "2",
+            "--read-latency-ms",
+            "7",
+            "--no-locality",
+        ]))
+        .unwrap();
+        let cfg = c.run_config().unwrap();
+        assert_eq!(cfg.staging_cap, 8);
+        assert_eq!(cfg.prefetch_depth, 2);
+        assert_eq!(cfg.read_latency_ms, 7);
+        assert!(!cfg.chunk_locality);
+        // defaults keep locality on
+        let cfg = Cli::parse(&args(&["run"])).unwrap().run_config().unwrap();
+        assert!(cfg.chunk_locality);
     }
 
     #[test]

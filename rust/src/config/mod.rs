@@ -94,6 +94,14 @@ pub struct RunConfig {
     pub data_locality: bool,
     /// Prefetch + async copy (paper §IV-D).
     pub prefetch: bool,
+    /// Staging-cache capacity in chunks on each worker (staged runs).
+    pub staging_cap: usize,
+    /// Background chunk-prefetch depth (0 disables the prefetcher thread).
+    pub prefetch_depth: usize,
+    /// Manager-side locality-aware (chunk-catalog) assignment.
+    pub chunk_locality: bool,
+    /// Artificial per-chunk read latency in ms (shared-FS stand-in).
+    pub read_latency_ms: u64,
     /// RNG seed for synthetic data.
     pub seed: u64,
 }
@@ -111,6 +119,10 @@ impl Default for RunConfig {
             window: 15,
             data_locality: true,
             prefetch: true,
+            staging_cap: 32,
+            prefetch_depth: 4,
+            chunk_locality: true,
+            read_latency_ms: 0,
             seed: 42,
         }
     }
@@ -148,6 +160,13 @@ impl RunConfig {
                 "prefetch" => {
                     self.prefetch = v.as_bool().ok_or_else(|| Error::Config("bad bool".into()))?
                 }
+                "staging_cap" => self.staging_cap = req_usize(v, k)?,
+                "prefetch_depth" => self.prefetch_depth = req_usize(v, k)?,
+                "chunk_locality" => {
+                    self.chunk_locality =
+                        v.as_bool().ok_or_else(|| Error::Config("bad bool".into()))?
+                }
+                "read_latency_ms" => self.read_latency_ms = req_usize(v, k)? as u64,
                 other => return Err(Error::Config(format!("unknown config key '{other}'"))),
             }
         }
@@ -168,6 +187,9 @@ impl RunConfig {
         }
         if self.window == 0 {
             return Err(Error::Config("window must be >= 1".into()));
+        }
+        if self.staging_cap == 0 {
+            return Err(Error::Config("staging_cap must be >= 1".into()));
         }
         Ok(())
     }
@@ -198,7 +220,8 @@ mod tests {
         c.apply_json(
             &Json::parse(
                 r#"{"tile_size": 256, "policy": "fcfs", "granularity": "non-pipelined",
-                    "window": 12, "data_locality": false}"#,
+                    "window": 12, "data_locality": false, "staging_cap": 8,
+                    "prefetch_depth": 2, "chunk_locality": false, "read_latency_ms": 5}"#,
             )
             .unwrap(),
         )
@@ -208,6 +231,17 @@ mod tests {
         assert_eq!(c.granularity, Granularity::NonPipelined);
         assert_eq!(c.window, 12);
         assert!(!c.data_locality);
+        assert_eq!(c.staging_cap, 8);
+        assert_eq!(c.prefetch_depth, 2);
+        assert!(!c.chunk_locality);
+        assert_eq!(c.read_latency_ms, 5);
+    }
+
+    #[test]
+    fn zero_staging_cap_invalid() {
+        let mut c = RunConfig::default();
+        c.staging_cap = 0;
+        assert!(c.validate().is_err());
     }
 
     #[test]

@@ -2,12 +2,18 @@
 //! dataset's chunks, tracks inter-stage dependencies, and hands *stage
 //! instances* to Workers with demand-driven, window-limited assignment.
 //!
-//! Stage instances are assigned **in creation order**; Workers request more
-//! as they finish (the window size bounds how many a Worker holds — paper
-//! §V-F / Table II).  Both Fig. 3 instantiation styles are supported:
-//! per-chunk replication (`StageKind::PerChunk`) and aggregation of
-//! intermediary results (`StageKind::Reduce`).
+//! Stage instances are assigned **in creation order**, except when the
+//! locality-aware policy (staged mode) finds instances whose chunk the
+//! requesting Worker already staged — those jump the queue, and chunks
+//! staged on *other* workers are stolen only as the last tier, so the bag
+//! of tasks never stalls (paper §IV-C, lifted to the cluster level).
+//! Workers request more as they finish (the window size bounds how many a
+//! Worker holds — paper §V-F / Table II).  Both Fig. 3 instantiation
+//! styles are supported: per-chunk replication (`StageKind::PerChunk`) and
+//! aggregation of intermediary results (`StageKind::Reduce`, which may
+//! chain — an upstream Reduce contributes a single completed instance).
 
+use crate::data::staging::{ChunkCatalog, WorkerId, ANON_WORKER};
 use crate::dataflow::{StageInput, StageKind, Workflow};
 use crate::runtime::Value;
 use crate::{Error, Result};
@@ -32,14 +38,60 @@ pub struct Assignment {
     pub stage_idx: usize,
     pub chunk: ChunkId,
     pub inputs: Vec<Value>,
+    /// Staged mode: the chunk payload was *not* shipped — `inputs` carries
+    /// only the upstream values and the worker splices the payload in from
+    /// its own chunk source / staging cache.
+    pub needs_chunk: bool,
+    /// The manager matched this assignment to the requester's staged set
+    /// (locality hit; diagnostics only).
+    pub locality: bool,
+}
+
+/// A demand-driven work request (worker -> manager).  The staging fields
+/// are what makes locality-aware assignment possible: the worker announces
+/// who it is and which chunks it staged/evicted since its last request.
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct WorkRequest {
+    /// Max assignments to hand out.
+    pub capacity: usize,
+    /// Stable worker identity ([`ANON_WORKER`] = anonymous, no staging).
+    pub worker: WorkerId,
+    /// Chunks newly staged in this worker's cache since the last request.
+    pub staged_add: Vec<ChunkId>,
+    /// Chunks evicted from the cache since the last request.
+    pub staged_drop: Vec<ChunkId>,
+    /// How many upcoming chunk ids the worker wants as prefetch hints.
+    pub prefetch_budget: usize,
+}
+
+impl WorkRequest {
+    /// A legacy request: no identity, no staging hints.
+    pub fn anonymous(capacity: usize) -> Self {
+        WorkRequest { capacity, ..Default::default() }
+    }
+}
+
+/// A work batch (manager -> worker).
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct WorkBatch {
+    /// Empty = the workflow has fully completed; shut down.
+    pub assignments: Vec<Assignment>,
+    /// Upcoming chunk ids the worker should warm its staging cache with
+    /// (likely future assignments not yet staged on this worker).
+    pub prefetch: Vec<ChunkId>,
 }
 
 /// Work-source abstraction: the in-process [`Manager`] and the TCP client
 /// (`net::RemoteManager`) implement the same demand-driven protocol.
 pub trait WorkSource: Send + Sync {
-    /// Blocking: wait until up to `capacity` assignments are available.
-    /// An empty result means the workflow has fully completed.
-    fn request(&self, capacity: usize) -> Vec<Assignment>;
+    /// Blocking: wait until up to `req.capacity` assignments are
+    /// available.  An empty batch means the workflow has fully completed.
+    fn request_work(&self, req: &WorkRequest) -> WorkBatch;
+
+    /// Legacy anonymous request (no staging identity, no hints).
+    fn request(&self, capacity: usize) -> Vec<Assignment> {
+        self.request_work(&WorkRequest::anonymous(capacity)).assignments
+    }
 
     /// Report a finished stage instance with its outputs.
     fn complete(&self, instance_id: u64, outputs: Vec<Value>);
@@ -65,22 +117,59 @@ struct MgrState {
     reduce_remaining: HashMap<usize, usize>,
     remaining_instances: usize,
     completed_instances: usize,
+    /// which worker has which chunks staged (staged mode)
+    catalog: ChunkCatalog,
+    /// assignments handed to the worker that already staged the chunk
+    locality_hits: u64,
+    /// assignments of cold chunks (staged nowhere yet)
+    locality_cold: u64,
+    /// assignments stolen from chunks staged on *another* worker
+    locality_steals: u64,
     error: Option<String>,
 }
 
 /// In-process Manager.
 pub struct Manager {
     workflow: Arc<Workflow>,
-    loader: ChunkLoader,
+    /// `Some` = legacy mode (manager loads chunk payloads and ships them
+    /// in assignments); `None` = staged mode (workers stage chunks from
+    /// their own [`crate::data::staging::ChunkSource`]).
+    loader: Option<ChunkLoader>,
     n_chunks: usize,
     /// stages that someone downstream consumes (outputs must be retained)
     has_dependents: Vec<bool>,
+    /// per stage: in staged mode, does an assignment need the chunk payload
+    stage_needs_chunk: Vec<bool>,
+    /// locality-aware (catalog) assignment policy enabled
+    locality: bool,
     state: Mutex<MgrState>,
     cv: Condvar,
 }
 
 impl Manager {
+    /// Legacy mode: the manager loads every chunk payload itself and ships
+    /// it inside assignments.
     pub fn new(workflow: Arc<Workflow>, loader: ChunkLoader, n_chunks: usize) -> Result<Arc<Self>> {
+        Self::build(workflow, Some(loader), n_chunks, true)
+    }
+
+    /// Staged mode: assignments carry bare chunk ids (plus upstream
+    /// values); workers stage chunk payloads from their own source.
+    /// `locality` enables the catalog-driven assignment policy.
+    pub fn new_staged(
+        workflow: Arc<Workflow>,
+        n_chunks: usize,
+        locality: bool,
+    ) -> Result<Arc<Self>> {
+        Self::build(workflow, None, n_chunks, locality)
+    }
+
+    fn build(
+        workflow: Arc<Workflow>,
+        loader: Option<ChunkLoader>,
+        n_chunks: usize,
+        locality: bool,
+    ) -> Result<Arc<Self>> {
         workflow.validate()?;
         let n_stages = workflow.stages.len();
         let mut has_dependents = vec![false; n_stages];
@@ -91,6 +180,12 @@ impl Manager {
                 }
             }
         }
+        let staged = loader.is_none();
+        let stage_needs_chunk: Vec<bool> = workflow
+            .stages
+            .iter()
+            .map(|s| staged && s.inputs.iter().any(|i| matches!(i, StageInput::Chunk)))
+            .collect();
         let mut remaining = 0usize;
         for s in &workflow.stages {
             remaining += match s.kind {
@@ -103,6 +198,8 @@ impl Manager {
             loader,
             n_chunks,
             has_dependents,
+            stage_needs_chunk,
+            locality,
             state: Mutex::new(MgrState {
                 pending: VecDeque::new(),
                 next_id: 0,
@@ -113,6 +210,10 @@ impl Manager {
                 reduce_remaining: HashMap::new(),
                 remaining_instances: remaining,
                 completed_instances: 0,
+                catalog: ChunkCatalog::new(),
+                locality_hits: 0,
+                locality_cold: 0,
+                locality_steals: 0,
                 stale_completions: 0,
                 error: None,
             }),
@@ -136,8 +237,16 @@ impl Manager {
                     }
                 }
                 StageKind::Reduce => {
-                    // each upstream contributes n_chunks completions
-                    st.reduce_remaining.insert(si, ups.len() * self.n_chunks);
+                    // a PerChunk upstream contributes n_chunks completions,
+                    // an upstream Reduce exactly one (chained Reduce)
+                    let expected: usize = ups
+                        .iter()
+                        .map(|&u| match self.workflow.stages[u].kind {
+                            StageKind::PerChunk => self.n_chunks,
+                            StageKind::Reduce => 1,
+                        })
+                        .sum();
+                    st.reduce_remaining.insert(si, expected);
                     st.reduce_acc.insert(si, BTreeMap::new());
                 }
                 _ => {}
@@ -154,6 +263,8 @@ impl Manager {
                         stage_idx: si,
                         chunk: c as ChunkId,
                         inputs,
+                        needs_chunk: self.stage_needs_chunk[si],
+                        locality: false,
                     };
                     st.inflight.insert(id, a.clone());
                     st.pending.push_back(a);
@@ -169,7 +280,13 @@ impl Manager {
         let mut inputs = Vec::new();
         for si in &self.workflow.stages[stage].inputs {
             match si {
-                StageInput::Chunk => inputs.extend((self.loader)(chunk)?),
+                // staged mode (loader absent): the worker splices the
+                // payload in from its staging cache
+                StageInput::Chunk => {
+                    if let Some(loader) = &self.loader {
+                        inputs.extend(loader(chunk)?);
+                    }
+                }
                 StageInput::Upstream { .. } => {
                     return Err(Error::Scheduler("stage has upstream inputs".into()))
                 }
@@ -189,7 +306,11 @@ impl Manager {
         let mut inputs = Vec::new();
         for si in &self.workflow.stages[stage].inputs {
             match si {
-                StageInput::Chunk => inputs.extend((self.loader)(chunk)?),
+                StageInput::Chunk => {
+                    if let Some(loader) = &self.loader {
+                        inputs.extend(loader(chunk)?);
+                    }
+                }
                 StageInput::Upstream { stage: up, output } => {
                     let outs = st
                         .outputs
@@ -257,6 +378,25 @@ impl Manager {
         self.state.lock().unwrap().stale_completions
     }
 
+    /// Locality-policy counters: (hits, cold, steals) — assignments handed
+    /// to the worker that staged the chunk / of chunks staged nowhere / of
+    /// chunks staged on another worker.
+    pub fn locality_stats(&self) -> (u64, u64, u64) {
+        let st = self.state.lock().unwrap();
+        (st.locality_hits, st.locality_cold, st.locality_steals)
+    }
+
+    /// Forget a dead/disconnected worker's catalog entries so its chunks
+    /// go back to cold and survivors take them in tier 2 instead of as
+    /// steals (pairs with [`Manager::requeue_stale`] on the
+    /// fault-tolerance path).  Returns how many entries were dropped.
+    pub fn purge_worker(&self, worker: WorkerId) -> usize {
+        if worker == ANON_WORKER {
+            return 0;
+        }
+        self.state.lock().unwrap().catalog.purge_worker(worker)
+    }
+
     /// Outputs of a Reduce stage (after completion), looked up by stage
     /// *name* — e.g. `reduce_outputs("classification")`.  None if no such
     /// stage exists, it hasn't completed, or it isn't a Reduce stage.
@@ -268,16 +408,102 @@ impl Manager {
 }
 
 impl WorkSource for Manager {
-    fn request(&self, capacity: usize) -> Vec<Assignment> {
+    /// Demand-driven, locality-aware assignment (paper §IV-C lifted to the
+    /// cluster level).  Selection runs in three tiers: (1) instances whose
+    /// chunk the requester already staged, (2) instances of cold chunks
+    /// (staged nowhere) or without chunk inputs, (3) *steal* instances
+    /// whose chunk another worker staged — the bag of tasks never stalls
+    /// waiting for locality.
+    fn request_work(&self, req: &WorkRequest) -> WorkBatch {
         let mut st = self.state.lock().unwrap();
+        if req.worker != ANON_WORKER {
+            st.catalog.update(req.worker, &req.staged_add, &req.staged_drop);
+        }
         loop {
             if !st.pending.is_empty() {
-                let n = capacity.min(st.pending.len()).max(1);
-                let out: Vec<Assignment> = (0..n).filter_map(|_| st.pending.pop_front()).collect();
-                return out;
+                let n = req.capacity.min(st.pending.len()).max(1);
+                let use_locality = self.locality && req.worker != ANON_WORKER;
+                let mut picked: Vec<Assignment> = Vec::with_capacity(n);
+                if use_locality {
+                    // tier 1: chunks already staged on the requester
+                    let mut i = 0;
+                    while picked.len() < n && i < st.pending.len() {
+                        let hit = {
+                            let a = &st.pending[i];
+                            a.needs_chunk && st.catalog.is_staged(req.worker, a.chunk)
+                        };
+                        if hit {
+                            let mut a = st.pending.remove(i).unwrap();
+                            a.locality = true;
+                            st.locality_hits += 1;
+                            picked.push(a);
+                        } else {
+                            i += 1;
+                        }
+                    }
+                    // tier 2: cold chunks or chunk-less instances, in order
+                    let mut i = 0;
+                    while picked.len() < n && i < st.pending.len() {
+                        let cold = {
+                            let a = &st.pending[i];
+                            !a.needs_chunk || st.catalog.holder_count(a.chunk) == 0
+                        };
+                        if cold {
+                            let a = st.pending.remove(i).unwrap();
+                            if a.needs_chunk {
+                                st.locality_cold += 1;
+                            }
+                            picked.push(a);
+                        } else {
+                            i += 1;
+                        }
+                    }
+                    // tier 3: steal chunks staged on other workers
+                    while picked.len() < n {
+                        match st.pending.pop_front() {
+                            Some(a) => {
+                                st.locality_steals += 1;
+                                picked.push(a);
+                            }
+                            None => break,
+                        }
+                    }
+                } else {
+                    for _ in 0..n {
+                        match st.pending.pop_front() {
+                            Some(a) => picked.push(a),
+                            None => break,
+                        }
+                    }
+                }
+                // the requester must stage these chunks to execute: record
+                // them optimistically so follow-up stages route back here
+                if req.worker != ANON_WORKER {
+                    for a in &picked {
+                        if a.needs_chunk {
+                            st.catalog.insert(req.worker, a.chunk);
+                        }
+                    }
+                }
+                // prefetch hints: upcoming chunks not yet staged here
+                let mut prefetch: Vec<ChunkId> = Vec::new();
+                if req.prefetch_budget > 0 {
+                    for a in st.pending.iter() {
+                        if prefetch.len() >= req.prefetch_budget {
+                            break;
+                        }
+                        if a.needs_chunk
+                            && !st.catalog.is_staged(req.worker, a.chunk)
+                            && !prefetch.contains(&a.chunk)
+                        {
+                            prefetch.push(a.chunk);
+                        }
+                    }
+                }
+                return WorkBatch { assignments: picked, prefetch };
             }
             if st.remaining_instances == 0 || st.error.is_some() {
-                return Vec::new();
+                return WorkBatch::default();
             }
             st = self.cv.wait(st).unwrap();
         }
@@ -364,7 +590,14 @@ impl WorkSource for Manager {
             };
             let id = st.next_id;
             st.next_id += 1;
-            let a = Assignment { instance_id: id, stage_idx: di, chunk: c, inputs };
+            let a = Assignment {
+                instance_id: id,
+                stage_idx: di,
+                chunk: c,
+                inputs,
+                needs_chunk: c != REDUCE_CHUNK && self.stage_needs_chunk[di],
+                locality: false,
+            };
             st.inflight.insert(id, a.clone());
             st.pending.push_back(a);
         }
@@ -551,6 +784,164 @@ mod tests {
         let out = mgr.reduce_outputs("sum").unwrap();
         // sum of v*10 over chunks 0..3 = (0+1+2)*10 = 30
         assert_eq!(out[0].as_scalar().unwrap(), 30.0);
+    }
+
+    #[test]
+    fn chained_reduce_aggregates() {
+        // chunks -> a (PerChunk, +0) -> r1 (Reduce sum) -> r2 (Reduce sum):
+        // r2 must see exactly r1's single output and complete once.
+        let mut wb = WorkflowBuilder::new("t", test_registry());
+        let mut a = wb.stage("a", StageKind::PerChunk);
+        let c = a.input_chunk();
+        let op = a.add_op("add", &[c, param(0.0)]).unwrap();
+        a.export(op.out()).unwrap();
+        let a = wb.add_stage(a).unwrap();
+        let mut r1 = wb.stage("r1", StageKind::Reduce);
+        r1.input_upstream(a.output(0));
+        let s = r1.add_reduce_op("sum").unwrap();
+        r1.export(s.out()).unwrap();
+        let r1 = wb.add_stage(r1).unwrap();
+        let mut r2 = wb.stage("r2", StageKind::Reduce);
+        r2.input_upstream(r1.output(0));
+        let s = r2.add_reduce_op("sum").unwrap();
+        r2.export(s.out()).unwrap();
+        wb.add_stage(r2).unwrap();
+        let mgr = Manager::new(Arc::new(wb.build().unwrap()), loader(), 4).unwrap();
+        // 4 chunk instances + r1 + r2
+        assert_eq!(drive_serial(&mgr), 6);
+        let out = mgr.reduce_outputs("r2").unwrap();
+        assert_eq!(out[0].as_scalar().unwrap(), 6.0); // 0+1+2+3
+        assert_eq!(mgr.reduce_outputs("r1").unwrap()[0].as_scalar().unwrap(), 6.0);
+    }
+
+    /// A staged two-stage workflow where both stages read the chunk
+    /// (stage 1 additionally consumes stage 0's output) — the shape that
+    /// makes repeat-stage locality meaningful.
+    fn staged_two_stage(n_chunks: usize, locality: bool) -> Arc<Manager> {
+        let mut wb = WorkflowBuilder::new("t", test_registry());
+        let mut s0 = wb.stage("s0", StageKind::PerChunk);
+        let c = s0.input_chunk();
+        let op = s0.add_op("add", &[c, param(1.0)]).unwrap();
+        s0.export(op.out()).unwrap();
+        let s0 = wb.add_stage(s0).unwrap();
+        let mut s1 = wb.stage("s1", StageKind::PerChunk);
+        let c = s1.input_chunk();
+        let up = s1.input_upstream(s0.output(0));
+        let op = s1.add_op("add", &[c, up]).unwrap();
+        s1.export(op.out()).unwrap();
+        wb.add_stage(s1).unwrap();
+        Manager::new_staged(Arc::new(wb.build().unwrap()), n_chunks, locality).unwrap()
+    }
+
+    #[test]
+    fn staged_mode_defers_chunk_payloads() {
+        let mgr = staged_two_stage(2, true);
+        let batch = mgr.request_work(&WorkRequest { capacity: 4, worker: 1, ..Default::default() });
+        assert_eq!(batch.assignments.len(), 2);
+        for a in &batch.assignments {
+            assert!(a.needs_chunk);
+            assert!(a.inputs.is_empty(), "stage-0 inputs must not ship the payload");
+        }
+        // complete stage 0; stage 1 assignments carry ONLY the upstream value
+        for a in batch.assignments {
+            mgr.complete(a.instance_id, vec![Value::Scalar(a.chunk as f32 + 1.0)]);
+        }
+        let batch = mgr.request_work(&WorkRequest { capacity: 4, worker: 1, ..Default::default() });
+        assert_eq!(batch.assignments.len(), 2);
+        for a in &batch.assignments {
+            assert!(a.needs_chunk);
+            assert_eq!(a.inputs.len(), 1, "only the upstream value ships");
+            assert_eq!(a.inputs[0].as_scalar().unwrap(), a.chunk as f32 + 1.0);
+            // worker 1 staged both chunks in stage 0 -> locality hits
+            assert!(a.locality);
+        }
+        let (hits, cold, steals) = mgr.locality_stats();
+        assert_eq!((hits, cold, steals), (2, 2, 0));
+    }
+
+    #[test]
+    fn locality_routes_repeat_stages_and_steals_as_last_resort() {
+        let mgr = staged_two_stage(4, true);
+        let w = |worker, capacity| WorkRequest { capacity, worker, ..Default::default() };
+        // worker 1 takes chunks 0,1; worker 2 takes chunks 2,3 (stage 0)
+        let b1 = mgr.request_work(&w(1, 2));
+        let b2 = mgr.request_work(&w(2, 2));
+        assert_eq!(b1.assignments.iter().map(|a| a.chunk).collect::<Vec<_>>(), vec![0, 1]);
+        assert_eq!(b2.assignments.iter().map(|a| a.chunk).collect::<Vec<_>>(), vec![2, 3]);
+        // everything completes -> stage-1 instances for chunks 0..4 pend
+        for a in b1.assignments.into_iter().chain(b2.assignments) {
+            mgr.complete(a.instance_id, vec![Value::Scalar(0.0)]);
+        }
+        // worker 2 asks for everything: its own chunks 2,3 first (hits),
+        // then steals 0,1 (staged on worker 1) so the bag never stalls
+        let b = mgr.request_work(&w(2, 4));
+        let chunks: Vec<ChunkId> = b.assignments.iter().map(|a| a.chunk).collect();
+        assert_eq!(chunks, vec![2, 3, 0, 1]);
+        assert!(b.assignments[0].locality && b.assignments[1].locality);
+        assert!(!b.assignments[2].locality && !b.assignments[3].locality);
+        let (hits, cold, steals) = mgr.locality_stats();
+        assert_eq!((hits, cold, steals), (2, 4, 2));
+        for a in b.assignments {
+            mgr.complete(a.instance_id, vec![Value::Scalar(0.0)]);
+        }
+        let (done, total) = mgr.progress();
+        assert_eq!((done, total), (8, 8));
+    }
+
+    #[test]
+    fn purged_worker_chunks_go_back_to_cold() {
+        let mgr = staged_two_stage(2, true);
+        let b1 = mgr.request_work(&WorkRequest { capacity: 2, worker: 1, ..Default::default() });
+        for a in b1.assignments {
+            mgr.complete(a.instance_id, vec![Value::Scalar(0.0)]);
+        }
+        // worker 1 dies: without the purge its chunks would stay "held"
+        // by a ghost and every repeat stage would count as a steal
+        assert_eq!(mgr.purge_worker(1), 2);
+        let b = mgr.request_work(&WorkRequest { capacity: 2, worker: 2, ..Default::default() });
+        assert_eq!(b.assignments.len(), 2);
+        let (hits, cold, steals) = mgr.locality_stats();
+        assert_eq!((hits, cold, steals), (0, 4, 0), "repeat stages must be cold, not stolen");
+    }
+
+    #[test]
+    fn locality_off_preserves_fifo_order() {
+        let mgr = staged_two_stage(2, false);
+        let b1 = mgr.request_work(&WorkRequest { capacity: 1, worker: 1, ..Default::default() });
+        mgr.complete(b1.assignments[0].instance_id, vec![Value::Scalar(0.0)]);
+        // pending now: (s0, chunk 1) then (s1, chunk 0); locality off ->
+        // FIFO, even though chunk 0 is staged on worker 1
+        let b = mgr.request_work(&WorkRequest { capacity: 2, worker: 1, ..Default::default() });
+        let got: Vec<(usize, ChunkId)> =
+            b.assignments.iter().map(|a| (a.stage_idx, a.chunk)).collect();
+        assert_eq!(got, vec![(0, 1), (1, 0)]);
+        assert!(b.assignments.iter().all(|a| !a.locality));
+        assert_eq!(mgr.locality_stats(), (0, 0, 0));
+    }
+
+    #[test]
+    fn prefetch_hints_cover_upcoming_unstaged_chunks() {
+        let mgr = staged_two_stage(6, true);
+        let b = mgr.request_work(&WorkRequest {
+            capacity: 2,
+            worker: 1,
+            prefetch_budget: 3,
+            ..Default::default()
+        });
+        assert_eq!(b.assignments.len(), 2);
+        // hints skip the two chunks just handed to (and staged on) worker 1
+        assert_eq!(b.prefetch, vec![2, 3, 4]);
+        // a worker that reports chunks staged gets no hints for them
+        let b2 = mgr.request_work(&WorkRequest {
+            capacity: 1,
+            worker: 2,
+            staged_add: vec![2, 3],
+            prefetch_budget: 8,
+            ..Default::default()
+        });
+        // worker 2 is handed its staged chunk first (tier 1 hit)
+        assert_eq!(b2.assignments[0].chunk, 2);
+        assert!(!b2.prefetch.contains(&3));
     }
 
     #[test]

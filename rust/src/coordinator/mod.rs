@@ -15,10 +15,12 @@ pub mod sched;
 pub mod worker;
 pub mod wrm;
 
-pub use manager::{Assignment, ChunkId, ChunkLoader, Manager, WorkSource};
+pub use manager::{Assignment, ChunkId, ChunkLoader, Manager, WorkBatch, WorkRequest, WorkSource};
 pub use placement::NodeTopology;
+pub use worker::WorkerStaging;
 
 use crate::config::RunConfig;
+use crate::data::staging::{ChunkSource, StagingCache};
 use crate::dataflow::Workflow;
 use crate::metrics::{MetricsHub, MetricsReport};
 use crate::runtime::calibrate::SharedProfiles;
@@ -61,12 +63,47 @@ pub fn run_local_profiled(
     stage_bindings: HashMap<String, String>,
     profiles: Arc<SharedProfiles>,
 ) -> Result<RunOutcome> {
+    let manager = Manager::new(workflow.clone(), loader, n_chunks)?;
+    run_local_inner(workflow, manager, cfg, stage_bindings, profiles, None)
+}
+
+/// [`run_local_profiled`] in **staged** mode: the Manager hands out bare
+/// chunk ids, the in-process Worker stages payloads from `source` through
+/// a bounded [`StagingCache`] whose prefetcher overlaps reads with compute
+/// (`cfg.prefetch_depth`, `cfg.staging_cap`), and assignment follows the
+/// locality-aware catalog policy (`cfg.chunk_locality`).  Staging counters
+/// land in the returned metrics report.
+pub fn run_local_staged(
+    workflow: Arc<Workflow>,
+    source: Arc<dyn ChunkSource>,
+    n_chunks: usize,
+    cfg: RunConfig,
+    stage_bindings: HashMap<String, String>,
+    profiles: Arc<SharedProfiles>,
+) -> Result<RunOutcome> {
+    let manager = Manager::new_staged(workflow.clone(), n_chunks, cfg.chunk_locality)?;
+    let staging = worker::WorkerStaging {
+        cache: StagingCache::new(source, cfg.staging_cap, cfg.prefetch_depth),
+        worker_id: 1,
+        prefetch_budget: cfg.prefetch_depth,
+    };
+    run_local_inner(workflow, manager, cfg, stage_bindings, profiles, Some(staging))
+}
+
+/// Shared single-node run harness: one in-process Worker against `manager`.
+fn run_local_inner(
+    workflow: Arc<Workflow>,
+    manager: Arc<Manager>,
+    cfg: RunConfig,
+    stage_bindings: HashMap<String, String>,
+    profiles: Arc<SharedProfiles>,
+    staging: Option<worker::WorkerStaging>,
+) -> Result<RunOutcome> {
     // No artifacts built => every variant degrades to its CPU member.
     let manifest = Arc::new(ArtifactManifest::discover_or_empty());
     let metrics = Arc::new(MetricsHub::new());
-    let manager = Manager::new(workflow.clone(), loader, n_chunks)?;
     metrics.mark_start();
-    worker::run_worker_profiled(
+    worker::run_worker_staged(
         manager.clone(),
         workflow,
         cfg,
@@ -74,6 +111,7 @@ pub fn run_local_profiled(
         metrics.clone(),
         stage_bindings,
         profiles.clone(),
+        staging,
     )?;
     metrics.mark_finish();
     if let Some(e) = manager.error() {

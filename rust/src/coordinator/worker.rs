@@ -12,11 +12,12 @@
 //!   refills when the Worker drains (the naive cyclic pattern).
 //! * **completer** — drains WRM completions and reports them back.
 
-use super::manager::WorkSource;
+use super::manager::{Assignment, WorkRequest, WorkSource};
 use super::placement::NodeTopology;
 use super::wrm::{spawn_device_threads, Wrm};
 use crate::config::RunConfig;
-use crate::dataflow::Workflow;
+use crate::data::staging::StagingCache;
+use crate::dataflow::{StageInput, Workflow};
 use crate::metrics::MetricsHub;
 use crate::runtime::calibrate::SharedProfiles;
 use crate::runtime::ArtifactManifest;
@@ -28,6 +29,50 @@ struct Flight {
     in_flight: usize,
     requester_done: bool,
     failed: Option<String>,
+}
+
+/// Worker-side staging context for a staged (deferred-chunk) run: the
+/// chunk cache + prefetcher, this worker's identity, and how many prefetch
+/// hints to ask the Manager for per request.
+pub struct WorkerStaging {
+    pub cache: Arc<StagingCache>,
+    /// stable nonzero worker id (the Manager's catalog key)
+    pub worker_id: u64,
+    /// prefetch-hint budget per work request
+    pub prefetch_budget: usize,
+}
+
+/// Splice staged chunk payloads into a deferred assignment: walk the
+/// stage's declared inputs, drawing `Chunk` slots from the staging cache
+/// and `Upstream` slots from the values the Manager shipped.
+fn materialize_inputs(
+    workflow: &Workflow,
+    a: Assignment,
+    staging: Option<&WorkerStaging>,
+) -> Result<Assignment> {
+    if !a.needs_chunk {
+        return Ok(a);
+    }
+    let Some(stg) = staging else {
+        return Err(Error::Scheduler(
+            "manager defers chunk payloads but this worker has no chunk source \
+             (staging is not configured)"
+            .into(),
+        ));
+    };
+    let Assignment { instance_id, stage_idx, chunk, inputs, needs_chunk, locality } = a;
+    let payload = stg.cache.get(chunk)?;
+    let mut upstream = inputs.into_iter();
+    let mut full = Vec::new();
+    for input in &workflow.stages[stage_idx].inputs {
+        match input {
+            StageInput::Chunk => full.extend(payload.iter().cloned()),
+            StageInput::Upstream { .. } => full.push(upstream.next().ok_or_else(|| {
+                Error::Scheduler(format!("assignment {instance_id} missing an upstream value"))
+            })?),
+        }
+    }
+    Ok(Assignment { instance_id, stage_idx, chunk, inputs: full, needs_chunk, locality })
 }
 
 /// Run one Worker against a work source until the workflow completes,
@@ -67,18 +112,50 @@ pub fn run_worker_profiled(
     stage_bindings: HashMap<String, String>,
     profiles: Arc<SharedProfiles>,
 ) -> Result<()> {
+    run_worker_staged(source, workflow, cfg, manifest, metrics, stage_bindings, profiles, None)
+}
+
+/// [`run_worker_profiled`] with an optional staging context.  With
+/// `Some(staging)` the Worker identifies itself to the Manager, reports
+/// its staged/evicted chunks, warms the cache with every queued
+/// assignment's chunk plus the Manager's prefetch hints (the paper's
+/// asynchronous data copy, lifted to node-level shared-FS reads), and
+/// splices staged payloads into deferred assignments before submitting
+/// them to the WRM.  The cache's counters are folded into `metrics` when
+/// the run ends.
+#[allow(clippy::too_many_arguments)]
+pub fn run_worker_staged(
+    source: Arc<dyn WorkSource>,
+    workflow: Arc<Workflow>,
+    cfg: RunConfig,
+    manifest: Arc<ArtifactManifest>,
+    metrics: Arc<MetricsHub>,
+    stage_bindings: HashMap<String, String>,
+    profiles: Arc<SharedProfiles>,
+    staging: Option<WorkerStaging>,
+) -> Result<()> {
     cfg.validate()?;
     let topo = NodeTopology::host();
-    let wrm = Wrm::new(workflow.clone(), cfg.clone(), manifest, metrics, stage_bindings, profiles);
+    let wrm = Wrm::new(
+        workflow.clone(),
+        cfg.clone(),
+        manifest,
+        metrics.clone(),
+        stage_bindings,
+        profiles,
+    );
     let device_threads = spawn_device_threads(&wrm, &cfg, &topo);
 
     let flight = Arc::new((Mutex::new(Flight { in_flight: 0, requester_done: false, failed: None }), Condvar::new()));
+    let staging = staging.map(Arc::new);
 
     // requester thread
     let requester = {
         let flight = flight.clone();
         let wrm = wrm.clone();
         let source = source.clone();
+        let workflow = workflow.clone();
+        let staging = staging.clone();
         let window = cfg.window;
         let prefetch = cfg.prefetch;
         std::thread::Builder::new()
@@ -104,8 +181,21 @@ pub fn run_worker_profiled(
                             fl = cv.wait(fl).unwrap();
                         }
                     };
-                    let batch = source.request(capacity);
-                    if batch.is_empty() {
+                    let req = match &staging {
+                        Some(s) => {
+                            let (staged_add, staged_drop) = s.cache.take_staged_delta();
+                            WorkRequest {
+                                capacity,
+                                worker: s.worker_id,
+                                staged_add,
+                                staged_drop,
+                                prefetch_budget: s.prefetch_budget,
+                            }
+                        }
+                        None => WorkRequest::anonymous(capacity),
+                    };
+                    let batch = source.request_work(&req);
+                    if batch.assignments.is_empty() {
                         let mut fl = lock.lock().unwrap();
                         fl.requester_done = true;
                         cv.notify_all();
@@ -113,16 +203,48 @@ pub fn run_worker_profiled(
                         wrm.poke();
                         return;
                     }
+                    if let Some(s) = &staging {
+                        // warm the cache with this batch's chunks and the
+                        // manager's hints; the prefetcher reads them while
+                        // the device threads execute the current instances
+                        let mut warm: Vec<u64> = batch
+                            .assignments
+                            .iter()
+                            .filter(|a| a.needs_chunk)
+                            .map(|a| a.chunk)
+                            .collect();
+                        warm.extend(batch.prefetch.iter().copied());
+                        s.cache.prefetch(&warm);
+                    }
                     {
                         let mut fl = lock.lock().unwrap();
-                        fl.in_flight += batch.len();
+                        fl.in_flight += batch.assignments.len();
                     }
-                    for a in batch {
-                        wrm.submit(a);
+                    for a in batch.assignments {
+                        match materialize_inputs(&workflow, a, staging.as_deref()) {
+                            Ok(a) => wrm.submit(a),
+                            Err(e) => {
+                                let mut fl = lock.lock().unwrap();
+                                fl.failed = Some(e.to_string());
+                                fl.requester_done = true;
+                                cv.notify_all();
+                                drop(fl);
+                                wrm.poke();
+                                return;
+                            }
+                        }
                     }
                 }
             })
             .expect("spawn requester")
+    };
+
+    // fold the staging counters into metrics + stop the prefetcher on exit
+    let finish_staging = |staging: &Option<Arc<WorkerStaging>>| {
+        if let Some(s) = staging {
+            metrics.record_staging(&s.cache.report());
+            s.cache.shutdown();
+        }
     };
 
     // completer loop (this thread)
@@ -155,6 +277,7 @@ pub fn run_worker_profiled(
                 let _ = h.join();
             }
             let _ = requester.join();
+            finish_staging(&staging);
             return Err(Error::Scheduler(format!("worker failed: {msg}")));
         }
         if finished {
@@ -166,5 +289,6 @@ pub fn run_worker_profiled(
         let _ = h.join();
     }
     let _ = requester.join();
+    finish_staging(&staging);
     Ok(())
 }

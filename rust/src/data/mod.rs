@@ -10,10 +10,15 @@
 //!
 //! [`TileStore`] serves tiles by chunk id with a configurable artificial
 //! read latency, standing in for the shared-filesystem reads whose cost the
-//! paper's Figs. 8 and 14 include.
+//! paper's Figs. 8 and 14 include.  The [`staging`] subsystem builds on it:
+//! chunk sources (synthetic or `.tile` directories), the worker-side
+//! staging cache with asynchronous prefetch, and the manager-side chunk
+//! catalog behind locality-aware assignment.
 
+pub mod staging;
 pub mod synth;
 
+pub use staging::{ChunkCatalog, ChunkSource, DirSource, StagingCache, SynthSource};
 pub use synth::{SynthConfig, TileSynthesizer};
 
 use crate::coordinator::ChunkLoader;

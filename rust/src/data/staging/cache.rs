@@ -1,0 +1,415 @@
+//! The worker-side staging cache: a bounded in-memory chunk store with a
+//! background prefetcher (the paper's "data prefetching and asynchronous
+//! data copy", lifted from the GPU copy engine to the node's
+//! shared-filesystem reads).
+//!
+//! The Worker's requester warms the cache with the chunks of every queued
+//! assignment (plus the Manager's prefetch hints) as soon as a batch
+//! arrives; the prefetcher thread then pulls those chunks from the
+//! [`ChunkSource`] while the device threads execute the current pipeline
+//! instances.  By the time an assignment's inputs are materialised the
+//! read has usually already happened — the hidden read latency is counted
+//! in [`StagingReport::hidden`].
+
+use super::source::ChunkSource;
+use crate::coordinator::ChunkId;
+use crate::metrics::StagingReport;
+use crate::runtime::Value;
+use crate::Result;
+use std::collections::{HashMap, VecDeque};
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Condvar, Mutex};
+use std::time::{Duration, Instant};
+
+enum Slot {
+    /// A read is in flight (prefetcher or another demand load).
+    Loading,
+    /// Payload staged in memory.
+    Ready {
+        vals: Arc<Vec<Value>>,
+        /// loaded by the prefetcher (not a demand load)
+        prefetched: bool,
+        /// how long the read took
+        load: Duration,
+        /// a consumer already claimed it (hidden-latency counted once)
+        claimed: bool,
+    },
+}
+
+struct Inner {
+    slots: HashMap<ChunkId, Slot>,
+    /// Ready chunk ids in staging order (eviction scan order).
+    order: VecDeque<ChunkId>,
+    /// Prefetch work queue (callers bound what they offer; the capacity
+    /// bound caps what is held staged at once).
+    queue: VecDeque<ChunkId>,
+    /// Newly staged chunks not yet reported to the manager.
+    staged: Vec<ChunkId>,
+    /// Evicted chunks not yet reported to the manager.
+    evicted: Vec<ChunkId>,
+    shutdown: bool,
+}
+
+/// Bounded chunk cache + prefetcher; one per worker process.
+pub struct StagingCache {
+    source: Arc<dyn ChunkSource>,
+    /// max staged chunks held in memory
+    cap: usize,
+    /// 0 = no prefetcher thread (demand loads only); > 0 also serves as
+    /// the hint budget the worker requests from the manager
+    depth: usize,
+    inner: Mutex<Inner>,
+    cv: Condvar,
+    hits: AtomicU64,
+    misses: AtomicU64,
+    prefetched: AtomicU64,
+    evictions: AtomicU64,
+    hidden_ns: AtomicU64,
+    stall_ns: AtomicU64,
+}
+
+enum Lookup {
+    Ready(Arc<Vec<Value>>, Option<(bool, Duration)>),
+    Wait,
+    Load,
+}
+
+impl StagingCache {
+    /// Create a cache over `source` holding at most `cap` chunks, with a
+    /// background prefetcher when `depth > 0`.  The prefetcher thread is
+    /// detached; call [`StagingCache::shutdown`] when the run ends.
+    pub fn new(source: Arc<dyn ChunkSource>, cap: usize, depth: usize) -> Arc<Self> {
+        let cache = Arc::new(StagingCache {
+            source,
+            cap: cap.max(1),
+            depth,
+            inner: Mutex::new(Inner {
+                slots: HashMap::new(),
+                order: VecDeque::new(),
+                queue: VecDeque::new(),
+                staged: Vec::new(),
+                evicted: Vec::new(),
+                shutdown: false,
+            }),
+            cv: Condvar::new(),
+            hits: AtomicU64::new(0),
+            misses: AtomicU64::new(0),
+            prefetched: AtomicU64::new(0),
+            evictions: AtomicU64::new(0),
+            hidden_ns: AtomicU64::new(0),
+            stall_ns: AtomicU64::new(0),
+        });
+        if depth > 0 {
+            let c = cache.clone();
+            std::thread::Builder::new()
+                .name("htap-prefetch".into())
+                .spawn(move || c.prefetch_loop())
+                .expect("spawn prefetcher");
+        }
+        cache
+    }
+
+    /// Queue chunks for background staging (first-come order;
+    /// already-staged or already-queued ids are skipped).  Every offered
+    /// chunk is enqueued — callers bound the list themselves (the
+    /// requester passes its window's assignment chunks plus at most
+    /// `prefetch_budget` manager hints), and the capacity bound caps how
+    /// many staged payloads are held at once.  No-op when the prefetcher
+    /// is disabled.
+    pub fn prefetch(&self, chunks: &[ChunkId]) {
+        if self.depth == 0 {
+            return;
+        }
+        let mut inner = self.inner.lock().unwrap();
+        for &c in chunks {
+            if inner.slots.contains_key(&c) || inner.queue.contains(&c) {
+                continue;
+            }
+            inner.queue.push_back(c);
+        }
+        drop(inner);
+        self.cv.notify_all();
+    }
+
+    fn prefetch_loop(&self) {
+        loop {
+            let chunk = {
+                let mut inner = self.inner.lock().unwrap();
+                loop {
+                    if inner.shutdown {
+                        return;
+                    }
+                    match inner.queue.pop_front() {
+                        Some(c) if inner.slots.contains_key(&c) => continue,
+                        Some(c) => {
+                            inner.slots.insert(c, Slot::Loading);
+                            break c;
+                        }
+                        None => inner = self.cv.wait(inner).unwrap(),
+                    }
+                }
+            };
+            let t0 = Instant::now();
+            let loaded = self.source.load(chunk);
+            let load = t0.elapsed();
+            let mut inner = self.inner.lock().unwrap();
+            match loaded {
+                Ok(vals) => {
+                    let slot = Slot::Ready {
+                        vals: Arc::new(vals),
+                        prefetched: true,
+                        load,
+                        claimed: false,
+                    };
+                    inner.slots.insert(chunk, slot);
+                    inner.order.push_back(chunk);
+                    inner.staged.push(chunk);
+                    self.prefetched.fetch_add(1, Ordering::Relaxed);
+                    self.evict_excess(&mut inner);
+                }
+                // drop the slot: the demand path will retry the read and
+                // surface the error to the worker
+                Err(_) => {
+                    inner.slots.remove(&chunk);
+                }
+            }
+            drop(inner);
+            self.cv.notify_all();
+        }
+    }
+
+    /// Fetch one chunk's payload: staged hit, wait on an in-flight
+    /// prefetch, or demand-load on this thread.
+    pub fn get(&self, chunk: ChunkId) -> Result<Arc<Vec<Value>>> {
+        let t_req = Instant::now();
+        let mut counted = false;
+        let mut inner = self.inner.lock().unwrap();
+        loop {
+            let lookup = match inner.slots.get_mut(&chunk) {
+                Some(Slot::Ready { vals, prefetched, load, claimed }) => {
+                    let newly = if *claimed {
+                        None
+                    } else {
+                        *claimed = true;
+                        Some((*prefetched, *load))
+                    };
+                    Lookup::Ready(vals.clone(), newly)
+                }
+                Some(Slot::Loading) => Lookup::Wait,
+                None => Lookup::Load,
+            };
+            match lookup {
+                Lookup::Ready(vals, newly) => {
+                    if !counted {
+                        self.hits.fetch_add(1, Ordering::Relaxed);
+                    }
+                    if let Some((true, load)) = newly {
+                        // the part of the read that ran before (or while) we
+                        // blocked here was hidden behind compute
+                        let waited = t_req.elapsed().min(load);
+                        let hidden = load.saturating_sub(waited);
+                        self.hidden_ns.fetch_add(hidden.as_nanos() as u64, Ordering::Relaxed);
+                        self.stall_ns.fetch_add(waited.as_nanos() as u64, Ordering::Relaxed);
+                    }
+                    // refresh recency for the eviction scan
+                    if let Some(pos) = inner.order.iter().position(|&c| c == chunk) {
+                        inner.order.remove(pos);
+                        inner.order.push_back(chunk);
+                    }
+                    return Ok(vals);
+                }
+                Lookup::Wait => {
+                    if !counted {
+                        // an in-flight prefetch still counts as a hit: part
+                        // of the read is overlapped
+                        self.hits.fetch_add(1, Ordering::Relaxed);
+                        counted = true;
+                    }
+                    inner = self.cv.wait(inner).unwrap();
+                }
+                Lookup::Load => {
+                    if !counted {
+                        self.misses.fetch_add(1, Ordering::Relaxed);
+                        counted = true;
+                    }
+                    inner.slots.insert(chunk, Slot::Loading);
+                    drop(inner);
+                    let t0 = Instant::now();
+                    let loaded = self.source.load(chunk);
+                    let load = t0.elapsed();
+                    inner = self.inner.lock().unwrap();
+                    match loaded {
+                        Ok(vals) => {
+                            let vals = Arc::new(vals);
+                            inner.slots.insert(
+                                chunk,
+                                Slot::Ready {
+                                    vals: vals.clone(),
+                                    prefetched: false,
+                                    load,
+                                    claimed: true,
+                                },
+                            );
+                            inner.order.push_back(chunk);
+                            inner.staged.push(chunk);
+                            self.stall_ns.fetch_add(load.as_nanos() as u64, Ordering::Relaxed);
+                            self.evict_excess(&mut inner);
+                            drop(inner);
+                            self.cv.notify_all();
+                            return Ok(vals);
+                        }
+                        Err(e) => {
+                            inner.slots.remove(&chunk);
+                            drop(inner);
+                            self.cv.notify_all();
+                            return Err(e);
+                        }
+                    }
+                }
+            }
+        }
+    }
+
+    /// Evict beyond capacity: oldest already-consumed entry first, oldest
+    /// entry otherwise.  Caller holds the lock.
+    fn evict_excess(&self, inner: &mut Inner) {
+        while inner.order.len() > self.cap {
+            let pos = inner
+                .order
+                .iter()
+                .position(|c| matches!(inner.slots.get(c), Some(Slot::Ready { claimed: true, .. })))
+                .unwrap_or(0);
+            if let Some(c) = inner.order.remove(pos) {
+                inner.slots.remove(&c);
+                inner.evicted.push(c);
+                self.evictions.fetch_add(1, Ordering::Relaxed);
+            }
+        }
+    }
+
+    /// Drain the (staged, evicted) chunk-id deltas accumulated since the
+    /// last call — piggybacked on the next work request so the Manager's
+    /// catalog tracks this worker.
+    pub fn take_staged_delta(&self) -> (Vec<ChunkId>, Vec<ChunkId>) {
+        let mut inner = self.inner.lock().unwrap();
+        (std::mem::take(&mut inner.staged), std::mem::take(&mut inner.evicted))
+    }
+
+    /// Whether a chunk is currently staged (Ready) — test/diagnostic hook.
+    pub fn is_staged(&self, chunk: ChunkId) -> bool {
+        matches!(self.inner.lock().unwrap().slots.get(&chunk), Some(Slot::Ready { .. }))
+    }
+
+    /// Stop the prefetcher thread.
+    pub fn shutdown(&self) {
+        self.inner.lock().unwrap().shutdown = true;
+        self.cv.notify_all();
+    }
+
+    /// Snapshot of the staging counters.
+    pub fn report(&self) -> StagingReport {
+        StagingReport {
+            hits: self.hits.load(Ordering::Relaxed),
+            misses: self.misses.load(Ordering::Relaxed),
+            prefetched: self.prefetched.load(Ordering::Relaxed),
+            evictions: self.evictions.load(Ordering::Relaxed),
+            hidden: Duration::from_nanos(self.hidden_ns.load(Ordering::Relaxed)),
+            stall: Duration::from_nanos(self.stall_ns.load(Ordering::Relaxed)),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::staging::SynthSource;
+    use crate::data::SynthConfig;
+
+    fn source(n: usize, latency_ms: u64) -> Arc<dyn ChunkSource> {
+        Arc::new(
+            SynthSource::new(SynthConfig::small(), n)
+                .with_read_latency(Duration::from_millis(latency_ms)),
+        )
+    }
+
+    /// Wait (bounded) until `cond` holds.
+    fn poll(mut cond: impl FnMut() -> bool) -> bool {
+        for _ in 0..500 {
+            if cond() {
+                return true;
+            }
+            std::thread::sleep(Duration::from_millis(5));
+        }
+        false
+    }
+
+    #[test]
+    fn demand_loads_count_misses() {
+        let cache = StagingCache::new(source(4, 0), 4, 0);
+        let a = cache.get(0).unwrap();
+        let b = cache.get(0).unwrap();
+        assert_eq!(a, b);
+        let r = cache.report();
+        assert_eq!((r.misses, r.hits), (1, 1));
+        assert_eq!(r.prefetched, 0);
+        cache.shutdown();
+    }
+
+    #[test]
+    fn prefetched_chunks_hide_read_latency() {
+        let cache = StagingCache::new(source(4, 10), 4, 4);
+        cache.prefetch(&[0, 1]);
+        assert!(poll(|| cache.report().prefetched == 2), "prefetcher never completed");
+        assert!(cache.is_staged(0) && cache.is_staged(1));
+        cache.get(0).unwrap();
+        cache.get(1).unwrap();
+        let r = cache.report();
+        assert_eq!(r.hits, 2);
+        assert_eq!(r.misses, 0);
+        assert!(r.hidden > Duration::ZERO, "hidden latency not counted: {r:?}");
+        // staged delta reports both chunks exactly once
+        let (add, dropped) = cache.take_staged_delta();
+        assert_eq!(add, vec![0, 1]);
+        assert!(dropped.is_empty());
+        assert!(cache.take_staged_delta().0.is_empty());
+        cache.shutdown();
+    }
+
+    #[test]
+    fn prefetch_accepts_batches_larger_than_depth() {
+        // a window's worth of assignment chunks must all prefetch even
+        // when it exceeds the depth knob (depth gates the thread + hint
+        // budget, not the queue)
+        let cache = StagingCache::new(source(8, 1), 8, 2);
+        cache.prefetch(&[0, 1, 2, 3, 4, 5]);
+        assert!(poll(|| cache.report().prefetched == 6), "queue was truncated");
+        cache.shutdown();
+    }
+
+    #[test]
+    fn capacity_bound_evicts_and_reports() {
+        let cache = StagingCache::new(source(8, 0), 2, 0);
+        for c in 0..4u64 {
+            cache.get(c).unwrap();
+        }
+        let r = cache.report();
+        assert_eq!(r.evictions, 2);
+        let (add, dropped) = cache.take_staged_delta();
+        assert_eq!(add.len(), 4);
+        assert_eq!(dropped.len(), 2);
+        // evicted chunks are no longer staged; a re-get is a miss
+        assert!(!cache.is_staged(dropped[0]));
+        cache.get(dropped[0]).unwrap();
+        assert_eq!(cache.report().misses, 5);
+        cache.shutdown();
+    }
+
+    #[test]
+    fn out_of_range_chunk_errors() {
+        let cache = StagingCache::new(source(2, 0), 2, 0);
+        assert!(cache.get(9).is_err());
+        // the failed load must not leave a stuck Loading slot
+        assert!(cache.get(9).is_err());
+        cache.shutdown();
+    }
+}

@@ -1,0 +1,156 @@
+//! The Manager-side chunk catalog: which worker has which chunks staged.
+//!
+//! Fed by the staged/evicted deltas piggybacked on every work request
+//! (plus an optimistic insert when a chunk-bearing assignment is handed
+//! out — the worker must stage the chunk to execute it), and consumed by
+//! the locality-aware assignment policy: prefer handing a worker the
+//! instances whose chunk it already holds, fall back to cold or stolen
+//! chunks so the bag of tasks never stalls.
+
+use crate::coordinator::ChunkId;
+use std::collections::{HashMap, HashSet};
+
+/// Stable worker identity carried in work requests.
+pub type WorkerId = u64;
+
+/// The anonymous worker id: no staging, no catalog tracking (legacy
+/// `request(capacity)` path and non-staged runs).
+pub const ANON_WORKER: WorkerId = 0;
+
+/// Bidirectional worker <-> staged-chunk map.
+#[derive(Debug, Default)]
+pub struct ChunkCatalog {
+    by_worker: HashMap<WorkerId, HashSet<ChunkId>>,
+    holders: HashMap<ChunkId, HashSet<WorkerId>>,
+}
+
+impl ChunkCatalog {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Record that `worker` has `chunk` staged.
+    pub fn insert(&mut self, worker: WorkerId, chunk: ChunkId) {
+        if worker == ANON_WORKER {
+            return;
+        }
+        self.by_worker.entry(worker).or_default().insert(chunk);
+        self.holders.entry(chunk).or_default().insert(worker);
+    }
+
+    /// Record that `worker` evicted `chunk`.
+    pub fn remove(&mut self, worker: WorkerId, chunk: ChunkId) {
+        if let Some(set) = self.by_worker.get_mut(&worker) {
+            set.remove(&chunk);
+            if set.is_empty() {
+                self.by_worker.remove(&worker);
+            }
+        }
+        if let Some(set) = self.holders.get_mut(&chunk) {
+            set.remove(&worker);
+            if set.is_empty() {
+                self.holders.remove(&chunk);
+            }
+        }
+    }
+
+    /// Apply one request's staged/evicted delta.
+    pub fn update(&mut self, worker: WorkerId, staged_add: &[ChunkId], staged_drop: &[ChunkId]) {
+        for &c in staged_add {
+            self.insert(worker, c);
+        }
+        for &c in staged_drop {
+            self.remove(worker, c);
+        }
+    }
+
+    /// Forget everything a worker held (it died or disconnected); its
+    /// chunks go back to cold so survivors take them in tier 2, not as
+    /// steals.  Returns how many chunk entries were dropped.
+    pub fn purge_worker(&mut self, worker: WorkerId) -> usize {
+        let Some(chunks) = self.by_worker.remove(&worker) else {
+            return 0;
+        };
+        for c in &chunks {
+            if let Some(set) = self.holders.get_mut(c) {
+                set.remove(&worker);
+                if set.is_empty() {
+                    self.holders.remove(c);
+                }
+            }
+        }
+        chunks.len()
+    }
+
+    /// Whether `worker` currently holds `chunk`.
+    pub fn is_staged(&self, worker: WorkerId, chunk: ChunkId) -> bool {
+        self.by_worker.get(&worker).map(|s| s.contains(&chunk)).unwrap_or(false)
+    }
+
+    /// How many workers hold `chunk` (0 = cold chunk).
+    pub fn holder_count(&self, chunk: ChunkId) -> usize {
+        self.holders.get(&chunk).map(|s| s.len()).unwrap_or(0)
+    }
+
+    /// How many chunks `worker` holds.
+    pub fn staged_count(&self, worker: WorkerId) -> usize {
+        self.by_worker.get(&worker).map(|s| s.len()).unwrap_or(0)
+    }
+
+    /// Number of workers with at least one staged chunk.
+    pub fn workers(&self) -> usize {
+        self.by_worker.len()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn tracks_both_directions() {
+        let mut cat = ChunkCatalog::new();
+        cat.insert(1, 10);
+        cat.insert(1, 11);
+        cat.insert(2, 10);
+        assert!(cat.is_staged(1, 10));
+        assert!(cat.is_staged(2, 10));
+        assert!(!cat.is_staged(2, 11));
+        assert_eq!(cat.holder_count(10), 2);
+        assert_eq!(cat.staged_count(1), 2);
+        assert_eq!(cat.workers(), 2);
+    }
+
+    #[test]
+    fn eviction_updates_both_maps() {
+        let mut cat = ChunkCatalog::new();
+        cat.update(1, &[5, 6], &[]);
+        cat.update(1, &[7], &[5]);
+        assert!(!cat.is_staged(1, 5));
+        assert_eq!(cat.holder_count(5), 0);
+        assert_eq!(cat.staged_count(1), 2);
+        // removing the last chunk drops the worker entry
+        cat.update(1, &[], &[6, 7]);
+        assert_eq!(cat.workers(), 0);
+    }
+
+    #[test]
+    fn purge_clears_a_dead_workers_entries() {
+        let mut cat = ChunkCatalog::new();
+        cat.update(1, &[5, 6], &[]);
+        cat.update(2, &[6], &[]);
+        assert_eq!(cat.purge_worker(1), 2);
+        assert_eq!(cat.staged_count(1), 0);
+        assert_eq!(cat.holder_count(5), 0);
+        assert_eq!(cat.holder_count(6), 1, "worker 2 still holds 6");
+        assert_eq!(cat.purge_worker(1), 0, "second purge is a no-op");
+    }
+
+    #[test]
+    fn anonymous_worker_is_never_tracked() {
+        let mut cat = ChunkCatalog::new();
+        cat.insert(ANON_WORKER, 3);
+        assert_eq!(cat.holder_count(3), 0);
+        assert_eq!(cat.workers(), 0);
+    }
+}

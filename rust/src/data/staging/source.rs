@@ -1,0 +1,267 @@
+//! Chunk sources: where stage-input payloads come from.
+//!
+//! The Manager instantiates workflows over `0..n_chunks`; a
+//! [`ChunkSource`] resolves one chunk id to its payload values.  Both the
+//! Manager (legacy payload-shipping mode, via [`source_loader`]) and the
+//! workers' [`super::StagingCache`] (staged mode) read through this trait,
+//! so swapping the synthetic dataset for tiles on disk is one CLI flag.
+
+use crate::coordinator::{ChunkId, ChunkLoader};
+use crate::data::{SynthConfig, TileStore};
+use crate::runtime::{HostTensor, Value};
+use crate::{Error, Result};
+use std::io::{Read, Write};
+use std::path::{Path, PathBuf};
+use std::sync::Arc;
+use std::time::Duration;
+
+/// A dataset addressable by chunk id.
+pub trait ChunkSource: Send + Sync {
+    /// Number of chunks this source serves (ids `0..n_chunks`).
+    fn n_chunks(&self) -> usize;
+
+    /// Load one chunk's payload values (blocking; may include real or
+    /// simulated shared-filesystem latency).
+    fn load(&self, chunk: ChunkId) -> Result<Vec<Value>>;
+
+    /// Human-readable description for logs.
+    fn describe(&self) -> String;
+}
+
+/// Bridge a source into the Manager's [`ChunkLoader`] closure (legacy
+/// payload-shipping mode and tests).
+pub fn source_loader(src: Arc<dyn ChunkSource>) -> ChunkLoader {
+    Arc::new(move |chunk| src.load(chunk))
+}
+
+/// Deterministic synthetic tiles (wraps [`TileStore`]): every process that
+/// constructs a `SynthSource` with the same config serves bit-identical
+/// chunks, which is what lets staged distributed runs skip shipping tile
+/// payloads over the wire.
+pub struct SynthSource {
+    store: TileStore,
+    read_latency: Duration,
+}
+
+impl SynthSource {
+    pub fn new(cfg: SynthConfig, n_tiles: usize) -> Self {
+        SynthSource { store: TileStore::new(cfg, n_tiles), read_latency: Duration::ZERO }
+    }
+
+    /// Add an artificial per-read latency (the Lustre stand-in whose cost
+    /// the prefetcher is there to hide).
+    pub fn with_read_latency(mut self, lat: Duration) -> Self {
+        self.read_latency = lat;
+        self
+    }
+}
+
+impl ChunkSource for SynthSource {
+    fn n_chunks(&self) -> usize {
+        self.store.len()
+    }
+
+    fn load(&self, chunk: ChunkId) -> Result<Vec<Value>> {
+        if chunk as usize >= self.store.len() {
+            return Err(Error::Config(format!(
+                "chunk {chunk} out of range (source has {})",
+                self.store.len()
+            )));
+        }
+        if !self.read_latency.is_zero() {
+            std::thread::sleep(self.read_latency);
+        }
+        Ok(vec![Value::Tensor(self.store.tile(chunk).to_tensor())])
+    }
+
+    fn describe(&self) -> String {
+        format!("synth({} tiles)", self.store.len())
+    }
+}
+
+/// Magic + format version of the on-disk `.tile` container.
+const TILE_MAGIC: &[u8; 4] = b"HTAP";
+const TILE_VERSION: u32 = 1;
+
+/// Tiles stored as `.tile` files in a directory (one file per chunk,
+/// sorted by file name).  This is the shared-filesystem mode: point the
+/// Manager and every worker at the same directory (`--chunk-source
+/// dir:PATH`).  `htap export-tiles` writes a synthetic dataset in this
+/// format.
+pub struct DirSource {
+    dir: PathBuf,
+    files: Vec<PathBuf>,
+    read_latency: Duration,
+}
+
+impl DirSource {
+    /// Scan `dir` for `*.tile` files (name-sorted; index = chunk id).
+    pub fn open(dir: impl AsRef<Path>) -> Result<Self> {
+        let dir = dir.as_ref().to_path_buf();
+        let mut files: Vec<PathBuf> = std::fs::read_dir(&dir)?
+            .filter_map(|e| e.ok())
+            .map(|e| e.path())
+            .filter(|p| p.extension().map(|e| e == "tile").unwrap_or(false))
+            .collect();
+        files.sort();
+        if files.is_empty() {
+            return Err(Error::Config(format!("no .tile files under {}", dir.display())));
+        }
+        Ok(DirSource { dir, files, read_latency: Duration::ZERO })
+    }
+
+    /// Add an artificial per-read latency on top of the real file read.
+    pub fn with_read_latency(mut self, lat: Duration) -> Self {
+        self.read_latency = lat;
+        self
+    }
+
+    /// Write one tensor as a `.tile` file.
+    pub fn write_tile(path: impl AsRef<Path>, t: &HostTensor) -> Result<()> {
+        let mut buf = Vec::with_capacity(16 + t.data().len() * 4);
+        buf.extend_from_slice(TILE_MAGIC);
+        buf.extend_from_slice(&TILE_VERSION.to_le_bytes());
+        buf.extend_from_slice(&(t.shape().len() as u32).to_le_bytes());
+        for &d in t.shape() {
+            buf.extend_from_slice(&(d as u64).to_le_bytes());
+        }
+        for &f in t.data() {
+            buf.extend_from_slice(&f.to_le_bytes());
+        }
+        let mut f = std::fs::File::create(path)?;
+        f.write_all(&buf)?;
+        Ok(())
+    }
+
+    /// Read one `.tile` file back into a tensor.
+    pub fn read_tile(path: impl AsRef<Path>) -> Result<HostTensor> {
+        let path = path.as_ref();
+        let mut bytes = Vec::new();
+        std::fs::File::open(path)?.read_to_end(&mut bytes)?;
+        let fail = |m: &str| Error::Config(format!("{}: {m}", path.display()));
+        if bytes.len() < 12 || &bytes[..4] != TILE_MAGIC {
+            return Err(fail("not an htap .tile file"));
+        }
+        let version = u32::from_le_bytes(bytes[4..8].try_into().unwrap());
+        if version != TILE_VERSION {
+            return Err(fail(&format!("tile format version {version}, expected {TILE_VERSION}")));
+        }
+        let rank = u32::from_le_bytes(bytes[8..12].try_into().unwrap()) as usize;
+        if rank > 8 {
+            return Err(fail(&format!("tensor rank {rank} too large")));
+        }
+        let mut pos = 12;
+        let mut dims = Vec::with_capacity(rank);
+        for _ in 0..rank {
+            let end = pos + 8;
+            if end > bytes.len() {
+                return Err(fail("truncated dims"));
+            }
+            dims.push(u64::from_le_bytes(bytes[pos..end].try_into().unwrap()) as usize);
+            pos = end;
+        }
+        let n: usize = dims.iter().product();
+        if bytes.len() != pos + n * 4 {
+            return Err(fail("payload size mismatch"));
+        }
+        let mut data = Vec::with_capacity(n);
+        for c in bytes[pos..].chunks_exact(4) {
+            data.push(f32::from_le_bytes(c.try_into().unwrap()));
+        }
+        HostTensor::new(dims, data)
+    }
+
+    /// Export every tile of a [`TileStore`] into `dir` (creating it) as
+    /// `chunk_NNNNN.tile`; returns how many files were written.
+    pub fn export_store(dir: impl AsRef<Path>, store: &TileStore) -> Result<usize> {
+        let dir = dir.as_ref();
+        std::fs::create_dir_all(dir)?;
+        for chunk in 0..store.len() as u64 {
+            let t = store.tile(chunk).to_tensor();
+            Self::write_tile(dir.join(format!("chunk_{chunk:05}.tile")), &t)?;
+        }
+        Ok(store.len())
+    }
+}
+
+impl ChunkSource for DirSource {
+    fn n_chunks(&self) -> usize {
+        self.files.len()
+    }
+
+    fn load(&self, chunk: ChunkId) -> Result<Vec<Value>> {
+        let path = self.files.get(chunk as usize).ok_or_else(|| {
+            Error::Config(format!("chunk {chunk} out of range (dir has {})", self.files.len()))
+        })?;
+        if !self.read_latency.is_zero() {
+            std::thread::sleep(self.read_latency);
+        }
+        Ok(vec![Value::Tensor(Self::read_tile(path)?)])
+    }
+
+    fn describe(&self) -> String {
+        format!("dir:{} ({} tiles)", self.dir.display(), self.files.len())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tmp_dir(name: &str) -> PathBuf {
+        let d = std::env::temp_dir().join(format!("htap-staging-{name}-{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&d);
+        std::fs::create_dir_all(&d).unwrap();
+        d
+    }
+
+    #[test]
+    fn synth_source_serves_deterministic_tiles() {
+        let src = SynthSource::new(SynthConfig::small(), 3);
+        assert_eq!(src.n_chunks(), 3);
+        let a = src.load(1).unwrap();
+        let b = src.load(1).unwrap();
+        assert_eq!(a, b);
+        assert!(src.load(3).is_err());
+        assert!(src.describe().contains("synth"));
+    }
+
+    #[test]
+    fn dir_source_round_trips_a_tile_store() {
+        let dir = tmp_dir("roundtrip");
+        let store = TileStore::new(SynthConfig::small(), 4);
+        assert_eq!(DirSource::export_store(&dir, &store).unwrap(), 4);
+        let src = DirSource::open(&dir).unwrap();
+        assert_eq!(src.n_chunks(), 4);
+        for chunk in 0..4u64 {
+            let vals = src.load(chunk).unwrap();
+            let got = vals[0].as_tensor().unwrap();
+            assert_eq!(got, &store.tile(chunk).to_tensor(), "chunk {chunk}");
+        }
+        assert!(src.load(4).is_err());
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn corrupt_tile_files_rejected() {
+        let dir = tmp_dir("corrupt");
+        std::fs::write(dir.join("a.tile"), b"not a tile").unwrap();
+        let src = DirSource::open(&dir).unwrap();
+        assert!(src.load(0).is_err());
+        // truncated payload
+        let t = HostTensor::new(vec![2, 2], vec![1.0; 4]).unwrap();
+        DirSource::write_tile(dir.join("b.tile"), &t).unwrap();
+        let bytes = std::fs::read(dir.join("b.tile")).unwrap();
+        std::fs::write(dir.join("b.tile"), &bytes[..bytes.len() - 4]).unwrap();
+        let src = DirSource::open(&dir).unwrap();
+        assert!(src.load(1).is_err());
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn empty_dir_rejected() {
+        let dir = tmp_dir("empty");
+        assert!(DirSource::open(&dir).is_err());
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+}

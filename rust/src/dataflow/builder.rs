@@ -15,8 +15,10 @@
 //!   each other through [`StageHandle`]s instead of magic indices.
 //!
 //! Every wiring mistake — unknown op, duplicate name, out-of-range port,
-//! backward reference, chained Reduce stages — is reported at the call
-//! that introduces it, with the offending names in the message.
+//! backward reference, a PerChunk stage consuming a Reduce result — is
+//! reported at the call that introduces it, with the offending names in
+//! the message.  Reduce stages may chain (Reduce -> Reduce): the upstream
+//! Reduce contributes a single completed instance to the downstream one.
 //!
 //! Workflows can also be described as data and loaded against a registry;
 //! see [`super::json`].
@@ -509,10 +511,12 @@ impl WorkflowBuilder {
                             up.outputs.len()
                         )));
                     }
-                    if up.kind == StageKind::Reduce && sb.kind == StageKind::Reduce {
+                    if up.kind == StageKind::Reduce && sb.kind == StageKind::PerChunk {
                         return Err(Error::Dataflow(format!(
-                            "chained Reduce stages are not supported ('{}' -> '{}')",
-                            up.name, sb.name
+                            "PerChunk stage '{}' cannot consume Reduce stage '{}': a Reduce \
+                             result is a single instance and per-chunk broadcast of it is \
+                             not supported",
+                            sb.name, up.name
                         )));
                     }
                 }
@@ -704,7 +708,10 @@ mod tests {
     }
 
     #[test]
-    fn chained_reduce_rejected() {
+    fn chained_reduce_accepted() {
+        // Reduce -> Reduce chains validate (the downstream Reduce aggregates
+        // the single upstream Reduce instance); execution is covered by
+        // coordinator::manager::tests::chained_reduce_aggregates.
         let mut wb = WorkflowBuilder::new("t", reg());
         let mut s = wb.stage("a", StageKind::PerChunk);
         let chunk = s.input_chunk();
@@ -720,8 +727,36 @@ mod tests {
 
         let mut r2 = wb.stage("r2", StageKind::Reduce);
         r2.input_upstream(r1.output(0));
-        r2.add_reduce_op("sum").unwrap();
-        assert!(wb.add_stage(r2).is_err());
+        let op = r2.add_reduce_op("sum").unwrap();
+        r2.export(op.out()).unwrap();
+        wb.add_stage(r2).unwrap();
+        let wf = wb.build().unwrap();
+        assert_eq!(wf.stages.len(), 3);
+        assert_eq!(wf.stages[2].kind, StageKind::Reduce);
+    }
+
+    #[test]
+    fn per_chunk_on_reduce_rejected() {
+        // broadcasting a Reduce result back out per chunk is not supported;
+        // the mistake must surface at add_stage, not hang at run time
+        let mut wb = WorkflowBuilder::new("t", reg());
+        let mut s = wb.stage("a", StageKind::PerChunk);
+        let chunk = s.input_chunk();
+        let op = s.add_op("id", &[chunk]).unwrap();
+        s.export(op.out()).unwrap();
+        let a = wb.add_stage(s).unwrap();
+
+        let mut r1 = wb.stage("r1", StageKind::Reduce);
+        r1.input_upstream(a.output(0));
+        let op = r1.add_reduce_op("sum").unwrap();
+        r1.export(op.out()).unwrap();
+        let r1 = wb.add_stage(r1).unwrap();
+
+        let mut pc = wb.stage("broadcast", StageKind::PerChunk);
+        let inp = pc.input_upstream(r1.output(0));
+        pc.add_op("id", &[inp]).unwrap();
+        let err = wb.add_stage(pc).unwrap_err();
+        assert!(err.to_string().contains("cannot consume Reduce"), "{err}");
     }
 
     #[test]

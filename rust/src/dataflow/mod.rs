@@ -77,9 +77,11 @@ impl std::fmt::Debug for OpDef {
 pub enum StageKind {
     /// One instance per data chunk (bag-of-tasks replication).
     PerChunk,
-    /// One instance consuming the outputs of *all* chunk instances of the
+    /// One instance consuming the outputs of *all* instances of the
     /// upstream stage (the "computation involving intermediary results from
     /// multiple inputs" instantiation — used by the classification stage).
+    /// A Reduce may consume another Reduce, which contributes exactly one
+    /// upstream instance; what it cannot feed is a PerChunk stage.
     Reduce,
 }
 
@@ -165,11 +167,13 @@ impl Workflow {
                         )));
                     }
                     if self.stages[*up].kind == StageKind::Reduce
-                        && stage.kind == StageKind::Reduce
+                        && stage.kind == StageKind::PerChunk
                     {
-                        return Err(Error::Dataflow(
-                            "chained Reduce stages are not supported".into(),
-                        ));
+                        return Err(Error::Dataflow(format!(
+                            "PerChunk stage '{}' cannot consume Reduce stage '{}': \
+                             per-chunk broadcast of a Reduce result is not supported",
+                            stage.name, self.stages[*up].name
+                        )));
                     }
                 }
             }
@@ -477,6 +481,35 @@ mod tests {
         red.inputs = vec![StageInput::Upstream { stage: 0, output: 0 }];
         w.add_stage(red);
         w.validate().unwrap();
+    }
+
+    #[test]
+    fn reduce_chain_validates_but_broadcast_rejected() {
+        // Reduce -> Reduce is a valid chain...
+        let mut w = Workflow::new("t");
+        w.add_stage(small_stage());
+        let mut r1 = small_stage();
+        r1.name = "r1".into();
+        r1.kind = StageKind::Reduce;
+        r1.inputs = vec![StageInput::Upstream { stage: 0, output: 0 }];
+        w.add_stage(r1.clone());
+        let mut r2 = small_stage();
+        r2.name = "r2".into();
+        r2.kind = StageKind::Reduce;
+        r2.inputs = vec![StageInput::Upstream { stage: 1, output: 0 }];
+        w.add_stage(r2);
+        w.validate().unwrap();
+
+        // ...but a PerChunk stage consuming a Reduce result is not
+        let mut w = Workflow::new("t");
+        w.add_stage(small_stage());
+        w.add_stage(r1);
+        let mut pc = small_stage();
+        pc.name = "broadcast".into();
+        pc.inputs = vec![StageInput::Upstream { stage: 1, output: 0 }];
+        w.add_stage(pc);
+        let err = w.validate().unwrap_err();
+        assert!(err.to_string().contains("cannot consume Reduce"), "{err}");
     }
 
     #[test]

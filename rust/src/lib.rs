@@ -23,6 +23,12 @@
 //! reproduced by a calibrated discrete-event simulator ([`sim`]) that runs
 //! the *same* scheduler implementations against the measured cost model, and
 //! by a TCP Manager/Worker transport ([`net`]) standing in for MPI.
+//!
+//! Chunk payloads flow through the **data-staging subsystem**
+//! ([`data::staging`]): pluggable chunk sources, a worker-side staging
+//! cache whose prefetcher overlaps shared-filesystem reads with compute,
+//! and a manager-side chunk catalog driving locality-aware assignment —
+//! the paper's two cluster-level data optimisations (§III).
 
 pub mod app;
 pub mod bench_util;

@@ -2,9 +2,10 @@
 
 use htap::app::{self, build_workflow_with, stage_bindings, AppParams};
 use htap::cli::{Cli, USAGE};
-use htap::config::Policy;
-use htap::coordinator::{run_local_profiled, worker::run_worker_profiled, Manager};
-use htap::data::{SynthConfig, TileStore};
+use htap::config::{Policy, RunConfig};
+use htap::coordinator::{run_local_staged, worker::run_worker_staged, Manager, WorkerStaging};
+use htap::data::staging::{source_from_spec, ChunkSource, StagingCache};
+use htap::data::{DirSource, SynthConfig, TileStore};
 use htap::dataflow::{workflow_from_file, StageKind, Workflow};
 use htap::metrics::MetricsHub;
 use htap::net::{ManagerServer, RemoteManager};
@@ -12,6 +13,7 @@ use htap::runtime::calibrate::{calibrate_workflows, CalibrationConfig, SharedPro
 use htap::runtime::{ArtifactManifest, ProfileStore};
 use htap::sim::{simulate, SimParams, SimWorkflow};
 use std::sync::Arc;
+use std::time::Duration;
 
 fn main() {
     let args: Vec<String> = std::env::args().skip(1).collect();
@@ -35,6 +37,7 @@ fn dispatch(cli: &Cli) -> htap::Result<()> {
         "calibrate" => cmd_calibrate(cli),
         "manager" => cmd_manager(cli),
         "worker" => cmd_worker(cli),
+        "export-tiles" => cmd_export_tiles(cli),
         "help" | "--help" | "-h" => {
             println!("{USAGE}");
             Ok(())
@@ -70,6 +73,26 @@ fn load_profiles(cli: &Cli, expected_tile_size: usize) -> htap::Result<Option<Pr
     }
 }
 
+/// Resolve `--chunk-source` (default: synthetic tiles matching the run
+/// config) and the chunk count to process: an explicit `--tiles` caps a
+/// directory source; otherwise the source's full size is used.
+fn chunk_source(cli: &Cli, cfg: &RunConfig) -> htap::Result<(Arc<dyn ChunkSource>, usize)> {
+    let spec = cli.get("chunk-source").unwrap_or("synth");
+    let src = source_from_spec(
+        spec,
+        cfg.tile_size,
+        cfg.seed,
+        cfg.n_tiles,
+        Duration::from_millis(cfg.read_latency_ms),
+    )?;
+    let n = if cli.get("tiles").is_some() {
+        cfg.n_tiles.min(src.n_chunks())
+    } else {
+        src.n_chunks()
+    };
+    Ok((src, n))
+}
+
 fn cmd_run(cli: &Cli) -> htap::Result<()> {
     let cfg = cli.run_config()?;
     let store = load_profiles(cli, cfg.tile_size)?;
@@ -89,15 +112,13 @@ fn cmd_run(cli: &Cli) -> htap::Result<()> {
             Arc::new(build_workflow_with(Arc::new(app::registry()), &params, true)?)
         }
     };
-    let store_arc = Arc::new(TileStore::new(
-        SynthConfig::for_tile_size(cfg.tile_size, cfg.seed),
-        cfg.n_tiles,
-    ));
-    let n = cfg.n_tiles;
+    let (source, n) = chunk_source(cli, &cfg)?;
     println!(
-        "running workflow '{}': {} tiles ({}x{}) with {} ({} cpu + {} gpu threads, window {})",
-        workflow.name, n, cfg.tile_size, cfg.tile_size, cfg.policy.name(), cfg.cpu_workers,
-        cfg.gpu_workers, cfg.window
+        "running workflow '{}': {} chunks from {} ({}x{}) with {} ({} cpu + {} gpu threads, \
+         window {}, staging cap {}, prefetch depth {}, locality {})",
+        workflow.name, n, source.describe(), cfg.tile_size, cfg.tile_size, cfg.policy.name(),
+        cfg.cpu_workers, cfg.gpu_workers, cfg.window, cfg.staging_cap, cfg.prefetch_depth,
+        if cfg.chunk_locality { "on" } else { "off" }
     );
     // seed the online store with the offline measurements, so PATS starts
     // from them and the run's EWMA updates refine them
@@ -105,16 +126,10 @@ fn cmd_run(cli: &Cli) -> htap::Result<()> {
         Some(s) => SharedProfiles::from_store(s),
         None => SharedProfiles::fresh(),
     };
-    let outcome = run_local_profiled(
-        workflow.clone(),
-        store_arc.loader(),
-        n,
-        cfg,
-        stage_bindings(),
-        profiles,
-    )?;
+    let outcome = run_local_staged(workflow.clone(), source, n, cfg, stage_bindings(), profiles)?;
     let report = outcome.metrics;
     println!("\n{}", report.profile_table());
+    println!("{}", report.staging.summary());
     println!(
         "wall {:.2}s  ({:.2} tiles/s)",
         report.wall.as_secs_f64(),
@@ -145,11 +160,24 @@ fn cmd_sim(cli: &Cli) -> htap::Result<()> {
         Some(store) => SimWorkflow::pipelined_profiled(&store),
         None => SimWorkflow::pipelined(),
     };
-    let p = SimParams { workflow, n_nodes: nodes, n_tiles: tiles, policy, ..Default::default() };
+    let chunk_locality = !cli.get_flag("no-locality");
+    let p = SimParams {
+        workflow,
+        n_nodes: nodes,
+        n_tiles: tiles,
+        policy,
+        chunk_locality,
+        ..Default::default()
+    };
     let r = simulate(&p);
     println!(
-        "simulated {} tiles on {} Keeneland nodes ({}): makespan {:.1}s, {:.1} tiles/s",
-        tiles, nodes, policy.name(), r.makespan, r.tiles_per_second()
+        "simulated {} tiles on {} Keeneland nodes ({}, locality {}): makespan {:.1}s, {:.1} tiles/s",
+        tiles,
+        nodes,
+        policy.name(),
+        if chunk_locality { "on" } else { "off" },
+        r.makespan,
+        r.tiles_per_second()
     );
     println!(
         "device busy {:.1}s, transfers {:.1}s, tile I/O {:.1}s",
@@ -195,16 +223,24 @@ fn cmd_manager(cli: &Cli) -> htap::Result<()> {
     let workers = cli.get_usize("workers", 1)?;
     let params = AppParams::for_tile_size(cfg.tile_size);
     let workflow = Arc::new(build_workflow_with(Arc::new(app::registry()), &params, false)?);
-    let store = Arc::new(TileStore::new(
-        SynthConfig::for_tile_size(cfg.tile_size, cfg.seed),
-        cfg.n_tiles,
-    ));
-    let manager = Manager::new(workflow, store.loader(), cfg.n_tiles)?;
+    // staged protocol: the manager never loads tile payloads — workers
+    // stage chunks from their own --chunk-source; the source here only
+    // fixes the chunk count (e.g. the .tile count of a shared directory)
+    let (source, n) = chunk_source(cli, &cfg)?;
+    let manager = Manager::new_staged(workflow, n, cfg.chunk_locality)?;
     let server = ManagerServer::bind(listen, manager.clone())?;
-    println!("manager on {} ({} tiles, expecting {workers} workers)", server.local_addr(), cfg.n_tiles);
+    println!(
+        "manager on {} ({} chunks from {}, expecting {workers} workers, locality {})",
+        server.local_addr(),
+        n,
+        source.describe(),
+        if cfg.chunk_locality { "on" } else { "off" }
+    );
     server.serve(workers)?;
     let (done, total) = manager.progress();
+    let (hits, cold, steals) = manager.locality_stats();
     println!("workflow complete: {done}/{total}");
+    println!("locality: {hits} hits, {cold} cold, {steals} steals");
     Ok(())
 }
 
@@ -223,8 +259,17 @@ fn cmd_worker(cli: &Cli) -> htap::Result<()> {
         Some(s) => SharedProfiles::from_store(s),
         None => SharedProfiles::fresh(),
     };
-    println!("worker connected to {addr}");
-    run_worker_profiled(
+    // chunk payloads come from this worker's own source, staged through a
+    // bounded cache whose prefetcher overlaps reads with compute
+    let (chunks, _) = chunk_source(cli, &cfg)?;
+    let worker_id = cli.get_usize("worker-id", std::process::id() as usize)?.max(1) as u64;
+    let staging = WorkerStaging {
+        cache: StagingCache::new(chunks, cfg.staging_cap, cfg.prefetch_depth),
+        worker_id,
+        prefetch_budget: cfg.prefetch_depth,
+    };
+    println!("worker {worker_id} connected to {addr}");
+    run_worker_staged(
         source,
         workflow,
         cfg,
@@ -232,12 +277,27 @@ fn cmd_worker(cli: &Cli) -> htap::Result<()> {
         metrics.clone(),
         stage_bindings(),
         profiles.clone(),
+        Some(staging),
     )?;
-    println!("{}", metrics.report().profile_table());
+    let report = metrics.report();
+    println!("{}", report.profile_table());
+    println!("{}", report.staging.summary());
     if let Some(path) = cli.get("save-profiles") {
         let snap = profiles.snapshot();
         snap.save(path)?;
         println!("saved {} measured op profiles to {path}", snap.len());
     }
+    Ok(())
+}
+
+fn cmd_export_tiles(cli: &Cli) -> htap::Result<()> {
+    let dir = cli
+        .get("dir")
+        .ok_or_else(|| htap::Error::Config("export-tiles needs --dir PATH".into()))?;
+    let cfg = cli.run_config()?;
+    let store =
+        TileStore::new(SynthConfig::for_tile_size(cfg.tile_size, cfg.seed), cfg.n_tiles);
+    let n = DirSource::export_store(dir, &store)?;
+    println!("wrote {n} {s}x{s} tiles to {dir}", s = cfg.tile_size);
     Ok(())
 }

@@ -60,10 +60,65 @@ impl OpProfile {
     }
 }
 
+/// Counters of the data-staging layer (worker chunk cache + prefetcher).
+#[derive(Debug, Default, Clone, PartialEq)]
+pub struct StagingReport {
+    /// chunk fetches served from (or overlapped with) the staging cache
+    pub hits: u64,
+    /// chunk fetches that demand-loaded from the source
+    pub misses: u64,
+    /// chunks staged by the background prefetcher
+    pub prefetched: u64,
+    /// chunks evicted by the capacity bound
+    pub evictions: u64,
+    /// read latency hidden behind compute by the prefetcher
+    pub hidden: Duration,
+    /// time spent blocked waiting for chunk payloads
+    pub stall: Duration,
+}
+
+impl StagingReport {
+    /// Fraction of chunk fetches that did not demand-load.
+    pub fn hit_rate(&self) -> f64 {
+        let total = self.hits + self.misses;
+        if total == 0 {
+            0.0
+        } else {
+            self.hits as f64 / total as f64
+        }
+    }
+
+    /// Fold another worker's counters into this one.
+    pub fn accumulate(&mut self, other: &StagingReport) {
+        self.hits += other.hits;
+        self.misses += other.misses;
+        self.prefetched += other.prefetched;
+        self.evictions += other.evictions;
+        self.hidden += other.hidden;
+        self.stall += other.stall;
+    }
+
+    /// One-line summary for run output.
+    pub fn summary(&self) -> String {
+        format!(
+            "staging: {} hits / {} misses ({:.0}% hit rate), {} prefetched, {} evicted, \
+             {:.1} ms read latency hidden, {:.1} ms stalled",
+            self.hits,
+            self.misses,
+            self.hit_rate() * 100.0,
+            self.prefetched,
+            self.evictions,
+            self.hidden.as_secs_f64() * 1e3,
+            self.stall.as_secs_f64() * 1e3
+        )
+    }
+}
+
 /// Thread-safe metrics collector.
 #[derive(Debug, Default)]
 pub struct MetricsHub {
     ops: Mutex<BTreeMap<String, OpRecord>>,
+    staging: Mutex<StagingReport>,
     started: Mutex<Option<Instant>>,
     finished: Mutex<Option<Instant>>,
 }
@@ -105,6 +160,12 @@ impl MetricsHub {
         rec.download_bytes += down;
     }
 
+    /// Fold a staging-cache snapshot into the run's counters (one call per
+    /// worker cache at the end of its run).
+    pub fn record_staging(&self, r: &StagingReport) {
+        self.staging.lock().unwrap().accumulate(r);
+    }
+
     /// Wall-clock between mark_start and mark_finish (or now).
     pub fn wall_time(&self) -> Duration {
         let s = self.started.lock().unwrap();
@@ -132,7 +193,11 @@ impl MetricsHub {
                 download_bytes: r.download_bytes,
             })
             .collect();
-        MetricsReport { ops, wall: self.wall_time() }
+        MetricsReport {
+            ops,
+            staging: self.staging.lock().unwrap().clone(),
+            wall: self.wall_time(),
+        }
     }
 }
 
@@ -140,6 +205,8 @@ impl MetricsHub {
 #[derive(Debug, Clone)]
 pub struct MetricsReport {
     pub ops: Vec<OpProfile>,
+    /// data-staging counters (all zeros in non-staged runs)
+    pub staging: StagingReport,
     pub wall: Duration,
 }
 
@@ -198,6 +265,25 @@ mod tests {
         std::thread::sleep(Duration::from_millis(5));
         m.mark_finish();
         assert!(m.wall_time() >= Duration::from_millis(4));
+    }
+
+    #[test]
+    fn staging_counters_accumulate_across_workers() {
+        let m = MetricsHub::new();
+        m.record_staging(&StagingReport {
+            hits: 3,
+            misses: 1,
+            prefetched: 2,
+            evictions: 0,
+            hidden: Duration::from_millis(10),
+            stall: Duration::from_millis(2),
+        });
+        m.record_staging(&StagingReport { hits: 1, misses: 3, ..Default::default() });
+        let s = m.report().staging;
+        assert_eq!((s.hits, s.misses, s.prefetched), (4, 4, 2));
+        assert!((s.hit_rate() - 0.5).abs() < 1e-9);
+        assert_eq!(s.hidden, Duration::from_millis(10));
+        assert!(s.summary().contains("50% hit rate"), "{}", s.summary());
     }
 
     #[test]

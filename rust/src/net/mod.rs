@@ -4,9 +4,12 @@
 //! available here, so the same demand-driven window protocol (paper
 //! §III-B) runs over two TCP connections per Worker:
 //!
-//! * a **work channel** — the Worker's requester sends `Request{capacity}`
-//!   and blocks until the Manager answers `Assign{...}` (empty = workflow
-//!   complete, shut down);
+//! * a **work channel** — the Worker's requester sends `Request{capacity,
+//!   worker, staged-chunk deltas, prefetch budget}` and blocks until the
+//!   Manager answers `Assign{assignments, prefetch hints}` (empty =
+//!   workflow complete, shut down); in staged mode assignments defer the
+//!   chunk payload to the worker's own chunk source, so tiles never cross
+//!   the wire;
 //! * a **completion channel** — the Worker's completer streams
 //!   `Complete{instance, outputs}` messages back.
 //!
@@ -16,7 +19,7 @@
 
 pub mod proto;
 
-use crate::coordinator::manager::{Assignment, Manager, WorkSource};
+use crate::coordinator::manager::{Manager, WorkBatch, WorkRequest, WorkSource};
 use crate::{Error, Result};
 use proto::Message;
 use std::io::{BufReader, BufWriter};
@@ -72,8 +75,13 @@ fn serve_connection(stream: TcpStream, mgr: Arc<Manager>) {
     // protocol error) before completing them, they are re-issued to the
     // surviving workers — the fault-tolerance path.
     let mut leases: Vec<u64> = Vec::new();
-    let result = serve_connection_inner(stream, &mgr, &mut leases);
+    let mut worker_id = 0u64;
+    let result = serve_connection_inner(stream, &mgr, &mut leases, &mut worker_id);
     let requeued = mgr.requeue_stale(&leases);
+    // the work channel closed: whatever this worker had staged is gone —
+    // purge it from the catalog so its chunks go back to cold instead of
+    // being "stolen" from a ghost for the rest of the run
+    mgr.purge_worker(worker_id);
     if let Err(e) = result {
         if requeued > 0 {
             eprintln!("htap manager: worker lost ({e}); re-issued {requeued} stage instances");
@@ -85,6 +93,7 @@ fn serve_connection_inner(
     stream: TcpStream,
     mgr: &Arc<Manager>,
     leases: &mut Vec<u64>,
+    worker_id: &mut u64,
 ) -> Result<()> {
     stream.set_nodelay(true).ok();
     let mut reader = BufReader::new(stream.try_clone().map_err(|e| Error::Net(e.to_string()))?);
@@ -96,10 +105,21 @@ fn serve_connection_inner(
             Err(e) => return Err(e),
         };
         match msg {
-            Message::Request { capacity } => {
-                let batch = mgr.request(capacity.max(1) as usize);
-                leases.extend(batch.iter().map(|a| a.instance_id));
-                proto::write_message(&mut writer, &Message::Assign { assignments: batch })?;
+            Message::Request { capacity, worker, prefetch_budget, staged_add, staged_drop } => {
+                *worker_id = worker;
+                let req = WorkRequest {
+                    capacity: capacity.max(1) as usize,
+                    worker,
+                    staged_add,
+                    staged_drop,
+                    prefetch_budget: prefetch_budget as usize,
+                };
+                let batch = mgr.request_work(&req);
+                leases.extend(batch.assignments.iter().map(|a| a.instance_id));
+                proto::write_message(
+                    &mut writer,
+                    &Message::Assign { assignments: batch.assignments, prefetch: batch.prefetch },
+                )?;
             }
             Message::Complete { instance, outputs } => {
                 mgr.complete(instance, outputs);
@@ -136,15 +156,22 @@ impl RemoteManager {
 }
 
 impl WorkSource for RemoteManager {
-    fn request(&self, capacity: usize) -> Vec<Assignment> {
+    fn request_work(&self, req: &WorkRequest) -> WorkBatch {
         let mut chan = self.work.lock().unwrap();
         let (reader, writer) = &mut *chan;
-        if proto::write_message(writer, &Message::Request { capacity: capacity as u32 }).is_err() {
-            return Vec::new();
+        let msg = Message::Request {
+            capacity: req.capacity as u32,
+            worker: req.worker,
+            prefetch_budget: req.prefetch_budget as u32,
+            staged_add: req.staged_add.clone(),
+            staged_drop: req.staged_drop.clone(),
+        };
+        if proto::write_message(writer, &msg).is_err() {
+            return WorkBatch::default();
         }
         match proto::read_message(reader) {
-            Ok(Message::Assign { assignments }) => assignments,
-            _ => Vec::new(),
+            Ok(Message::Assign { assignments, prefetch }) => WorkBatch { assignments, prefetch },
+            _ => WorkBatch::default(),
         }
     }
 

@@ -1,8 +1,15 @@
 //! Length-prefixed binary framing for the Manager/Worker protocol.
 //!
-//! Frame layout: `u32 LE length` + payload.  Payload starts with a one-byte
-//! message tag; tensors are shipped as rank + dims + raw f32 LE bytes (a
-//! 4Kx4K tile is ~192 MB as JSON but 64 MB raw — binary matters here).
+//! Frame layout: `u32 LE length` + payload.  Payload starts with a
+//! one-byte protocol version ([`PROTO_VERSION`]) and a one-byte message
+//! tag; tensors are shipped as rank + dims + raw f32 LE bytes (a 4Kx4K
+//! tile is ~192 MB as JSON but 64 MB raw — binary matters here).
+//!
+//! v2 extended the demand-driven handshake for the data-staging layer:
+//! `Request` carries the worker's identity plus its staged/evicted chunk
+//! deltas, and `Assign` carries per-assignment deferred-chunk/locality
+//! flags plus the Manager's prefetch hints.  A version mismatch is a
+//! decode error, not a silent misparse.
 
 use crate::coordinator::manager::Assignment;
 use crate::runtime::{HostTensor, Value};
@@ -12,13 +19,29 @@ use std::io::{Read, Write};
 /// Maximum accepted frame (guards against corrupt length prefixes).
 const MAX_FRAME: u32 = 1 << 30;
 
+/// Wire-format version; every payload starts with it.  Bumped to 2 when
+/// the staging fields (worker identity, staged-chunk hints, deferred-chunk
+/// and locality flags, prefetch hints) were added.
+pub const PROTO_VERSION: u8 = 2;
+
 /// Protocol messages.
 #[derive(Debug, Clone, PartialEq)]
 pub enum Message {
     /// Worker -> Manager: give me up to `capacity` stage instances.
-    Request { capacity: u32 },
-    /// Manager -> Worker: assignments (empty = workflow complete).
-    Assign { assignments: Vec<Assignment> },
+    /// `worker` is the requester's stable identity (0 = anonymous);
+    /// `staged_add`/`staged_drop` are the chunks it staged/evicted since
+    /// its last request; `prefetch_budget` asks for that many upcoming
+    /// chunk ids as prefetch hints.
+    Request {
+        capacity: u32,
+        worker: u64,
+        prefetch_budget: u32,
+        staged_add: Vec<u64>,
+        staged_drop: Vec<u64>,
+    },
+    /// Manager -> Worker: assignments (empty = workflow complete) plus
+    /// chunk ids the worker should prefetch into its staging cache.
+    Assign { assignments: Vec<Assignment>, prefetch: Vec<u64> },
     /// Worker -> Manager: stage instance finished.
     Complete { instance: u64, outputs: Vec<Value> },
     /// Worker -> Manager: fatal worker error.
@@ -29,6 +52,10 @@ const TAG_REQUEST: u8 = 1;
 const TAG_ASSIGN: u8 = 2;
 const TAG_COMPLETE: u8 = 3;
 const TAG_FAIL: u8 = 4;
+
+/// Assignment flag bits (v2).
+const FLAG_NEEDS_CHUNK: u8 = 1;
+const FLAG_LOCALITY: u8 = 2;
 
 fn put_u32(buf: &mut Vec<u8>, v: u32) {
     buf.extend_from_slice(&v.to_le_bytes());
@@ -61,6 +88,13 @@ fn put_values(buf: &mut Vec<u8>, vals: &[Value]) {
     put_u32(buf, vals.len() as u32);
     for v in vals {
         put_value(buf, v);
+    }
+}
+
+fn put_ids(buf: &mut Vec<u8>, ids: &[u64]) {
+    put_u32(buf, ids.len() as u32);
+    for &id in ids {
+        put_u64(buf, id);
     }
 }
 
@@ -124,6 +158,11 @@ impl<'a> Cursor<'a> {
         (0..n).map(|_| self.value()).collect()
     }
 
+    fn ids(&mut self) -> Result<Vec<u64>> {
+        let n = self.u32()? as usize;
+        (0..n).map(|_| self.u64()).collect()
+    }
+
     fn string(&mut self) -> Result<String> {
         let n = self.u32()? as usize;
         String::from_utf8(self.take(n)?.to_vec()).map_err(|_| Error::Net("bad utf8".into()))
@@ -133,20 +172,34 @@ impl<'a> Cursor<'a> {
 /// Encode a message (without the length prefix).
 pub fn encode(msg: &Message) -> Vec<u8> {
     let mut buf = Vec::new();
+    buf.push(PROTO_VERSION);
     match msg {
-        Message::Request { capacity } => {
+        Message::Request { capacity, worker, prefetch_budget, staged_add, staged_drop } => {
             buf.push(TAG_REQUEST);
             put_u32(&mut buf, *capacity);
+            put_u64(&mut buf, *worker);
+            put_u32(&mut buf, *prefetch_budget);
+            put_ids(&mut buf, staged_add);
+            put_ids(&mut buf, staged_drop);
         }
-        Message::Assign { assignments } => {
+        Message::Assign { assignments, prefetch } => {
             buf.push(TAG_ASSIGN);
             put_u32(&mut buf, assignments.len() as u32);
             for a in assignments {
                 put_u64(&mut buf, a.instance_id);
                 put_u32(&mut buf, a.stage_idx as u32);
                 put_u64(&mut buf, a.chunk);
+                let mut flags = 0u8;
+                if a.needs_chunk {
+                    flags |= FLAG_NEEDS_CHUNK;
+                }
+                if a.locality {
+                    flags |= FLAG_LOCALITY;
+                }
+                buf.push(flags);
                 put_values(&mut buf, &a.inputs);
             }
+            put_ids(&mut buf, prefetch);
         }
         Message::Complete { instance, outputs } => {
             buf.push(TAG_COMPLETE);
@@ -165,8 +218,21 @@ pub fn encode(msg: &Message) -> Vec<u8> {
 /// Decode a message payload.
 pub fn decode(data: &[u8]) -> Result<Message> {
     let mut c = Cursor { data, pos: 0 };
+    let version = c.u8()?;
+    if version != PROTO_VERSION {
+        return Err(Error::Net(format!(
+            "protocol version {version}, expected {PROTO_VERSION} — mixed htap builds?"
+        )));
+    }
     let msg = match c.u8()? {
-        TAG_REQUEST => Message::Request { capacity: c.u32()? },
+        TAG_REQUEST => {
+            let capacity = c.u32()?;
+            let worker = c.u64()?;
+            let prefetch_budget = c.u32()?;
+            let staged_add = c.ids()?;
+            let staged_drop = c.ids()?;
+            Message::Request { capacity, worker, prefetch_budget, staged_add, staged_drop }
+        }
         TAG_ASSIGN => {
             let n = c.u32()? as usize;
             let mut assignments = Vec::with_capacity(n);
@@ -174,10 +240,19 @@ pub fn decode(data: &[u8]) -> Result<Message> {
                 let instance_id = c.u64()?;
                 let stage_idx = c.u32()? as usize;
                 let chunk = c.u64()?;
+                let flags = c.u8()?;
                 let inputs = c.values()?;
-                assignments.push(Assignment { instance_id, stage_idx, chunk, inputs });
+                assignments.push(Assignment {
+                    instance_id,
+                    stage_idx,
+                    chunk,
+                    inputs,
+                    needs_chunk: flags & FLAG_NEEDS_CHUNK != 0,
+                    locality: flags & FLAG_LOCALITY != 0,
+                });
             }
-            Message::Assign { assignments }
+            let prefetch = c.ids()?;
+            Message::Assign { assignments, prefetch }
         }
         TAG_COMPLETE => {
             let instance = c.u64()?;
@@ -235,9 +310,30 @@ mod tests {
         assert_eq!(read_message(&mut cur).unwrap(), msg);
     }
 
+    fn request(capacity: u32) -> Message {
+        Message::Request {
+            capacity,
+            worker: 0,
+            prefetch_budget: 0,
+            staged_add: vec![],
+            staged_drop: vec![],
+        }
+    }
+
     #[test]
     fn request_roundtrip() {
-        roundtrip(Message::Request { capacity: 7 });
+        roundtrip(request(7));
+    }
+
+    #[test]
+    fn request_roundtrip_with_staging_hints() {
+        roundtrip(Message::Request {
+            capacity: 3,
+            worker: 0xDEAD_BEEF_0042,
+            prefetch_budget: 4,
+            staged_add: vec![1, 5, 9],
+            staged_drop: vec![2],
+        });
     }
 
     #[test]
@@ -251,7 +347,36 @@ mod tests {
                     Value::Scalar(3.5),
                     Value::Tensor(HostTensor::new(vec![2, 3], vec![1.0; 6]).unwrap()),
                 ],
+                needs_chunk: false,
+                locality: false,
             }],
+            prefetch: vec![],
+        });
+    }
+
+    #[test]
+    fn assign_roundtrip_with_staging_flags_and_hints() {
+        // a deferred-chunk assignment ships no payload, just flags + hints
+        roundtrip(Message::Assign {
+            assignments: vec![
+                Assignment {
+                    instance_id: 7,
+                    stage_idx: 0,
+                    chunk: 3,
+                    inputs: vec![],
+                    needs_chunk: true,
+                    locality: true,
+                },
+                Assignment {
+                    instance_id: 8,
+                    stage_idx: 1,
+                    chunk: 4,
+                    inputs: vec![Value::Scalar(1.0)],
+                    needs_chunk: true,
+                    locality: false,
+                },
+            ],
+            prefetch: vec![5, 6, 7],
         });
     }
 
@@ -266,14 +391,30 @@ mod tests {
 
     #[test]
     fn empty_assign_means_done() {
-        roundtrip(Message::Assign { assignments: vec![] });
+        roundtrip(Message::Assign { assignments: vec![], prefetch: vec![] });
+    }
+
+    #[test]
+    fn version_mismatch_is_a_decode_error() {
+        let mut enc = encode(&request(1));
+        assert_eq!(enc[0], PROTO_VERSION);
+        enc[0] = PROTO_VERSION - 1; // a v1 peer
+        let err = decode(&enc).unwrap_err();
+        assert!(err.to_string().contains("protocol version"), "{err}");
+        // and through the framed reader
+        let mut framed = Vec::new();
+        framed.extend_from_slice(&(enc.len() as u32).to_le_bytes());
+        framed.extend_from_slice(&enc);
+        let mut cur = std::io::Cursor::new(framed);
+        assert!(read_message(&mut cur).is_err());
     }
 
     #[test]
     fn corrupt_frames_rejected() {
-        assert!(decode(&[99]).is_err());
-        assert!(decode(&[TAG_REQUEST, 1]).is_err()); // truncated
-        let mut enc = encode(&Message::Request { capacity: 1 });
+        assert!(decode(&[99]).is_err()); // bogus version byte
+        assert!(decode(&[PROTO_VERSION, 99]).is_err()); // unknown tag
+        assert!(decode(&[PROTO_VERSION, TAG_REQUEST, 1]).is_err()); // truncated
+        let mut enc = encode(&request(1));
         enc.push(0); // trailing byte
         assert!(decode(&enc).is_err());
         // oversized frame header

@@ -21,6 +21,10 @@
 //! * Tile fetch (Lustre) = `tile_io_base * (1 + io_contention*(nodes-1))`,
 //!   the shared-filesystem client-scaling penalty the paper blames for the
 //!   77% scaling efficiency at 100 nodes.
+//! * Chunk-catalog locality (the staging subsystem): with
+//!   `chunk_locality` off, a tile's repeat stage lands on an arbitrary
+//!   node and pays a cold 2x re-read before it can start — the offline
+//!   Fig. 8-style locality-on/off comparison (`htap sim --no-locality`).
 
 pub mod experiments;
 
@@ -262,6 +266,12 @@ pub struct SimParams {
     pub policy: Policy,
     pub data_locality: bool,
     pub prefetch: bool,
+    /// Manager-side chunk-catalog locality (the staging subsystem): with
+    /// it on, a tile's next stage runs on the node that staged the tile;
+    /// off, repeat stages scatter across nodes and a migrated tile pays a
+    /// cold shared-FS re-read before its stage can start (the Fig. 8-style
+    /// locality-off control).
+    pub chunk_locality: bool,
     pub placement: Placement,
     pub n_nodes: usize,
     pub cpus_per_node: usize,
@@ -288,6 +298,7 @@ impl Default for SimParams {
             policy: Policy::Pats,
             data_locality: true,
             prefetch: true,
+            chunk_locality: true,
             placement: Placement::Closest,
             n_nodes: 1,
             cpus_per_node: 9,
@@ -345,6 +356,9 @@ enum Event {
     Fetched { node: usize, chunk: u64 },
     /// device finished its op
     OpDone { node: usize, dev: usize },
+    /// locality-off: a tile's next stage landed on another node, which
+    /// finished re-reading the tile and can now instantiate the stage
+    Migrated { node: usize, stage: usize, chunk: u64 },
 }
 
 #[derive(Debug, Clone)]
@@ -660,11 +674,51 @@ pub fn simulate(params: &SimParams) -> SimResult {
                 if inst_done {
                     node_state.insts.remove(&inst_id);
                     if stage + 1 < wf.stages.len() {
-                        // the tile's next stage stays on this node (the
-                        // demand-driven manager keeps chunk locality)
-                        let next = next_inst;
-                        next_inst += 1;
-                        submit_stage(node_state, wf, next, stage + 1, chunk, &mut task_seq);
+                        // with chunk locality the tile's next stage stays on
+                        // the node that staged it (the catalog policy);
+                        // without it the bag of tasks scatters repeat stages
+                        // and a migrated tile pays a cold re-read first
+                        let target = if params.chunk_locality || n_nodes == 1 {
+                            node
+                        } else {
+                            let mut r = Rng::new(
+                                params.seed
+                                    ^ chunk.wrapping_mul(0x9E37_79B9)
+                                    ^ ((stage as u64 + 1) << 32),
+                            );
+                            r.below(n_nodes)
+                        };
+                        if target == node {
+                            let next = next_inst;
+                            next_inst += 1;
+                            submit_stage(node_state, wf, next, stage + 1, chunk, &mut task_seq);
+                        } else {
+                            // free this node's window slot and keep its
+                            // read stream busy
+                            node_state.assigned -= 1;
+                            if node_state.fetching == 0
+                                && node_state.assigned + node_state.fetching < params.window
+                                && next_chunk < params.n_tiles as u64
+                            {
+                                let c = next_chunk;
+                                next_chunk += 1;
+                                node_state.fetching += 1;
+                                io_total += io_time_per_tile;
+                                push_event!(
+                                    now + io_time_per_tile,
+                                    Event::Fetched { node, chunk: c }
+                                );
+                            }
+                            // cold unscheduled re-read on the target node
+                            // (outside its streaming window: twice the
+                            // contended per-tile read)
+                            let migrate_io = 2.0 * io_time_per_tile;
+                            io_total += migrate_io;
+                            push_event!(
+                                now + migrate_io,
+                                Event::Migrated { node: target, stage: stage + 1, chunk }
+                            );
+                        }
                     } else {
                         node_state.assigned -= 1;
                         tiles_done += 1;
@@ -681,6 +735,13 @@ pub fn simulate(params: &SimParams) -> SimResult {
                         }
                     }
                 }
+                node
+            }
+            Event::Migrated { node, stage, chunk } => {
+                nodes[node].assigned += 1;
+                let inst = next_inst;
+                next_inst += 1;
+                submit_stage(&mut nodes[node], &params.workflow, inst, stage, chunk, &mut task_seq);
                 node
             }
         };
@@ -869,6 +930,40 @@ mod tests {
         let a = simulate(&base(30)).makespan;
         let b = simulate(&base(30)).makespan;
         assert_eq!(a, b);
+    }
+
+    #[test]
+    fn chunk_locality_on_beats_locality_off() {
+        // the Fig. 8-style control: without catalog locality, repeat
+        // stages migrate across nodes and pay cold tile re-reads
+        let mut p = base(120);
+        p.n_nodes = 4;
+        let on = simulate(&p);
+        p.chunk_locality = false;
+        let off = simulate(&p);
+        assert_eq!(on.tiles, 120);
+        assert_eq!(off.tiles, 120);
+        assert!(
+            off.io_time > on.io_time,
+            "migration must add I/O: on {:.2}s off {:.2}s",
+            on.io_time,
+            off.io_time
+        );
+        assert!(
+            on.makespan < off.makespan,
+            "locality on ({:.2}s) must beat locality off ({:.2}s)",
+            on.makespan,
+            off.makespan
+        );
+    }
+
+    #[test]
+    fn chunk_locality_irrelevant_on_one_node() {
+        let mut p = base(40);
+        let on = simulate(&p).makespan;
+        p.chunk_locality = false;
+        let off = simulate(&p).makespan;
+        assert_eq!(on, off, "single node: nothing to migrate");
     }
 
     #[test]

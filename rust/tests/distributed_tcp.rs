@@ -4,12 +4,17 @@
 
 use htap::app::{build_workflow, stage_bindings, AppParams};
 use htap::config::RunConfig;
-use htap::coordinator::{worker::run_worker, Manager, WorkSource};
-use htap::data::{SynthConfig, TileStore};
+use htap::coordinator::{
+    worker::{run_worker, run_worker_staged},
+    Manager, WorkSource, WorkerStaging,
+};
+use htap::data::{StagingCache, SynthConfig, SynthSource, TileStore};
 use htap::metrics::MetricsHub;
 use htap::net::{ManagerServer, RemoteManager};
+use htap::runtime::calibrate::SharedProfiles;
 use htap::runtime::ArtifactManifest;
 use std::sync::Arc;
+use std::time::Duration;
 
 const TILE: usize = 64;
 
@@ -101,6 +106,81 @@ fn tensor_payloads_survive_the_wire() {
     srv.join().unwrap().unwrap();
     assert_eq!(seen_tiles, n_tiles);
     assert!(manager.error().is_none());
+}
+
+#[test]
+fn staged_tcp_workers_never_ship_tiles_and_hit_locality() {
+    // staged protocol: the manager hands out bare chunk ids; each worker
+    // stages tiles from its own (identical) synthetic source through a
+    // prefetching cache, and the catalog routes repeat stages back to the
+    // worker that staged the tile.
+    let n_tiles = 8;
+    let seed = 31;
+    let params = AppParams::for_tile_size(TILE);
+    let workflow = Arc::new(build_workflow(&params, false));
+    let manager = Manager::new_staged(workflow.clone(), n_tiles, true).unwrap();
+    let server = ManagerServer::bind("127.0.0.1:0", manager.clone()).unwrap();
+    let addr = server.local_addr();
+    let srv = std::thread::spawn(move || server.serve(2));
+
+    let mut workers = Vec::new();
+    for i in 0..2u64 {
+        let addr = addr.clone();
+        let workflow = workflow.clone();
+        workers.push(std::thread::spawn(move || {
+            let source = Arc::new(RemoteManager::connect(&addr).unwrap());
+            // every worker reconstructs the same dataset locally (the
+            // shared-FS stand-in) with a visible read latency
+            let chunks = Arc::new(
+                SynthSource::new(SynthConfig::for_tile_size(TILE, seed), n_tiles)
+                    .with_read_latency(Duration::from_millis(3)),
+            );
+            let staging = WorkerStaging {
+                cache: StagingCache::new(chunks, 16, 2),
+                worker_id: i + 1,
+                prefetch_budget: 2,
+            };
+            let metrics = Arc::new(MetricsHub::new());
+            let cfg = RunConfig {
+                tile_size: TILE,
+                n_tiles,
+                cpu_workers: 1,
+                gpu_workers: 0,
+                window: 2,
+                ..Default::default()
+            };
+            run_worker_staged(
+                source,
+                workflow,
+                cfg,
+                Arc::new(ArtifactManifest::discover_or_empty()),
+                metrics.clone(),
+                stage_bindings(),
+                SharedProfiles::fresh(),
+                Some(staging),
+            )
+            .unwrap();
+            metrics.report()
+        }));
+    }
+    let reports: Vec<_> = workers.into_iter().map(|w| w.join().unwrap()).collect();
+    srv.join().unwrap().unwrap();
+
+    assert!(manager.error().is_none(), "{:?}", manager.error());
+    let (done, total) = manager.progress();
+    assert_eq!(done, total);
+    assert_eq!(total, 2 * n_tiles);
+    // every op instance ran somewhere
+    let executed: u64 = reports.iter().map(|r| r.total_executed()).sum();
+    assert_eq!(executed, (12 * n_tiles) as u64);
+    // every (stage, tile) fetch was staged worker-side, none shipped
+    let fetches: u64 = reports.iter().map(|r| r.staging.hits + r.staging.misses).sum();
+    assert_eq!(fetches, (2 * n_tiles) as u64);
+    // the catalog policy routed repeat stages to the staging worker, and
+    // every chunk-bearing assignment is accounted hit, cold or stolen
+    let (hits, cold, steals) = manager.locality_stats();
+    assert!(hits > 0, "no locality hits across {n_tiles} tiles");
+    assert_eq!(hits + cold + steals, (2 * n_tiles) as u64);
 }
 
 #[test]

@@ -1,0 +1,216 @@
+//! The data-staging subsystem end to end: deferred chunk payloads, the
+//! worker staging cache + prefetcher, locality-aware assignment, and the
+//! `.tile` directory source — through `run_local_staged` and the real WRM.
+
+use htap::app::{build_workflow, stage_bindings, AppParams};
+use htap::config::RunConfig;
+use htap::coordinator::{run_local_staged, ChunkId};
+use htap::data::staging::ChunkSource;
+use htap::data::{DirSource, SynthConfig, TileStore};
+use htap::dataflow::{param, OpRegistry, StageKind, Workflow, WorkflowBuilder};
+use htap::runtime::calibrate::SharedProfiles;
+use htap::runtime::Value;
+use htap::Result;
+use std::collections::HashMap;
+use std::sync::Arc;
+use std::time::Duration;
+
+/// A scalar chunk source with a controllable read latency: chunk `c`
+/// loads as `Scalar(c)` after sleeping, standing in for a shared-FS read.
+struct ScalarSource {
+    n: usize,
+    latency: Duration,
+}
+
+impl ChunkSource for ScalarSource {
+    fn n_chunks(&self) -> usize {
+        self.n
+    }
+
+    fn load(&self, chunk: ChunkId) -> Result<Vec<Value>> {
+        if chunk as usize >= self.n {
+            return Err(htap::Error::Config(format!("chunk {chunk} out of range")));
+        }
+        if !self.latency.is_zero() {
+            std::thread::sleep(self.latency);
+        }
+        Ok(vec![Value::Scalar(chunk as f32)])
+    }
+
+    fn describe(&self) -> String {
+        format!("scalar({})", self.n)
+    }
+}
+
+/// Two PerChunk stages that both read the chunk (stage 1 additionally
+/// consumes stage 0's output) + a Reduce total, with `op_ms` of compute
+/// per op so prefetch has something to hide behind.
+fn slow_workflow(op_ms: u64) -> Arc<Workflow> {
+    let mut reg = OpRegistry::new();
+    reg.register_cpu("slow_add", 1, move |args: &[Value]| {
+        if op_ms > 0 {
+            std::thread::sleep(Duration::from_millis(op_ms));
+        }
+        let mut s = 0.0;
+        for v in args {
+            s += v.as_scalar()?;
+        }
+        Ok(vec![Value::Scalar(s)])
+    })
+    .unwrap();
+    reg.register_cpu("sum", 1, |args: &[Value]| {
+        let mut s = 0.0;
+        for v in args {
+            s += v.as_scalar()?;
+        }
+        Ok(vec![Value::Scalar(s)])
+    })
+    .unwrap();
+    let mut wb = WorkflowBuilder::new("staging-test", reg);
+    let mut s0 = wb.stage("s0", StageKind::PerChunk);
+    let c = s0.input_chunk();
+    let op = s0.add_op("slow_add", &[c, param(1.0)]).unwrap();
+    s0.export(op.out()).unwrap();
+    let s0 = wb.add_stage(s0).unwrap();
+    let mut s1 = wb.stage("s1", StageKind::PerChunk);
+    let c = s1.input_chunk();
+    let up = s1.input_upstream(s0.output(0));
+    let op = s1.add_op("slow_add", &[c, up]).unwrap();
+    s1.export(op.out()).unwrap();
+    let s1 = wb.add_stage(s1).unwrap();
+    let mut red = wb.stage("total", StageKind::Reduce);
+    red.input_upstream(s1.output(0));
+    let op = red.add_reduce_op("sum").unwrap();
+    red.export(op.out()).unwrap();
+    wb.add_stage(red).unwrap();
+    Arc::new(wb.build().unwrap())
+}
+
+#[test]
+fn staged_run_with_prefetch_hides_read_latency() {
+    // 8 chunks, 15 ms simulated read, 40 ms compute per op, window 2:
+    // while the two in-flight instances compute, the prefetcher stages
+    // the chunks of upcoming assignments (manager hints), so later reads
+    // are (at least partially) hidden behind compute.
+    let n = 8;
+    let wf = slow_workflow(40);
+    let source = Arc::new(ScalarSource { n, latency: Duration::from_millis(15) });
+    let cfg = RunConfig {
+        n_tiles: n,
+        cpu_workers: 2,
+        gpu_workers: 0,
+        window: 2,
+        staging_cap: 16,
+        prefetch_depth: 4,
+        ..Default::default()
+    };
+    let outcome =
+        run_local_staged(wf, source, n, cfg, HashMap::new(), SharedProfiles::fresh()).unwrap();
+    let (done, total) = outcome.manager.progress();
+    assert_eq!((done, total), (17, 17)); // 8 + 8 + 1 reduce
+    // end-to-end values survive the deferred-payload path:
+    // s1(c) = c + (c + 1); sum over 0..8 = 2*28 + 8 = 64
+    let out = outcome.manager.reduce_outputs("total").unwrap();
+    assert_eq!(out[0].as_scalar().unwrap(), 64.0);
+    let s = &outcome.metrics.staging;
+    // every (stage, chunk) fetch is accounted exactly once
+    assert_eq!(s.hits + s.misses, 2 * n as u64, "{s:?}");
+    assert!(s.hits > 0, "repeat-stage fetches must hit the cache: {s:?}");
+    assert!(s.prefetched > 0, "the prefetcher never staged anything: {s:?}");
+    // the acceptance metric: read latency was overlapped with compute
+    assert!(s.hidden > Duration::ZERO, "no read latency hidden: {s:?}");
+    // single worker: repeat stages land where the chunk is staged
+    let (hits, _cold, steals) = outcome.manager.locality_stats();
+    assert!(hits >= n as u64, "stage-1 assignments must be locality hits: {hits}");
+    assert_eq!(steals, 0);
+}
+
+#[test]
+fn staged_run_without_prefetcher_still_completes() {
+    let n = 4;
+    let wf = slow_workflow(0);
+    let source = Arc::new(ScalarSource { n, latency: Duration::ZERO });
+    let cfg = RunConfig {
+        n_tiles: n,
+        cpu_workers: 1,
+        gpu_workers: 0,
+        window: 2,
+        staging_cap: 8,
+        prefetch_depth: 0, // no prefetcher thread
+        chunk_locality: false,
+        ..Default::default()
+    };
+    let outcome =
+        run_local_staged(wf, source, n, cfg, HashMap::new(), SharedProfiles::fresh()).unwrap();
+    let (done, total) = outcome.manager.progress();
+    assert_eq!(done, total);
+    assert_eq!(outcome.manager.reduce_outputs("total").unwrap()[0].as_scalar().unwrap(), 16.0);
+    let s = &outcome.metrics.staging;
+    assert_eq!(s.prefetched, 0);
+    assert_eq!(s.hidden, Duration::ZERO);
+    // stage-0 fetches demand-load, stage-1 fetches hit the cache
+    assert_eq!(s.misses, n as u64);
+    assert_eq!(s.hits, n as u64);
+    // locality disabled: the policy counters stay silent
+    assert_eq!(outcome.manager.locality_stats(), (0, 0, 0));
+}
+
+#[test]
+fn tight_staging_cap_evicts_and_reloads() {
+    let n = 6;
+    let wf = slow_workflow(0);
+    let source = Arc::new(ScalarSource { n, latency: Duration::ZERO });
+    let cfg = RunConfig {
+        n_tiles: n,
+        cpu_workers: 1,
+        gpu_workers: 0,
+        window: 4,
+        staging_cap: 1, // pathological: at most one staged chunk
+        prefetch_depth: 0,
+        ..Default::default()
+    };
+    let outcome =
+        run_local_staged(wf, source, n, cfg, HashMap::new(), SharedProfiles::fresh()).unwrap();
+    let (done, total) = outcome.manager.progress();
+    assert_eq!(done, total, "eviction pressure must not lose work");
+    assert_eq!(outcome.manager.reduce_outputs("total").unwrap()[0].as_scalar().unwrap(), 36.0);
+    let s = &outcome.metrics.staging;
+    assert!(s.evictions > 0, "cap 1 must evict: {s:?}");
+}
+
+#[test]
+fn wsi_pipeline_runs_staged_from_a_tile_directory() {
+    // export a synthetic dataset as .tile files, then run the real WSI
+    // pipeline over the directory source with staging + prefetch
+    let dir = std::env::temp_dir().join(format!("htap-staging-it-{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&dir);
+    let tile = 32;
+    let n = 3;
+    let store = TileStore::new(SynthConfig::for_tile_size(tile, 99), n);
+    assert_eq!(DirSource::export_store(&dir, &store).unwrap(), n);
+
+    let params = AppParams::for_tile_size(tile);
+    let wf = Arc::new(build_workflow(&params, false));
+    let source = Arc::new(
+        DirSource::open(&dir).unwrap().with_read_latency(Duration::from_millis(2)),
+    );
+    let cfg = RunConfig {
+        tile_size: tile,
+        n_tiles: n,
+        cpu_workers: 2,
+        gpu_workers: 0,
+        window: 2,
+        staging_cap: 8,
+        prefetch_depth: 2,
+        ..Default::default()
+    };
+    let outcome =
+        run_local_staged(wf, source, n, cfg, stage_bindings(), SharedProfiles::fresh()).unwrap();
+    let (done, total) = outcome.manager.progress();
+    assert_eq!((done, total), (2 * n, 2 * n));
+    let s = &outcome.metrics.staging;
+    // both WSI stages read the tile: n fetches per stage
+    assert_eq!(s.hits + s.misses, 2 * n as u64);
+    assert!(s.hits > 0);
+    let _ = std::fs::remove_dir_all(&dir);
+}
