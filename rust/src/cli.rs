@@ -12,7 +12,7 @@ use std::collections::BTreeMap;
 /// Flags that take no value.  Everything else still requires one, so a
 /// forgotten value for a string/path flag is an error, not a silent
 /// `"true"`.
-const BOOL_FLAGS: &[&str] = &["quick", "no-dl", "no-prefetch", "no-locality"];
+const BOOL_FLAGS: &[&str] = &["quick", "no-dl", "no-prefetch", "no-locality", "no-replication"];
 
 /// Parsed command line.
 #[derive(Debug, Clone)]
@@ -118,6 +118,18 @@ impl Cli {
             cfg.prefetch_depth =
                 v.parse().map_err(|_| Error::Config("bad --prefetch-depth".into()))?;
         }
+        if let Some(v) = self.get("spill-dir") {
+            cfg.spill_dir = Some(v.to_string());
+        }
+        if let Some(v) = self.get("spill-cap") {
+            cfg.spill_cap = v.parse().map_err(|_| Error::Config("bad --spill-cap".into()))?;
+        }
+        if let Some(v) = self.get("no-replication") {
+            cfg.replication = v != "true";
+        }
+        if let Some(v) = self.get("partition") {
+            cfg.partition = crate::config::PartitionMode::parse(v)?;
+        }
         if let Some(v) = self.get("read-latency-ms") {
             cfg.read_latency_ms =
                 v.parse().map_err(|_| Error::Config("bad --read-latency-ms".into()))?;
@@ -136,7 +148,7 @@ USAGE:
                  [--workflow wf.json] [--profiles profiles.json]
                  [--save-profiles out.json] [--chunk-source synth|dir:PATH]
                  [--staging-cap N] [--prefetch-depth N] [--no-locality]
-                 [--read-latency-ms MS]
+                 [--spill-dir PATH] [--spill-cap N] [--read-latency-ms MS]
         run a workflow locally (default: the built-in WSI app; --workflow
         loads a declarative JSON workflow over the registered op set — see
         docs/workflow_api.md).  Chunks come from --chunk-source (synthetic
@@ -144,35 +156,48 @@ USAGE:
         stage through a bounded cache with async prefetch
         (--staging-cap/--prefetch-depth; --no-locality disables
         catalog-driven assignment; --read-latency-ms simulates shared-FS
-        reads).  --profiles seeds PATS with measured estimates from `htap
-        calibrate`; --save-profiles writes the post-run EWMA estimates out
+        reads).  --spill-dir adds a bounded local-disk tier: evictions
+        demote instead of dropping and misses promote from disk
+        (--spill-cap chunks).  --profiles seeds PATS with measured
+        estimates from `htap calibrate`; --save-profiles writes the
+        post-run EWMA estimates out
 
     htap sim     [--nodes N] [--tiles N] [--policy fcfs|pats]
-                 [--profiles profiles.json] [--no-locality]
+                 [--profiles profiles.json] [--no-locality] [--no-replication]
         discrete-event simulation at cluster scale (Keeneland model);
-        --profiles calibrates the cost model from measured estimates;
-        --no-locality makes repeat stages migrate across nodes and re-read
-        their tiles (the Fig. 8-style locality-off control)
+        --profiles calibrates the cost model from measured estimates
+        (including the chunk-read cost a calibrate --read-latency-ms run
+        recorded); --no-locality makes repeat stages migrate across nodes
+        and re-read their tiles (the Fig. 8-style locality-off control);
+        --no-replication makes steal migrations pay cold re-reads instead
+        of hinted prefetches (the tiered-storage control)
 
     htap calibrate [--quick] [--tile-size S] [--tiles N] [--reps N]
-                   [--seed N] [--out profiles.json]
+                   [--seed N] [--read-latency-ms MS] [--out profiles.json]
         microbenchmark every registered op on synthetic tiles across the
-        device kinds this host can execute, and write a versioned
+        device kinds this host can execute, plus the per-chunk read cost
+        under the simulated shared-FS latency, and write a versioned
         profiles.json consumed by run/sim/PATS (--quick: CI-sized pass)
 
     htap manager --listen HOST:PORT [--tiles N] [--tile-size S] [--workers N]
-                 [--chunk-source synth|dir:PATH] [--no-locality]
+                 [--chunk-source synth|dir:PATH] [--workflow wf.json]
+                 [--no-locality] [--no-replication] [--partition demand|init]
         serve stage instances to TCP workers.  Staged protocol: workers
         read chunk payloads from their own --chunk-source (tiles never
         cross the wire) and assignment is locality-aware via the chunk
-        catalog unless --no-locality
+        catalog unless --no-locality.  Steals replicate the chunk
+        (multi-homed catalog + replicate hints) unless --no-replication;
+        --partition init range-assigns cold chunks to worker ids
+        1..=--workers up front (workers must pass matching --worker-id)
 
     htap worker  --connect HOST:PORT [--cpus N] [--gpus N] [--window N]
-                 [--chunk-source synth|dir:PATH] [--worker-id N]
-                 [--staging-cap N] [--prefetch-depth N] [--read-latency-ms MS]
+                 [--chunk-source synth|dir:PATH] [--workflow wf.json]
+                 [--worker-id N] [--staging-cap N] [--prefetch-depth N]
+                 [--spill-dir PATH] [--spill-cap N] [--read-latency-ms MS]
         join a distributed run; --chunk-source must serve the same dataset
         the manager was pointed at (same synth seed/tile count, or the
-        same shared directory)
+        same shared directory), and --workflow must load the same file the
+        manager did
 
     htap export-tiles --dir PATH [--tiles N] [--tile-size S] [--seed N]
         write the synthetic dataset as .tile files for dir: chunk sources
@@ -247,6 +272,40 @@ mod tests {
         // defaults keep locality on
         let cfg = Cli::parse(&args(&["run"])).unwrap().run_config().unwrap();
         assert!(cfg.chunk_locality);
+    }
+
+    #[test]
+    fn tier_flags_override_config() {
+        let c = Cli::parse(&args(&[
+            "run",
+            "--spill-dir",
+            "/tmp/htap-spill",
+            "--spill-cap",
+            "16",
+            "--no-replication",
+            "--partition",
+            "init",
+        ]))
+        .unwrap();
+        let cfg = c.run_config().unwrap();
+        assert_eq!(cfg.spill_dir.as_deref(), Some("/tmp/htap-spill"));
+        assert_eq!(cfg.spill_cap, 16);
+        assert!(!cfg.replication);
+        assert_eq!(cfg.partition, crate::config::PartitionMode::Init);
+        // defaults: no spill tier, replication on, demand partition
+        let cfg = Cli::parse(&args(&["run"])).unwrap().run_config().unwrap();
+        assert!(cfg.spill_dir.is_none());
+        assert!(cfg.replication);
+        assert_eq!(cfg.partition, crate::config::PartitionMode::Demand);
+        // bad values stay hard errors
+        assert!(Cli::parse(&args(&["run", "--spill-cap", "zero"]))
+            .unwrap()
+            .run_config()
+            .is_err());
+        assert!(Cli::parse(&args(&["run", "--partition", "static"]))
+            .unwrap()
+            .run_config()
+            .is_err());
     }
 
     #[test]

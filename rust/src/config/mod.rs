@@ -62,6 +62,35 @@ impl Placement {
     }
 }
 
+/// How the staged Manager maps cold chunks to workers.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum PartitionMode {
+    /// Purely demand-driven (default): first requester wins a cold chunk.
+    Demand,
+    /// Catalog-aware initial partitioning: contiguous chunk ranges are
+    /// range-assigned to the known workers up front (`htap manager
+    /// --partition init` homes chunks on worker ids `1..=--workers`),
+    /// demand-driven thereafter.
+    Init,
+}
+
+impl PartitionMode {
+    pub fn parse(s: &str) -> Result<PartitionMode> {
+        match s.to_ascii_lowercase().as_str() {
+            "demand" => Ok(PartitionMode::Demand),
+            "init" | "range" => Ok(PartitionMode::Init),
+            other => Err(Error::Config(format!("unknown partition mode '{other}'"))),
+        }
+    }
+
+    pub fn name(self) -> &'static str {
+        match self {
+            PartitionMode::Demand => "demand",
+            PartitionMode::Init => "init",
+        }
+    }
+}
+
 /// Pipeline granularity exposed to the runtime (paper Fig. 9 comparison).
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub enum Granularity {
@@ -100,6 +129,16 @@ pub struct RunConfig {
     pub prefetch_depth: usize,
     /// Manager-side locality-aware (chunk-catalog) assignment.
     pub chunk_locality: bool,
+    /// Local-disk spill directory: evictions demote instead of dropping
+    /// (None = memory tier only, today's behaviour).
+    pub spill_dir: Option<String>,
+    /// Spill-tier capacity in chunks on each worker's local disk.
+    pub spill_cap: usize,
+    /// Replicate-on-steal: a stolen chunk stays multi-homed in the catalog
+    /// and the thief stages it eagerly (off = single-owner transfer).
+    pub replication: bool,
+    /// Initial cold-chunk partition (demand-driven vs range-assigned).
+    pub partition: PartitionMode,
     /// Artificial per-chunk read latency in ms (shared-FS stand-in).
     pub read_latency_ms: u64,
     /// RNG seed for synthetic data.
@@ -122,6 +161,10 @@ impl Default for RunConfig {
             staging_cap: 32,
             prefetch_depth: 4,
             chunk_locality: true,
+            spill_dir: None,
+            spill_cap: 256,
+            replication: true,
+            partition: PartitionMode::Demand,
             read_latency_ms: 0,
             seed: 42,
         }
@@ -166,6 +209,13 @@ impl RunConfig {
                     self.chunk_locality =
                         v.as_bool().ok_or_else(|| Error::Config("bad bool".into()))?
                 }
+                "spill_dir" => self.spill_dir = Some(req_str(v, k)?.to_string()),
+                "spill_cap" => self.spill_cap = req_usize(v, k)?,
+                "replication" => {
+                    self.replication =
+                        v.as_bool().ok_or_else(|| Error::Config("bad bool".into()))?
+                }
+                "partition" => self.partition = PartitionMode::parse(req_str(v, k)?)?,
                 "read_latency_ms" => self.read_latency_ms = req_usize(v, k)? as u64,
                 other => return Err(Error::Config(format!("unknown config key '{other}'"))),
             }
@@ -190,6 +240,9 @@ impl RunConfig {
         }
         if self.staging_cap == 0 {
             return Err(Error::Config("staging_cap must be >= 1".into()));
+        }
+        if self.spill_cap == 0 {
+            return Err(Error::Config("spill_cap must be >= 1".into()));
         }
         Ok(())
     }
@@ -221,7 +274,9 @@ mod tests {
             &Json::parse(
                 r#"{"tile_size": 256, "policy": "fcfs", "granularity": "non-pipelined",
                     "window": 12, "data_locality": false, "staging_cap": 8,
-                    "prefetch_depth": 2, "chunk_locality": false, "read_latency_ms": 5}"#,
+                    "prefetch_depth": 2, "chunk_locality": false, "read_latency_ms": 5,
+                    "spill_dir": "/tmp/spill", "spill_cap": 64, "replication": false,
+                    "partition": "init"}"#,
             )
             .unwrap(),
         )
@@ -235,6 +290,10 @@ mod tests {
         assert_eq!(c.prefetch_depth, 2);
         assert!(!c.chunk_locality);
         assert_eq!(c.read_latency_ms, 5);
+        assert_eq!(c.spill_dir.as_deref(), Some("/tmp/spill"));
+        assert_eq!(c.spill_cap, 64);
+        assert!(!c.replication);
+        assert_eq!(c.partition, PartitionMode::Init);
     }
 
     #[test]
@@ -242,6 +301,21 @@ mod tests {
         let mut c = RunConfig::default();
         c.staging_cap = 0;
         assert!(c.validate().is_err());
+    }
+
+    #[test]
+    fn zero_spill_cap_invalid() {
+        let mut c = RunConfig::default();
+        c.spill_cap = 0;
+        assert!(c.validate().is_err());
+    }
+
+    #[test]
+    fn partition_mode_parses() {
+        assert_eq!(PartitionMode::parse("demand").unwrap(), PartitionMode::Demand);
+        assert_eq!(PartitionMode::parse("INIT").unwrap(), PartitionMode::Init);
+        assert_eq!(PartitionMode::parse("range").unwrap(), PartitionMode::Init);
+        assert!(PartitionMode::parse("static").is_err());
     }
 
     #[test]

@@ -45,6 +45,9 @@ pub struct Assignment {
     /// The manager matched this assignment to the requester's staged set
     /// (locality hit; diagnostics only).
     pub locality: bool,
+    /// This assignment was a tier-3 steal and replication left the chunk
+    /// multi-homed — the worker should keep its staged copy warm.
+    pub replica: bool,
 }
 
 /// A demand-driven work request (worker -> manager).  The staging fields
@@ -60,6 +63,9 @@ pub struct WorkRequest {
     pub staged_add: Vec<ChunkId>,
     /// Chunks evicted from the cache since the last request.
     pub staged_drop: Vec<ChunkId>,
+    /// Chunks demoted to this worker's local-disk spill tier (still
+    /// staged, a tier down).
+    pub demoted: Vec<ChunkId>,
     /// How many upcoming chunk ids the worker wants as prefetch hints.
     pub prefetch_budget: usize,
 }
@@ -79,6 +85,56 @@ pub struct WorkBatch {
     /// Upcoming chunk ids the worker should warm its staging cache with
     /// (likely future assignments not yet staged on this worker).
     pub prefetch: Vec<ChunkId>,
+    /// Chunks this batch stole from another worker: they are multi-homed
+    /// now (replicate hints) and worth staging eagerly.
+    pub replicate: Vec<ChunkId>,
+}
+
+/// How the Manager maps cold chunks to workers.
+#[derive(Debug, Clone, PartialEq)]
+pub enum Partition {
+    /// Purely demand-driven: first requester wins a cold chunk.
+    Demand,
+    /// Catalog-aware initial partitioning: contiguous chunk ranges are
+    /// range-assigned to the given workers up front (chunk `c` belongs to
+    /// `workers[c * W / n_chunks]`); a worker takes another worker's cold
+    /// range only as a last resort, demand-driven thereafter.
+    Init(Vec<WorkerId>),
+}
+
+/// Staged-mode assignment policy: the catalog-driven locality tiers, the
+/// replicate-on-steal rule, and the initial chunk partition.
+#[derive(Debug, Clone, PartialEq)]
+pub struct AssignPolicy {
+    /// Locality-aware (chunk-catalog) assignment.
+    pub locality: bool,
+    /// Replicate on steal: a stolen chunk stays multi-homed in the catalog
+    /// and the thief gets a replicate hint.  Off = single-owner transfer.
+    pub replication: bool,
+    pub partition: Partition,
+}
+
+impl Default for AssignPolicy {
+    fn default() -> Self {
+        AssignPolicy { locality: true, replication: true, partition: Partition::Demand }
+    }
+}
+
+impl AssignPolicy {
+    /// Demand-driven policy with locality on/off (the pre-tiers default).
+    pub fn demand(locality: bool) -> Self {
+        AssignPolicy { locality, ..Default::default() }
+    }
+
+    /// Derive the policy from a run config; `workers` is the identity set
+    /// used when `cfg.partition` asks for initial range-assignment.
+    pub fn from_config(cfg: &crate::config::RunConfig, workers: Vec<WorkerId>) -> Self {
+        let partition = match cfg.partition {
+            crate::config::PartitionMode::Demand => Partition::Demand,
+            crate::config::PartitionMode::Init => Partition::Init(workers),
+        };
+        AssignPolicy { locality: cfg.chunk_locality, replication: cfg.replication, partition }
+    }
 }
 
 /// Work-source abstraction: the in-process [`Manager`] and the TCP client
@@ -125,6 +181,8 @@ struct MgrState {
     locality_cold: u64,
     /// assignments stolen from chunks staged on *another* worker
     locality_steals: u64,
+    /// steals that left the chunk multi-homed (replicate hints emitted)
+    replicated: u64,
     error: Option<String>,
 }
 
@@ -142,6 +200,10 @@ pub struct Manager {
     stage_needs_chunk: Vec<bool>,
     /// locality-aware (catalog) assignment policy enabled
     locality: bool,
+    /// replicate-on-steal (vs single-owner transfer)
+    replication: bool,
+    /// initial partition: chunk -> home worker (empty = demand-driven)
+    home: HashMap<ChunkId, WorkerId>,
     state: Mutex<MgrState>,
     cv: Condvar,
 }
@@ -150,25 +212,26 @@ impl Manager {
     /// Legacy mode: the manager loads every chunk payload itself and ships
     /// it inside assignments.
     pub fn new(workflow: Arc<Workflow>, loader: ChunkLoader, n_chunks: usize) -> Result<Arc<Self>> {
-        Self::build(workflow, Some(loader), n_chunks, true)
+        Self::build(workflow, Some(loader), n_chunks, AssignPolicy::default())
     }
 
     /// Staged mode: assignments carry bare chunk ids (plus upstream
     /// values); workers stage chunk payloads from their own source.
-    /// `locality` enables the catalog-driven assignment policy.
+    /// `policy` selects the catalog-driven assignment tiers, the
+    /// replicate-on-steal rule and the initial chunk partition.
     pub fn new_staged(
         workflow: Arc<Workflow>,
         n_chunks: usize,
-        locality: bool,
+        policy: AssignPolicy,
     ) -> Result<Arc<Self>> {
-        Self::build(workflow, None, n_chunks, locality)
+        Self::build(workflow, None, n_chunks, policy)
     }
 
     fn build(
         workflow: Arc<Workflow>,
         loader: Option<ChunkLoader>,
         n_chunks: usize,
-        locality: bool,
+        policy: AssignPolicy,
     ) -> Result<Arc<Self>> {
         workflow.validate()?;
         let n_stages = workflow.stages.len();
@@ -193,13 +256,26 @@ impl Manager {
                 StageKind::Reduce => 1,
             };
         }
+        // catalog-aware initial partitioning: contiguous chunk ranges per
+        // known worker, so each worker's first cold pulls are its own range
+        let mut home = HashMap::new();
+        if let Partition::Init(workers) = &policy.partition {
+            let w = workers.len();
+            if w > 0 && n_chunks > 0 {
+                for c in 0..n_chunks {
+                    home.insert(c as ChunkId, workers[c * w / n_chunks]);
+                }
+            }
+        }
         let mgr = Arc::new(Manager {
             workflow: workflow.clone(),
             loader,
             n_chunks,
             has_dependents,
             stage_needs_chunk,
-            locality,
+            locality: policy.locality,
+            replication: policy.replication,
+            home,
             state: Mutex::new(MgrState {
                 pending: VecDeque::new(),
                 next_id: 0,
@@ -214,6 +290,7 @@ impl Manager {
                 locality_hits: 0,
                 locality_cold: 0,
                 locality_steals: 0,
+                replicated: 0,
                 stale_completions: 0,
                 error: None,
             }),
@@ -265,6 +342,7 @@ impl Manager {
                         inputs,
                         needs_chunk: self.stage_needs_chunk[si],
                         locality: false,
+                        replica: false,
                     };
                     st.inflight.insert(id, a.clone());
                     st.pending.push_back(a);
@@ -386,6 +464,17 @@ impl Manager {
         (st.locality_hits, st.locality_cold, st.locality_steals)
     }
 
+    /// Steals that left the chunk multi-homed (replicate hints emitted).
+    pub fn replicated(&self) -> u64 {
+        self.state.lock().unwrap().replicated
+    }
+
+    /// How many workers currently hold `chunk` in the catalog (any tier) —
+    /// diagnostics/test hook.
+    pub fn chunk_holders(&self, chunk: ChunkId) -> usize {
+        self.state.lock().unwrap().catalog.holder_count(chunk)
+    }
+
     /// Forget a dead/disconnected worker's catalog entries so its chunks
     /// go back to cold and survivors take them in tier 2 instead of as
     /// steals (pairs with [`Manager::requeue_stale`] on the
@@ -410,20 +499,24 @@ impl Manager {
 impl WorkSource for Manager {
     /// Demand-driven, locality-aware assignment (paper §IV-C lifted to the
     /// cluster level).  Selection runs in three tiers: (1) instances whose
-    /// chunk the requester already staged, (2) instances of cold chunks
-    /// (staged nowhere) or without chunk inputs, (3) *steal* instances
-    /// whose chunk another worker staged — the bag of tasks never stalls
-    /// waiting for locality.
+    /// chunk the requester already staged (memory or spill tier), (2)
+    /// instances of cold chunks — honouring the initial partition when one
+    /// was configured — or without chunk inputs, (3) *steal* instances
+    /// whose chunk another worker staged (chunks memory-resident nowhere
+    /// steal first; with replication on, the stolen chunk stays
+    /// multi-homed and a replicate hint rides back) — the bag of tasks
+    /// never stalls waiting for locality.
     fn request_work(&self, req: &WorkRequest) -> WorkBatch {
         let mut st = self.state.lock().unwrap();
         if req.worker != ANON_WORKER {
-            st.catalog.update(req.worker, &req.staged_add, &req.staged_drop);
+            st.catalog.update(req.worker, &req.staged_add, &req.staged_drop, &req.demoted);
         }
         loop {
             if !st.pending.is_empty() {
                 let n = req.capacity.min(st.pending.len()).max(1);
                 let use_locality = self.locality && req.worker != ANON_WORKER;
                 let mut picked: Vec<Assignment> = Vec::with_capacity(n);
+                let mut replicate: Vec<ChunkId> = Vec::new();
                 if use_locality {
                     // tier 1: chunks already staged on the requester
                     let mut i = 0;
@@ -441,12 +534,20 @@ impl WorkSource for Manager {
                             i += 1;
                         }
                     }
-                    // tier 2: cold chunks or chunk-less instances, in order
+                    // tier 2: cold chunks or chunk-less instances, in
+                    // order; with an initial partition, a cold chunk homed
+                    // on another worker is left for its owner here
                     let mut i = 0;
                     while picked.len() < n && i < st.pending.len() {
                         let cold = {
                             let a = &st.pending[i];
-                            !a.needs_chunk || st.catalog.holder_count(a.chunk) == 0
+                            !a.needs_chunk
+                                || (st.catalog.holder_count(a.chunk) == 0
+                                    && self
+                                        .home
+                                        .get(&a.chunk)
+                                        .map(|&w| w == req.worker)
+                                        .unwrap_or(true))
                         };
                         if cold {
                             let a = st.pending.remove(i).unwrap();
@@ -458,14 +559,46 @@ impl WorkSource for Manager {
                             i += 1;
                         }
                     }
-                    // tier 3: steal chunks staged on other workers
-                    while picked.len() < n {
-                        match st.pending.pop_front() {
-                            Some(a) => {
-                                st.locality_steals += 1;
-                                picked.push(a);
+                    // tier 3: last resort — steal chunks staged elsewhere
+                    // and take foreign-home cold chunks, so the bag never
+                    // stalls.  First pass prefers chunks memory-resident
+                    // nowhere (spilled-only holders forfeit no memory
+                    // locality when robbed); second pass takes anything.
+                    for pass in 0..2 {
+                        let mut i = 0;
+                        while picked.len() < n && i < st.pending.len() {
+                            let take = pass == 1 || {
+                                let a = &st.pending[i];
+                                st.catalog.mem_holder_count(a.chunk) == 0
+                            };
+                            if !take {
+                                i += 1;
+                                continue;
                             }
-                            None => break,
+                            let mut a = st.pending.remove(i).unwrap();
+                            if a.needs_chunk {
+                                if st.catalog.holder_count(a.chunk) == 0 {
+                                    // foreign-home cold chunk: not a steal
+                                    st.locality_cold += 1;
+                                } else {
+                                    st.locality_steals += 1;
+                                    if self.replication {
+                                        // the chunk becomes multi-homed;
+                                        // hint the thief to stage it warm
+                                        a.replica = true;
+                                        st.replicated += 1;
+                                        if !replicate.contains(&a.chunk) {
+                                            replicate.push(a.chunk);
+                                        }
+                                    } else {
+                                        // single-owner transfer: the old
+                                        // holders lose the catalog entry
+                                        st.catalog
+                                            .remove_other_holders(a.chunk, req.worker);
+                                    }
+                                }
+                            }
+                            picked.push(a);
                         }
                     }
                 } else {
@@ -485,22 +618,32 @@ impl WorkSource for Manager {
                         }
                     }
                 }
-                // prefetch hints: upcoming chunks not yet staged here
+                // prefetch hints: upcoming chunks not yet staged here —
+                // chunks homed on the requester first, then the rest (the
+                // homed pass only exists under an initial partition)
                 let mut prefetch: Vec<ChunkId> = Vec::new();
                 if req.prefetch_budget > 0 {
-                    for a in st.pending.iter() {
-                        if prefetch.len() >= req.prefetch_budget {
-                            break;
-                        }
-                        if a.needs_chunk
-                            && !st.catalog.is_staged(req.worker, a.chunk)
-                            && !prefetch.contains(&a.chunk)
-                        {
-                            prefetch.push(a.chunk);
+                    let first_pass = if self.home.is_empty() { 1 } else { 0 };
+                    for pass in first_pass..2 {
+                        for a in st.pending.iter() {
+                            if prefetch.len() >= req.prefetch_budget {
+                                break;
+                            }
+                            let homed_here =
+                                self.home.get(&a.chunk).copied() == Some(req.worker);
+                            if pass == 0 && !homed_here {
+                                continue;
+                            }
+                            if a.needs_chunk
+                                && !st.catalog.is_staged(req.worker, a.chunk)
+                                && !prefetch.contains(&a.chunk)
+                            {
+                                prefetch.push(a.chunk);
+                            }
                         }
                     }
                 }
-                return WorkBatch { assignments: picked, prefetch };
+                return WorkBatch { assignments: picked, prefetch, replicate };
             }
             if st.remaining_instances == 0 || st.error.is_some() {
                 return WorkBatch::default();
@@ -597,6 +740,7 @@ impl WorkSource for Manager {
                 inputs,
                 needs_chunk: c != REDUCE_CHUNK && self.stage_needs_chunk[di],
                 locality: false,
+                replica: false,
             };
             st.inflight.insert(id, a.clone());
             st.pending.push_back(a);
@@ -817,7 +961,7 @@ mod tests {
     /// A staged two-stage workflow where both stages read the chunk
     /// (stage 1 additionally consumes stage 0's output) — the shape that
     /// makes repeat-stage locality meaningful.
-    fn staged_two_stage(n_chunks: usize, locality: bool) -> Arc<Manager> {
+    fn staged_with_policy(n_chunks: usize, policy: AssignPolicy) -> Arc<Manager> {
         let mut wb = WorkflowBuilder::new("t", test_registry());
         let mut s0 = wb.stage("s0", StageKind::PerChunk);
         let c = s0.input_chunk();
@@ -830,7 +974,11 @@ mod tests {
         let op = s1.add_op("add", &[c, up]).unwrap();
         s1.export(op.out()).unwrap();
         wb.add_stage(s1).unwrap();
-        Manager::new_staged(Arc::new(wb.build().unwrap()), n_chunks, locality).unwrap()
+        Manager::new_staged(Arc::new(wb.build().unwrap()), n_chunks, policy).unwrap()
+    }
+
+    fn staged_two_stage(n_chunks: usize, locality: bool) -> Arc<Manager> {
+        staged_with_policy(n_chunks, AssignPolicy::demand(locality))
     }
 
     #[test]
@@ -942,6 +1090,131 @@ mod tests {
         // worker 2 is handed its staged chunk first (tier 1 hit)
         assert_eq!(b2.assignments[0].chunk, 2);
         assert!(!b2.prefetch.contains(&3));
+    }
+
+    #[test]
+    fn steal_with_replication_leaves_the_chunk_multi_homed() {
+        let mgr = staged_two_stage(2, true);
+        let w = |worker, capacity| WorkRequest { capacity, worker, ..Default::default() };
+        // worker 1 runs stage 0 for both chunks
+        let b1 = mgr.request_work(&w(1, 2));
+        for a in b1.assignments {
+            mgr.complete(a.instance_id, vec![Value::Scalar(0.0)]);
+        }
+        // worker 2 steals both stage-1 instances
+        let b2 = mgr.request_work(&w(2, 2));
+        assert_eq!(b2.assignments.len(), 2);
+        assert!(b2.assignments.iter().all(|a| a.replica), "steals must be marked replicas");
+        let mut hinted = b2.replicate.clone();
+        hinted.sort_unstable();
+        assert_eq!(hinted, vec![0, 1], "replicate hints must name the stolen chunks");
+        assert_eq!(mgr.replicated(), 2);
+        // both workers now hold both chunks: multi-homed
+        assert_eq!(mgr.chunk_holders(0), 2);
+        assert_eq!(mgr.chunk_holders(1), 2);
+    }
+
+    #[test]
+    fn steal_without_replication_transfers_ownership() {
+        let mgr = staged_with_policy(
+            2,
+            AssignPolicy { replication: false, ..Default::default() },
+        );
+        let w = |worker, capacity| WorkRequest { capacity, worker, ..Default::default() };
+        let b1 = mgr.request_work(&w(1, 2));
+        for a in b1.assignments {
+            mgr.complete(a.instance_id, vec![Value::Scalar(0.0)]);
+        }
+        let b2 = mgr.request_work(&w(2, 2));
+        assert_eq!(b2.assignments.len(), 2);
+        assert!(b2.assignments.iter().all(|a| !a.replica));
+        assert!(b2.replicate.is_empty(), "no hints without replication");
+        assert_eq!(mgr.replicated(), 0);
+        // single-owner transfer: only the thief holds the chunks now
+        assert_eq!(mgr.chunk_holders(0), 1);
+        assert_eq!(mgr.chunk_holders(1), 1);
+        let (_, _, steals) = mgr.locality_stats();
+        assert_eq!(steals, 2, "the transfer still counts as a steal");
+    }
+
+    #[test]
+    fn disk_tier_holders_are_stolen_before_memory_holders() {
+        let mgr = staged_two_stage(2, true);
+        let b1 = mgr.request_work(&WorkRequest { capacity: 2, worker: 1, ..Default::default() });
+        for a in b1.assignments {
+            mgr.complete(a.instance_id, vec![Value::Scalar(0.0)]);
+        }
+        // worker 1 demoted chunk 1 to its spill tier
+        let _ = mgr.request_work(&WorkRequest {
+            capacity: 1,
+            worker: 1,
+            demoted: vec![1],
+            ..Default::default()
+        });
+        // worker 1 got one of the stage-1 instances (a tier-1 hit); worker
+        // 2 steals the other — the disk-tier chunk would have been robbed
+        // first had both been pending
+        let b2 = mgr.request_work(&WorkRequest { capacity: 2, worker: 2, ..Default::default() });
+        assert_eq!(b2.assignments.len(), 1);
+        let (hits, _, steals) = mgr.locality_stats();
+        assert_eq!(hits, 1);
+        assert_eq!(steals, 1);
+    }
+
+    #[test]
+    fn init_partition_range_assigns_cold_chunks() {
+        let mgr = staged_with_policy(
+            4,
+            AssignPolicy { partition: Partition::Init(vec![1, 2]), ..Default::default() },
+        );
+        let w = |worker, capacity| WorkRequest { capacity, worker, ..Default::default() };
+        // worker 2 asks first: it gets ITS contiguous range (2, 3), not
+        // the queue front
+        let b2 = mgr.request_work(&w(2, 2));
+        assert_eq!(b2.assignments.iter().map(|a| a.chunk).collect::<Vec<_>>(), vec![2, 3]);
+        let b1 = mgr.request_work(&w(1, 2));
+        assert_eq!(b1.assignments.iter().map(|a| a.chunk).collect::<Vec<_>>(), vec![0, 1]);
+        let (hits, cold, steals) = mgr.locality_stats();
+        assert_eq!((hits, cold, steals), (0, 4, 0));
+        // drain to completion so nothing leaks
+        for a in b1.assignments.into_iter().chain(b2.assignments) {
+            mgr.complete(a.instance_id, vec![Value::Scalar(0.0)]);
+        }
+    }
+
+    #[test]
+    fn foreign_home_cold_chunks_are_taken_as_last_resort_not_steals() {
+        // only worker 2's range is left and worker 1 asks for everything:
+        // the bag must not stall, and the takes count cold, not stolen
+        let mgr = staged_with_policy(
+            2,
+            AssignPolicy { partition: Partition::Init(vec![1, 2]), ..Default::default() },
+        );
+        let b = mgr.request_work(&WorkRequest { capacity: 2, worker: 1, ..Default::default() });
+        assert_eq!(b.assignments.len(), 2, "bag of tasks must never stall");
+        // chunk 0 is worker 1's home (tier 2), chunk 1 was worker 2's
+        assert_eq!(b.assignments.iter().map(|a| a.chunk).collect::<Vec<_>>(), vec![0, 1]);
+        let (hits, cold, steals) = mgr.locality_stats();
+        assert_eq!((hits, cold, steals), (0, 2, 0));
+        assert!(b.replicate.is_empty(), "cold takes are not steals");
+    }
+
+    #[test]
+    fn init_partition_prefers_homed_prefetch_hints() {
+        let mgr = staged_with_policy(
+            6,
+            AssignPolicy { partition: Partition::Init(vec![1, 2]), ..Default::default() },
+        );
+        // worker 2 takes one instance; its hints should lead with its own
+        // range (4, 5) before worker 1's untouched chunks
+        let b = mgr.request_work(&WorkRequest {
+            capacity: 1,
+            worker: 2,
+            prefetch_budget: 3,
+            ..Default::default()
+        });
+        assert_eq!(b.assignments[0].chunk, 3);
+        assert_eq!(b.prefetch, vec![4, 5, 0]);
     }
 
     #[test]

@@ -15,12 +15,15 @@ pub mod sched;
 pub mod worker;
 pub mod wrm;
 
-pub use manager::{Assignment, ChunkId, ChunkLoader, Manager, WorkBatch, WorkRequest, WorkSource};
+pub use manager::{
+    Assignment, AssignPolicy, ChunkId, ChunkLoader, Manager, Partition, WorkBatch, WorkRequest,
+    WorkSource,
+};
 pub use placement::NodeTopology;
 pub use worker::WorkerStaging;
 
 use crate::config::RunConfig;
-use crate::data::staging::{ChunkSource, StagingCache};
+use crate::data::staging::{ChunkSource, SpillTier, StagingCache};
 use crate::dataflow::Workflow;
 use crate::metrics::{MetricsHub, MetricsReport};
 use crate::runtime::calibrate::SharedProfiles;
@@ -67,12 +70,27 @@ pub fn run_local_profiled(
     run_local_inner(workflow, manager, cfg, stage_bindings, profiles, None)
 }
 
+/// Build the optional local-disk spill tier for a worker from the run
+/// config (`--spill-dir` / `--spill-cap`).  Each worker gets a private
+/// `worker-N` subdirectory so co-located processes never collide.
+pub fn spill_from_config(cfg: &RunConfig, worker_id: u64) -> Result<Option<SpillTier>> {
+    match &cfg.spill_dir {
+        Some(dir) => {
+            let dir = std::path::Path::new(dir).join(format!("worker-{worker_id}"));
+            Ok(Some(SpillTier::create(dir, cfg.spill_cap)?))
+        }
+        None => Ok(None),
+    }
+}
+
 /// [`run_local_profiled`] in **staged** mode: the Manager hands out bare
 /// chunk ids, the in-process Worker stages payloads from `source` through
 /// a bounded [`StagingCache`] whose prefetcher overlaps reads with compute
-/// (`cfg.prefetch_depth`, `cfg.staging_cap`), and assignment follows the
-/// locality-aware catalog policy (`cfg.chunk_locality`).  Staging counters
-/// land in the returned metrics report.
+/// (`cfg.prefetch_depth`, `cfg.staging_cap`) and whose evictions demote to
+/// the local-disk spill tier when one is configured (`cfg.spill_dir`), and
+/// assignment follows the locality-aware catalog policy
+/// (`cfg.chunk_locality` / `cfg.replication` / `cfg.partition`).  Staging
+/// counters land in the returned metrics report.
 pub fn run_local_staged(
     workflow: Arc<Workflow>,
     source: Arc<dyn ChunkSource>,
@@ -81,9 +99,11 @@ pub fn run_local_staged(
     stage_bindings: HashMap<String, String>,
     profiles: Arc<SharedProfiles>,
 ) -> Result<RunOutcome> {
-    let manager = Manager::new_staged(workflow.clone(), n_chunks, cfg.chunk_locality)?;
+    let policy = AssignPolicy::from_config(&cfg, vec![1]);
+    let manager = Manager::new_staged(workflow.clone(), n_chunks, policy)?;
+    let spill = spill_from_config(&cfg, 1)?;
     let staging = worker::WorkerStaging {
-        cache: StagingCache::new(source, cfg.staging_cap, cfg.prefetch_depth),
+        cache: StagingCache::new_tiered(source, cfg.staging_cap, cfg.prefetch_depth, spill),
         worker_id: 1,
         prefetch_budget: cfg.prefetch_depth,
     };

@@ -60,7 +60,7 @@ fn materialize_inputs(
             .into(),
         ));
     };
-    let Assignment { instance_id, stage_idx, chunk, inputs, needs_chunk, locality } = a;
+    let Assignment { instance_id, stage_idx, chunk, inputs, needs_chunk, locality, replica } = a;
     let payload = stg.cache.get(chunk)?;
     let mut upstream = inputs.into_iter();
     let mut full = Vec::new();
@@ -72,7 +72,7 @@ fn materialize_inputs(
             })?),
         }
     }
-    Ok(Assignment { instance_id, stage_idx, chunk, inputs: full, needs_chunk, locality })
+    Ok(Assignment { instance_id, stage_idx, chunk, inputs: full, needs_chunk, locality, replica })
 }
 
 /// Run one Worker against a work source until the workflow completes,
@@ -183,12 +183,14 @@ pub fn run_worker_staged(
                     };
                     let req = match &staging {
                         Some(s) => {
-                            let (staged_add, staged_drop) = s.cache.take_staged_delta();
+                            let (staged_add, staged_drop, demoted) =
+                                s.cache.take_staged_delta();
                             WorkRequest {
                                 capacity,
                                 worker: s.worker_id,
                                 staged_add,
                                 staged_drop,
+                                demoted,
                                 prefetch_budget: s.prefetch_budget,
                             }
                         }
@@ -204,9 +206,11 @@ pub fn run_worker_staged(
                         return;
                     }
                     if let Some(s) = &staging {
-                        // warm the cache with this batch's chunks and the
-                        // manager's hints; the prefetcher reads them while
-                        // the device threads execute the current instances
+                        // steal replicas first (counted), then warm the
+                        // cache with this batch's chunks and the manager's
+                        // hints; the prefetcher reads them while the
+                        // device threads execute the current instances
+                        s.cache.prefetch_replicas(&batch.replicate);
                         let mut warm: Vec<u64> = batch
                             .assignments
                             .iter()

@@ -1,7 +1,8 @@
 //! The worker-side staging cache: a bounded in-memory chunk store with a
 //! background prefetcher (the paper's "data prefetching and asynchronous
 //! data copy", lifted from the GPU copy engine to the node's
-//! shared-filesystem reads).
+//! shared-filesystem reads), optionally backed by a local-disk
+//! [`SpillTier`] — together the worker's **tiered chunk store**.
 //!
 //! The Worker's requester warms the cache with the chunks of every queued
 //! assignment (plus the Manager's prefetch hints) as soon as a batch
@@ -10,8 +11,16 @@
 //! instances.  By the time an assignment's inputs are materialised the
 //! read has usually already happened — the hidden read latency is counted
 //! in [`StagingReport::hidden`].
+//!
+//! With a spill tier configured (`--spill-dir`), capacity evictions
+//! **demote** payloads to local disk instead of dropping them, and a later
+//! miss **promotes** from disk before falling back to the source tier.
+//! Demoted chunks stay in the Manager's catalog (they are still cheap on
+//! this worker — the `demoted` delta only downgrades their tier), so
+//! locality-aware assignment keeps routing their repeat stages here.
 
 use super::source::ChunkSource;
+use super::tiers::SpillTier;
 use crate::coordinator::ChunkId;
 use crate::metrics::StagingReport;
 use crate::runtime::Value;
@@ -33,6 +42,8 @@ enum Slot {
         load: Duration,
         /// a consumer already claimed it (hidden-latency counted once)
         claimed: bool,
+        /// promoted from the local-disk spill tier, not the source
+        from_spill: bool,
     },
 }
 
@@ -43,10 +54,15 @@ struct Inner {
     /// Prefetch work queue (callers bound what they offer; the capacity
     /// bound caps what is held staged at once).
     queue: VecDeque<ChunkId>,
+    /// Optional local-disk spill tier (owned under this lock: spill I/O is
+    /// cheap local disk, unlike source reads which run unlocked).
+    spill: Option<SpillTier>,
     /// Newly staged chunks not yet reported to the manager.
     staged: Vec<ChunkId>,
     /// Evicted chunks not yet reported to the manager.
     evicted: Vec<ChunkId>,
+    /// Chunks demoted memory -> disk, not yet reported to the manager.
+    demoted: Vec<ChunkId>,
     shutdown: bool,
 }
 
@@ -64,12 +80,16 @@ pub struct StagingCache {
     misses: AtomicU64,
     prefetched: AtomicU64,
     evictions: AtomicU64,
+    spill_hits: AtomicU64,
+    spill_evicted: AtomicU64,
+    promoted: AtomicU64,
+    replicated: AtomicU64,
     hidden_ns: AtomicU64,
     stall_ns: AtomicU64,
 }
 
 enum Lookup {
-    Ready(Arc<Vec<Value>>, Option<(bool, Duration)>),
+    Ready(Arc<Vec<Value>>, Option<(bool, Duration, bool)>),
     Wait,
     Load,
 }
@@ -79,6 +99,18 @@ impl StagingCache {
     /// background prefetcher when `depth > 0`.  The prefetcher thread is
     /// detached; call [`StagingCache::shutdown`] when the run ends.
     pub fn new(source: Arc<dyn ChunkSource>, cap: usize, depth: usize) -> Arc<Self> {
+        Self::new_tiered(source, cap, depth, None)
+    }
+
+    /// [`StagingCache::new`] with an optional local-disk spill tier:
+    /// evictions demote into it and misses promote from it before falling
+    /// back to `source`.
+    pub fn new_tiered(
+        source: Arc<dyn ChunkSource>,
+        cap: usize,
+        depth: usize,
+        spill: Option<SpillTier>,
+    ) -> Arc<Self> {
         let cache = Arc::new(StagingCache {
             source,
             cap: cap.max(1),
@@ -87,8 +119,10 @@ impl StagingCache {
                 slots: HashMap::new(),
                 order: VecDeque::new(),
                 queue: VecDeque::new(),
+                spill,
                 staged: Vec::new(),
                 evicted: Vec::new(),
+                demoted: Vec::new(),
                 shutdown: false,
             }),
             cv: Condvar::new(),
@@ -96,6 +130,10 @@ impl StagingCache {
             misses: AtomicU64::new(0),
             prefetched: AtomicU64::new(0),
             evictions: AtomicU64::new(0),
+            spill_hits: AtomicU64::new(0),
+            spill_evicted: AtomicU64::new(0),
+            promoted: AtomicU64::new(0),
+            replicated: AtomicU64::new(0),
             hidden_ns: AtomicU64::new(0),
             stall_ns: AtomicU64::new(0),
         });
@@ -131,9 +169,70 @@ impl StagingCache {
         self.cv.notify_all();
     }
 
+    /// Queue chunks the Manager flagged as steal replicas (the stolen
+    /// chunk is now multi-homed; staging it early keeps this worker a
+    /// cheap home).  Counts how many actually enqueue.  No-op when the
+    /// prefetcher is disabled.
+    pub fn prefetch_replicas(&self, chunks: &[ChunkId]) {
+        if self.depth == 0 || chunks.is_empty() {
+            return;
+        }
+        let mut inner = self.inner.lock().unwrap();
+        let mut n = 0u64;
+        for &c in chunks {
+            if inner.slots.contains_key(&c) || inner.queue.contains(&c) {
+                continue;
+            }
+            inner.queue.push_back(c);
+            n += 1;
+        }
+        drop(inner);
+        if n > 0 {
+            self.replicated.fetch_add(n, Ordering::Relaxed);
+            self.cv.notify_all();
+        }
+    }
+
+    /// Promote `chunk` from the spill tier into the memory tier, under the
+    /// lock.  Returns the payload when the disk copy existed and read back.
+    fn try_promote(
+        &self,
+        inner: &mut Inner,
+        chunk: ChunkId,
+        prefetched: bool,
+        claimed: bool,
+    ) -> Option<Arc<Vec<Value>>> {
+        let vals = inner.spill.as_mut().and_then(|s| s.get(chunk))?;
+        let vals = Arc::new(vals);
+        inner.slots.insert(
+            chunk,
+            Slot::Ready {
+                vals: vals.clone(),
+                prefetched,
+                load: Duration::ZERO,
+                claimed,
+                from_spill: true,
+            },
+        );
+        inner.order.push_back(chunk);
+        // re-announce: the catalog entry tiers back up to memory
+        inner.staged.push(chunk);
+        self.promoted.fetch_add(1, Ordering::Relaxed);
+        if claimed {
+            // demand-path promotion: the consumer is served from disk now
+            self.spill_hits.fetch_add(1, Ordering::Relaxed);
+        }
+        self.evict_excess(inner);
+        Some(vals)
+    }
+
     fn prefetch_loop(&self) {
+        enum Next {
+            Load(ChunkId),
+            Promoted,
+        }
         loop {
-            let chunk = {
+            let next = {
                 let mut inner = self.inner.lock().unwrap();
                 loop {
                     if inner.shutdown {
@@ -142,12 +241,24 @@ impl StagingCache {
                     match inner.queue.pop_front() {
                         Some(c) if inner.slots.contains_key(&c) => continue,
                         Some(c) => {
+                            // cheap local-disk promotion before the source
+                            if self.try_promote(&mut inner, c, true, false).is_some() {
+                                self.prefetched.fetch_add(1, Ordering::Relaxed);
+                                break Next::Promoted;
+                            }
                             inner.slots.insert(c, Slot::Loading);
-                            break c;
+                            break Next::Load(c);
                         }
                         None => inner = self.cv.wait(inner).unwrap(),
                     }
                 }
+            };
+            let chunk = match next {
+                Next::Promoted => {
+                    self.cv.notify_all();
+                    continue;
+                }
+                Next::Load(c) => c,
             };
             let t0 = Instant::now();
             let loaded = self.source.load(chunk);
@@ -160,6 +271,7 @@ impl StagingCache {
                         prefetched: true,
                         load,
                         claimed: false,
+                        from_spill: false,
                     };
                     inner.slots.insert(chunk, slot);
                     inner.order.push_back(chunk);
@@ -186,12 +298,12 @@ impl StagingCache {
         let mut inner = self.inner.lock().unwrap();
         loop {
             let lookup = match inner.slots.get_mut(&chunk) {
-                Some(Slot::Ready { vals, prefetched, load, claimed }) => {
+                Some(Slot::Ready { vals, prefetched, load, claimed, from_spill }) => {
                     let newly = if *claimed {
                         None
                     } else {
                         *claimed = true;
-                        Some((*prefetched, *load))
+                        Some((*prefetched, *load, *from_spill))
                     };
                     Lookup::Ready(vals.clone(), newly)
                 }
@@ -203,7 +315,12 @@ impl StagingCache {
                     if !counted {
                         self.hits.fetch_add(1, Ordering::Relaxed);
                     }
-                    if let Some((true, load)) = newly {
+                    if let Some((_, _, true)) = newly {
+                        // first consumer of a prefetch-promoted chunk: the
+                        // fetch was served by the local-disk tier
+                        self.spill_hits.fetch_add(1, Ordering::Relaxed);
+                    }
+                    if let Some((true, load, false)) = newly {
                         // the part of the read that ran before (or while) we
                         // blocked here was hidden behind compute
                         let waited = t_req.elapsed().min(load);
@@ -232,6 +349,13 @@ impl StagingCache {
                         self.misses.fetch_add(1, Ordering::Relaxed);
                         counted = true;
                     }
+                    // memory miss: the local-disk tier answers before the
+                    // (expensive) source tier does
+                    if let Some(vals) = self.try_promote(&mut inner, chunk, false, true) {
+                        drop(inner);
+                        self.cv.notify_all();
+                        return Ok(vals);
+                    }
                     inner.slots.insert(chunk, Slot::Loading);
                     drop(inner);
                     let t0 = Instant::now();
@@ -248,6 +372,7 @@ impl StagingCache {
                                     prefetched: false,
                                     load,
                                     claimed: true,
+                                    from_spill: false,
                                 },
                             );
                             inner.order.push_back(chunk);
@@ -271,7 +396,10 @@ impl StagingCache {
     }
 
     /// Evict beyond capacity: oldest already-consumed entry first, oldest
-    /// entry otherwise.  Caller holds the lock.
+    /// entry otherwise.  With a spill tier, the payload demotes to local
+    /// disk (the chunk stays catalogued, just a tier down); without one —
+    /// or if the disk write fails — it is dropped and reported evicted.
+    /// Caller holds the lock.
     fn evict_excess(&self, inner: &mut Inner) {
         while inner.order.len() > self.cap {
             let pos = inner
@@ -279,25 +407,65 @@ impl StagingCache {
                 .iter()
                 .position(|c| matches!(inner.slots.get(c), Some(Slot::Ready { claimed: true, .. })))
                 .unwrap_or(0);
-            if let Some(c) = inner.order.remove(pos) {
-                inner.slots.remove(&c);
+            let Some(c) = inner.order.remove(pos) else { break };
+            let vals = match inner.slots.remove(&c) {
+                Some(Slot::Ready { vals, .. }) => Some(vals),
+                _ => None,
+            };
+            let mut dropped_from_disk: Vec<ChunkId> = Vec::new();
+            let mut demoted = false;
+            if let Some(vals) = vals.as_ref() {
+                if let Some(spill) = inner.spill.as_mut() {
+                    if let Ok(dropped) = spill.put(c, vals) {
+                        demoted = true;
+                        dropped_from_disk = dropped;
+                    }
+                }
+            }
+            if demoted {
+                self.spill_evicted.fetch_add(1, Ordering::Relaxed);
+                inner.demoted.push(c);
+                for d in dropped_from_disk {
+                    // a chunk pushed out of the disk tier is gone from this
+                    // worker — unless a promoted copy still sits in memory
+                    if !inner.slots.contains_key(&d) {
+                        inner.evicted.push(d);
+                        self.evictions.fetch_add(1, Ordering::Relaxed);
+                    }
+                }
+            } else {
                 inner.evicted.push(c);
                 self.evictions.fetch_add(1, Ordering::Relaxed);
             }
         }
     }
 
-    /// Drain the (staged, evicted) chunk-id deltas accumulated since the
-    /// last call — piggybacked on the next work request so the Manager's
-    /// catalog tracks this worker.
-    pub fn take_staged_delta(&self) -> (Vec<ChunkId>, Vec<ChunkId>) {
+    /// Drain the (staged, evicted, demoted) chunk-id deltas accumulated
+    /// since the last call — piggybacked on the next work request so the
+    /// Manager's catalog tracks this worker (and each chunk's tier).
+    pub fn take_staged_delta(&self) -> (Vec<ChunkId>, Vec<ChunkId>, Vec<ChunkId>) {
         let mut inner = self.inner.lock().unwrap();
-        (std::mem::take(&mut inner.staged), std::mem::take(&mut inner.evicted))
+        (
+            std::mem::take(&mut inner.staged),
+            std::mem::take(&mut inner.evicted),
+            std::mem::take(&mut inner.demoted),
+        )
     }
 
     /// Whether a chunk is currently staged (Ready) — test/diagnostic hook.
     pub fn is_staged(&self, chunk: ChunkId) -> bool {
         matches!(self.inner.lock().unwrap().slots.get(&chunk), Some(Slot::Ready { .. }))
+    }
+
+    /// Whether a chunk currently sits in the spill tier — test hook.
+    pub fn is_spilled(&self, chunk: ChunkId) -> bool {
+        self.inner
+            .lock()
+            .unwrap()
+            .spill
+            .as_ref()
+            .map(|s| s.contains(chunk))
+            .unwrap_or(false)
     }
 
     /// Stop the prefetcher thread.
@@ -313,6 +481,10 @@ impl StagingCache {
             misses: self.misses.load(Ordering::Relaxed),
             prefetched: self.prefetched.load(Ordering::Relaxed),
             evictions: self.evictions.load(Ordering::Relaxed),
+            spill_hits: self.spill_hits.load(Ordering::Relaxed),
+            spill_evicted: self.spill_evicted.load(Ordering::Relaxed),
+            promoted: self.promoted.load(Ordering::Relaxed),
+            replicated: self.replicated.load(Ordering::Relaxed),
             hidden: Duration::from_nanos(self.hidden_ns.load(Ordering::Relaxed)),
             stall: Duration::from_nanos(self.stall_ns.load(Ordering::Relaxed)),
         }
@@ -368,9 +540,10 @@ mod tests {
         assert_eq!(r.misses, 0);
         assert!(r.hidden > Duration::ZERO, "hidden latency not counted: {r:?}");
         // staged delta reports both chunks exactly once
-        let (add, dropped) = cache.take_staged_delta();
+        let (add, dropped, demoted) = cache.take_staged_delta();
         assert_eq!(add, vec![0, 1]);
         assert!(dropped.is_empty());
+        assert!(demoted.is_empty());
         assert!(cache.take_staged_delta().0.is_empty());
         cache.shutdown();
     }
@@ -394,9 +567,10 @@ mod tests {
         }
         let r = cache.report();
         assert_eq!(r.evictions, 2);
-        let (add, dropped) = cache.take_staged_delta();
+        let (add, dropped, demoted) = cache.take_staged_delta();
         assert_eq!(add.len(), 4);
         assert_eq!(dropped.len(), 2);
+        assert!(demoted.is_empty(), "no spill tier, nothing demotes");
         // evicted chunks are no longer staged; a re-get is a miss
         assert!(!cache.is_staged(dropped[0]));
         cache.get(dropped[0]).unwrap();
@@ -410,6 +584,114 @@ mod tests {
         assert!(cache.get(9).is_err());
         // the failed load must not leave a stuck Loading slot
         assert!(cache.get(9).is_err());
+        cache.shutdown();
+    }
+
+    fn spill_dir(name: &str) -> std::path::PathBuf {
+        let d = std::env::temp_dir()
+            .join(format!("htap-cache-spill-{name}-{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&d);
+        d
+    }
+
+    #[test]
+    fn eviction_demotes_and_miss_promotes_from_spill() {
+        // the acceptance path: cap 1 forces demotion; the re-get is a
+        // memory miss served from local disk, not the source tier
+        let dir = spill_dir("promote");
+        let spill = SpillTier::create(&dir, 8).unwrap();
+        let cache = StagingCache::new_tiered(source(4, 0), 1, 0, Some(spill));
+        cache.get(0).unwrap();
+        cache.get(1).unwrap(); // evicts 0 -> demoted to disk
+        assert!(!cache.is_staged(0));
+        assert!(cache.is_spilled(0), "eviction must demote, not drop");
+        let (_, dropped, demoted) = cache.take_staged_delta();
+        assert!(dropped.is_empty(), "demoted chunks stay catalogued");
+        assert_eq!(demoted, vec![0]);
+        // miss on 0 -> promoted from disk (spill hit, no source read)
+        let v = cache.get(0).unwrap();
+        assert_eq!(v.len(), 1);
+        let r = cache.report();
+        assert_eq!(r.spill_evicted, 2, "1 evicted again when 0 promoted back: {r:?}");
+        assert_eq!(r.spill_hits, 1, "{r:?}");
+        assert_eq!(r.promoted, 1, "{r:?}");
+        assert_eq!(r.evictions, 0, "nothing fully dropped: {r:?}");
+        // the promotion re-announces chunk 0 at the memory tier
+        let (add, dropped, demoted) = cache.take_staged_delta();
+        assert!(add.contains(&0));
+        assert!(dropped.is_empty());
+        assert_eq!(demoted, vec![1]);
+        cache.shutdown();
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn spill_payloads_survive_the_round_trip_bitwise() {
+        let dir = spill_dir("bits");
+        let spill = SpillTier::create(&dir, 8).unwrap();
+        let src = source(3, 0);
+        let want = src.load(2).unwrap();
+        let cache = StagingCache::new_tiered(src, 1, 0, Some(spill));
+        cache.get(2).unwrap();
+        cache.get(0).unwrap(); // demote 2
+        assert!(cache.is_spilled(2));
+        let got = cache.get(2).unwrap(); // promote
+        assert_eq!(*got, want, "spill round-trip must be bit-identical");
+        cache.shutdown();
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn spill_cap_overflow_finally_drops_and_reports() {
+        let dir = spill_dir("overflow");
+        let spill = SpillTier::create(&dir, 1).unwrap();
+        let cache = StagingCache::new_tiered(source(8, 0), 1, 0, Some(spill));
+        cache.get(0).unwrap();
+        cache.get(1).unwrap(); // 0 demotes
+        cache.get(2).unwrap(); // 1 demotes, disk cap drops 0 for good
+        let r = cache.report();
+        assert_eq!(r.spill_evicted, 2, "{r:?}");
+        assert_eq!(r.evictions, 1, "chunk 0 must fall off the disk tier: {r:?}");
+        let (_, dropped, demoted) = cache.take_staged_delta();
+        assert_eq!(dropped, vec![0]);
+        assert_eq!(demoted, vec![0, 1]);
+        // a re-get of the fully dropped chunk goes back to the source
+        cache.get(0).unwrap();
+        let r = cache.report();
+        assert_eq!(r.spill_hits, 0, "{r:?}");
+        assert_eq!(r.misses, 4, "{r:?}");
+        cache.shutdown();
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn prefetcher_promotes_from_spill_and_counts_spill_hit_on_claim() {
+        let dir = spill_dir("prefetch");
+        let spill = SpillTier::create(&dir, 8).unwrap();
+        let cache = StagingCache::new_tiered(source(4, 0), 1, 2, Some(spill));
+        cache.get(0).unwrap();
+        cache.get(1).unwrap(); // demote 0
+        assert!(cache.is_spilled(0));
+        cache.prefetch(&[0]);
+        assert!(poll(|| cache.report().promoted == 1), "prefetcher never promoted");
+        // the consumer's fetch is then served by the disk tier
+        cache.get(0).unwrap();
+        let r = cache.report();
+        assert_eq!(r.spill_hits, 1, "{r:?}");
+        cache.shutdown();
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn replica_prefetch_counts_replicated() {
+        let cache = StagingCache::new(source(4, 0), 4, 2);
+        cache.prefetch_replicas(&[2, 3]);
+        assert!(poll(|| cache.report().prefetched == 2), "replicas never staged");
+        let r = cache.report();
+        assert_eq!(r.replicated, 2, "{r:?}");
+        // an already-staged chunk does not re-count
+        cache.prefetch_replicas(&[2]);
+        assert_eq!(cache.report().replicated, 2);
         cache.shutdown();
     }
 }

@@ -1,11 +1,15 @@
-//! The Manager-side chunk catalog: which worker has which chunks staged.
+//! The Manager-side chunk catalog: which worker has which chunks staged,
+//! and at which storage tier.
 //!
-//! Fed by the staged/evicted deltas piggybacked on every work request
-//! (plus an optimistic insert when a chunk-bearing assignment is handed
-//! out — the worker must stage the chunk to execute it), and consumed by
-//! the locality-aware assignment policy: prefer handing a worker the
-//! instances whose chunk it already holds, fall back to cold or stolen
-//! chunks so the bag of tasks never stalls.
+//! Fed by the staged/evicted/demoted deltas piggybacked on every work
+//! request (plus an optimistic insert when a chunk-bearing assignment is
+//! handed out — the worker must stage the chunk to execute it), and
+//! consumed by the locality-aware assignment policy: prefer handing a
+//! worker the instances whose chunk it already holds, fall back to cold or
+//! stolen chunks so the bag of tasks never stalls.  Tier tracking makes
+//! the catalog replication-aware: a chunk held only in workers' spill
+//! tiers ([`Tier::Disk`]) is a cheaper steal than a memory-resident one,
+//! and a steal leaves the chunk multi-homed unless replication is off.
 
 use crate::coordinator::ChunkId;
 use std::collections::{HashMap, HashSet};
@@ -17,10 +21,19 @@ pub type WorkerId = u64;
 /// `request(capacity)` path and non-staged runs).
 pub const ANON_WORKER: WorkerId = 0;
 
-/// Bidirectional worker <-> staged-chunk map.
+/// Storage tier a worker holds a chunk at.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Tier {
+    /// In the worker's staging cache (memory).
+    Mem,
+    /// Demoted to the worker's local-disk spill tier.
+    Disk,
+}
+
+/// Bidirectional worker <-> staged-chunk map with per-entry tiers.
 #[derive(Debug, Default)]
 pub struct ChunkCatalog {
-    by_worker: HashMap<WorkerId, HashSet<ChunkId>>,
+    by_worker: HashMap<WorkerId, HashMap<ChunkId, Tier>>,
     holders: HashMap<ChunkId, HashSet<WorkerId>>,
 }
 
@@ -29,20 +42,30 @@ impl ChunkCatalog {
         Self::default()
     }
 
-    /// Record that `worker` has `chunk` staged.
+    /// Record that `worker` has `chunk` staged in memory.
     pub fn insert(&mut self, worker: WorkerId, chunk: ChunkId) {
         if worker == ANON_WORKER {
             return;
         }
-        self.by_worker.entry(worker).or_default().insert(chunk);
+        self.by_worker.entry(worker).or_default().insert(chunk, Tier::Mem);
         self.holders.entry(chunk).or_default().insert(worker);
     }
 
-    /// Record that `worker` evicted `chunk`.
+    /// Record that `worker` demoted `chunk` to its local-disk tier (still
+    /// staged — just a tier down).
+    pub fn demote(&mut self, worker: WorkerId, chunk: ChunkId) {
+        if worker == ANON_WORKER {
+            return;
+        }
+        self.by_worker.entry(worker).or_default().insert(chunk, Tier::Disk);
+        self.holders.entry(chunk).or_default().insert(worker);
+    }
+
+    /// Record that `worker` evicted `chunk` entirely.
     pub fn remove(&mut self, worker: WorkerId, chunk: ChunkId) {
-        if let Some(set) = self.by_worker.get_mut(&worker) {
-            set.remove(&chunk);
-            if set.is_empty() {
+        if let Some(map) = self.by_worker.get_mut(&worker) {
+            map.remove(&chunk);
+            if map.is_empty() {
                 self.by_worker.remove(&worker);
             }
         }
@@ -54,8 +77,23 @@ impl ChunkCatalog {
         }
     }
 
-    /// Apply one request's staged/evicted delta.
-    pub fn update(&mut self, worker: WorkerId, staged_add: &[ChunkId], staged_drop: &[ChunkId]) {
+    /// Apply one request's staged/evicted/demoted delta.  Demotes apply
+    /// before adds: a chunk that was demoted *and* (re-)staged within one
+    /// delta window ends at [`Tier::Mem`] — the promote re-announces it in
+    /// `staged_add`, and misclassifying a memory-resident chunk as
+    /// disk-only would make tier-3 preferentially rob the one worker that
+    /// actually has it hot.  Drops apply last (an evict always ends the
+    /// window's story for that chunk).
+    pub fn update(
+        &mut self,
+        worker: WorkerId,
+        staged_add: &[ChunkId],
+        staged_drop: &[ChunkId],
+        demoted: &[ChunkId],
+    ) {
+        for &c in demoted {
+            self.demote(worker, c);
+        }
         for &c in staged_add {
             self.insert(worker, c);
         }
@@ -71,7 +109,7 @@ impl ChunkCatalog {
         let Some(chunks) = self.by_worker.remove(&worker) else {
             return 0;
         };
-        for c in &chunks {
+        for c in chunks.keys() {
             if let Some(set) = self.holders.get_mut(c) {
                 set.remove(&worker);
                 if set.is_empty() {
@@ -82,19 +120,56 @@ impl ChunkCatalog {
         chunks.len()
     }
 
-    /// Whether `worker` currently holds `chunk`.
-    pub fn is_staged(&self, worker: WorkerId, chunk: ChunkId) -> bool {
-        self.by_worker.get(&worker).map(|s| s.contains(&chunk)).unwrap_or(false)
+    /// Drop every holder of `chunk` except `keep` (single-owner transfer —
+    /// the no-replication policy on a steal).  Returns how many holders
+    /// were dropped.
+    pub fn remove_other_holders(&mut self, chunk: ChunkId, keep: WorkerId) -> usize {
+        let Some(set) = self.holders.get(&chunk) else {
+            return 0;
+        };
+        let others: Vec<WorkerId> = set.iter().copied().filter(|&w| w != keep).collect();
+        for w in &others {
+            self.remove(*w, chunk);
+        }
+        others.len()
     }
 
-    /// How many workers hold `chunk` (0 = cold chunk).
+    /// Whether `worker` currently holds `chunk` (either tier).
+    pub fn is_staged(&self, worker: WorkerId, chunk: ChunkId) -> bool {
+        self.by_worker.get(&worker).map(|m| m.contains_key(&chunk)).unwrap_or(false)
+    }
+
+    /// The tier `worker` holds `chunk` at, if any.
+    pub fn tier(&self, worker: WorkerId, chunk: ChunkId) -> Option<Tier> {
+        self.by_worker.get(&worker).and_then(|m| m.get(&chunk)).copied()
+    }
+
+    /// How many workers hold `chunk` at any tier (0 = cold chunk).
     pub fn holder_count(&self, chunk: ChunkId) -> usize {
         self.holders.get(&chunk).map(|s| s.len()).unwrap_or(0)
     }
 
+    /// How many workers hold `chunk` in memory.  Stealing a chunk that is
+    /// memory-resident nowhere forfeits no locality the holders still have.
+    pub fn mem_holder_count(&self, chunk: ChunkId) -> usize {
+        self.holders
+            .get(&chunk)
+            .map(|s| {
+                s.iter()
+                    .filter(|w| {
+                        matches!(
+                            self.by_worker.get(w).and_then(|m| m.get(&chunk)),
+                            Some(Tier::Mem)
+                        )
+                    })
+                    .count()
+            })
+            .unwrap_or(0)
+    }
+
     /// How many chunks `worker` holds.
     pub fn staged_count(&self, worker: WorkerId) -> usize {
-        self.by_worker.get(&worker).map(|s| s.len()).unwrap_or(0)
+        self.by_worker.get(&worker).map(|m| m.len()).unwrap_or(0)
     }
 
     /// Number of workers with at least one staged chunk.
@@ -124,21 +199,42 @@ mod tests {
     #[test]
     fn eviction_updates_both_maps() {
         let mut cat = ChunkCatalog::new();
-        cat.update(1, &[5, 6], &[]);
-        cat.update(1, &[7], &[5]);
+        cat.update(1, &[5, 6], &[], &[]);
+        cat.update(1, &[7], &[5], &[]);
         assert!(!cat.is_staged(1, 5));
         assert_eq!(cat.holder_count(5), 0);
         assert_eq!(cat.staged_count(1), 2);
         // removing the last chunk drops the worker entry
-        cat.update(1, &[], &[6, 7]);
+        cat.update(1, &[], &[6, 7], &[]);
         assert_eq!(cat.workers(), 0);
+    }
+
+    #[test]
+    fn demotion_keeps_the_chunk_staged_at_disk_tier() {
+        let mut cat = ChunkCatalog::new();
+        cat.update(1, &[5], &[], &[]);
+        assert_eq!(cat.tier(1, 5), Some(Tier::Mem));
+        assert_eq!(cat.mem_holder_count(5), 1);
+        cat.update(1, &[], &[], &[5]);
+        assert!(cat.is_staged(1, 5), "demoted chunks are still staged");
+        assert_eq!(cat.tier(1, 5), Some(Tier::Disk));
+        assert_eq!(cat.holder_count(5), 1);
+        assert_eq!(cat.mem_holder_count(5), 0);
+        // promotion re-announces at memory tier
+        cat.update(1, &[5], &[], &[]);
+        assert_eq!(cat.tier(1, 5), Some(Tier::Mem));
+        // demote-then-promote within ONE delta window ends at Mem: the
+        // demote must not shadow the later re-stage
+        cat.update(1, &[5], &[], &[5]);
+        assert_eq!(cat.tier(1, 5), Some(Tier::Mem));
+        assert_eq!(cat.mem_holder_count(5), 1);
     }
 
     #[test]
     fn purge_clears_a_dead_workers_entries() {
         let mut cat = ChunkCatalog::new();
-        cat.update(1, &[5, 6], &[]);
-        cat.update(2, &[6], &[]);
+        cat.update(1, &[5, 6], &[], &[]);
+        cat.update(2, &[6], &[], &[]);
         assert_eq!(cat.purge_worker(1), 2);
         assert_eq!(cat.staged_count(1), 0);
         assert_eq!(cat.holder_count(5), 0);
@@ -147,9 +243,23 @@ mod tests {
     }
 
     #[test]
+    fn single_owner_transfer_drops_other_holders() {
+        let mut cat = ChunkCatalog::new();
+        cat.insert(1, 9);
+        cat.insert(2, 9);
+        cat.insert(3, 9);
+        assert_eq!(cat.remove_other_holders(9, 2), 2);
+        assert_eq!(cat.holder_count(9), 1);
+        assert!(cat.is_staged(2, 9));
+        assert!(!cat.is_staged(1, 9) && !cat.is_staged(3, 9));
+        assert_eq!(cat.remove_other_holders(42, 1), 0, "cold chunk: nothing to drop");
+    }
+
+    #[test]
     fn anonymous_worker_is_never_tracked() {
         let mut cat = ChunkCatalog::new();
         cat.insert(ANON_WORKER, 3);
+        cat.demote(ANON_WORKER, 3);
         assert_eq!(cat.holder_count(3), 0);
         assert_eq!(cat.workers(), 0);
     }

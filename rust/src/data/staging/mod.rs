@@ -19,17 +19,23 @@
 //!   the hit/miss/hidden-latency counters surface through
 //!   [`crate::metrics::StagingReport`].
 //! * [`ChunkCatalog`] is the Manager's map of which worker has which
-//!   chunks staged, fed by the staged/evicted deltas piggybacked on every
-//!   work request and consumed by the locality-aware assignment policy in
+//!   chunks staged (and at which tier), fed by the staged/evicted/demoted
+//!   deltas piggybacked on every work request and consumed by the
+//!   locality-aware assignment policy in
 //!   [`crate::coordinator::Manager::request_work`].
+//! * [`SpillTier`] ([`tiers`]) is the optional local-disk rung between the
+//!   memory cache and the source: evictions demote instead of dropping,
+//!   misses promote from disk before re-reading the shared FS.
 
 pub mod cache;
 pub mod catalog;
 pub mod source;
+pub mod tiers;
 
 pub use cache::StagingCache;
-pub use catalog::{ChunkCatalog, WorkerId, ANON_WORKER};
+pub use catalog::{ChunkCatalog, Tier, WorkerId, ANON_WORKER};
 pub use source::{source_loader, ChunkSource, DirSource, SynthSource};
+pub use tiers::SpillTier;
 
 use crate::data::SynthConfig;
 use crate::Result;

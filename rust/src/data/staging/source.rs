@@ -83,6 +83,55 @@ impl ChunkSource for SynthSource {
 const TILE_MAGIC: &[u8; 4] = b"HTAP";
 const TILE_VERSION: u32 = 1;
 
+/// Append one tensor in the `.tile` body layout (rank + dims + raw f32
+/// LE).  Shared between the single-tensor `.tile` container and the spill
+/// tier's multi-value container ([`super::tiers`]).
+pub(crate) fn encode_tensor(buf: &mut Vec<u8>, t: &HostTensor) {
+    buf.extend_from_slice(&(t.shape().len() as u32).to_le_bytes());
+    for &d in t.shape() {
+        buf.extend_from_slice(&(d as u64).to_le_bytes());
+    }
+    for &f in t.data() {
+        buf.extend_from_slice(&f.to_le_bytes());
+    }
+}
+
+pub(crate) fn take_bytes<'a>(bytes: &'a [u8], pos: &mut usize, n: usize) -> Result<&'a [u8]> {
+    let end = pos
+        .checked_add(n)
+        .filter(|&e| e <= bytes.len())
+        .ok_or_else(|| Error::Config("truncated tensor data".into()))?;
+    let s = &bytes[*pos..end];
+    *pos = end;
+    Ok(s)
+}
+
+/// Decode one tensor written by [`encode_tensor`], advancing `pos`.
+/// Corrupt input (oversized rank/dims, truncation, element-count
+/// overflow) is an `Err`, never a panic — the spill tier relies on that
+/// to treat damaged files as cache misses.
+pub(crate) fn decode_tensor(bytes: &[u8], pos: &mut usize) -> Result<HostTensor> {
+    let rank = u32::from_le_bytes(take_bytes(bytes, pos, 4)?.try_into().unwrap()) as usize;
+    if rank > 8 {
+        return Err(Error::Config(format!("tensor rank {rank} too large")));
+    }
+    let mut dims = Vec::with_capacity(rank);
+    for _ in 0..rank {
+        dims.push(u64::from_le_bytes(take_bytes(bytes, pos, 8)?.try_into().unwrap()) as usize);
+    }
+    let n = dims
+        .iter()
+        .try_fold(1usize, |acc, &d| acc.checked_mul(d))
+        .and_then(|n| n.checked_mul(4))
+        .ok_or_else(|| Error::Config("tensor dims overflow".into()))?;
+    let payload = take_bytes(bytes, pos, n)?;
+    let mut data = Vec::with_capacity(n / 4);
+    for c in payload.chunks_exact(4) {
+        data.push(f32::from_le_bytes(c.try_into().unwrap()));
+    }
+    HostTensor::new(dims, data)
+}
+
 /// Tiles stored as `.tile` files in a directory (one file per chunk,
 /// sorted by file name).  This is the shared-filesystem mode: point the
 /// Manager and every worker at the same directory (`--chunk-source
@@ -121,13 +170,7 @@ impl DirSource {
         let mut buf = Vec::with_capacity(16 + t.data().len() * 4);
         buf.extend_from_slice(TILE_MAGIC);
         buf.extend_from_slice(&TILE_VERSION.to_le_bytes());
-        buf.extend_from_slice(&(t.shape().len() as u32).to_le_bytes());
-        for &d in t.shape() {
-            buf.extend_from_slice(&(d as u64).to_le_bytes());
-        }
-        for &f in t.data() {
-            buf.extend_from_slice(&f.to_le_bytes());
-        }
+        encode_tensor(&mut buf, t);
         let mut f = std::fs::File::create(path)?;
         f.write_all(&buf)?;
         Ok(())
@@ -146,29 +189,12 @@ impl DirSource {
         if version != TILE_VERSION {
             return Err(fail(&format!("tile format version {version}, expected {TILE_VERSION}")));
         }
-        let rank = u32::from_le_bytes(bytes[8..12].try_into().unwrap()) as usize;
-        if rank > 8 {
-            return Err(fail(&format!("tensor rank {rank} too large")));
-        }
-        let mut pos = 12;
-        let mut dims = Vec::with_capacity(rank);
-        for _ in 0..rank {
-            let end = pos + 8;
-            if end > bytes.len() {
-                return Err(fail("truncated dims"));
-            }
-            dims.push(u64::from_le_bytes(bytes[pos..end].try_into().unwrap()) as usize);
-            pos = end;
-        }
-        let n: usize = dims.iter().product();
-        if bytes.len() != pos + n * 4 {
+        let mut pos = 8;
+        let t = decode_tensor(&bytes, &mut pos).map_err(|e| fail(&e.to_string()))?;
+        if pos != bytes.len() {
             return Err(fail("payload size mismatch"));
         }
-        let mut data = Vec::with_capacity(n);
-        for c in bytes[pos..].chunks_exact(4) {
-            data.push(f32::from_le_bytes(c.try_into().unwrap()));
-        }
-        HostTensor::new(dims, data)
+        Ok(t)
     }
 
     /// Export every tile of a [`TileStore`] into `dir` (creating it) as
@@ -255,6 +281,23 @@ mod tests {
         std::fs::write(dir.join("b.tile"), &bytes[..bytes.len() - 4]).unwrap();
         let src = DirSource::open(&dir).unwrap();
         assert!(src.load(1).is_err());
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn overflowing_dims_error_instead_of_panicking() {
+        // a corrupt file whose dims multiply past usize::MAX must come
+        // back as Err (the spill tier maps it to a cache miss), not panic
+        let dir = tmp_dir("overflow");
+        let mut buf = Vec::new();
+        buf.extend_from_slice(TILE_MAGIC);
+        buf.extend_from_slice(&TILE_VERSION.to_le_bytes());
+        buf.extend_from_slice(&2u32.to_le_bytes()); // rank 2
+        buf.extend_from_slice(&u64::MAX.to_le_bytes());
+        buf.extend_from_slice(&2u64.to_le_bytes());
+        std::fs::write(dir.join("a.tile"), &buf).unwrap();
+        let src = DirSource::open(&dir).unwrap();
+        assert!(src.load(0).is_err());
         let _ = std::fs::remove_dir_all(&dir);
     }
 

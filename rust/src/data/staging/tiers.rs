@@ -1,0 +1,279 @@
+//! The local-disk **spill tier** of the worker's tiered chunk store.
+//!
+//! *Region Templates* (Teodoro et al., arXiv:1405.7958) generalises the
+//! paper's staging optimisations into an explicit storage hierarchy
+//! spanning memory, local disk, and the shared filesystem.  This module is
+//! the middle rung: when the in-memory [`super::StagingCache`] evicts a
+//! chunk under capacity pressure it **demotes** the payload here instead
+//! of dropping it, and a later miss **promotes** it back from local disk
+//! (cheap) before falling back to the shared-FS/source tier (expensive).
+//!
+//! On-disk format: one `chunk_NNNNNNNN.spill` file per chunk — magic +
+//! version + value count, then each [`Value`] as a tag byte followed by a
+//! scalar f32 or a `.tile`-style tensor body (the same rank + dims + raw
+//! f32 LE layout `DirSource` uses, via the shared codec in
+//! [`super::source`]).  The tier is bounded (`--spill-cap` chunks): when
+//! full, the least-recently-touched spilled chunk is dropped for good and
+//! reported back to the Manager's catalog as evicted.
+//!
+//! `SpillTier` is not internally synchronised: the owning cache mutates it
+//! under its own lock (spill reads/writes are local-disk cheap, unlike the
+//! source reads the cache deliberately performs unlocked).
+
+use super::source::{decode_tensor, encode_tensor, take_bytes};
+use crate::coordinator::ChunkId;
+use crate::runtime::Value;
+use crate::{Error, Result};
+use std::collections::{HashSet, VecDeque};
+use std::io::{Read, Write};
+use std::path::{Path, PathBuf};
+
+/// Magic + format version of the on-disk `.spill` container.
+const SPILL_MAGIC: &[u8; 4] = b"HTSP";
+const SPILL_VERSION: u32 = 1;
+
+const TAG_SCALAR: u8 = 0;
+const TAG_TENSOR: u8 = 1;
+
+/// Bounded local-disk chunk store; one per worker process.
+#[derive(Debug)]
+pub struct SpillTier {
+    dir: PathBuf,
+    /// max spilled chunks held on disk
+    cap: usize,
+    resident: HashSet<ChunkId>,
+    /// spilled chunk ids, least-recently-touched first (eviction order)
+    order: VecDeque<ChunkId>,
+}
+
+impl SpillTier {
+    /// Open (creating) `dir` as a spill directory holding at most `cap`
+    /// chunks.  Stale `.spill` files from a previous run are removed — the
+    /// tier is a cache of the source, never a source of truth.
+    pub fn create(dir: impl AsRef<Path>, cap: usize) -> Result<Self> {
+        let dir = dir.as_ref().to_path_buf();
+        std::fs::create_dir_all(&dir)?;
+        for entry in std::fs::read_dir(&dir)?.filter_map(|e| e.ok()) {
+            let p = entry.path();
+            if p.extension().map(|e| e == "spill").unwrap_or(false) {
+                let _ = std::fs::remove_file(p);
+            }
+        }
+        Ok(SpillTier {
+            dir,
+            cap: cap.max(1),
+            resident: HashSet::new(),
+            order: VecDeque::new(),
+        })
+    }
+
+    fn path(&self, chunk: ChunkId) -> PathBuf {
+        self.dir.join(format!("chunk_{chunk:08}.spill"))
+    }
+
+    /// Number of chunks currently spilled.
+    pub fn len(&self) -> usize {
+        self.resident.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.resident.is_empty()
+    }
+
+    /// Whether `chunk` is currently spilled.
+    pub fn contains(&self, chunk: ChunkId) -> bool {
+        self.resident.contains(&chunk)
+    }
+
+    /// Demote one chunk's payload to disk.  Returns the chunks the
+    /// capacity bound dropped from the tier to make room (the caller
+    /// reports them to the Manager as fully evicted).  Re-demoting a chunk
+    /// whose file survives from an earlier promotion only refreshes its
+    /// recency — payloads are immutable.
+    pub fn put(&mut self, chunk: ChunkId, vals: &[Value]) -> Result<Vec<ChunkId>> {
+        if self.resident.contains(&chunk) {
+            self.touch(chunk);
+            return Ok(Vec::new());
+        }
+        let mut buf = Vec::new();
+        buf.extend_from_slice(SPILL_MAGIC);
+        buf.extend_from_slice(&SPILL_VERSION.to_le_bytes());
+        buf.extend_from_slice(&(vals.len() as u32).to_le_bytes());
+        for v in vals {
+            match v {
+                Value::Scalar(s) => {
+                    buf.push(TAG_SCALAR);
+                    buf.extend_from_slice(&s.to_le_bytes());
+                }
+                Value::Tensor(t) => {
+                    buf.push(TAG_TENSOR);
+                    encode_tensor(&mut buf, t);
+                }
+            }
+        }
+        let mut f = std::fs::File::create(self.path(chunk))?;
+        f.write_all(&buf)?;
+        self.resident.insert(chunk);
+        self.order.push_back(chunk);
+        let mut dropped = Vec::new();
+        while self.resident.len() > self.cap {
+            if let Some(old) = self.order.pop_front() {
+                self.resident.remove(&old);
+                let _ = std::fs::remove_file(self.path(old));
+                dropped.push(old);
+            }
+        }
+        Ok(dropped)
+    }
+
+    /// Read a spilled chunk's payload back (promotion).  The file is kept
+    /// — a later re-eviction demotes for free.  A missing or corrupt file
+    /// reads as a miss (the entry is dropped and the caller falls back to
+    /// the source tier), never an error: this is a cache.
+    pub fn get(&mut self, chunk: ChunkId) -> Option<Vec<Value>> {
+        if !self.resident.contains(&chunk) {
+            return None;
+        }
+        match self.read(chunk) {
+            Ok(vals) => {
+                self.touch(chunk);
+                Some(vals)
+            }
+            Err(_) => {
+                self.resident.remove(&chunk);
+                if let Some(pos) = self.order.iter().position(|&c| c == chunk) {
+                    self.order.remove(pos);
+                }
+                let _ = std::fs::remove_file(self.path(chunk));
+                None
+            }
+        }
+    }
+
+    fn touch(&mut self, chunk: ChunkId) {
+        if let Some(pos) = self.order.iter().position(|&c| c == chunk) {
+            self.order.remove(pos);
+            self.order.push_back(chunk);
+        }
+    }
+
+    fn read(&self, chunk: ChunkId) -> Result<Vec<Value>> {
+        let mut bytes = Vec::new();
+        std::fs::File::open(self.path(chunk))?.read_to_end(&mut bytes)?;
+        if bytes.len() < 12 || &bytes[..4] != SPILL_MAGIC {
+            return Err(Error::Config("not an htap .spill file".into()));
+        }
+        let version = u32::from_le_bytes(bytes[4..8].try_into().unwrap());
+        if version != SPILL_VERSION {
+            return Err(Error::Config(format!(
+                "spill format version {version}, expected {SPILL_VERSION}"
+            )));
+        }
+        let count = u32::from_le_bytes(bytes[8..12].try_into().unwrap()) as usize;
+        let mut pos = 12;
+        let mut vals = Vec::with_capacity(count);
+        for _ in 0..count {
+            match take_bytes(&bytes, &mut pos, 1)?[0] {
+                TAG_SCALAR => {
+                    let raw = take_bytes(&bytes, &mut pos, 4)?;
+                    vals.push(Value::Scalar(f32::from_le_bytes(raw.try_into().unwrap())));
+                }
+                TAG_TENSOR => vals.push(Value::Tensor(decode_tensor(&bytes, &mut pos)?)),
+                t => return Err(Error::Config(format!("bad spill value tag {t}"))),
+            }
+        }
+        if pos != bytes.len() {
+            return Err(Error::Config("trailing bytes in spill file".into()));
+        }
+        Ok(vals)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::runtime::HostTensor;
+
+    fn tmp_dir(name: &str) -> PathBuf {
+        let d = std::env::temp_dir().join(format!("htap-spill-{name}-{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&d);
+        d
+    }
+
+    fn payload(c: u64) -> Vec<Value> {
+        vec![
+            Value::Scalar(c as f32),
+            Value::Tensor(HostTensor::new(vec![2, 2], vec![c as f32; 4]).unwrap()),
+        ]
+    }
+
+    #[test]
+    fn spill_round_trips_mixed_payloads() {
+        let dir = tmp_dir("roundtrip");
+        let mut tier = SpillTier::create(&dir, 4).unwrap();
+        assert!(tier.is_empty());
+        tier.put(3, &payload(3)).unwrap();
+        tier.put(7, &payload(7)).unwrap();
+        assert_eq!(tier.len(), 2);
+        assert!(tier.contains(3) && tier.contains(7));
+        assert_eq!(tier.get(3).unwrap(), payload(3));
+        assert_eq!(tier.get(7).unwrap(), payload(7));
+        // promotion keeps the file: a second read still succeeds
+        assert_eq!(tier.get(3).unwrap(), payload(3));
+        assert!(tier.get(99).is_none());
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn capacity_bound_drops_least_recently_touched() {
+        let dir = tmp_dir("cap");
+        let mut tier = SpillTier::create(&dir, 2).unwrap();
+        assert!(tier.put(0, &payload(0)).unwrap().is_empty());
+        assert!(tier.put(1, &payload(1)).unwrap().is_empty());
+        // touching 0 makes 1 the eviction victim
+        tier.get(0).unwrap();
+        let dropped = tier.put(2, &payload(2)).unwrap();
+        assert_eq!(dropped, vec![1]);
+        assert!(!tier.contains(1));
+        assert!(tier.get(1).is_none());
+        assert!(tier.contains(0) && tier.contains(2));
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn redemotion_of_a_kept_file_is_free() {
+        let dir = tmp_dir("redemote");
+        let mut tier = SpillTier::create(&dir, 2).unwrap();
+        tier.put(5, &payload(5)).unwrap();
+        // promote, then demote again: no drop, still readable
+        tier.get(5).unwrap();
+        assert!(tier.put(5, &payload(5)).unwrap().is_empty());
+        assert_eq!(tier.len(), 1);
+        assert_eq!(tier.get(5).unwrap(), payload(5));
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn corrupt_spill_file_reads_as_a_miss() {
+        let dir = tmp_dir("corrupt");
+        let mut tier = SpillTier::create(&dir, 2).unwrap();
+        tier.put(1, &payload(1)).unwrap();
+        std::fs::write(tier.path(1), b"garbage").unwrap();
+        assert!(tier.get(1).is_none(), "corruption must fall back to the source tier");
+        assert!(!tier.contains(1));
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn create_clears_stale_spill_files() {
+        let dir = tmp_dir("stale");
+        std::fs::create_dir_all(&dir).unwrap();
+        std::fs::write(dir.join("chunk_00000001.spill"), b"old run").unwrap();
+        std::fs::write(dir.join("keep.txt"), b"unrelated").unwrap();
+        let tier = SpillTier::create(&dir, 2).unwrap();
+        assert!(tier.is_empty());
+        assert!(!dir.join("chunk_00000001.spill").exists());
+        assert!(dir.join("keep.txt").exists(), "only .spill files are cleared");
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+}

@@ -2,14 +2,19 @@
 
 use htap::app::{self, build_workflow_with, stage_bindings, AppParams};
 use htap::cli::{Cli, USAGE};
-use htap::config::{Policy, RunConfig};
-use htap::coordinator::{run_local_staged, worker::run_worker_staged, Manager, WorkerStaging};
+use htap::config::{PartitionMode, Policy, RunConfig};
+use htap::coordinator::{
+    run_local_staged, spill_from_config, worker::run_worker_staged, AssignPolicy, Manager,
+    WorkerStaging,
+};
 use htap::data::staging::{source_from_spec, ChunkSource, StagingCache};
 use htap::data::{DirSource, SynthConfig, TileStore};
 use htap::dataflow::{workflow_from_file, StageKind, Workflow};
 use htap::metrics::MetricsHub;
 use htap::net::{ManagerServer, RemoteManager};
-use htap::runtime::calibrate::{calibrate_workflows, CalibrationConfig, SharedProfiles};
+use htap::runtime::calibrate::{
+    calibrate_workflows, CalibrationConfig, SharedProfiles, CHUNK_READ_OP,
+};
 use htap::runtime::{ArtifactManifest, ProfileStore};
 use htap::sim::{simulate, SimParams, SimWorkflow};
 use std::sync::Arc;
@@ -73,6 +78,32 @@ fn load_profiles(cli: &Cli, expected_tile_size: usize) -> htap::Result<Option<Pr
     }
 }
 
+/// Resolve the workflow to execute: `--workflow wf.json` loads a
+/// declarative workflow over the full op registry (WSI + generic ops) —
+/// `run`, `manager` and `worker` all accept it, distributed peers must
+/// load the same file; the default is the built-in WSI app.
+fn resolve_workflow(
+    cli: &Cli,
+    cfg: &RunConfig,
+    with_classification: bool,
+) -> htap::Result<Arc<Workflow>> {
+    match cli.get("workflow") {
+        Some(path) => {
+            let mut registry = app::registry();
+            registry.merge(app::generic::generic_registry())?;
+            Ok(Arc::new(workflow_from_file(path, Arc::new(registry))?))
+        }
+        None => {
+            let params = AppParams::for_tile_size(cfg.tile_size);
+            Ok(Arc::new(build_workflow_with(
+                Arc::new(app::registry()),
+                &params,
+                with_classification,
+            )?))
+        }
+    }
+}
+
 /// Resolve `--chunk-source` (default: synthetic tiles matching the run
 /// config) and the chunk count to process: an explicit `--tiles` caps a
 /// directory source; otherwise the source's full size is used.
@@ -96,29 +127,21 @@ fn chunk_source(cli: &Cli, cfg: &RunConfig) -> htap::Result<(Arc<dyn ChunkSource
 fn cmd_run(cli: &Cli) -> htap::Result<()> {
     let cfg = cli.run_config()?;
     let store = load_profiles(cli, cfg.tile_size)?;
-    // `--workflow wf.json` runs any declarative workflow over the full op
-    // registry (WSI + generic ops); the default is the built-in WSI app.
     // Measured profiles reach PATS through the run's SharedProfiles seed
     // below — the WRM overrides the static OpDef estimates at every task
     // push, so no registry rewrite is needed here.
-    let workflow: Arc<Workflow> = match cli.get("workflow") {
-        Some(path) => {
-            let mut registry = app::registry();
-            registry.merge(app::generic::generic_registry())?;
-            Arc::new(workflow_from_file(path, Arc::new(registry))?)
-        }
-        None => {
-            let params = AppParams::for_tile_size(cfg.tile_size);
-            Arc::new(build_workflow_with(Arc::new(app::registry()), &params, true)?)
-        }
-    };
+    let workflow = resolve_workflow(cli, &cfg, true)?;
     let (source, n) = chunk_source(cli, &cfg)?;
     println!(
         "running workflow '{}': {} chunks from {} ({}x{}) with {} ({} cpu + {} gpu threads, \
-         window {}, staging cap {}, prefetch depth {}, locality {})",
+         window {}, staging cap {}, prefetch depth {}, locality {}, spill {})",
         workflow.name, n, source.describe(), cfg.tile_size, cfg.tile_size, cfg.policy.name(),
         cfg.cpu_workers, cfg.gpu_workers, cfg.window, cfg.staging_cap, cfg.prefetch_depth,
-        if cfg.chunk_locality { "on" } else { "off" }
+        if cfg.chunk_locality { "on" } else { "off" },
+        match &cfg.spill_dir {
+            Some(d) => format!("{d} (cap {})", cfg.spill_cap),
+            None => "off".to_string(),
+        }
     );
     // seed the online store with the offline measurements, so PATS starts
     // from them and the run's EWMA updates refine them
@@ -156,32 +179,45 @@ fn cmd_sim(cli: &Cli) -> htap::Result<()> {
         None => Policy::Pats,
     };
     // the simulated pipeline is derived at the 64-px reference tile size
-    let workflow = match load_profiles(cli, 64)? {
-        Some(store) => SimWorkflow::pipelined_profiled(&store),
+    let store = load_profiles(cli, 64)?;
+    let workflow = match &store {
+        Some(store) => SimWorkflow::pipelined_profiled(store),
         None => SimWorkflow::pipelined(),
     };
     let chunk_locality = !cli.get_flag("no-locality");
-    let p = SimParams {
+    let replication = !cli.get_flag("no-replication");
+    let mut p = SimParams {
         workflow,
         n_nodes: nodes,
         n_tiles: tiles,
         policy,
         chunk_locality,
+        replication,
         ..Default::default()
     };
+    // a calibrate --read-latency-ms run measured the per-chunk read cost;
+    // feed it into the simulated tile-I/O base so transfer estimates
+    // reflect the same shared-FS latency
+    if let Some(ms) = store.as_ref().and_then(|s| s.cpu_ms(CHUNK_READ_OP)) {
+        p.tile_io_base = ms / 1e3;
+        println!("calibrated tile I/O base: {ms:.2} ms/chunk (measured {CHUNK_READ_OP})");
+    }
     let r = simulate(&p);
     println!(
-        "simulated {} tiles on {} Keeneland nodes ({}, locality {}): makespan {:.1}s, {:.1} tiles/s",
+        "simulated {} tiles on {} Keeneland nodes ({}, locality {}, replication {}): \
+         makespan {:.1}s, {:.1} tiles/s",
         tiles,
         nodes,
         policy.name(),
         if chunk_locality { "on" } else { "off" },
+        if replication { "on" } else { "off" },
         r.makespan,
         r.tiles_per_second()
     );
     println!(
-        "device busy {:.1}s, transfers {:.1}s, tile I/O {:.1}s",
-        r.busy_time, r.transfer_time, r.io_time
+        "device busy {:.1}s, transfers {:.1}s, tile I/O {:.1}s, \
+         {} steal migrations, {} cold re-reads",
+        r.busy_time, r.transfer_time, r.io_time, r.steal_migrations, r.cold_rereads
     );
     Ok(())
 }
@@ -196,10 +232,13 @@ fn cmd_calibrate(cli: &Cli) -> htap::Result<()> {
     cfg.n_chunks = cli.get_usize("tiles", cfg.n_chunks)?;
     cfg.reps = cli.get_usize("reps", cfg.reps)?.max(1);
     cfg.seed = cli.get_usize("seed", cfg.seed as usize)? as u64;
+    cfg.read_latency_ms =
+        cli.get_usize("read-latency-ms", cfg.read_latency_ms as usize)? as u64;
     let out = cli.get("out").unwrap_or("profiles.json");
     println!(
-        "calibrating registered ops: {} chunks of {}x{}, {} reps (+{} warmup) per op",
-        cfg.n_chunks, cfg.tile_size, cfg.tile_size, cfg.reps, cfg.warmup
+        "calibrating registered ops: {} chunks of {}x{}, {} reps (+{} warmup) per op, \
+         {} ms simulated read latency",
+        cfg.n_chunks, cfg.tile_size, cfg.tile_size, cfg.reps, cfg.warmup, cfg.read_latency_ms
     );
     let store = calibrate_workflows(&cfg)?;
     println!("\n{}", store.summary_table());
@@ -221,26 +260,37 @@ fn cmd_manager(cli: &Cli) -> htap::Result<()> {
         .ok_or_else(|| htap::Error::Config("manager needs --listen HOST:PORT".into()))?;
     let cfg = cli.run_config()?;
     let workers = cli.get_usize("workers", 1)?;
-    let params = AppParams::for_tile_size(cfg.tile_size);
-    let workflow = Arc::new(build_workflow_with(Arc::new(app::registry()), &params, false)?);
+    let workflow = resolve_workflow(cli, &cfg, false)?;
     // staged protocol: the manager never loads tile payloads — workers
     // stage chunks from their own --chunk-source; the source here only
     // fixes the chunk count (e.g. the .tile count of a shared directory)
     let (source, n) = chunk_source(cli, &cfg)?;
-    let manager = Manager::new_staged(workflow, n, cfg.chunk_locality)?;
+    // --partition init range-assigns cold chunks to worker ids 1..=workers
+    // (workers must pass matching --worker-id values)
+    let policy = AssignPolicy::from_config(&cfg, (1..=workers as u64).collect());
+    let manager = Manager::new_staged(workflow, n, policy)?;
     let server = ManagerServer::bind(listen, manager.clone())?;
     println!(
-        "manager on {} ({} chunks from {}, expecting {workers} workers, locality {})",
+        "manager on {} ({} chunks from {}, expecting {workers} workers, locality {}, \
+         replication {}, partition {})",
         server.local_addr(),
         n,
         source.describe(),
-        if cfg.chunk_locality { "on" } else { "off" }
+        if cfg.chunk_locality { "on" } else { "off" },
+        if cfg.replication { "on" } else { "off" },
+        cfg.partition.name()
     );
+    if cfg.partition == PartitionMode::Init {
+        println!("initial partition homes chunks on worker ids 1..={workers}");
+    }
     server.serve(workers)?;
     let (done, total) = manager.progress();
     let (hits, cold, steals) = manager.locality_stats();
     println!("workflow complete: {done}/{total}");
-    println!("locality: {hits} hits, {cold} cold, {steals} steals");
+    println!(
+        "locality: {hits} hits, {cold} cold, {steals} steals, {} replicated",
+        manager.replicated()
+    );
     Ok(())
 }
 
@@ -249,10 +299,9 @@ fn cmd_worker(cli: &Cli) -> htap::Result<()> {
         .get("connect")
         .ok_or_else(|| htap::Error::Config("worker needs --connect HOST:PORT".into()))?;
     let cfg = cli.run_config()?;
-    let params = AppParams::for_tile_size(cfg.tile_size);
     // measured profiles reach PATS through the SharedProfiles seed below
     let store = load_profiles(cli, cfg.tile_size)?;
-    let workflow = Arc::new(build_workflow_with(Arc::new(app::registry()), &params, false)?);
+    let workflow = resolve_workflow(cli, &cfg, false)?;
     let source = Arc::new(RemoteManager::connect(addr)?);
     let metrics = Arc::new(MetricsHub::new());
     let profiles = match store {
@@ -260,11 +309,14 @@ fn cmd_worker(cli: &Cli) -> htap::Result<()> {
         None => SharedProfiles::fresh(),
     };
     // chunk payloads come from this worker's own source, staged through a
-    // bounded cache whose prefetcher overlaps reads with compute
+    // bounded cache whose prefetcher overlaps reads with compute; with
+    // --spill-dir, evictions demote to a local-disk tier instead of
+    // dropping
     let (chunks, _) = chunk_source(cli, &cfg)?;
     let worker_id = cli.get_usize("worker-id", std::process::id() as usize)?.max(1) as u64;
+    let spill = spill_from_config(&cfg, worker_id)?;
     let staging = WorkerStaging {
-        cache: StagingCache::new(chunks, cfg.staging_cap, cfg.prefetch_depth),
+        cache: StagingCache::new_tiered(chunks, cfg.staging_cap, cfg.prefetch_depth, spill),
         worker_id,
         prefetch_budget: cfg.prefetch_depth,
     };

@@ -60,7 +60,8 @@ impl OpProfile {
     }
 }
 
-/// Counters of the data-staging layer (worker chunk cache + prefetcher).
+/// Counters of the data-staging layer (worker tiered chunk store:
+/// in-memory cache + prefetcher + optional local-disk spill tier).
 #[derive(Debug, Default, Clone, PartialEq)]
 pub struct StagingReport {
     /// chunk fetches served from (or overlapped with) the staging cache
@@ -69,8 +70,17 @@ pub struct StagingReport {
     pub misses: u64,
     /// chunks staged by the background prefetcher
     pub prefetched: u64,
-    /// chunks evicted by the capacity bound
+    /// chunks dropped from the worker entirely (no spill tier, or pushed
+    /// off the bounded spill tier)
     pub evictions: u64,
+    /// chunk fetches served by the local-disk spill tier, not the source
+    pub spill_hits: u64,
+    /// memory-tier evictions demoted to the spill tier instead of dropped
+    pub spill_evicted: u64,
+    /// chunks promoted disk -> memory (prefetch or demand)
+    pub promoted: u64,
+    /// steal-replica chunks staged eagerly off the Manager's hints
+    pub replicated: u64,
     /// read latency hidden behind compute by the prefetcher
     pub hidden: Duration,
     /// time spent blocked waiting for chunk payloads
@@ -94,13 +104,18 @@ impl StagingReport {
         self.misses += other.misses;
         self.prefetched += other.prefetched;
         self.evictions += other.evictions;
+        self.spill_hits += other.spill_hits;
+        self.spill_evicted += other.spill_evicted;
+        self.promoted += other.promoted;
+        self.replicated += other.replicated;
         self.hidden += other.hidden;
         self.stall += other.stall;
     }
 
-    /// One-line summary for run output.
+    /// One-line summary for run output (a second "tiers:" line appears
+    /// once the spill tier or replication engaged).
     pub fn summary(&self) -> String {
-        format!(
+        let mut out = format!(
             "staging: {} hits / {} misses ({:.0}% hit rate), {} prefetched, {} evicted, \
              {:.1} ms read latency hidden, {:.1} ms stalled",
             self.hits,
@@ -110,7 +125,14 @@ impl StagingReport {
             self.evictions,
             self.hidden.as_secs_f64() * 1e3,
             self.stall.as_secs_f64() * 1e3
-        )
+        );
+        if self.spill_hits + self.spill_evicted + self.promoted + self.replicated > 0 {
+            out.push_str(&format!(
+                "\ntiers: {} demoted, {} spill hits, {} promoted, {} replica-staged",
+                self.spill_evicted, self.spill_hits, self.promoted, self.replicated
+            ));
+        }
+        out
     }
 }
 
@@ -274,9 +296,9 @@ mod tests {
             hits: 3,
             misses: 1,
             prefetched: 2,
-            evictions: 0,
             hidden: Duration::from_millis(10),
             stall: Duration::from_millis(2),
+            ..Default::default()
         });
         m.record_staging(&StagingReport { hits: 1, misses: 3, ..Default::default() });
         let s = m.report().staging;
@@ -284,6 +306,26 @@ mod tests {
         assert!((s.hit_rate() - 0.5).abs() < 1e-9);
         assert_eq!(s.hidden, Duration::from_millis(10));
         assert!(s.summary().contains("50% hit rate"), "{}", s.summary());
+        // no tier activity -> no tiers line
+        assert!(!s.summary().contains("tiers:"), "{}", s.summary());
+    }
+
+    #[test]
+    fn tier_counters_accumulate_and_surface() {
+        let m = MetricsHub::new();
+        m.record_staging(&StagingReport {
+            spill_hits: 2,
+            spill_evicted: 3,
+            promoted: 2,
+            replicated: 1,
+            ..Default::default()
+        });
+        m.record_staging(&StagingReport { spill_hits: 1, ..Default::default() });
+        let s = m.report().staging;
+        assert_eq!((s.spill_hits, s.spill_evicted, s.promoted, s.replicated), (3, 3, 2, 1));
+        let sum = s.summary();
+        assert!(sum.contains("tiers: 3 demoted, 3 spill hits, 2 promoted, 1 replica-staged"),
+            "{sum}");
     }
 
     #[test]

@@ -105,20 +105,32 @@ fn serve_connection_inner(
             Err(e) => return Err(e),
         };
         match msg {
-            Message::Request { capacity, worker, prefetch_budget, staged_add, staged_drop } => {
+            Message::Request {
+                capacity,
+                worker,
+                prefetch_budget,
+                staged_add,
+                staged_drop,
+                demoted,
+            } => {
                 *worker_id = worker;
                 let req = WorkRequest {
                     capacity: capacity.max(1) as usize,
                     worker,
                     staged_add,
                     staged_drop,
+                    demoted,
                     prefetch_budget: prefetch_budget as usize,
                 };
                 let batch = mgr.request_work(&req);
                 leases.extend(batch.assignments.iter().map(|a| a.instance_id));
                 proto::write_message(
                     &mut writer,
-                    &Message::Assign { assignments: batch.assignments, prefetch: batch.prefetch },
+                    &Message::Assign {
+                        assignments: batch.assignments,
+                        prefetch: batch.prefetch,
+                        replicate: batch.replicate,
+                    },
                 )?;
             }
             Message::Complete { instance, outputs } => {
@@ -165,12 +177,15 @@ impl WorkSource for RemoteManager {
             prefetch_budget: req.prefetch_budget as u32,
             staged_add: req.staged_add.clone(),
             staged_drop: req.staged_drop.clone(),
+            demoted: req.demoted.clone(),
         };
         if proto::write_message(writer, &msg).is_err() {
             return WorkBatch::default();
         }
         match proto::read_message(reader) {
-            Ok(Message::Assign { assignments, prefetch }) => WorkBatch { assignments, prefetch },
+            Ok(Message::Assign { assignments, prefetch, replicate }) => {
+                WorkBatch { assignments, prefetch, replicate }
+            }
             _ => WorkBatch::default(),
         }
     }

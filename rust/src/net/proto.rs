@@ -8,8 +8,11 @@
 //! v2 extended the demand-driven handshake for the data-staging layer:
 //! `Request` carries the worker's identity plus its staged/evicted chunk
 //! deltas, and `Assign` carries per-assignment deferred-chunk/locality
-//! flags plus the Manager's prefetch hints.  A version mismatch is a
-//! decode error, not a silent misparse.
+//! flags plus the Manager's prefetch hints.  v3 added the storage-tier
+//! fields: `Request` reports the chunks demoted to the worker's local-disk
+//! spill tier, and `Assign` carries a per-assignment replica flag plus the
+//! Manager's replicate hints (chunks a steal left multi-homed).  A version
+//! mismatch is a decode error, not a silent misparse.
 
 use crate::coordinator::manager::Assignment;
 use crate::runtime::{HostTensor, Value};
@@ -21,8 +24,9 @@ const MAX_FRAME: u32 = 1 << 30;
 
 /// Wire-format version; every payload starts with it.  Bumped to 2 when
 /// the staging fields (worker identity, staged-chunk hints, deferred-chunk
-/// and locality flags, prefetch hints) were added.
-pub const PROTO_VERSION: u8 = 2;
+/// and locality flags, prefetch hints) were added, and to 3 for the
+/// storage-tier fields (demoted deltas, replica flags, replicate hints).
+pub const PROTO_VERSION: u8 = 3;
 
 /// Protocol messages.
 #[derive(Debug, Clone, PartialEq)]
@@ -30,18 +34,21 @@ pub enum Message {
     /// Worker -> Manager: give me up to `capacity` stage instances.
     /// `worker` is the requester's stable identity (0 = anonymous);
     /// `staged_add`/`staged_drop` are the chunks it staged/evicted since
-    /// its last request; `prefetch_budget` asks for that many upcoming
-    /// chunk ids as prefetch hints.
+    /// its last request and `demoted` those it moved to its local-disk
+    /// spill tier (still staged, a tier down); `prefetch_budget` asks for
+    /// that many upcoming chunk ids as prefetch hints.
     Request {
         capacity: u32,
         worker: u64,
         prefetch_budget: u32,
         staged_add: Vec<u64>,
         staged_drop: Vec<u64>,
+        demoted: Vec<u64>,
     },
     /// Manager -> Worker: assignments (empty = workflow complete) plus
-    /// chunk ids the worker should prefetch into its staging cache.
-    Assign { assignments: Vec<Assignment>, prefetch: Vec<u64> },
+    /// chunk ids the worker should prefetch into its staging cache and
+    /// replicate hints (stolen chunks now multi-homed, worth keeping warm).
+    Assign { assignments: Vec<Assignment>, prefetch: Vec<u64>, replicate: Vec<u64> },
     /// Worker -> Manager: stage instance finished.
     Complete { instance: u64, outputs: Vec<Value> },
     /// Worker -> Manager: fatal worker error.
@@ -53,9 +60,10 @@ const TAG_ASSIGN: u8 = 2;
 const TAG_COMPLETE: u8 = 3;
 const TAG_FAIL: u8 = 4;
 
-/// Assignment flag bits (v2).
+/// Assignment flag bits (v2; FLAG_REPLICA since v3).
 const FLAG_NEEDS_CHUNK: u8 = 1;
 const FLAG_LOCALITY: u8 = 2;
+const FLAG_REPLICA: u8 = 4;
 
 fn put_u32(buf: &mut Vec<u8>, v: u32) {
     buf.extend_from_slice(&v.to_le_bytes());
@@ -174,15 +182,23 @@ pub fn encode(msg: &Message) -> Vec<u8> {
     let mut buf = Vec::new();
     buf.push(PROTO_VERSION);
     match msg {
-        Message::Request { capacity, worker, prefetch_budget, staged_add, staged_drop } => {
+        Message::Request {
+            capacity,
+            worker,
+            prefetch_budget,
+            staged_add,
+            staged_drop,
+            demoted,
+        } => {
             buf.push(TAG_REQUEST);
             put_u32(&mut buf, *capacity);
             put_u64(&mut buf, *worker);
             put_u32(&mut buf, *prefetch_budget);
             put_ids(&mut buf, staged_add);
             put_ids(&mut buf, staged_drop);
+            put_ids(&mut buf, demoted);
         }
-        Message::Assign { assignments, prefetch } => {
+        Message::Assign { assignments, prefetch, replicate } => {
             buf.push(TAG_ASSIGN);
             put_u32(&mut buf, assignments.len() as u32);
             for a in assignments {
@@ -196,10 +212,14 @@ pub fn encode(msg: &Message) -> Vec<u8> {
                 if a.locality {
                     flags |= FLAG_LOCALITY;
                 }
+                if a.replica {
+                    flags |= FLAG_REPLICA;
+                }
                 buf.push(flags);
                 put_values(&mut buf, &a.inputs);
             }
             put_ids(&mut buf, prefetch);
+            put_ids(&mut buf, replicate);
         }
         Message::Complete { instance, outputs } => {
             buf.push(TAG_COMPLETE);
@@ -231,7 +251,15 @@ pub fn decode(data: &[u8]) -> Result<Message> {
             let prefetch_budget = c.u32()?;
             let staged_add = c.ids()?;
             let staged_drop = c.ids()?;
-            Message::Request { capacity, worker, prefetch_budget, staged_add, staged_drop }
+            let demoted = c.ids()?;
+            Message::Request {
+                capacity,
+                worker,
+                prefetch_budget,
+                staged_add,
+                staged_drop,
+                demoted,
+            }
         }
         TAG_ASSIGN => {
             let n = c.u32()? as usize;
@@ -249,10 +277,12 @@ pub fn decode(data: &[u8]) -> Result<Message> {
                     inputs,
                     needs_chunk: flags & FLAG_NEEDS_CHUNK != 0,
                     locality: flags & FLAG_LOCALITY != 0,
+                    replica: flags & FLAG_REPLICA != 0,
                 });
             }
             let prefetch = c.ids()?;
-            Message::Assign { assignments, prefetch }
+            let replicate = c.ids()?;
+            Message::Assign { assignments, prefetch, replicate }
         }
         TAG_COMPLETE => {
             let instance = c.u64()?;
@@ -317,6 +347,7 @@ mod tests {
             prefetch_budget: 0,
             staged_add: vec![],
             staged_drop: vec![],
+            demoted: vec![],
         }
     }
 
@@ -333,6 +364,7 @@ mod tests {
             prefetch_budget: 4,
             staged_add: vec![1, 5, 9],
             staged_drop: vec![2],
+            demoted: vec![7, 8],
         });
     }
 
@@ -349,8 +381,10 @@ mod tests {
                 ],
                 needs_chunk: false,
                 locality: false,
+                replica: false,
             }],
             prefetch: vec![],
+            replicate: vec![],
         });
     }
 
@@ -366,6 +400,7 @@ mod tests {
                     inputs: vec![],
                     needs_chunk: true,
                     locality: true,
+                    replica: false,
                 },
                 Assignment {
                     instance_id: 8,
@@ -374,9 +409,11 @@ mod tests {
                     inputs: vec![Value::Scalar(1.0)],
                     needs_chunk: true,
                     locality: false,
+                    replica: true,
                 },
             ],
             prefetch: vec![5, 6, 7],
+            replicate: vec![4],
         });
     }
 
@@ -391,14 +428,14 @@ mod tests {
 
     #[test]
     fn empty_assign_means_done() {
-        roundtrip(Message::Assign { assignments: vec![], prefetch: vec![] });
+        roundtrip(Message::Assign { assignments: vec![], prefetch: vec![], replicate: vec![] });
     }
 
     #[test]
     fn version_mismatch_is_a_decode_error() {
         let mut enc = encode(&request(1));
         assert_eq!(enc[0], PROTO_VERSION);
-        enc[0] = PROTO_VERSION - 1; // a v1 peer
+        enc[0] = PROTO_VERSION - 1; // a v2 peer without the tier fields
         let err = decode(&enc).unwrap_err();
         assert!(err.to_string().contains("protocol version"), "{err}");
         // and through the framed reader

@@ -39,6 +39,11 @@ pub const PROFILE_FORMAT_VERSION: u64 = 1;
 /// Default EWMA smoothing factor for online updates.
 pub const DEFAULT_ALPHA: f64 = 0.2;
 
+/// Pseudo-op name the offline pass records per-chunk read cost under
+/// (source read plus the configured `--read-latency-ms` shared-FS
+/// stand-in).  `htap sim --profiles` calibrates its tile-I/O base from it.
+pub const CHUNK_READ_OP: &str = "chunk_read";
+
 /// Exponentially-weighted running estimate of one (op, device) execution
 /// time, in milliseconds.
 #[derive(Debug, Clone, Copy, PartialEq, Default)]
@@ -358,6 +363,9 @@ pub struct CalibrationConfig {
     pub reps: usize,
     /// Unmeasured warmup repetitions per chunk.
     pub warmup: usize,
+    /// Simulated shared-FS latency folded into the chunk-read measurement
+    /// (`--read-latency-ms`); recorded under [`CHUNK_READ_OP`].
+    pub read_latency_ms: u64,
     pub seed: u64,
     pub alpha: f64,
 }
@@ -369,6 +377,7 @@ impl Default for CalibrationConfig {
             n_chunks: 4,
             reps: 3,
             warmup: 1,
+            read_latency_ms: 0,
             seed: 42,
             alpha: DEFAULT_ALPHA,
         }
@@ -509,6 +518,30 @@ pub fn calibrate_workflows(cfg: &CalibrationConfig) -> Result<ProfileStore> {
 
     let generic = crate::app::generic::cell_stats_workflow()?;
     calibrate_workflow(&generic, &chunks, cfg, &mut store, None)?;
+
+    // per-chunk read cost under the simulated shared-FS latency
+    // (--read-latency-ms), through the same source type staged runs use —
+    // recorded as CHUNK_READ_OP so calibrated sims reflect transfer costs.
+    // Only measured when a latency was actually configured: a 0-latency
+    // synthetic read is memory-speed, and letting it into the store would
+    // silently collapse the simulator's Lustre cost model.
+    if cfg.read_latency_ms > 0 {
+        use crate::data::staging::{ChunkSource, SynthSource};
+        let src = SynthSource::new(
+            SynthConfig::for_tile_size(cfg.tile_size, cfg.seed),
+            cfg.n_chunks.max(1),
+        )
+        .with_read_latency(Duration::from_millis(cfg.read_latency_ms));
+        for c in 0..src.n_chunks() as u64 {
+            for rep in 0..cfg.warmup + cfg.reps {
+                let t0 = Instant::now();
+                let _ = src.load(c)?;
+                if rep >= cfg.warmup {
+                    store.record(CHUNK_READ_OP, DeviceKind::Cpu, t0.elapsed());
+                }
+            }
+        }
+    }
     Ok(store)
 }
 

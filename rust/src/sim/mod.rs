@@ -25,6 +25,13 @@
 //!   `chunk_locality` off, a tile's repeat stage lands on an arbitrary
 //!   node and pays a cold 2x re-read before it can start — the offline
 //!   Fig. 8-style locality-on/off comparison (`htap sim --no-locality`).
+//! * Steal replication (the tiered-storage subsystem): even with locality
+//!   on, load imbalance steals a fraction of repeat stages
+//!   (`steal_rate`).  With `replication` on the Manager's replicate hint
+//!   lets the thief prefetch the stolen chunk through its scheduled read
+//!   stream (1x contended read); with `--no-replication` the thief pays
+//!   the cold unscheduled 2x re-read — `SimResult::cold_rereads` counts
+//!   those, the steal-driven re-reads replication is there to remove.
 
 pub mod experiments;
 
@@ -272,6 +279,13 @@ pub struct SimParams {
     /// cold shared-FS re-read before its stage can start (the Fig. 8-style
     /// locality-off control).
     pub chunk_locality: bool,
+    /// Replicate-on-steal: a stolen tile was hinted to the thief ahead of
+    /// time, so its migrated stage pays one scheduled read instead of a
+    /// cold unscheduled 2x re-read (`htap sim --no-replication` control).
+    pub replication: bool,
+    /// Fraction of repeat stages stolen by another node under load
+    /// imbalance, when locality is on and the cluster has > 1 node.
+    pub steal_rate: f64,
     pub placement: Placement,
     pub n_nodes: usize,
     pub cpus_per_node: usize,
@@ -299,6 +313,8 @@ impl Default for SimParams {
             data_locality: true,
             prefetch: true,
             chunk_locality: true,
+            replication: true,
+            steal_rate: 0.1,
             placement: Placement::Closest,
             n_nodes: 1,
             cpus_per_node: 9,
@@ -333,6 +349,11 @@ pub struct SimResult {
     pub transfer_time: f64,
     /// total tile-fetch (I/O) seconds
     pub io_time: f64,
+    /// repeat stages that migrated off the node that staged their tile
+    pub steal_migrations: u64,
+    /// migrations that paid a cold unscheduled re-read (locality off, or a
+    /// steal without replication)
+    pub cold_rereads: u64,
     pub tiles: usize,
 }
 
@@ -441,6 +462,8 @@ pub fn simulate(params: &SimParams) -> SimResult {
     let mut busy_time = 0.0;
     let mut transfer_time = 0.0;
     let mut io_total = 0.0;
+    let mut steal_migrations = 0u64;
+    let mut cold_rereads = 0u64;
     let mut tiles_done = 0usize;
 
     let to_ns = |t: f64| (t * 1e9) as u64;
@@ -675,10 +698,22 @@ pub fn simulate(params: &SimParams) -> SimResult {
                     node_state.insts.remove(&inst_id);
                     if stage + 1 < wf.stages.len() {
                         // with chunk locality the tile's next stage stays on
-                        // the node that staged it (the catalog policy);
-                        // without it the bag of tasks scatters repeat stages
-                        // and a migrated tile pays a cold re-read first
-                        let target = if params.chunk_locality || n_nodes == 1 {
+                        // the node that staged it (the catalog policy) —
+                        // except for the steal fraction the bag hands to an
+                        // idle node under load imbalance; without locality
+                        // the bag scatters every repeat stage
+                        let stolen = params.chunk_locality
+                            && n_nodes > 1
+                            && params.steal_rate > 0.0
+                            && {
+                                let mut r = Rng::new(
+                                    params.seed
+                                        ^ chunk.wrapping_mul(0xC2B2_AE35)
+                                        ^ ((stage as u64 + 7) << 24),
+                                );
+                                (r.f32() as f64) < params.steal_rate
+                            };
+                        let target = if n_nodes == 1 || (params.chunk_locality && !stolen) {
                             node
                         } else {
                             let mut r = Rng::new(
@@ -709,10 +744,21 @@ pub fn simulate(params: &SimParams) -> SimResult {
                                     Event::Fetched { node, chunk: c }
                                 );
                             }
-                            // cold unscheduled re-read on the target node
-                            // (outside its streaming window: twice the
-                            // contended per-tile read)
-                            let migrate_io = 2.0 * io_time_per_tile;
+                            if stolen {
+                                steal_migrations += 1;
+                            }
+                            // replicated steal: the hint let the thief pull
+                            // the tile through its scheduled read stream;
+                            // otherwise the migrated stage pays a cold
+                            // unscheduled re-read (outside the streaming
+                            // window: twice the contended per-tile read)
+                            let migrate_io =
+                                if stolen && params.chunk_locality && params.replication {
+                                    io_time_per_tile
+                                } else {
+                                    cold_rereads += 1;
+                                    2.0 * io_time_per_tile
+                                };
                             io_total += migrate_io;
                             push_event!(
                                 now + migrate_io,
@@ -764,6 +810,8 @@ pub fn simulate(params: &SimParams) -> SimResult {
         busy_time,
         transfer_time,
         io_time: io_total,
+        steal_migrations,
+        cold_rereads,
         tiles: tiles_done,
     }
 }
@@ -954,6 +1002,34 @@ mod tests {
             "locality on ({:.2}s) must beat locality off ({:.2}s)",
             on.makespan,
             off.makespan
+        );
+    }
+
+    #[test]
+    fn replication_cuts_steal_cold_rereads() {
+        // the tiered-storage control: steals happen either way (same seed,
+        // same rolls), but only the no-replication run pays cold re-reads
+        let mut p = base(120);
+        p.n_nodes = 4;
+        let on = simulate(&p);
+        p.replication = false;
+        let off = simulate(&p);
+        assert_eq!(on.tiles, 120);
+        assert_eq!(off.tiles, 120);
+        assert!(on.steal_migrations > 0, "steal pressure must exist for the test to mean anything");
+        assert_eq!(on.steal_migrations, off.steal_migrations, "same rolls, same steals");
+        assert_eq!(on.cold_rereads, 0, "replicated steals are prefetched, never cold");
+        assert!(
+            off.cold_rereads >= on.steal_migrations,
+            "every unreplicated steal re-reads cold: {} < {}",
+            off.cold_rereads,
+            off.steal_migrations
+        );
+        assert!(
+            off.io_time > on.io_time,
+            "cold re-reads must add I/O: on {:.2}s off {:.2}s",
+            on.io_time,
+            off.io_time
         );
     }
 

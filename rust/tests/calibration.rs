@@ -216,3 +216,22 @@ fn ewma_updates_flip_pats_relative_order() {
     assert_eq!(q.pop(DeviceKind::Gpu, 0, false).unwrap().name, "a");
     assert_eq!(q.pop(DeviceKind::Cpu, 0, false).unwrap().name, "b");
 }
+
+/// `htap calibrate --read-latency-ms` measures the per-chunk read cost
+/// (source read + simulated shared-FS latency) under the CHUNK_READ_OP
+/// pseudo-op — the value `htap sim --profiles` feeds into its tile-I/O
+/// base so calibrated transfer estimates reflect the same latency.
+#[test]
+fn calibrate_measures_chunk_read_latency() {
+    use htap::runtime::calibrate::CHUNK_READ_OP;
+    let mut cfg = CalibrationConfig::quick();
+    cfg.read_latency_ms = 5;
+    let store = calibrate_workflows(&cfg).unwrap();
+    let ms = store.cpu_ms(CHUNK_READ_OP).expect("chunk_read must be calibrated");
+    assert!(ms >= 5.0, "chunk_read ({ms:.2} ms) must include the 5 ms simulated latency");
+    // a latency-free calibration must NOT record chunk_read: its
+    // memory-speed reads would silently collapse the simulator's
+    // shared-FS cost model when fed through `htap sim --profiles`
+    let store = calibrate_workflows(&CalibrationConfig::quick()).unwrap();
+    assert!(store.cpu_ms(CHUNK_READ_OP).is_none(), "0-latency runs must skip chunk_read");
+}

@@ -6,8 +6,9 @@ use htap::app::{build_workflow, stage_bindings, AppParams};
 use htap::config::RunConfig;
 use htap::coordinator::{
     worker::{run_worker, run_worker_staged},
-    Manager, WorkSource, WorkerStaging,
+    AssignPolicy, Manager, WorkSource, WorkerStaging,
 };
+use htap::data::staging::SpillTier;
 use htap::data::{StagingCache, SynthConfig, SynthSource, TileStore};
 use htap::metrics::MetricsHub;
 use htap::net::{ManagerServer, RemoteManager};
@@ -112,21 +113,26 @@ fn tensor_payloads_survive_the_wire() {
 fn staged_tcp_workers_never_ship_tiles_and_hit_locality() {
     // staged protocol: the manager hands out bare chunk ids; each worker
     // stages tiles from its own (identical) synthetic source through a
-    // prefetching cache, and the catalog routes repeat stages back to the
-    // worker that staged the tile.
+    // prefetching cache — worker 2 through a deliberately tiny memory
+    // tier backed by a local-disk spill tier — and the catalog routes
+    // repeat stages back to the worker that staged the tile.
     let n_tiles = 8;
     let seed = 31;
     let params = AppParams::for_tile_size(TILE);
     let workflow = Arc::new(build_workflow(&params, false));
-    let manager = Manager::new_staged(workflow.clone(), n_tiles, true).unwrap();
+    let manager = Manager::new_staged(workflow.clone(), n_tiles, AssignPolicy::default()).unwrap();
     let server = ManagerServer::bind("127.0.0.1:0", manager.clone()).unwrap();
     let addr = server.local_addr();
     let srv = std::thread::spawn(move || server.serve(2));
 
+    let spill_root = std::env::temp_dir()
+        .join(format!("htap-tcp-spill-{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&spill_root);
     let mut workers = Vec::new();
     for i in 0..2u64 {
         let addr = addr.clone();
         let workflow = workflow.clone();
+        let spill_root = spill_root.clone();
         workers.push(std::thread::spawn(move || {
             let source = Arc::new(RemoteManager::connect(&addr).unwrap());
             // every worker reconstructs the same dataset locally (the
@@ -135,8 +141,14 @@ fn staged_tcp_workers_never_ship_tiles_and_hit_locality() {
                 SynthSource::new(SynthConfig::for_tile_size(TILE, seed), n_tiles)
                     .with_read_latency(Duration::from_millis(3)),
             );
+            let (cap, spill) = if i == 1 {
+                let tier = SpillTier::create(spill_root.join("worker-2"), 32).unwrap();
+                (1, Some(tier))
+            } else {
+                (16, None)
+            };
             let staging = WorkerStaging {
-                cache: StagingCache::new(chunks, 16, 2),
+                cache: StagingCache::new_tiered(chunks, cap, 2, spill),
                 worker_id: i + 1,
                 prefetch_budget: 2,
             };
@@ -181,6 +193,11 @@ fn staged_tcp_workers_never_ship_tiles_and_hit_locality() {
     let (hits, cold, steals) = manager.locality_stats();
     assert!(hits > 0, "no locality hits across {n_tiles} tiles");
     assert_eq!(hits + cold + steals, (2 * n_tiles) as u64);
+    // worker 2's one-chunk memory tier must have demoted to its spill dir
+    // (it processes > 1 chunk); demotions travel the v3 wire fields
+    let spilled: u64 = reports.iter().map(|r| r.staging.spill_evicted).sum();
+    assert!(spilled > 0, "the spill-enabled worker never demoted");
+    let _ = std::fs::remove_dir_all(&spill_root);
 }
 
 #[test]

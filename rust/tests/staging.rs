@@ -179,6 +179,47 @@ fn tight_staging_cap_evicts_and_reloads() {
 }
 
 #[test]
+fn tight_cap_with_spill_dir_demotes_and_promotes() {
+    // the tentpole acceptance path: a deliberately small --staging-cap
+    // with --spill-dir set must report spill_evicted > 0 (evictions
+    // demote, not drop) and spill_hits > 0 (misses served from local
+    // disk, not the source tier), without losing work or results
+    let n = 6;
+    let wf = slow_workflow(0);
+    let source = Arc::new(ScalarSource { n, latency: Duration::ZERO });
+    let spill_dir = std::env::temp_dir()
+        .join(format!("htap-staging-spill-it-{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&spill_dir);
+    let cfg = RunConfig {
+        n_tiles: n,
+        cpu_workers: 1,
+        gpu_workers: 0,
+        window: 4,
+        staging_cap: 1, // pathological: at most one chunk in memory
+        prefetch_depth: 0,
+        spill_dir: Some(spill_dir.to_string_lossy().into_owned()),
+        spill_cap: 16,
+        ..Default::default()
+    };
+    let outcome =
+        run_local_staged(wf, source, n, cfg, HashMap::new(), SharedProfiles::fresh()).unwrap();
+    let (done, total) = outcome.manager.progress();
+    assert_eq!(done, total, "spill pressure must not lose work");
+    assert_eq!(outcome.manager.reduce_outputs("total").unwrap()[0].as_scalar().unwrap(), 36.0);
+    let s = &outcome.metrics.staging;
+    assert!(s.spill_evicted > 0, "cap 1 must demote to the spill tier: {s:?}");
+    assert!(s.spill_hits > 0, "repeat-stage misses must be served from disk: {s:?}");
+    assert!(s.promoted > 0, "{s:?}");
+    assert_eq!(s.evictions, 0, "nothing may fall off the bounded spill tier: {s:?}");
+    // demoted chunks stayed catalogued: stage-1 assignments still route
+    // to this worker as locality hits, never as cold re-assignments
+    let (hits, _cold, steals) = outcome.manager.locality_stats();
+    assert!(hits >= n as u64, "demoted chunks must keep their locality: {hits}");
+    assert_eq!(steals, 0);
+    let _ = std::fs::remove_dir_all(&spill_dir);
+}
+
+#[test]
 fn wsi_pipeline_runs_staged_from_a_tile_directory() {
     // export a synthetic dataset as .tile files, then run the real WSI
     // pipeline over the directory source with staging + prefetch

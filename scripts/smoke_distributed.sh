@@ -40,10 +40,16 @@ sleep 1
 
 worker_pids=()
 for w in 1 2; do
+    # worker 1 runs the tiered store: a one-chunk memory tier backed by a
+    # local-disk spill dir, so evictions demote instead of dropping
+    spill_args=()
+    if [[ "$w" == "1" ]]; then
+        spill_args=(--staging-cap 1 --spill-dir "$log/spill" --spill-cap 16)
+    fi
     "$bin" worker --connect "127.0.0.1:$port" --worker-id "$w" \
         --tiles "$tiles" --tile-size "$tile_size" --cpus 1 --gpus 0 \
         --window 2 --chunk-source synth --prefetch-depth 2 \
-        --read-latency-ms 5 >"$log/worker$w.txt" 2>&1 &
+        --read-latency-ms 5 "${spill_args[@]}" >"$log/worker$w.txt" 2>&1 &
     worker_pids+=($!)
 done
 
@@ -72,6 +78,12 @@ grep -q "^locality:" "$log/manager.txt" || {
 # staging must actually engage on the workers
 grep -q "staging:" "$log/worker1.txt" || {
     echo "worker 1 reported no staging counters" >&2
+    exit 1
+}
+# the spill-enabled worker's one-chunk memory tier must have demoted to
+# its local-disk tier (it stages more than one chunk per run)
+grep -Eq "tiers: [1-9][0-9]* demoted" "$log/worker1.txt" || {
+    echo "worker 1 never demoted to its spill tier" >&2
     exit 1
 }
 echo "distributed smoke OK ($label)"
