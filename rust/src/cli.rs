@@ -111,8 +111,8 @@ impl Cli {
             cfg.chunk_locality = v != "true";
         }
         if let Some(v) = self.get("staging-cap") {
-            cfg.staging_cap =
-                v.parse().map_err(|_| Error::Config("bad --staging-cap".into()))?;
+            // N = chunks (back-compat), NMB/NKB/NGB = byte budget
+            cfg.staging_cap = crate::config::CacheCap::parse(v)?;
         }
         if let Some(v) = self.get("prefetch-depth") {
             cfg.prefetch_depth =
@@ -122,7 +122,7 @@ impl Cli {
             cfg.spill_dir = Some(v.to_string());
         }
         if let Some(v) = self.get("spill-cap") {
-            cfg.spill_cap = v.parse().map_err(|_| Error::Config("bad --spill-cap".into()))?;
+            cfg.spill_cap = crate::config::CacheCap::parse(v)?;
         }
         if let Some(v) = self.get("no-replication") {
             cfg.replication = v != "true";
@@ -147,8 +147,8 @@ USAGE:
                  [--policy fcfs|pats] [--window N] [--config file.json]
                  [--workflow wf.json] [--profiles profiles.json]
                  [--save-profiles out.json] [--chunk-source synth|dir:PATH]
-                 [--staging-cap N] [--prefetch-depth N] [--no-locality]
-                 [--spill-dir PATH] [--spill-cap N] [--read-latency-ms MS]
+                 [--staging-cap N|NMB] [--prefetch-depth N] [--no-locality]
+                 [--spill-dir PATH] [--spill-cap N|NMB] [--read-latency-ms MS]
         run a workflow locally (default: the built-in WSI app; --workflow
         loads a declarative JSON workflow over the registered op set — see
         docs/workflow_api.md).  Chunks come from --chunk-source (synthetic
@@ -157,8 +157,9 @@ USAGE:
         (--staging-cap/--prefetch-depth; --no-locality disables
         catalog-driven assignment; --read-latency-ms simulates shared-FS
         reads).  --spill-dir adds a bounded local-disk tier: evictions
-        demote instead of dropping and misses promote from disk
-        (--spill-cap chunks).  --profiles seeds PATS with measured
+        demote instead of dropping and misses promote from disk.  Both
+        caps take a chunk count (N) or a byte budget (NMB, from tensor
+        dims).  --profiles seeds PATS with measured
         estimates from `htap calibrate`; --save-profiles writes the
         post-run EWMA estimates out
 
@@ -192,8 +193,8 @@ USAGE:
 
     htap worker  --connect HOST:PORT [--cpus N] [--gpus N] [--window N]
                  [--chunk-source synth|dir:PATH] [--workflow wf.json]
-                 [--worker-id N] [--staging-cap N] [--prefetch-depth N]
-                 [--spill-dir PATH] [--spill-cap N] [--read-latency-ms MS]
+                 [--worker-id N] [--staging-cap N|NMB] [--prefetch-depth N]
+                 [--spill-dir PATH] [--spill-cap N|NMB] [--read-latency-ms MS]
         join a distributed run; --chunk-source must serve the same dataset
         the manager was pointed at (same synth seed/tile count, or the
         same shared directory), and --workflow must load the same file the
@@ -265,13 +266,26 @@ mod tests {
         ]))
         .unwrap();
         let cfg = c.run_config().unwrap();
-        assert_eq!(cfg.staging_cap, 8);
+        assert_eq!(cfg.staging_cap, crate::config::CacheCap::Chunks(8));
         assert_eq!(cfg.prefetch_depth, 2);
         assert_eq!(cfg.read_latency_ms, 7);
         assert!(!cfg.chunk_locality);
         // defaults keep locality on
         let cfg = Cli::parse(&args(&["run"])).unwrap().run_config().unwrap();
         assert!(cfg.chunk_locality);
+    }
+
+    #[test]
+    fn byte_budget_caps_parse_from_flags() {
+        let c = Cli::parse(&args(&["run", "--staging-cap", "64MB", "--spill-cap", "2GB"]))
+            .unwrap();
+        let cfg = c.run_config().unwrap();
+        assert_eq!(cfg.staging_cap, crate::config::CacheCap::Bytes(64 << 20));
+        assert_eq!(cfg.spill_cap, crate::config::CacheCap::Bytes(2u64 << 30));
+        assert!(Cli::parse(&args(&["run", "--staging-cap", "64Mi"]))
+            .unwrap()
+            .run_config()
+            .is_err());
     }
 
     #[test]
@@ -289,7 +303,7 @@ mod tests {
         .unwrap();
         let cfg = c.run_config().unwrap();
         assert_eq!(cfg.spill_dir.as_deref(), Some("/tmp/htap-spill"));
-        assert_eq!(cfg.spill_cap, 16);
+        assert_eq!(cfg.spill_cap, crate::config::CacheCap::Chunks(16));
         assert!(!cfg.replication);
         assert_eq!(cfg.partition, crate::config::PartitionMode::Init);
         // defaults: no spill tier, replication on, demand partition

@@ -91,6 +91,82 @@ impl PartitionMode {
     }
 }
 
+/// A cache-capacity budget for the worker's tiered chunk store: a chunk
+/// count (the original knob, back-compat) or a byte budget derived from
+/// tensor dims.  Parsed from `N` (chunks) or `NKB`/`NMB`/`NGB` (bytes),
+/// e.g. `--staging-cap 64MB`.  Byte budgets make the caps meaningful when
+/// chunk sizes vary: 32 chunks of 4K×4K tiles is ~2 GB, of 64×64 tiles
+/// ~0.5 MB — same knob value, wildly different memory footprints.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum CacheCap {
+    /// At most this many chunks resident.
+    Chunks(usize),
+    /// At most this many payload bytes resident (always keeps >= 1 chunk
+    /// so a single over-budget chunk still caches).
+    Bytes(u64),
+}
+
+impl CacheCap {
+    pub fn parse(s: &str) -> Result<CacheCap> {
+        let s = s.trim();
+        let lower = s.to_ascii_lowercase();
+        let (digits, mult) = if let Some(d) = lower.strip_suffix("kb") {
+            (d, 1u64 << 10)
+        } else if let Some(d) = lower.strip_suffix("mb") {
+            (d, 1u64 << 20)
+        } else if let Some(d) = lower.strip_suffix("gb") {
+            (d, 1u64 << 30)
+        } else {
+            let n: usize = lower
+                .parse()
+                .map_err(|_| Error::Config(format!("bad cache cap '{s}' (want N or NMB)")))?;
+            return Ok(CacheCap::Chunks(n));
+        };
+        let n: u64 = digits
+            .trim()
+            .parse()
+            .map_err(|_| Error::Config(format!("bad cache cap '{s}' (want N or NMB)")))?;
+        n.checked_mul(mult)
+            .map(CacheCap::Bytes)
+            .ok_or_else(|| Error::Config(format!("cache cap '{s}' overflows")))
+    }
+
+    /// An empty budget caches nothing — rejected at validation.
+    pub fn is_zero(&self) -> bool {
+        matches!(self, CacheCap::Chunks(0) | CacheCap::Bytes(0))
+    }
+}
+
+impl From<usize> for CacheCap {
+    fn from(n: usize) -> Self {
+        CacheCap::Chunks(n)
+    }
+}
+
+/// Bare integer literals at `impl Into<CacheCap>` call sites infer as
+/// `i32`; accept them so `StagingCache::new(src, 4, 0)` keeps reading
+/// naturally (negative counts clamp to the 1-chunk floor downstream).
+impl From<i32> for CacheCap {
+    fn from(n: i32) -> Self {
+        CacheCap::Chunks(n.max(0) as usize)
+    }
+}
+
+impl std::fmt::Display for CacheCap {
+    /// Round-trippable with [`CacheCap::parse`]: byte budgets echo in the
+    /// largest suffix that divides them exactly (`2GB`, `512KB`), so the
+    /// startup banner prints what the user typed.
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            CacheCap::Chunks(n) => write!(f, "{n} chunks"),
+            CacheCap::Bytes(b) if b % (1 << 30) == 0 => write!(f, "{}GB", b >> 30),
+            CacheCap::Bytes(b) if b % (1 << 20) == 0 => write!(f, "{}MB", b >> 20),
+            CacheCap::Bytes(b) if b % (1 << 10) == 0 => write!(f, "{}KB", b >> 10),
+            CacheCap::Bytes(b) => write!(f, "{}KB (+{} bytes)", b >> 10, b % (1 << 10)),
+        }
+    }
+}
+
 /// Pipeline granularity exposed to the runtime (paper Fig. 9 comparison).
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub enum Granularity {
@@ -123,8 +199,9 @@ pub struct RunConfig {
     pub data_locality: bool,
     /// Prefetch + async copy (paper §IV-D).
     pub prefetch: bool,
-    /// Staging-cache capacity in chunks on each worker (staged runs).
-    pub staging_cap: usize,
+    /// Staging-cache capacity on each worker (staged runs): chunks, or a
+    /// byte budget (`NMB`).
+    pub staging_cap: CacheCap,
     /// Background chunk-prefetch depth (0 disables the prefetcher thread).
     pub prefetch_depth: usize,
     /// Manager-side locality-aware (chunk-catalog) assignment.
@@ -132,8 +209,8 @@ pub struct RunConfig {
     /// Local-disk spill directory: evictions demote instead of dropping
     /// (None = memory tier only, today's behaviour).
     pub spill_dir: Option<String>,
-    /// Spill-tier capacity in chunks on each worker's local disk.
-    pub spill_cap: usize,
+    /// Spill-tier capacity on each worker's local disk: chunks or bytes.
+    pub spill_cap: CacheCap,
     /// Replicate-on-steal: a stolen chunk stays multi-homed in the catalog
     /// and the thief stages it eagerly (off = single-owner transfer).
     pub replication: bool,
@@ -158,11 +235,11 @@ impl Default for RunConfig {
             window: 15,
             data_locality: true,
             prefetch: true,
-            staging_cap: 32,
+            staging_cap: CacheCap::Chunks(32),
             prefetch_depth: 4,
             chunk_locality: true,
             spill_dir: None,
-            spill_cap: 256,
+            spill_cap: CacheCap::Chunks(256),
             replication: true,
             partition: PartitionMode::Demand,
             read_latency_ms: 0,
@@ -203,14 +280,16 @@ impl RunConfig {
                 "prefetch" => {
                     self.prefetch = v.as_bool().ok_or_else(|| Error::Config("bad bool".into()))?
                 }
-                "staging_cap" => self.staging_cap = req_usize(v, k)?,
+                // a number = chunk count (back-compat); a string = parsed
+                // budget spec, e.g. "64MB"
+                "staging_cap" => self.staging_cap = req_cap(v, k)?,
                 "prefetch_depth" => self.prefetch_depth = req_usize(v, k)?,
                 "chunk_locality" => {
                     self.chunk_locality =
                         v.as_bool().ok_or_else(|| Error::Config("bad bool".into()))?
                 }
                 "spill_dir" => self.spill_dir = Some(req_str(v, k)?.to_string()),
-                "spill_cap" => self.spill_cap = req_usize(v, k)?,
+                "spill_cap" => self.spill_cap = req_cap(v, k)?,
                 "replication" => {
                     self.replication =
                         v.as_bool().ok_or_else(|| Error::Config("bad bool".into()))?
@@ -238,11 +317,11 @@ impl RunConfig {
         if self.window == 0 {
             return Err(Error::Config("window must be >= 1".into()));
         }
-        if self.staging_cap == 0 {
-            return Err(Error::Config("staging_cap must be >= 1".into()));
+        if self.staging_cap.is_zero() {
+            return Err(Error::Config("staging_cap must be >= 1 (chunks or bytes)".into()));
         }
-        if self.spill_cap == 0 {
-            return Err(Error::Config("spill_cap must be >= 1".into()));
+        if self.spill_cap.is_zero() {
+            return Err(Error::Config("spill_cap must be >= 1 (chunks or bytes)".into()));
         }
         Ok(())
     }
@@ -251,6 +330,16 @@ impl RunConfig {
 fn req_usize(v: &Json, k: &str) -> Result<usize> {
     v.as_usize()
         .ok_or_else(|| Error::Config(format!("'{k}' must be a number")))
+}
+
+fn req_cap(v: &Json, k: &str) -> Result<CacheCap> {
+    if let Some(n) = v.as_usize() {
+        return Ok(CacheCap::Chunks(n));
+    }
+    match v.as_str() {
+        Some(s) => CacheCap::parse(s),
+        None => Err(Error::Config(format!("'{k}' must be a number (chunks) or \"NMB\""))),
+    }
 }
 
 fn req_str<'a>(v: &'a Json, k: &str) -> Result<&'a str> {
@@ -286,12 +375,12 @@ mod tests {
         assert_eq!(c.granularity, Granularity::NonPipelined);
         assert_eq!(c.window, 12);
         assert!(!c.data_locality);
-        assert_eq!(c.staging_cap, 8);
+        assert_eq!(c.staging_cap, CacheCap::Chunks(8));
         assert_eq!(c.prefetch_depth, 2);
         assert!(!c.chunk_locality);
         assert_eq!(c.read_latency_ms, 5);
         assert_eq!(c.spill_dir.as_deref(), Some("/tmp/spill"));
-        assert_eq!(c.spill_cap, 64);
+        assert_eq!(c.spill_cap, CacheCap::Chunks(64));
         assert!(!c.replication);
         assert_eq!(c.partition, PartitionMode::Init);
     }
@@ -299,15 +388,45 @@ mod tests {
     #[test]
     fn zero_staging_cap_invalid() {
         let mut c = RunConfig::default();
-        c.staging_cap = 0;
+        c.staging_cap = CacheCap::Chunks(0);
+        assert!(c.validate().is_err());
+        c.staging_cap = CacheCap::Bytes(0);
         assert!(c.validate().is_err());
     }
 
     #[test]
     fn zero_spill_cap_invalid() {
         let mut c = RunConfig::default();
-        c.spill_cap = 0;
+        c.spill_cap = CacheCap::Chunks(0);
         assert!(c.validate().is_err());
+    }
+
+    #[test]
+    fn cache_cap_parses_chunks_and_bytes() {
+        assert_eq!(CacheCap::parse("32").unwrap(), CacheCap::Chunks(32));
+        assert_eq!(CacheCap::parse("64MB").unwrap(), CacheCap::Bytes(64 << 20));
+        assert_eq!(CacheCap::parse("64mb").unwrap(), CacheCap::Bytes(64 << 20));
+        assert_eq!(CacheCap::parse("512KB").unwrap(), CacheCap::Bytes(512 << 10));
+        assert_eq!(CacheCap::parse("2GB").unwrap(), CacheCap::Bytes(2 << 30));
+        assert!(CacheCap::parse("lots").is_err());
+        assert!(CacheCap::parse("12TB").is_err(), "unknown suffix is an error");
+        assert!(CacheCap::parse("-3").is_err());
+        assert_eq!(CacheCap::parse("64MB").unwrap().to_string(), "64MB");
+        assert_eq!(CacheCap::parse("512KB").unwrap().to_string(), "512KB");
+        assert_eq!(CacheCap::parse("2GB").unwrap().to_string(), "2GB");
+        assert_eq!(CacheCap::parse("7").unwrap().to_string(), "7 chunks");
+    }
+
+    #[test]
+    fn json_caps_accept_numbers_and_budget_strings() {
+        let mut c = RunConfig::default();
+        c.apply_json(&Json::parse(r#"{"staging_cap": "16MB", "spill_cap": "1GB"}"#).unwrap())
+            .unwrap();
+        assert_eq!(c.staging_cap, CacheCap::Bytes(16 << 20));
+        assert_eq!(c.spill_cap, CacheCap::Bytes(1 << 30));
+        assert!(c
+            .apply_json(&Json::parse(r#"{"staging_cap": "sixteen"}"#).unwrap())
+            .is_err());
     }
 
     #[test]

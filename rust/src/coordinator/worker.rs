@@ -66,6 +66,8 @@ fn materialize_inputs(
     let mut full = Vec::new();
     for input in &workflow.stages[stage_idx].inputs {
         match input {
+            // splice by handle: the cache payload is Arc-shared, so every
+            // concurrent instance of this chunk reads one buffer
             StageInput::Chunk => full.extend(payload.iter().cloned()),
             StageInput::Upstream { .. } => full.push(upstream.next().ok_or_else(|| {
                 Error::Scheduler(format!("assignment {instance_id} missing an upstream value"))

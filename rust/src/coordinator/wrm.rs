@@ -12,6 +12,24 @@
 //! The scheduling policy object (`sched::OpScheduler`) is shared with the
 //! discrete-event simulator: the decisions benchmarked at cluster scale are
 //! made by exactly this code.
+//!
+//! # Lock discipline (the zero-copy dispatch path)
+//!
+//! A single mutex guards the scheduler queue and the per-instance
+//! dependency tables.  The critical section is **push / pop / bookkeeping
+//! only** — tensor payloads are `Arc`-backed ([`Value`]), so everything
+//! that happens under the lock is O(ports) pointer bumps:
+//!
+//! * `gather_host_inputs` / the GPU input-plan snapshot clone *handles*,
+//!   never bytes;
+//! * op execution, artifact resolution, PJRT transfers and stage-output
+//!   resolution all run **outside** the mutex;
+//! * wakeups are targeted: device threads wait on per-kind condvars
+//!   (`cv_cpu` / `cv_gpu`) and the completer on `cv_done`, so an op
+//!   completion that readies one dependent wakes one thread, not the herd.
+//!
+//! See docs/perf.md for the measured dispatch costs (`make bench` →
+//! `bench_dispatch`).
 
 use super::manager::Assignment;
 use super::placement::{place_gpu_controller, NodeTopology};
@@ -32,12 +50,22 @@ pub type Completion = (u64, std::result::Result<Vec<Value>, String>);
 
 struct InstExec {
     stage_idx: usize,
-    inputs: Vec<Value>,
-    produced: Vec<Option<Vec<Value>>>,
+    /// Stage-external inputs, shared so a dispatch snapshot is one Arc bump.
+    inputs: Arc<Vec<Value>>,
+    /// Finished op outputs.  Each entry is written once (by its producer)
+    /// and shared from then on; consumers snapshot the `Arc`, not the data.
+    produced: Vec<Option<Arc<Vec<Value>>>>,
     /// per op: count of distinct producer ops not yet finished
     dep_remaining: Vec<usize>,
     ops_remaining: usize,
-    /// op idx -> (gpu id, resident payload key) for single-output results
+    /// op idx -> (gpu id, resident payload key).
+    ///
+    /// INVARIANT: only **single-output** op results are ever inserted here
+    /// (the GPU thread checks `n_outputs == 1` before keeping a result
+    /// resident, and `DeviceExecutor::execute_resident` rejects tuple
+    /// payloads as inputs).  Multi-output ops therefore always feed
+    /// dependents through host values — by design, not by accident; the
+    /// consumer-side lookup debug-asserts this.
     resident: HashMap<usize, (usize, PayloadKey)>,
 }
 
@@ -50,10 +78,24 @@ struct WrmInner {
     poked: bool,
 }
 
+/// One port of a GPU dispatch snapshot: a payload resident on this device,
+/// or a shared host-value handle (an Arc bump, never a byte copy).
+enum PlanSlot {
+    Resident(PayloadKey),
+    Host(Value),
+}
+
 /// Shared WRM state + the device threads' rendezvous.
 pub struct Wrm {
     inner: Mutex<WrmInner>,
-    cv: Condvar,
+    /// CPU computing threads wait here for ready tasks.
+    cv_cpu: Condvar,
+    /// GPU controller threads wait here; only notified for tasks a GPU can
+    /// actually take, so CPU-only work never wakes a controller.
+    cv_gpu: Condvar,
+    /// `wait_completions` callers (the Worker's completer) wait here; op
+    /// completions that ready new tasks but finish no stage skip it.
+    cv_done: Condvar,
     workflow: Arc<Workflow>,
     manifest: Arc<ArtifactManifest>,
     metrics: Arc<MetricsHub>,
@@ -83,7 +125,9 @@ impl Wrm {
                 shutdown: false,
                 poked: false,
             }),
-            cv: Condvar::new(),
+            cv_cpu: Condvar::new(),
+            cv_gpu: Condvar::new(),
+            cv_done: Condvar::new(),
             workflow,
             manifest,
             metrics,
@@ -116,7 +160,9 @@ impl Wrm {
     }
 
     /// Resolve an op's accelerator artifact name (handles `@stage:` tags)
-    /// and check it exists at the configured tile size.
+    /// and check it exists at the configured tile size.  Runs on the
+    /// device thread *outside* the WRM mutex (string work + manifest
+    /// lookups have no business inside the dispatch critical section).
     fn resolve_artifact(&self, gpu_artifact: &Option<String>) -> Option<String> {
         let name = gpu_artifact.as_ref()?;
         let resolved = if let Some(stage) = name.strip_prefix("@stage:") {
@@ -129,6 +175,36 @@ impl Wrm {
         } else {
             None
         }
+    }
+
+    /// Targeted wakeup after pushing `n_new` ready tasks (`any_gpu` = at
+    /// least one is GPU-eligible).  The common completion path readies
+    /// exactly one dependent → one thread wakes; batch submits fan out.
+    fn wake_device_threads(&self, n_new: usize, any_gpu: bool) {
+        match n_new {
+            0 => {}
+            1 => {
+                self.cv_cpu.notify_one();
+                if any_gpu {
+                    self.cv_gpu.notify_one();
+                }
+            }
+            _ => {
+                self.cv_cpu.notify_all();
+                if any_gpu {
+                    self.cv_gpu.notify_all();
+                }
+            }
+        }
+    }
+
+    /// Push an error completion and wake the completer (never the device
+    /// threads — there is no new work for them in a failure).
+    fn push_error(&self, instance: u64, msg: String) {
+        let mut inner = self.inner.lock().unwrap();
+        inner.completions.push_back((instance, Err(msg)));
+        drop(inner);
+        self.cv_done.notify_all();
     }
 
     /// Enqueue a stage instance: instantiate its fine-grain operations as
@@ -153,18 +229,21 @@ impl Wrm {
         let mut inner = self.inner.lock().unwrap();
         let exec = InstExec {
             stage_idx: a.stage_idx,
-            inputs: a.inputs,
+            inputs: Arc::new(a.inputs),
             produced: vec![None; n_ops],
             dep_remaining: dep_remaining.clone(),
             ops_remaining: n_ops,
             resident: HashMap::new(),
         };
         inner.insts.insert(a.instance_id, exec);
+        let mut n_new = 0usize;
+        let mut any_gpu = false;
         for (oi, op) in stage.ops.iter().enumerate() {
             if dep_remaining[oi] == 0 {
                 let seq = inner.seq;
                 inner.seq += 1;
                 let (speedup, transfer_impact) = self.task_estimates(op);
+                let has_gpu_impl = self.gpu_eligible(&op.variant.gpu_artifact);
                 inner.queue.push(ReadyTask {
                     key: (a.instance_id, oi),
                     name: op.name.clone(),
@@ -172,24 +251,28 @@ impl Wrm {
                     transfer_impact,
                     seq,
                     resident_on: None,
-                    has_gpu_impl: self.gpu_eligible(&op.variant.gpu_artifact),
+                    has_gpu_impl,
                 });
+                n_new += 1;
+                any_gpu |= has_gpu_impl;
             }
         }
         drop(inner);
-        self.cv.notify_all();
+        self.wake_device_threads(n_new, any_gpu);
     }
 
     /// Stop all device threads (after the queue drains).
     pub fn shutdown(&self) {
         self.inner.lock().unwrap().shutdown = true;
-        self.cv.notify_all();
+        self.cv_cpu.notify_all();
+        self.cv_gpu.notify_all();
+        self.cv_done.notify_all();
     }
 
     /// Wake a `wait_completions` caller even if nothing completed.
     pub fn poke(&self) {
         self.inner.lock().unwrap().poked = true;
-        self.cv.notify_all();
+        self.cv_done.notify_all();
     }
 
     /// Block until at least one completion (or a poke); drain all pending.
@@ -203,16 +286,19 @@ impl Wrm {
                 inner.poked = false;
                 return Vec::new();
             }
-            inner = self.cv.wait(inner).unwrap();
+            inner = self.cv_done.wait(inner).unwrap();
         }
     }
 
-    /// Gather host values for an op's inputs (caller holds the lock).
+    /// Gather host-value *handles* for an op's inputs (caller holds the
+    /// lock).  Every push is an `Arc` bump — O(ports) pointer work, no
+    /// payload copies inside the critical section.  Also returns the
+    /// instance's stage index so the caller needs no second lock.
     fn gather_host_inputs(
         inner: &WrmInner,
         workflow: &Workflow,
         key: OpInstKey,
-    ) -> std::result::Result<Vec<Value>, String> {
+    ) -> std::result::Result<(Vec<Value>, usize), String> {
         let exec = inner.insts.get(&key.0).ok_or("instance vanished")?;
         let stage = &workflow.stages[exec.stage_idx];
         let op = &stage.ops[key.1];
@@ -233,31 +319,70 @@ impl Wrm {
                 PortRef::Param(v) => vals.push(v.clone()),
             }
         }
-        Ok(vals)
+        Ok((vals, exec.stage_idx))
+    }
+
+    /// Resolve a completed instance's stage outputs from its shared
+    /// produced/input handles — O(outputs) Arc bumps, no clone of the
+    /// produced table.  This mirrors `dataflow::resolve_port` over the
+    /// WRM's sparse `Option<Arc<Vec<Value>>>` storage, the same
+    /// relationship `gather_host_inputs` has to `gather_op_inputs`
+    /// (documented there); keep the two rule sets in sync.
+    fn resolve_stage_outputs(
+        stage: &StageDef,
+        exec: &InstExec,
+    ) -> std::result::Result<Vec<Value>, String> {
+        stage
+            .outputs
+            .iter()
+            .map(|p| match p {
+                PortRef::StageInput(k) => exec
+                    .inputs
+                    .get(*k)
+                    .cloned()
+                    .ok_or_else(|| format!("missing stage input {k}")),
+                PortRef::Op { op, output } => exec
+                    .produced
+                    .get(*op)
+                    .and_then(|o| o.as_ref())
+                    .and_then(|o| o.get(*output))
+                    .cloned()
+                    .ok_or_else(|| format!("missing op output {op}:{output}")),
+                PortRef::Param(v) => Ok(v.clone()),
+            })
+            .collect()
     }
 
     /// Record an op's results; push newly-ready dependents; emit the stage
     /// completion if this was the last op.  Returns instance ids that
     /// completed (so GPU threads can evict their resident payloads).
-    #[allow(clippy::too_many_arguments)]
+    ///
+    /// Everything here is bookkeeping over shared handles — dependency
+    /// decrements, queue pushes, and (on the last op) O(outputs) Arc-bump
+    /// output resolution — so the whole call is one short lock hold.
     fn finish_op(
         &self,
         key: OpInstKey,
         outs: Vec<Value>,
         resident: Option<(usize, PayloadKey)>,
     ) -> Vec<u64> {
-        let mut inner = self.inner.lock().unwrap();
         let mut completed = Vec::new();
-        let workflow = self.workflow.clone();
+        let mut inner = self.inner.lock().unwrap();
         let Some(exec) = inner.insts.get_mut(&key.0) else {
             return completed;
         };
-        exec.produced[key.1] = Some(outs);
+        let stage = &self.workflow.stages[exec.stage_idx];
+        exec.produced[key.1] = Some(Arc::new(outs));
         if let Some(r) = resident {
+            debug_assert_eq!(
+                stage.ops[key.1].n_outputs,
+                1,
+                "resident payloads are single-output by invariant (op '{}')",
+                stage.ops[key.1].name
+            );
             exec.resident.insert(key.1, r);
         }
         exec.ops_remaining -= 1;
-        let stage = &workflow.stages[exec.stage_idx];
         // decrement dependents
         let mut newly_ready: Vec<usize> = Vec::new();
         for (oi, op) in stage.ops.iter().enumerate() {
@@ -272,49 +397,40 @@ impl Wrm {
                 }
             }
         }
-        // compute residency hints for the new tasks
+        // residency hints for the new tasks, in the same pass as the
+        // dependency bookkeeping (one table lookup, not one per task)
         let hints: Vec<(usize, Option<usize>)> = newly_ready
             .iter()
             .map(|&oi| {
-                let op = &stage.ops[oi];
-                let hint = op.inputs.iter().find_map(|p| match p {
-                    PortRef::Op { op: prod, .. } => {
-                        exec.resident.get(prod).map(|(gpu, _)| *gpu)
-                    }
+                let hint = stage.ops[oi].inputs.iter().find_map(|p| match p {
+                    PortRef::Op { op: prod, .. } => exec.resident.get(prod).map(|(gpu, _)| *gpu),
                     _ => None,
                 });
                 (oi, hint)
             })
             .collect();
         let stage_done = exec.ops_remaining == 0;
-        let stage_idx = exec.stage_idx;
         if stage_done {
             let exec = inner.insts.remove(&key.0).unwrap();
-            let stage = &workflow.stages[stage_idx];
-            let result: std::result::Result<Vec<Value>, String> = stage
-                .outputs
-                .iter()
-                .map(|p| {
-                    crate::dataflow::resolve_port(
-                        p,
-                        &exec.inputs,
-                        &exec
-                            .produced
-                            .iter()
-                            .map(|o| o.clone().unwrap_or_default())
-                            .collect::<Vec<_>>(),
-                    )
-                    .map_err(|e| e.to_string())
-                })
-                .collect();
+            // resolution is O(outputs) Arc bumps over the removed
+            // instance's shared handles — cheap enough to stay under the
+            // single lock hold (the old cost, cloning the entire produced
+            // table, is what this PR removed)
+            let result = Self::resolve_stage_outputs(stage, &exec);
             inner.completions.push_back((key.0, result));
+            drop(inner);
+            self.cv_done.notify_all();
             completed.push(key.0);
         } else {
+            // push the newly-ready tasks with their residency hints
+            let mut n_new = 0usize;
+            let mut any_gpu = false;
             for (oi, hint) in hints {
                 let op = &stage.ops[oi];
                 let seq = inner.seq;
                 inner.seq += 1;
                 let (speedup, transfer_impact) = self.task_estimates(op);
+                let has_gpu_impl = self.gpu_eligible(&op.variant.gpu_artifact);
                 inner.queue.push(ReadyTask {
                     key: (key.0, oi),
                     name: op.name.clone(),
@@ -322,19 +438,56 @@ impl Wrm {
                     transfer_impact,
                     seq,
                     resident_on: hint,
-                    has_gpu_impl: self.gpu_eligible(&op.variant.gpu_artifact),
+                    has_gpu_impl,
                 });
+                n_new += 1;
+                any_gpu |= has_gpu_impl;
             }
+            drop(inner);
+            self.wake_device_threads(n_new, any_gpu);
         }
-        drop(inner);
-        self.cv.notify_all();
         completed
+    }
+
+    /// Execute an op's CPU member over shared input handles, converting a
+    /// panic into an error so it can never silently kill a device thread.
+    /// In debug builds, also asserts the op treated its inputs as
+    /// immutable — the aliasing oracle for the zero-copy datapath
+    /// (`&[Value]` already prevents safe mutation; this catches
+    /// unsafe/interior-mutability escapes).
+    fn run_cpu_member(op: &OpDef, vals: &[Value]) -> Result<Vec<Value>> {
+        // the aliasing assert runs inside the catch so a tripped oracle
+        // surfaces as an error completion, not a hung worker
+        std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            #[cfg(debug_assertions)]
+            let before: Vec<u64> = vals.iter().map(value_checksum).collect();
+            let result = (op.variant.cpu)(vals);
+            #[cfg(debug_assertions)]
+            for (v, h) in vals.iter().zip(&before) {
+                debug_assert_eq!(
+                    value_checksum(v),
+                    *h,
+                    "op '{}' mutated a shared input buffer in place",
+                    op.name
+                );
+            }
+            result
+        }))
+        .unwrap_or_else(|p| {
+            let msg = p
+                .downcast_ref::<&str>()
+                .map(|s| s.to_string())
+                .or_else(|| p.downcast_ref::<String>().cloned())
+                .unwrap_or_else(|| "op panicked".into());
+            Err(Error::Dataflow(format!("op '{}' panicked: {msg}", op.name)))
+        })
     }
 
     /// CPU computing-thread main loop.
     pub fn cpu_thread(self: &Arc<Self>, _core: usize) {
         loop {
-            let (task, vals) = {
+            // critical section: pop + O(ports) handle gather, nothing else
+            let (task, vals, stage_idx) = {
                 let mut inner = self.inner.lock().unwrap();
                 loop {
                     if inner.shutdown {
@@ -342,36 +495,22 @@ impl Wrm {
                     }
                     if let Some(task) = inner.queue.pop(DeviceKind::Cpu, 0, false) {
                         match Self::gather_host_inputs(&inner, &self.workflow, task.key) {
-                            Ok(vals) => break (task, vals),
+                            Ok((vals, stage_idx)) => break (task, vals, stage_idx),
                             Err(e) => {
                                 inner.completions.push_back((task.key.0, Err(e)));
+                                self.cv_done.notify_all();
                                 continue;
                             }
                         }
                     }
-                    inner = self.cv.wait(inner).unwrap();
+                    inner = self.cv_cpu.wait(inner).unwrap();
                 }
             };
-            let stage_idx = {
-                let inner = self.inner.lock().unwrap();
-                inner.insts.get(&task.key.0).map(|e| e.stage_idx)
-            };
-            let Some(stage_idx) = stage_idx else { continue };
             let op = &self.workflow.stages[stage_idx].ops[task.key.1];
             let t0 = Instant::now();
-            // a panicking op must not silently kill the device thread: turn
-            // it into an error completion so the Worker aborts cleanly
-            let result = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
-                (op.variant.cpu)(&vals)
-            }))
-            .unwrap_or_else(|p| {
-                let msg = p
-                    .downcast_ref::<&str>()
-                    .map(|s| s.to_string())
-                    .or_else(|| p.downcast_ref::<String>().cloned())
-                    .unwrap_or_else(|| "op panicked".into());
-                Err(Error::Dataflow(format!("op '{}' panicked: {msg}", op.name)))
-            });
+            // run_cpu_member converts a panicking op into an error
+            // completion so the Worker aborts cleanly
+            let result = Self::run_cpu_member(op, &vals);
             let elapsed = t0.elapsed();
             self.metrics.record_op(&op.name, DeviceKind::Cpu, elapsed);
             self.profiles.record(&op.op, DeviceKind::Cpu, elapsed);
@@ -379,12 +518,7 @@ impl Wrm {
                 Ok(outs) => {
                     self.finish_op(task.key, outs, None);
                 }
-                Err(e) => {
-                    let mut inner = self.inner.lock().unwrap();
-                    inner.completions.push_back((task.key.0, Err(e.to_string())));
-                    drop(inner);
-                    self.cv.notify_all();
-                }
+                Err(e) => self.push_error(task.key.0, e.to_string()),
             }
         }
     }
@@ -396,8 +530,7 @@ impl Wrm {
         let mut executor = match DeviceExecutor::new((*self.manifest).clone()) {
             Ok(e) => e,
             Err(e) => {
-                let mut inner = self.inner.lock().unwrap();
-                inner.completions.push_back((u64::MAX, Err(format!("gpu {gpu_id}: {e}"))));
+                self.push_error(u64::MAX, format!("gpu {gpu_id}: {e}"));
                 return;
             }
         };
@@ -413,7 +546,10 @@ impl Wrm {
         // one-time notice when accelerator execution degrades to CPU members
         let mut warned_fallback = false;
         loop {
-            // pick a task + snapshot its inputs under the lock
+            // critical section: pop + snapshot the input plan as shared
+            // handles (resident keys on THIS gpu, or Arc-bumped host
+            // values).  Plan *materialisation* (ExecInput refs, uploads)
+            // and artifact resolution happen outside, on this thread.
             let picked = {
                 let mut inner = self.inner.lock().unwrap();
                 loop {
@@ -423,33 +559,37 @@ impl Wrm {
                     if let Some(task) =
                         inner.queue.pop(DeviceKind::Gpu, gpu_id, self.cfg.data_locality)
                     {
-                        let stage_idx = match inner.insts.get(&task.key.0) {
-                            Some(e) => e.stage_idx,
-                            None => continue,
-                        };
-                        // per-port: resident key on THIS gpu, or host value
-                        let exec = inner.insts.get(&task.key.0).unwrap();
+                        let Some(exec) = inner.insts.get(&task.key.0) else { continue };
+                        let stage_idx = exec.stage_idx;
                         let op = &self.workflow.stages[stage_idx].ops[task.key.1];
-                        let mut plan: Vec<std::result::Result<(usize, PayloadKey), Value>> =
+                        let mut plan: Vec<PlanSlot> =
                             Vec::with_capacity(op.inputs.len().max(exec.inputs.len()));
                         let mut ok = true;
                         if op.inputs.is_empty() {
-                            for v in &exec.inputs {
-                                plan.push(Err(v.clone()));
+                            for v in exec.inputs.iter() {
+                                plan.push(PlanSlot::Host(v.clone()));
                             }
                         }
                         for port in &op.inputs {
                             match port {
                                 PortRef::Op { op: p, output } => {
                                     match exec.resident.get(p) {
-                                        Some(&(g, k)) if g == gpu_id && *output == 0 => {
-                                            plan.push(Ok((g, k)));
+                                        Some(&(g, k)) if g == gpu_id => {
+                                            // resident ⇒ the producer was
+                                            // single-output (see InstExec::
+                                            // resident), so the only valid
+                                            // port is output 0
+                                            debug_assert_eq!(
+                                                *output, 0,
+                                                "resident payload consumed at output {output}"
+                                            );
+                                            plan.push(PlanSlot::Resident(k));
                                         }
                                         _ => match exec.produced[*p]
                                             .as_ref()
                                             .and_then(|o| o.get(*output))
                                         {
-                                            Some(v) => plan.push(Err(v.clone())),
+                                            Some(v) => plan.push(PlanSlot::Host(v.clone())),
                                             None => {
                                                 ok = false;
                                                 break;
@@ -458,24 +598,25 @@ impl Wrm {
                                     }
                                 }
                                 PortRef::StageInput(k) => match exec.inputs.get(*k) {
-                                    Some(v) => plan.push(Err(v.clone())),
+                                    Some(v) => plan.push(PlanSlot::Host(v.clone())),
                                     None => {
                                         ok = false;
                                         break;
                                     }
                                 },
-                                PortRef::Param(v) => plan.push(Err(v.clone())),
+                                PortRef::Param(v) => plan.push(PlanSlot::Host(v.clone())),
                             }
                         }
                         if !ok {
                             inner
                                 .completions
                                 .push_back((task.key.0, Err("missing op input".into())));
+                            self.cv_done.notify_all();
                             continue;
                         }
                         break Some((task, stage_idx, plan));
                     }
-                    inner = self.cv.wait(inner).unwrap();
+                    inner = self.cv_gpu.wait(inner).unwrap();
                 }
             };
             let Some((task, stage_idx, plan)) = picked else { return };
@@ -491,8 +632,8 @@ impl Wrm {
                 let inputs: Vec<ExecInput<'_>> = plan
                     .iter()
                     .map(|p| match p {
-                        Ok((_, k)) => ExecInput::Resident(*k),
-                        Err(v) => ExecInput::Host(v),
+                        PlanSlot::Resident(k) => ExecInput::Resident(*k),
+                        PlanSlot::Host(v) => ExecInput::Host(v),
                     })
                     .collect();
                 let exec_result = executor
@@ -511,7 +652,10 @@ impl Wrm {
                         self.profiles.record_accelerator(&op.op, elapsed);
                         let (u1, d1) = (executor.stats.bytes_up, executor.stats.bytes_down);
                         self.metrics.record_transfer(&op.name, u1 - up0.0, d1 - up0.1);
-                        // keep single-output results resident for DL chaining
+                        // keep single-output results resident for DL
+                        // chaining; multi-output (tuple) results are
+                        // evicted — they cannot feed a dependent execution
+                        // without a download (see InstExec::resident)
                         let resident = if self.cfg.data_locality && n_outputs == 1 {
                             held.entry(task.key.0).or_default().push(key);
                             Some((gpu_id, key))
@@ -566,8 +710,8 @@ impl Wrm {
             let mut dl_err = None;
             for p in &plan {
                 match p {
-                    Err(v) => vals.push(v.clone()),
-                    Ok((_, k)) => match executor.download(*k) {
+                    PlanSlot::Host(v) => vals.push(v.clone()),
+                    PlanSlot::Resident(k) => match executor.download(*k) {
                         Ok(mut outs) if !outs.is_empty() => vals.push(outs.remove(0)),
                         Ok(_) => dl_err = Some("empty resident payload".to_string()),
                         Err(e) => dl_err = Some(e.to_string()),
@@ -575,14 +719,14 @@ impl Wrm {
                 }
             }
             if let Some(e) = dl_err {
-                let mut inner = self.inner.lock().unwrap();
-                inner.completions.push_back((task.key.0, Err(e)));
-                drop(inner);
-                self.cv.notify_all();
+                self.push_error(task.key.0, e);
                 continue;
             }
             let t0 = Instant::now();
-            match (op.variant.cpu)(&vals) {
+            // same panic discipline as the CPU thread (via run_cpu_member):
+            // a panicking op, or a tripped debug aliasing assert, becomes
+            // an error completion, not a silently dead controller thread
+            match Self::run_cpu_member(op, &vals) {
                 Ok(outs) => {
                     let elapsed = t0.elapsed();
                     // metrics attribute this to the controller's device,
@@ -594,13 +738,28 @@ impl Wrm {
                     self.profiles.record(&op.op, DeviceKind::Cpu, elapsed);
                     self.finish_op(task.key, outs, None);
                 }
-                Err(e) => {
-                    let mut inner = self.inner.lock().unwrap();
-                    inner.completions.push_back((task.key.0, Err(e.to_string())));
-                    drop(inner);
-                    self.cv.notify_all();
-                }
+                Err(e) => self.push_error(task.key.0, e.to_string()),
             }
+        }
+    }
+}
+
+/// Cheap content checksum of a value (debug-build aliasing oracle).
+#[cfg(debug_assertions)]
+fn value_checksum(v: &Value) -> u64 {
+    const PRIME: u64 = 0x100_0000_01b3;
+    let fold = |h: u64, bits: u32| (h ^ bits as u64).wrapping_mul(PRIME);
+    match v {
+        Value::Scalar(s) => fold(0xcbf2_9ce4_8422_2325, s.to_bits()),
+        Value::Tensor(t) => {
+            let mut h = 0xcbf2_9ce4_8422_2325u64;
+            for &d in t.shape() {
+                h = fold(h, d as u32);
+            }
+            for &f in t.data() {
+                h = fold(h, f.to_bits());
+            }
+            h
         }
     }
 }

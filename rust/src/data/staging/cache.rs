@@ -21,6 +21,7 @@
 
 use super::source::ChunkSource;
 use super::tiers::SpillTier;
+use crate::config::CacheCap;
 use crate::coordinator::ChunkId;
 use crate::metrics::StagingReport;
 use crate::runtime::Value;
@@ -29,6 +30,11 @@ use std::collections::{HashMap, VecDeque};
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::{Arc, Condvar, Mutex};
 use std::time::{Duration, Instant};
+
+/// Payload footprint of one staged chunk (tensor dims -> bytes).
+pub(crate) fn payload_bytes(vals: &[Value]) -> u64 {
+    vals.iter().map(|v| v.size_bytes() as u64).sum()
+}
 
 enum Slot {
     /// A read is in flight (prefetcher or another demand load).
@@ -51,6 +57,8 @@ struct Inner {
     slots: HashMap<ChunkId, Slot>,
     /// Ready chunk ids in staging order (eviction scan order).
     order: VecDeque<ChunkId>,
+    /// Total payload bytes of Ready slots (drives byte-budget caps).
+    mem_bytes: u64,
     /// Prefetch work queue (callers bound what they offer; the capacity
     /// bound caps what is held staged at once).
     queue: VecDeque<ChunkId>,
@@ -69,8 +77,9 @@ struct Inner {
 /// Bounded chunk cache + prefetcher; one per worker process.
 pub struct StagingCache {
     source: Arc<dyn ChunkSource>,
-    /// max staged chunks held in memory
-    cap: usize,
+    /// memory-tier budget: max staged chunks, or max payload bytes
+    /// (derived from tensor dims) — `--staging-cap N|NMB`
+    cap: CacheCap,
     /// 0 = no prefetcher thread (demand loads only); > 0 also serves as
     /// the hint budget the worker requests from the manager
     depth: usize,
@@ -98,7 +107,11 @@ impl StagingCache {
     /// Create a cache over `source` holding at most `cap` chunks, with a
     /// background prefetcher when `depth > 0`.  The prefetcher thread is
     /// detached; call [`StagingCache::shutdown`] when the run ends.
-    pub fn new(source: Arc<dyn ChunkSource>, cap: usize, depth: usize) -> Arc<Self> {
+    pub fn new(
+        source: Arc<dyn ChunkSource>,
+        cap: impl Into<CacheCap>,
+        depth: usize,
+    ) -> Arc<Self> {
         Self::new_tiered(source, cap, depth, None)
     }
 
@@ -107,17 +120,22 @@ impl StagingCache {
     /// back to `source`.
     pub fn new_tiered(
         source: Arc<dyn ChunkSource>,
-        cap: usize,
+        cap: impl Into<CacheCap>,
         depth: usize,
         spill: Option<SpillTier>,
     ) -> Arc<Self> {
+        let cap = match cap.into() {
+            CacheCap::Chunks(n) => CacheCap::Chunks(n.max(1)),
+            b => b,
+        };
         let cache = Arc::new(StagingCache {
             source,
-            cap: cap.max(1),
+            cap,
             depth,
             inner: Mutex::new(Inner {
                 slots: HashMap::new(),
                 order: VecDeque::new(),
+                mem_bytes: 0,
                 queue: VecDeque::new(),
                 spill,
                 staged: Vec::new(),
@@ -204,6 +222,7 @@ impl StagingCache {
     ) -> Option<Arc<Vec<Value>>> {
         let vals = inner.spill.as_mut().and_then(|s| s.get(chunk))?;
         let vals = Arc::new(vals);
+        inner.mem_bytes += payload_bytes(&vals);
         inner.slots.insert(
             chunk,
             Slot::Ready {
@@ -266,6 +285,7 @@ impl StagingCache {
             let mut inner = self.inner.lock().unwrap();
             match loaded {
                 Ok(vals) => {
+                    inner.mem_bytes += payload_bytes(&vals);
                     let slot = Slot::Ready {
                         vals: Arc::new(vals),
                         prefetched: true,
@@ -365,6 +385,7 @@ impl StagingCache {
                     match loaded {
                         Ok(vals) => {
                             let vals = Arc::new(vals);
+                            inner.mem_bytes += payload_bytes(&vals);
                             inner.slots.insert(
                                 chunk,
                                 Slot::Ready {
@@ -395,13 +416,22 @@ impl StagingCache {
         }
     }
 
+    /// Whether the memory tier exceeds its budget (chunk count, or payload
+    /// bytes — a single over-budget chunk is always allowed to stay).
+    fn over_budget(&self, inner: &Inner) -> bool {
+        match self.cap {
+            CacheCap::Chunks(cap) => inner.order.len() > cap,
+            CacheCap::Bytes(cap) => inner.mem_bytes > cap && inner.order.len() > 1,
+        }
+    }
+
     /// Evict beyond capacity: oldest already-consumed entry first, oldest
     /// entry otherwise.  With a spill tier, the payload demotes to local
     /// disk (the chunk stays catalogued, just a tier down); without one —
     /// or if the disk write fails — it is dropped and reported evicted.
     /// Caller holds the lock.
     fn evict_excess(&self, inner: &mut Inner) {
-        while inner.order.len() > self.cap {
+        while self.over_budget(inner) {
             let pos = inner
                 .order
                 .iter()
@@ -412,6 +442,9 @@ impl StagingCache {
                 Some(Slot::Ready { vals, .. }) => Some(vals),
                 _ => None,
             };
+            if let Some(v) = vals.as_ref() {
+                inner.mem_bytes = inner.mem_bytes.saturating_sub(payload_bytes(v));
+            }
             let mut dropped_from_disk: Vec<ChunkId> = Vec::new();
             let mut demoted = false;
             if let Some(vals) = vals.as_ref() {
@@ -575,6 +608,32 @@ mod tests {
         assert!(!cache.is_staged(dropped[0]));
         cache.get(dropped[0]).unwrap();
         assert_eq!(cache.report().misses, 5);
+        cache.shutdown();
+    }
+
+    #[test]
+    fn byte_budget_evicts_by_payload_size() {
+        // each synthetic chunk has a fixed payload; budget for ~2 of them
+        let src = source(8, 0);
+        let one = payload_bytes(&src.load(0).unwrap());
+        assert!(one > 0);
+        let cache = StagingCache::new(src, crate::config::CacheCap::Bytes(2 * one), 0);
+        cache.get(0).unwrap();
+        cache.get(1).unwrap();
+        assert_eq!(cache.report().evictions, 0, "two chunks fit the budget");
+        cache.get(2).unwrap(); // third overflows -> oldest claimed evicts
+        let r = cache.report();
+        assert_eq!(r.evictions, 1, "{r:?}");
+        assert!(!cache.is_staged(0));
+        assert!(cache.is_staged(1) && cache.is_staged(2));
+        // a budget smaller than one chunk still holds exactly one
+        let src = source(4, 0);
+        let tiny = StagingCache::new(src, crate::config::CacheCap::Bytes(1), 0);
+        tiny.get(0).unwrap();
+        assert!(tiny.is_staged(0), "a single over-budget chunk must stay");
+        tiny.get(1).unwrap();
+        assert!(tiny.is_staged(1) && !tiny.is_staged(0));
+        tiny.shutdown();
         cache.shutdown();
     }
 

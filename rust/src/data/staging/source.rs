@@ -87,13 +87,13 @@ const TILE_VERSION: u32 = 1;
 /// LE).  Shared between the single-tensor `.tile` container and the spill
 /// tier's multi-value container ([`super::tiers`]).
 pub(crate) fn encode_tensor(buf: &mut Vec<u8>, t: &HostTensor) {
+    buf.reserve(4 + t.shape().len() * 8 + t.size_bytes());
     buf.extend_from_slice(&(t.shape().len() as u32).to_le_bytes());
     for &d in t.shape() {
         buf.extend_from_slice(&(d as u64).to_le_bytes());
     }
-    for &f in t.data() {
-        buf.extend_from_slice(&f.to_le_bytes());
-    }
+    // bulk copy straight out of the tensor's shared (Arc-backed) buffer
+    crate::runtime::tensor::f32s_to_le(buf, t.data());
 }
 
 pub(crate) fn take_bytes<'a>(bytes: &'a [u8], pos: &mut usize, n: usize) -> Result<&'a [u8]> {
@@ -125,11 +125,7 @@ pub(crate) fn decode_tensor(bytes: &[u8], pos: &mut usize) -> Result<HostTensor>
         .and_then(|n| n.checked_mul(4))
         .ok_or_else(|| Error::Config("tensor dims overflow".into()))?;
     let payload = take_bytes(bytes, pos, n)?;
-    let mut data = Vec::with_capacity(n / 4);
-    for c in payload.chunks_exact(4) {
-        data.push(f32::from_le_bytes(c.try_into().unwrap()));
-    }
-    HostTensor::new(dims, data)
+    HostTensor::new(dims, crate::runtime::tensor::f32s_from_le(payload))
 }
 
 /// Tiles stored as `.tile` files in a directory (one file per chunk,

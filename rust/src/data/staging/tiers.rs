@@ -21,10 +21,11 @@
 //! source reads the cache deliberately performs unlocked).
 
 use super::source::{decode_tensor, encode_tensor, take_bytes};
+use crate::config::CacheCap;
 use crate::coordinator::ChunkId;
 use crate::runtime::Value;
 use crate::{Error, Result};
-use std::collections::{HashSet, VecDeque};
+use std::collections::{HashMap, VecDeque};
 use std::io::{Read, Write};
 use std::path::{Path, PathBuf};
 
@@ -39,18 +40,23 @@ const TAG_TENSOR: u8 = 1;
 #[derive(Debug)]
 pub struct SpillTier {
     dir: PathBuf,
-    /// max spilled chunks held on disk
-    cap: usize,
-    resident: HashSet<ChunkId>,
+    /// disk budget: max spilled chunks, or max on-disk bytes
+    /// (`--spill-cap N|NMB`)
+    cap: CacheCap,
+    /// spilled chunk -> its `.spill` file size in bytes
+    resident: HashMap<ChunkId, u64>,
+    /// total on-disk bytes of resident spill files
+    disk_bytes: u64,
     /// spilled chunk ids, least-recently-touched first (eviction order)
     order: VecDeque<ChunkId>,
 }
 
 impl SpillTier {
     /// Open (creating) `dir` as a spill directory holding at most `cap`
-    /// chunks.  Stale `.spill` files from a previous run are removed — the
-    /// tier is a cache of the source, never a source of truth.
-    pub fn create(dir: impl AsRef<Path>, cap: usize) -> Result<Self> {
+    /// (chunks or bytes).  Stale `.spill` files from a previous run are
+    /// removed — the tier is a cache of the source, never a source of
+    /// truth.
+    pub fn create(dir: impl AsRef<Path>, cap: impl Into<CacheCap>) -> Result<Self> {
         let dir = dir.as_ref().to_path_buf();
         std::fs::create_dir_all(&dir)?;
         for entry in std::fs::read_dir(&dir)?.filter_map(|e| e.ok()) {
@@ -59,10 +65,15 @@ impl SpillTier {
                 let _ = std::fs::remove_file(p);
             }
         }
+        let cap = match cap.into() {
+            CacheCap::Chunks(n) => CacheCap::Chunks(n.max(1)),
+            b => b,
+        };
         Ok(SpillTier {
             dir,
-            cap: cap.max(1),
-            resident: HashSet::new(),
+            cap,
+            resident: HashMap::new(),
+            disk_bytes: 0,
             order: VecDeque::new(),
         })
     }
@@ -82,7 +93,16 @@ impl SpillTier {
 
     /// Whether `chunk` is currently spilled.
     pub fn contains(&self, chunk: ChunkId) -> bool {
-        self.resident.contains(&chunk)
+        self.resident.contains_key(&chunk)
+    }
+
+    /// Whether the tier exceeds its budget; a single over-budget chunk may
+    /// always stay (mirrors the memory tier's rule).
+    fn over_budget(&self) -> bool {
+        match self.cap {
+            CacheCap::Chunks(cap) => self.resident.len() > cap,
+            CacheCap::Bytes(cap) => self.disk_bytes > cap && self.resident.len() > 1,
+        }
     }
 
     /// Demote one chunk's payload to disk.  Returns the chunks the
@@ -91,7 +111,7 @@ impl SpillTier {
     /// whose file survives from an earlier promotion only refreshes its
     /// recency — payloads are immutable.
     pub fn put(&mut self, chunk: ChunkId, vals: &[Value]) -> Result<Vec<ChunkId>> {
-        if self.resident.contains(&chunk) {
+        if self.contains(chunk) {
             self.touch(chunk);
             return Ok(Vec::new());
         }
@@ -113,14 +133,19 @@ impl SpillTier {
         }
         let mut f = std::fs::File::create(self.path(chunk))?;
         f.write_all(&buf)?;
-        self.resident.insert(chunk);
+        self.resident.insert(chunk, buf.len() as u64);
+        self.disk_bytes += buf.len() as u64;
         self.order.push_back(chunk);
         let mut dropped = Vec::new();
-        while self.resident.len() > self.cap {
+        while self.over_budget() {
             if let Some(old) = self.order.pop_front() {
-                self.resident.remove(&old);
+                if let Some(sz) = self.resident.remove(&old) {
+                    self.disk_bytes = self.disk_bytes.saturating_sub(sz);
+                }
                 let _ = std::fs::remove_file(self.path(old));
                 dropped.push(old);
+            } else {
+                break;
             }
         }
         Ok(dropped)
@@ -131,7 +156,7 @@ impl SpillTier {
     /// reads as a miss (the entry is dropped and the caller falls back to
     /// the source tier), never an error: this is a cache.
     pub fn get(&mut self, chunk: ChunkId) -> Option<Vec<Value>> {
-        if !self.resident.contains(&chunk) {
+        if !self.contains(chunk) {
             return None;
         }
         match self.read(chunk) {
@@ -140,7 +165,9 @@ impl SpillTier {
                 Some(vals)
             }
             Err(_) => {
-                self.resident.remove(&chunk);
+                if let Some(sz) = self.resident.remove(&chunk) {
+                    self.disk_bytes = self.disk_bytes.saturating_sub(sz);
+                }
                 if let Some(pos) = self.order.iter().position(|&c| c == chunk) {
                     self.order.remove(pos);
                 }
@@ -250,6 +277,29 @@ mod tests {
         assert!(tier.put(5, &payload(5)).unwrap().is_empty());
         assert_eq!(tier.len(), 1);
         assert_eq!(tier.get(5).unwrap(), payload(5));
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn byte_budget_caps_the_disk_tier() {
+        let dir = tmp_dir("bytecap");
+        // measure one payload's on-disk size, then budget for ~1.5 files
+        let mut probe = SpillTier::create(dir.join("probe"), 8).unwrap();
+        probe.put(0, &payload(0)).unwrap();
+        let file_sz = probe.disk_bytes;
+        assert!(file_sz > 0);
+        let mut tier =
+            SpillTier::create(&dir, CacheCap::Bytes(file_sz + file_sz / 2)).unwrap();
+        assert!(tier.put(1, &payload(1)).unwrap().is_empty());
+        // the second put overflows the byte budget: LRU chunk 1 drops
+        let dropped = tier.put(2, &payload(2)).unwrap();
+        assert_eq!(dropped, vec![1]);
+        assert!(tier.contains(2) && !tier.contains(1));
+        assert!(tier.disk_bytes <= file_sz + file_sz / 2);
+        // a single over-budget chunk is still held (never evict to empty)
+        let mut tiny = SpillTier::create(dir.join("tiny"), CacheCap::Bytes(1)).unwrap();
+        assert!(tiny.put(7, &payload(7)).unwrap().is_empty());
+        assert!(tiny.contains(7));
         let _ = std::fs::remove_dir_all(&dir);
     }
 

@@ -98,6 +98,9 @@ fn serve_connection_inner(
     stream.set_nodelay(true).ok();
     let mut reader = BufReader::new(stream.try_clone().map_err(|e| Error::Net(e.to_string()))?);
     let mut writer = BufWriter::new(stream);
+    // one frame buffer per connection: tensor frames encode into it with a
+    // single bulk copy and its capacity is reused for the connection's life
+    let mut scratch: Vec<u8> = Vec::new();
     loop {
         let msg = match proto::read_message(&mut reader) {
             Ok(m) => m,
@@ -124,13 +127,14 @@ fn serve_connection_inner(
                 };
                 let batch = mgr.request_work(&req);
                 leases.extend(batch.assignments.iter().map(|a| a.instance_id));
-                proto::write_message(
+                proto::write_message_buf(
                     &mut writer,
                     &Message::Assign {
                         assignments: batch.assignments,
                         prefetch: batch.prefetch,
                         replicate: batch.replicate,
                     },
+                    &mut scratch,
                 )?;
             }
             Message::Complete { instance, outputs } => {
@@ -148,9 +152,11 @@ fn serve_connection_inner(
 }
 
 /// Client-side [`WorkSource`] speaking the protocol over two sockets.
+/// Each channel owns a reusable frame buffer — the completion channel
+/// ships every stage output tensor, so per-frame allocation matters.
 pub struct RemoteManager {
-    work: Mutex<(BufReader<TcpStream>, BufWriter<TcpStream>)>,
-    completion: Mutex<BufWriter<TcpStream>>,
+    work: Mutex<(BufReader<TcpStream>, BufWriter<TcpStream>, Vec<u8>)>,
+    completion: Mutex<(BufWriter<TcpStream>, Vec<u8>)>,
 }
 
 impl RemoteManager {
@@ -161,8 +167,8 @@ impl RemoteManager {
         completion.set_nodelay(true).ok();
         let wr = work.try_clone().map_err(|e| Error::Net(e.to_string()))?;
         Ok(RemoteManager {
-            work: Mutex::new((BufReader::new(work), BufWriter::new(wr))),
-            completion: Mutex::new(BufWriter::new(completion)),
+            work: Mutex::new((BufReader::new(work), BufWriter::new(wr), Vec::new())),
+            completion: Mutex::new((BufWriter::new(completion), Vec::new())),
         })
     }
 }
@@ -170,7 +176,7 @@ impl RemoteManager {
 impl WorkSource for RemoteManager {
     fn request_work(&self, req: &WorkRequest) -> WorkBatch {
         let mut chan = self.work.lock().unwrap();
-        let (reader, writer) = &mut *chan;
+        let (reader, writer, scratch) = &mut *chan;
         let msg = Message::Request {
             capacity: req.capacity as u32,
             worker: req.worker,
@@ -179,7 +185,7 @@ impl WorkSource for RemoteManager {
             staged_drop: req.staged_drop.clone(),
             demoted: req.demoted.clone(),
         };
-        if proto::write_message(writer, &msg).is_err() {
+        if proto::write_message_buf(writer, &msg, scratch).is_err() {
             return WorkBatch::default();
         }
         match proto::read_message(reader) {
@@ -192,8 +198,12 @@ impl WorkSource for RemoteManager {
 
     fn complete(&self, instance_id: u64, outputs: Vec<crate::runtime::Value>) {
         let mut chan = self.completion.lock().unwrap();
-        let _ =
-            proto::write_message(&mut *chan, &Message::Complete { instance: instance_id, outputs });
+        let (writer, scratch) = &mut *chan;
+        let _ = proto::write_message_buf(
+            writer,
+            &Message::Complete { instance: instance_id, outputs },
+            scratch,
+        );
     }
 }
 

@@ -15,6 +15,7 @@
 //! mismatch is a decode error, not a silent misparse.
 
 use crate::coordinator::manager::Assignment;
+use crate::runtime::tensor::{f32s_from_le, f32s_to_le};
 use crate::runtime::{HostTensor, Value};
 use crate::{Error, Result};
 use std::io::{Read, Write};
@@ -81,13 +82,14 @@ fn put_value(buf: &mut Vec<u8>, v: &Value) {
         }
         Value::Tensor(t) => {
             buf.push(1);
+            buf.reserve(4 + t.shape().len() * 8 + t.size_bytes());
             put_u32(buf, t.shape().len() as u32);
             for &d in t.shape() {
                 put_u64(buf, d as u64);
             }
-            for &f in t.data() {
-                buf.extend_from_slice(&f.to_le_bytes());
-            }
+            // one bulk copy straight from the tensor's shared buffer —
+            // this is the wire-side half of the zero-copy datapath
+            f32s_to_le(buf, t.data());
         }
     }
 }
@@ -113,11 +115,15 @@ struct Cursor<'a> {
 
 impl<'a> Cursor<'a> {
     fn take(&mut self, n: usize) -> Result<&'a [u8]> {
-        if self.pos + n > self.data.len() {
-            return Err(Error::Net("truncated frame".into()));
-        }
-        let s = &self.data[self.pos..self.pos + n];
-        self.pos += n;
+        // checked: a corrupt length near usize::MAX must be a decode
+        // error, not a wrapping-add panic/misread
+        let end = self
+            .pos
+            .checked_add(n)
+            .filter(|&e| e <= self.data.len())
+            .ok_or_else(|| Error::Net("truncated frame".into()))?;
+        let s = &self.data[self.pos..end];
+        self.pos = end;
         Ok(s)
     }
 
@@ -149,13 +155,16 @@ impl<'a> Cursor<'a> {
                 for _ in 0..rank {
                     dims.push(self.u64()? as usize);
                 }
-                let n: usize = dims.iter().product();
-                let bytes = self.take(n * 4)?;
-                let mut data = Vec::with_capacity(n);
-                for c in bytes.chunks_exact(4) {
-                    data.push(f32::from_le_bytes(c.try_into().unwrap()));
-                }
-                Ok(Value::Tensor(HostTensor::new(dims, data)?))
+                // checked element count (same rule as the on-disk codec's
+                // decode_tensor): wrapped products must be decode errors,
+                // never a panic or a shape/data-inconsistent tensor
+                let n = dims
+                    .iter()
+                    .try_fold(1usize, |acc, &d| acc.checked_mul(d))
+                    .and_then(|n| n.checked_mul(4))
+                    .ok_or_else(|| Error::Net("tensor dims overflow".into()))?;
+                let bytes = self.take(n)?;
+                Ok(Value::Tensor(HostTensor::new(dims, f32s_from_le(bytes))?))
             }
             t => Err(Error::Net(format!("bad value tag {t}"))),
         }
@@ -180,6 +189,15 @@ impl<'a> Cursor<'a> {
 /// Encode a message (without the length prefix).
 pub fn encode(msg: &Message) -> Vec<u8> {
     let mut buf = Vec::new();
+    encode_into(msg, &mut buf);
+    buf
+}
+
+/// Encode a message into a caller-owned buffer (cleared first, capacity
+/// retained).  Connection loops reuse one scratch buffer across frames so
+/// steady-state encoding allocates nothing — see [`write_message_buf`].
+pub fn encode_into(msg: &Message, buf: &mut Vec<u8>) {
+    buf.clear();
     buf.push(PROTO_VERSION);
     match msg {
         Message::Request {
@@ -191,20 +209,20 @@ pub fn encode(msg: &Message) -> Vec<u8> {
             demoted,
         } => {
             buf.push(TAG_REQUEST);
-            put_u32(&mut buf, *capacity);
-            put_u64(&mut buf, *worker);
-            put_u32(&mut buf, *prefetch_budget);
-            put_ids(&mut buf, staged_add);
-            put_ids(&mut buf, staged_drop);
-            put_ids(&mut buf, demoted);
+            put_u32(buf, *capacity);
+            put_u64(buf, *worker);
+            put_u32(buf, *prefetch_budget);
+            put_ids(buf, staged_add);
+            put_ids(buf, staged_drop);
+            put_ids(buf, demoted);
         }
         Message::Assign { assignments, prefetch, replicate } => {
             buf.push(TAG_ASSIGN);
-            put_u32(&mut buf, assignments.len() as u32);
+            put_u32(buf, assignments.len() as u32);
             for a in assignments {
-                put_u64(&mut buf, a.instance_id);
-                put_u32(&mut buf, a.stage_idx as u32);
-                put_u64(&mut buf, a.chunk);
+                put_u64(buf, a.instance_id);
+                put_u32(buf, a.stage_idx as u32);
+                put_u64(buf, a.chunk);
                 let mut flags = 0u8;
                 if a.needs_chunk {
                     flags |= FLAG_NEEDS_CHUNK;
@@ -216,23 +234,22 @@ pub fn encode(msg: &Message) -> Vec<u8> {
                     flags |= FLAG_REPLICA;
                 }
                 buf.push(flags);
-                put_values(&mut buf, &a.inputs);
+                put_values(buf, &a.inputs);
             }
-            put_ids(&mut buf, prefetch);
-            put_ids(&mut buf, replicate);
+            put_ids(buf, prefetch);
+            put_ids(buf, replicate);
         }
         Message::Complete { instance, outputs } => {
             buf.push(TAG_COMPLETE);
-            put_u64(&mut buf, *instance);
-            put_values(&mut buf, outputs);
+            put_u64(buf, *instance);
+            put_values(buf, outputs);
         }
         Message::Fail { msg } => {
             buf.push(TAG_FAIL);
-            put_u32(&mut buf, msg.len() as u32);
+            put_u32(buf, msg.len() as u32);
             buf.extend_from_slice(msg.as_bytes());
         }
     }
-    buf
 }
 
 /// Decode a message payload.
@@ -300,9 +317,17 @@ pub fn decode(data: &[u8]) -> Result<Message> {
 
 /// Write one framed message.
 pub fn write_message<W: Write>(w: &mut W, msg: &Message) -> Result<()> {
-    let payload = encode(msg);
-    w.write_all(&(payload.len() as u32).to_le_bytes())
-        .and_then(|_| w.write_all(&payload))
+    write_message_buf(w, msg, &mut Vec::new())
+}
+
+/// [`write_message`] encoding through a caller-owned scratch buffer.
+/// Long-lived connections pass the same buffer every frame: after the
+/// first large tensor the buffer's capacity sticks, so per-frame encoding
+/// costs one bulk copy and zero allocations.
+pub fn write_message_buf<W: Write>(w: &mut W, msg: &Message, scratch: &mut Vec<u8>) -> Result<()> {
+    encode_into(msg, scratch);
+    w.write_all(&(scratch.len() as u32).to_le_bytes())
+        .and_then(|_| w.write_all(scratch))
         .and_then(|_| w.flush())
         .map_err(|e| Error::Net(e.to_string()))
 }
@@ -451,6 +476,18 @@ mod tests {
         assert!(decode(&[99]).is_err()); // bogus version byte
         assert!(decode(&[PROTO_VERSION, 99]).is_err()); // unknown tag
         assert!(decode(&[PROTO_VERSION, TAG_REQUEST, 1]).is_err()); // truncated
+        // overflowing tensor dims must be a decode error, not a wrapping
+        // product (which would panic in debug or smuggle in a tensor whose
+        // shape disagrees with its data in release)
+        let mut evil = vec![PROTO_VERSION, TAG_COMPLETE];
+        put_u64(&mut evil, 7); // instance
+        put_u32(&mut evil, 1); // one output value
+        evil.push(1); // tensor tag
+        put_u32(&mut evil, 2); // rank 2
+        put_u64(&mut evil, 1 << 62); // dims whose product wraps to 0
+        put_u64(&mut evil, 4);
+        let err = decode(&evil).unwrap_err();
+        assert!(err.to_string().contains("overflow"), "{err}");
         let mut enc = encode(&request(1));
         enc.push(0); // trailing byte
         assert!(decode(&enc).is_err());
@@ -459,6 +496,55 @@ mod tests {
         buf.extend_from_slice(&(MAX_FRAME + 1).to_le_bytes());
         let mut cur = std::io::Cursor::new(buf);
         assert!(read_message(&mut cur).is_err());
+    }
+
+    #[test]
+    fn encode_into_reuses_the_scratch_buffer() {
+        let big = Message::Complete {
+            instance: 1,
+            outputs: vec![Value::Tensor(HostTensor::new(vec![64, 64], vec![0.5; 4096]).unwrap())],
+        };
+        let mut scratch = Vec::new();
+        encode_into(&big, &mut scratch);
+        assert_eq!(decode(&scratch).unwrap(), big);
+        let cap = scratch.capacity();
+        assert!(cap >= 4096 * 4);
+        // a smaller frame reuses the grown allocation (no realloc, no
+        // stale bytes from the previous frame)
+        let small = Message::Fail { msg: "x".into() };
+        encode_into(&small, &mut scratch);
+        assert_eq!(scratch.capacity(), cap, "scratch capacity must be retained");
+        assert_eq!(decode(&scratch).unwrap(), small);
+        // and the framed writer through the same scratch stays correct
+        let mut wire = Vec::new();
+        write_message_buf(&mut wire, &big, &mut scratch).unwrap();
+        let mut cur = std::io::Cursor::new(wire);
+        assert_eq!(read_message(&mut cur).unwrap(), big);
+    }
+
+    #[test]
+    fn tensor_frames_are_bit_exact() {
+        // the bulk f32 copy must produce the exact per-element LE layout
+        let vals = vec![1.5f32, -2.25, 0.0, f32::MAX];
+        let msg = Message::Complete {
+            instance: 9,
+            outputs: vec![Value::Tensor(HostTensor::new(vec![4], vals.clone()).unwrap())],
+        };
+        let enc = encode(&msg);
+        // payload tail is the raw f32 LE bytes
+        let tail = &enc[enc.len() - 16..];
+        for (i, v) in vals.iter().enumerate() {
+            assert_eq!(&tail[i * 4..(i + 1) * 4], &v.to_le_bytes());
+        }
+        match decode(&enc).unwrap() {
+            Message::Complete { outputs, .. } => {
+                let t = outputs[0].as_tensor().unwrap();
+                for (a, b) in t.data().iter().zip(&vals) {
+                    assert_eq!(a.to_bits(), b.to_bits());
+                }
+            }
+            other => panic!("bad decode: {other:?}"),
+        }
     }
 
     #[test]

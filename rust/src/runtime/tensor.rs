@@ -3,6 +3,16 @@
 //! All artifact I/O is f32 (labels are exact small integers stored in f32 —
 //! see python/compile/model.py), so a single dense f32 tensor type plus a
 //! scalar wrapper covers every stream in the application.
+//!
+//! Tensors are **immutable-after-construction shared buffers**: both the
+//! payload and the shape live behind `Arc`s, so `HostTensor::clone` (and
+//! therefore `Value::clone`) is two reference-count bumps — O(1), never a
+//! byte copy.  Every hand-off in the runtime (WRM dispatch, stage-output
+//! collection, staging cache, Manager routing) relies on this: a 4K×4K f32
+//! tile is ~64 MB, and the paper's throughput target only holds if tiles
+//! move by reference.  The one mutation door, [`HostTensor::data_mut`], is
+//! copy-on-write (`Arc::make_mut`), so a writer can never scribble over a
+//! buffer another consumer still reads.  See docs/perf.md.
 
 use crate::{Error, Result};
 use std::sync::Arc;
@@ -10,7 +20,7 @@ use std::sync::Arc;
 /// Dense row-major f32 tensor.
 #[derive(Debug, Clone, PartialEq)]
 pub struct HostTensor {
-    shape: Vec<usize>,
+    shape: Arc<[usize]>,
     data: Arc<Vec<f32>>,
 }
 
@@ -25,16 +35,23 @@ impl HostTensor {
                 data.len()
             )));
         }
-        Ok(Self { shape, data: Arc::new(data) })
+        Ok(Self { shape: shape.into(), data: Arc::new(data) })
     }
 
     pub fn zeros(shape: Vec<usize>) -> Self {
         let n = shape.iter().product();
-        Self { shape, data: Arc::new(vec![0.0; n]) }
+        Self { shape: shape.into(), data: Arc::new(vec![0.0; n]) }
     }
 
     pub fn scalar(v: f32) -> Self {
-        Self { shape: vec![], data: Arc::new(vec![v]) }
+        Self { shape: Vec::new().into(), data: Arc::new(vec![v]) }
+    }
+
+    /// Whether `self` and `other` share one underlying payload buffer —
+    /// i.e. one was cloned from the other without a copy.  Tests use this
+    /// to pin the O(1)-clone guarantee.
+    pub fn shares_buffer(&self, other: &HostTensor) -> bool {
+        Arc::ptr_eq(&self.data, &other.data)
     }
 
     pub fn shape(&self) -> &[usize] {
@@ -145,6 +162,63 @@ impl Value {
             Value::Scalar(s) => Ok(xla::Literal::scalar(*s)),
         }
     }
+
+    /// Whether two values are tensors sharing one payload buffer (see
+    /// [`HostTensor::shares_buffer`]).  Scalars are inline; they never
+    /// "share".
+    pub fn shares_buffer(&self, other: &Value) -> bool {
+        match (self, other) {
+            (Value::Tensor(a), Value::Tensor(b)) => a.shares_buffer(b),
+            _ => false,
+        }
+    }
+}
+
+/// Append `data` to `buf` as packed little-endian f32 bytes in one bulk
+/// copy.  Shared by every tensor codec (`net::proto` frames, the `.tile` /
+/// `.spill` containers) so serialisation reads straight through the shared
+/// buffer — no per-element loop, no intermediate `Vec`.
+pub fn f32s_to_le(buf: &mut Vec<u8>, data: &[f32]) {
+    #[cfg(target_endian = "little")]
+    {
+        // SAFETY: on a little-endian target the in-memory representation of
+        // an f32 slice IS its packed LE byte encoding; f32 has no padding
+        // and u8 has alignment 1, so the cast view is always valid.
+        let bytes = unsafe {
+            std::slice::from_raw_parts(data.as_ptr() as *const u8, std::mem::size_of_val(data))
+        };
+        buf.extend_from_slice(bytes);
+    }
+    #[cfg(not(target_endian = "little"))]
+    for &f in data {
+        buf.extend_from_slice(&f.to_le_bytes());
+    }
+}
+
+/// Decode packed little-endian f32 bytes (inverse of [`f32s_to_le`]).
+/// `bytes.len()` must be a multiple of 4; the trailing remainder of a
+/// malformed slice is ignored, matching `chunks_exact`.
+pub fn f32s_from_le(bytes: &[u8]) -> Vec<f32> {
+    let n = bytes.len() / 4;
+    #[cfg(target_endian = "little")]
+    {
+        let mut data: Vec<f32> = vec![0.0; n];
+        // SAFETY: the destination holds exactly n initialised f32s; this is
+        // a plain byte copy (unaligned source is fine), and on a
+        // little-endian target those bytes are the f32 values themselves.
+        unsafe {
+            std::ptr::copy_nonoverlapping(bytes.as_ptr(), data.as_mut_ptr() as *mut u8, n * 4);
+        }
+        data
+    }
+    #[cfg(not(target_endian = "little"))]
+    {
+        let mut data = Vec::with_capacity(n);
+        for c in bytes.chunks_exact(4) {
+            data.push(f32::from_le_bytes(c.try_into().unwrap()));
+        }
+        data
+    }
 }
 
 #[cfg(test)]
@@ -187,5 +261,46 @@ mod tests {
         let v = Value::Tensor(HostTensor::scalar(4.0));
         assert_eq!(v.as_scalar().unwrap(), 4.0);
         assert_eq!(Value::Scalar(2.0).size_bytes(), 4);
+    }
+
+    #[test]
+    fn clone_shares_the_buffer() {
+        // the zero-copy contract: cloning a Value bumps the Arc, it never
+        // copies the payload (a 4Kx4K tile is ~64 MB — this is load-bearing)
+        let a = Value::tensor(vec![256, 256], vec![1.5; 256 * 256]).unwrap();
+        let b = a.clone();
+        assert!(a.shares_buffer(&b), "Value::clone must not copy the tensor buffer");
+        // an independent construction with equal contents does NOT share
+        let c = Value::tensor(vec![256, 256], vec![1.5; 256 * 256]).unwrap();
+        assert_eq!(a, c);
+        assert!(!a.shares_buffer(&c));
+        // copy-on-write breaks sharing instead of mutating through it
+        let (Value::Tensor(t), Value::Tensor(mut u)) = (a.clone(), b.clone()) else {
+            unreachable!()
+        };
+        u.data_mut()[0] = 9.0;
+        assert!(!t.shares_buffer(&u));
+        assert_eq!(t.data()[0], 1.5);
+        // scalars are inline values; shares_buffer is tensor-only
+        assert!(!Value::Scalar(1.0).shares_buffer(&Value::Scalar(1.0)));
+    }
+
+    #[test]
+    fn f32_le_codec_round_trips() {
+        let vals = vec![0.0f32, -1.5, f32::MIN_POSITIVE, 3.25e10, -0.0];
+        let mut buf = vec![0xAAu8]; // pre-existing bytes must be preserved
+        f32s_to_le(&mut buf, &vals);
+        assert_eq!(buf.len(), 1 + vals.len() * 4);
+        // byte-exact against the per-element encoding
+        for (i, v) in vals.iter().enumerate() {
+            assert_eq!(&buf[1 + i * 4..1 + (i + 1) * 4], &v.to_le_bytes());
+        }
+        // decode from an odd offset (unaligned source) must still work
+        let back = f32s_from_le(&buf[1..]);
+        assert_eq!(back.len(), vals.len());
+        for (a, b) in back.iter().zip(&vals) {
+            assert_eq!(a.to_bits(), b.to_bits(), "codec must be bit-exact");
+        }
+        assert!(f32s_from_le(&[]).is_empty());
     }
 }

@@ -100,7 +100,7 @@ fn staged_run_with_prefetch_hides_read_latency() {
         cpu_workers: 2,
         gpu_workers: 0,
         window: 2,
-        staging_cap: 16,
+        staging_cap: htap::config::CacheCap::Chunks(16),
         prefetch_depth: 4,
         ..Default::default()
     };
@@ -135,7 +135,7 @@ fn staged_run_without_prefetcher_still_completes() {
         cpu_workers: 1,
         gpu_workers: 0,
         window: 2,
-        staging_cap: 8,
+        staging_cap: htap::config::CacheCap::Chunks(8),
         prefetch_depth: 0, // no prefetcher thread
         chunk_locality: false,
         ..Default::default()
@@ -165,7 +165,7 @@ fn tight_staging_cap_evicts_and_reloads() {
         cpu_workers: 1,
         gpu_workers: 0,
         window: 4,
-        staging_cap: 1, // pathological: at most one staged chunk
+        staging_cap: htap::config::CacheCap::Chunks(1), // pathological: at most one staged chunk
         prefetch_depth: 0,
         ..Default::default()
     };
@@ -195,10 +195,10 @@ fn tight_cap_with_spill_dir_demotes_and_promotes() {
         cpu_workers: 1,
         gpu_workers: 0,
         window: 4,
-        staging_cap: 1, // pathological: at most one chunk in memory
+        staging_cap: htap::config::CacheCap::Chunks(1), // pathological: at most one chunk in memory
         prefetch_depth: 0,
         spill_dir: Some(spill_dir.to_string_lossy().into_owned()),
-        spill_cap: 16,
+        spill_cap: htap::config::CacheCap::Chunks(16),
         ..Default::default()
     };
     let outcome =
@@ -241,7 +241,7 @@ fn wsi_pipeline_runs_staged_from_a_tile_directory() {
         cpu_workers: 2,
         gpu_workers: 0,
         window: 2,
-        staging_cap: 8,
+        staging_cap: htap::config::CacheCap::Chunks(8),
         prefetch_depth: 2,
         ..Default::default()
     };

@@ -1,6 +1,7 @@
 #!/usr/bin/env bash
 # Record a perf-trajectory snapshot: run the fig7/fig8/fig9 bench
-# harnesses once and write their raw output (plus host metadata) as JSON.
+# harnesses plus the op-dispatch microbench (bench_dispatch) once and
+# write their raw output (plus host metadata) as JSON.
 #
 #   scripts/bench_baseline.sh [out.json]     # default: BENCH_seed.json
 #
@@ -14,7 +15,7 @@ out="${1:-BENCH_seed.json}"
 tmpdir="$(mktemp -d)"
 trap 'rm -rf "$tmpdir"' EXIT
 
-benches=(fig7_op_speedups fig8_placement fig9_coordination)
+benches=(fig7_op_speedups fig8_placement fig9_coordination bench_dispatch)
 for b in "${benches[@]}"; do
     echo "=== cargo bench --bench $b ===" >&2
     (cd rust && cargo bench --locked --bench "$b") >"$tmpdir/$b.txt" 2>&1
