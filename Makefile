@@ -4,6 +4,7 @@
 #   make test       — tier-1: cargo build --release && cargo test -q
 #   make artifacts  — AOT-lower the JAX graphs to artifacts/*.hlo.txt
 #   make lint       — clippy -D warnings + rustfmt check
+#   make check      — lint + cargo xtask lint + tier-1 tests + model suite
 #   make calibrate  — measure op costs on this host -> profiles.json
 #   make bench-baseline — record the fig7/8/9 snapshot (BENCH_seed.json)
 #   make smoke-distributed — localhost staged Manager + 2 TCP workers
@@ -11,7 +12,7 @@
 CARGO ?= cargo
 PYTHON ?= python3
 
-.PHONY: build test artifacts lint calibrate bench-baseline smoke-distributed clean
+.PHONY: build test artifacts lint check calibrate bench-baseline smoke-distributed clean
 
 build:
 	cd rust && $(CARGO) build --release
@@ -25,6 +26,15 @@ artifacts:
 lint:
 	cd rust && $(CARGO) clippy -- -D warnings
 	cd rust && $(CARGO) fmt --check
+
+# The full pre-merge gate: style lints, the repo's own lock-discipline
+# lint (docs/analysis.md), tier-1 tests, the xtask unit tests, and the
+# deterministic interleaving suite.
+check: lint
+	cd rust && $(CARGO) xtask lint
+	cd rust && $(CARGO) test -q
+	cd rust && $(CARGO) test -q -p xtask
+	cd rust && $(CARGO) test -q --features htap-model --test model_wrm
 
 calibrate:
 	cd rust && $(CARGO) run --release -- calibrate --out ../profiles.json

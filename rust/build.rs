@@ -1,0 +1,6 @@
+fn main() {
+    // `htap_model` is also accepted as a raw cfg (RUSTFLAGS="--cfg htap_model")
+    // so the model scheduler can be enabled without cargo features, e.g. from
+    // Miri or TSan wrappers; declare it so check-cfg lints stay quiet.
+    println!("cargo:rustc-check-cfg=cfg(htap_model)");
+}

@@ -418,6 +418,37 @@ mod tests {
     }
 
     #[test]
+    fn cache_cap_edge_cases() {
+        // "0MB" parses (it's a well-formed budget) but is_zero() flags it,
+        // and validate() rejects it like Chunks(0)
+        let zero = CacheCap::parse("0MB").unwrap();
+        assert_eq!(zero, CacheCap::Bytes(0));
+        assert!(zero.is_zero());
+        assert!(CacheCap::parse("0").unwrap().is_zero());
+        let mut c = RunConfig::default();
+        c.staging_cap = zero;
+        assert!(c.validate().is_err());
+
+        // byte budgets near u64::MAX must fail on checked_mul, not wrap
+        let e = CacheCap::parse("99999999999GB").unwrap_err();
+        assert!(e.to_string().contains("overflows"), "unexpected error: {e}");
+        let e = CacheCap::parse("18446744073709551615MB").unwrap_err();
+        assert!(e.to_string().contains("overflows"), "unexpected error: {e}");
+        // the largest representable budgets still parse
+        assert_eq!(CacheCap::parse("17179869183GB").unwrap(), CacheCap::Bytes(17179869183 << 30));
+
+        // garbage suffixes / digits are parse errors with the full input echoed
+        // note "+4MB" is NOT here: u64's FromStr accepts a leading '+'
+        for bad in ["64MBB", "MB", "1.5MB", "-2MB", "", " ", "0x10MB"] {
+            let e = CacheCap::parse(bad).unwrap_err();
+            assert!(
+                e.to_string().contains("bad cache cap"),
+                "'{bad}' gave unexpected error: {e}"
+            );
+        }
+    }
+
+    #[test]
     fn json_caps_accept_numbers_and_budget_strings() {
         let mut c = RunConfig::default();
         c.apply_json(&Json::parse(r#"{"staging_cap": "16MB", "spill_cap": "1GB"}"#).unwrap())

@@ -17,8 +17,9 @@ use crate::data::staging::{ChunkCatalog, WorkerId, ANON_WORKER};
 use crate::dataflow::{StageInput, StageKind, Workflow};
 use crate::runtime::Value;
 use crate::{Error, Result};
+use crate::runtime::sync::{self, Condvar, Mutex};
 use std::collections::{BTreeMap, HashMap, VecDeque};
-use std::sync::{Arc, Condvar, Mutex};
+use std::sync::Arc;
 
 /// Identifies a data chunk (e.g. one image tile).
 pub type ChunkId = u64;
@@ -303,7 +304,10 @@ impl Manager {
     /// Create the initial instances: every PerChunk stage whose inputs are
     /// all `Chunk` (no upstream), chunk-major so tiles flow in order.
     fn seed(&self) -> Result<()> {
-        let mut st = self.state.lock().unwrap();
+        // Runs once at startup before any worker contends for the lock, and
+        // may invoke the chunk loader (real I/O) — deliberately NOT marked
+        // as a lint critical section.
+        let mut st = sync::lock_clean(&self.state);
         // initialise waiting counters for dependent stages
         for (si, stage) in self.workflow.stages.iter().enumerate() {
             let ups = self.workflow.upstream_of(si);
@@ -407,19 +411,20 @@ impl Manager {
 
     /// Progress counters: (completed, total).
     pub fn progress(&self) -> (usize, usize) {
-        let st = self.state.lock().unwrap();
+        let st = sync::lock_clean(&self.state);
         let total = st.completed_instances + st.remaining_instances;
         (st.completed_instances, total)
     }
 
     /// First error reported by a worker, if any.
     pub fn error(&self) -> Option<String> {
-        self.state.lock().unwrap().error.clone()
+        sync::lock_clean(&self.state).error.clone()
     }
 
     /// Record a fatal worker error; unblocks all requesters.
     pub fn fail(&self, msg: String) {
-        let mut st = self.state.lock().unwrap();
+        // lint: critical-section — record the failure and flush the queues
+        let mut st = sync::lock_clean(&self.state);
         st.error = Some(msg);
         st.remaining_instances = 0;
         st.pending.clear();
@@ -432,7 +437,8 @@ impl Manager {
     /// demand-driven protocol makes this safe — instance ids are stable and
     /// duplicate completions are ignored).  Returns how many were requeued.
     pub fn requeue_stale(&self, ids: &[u64]) -> usize {
-        let mut st = self.state.lock().unwrap();
+        // lint: critical-section — re-issue dead workers' leases
+        let mut st = sync::lock_clean(&self.state);
         let mut n = 0;
         for id in ids {
             if let Some(a) = st.inflight.get(id).cloned() {
@@ -453,26 +459,26 @@ impl Manager {
 
     /// Number of duplicate/stale completions observed (metrics).
     pub fn stale_completions(&self) -> u64 {
-        self.state.lock().unwrap().stale_completions
+        sync::lock_clean(&self.state).stale_completions
     }
 
     /// Locality-policy counters: (hits, cold, steals) — assignments handed
     /// to the worker that staged the chunk / of chunks staged nowhere / of
     /// chunks staged on another worker.
     pub fn locality_stats(&self) -> (u64, u64, u64) {
-        let st = self.state.lock().unwrap();
+        let st = sync::lock_clean(&self.state);
         (st.locality_hits, st.locality_cold, st.locality_steals)
     }
 
     /// Steals that left the chunk multi-homed (replicate hints emitted).
     pub fn replicated(&self) -> u64 {
-        self.state.lock().unwrap().replicated
+        sync::lock_clean(&self.state).replicated
     }
 
     /// How many workers currently hold `chunk` in the catalog (any tier) —
     /// diagnostics/test hook.
     pub fn chunk_holders(&self, chunk: ChunkId) -> usize {
-        self.state.lock().unwrap().catalog.holder_count(chunk)
+        sync::lock_clean(&self.state).catalog.holder_count(chunk)
     }
 
     /// Forget a dead/disconnected worker's catalog entries so its chunks
@@ -483,7 +489,7 @@ impl Manager {
         if worker == ANON_WORKER {
             return 0;
         }
-        self.state.lock().unwrap().catalog.purge_worker(worker)
+        sync::lock_clean(&self.state).catalog.purge_worker(worker)
     }
 
     /// Outputs of a Reduce stage (after completion), looked up by stage
@@ -491,7 +497,7 @@ impl Manager {
     /// stage exists, it hasn't completed, or it isn't a Reduce stage.
     pub fn reduce_outputs(&self, stage: &str) -> Option<Vec<Value>> {
         let idx = self.workflow.stage_index(stage)?;
-        let st = self.state.lock().unwrap();
+        let st = sync::lock_clean(&self.state);
         st.outputs.get(&(idx, REDUCE_CHUNK)).cloned()
     }
 }
@@ -507,7 +513,8 @@ impl WorkSource for Manager {
     /// multi-homed and a replicate hint rides back) — the bag of tasks
     /// never stalls waiting for locality.
     fn request_work(&self, req: &WorkRequest) -> WorkBatch {
-        let mut st = self.state.lock().unwrap();
+        // lint: critical-section — tiered locality selection under the catalog lock
+        let mut st = sync::lock_clean(&self.state);
         if req.worker != ANON_WORKER {
             st.catalog.update(req.worker, &req.staged_add, &req.staged_drop, &req.demoted);
         }
@@ -526,7 +533,7 @@ impl WorkSource for Manager {
                             a.needs_chunk && st.catalog.is_staged(req.worker, a.chunk)
                         };
                         if hit {
-                            let mut a = st.pending.remove(i).unwrap();
+                            let Some(mut a) = st.pending.remove(i) else { break };
                             a.locality = true;
                             st.locality_hits += 1;
                             picked.push(a);
@@ -550,7 +557,7 @@ impl WorkSource for Manager {
                                         .unwrap_or(true))
                         };
                         if cold {
-                            let a = st.pending.remove(i).unwrap();
+                            let Some(a) = st.pending.remove(i) else { break };
                             if a.needs_chunk {
                                 st.locality_cold += 1;
                             }
@@ -575,7 +582,7 @@ impl WorkSource for Manager {
                                 i += 1;
                                 continue;
                             }
-                            let mut a = st.pending.remove(i).unwrap();
+                            let Some(mut a) = st.pending.remove(i) else { break };
                             if a.needs_chunk {
                                 if st.catalog.holder_count(a.chunk) == 0 {
                                     // foreign-home cold chunk: not a steal
@@ -648,12 +655,16 @@ impl WorkSource for Manager {
             if st.remaining_instances == 0 || st.error.is_some() {
                 return WorkBatch::default();
             }
-            st = self.cv.wait(st).unwrap();
+            st = match self.cv.wait(st) {
+                Ok(g) => g,
+                Err(p) => p.into_inner(),
+            };
         }
     }
 
     fn complete(&self, instance_id: u64, outs: Vec<Value>) {
-        let mut st = self.state.lock().unwrap();
+        // lint: critical-section — fold a completion into the dependency state
+        let mut st = sync::lock_clean(&self.state);
         let Some(assignment) = st.inflight.remove(&instance_id) else {
             // duplicate completion from a worker presumed dead whose lease
             // was re-issued and already completed — ignore, count it
@@ -702,13 +713,10 @@ impl WorkSource for Manager {
                             }
                         }
                     }
-                    st.reduce_acc
-                        .get_mut(&di)
-                        .unwrap()
-                        .entry(chunk)
-                        .or_default()
-                        .extend(picked);
-                    let rem = st.reduce_remaining.get_mut(&di).unwrap();
+                    if let Some(acc) = st.reduce_acc.get_mut(&di) {
+                        acc.entry(chunk).or_default().extend(picked);
+                    }
+                    let Some(rem) = st.reduce_remaining.get_mut(&di) else { continue };
                     *rem -= 1;
                     if *rem == 0 {
                         to_create.push((di, REDUCE_CHUNK));

@@ -20,10 +20,11 @@ use crate::data::staging::StagingCache;
 use crate::dataflow::{StageInput, Workflow};
 use crate::metrics::MetricsHub;
 use crate::runtime::calibrate::SharedProfiles;
+use crate::runtime::sync::{self, Condvar, Mutex};
 use crate::runtime::ArtifactManifest;
 use crate::{Error, Result};
 use std::collections::HashMap;
-use std::sync::{Arc, Condvar, Mutex};
+use std::sync::Arc;
 
 struct Flight {
     in_flight: usize,
@@ -160,14 +161,16 @@ pub fn run_worker_staged(
         let staging = staging.clone();
         let window = cfg.window;
         let prefetch = cfg.prefetch;
-        std::thread::Builder::new()
+        sync::thread::Builder::new()
             .name("htap-wcc-req".into())
             .spawn(move || {
                 let (lock, cv) = &*flight;
                 loop {
-                    // wait for capacity
+                    // wait for capacity.  The flight record is plain
+                    // counters, so poisoning (a panicked holder) recovers
+                    // the guard instead of cascading the panic.
                     let capacity = {
-                        let mut fl = lock.lock().unwrap();
+                        let mut fl = sync::lock_clean(lock);
                         loop {
                             if fl.failed.is_some() {
                                 fl.requester_done = true;
@@ -180,7 +183,10 @@ pub fn run_worker_staged(
                             if ready {
                                 break cap.max(1);
                             }
-                            fl = cv.wait(fl).unwrap();
+                            fl = match cv.wait(fl) {
+                                Ok(g) => g,
+                                Err(p) => p.into_inner(),
+                            };
                         }
                     };
                     let req = match &staging {
@@ -200,7 +206,7 @@ pub fn run_worker_staged(
                     };
                     let batch = source.request_work(&req);
                     if batch.assignments.is_empty() {
-                        let mut fl = lock.lock().unwrap();
+                        let mut fl = sync::lock_clean(lock);
                         fl.requester_done = true;
                         cv.notify_all();
                         drop(fl);
@@ -223,14 +229,14 @@ pub fn run_worker_staged(
                         s.cache.prefetch(&warm);
                     }
                     {
-                        let mut fl = lock.lock().unwrap();
+                        let mut fl = sync::lock_clean(lock);
                         fl.in_flight += batch.assignments.len();
                     }
                     for a in batch.assignments {
                         match materialize_inputs(&workflow, a, staging.as_deref()) {
                             Ok(a) => wrm.submit(a),
                             Err(e) => {
-                                let mut fl = lock.lock().unwrap();
+                                let mut fl = sync::lock_clean(lock);
                                 fl.failed = Some(e.to_string());
                                 fl.requester_done = true;
                                 cv.notify_all();
@@ -242,6 +248,7 @@ pub fn run_worker_staged(
                     }
                 }
             })
+            // lint: allow(panic) — failing to spawn at startup is fatal
             .expect("spawn requester")
     };
 
@@ -265,13 +272,13 @@ pub fn run_worker_staged(
                     newly_done += 1;
                 }
                 Err(msg) => {
-                    let mut fl = lock.lock().unwrap();
+                    let mut fl = sync::lock_clean(lock);
                     fl.failed = Some(msg);
                     cv.notify_all();
                 }
             }
         }
-        let mut fl = lock.lock().unwrap();
+        let mut fl = sync::lock_clean(lock);
         fl.in_flight = fl.in_flight.saturating_sub(newly_done);
         cv.notify_all();
         let finished = fl.in_flight == 0 && fl.requester_done;

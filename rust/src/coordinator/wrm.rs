@@ -30,6 +30,24 @@
 //!
 //! See docs/perf.md for the measured dispatch costs (`make bench` →
 //! `bench_dispatch`).
+//!
+//! The discipline is **machine-checked**, not comment-enforced (see
+//! docs/analysis.md):
+//!
+//! * `cargo xtask lint` denies payload byte-copies, op execution, codec
+//!   calls and I/O inside the sections marked `lint: critical-section`
+//!   below, and checks the crate-wide lock order `wrm` → `cache` →
+//!   `catalog`;
+//! * the mutex/condvars come from [`crate::runtime::sync`] — a zero-cost
+//!   std re-export in production, a deterministic-interleaving virtual
+//!   scheduler under `cfg(htap_model)` — and `tests/model_wrm.rs`
+//!   exhaustively explores bounded schedules of this dispatch/wakeup
+//!   protocol, asserting no deadlock and no lost wakeup;
+//! * in debug builds a [`HoldWatchdog`] times every marked section
+//!   against a microsecond budget (`HTAP_LOCK_BUDGET_US`);
+//! * mutex poisoning (a panic *inside* a critical section) becomes an
+//!   error completion via [`Wrm::lock_inner`], matching the op-panic
+//!   policy, instead of cascading unwraps across device threads.
 
 use super::manager::Assignment;
 use super::placement::{place_gpu_controller, NodeTopology};
@@ -41,8 +59,9 @@ use crate::runtime::calibrate::SharedProfiles;
 use crate::runtime::pjrt::{DeviceExecutor, ExecInput, PayloadKey};
 use crate::runtime::{ArtifactManifest, Value};
 use crate::{Error, Result};
+use crate::runtime::sync::{self, Condvar, HoldWatchdog, Mutex};
 use std::collections::{HashMap, VecDeque};
-use std::sync::{Arc, Condvar, Mutex};
+use std::sync::Arc;
 use std::time::Instant;
 
 /// A finished stage instance: (instance id, outputs or error message).
@@ -198,11 +217,22 @@ impl Wrm {
         }
     }
 
+    /// Acquire the WRM mutex, surfacing poisoning (a panic inside some
+    /// critical section) to the caller instead of cascading the panic
+    /// through every device thread.  Callers convert the error into an
+    /// error completion (`wait_completions`) or a clean thread exit.
+    fn lock_inner(&self) -> std::result::Result<sync::MutexGuard<'_, WrmInner>, sync::Poisoned> {
+        sync::lock_or_poisoned(&self.inner)
+    }
+
     /// Push an error completion and wake the completer (never the device
     /// threads — there is no new work for them in a failure).
     fn push_error(&self, instance: u64, msg: String) {
-        let mut inner = self.inner.lock().unwrap();
+        let Ok(mut inner) = self.lock_inner() else { return };
+        // lint: critical-section — completion push only
+        let hold = HoldWatchdog::new("wrm.push_error");
         inner.completions.push_back((instance, Err(msg)));
+        drop(hold);
         drop(inner);
         self.cv_done.notify_all();
     }
@@ -226,7 +256,12 @@ impl Wrm {
             producers.dedup();
             dep_remaining[oi] = producers.len();
         }
-        let mut inner = self.inner.lock().unwrap();
+        let Ok(mut inner) = self.lock_inner() else {
+            // poisoned: the run is failing; wait_completions reports it
+            return;
+        };
+        // lint: critical-section — instance insert + ready pushes only
+        let hold = HoldWatchdog::new("wrm.submit");
         let exec = InstExec {
             stage_idx: a.stage_idx,
             inputs: Arc::new(a.inputs),
@@ -257,13 +292,18 @@ impl Wrm {
                 any_gpu |= has_gpu_impl;
             }
         }
+        drop(hold);
         drop(inner);
         self.wake_device_threads(n_new, any_gpu);
     }
 
     /// Stop all device threads (after the queue drains).
     pub fn shutdown(&self) {
-        self.inner.lock().unwrap().shutdown = true;
+        if let Ok(mut inner) = self.lock_inner() {
+            inner.shutdown = true;
+        }
+        // on poisoning, still wake everyone: blocked waiters observe the
+        // poisoned condvar result and exit cleanly
         self.cv_cpu.notify_all();
         self.cv_gpu.notify_all();
         self.cv_done.notify_all();
@@ -271,13 +311,23 @@ impl Wrm {
 
     /// Wake a `wait_completions` caller even if nothing completed.
     pub fn poke(&self) {
-        self.inner.lock().unwrap().poked = true;
+        if let Ok(mut inner) = self.lock_inner() {
+            inner.poked = true;
+        }
         self.cv_done.notify_all();
     }
 
     /// Block until at least one completion (or a poke); drain all pending.
+    /// A poisoned WRM mutex (a panic inside a critical section) is
+    /// reported as an error completion on the `u64::MAX` sentinel
+    /// instance — the same channel GPU-init failures use — so the Worker
+    /// aborts the run instead of panicking in the completer.
     pub fn wait_completions(&self) -> Vec<Completion> {
-        let mut inner = self.inner.lock().unwrap();
+        const POISONED: &str = "wrm mutex poisoned (a critical section panicked)";
+        let Ok(mut inner) = self.lock_inner() else {
+            return vec![(u64::MAX, Err(POISONED.into()))];
+        };
+        // lint: critical-section — completion drain only
         loop {
             if !inner.completions.is_empty() {
                 return inner.completions.drain(..).collect();
@@ -286,7 +336,10 @@ impl Wrm {
                 inner.poked = false;
                 return Vec::new();
             }
-            inner = self.cv_done.wait(inner).unwrap();
+            inner = match self.cv_done.wait(inner) {
+                Ok(g) => g,
+                Err(_) => return vec![(u64::MAX, Err(POISONED.into()))],
+            };
         }
     }
 
@@ -367,11 +420,25 @@ impl Wrm {
         resident: Option<(usize, PayloadKey)>,
     ) -> Vec<u64> {
         let mut completed = Vec::new();
-        let mut inner = self.inner.lock().unwrap();
+        let Ok(mut inner) = self.lock_inner() else {
+            // poisoned: drop the result; wait_completions reports the failure
+            return completed;
+        };
+        // lint: critical-section — dependency bookkeeping + queue pushes only
+        let hold = HoldWatchdog::new("wrm.finish_op");
         let Some(exec) = inner.insts.get_mut(&key.0) else {
             return completed;
         };
         let stage = &self.workflow.stages[exec.stage_idx];
+        // single-writer invariant: each produced slot is written exactly
+        // once, by the device thread that executed its op (model-checked
+        // by tests/model_wrm.rs across interleavings)
+        debug_assert!(
+            exec.produced[key.1].is_none(),
+            "produced slot ({}, {}) written twice",
+            key.0,
+            key.1
+        );
         exec.produced[key.1] = Some(Arc::new(outs));
         if let Some(r) = resident {
             debug_assert_eq!(
@@ -411,13 +478,17 @@ impl Wrm {
             .collect();
         let stage_done = exec.ops_remaining == 0;
         if stage_done {
-            let exec = inner.insts.remove(&key.0).unwrap();
+            let Some(exec) = inner.insts.remove(&key.0) else {
+                // unreachable: get_mut above proved the entry exists
+                return completed;
+            };
             // resolution is O(outputs) Arc bumps over the removed
             // instance's shared handles — cheap enough to stay under the
             // single lock hold (the old cost, cloning the entire produced
             // table, is what this PR removed)
             let result = Self::resolve_stage_outputs(stage, &exec);
             inner.completions.push_back((key.0, result));
+            drop(hold);
             drop(inner);
             self.cv_done.notify_all();
             completed.push(key.0);
@@ -443,6 +514,7 @@ impl Wrm {
                 n_new += 1;
                 any_gpu |= has_gpu_impl;
             }
+            drop(hold);
             drop(inner);
             self.wake_device_threads(n_new, any_gpu);
         }
@@ -488,22 +560,30 @@ impl Wrm {
         loop {
             // critical section: pop + O(ports) handle gather, nothing else
             let (task, vals, stage_idx) = {
-                let mut inner = self.inner.lock().unwrap();
+                let Ok(mut inner) = self.lock_inner() else { return };
+                // lint: critical-section — pop + O(ports) handle gather only
                 loop {
                     if inner.shutdown {
                         return;
                     }
                     if let Some(task) = inner.queue.pop(DeviceKind::Cpu, 0, false) {
+                        let hold = HoldWatchdog::new("wrm.cpu_pop");
                         match Self::gather_host_inputs(&inner, &self.workflow, task.key) {
                             Ok((vals, stage_idx)) => break (task, vals, stage_idx),
                             Err(e) => {
                                 inner.completions.push_back((task.key.0, Err(e)));
                                 self.cv_done.notify_all();
+                                drop(hold);
                                 continue;
                             }
                         }
                     }
-                    inner = self.cv_cpu.wait(inner).unwrap();
+                    inner = match self.cv_cpu.wait(inner) {
+                        Ok(g) => g,
+                        // poisoned: another thread panicked under the lock;
+                        // the completer reports it, this thread just exits
+                        Err(_) => return,
+                    };
                 }
             };
             let op = &self.workflow.stages[stage_idx].ops[task.key.1];
@@ -551,7 +631,9 @@ impl Wrm {
             // values).  Plan *materialisation* (ExecInput refs, uploads)
             // and artifact resolution happen outside, on this thread.
             let picked = {
-                let mut inner = self.inner.lock().unwrap();
+                let Ok(mut inner) = self.lock_inner() else { return };
+                // lint: critical-section — pop + input-plan snapshot (Arc
+                // bumps / resident keys) only; materialisation runs outside
                 loop {
                     if inner.shutdown {
                         return;
@@ -559,7 +641,11 @@ impl Wrm {
                     if let Some(task) =
                         inner.queue.pop(DeviceKind::Gpu, gpu_id, self.cfg.data_locality)
                     {
-                        let Some(exec) = inner.insts.get(&task.key.0) else { continue };
+                        let hold = HoldWatchdog::new("wrm.gpu_pop");
+                        let Some(exec) = inner.insts.get(&task.key.0) else {
+                            drop(hold);
+                            continue;
+                        };
                         let stage_idx = exec.stage_idx;
                         let op = &self.workflow.stages[stage_idx].ops[task.key.1];
                         let mut plan: Vec<PlanSlot> =
@@ -612,11 +698,16 @@ impl Wrm {
                                 .completions
                                 .push_back((task.key.0, Err("missing op input".into())));
                             self.cv_done.notify_all();
+                            drop(hold);
                             continue;
                         }
                         break Some((task, stage_idx, plan));
                     }
-                    inner = self.cv_gpu.wait(inner).unwrap();
+                    inner = match self.cv_gpu.wait(inner) {
+                        Ok(g) => g,
+                        // poisoned: exit; the completer reports the failure
+                        Err(_) => return,
+                    };
                 }
             };
             let Some((task, stage_idx, plan)) = picked else { return };
@@ -673,11 +764,16 @@ impl Wrm {
                         }
                         // also evict payloads of instances completed elsewhere
                         let live: Vec<u64> = {
-                            let inner = self.inner.lock().unwrap();
-                            held.keys()
+                            let Ok(inner) = self.lock_inner() else { return };
+                            // lint: critical-section — liveness scan only
+                            let hold = HoldWatchdog::new("wrm.gpu_evict_scan");
+                            let scan = held
+                                .keys()
                                 .filter(|k| !inner.insts.contains_key(k))
                                 .copied()
-                                .collect()
+                                .collect();
+                            drop(hold);
+                            scan
                         };
                         for inst in live {
                             if let Some(keys) = held.remove(&inst) {
@@ -765,18 +861,23 @@ fn value_checksum(v: &Value) -> u64 {
 }
 
 /// Spawn the device threads for a WRM; returns their join handles.
+///
+/// Threads come from [`crate::runtime::sync::thread`] so that, under
+/// `cfg(htap_model)`, the device threads run inside the virtual scheduler
+/// and every spawn is an explored interleaving point.
 pub fn spawn_device_threads(
     wrm: &Arc<Wrm>,
     cfg: &RunConfig,
     topo: &NodeTopology,
-) -> Vec<std::thread::JoinHandle<()>> {
+) -> Vec<sync::thread::JoinHandle<()>> {
     let mut handles = Vec::new();
     for c in 0..cfg.cpu_workers {
         let w = wrm.clone();
         handles.push(
-            std::thread::Builder::new()
+            sync::thread::Builder::new()
                 .name(format!("htap-cpu-{c}"))
                 .spawn(move || w.cpu_thread(c))
+                // lint: allow(panic) — failing to spawn at startup is fatal
                 .expect("spawn cpu thread"),
         );
     }
@@ -785,9 +886,10 @@ pub fn spawn_device_threads(
         let topo = topo.clone();
         let placement = cfg.placement;
         handles.push(
-            std::thread::Builder::new()
+            sync::thread::Builder::new()
                 .name(format!("htap-gpu-{g}"))
                 .spawn(move || w.gpu_thread(g, &topo, placement))
+                // lint: allow(panic) — failing to spawn at startup is fatal
                 .expect("spawn gpu thread"),
         );
     }

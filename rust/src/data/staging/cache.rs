@@ -24,11 +24,12 @@ use super::tiers::SpillTier;
 use crate::config::CacheCap;
 use crate::coordinator::ChunkId;
 use crate::metrics::StagingReport;
+use crate::runtime::sync::{self, Condvar, HoldWatchdog, Mutex};
 use crate::runtime::Value;
-use crate::Result;
+use crate::{Error, Result};
 use std::collections::{HashMap, VecDeque};
 use std::sync::atomic::{AtomicU64, Ordering};
-use std::sync::{Arc, Condvar, Mutex};
+use std::sync::Arc;
 use std::time::{Duration, Instant};
 
 /// Payload footprint of one staged chunk (tensor dims -> bytes).
@@ -157,9 +158,10 @@ impl StagingCache {
         });
         if depth > 0 {
             let c = cache.clone();
-            std::thread::Builder::new()
+            sync::thread::Builder::new()
                 .name("htap-prefetch".into())
                 .spawn(move || c.prefetch_loop())
+                // lint: allow(panic) — failing to spawn at startup is fatal
                 .expect("spawn prefetcher");
         }
         cache
@@ -176,13 +178,17 @@ impl StagingCache {
         if self.depth == 0 {
             return;
         }
-        let mut inner = self.inner.lock().unwrap();
+        // hint path: recover from poisoning, hints are best-effort
+        let mut inner = sync::lock_clean(&self.inner);
+        // lint: critical-section — queue pushes only
+        let hold = HoldWatchdog::new("cache.prefetch_enqueue");
         for &c in chunks {
             if inner.slots.contains_key(&c) || inner.queue.contains(&c) {
                 continue;
             }
             inner.queue.push_back(c);
         }
+        drop(hold);
         drop(inner);
         self.cv.notify_all();
     }
@@ -195,7 +201,8 @@ impl StagingCache {
         if self.depth == 0 || chunks.is_empty() {
             return;
         }
-        let mut inner = self.inner.lock().unwrap();
+        let mut inner = sync::lock_clean(&self.inner);
+        // lint: critical-section — queue pushes only
         let mut n = 0u64;
         for &c in chunks {
             if inner.slots.contains_key(&c) || inner.queue.contains(&c) {
@@ -220,7 +227,10 @@ impl StagingCache {
         prefetched: bool,
         claimed: bool,
     ) -> Option<Arc<Vec<Value>>> {
-        let vals = inner.spill.as_mut().and_then(|s| s.get(chunk))?;
+        // lint: critical-section — caller holds the cache lock
+        let spill = inner.spill.as_mut()?;
+        // lint: allow(io) — spill promotion reads cheap local disk by design
+        let vals = spill.get(chunk)?;
         let vals = Arc::new(vals);
         inner.mem_bytes += payload_bytes(&vals);
         inner.slots.insert(
@@ -252,7 +262,10 @@ impl StagingCache {
         }
         loop {
             let next = {
-                let mut inner = self.inner.lock().unwrap();
+                // poisoned = some critical section panicked; the prefetcher
+                // just exits, demand loads still serve the run
+                let Ok(mut inner) = sync::lock_or_poisoned(&self.inner) else { return };
+                // lint: critical-section — queue pop + spill promotion only
                 loop {
                     if inner.shutdown {
                         return;
@@ -268,7 +281,12 @@ impl StagingCache {
                             inner.slots.insert(c, Slot::Loading);
                             break Next::Load(c);
                         }
-                        None => inner = self.cv.wait(inner).unwrap(),
+                        None => {
+                            inner = match self.cv.wait(inner) {
+                                Ok(g) => g,
+                                Err(_) => return,
+                            }
+                        }
                     }
                 }
             };
@@ -282,7 +300,10 @@ impl StagingCache {
             let t0 = Instant::now();
             let loaded = self.source.load(chunk);
             let load = t0.elapsed();
-            let mut inner = self.inner.lock().unwrap();
+            let Ok(mut inner) = sync::lock_or_poisoned(&self.inner) else { return };
+            // lint: critical-section — record payload + eviction scan only
+            // (spill budget: demotion may write local disk)
+            let hold = HoldWatchdog::with_budget_us("cache.prefetch_record", 5_000);
             match loaded {
                 Ok(vals) => {
                     inner.mem_bytes += payload_bytes(&vals);
@@ -305,6 +326,7 @@ impl StagingCache {
                     inner.slots.remove(&chunk);
                 }
             }
+            drop(hold);
             drop(inner);
             self.cv.notify_all();
         }
@@ -313,9 +335,15 @@ impl StagingCache {
     /// Fetch one chunk's payload: staged hit, wait on an in-flight
     /// prefetch, or demand-load on this thread.
     pub fn get(&self, chunk: ChunkId) -> Result<Arc<Vec<Value>>> {
+        const POISONED: &str = "staging cache poisoned (a critical section panicked)";
         let t_req = Instant::now();
         let mut counted = false;
-        let mut inner = self.inner.lock().unwrap();
+        let Ok(mut inner) = sync::lock_or_poisoned(&self.inner) else {
+            // demand path: surface poisoning as an error so the worker
+            // fails the assignment instead of cascading the panic
+            return Err(Error::Scheduler(POISONED.into()));
+        };
+        // lint: critical-section — slot lookup/claim + LRU bump only
         loop {
             let lookup = match inner.slots.get_mut(&chunk) {
                 Some(Slot::Ready { vals, prefetched, load, claimed, from_spill }) => {
@@ -362,7 +390,10 @@ impl StagingCache {
                         self.hits.fetch_add(1, Ordering::Relaxed);
                         counted = true;
                     }
-                    inner = self.cv.wait(inner).unwrap();
+                    inner = match self.cv.wait(inner) {
+                        Ok(g) => g,
+                        Err(_) => return Err(Error::Scheduler(POISONED.into())),
+                    };
                 }
                 Lookup::Load => {
                     if !counted {
@@ -378,10 +409,18 @@ impl StagingCache {
                     }
                     inner.slots.insert(chunk, Slot::Loading);
                     drop(inner);
+                    // lint: end-critical-section — the expensive source
+                    // read runs unlocked; compute threads keep hitting
                     let t0 = Instant::now();
                     let loaded = self.source.load(chunk);
                     let load = t0.elapsed();
-                    inner = self.inner.lock().unwrap();
+                    inner = match sync::lock_or_poisoned(&self.inner) {
+                        Ok(g) => g,
+                        Err(_) => return Err(Error::Scheduler(POISONED.into())),
+                    };
+                    // lint: critical-section — record payload + eviction
+                    // scan only (spill budget: demotion may write disk)
+                    let hold = HoldWatchdog::with_budget_us("cache.demand_record", 5_000);
                     match loaded {
                         Ok(vals) => {
                             let vals = Arc::new(vals);
@@ -400,12 +439,14 @@ impl StagingCache {
                             inner.staged.push(chunk);
                             self.stall_ns.fetch_add(load.as_nanos() as u64, Ordering::Relaxed);
                             self.evict_excess(&mut inner);
+                            drop(hold);
                             drop(inner);
                             self.cv.notify_all();
                             return Ok(vals);
                         }
                         Err(e) => {
                             inner.slots.remove(&chunk);
+                            drop(hold);
                             drop(inner);
                             self.cv.notify_all();
                             return Err(e);
@@ -431,6 +472,7 @@ impl StagingCache {
     /// or if the disk write fails — it is dropped and reported evicted.
     /// Caller holds the lock.
     fn evict_excess(&self, inner: &mut Inner) {
+        // lint: critical-section — caller holds the cache lock
         while self.over_budget(inner) {
             let pos = inner
                 .order
@@ -449,6 +491,7 @@ impl StagingCache {
             let mut demoted = false;
             if let Some(vals) = vals.as_ref() {
                 if let Some(spill) = inner.spill.as_mut() {
+                    // lint: allow(io) — demotion writes cheap local disk by design
                     if let Ok(dropped) = spill.put(c, vals) {
                         demoted = true;
                         dropped_from_disk = dropped;
@@ -477,7 +520,8 @@ impl StagingCache {
     /// since the last call — piggybacked on the next work request so the
     /// Manager's catalog tracks this worker (and each chunk's tier).
     pub fn take_staged_delta(&self) -> (Vec<ChunkId>, Vec<ChunkId>, Vec<ChunkId>) {
-        let mut inner = self.inner.lock().unwrap();
+        // delta reporting degrades gracefully on poisoning
+        let mut inner = sync::lock_clean(&self.inner);
         (
             std::mem::take(&mut inner.staged),
             std::mem::take(&mut inner.evicted),
@@ -487,23 +531,17 @@ impl StagingCache {
 
     /// Whether a chunk is currently staged (Ready) — test/diagnostic hook.
     pub fn is_staged(&self, chunk: ChunkId) -> bool {
-        matches!(self.inner.lock().unwrap().slots.get(&chunk), Some(Slot::Ready { .. }))
+        matches!(sync::lock_clean(&self.inner).slots.get(&chunk), Some(Slot::Ready { .. }))
     }
 
     /// Whether a chunk currently sits in the spill tier — test hook.
     pub fn is_spilled(&self, chunk: ChunkId) -> bool {
-        self.inner
-            .lock()
-            .unwrap()
-            .spill
-            .as_ref()
-            .map(|s| s.contains(chunk))
-            .unwrap_or(false)
+        sync::lock_clean(&self.inner).spill.as_ref().map(|s| s.contains(chunk)).unwrap_or(false)
     }
 
     /// Stop the prefetcher thread.
     pub fn shutdown(&self) {
-        self.inner.lock().unwrap().shutdown = true;
+        sync::lock_clean(&self.inner).shutdown = true;
         self.cv.notify_all();
     }
 

@@ -111,12 +111,14 @@ pub(crate) fn take_bytes<'a>(bytes: &'a [u8], pos: &mut usize, n: usize) -> Resu
 /// overflow) is an `Err`, never a panic — the spill tier relies on that
 /// to treat damaged files as cache misses.
 pub(crate) fn decode_tensor(bytes: &[u8], pos: &mut usize) -> Result<HostTensor> {
+    // lint: allow(panic) — take_bytes guarantees a 4-byte slice
     let rank = u32::from_le_bytes(take_bytes(bytes, pos, 4)?.try_into().unwrap()) as usize;
     if rank > 8 {
         return Err(Error::Config(format!("tensor rank {rank} too large")));
     }
     let mut dims = Vec::with_capacity(rank);
     for _ in 0..rank {
+        // lint: allow(panic) — take_bytes guarantees an 8-byte slice
         dims.push(u64::from_le_bytes(take_bytes(bytes, pos, 8)?.try_into().unwrap()) as usize);
     }
     let n = dims
@@ -181,6 +183,7 @@ impl DirSource {
         if bytes.len() < 12 || &bytes[..4] != TILE_MAGIC {
             return Err(fail("not an htap .tile file"));
         }
+        // lint: allow(panic) — length checked above, fixed 4-byte slice
         let version = u32::from_le_bytes(bytes[4..8].try_into().unwrap());
         if version != TILE_VERSION {
             return Err(fail(&format!("tile format version {version}, expected {TILE_VERSION}")));

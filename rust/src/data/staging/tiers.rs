@@ -190,19 +190,30 @@ impl SpillTier {
         if bytes.len() < 12 || &bytes[..4] != SPILL_MAGIC {
             return Err(Error::Config("not an htap .spill file".into()));
         }
+        // lint: allow(panic) — length checked above, fixed 4-byte slice
         let version = u32::from_le_bytes(bytes[4..8].try_into().unwrap());
         if version != SPILL_VERSION {
             return Err(Error::Config(format!(
                 "spill format version {version}, expected {SPILL_VERSION}"
             )));
         }
+        // lint: allow(panic) — length checked above, fixed 4-byte slice
         let count = u32::from_le_bytes(bytes[8..12].try_into().unwrap()) as usize;
         let mut pos = 12;
+        // bound the count by the bytes actually present (tag + f32 = 5
+        // minimum per value) so a corrupt header can't force a huge
+        // preallocation before decoding hits the truncation error
+        if count.saturating_mul(5) > bytes.len() - pos {
+            return Err(Error::Config(format!(
+                "spill value count {count} exceeds file size"
+            )));
+        }
         let mut vals = Vec::with_capacity(count);
         for _ in 0..count {
             match take_bytes(&bytes, &mut pos, 1)?[0] {
                 TAG_SCALAR => {
                     let raw = take_bytes(&bytes, &mut pos, 4)?;
+                    // lint: allow(panic) — take_bytes guarantees a 4-byte slice
                     vals.push(Value::Scalar(f32::from_le_bytes(raw.try_into().unwrap())));
                 }
                 TAG_TENSOR => vals.push(Value::Tensor(decode_tensor(&bytes, &mut pos)?)),

@@ -20,12 +20,13 @@
 pub mod proto;
 
 use crate::coordinator::manager::{Manager, WorkBatch, WorkRequest, WorkSource};
+use crate::runtime::sync::{self, Mutex};
 use crate::{Error, Result};
 use proto::Message;
 use std::io::{BufReader, BufWriter};
 use std::net::{TcpListener, TcpStream};
 use std::sync::atomic::{AtomicBool, Ordering};
-use std::sync::{Arc, Mutex};
+use std::sync::Arc;
 
 /// Serve an in-process [`Manager`] to remote Workers.  Returns once the
 /// workflow completes and all workers disconnected.
@@ -175,7 +176,12 @@ impl RemoteManager {
 
 impl WorkSource for RemoteManager {
     fn request_work(&self, req: &WorkRequest) -> WorkBatch {
-        let mut chan = self.work.lock().unwrap();
+        // a poisoned channel means a frame writer panicked mid-stream: the
+        // connection state is unusable, so report "workflow over" and let
+        // the worker wind down instead of cascading the panic
+        let Ok(mut chan) = sync::lock_or_poisoned(&self.work) else {
+            return WorkBatch::default();
+        };
         let (reader, writer, scratch) = &mut *chan;
         let msg = Message::Request {
             capacity: req.capacity as u32,
@@ -197,7 +203,11 @@ impl WorkSource for RemoteManager {
     }
 
     fn complete(&self, instance_id: u64, outputs: Vec<crate::runtime::Value>) {
-        let mut chan = self.completion.lock().unwrap();
+        // poisoned → drop the completion; the manager's fault-tolerance
+        // path re-issues the lease when the connection dies
+        let Ok(mut chan) = sync::lock_or_poisoned(&self.completion) else {
+            return;
+        };
         let (writer, scratch) = &mut *chan;
         let _ = proto::write_message_buf(
             writer,

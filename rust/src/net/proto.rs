@@ -131,15 +131,38 @@ impl<'a> Cursor<'a> {
         Ok(self.take(1)?[0])
     }
 
+    fn remaining(&self) -> usize {
+        self.data.len() - self.pos
+    }
+
+    /// Read a count prefix, bounding it by the bytes actually left in the
+    /// frame (`min_elem_bytes` per element).  A hostile count must fail
+    /// here — *before* any `Vec::with_capacity`-style preallocation — or a
+    /// 6-byte frame could claim 2^32 elements and force a multi-gigabyte
+    /// allocation ahead of the truncation error.
+    fn count(&mut self, min_elem_bytes: usize) -> Result<usize> {
+        let n = self.u32()? as usize;
+        if n.saturating_mul(min_elem_bytes) > self.remaining() {
+            return Err(Error::Net(format!(
+                "count {n} exceeds frame ({} bytes left)",
+                self.remaining()
+            )));
+        }
+        Ok(n)
+    }
+
     fn u32(&mut self) -> Result<u32> {
+        // lint: allow(panic) — take() guarantees a 4-byte slice
         Ok(u32::from_le_bytes(self.take(4)?.try_into().unwrap()))
     }
 
     fn u64(&mut self) -> Result<u64> {
+        // lint: allow(panic) — take() guarantees an 8-byte slice
         Ok(u64::from_le_bytes(self.take(8)?.try_into().unwrap()))
     }
 
     fn f32(&mut self) -> Result<f32> {
+        // lint: allow(panic) — take() guarantees a 4-byte slice
         Ok(f32::from_le_bytes(self.take(4)?.try_into().unwrap()))
     }
 
@@ -171,12 +194,12 @@ impl<'a> Cursor<'a> {
     }
 
     fn values(&mut self) -> Result<Vec<Value>> {
-        let n = self.u32()? as usize;
+        let n = self.count(5)?; // tag byte + f32 scalar at minimum
         (0..n).map(|_| self.value()).collect()
     }
 
     fn ids(&mut self) -> Result<Vec<u64>> {
-        let n = self.u32()? as usize;
+        let n = self.count(8)?;
         (0..n).map(|_| self.u64()).collect()
     }
 
@@ -279,7 +302,8 @@ pub fn decode(data: &[u8]) -> Result<Message> {
             }
         }
         TAG_ASSIGN => {
-            let n = c.u32()? as usize;
+            // id + stage + chunk + flags + input count = 25 bytes minimum
+            let n = c.count(25)?;
             let mut assignments = Vec::with_capacity(n);
             for _ in 0..n {
                 let instance_id = c.u64()?;

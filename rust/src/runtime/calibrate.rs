@@ -30,7 +30,7 @@ use crate::runtime::pjrt::DeviceExecutor;
 use crate::runtime::Value;
 use crate::{Error, Result};
 use std::collections::BTreeMap;
-use std::sync::Mutex;
+use crate::runtime::sync::{self, Mutex};
 use std::time::{Duration, Instant};
 
 /// Format version written to / required from `profiles.json`.
@@ -326,7 +326,8 @@ impl SharedProfiles {
 
     /// Fold a completed task's execution time into the EWMA estimates.
     pub fn record(&self, op: &str, device: DeviceKind, elapsed: Duration) {
-        self.inner.lock().unwrap().record(op, device, elapsed);
+        // EWMA bookkeeping is best-effort: recover the guard on poisoning
+        sync::lock_clean(&self.inner).record(op, device, elapsed);
     }
 
     /// Fold a measured *end-to-end* accelerator execution (upload +
@@ -336,19 +337,19 @@ impl SharedProfiles {
     /// transfer-inclusive) measured speedup by the static Fig. 7
     /// transfer impact a second time.
     pub fn record_accelerator(&self, op: &str, elapsed: Duration) {
-        let mut inner = self.inner.lock().unwrap();
+        let mut inner = sync::lock_clean(&self.inner);
         inner.record(op, DeviceKind::Gpu, elapsed);
         inner.record_transfer_impact(op, 0.0);
     }
 
     /// Current measured estimate for an op (None -> static fallback).
     pub fn estimate(&self, op: &str) -> Option<Estimate> {
-        self.inner.lock().unwrap().estimate(op)
+        sync::lock_clean(&self.inner).estimate(op)
     }
 
     /// Clone the current store (for saving back to `profiles.json`).
     pub fn snapshot(&self) -> ProfileStore {
-        self.inner.lock().unwrap().clone()
+        sync::lock_clean(&self.inner).clone()
     }
 }
 

@@ -12,6 +12,7 @@
 pub mod artifacts;
 pub mod calibrate;
 pub mod pjrt;
+pub mod sync;
 pub mod tensor;
 
 pub use artifacts::{ArtifactManifest, ModuleMeta};

@@ -1,0 +1,239 @@
+//! Synchronisation shim for the concurrency core (WRM + staging cache).
+//!
+//! In production builds this module is a **zero-cost re-export** of
+//! `std::sync::{Mutex, Condvar}` and `std::thread` — there is no wrapper
+//! type, no branch, nothing between the caller and std.  Under
+//! `cfg(htap_model)` (or the `htap-model` cargo feature) the same names
+//! resolve to the deterministic-interleaving types in [`model`]: a virtual
+//! scheduler serialises every thread at each lock / unlock / wait / notify
+//! / spawn boundary and enumerates bounded interleavings, so
+//! `rust/tests/model_wrm.rs` can assert "no deadlock, no lost wakeup"
+//! over the dispatch protocol instead of hoping.  See docs/analysis.md.
+//!
+//! The module also carries two small discipline helpers used on the worker
+//! hot paths regardless of build:
+//!
+//! * [`lock_or_poisoned`] / [`lock_clean`] — poisoning policy.  A poisoned
+//!   mutex means a thread panicked *inside* a critical section; the WRM
+//!   converts that into an error completion (the same policy as op
+//!   panics), and best-effort stats holders just recover the guard.
+//! * [`HoldWatchdog`] — debug-build lock-hold-time watchdog.  The zero-copy
+//!   dispatch discipline (see `coordinator::wrm`) promises microsecond-scale
+//!   critical sections; the watchdog times each marked section and warns
+//!   (or, with `HTAP_LOCK_STRICT=1`, panics) when one blows its budget, so
+//!   a discipline regression that slips past `cargo xtask lint` still
+//!   surfaces in any debug test run.
+
+#[cfg(any(htap_model, feature = "htap-model"))]
+pub mod model;
+
+#[cfg(not(any(htap_model, feature = "htap-model")))]
+pub use std::sync::{Condvar, Mutex, MutexGuard};
+
+#[cfg(not(any(htap_model, feature = "htap-model")))]
+pub mod thread {
+    //! Re-export of [`std::thread`] (production builds).
+    pub use std::thread::*;
+}
+
+#[cfg(any(htap_model, feature = "htap-model"))]
+pub use model::{Condvar, Mutex, MutexGuard};
+
+#[cfg(any(htap_model, feature = "htap-model"))]
+pub use model::thread;
+
+/// Marker error for [`lock_or_poisoned`]: the mutex was poisoned by a
+/// panic inside a critical section.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct Poisoned;
+
+impl std::fmt::Display for Poisoned {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "mutex poisoned by a panicking critical section")
+    }
+}
+
+/// Acquire `m`, surfacing poisoning as an error instead of a panic.
+///
+/// Hot-path callers (WRM device threads, the staging cache's demand path)
+/// turn the error into an **error completion** so one panicked critical
+/// section aborts the run cleanly instead of cascading `unwrap` panics
+/// through every thread that touches the lock afterwards.
+pub fn lock_or_poisoned<T>(m: &Mutex<T>) -> std::result::Result<MutexGuard<'_, T>, Poisoned> {
+    m.lock().map_err(|_| Poisoned)
+}
+
+/// Acquire `m`, recovering the guard if the mutex is poisoned.
+///
+/// For best-effort state (metrics deltas, EWMA profile stats, the
+/// manager's bookkeeping) where the data is plain counters/maps and
+/// continuing with the last consistent-enough view beats killing the
+/// whole process.  The first recovery per process logs a warning so
+/// poisoning never goes completely silent.
+pub fn lock_clean<T>(m: &Mutex<T>) -> MutexGuard<'_, T> {
+    match m.lock() {
+        Ok(g) => g,
+        Err(p) => {
+            warn_poison_once();
+            p.into_inner()
+        }
+    }
+}
+
+fn warn_poison_once() {
+    use std::sync::atomic::{AtomicBool, Ordering};
+    static WARNED: AtomicBool = AtomicBool::new(false);
+    if !WARNED.swap(true, Ordering::Relaxed) {
+        eprintln!(
+            "htap: recovered a poisoned mutex (a critical section panicked); \
+             continuing best-effort — see docs/analysis.md"
+        );
+    }
+}
+
+/// Debug-build lock-hold-time watchdog.
+///
+/// Construct one immediately after acquiring a marked critical section:
+///
+/// ```ignore
+/// let mut inner = sync::lock_or_poisoned(&self.inner)?;
+/// let _hold = HoldWatchdog::new("wrm.finish_op");
+/// ```
+///
+/// Declared *after* the guard, it drops *before* the guard releases, so it
+/// measures the true hold time.  Release builds and `htap_model` builds
+/// compile it to nothing.  Budget: `HTAP_LOCK_BUDGET_US` (default 250 µs —
+/// generous for O(ports) pointer work even in unoptimised builds); set
+/// `HTAP_LOCK_STRICT=1` to turn the warning into a panic (which the
+/// surrounding poisoning policy then converts into an error completion).
+///
+/// Sections that legitimately touch local disk under their lock (the
+/// spill tier) use [`HoldWatchdog::with_budget_us`] with a millisecond
+/// budget instead.
+pub struct HoldWatchdog {
+    #[cfg(all(debug_assertions, not(any(htap_model, feature = "htap-model"))))]
+    inner: watchdog_impl::Active,
+}
+
+impl HoldWatchdog {
+    #[inline]
+    pub fn new(site: &'static str) -> Self {
+        Self::with_budget_us(site, 0)
+    }
+
+    /// Watchdog with an explicit budget in microseconds (0 = the default
+    /// `HTAP_LOCK_BUDGET_US` budget).
+    #[inline]
+    pub fn with_budget_us(site: &'static str, budget_us: u64) -> Self {
+        #[cfg(all(debug_assertions, not(any(htap_model, feature = "htap-model"))))]
+        {
+            HoldWatchdog { inner: watchdog_impl::Active::new(site, budget_us) }
+        }
+        #[cfg(not(all(debug_assertions, not(any(htap_model, feature = "htap-model")))))]
+        {
+            let _ = (site, budget_us);
+            HoldWatchdog {}
+        }
+    }
+}
+
+#[cfg(all(debug_assertions, not(any(htap_model, feature = "htap-model"))))]
+mod watchdog_impl {
+    use std::time::{Duration, Instant};
+
+    pub struct Active {
+        site: &'static str,
+        budget: Duration,
+        start: Instant,
+    }
+
+    fn default_budget_us() -> u64 {
+        use std::sync::OnceLock;
+        static BUDGET: OnceLock<u64> = OnceLock::new();
+        *BUDGET.get_or_init(|| {
+            std::env::var("HTAP_LOCK_BUDGET_US")
+                .ok()
+                .and_then(|s| s.parse().ok())
+                .unwrap_or(250)
+        })
+    }
+
+    fn strict() -> bool {
+        use std::sync::OnceLock;
+        static STRICT: OnceLock<bool> = OnceLock::new();
+        *STRICT.get_or_init(|| {
+            std::env::var("HTAP_LOCK_STRICT").map(|v| v == "1").unwrap_or(false)
+        })
+    }
+
+    impl Active {
+        pub fn new(site: &'static str, budget_us: u64) -> Self {
+            let budget_us = if budget_us == 0 { default_budget_us() } else { budget_us };
+            Active {
+                site,
+                budget: Duration::from_micros(budget_us),
+                start: Instant::now(),
+            }
+        }
+    }
+
+    impl Drop for Active {
+        fn drop(&mut self) {
+            let held = self.start.elapsed();
+            if held <= self.budget {
+                return;
+            }
+            // `panic!` here fires while the caller still holds the lock, so
+            // the mutex poisons and the lock_or_poisoned policy turns the
+            // regression into an error completion — exactly the cascade the
+            // discipline is meant to prevent, surfaced deliberately.
+            if strict() && !std::thread::panicking() {
+                // lint: allow(panic) — opt-in strict mode (HTAP_LOCK_STRICT)
+                panic!(
+                    "lock-hold budget blown at {}: held {held:?} (budget {:?})",
+                    self.site, self.budget
+                );
+            }
+            eprintln!(
+                "htap: lock-hold watchdog: {} held {held:?} (budget {:?}) — \
+                 a critical section is doing too much under the mutex",
+                self.site, self.budget
+            );
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn lock_or_poisoned_surfaces_poison_as_error() {
+        let m = std::sync::Arc::new(Mutex::new(0u32));
+        let m2 = m.clone();
+        // poison it: panic while holding the guard on another thread
+        let _ = std::thread::spawn(move || {
+            let _g = m2.lock().unwrap();
+            panic!("poison");
+        })
+        .join();
+        assert!(lock_or_poisoned(&m).is_err());
+        // lock_clean recovers the guard and the data
+        assert_eq!(*lock_clean(&m), 0);
+    }
+
+    #[test]
+    fn lock_or_poisoned_passes_through_clean_locks() {
+        let m = Mutex::new(7u32);
+        assert_eq!(*lock_or_poisoned(&m).unwrap(), 7);
+        *lock_clean(&m) = 9;
+        assert_eq!(*lock_or_poisoned(&m).unwrap(), 9);
+    }
+
+    #[test]
+    fn watchdog_is_silent_within_budget() {
+        // a generous explicit budget: construction + drop must not warn or
+        // panic even under HTAP_LOCK_STRICT in slow debug environments
+        let _w = HoldWatchdog::with_budget_us("test.site", 10_000_000);
+    }
+}

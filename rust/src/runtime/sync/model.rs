@@ -1,0 +1,1027 @@
+//! Deterministic interleaving explorer (`cfg(htap_model)` builds only).
+//!
+//! A CHESS/loom-style *stateless model checker* for the concurrency core.
+//! Code under test runs on real OS threads, but every synchronisation
+//! operation — `Mutex::lock`, guard drop, `Condvar` wait/notify,
+//! `thread` spawn/join/exit — is a **yield point** routed through a
+//! virtual scheduler that keeps exactly one thread runnable at a time.
+//! Each yield point where more than one thread could run next is a
+//! *choice point*; [`explore`] replays a recorded prefix of choices,
+//! extends it depth-first, and backtracks over the deepest untried
+//! branch until the bounded schedule tree is exhausted.
+//!
+//! Bounding follows CHESS: switching away from a thread that could have
+//! kept running costs one unit of the *preemption budget*
+//! ([`ModelConfig::preemption_bound`]); forced switches (the active
+//! thread blocked or exited) are free.  Small budgets (2–3) are known to
+//! expose the vast majority of real concurrency bugs while keeping the
+//! tree tractable.
+//!
+//! Deadlocks — including **lost wakeups**, which manifest as "work is
+//! queued but every live thread is parked on a condvar" — are detected
+//! when no thread is runnable while some are still live, and reported
+//! with a per-thread diagnosis rather than hanging the test.
+//!
+//! Requirements on the closure under test: it must be deterministic
+//! apart from scheduling (no wall-clock branching, no real randomness —
+//! use `Policy::Fcfs`, not PATS, whose EWMA ordering is time-dependent),
+//! and every thread it leaves blocked at the end is reported as a
+//! deadlock, so shut subsystems down before returning.
+
+use std::cell::RefCell;
+use std::collections::HashMap;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{
+    Arc, Condvar as StdCondvar, LockResult, Mutex as StdMutex, MutexGuard as StdMutexGuard,
+    PoisonError,
+};
+
+// ---------------------------------------------------------------------------
+// Panic payload used to tear down an aborted execution.
+// ---------------------------------------------------------------------------
+
+/// Panic payload unwound through every model thread when an execution is
+/// aborted (deadlock detected, or another thread failed).  Never reaches
+/// user code: [`explore`] recognises and swallows it.
+struct ModelAbort;
+
+fn install_quiet_abort_hook() {
+    use std::sync::OnceLock;
+    static HOOK: OnceLock<()> = OnceLock::new();
+    HOOK.get_or_init(|| {
+        let default = std::panic::take_hook();
+        std::panic::set_hook(Box::new(move |info| {
+            if info.payload().is::<ModelAbort>() {
+                return; // expected teardown, not noise
+            }
+            default(info);
+        }));
+    });
+}
+
+// ---------------------------------------------------------------------------
+// Scheduler state
+// ---------------------------------------------------------------------------
+
+const NONE: usize = usize::MAX;
+
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+enum TState {
+    Runnable,
+    BlockedLock(usize),
+    BlockedCv(usize),
+    BlockedJoin(usize),
+    Finished,
+}
+
+#[derive(Clone, Copy, Debug)]
+struct Choice {
+    chosen: usize,
+    options: usize,
+}
+
+struct Inner {
+    names: Vec<String>,
+    state: Vec<TState>,
+    /// mutex id -> holding thread (None = free)
+    held: Vec<Option<usize>>,
+    /// condvar id -> FIFO of (waiting thread, mutex to reacquire)
+    waiters: Vec<Vec<(usize, usize)>>,
+    active: usize,
+    live: usize,
+    replay: Vec<usize>,
+    trace: Vec<Choice>,
+    step: usize,
+    preemptions_left: usize,
+    deadlock: Option<String>,
+    /// first non-ModelAbort panic message from any model thread
+    failure: Option<String>,
+    abort: bool,
+}
+
+pub(crate) struct Sched {
+    epoch: u64,
+    m: StdMutex<Inner>,
+    cv: StdCondvar,
+}
+
+fn next_epoch() -> u64 {
+    static EPOCH: AtomicU64 = AtomicU64::new(1);
+    EPOCH.fetch_add(1, Ordering::Relaxed)
+}
+
+thread_local! {
+    static CURRENT: RefCell<Option<Ctx>> = const { RefCell::new(None) };
+}
+
+#[derive(Clone)]
+struct Ctx {
+    sched: Arc<Sched>,
+    tid: usize,
+}
+
+fn current() -> Option<Ctx> {
+    CURRENT.with(|c| c.borrow().clone())
+}
+
+fn lock_inner(m: &StdMutex<Inner>) -> StdMutexGuard<'_, Inner> {
+    // the scheduler's own mutex: a poisoner already recorded its failure
+    m.lock().unwrap_or_else(PoisonError::into_inner)
+}
+
+impl Sched {
+    fn new(replay: Vec<usize>, preemption_bound: usize) -> Arc<Self> {
+        Arc::new(Sched {
+            epoch: next_epoch(),
+            m: StdMutex::new(Inner {
+                names: Vec::new(),
+                state: Vec::new(),
+                held: Vec::new(),
+                waiters: Vec::new(),
+                active: 0, // root thread is always tid 0
+                live: 0,
+                replay,
+                trace: Vec::new(),
+                step: 0,
+                preemptions_left: preemption_bound,
+                deadlock: None,
+                failure: None,
+                abort: false,
+            }),
+            cv: StdCondvar::new(),
+        })
+    }
+
+    fn register_thread(&self, name: &str) -> usize {
+        let mut g = lock_inner(&self.m);
+        g.names.push(name.to_string());
+        g.state.push(TState::Runnable);
+        g.live += 1;
+        g.state.len() - 1
+    }
+
+    fn register_mutex(&self) -> usize {
+        let mut g = lock_inner(&self.m);
+        g.held.push(None);
+        g.held.len() - 1
+    }
+
+    fn register_condvar(&self) -> usize {
+        let mut g = lock_inner(&self.m);
+        g.waiters.push(Vec::new());
+        g.waiters.len() - 1
+    }
+
+    /// Pick the next active thread.  `forced` means the calling thread can
+    /// no longer run (blocked or exiting), so the switch is free; otherwise
+    /// switching away consumes preemption budget.  Called with the inner
+    /// lock held.
+    fn pick_next(&self, g: &mut Inner, me: usize, forced: bool) {
+        if g.abort {
+            self.cv.notify_all();
+            return;
+        }
+        let runnable: Vec<usize> = (0..g.state.len())
+            .filter(|&t| matches!(g.state[t], TState::Runnable))
+            .collect();
+        if runnable.is_empty() {
+            if g.live == 0 {
+                g.active = NONE;
+            } else {
+                g.deadlock = Some(describe(g));
+                g.abort = true;
+            }
+            self.cv.notify_all();
+            return;
+        }
+        let options: Vec<usize> = if !forced {
+            if g.preemptions_left == 0 {
+                vec![me]
+            } else {
+                let mut v = vec![me];
+                v.extend(runnable.iter().copied().filter(|&t| t != me));
+                v
+            }
+        } else {
+            runnable
+        };
+        let idx = if g.step < g.replay.len() {
+            g.replay[g.step].min(options.len() - 1)
+        } else {
+            0
+        };
+        if options.len() > 1 {
+            g.trace.push(Choice { chosen: idx, options: options.len() });
+            g.step += 1;
+        }
+        if !forced && idx > 0 {
+            g.preemptions_left -= 1;
+        }
+        g.active = options[idx];
+        self.cv.notify_all();
+    }
+
+    /// Block until this thread is the active runnable one, or the
+    /// execution aborts (in which case unwind with [`ModelAbort`]).
+    fn wait_my_turn<'a>(
+        &'a self,
+        mut g: StdMutexGuard<'a, Inner>,
+        me: usize,
+    ) -> StdMutexGuard<'a, Inner> {
+        loop {
+            if g.abort {
+                drop(g);
+                std::panic::panic_any(ModelAbort);
+            }
+            if g.active == me && matches!(g.state[me], TState::Runnable) {
+                return g;
+            }
+            g = self.cv.wait(g).unwrap_or_else(PoisonError::into_inner);
+        }
+    }
+
+    fn yield_point<'a>(
+        &'a self,
+        mut g: StdMutexGuard<'a, Inner>,
+        me: usize,
+        forced: bool,
+    ) -> StdMutexGuard<'a, Inner> {
+        self.pick_next(&mut g, me, forced);
+        self.wait_my_turn(g, me)
+    }
+
+    // ---- shim operations ------------------------------------------------
+
+    fn acquire(&self, mid: usize, me: usize) {
+        let g = lock_inner(&self.m);
+        // pre-acquire preemption point: someone else may take the lock first
+        let mut g = self.yield_point(g, me, false);
+        loop {
+            if g.held[mid].is_none() {
+                g.held[mid] = Some(me);
+                return;
+            }
+            g.state[me] = TState::BlockedLock(mid);
+            g = self.yield_point(g, me, true);
+        }
+    }
+
+    fn release(&self, mid: usize, me: usize) {
+        let mut g = lock_inner(&self.m);
+        g.held[mid] = None;
+        wake_lock_waiters(&mut g, mid);
+        if std::thread::panicking() {
+            // unwinding through a guard drop: hand off without choice points
+            self.pick_next(&mut g, me, true);
+            return;
+        }
+        // post-release preemption point: this is the classic window where a
+        // contender may slip in between `drop(guard)` and a notify
+        let g = self.yield_point(g, me, false);
+        drop(g);
+    }
+
+    fn cv_wait(&self, cvid: usize, mid: usize, me: usize) {
+        let mut g = lock_inner(&self.m);
+        // atomically release the mutex and join the wait queue
+        g.held[mid] = None;
+        wake_lock_waiters(&mut g, mid);
+        g.state[me] = TState::BlockedCv(cvid);
+        g.waiters[cvid].push((me, mid));
+        let mut g = self.yield_point(g, me, true); // parked until notified
+        // reacquire the mutex before returning, like a real condvar
+        loop {
+            if g.held[mid].is_none() {
+                g.held[mid] = Some(me);
+                return;
+            }
+            g.state[me] = TState::BlockedLock(mid);
+            g = self.yield_point(g, me, true);
+        }
+    }
+
+    fn notify(&self, cvid: usize, me: usize, all: bool) {
+        let mut g = lock_inner(&self.m);
+        loop {
+            if g.waiters[cvid].is_empty() {
+                break;
+            }
+            let (t, mx) = g.waiters[cvid].remove(0); // FIFO wakeup
+            g.state[t] = if g.held[mx].is_none() {
+                TState::Runnable
+            } else {
+                TState::BlockedLock(mx)
+            };
+            if !all {
+                break;
+            }
+        }
+        let g = self.yield_point(g, me, false);
+        drop(g);
+    }
+
+    fn post_spawn(&self, me: usize) {
+        let g = lock_inner(&self.m);
+        // spawn is a yield point: the child may be scheduled before the parent
+        let g = self.yield_point(g, me, false);
+        drop(g);
+    }
+
+    fn first_turn(&self, me: usize) {
+        let g = lock_inner(&self.m);
+        let g = self.wait_my_turn(g, me);
+        drop(g);
+    }
+
+    fn join_wait(&self, target: usize, me: usize) {
+        let g = lock_inner(&self.m);
+        let mut g = self.yield_point(g, me, false);
+        loop {
+            if matches!(g.state[target], TState::Finished) {
+                return;
+            }
+            g.state[me] = TState::BlockedJoin(target);
+            g = self.yield_point(g, me, true);
+        }
+    }
+
+    fn record_failure(&self, msg: String) {
+        let mut g = lock_inner(&self.m);
+        if g.failure.is_none() {
+            g.failure = Some(msg);
+        }
+        g.abort = true;
+        self.cv.notify_all();
+    }
+
+    fn thread_exit(&self, me: usize) {
+        let mut g = lock_inner(&self.m);
+        g.state[me] = TState::Finished;
+        g.live -= 1;
+        for t in 0..g.state.len() {
+            if g.state[t] == TState::BlockedJoin(me) {
+                g.state[t] = TState::Runnable;
+            }
+        }
+        if g.live == 0 {
+            g.active = NONE;
+            self.cv.notify_all();
+            return;
+        }
+        // hand off; the exiting thread never waits again
+        self.pick_next(&mut g, me, true);
+    }
+
+    fn wait_quiescent(&self) {
+        let mut g = lock_inner(&self.m);
+        while g.live > 0 {
+            g = self.cv.wait(g).unwrap_or_else(PoisonError::into_inner);
+        }
+    }
+
+    fn take_outcome(&self) -> (Vec<Choice>, Option<String>, Option<String>) {
+        let mut g = lock_inner(&self.m);
+        (std::mem::take(&mut g.trace), g.deadlock.take(), g.failure.take())
+    }
+
+    // ---- object identity across executions ------------------------------
+
+    /// Resolve an object's per-execution id from its tag cell, registering
+    /// it on first use within this execution.  Only the active thread runs,
+    /// so plain load/store ordering suffices.
+    fn resolve(&self, tag: &AtomicU64, kind: ObjKind) -> usize {
+        let t = tag.load(Ordering::Relaxed);
+        if t >> 24 == self.epoch {
+            return (t & 0xFF_FFFF) as usize - 1;
+        }
+        let id = match kind {
+            ObjKind::Mutex => self.register_mutex(),
+            ObjKind::Condvar => self.register_condvar(),
+        };
+        tag.store((self.epoch << 24) | (id as u64 + 1), Ordering::Relaxed);
+        id
+    }
+}
+
+#[derive(Clone, Copy)]
+enum ObjKind {
+    Mutex,
+    Condvar,
+}
+
+fn wake_lock_waiters(g: &mut Inner, mid: usize) {
+    for t in 0..g.state.len() {
+        if g.state[t] == TState::BlockedLock(mid) {
+            g.state[t] = TState::Runnable;
+        }
+    }
+}
+
+fn describe(g: &Inner) -> String {
+    let mut out = String::from("all live threads are blocked:");
+    for t in 0..g.state.len() {
+        let s = match g.state[t] {
+            TState::Runnable => continue,
+            TState::Finished => continue,
+            TState::BlockedLock(m) => {
+                let holder = g.held[m]
+                    .map(|h| g.names[h].clone())
+                    .unwrap_or_else(|| "<free>".into());
+                format!("waiting for mutex m{m} (held by {holder})")
+            }
+            TState::BlockedCv(c) => format!("parked on condvar c{c} (no wakeup coming)"),
+            TState::BlockedJoin(j) => format!("joining thread '{}'", g.names[j]),
+        };
+        out.push_str(&format!("\n  '{}': {}", g.names[t], s));
+    }
+    out
+}
+
+// ---------------------------------------------------------------------------
+// Public shim types
+// ---------------------------------------------------------------------------
+
+/// Model-checked mutex: identical API to [`std::sync::Mutex`] for the
+/// subset the runtime uses.  Outside an [`explore`] execution it behaves
+/// exactly like std (passthrough), so the whole ordinary test suite still
+/// runs under `--features htap-model`.
+pub struct Mutex<T: ?Sized> {
+    tag: AtomicU64,
+    inner: StdMutex<T>,
+}
+
+pub struct MutexGuard<'a, T: ?Sized> {
+    // Option so Condvar::wait can take the std guard out and put a fresh
+    // one back without running our Drop logic in between
+    g: Option<StdMutexGuard<'a, T>>,
+    lock: &'a Mutex<T>,
+    model: Option<Ctx>,
+}
+
+impl<T> Mutex<T> {
+    pub const fn new(t: T) -> Self {
+        Mutex { tag: AtomicU64::new(0), inner: StdMutex::new(t) }
+    }
+}
+
+impl<T: ?Sized> Mutex<T> {
+    pub fn lock(&self) -> LockResult<MutexGuard<'_, T>> {
+        match current() {
+            None => match self.inner.lock() {
+                Ok(g) => Ok(MutexGuard { g: Some(g), lock: self, model: None }),
+                Err(p) => Err(PoisonError::new(MutexGuard {
+                    g: Some(p.into_inner()),
+                    lock: self,
+                    model: None,
+                })),
+            },
+            Some(ctx) => {
+                let mid = ctx.sched.resolve(&self.tag, ObjKind::Mutex);
+                ctx.sched.acquire(mid, ctx.tid);
+                // the virtual scheduler has granted us the lock; the real
+                // mutex is free (at most transiently contended), and model
+                // threads never leave it poisoned without aborting first
+                let g = self.inner.lock().unwrap_or_else(PoisonError::into_inner);
+                Ok(MutexGuard { g: Some(g), lock: self, model: Some(ctx) })
+            }
+        }
+    }
+
+    pub fn get_mut(&mut self) -> LockResult<&mut T> {
+        match self.inner.get_mut() {
+            Ok(t) => Ok(t),
+            Err(p) => Err(PoisonError::new(p.into_inner())),
+        }
+    }
+}
+
+impl<T: Default> Default for Mutex<T> {
+    fn default() -> Self {
+        Mutex::new(T::default())
+    }
+}
+
+impl<T: ?Sized + std::fmt::Debug> std::fmt::Debug for Mutex<T> {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("Mutex").finish_non_exhaustive()
+    }
+}
+
+impl<T: ?Sized> std::ops::Deref for MutexGuard<'_, T> {
+    type Target = T;
+    fn deref(&self) -> &T {
+        self.g.as_deref().expect("guard present")
+    }
+}
+
+impl<T: ?Sized> std::ops::DerefMut for MutexGuard<'_, T> {
+    fn deref_mut(&mut self) -> &mut T {
+        self.g.as_deref_mut().expect("guard present")
+    }
+}
+
+impl<T: ?Sized> Drop for MutexGuard<'_, T> {
+    fn drop(&mut self) {
+        // release the real mutex before telling the scheduler, so a thread
+        // granted the virtual lock next never blocks on the OS mutex
+        self.g = None;
+        if let Some(ctx) = self.model.take() {
+            let mid = ctx.sched.resolve(&self.lock.tag, ObjKind::Mutex);
+            ctx.sched.release(mid, ctx.tid);
+        }
+    }
+}
+
+/// Model-checked condvar; passthrough to std outside an execution.
+pub struct Condvar {
+    tag: AtomicU64,
+    inner: StdCondvar,
+}
+
+impl Condvar {
+    pub const fn new() -> Self {
+        Condvar { tag: AtomicU64::new(0), inner: StdCondvar::new() }
+    }
+
+    pub fn wait<'a, T>(&self, mut guard: MutexGuard<'a, T>) -> LockResult<MutexGuard<'a, T>> {
+        match guard.model.clone() {
+            None => {
+                let std_g = guard.g.take().expect("guard present");
+                let lock = guard.lock;
+                std::mem::forget(guard); // std guard already extracted
+                match self.inner.wait(std_g) {
+                    Ok(g) => Ok(MutexGuard { g: Some(g), lock, model: None }),
+                    Err(p) => Err(PoisonError::new(MutexGuard {
+                        g: Some(p.into_inner()),
+                        lock,
+                        model: None,
+                    })),
+                }
+            }
+            Some(ctx) => {
+                let lock = guard.lock;
+                let mid = ctx.sched.resolve(&lock.tag, ObjKind::Mutex);
+                let cvid = ctx.sched.resolve(&self.tag, ObjKind::Condvar);
+                // release the real mutex, then the virtual one + park
+                guard.g = None;
+                std::mem::forget(guard);
+                ctx.sched.cv_wait(cvid, mid, ctx.tid);
+                // virtual mutex reacquired; take the real one to match
+                let g = lock.inner.lock().unwrap_or_else(PoisonError::into_inner);
+                Ok(MutexGuard { g: Some(g), lock, model: Some(ctx) })
+            }
+        }
+    }
+
+    pub fn wait_while<'a, T, F>(
+        &self,
+        mut guard: MutexGuard<'a, T>,
+        mut condition: F,
+    ) -> LockResult<MutexGuard<'a, T>>
+    where
+        F: FnMut(&mut T) -> bool,
+    {
+        while condition(&mut guard) {
+            guard = match self.wait(guard) {
+                Ok(g) => g,
+                Err(p) => return Err(p),
+            };
+        }
+        Ok(guard)
+    }
+
+    pub fn notify_one(&self) {
+        if let Some(ctx) = current() {
+            let cvid = ctx.sched.resolve(&self.tag, ObjKind::Condvar);
+            ctx.sched.notify(cvid, ctx.tid, false);
+        } else {
+            self.inner.notify_one();
+        }
+    }
+
+    pub fn notify_all(&self) {
+        if let Some(ctx) = current() {
+            let cvid = ctx.sched.resolve(&self.tag, ObjKind::Condvar);
+            ctx.sched.notify(cvid, ctx.tid, true);
+        } else {
+            self.inner.notify_all();
+        }
+    }
+}
+
+impl Default for Condvar {
+    fn default() -> Self {
+        Condvar::new()
+    }
+}
+
+impl std::fmt::Debug for Condvar {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("Condvar").finish_non_exhaustive()
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Threads
+// ---------------------------------------------------------------------------
+
+pub mod thread {
+    //! Model-checked subset of [`std::thread`]; passthrough outside an
+    //! execution.
+
+    use super::{current, Ctx, Sched, TState, CURRENT};
+    use std::sync::Arc;
+
+    pub struct Builder {
+        name: Option<String>,
+    }
+
+    impl Builder {
+        #[allow(clippy::new_without_default)]
+        pub fn new() -> Self {
+            Builder { name: None }
+        }
+
+        pub fn name(mut self, name: String) -> Self {
+            self.name = Some(name);
+            self
+        }
+
+        pub fn spawn<F, T>(self, f: F) -> std::io::Result<JoinHandle<T>>
+        where
+            F: FnOnce() -> T + Send + 'static,
+            T: Send + 'static,
+        {
+            let mut b = std::thread::Builder::new();
+            let name = self.name.clone().unwrap_or_else(|| "model".into());
+            if let Some(n) = self.name {
+                b = b.name(n);
+            }
+            match current() {
+                None => {
+                    let h = b.spawn(f)?;
+                    Ok(JoinHandle { inner: h, model: None })
+                }
+                Some(parent) => {
+                    let tid = parent.sched.register_thread(&name);
+                    let sched = parent.sched.clone();
+                    let h = b.spawn(move || super::run_model_thread(sched, tid, f))?;
+                    parent.sched.post_spawn(parent.tid);
+                    Ok(JoinHandle { inner: h, model: Some((parent.sched, tid)) })
+                }
+            }
+        }
+    }
+
+    pub fn spawn<F, T>(f: F) -> JoinHandle<T>
+    where
+        F: FnOnce() -> T + Send + 'static,
+        T: Send + 'static,
+    {
+        // std::thread::spawn panics on spawn failure too
+        // lint: allow(panic) — mirrors std::thread::spawn semantics
+        Builder::new().spawn(f).expect("failed to spawn thread")
+    }
+
+    pub struct JoinHandle<T> {
+        pub(super) inner: std::thread::JoinHandle<T>,
+        pub(super) model: Option<(Arc<Sched>, usize)>,
+    }
+
+    impl<T> JoinHandle<T> {
+        pub fn join(self) -> std::thread::Result<T> {
+            if let Some((sched, target)) = &self.model {
+                let me = current().map(|c| c.tid).unwrap_or(usize::MAX);
+                if me != usize::MAX {
+                    sched.join_wait(*target, me);
+                }
+                // target Finished: the OS thread is exiting; real join is quick
+            }
+            self.inner.join()
+        }
+
+        pub fn is_finished(&self) -> bool {
+            if let Some((sched, target)) = &self.model {
+                let g = super::lock_inner(&sched.m);
+                return matches!(g.state[*target], TState::Finished);
+            }
+            self.inner.is_finished()
+        }
+    }
+
+    /// Cooperative yield: a bare preemption point inside an execution, a
+    /// std yield outside.
+    pub fn yield_now() {
+        if let Some(ctx) = current() {
+            ctx.sched.post_spawn(ctx.tid); // plain unforced yield point
+        } else {
+            std::thread::yield_now();
+        }
+    }
+
+    pub(super) fn enter(sched: Arc<Sched>, tid: usize) {
+        CURRENT.with(|c| *c.borrow_mut() = Some(Ctx { sched, tid }));
+    }
+
+    pub(super) fn exit_ctx() {
+        CURRENT.with(|c| *c.borrow_mut() = None);
+    }
+}
+
+/// Body of every model-managed OS thread: register context, wait for the
+/// first turn, run, record panics, and always hand control back.
+fn run_model_thread<F, T>(sched: Arc<Sched>, tid: usize, f: F) -> T
+where
+    F: FnOnce() -> T,
+{
+    struct Registration {
+        sched: Arc<Sched>,
+        tid: usize,
+    }
+    impl Drop for Registration {
+        fn drop(&mut self) {
+            self.sched.thread_exit(self.tid);
+            thread::exit_ctx();
+        }
+    }
+
+    thread::enter(sched.clone(), tid);
+    let _reg = Registration { sched: sched.clone(), tid };
+    sched.first_turn(tid);
+    match std::panic::catch_unwind(std::panic::AssertUnwindSafe(f)) {
+        Ok(v) => v,
+        Err(payload) => {
+            if !payload.is::<ModelAbort>() {
+                sched.record_failure(panic_message(&payload));
+            }
+            std::panic::resume_unwind(payload);
+        }
+    }
+}
+
+fn panic_message(payload: &(dyn std::any::Any + Send)) -> String {
+    if let Some(s) = payload.downcast_ref::<&str>() {
+        (*s).to_string()
+    } else if let Some(s) = payload.downcast_ref::<String>() {
+        s.clone()
+    } else {
+        "<non-string panic payload>".to_string()
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Explorer
+// ---------------------------------------------------------------------------
+
+/// Exploration bounds.
+#[derive(Clone, Copy, Debug)]
+pub struct ModelConfig {
+    /// Stop after this many distinct schedules even if the tree is not
+    /// exhausted (env override: `HTAP_MODEL_SCHEDULES`).
+    pub max_schedules: usize,
+    /// CHESS preemption budget per execution (env override:
+    /// `HTAP_MODEL_PREEMPTIONS`).
+    pub preemption_bound: usize,
+}
+
+impl Default for ModelConfig {
+    fn default() -> Self {
+        let env_us = |k: &str, d: usize| {
+            std::env::var(k).ok().and_then(|s| s.parse().ok()).unwrap_or(d)
+        };
+        ModelConfig {
+            max_schedules: env_us("HTAP_MODEL_SCHEDULES", 4000),
+            preemption_bound: env_us("HTAP_MODEL_PREEMPTIONS", 2),
+        }
+    }
+}
+
+/// Outcome of an exploration.
+#[derive(Debug)]
+pub struct Report {
+    /// Distinct schedules executed.
+    pub schedules: usize,
+    /// True when the bounded schedule tree was fully explored.
+    pub exhausted: bool,
+    /// Executions that ended in a deadlock / lost wakeup.
+    pub deadlocks: usize,
+    /// Diagnosis of the first deadlock found, with its schedule.
+    pub first_deadlock: Option<String>,
+}
+
+/// Run `f` under the virtual scheduler once per schedule, enumerating the
+/// bounded interleaving tree depth-first.
+///
+/// * A **panic** in `f` (e.g. a failed assertion) fails fast: the
+///   triggering schedule is printed and the panic is re-raised.
+/// * **Deadlocks** (including lost wakeups) are *counted*, not panicked,
+///   so tests can both assert `deadlocks == 0` on correct code and
+///   assert `deadlocks > 0` on intentionally broken protocols.
+pub fn explore<F>(name: &str, cfg: ModelConfig, f: F) -> Report
+where
+    F: Fn() + Send + Sync + 'static,
+{
+    install_quiet_abort_hook();
+    let f = Arc::new(f);
+    let mut replay: Vec<usize> = Vec::new();
+    let mut schedules = 0usize;
+    let mut deadlocks = 0usize;
+    let mut first_deadlock: Option<String> = None;
+
+    loop {
+        schedules += 1;
+        let sched = Sched::new(replay.clone(), cfg.preemption_bound);
+        let root = sched.register_thread("model-root");
+        debug_assert_eq!(root, 0);
+        let (s2, ff) = (sched.clone(), f.clone());
+        let handle = std::thread::Builder::new()
+            .name(format!("model-root-{name}"))
+            .spawn(move || run_model_thread(s2, root, move || ff()))
+            .expect("spawn model root thread");
+        sched.wait_quiescent();
+        let joined = handle.join();
+        let (trace, deadlock, failure) = sched.take_outcome();
+
+        if let Some(msg) = failure {
+            let sched_str: Vec<usize> = trace.iter().map(|c| c.chosen).collect();
+            eprintln!(
+                "model '{name}': thread panicked under schedule {sched_str:?} \
+                 (execution {schedules}): {msg}"
+            );
+            match joined {
+                Err(payload) => std::panic::resume_unwind(payload),
+                Ok(_) => panic!("model '{name}': {msg}"),
+            }
+        }
+        if let Some(d) = deadlock {
+            deadlocks += 1;
+            if first_deadlock.is_none() {
+                let sched_str: Vec<usize> = trace.iter().map(|c| c.chosen).collect();
+                first_deadlock =
+                    Some(format!("schedule {sched_str:?} (execution {schedules}): {d}"));
+            }
+        }
+
+        match next_replay(&trace) {
+            None => {
+                return Report { schedules, exhausted: true, deadlocks, first_deadlock };
+            }
+            Some(r) => replay = r,
+        }
+        if schedules >= cfg.max_schedules {
+            return Report { schedules, exhausted: false, deadlocks, first_deadlock };
+        }
+    }
+}
+
+/// Depth-first backtracking: flip the deepest choice with an untried
+/// branch; `None` when the tree is exhausted.
+fn next_replay(trace: &[Choice]) -> Option<Vec<usize>> {
+    for i in (0..trace.len()).rev() {
+        if trace[i].chosen + 1 < trace[i].options {
+            let mut r: Vec<usize> = trace[..i].iter().map(|c| c.chosen).collect();
+            r.push(trace[i].chosen + 1);
+            return Some(r);
+        }
+    }
+    None
+}
+
+/// Convenience map for tests: count how often each distinct outcome value
+/// is observed across schedules.
+pub fn tally<K: std::hash::Hash + Eq>(into: &mut HashMap<K, usize>, k: K) {
+    *into.entry(k).or_insert(0) += 1;
+}
+
+// ---------------------------------------------------------------------------
+// Self-tests (run under `cargo test --features htap-model`)
+// ---------------------------------------------------------------------------
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::{AtomicUsize, Ordering};
+
+    #[test]
+    fn passthrough_outside_execution() {
+        let m = Mutex::new(5u32);
+        {
+            let mut g = m.lock().unwrap();
+            *g += 1;
+        }
+        assert_eq!(*m.lock().unwrap(), 6);
+        let cv = Condvar::new();
+        cv.notify_one(); // no waiters: no-op, must not panic
+        let h = thread::spawn(|| 41 + 1);
+        assert_eq!(h.join().unwrap(), 42);
+    }
+
+    #[test]
+    fn explores_multiple_interleavings_of_two_increments() {
+        // Two threads doing read-modify-write under a mutex: the final
+        // value is always 2, but the explorer must drive >1 schedule.
+        let report = explore("two-inc", ModelConfig::default(), || {
+            let m = Arc::new(Mutex::new(0u32));
+            let (a, b) = (m.clone(), m.clone());
+            let t1 = thread::spawn(move || *a.lock().unwrap() += 1);
+            let t2 = thread::spawn(move || *b.lock().unwrap() += 1);
+            t1.join().unwrap();
+            t2.join().unwrap();
+            assert_eq!(*m.lock().unwrap(), 2);
+        });
+        assert!(report.schedules > 1, "expected >1 schedule, got {}", report.schedules);
+        assert_eq!(report.deadlocks, 0, "{:?}", report.first_deadlock);
+        assert!(report.exhausted);
+    }
+
+    #[test]
+    fn detects_lost_wakeup() {
+        // Classic missed-wakeup bug: the waiter checks the flag, then
+        // waits — but the signaller may set the flag *and* notify in the
+        // window between check and wait.  Some schedule must deadlock.
+        let report = explore("lost-wakeup", ModelConfig::default(), || {
+            let pair = Arc::new((Mutex::new(false), Condvar::new()));
+            let p2 = pair.clone();
+            let signaller = thread::spawn(move || {
+                let (m, cv) = &*p2;
+                *m.lock().unwrap() = true;
+                cv.notify_one();
+            });
+            {
+                let (m, cv) = &*pair;
+                let ready = { *m.lock().unwrap() }; // buggy: check outside wait
+                if !ready {
+                    let g = m.lock().unwrap();
+                    let _g = cv.wait(g).unwrap(); // may sleep forever
+                }
+            }
+            signaller.join().unwrap();
+        });
+        assert!(
+            report.deadlocks > 0,
+            "explorer failed to find the seeded lost wakeup in {} schedules",
+            report.schedules
+        );
+    }
+
+    #[test]
+    fn correct_condvar_protocol_has_no_deadlock() {
+        let report = explore("cv-ok", ModelConfig::default(), || {
+            let pair = Arc::new((Mutex::new(false), Condvar::new()));
+            let p2 = pair.clone();
+            let signaller = thread::spawn(move || {
+                let (m, cv) = &*p2;
+                *m.lock().unwrap() = true;
+                cv.notify_one();
+            });
+            {
+                let (m, cv) = &*pair;
+                let mut g = m.lock().unwrap();
+                while !*g {
+                    g = cv.wait(g).unwrap(); // re-check under the lock
+                }
+            }
+            signaller.join().unwrap();
+        });
+        assert_eq!(report.deadlocks, 0, "{:?}", report.first_deadlock);
+        assert!(report.exhausted);
+    }
+
+    #[test]
+    fn detects_lock_order_deadlock() {
+        // AB-BA deadlock: must be found within the preemption budget.
+        let report = explore("ab-ba", ModelConfig::default(), || {
+            let a = Arc::new(Mutex::new(()));
+            let b = Arc::new(Mutex::new(()));
+            let (a2, b2) = (a.clone(), b.clone());
+            let t = thread::spawn(move || {
+                let _ga = a2.lock().unwrap();
+                let _gb = b2.lock().unwrap();
+            });
+            {
+                let _gb = b.lock().unwrap();
+                let _ga = a.lock().unwrap();
+            }
+            let _ = t.join();
+        });
+        assert!(report.deadlocks > 0, "AB-BA deadlock not found");
+    }
+
+    #[test]
+    fn schedules_are_deterministic_under_replay() {
+        // Same closure, same config → same schedule count (replay works).
+        static RUNS: AtomicUsize = AtomicUsize::new(0);
+        let run = || {
+            explore("det", ModelConfig { max_schedules: 500, preemption_bound: 2 }, || {
+                RUNS.fetch_add(1, Ordering::Relaxed);
+                let m = Arc::new(Mutex::new(0u32));
+                let m2 = m.clone();
+                let t = thread::spawn(move || *m2.lock().unwrap() += 1);
+                *m.lock().unwrap() += 1;
+                t.join().unwrap();
+            })
+            .schedules
+        };
+        assert_eq!(run(), run());
+    }
+}

@@ -215,6 +215,7 @@ pub fn f32s_from_le(bytes: &[u8]) -> Vec<f32> {
     {
         let mut data = Vec::with_capacity(n);
         for c in bytes.chunks_exact(4) {
+            // lint: allow(panic) — chunks_exact(4) guarantees a 4-byte slice
             data.push(f32::from_le_bytes(c.try_into().unwrap()));
         }
         data

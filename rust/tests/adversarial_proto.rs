@@ -1,0 +1,169 @@
+//! Adversarial wire-format decoding: every hostile byte string the
+//! Manager/Worker framing can receive must come back as `Err(..)`, never
+//! a panic, never a pre-error multi-gigabyte allocation.
+//!
+//! Three attack families, over all four [`Message`] kinds:
+//!
+//! 1. **truncation** — every strict prefix of a valid encoding;
+//! 2. **random frames** — deterministic xorshift fuzzing (replayable via
+//!    `HTAP_PROPTEST_SEED`), raw and with a valid version/tag header;
+//! 3. **hostile counts** — tiny frames whose length prefixes claim 2^32
+//!    elements (ids, values, assignments, string bytes, tensor dims);
+//!    these must fail fast on the count bound, not preallocate.
+
+use htap::coordinator::manager::Assignment;
+use htap::net::proto::{decode, encode, read_message, Message, PROTO_VERSION};
+use htap::runtime::{HostTensor, Value};
+use htap::testing::Rng;
+
+const TAGS: [u8; 4] = [1, 2, 3, 4]; // request / assign / complete / fail
+
+/// One representative (non-trivial) message per wire kind.
+fn specimens() -> Vec<Message> {
+    let tensor = Value::Tensor(HostTensor::new(vec![2, 3], (0..6).map(|i| i as f32).collect()).unwrap());
+    vec![
+        Message::Request {
+            capacity: 4,
+            worker: 0xAB,
+            prefetch_budget: 2,
+            staged_add: vec![1, 2, 3],
+            staged_drop: vec![9],
+            demoted: vec![4],
+        },
+        Message::Assign {
+            assignments: vec![Assignment {
+                instance_id: 7,
+                stage_idx: 1,
+                chunk: 3,
+                inputs: vec![Value::Scalar(1.5), tensor.clone()],
+                needs_chunk: true,
+                locality: false,
+                replica: true,
+            }],
+            prefetch: vec![5, 6],
+            replicate: vec![3],
+        },
+        Message::Complete { instance: 7, outputs: vec![tensor, Value::Scalar(-2.0)] },
+        Message::Fail { msg: "device lost".into() },
+    ]
+}
+
+#[test]
+fn every_truncation_of_every_message_errors_cleanly() {
+    for msg in specimens() {
+        let enc = encode(&msg);
+        assert!(decode(&enc).is_ok());
+        for cut in 0..enc.len() {
+            // catch_unwind would also catch aborts too late: rely on the
+            // test harness — any panic here fails the test with the cut
+            let r = decode(&enc[..cut]);
+            assert!(r.is_err(), "{msg:?} truncated to {cut}/{} bytes decoded Ok", enc.len());
+        }
+    }
+}
+
+#[test]
+fn random_frames_error_not_panic() {
+    let mut rng = Rng::new(0x5EED);
+    for case in 0..2000 {
+        let len = rng.below(96);
+        let mut frame: Vec<u8> = (0..len).map(|_| rng.next_u64() as u8).collect();
+        // half the cases get a valid version (+ sometimes a valid tag) so
+        // the fuzz reaches the per-message decoders, not just the header
+        if !frame.is_empty() && case % 2 == 0 {
+            frame[0] = PROTO_VERSION;
+            if frame.len() > 1 && case % 4 == 0 {
+                frame[1] = TAGS[case % TAGS.len()];
+            }
+        }
+        let _ = decode(&frame); // must return, Ok or Err — never panic
+    }
+}
+
+#[test]
+fn random_mutations_of_valid_frames_error_or_reparse() {
+    let mut rng = Rng::new(0xFACADE);
+    let originals = specimens();
+    for case in 0..2000 {
+        let mut enc = encode(&originals[case % originals.len()]);
+        for _ in 0..rng.range(1, 4) {
+            let i = rng.below(enc.len());
+            enc[i] = rng.next_u64() as u8;
+        }
+        let _ = decode(&enc); // corrupt frames may still parse; just no panic
+    }
+}
+
+/// Little-endian u32 helper for hand-built hostile frames.
+fn le(v: u32) -> [u8; 4] {
+    v.to_le_bytes()
+}
+
+fn hostile(tag: u8, body: &[u8]) -> Vec<u8> {
+    let mut f = vec![PROTO_VERSION, tag];
+    f.extend_from_slice(body);
+    f
+}
+
+#[test]
+fn hostile_count_prefixes_fail_before_preallocation() {
+    // Request: header fields, then staged_add count = u32::MAX with no
+    // bytes behind it — must die on the count bound
+    let mut body = Vec::new();
+    body.extend_from_slice(&le(1)); // capacity
+    body.extend_from_slice(&0u64.to_le_bytes()); // worker
+    body.extend_from_slice(&le(0)); // prefetch_budget
+    body.extend_from_slice(&le(u32::MAX)); // staged_add count
+    let e = decode(&hostile(1, &body)).unwrap_err();
+    assert!(e.to_string().contains("count"), "unexpected error: {e}");
+
+    // Assign: claims 2^32 - 1 assignments in a 4-byte body
+    let e = decode(&hostile(2, &le(u32::MAX))).unwrap_err();
+    assert!(e.to_string().contains("count"), "unexpected error: {e}");
+
+    // Complete: instance id then a hostile value count
+    let mut body = Vec::new();
+    body.extend_from_slice(&7u64.to_le_bytes());
+    body.extend_from_slice(&le(u32::MAX));
+    let e = decode(&hostile(3, &body)).unwrap_err();
+    assert!(e.to_string().contains("count"), "unexpected error: {e}");
+
+    // Fail: string length far beyond the frame — take() bounds it
+    let e = decode(&hostile(4, &le(u32::MAX))).unwrap_err();
+    assert!(e.to_string().contains("truncated"), "unexpected error: {e}");
+
+    // Tensor dims whose product wraps usize: decode error, not a panic or
+    // an inconsistent tensor
+    let mut body = Vec::new();
+    body.extend_from_slice(&7u64.to_le_bytes()); // instance
+    body.extend_from_slice(&le(1)); // one output value
+    body.push(1); // tensor tag
+    body.extend_from_slice(&le(4)); // rank 4
+    for _ in 0..4 {
+        body.extend_from_slice(&(u64::MAX / 2).to_le_bytes());
+    }
+    let e = decode(&hostile(3, &body)).unwrap_err();
+    assert!(e.to_string().contains("overflow"), "unexpected error: {e}");
+}
+
+#[test]
+fn framed_reader_rejects_oversized_and_short_frames() {
+    // length prefix beyond MAX_FRAME
+    let mut buf = Vec::new();
+    buf.extend_from_slice(&le(u32::MAX));
+    buf.extend_from_slice(&[0; 16]);
+    let mut cur = std::io::Cursor::new(buf);
+    assert!(read_message(&mut cur).is_err());
+
+    // length prefix promising more bytes than the stream has
+    let mut buf = Vec::new();
+    buf.extend_from_slice(&le(64));
+    buf.extend_from_slice(&[PROTO_VERSION, 1, 2, 3]);
+    let mut cur = std::io::Cursor::new(buf);
+    assert!(read_message(&mut cur).is_err());
+
+    // clean EOF is the dedicated "eof" error
+    let mut cur = std::io::Cursor::new(Vec::<u8>::new());
+    let e = read_message(&mut cur).unwrap_err();
+    assert!(e.to_string().contains("eof"), "unexpected error: {e}");
+}

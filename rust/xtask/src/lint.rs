@@ -1,0 +1,807 @@
+//! The htap concurrency-discipline linter (`cargo xtask lint`).
+//!
+//! A deliberately dependency-free, line/brace-level scanner over
+//! `rust/src` that machine-checks the WRM lock discipline documented in
+//! `docs/analysis.md`:
+//!
+//! 1. **critical-section** — inside a region marked
+//!    `// lint: critical-section`, deny op execution, payload codecs,
+//!    payload byte-copies, file/socket I/O and sleeps.  The region spans
+//!    from the marker line to the end of its enclosing brace block, or to
+//!    an explicit `// lint: end-critical-section`.
+//! 2. **lock-order** — the crate-wide order is `wrm` → `cache` →
+//!    `catalog`; acquiring a lock while lexically holding a
+//!    later-ordered one (or the same one) is denied.
+//! 3. **panic** — `.unwrap()` / `.expect(` / `panic!(` / `unreachable!(`
+//!    are denied in the runtime modules (`coordinator/`, `data/`, `net/`,
+//!    `runtime/`), outside `#[cfg(test)]` regions.
+//! 4. **proto-coverage** — every `net::proto::Message` variant must be
+//!    referenced by the module's round-trip tests.
+//!
+//! Escapes: a trailing `// lint: allow(rule)` on the offending line, or a
+//! standalone `// lint: allow(rule)` on the line immediately above.
+//!
+//! The scanner strips comments, string/char literals and raw strings
+//! before matching, and tracks brace depth for region/scope bookkeeping.
+//! It is lexical by design — a call into a denied helper is checked at
+//! the helper's own definition site, not at the call site.
+
+use std::fmt;
+use std::fs;
+use std::path::Path;
+
+/// The discipline rules this pass enforces (reporting only).
+pub const RULES: &[&str] = &["critical-section", "lock-order", "panic", "proto-coverage"];
+
+/// Nesting order of the named locks; acquiring index `i` while holding
+/// index `j >= i` is a violation.
+const LOCK_ORDER: &[&str] = &["wrm", "cache", "catalog"];
+
+/// Deny lists enforced inside `lint: critical-section` regions.
+const CS_DENY: &[(&str, &[&str])] = &[
+    (
+        "op",
+        &[
+            "run_cpu_member(",
+            "execute_resident(",
+            "run_stage_serial(",
+            "resolve_artifact(",
+            ".variant.cpu)",
+        ],
+    ),
+    (
+        "codec",
+        &[
+            "encode_tensor(",
+            "decode_tensor(",
+            "encode_into(",
+            "write_message",
+            "read_message",
+            "f32s_to_le(",
+            "f32s_from_le(",
+        ],
+    ),
+    ("copy", &[".to_vec()", ".to_owned()", ".data().clone()"]),
+    (
+        "io",
+        &[
+            "File::",
+            "OpenOptions::",
+            "std::fs::",
+            "read_to_end(",
+            "write_all(",
+            "read_exact(",
+            "sync_all(",
+            "TcpStream",
+            "UdpSocket",
+            "source.load(",
+            "spill.put(",
+            "spill.get(",
+        ],
+    ),
+    ("sleep", &["thread::sleep"]),
+];
+
+/// Panic-family tokens denied in runtime modules.
+const PANIC_DENY: &[&str] =
+    &[".unwrap()", ".expect(", "panic!(", "unreachable!(", "todo!(", "unimplemented!("];
+
+/// Directories (relative to `src/`) where the panic rule applies.
+const PANIC_DIRS: &[&str] = &["coordinator/", "data/", "net/", "runtime/"];
+
+/// Files exempt from the panic rule.  The model scheduler is test-only
+/// machinery compiled under `cfg(htap_model)`; panicking on internal
+/// invariant breaks *is* its error-reporting channel.
+const PANIC_ALLOW_FILES: &[&str] = &["runtime/sync/model.rs"];
+
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct Violation {
+    pub file: String,
+    pub line: usize,
+    pub rule: &'static str,
+    pub msg: String,
+}
+
+impl fmt::Display for Violation {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}:{}: [{}] {}", self.file, self.line, self.rule, self.msg)
+    }
+}
+
+/// One source line with comments/literals stripped: `code` keeps the
+/// lexable program text (string bodies replaced by `""`), `comment` the
+/// text of any `//` comment (where lint directives live).
+struct CleanLine {
+    code: String,
+    comment: String,
+}
+
+/// Strip comments and string/char literals, preserving line structure so
+/// violation line numbers match the original file.
+fn clean(text: &str) -> Vec<CleanLine> {
+    let chars: Vec<char> = text.chars().collect();
+    let mut lines = Vec::new();
+    let mut code = String::new();
+    let mut comment = String::new();
+    let mut i = 0;
+    let mut block_depth = 0usize; // /* */ nesting
+    let mut in_str = false;
+    let mut raw_hashes: Option<usize> = None;
+    while i < chars.len() {
+        let c = chars[i];
+        if c == '\n' {
+            lines.push(CleanLine {
+                code: std::mem::take(&mut code),
+                comment: std::mem::take(&mut comment),
+            });
+            i += 1;
+            continue;
+        }
+        if block_depth > 0 {
+            if c == '*' && chars.get(i + 1) == Some(&'/') {
+                block_depth -= 1;
+                i += 2;
+            } else if c == '/' && chars.get(i + 1) == Some(&'*') {
+                block_depth += 1;
+                i += 2;
+            } else {
+                i += 1;
+            }
+            continue;
+        }
+        if let Some(h) = raw_hashes {
+            if c == '"' && (0..h).all(|k| chars.get(i + 1 + k) == Some(&'#')) {
+                raw_hashes = None;
+                code.push('"');
+                i += 1 + h;
+            } else {
+                i += 1;
+            }
+            continue;
+        }
+        if in_str {
+            match c {
+                '\\' => {
+                    // a `\`-continued string still ends the physical line:
+                    // keep pushing lines so numbering stays accurate
+                    if chars.get(i + 1) == Some(&'\n') {
+                        lines.push(CleanLine {
+                            code: std::mem::take(&mut code),
+                            comment: std::mem::take(&mut comment),
+                        });
+                    }
+                    i += 2;
+                }
+                '"' => {
+                    in_str = false;
+                    code.push('"');
+                    i += 1;
+                }
+                _ => i += 1,
+            }
+            continue;
+        }
+        match c {
+            '/' if chars.get(i + 1) == Some(&'/') => {
+                let mut j = i + 2;
+                while j < chars.len() && chars[j] != '\n' {
+                    comment.push(chars[j]);
+                    j += 1;
+                }
+                i = j;
+            }
+            '/' if chars.get(i + 1) == Some(&'*') => {
+                block_depth = 1;
+                i += 2;
+            }
+            '"' => {
+                in_str = true;
+                code.push('"');
+                i += 1;
+            }
+            'r' if matches!(chars.get(i + 1), Some('"') | Some('#'))
+                // only when `r` starts an identifier-free raw string (not
+                // the tail of an identifier like `for`)
+                && !code.ends_with(|p: char| p.is_alphanumeric() || p == '_') =>
+            {
+                let mut h = 0;
+                let mut j = i + 1;
+                while chars.get(j) == Some(&'#') {
+                    h += 1;
+                    j += 1;
+                }
+                if chars.get(j) == Some(&'"') {
+                    raw_hashes = Some(h);
+                    code.push('"');
+                    i = j + 1;
+                } else {
+                    code.push(c);
+                    i += 1;
+                }
+            }
+            '\'' => {
+                // char literal vs lifetime: 'x' / '\n' are literals,
+                // 'ident is a lifetime (keep scanning normally)
+                if chars.get(i + 1) == Some(&'\\') {
+                    let mut j = i + 2;
+                    while j < chars.len() && chars[j] != '\'' && chars[j] != '\n' {
+                        j += 1;
+                    }
+                    code.push_str("' '");
+                    i = (j + 1).min(chars.len());
+                } else if chars.get(i + 2) == Some(&'\'') {
+                    code.push_str("' '");
+                    i += 3;
+                } else {
+                    code.push('\'');
+                    i += 1;
+                }
+            }
+            _ => {
+                code.push(c);
+                i += 1;
+            }
+        }
+    }
+    if !code.is_empty() || !comment.is_empty() {
+        lines.push(CleanLine { code, comment });
+    }
+    lines
+}
+
+/// Lint directives parsed out of one line's `//` comment text.
+#[derive(Default)]
+struct Directives {
+    critical_section: bool,
+    end_critical_section: bool,
+    allows: Vec<String>,
+}
+
+fn parse_directives(comment: &str) -> Directives {
+    let mut d = Directives::default();
+    let Some(rest) = comment.trim_start().strip_prefix("lint:") else {
+        return d;
+    };
+    let rest = rest.trim_start();
+    if rest.starts_with("end-critical-section") {
+        d.end_critical_section = true;
+    } else if rest.starts_with("critical-section") {
+        d.critical_section = true;
+    } else if let Some(arg) = rest.strip_prefix("allow(") {
+        if let Some(end) = arg.find(')') {
+            d.allows.push(arg[..end].trim().to_string());
+        }
+    }
+    d
+}
+
+/// Which named lock (if any) a line of `file` acquires.  `lock_inner()`
+/// is the Wrm helper; `self.state` is the Manager's catalog-bearing
+/// state; `self.inner` is ambiguous across files and resolved by file
+/// name.  Unknown receivers (worker flight tuples, profile stores, net
+/// channels, the shim internals) are untracked.
+fn acquired_lock(file: &str, code: &str) -> Option<&'static str> {
+    let acquires = code.contains(".lock()")
+        || code.contains("lock_or_poisoned(")
+        || code.contains("lock_clean(")
+        || code.contains("lock_inner()");
+    if !acquires {
+        return None;
+    }
+    if code.contains("lock_inner") {
+        return Some("wrm");
+    }
+    if code.contains("self.state") {
+        return Some("catalog");
+    }
+    if code.contains("self.inner") {
+        if file.ends_with("wrm.rs") {
+            return Some("wrm");
+        }
+        if file.ends_with("cache.rs") {
+            return Some("cache");
+        }
+    }
+    None
+}
+
+/// Extract the guard variable bound on an acquisition line:
+/// `let [Ok(|Some(] [mut] NAME [)] = ...`.  None for expression-position
+/// acquisitions (the guard is anonymous; scope tracking still applies).
+fn guard_name(code: &str) -> Option<String> {
+    let t = code.trim_start();
+    let rest = t.strip_prefix("let ")?;
+    let rest = rest.trim_start();
+    let rest = rest.strip_prefix("Ok(").or_else(|| rest.strip_prefix("Some(")).unwrap_or(rest);
+    let rest = rest.trim_start();
+    let rest = rest.strip_prefix("mut ").unwrap_or(rest);
+    let name: String =
+        rest.chars().take_while(|c| c.is_alphanumeric() || *c == '_').collect();
+    if name.is_empty() {
+        None
+    } else {
+        Some(name)
+    }
+}
+
+struct HeldLock {
+    var: Option<String>,
+    lock: usize, // index into LOCK_ORDER
+    depth: usize,
+}
+
+fn lock_index(name: &str) -> usize {
+    LOCK_ORDER.iter().position(|&l| l == name).unwrap_or(usize::MAX)
+}
+
+/// Lint one file's text.  `file` is its path relative to `src/` with
+/// forward slashes (drives the panic-rule dirs and lock-name mapping).
+pub fn lint_file(file: &str, text: &str) -> Vec<Violation> {
+    let lines = clean(text);
+    let mut out = Vec::new();
+    let panic_applies = PANIC_DIRS.iter().any(|d| file.starts_with(d))
+        && !PANIC_ALLOW_FILES.contains(&file);
+
+    let mut depth = 0usize; // brace depth at the start of the current line
+    let mut cs: Option<usize> = None; // critical-section region: marker depth
+    let mut allow_next: Vec<String> = Vec::new();
+    let mut held: Vec<HeldLock> = Vec::new();
+    // #[cfg(test)] skipping: pending = attribute seen, waiting for the
+    // item; Some(d) = inside a test item whose line started at depth d
+    let mut cfg_test_pending = false;
+    let mut test_depth: Option<usize> = None;
+    // proto-coverage bookkeeping
+    let mut test_text = String::new();
+
+    for (idx, line) in lines.iter().enumerate() {
+        let lineno = idx + 1;
+        let code = line.code.as_str();
+        let has_code = !code.trim().is_empty();
+        let opens = code.chars().filter(|&c| c == '{').count();
+        let closes = code.chars().filter(|&c| c == '}').count();
+        let depth_after = (depth + opens).saturating_sub(closes);
+
+        // leave a test region once its item block has closed
+        if let Some(d) = test_depth {
+            if has_code {
+                test_text.push_str(code);
+                test_text.push('\n');
+            }
+            if depth_after <= d {
+                test_depth = None;
+            }
+            depth = depth_after;
+            continue;
+        }
+        if code.contains("#[cfg(test)]") {
+            cfg_test_pending = true;
+            depth = depth_after;
+            continue;
+        }
+        if cfg_test_pending && has_code {
+            cfg_test_pending = false;
+            if opens > 0 && depth_after > depth {
+                test_depth = Some(depth); // block item: skip until it closes
+                test_text.push_str(code);
+                test_text.push('\n');
+            }
+            // single-line item (use/fn-decl ending in `;`): just skip it
+            depth = depth_after;
+            continue;
+        }
+
+        let d = parse_directives(&line.comment);
+        if d.critical_section {
+            cs = Some(depth);
+        }
+        if d.end_critical_section {
+            cs = None;
+        }
+
+        // region/scope maintenance keyed on the depth at line start
+        if let Some(cd) = cs {
+            if depth < cd {
+                cs = None;
+            }
+        }
+        held.retain(|h| depth >= h.depth);
+        if has_code {
+            // explicit drops release guards early
+            let mut kept = Vec::new();
+            for h in held.drain(..) {
+                let dropped = h
+                    .var
+                    .as_ref()
+                    .map(|v| code.contains(&format!("drop({v})")))
+                    .unwrap_or(false);
+                if !dropped {
+                    kept.push(h);
+                }
+            }
+            held = kept;
+        }
+
+        if has_code {
+            let mut allowed: Vec<String> = std::mem::take(&mut allow_next);
+            allowed.extend(d.allows.iter().cloned());
+            let allow = |rule: &str| allowed.iter().any(|a| a.as_str() == rule);
+
+            // rule 1: critical-section deny lists
+            if cs.is_some() {
+                for &(rule, patterns) in CS_DENY {
+                    if allow(rule) {
+                        continue;
+                    }
+                    for &p in patterns {
+                        if code.contains(p) {
+                            out.push(Violation {
+                                file: file.to_string(),
+                                line: lineno,
+                                rule,
+                                msg: format!(
+                                    "`{p}` inside a marked critical section \
+                                     (move it outside the lock or `lint: allow({rule})`)"
+                                ),
+                            });
+                        }
+                    }
+                }
+            }
+
+            // rule 2: lock order
+            if let Some(lock) = acquired_lock(file, code) {
+                let li = lock_index(lock);
+                for h in &held {
+                    if h.lock >= li {
+                        out.push(Violation {
+                            file: file.to_string(),
+                            line: lineno,
+                            rule: "lock-order",
+                            msg: format!(
+                                "acquires `{lock}` while holding `{}` — order is {}",
+                                LOCK_ORDER[h.lock],
+                                LOCK_ORDER.join(" -> ")
+                            ),
+                        });
+                    }
+                }
+                held.push(HeldLock { var: guard_name(code), lock: li, depth });
+            }
+
+            // rule 3: panic family in runtime modules
+            if panic_applies && !allow("panic") {
+                for &p in PANIC_DENY {
+                    if code.contains(p) {
+                        out.push(Violation {
+                            file: file.to_string(),
+                            line: lineno,
+                            rule: "panic",
+                            msg: format!(
+                                "`{p}` in a runtime module — return an error, or \
+                                 justify with `lint: allow(panic)`"
+                            ),
+                        });
+                    }
+                }
+            }
+        } else {
+            // a standalone allow applies to the next code line only
+            if !d.allows.is_empty() {
+                allow_next = d.allows.clone();
+            }
+        }
+
+        depth = depth_after;
+    }
+
+    // rule 4: every proto Message variant exercised by the module's tests
+    if file.ends_with("net/proto.rs") {
+        for v in message_variants(text) {
+            if !test_text.contains(&format!("Message::{v}")) {
+                out.push(Violation {
+                    file: file.to_string(),
+                    line: 1,
+                    rule: "proto-coverage",
+                    msg: format!(
+                        "Message::{v} has no round-trip test in proto.rs's test module"
+                    ),
+                });
+            }
+        }
+    }
+    out
+}
+
+/// Variant names of `enum Message` (top-level idents one brace in).
+fn message_variants(text: &str) -> Vec<String> {
+    let lines = clean(text);
+    let mut variants = Vec::new();
+    let mut depth = 0usize;
+    let mut enum_depth: Option<usize> = None;
+    for line in &lines {
+        let code = line.code.as_str();
+        let opens = code.chars().filter(|&c| c == '{').count();
+        let closes = code.chars().filter(|&c| c == '}').count();
+        if let Some(d) = enum_depth {
+            if depth == d + 1 {
+                let t = code.trim_start();
+                if t.starts_with(|c: char| c.is_ascii_uppercase()) {
+                    let name: String =
+                        t.chars().take_while(|c| c.is_alphanumeric() || *c == '_').collect();
+                    variants.push(name);
+                }
+            }
+            if (depth + opens).saturating_sub(closes) <= d {
+                break;
+            }
+        } else if code.contains("enum Message") && opens > 0 {
+            enum_depth = Some(depth);
+        }
+        depth = (depth + opens).saturating_sub(closes);
+    }
+    variants
+}
+
+/// Lint every `.rs` file under `src_root`; paths in violations are
+/// relative to it.
+pub fn lint_tree(src_root: &Path) -> std::io::Result<Vec<Violation>> {
+    let mut files = Vec::new();
+    collect_rs(src_root, &mut files)?;
+    files.sort();
+    let mut out = Vec::new();
+    for f in files {
+        let rel = f
+            .strip_prefix(src_root)
+            .unwrap_or(&f)
+            .to_string_lossy()
+            .replace('\\', "/");
+        let text = fs::read_to_string(&f)?;
+        out.extend(lint_file(&rel, &text));
+    }
+    Ok(out)
+}
+
+fn collect_rs(dir: &Path, out: &mut Vec<std::path::PathBuf>) -> std::io::Result<()> {
+    for entry in fs::read_dir(dir)? {
+        let entry = entry?;
+        let path = entry.path();
+        if path.is_dir() {
+            collect_rs(&path, out)?;
+        } else if path.extension().is_some_and(|e| e == "rs") {
+            out.push(path);
+        }
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn rules(vs: &[Violation]) -> Vec<&'static str> {
+        vs.iter().map(|v| v.rule).collect()
+    }
+
+    #[test]
+    fn clean_tree_is_clean() {
+        // the real tree must lint clean; run from the workspace so the
+        // fixture-independent acceptance check lives in `cargo test` too
+        let src = Path::new(env!("CARGO_MANIFEST_DIR")).join("../src");
+        if src.is_dir() {
+            let vs = lint_tree(&src).unwrap();
+            assert!(vs.is_empty(), "tree has lint violations:\n{}", render(&vs));
+        }
+    }
+
+    fn render(vs: &[Violation]) -> String {
+        vs.iter().map(|v| format!("{v}\n")).collect()
+    }
+
+    #[test]
+    fn op_call_in_marked_critical_section_is_caught() {
+        let src = r#"
+impl Wrm {
+    fn bad(&self) {
+        let Ok(mut inner) = self.lock_inner() else { return };
+        // lint: critical-section — seeded violation fixture
+        let result = Self::run_cpu_member(op, &vals);
+        inner.completions.push_back((0, result));
+    }
+}
+"#;
+        let vs = lint_file("coordinator/wrm.rs", src);
+        assert_eq!(rules(&vs), vec!["op"], "{}", render(&vs));
+        assert_eq!(vs[0].line, 6);
+    }
+
+    #[test]
+    fn payload_copy_and_io_in_critical_section_are_caught() {
+        let src = "
+fn f(&self) {
+    let mut inner = sync::lock_clean(&self.inner);
+    // lint: critical-section
+    let bytes = v.data().to_vec();
+    let vals = self.source.load(chunk);
+}
+";
+        let vs = lint_file("data/staging/cache.rs", src);
+        assert_eq!(rules(&vs), vec!["copy", "io"], "{}", render(&vs));
+    }
+
+    #[test]
+    fn critical_section_ends_with_its_block() {
+        let src = "
+fn f(&self) {
+    {
+        let Ok(mut inner) = self.lock_inner() else { return };
+        // lint: critical-section
+        inner.queue.pop();
+    }
+    let r = Self::run_cpu_member(op, &vals); // outside the region
+}
+";
+        assert!(lint_file("coordinator/wrm.rs", src).is_empty());
+    }
+
+    #[test]
+    fn end_critical_section_reopens_the_unlocked_window() {
+        let src = "
+fn f(&self) {
+    let Ok(mut inner) = self.lock_inner() else { return };
+    // lint: critical-section
+    drop(inner);
+    // lint: end-critical-section
+    let loaded = self.source.load(chunk);
+}
+";
+        assert!(lint_file("data/staging/cache.rs", src).is_empty());
+    }
+
+    #[test]
+    fn out_of_order_lock_nesting_is_caught() {
+        // catalog (manager state) is the outermost lock; grabbing the WRM
+        // queue lock under it inverts the declared order
+        let src = "
+fn bad(&self) {
+    let mut st = sync::lock_clean(&self.state);
+    let Ok(mut inner) = self.lock_inner() else { return };
+}
+";
+        let vs = lint_file("coordinator/wrm.rs", src);
+        assert_eq!(rules(&vs), vec!["lock-order"], "{}", render(&vs));
+        assert!(vs[0].msg.contains("`wrm` while holding `catalog`"), "{}", vs[0].msg);
+    }
+
+    #[test]
+    fn in_order_nesting_and_dropped_guards_are_fine() {
+        let src = "
+fn ok(&self) {
+    let Ok(mut inner) = self.lock_inner() else { return };
+    drop(inner);
+    let mut st = sync::lock_clean(&self.state);
+}
+";
+        assert!(lint_file("coordinator/wrm.rs", src).is_empty());
+        // nested in declared order: wrm then catalog
+        let src = "
+fn ok(&self) {
+    let Ok(mut inner) = self.lock_inner() else { return };
+    let mut st = sync::lock_clean(&self.state);
+}
+";
+        assert!(lint_file("coordinator/wrm.rs", src).is_empty());
+    }
+
+    #[test]
+    fn reacquiring_the_same_lock_is_caught() {
+        let src = "
+fn bad(&self) {
+    let Ok(a) = self.lock_inner() else { return };
+    let Ok(b) = self.lock_inner() else { return };
+}
+";
+        let vs = lint_file("coordinator/wrm.rs", src);
+        assert_eq!(rules(&vs), vec!["lock-order"], "{}", render(&vs));
+    }
+
+    #[test]
+    fn unwraps_in_runtime_modules_are_caught_and_allowable() {
+        let src = "
+fn f() {
+    let x = maybe().unwrap();
+}
+";
+        let vs = lint_file("coordinator/manager.rs", src);
+        assert_eq!(rules(&vs), vec!["panic"], "{}", render(&vs));
+        // same-line and standalone allows both escape
+        let src = "
+fn f() {
+    let x = maybe().unwrap(); // lint: allow(panic) — infallible
+    // lint: allow(panic) — infallible
+    let y = maybe().unwrap();
+}
+";
+        assert!(lint_file("coordinator/manager.rs", src).is_empty());
+        // a standalone allow covers only the next line
+        let src = "
+fn f() {
+    // lint: allow(panic)
+    let x = maybe().unwrap();
+    let y = maybe().unwrap();
+}
+";
+        let vs = lint_file("coordinator/manager.rs", src);
+        assert_eq!(vs.len(), 1, "{}", render(&vs));
+        assert_eq!(vs[0].line, 5);
+    }
+
+    #[test]
+    fn test_modules_and_non_runtime_dirs_are_exempt_from_panic() {
+        let src = "
+fn run() {}
+#[cfg(test)]
+mod tests {
+    fn t() {
+        x.unwrap();
+    }
+}
+";
+        assert!(lint_file("coordinator/manager.rs", src).is_empty());
+        assert!(lint_file("config/mod.rs", "fn f() { x.unwrap(); }").is_empty());
+        assert!(lint_file(
+            "runtime/sync/model.rs",
+            "fn f() { x.unwrap(); }"
+        )
+        .is_empty());
+    }
+
+    #[test]
+    fn strings_and_comments_do_not_trip_rules() {
+        let src = r#"
+fn f(&self) {
+    let Ok(mut inner) = self.lock_inner() else { return };
+    // lint: critical-section
+    let msg = "calls run_cpu_member( and .to_vec() in a string";
+    let re = r"thread::sleep";
+    /* block comment mentioning File:: and .unwrap() */
+    inner.push(msg);
+}
+"#;
+        assert!(lint_file("coordinator/wrm.rs", src).is_empty());
+    }
+
+    #[test]
+    fn proto_coverage_catches_an_untested_variant() {
+        let src = "
+pub enum Message {
+    Request { capacity: u32 },
+    Assign { n: u32 },
+}
+
+#[cfg(test)]
+mod tests {
+    #[test]
+    fn roundtrip() {
+        let m = Message::Request { capacity: 1 };
+    }
+}
+";
+        let vs = lint_file("net/proto.rs", src);
+        assert_eq!(rules(&vs), vec!["proto-coverage"], "{}", render(&vs));
+        assert!(vs[0].msg.contains("Message::Assign"), "{}", vs[0].msg);
+    }
+
+    #[test]
+    fn message_variants_parse() {
+        let src = "
+pub enum Message {
+    /// doc
+    Request { capacity: u32, nested: Vec<u8> },
+    Assign { a: u32 },
+    Complete { b: u32 },
+    Fail { msg: String },
+}
+";
+        assert_eq!(message_variants(src), vec!["Request", "Assign", "Complete", "Fail"]);
+    }
+}

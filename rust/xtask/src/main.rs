@@ -1,0 +1,60 @@
+//! `cargo xtask` — repo tooling for htap.
+//!
+//! Subcommands:
+//!
+//! * `lint` — run the concurrency-discipline lint pass over `rust/src`
+//!   (critical-section deny lists, lock-order, panic policy, proto
+//!   round-trip coverage).  Exits non-zero on any violation.  See
+//!   docs/analysis.md for the rule catalogue and the annotation language.
+
+mod lint;
+
+use std::path::PathBuf;
+use std::process::ExitCode;
+
+fn src_root() -> PathBuf {
+    // xtask lives at rust/xtask; the tree under analysis is rust/src.
+    PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("..").join("src")
+}
+
+fn run_lint() -> ExitCode {
+    let root = src_root();
+    let mut violations = match lint::lint_tree(&root) {
+        Ok(v) => v,
+        Err(e) => {
+            eprintln!("xtask lint: cannot scan {}: {e}", root.display());
+            return ExitCode::FAILURE;
+        }
+    };
+    violations.sort_by(|a, b| (&a.file, a.line).cmp(&(&b.file, b.line)));
+    if violations.is_empty() {
+        println!("xtask lint: clean ({} discipline rules enforced)", lint::RULES.len());
+        return ExitCode::SUCCESS;
+    }
+    for v in &violations {
+        println!("{v}");
+    }
+    println!(
+        "xtask lint: {} violation{} — see docs/analysis.md for the rules \
+         and the `// lint: allow(rule)` escape hatch",
+        violations.len(),
+        if violations.len() == 1 { "" } else { "s" }
+    );
+    ExitCode::FAILURE
+}
+
+fn main() -> ExitCode {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    match args.first().map(String::as_str) {
+        Some("lint") => run_lint(),
+        Some(other) => {
+            eprintln!("xtask: unknown subcommand `{other}`");
+            eprintln!("usage: cargo xtask lint");
+            ExitCode::FAILURE
+        }
+        None => {
+            eprintln!("usage: cargo xtask lint");
+            ExitCode::FAILURE
+        }
+    }
+}
