@@ -4,7 +4,7 @@
 #   make test       — tier-1: cargo build --release && cargo test -q
 #   make artifacts  — AOT-lower the JAX graphs to artifacts/*.hlo.txt
 #   make lint       — clippy -D warnings + rustfmt check
-#   make check      — lint + cargo xtask lint + tier-1 tests + model suite
+#   make check      — lint + cargo xtask lint/docs + tier-1 tests + model suite
 #   make calibrate  — measure op costs on this host -> profiles.json
 #   make bench-baseline — record the fig7/8/9 snapshot (BENCH_seed.json)
 #   make smoke-distributed — localhost staged Manager + 2 TCP workers
@@ -28,10 +28,12 @@ lint:
 	cd rust && $(CARGO) fmt --check
 
 # The full pre-merge gate: style lints, the repo's own lock-discipline
-# lint (docs/analysis.md), tier-1 tests, the xtask unit tests, and the
-# deterministic interleaving suite.
+# lint (docs/analysis.md), the docs drift check (dead links + CLI flag
+# coverage in docs/operations.md), tier-1 tests, the xtask unit tests,
+# and the deterministic interleaving suite.
 check: lint
 	cd rust && $(CARGO) xtask lint
+	cd rust && $(CARGO) xtask docs
 	cd rust && $(CARGO) test -q
 	cd rust && $(CARGO) test -q -p xtask
 	cd rust && $(CARGO) test -q --features htap-model --test model_wrm

@@ -12,7 +12,8 @@ use std::collections::BTreeMap;
 /// Flags that take no value.  Everything else still requires one, so a
 /// forgotten value for a string/path flag is an error, not a silent
 /// `"true"`.
-const BOOL_FLAGS: &[&str] = &["quick", "no-dl", "no-prefetch", "no-locality", "no-replication"];
+const BOOL_FLAGS: &[&str] =
+    &["quick", "no-dl", "no-prefetch", "no-locality", "no-replication", "resume", "warm-restart"];
 
 /// Parsed command line.
 #[derive(Debug, Clone)]
@@ -134,6 +135,13 @@ impl Cli {
             cfg.read_latency_ms =
                 v.parse().map_err(|_| Error::Config("bad --read-latency-ms".into()))?;
         }
+        if let Some(v) = self.get("heartbeat-ms") {
+            cfg.heartbeat_ms =
+                v.parse().map_err(|_| Error::Config("bad --heartbeat-ms".into()))?;
+        }
+        if let Some(v) = self.get("lease-ms") {
+            cfg.lease_ms = v.parse().map_err(|_| Error::Config("bad --lease-ms".into()))?;
+        }
         cfg.validate()?;
         Ok(cfg)
     }
@@ -165,13 +173,18 @@ USAGE:
 
     htap sim     [--nodes N] [--tiles N] [--policy fcfs|pats]
                  [--profiles profiles.json] [--no-locality] [--no-replication]
+                 [--kill-worker-at F]
         discrete-event simulation at cluster scale (Keeneland model);
         --profiles calibrates the cost model from measured estimates
         (including the chunk-read cost a calibrate --read-latency-ms run
         recorded); --no-locality makes repeat stages migrate across nodes
         and re-read their tiles (the Fig. 8-style locality-off control);
         --no-replication makes steal migrations pay cold re-reads instead
-        of hinted prefetches (the tiered-storage control)
+        of hinted prefetches (the tiered-storage control);
+        --kill-worker-at F crashes the last node at fraction F (0..1) of
+        the no-fault makespan and reports how many stage instances were
+        re-executed on the survivors (the fault-injection mirror of the
+        distributed lease-expiry path)
 
     htap calibrate [--quick] [--tile-size S] [--tiles N] [--reps N]
                    [--seed N] [--read-latency-ms MS] [--out profiles.json]
@@ -183,22 +196,35 @@ USAGE:
     htap manager --listen HOST:PORT [--tiles N] [--tile-size S] [--workers N]
                  [--chunk-source synth|dir:PATH] [--workflow wf.json]
                  [--no-locality] [--no-replication] [--partition demand|init]
+                 [--lease-ms MS] [--checkpoint-dir PATH] [--resume]
         serve stage instances to TCP workers.  Staged protocol: workers
         read chunk payloads from their own --chunk-source (tiles never
         cross the wire) and assignment is locality-aware via the chunk
         catalog unless --no-locality.  Steals replicate the chunk
         (multi-homed catalog + replicate hints) unless --no-replication;
         --partition init range-assigns cold chunks to worker ids
-        1..=--workers up front (workers must pass matching --worker-id)
+        1..=--workers up front (workers must pass matching --worker-id).
+        Membership is elastic: workers may join, leave, and rejoin a
+        running manager; a worker that misses its lease (--lease-ms,
+        default 3000) is expired — its in-flight work re-issues to the
+        survivors and its catalog entries purge.  --checkpoint-dir
+        periodically snapshots manager progress (completion journal +
+        chunk catalog); --resume restarts from that snapshot instead of
+        from scratch after a manager crash
 
     htap worker  --connect HOST:PORT [--cpus N] [--gpus N] [--window N]
                  [--chunk-source synth|dir:PATH] [--workflow wf.json]
                  [--worker-id N] [--staging-cap N|NMB] [--prefetch-depth N]
                  [--spill-dir PATH] [--spill-cap N|NMB] [--read-latency-ms MS]
+                 [--heartbeat-ms MS] [--lease-ms MS] [--warm-restart]
         join a distributed run; --chunk-source must serve the same dataset
         the manager was pointed at (same synth seed/tile count, or the
         same shared directory), and --workflow must load the same file the
-        manager did
+        manager did.  The worker announces itself with a lease term
+        (--lease-ms; 0 opts out of liveness tracking) and heartbeats every
+        --heartbeat-ms.  --warm-restart recovers the surviving --spill-dir
+        contents after a crash and re-advertises them to the manager as
+        disk-tier chunks instead of clearing the directory
 
     htap export-tiles --dir PATH [--tiles N] [--tile-size S] [--seed N]
         write the synthetic dataset as .tile files for dir: chunk sources
@@ -320,6 +346,40 @@ mod tests {
             .unwrap()
             .run_config()
             .is_err());
+    }
+
+    #[test]
+    fn membership_flags_override_config() {
+        let c = Cli::parse(&args(&[
+            "worker",
+            "--heartbeat-ms",
+            "100",
+            "--lease-ms",
+            "700",
+            "--warm-restart",
+        ]))
+        .unwrap();
+        let cfg = c.run_config().unwrap();
+        assert_eq!(cfg.heartbeat_ms, 100);
+        assert_eq!(cfg.lease_ms, 700);
+        assert!(c.get_flag("warm-restart"));
+        // defaults: heartbeat 500 / lease 3000, cold restart, no resume
+        let c = Cli::parse(&args(&["worker"])).unwrap();
+        let cfg = c.run_config().unwrap();
+        assert_eq!(cfg.heartbeat_ms, RunConfig::default().heartbeat_ms);
+        assert_eq!(cfg.lease_ms, RunConfig::default().lease_ms);
+        assert!(!c.get_flag("warm-restart"));
+        assert!(!c.get_flag("resume"));
+        // validate() still rejects a heartbeat slower than the lease
+        assert!(Cli::parse(&args(&["worker", "--heartbeat-ms", "5000"]))
+            .unwrap()
+            .run_config()
+            .is_err());
+        // --resume and --checkpoint-dir parse (consumed by main, not RunConfig)
+        let c = Cli::parse(&args(&["manager", "--checkpoint-dir", "/tmp/ck", "--resume"]))
+            .unwrap();
+        assert_eq!(c.get("checkpoint-dir"), Some("/tmp/ck"));
+        assert!(c.get_flag("resume"));
     }
 
     #[test]

@@ -218,6 +218,14 @@ pub struct RunConfig {
     pub partition: PartitionMode,
     /// Artificial per-chunk read latency in ms (shared-FS stand-in).
     pub read_latency_ms: u64,
+    /// Heartbeat interval for distributed workers: how often an
+    /// identified worker renews its lease between completions.
+    pub heartbeat_ms: u64,
+    /// Lease term a worker promises the manager (elastic membership): if
+    /// the manager hears nothing for a full term the worker is presumed
+    /// dead — catalog purged, in-flight work re-issued.  0 disables lease
+    /// tracking (connection-drop detection still applies).
+    pub lease_ms: u64,
     /// RNG seed for synthetic data.
     pub seed: u64,
 }
@@ -243,6 +251,8 @@ impl Default for RunConfig {
             replication: true,
             partition: PartitionMode::Demand,
             read_latency_ms: 0,
+            heartbeat_ms: 500,
+            lease_ms: 3000,
             seed: 42,
         }
     }
@@ -296,6 +306,8 @@ impl RunConfig {
                 }
                 "partition" => self.partition = PartitionMode::parse(req_str(v, k)?)?,
                 "read_latency_ms" => self.read_latency_ms = req_usize(v, k)? as u64,
+                "heartbeat_ms" => self.heartbeat_ms = req_usize(v, k)? as u64,
+                "lease_ms" => self.lease_ms = req_usize(v, k)? as u64,
                 other => return Err(Error::Config(format!("unknown config key '{other}'"))),
             }
         }
@@ -322,6 +334,14 @@ impl RunConfig {
         }
         if self.spill_cap.is_zero() {
             return Err(Error::Config("spill_cap must be >= 1 (chunks or bytes)".into()));
+        }
+        // a worker that heartbeats slower than its lease term would be
+        // declared dead while perfectly healthy
+        if self.lease_ms > 0 && self.heartbeat_ms >= self.lease_ms {
+            return Err(Error::Config(format!(
+                "heartbeat_ms ({}) must be < lease_ms ({})",
+                self.heartbeat_ms, self.lease_ms
+            )));
         }
         Ok(())
     }
@@ -472,6 +492,23 @@ mod tests {
     fn unknown_key_rejected() {
         let mut c = RunConfig::default();
         assert!(c.apply_json(&Json::parse(r#"{"wat": 1}"#).unwrap()).is_err());
+    }
+
+    #[test]
+    fn lease_knobs_parse_and_validate() {
+        let mut c = RunConfig::default();
+        c.apply_json(&Json::parse(r#"{"heartbeat_ms": 200, "lease_ms": 1000}"#).unwrap())
+            .unwrap();
+        assert_eq!((c.heartbeat_ms, c.lease_ms), (200, 1000));
+        c.validate().unwrap();
+        // a heartbeat slower than the lease always expires: rejected
+        c.heartbeat_ms = 1000;
+        assert!(c.validate().is_err());
+        c.heartbeat_ms = 2000;
+        assert!(c.validate().is_err());
+        // lease 0 = tracking off; any heartbeat value is then fine
+        c.lease_ms = 0;
+        c.validate().unwrap();
     }
 
     #[test]

@@ -1,0 +1,260 @@
+//! Manager checkpointing: periodic serialization of workflow progress
+//! (the completion journal) plus the chunk catalog, so `htap manager
+//! --resume` picks up a crashed manager's run instead of recomputing.
+//!
+//! On-disk format (`manager.ckpt`): magic `HTCK` + `u32 LE` version,
+//! then the journal (count-prefixed [`CompletionRecord`]s — stage index,
+//! chunk id, output values) and the catalog snapshot (count-prefixed
+//! `(worker, chunk, tier)` triples).  Values reuse the `.tile`/`.spill`
+//! tensor body layout ([`crate::data::staging::source`]), so corrupt or
+//! truncated checkpoints decode to `Err`, never a panic — a damaged
+//! checkpoint means a cold start, not a crashed restart.
+//!
+//! Writes go through a temp file + rename so a manager killed mid-write
+//! leaves the previous checkpoint intact (the same crash-consistency
+//! contract the spill tier makes per chunk file).
+
+use crate::coordinator::manager::{ChunkId, CompletionRecord, Manager};
+use crate::data::staging::source::{decode_tensor, encode_tensor, take_bytes};
+use crate::data::staging::{Tier, WorkerId};
+use crate::runtime::Value;
+use crate::{Error, Result};
+use std::path::{Path, PathBuf};
+
+/// Magic + format version of the on-disk checkpoint container.
+const CKPT_MAGIC: &[u8; 4] = b"HTCK";
+const CKPT_VERSION: u32 = 1;
+
+/// File name inside `--checkpoint-dir`.
+pub const CHECKPOINT_FILE: &str = "manager.ckpt";
+
+fn put_u32(buf: &mut Vec<u8>, v: u32) {
+    buf.extend_from_slice(&v.to_le_bytes());
+}
+
+fn put_u64(buf: &mut Vec<u8>, v: u64) {
+    buf.extend_from_slice(&v.to_le_bytes());
+}
+
+fn put_value(buf: &mut Vec<u8>, v: &Value) {
+    match v {
+        Value::Scalar(s) => {
+            buf.push(0);
+            buf.extend_from_slice(&s.to_le_bytes());
+        }
+        Value::Tensor(t) => {
+            buf.push(1);
+            encode_tensor(buf, t);
+        }
+    }
+}
+
+fn read_u32(bytes: &[u8], pos: &mut usize) -> Result<u32> {
+    // lint: allow(panic) — take_bytes guarantees a 4-byte slice
+    Ok(u32::from_le_bytes(take_bytes(bytes, pos, 4)?.try_into().unwrap()))
+}
+
+fn read_u64(bytes: &[u8], pos: &mut usize) -> Result<u64> {
+    // lint: allow(panic) — take_bytes guarantees an 8-byte slice
+    Ok(u64::from_le_bytes(take_bytes(bytes, pos, 8)?.try_into().unwrap()))
+}
+
+/// Bound a count prefix by the bytes actually left: a corrupt count must
+/// fail before any preallocation (same rule as the wire codec).
+fn read_count(bytes: &[u8], pos: &mut usize, min_elem_bytes: usize) -> Result<usize> {
+    let n = read_u32(bytes, pos)? as usize;
+    let left = bytes.len().saturating_sub(*pos);
+    if n.saturating_mul(min_elem_bytes) > left {
+        return Err(Error::Config(format!("checkpoint count {n} exceeds file ({left} bytes left)")));
+    }
+    Ok(n)
+}
+
+fn read_value(bytes: &[u8], pos: &mut usize) -> Result<Value> {
+    match take_bytes(bytes, pos, 1)?[0] {
+        0 => {
+            // lint: allow(panic) — take_bytes guarantees a 4-byte slice
+            Ok(Value::Scalar(f32::from_le_bytes(take_bytes(bytes, pos, 4)?.try_into().unwrap())))
+        }
+        1 => Ok(Value::Tensor(decode_tensor(bytes, pos)?)),
+        t => Err(Error::Config(format!("checkpoint: bad value tag {t}"))),
+    }
+}
+
+/// Serialize a checkpoint snapshot to its on-disk byte layout.
+pub fn encode(
+    journal: &[CompletionRecord],
+    catalog: &[(WorkerId, ChunkId, Tier)],
+) -> Vec<u8> {
+    let mut buf = Vec::new();
+    buf.extend_from_slice(CKPT_MAGIC);
+    put_u32(&mut buf, CKPT_VERSION);
+    put_u32(&mut buf, journal.len() as u32);
+    for rec in journal {
+        put_u64(&mut buf, rec.stage_idx as u64);
+        put_u64(&mut buf, rec.chunk);
+        put_u32(&mut buf, rec.outputs.len() as u32);
+        for v in &rec.outputs {
+            put_value(&mut buf, v);
+        }
+    }
+    put_u32(&mut buf, catalog.len() as u32);
+    for &(w, c, tier) in catalog {
+        put_u64(&mut buf, w);
+        put_u64(&mut buf, c);
+        buf.push(match tier {
+            Tier::Mem => 0,
+            Tier::Disk => 1,
+        });
+    }
+    buf
+}
+
+/// Decode a checkpoint written by [`encode`].  Any corruption — bad
+/// magic, hostile counts, truncation, trailing bytes — is an `Err`.
+pub fn decode(bytes: &[u8]) -> Result<(Vec<CompletionRecord>, Vec<(WorkerId, ChunkId, Tier)>)> {
+    let mut pos = 0usize;
+    if take_bytes(bytes, &mut pos, 4)? != CKPT_MAGIC {
+        return Err(Error::Config("not a checkpoint file (bad magic)".into()));
+    }
+    let version = read_u32(bytes, &mut pos)?;
+    if version != CKPT_VERSION {
+        return Err(Error::Config(format!("unsupported checkpoint version {version}")));
+    }
+    let n_records = read_count(bytes, &mut pos, 20)?; // stage + chunk + count
+    let mut journal = Vec::with_capacity(n_records);
+    for _ in 0..n_records {
+        let stage_idx = read_u64(bytes, &mut pos)? as usize;
+        let chunk = read_u64(bytes, &mut pos)?;
+        let n_outputs = read_count(bytes, &mut pos, 5)?; // tag + f32 minimum
+        let mut outputs = Vec::with_capacity(n_outputs);
+        for _ in 0..n_outputs {
+            outputs.push(read_value(bytes, &mut pos)?);
+        }
+        journal.push(CompletionRecord { stage_idx, chunk, outputs });
+    }
+    let n_entries = read_count(bytes, &mut pos, 17)?; // worker + chunk + tier
+    let mut catalog = Vec::with_capacity(n_entries);
+    for _ in 0..n_entries {
+        let w = read_u64(bytes, &mut pos)?;
+        let c = read_u64(bytes, &mut pos)?;
+        let tier = match take_bytes(bytes, &mut pos, 1)?[0] {
+            0 => Tier::Mem,
+            1 => Tier::Disk,
+            t => return Err(Error::Config(format!("checkpoint: bad tier tag {t}"))),
+        };
+        catalog.push((w, c, tier));
+    }
+    if pos != bytes.len() {
+        return Err(Error::Config(format!(
+            "checkpoint: {} trailing bytes after decode",
+            bytes.len() - pos
+        )));
+    }
+    Ok((journal, catalog))
+}
+
+fn checkpoint_path(dir: &Path) -> PathBuf {
+    dir.join(CHECKPOINT_FILE)
+}
+
+/// Snapshot `mgr` and atomically (temp file + rename) write the
+/// checkpoint under `dir`, creating the directory if needed.  The
+/// snapshot is taken under the manager lock but encoding and I/O happen
+/// outside it — checkpointing never stalls assignment.
+pub fn write_checkpoint(dir: &Path, mgr: &Manager) -> Result<()> {
+    let (journal, catalog) = mgr.checkpoint_state();
+    let bytes = encode(&journal, &catalog);
+    std::fs::create_dir_all(dir)?;
+    let tmp = dir.join(format!("{CHECKPOINT_FILE}.tmp.{}", std::process::id()));
+    std::fs::write(&tmp, &bytes)?;
+    std::fs::rename(&tmp, checkpoint_path(dir))?;
+    Ok(())
+}
+
+/// Load the checkpoint under `dir`, if one exists.  `Ok(None)` means no
+/// checkpoint (cold start); a present-but-corrupt file is an `Err` so the
+/// operator decides rather than silently recomputing.
+pub fn load_checkpoint(
+    dir: &Path,
+) -> Result<Option<(Vec<CompletionRecord>, Vec<(WorkerId, ChunkId, Tier)>)>> {
+    let path = checkpoint_path(dir);
+    if !path.exists() {
+        return Ok(None);
+    }
+    let bytes = std::fs::read(&path)?;
+    decode(&bytes).map(Some)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::runtime::HostTensor;
+
+    fn sample() -> (Vec<CompletionRecord>, Vec<(WorkerId, ChunkId, Tier)>) {
+        let journal = vec![
+            CompletionRecord { stage_idx: 0, chunk: 3, outputs: vec![Value::Scalar(1.5)] },
+            CompletionRecord {
+                stage_idx: 1,
+                chunk: 0,
+                outputs: vec![
+                    Value::Tensor(HostTensor::new(vec![2, 2], vec![1.0, 2.0, 3.0, 4.0]).unwrap()),
+                    Value::Scalar(-7.0),
+                ],
+            },
+            CompletionRecord { stage_idx: 2, chunk: u64::MAX, outputs: vec![] },
+        ];
+        let catalog = vec![(1, 0, Tier::Mem), (1, 3, Tier::Disk), (2, 1, Tier::Mem)];
+        (journal, catalog)
+    }
+
+    #[test]
+    fn checkpoint_bytes_roundtrip() {
+        let (journal, catalog) = sample();
+        let bytes = encode(&journal, &catalog);
+        let (j2, c2) = decode(&bytes).unwrap();
+        assert_eq!(j2, journal);
+        assert_eq!(c2, catalog);
+    }
+
+    #[test]
+    fn corrupt_checkpoints_are_errors_not_panics() {
+        let (journal, catalog) = sample();
+        let bytes = encode(&journal, &catalog);
+        // bad magic
+        let mut bad = bytes.clone();
+        bad[0] = b'X';
+        assert!(decode(&bad).is_err());
+        // unsupported version
+        let mut bad = bytes.clone();
+        bad[4] = 99;
+        assert!(decode(&bad).is_err());
+        // every truncation point must fail cleanly
+        for cut in 0..bytes.len() {
+            assert!(decode(&bytes[..cut]).is_err(), "truncation at {cut} must not decode");
+        }
+        // trailing garbage is rejected too
+        let mut bad = bytes.clone();
+        bad.push(0);
+        assert!(decode(&bad).is_err());
+        // hostile journal count: claims 2^31 records in a tiny file
+        let mut bad = bytes[..8].to_vec();
+        bad.extend_from_slice(&0x8000_0000u32.to_le_bytes());
+        assert!(decode(&bad).is_err());
+    }
+
+    #[test]
+    fn checkpoint_file_roundtrip_and_missing_dir() {
+        let dir = std::env::temp_dir()
+            .join(format!("htap-ckpt-roundtrip-{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&dir);
+        assert!(load_checkpoint(&dir).unwrap().is_none(), "no checkpoint = cold start");
+        let (journal, catalog) = sample();
+        let bytes = encode(&journal, &catalog);
+        std::fs::create_dir_all(&dir).unwrap();
+        std::fs::write(dir.join(CHECKPOINT_FILE), &bytes).unwrap();
+        let (j2, c2) = load_checkpoint(&dir).unwrap().unwrap();
+        assert_eq!((j2, c2), (journal, catalog));
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+}

@@ -13,13 +13,15 @@
 //! aggregation of intermediary results (`StageKind::Reduce`, which may
 //! chain — an upstream Reduce contributes a single completed instance).
 
-use crate::data::staging::{ChunkCatalog, WorkerId, ANON_WORKER};
+use crate::data::staging::{ChunkCatalog, Tier, WorkerId, ANON_WORKER};
 use crate::dataflow::{StageInput, StageKind, Workflow};
 use crate::runtime::Value;
 use crate::{Error, Result};
 use crate::runtime::sync::{self, Condvar, Mutex};
-use std::collections::{BTreeMap, HashMap, VecDeque};
+use std::collections::{BTreeMap, HashMap, HashSet, VecDeque};
+use std::sync::atomic::{AtomicBool, Ordering};
 use std::sync::Arc;
+use std::time::{Duration, Instant};
 
 /// Identifies a data chunk (e.g. one image tile).
 pub type ChunkId = u64;
@@ -152,6 +154,34 @@ pub trait WorkSource: Send + Sync {
 
     /// Report a finished stage instance with its outputs.
     fn complete(&self, instance_id: u64, outputs: Vec<Value>);
+
+    /// Elastic membership (v4): announce this worker and the lease term it
+    /// promises to renew within.  Default no-op so legacy sources (tests,
+    /// fixed-pool drivers) keep working unchanged.
+    fn register(&self, _worker: WorkerId, _lease_ms: u64) {}
+
+    /// Renew this worker's lease (liveness signal between completions).
+    fn heartbeat(&self, _worker: WorkerId) {}
+
+    /// Clean departure: the worker drained its in-flight work and leaves.
+    fn goodbye(&self, _worker: WorkerId) {}
+}
+
+/// One replayable completion: which `(stage, chunk)` instance finished and
+/// what it produced.  The manager journals these (when checkpointing is
+/// enabled) in completion order, so restoring a checkpoint is a replay of
+/// the same completions against a freshly seeded manager.
+#[derive(Debug, Clone, PartialEq)]
+pub struct CompletionRecord {
+    pub stage_idx: usize,
+    pub chunk: ChunkId,
+    pub outputs: Vec<Value>,
+}
+
+/// Liveness bookkeeping for one registered worker.
+struct Member {
+    last_seen: Instant,
+    lease: Duration,
 }
 
 struct MgrState {
@@ -184,6 +214,16 @@ struct MgrState {
     locality_steals: u64,
     /// steals that left the chunk multi-homed (replicate hints emitted)
     replicated: u64,
+    /// workers purged from the catalog (crashed or departed): their homed
+    /// chunks are treated as unhomed and no hints target them any more
+    purged: HashSet<WorkerId>,
+    /// instance id -> worker currently holding that lease (identified
+    /// requesters only); drives lease-expiry requeue and journal liveness
+    lessee: HashMap<u64, WorkerId>,
+    /// registered workers with a live lease (heartbeat-tracked membership)
+    members: HashMap<WorkerId, Member>,
+    /// completion journal (populated only when checkpointing is enabled)
+    journal: Vec<CompletionRecord>,
     error: Option<String>,
 }
 
@@ -205,6 +245,8 @@ pub struct Manager {
     replication: bool,
     /// initial partition: chunk -> home worker (empty = demand-driven)
     home: HashMap<ChunkId, WorkerId>,
+    /// record a [`CompletionRecord`] per completion for checkpointing
+    journal_enabled: AtomicBool,
     state: Mutex<MgrState>,
     cv: Condvar,
 }
@@ -277,6 +319,7 @@ impl Manager {
             locality: policy.locality,
             replication: policy.replication,
             home,
+            journal_enabled: AtomicBool::new(false),
             state: Mutex::new(MgrState {
                 pending: VecDeque::new(),
                 next_id: 0,
@@ -292,6 +335,10 @@ impl Manager {
                 locality_cold: 0,
                 locality_steals: 0,
                 replicated: 0,
+                purged: HashSet::new(),
+                lessee: HashMap::new(),
+                members: HashMap::new(),
+                journal: Vec::new(),
                 stale_completions: 0,
                 error: None,
             }),
@@ -441,6 +488,7 @@ impl Manager {
         let mut st = sync::lock_clean(&self.state);
         let mut n = 0;
         for id in ids {
+            st.lessee.remove(id);
             if let Some(a) = st.inflight.get(id).cloned() {
                 // only requeue if not already sitting in pending (a lease is
                 // "held" once popped by request(); seeding also pre-inserts)
@@ -484,12 +532,170 @@ impl Manager {
     /// Forget a dead/disconnected worker's catalog entries so its chunks
     /// go back to cold and survivors take them in tier 2 instead of as
     /// steals (pairs with [`Manager::requeue_stale`] on the
-    /// fault-tolerance path).  Returns how many entries were dropped.
+    /// fault-tolerance path).  The worker is marked purged: its homed
+    /// chunks count as unhomed and no prefetch/replicate hints target it
+    /// until it re-registers.  Returns how many entries were dropped.
     pub fn purge_worker(&self, worker: WorkerId) -> usize {
         if worker == ANON_WORKER {
             return 0;
         }
-        sync::lock_clean(&self.state).catalog.purge_worker(worker)
+        // lint: critical-section — drop the dead worker's catalog entries
+        let mut st = sync::lock_clean(&self.state);
+        st.purged.insert(worker);
+        st.members.remove(&worker);
+        st.catalog.purge_worker(worker)
+    }
+
+    /// Dynamic membership: a worker announced itself (proto v4 `Hello`).
+    /// `lease_ms == 0` opts out of lease tracking (the worker is still
+    /// served, but only its TCP connection signals liveness).  A rejoining
+    /// worker is un-purged so its home range counts again.
+    pub fn register_worker(&self, worker: WorkerId, lease_ms: u64) {
+        if worker == ANON_WORKER {
+            return;
+        }
+        // lint: critical-section — admit a worker to the membership table
+        let mut st = sync::lock_clean(&self.state);
+        st.purged.remove(&worker);
+        if lease_ms > 0 {
+            st.members.insert(
+                worker,
+                Member { last_seen: Instant::now(), lease: Duration::from_millis(lease_ms) },
+            );
+        }
+    }
+
+    /// Renew a registered worker's lease (proto v4 `Heartbeat`).
+    pub fn heartbeat_worker(&self, worker: WorkerId) {
+        // lint: critical-section — stamp the member's lease
+        let mut st = sync::lock_clean(&self.state);
+        if let Some(m) = st.members.get_mut(&worker) {
+            m.last_seen = Instant::now();
+        }
+    }
+
+    /// Expel a worker (clean `Goodbye` or a missed lease): requeue every
+    /// lease it held, purge its catalog entries, mark it purged.  Returns
+    /// how many stage instances were re-issued.
+    pub fn expire_worker(&self, worker: WorkerId) -> usize {
+        if worker == ANON_WORKER {
+            return 0;
+        }
+        // lint: critical-section — fold a departed worker out of all state
+        let mut st = sync::lock_clean(&self.state);
+        st.members.remove(&worker);
+        st.purged.insert(worker);
+        st.catalog.purge_worker(worker);
+        let held: Vec<u64> = st
+            .lessee
+            .iter()
+            .filter(|&(_, &w)| w == worker)
+            .map(|(&id, _)| id)
+            .collect();
+        let mut requeued = 0;
+        for id in held {
+            st.lessee.remove(&id);
+            if let Some(a) = st.inflight.get(&id).cloned() {
+                if !st.pending.iter().any(|p| p.instance_id == id) {
+                    st.pending.push_front(a);
+                    requeued += 1;
+                }
+            }
+        }
+        drop(st);
+        if requeued > 0 {
+            self.cv.notify_all();
+        }
+        requeued
+    }
+
+    /// Sweep the membership table for missed leases and expire every
+    /// worker past its term.  Returns `(worker, re-issued instances)` per
+    /// expiry — the manager's liveness loop calls this periodically.
+    pub fn sweep_leases(&self) -> Vec<(WorkerId, usize)> {
+        let now = Instant::now();
+        let expired: Vec<WorkerId> = {
+            // lint: critical-section — scan lease deadlines
+            let st = sync::lock_clean(&self.state);
+            st.members
+                .iter()
+                .filter(|(_, m)| now.duration_since(m.last_seen) > m.lease)
+                .map(|(&w, _)| w)
+                .collect()
+        };
+        expired.into_iter().map(|w| (w, self.expire_worker(w))).collect()
+    }
+
+    /// Registered (lease-tracked) workers — diagnostics/test hook.
+    pub fn member_count(&self) -> usize {
+        sync::lock_clean(&self.state).members.len()
+    }
+
+    /// Block until the workflow completes or a worker reports a fatal
+    /// error.  The elastic accept loop uses this to know when to stop
+    /// accepting new workers.
+    pub fn wait_done(&self) {
+        let mut st = sync::lock_clean(&self.state);
+        while st.remaining_instances > 0 && st.error.is_none() {
+            st = match self.cv.wait(st) {
+                Ok(g) => g,
+                Err(p) => p.into_inner(),
+            };
+        }
+    }
+
+    /// Start journaling completions so [`Manager::checkpoint_state`] has a
+    /// replayable record.  Call before any worker connects.
+    pub fn enable_journal(&self) {
+        self.journal_enabled.store(true, Ordering::Release);
+    }
+
+    /// Snapshot for a checkpoint: the completion journal so far plus the
+    /// chunk catalog (who holds what, at which tier).  Values are
+    /// Arc-backed, so the clones are cheap; encoding happens outside the
+    /// lock.
+    pub fn checkpoint_state(&self) -> (Vec<CompletionRecord>, Vec<(WorkerId, ChunkId, Tier)>) {
+        // lint: critical-section — snapshot journal + catalog
+        let st = sync::lock_clean(&self.state);
+        (st.journal.clone(), st.catalog.entries())
+    }
+
+    /// Restore a checkpoint into a freshly built manager by replaying the
+    /// journaled completions in order, then re-seeding the catalog.
+    /// Returns how many instances were replayed.
+    pub fn restore_from(
+        &self,
+        journal: Vec<CompletionRecord>,
+        catalog: Vec<(WorkerId, ChunkId, Tier)>,
+    ) -> Result<usize> {
+        let mut replayed = 0;
+        for rec in journal {
+            let id = {
+                // lint: critical-section — look up the seeded instance id
+                let st = sync::lock_clean(&self.state);
+                st.inflight
+                    .iter()
+                    .find(|(_, a)| a.stage_idx == rec.stage_idx && a.chunk == rec.chunk)
+                    .map(|(&id, _)| id)
+            };
+            let Some(id) = id else {
+                return Err(Error::Scheduler(format!(
+                    "checkpoint replay: no live instance for stage {} chunk {}",
+                    rec.stage_idx, rec.chunk
+                )));
+            };
+            self.complete(id, rec.outputs);
+            replayed += 1;
+        }
+        // lint: critical-section — re-seed catalog holders from the checkpoint
+        let mut st = sync::lock_clean(&self.state);
+        for (w, c, tier) in catalog {
+            st.catalog.insert(w, c);
+            if tier == Tier::Disk {
+                st.catalog.demote(w, c);
+            }
+        }
+        Ok(replayed)
     }
 
     /// Outputs of a Reduce stage (after completion), looked up by stage
@@ -517,6 +723,10 @@ impl WorkSource for Manager {
         let mut st = sync::lock_clean(&self.state);
         if req.worker != ANON_WORKER {
             st.catalog.update(req.worker, &req.staged_add, &req.staged_drop, &req.demoted);
+            // a work request is as good as a heartbeat
+            if let Some(m) = st.members.get_mut(&req.worker) {
+                m.last_seen = Instant::now();
+            }
         }
         loop {
             if !st.pending.is_empty() {
@@ -548,12 +758,15 @@ impl WorkSource for Manager {
                     while picked.len() < n && i < st.pending.len() {
                         let cold = {
                             let a = &st.pending[i];
+                            // a chunk homed on a purged worker is unhomed:
+                            // any requester may take it in tier 2 instead
+                            // of waiting for an owner that will never come
                             !a.needs_chunk
                                 || (st.catalog.holder_count(a.chunk) == 0
                                     && self
                                         .home
                                         .get(&a.chunk)
-                                        .map(|&w| w == req.worker)
+                                        .map(|&w| w == req.worker || st.purged.contains(&w))
                                         .unwrap_or(true))
                         };
                         if cold {
@@ -623,11 +836,14 @@ impl WorkSource for Manager {
                         if a.needs_chunk {
                             st.catalog.insert(req.worker, a.chunk);
                         }
+                        st.lessee.insert(a.instance_id, req.worker);
                     }
                 }
                 // prefetch hints: upcoming chunks not yet staged here —
                 // chunks homed on the requester first, then the rest (the
-                // homed pass only exists under an initial partition)
+                // homed pass only exists under an initial partition; a
+                // home on a purged worker is no home at all, so those
+                // chunks compete in the open pass instead of dangling)
                 let mut prefetch: Vec<ChunkId> = Vec::new();
                 if req.prefetch_budget > 0 {
                     let first_pass = if self.home.is_empty() { 1 } else { 0 };
@@ -636,8 +852,10 @@ impl WorkSource for Manager {
                             if prefetch.len() >= req.prefetch_budget {
                                 break;
                             }
-                            let homed_here =
-                                self.home.get(&a.chunk).copied() == Some(req.worker);
+                            let homed_here = match self.home.get(&a.chunk) {
+                                Some(&w) => w == req.worker,
+                                None => false,
+                            };
                             if pass == 0 && !homed_here {
                                 continue;
                             }
@@ -672,9 +890,18 @@ impl WorkSource for Manager {
             self.cv.notify_all();
             return;
         };
+        // a completion renews the finishing worker's lease
+        if let Some(w) = st.lessee.remove(&instance_id) {
+            if let Some(m) = st.members.get_mut(&w) {
+                m.last_seen = Instant::now();
+            }
+        }
         let (stage, chunk) = (assignment.stage_idx, assignment.chunk);
         st.completed_instances += 1;
         st.remaining_instances = st.remaining_instances.saturating_sub(1);
+        if self.journal_enabled.load(Ordering::Acquire) {
+            st.journal.push(CompletionRecord { stage_idx: stage, chunk, outputs: outs.clone() });
+        }
         // retain outputs consumed downstream; Reduce outputs are final
         // results the caller reads back via `reduce_outputs`.
         if self.has_dependents[stage] || self.workflow.stages[stage].kind == StageKind::Reduce {
@@ -758,6 +985,18 @@ impl WorkSource for Manager {
         // this (stage, chunk) pair any more and it's not a reduce input).
         drop(st);
         self.cv.notify_all();
+    }
+
+    fn register(&self, worker: WorkerId, lease_ms: u64) {
+        self.register_worker(worker, lease_ms);
+    }
+
+    fn heartbeat(&self, worker: WorkerId) {
+        self.heartbeat_worker(worker);
+    }
+
+    fn goodbye(&self, worker: WorkerId) {
+        self.expire_worker(worker);
     }
 }
 
@@ -1236,5 +1475,128 @@ mod tests {
         let total: usize = handles.into_iter().map(|h| h.join().unwrap()).sum();
         assert_eq!(total, 40);
         assert!(mgr.error().is_none());
+    }
+
+    #[test]
+    fn expired_lease_requeues_held_work_and_purges_the_catalog() {
+        let mgr = staged_two_stage(3, true);
+        mgr.register_worker(1, 1); // 1 ms lease: expires immediately
+        mgr.register_worker(2, 60_000);
+        assert_eq!(mgr.member_count(), 2);
+        // worker 1 takes two leases, stages the chunks, then goes silent
+        let b = mgr.request_work(&WorkRequest { capacity: 2, worker: 1, ..Default::default() });
+        assert_eq!(b.assignments.len(), 2);
+        std::thread::sleep(Duration::from_millis(10));
+        let expired = mgr.sweep_leases();
+        assert_eq!(expired, vec![(1, 2)], "worker 1's two leases re-issued");
+        assert_eq!(mgr.member_count(), 1);
+        assert_eq!(mgr.chunk_holders(0), 0, "purged holder is gone from the catalog");
+        // a healthy worker drains everything exactly once
+        let mut executed = 0;
+        loop {
+            let b = mgr.request_work(&WorkRequest { capacity: 4, worker: 2, ..Default::default() });
+            if b.assignments.is_empty() {
+                break;
+            }
+            for a in b.assignments {
+                executed += 1;
+                mgr.complete(a.instance_id, vec![Value::Scalar(0.0)]);
+            }
+        }
+        assert_eq!(executed, 6);
+        assert!(mgr.error().is_none());
+    }
+
+    #[test]
+    fn heartbeats_keep_a_short_lease_alive() {
+        let mgr = staged_two_stage(1, true);
+        mgr.register_worker(1, 60_000);
+        mgr.heartbeat_worker(1);
+        assert!(mgr.sweep_leases().is_empty());
+        // clean goodbye deregisters without requeue noise (no leases held)
+        assert_eq!(mgr.expire_worker(1), 0);
+        assert_eq!(mgr.member_count(), 0);
+    }
+
+    #[test]
+    fn rejoining_worker_is_unpurged() {
+        let mgr = staged_with_policy(
+            4,
+            AssignPolicy { partition: Partition::Init(vec![1, 2]), ..Default::default() },
+        );
+        mgr.purge_worker(2);
+        // worker 2's home range is unhomed while purged: worker 1 may take
+        // chunk 2 in tier 2 (front of its post-range queue), not last-resort
+        let b = mgr.request_work(&WorkRequest { capacity: 3, worker: 1, ..Default::default() });
+        assert_eq!(b.assignments.iter().map(|a| a.chunk).collect::<Vec<_>>(), vec![0, 1, 2]);
+        let (_, cold, steals) = mgr.locality_stats();
+        assert_eq!((cold, steals), (3, 0));
+        // worker 2 comes back: its home claim holds again for chunk 3
+        mgr.register_worker(2, 60_000);
+        let b2 = mgr.request_work(&WorkRequest { capacity: 1, worker: 2, ..Default::default() });
+        assert_eq!(b2.assignments[0].chunk, 3);
+        for a in b.assignments.into_iter().chain(b2.assignments) {
+            mgr.complete(a.instance_id, vec![Value::Scalar(0.0)]);
+        }
+    }
+
+    #[test]
+    fn purged_home_chunks_are_not_deferred_in_hints_or_tier2() {
+        let mgr = staged_with_policy(
+            6,
+            AssignPolicy { partition: Partition::Init(vec![1, 2]), ..Default::default() },
+        );
+        mgr.purge_worker(1);
+        // worker 2 asks: tier 2 starts from the queue front because worker
+        // 1's home claim (chunks 0..3) died with it
+        let b = mgr.request_work(&WorkRequest {
+            capacity: 1,
+            worker: 2,
+            prefetch_budget: 3,
+            ..Default::default()
+        });
+        assert_eq!(b.assignments[0].chunk, 0);
+        // hints: the homed pass leads with worker 2's own range, then the
+        // open pass covers the orphaned chunks instead of dangling
+        assert_eq!(b.prefetch, vec![3, 4, 5]);
+    }
+
+    #[test]
+    fn checkpoint_journal_replays_into_a_fresh_manager() {
+        // run half the workflow with journaling on, snapshot, then restore
+        // into a fresh manager and finish — outputs must match a clean run
+        let mgr = staged_two_stage(3, true);
+        mgr.enable_journal();
+        let b = mgr.request_work(&WorkRequest { capacity: 3, worker: 1, ..Default::default() });
+        assert_eq!(b.assignments.len(), 3);
+        for a in b.assignments {
+            mgr.complete(a.instance_id, vec![Value::Scalar(a.chunk as f32 + 1.0)]);
+        }
+        let (journal, catalog) = mgr.checkpoint_state();
+        assert_eq!(journal.len(), 3);
+        assert!(catalog.iter().any(|&(w, _, _)| w == 1));
+
+        let fresh = staged_two_stage(3, true);
+        fresh.enable_journal();
+        assert_eq!(fresh.restore_from(journal, catalog).unwrap(), 3);
+        let (done, total) = fresh.progress();
+        assert_eq!((done, total), (3, 6), "stage 0 replayed, stage 1 outstanding");
+        // the restored catalog still routes stage-1 work to worker 1 as hits
+        let b = fresh.request_work(&WorkRequest { capacity: 3, worker: 1, ..Default::default() });
+        assert_eq!(b.assignments.len(), 3);
+        assert!(b.assignments.iter().all(|a| a.locality), "restored holders give hits");
+        for a in b.assignments {
+            // stage 1 sees the replayed upstream value
+            assert_eq!(a.inputs[0].as_scalar().unwrap(), a.chunk as f32 + 1.0);
+            fresh.complete(a.instance_id, vec![Value::Scalar(0.0)]);
+        }
+        assert_eq!(fresh.progress(), (6, 6));
+    }
+
+    #[test]
+    fn restore_rejects_records_for_unknown_instances() {
+        let fresh = staged_two_stage(1, true);
+        let bogus = vec![CompletionRecord { stage_idx: 7, chunk: 9, outputs: vec![] }];
+        assert!(fresh.restore_from(bogus, Vec::new()).is_err());
     }
 }

@@ -2,13 +2,18 @@
 //! demand-driven execution + within-node hybrid scheduling.
 //!
 //! * [`manager`] — workflow instantiation, dependency tracking, windowed
-//!   demand-driven assignment (§III-B).
+//!   demand-driven assignment (§III-B), plus the elastic-membership layer:
+//!   lease-tracked workers, missed-lease expiry (purge + requeue + cold
+//!   re-execution) and the replayable completion journal.
+//! * [`checkpoint`] — periodic manager checkpoint (journal + catalog) so
+//!   `htap manager --resume` survives a manager crash.
 //! * [`worker`] — the Worker process: WCC + WRM (§III-B, Fig. 5).
 //! * [`wrm`] — fine-grain operation scheduling onto CPU cores and GPUs.
 //! * [`sched`] — FCFS / PATS policies with data-locality assignment
 //!   (§IV-B, §IV-C); shared with the simulator.
 //! * [`placement`] — architecture-aware GPU-controller placement (§IV-A).
 
+pub mod checkpoint;
 pub mod manager;
 pub mod placement;
 pub mod sched;
@@ -16,8 +21,8 @@ pub mod worker;
 pub mod wrm;
 
 pub use manager::{
-    Assignment, AssignPolicy, ChunkId, ChunkLoader, Manager, Partition, WorkBatch, WorkRequest,
-    WorkSource,
+    Assignment, AssignPolicy, ChunkId, ChunkLoader, CompletionRecord, Manager, Partition,
+    WorkBatch, WorkRequest, WorkSource,
 };
 pub use placement::NodeTopology;
 pub use worker::WorkerStaging;
@@ -73,11 +78,19 @@ pub fn run_local_profiled(
 /// Build the optional local-disk spill tier for a worker from the run
 /// config (`--spill-dir` / `--spill-cap`).  Each worker gets a private
 /// `worker-N` subdirectory so co-located processes never collide.
-pub fn spill_from_config(cfg: &RunConfig, worker_id: u64) -> Result<Option<SpillTier>> {
+/// `warm` selects warm restart: the tier recovers the chunks that
+/// survived in the spill directory (and the staging cache re-advertises
+/// them as disk-tier holders) instead of starting from a cleared dir.
+pub fn spill_from_config(cfg: &RunConfig, worker_id: u64, warm: bool) -> Result<Option<SpillTier>> {
     match &cfg.spill_dir {
         Some(dir) => {
             let dir = std::path::Path::new(dir).join(format!("worker-{worker_id}"));
-            Ok(Some(SpillTier::create(dir, cfg.spill_cap)?))
+            let tier = if warm {
+                SpillTier::recover(dir, cfg.spill_cap)?
+            } else {
+                SpillTier::create(dir, cfg.spill_cap)?
+            };
+            Ok(Some(tier))
         }
         None => Ok(None),
     }
@@ -101,7 +114,7 @@ pub fn run_local_staged(
 ) -> Result<RunOutcome> {
     let policy = AssignPolicy::from_config(&cfg, vec![1]);
     let manager = Manager::new_staged(workflow.clone(), n_chunks, policy)?;
-    let spill = spill_from_config(&cfg, 1)?;
+    let spill = spill_from_config(&cfg, 1, false)?;
     let staging = worker::WorkerStaging {
         cache: StagingCache::new_tiered(source, cfg.staging_cap, cfg.prefetch_depth, spill),
         worker_id: 1,

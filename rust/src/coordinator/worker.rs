@@ -152,6 +152,46 @@ pub fn run_worker_staged(
     let flight = Arc::new((Mutex::new(Flight { in_flight: 0, requester_done: false, failed: None }), Condvar::new()));
     let staging = staging.map(Arc::new);
 
+    // elastic membership: an identified (staged) worker announces itself
+    // and — when lease tracking is on — keeps its lease warm with a
+    // heartbeat thread.  Requests and completions also renew the lease;
+    // the heartbeat covers long compute gaps, so an idle-but-alive worker
+    // is never presumed dead (`--lease-ms 0` opts out).
+    let stop_heartbeat = Arc::new(std::sync::atomic::AtomicBool::new(false));
+    let heartbeat = match &staging {
+        Some(s) => {
+            source.register(s.worker_id, cfg.lease_ms);
+            if cfg.lease_ms > 0 {
+                let stop = stop_heartbeat.clone();
+                let src = source.clone();
+                let worker_id = s.worker_id;
+                let tick = std::time::Duration::from_millis(cfg.heartbeat_ms.max(1));
+                // fine-grained sleep so shutdown never waits a full tick
+                let step = std::time::Duration::from_millis(25).min(tick);
+                Some(
+                    sync::thread::Builder::new()
+                        .name("htap-wcc-hb".into())
+                        .spawn(move || {
+                            let mut since_beat = std::time::Duration::ZERO;
+                            while !stop.load(std::sync::atomic::Ordering::Acquire) {
+                                std::thread::sleep(step);
+                                since_beat += step;
+                                if since_beat >= tick {
+                                    since_beat = std::time::Duration::ZERO;
+                                    src.heartbeat(worker_id);
+                                }
+                            }
+                        })
+                        // lint: allow(panic) — failing to spawn at startup is fatal
+                        .expect("spawn heartbeater"),
+                )
+            } else {
+                None
+            }
+        }
+        None => None,
+    };
+
     // requester thread
     let requester = {
         let flight = flight.clone();
@@ -260,6 +300,20 @@ pub fn run_worker_staged(
         }
     };
 
+    // stop the heartbeat thread; on a clean exit, say goodbye so the
+    // Manager deregisters immediately instead of waiting out the lease
+    let finish_membership = |hb: Option<sync::thread::JoinHandle<()>>, clean: bool| {
+        stop_heartbeat.store(true, std::sync::atomic::Ordering::Release);
+        if let Some(h) = hb {
+            let _ = h.join();
+        }
+        if clean {
+            if let Some(s) = &staging {
+                source.goodbye(s.worker_id);
+            }
+        }
+    };
+
     // completer loop (this thread)
     let (lock, cv) = &*flight;
     loop {
@@ -291,6 +345,9 @@ pub fn run_worker_staged(
             }
             let _ = requester.join();
             finish_staging(&staging);
+            // no goodbye: the failure already rode back via `fail`, and a
+            // clean departure would mask which worker broke the run
+            finish_membership(heartbeat, false);
             return Err(Error::Scheduler(format!("worker failed: {msg}")));
         }
         if finished {
@@ -303,5 +360,6 @@ pub fn run_worker_staged(
     }
     let _ = requester.join();
     finish_staging(&staging);
+    finish_membership(heartbeat, true);
     Ok(())
 }

@@ -129,6 +129,13 @@ impl StagingCache {
             CacheCap::Chunks(n) => CacheCap::Chunks(n.max(1)),
             b => b,
         };
+        // warm restart: chunks recovered from a surviving spill dir are
+        // announced as *demoted* in the first staged delta, so the
+        // Manager's catalog lists the restarted worker as a disk-tier
+        // holder again (repeat stages route here, no cold re-read).
+        // A freshly created tier is empty and this is a no-op.
+        let recovered: Vec<ChunkId> =
+            spill.as_ref().map(|s| s.resident_chunks()).unwrap_or_default();
         let cache = Arc::new(StagingCache {
             source,
             cap,
@@ -141,7 +148,7 @@ impl StagingCache {
                 spill,
                 staged: Vec::new(),
                 evicted: Vec::new(),
-                demoted: Vec::new(),
+                demoted: recovered,
                 shutdown: false,
             }),
             cv: Condvar::new(),
@@ -775,6 +782,35 @@ mod tests {
         cache.get(0).unwrap();
         let r = cache.report();
         assert_eq!(r.spill_hits, 1, "{r:?}");
+        cache.shutdown();
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn warm_restart_readvertises_recovered_spill_chunks() {
+        let dir = spill_dir("warm");
+        // first incarnation demotes chunks 0 and 1 to disk, then "crashes"
+        {
+            let spill = SpillTier::create(&dir, 8).unwrap();
+            let cache = StagingCache::new_tiered(source(4, 0), 1, 0, Some(spill));
+            cache.get(0).unwrap();
+            cache.get(1).unwrap(); // demotes 0
+            cache.get(2).unwrap(); // demotes 1
+            assert!(cache.is_spilled(0) && cache.is_spilled(1));
+            cache.shutdown();
+        }
+        // warm restart: the recovered chunks ride the FIRST staged delta
+        // as demoted (disk-tier holders), before any get()
+        let spill = SpillTier::recover(&dir, 8).unwrap();
+        let cache = StagingCache::new_tiered(source(4, 0), 1, 0, Some(spill));
+        let (add, dropped, demoted) = cache.take_staged_delta();
+        assert!(add.is_empty() && dropped.is_empty());
+        assert_eq!(demoted, vec![0, 1], "recovered chunks re-advertise at disk tier");
+        // and a consumer fetch is served from local disk, not the source
+        cache.get(0).unwrap();
+        let r = cache.report();
+        assert_eq!(r.spill_hits, 1, "{r:?}");
+        assert_eq!(r.promoted, 1, "{r:?}");
         cache.shutdown();
         let _ = std::fs::remove_dir_all(&dir);
     }

@@ -176,6 +176,18 @@ impl ChunkCatalog {
     pub fn workers(&self) -> usize {
         self.by_worker.len()
     }
+
+    /// Flat snapshot of every `(worker, chunk, tier)` entry, sorted for
+    /// determinism — the manager-checkpoint serializer consumes this.
+    pub fn entries(&self) -> Vec<(WorkerId, ChunkId, Tier)> {
+        let mut out: Vec<(WorkerId, ChunkId, Tier)> = self
+            .by_worker
+            .iter()
+            .flat_map(|(&w, m)| m.iter().map(move |(&c, &t)| (w, c, t)))
+            .collect();
+        out.sort_unstable_by_key(|&(w, c, _)| (w, c));
+        out
+    }
 }
 
 #[cfg(test)]
@@ -253,6 +265,19 @@ mod tests {
         assert!(cat.is_staged(2, 9));
         assert!(!cat.is_staged(1, 9) && !cat.is_staged(3, 9));
         assert_eq!(cat.remove_other_holders(42, 1), 0, "cold chunk: nothing to drop");
+    }
+
+    #[test]
+    fn entries_snapshot_is_sorted_and_tiered() {
+        let mut cat = ChunkCatalog::new();
+        cat.insert(2, 7);
+        cat.insert(1, 9);
+        cat.insert(1, 3);
+        cat.demote(1, 9);
+        assert_eq!(
+            cat.entries(),
+            vec![(1, 3, Tier::Mem), (1, 9, Tier::Disk), (2, 7, Tier::Mem)]
+        );
     }
 
     #[test]

@@ -25,7 +25,11 @@
 //!   [`crate::coordinator::Manager::request_work`].
 //! * [`SpillTier`] ([`tiers`]) is the optional local-disk rung between the
 //!   memory cache and the source: evictions demote instead of dropping,
-//!   misses promote from disk before re-reading the shared FS.
+//!   misses promote from disk before re-reading the shared FS.  Spill
+//!   files are crash-consistent (temp-then-rename, per chunk), so a
+//!   worker restarted with `--warm-restart` rebuilds the tier's index
+//!   from the surviving files ([`SpillTier::recover`]) and re-advertises
+//!   those chunks to the Manager as disk-tier holders.
 
 pub mod cache;
 pub mod catalog;

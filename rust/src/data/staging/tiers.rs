@@ -78,6 +78,68 @@ impl SpillTier {
         })
     }
 
+    /// Warm restart: reopen `dir` and **keep** the `.spill` files a
+    /// previous incarnation of this worker left behind, rebuilding the
+    /// resident index from them.  Each surviving file's header is
+    /// validated; damaged or foreign files are deleted, not trusted.
+    /// Recovered chunks enter the LRU order by ascending chunk id and the
+    /// caller (the staging cache) re-advertises them to the Manager as
+    /// disk-tier holders, so a restarted worker serves its old working
+    /// set from local disk instead of cold shared-FS re-reads.
+    pub fn recover(dir: impl AsRef<Path>, cap: impl Into<CacheCap>) -> Result<Self> {
+        let dir = dir.as_ref().to_path_buf();
+        std::fs::create_dir_all(&dir)?;
+        let cap = match cap.into() {
+            CacheCap::Chunks(n) => CacheCap::Chunks(n.max(1)),
+            b => b,
+        };
+        let mut tier =
+            SpillTier { dir, cap, resident: HashMap::new(), disk_bytes: 0, order: VecDeque::new() };
+        let mut found: Vec<(ChunkId, u64)> = Vec::new();
+        for entry in std::fs::read_dir(&tier.dir)?.filter_map(|e| e.ok()) {
+            let p = entry.path();
+            if !p.extension().map(|e| e == "spill").unwrap_or(false) {
+                continue;
+            }
+            // chunk id from `chunk_NNNNNNNN.spill`; anything else is stale
+            let chunk = p
+                .file_stem()
+                .and_then(|s| s.to_str())
+                .and_then(|s| s.strip_prefix("chunk_"))
+                .and_then(|s| s.parse::<ChunkId>().ok());
+            let size = entry.metadata().ok().map(|m| m.len());
+            match (chunk, size) {
+                (Some(c), Some(sz)) if tier.read(c).is_ok() => found.push((c, sz)),
+                _ => {
+                    let _ = std::fs::remove_file(p);
+                }
+            }
+        }
+        found.sort_unstable_by_key(|&(c, _)| c);
+        for (c, sz) in found {
+            tier.resident.insert(c, sz);
+            tier.disk_bytes += sz;
+            tier.order.push_back(c);
+        }
+        // the previous incarnation may have run with a larger budget
+        while tier.over_budget() {
+            let Some(old) = tier.order.pop_front() else { break };
+            if let Some(sz) = tier.resident.remove(&old) {
+                tier.disk_bytes = tier.disk_bytes.saturating_sub(sz);
+            }
+            let _ = std::fs::remove_file(tier.path(old));
+        }
+        Ok(tier)
+    }
+
+    /// The chunks currently resident on disk, ascending — the warm-restart
+    /// hook the staging cache uses to re-advertise recovered chunks.
+    pub fn resident_chunks(&self) -> Vec<ChunkId> {
+        let mut v: Vec<ChunkId> = self.resident.keys().copied().collect();
+        v.sort_unstable();
+        v
+    }
+
     fn path(&self, chunk: ChunkId) -> PathBuf {
         self.dir.join(format!("chunk_{chunk:08}.spill"))
     }
@@ -322,6 +384,59 @@ mod tests {
         std::fs::write(tier.path(1), b"garbage").unwrap();
         assert!(tier.get(1).is_none(), "corruption must fall back to the source tier");
         assert!(!tier.contains(1));
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn recover_rebuilds_the_index_from_surviving_files() {
+        let dir = tmp_dir("recover");
+        {
+            let mut tier = SpillTier::create(&dir, 8).unwrap();
+            tier.put(2, &payload(2)).unwrap();
+            tier.put(5, &payload(5)).unwrap();
+            tier.put(1, &payload(1)).unwrap();
+        } // "crash": the tier is dropped, files survive
+        let mut warm = SpillTier::recover(&dir, 8).unwrap();
+        assert_eq!(warm.resident_chunks(), vec![1, 2, 5]);
+        assert_eq!(warm.len(), 3);
+        assert!(warm.disk_bytes > 0);
+        // recovered payloads read back intact
+        assert_eq!(warm.get(5).unwrap(), payload(5));
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn recover_deletes_corrupt_and_foreign_files() {
+        let dir = tmp_dir("recover-corrupt");
+        {
+            let mut tier = SpillTier::create(&dir, 8).unwrap();
+            tier.put(3, &payload(3)).unwrap();
+        }
+        std::fs::write(dir.join("chunk_00000009.spill"), b"garbage").unwrap();
+        std::fs::write(dir.join("odd-name.spill"), b"not ours").unwrap();
+        std::fs::write(dir.join("keep.txt"), b"unrelated").unwrap();
+        let warm = SpillTier::recover(&dir, 8).unwrap();
+        assert_eq!(warm.resident_chunks(), vec![3], "only the valid file survives");
+        assert!(!dir.join("chunk_00000009.spill").exists());
+        assert!(!dir.join("odd-name.spill").exists());
+        assert!(dir.join("keep.txt").exists(), "non-spill files are untouched");
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn recover_respects_a_smaller_budget() {
+        let dir = tmp_dir("recover-cap");
+        {
+            let mut tier = SpillTier::create(&dir, 8).unwrap();
+            for c in 0..4 {
+                tier.put(c, &payload(c)).unwrap();
+            }
+        }
+        // restart with a smaller cap: oldest (lowest id) recovered chunks
+        // are dropped until within budget
+        let warm = SpillTier::recover(&dir, 2).unwrap();
+        assert_eq!(warm.resident_chunks(), vec![2, 3]);
+        assert!(!dir.join("chunk_00000000.spill").exists());
         let _ = std::fs::remove_dir_all(&dir);
     }
 

@@ -29,6 +29,17 @@
 //! cache whose prefetcher overlaps shared-filesystem reads with compute,
 //! and a manager-side chunk catalog driving locality-aware assignment —
 //! the paper's two cluster-level data optimisations (§III).
+//!
+//! Membership is **elastic and crash-tolerant**: workers join, heartbeat
+//! and leave mid-run (`Hello`/`Heartbeat`/`Goodbye`), a lease sweeper
+//! expires silent workers and re-issues their in-flight work, the
+//! Manager journals completions into a periodic checkpoint
+//! (`--checkpoint-dir` / `--resume`), and a restarted worker recovers
+//! its local-disk spill tier (`--warm-restart`).  Because chunk sources
+//! are deterministic, ops are pure, and Reduce accumulates in chunk
+//! order, re-execution after any of these failures is bit-identical.
+//! The failure-mode matrix lives in `docs/architecture.md`; operator
+//! guidance in `docs/operations.md`.
 
 pub mod app;
 pub mod bench_util;

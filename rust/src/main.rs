@@ -4,8 +4,8 @@ use htap::app::{self, build_workflow_with, stage_bindings, AppParams};
 use htap::cli::{Cli, USAGE};
 use htap::config::{PartitionMode, Policy, RunConfig};
 use htap::coordinator::{
-    run_local_staged, spill_from_config, worker::run_worker_staged, AssignPolicy, Manager,
-    WorkerStaging,
+    checkpoint, run_local_staged, spill_from_config, worker::run_worker_staged, AssignPolicy,
+    Manager, WorkerStaging,
 };
 use htap::data::staging::{source_from_spec, ChunkSource, StagingCache};
 use htap::data::{DirSource, SynthConfig, TileStore};
@@ -186,6 +186,27 @@ fn cmd_sim(cli: &Cli) -> htap::Result<()> {
     };
     let chunk_locality = !cli.get_flag("no-locality");
     let replication = !cli.get_flag("no-replication");
+    // fault injection: crash the last node at a fraction of the no-fault
+    // makespan and let the survivors re-execute its in-flight work
+    let kill_worker_at = match cli.get("kill-worker-at") {
+        Some(v) => {
+            let f: f64 = v
+                .parse()
+                .map_err(|_| htap::Error::Config("bad --kill-worker-at".into()))?;
+            if !(0.0..1.0).contains(&f) {
+                return Err(htap::Error::Config(
+                    "--kill-worker-at takes a fraction in [0, 1)".into(),
+                ));
+            }
+            if nodes < 2 {
+                return Err(htap::Error::Config(
+                    "--kill-worker-at needs --nodes >= 2 (someone must survive)".into(),
+                ));
+            }
+            Some(f)
+        }
+        None => None,
+    };
     let mut p = SimParams {
         workflow,
         n_nodes: nodes,
@@ -193,6 +214,7 @@ fn cmd_sim(cli: &Cli) -> htap::Result<()> {
         policy,
         chunk_locality,
         replication,
+        kill_worker_at,
         ..Default::default()
     };
     // a calibrate --read-latency-ms run measured the per-chunk read cost;
@@ -219,6 +241,15 @@ fn cmd_sim(cli: &Cli) -> htap::Result<()> {
          {} steal migrations, {} cold re-reads",
         r.busy_time, r.transfer_time, r.io_time, r.steal_migrations, r.cold_rereads
     );
+    if let Some(f) = kill_worker_at {
+        println!(
+            "fault injection: node {} crashed at {:.0}% of the no-fault makespan; \
+             {} stage instances re-executed on the survivors",
+            nodes - 1,
+            f * 100.0,
+            r.reexecuted
+        );
+    }
     Ok(())
 }
 
@@ -254,6 +285,32 @@ fn cmd_calibrate(cli: &Cli) -> htap::Result<()> {
     Ok(())
 }
 
+/// How often the manager persists its checkpoint when `--checkpoint-dir`
+/// is given.  Sleeps in short steps so the writer thread exits promptly
+/// once the run finishes.
+const CKPT_INTERVAL_MS: u64 = 1000;
+
+/// A stable, bit-faithful rendering of a reduce output value: scalars use
+/// Rust's shortest round-trip float formatting (distinct bits ⇒ distinct
+/// strings), tensors print their shape plus an FNV-1a hash of the raw
+/// little-endian payload.  The smoke script diffs these lines between a
+/// faulty and a fault-free run.
+fn render_value(v: &htap::runtime::Value) -> String {
+    match v {
+        htap::runtime::Value::Scalar(s) => format!("{s}"),
+        htap::runtime::Value::Tensor(t) => {
+            let mut h: u64 = 0xcbf2_9ce4_8422_2325;
+            for f in t.data() {
+                for b in f.to_le_bytes() {
+                    h ^= b as u64;
+                    h = h.wrapping_mul(0x100_0000_01b3);
+                }
+            }
+            format!("tensor{:?}#{h:016x}", t.shape())
+        }
+    }
+}
+
 fn cmd_manager(cli: &Cli) -> htap::Result<()> {
     let listen = cli
         .get("listen")
@@ -268,7 +325,27 @@ fn cmd_manager(cli: &Cli) -> htap::Result<()> {
     // --partition init range-assigns cold chunks to worker ids 1..=workers
     // (workers must pass matching --worker-id values)
     let policy = AssignPolicy::from_config(&cfg, (1..=workers as u64).collect());
-    let manager = Manager::new_staged(workflow, n, policy)?;
+    let manager = Manager::new_staged(workflow.clone(), n, policy)?;
+    // --checkpoint-dir: journal completions and snapshot (journal +
+    // catalog) periodically; --resume replays the last snapshot so a
+    // restarted manager does not re-execute finished stage instances.
+    // The journal goes on *before* the restore so replayed completions
+    // land in the new journal and survive the next checkpoint too.
+    let ckpt_dir = cli.get("checkpoint-dir").map(std::path::PathBuf::from);
+    if let Some(dir) = &ckpt_dir {
+        manager.enable_journal();
+        if cli.get_flag("resume") {
+            match checkpoint::load_checkpoint(dir)? {
+                Some((journal, catalog)) => {
+                    let replayed = manager.restore_from(journal, catalog)?;
+                    println!("resumed from {}: replayed {replayed} completions", dir.display());
+                }
+                None => {
+                    println!("no checkpoint under {}; starting fresh", dir.display());
+                }
+            }
+        }
+    }
     let server = ManagerServer::bind(listen, manager.clone())?;
     println!(
         "manager on {} ({} chunks from {}, expecting {workers} workers, locality {}, \
@@ -283,7 +360,35 @@ fn cmd_manager(cli: &Cli) -> htap::Result<()> {
     if cfg.partition == PartitionMode::Init {
         println!("initial partition homes chunks on worker ids 1..={workers}");
     }
-    server.serve(workers)?;
+    let ckpt_stop = Arc::new(std::sync::atomic::AtomicBool::new(false));
+    let ckpt_writer = ckpt_dir.as_ref().map(|dir| {
+        let mgr = manager.clone();
+        let dir = dir.clone();
+        let stop = ckpt_stop.clone();
+        std::thread::spawn(move || {
+            let mut since = 0u64;
+            while !stop.load(std::sync::atomic::Ordering::Acquire) {
+                std::thread::sleep(Duration::from_millis(25));
+                since += 25;
+                if since >= CKPT_INTERVAL_MS {
+                    since = 0;
+                    if let Err(e) = checkpoint::write_checkpoint(&dir, &mgr) {
+                        eprintln!("htap manager: checkpoint failed: {e}");
+                    }
+                }
+            }
+        })
+    });
+    let served = server.serve();
+    ckpt_stop.store(true, std::sync::atomic::Ordering::Release);
+    if let Some(h) = ckpt_writer {
+        let _ = h.join();
+    }
+    served?;
+    if let Some(dir) = &ckpt_dir {
+        // final snapshot so a post-run --resume sees the finished state
+        checkpoint::write_checkpoint(dir, &manager)?;
+    }
     let (done, total) = manager.progress();
     let (hits, cold, steals) = manager.locality_stats();
     println!("workflow complete: {done}/{total}");
@@ -291,6 +396,13 @@ fn cmd_manager(cli: &Cli) -> htap::Result<()> {
         "locality: {hits} hits, {cold} cold, {steals} steals, {} replicated",
         manager.replicated()
     );
+    for stage in workflow.stages.iter().filter(|s| s.kind == StageKind::Reduce) {
+        if let Some(outs) = manager.reduce_outputs(&stage.name) {
+            for (i, v) in outs.iter().enumerate() {
+                println!("reduce '{}' [{i}] = {}", stage.name, render_value(v));
+            }
+        }
+    }
     Ok(())
 }
 
@@ -314,7 +426,19 @@ fn cmd_worker(cli: &Cli) -> htap::Result<()> {
     // dropping
     let (chunks, _) = chunk_source(cli, &cfg)?;
     let worker_id = cli.get_usize("worker-id", std::process::id() as usize)?.max(1) as u64;
-    let spill = spill_from_config(&cfg, worker_id)?;
+    // --warm-restart: keep whatever survived in the spill directory and
+    // re-advertise it to the manager as disk-tier chunks (crash recovery);
+    // the default cold start clears the directory
+    let warm = cli.get_flag("warm-restart");
+    let spill = spill_from_config(&cfg, worker_id, warm)?;
+    if warm {
+        if let Some(tier) = &spill {
+            println!(
+                "warm restart: recovered {} spilled chunk(s) from the previous incarnation",
+                tier.resident_chunks().len()
+            );
+        }
+    }
     let staging = WorkerStaging {
         cache: StagingCache::new_tiered(chunks, cfg.staging_cap, cfg.prefetch_depth, spill),
         worker_id,

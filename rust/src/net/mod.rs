@@ -16,10 +16,22 @@
 //! Splitting the channels lets requesting overlap completing exactly like
 //! the in-process Worker (worker.rs); message framing is length-prefixed
 //! binary (`proto`).
+//!
+//! Membership is **elastic** (proto v4): the accept loop runs until the
+//! workflow completes, so workers may join (or rejoin) a running manager
+//! at any point.  A worker announces itself with `Hello{worker, lease
+//! term}` on both channels, keeps its lease alive with `Heartbeat`s (or
+//! just by requesting work), and departs cleanly with `Goodbye`.  A
+//! sweeper thread expires workers that miss their lease: their in-flight
+//! stage instances are re-issued to the survivors and their catalog
+//! entries are purged, which is also exactly what happens when a
+//! connection drops mid-run — crash tolerance and planned elasticity are
+//! the same code path.
 
 pub mod proto;
 
 use crate::coordinator::manager::{Manager, WorkBatch, WorkRequest, WorkSource};
+use crate::data::staging::WorkerId;
 use crate::runtime::sync::{self, Mutex};
 use crate::{Error, Result};
 use proto::Message;
@@ -27,6 +39,11 @@ use std::io::{BufReader, BufWriter};
 use std::net::{TcpListener, TcpStream};
 use std::sync::atomic::{AtomicBool, Ordering};
 use std::sync::Arc;
+
+/// How often the manager scans member leases for expiry.  Much shorter
+/// than any sensible lease term, so detection latency is dominated by the
+/// lease itself, not the sweep cadence.
+const LEASE_SWEEP_MS: u64 = 50;
 
 /// Serve an in-process [`Manager`] to remote Workers.  Returns once the
 /// workflow completes and all workers disconnected.
@@ -46,23 +63,56 @@ impl ManagerServer {
         self.listener.local_addr().map(|a| a.to_string()).unwrap_or_default()
     }
 
-    /// Accept-and-serve loop.  Spawns one thread per connection; exits when
-    /// the workflow finishes (detected via Manager progress after each
-    /// serve thread ends) or `stop_handle` is set.
-    pub fn serve(&self, expected_workers: usize) -> Result<()> {
+    /// Elastic accept-and-serve loop.  Spawns one thread per accepted
+    /// connection and keeps accepting until the workflow completes (or a
+    /// worker reports a fatal error), so workers may join and leave while
+    /// the run is in progress.  Two helper threads drive liveness: a
+    /// completion watcher that unblocks the accept loop once the Manager
+    /// reports done, and a lease sweeper that expires workers which missed
+    /// their heartbeat term (their leases are re-issued to survivors).
+    pub fn serve(&self) -> Result<()> {
+        let watcher = {
+            let mgr = self.manager.clone();
+            let stop = self.stop.clone();
+            let addr = self.local_addr();
+            std::thread::spawn(move || {
+                mgr.wait_done();
+                stop.store(true, Ordering::SeqCst);
+                // poke the listener so the blocking accept() observes the
+                // stop flag instead of waiting for one more worker
+                let _ = TcpStream::connect(&addr);
+            })
+        };
+        let sweeper = {
+            let mgr = self.manager.clone();
+            let stop = self.stop.clone();
+            std::thread::spawn(move || {
+                while !stop.load(Ordering::SeqCst) {
+                    std::thread::sleep(std::time::Duration::from_millis(LEASE_SWEEP_MS));
+                    for (worker, requeued) in mgr.sweep_leases() {
+                        eprintln!(
+                            "htap manager: worker {worker} missed its lease; \
+                             re-issued {requeued} stage instances"
+                        );
+                    }
+                }
+            })
+        };
         let mut handles = Vec::new();
-        // Expect 2 connections per worker (work + completion channels).
-        for _ in 0..expected_workers * 2 {
+        loop {
+            let (stream, _) = self.listener.accept().map_err(|e| Error::Net(e.to_string()))?;
             if self.stop.load(Ordering::SeqCst) {
+                // the watcher's poke (or an external stop): workflow done
                 break;
             }
-            let (stream, _) = self.listener.accept().map_err(|e| Error::Net(e.to_string()))?;
             let mgr = self.manager.clone();
             handles.push(std::thread::spawn(move || serve_connection(stream, mgr)));
         }
         for h in handles {
             let _ = h.join();
         }
+        let _ = watcher.join();
+        let _ = sweeper.join();
         Ok(())
     }
 
@@ -77,14 +127,16 @@ fn serve_connection(stream: TcpStream, mgr: Arc<Manager>) {
     // surviving workers — the fault-tolerance path.
     let mut leases: Vec<u64> = Vec::new();
     let mut worker_id = 0u64;
-    let result = serve_connection_inner(stream, &mgr, &mut leases, &mut worker_id);
+    let mut clean = false;
+    let result = serve_connection_inner(stream, &mgr, &mut leases, &mut worker_id, &mut clean);
     let requeued = mgr.requeue_stale(&leases);
-    // the work channel closed: whatever this worker had staged is gone —
-    // purge it from the catalog so its chunks go back to cold instead of
-    // being "stolen" from a ghost for the rest of the run
+    // the channel closed: whatever this worker had staged is gone — purge
+    // it from the catalog so its chunks go back to cold instead of being
+    // "stolen" from a ghost for the rest of the run.  (A `Goodbye` already
+    // did this; repeating it is a no-op.)
     mgr.purge_worker(worker_id);
     if let Err(e) = result {
-        if requeued > 0 {
+        if requeued > 0 && !clean {
             eprintln!("htap manager: worker lost ({e}); re-issued {requeued} stage instances");
         }
     }
@@ -95,6 +147,7 @@ fn serve_connection_inner(
     mgr: &Arc<Manager>,
     leases: &mut Vec<u64>,
     worker_id: &mut u64,
+    clean: &mut bool,
 ) -> Result<()> {
     stream.set_nodelay(true).ok();
     let mut reader = BufReader::new(stream.try_clone().map_err(|e| Error::Net(e.to_string()))?);
@@ -145,6 +198,22 @@ fn serve_connection_inner(
             Message::Fail { msg } => {
                 mgr.fail(msg);
             }
+            Message::Hello { worker, lease_ms } => {
+                // membership announcement: remembers the worker id for
+                // purge attribution on disconnect, and (lease_ms > 0)
+                // enrolls the worker in lease tracking
+                *worker_id = worker;
+                mgr.register_worker(worker, lease_ms);
+            }
+            Message::Heartbeat { worker } => {
+                mgr.heartbeat_worker(worker);
+            }
+            Message::Goodbye { worker } => {
+                // planned departure: deregister + purge immediately so the
+                // sweeper never reports this worker as lost
+                *clean = true;
+                mgr.expire_worker(worker);
+            }
             other => {
                 return Err(Error::Net(format!("unexpected message {other:?} on server")));
             }
@@ -171,6 +240,18 @@ impl RemoteManager {
             work: Mutex::new((BufReader::new(work), BufWriter::new(wr), Vec::new())),
             completion: Mutex::new((BufWriter::new(completion), Vec::new())),
         })
+    }
+
+    /// Fire-and-forget a membership message on the completion channel.
+    /// Send failures are ignored: a broken channel means the manager is
+    /// gone (or going), and the server-side disconnect path already covers
+    /// cleanup.
+    fn send_completion(&self, msg: &Message) {
+        let Ok(mut chan) = sync::lock_or_poisoned(&self.completion) else {
+            return;
+        };
+        let (writer, scratch) = &mut *chan;
+        let _ = proto::write_message_buf(writer, msg, scratch);
     }
 }
 
@@ -215,6 +296,30 @@ impl WorkSource for RemoteManager {
             scratch,
         );
     }
+
+    fn register(&self, worker: WorkerId, lease_ms: u64) {
+        // Hello goes out on *both* channels so each server-side connection
+        // thread learns the worker id for purge attribution on disconnect
+        // (the work channel also learns it from the first Request, but a
+        // worker can die before ever requesting).
+        if let Ok(mut chan) = sync::lock_or_poisoned(&self.work) {
+            let (_, writer, scratch) = &mut *chan;
+            let _ =
+                proto::write_message_buf(writer, &Message::Hello { worker, lease_ms }, scratch);
+        }
+        self.send_completion(&Message::Hello { worker, lease_ms });
+    }
+
+    fn heartbeat(&self, worker: WorkerId) {
+        // never the work channel: a Request may be blocked on its Assign
+        // there, and the whole point of heartbeats is staying alive while
+        // long stage instances keep the work channel busy
+        self.send_completion(&Message::Heartbeat { worker });
+    }
+
+    fn goodbye(&self, worker: WorkerId) {
+        self.send_completion(&Message::Goodbye { worker });
+    }
 }
 
 #[cfg(test)]
@@ -246,7 +351,7 @@ mod tests {
         let mgr = Manager::new(wf, loader, 5).unwrap();
         let server = ManagerServer::bind("127.0.0.1:0", mgr.clone()).unwrap();
         let addr = server.local_addr();
-        let srv = std::thread::spawn(move || server.serve(1));
+        let srv = std::thread::spawn(move || server.serve());
 
         let remote = RemoteManager::connect(&addr).unwrap();
         let mut executed = 0;
@@ -266,6 +371,47 @@ mod tests {
         srv.join().unwrap().unwrap();
         let (done, total) = mgr.progress();
         assert_eq!(done, total);
+        assert!(mgr.error().is_none());
+    }
+
+    #[test]
+    fn membership_messages_reach_the_manager() {
+        let wf = tiny_workflow();
+        let loader: crate::coordinator::ChunkLoader =
+            Arc::new(|c| Ok(vec![Value::Scalar(c as f32)]));
+        let mgr = Manager::new(wf, loader, 3).unwrap();
+        let server = ManagerServer::bind("127.0.0.1:0", mgr.clone()).unwrap();
+        let addr = server.local_addr();
+        let srv = std::thread::spawn(move || server.serve());
+
+        let remote = RemoteManager::connect(&addr).unwrap();
+        remote.register(7, 60_000);
+        remote.heartbeat(7);
+        // membership messages are async; wait for the server thread to
+        // process them before asserting
+        for _ in 0..200 {
+            if mgr.member_count() == 1 {
+                break;
+            }
+            std::thread::sleep(std::time::Duration::from_millis(5));
+        }
+        assert_eq!(mgr.member_count(), 1);
+
+        // drain the workflow so serve() returns, then depart cleanly
+        loop {
+            let batch = remote.request(4);
+            if batch.is_empty() {
+                break;
+            }
+            for a in batch {
+                let v = a.inputs[0].as_scalar().unwrap();
+                remote.complete(a.instance_id, vec![Value::Scalar(v * 2.0)]);
+            }
+        }
+        remote.goodbye(7);
+        drop(remote);
+        srv.join().unwrap().unwrap();
+        assert_eq!(mgr.member_count(), 0);
         assert!(mgr.error().is_none());
     }
 }

@@ -11,8 +11,12 @@
 //! flags plus the Manager's prefetch hints.  v3 added the storage-tier
 //! fields: `Request` reports the chunks demoted to the worker's local-disk
 //! spill tier, and `Assign` carries a per-assignment replica flag plus the
-//! Manager's replicate hints (chunks a steal left multi-homed).  A version
-//! mismatch is a decode error, not a silent misparse.
+//! Manager's replicate hints (chunks a steal left multi-homed).  v4 added
+//! the elastic-membership messages: `Hello` (worker identity + the lease
+//! term it promises to heartbeat within), `Heartbeat` (lease renewal) and
+//! `Goodbye` (clean departure, distinguishing a drained worker from a
+//! crashed one).  A version mismatch is a decode error, not a silent
+//! misparse.
 
 use crate::coordinator::manager::Assignment;
 use crate::runtime::tensor::{f32s_from_le, f32s_to_le};
@@ -25,9 +29,11 @@ const MAX_FRAME: u32 = 1 << 30;
 
 /// Wire-format version; every payload starts with it.  Bumped to 2 when
 /// the staging fields (worker identity, staged-chunk hints, deferred-chunk
-/// and locality flags, prefetch hints) were added, and to 3 for the
-/// storage-tier fields (demoted deltas, replica flags, replicate hints).
-pub const PROTO_VERSION: u8 = 3;
+/// and locality flags, prefetch hints) were added, to 3 for the
+/// storage-tier fields (demoted deltas, replica flags, replicate hints),
+/// and to 4 for the elastic-membership messages (Hello / Heartbeat /
+/// Goodbye with a lease term).
+pub const PROTO_VERSION: u8 = 4;
 
 /// Protocol messages.
 #[derive(Debug, Clone, PartialEq)]
@@ -54,12 +60,29 @@ pub enum Message {
     Complete { instance: u64, outputs: Vec<Value> },
     /// Worker -> Manager: fatal worker error.
     Fail { msg: String },
+    /// Worker -> Manager (v4): join the membership.  `lease_ms` is the
+    /// lease term the worker promises to renew within — if the manager
+    /// hears nothing (no heartbeat, request or completion) for a full
+    /// term, the worker is presumed dead: its catalog entries are purged
+    /// and its in-flight assignments re-issued.  `lease_ms == 0` opts out
+    /// of lease tracking (connection-drop detection still applies).
+    Hello { worker: u64, lease_ms: u64 },
+    /// Worker -> Manager (v4): lease renewal, sent on the completion
+    /// channel between completions so an idle-but-alive worker is never
+    /// presumed dead.
+    Heartbeat { worker: u64 },
+    /// Worker -> Manager (v4): clean departure — the worker drained its
+    /// in-flight work and is leaving; purge immediately, log nothing.
+    Goodbye { worker: u64 },
 }
 
 const TAG_REQUEST: u8 = 1;
 const TAG_ASSIGN: u8 = 2;
 const TAG_COMPLETE: u8 = 3;
 const TAG_FAIL: u8 = 4;
+const TAG_HELLO: u8 = 5;
+const TAG_HEARTBEAT: u8 = 6;
+const TAG_GOODBYE: u8 = 7;
 
 /// Assignment flag bits (v2; FLAG_REPLICA since v3).
 const FLAG_NEEDS_CHUNK: u8 = 1;
@@ -272,6 +295,19 @@ pub fn encode_into(msg: &Message, buf: &mut Vec<u8>) {
             put_u32(buf, msg.len() as u32);
             buf.extend_from_slice(msg.as_bytes());
         }
+        Message::Hello { worker, lease_ms } => {
+            buf.push(TAG_HELLO);
+            put_u64(buf, *worker);
+            put_u64(buf, *lease_ms);
+        }
+        Message::Heartbeat { worker } => {
+            buf.push(TAG_HEARTBEAT);
+            put_u64(buf, *worker);
+        }
+        Message::Goodbye { worker } => {
+            buf.push(TAG_GOODBYE);
+            put_u64(buf, *worker);
+        }
     }
 }
 
@@ -331,6 +367,9 @@ pub fn decode(data: &[u8]) -> Result<Message> {
             Message::Complete { instance, outputs }
         }
         TAG_FAIL => Message::Fail { msg: c.string()? },
+        TAG_HELLO => Message::Hello { worker: c.u64()?, lease_ms: c.u64()? },
+        TAG_HEARTBEAT => Message::Heartbeat { worker: c.u64()? },
+        TAG_GOODBYE => Message::Goodbye { worker: c.u64()? },
         t => return Err(Error::Net(format!("unknown message tag {t}"))),
     };
     if c.pos != data.len() {
@@ -481,10 +520,29 @@ mod tests {
     }
 
     #[test]
+    fn membership_messages_roundtrip() {
+        roundtrip(Message::Hello { worker: 3, lease_ms: 3000 });
+        roundtrip(Message::Hello { worker: u64::MAX, lease_ms: 0 });
+        roundtrip(Message::Heartbeat { worker: 3 });
+        roundtrip(Message::Goodbye { worker: 3 });
+    }
+
+    #[test]
+    fn truncated_membership_frames_rejected() {
+        let enc = encode(&Message::Hello { worker: 7, lease_ms: 500 });
+        assert!(decode(&enc[..enc.len() - 1]).is_err());
+        let enc = encode(&Message::Heartbeat { worker: 7 });
+        assert!(decode(&enc[..enc.len() - 1]).is_err());
+        let mut enc = encode(&Message::Goodbye { worker: 7 });
+        enc.push(0); // trailing byte
+        assert!(decode(&enc).is_err());
+    }
+
+    #[test]
     fn version_mismatch_is_a_decode_error() {
         let mut enc = encode(&request(1));
         assert_eq!(enc[0], PROTO_VERSION);
-        enc[0] = PROTO_VERSION - 1; // a v2 peer without the tier fields
+        enc[0] = PROTO_VERSION - 1; // a v3 peer without the membership messages
         let err = decode(&enc).unwrap_err();
         assert!(err.to_string().contains("protocol version"), "{err}");
         // and through the framed reader

@@ -303,6 +303,12 @@ pub struct SimParams {
     /// memory-bandwidth contention per extra active CPU thread
     pub mem_contention: f64,
     pub seed: u64,
+    /// Fault injection: crash the last node at this fraction (0..1) of the
+    /// no-fault makespan.  Its in-flight stage instances are re-issued to
+    /// the survivors at cold re-read cost — the simulator mirror of the
+    /// manager's lease-expiry requeue path (`htap sim --kill-worker-at`).
+    /// Ignored on single-node runs (there are no survivors).
+    pub kill_worker_at: Option<f64>,
 }
 
 impl Default for SimParams {
@@ -332,6 +338,7 @@ impl Default for SimParams {
             jitter: 0.15,
             mem_contention: 0.03,
             seed: 42,
+            kill_worker_at: None,
         }
     }
 }
@@ -354,6 +361,9 @@ pub struct SimResult {
     /// migrations that paid a cold unscheduled re-read (locality off, or a
     /// steal without replication)
     pub cold_rereads: u64,
+    /// stage instances re-issued to surviving nodes after a fault-injected
+    /// crash (`SimParams::kill_worker_at`); 0 on fault-free runs
+    pub reexecuted: u64,
     pub tiles: usize,
 }
 
@@ -380,6 +390,9 @@ enum Event {
     /// locality-off: a tile's next stage landed on another node, which
     /// finished re-reading the tile and can now instantiate the stage
     Migrated { node: usize, stage: usize, chunk: u64 },
+    /// fault injection: `node` crashes — its in-flight stage instances
+    /// re-issue to survivors (the lease-expiry mirror)
+    Kill { node: usize },
 }
 
 #[derive(Debug, Clone)]
@@ -464,7 +477,9 @@ pub fn simulate(params: &SimParams) -> SimResult {
     let mut io_total = 0.0;
     let mut steal_migrations = 0u64;
     let mut cold_rereads = 0u64;
+    let mut reexecuted = 0u64;
     let mut tiles_done = 0usize;
+    let mut dead = vec![false; n_nodes];
 
     let to_ns = |t: f64| (t * 1e9) as u64;
 
@@ -475,6 +490,22 @@ pub fn simulate(params: &SimParams) -> SimResult {
             seq += 1;
         }};
     }
+
+    // fault injection: the kill fraction is relative to the *no-fault*
+    // makespan, so a no-kill baseline run fixes the absolute crash time
+    // (the recursion terminates: the baseline clears kill_worker_at).
+    // The victim is the last node; ignored when it has no survivors.
+    let victim = n_nodes - 1;
+    if n_nodes > 1 {
+        if let Some(frac) = params.kill_worker_at {
+            let baseline =
+                simulate(&SimParams { kill_worker_at: None, ..params.clone() });
+            push_event!(frac.max(0.0) * baseline.makespan, Event::Kill { node: victim });
+        }
+    }
+    // deterministic survivor pick for re-issued work (victim is the last
+    // node, so survivors are a dense 0..victim prefix)
+    let survivor = |chunk: u64| (chunk % victim.max(1) as u64) as usize;
 
     // initial fetches: one outstanding read per node (a node's Lustre
     // client stream is serial; contention raises its latency)
@@ -631,6 +662,54 @@ pub fn simulate(params: &SimParams) -> SimResult {
     while let Some(Reverse((t_ns, _, eidx))) = heap.pop() {
         now = t_ns as f64 / 1e9;
         let node = match events[eidx] {
+            // events landing on a crashed node: re-issue to a survivor.  A
+            // completed fetch re-reads on the survivor; a pending OpDone
+            // simply evaporates (its instance was already re-issued at kill
+            // time); a migration retargets at cold-re-read cost.
+            Event::Fetched { node, chunk } if dead[node] => {
+                let s = survivor(chunk);
+                nodes[s].fetching += 1;
+                io_total += io_time_per_tile;
+                push_event!(now + io_time_per_tile, Event::Fetched { node: s, chunk });
+                s
+            }
+            Event::OpDone { node, .. } if dead[node] => node,
+            Event::Migrated { node, stage, chunk } if dead[node] => {
+                let s = survivor(chunk);
+                reexecuted += 1;
+                cold_rereads += 1;
+                io_total += 2.0 * io_time_per_tile;
+                push_event!(
+                    now + 2.0 * io_time_per_tile,
+                    Event::Migrated { node: s, stage, chunk }
+                );
+                s
+            }
+            Event::Kill { node } => {
+                dead[node] = true;
+                // every in-flight stage instance dies with the node; each
+                // re-issues to a survivor behind a cold re-read — exactly
+                // what the manager's lease-expiry requeue does.  Sorted so
+                // the re-issue order (and thus task seq) is deterministic.
+                let mut lost: Vec<(usize, u64)> =
+                    nodes[node].insts.values().map(|i| (i.stage, i.chunk)).collect();
+                lost.sort_unstable();
+                nodes[node].insts.clear();
+                for d in &mut nodes[node].devices {
+                    d.busy = true; // never dispatch onto the corpse
+                    d.current = None;
+                }
+                for (stage, chunk) in lost {
+                    reexecuted += 1;
+                    cold_rereads += 1;
+                    io_total += 2.0 * io_time_per_tile;
+                    push_event!(
+                        now + 2.0 * io_time_per_tile,
+                        Event::Migrated { node: survivor(chunk), stage, chunk }
+                    );
+                }
+                node
+            }
             Event::Fetched { node, chunk } => {
                 nodes[node].fetching -= 1;
                 nodes[node].assigned += 1;
@@ -812,6 +891,7 @@ pub fn simulate(params: &SimParams) -> SimResult {
         io_time: io_total,
         steal_migrations,
         cold_rereads,
+        reexecuted,
         tiles: tiles_done,
     }
 }
@@ -1040,6 +1120,52 @@ mod tests {
         p.chunk_locality = false;
         let off = simulate(&p).makespan;
         assert_eq!(on, off, "single node: nothing to migrate");
+    }
+
+    #[test]
+    fn killed_node_work_reexecutes_and_all_tiles_complete() {
+        let mut p = base(120);
+        p.n_nodes = 4;
+        let clean = simulate(&p);
+        p.kill_worker_at = Some(0.5);
+        let faulty = simulate(&p);
+        // every tile still completes — the survivors re-execute the dead
+        // node's in-flight stage instances
+        assert_eq!(clean.tiles, 120);
+        assert_eq!(faulty.tiles, 120);
+        assert!(faulty.reexecuted > 0, "a mid-run crash must strand in-flight work");
+        assert_eq!(clean.reexecuted, 0);
+        // the recovery is paid for in cold re-reads and lost compute
+        assert!(
+            faulty.cold_rereads >= clean.cold_rereads + faulty.reexecuted,
+            "each re-issue pays a cold re-read: {} vs {} + {}",
+            faulty.cold_rereads,
+            clean.cold_rereads,
+            faulty.reexecuted
+        );
+        assert!(
+            faulty.makespan > clean.makespan,
+            "losing a node mid-run cannot speed the run up: {:.2}s vs {:.2}s",
+            faulty.makespan,
+            clean.makespan
+        );
+    }
+
+    #[test]
+    fn kill_injection_is_deterministic_and_ignored_on_one_node() {
+        let mut p = base(60);
+        p.n_nodes = 3;
+        p.kill_worker_at = Some(0.3);
+        let a = simulate(&p);
+        let b = simulate(&p);
+        assert_eq!(a.makespan, b.makespan);
+        assert_eq!(a.reexecuted, b.reexecuted);
+        // single node: no survivors, the injection is a no-op
+        let mut solo = base(20);
+        solo.kill_worker_at = Some(0.5);
+        let r = simulate(&solo);
+        assert_eq!(r.tiles, 20);
+        assert_eq!(r.reexecuted, 0);
     }
 
     #[test]

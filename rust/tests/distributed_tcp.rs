@@ -28,7 +28,7 @@ fn two_tcp_workers_complete_the_workflow() {
     let manager = Manager::new(workflow.clone(), store.loader(), n_tiles).unwrap();
     let server = ManagerServer::bind("127.0.0.1:0", manager.clone()).unwrap();
     let addr = server.local_addr();
-    let srv = std::thread::spawn(move || server.serve(2));
+    let srv = std::thread::spawn(move || server.serve());
 
     let mut workers = Vec::new();
     for i in 0..2 {
@@ -80,7 +80,7 @@ fn tensor_payloads_survive_the_wire() {
     let manager = Manager::new(workflow.clone(), store.clone().loader(), n_tiles).unwrap();
     let server = ManagerServer::bind("127.0.0.1:0", manager.clone()).unwrap();
     let addr = server.local_addr();
-    let srv = std::thread::spawn(move || server.serve(1));
+    let srv = std::thread::spawn(move || server.serve());
 
     let remote = RemoteManager::connect(&addr).unwrap();
     let mut seen_tiles = 0;
@@ -123,7 +123,7 @@ fn staged_tcp_workers_never_ship_tiles_and_hit_locality() {
     let manager = Manager::new_staged(workflow.clone(), n_tiles, AssignPolicy::default()).unwrap();
     let server = ManagerServer::bind("127.0.0.1:0", manager.clone()).unwrap();
     let addr = server.local_addr();
-    let srv = std::thread::spawn(move || server.serve(2));
+    let srv = std::thread::spawn(move || server.serve());
 
     let spill_root = std::env::temp_dir()
         .join(format!("htap-tcp-spill-{}", std::process::id()));
@@ -211,7 +211,7 @@ fn dead_worker_leases_are_reissued() {
     let manager = Manager::new(workflow.clone(), store.loader(), n_tiles).unwrap();
     let server = ManagerServer::bind("127.0.0.1:0", manager.clone()).unwrap();
     let addr = server.local_addr();
-    let srv = std::thread::spawn(move || server.serve(2));
+    let srv = std::thread::spawn(move || server.serve());
 
     // the dying worker: grab 3 leases on its work channel, open the
     // completion channel too (so the server's accept count lines up), die.

@@ -1,0 +1,226 @@
+//! Crash-recovery integration: the elastic-membership + checkpoint layer
+//! over real sockets.
+//!
+//! * a worker that goes silent mid-run misses its lease; the manager
+//!   re-issues its work and the survivors still produce *bit-identical*
+//!   reduce outputs;
+//! * a restarted worker warm-starts from its surviving spill directory and
+//!   serves those chunks from disk instead of re-reading the source;
+//! * a manager checkpoint (completion journal + chunk catalog) restores
+//!   into a fresh manager which finishes the run without re-executing the
+//!   replayed instances.
+
+use htap::app::{build_workflow, stage_bindings, AppParams};
+use htap::config::RunConfig;
+use htap::coordinator::{
+    checkpoint, worker::run_worker_staged, AssignPolicy, Manager, WorkRequest, WorkSource,
+    WorkerStaging,
+};
+use htap::data::staging::{ChunkSource, SpillTier};
+use htap::data::{StagingCache, SynthConfig, SynthSource};
+use htap::metrics::{MetricsHub, MetricsReport};
+use htap::net::{ManagerServer, RemoteManager};
+use htap::runtime::calibrate::SharedProfiles;
+use htap::runtime::{ArtifactManifest, Value};
+use std::sync::Arc;
+
+const TILE: usize = 64;
+const SEED: u64 = 31;
+
+fn staged_worker_cfg(n_tiles: usize) -> RunConfig {
+    RunConfig {
+        tile_size: TILE,
+        n_tiles,
+        cpu_workers: 1,
+        gpu_workers: 0,
+        window: 2,
+        ..Default::default()
+    }
+}
+
+/// Spawn a full staged TCP worker and return its metrics report.
+fn spawn_staged_worker(
+    addr: String,
+    workflow: Arc<htap::dataflow::Workflow>,
+    n_tiles: usize,
+    worker_id: u64,
+    spill: Option<SpillTier>,
+    cap: usize,
+) -> std::thread::JoinHandle<MetricsReport> {
+    std::thread::spawn(move || {
+        let source = Arc::new(RemoteManager::connect(&addr).unwrap());
+        let chunks = Arc::new(SynthSource::new(SynthConfig::for_tile_size(TILE, SEED), n_tiles));
+        let staging = WorkerStaging {
+            cache: StagingCache::new_tiered(chunks, cap, 2, spill),
+            worker_id,
+            prefetch_budget: 2,
+        };
+        let metrics = Arc::new(MetricsHub::new());
+        run_worker_staged(
+            source,
+            workflow,
+            staged_worker_cfg(n_tiles),
+            Arc::new(ArtifactManifest::discover_or_empty()),
+            metrics.clone(),
+            stage_bindings(),
+            SharedProfiles::fresh(),
+            Some(staging),
+        )
+        .unwrap();
+        metrics.report()
+    })
+}
+
+/// One clean staged run of the WSI workflow (+ classification reduce);
+/// returns the reduce outputs.
+fn clean_reduce_outputs(n_tiles: usize) -> Vec<Value> {
+    let workflow = Arc::new(build_workflow(&AppParams::for_tile_size(TILE), true));
+    let manager = Manager::new_staged(workflow.clone(), n_tiles, AssignPolicy::default()).unwrap();
+    let server = ManagerServer::bind("127.0.0.1:0", manager.clone()).unwrap();
+    let addr = server.local_addr();
+    let srv = std::thread::spawn(move || server.serve());
+    spawn_staged_worker(addr, workflow, n_tiles, 1, None, 16).join().unwrap();
+    srv.join().unwrap().unwrap();
+    assert!(manager.error().is_none(), "{:?}", manager.error());
+    manager.reduce_outputs("classification").expect("classification ran")
+}
+
+#[test]
+fn killed_worker_mid_run_still_yields_bit_identical_reduce_outputs() {
+    let n_tiles = 5;
+    let baseline = clean_reduce_outputs(n_tiles);
+
+    // faulty run: a victim registers with a short lease, grabs work, then
+    // goes silent (sockets held open, so only lease expiry can free it)
+    let workflow = Arc::new(build_workflow(&AppParams::for_tile_size(TILE), true));
+    let manager = Manager::new_staged(workflow.clone(), n_tiles, AssignPolicy::default()).unwrap();
+    let server = ManagerServer::bind("127.0.0.1:0", manager.clone()).unwrap();
+    let addr = server.local_addr();
+    let srv = std::thread::spawn(move || server.serve());
+
+    let victim = RemoteManager::connect(&addr).unwrap();
+    victim.register(2, 150);
+    let stranded = victim.request_work(&WorkRequest {
+        capacity: 3,
+        worker: 2,
+        ..Default::default()
+    });
+    assert!(!stranded.assignments.is_empty(), "the victim must strand real leases");
+
+    // a healthy worker (heartbeating on the default lease) finishes the
+    // run, including the victim's re-issued instances
+    let healthy = spawn_staged_worker(addr, workflow, n_tiles, 1, None, 16);
+    let report = healthy.join().unwrap();
+    drop(victim); // only now — the server drains open connections on exit
+    srv.join().unwrap().unwrap();
+
+    assert!(manager.error().is_none(), "{:?}", manager.error());
+    let (done, total) = manager.progress();
+    assert_eq!(done, total, "the workflow must complete despite the crash");
+    // the victim's membership was reaped by the lease sweeper
+    assert_eq!(manager.member_count(), 0);
+    assert!(report.total_executed() > 0);
+    let outs = manager.reduce_outputs("classification").expect("classification ran");
+    assert_eq!(outs, baseline, "reduce outputs must be bit-identical to the no-fault run");
+}
+
+#[test]
+fn warm_restarted_worker_serves_recovered_chunks_from_its_spill_tier() {
+    let n_tiles = 6;
+    let spill_root =
+        std::env::temp_dir().join(format!("htap-recovery-warm-{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&spill_root);
+    let workflow = Arc::new(build_workflow(&AppParams::for_tile_size(TILE), false));
+
+    // first incarnation: a one-chunk memory tier forces demotions, so the
+    // spill directory ends the run holding most of the dataset
+    {
+        let manager =
+            Manager::new_staged(workflow.clone(), n_tiles, AssignPolicy::default()).unwrap();
+        let server = ManagerServer::bind("127.0.0.1:0", manager.clone()).unwrap();
+        let addr = server.local_addr();
+        let srv = std::thread::spawn(move || server.serve());
+        let tier = SpillTier::create(spill_root.join("worker-1"), 32).unwrap();
+        let report =
+            spawn_staged_worker(addr, workflow.clone(), n_tiles, 1, Some(tier), 1).join().unwrap();
+        srv.join().unwrap().unwrap();
+        assert!(manager.error().is_none(), "{:?}", manager.error());
+        assert!(report.staging.spill_evicted > 0, "nothing demoted; warm restart untestable");
+    }
+    let recovered =
+        SpillTier::recover(spill_root.join("worker-1"), 32).unwrap().resident_chunks();
+    assert!(!recovered.is_empty(), "the spill dir must survive the first incarnation");
+
+    // second incarnation ("the worker crashed and restarted"): recover the
+    // spill tier instead of clearing it — the recovered chunks are
+    // re-advertised to the fresh manager and served from disk, never
+    // re-read from the source
+    let manager = Manager::new_staged(workflow.clone(), n_tiles, AssignPolicy::default()).unwrap();
+    let server = ManagerServer::bind("127.0.0.1:0", manager.clone()).unwrap();
+    let addr = server.local_addr();
+    let srv = std::thread::spawn(move || server.serve());
+    let tier = SpillTier::recover(spill_root.join("worker-1"), 32).unwrap();
+    let report = spawn_staged_worker(addr, workflow, n_tiles, 1, Some(tier), 1).join().unwrap();
+    srv.join().unwrap().unwrap();
+    assert!(manager.error().is_none(), "{:?}", manager.error());
+    let (done, total) = manager.progress();
+    assert_eq!(done, total);
+    assert!(
+        report.staging.spill_hits >= recovered.len() as u64,
+        "recovered chunks must be promoted from disk, not cold-read: {} < {}",
+        report.staging.spill_hits,
+        recovered.len()
+    );
+    let _ = std::fs::remove_dir_all(&spill_root);
+}
+
+#[test]
+fn manager_checkpoint_restores_into_a_fresh_manager_without_reexecution() {
+    let n_tiles = 4;
+    let workflow = Arc::new(build_workflow(&AppParams::for_tile_size(TILE), false));
+    let ckpt_dir =
+        std::env::temp_dir().join(format!("htap-recovery-ckpt-{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&ckpt_dir);
+
+    // first manager: journal on, drive part of the run in-process (no TCP
+    // needed to make progress), checkpoint, then "crash" (drop it)
+    let first = Manager::new_staged(workflow.clone(), n_tiles, AssignPolicy::default()).unwrap();
+    first.enable_journal();
+    let batch = first.request_work(&WorkRequest { capacity: 2, worker: 1, ..Default::default() });
+    assert_eq!(batch.assignments.len(), 2);
+    let chunks = Arc::new(SynthSource::new(SynthConfig::for_tile_size(TILE, SEED), n_tiles));
+    for a in &batch.assignments {
+        let payload = chunks.load(a.chunk).unwrap();
+        let outs =
+            htap::dataflow::run_stage_serial(&workflow.stages[a.stage_idx], &payload).unwrap();
+        first.complete(a.instance_id, outs);
+    }
+    checkpoint::write_checkpoint(&ckpt_dir, &first).unwrap();
+    let (done_before, total) = first.progress();
+    assert_eq!(done_before, 2);
+    drop(first);
+
+    // second manager: restore the checkpoint, then let a real TCP worker
+    // finish the remainder
+    let second = Manager::new_staged(workflow.clone(), n_tiles, AssignPolicy::default()).unwrap();
+    second.enable_journal();
+    let (journal, catalog) = checkpoint::load_checkpoint(&ckpt_dir).unwrap().expect("snapshot");
+    let replayed = second.restore_from(journal, catalog).unwrap();
+    assert_eq!(replayed, 2);
+    assert_eq!(second.progress().0, done_before, "restore must not lose progress");
+
+    let server = ManagerServer::bind("127.0.0.1:0", second.clone()).unwrap();
+    let addr = server.local_addr();
+    let srv = std::thread::spawn(move || server.serve());
+    let report = spawn_staged_worker(addr, workflow, n_tiles, 1, None, 16).join().unwrap();
+    srv.join().unwrap().unwrap();
+
+    assert!(second.error().is_none(), "{:?}", second.error());
+    let (done, after_total) = second.progress();
+    assert_eq!((done, after_total), (total, total));
+    // the worker only executed what the checkpoint had not already done:
+    // the remaining segmentation instances (9 ops each) plus every
+    // features instance (3 ops each) — never the 2 replayed ones
+    assert_eq!(report.total_executed(), (9 * (n_tiles - 2) + 3 * n_tiles) as u64);
+    let _ = std::fs::remove_dir_all(&ckpt_dir);
+}

@@ -1,0 +1,250 @@
+//! The htap docs checker (`cargo xtask docs`).
+//!
+//! Two dependency-free checks keep the operator docs from drifting away
+//! from the code:
+//!
+//! 1. **dead-link** — every relative markdown link in `README.md` and
+//!    `docs/*.md` must resolve to a file that exists (fragments are
+//!    stripped; `http(s)://`, `mailto:` and pure `#anchor` links are
+//!    skipped).
+//! 2. **flag-docs** — every `--flag` the CLI parser actually accepts
+//!    (accessor calls `get("…")` / `get_usize("…")` / `get_flag("…")` in
+//!    `rust/src/cli.rs` + `rust/src/main.rs`, plus the `BOOL_FLAGS`
+//!    list) must appear as `--flag` in `docs/operations.md`, the
+//!    authoritative knob table.  Test modules are excluded, so asserting
+//!    on a bogus flag in a unit test does not demand documentation.
+//!
+//! Like the lint pass, this is lexical by design: no markdown or Rust
+//! parser, just enough scanning to catch the drift that actually happens
+//! (a renamed doc, a flag added to the parser but not the runbook).
+
+use crate::lint::Violation;
+use std::fs;
+use std::io;
+use std::path::{Path, PathBuf};
+
+/// The markdown files whose links are checked, relative to the repo root
+/// (plus everything matching `docs/*.md`).
+const LINK_ROOTS: &[&str] = &["README.md"];
+
+/// The flag-accessor call patterns that define the CLI surface.
+const FLAG_ACCESSORS: &[&str] = &["get(\"", "get_usize(\"", "get_flag(\""];
+
+/// Files scanned for flag accessors, relative to the repo root.
+const FLAG_SOURCES: &[&str] = &["rust/src/cli.rs", "rust/src/main.rs"];
+
+/// The one authoritative knob table, relative to the repo root.
+const OPERATIONS_DOC: &str = "docs/operations.md";
+
+/// Run both checks against the repo rooted at `repo_root`.
+pub fn check_docs(repo_root: &Path) -> io::Result<Vec<Violation>> {
+    let mut out = Vec::new();
+    for doc in markdown_files(repo_root)? {
+        check_links(repo_root, &doc, &mut out)?;
+    }
+    check_flag_docs(repo_root, &mut out)?;
+    Ok(out)
+}
+
+/// README.md + every `docs/*.md`, in a stable order.
+fn markdown_files(repo_root: &Path) -> io::Result<Vec<PathBuf>> {
+    let mut files: Vec<PathBuf> =
+        LINK_ROOTS.iter().map(|f| repo_root.join(f)).filter(|p| p.is_file()).collect();
+    let docs = repo_root.join("docs");
+    if docs.is_dir() {
+        let mut extra: Vec<PathBuf> = fs::read_dir(&docs)?
+            .filter_map(|e| e.ok())
+            .map(|e| e.path())
+            .filter(|p| p.extension().map(|x| x == "md").unwrap_or(false))
+            .collect();
+        extra.sort();
+        files.extend(extra);
+    }
+    Ok(files)
+}
+
+/// Extract every markdown link target `](target)` from `text`.
+fn link_targets(text: &str) -> Vec<String> {
+    let bytes = text.as_bytes();
+    let mut out = Vec::new();
+    let mut i = 0;
+    while i + 1 < bytes.len() {
+        if bytes[i] == b']' && bytes[i + 1] == b'(' {
+            let start = i + 2;
+            if let Some(off) = text[start..].find(')') {
+                out.push(text[start..start + off].to_string());
+                i = start + off;
+                continue;
+            }
+        }
+        i += 1;
+    }
+    out
+}
+
+fn check_links(repo_root: &Path, doc: &Path, out: &mut Vec<Violation>) -> io::Result<()> {
+    let text = fs::read_to_string(doc)?;
+    let rel_doc = doc.strip_prefix(repo_root).unwrap_or(doc).display().to_string();
+    let dir = doc.parent().unwrap_or(repo_root);
+    for (ln, line) in text.lines().enumerate() {
+        for target in link_targets(line) {
+            let target = target.trim();
+            if target.is_empty()
+                || target.starts_with('#')
+                || target.starts_with("http://")
+                || target.starts_with("https://")
+                || target.starts_with("mailto:")
+            {
+                continue;
+            }
+            // strip a #fragment; the file part is what must exist
+            let file_part = target.split('#').next().unwrap_or(target);
+            if file_part.is_empty() {
+                continue;
+            }
+            if !dir.join(file_part).exists() {
+                out.push(Violation {
+                    file: rel_doc.clone(),
+                    line: ln + 1,
+                    rule: "dead-link",
+                    msg: format!("link target `{target}` does not exist"),
+                });
+            }
+        }
+    }
+    Ok(())
+}
+
+/// Every flag name the CLI surface accepts, sorted and deduplicated.
+pub fn cli_flags(repo_root: &Path) -> io::Result<Vec<String>> {
+    let mut flags = Vec::new();
+    for src in FLAG_SOURCES {
+        let path = repo_root.join(src);
+        let text = fs::read_to_string(&path)?;
+        // unit tests may probe deliberately-absent flags; stop at the
+        // test module so those never demand documentation
+        let live = match text.find("#[cfg(test)]") {
+            Some(cut) => &text[..cut],
+            None => &text[..],
+        };
+        for pat in FLAG_ACCESSORS {
+            let mut rest = live;
+            while let Some(hit) = rest.find(pat) {
+                let tail = &rest[hit + pat.len()..];
+                if let Some(end) = tail.find('"') {
+                    flags.push(tail[..end].to_string());
+                }
+                rest = &rest[hit + pat.len()..];
+            }
+        }
+        // the boolean-flag list is part of the parser surface too
+        if let Some(hit) = live.find("BOOL_FLAGS") {
+            let tail = &live[hit..];
+            if let Some(end) = tail.find(';') {
+                let mut rest = &tail[..end];
+                while let Some(q) = rest.find('"') {
+                    let body = &rest[q + 1..];
+                    if let Some(close) = body.find('"') {
+                        flags.push(body[..close].to_string());
+                        rest = &body[close + 1..];
+                    } else {
+                        break;
+                    }
+                }
+            }
+        }
+    }
+    flags.retain(|f| !f.is_empty());
+    flags.sort();
+    flags.dedup();
+    Ok(flags)
+}
+
+fn check_flag_docs(repo_root: &Path, out: &mut Vec<Violation>) -> io::Result<()> {
+    let ops_path = repo_root.join(OPERATIONS_DOC);
+    let ops = match fs::read_to_string(&ops_path) {
+        Ok(t) => t,
+        Err(_) => {
+            out.push(Violation {
+                file: OPERATIONS_DOC.to_string(),
+                line: 1,
+                rule: "flag-docs",
+                msg: "docs/operations.md is missing — it is the authoritative knob table"
+                    .to_string(),
+            });
+            return Ok(());
+        }
+    };
+    for flag in cli_flags(repo_root)? {
+        if !ops.contains(&format!("--{flag}")) {
+            out.push(Violation {
+                file: OPERATIONS_DOC.to_string(),
+                line: 1,
+                rule: "flag-docs",
+                msg: format!(
+                    "the CLI accepts `--{flag}` but docs/operations.md never mentions it"
+                ),
+            });
+        }
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn repo_root() -> PathBuf {
+        PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("..").join("..")
+    }
+
+    #[test]
+    fn live_docs_are_clean() {
+        let violations = check_docs(&repo_root()).expect("scan repo docs");
+        assert!(
+            violations.is_empty(),
+            "docs drifted:\n{}",
+            violations.iter().map(|v| v.to_string()).collect::<Vec<_>>().join("\n")
+        );
+    }
+
+    #[test]
+    fn link_targets_are_extracted() {
+        let t = link_targets(
+            "see [a](docs/x.md) and [b](https://e.com/p) plus [c](other.md#frag) ![i](img.png)",
+        );
+        assert_eq!(t, vec!["docs/x.md", "https://e.com/p", "other.md#frag", "img.png"]);
+        assert!(link_targets("no links here (just parens)").is_empty());
+    }
+
+    #[test]
+    fn dead_links_are_reported() {
+        let dir = std::env::temp_dir().join(format!("htap-docstest-{}", std::process::id()));
+        let docs = dir.join("docs");
+        fs::create_dir_all(&docs).unwrap();
+        fs::write(dir.join("README.md"), "[ok](docs/real.md) [bad](docs/ghost.md)\n").unwrap();
+        fs::write(docs.join("real.md"), "[up](../README.md) [anchor](#section)\n").unwrap();
+        let mut out = Vec::new();
+        for doc in markdown_files(&dir).unwrap() {
+            check_links(&dir, &doc, &mut out).unwrap();
+        }
+        let _ = fs::remove_dir_all(&dir);
+        assert_eq!(out.len(), 1, "{out:?}");
+        assert_eq!(out[0].rule, "dead-link");
+        assert!(out[0].msg.contains("ghost.md"));
+    }
+
+    #[test]
+    fn cli_flag_surface_is_extracted_and_documented() {
+        let flags = cli_flags(&repo_root()).expect("scan cli sources");
+        // spot-check the surface: long-standing flags and this PR's new ones
+        for expected in
+            ["tiles", "listen", "connect", "spill-dir", "heartbeat-ms", "lease-ms",
+             "checkpoint-dir", "resume", "warm-restart", "kill-worker-at"]
+        {
+            assert!(flags.iter().any(|f| f == expected), "missing {expected} in {flags:?}");
+        }
+        // the test-module cut works: cli.rs tests probe an "absent" flag
+        assert!(!flags.iter().any(|f| f == "absent"), "test-only flags must not leak");
+    }
+}

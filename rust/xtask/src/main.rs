@@ -6,7 +6,11 @@
 //!   (critical-section deny lists, lock-order, panic policy, proto
 //!   round-trip coverage).  Exits non-zero on any violation.  See
 //!   docs/analysis.md for the rule catalogue and the annotation language.
+//! * `docs` — run the docs drift checks: dead relative links in
+//!   `README.md` + `docs/*.md`, and every CLI flag accepted by the
+//!   parser must appear in `docs/operations.md` (the knob table).
 
+mod docs;
 mod lint;
 
 use std::path::PathBuf;
@@ -43,17 +47,48 @@ fn run_lint() -> ExitCode {
     ExitCode::FAILURE
 }
 
+fn repo_root() -> PathBuf {
+    // xtask lives at rust/xtask; docs and README sit at the repo root.
+    PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("..").join("..")
+}
+
+fn run_docs() -> ExitCode {
+    let root = repo_root();
+    let mut violations = match docs::check_docs(&root) {
+        Ok(v) => v,
+        Err(e) => {
+            eprintln!("xtask docs: cannot scan {}: {e}", root.display());
+            return ExitCode::FAILURE;
+        }
+    };
+    violations.sort_by(|a, b| (&a.file, a.line).cmp(&(&b.file, b.line)));
+    if violations.is_empty() {
+        println!("xtask docs: clean (links resolve, CLI flag surface documented)");
+        return ExitCode::SUCCESS;
+    }
+    for v in &violations {
+        println!("{v}");
+    }
+    println!(
+        "xtask docs: {} violation{} — fix the link or document the flag in docs/operations.md",
+        violations.len(),
+        if violations.len() == 1 { "" } else { "s" }
+    );
+    ExitCode::FAILURE
+}
+
 fn main() -> ExitCode {
     let args: Vec<String> = std::env::args().skip(1).collect();
     match args.first().map(String::as_str) {
         Some("lint") => run_lint(),
+        Some("docs") => run_docs(),
         Some(other) => {
             eprintln!("xtask: unknown subcommand `{other}`");
-            eprintln!("usage: cargo xtask lint");
+            eprintln!("usage: cargo xtask lint|docs");
             ExitCode::FAILURE
         }
         None => {
-            eprintln!("usage: cargo xtask lint");
+            eprintln!("usage: cargo xtask lint|docs");
             ExitCode::FAILURE
         }
     }

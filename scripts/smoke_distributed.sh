@@ -1,7 +1,9 @@
 #!/usr/bin/env bash
 # Localhost distributed smoke: ManagerServer + 2 TCP workers over the
 # staged protocol, exercising the staging cache + prefetcher and the
-# locality-aware assignment policy.
+# locality-aware assignment policy — then a kill-and-rejoin phase that
+# SIGKILLs one worker mid-run, lets a replacement join the live manager,
+# and checks the reduce outputs are bit-identical to a no-fault run.
 #
 #   scripts/smoke_distributed.sh [port]            # locality on (default)
 #   HTAP_NO_LOCALITY=1 scripts/smoke_distributed.sh [port]   # control run
@@ -87,3 +89,73 @@ grep -Eq "tiers: [1-9][0-9]* demoted" "$log/worker1.txt" || {
     exit 1
 }
 echo "distributed smoke OK ($label)"
+
+# --- kill-and-rejoin phase -------------------------------------------------
+# A worker is SIGKILLed while it holds live leases; its work re-executes on
+# the survivors, a replacement worker joins the *running* manager, and the
+# reduce outputs must be bit-identical to a no-fault run of the same
+# workflow (examples/cell_stats.json ends in an `aggregate` reduce stage).
+echo "=== kill-and-rejoin phase (port $((port + 100))) ===" >&2
+kr_tiles=24
+wf=examples/cell_stats.json
+common=(--workflow "$wf" --tiles "$kr_tiles" --tile-size "$tile_size")
+
+# no-fault baseline: one worker, capture the reduce output lines
+base_port=$((port + 100))
+"$bin" manager --listen "127.0.0.1:$base_port" "${common[@]}" --workers 1 \
+    >"$log/mgr-base.txt" 2>&1 &
+base_mgr=$!
+sleep 1
+"$bin" worker --connect "127.0.0.1:$base_port" --worker-id 1 "${common[@]}" \
+    --cpus 1 --gpus 0 --window 2 --chunk-source synth --read-latency-ms 2 \
+    >"$log/worker-base.txt" 2>&1
+wait "$base_mgr"
+grep "^reduce '" "$log/mgr-base.txt" >"$log/reduce-base.txt"
+[[ -s "$log/reduce-base.txt" ]] || {
+    echo "baseline run produced no reduce outputs" >&2
+    exit 1
+}
+
+# faulty run: the victim hoards a wide window of slow leases, gets
+# SIGKILLed mid-run, and a replacement joins the live manager
+kill_port=$((port + 101))
+"$bin" manager --listen "127.0.0.1:$kill_port" "${common[@]}" --workers 2 \
+    >"$log/mgr-kill.txt" 2>&1 &
+kill_mgr=$!
+sleep 1
+"$bin" worker --connect "127.0.0.1:$kill_port" --worker-id 2 "${common[@]}" \
+    --cpus 1 --gpus 0 --window 4 --chunk-source synth --read-latency-ms 300 \
+    --heartbeat-ms 100 --lease-ms 400 >"$log/worker-victim.txt" 2>&1 &
+victim=$!
+"$bin" worker --connect "127.0.0.1:$kill_port" --worker-id 1 "${common[@]}" \
+    --cpus 1 --gpus 0 --window 2 --chunk-source synth --read-latency-ms 50 \
+    >"$log/worker-healthy.txt" 2>&1 &
+healthy=$!
+sleep 2
+kill -9 "$victim" 2>/dev/null || true
+wait "$victim" 2>/dev/null || true
+"$bin" worker --connect "127.0.0.1:$kill_port" --worker-id 3 "${common[@]}" \
+    --cpus 1 --gpus 0 --window 2 --chunk-source synth --read-latency-ms 5 \
+    >"$log/worker-rejoin.txt" 2>&1 &
+rejoin=$!
+
+rc=0
+wait "$healthy" || rc=$?
+wait "$rejoin" || rc=$?
+wait "$kill_mgr" || rc=$?
+cat "$log/mgr-kill.txt"
+if [[ $rc -ne 0 ]]; then
+    echo "kill-and-rejoin phase FAILED (rc=$rc)" >&2
+    exit "$rc"
+fi
+grep -q "workflow complete: $((kr_tiles + 1))/$((kr_tiles + 1))" "$log/mgr-kill.txt" || {
+    echo "manager did not complete the workflow after the worker crash" >&2
+    exit 1
+}
+grep "^reduce '" "$log/mgr-kill.txt" >"$log/reduce-kill.txt"
+cmp -s "$log/reduce-base.txt" "$log/reduce-kill.txt" || {
+    echo "reduce outputs diverged after the crash:" >&2
+    diff "$log/reduce-base.txt" "$log/reduce-kill.txt" >&2 || true
+    exit 1
+}
+echo "kill-and-rejoin smoke OK (reduce outputs bit-identical)"
