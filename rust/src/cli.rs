@@ -142,6 +142,16 @@ impl Cli {
         if let Some(v) = self.get("lease-ms") {
             cfg.lease_ms = v.parse().map_err(|_| Error::Config("bad --lease-ms".into()))?;
         }
+        if let Some(v) = self.get("max-jobs") {
+            cfg.max_jobs = v.parse().map_err(|_| Error::Config("bad --max-jobs".into()))?;
+        }
+        if let Some(v) = self.get("tenant-queue-depth") {
+            cfg.tenant_queue_depth =
+                v.parse().map_err(|_| Error::Config("bad --tenant-queue-depth".into()))?;
+        }
+        if let Some(v) = self.get("tenant-quota") {
+            cfg.tenant_quota = Some(crate::config::CacheCap::parse(v)?);
+        }
         cfg.validate()?;
         Ok(cfg)
     }
@@ -173,7 +183,7 @@ USAGE:
 
     htap sim     [--nodes N] [--tiles N] [--policy fcfs|pats]
                  [--profiles profiles.json] [--no-locality] [--no-replication]
-                 [--kill-worker-at F]
+                 [--kill-worker-at F] [--jobs N] [--job-weights W1,W2,...]
         discrete-event simulation at cluster scale (Keeneland model);
         --profiles calibrates the cost model from measured estimates
         (including the chunk-read cost a calibrate --read-latency-ms run
@@ -184,7 +194,9 @@ USAGE:
         --kill-worker-at F crashes the last node at fraction F (0..1) of
         the no-fault makespan and reports how many stage instances were
         re-executed on the survivors (the fault-injection mirror of the
-        distributed lease-expiry path)
+        distributed lease-expiry path); --jobs N models N identical jobs
+        sharing the cluster under weighted fair-share (--job-weights,
+        default all 1) and prints each job's analytic makespan
 
     htap calibrate [--quick] [--tile-size S] [--tiles N] [--reps N]
                    [--seed N] [--read-latency-ms MS] [--out profiles.json]
@@ -212,11 +224,44 @@ USAGE:
         chunk catalog); --resume restarts from that snapshot instead of
         from scratch after a manager crash
 
+    htap serve   --listen HOST:PORT [--tiles N] [--tile-size S]
+                 [--chunk-source synth|dir:PATH] [--max-jobs N]
+                 [--tenant-queue-depth N] [--tenant-quota N|NMB]
+                 [--no-locality] [--no-replication] [--lease-ms MS]
+                 [--checkpoint-dir PATH] [--resume] [--run-for MS]
+        multi-tenant workflow service: a long-running manager that accepts
+        wire submissions (`htap submit`) and runs many workflows
+        concurrently over one shared elastic worker pool.  Tenants get
+        weighted fair-share of worker capacity (deficit round-robin;
+        weight = submission priority), --max-jobs bounds concurrently
+        running jobs (the rest queue), --tenant-queue-depth bounds each
+        tenant's queued-or-running jobs at admission, and --tenant-quota
+        fences each tenant's share of every worker's staging cache.
+        --checkpoint-dir snapshots the whole job table; --resume restores
+        queued and in-flight jobs after a crash.  --run-for exits after MS
+        milliseconds (tests); default runs until killed
+
+    htap submit  --connect HOST:PORT --workflow wf.json [--tenant NAME]
+                 [--priority N]
+        submit a JSON workflow to a running service; prints the job id and
+        admission state (priority doubles as the tenant's fair-share
+        weight; rejected submissions exit nonzero)
+
+    htap jobs    --connect HOST:PORT [--job ID]
+        list the service's jobs (or one job) with tenant, state, progress,
+        locality counters, and priority
+
+    htap cancel  --connect HOST:PORT --job ID
+        cancel a queued or running job: queued jobs drop immediately;
+        running jobs stop issuing new instances and release their tenant's
+        cache claim
+
     htap worker  --connect HOST:PORT [--cpus N] [--gpus N] [--window N]
                  [--chunk-source synth|dir:PATH] [--workflow wf.json]
                  [--worker-id N] [--staging-cap N|NMB] [--prefetch-depth N]
                  [--spill-dir PATH] [--spill-cap N|NMB] [--read-latency-ms MS]
                  [--heartbeat-ms MS] [--lease-ms MS] [--warm-restart]
+                 [--tenant-quota N|NMB] [--drain-on file:PATH|signal[:term|int]]
         join a distributed run; --chunk-source must serve the same dataset
         the manager was pointed at (same synth seed/tile count, or the
         same shared directory), and --workflow must load the same file the
@@ -224,7 +269,13 @@ USAGE:
         (--lease-ms; 0 opts out of liveness tracking) and heartbeats every
         --heartbeat-ms.  --warm-restart recovers the surviving --spill-dir
         contents after a crash and re-advertises them to the manager as
-        disk-tier chunks instead of clearing the directory
+        disk-tier chunks instead of clearing the directory.  Against
+        `htap serve` the worker resolves each job's workflow over the wire
+        (no --workflow needed) and fences tenants' cache shares with
+        --tenant-quota.  --drain-on arms graceful drain: when the trigger
+        fires (the file appears, or SIGTERM/SIGINT arrives) the worker
+        finishes its in-flight instances, demotes its memory tier to the
+        spill tier, sends Goodbye, and exits 0
 
     htap export-tiles --dir PATH [--tiles N] [--tile-size S] [--seed N]
         write the synthetic dataset as .tile files for dir: chunk sources
@@ -380,6 +431,57 @@ mod tests {
             .unwrap();
         assert_eq!(c.get("checkpoint-dir"), Some("/tmp/ck"));
         assert!(c.get_flag("resume"));
+    }
+
+    #[test]
+    fn service_flags_override_config() {
+        let c = Cli::parse(&args(&[
+            "serve",
+            "--max-jobs",
+            "2",
+            "--tenant-queue-depth",
+            "3",
+            "--tenant-quota",
+            "4MB",
+        ]))
+        .unwrap();
+        let cfg = c.run_config().unwrap();
+        assert_eq!(cfg.max_jobs, 2);
+        assert_eq!(cfg.tenant_queue_depth, 3);
+        assert_eq!(cfg.tenant_quota, Some(crate::config::CacheCap::Bytes(4 << 20)));
+        // defaults: 4 concurrent jobs, depth 8, no tenant fencing
+        let cfg = Cli::parse(&args(&["serve"])).unwrap().run_config().unwrap();
+        assert_eq!(cfg.max_jobs, RunConfig::default().max_jobs);
+        assert_eq!(cfg.tenant_queue_depth, RunConfig::default().tenant_queue_depth);
+        assert!(cfg.tenant_quota.is_none());
+        // bad values stay hard errors
+        assert!(Cli::parse(&args(&["serve", "--max-jobs", "0"]))
+            .unwrap()
+            .run_config()
+            .is_err());
+        assert!(Cli::parse(&args(&["serve", "--tenant-quota", "much"]))
+            .unwrap()
+            .run_config()
+            .is_err());
+        // submit/jobs/cancel/drain flags parse (consumed by main)
+        let c = Cli::parse(&args(&[
+            "submit",
+            "--connect",
+            "h:1",
+            "--workflow",
+            "wf.json",
+            "--tenant",
+            "alice",
+            "--priority",
+            "4",
+        ]))
+        .unwrap();
+        assert_eq!(c.get("tenant"), Some("alice"));
+        assert_eq!(c.get("priority"), Some("4"));
+        let c = Cli::parse(&args(&["cancel", "--connect", "h:1", "--job", "7"])).unwrap();
+        assert_eq!(c.get("job"), Some("7"));
+        let c = Cli::parse(&args(&["worker", "--drain-on", "file:/tmp/drain"])).unwrap();
+        assert_eq!(c.get("drain-on"), Some("file:/tmp/drain"));
     }
 
     #[test]

@@ -226,6 +226,15 @@ pub struct RunConfig {
     /// dead — catalog purged, in-flight work re-issued.  0 disables lease
     /// tracking (connection-drop detection still applies).
     pub lease_ms: u64,
+    /// Service mode (`htap serve`): max jobs running concurrently; the
+    /// rest queue in submission order per tenant.
+    pub max_jobs: usize,
+    /// Service mode: max queued-or-running jobs per tenant — submissions
+    /// beyond this are rejected at admission.
+    pub tenant_queue_depth: usize,
+    /// Service mode: per-tenant staging-cache budget layered on
+    /// `staging_cap` (None = tenants share the global budget unfenced).
+    pub tenant_quota: Option<CacheCap>,
     /// RNG seed for synthetic data.
     pub seed: u64,
 }
@@ -253,6 +262,9 @@ impl Default for RunConfig {
             read_latency_ms: 0,
             heartbeat_ms: 500,
             lease_ms: 3000,
+            max_jobs: 4,
+            tenant_queue_depth: 8,
+            tenant_quota: None,
             seed: 42,
         }
     }
@@ -308,6 +320,9 @@ impl RunConfig {
                 "read_latency_ms" => self.read_latency_ms = req_usize(v, k)? as u64,
                 "heartbeat_ms" => self.heartbeat_ms = req_usize(v, k)? as u64,
                 "lease_ms" => self.lease_ms = req_usize(v, k)? as u64,
+                "max_jobs" => self.max_jobs = req_usize(v, k)?,
+                "tenant_queue_depth" => self.tenant_queue_depth = req_usize(v, k)?,
+                "tenant_quota" => self.tenant_quota = Some(req_cap(v, k)?),
                 other => return Err(Error::Config(format!("unknown config key '{other}'"))),
             }
         }
@@ -334,6 +349,15 @@ impl RunConfig {
         }
         if self.spill_cap.is_zero() {
             return Err(Error::Config("spill_cap must be >= 1 (chunks or bytes)".into()));
+        }
+        if self.max_jobs == 0 {
+            return Err(Error::Config("max_jobs must be >= 1".into()));
+        }
+        if self.tenant_queue_depth == 0 {
+            return Err(Error::Config("tenant_queue_depth must be >= 1".into()));
+        }
+        if self.tenant_quota.is_some_and(|q| q.is_zero()) {
+            return Err(Error::Config("tenant_quota must be >= 1 (chunks or bytes)".into()));
         }
         // a worker that heartbeats slower than its lease term would be
         // declared dead while perfectly healthy
@@ -509,6 +533,28 @@ mod tests {
         // lease 0 = tracking off; any heartbeat value is then fine
         c.lease_ms = 0;
         c.validate().unwrap();
+    }
+
+    #[test]
+    fn service_knobs_parse_and_validate() {
+        let mut c = RunConfig::default();
+        c.apply_json(
+            &Json::parse(r#"{"max_jobs": 2, "tenant_queue_depth": 3, "tenant_quota": "8MB"}"#)
+                .unwrap(),
+        )
+        .unwrap();
+        assert_eq!(c.max_jobs, 2);
+        assert_eq!(c.tenant_queue_depth, 3);
+        assert_eq!(c.tenant_quota, Some(CacheCap::Bytes(8 << 20)));
+        c.validate().unwrap();
+        c.max_jobs = 0;
+        assert!(c.validate().is_err());
+        c.max_jobs = 1;
+        c.tenant_queue_depth = 0;
+        assert!(c.validate().is_err());
+        c.tenant_queue_depth = 1;
+        c.tenant_quota = Some(CacheCap::Chunks(0));
+        assert!(c.validate().is_err());
     }
 
     #[test]

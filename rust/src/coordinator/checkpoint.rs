@@ -28,6 +28,38 @@ const CKPT_VERSION: u32 = 1;
 /// File name inside `--checkpoint-dir`.
 pub const CHECKPOINT_FILE: &str = "manager.ckpt";
 
+/// Magic + format version of the multi-job *service* checkpoint: a
+/// count-prefixed sequence of per-job records, each embedding a complete
+/// single-manager checkpoint (journal + catalog) as a length-prefixed
+/// blob, plus the job-table metadata (tenant, priority, lifecycle state,
+/// workflow JSON) needed to rebuild every in-flight job on
+/// `htap serve --resume`.
+const SVC_MAGIC: &[u8; 4] = b"HTSV";
+const SVC_VERSION: u32 = 1;
+
+/// File name of the service (job-table) checkpoint inside
+/// `--checkpoint-dir`.
+pub const SERVICE_CHECKPOINT_FILE: &str = "service.ckpt";
+
+/// One job's durable state inside a service checkpoint.
+#[derive(Debug, Clone, PartialEq)]
+pub struct JobCheckpoint {
+    pub job: u64,
+    pub tenant: String,
+    pub priority: u32,
+    /// Lifecycle state name (`Queued`/`Running`/`Done`/`Failed`/
+    /// `Cancelled`) — stringly on disk so the codec needs no service
+    /// types.
+    pub state: String,
+    pub workflow_json: String,
+    /// Progress at snapshot time, kept so terminal jobs report correctly
+    /// after a resume without rebuilding their manager.
+    pub done: u64,
+    pub total: u64,
+    pub journal: Vec<CompletionRecord>,
+    pub catalog: Vec<(WorkerId, ChunkId, Tier)>,
+}
+
 fn put_u32(buf: &mut Vec<u8>, v: u32) {
     buf.extend_from_slice(&v.to_le_bytes());
 }
@@ -186,6 +218,118 @@ pub fn load_checkpoint(
     decode(&bytes).map(Some)
 }
 
+fn put_str(buf: &mut Vec<u8>, s: &str) {
+    put_u32(buf, s.len() as u32);
+    buf.extend_from_slice(s.as_bytes());
+}
+
+fn read_str(bytes: &[u8], pos: &mut usize) -> Result<String> {
+    let len = read_u32(bytes, pos)? as usize;
+    let raw = take_bytes(bytes, pos, len)?;
+    String::from_utf8(raw.to_vec())
+        .map_err(|_| Error::Config("checkpoint: non-UTF-8 string".into()))
+}
+
+/// Serialize a service (job-table) snapshot to its on-disk byte layout.
+/// Each job's journal + catalog are embedded as a length-prefixed
+/// single-manager checkpoint blob, so the inner codec is exactly
+/// [`encode`]/[`decode`].
+pub fn encode_service(jobs: &[JobCheckpoint]) -> Vec<u8> {
+    let mut buf = Vec::new();
+    buf.extend_from_slice(SVC_MAGIC);
+    put_u32(&mut buf, SVC_VERSION);
+    put_u32(&mut buf, jobs.len() as u32);
+    for j in jobs {
+        put_u64(&mut buf, j.job);
+        put_str(&mut buf, &j.tenant);
+        put_u32(&mut buf, j.priority);
+        put_str(&mut buf, &j.state);
+        put_str(&mut buf, &j.workflow_json);
+        put_u64(&mut buf, j.done);
+        put_u64(&mut buf, j.total);
+        let inner = encode(&j.journal, &j.catalog);
+        put_u32(&mut buf, inner.len() as u32);
+        buf.extend_from_slice(&inner);
+    }
+    buf
+}
+
+/// Decode a service checkpoint written by [`encode_service`].  Same
+/// corruption contract as [`decode`]: any damage is an `Err`, never a
+/// panic.
+pub fn decode_service(bytes: &[u8]) -> Result<Vec<JobCheckpoint>> {
+    let mut pos = 0usize;
+    if take_bytes(bytes, &mut pos, 4)? != SVC_MAGIC {
+        return Err(Error::Config("not a service checkpoint file (bad magic)".into()));
+    }
+    let version = read_u32(bytes, &mut pos)?;
+    if version != SVC_VERSION {
+        return Err(Error::Config(format!("unsupported service checkpoint version {version}")));
+    }
+    // job + 3 string lengths + priority + done/total + inner length
+    let n_jobs = read_count(bytes, &mut pos, 44)?;
+    let mut jobs = Vec::with_capacity(n_jobs);
+    for _ in 0..n_jobs {
+        let job = read_u64(bytes, &mut pos)?;
+        let tenant = read_str(bytes, &mut pos)?;
+        let priority = read_u32(bytes, &mut pos)?;
+        let state = read_str(bytes, &mut pos)?;
+        let workflow_json = read_str(bytes, &mut pos)?;
+        let done = read_u64(bytes, &mut pos)?;
+        let total = read_u64(bytes, &mut pos)?;
+        let inner_len = read_u32(bytes, &mut pos)? as usize;
+        let inner = take_bytes(bytes, &mut pos, inner_len)?;
+        let (journal, catalog) = decode(inner)?;
+        jobs.push(JobCheckpoint {
+            job,
+            tenant,
+            priority,
+            state,
+            workflow_json,
+            done,
+            total,
+            journal,
+            catalog,
+        });
+    }
+    if pos != bytes.len() {
+        return Err(Error::Config(format!(
+            "service checkpoint: {} trailing bytes after decode",
+            bytes.len() - pos
+        )));
+    }
+    Ok(jobs)
+}
+
+fn service_checkpoint_path(dir: &Path) -> PathBuf {
+    dir.join(SERVICE_CHECKPOINT_FILE)
+}
+
+/// Atomically (temp file + rename) write a service checkpoint under
+/// `dir`, creating the directory if needed.  The caller (the serve loop)
+/// takes the job-table snapshot; encoding and I/O happen here, outside
+/// every lock.
+pub fn write_service_checkpoint(dir: &Path, jobs: &[JobCheckpoint]) -> Result<()> {
+    let bytes = encode_service(jobs);
+    std::fs::create_dir_all(dir)?;
+    let tmp = dir.join(format!("{SERVICE_CHECKPOINT_FILE}.tmp.{}", std::process::id()));
+    std::fs::write(&tmp, &bytes)?;
+    std::fs::rename(&tmp, service_checkpoint_path(dir))?;
+    Ok(())
+}
+
+/// Load the service checkpoint under `dir`, if one exists.  `Ok(None)`
+/// means no checkpoint (cold start); a present-but-corrupt file is an
+/// `Err` so the operator decides rather than silently dropping jobs.
+pub fn load_service_checkpoint(dir: &Path) -> Result<Option<Vec<JobCheckpoint>>> {
+    let path = service_checkpoint_path(dir);
+    if !path.exists() {
+        return Ok(None);
+    }
+    let bytes = std::fs::read(&path)?;
+    decode_service(&bytes).map(Some)
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -255,6 +399,76 @@ mod tests {
         std::fs::write(dir.join(CHECKPOINT_FILE), &bytes).unwrap();
         let (j2, c2) = load_checkpoint(&dir).unwrap().unwrap();
         assert_eq!((j2, c2), (journal, catalog));
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    fn sample_jobs() -> Vec<JobCheckpoint> {
+        let (journal, catalog) = sample();
+        vec![
+            JobCheckpoint {
+                job: 1,
+                tenant: "alice".into(),
+                priority: 1,
+                state: "Running".into(),
+                workflow_json: "{\"stages\":[]}".into(),
+                done: 2,
+                total: 8,
+                journal,
+                catalog,
+            },
+            JobCheckpoint {
+                job: 2,
+                tenant: "bob".into(),
+                priority: 4,
+                state: "Done".into(),
+                workflow_json: String::new(),
+                done: 3,
+                total: 3,
+                journal: vec![],
+                catalog: vec![],
+            },
+        ]
+    }
+
+    #[test]
+    fn service_checkpoint_roundtrip() {
+        let jobs = sample_jobs();
+        let bytes = encode_service(&jobs);
+        assert_eq!(decode_service(&bytes).unwrap(), jobs);
+        // empty table roundtrips too (serve with nothing submitted yet)
+        assert_eq!(decode_service(&encode_service(&[])).unwrap(), vec![]);
+    }
+
+    #[test]
+    fn corrupt_service_checkpoints_are_errors_not_panics() {
+        let jobs = sample_jobs();
+        let bytes = encode_service(&jobs);
+        // single-manager magic is not a service checkpoint
+        let (journal, catalog) = sample();
+        assert!(decode_service(&encode(&journal, &catalog)).is_err());
+        // every truncation point must fail cleanly
+        for cut in 0..bytes.len() {
+            assert!(decode_service(&bytes[..cut]).is_err(), "truncation at {cut} must not decode");
+        }
+        // trailing garbage
+        let mut bad = bytes.clone();
+        bad.push(0);
+        assert!(decode_service(&bad).is_err());
+        // hostile job count
+        let mut bad = bytes[..8].to_vec();
+        bad.extend_from_slice(&0x8000_0000u32.to_le_bytes());
+        assert!(decode_service(&bad).is_err());
+    }
+
+    #[test]
+    fn service_checkpoint_file_roundtrip() {
+        let dir = std::env::temp_dir()
+            .join(format!("htap-svc-ckpt-roundtrip-{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&dir);
+        assert!(load_service_checkpoint(&dir).unwrap().is_none(), "no checkpoint = cold start");
+        let jobs = sample_jobs();
+        write_service_checkpoint(&dir, &jobs).unwrap();
+        assert_eq!(load_service_checkpoint(&dir).unwrap().unwrap(), jobs);
         let _ = std::fs::remove_dir_all(&dir);
     }
 }

@@ -83,7 +83,8 @@ impl WorkRequest {
 /// A work batch (manager -> worker).
 #[derive(Debug, Clone, Default, PartialEq)]
 pub struct WorkBatch {
-    /// Empty = the workflow has fully completed; shut down.
+    /// Empty = the workflow has fully completed; shut down (unless
+    /// [`WorkBatch::idle`] says otherwise).
     pub assignments: Vec<Assignment>,
     /// Upcoming chunk ids the worker should warm its staging cache with
     /// (likely future assignments not yet staged on this worker).
@@ -91,6 +92,10 @@ pub struct WorkBatch {
     /// Chunks this batch stole from another worker: they are multi-homed
     /// now (replicate hints) and worth staging eagerly.
     pub replicate: Vec<ChunkId>,
+    /// Service mode (proto v5 `Idle`): nothing assignable *right now*, but
+    /// the manager is long-running and more jobs may arrive — poll again
+    /// instead of treating the empty batch as workflow completion.
+    pub idle: bool,
 }
 
 /// How the Manager maps cold chunks to workers.
@@ -251,6 +256,15 @@ pub struct Manager {
     cv: Condvar,
 }
 
+/// Select one value of a loaded chunk payload, bounds-checked — the
+/// loader-mode mirror of the worker's staged `ChunkPart` splice.
+fn chunk_part(payload: Vec<Value>, chunk: ChunkId, k: usize) -> Result<Value> {
+    let n = payload.len();
+    payload.into_iter().nth(k).ok_or_else(|| {
+        Error::Scheduler(format!("chunk {chunk} payload has {n} value(s), no part {k}"))
+    })
+}
+
 impl Manager {
     /// Legacy mode: the manager loads every chunk payload itself and ships
     /// it inside assignments.
@@ -290,7 +304,12 @@ impl Manager {
         let stage_needs_chunk: Vec<bool> = workflow
             .stages
             .iter()
-            .map(|s| staged && s.inputs.iter().any(|i| matches!(i, StageInput::Chunk)))
+            .map(|s| {
+                staged
+                    && s.inputs
+                        .iter()
+                        .any(|i| matches!(i, StageInput::Chunk | StageInput::ChunkPart(_)))
+            })
             .collect();
         let mut remaining = 0usize;
         for s in &workflow.stages {
@@ -416,6 +435,11 @@ impl Manager {
                         inputs.extend(loader(chunk)?);
                     }
                 }
+                StageInput::ChunkPart(k) => {
+                    if let Some(loader) = &self.loader {
+                        inputs.push(chunk_part(loader(chunk)?, chunk, *k)?);
+                    }
+                }
                 StageInput::Upstream { .. } => {
                     return Err(Error::Scheduler("stage has upstream inputs".into()))
                 }
@@ -438,6 +462,11 @@ impl Manager {
                 StageInput::Chunk => {
                     if let Some(loader) = &self.loader {
                         inputs.extend(loader(chunk)?);
+                    }
+                }
+                StageInput::ChunkPart(k) => {
+                    if let Some(loader) = &self.loader {
+                        inputs.push(chunk_part(loader(chunk)?, chunk, *k)?);
                     }
                 }
                 StageInput::Upstream { stage: up, output } => {
@@ -672,11 +701,19 @@ impl Manager {
         for rec in journal {
             let id = {
                 // lint: critical-section — look up the seeded instance id
-                let st = sync::lock_clean(&self.state);
-                st.inflight
+                let mut st = sync::lock_clean(&self.state);
+                let id = st
+                    .inflight
                     .iter()
                     .find(|(_, a)| a.stage_idx == rec.stage_idx && a.chunk == rec.chunk)
-                    .map(|(&id, _)| id)
+                    .map(|(&id, _)| id);
+                if let Some(id) = id {
+                    // the replayed instance was seeded into the assignment
+                    // queue too — drop it there, or the resumed manager
+                    // would hand already-completed work out again
+                    st.pending.retain(|a| a.instance_id != id);
+                }
+                id
             };
             let Some(id) = id else {
                 return Err(Error::Scheduler(format!(
@@ -730,6 +767,41 @@ impl WorkSource for Manager {
         }
         loop {
             if !st.pending.is_empty() {
+                return self.select_work(&mut st, req);
+            }
+            if st.remaining_instances == 0 || st.error.is_some() {
+                return WorkBatch::default();
+            }
+            st = match self.cv.wait(st) {
+                Ok(g) => g,
+                Err(p) => p.into_inner(),
+            };
+        }
+    }
+
+    fn complete(&self, instance_id: u64, outs: Vec<Value>) {
+        Manager::complete_instance(self, instance_id, outs)
+    }
+
+    fn register(&self, worker: WorkerId, lease_ms: u64) {
+        self.register_worker(worker, lease_ms);
+    }
+
+    fn heartbeat(&self, worker: WorkerId) {
+        self.heartbeat_worker(worker);
+    }
+
+    fn goodbye(&self, worker: WorkerId) {
+        self.expire_worker(worker);
+    }
+}
+
+impl Manager {
+    /// The tiered locality selection, shared by the blocking
+    /// [`WorkSource::request_work`] and the service's non-blocking
+    /// [`Manager::try_request_work`].  `st.pending` must be non-empty.
+    fn select_work(&self, st: &mut MgrState, req: &WorkRequest) -> WorkBatch {
+        {
                 let n = req.capacity.min(st.pending.len()).max(1);
                 let use_locality = self.locality && req.worker != ANON_WORKER;
                 let mut picked: Vec<Assignment> = Vec::with_capacity(n);
@@ -868,19 +940,66 @@ impl WorkSource for Manager {
                         }
                     }
                 }
-                return WorkBatch { assignments: picked, prefetch, replicate };
-            }
-            if st.remaining_instances == 0 || st.error.is_some() {
-                return WorkBatch::default();
-            }
-            st = match self.cv.wait(st) {
-                Ok(g) => g,
-                Err(p) => p.into_inner(),
-            };
+                WorkBatch { assignments: picked, prefetch, replicate, idle: false }
         }
     }
 
-    fn complete(&self, instance_id: u64, outs: Vec<Value>) {
+    /// Apply a worker's staging deltas and liveness signal without
+    /// requesting work.  Service mode fans one wire request out to many
+    /// per-job managers: the (consumed-once) staging deltas must reach
+    /// every running job's catalog even though the fair-share scheduler
+    /// only asks some of them for assignments.
+    pub fn observe_worker(&self, req: &WorkRequest) {
+        if req.worker == ANON_WORKER {
+            return;
+        }
+        // lint: critical-section — fold staging deltas into the catalog
+        let mut st = sync::lock_clean(&self.state);
+        st.catalog.update(req.worker, &req.staged_add, &req.staged_drop, &req.demoted);
+        if let Some(m) = st.members.get_mut(&req.worker) {
+            m.last_seen = Instant::now();
+        }
+    }
+
+    /// Non-blocking request: returns an empty batch immediately when no
+    /// instance is assignable right now (the deltas in `req` are still
+    /// applied).  The service's deficit round-robin multiplexes many
+    /// managers per wire request and cannot block on any one of them.
+    pub fn try_request_work(&self, req: &WorkRequest) -> WorkBatch {
+        // lint: critical-section — tiered locality selection under the catalog lock
+        let mut st = sync::lock_clean(&self.state);
+        if req.worker != ANON_WORKER {
+            st.catalog.update(req.worker, &req.staged_add, &req.staged_drop, &req.demoted);
+            if let Some(m) = st.members.get_mut(&req.worker) {
+                m.last_seen = Instant::now();
+            }
+        }
+        if st.pending.is_empty() {
+            return WorkBatch::default();
+        }
+        self.select_work(&mut st, req)
+    }
+
+    /// Nothing left to hand out: the workflow fully completed or failed.
+    pub fn is_done(&self) -> bool {
+        let st = sync::lock_clean(&self.state);
+        st.remaining_instances == 0 || st.error.is_some()
+    }
+
+    /// Whether any instance is ready for assignment right now.
+    pub fn has_backlog(&self) -> bool {
+        !sync::lock_clean(&self.state).pending.is_empty()
+    }
+
+    /// The workflow this manager instantiates (service-mode reporting).
+    pub fn workflow(&self) -> Arc<Workflow> {
+        self.workflow.clone()
+    }
+
+    /// Fold a finished stage instance back into the dependency state —
+    /// the body of [`WorkSource::complete`], inherent so the service can
+    /// call it on a per-job manager without the trait in scope.
+    pub fn complete_instance(&self, instance_id: u64, outs: Vec<Value>) {
         // lint: critical-section — fold a completion into the dependency state
         let mut st = sync::lock_clean(&self.state);
         let Some(assignment) = st.inflight.remove(&instance_id) else {
@@ -985,18 +1104,6 @@ impl WorkSource for Manager {
         // this (stage, chunk) pair any more and it's not a reduce input).
         drop(st);
         self.cv.notify_all();
-    }
-
-    fn register(&self, worker: WorkerId, lease_ms: u64) {
-        self.register_worker(worker, lease_ms);
-    }
-
-    fn heartbeat(&self, worker: WorkerId) {
-        self.heartbeat_worker(worker);
-    }
-
-    fn goodbye(&self, worker: WorkerId) {
-        self.expire_worker(worker);
     }
 }
 

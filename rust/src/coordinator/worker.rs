@@ -22,14 +22,38 @@ use crate::metrics::MetricsHub;
 use crate::runtime::calibrate::SharedProfiles;
 use crate::runtime::sync::{self, Condvar, Mutex};
 use crate::runtime::ArtifactManifest;
+use crate::service::job_of;
 use crate::{Error, Result};
 use std::collections::HashMap;
 use std::sync::Arc;
+
+/// How long an idle service worker sleeps before polling again (the
+/// manager answered `Idle`: nothing assignable *right now*).
+const IDLE_POLL_MS: u64 = 100;
 
 struct Flight {
     in_flight: usize,
     requester_done: bool,
     failed: Option<String>,
+}
+
+/// Resolves a job id to its `(tenant, workflow)` — service-mode workers
+/// fetch the spec over the wire (`GetJob`) and compile it locally.
+pub type JobResolver = Arc<dyn Fn(u64) -> Result<(String, Arc<Workflow>)> + Send + Sync>;
+
+/// Optional behaviours of a worker run beyond the single-job defaults.
+#[derive(Default, Clone)]
+pub struct WorkerOpts {
+    /// Service mode: resolve the workflow behind a job-tagged assignment.
+    /// Resolved specs are cached for the worker's lifetime.  `None` means
+    /// every assignment executes against the run's default workflow.
+    pub resolver: Option<JobResolver>,
+    /// Graceful-drain trigger (`htap worker --drain-on ...`): checked
+    /// before each work request and during idle polls.  When it first
+    /// returns true the worker stops requesting, finishes its in-flight
+    /// stage instances, demotes its memory tier to the spill tier, and
+    /// departs with `Goodbye`.
+    pub drain: Option<Arc<dyn Fn() -> bool + Send + Sync>>,
 }
 
 /// Worker-side staging context for a staged (deferred-chunk) run: the
@@ -50,6 +74,7 @@ fn materialize_inputs(
     workflow: &Workflow,
     a: Assignment,
     staging: Option<&WorkerStaging>,
+    tenant: &str,
 ) -> Result<Assignment> {
     if !a.needs_chunk {
         return Ok(a);
@@ -62,7 +87,9 @@ fn materialize_inputs(
         ));
     };
     let Assignment { instance_id, stage_idx, chunk, inputs, needs_chunk, locality, replica } = a;
-    let payload = stg.cache.get(chunk)?;
+    // tenant attribution (service mode): the fetch bills the submitting
+    // tenant's staging quota; an empty tenant is the single-job path
+    let payload = stg.cache.get_for(tenant, chunk)?;
     let mut upstream = inputs.into_iter();
     let mut full = Vec::new();
     for input in &workflow.stages[stage_idx].inputs {
@@ -70,6 +97,12 @@ fn materialize_inputs(
             // splice by handle: the cache payload is Arc-shared, so every
             // concurrent instance of this chunk reads one buffer
             StageInput::Chunk => full.extend(payload.iter().cloned()),
+            StageInput::ChunkPart(k) => full.push(payload.get(*k).cloned().ok_or_else(|| {
+                Error::Scheduler(format!(
+                    "chunk {chunk} payload has {} value(s), no part {k}",
+                    payload.len()
+                ))
+            })?),
             StageInput::Upstream { .. } => full.push(upstream.next().ok_or_else(|| {
                 Error::Scheduler(format!("assignment {instance_id} missing an upstream value"))
             })?),
@@ -137,6 +170,37 @@ pub fn run_worker_staged(
     profiles: Arc<SharedProfiles>,
     staging: Option<WorkerStaging>,
 ) -> Result<()> {
+    run_worker_opts(
+        source,
+        workflow,
+        cfg,
+        manifest,
+        metrics,
+        stage_bindings,
+        profiles,
+        staging,
+        WorkerOpts::default(),
+    )
+}
+
+/// [`run_worker_staged`] with [`WorkerOpts`]: a job resolver (service
+/// mode — assignments carry job-tagged instance ids and the worker
+/// executes each against its own workflow) and/or a graceful-drain
+/// trigger.  Service workers also understand the manager's `Idle` reply:
+/// they sleep briefly and poll again instead of treating an empty batch
+/// as workflow completion.
+#[allow(clippy::too_many_arguments)]
+pub fn run_worker_opts(
+    source: Arc<dyn WorkSource>,
+    workflow: Arc<Workflow>,
+    cfg: RunConfig,
+    manifest: Arc<ArtifactManifest>,
+    metrics: Arc<MetricsHub>,
+    stage_bindings: HashMap<String, String>,
+    profiles: Arc<SharedProfiles>,
+    staging: Option<WorkerStaging>,
+    opts: WorkerOpts,
+) -> Result<()> {
     cfg.validate()?;
     let topo = NodeTopology::host();
     let wrm = Wrm::new(
@@ -192,6 +256,10 @@ pub fn run_worker_staged(
         None => None,
     };
 
+    // drain marker: set by the requester when the drain trigger fires, so
+    // the clean-exit path knows to demote the memory tier before Goodbye
+    let drained = Arc::new(std::sync::atomic::AtomicBool::new(false));
+
     // requester thread
     let requester = {
         let flight = flight.clone();
@@ -201,10 +269,16 @@ pub fn run_worker_staged(
         let staging = staging.clone();
         let window = cfg.window;
         let prefetch = cfg.prefetch;
+        let resolver = opts.resolver.clone();
+        let drain = opts.drain.clone();
+        let drained = drained.clone();
         sync::thread::Builder::new()
             .name("htap-wcc-req".into())
             .spawn(move || {
                 let (lock, cv) = &*flight;
+                // service mode: resolved (tenant, workflow) per job id,
+                // cached for this worker's lifetime
+                let mut jobs: HashMap<u64, (String, Arc<Workflow>)> = HashMap::new();
                 loop {
                     // wait for capacity.  The flight record is plain
                     // counters, so poisoning (a panicked holder) recovers
@@ -229,6 +303,18 @@ pub fn run_worker_staged(
                             };
                         }
                     };
+                    // graceful drain: stop asking for work.  In-flight
+                    // instances finish normally; the clean-exit path then
+                    // demotes the memory tier and departs with Goodbye.
+                    if drain.as_ref().is_some_and(|d| d()) {
+                        drained.store(true, std::sync::atomic::Ordering::Release);
+                        let mut fl = sync::lock_clean(lock);
+                        fl.requester_done = true;
+                        cv.notify_all();
+                        drop(fl);
+                        wrm.poke();
+                        return;
+                    }
                     let req = match &staging {
                         Some(s) => {
                             let (staged_add, staged_drop, demoted) =
@@ -245,6 +331,13 @@ pub fn run_worker_staged(
                         None => WorkRequest::anonymous(capacity),
                     };
                     let batch = source.request_work(&req);
+                    if batch.idle && batch.assignments.is_empty() {
+                        // service lull: nothing assignable right now, but
+                        // more jobs may arrive — poll again shortly (the
+                        // drain trigger stays responsive across polls)
+                        std::thread::sleep(std::time::Duration::from_millis(IDLE_POLL_MS));
+                        continue;
+                    }
                     if batch.assignments.is_empty() {
                         let mut fl = sync::lock_clean(lock);
                         fl.requester_done = true;
@@ -273,17 +366,41 @@ pub fn run_worker_staged(
                         fl.in_flight += batch.assignments.len();
                     }
                     for a in batch.assignments {
-                        match materialize_inputs(&workflow, a, staging.as_deref()) {
-                            Ok(a) => wrm.submit(a),
-                            Err(e) => {
-                                let mut fl = sync::lock_clean(lock);
-                                fl.failed = Some(e.to_string());
-                                fl.requester_done = true;
-                                cv.notify_all();
-                                drop(fl);
-                                wrm.poke();
-                                return;
+                        // service mode tags instance ids with a job id;
+                        // job 0 is the single-manager legacy path and runs
+                        // against the worker's default workflow
+                        let job = job_of(a.instance_id);
+                        let resolved = if job == 0 {
+                            Ok((String::new(), workflow.clone()))
+                        } else if let Some(hit) = jobs.get(&job) {
+                            Ok(hit.clone())
+                        } else {
+                            match &resolver {
+                                Some(r) => match r(job) {
+                                    Ok(spec) => {
+                                        jobs.insert(job, spec.clone());
+                                        Ok(spec)
+                                    }
+                                    Err(e) => Err(e),
+                                },
+                                None => Err(Error::Scheduler(format!(
+                                    "assignment tagged with job {job} but this worker \
+                                     has no job resolver"
+                                ))),
                             }
+                        };
+                        let submitted = resolved.and_then(|(tenant, wf)| {
+                            materialize_inputs(&wf, a, staging.as_deref(), &tenant)
+                                .map(|a| wrm.submit_to(a, wf.clone()))
+                        });
+                        if let Err(e) = submitted {
+                            let mut fl = sync::lock_clean(lock);
+                            fl.failed = Some(e.to_string());
+                            fl.requester_done = true;
+                            cv.notify_all();
+                            drop(fl);
+                            wrm.poke();
+                            return;
                         }
                     }
                 }
@@ -359,6 +476,16 @@ pub fn run_worker_staged(
         let _ = h.join();
     }
     let _ = requester.join();
+    if drained.load(std::sync::atomic::Ordering::Acquire) {
+        // graceful drain: push the memory tier down to the spill tier so a
+        // warm restart on this host finds the working set on local disk
+        if let Some(s) = &staging {
+            let n = s.cache.demote_all();
+            if n > 0 {
+                eprintln!("htap worker: drained; demoted {n} staged chunks to the spill tier");
+            }
+        }
+    }
     finish_staging(&staging);
     finish_membership(heartbeat, true);
     Ok(())

@@ -68,6 +68,11 @@ use std::time::Instant;
 pub type Completion = (u64, std::result::Result<Vec<Value>, String>);
 
 struct InstExec {
+    /// The workflow this instance executes against.  Single-job workers
+    /// share one `Arc` for every instance; service-mode workers run many
+    /// tenants' workflows over the same device threads, so the stage/op
+    /// tables must travel with the instance, not the WRM.
+    workflow: Arc<Workflow>,
     stage_idx: usize,
     /// Stage-external inputs, shared so a dispatch snapshot is one Arc bump.
     inputs: Arc<Vec<Value>>,
@@ -237,10 +242,19 @@ impl Wrm {
         self.cv_done.notify_all();
     }
 
-    /// Enqueue a stage instance: instantiate its fine-grain operations as
-    /// `(data, op)` tuples and push the dependency-free ones.
+    /// Enqueue a stage instance against the WRM's default workflow (the
+    /// single-job path).
     pub fn submit(&self, a: Assignment) {
-        let stage = &self.workflow.stages[a.stage_idx];
+        self.submit_to(a, self.workflow.clone());
+    }
+
+    /// Enqueue a stage instance of an explicit workflow: instantiate its
+    /// fine-grain operations as `(data, op)` tuples and push the
+    /// dependency-free ones.  Service-mode workers call this with the
+    /// workflow resolved from the assignment's job tag, so one device-
+    /// thread pool multiplexes every tenant's pipelines.
+    pub fn submit_to(&self, a: Assignment, workflow: Arc<Workflow>) {
+        let stage = &workflow.stages[a.stage_idx];
         let n_ops = stage.ops.len();
         let mut dep_remaining = vec![0usize; n_ops];
         for (oi, op) in stage.ops.iter().enumerate() {
@@ -263,6 +277,7 @@ impl Wrm {
         // lint: critical-section — instance insert + ready pushes only
         let hold = HoldWatchdog::new("wrm.submit");
         let exec = InstExec {
+            workflow: workflow.clone(),
             stage_idx: a.stage_idx,
             inputs: Arc::new(a.inputs),
             produced: vec![None; n_ops],
@@ -346,13 +361,15 @@ impl Wrm {
     /// Gather host-value *handles* for an op's inputs (caller holds the
     /// lock).  Every push is an `Arc` bump — O(ports) pointer work, no
     /// payload copies inside the critical section.  Also returns the
-    /// instance's stage index so the caller needs no second lock.
+    /// instance's workflow handle and stage index so the caller needs no
+    /// second lock (and resolves ops against the *instance's* workflow,
+    /// which in service mode differs per job).
     fn gather_host_inputs(
         inner: &WrmInner,
-        workflow: &Workflow,
         key: OpInstKey,
-    ) -> std::result::Result<(Vec<Value>, usize), String> {
+    ) -> std::result::Result<(Vec<Value>, Arc<Workflow>, usize), String> {
         let exec = inner.insts.get(&key.0).ok_or("instance vanished")?;
+        let workflow = exec.workflow.clone();
         let stage = &workflow.stages[exec.stage_idx];
         let op = &stage.ops[key.1];
         // empty port list = consume all stage inputs (Reduce convention)
@@ -372,7 +389,7 @@ impl Wrm {
                 PortRef::Param(v) => vals.push(v.clone()),
             }
         }
-        Ok((vals, exec.stage_idx))
+        Ok((vals, workflow, exec.stage_idx))
     }
 
     /// Resolve a completed instance's stage outputs from its shared
@@ -429,7 +446,10 @@ impl Wrm {
         let Some(exec) = inner.insts.get_mut(&key.0) else {
             return completed;
         };
-        let stage = &self.workflow.stages[exec.stage_idx];
+        // Arc bump: ops resolve against the instance's own workflow (the
+        // per-job pipeline in service mode), not the WRM default
+        let wf = exec.workflow.clone();
+        let stage = &wf.stages[exec.stage_idx];
         // single-writer invariant: each produced slot is written exactly
         // once, by the device thread that executed its op (model-checked
         // by tests/model_wrm.rs across interleavings)
@@ -559,7 +579,7 @@ impl Wrm {
     pub fn cpu_thread(self: &Arc<Self>, _core: usize) {
         loop {
             // critical section: pop + O(ports) handle gather, nothing else
-            let (task, vals, stage_idx) = {
+            let (task, vals, wf, stage_idx) = {
                 let Ok(mut inner) = self.lock_inner() else { return };
                 // lint: critical-section — pop + O(ports) handle gather only
                 loop {
@@ -568,8 +588,8 @@ impl Wrm {
                     }
                     if let Some(task) = inner.queue.pop(DeviceKind::Cpu, 0, false) {
                         let hold = HoldWatchdog::new("wrm.cpu_pop");
-                        match Self::gather_host_inputs(&inner, &self.workflow, task.key) {
-                            Ok((vals, stage_idx)) => break (task, vals, stage_idx),
+                        match Self::gather_host_inputs(&inner, task.key) {
+                            Ok((vals, wf, stage_idx)) => break (task, vals, wf, stage_idx),
                             Err(e) => {
                                 inner.completions.push_back((task.key.0, Err(e)));
                                 self.cv_done.notify_all();
@@ -586,7 +606,7 @@ impl Wrm {
                     };
                 }
             };
-            let op = &self.workflow.stages[stage_idx].ops[task.key.1];
+            let op = &wf.stages[stage_idx].ops[task.key.1];
             let t0 = Instant::now();
             // run_cpu_member converts a panicking op into an error
             // completion so the Worker aborts cleanly
@@ -647,7 +667,11 @@ impl Wrm {
                             continue;
                         };
                         let stage_idx = exec.stage_idx;
-                        let op = &self.workflow.stages[stage_idx].ops[task.key.1];
+                        // Arc bump: the instance's own workflow travels
+                        // with the snapshot (per-job pipeline in service
+                        // mode)
+                        let wf = exec.workflow.clone();
+                        let op = &wf.stages[stage_idx].ops[task.key.1];
                         let mut plan: Vec<PlanSlot> =
                             Vec::with_capacity(op.inputs.len().max(exec.inputs.len()));
                         let mut ok = true;
@@ -701,7 +725,7 @@ impl Wrm {
                             drop(hold);
                             continue;
                         }
-                        break Some((task, stage_idx, plan));
+                        break Some((task, wf, stage_idx, plan));
                     }
                     inner = match self.cv_gpu.wait(inner) {
                         Ok(g) => g,
@@ -710,8 +734,8 @@ impl Wrm {
                     };
                 }
             };
-            let Some((task, stage_idx, plan)) = picked else { return };
-            let op = &self.workflow.stages[stage_idx].ops[task.key.1];
+            let Some((task, wf, stage_idx, plan)) = picked else { return };
+            let op = &wf.stages[stage_idx].ops[task.key.1];
             // Try the accelerator member first.  A missing artifact or a
             // failed accelerator execution (e.g. the offline xla shim, or a
             // driver error) degrades to the CPU member below rather than

@@ -18,6 +18,16 @@
 //! Demoted chunks stay in the Manager's catalog (they are still cheap on
 //! this worker — the `demoted` delta only downgrades their tier), so
 //! locality-aware assignment keeps routing their repeat stages here.
+//!
+//! Service mode adds **per-tenant quotas** layered on the global cap:
+//! chunks fetched through [`StagingCache::get_for`] are tagged with the
+//! consuming tenant (retagged on access when jobs share chunks), and a
+//! quota eviction pre-pass pushes an over-quota tenant's own oldest
+//! chunks out *first* — one tenant's 36k-tile flood can shrink only its
+//! own working set, never another tenant's.  [`StagingCache::demote_all`]
+//! is the graceful-drain hook: every memory-tier payload demotes to the
+//! spill tier (or is dropped and reported) so a departing worker leaves a
+//! warm disk tier behind for `--warm-restart`.
 
 use super::source::ChunkSource;
 use super::tiers::SpillTier;
@@ -72,6 +82,12 @@ struct Inner {
     evicted: Vec<ChunkId>,
     /// Chunks demoted memory -> disk, not yet reported to the manager.
     demoted: Vec<ChunkId>,
+    /// Owner tag per resident chunk (service mode; retagged on access).
+    owners: HashMap<ChunkId, String>,
+    /// Resident payload bytes attributed to each owner.
+    owner_bytes: HashMap<String, u64>,
+    /// Per-tenant budget layered on the global cap (None = off).
+    tenant_quota: Option<CacheCap>,
     shutdown: bool,
 }
 
@@ -149,6 +165,9 @@ impl StagingCache {
                 staged: Vec::new(),
                 evicted: Vec::new(),
                 demoted: recovered,
+                owners: HashMap::new(),
+                owner_bytes: HashMap::new(),
+                tenant_quota: None,
                 shutdown: false,
             }),
             cv: Condvar::new(),
@@ -464,6 +483,78 @@ impl StagingCache {
         }
     }
 
+    /// [`StagingCache::get`] with tenant attribution (service mode): the
+    /// fetched chunk is tagged as `tenant`'s — retagged if another tenant
+    /// staged it first, so shared chunks bill whoever touched them last —
+    /// and the per-tenant quota pre-pass runs.  An empty tenant (the
+    /// single-job path) skips attribution entirely.
+    pub fn get_for(&self, tenant: &str, chunk: ChunkId) -> Result<Arc<Vec<Value>>> {
+        let vals = self.get(chunk)?;
+        if tenant.is_empty() {
+            return Ok(vals);
+        }
+        let mut inner = sync::lock_clean(&self.inner);
+        // lint: critical-section — owner retag + quota eviction scan only
+        let hold = HoldWatchdog::with_budget_us("cache.retag", 5_000);
+        self.retag(&mut inner, chunk, tenant);
+        self.evict_over_quota(&mut inner);
+        drop(hold);
+        drop(inner);
+        Ok(vals)
+    }
+
+    /// Attribute a resident chunk's bytes to `tenant` (caller holds the
+    /// lock).  No-op when the chunk is not Ready or already theirs.
+    fn retag(&self, inner: &mut Inner, chunk: ChunkId, tenant: &str) {
+        // lint: critical-section — caller holds the cache lock
+        let bytes = match inner.slots.get(&chunk) {
+            Some(Slot::Ready { vals, .. }) => payload_bytes(vals),
+            _ => return,
+        };
+        if inner.owners.get(&chunk).is_some_and(|o| o == tenant) {
+            return;
+        }
+        let prev = inner.owners.insert(chunk, tenant.to_string());
+        if let Some(p) = prev {
+            if let Some(b) = inner.owner_bytes.get_mut(&p) {
+                *b = b.saturating_sub(bytes);
+            }
+        }
+        *inner.owner_bytes.entry(tenant.to_string()).or_insert(0) += bytes;
+    }
+
+    /// Set (or clear) the per-tenant staging quota.  Applies to every
+    /// tenant uniformly, layered under the global cap.
+    pub fn set_tenant_quota(&self, quota: Option<CacheCap>) {
+        let mut inner = sync::lock_clean(&self.inner);
+        inner.tenant_quota = quota;
+        self.evict_over_quota(&mut inner);
+    }
+
+    /// Resident payload bytes currently attributed to `tenant` —
+    /// test/diagnostic hook.
+    pub fn tenant_bytes(&self, tenant: &str) -> u64 {
+        sync::lock_clean(&self.inner).owner_bytes.get(tenant).copied().unwrap_or(0)
+    }
+
+    /// Graceful-drain hook: demote every memory-tier payload (to the
+    /// spill tier when one exists, else drop + report evicted) so a
+    /// departing worker leaves a warm local-disk tier behind for
+    /// `--warm-restart`.  Returns how many chunks left the memory tier.
+    pub fn demote_all(&self) -> usize {
+        let mut inner = sync::lock_clean(&self.inner);
+        // lint: critical-section — eviction scan only (spill budget:
+        // demotion may write local disk)
+        let mut n = 0usize;
+        while !inner.order.is_empty() {
+            self.evict_at(&mut inner, 0);
+            n += 1;
+        }
+        drop(inner);
+        self.cv.notify_all();
+        n
+    }
+
     /// Whether the memory tier exceeds its budget (chunk count, or payload
     /// bytes — a single over-budget chunk is always allowed to stay).
     fn over_budget(&self, inner: &Inner) -> bool {
@@ -473,53 +564,114 @@ impl StagingCache {
         }
     }
 
-    /// Evict beyond capacity: oldest already-consumed entry first, oldest
-    /// entry otherwise.  With a spill tier, the payload demotes to local
-    /// disk (the chunk stays catalogued, just a tier down); without one —
-    /// or if the disk write fails — it is dropped and reported evicted.
-    /// Caller holds the lock.
+    /// Evict (or demote) the chunk at eviction-scan position `pos`.  With
+    /// a spill tier, the payload demotes to local disk (the chunk stays
+    /// catalogued, just a tier down); without one — or if the disk write
+    /// fails — it is dropped and reported evicted.  Caller holds the lock.
+    fn evict_at(&self, inner: &mut Inner, pos: usize) {
+        // lint: critical-section — caller holds the cache lock
+        let Some(c) = inner.order.remove(pos) else { return };
+        let vals = match inner.slots.remove(&c) {
+            Some(Slot::Ready { vals, .. }) => Some(vals),
+            _ => None,
+        };
+        if let Some(v) = vals.as_ref() {
+            let bytes = payload_bytes(v);
+            inner.mem_bytes = inner.mem_bytes.saturating_sub(bytes);
+            // owner attribution leaves with the payload
+            if let Some(owner) = inner.owners.remove(&c) {
+                if let Some(b) = inner.owner_bytes.get_mut(&owner) {
+                    *b = b.saturating_sub(bytes);
+                }
+            }
+        }
+        let mut dropped_from_disk: Vec<ChunkId> = Vec::new();
+        let mut demoted = false;
+        if let Some(vals) = vals.as_ref() {
+            if let Some(spill) = inner.spill.as_mut() {
+                // lint: allow(io) — demotion writes cheap local disk by design
+                if let Ok(dropped) = spill.put(c, vals) {
+                    demoted = true;
+                    dropped_from_disk = dropped;
+                }
+            }
+        }
+        if demoted {
+            self.spill_evicted.fetch_add(1, Ordering::Relaxed);
+            inner.demoted.push(c);
+            for d in dropped_from_disk {
+                // a chunk pushed out of the disk tier is gone from this
+                // worker — unless a promoted copy still sits in memory
+                if !inner.slots.contains_key(&d) {
+                    inner.evicted.push(d);
+                    self.evictions.fetch_add(1, Ordering::Relaxed);
+                }
+            }
+        } else {
+            inner.evicted.push(c);
+            self.evictions.fetch_add(1, Ordering::Relaxed);
+        }
+    }
+
+    /// Whether `owner` exceeds the per-tenant quota (chunk count, or
+    /// payload bytes — like the global cap, a single over-budget chunk is
+    /// always allowed to stay).
+    fn owner_over_quota(&self, inner: &Inner, owner: &str) -> bool {
+        let Some(quota) = inner.tenant_quota else {
+            return false;
+        };
+        let count = inner.owners.values().filter(|o| o.as_str() == owner).count();
+        match quota {
+            CacheCap::Chunks(cap) => count > cap,
+            CacheCap::Bytes(cap) => {
+                inner.owner_bytes.get(owner).copied().unwrap_or(0) > cap && count > 1
+            }
+        }
+    }
+
+    /// Quota pre-pass: evict over-quota tenants' own oldest chunks
+    /// (already-consumed entries first), leaving every within-quota
+    /// tenant's working set untouched.  Caller holds the lock.
+    fn evict_over_quota(&self, inner: &mut Inner) {
+        // lint: critical-section — caller holds the cache lock
+        if inner.tenant_quota.is_none() {
+            return;
+        }
+        loop {
+            let claimed_pos = inner.order.iter().position(|c| {
+                matches!(inner.slots.get(c), Some(Slot::Ready { claimed: true, .. }))
+                    && inner.owners.get(c).is_some_and(|o| self.owner_over_quota(inner, o))
+            });
+            let pos = claimed_pos.or_else(|| {
+                inner
+                    .order
+                    .iter()
+                    .position(|c| {
+                        inner.owners.get(c).is_some_and(|o| self.owner_over_quota(inner, o))
+                    })
+            });
+            let Some(pos) = pos else { return };
+            self.evict_at(inner, pos);
+        }
+    }
+
+    /// Evict beyond capacity: over-quota tenants' chunks first (so one
+    /// tenant's flood only shrinks its own working set), then oldest
+    /// already-consumed entry, oldest entry otherwise.  Caller holds the
+    /// lock.
     fn evict_excess(&self, inner: &mut Inner) {
         // lint: critical-section — caller holds the cache lock
+        self.evict_over_quota(inner);
         while self.over_budget(inner) {
             let pos = inner
                 .order
                 .iter()
                 .position(|c| matches!(inner.slots.get(c), Some(Slot::Ready { claimed: true, .. })))
                 .unwrap_or(0);
-            let Some(c) = inner.order.remove(pos) else { break };
-            let vals = match inner.slots.remove(&c) {
-                Some(Slot::Ready { vals, .. }) => Some(vals),
-                _ => None,
-            };
-            if let Some(v) = vals.as_ref() {
-                inner.mem_bytes = inner.mem_bytes.saturating_sub(payload_bytes(v));
+            if inner.order.is_empty() {
+                return;
             }
-            let mut dropped_from_disk: Vec<ChunkId> = Vec::new();
-            let mut demoted = false;
-            if let Some(vals) = vals.as_ref() {
-                if let Some(spill) = inner.spill.as_mut() {
-                    // lint: allow(io) — demotion writes cheap local disk by design
-                    if let Ok(dropped) = spill.put(c, vals) {
-                        demoted = true;
-                        dropped_from_disk = dropped;
-                    }
-                }
-            }
-            if demoted {
-                self.spill_evicted.fetch_add(1, Ordering::Relaxed);
-                inner.demoted.push(c);
-                for d in dropped_from_disk {
-                    // a chunk pushed out of the disk tier is gone from this
-                    // worker — unless a promoted copy still sits in memory
-                    if !inner.slots.contains_key(&d) {
-                        inner.evicted.push(d);
-                        self.evictions.fetch_add(1, Ordering::Relaxed);
-                    }
-                }
-            } else {
-                inner.evicted.push(c);
-                self.evictions.fetch_add(1, Ordering::Relaxed);
-            }
+            self.evict_at(inner, pos);
         }
     }
 
@@ -813,6 +965,68 @@ mod tests {
         assert_eq!(r.promoted, 1, "{r:?}");
         cache.shutdown();
         let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn tenant_quota_evicts_only_the_over_quota_tenants_chunks() {
+        let src = source(8, 0);
+        let one = payload_bytes(&src.load(0).unwrap());
+        let cache = StagingCache::new(src, 16, 0);
+        cache.set_tenant_quota(Some(crate::config::CacheCap::Bytes(2 * one)));
+        cache.get_for("alice", 0).unwrap();
+        cache.get_for("bob", 1).unwrap();
+        cache.get_for("bob", 2).unwrap();
+        // bob is at quota; his next chunk pushes out *his* oldest only
+        cache.get_for("bob", 3).unwrap();
+        assert!(cache.is_staged(0), "alice's chunk must survive bob's flood");
+        assert!(!cache.is_staged(1), "bob's oldest chunk is the quota victim");
+        assert!(cache.is_staged(2) && cache.is_staged(3));
+        assert_eq!(cache.tenant_bytes("alice"), one);
+        assert_eq!(cache.tenant_bytes("bob"), 2 * one);
+        cache.shutdown();
+    }
+
+    #[test]
+    fn shared_chunks_retag_to_the_last_toucher() {
+        let src = source(4, 0);
+        let one = payload_bytes(&src.load(0).unwrap());
+        let cache = StagingCache::new(src, 8, 0);
+        cache.get_for("alice", 0).unwrap();
+        assert_eq!(cache.tenant_bytes("alice"), one);
+        // jobs share chunk ids in service mode: the bytes bill whoever
+        // touched the chunk last, never both tenants at once
+        cache.get_for("bob", 0).unwrap();
+        assert_eq!(cache.tenant_bytes("alice"), 0);
+        assert_eq!(cache.tenant_bytes("bob"), one);
+        // the single-job path (empty tenant) leaves attribution alone
+        cache.get_for("", 1).unwrap();
+        assert_eq!(cache.tenant_bytes(""), 0);
+        cache.shutdown();
+    }
+
+    #[test]
+    fn demote_all_moves_the_working_set_to_the_spill_tier() {
+        let dir = spill_dir("drain");
+        let spill = SpillTier::create(&dir, 8).unwrap();
+        let cache = StagingCache::new_tiered(source(4, 0), 8, 0, Some(spill));
+        cache.get(0).unwrap();
+        cache.get(1).unwrap();
+        assert_eq!(cache.demote_all(), 2);
+        assert!(!cache.is_staged(0) && !cache.is_staged(1));
+        assert!(cache.is_spilled(0) && cache.is_spilled(1));
+        let (_, dropped, demoted) = cache.take_staged_delta();
+        assert!(dropped.is_empty(), "drain demotes, it does not drop");
+        assert_eq!(demoted, vec![0, 1]);
+        cache.shutdown();
+        let _ = std::fs::remove_dir_all(&dir);
+        // without a spill tier the payloads drop and report evicted
+        let cache = StagingCache::new(source(2, 0), 4, 0);
+        cache.get(0).unwrap();
+        assert_eq!(cache.demote_all(), 1);
+        let (_, dropped, demoted) = cache.take_staged_delta();
+        assert_eq!(dropped, vec![0]);
+        assert!(demoted.is_empty());
+        cache.shutdown();
     }
 
     #[test]

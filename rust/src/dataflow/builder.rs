@@ -323,6 +323,14 @@ impl StageBuilder {
         PortSpec::Input(self.inputs.len() - 1)
     }
 
+    /// Declare an external input drawing only part `part` of the chunk
+    /// payload (multi-value chunk sources); the payload width is only
+    /// known at run time, so the index is bounds-checked there.
+    pub fn input_chunk_part(&mut self, part: usize) -> PortSpec {
+        self.inputs.push(StageInput::ChunkPart(part));
+        PortSpec::Input(self.inputs.len() - 1)
+    }
+
     /// Declare an external input fed by an upstream stage's output.
     /// (Bounds on the upstream output are checked at `add_stage` time,
     /// when the upstream stage definition is in scope.)
@@ -486,7 +494,7 @@ impl WorkflowBuilder {
         let mut has_upstream = false;
         for input in &sb.inputs {
             match input {
-                StageInput::Chunk => {
+                StageInput::Chunk | StageInput::ChunkPart(_) => {
                     if sb.kind == StageKind::Reduce {
                         return Err(Error::Dataflow(format!(
                             "Reduce stage '{}' cannot take raw chunk inputs; it aggregates \

@@ -88,8 +88,12 @@ pub enum StageKind {
 /// Where a stage's external inputs come from.
 #[derive(Debug, Clone)]
 pub enum StageInput {
-    /// The raw data chunk (e.g. the RGB tile).
+    /// The raw data chunk (e.g. the RGB tile): every payload value.
     Chunk,
+    /// One value of the chunk payload, by index.  Chunk sources may yield
+    /// multi-value payloads (e.g. image + mask); a stage can select just
+    /// the part it consumes (JSON: `{"chunk": k}`).
+    ChunkPart(usize),
     /// Output `output` of upstream stage `stage` (same chunk for PerChunk
     /// stages; concatenated over all chunks for Reduce stages).
     Upstream { stage: usize, output: usize },
@@ -142,7 +146,7 @@ impl Workflow {
             .iter()
             .filter_map(|i| match i {
                 StageInput::Upstream { stage, .. } => Some(*stage),
-                StageInput::Chunk => None,
+                StageInput::Chunk | StageInput::ChunkPart(_) => None,
             })
             .collect();
         ups.sort_unstable();

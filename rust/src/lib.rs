@@ -53,6 +53,7 @@ pub mod imgproc;
 pub mod metrics;
 pub mod net;
 pub mod runtime;
+pub mod service;
 pub mod sim;
 pub mod testing;
 

@@ -4,14 +4,16 @@ use htap::app::{self, build_workflow_with, stage_bindings, AppParams};
 use htap::cli::{Cli, USAGE};
 use htap::config::{PartitionMode, Policy, RunConfig};
 use htap::coordinator::{
-    checkpoint, run_local_staged, spill_from_config, worker::run_worker_staged, AssignPolicy,
-    Manager, WorkerStaging,
+    checkpoint, run_local_staged, spill_from_config,
+    worker::{run_worker_opts, JobResolver, WorkerOpts},
+    AssignPolicy, Manager, WorkerStaging,
 };
 use htap::data::staging::{source_from_spec, ChunkSource, StagingCache};
 use htap::data::{DirSource, SynthConfig, TileStore};
-use htap::dataflow::{workflow_from_file, StageKind, Workflow};
+use htap::dataflow::{workflow_from_file, workflow_from_str, StageKind, Workflow};
 use htap::metrics::MetricsHub;
-use htap::net::{ManagerServer, RemoteManager};
+use htap::net::{self, ManagerServer, RemoteManager};
+use htap::service::{render_value, JobTable};
 use htap::runtime::calibrate::{
     calibrate_workflows, CalibrationConfig, SharedProfiles, CHUNK_READ_OP,
 };
@@ -41,6 +43,10 @@ fn dispatch(cli: &Cli) -> htap::Result<()> {
         "sim" => cmd_sim(cli),
         "calibrate" => cmd_calibrate(cli),
         "manager" => cmd_manager(cli),
+        "serve" => cmd_serve(cli),
+        "submit" => cmd_submit(cli),
+        "jobs" => cmd_jobs(cli),
+        "cancel" => cmd_cancel(cli),
         "worker" => cmd_worker(cli),
         "export-tiles" => cmd_export_tiles(cli),
         "help" | "--help" | "-h" => {
@@ -250,6 +256,33 @@ fn cmd_sim(cli: &Cli) -> htap::Result<()> {
             r.reexecuted
         );
     }
+    // --jobs N: model N identical copies of this run sharing the cluster
+    // under weighted fair-share (the service's DRR, analytically)
+    let jobs = cli.get_usize("jobs", 1)?;
+    if jobs > 1 {
+        let weights: Vec<u32> = match cli.get("job-weights") {
+            Some(spec) => spec
+                .split(',')
+                .map(|w| {
+                    w.trim()
+                        .parse()
+                        .map_err(|_| htap::Error::Config(format!("bad --job-weights '{spec}'")))
+                })
+                .collect::<htap::Result<_>>()?,
+            None => vec![1; jobs],
+        };
+        if weights.len() != jobs {
+            return Err(htap::Error::Config(format!(
+                "--job-weights lists {} weights but --jobs is {jobs}",
+                weights.len()
+            )));
+        }
+        let makespans = htap::sim::fair_share_makespans(r.makespan, &weights);
+        println!("fair-share: {jobs} identical jobs over the same {nodes} nodes");
+        for (i, (w, m)) in weights.iter().zip(&makespans).enumerate() {
+            println!("  job {} (weight {w}): makespan {m:.1}s", i + 1);
+        }
+    }
     Ok(())
 }
 
@@ -289,27 +322,6 @@ fn cmd_calibrate(cli: &Cli) -> htap::Result<()> {
 /// is given.  Sleeps in short steps so the writer thread exits promptly
 /// once the run finishes.
 const CKPT_INTERVAL_MS: u64 = 1000;
-
-/// A stable, bit-faithful rendering of a reduce output value: scalars use
-/// Rust's shortest round-trip float formatting (distinct bits ⇒ distinct
-/// strings), tensors print their shape plus an FNV-1a hash of the raw
-/// little-endian payload.  The smoke script diffs these lines between a
-/// faulty and a fault-free run.
-fn render_value(v: &htap::runtime::Value) -> String {
-    match v {
-        htap::runtime::Value::Scalar(s) => format!("{s}"),
-        htap::runtime::Value::Tensor(t) => {
-            let mut h: u64 = 0xcbf2_9ce4_8422_2325;
-            for f in t.data() {
-                for b in f.to_le_bytes() {
-                    h ^= b as u64;
-                    h = h.wrapping_mul(0x100_0000_01b3);
-                }
-            }
-            format!("tensor{:?}#{h:016x}", t.shape())
-        }
-    }
-}
 
 fn cmd_manager(cli: &Cli) -> htap::Result<()> {
     let listen = cli
@@ -406,11 +418,221 @@ fn cmd_manager(cli: &Cli) -> htap::Result<()> {
     Ok(())
 }
 
+/// The service op registry: WSI ops + the generic set, the same ops a
+/// `--workflow` run resolves against, so any workflow `htap run
+/// --workflow` accepts can also be submitted.
+fn service_registry() -> htap::Result<Arc<htap::runtime::OpRegistry>> {
+    let mut registry = app::registry();
+    registry.merge(app::generic::generic_registry())?;
+    Ok(Arc::new(registry))
+}
+
+fn cmd_serve(cli: &Cli) -> htap::Result<()> {
+    let listen = cli
+        .get("listen")
+        .ok_or_else(|| htap::Error::Config("serve needs --listen HOST:PORT".into()))?;
+    let cfg = cli.run_config()?;
+    let registry = service_registry()?;
+    // like `htap manager`, the service never loads tile payloads; the
+    // chunk source only fixes the shared dataset's chunk count
+    let (source, n) = chunk_source(cli, &cfg)?;
+    let policy = AssignPolicy::from_config(&cfg, Vec::new());
+    let table = JobTable::new(registry, n, policy, cfg.max_jobs, cfg.tenant_queue_depth);
+    table.set_announce(true);
+    // --checkpoint-dir snapshots the whole job table (queued + running
+    // jobs, each with its journal and catalog); --resume restores it
+    let ckpt_dir = cli.get("checkpoint-dir").map(std::path::PathBuf::from);
+    if let Some(dir) = &ckpt_dir {
+        table.enable_journal();
+        if cli.get_flag("resume") {
+            match checkpoint::load_service_checkpoint(dir)? {
+                Some(jobs) => {
+                    let restored = table.restore(jobs)?;
+                    println!("resumed from {}: restored {restored} job(s)", dir.display());
+                }
+                None => {
+                    println!("no service checkpoint under {}; starting fresh", dir.display());
+                }
+            }
+        }
+    }
+    let server = ManagerServer::bind(listen, table.clone())?;
+    println!(
+        "service on {} ({} chunks from {}, max {} concurrent jobs, tenant queue depth {}, \
+         tenant quota {})",
+        server.local_addr(),
+        n,
+        source.describe(),
+        cfg.max_jobs,
+        cfg.tenant_queue_depth,
+        match cfg.tenant_quota {
+            Some(q) => q.to_string(),
+            None => "off".to_string(),
+        }
+    );
+    // --run-for MS bounds the service lifetime (smoke tests); the default
+    // runs until the process is killed — safe, because the checkpoint
+    // writer below persists the job table every interval
+    if let Some(ms) = cli.get("run-for") {
+        let ms: u64 = ms.parse().map_err(|_| htap::Error::Config("bad --run-for".into()))?;
+        let t = table.clone();
+        std::thread::spawn(move || {
+            std::thread::sleep(Duration::from_millis(ms));
+            t.shutdown();
+        });
+    }
+    let ckpt_stop = Arc::new(std::sync::atomic::AtomicBool::new(false));
+    let ckpt_writer = ckpt_dir.as_ref().map(|dir| {
+        let tbl = table.clone();
+        let dir = dir.clone();
+        let stop = ckpt_stop.clone();
+        std::thread::spawn(move || {
+            let mut since = 0u64;
+            while !stop.load(std::sync::atomic::Ordering::Acquire) {
+                std::thread::sleep(Duration::from_millis(25));
+                since += 25;
+                if since >= CKPT_INTERVAL_MS {
+                    since = 0;
+                    if let Err(e) = checkpoint::write_service_checkpoint(&dir, &tbl.snapshot())
+                    {
+                        eprintln!("htap serve: checkpoint failed: {e}");
+                    }
+                }
+            }
+        })
+    });
+    let served = server.serve();
+    ckpt_stop.store(true, std::sync::atomic::Ordering::Release);
+    if let Some(h) = ckpt_writer {
+        let _ = h.join();
+    }
+    served?;
+    if let Some(dir) = &ckpt_dir {
+        // final snapshot so a post-shutdown --resume sees terminal states
+        checkpoint::write_service_checkpoint(dir, &table.snapshot())?;
+    }
+    let rows = htap::service::Endpoint::job_report(&*table, 0);
+    println!("service stopped: {} job(s) on the table", rows.len());
+    for r in rows {
+        println!(
+            "  job {} [{}] {} '{}' {}/{} done (priority {})",
+            r.job, r.tenant, r.state, r.workflow, r.done, r.total, r.priority
+        );
+    }
+    Ok(())
+}
+
+fn cmd_submit(cli: &Cli) -> htap::Result<()> {
+    let addr = cli
+        .get("connect")
+        .ok_or_else(|| htap::Error::Config("submit needs --connect HOST:PORT".into()))?;
+    let path = cli
+        .get("workflow")
+        .ok_or_else(|| htap::Error::Config("submit needs --workflow wf.json".into()))?;
+    let tenant = cli.get("tenant").unwrap_or("default");
+    let priority = cli.get_usize("priority", 1)? as u32;
+    let json = std::fs::read_to_string(path)?;
+    // admission rejections (queue depth, parse errors) come back as Err
+    // and exit nonzero through main
+    let s = net::submit_job(addr, tenant, &json, priority)?;
+    println!(
+        "job {} [{}] {} '{}' ({}/{} done, priority {})",
+        s.job, s.tenant, s.state, s.workflow, s.done, s.total, s.priority
+    );
+    Ok(())
+}
+
+fn cmd_jobs(cli: &Cli) -> htap::Result<()> {
+    let addr = cli
+        .get("connect")
+        .ok_or_else(|| htap::Error::Config("jobs needs --connect HOST:PORT".into()))?;
+    let job = cli.get_usize("job", 0)? as u64;
+    let rows = net::job_reports(addr, job)?;
+    if rows.is_empty() {
+        println!("no jobs");
+        return Ok(());
+    }
+    println!(
+        "{:>5}  {:<12} {:<10} {:>11}  {:>8}  {:>6} {:>6} {:>6}  {:>8}  workflow",
+        "job", "tenant", "state", "progress", "assigned", "hits", "cold", "steals", "priority"
+    );
+    for r in rows {
+        println!(
+            "{:>5}  {:<12} {:<10} {:>5}/{:<5}  {:>8}  {:>6} {:>6} {:>6}  {:>8}  {}",
+            r.job,
+            r.tenant,
+            r.state,
+            r.done,
+            r.total,
+            r.assigned,
+            r.hits,
+            r.cold,
+            r.steals,
+            r.priority,
+            r.workflow
+        );
+    }
+    Ok(())
+}
+
+fn cmd_cancel(cli: &Cli) -> htap::Result<()> {
+    let addr = cli
+        .get("connect")
+        .ok_or_else(|| htap::Error::Config("cancel needs --connect HOST:PORT".into()))?;
+    let job = cli.get_usize("job", 0)? as u64;
+    if job == 0 {
+        return Err(htap::Error::Config("cancel needs --job ID".into()));
+    }
+    let s = net::cancel_job(addr, job)?;
+    println!("job {} [{}] {}", s.job, s.tenant, s.state);
+    Ok(())
+}
+
+/// Build the `--drain-on` trigger: `file:PATH` polls for PATH to appear;
+/// `signal` (alias `signal:term`) / `signal:int` arm a SIGTERM / SIGINT
+/// handler that only flips an atomic flag (async-signal-safe).
+fn parse_drain_trigger(spec: &str) -> htap::Result<Arc<dyn Fn() -> bool + Send + Sync>> {
+    if let Some(path) = spec.strip_prefix("file:") {
+        if path.is_empty() {
+            return Err(htap::Error::Config("--drain-on file: needs a path".into()));
+        }
+        let path = std::path::PathBuf::from(path);
+        return Ok(Arc::new(move || path.exists()));
+    }
+    let signum = match spec {
+        "signal" | "signal:term" => 15, // SIGTERM
+        "signal:int" => 2,             // SIGINT
+        other => {
+            return Err(htap::Error::Config(format!(
+                "bad --drain-on '{other}' (want file:PATH or signal[:term|int])"
+            )))
+        }
+    };
+    static DRAIN_SIGNALLED: std::sync::atomic::AtomicBool =
+        std::sync::atomic::AtomicBool::new(false);
+    extern "C" fn on_drain_signal(_sig: i32) {
+        DRAIN_SIGNALLED.store(true, std::sync::atomic::Ordering::Release);
+    }
+    extern "C" {
+        // libc's signal(2) registration; std already links libc
+        fn signal(signum: i32, handler: usize) -> usize;
+    }
+    unsafe {
+        signal(signum, on_drain_signal as usize);
+    }
+    Ok(Arc::new(|| DRAIN_SIGNALLED.load(std::sync::atomic::Ordering::Acquire)))
+}
+
 fn cmd_worker(cli: &Cli) -> htap::Result<()> {
     let addr = cli
         .get("connect")
         .ok_or_else(|| htap::Error::Config("worker needs --connect HOST:PORT".into()))?;
     let cfg = cli.run_config()?;
+    // --drain-on parses before anything connects so a bad spec fails fast
+    let drain = match cli.get("drain-on") {
+        Some(spec) => Some(parse_drain_trigger(spec)?),
+        None => None,
+    };
     // measured profiles reach PATS through the SharedProfiles seed below
     let store = load_profiles(cli, cfg.tile_size)?;
     let workflow = resolve_workflow(cli, &cfg, false)?;
@@ -444,8 +666,22 @@ fn cmd_worker(cli: &Cli) -> htap::Result<()> {
         worker_id,
         prefetch_budget: cfg.prefetch_depth,
     };
+    // service mode: fence each tenant's share of this worker's cache
+    staging.cache.set_tenant_quota(cfg.tenant_quota);
+    // service mode: resolve job-tagged assignments by fetching the job's
+    // spec over the wire and compiling it against the full registry
+    // (single-manager runs tag everything job 0 and never call this)
+    let resolver: JobResolver = {
+        let addr = addr.to_string();
+        let registry = service_registry()?;
+        Arc::new(move |job| {
+            let (tenant, json) = net::fetch_job_spec(&addr, job)?;
+            let wf = Arc::new(workflow_from_str(&json, registry.clone())?);
+            Ok((tenant, wf))
+        })
+    };
     println!("worker {worker_id} connected to {addr}");
-    run_worker_staged(
+    run_worker_opts(
         source,
         workflow,
         cfg,
@@ -454,6 +690,7 @@ fn cmd_worker(cli: &Cli) -> htap::Result<()> {
         stage_bindings(),
         profiles.clone(),
         Some(staging),
+        WorkerOpts { resolver: Some(resolver), drain },
     )?;
     let report = metrics.report();
     println!("{}", report.profile_table());

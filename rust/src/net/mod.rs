@@ -27,12 +27,24 @@
 //! entries are purged, which is also exactly what happens when a
 //! connection drops mid-run — crash tolerance and planned elasticity are
 //! the same code path.
+//!
+//! Service mode (proto v5) reuses the very same server: [`ManagerServer`]
+//! serves any [`Endpoint`] — the single-job `Manager` or the multi-tenant
+//! `service::JobTable`.  Clients submit workflows (`Submit`), query and
+//! cancel jobs (`JobStatus` / `CancelJob`), and workers fetch the
+//! workflow behind a job-tagged assignment (`GetJob`).  A service
+//! endpoint answers an unsatisfiable `Request` with `Idle` ("poll
+//! again") instead of the empty `Assign` that means "shut down".  The
+//! one-shot client calls ([`submit_job`], [`job_reports`],
+//! [`cancel_job`], [`fetch_job_spec`]) each use a short-lived
+//! connection, so control traffic never blocks behind a work channel.
 
 pub mod proto;
 
-use crate::coordinator::manager::{Manager, WorkBatch, WorkRequest, WorkSource};
+use crate::coordinator::manager::{WorkBatch, WorkRequest, WorkSource};
 use crate::data::staging::WorkerId;
 use crate::runtime::sync::{self, Mutex};
+use crate::service::{Endpoint, JobSummary};
 use crate::{Error, Result};
 use proto::Message;
 use std::io::{BufReader, BufWriter};
@@ -45,18 +57,19 @@ use std::sync::Arc;
 /// lease itself, not the sweep cadence.
 const LEASE_SWEEP_MS: u64 = 50;
 
-/// Serve an in-process [`Manager`] to remote Workers.  Returns once the
-/// workflow completes and all workers disconnected.
+/// Serve an in-process [`Endpoint`] (a single-job `Manager` or the
+/// service-mode `JobTable`) to remote Workers and control clients.
+/// Returns once the endpoint reports done and all workers disconnected.
 pub struct ManagerServer {
     listener: TcpListener,
-    manager: Arc<Manager>,
+    endpoint: Arc<dyn Endpoint>,
     stop: Arc<AtomicBool>,
 }
 
 impl ManagerServer {
-    pub fn bind(addr: &str, manager: Arc<Manager>) -> Result<Self> {
+    pub fn bind(addr: &str, endpoint: Arc<dyn Endpoint>) -> Result<Self> {
         let listener = TcpListener::bind(addr).map_err(|e| Error::Net(e.to_string()))?;
-        Ok(ManagerServer { listener, manager, stop: Arc::new(AtomicBool::new(false)) })
+        Ok(ManagerServer { listener, endpoint, stop: Arc::new(AtomicBool::new(false)) })
     }
 
     pub fn local_addr(&self) -> String {
@@ -72,11 +85,11 @@ impl ManagerServer {
     /// their heartbeat term (their leases are re-issued to survivors).
     pub fn serve(&self) -> Result<()> {
         let watcher = {
-            let mgr = self.manager.clone();
+            let ep = self.endpoint.clone();
             let stop = self.stop.clone();
             let addr = self.local_addr();
             std::thread::spawn(move || {
-                mgr.wait_done();
+                ep.wait_done();
                 stop.store(true, Ordering::SeqCst);
                 // poke the listener so the blocking accept() observes the
                 // stop flag instead of waiting for one more worker
@@ -84,12 +97,12 @@ impl ManagerServer {
             })
         };
         let sweeper = {
-            let mgr = self.manager.clone();
+            let ep = self.endpoint.clone();
             let stop = self.stop.clone();
             std::thread::spawn(move || {
                 while !stop.load(Ordering::SeqCst) {
                     std::thread::sleep(std::time::Duration::from_millis(LEASE_SWEEP_MS));
-                    for (worker, requeued) in mgr.sweep_leases() {
+                    for (worker, requeued) in ep.sweep_leases() {
                         eprintln!(
                             "htap manager: worker {worker} missed its lease; \
                              re-issued {requeued} stage instances"
@@ -105,8 +118,8 @@ impl ManagerServer {
                 // the watcher's poke (or an external stop): workflow done
                 break;
             }
-            let mgr = self.manager.clone();
-            handles.push(std::thread::spawn(move || serve_connection(stream, mgr)));
+            let ep = self.endpoint.clone();
+            handles.push(std::thread::spawn(move || serve_connection(stream, ep)));
         }
         for h in handles {
             let _ = h.join();
@@ -121,20 +134,20 @@ impl ManagerServer {
     }
 }
 
-fn serve_connection(stream: TcpStream, mgr: Arc<Manager>) {
+fn serve_connection(stream: TcpStream, ep: Arc<dyn Endpoint>) {
     // leases handed out on this connection; if the worker dies (EOF or
     // protocol error) before completing them, they are re-issued to the
     // surviving workers — the fault-tolerance path.
     let mut leases: Vec<u64> = Vec::new();
     let mut worker_id = 0u64;
     let mut clean = false;
-    let result = serve_connection_inner(stream, &mgr, &mut leases, &mut worker_id, &mut clean);
-    let requeued = mgr.requeue_stale(&leases);
+    let result = serve_connection_inner(stream, &ep, &mut leases, &mut worker_id, &mut clean);
+    let requeued = ep.requeue_stale(&leases);
     // the channel closed: whatever this worker had staged is gone — purge
     // it from the catalog so its chunks go back to cold instead of being
     // "stolen" from a ghost for the rest of the run.  (A `Goodbye` already
     // did this; repeating it is a no-op.)
-    mgr.purge_worker(worker_id);
+    ep.purge_worker(worker_id);
     if let Err(e) = result {
         if requeued > 0 && !clean {
             eprintln!("htap manager: worker lost ({e}); re-issued {requeued} stage instances");
@@ -144,7 +157,7 @@ fn serve_connection(stream: TcpStream, mgr: Arc<Manager>) {
 
 fn serve_connection_inner(
     stream: TcpStream,
-    mgr: &Arc<Manager>,
+    ep: &Arc<dyn Endpoint>,
     leases: &mut Vec<u64>,
     worker_id: &mut u64,
     clean: &mut bool,
@@ -179,40 +192,72 @@ fn serve_connection_inner(
                     demoted,
                     prefetch_budget: prefetch_budget as usize,
                 };
-                let batch = mgr.request_work(&req);
-                leases.extend(batch.assignments.iter().map(|a| a.instance_id));
-                proto::write_message_buf(
-                    &mut writer,
-                    &Message::Assign {
+                let batch = ep.request_work(&req);
+                let reply = if batch.idle && batch.assignments.is_empty() {
+                    // service endpoint with nothing assignable right now:
+                    // tell the worker to poll again, not to shut down
+                    Message::Idle
+                } else {
+                    leases.extend(batch.assignments.iter().map(|a| a.instance_id));
+                    Message::Assign {
                         assignments: batch.assignments,
                         prefetch: batch.prefetch,
                         replicate: batch.replicate,
-                    },
-                    &mut scratch,
-                )?;
+                    }
+                };
+                proto::write_message_buf(&mut writer, &reply, &mut scratch)?;
             }
             Message::Complete { instance, outputs } => {
-                mgr.complete(instance, outputs);
+                ep.complete(instance, outputs);
                 // completion channel is one-way; no ack needed
             }
             Message::Fail { msg } => {
-                mgr.fail(msg);
+                ep.fail(msg);
             }
             Message::Hello { worker, lease_ms } => {
                 // membership announcement: remembers the worker id for
                 // purge attribution on disconnect, and (lease_ms > 0)
                 // enrolls the worker in lease tracking
                 *worker_id = worker;
-                mgr.register_worker(worker, lease_ms);
+                ep.register_worker(worker, lease_ms);
             }
             Message::Heartbeat { worker } => {
-                mgr.heartbeat_worker(worker);
+                ep.heartbeat_worker(worker);
             }
             Message::Goodbye { worker } => {
                 // planned departure: deregister + purge immediately so the
                 // sweeper never reports this worker as lost
                 *clean = true;
-                mgr.expire_worker(worker);
+                ep.expire_worker(worker);
+            }
+            Message::Submit { tenant, workflow_json, priority } => {
+                // admission verdict travels back as a one-entry JobReport
+                // (accepted) or Fail (rejected) on the same connection
+                let reply = match ep.submit(&tenant, &workflow_json, priority) {
+                    Ok(job) => Message::JobReport { jobs: ep.job_report(job) },
+                    Err(e) => Message::Fail { msg: e.to_string() },
+                };
+                proto::write_message_buf(&mut writer, &reply, &mut scratch)?;
+            }
+            Message::JobStatus { job } => {
+                let jobs = ep.job_report(job);
+                proto::write_message_buf(&mut writer, &Message::JobReport { jobs }, &mut scratch)?;
+            }
+            Message::CancelJob { job } => {
+                let reply = match ep.cancel_job(job) {
+                    Ok(()) => Message::JobReport { jobs: ep.job_report(job) },
+                    Err(e) => Message::Fail { msg: e.to_string() },
+                };
+                proto::write_message_buf(&mut writer, &reply, &mut scratch)?;
+            }
+            Message::GetJob { job } => {
+                let reply = match ep.job_spec(job) {
+                    Ok((tenant, workflow_json)) => {
+                        Message::JobSpec { job, tenant, workflow_json }
+                    }
+                    Err(e) => Message::Fail { msg: e.to_string() },
+                };
+                proto::write_message_buf(&mut writer, &reply, &mut scratch)?;
             }
             other => {
                 return Err(Error::Net(format!("unexpected message {other:?} on server")));
@@ -277,8 +322,11 @@ impl WorkSource for RemoteManager {
         }
         match proto::read_message(reader) {
             Ok(Message::Assign { assignments, prefetch, replicate }) => {
-                WorkBatch { assignments, prefetch, replicate }
+                WorkBatch { assignments, prefetch, replicate, idle: false }
             }
+            // service endpoint, nothing assignable right now: surface the
+            // poll-again marker so the worker sleeps instead of exiting
+            Ok(Message::Idle) => WorkBatch { idle: true, ..WorkBatch::default() },
             _ => WorkBatch::default(),
         }
     }
@@ -322,11 +370,75 @@ impl WorkSource for RemoteManager {
     }
 }
 
+/// One round-trip over a short-lived connection: connect, send `msg`,
+/// read the reply, disconnect.  Control traffic (submit / status /
+/// cancel / job-spec fetch) stays off the long-lived work channels, so a
+/// blocked `Request` can never stall a status query.  A server-side
+/// `Fail` reply is surfaced as the error it carries.
+fn call_service(addr: &str, msg: &Message) -> Result<Message> {
+    let stream = TcpStream::connect(addr).map_err(|e| Error::Net(e.to_string()))?;
+    stream.set_nodelay(true).ok();
+    let mut reader = BufReader::new(stream.try_clone().map_err(|e| Error::Net(e.to_string()))?);
+    let mut writer = BufWriter::new(stream);
+    proto::write_message(&mut writer, msg)?;
+    match proto::read_message(&mut reader)? {
+        Message::Fail { msg } => Err(Error::Scheduler(msg)),
+        reply => Ok(reply),
+    }
+}
+
+/// Submit a workflow to a service-mode manager; returns the accepted
+/// job's summary (state `Queued` or already `Running`).
+pub fn submit_job(
+    addr: &str,
+    tenant: &str,
+    workflow_json: &str,
+    priority: u32,
+) -> Result<JobSummary> {
+    let msg = Message::Submit {
+        tenant: tenant.to_string(),
+        workflow_json: workflow_json.to_string(),
+        priority,
+    };
+    match call_service(addr, &msg)? {
+        Message::JobReport { mut jobs } if !jobs.is_empty() => Ok(jobs.remove(0)),
+        other => Err(Error::Net(format!("unexpected submit reply {other:?}"))),
+    }
+}
+
+/// Fetch job summaries from a service-mode manager: one row for `job`,
+/// or every job the service knows when `job == 0`.
+pub fn job_reports(addr: &str, job: u64) -> Result<Vec<JobSummary>> {
+    match call_service(addr, &Message::JobStatus { job })? {
+        Message::JobReport { jobs } => Ok(jobs),
+        other => Err(Error::Net(format!("unexpected status reply {other:?}"))),
+    }
+}
+
+/// Cancel a queued or running job; returns its post-cancel summary.
+pub fn cancel_job(addr: &str, job: u64) -> Result<JobSummary> {
+    match call_service(addr, &Message::CancelJob { job })? {
+        Message::JobReport { mut jobs } if !jobs.is_empty() => Ok(jobs.remove(0)),
+        other => Err(Error::Net(format!("unexpected cancel reply {other:?}"))),
+    }
+}
+
+/// Fetch a job's `(tenant, workflow_json)` — workers call this the first
+/// time they see an assignment tagged with a job they haven't compiled.
+pub fn fetch_job_spec(addr: &str, job: u64) -> Result<(String, String)> {
+    match call_service(addr, &Message::GetJob { job })? {
+        Message::JobSpec { tenant, workflow_json, .. } => Ok((tenant, workflow_json)),
+        other => Err(Error::Net(format!("unexpected job-spec reply {other:?}"))),
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::coordinator::manager::{AssignPolicy, Manager};
     use crate::dataflow::{OpRegistry, StageKind, Workflow, WorkflowBuilder};
     use crate::runtime::Value;
+    use crate::service::JobTable;
 
     fn tiny_workflow() -> Arc<Workflow> {
         let mut reg = OpRegistry::new();
@@ -413,5 +525,108 @@ mod tests {
         srv.join().unwrap().unwrap();
         assert_eq!(mgr.member_count(), 0);
         assert!(mgr.error().is_none());
+    }
+
+    const SERVICE_WF: &str = r#"{
+        "name": "double-sum",
+        "stages": [
+            {
+                "name": "double", "kind": "per_chunk", "inputs": ["chunk"],
+                "ops": [ { "op": "double", "inputs": [ {"input": 0} ] } ],
+                "outputs": [ {"op": "double"} ]
+            },
+            {
+                "name": "total", "kind": "reduce",
+                "inputs": [ {"stage": "double", "output": 0} ],
+                "ops": [ { "op": "sum", "inputs": "all" } ],
+                "outputs": [ {"op": "sum"} ]
+            }
+        ]
+    }"#;
+
+    fn service_registry() -> Arc<OpRegistry> {
+        let mut r = OpRegistry::new();
+        r.register_cpu("double", 1, |args: &[Value]| {
+            Ok(vec![Value::Scalar(args[0].as_scalar()? * 2.0)])
+        })
+        .unwrap();
+        r.register_cpu("sum", 1, |args: &[Value]| {
+            let mut s = 0.0;
+            for a in args {
+                s += a.as_scalar()?;
+            }
+            Ok(vec![Value::Scalar(s)])
+        })
+        .unwrap();
+        Arc::new(r)
+    }
+
+    #[test]
+    fn service_mode_submissions_run_over_tcp() {
+        let table = JobTable::new(service_registry(), 4, AssignPolicy::default(), 4, 8);
+        let server = ManagerServer::bind("127.0.0.1:0", table.clone()).unwrap();
+        let addr = server.local_addr();
+        let srv = std::thread::spawn(move || server.serve());
+
+        let accepted = submit_job(&addr, "alice", SERVICE_WF, 2).unwrap();
+        assert_eq!(accepted.tenant, "alice");
+        assert!(accepted.job >= 1);
+        assert_eq!(accepted.priority, 2);
+
+        // workers resolve the workflow behind a job id over the wire
+        let (tenant, json) = fetch_job_spec(&addr, accepted.job).unwrap();
+        assert_eq!(tenant, "alice");
+        assert!(json.contains("double"));
+        assert!(fetch_job_spec(&addr, 999).is_err());
+
+        // one remote worker that understands the Idle poll-again marker
+        let remote = RemoteManager::connect(&addr).unwrap();
+        let worker = std::thread::spawn(move || loop {
+            let req = WorkRequest { capacity: 2, worker: 1, ..Default::default() };
+            let batch = WorkSource::request_work(&remote, &req);
+            if batch.idle {
+                std::thread::sleep(std::time::Duration::from_millis(1));
+                continue;
+            }
+            if batch.assignments.is_empty() {
+                return; // real shutdown, not an idle lull
+            }
+            for a in batch.assignments {
+                let out = if a.needs_chunk {
+                    // per-chunk stage: payload is Scalar(chunk), doubled
+                    Value::Scalar(a.chunk as f32 * 2.0)
+                } else {
+                    let mut s = 0.0;
+                    for v in &a.inputs {
+                        s += v.as_scalar().unwrap();
+                    }
+                    Value::Scalar(s)
+                };
+                remote.complete(a.instance_id, vec![out]);
+            }
+        });
+
+        // poll the status API until the job reports Done
+        let mut state = String::new();
+        for _ in 0..2000 {
+            let rows = job_reports(&addr, accepted.job).unwrap();
+            state.clone_from(&rows[0].state);
+            if state == "Done" {
+                break;
+            }
+            std::thread::sleep(std::time::Duration::from_millis(2));
+        }
+        assert_eq!(state, "Done");
+        // chunks 0..4 doubled then summed: 0 + 2 + 4 + 6
+        assert_eq!(
+            table.reduce_outputs(accepted.job, "total"),
+            Some(vec![Value::Scalar(12.0)])
+        );
+        // cancelling a finished job is rejected through the Fail reply
+        assert!(cancel_job(&addr, accepted.job).is_err());
+
+        table.shutdown();
+        worker.join().unwrap();
+        srv.join().unwrap().unwrap();
     }
 }

@@ -15,10 +15,16 @@
 //! the elastic-membership messages: `Hello` (worker identity + the lease
 //! term it promises to heartbeat within), `Heartbeat` (lease renewal) and
 //! `Goodbye` (clean departure, distinguishing a drained worker from a
-//! crashed one).  A version mismatch is a decode error, not a silent
-//! misparse.
+//! crashed one).  v5 added the multi-tenant service surface: `Submit`
+//! (a tenant's workflow JSON + priority), `JobStatus`/`JobReport` (job
+//! lifecycle queries), `CancelJob`, `GetJob`/`JobSpec` (workers fetch
+//! the workflow of a job they were assigned), and `Idle` (the
+//! long-running service has nothing assignable *right now* — poll
+//! again; an empty `Assign` still means shut down).  A version mismatch
+//! is a decode error, not a silent misparse.
 
 use crate::coordinator::manager::Assignment;
+use crate::service::JobSummary;
 use crate::runtime::tensor::{f32s_from_le, f32s_to_le};
 use crate::runtime::{HostTensor, Value};
 use crate::{Error, Result};
@@ -31,9 +37,11 @@ const MAX_FRAME: u32 = 1 << 30;
 /// the staging fields (worker identity, staged-chunk hints, deferred-chunk
 /// and locality flags, prefetch hints) were added, to 3 for the
 /// storage-tier fields (demoted deltas, replica flags, replicate hints),
-/// and to 4 for the elastic-membership messages (Hello / Heartbeat /
-/// Goodbye with a lease term).
-pub const PROTO_VERSION: u8 = 4;
+/// to 4 for the elastic-membership messages (Hello / Heartbeat /
+/// Goodbye with a lease term), and to 5 for the multi-tenant service
+/// messages (Submit / JobStatus / JobReport / CancelJob / GetJob /
+/// JobSpec / Idle).
+pub const PROTO_VERSION: u8 = 5;
 
 /// Protocol messages.
 #[derive(Debug, Clone, PartialEq)]
@@ -74,6 +82,31 @@ pub enum Message {
     /// Worker -> Manager (v4): clean departure — the worker drained its
     /// in-flight work and is leaving; purge immediately, log nothing.
     Goodbye { worker: u64 },
+    /// Service -> Worker (v5): nothing assignable *right now*, but the
+    /// service is long-running and more jobs may arrive — poll again.
+    /// Distinct from an empty `Assign`, which still means shut down.
+    Idle,
+    /// Client -> Service (v5): submit a workflow for execution.  `tenant`
+    /// names the submitting tenant (fair-share + quota identity);
+    /// `priority` is the tenant's fair-share weight (0 = default 1).
+    /// Replied with a one-entry `JobReport` (accepted) or `Fail`
+    /// (rejected by admission control / invalid workflow).
+    Submit { tenant: String, workflow_json: String, priority: u32 },
+    /// Client -> Service (v5): report job `job`'s lifecycle state, or all
+    /// jobs when `job == 0`.  Replied with `JobReport`.
+    JobStatus { job: u64 },
+    /// Client -> Service (v5): cancel a queued or running job.  Replied
+    /// with a one-entry `JobReport` (now Cancelled) or `Fail`.
+    CancelJob { job: u64 },
+    /// Service -> Client (v5): job lifecycle summaries.
+    JobReport { jobs: Vec<JobSummary> },
+    /// Worker -> Service (v5): fetch the workflow of a job this worker was
+    /// assigned work from (service mode multiplexes many workflows over
+    /// one pool; assignments carry only the job-tagged instance id).
+    GetJob { job: u64 },
+    /// Service -> Worker (v5): reply to `GetJob` — the tenant (staging
+    /// quota identity) and workflow JSON to compile against the registry.
+    JobSpec { job: u64, tenant: String, workflow_json: String },
 }
 
 const TAG_REQUEST: u8 = 1;
@@ -83,6 +116,13 @@ const TAG_FAIL: u8 = 4;
 const TAG_HELLO: u8 = 5;
 const TAG_HEARTBEAT: u8 = 6;
 const TAG_GOODBYE: u8 = 7;
+const TAG_IDLE: u8 = 8;
+const TAG_SUBMIT: u8 = 9;
+const TAG_JOB_STATUS: u8 = 10;
+const TAG_CANCEL_JOB: u8 = 11;
+const TAG_JOB_REPORT: u8 = 12;
+const TAG_GET_JOB: u8 = 13;
+const TAG_JOB_SPEC: u8 = 14;
 
 /// Assignment flag bits (v2; FLAG_REPLICA since v3).
 const FLAG_NEEDS_CHUNK: u8 = 1;
@@ -129,6 +169,11 @@ fn put_ids(buf: &mut Vec<u8>, ids: &[u64]) {
     for &id in ids {
         put_u64(buf, id);
     }
+}
+
+fn put_str(buf: &mut Vec<u8>, s: &str) {
+    put_u32(buf, s.len() as u32);
+    buf.extend_from_slice(s.as_bytes());
 }
 
 struct Cursor<'a> {
@@ -308,6 +353,50 @@ pub fn encode_into(msg: &Message, buf: &mut Vec<u8>) {
             buf.push(TAG_GOODBYE);
             put_u64(buf, *worker);
         }
+        Message::Idle => {
+            buf.push(TAG_IDLE);
+        }
+        Message::Submit { tenant, workflow_json, priority } => {
+            buf.push(TAG_SUBMIT);
+            put_str(buf, tenant);
+            put_str(buf, workflow_json);
+            put_u32(buf, *priority);
+        }
+        Message::JobStatus { job } => {
+            buf.push(TAG_JOB_STATUS);
+            put_u64(buf, *job);
+        }
+        Message::CancelJob { job } => {
+            buf.push(TAG_CANCEL_JOB);
+            put_u64(buf, *job);
+        }
+        Message::JobReport { jobs } => {
+            buf.push(TAG_JOB_REPORT);
+            put_u32(buf, jobs.len() as u32);
+            for j in jobs {
+                put_u64(buf, j.job);
+                put_str(buf, &j.tenant);
+                put_str(buf, &j.state);
+                put_str(buf, &j.workflow);
+                put_u64(buf, j.done);
+                put_u64(buf, j.total);
+                put_u64(buf, j.assigned);
+                put_u64(buf, j.hits);
+                put_u64(buf, j.cold);
+                put_u64(buf, j.steals);
+                put_u32(buf, j.priority);
+            }
+        }
+        Message::GetJob { job } => {
+            buf.push(TAG_GET_JOB);
+            put_u64(buf, *job);
+        }
+        Message::JobSpec { job, tenant, workflow_json } => {
+            buf.push(TAG_JOB_SPEC);
+            put_u64(buf, *job);
+            put_str(buf, tenant);
+            put_str(buf, workflow_json);
+        }
     }
 }
 
@@ -370,6 +459,55 @@ pub fn decode(data: &[u8]) -> Result<Message> {
         TAG_HELLO => Message::Hello { worker: c.u64()?, lease_ms: c.u64()? },
         TAG_HEARTBEAT => Message::Heartbeat { worker: c.u64()? },
         TAG_GOODBYE => Message::Goodbye { worker: c.u64()? },
+        TAG_IDLE => Message::Idle,
+        TAG_SUBMIT => {
+            let tenant = c.string()?;
+            let workflow_json = c.string()?;
+            let priority = c.u32()?;
+            Message::Submit { tenant, workflow_json, priority }
+        }
+        TAG_JOB_STATUS => Message::JobStatus { job: c.u64()? },
+        TAG_CANCEL_JOB => Message::CancelJob { job: c.u64()? },
+        TAG_JOB_REPORT => {
+            // job + 3 string lengths + done/total/assigned +
+            // hits/cold/steals + priority
+            let n = c.count(72)?;
+            let mut jobs = Vec::with_capacity(n);
+            for _ in 0..n {
+                let job = c.u64()?;
+                let tenant = c.string()?;
+                let state = c.string()?;
+                let workflow = c.string()?;
+                let done = c.u64()?;
+                let total = c.u64()?;
+                let assigned = c.u64()?;
+                let hits = c.u64()?;
+                let cold = c.u64()?;
+                let steals = c.u64()?;
+                let priority = c.u32()?;
+                jobs.push(JobSummary {
+                    job,
+                    tenant,
+                    state,
+                    workflow,
+                    done,
+                    total,
+                    assigned,
+                    hits,
+                    cold,
+                    steals,
+                    priority,
+                });
+            }
+            Message::JobReport { jobs }
+        }
+        TAG_GET_JOB => Message::GetJob { job: c.u64()? },
+        TAG_JOB_SPEC => {
+            let job = c.u64()?;
+            let tenant = c.string()?;
+            let workflow_json = c.string()?;
+            Message::JobSpec { job, tenant, workflow_json }
+        }
         t => return Err(Error::Net(format!("unknown message tag {t}"))),
     };
     if c.pos != data.len() {
@@ -528,6 +666,72 @@ mod tests {
     }
 
     #[test]
+    fn service_messages_roundtrip() {
+        roundtrip(Message::Idle);
+        roundtrip(Message::Submit {
+            tenant: "alice".into(),
+            workflow_json: "{\"name\":\"wf\"}".into(),
+            priority: 4,
+        });
+        roundtrip(Message::JobStatus { job: 0 });
+        roundtrip(Message::CancelJob { job: 9 });
+        roundtrip(Message::JobReport { jobs: vec![] });
+        roundtrip(Message::JobReport {
+            jobs: vec![
+                JobSummary {
+                    job: 1,
+                    tenant: "alice".into(),
+                    state: "Running".into(),
+                    workflow: "wsi".into(),
+                    done: 3,
+                    total: 33,
+                    assigned: 5,
+                    hits: 2,
+                    cold: 1,
+                    steals: 0,
+                    priority: 1,
+                },
+                JobSummary {
+                    job: 2,
+                    tenant: "bob — unicode ✓".into(),
+                    state: "Queued".into(),
+                    workflow: "generic".into(),
+                    done: 0,
+                    total: 10,
+                    assigned: 0,
+                    hits: 0,
+                    cold: 0,
+                    steals: 0,
+                    priority: 4,
+                },
+            ],
+        });
+        roundtrip(Message::GetJob { job: 2 });
+        roundtrip(Message::JobSpec {
+            job: 2,
+            tenant: "bob".into(),
+            workflow_json: "{}".into(),
+        });
+    }
+
+    #[test]
+    fn truncated_service_frames_rejected() {
+        let enc = encode(&Message::Submit {
+            tenant: "t".into(),
+            workflow_json: "{}".into(),
+            priority: 1,
+        });
+        assert!(decode(&enc[..enc.len() - 1]).is_err());
+        let mut enc = encode(&Message::Idle);
+        enc.push(0); // trailing byte
+        assert!(decode(&enc).is_err());
+        // a hostile JobReport count must fail before preallocation
+        let mut evil = vec![PROTO_VERSION, TAG_JOB_REPORT];
+        put_u32(&mut evil, u32::MAX);
+        assert!(decode(&evil).is_err());
+    }
+
+    #[test]
     fn truncated_membership_frames_rejected() {
         let enc = encode(&Message::Hello { worker: 7, lease_ms: 500 });
         assert!(decode(&enc[..enc.len() - 1]).is_err());
@@ -542,7 +746,7 @@ mod tests {
     fn version_mismatch_is_a_decode_error() {
         let mut enc = encode(&request(1));
         assert_eq!(enc[0], PROTO_VERSION);
-        enc[0] = PROTO_VERSION - 1; // a v3 peer without the membership messages
+        enc[0] = PROTO_VERSION - 1; // a v4 peer without the service messages
         let err = decode(&enc).unwrap_err();
         assert!(err.to_string().contains("protocol version"), "{err}");
         // and through the framed reader

@@ -426,6 +426,14 @@ pub fn calibrate_workflow(
             for si in &stage.inputs {
                 match si {
                     StageInput::Chunk => inputs.extend_from_slice(chunk_inputs),
+                    StageInput::ChunkPart(k) => {
+                        inputs.push(chunk_inputs.get(*k).cloned().ok_or_else(|| {
+                            Error::Dataflow(format!(
+                                "chunk payload has {} value(s), no part {k}",
+                                chunk_inputs.len()
+                            ))
+                        })?)
+                    }
                     StageInput::Upstream { stage: up, output } => {
                         let v = stage_outputs
                             .get(*up)

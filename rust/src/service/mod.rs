@@ -1,0 +1,1428 @@
+//! The multi-tenant workflow service: a job table multiplexing many
+//! per-job managers over one shared elastic worker pool.
+//!
+//! The paper's middleware runs one application dataset per deployment;
+//! this module is the "millions of users" refactor from ROADMAP.md.  A
+//! long-running `htap serve` daemon accepts workflow submissions over the
+//! wire (proto v5 `Submit`), compiles each against the op registry, and
+//! runs it as a **job**: today's [`Manager`] (re-exported here as
+//! [`JobManager`]), one per submitted workflow, under a [`JobTable`] that
+//! owns:
+//!
+//! * **admission control** — at most `max_jobs` jobs run concurrently;
+//!   excess submissions queue (FIFO by job id); each tenant may have at
+//!   most `tenant_queue_depth` non-terminal jobs at once (excess
+//!   submissions are *rejected*, the wire client sees the error);
+//! * **weighted fair-share scheduling** — one worker `Request` fans out
+//!   across tenants by deficit round-robin: each tenant accumulates
+//!   deficit proportional to its weight (the `Submit` priority) every
+//!   round and spends it one assignment at a time, so a tenant with a
+//!   36k-tile job cannot starve a tenant with a 10-tile job;
+//! * **the job lifecycle** — `Queued → Running → Done | Failed |
+//!   Cancelled`, surfaced through the `JobStatus` wire API as
+//!   [`JobSummary`] rows (progress, per-job locality stats, fair-share
+//!   assignment counts);
+//! * **service checkpointing** — [`JobTable::snapshot`] captures every
+//!   job (journal + catalog via the per-job manager) for
+//!   `checkpoint::write_service_checkpoint`, and [`JobTable::restore`]
+//!   rebuilds the table on `htap serve --resume`.
+//!
+//! Stage-instance ids are tagged with the owning job
+//! (`gid = job << JOB_SHIFT | local`) so completions route back to the
+//! right manager over the same wire messages the single-job protocol
+//! uses.  Workers are *job-agnostic*: they see one work source handing
+//! out interleaved assignments; the only service-visible change is the
+//! `Idle` message ("nothing assignable right now, poll again") because a
+//! long-running service must not reuse the empty batch, which means
+//! "workflow over, shut down" to a v4 worker.
+//!
+//! Lock order: the table lock nests *outside* every per-job manager lock
+//! (table → manager), and nothing here calls back into the table while
+//! holding a manager lock.
+
+use crate::coordinator::checkpoint::JobCheckpoint;
+use crate::coordinator::manager::{
+    AssignPolicy, Manager, WorkBatch, WorkRequest, WorkSource,
+};
+use crate::data::staging::WorkerId;
+use crate::dataflow::{workflow_from_str, OpRegistry, StageKind, Workflow};
+use crate::runtime::sync::{self, Condvar, Mutex};
+use crate::runtime::Value;
+use crate::{Error, Result};
+use std::collections::{BTreeMap, HashMap};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::Arc;
+
+/// The per-job manager: exactly today's [`Manager`], one per submitted
+/// workflow.  The alias names the role it plays under the [`JobTable`].
+pub use crate::coordinator::manager::Manager as JobManager;
+
+/// Bits reserved for the per-job local instance id.  A job tags every
+/// stage-instance id it hands to the shared pool with its job id in the
+/// high bits, so completions route back without widening the wire format.
+pub const JOB_SHIFT: u32 = 40;
+const LOCAL_MASK: u64 = (1u64 << JOB_SHIFT) - 1;
+
+/// Job ids live in the high `64 - JOB_SHIFT` bits; cap them well below
+/// that so the tag arithmetic can never collide or overflow.
+pub const MAX_JOB_ID: u64 = 1 << 24;
+
+/// Tag a job-local instance id with its owning job.
+pub fn tag_instance(job: u64, local: u64) -> u64 {
+    (job << JOB_SHIFT) | local
+}
+
+/// The owning job of a tagged instance id (0 = single-job mode: the
+/// plain [`Manager`] never tags, so legacy ids route nowhere special).
+pub fn job_of(instance: u64) -> u64 {
+    instance >> JOB_SHIFT
+}
+
+/// The job-local instance id of a tagged id.
+pub fn local_of(instance: u64) -> u64 {
+    instance & LOCAL_MASK
+}
+
+/// Job lifecycle (`Queued → Running → Done | Failed | Cancelled`).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum JobState {
+    /// Admitted, waiting for a run slot (`max_jobs`).
+    Queued,
+    /// Has a live manager; its instances compete in fair-share.
+    Running,
+    /// All instances completed; reduce outputs are readable.
+    Done,
+    /// The manager reported a fatal error.
+    Failed,
+    /// Cancelled by the operator; nothing was requeued.
+    Cancelled,
+}
+
+impl JobState {
+    pub fn name(self) -> &'static str {
+        match self {
+            JobState::Queued => "Queued",
+            JobState::Running => "Running",
+            JobState::Done => "Done",
+            JobState::Failed => "Failed",
+            JobState::Cancelled => "Cancelled",
+        }
+    }
+
+    pub fn parse(s: &str) -> Option<JobState> {
+        match s {
+            "Queued" => Some(JobState::Queued),
+            "Running" => Some(JobState::Running),
+            "Done" => Some(JobState::Done),
+            "Failed" => Some(JobState::Failed),
+            "Cancelled" => Some(JobState::Cancelled),
+            _ => None,
+        }
+    }
+
+    /// Terminal states never transition again and hold no manager.
+    pub fn terminal(self) -> bool {
+        matches!(self, JobState::Done | JobState::Failed | JobState::Cancelled)
+    }
+}
+
+/// One row of the job-status API (proto v5 `JobReport`): lifecycle,
+/// progress, fair-share assignment count and per-job locality stats.
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct JobSummary {
+    pub job: u64,
+    pub tenant: String,
+    /// [`JobState::name`] — stringly so the wire codec needs no enum.
+    pub state: String,
+    /// Workflow name (from the submitted JSON).
+    pub workflow: String,
+    pub done: u64,
+    pub total: u64,
+    /// Assignments handed out for this job (fair-share accounting).
+    pub assigned: u64,
+    /// Per-job locality: assignments to the worker that staged the chunk.
+    pub hits: u64,
+    /// Per-job locality: cold-chunk assignments.
+    pub cold: u64,
+    /// Per-job locality: steals from another worker's staged set.
+    pub steals: u64,
+    /// The tenant weight this job was submitted with.
+    pub priority: u32,
+}
+
+/// What the network layer serves: both the single-job [`Manager`]
+/// (`htap manager`) and the multi-job [`JobTable`] (`htap serve`)
+/// implement this, so `net::ManagerServer` is one code path.  The
+/// service-only methods default to rejection — a v5 client submitting to
+/// a single-job manager gets a clean error, not a protocol wedge.
+pub trait Endpoint: Send + Sync {
+    /// Hand out up to `req.capacity` assignments.  Single-job endpoints
+    /// block until work is available and use the empty batch for
+    /// "workflow over"; service endpoints never block and return
+    /// `idle = true` when nothing is assignable right now.
+    fn request_work(&self, req: &WorkRequest) -> WorkBatch;
+
+    /// Fold a finished stage instance back in (service: tagged id).
+    fn complete(&self, instance: u64, outputs: Vec<Value>);
+
+    /// A worker reported a fatal error (service: fails every running job).
+    fn fail(&self, msg: String);
+
+    fn register_worker(&self, worker: WorkerId, lease_ms: u64);
+    fn heartbeat_worker(&self, worker: WorkerId);
+
+    /// Clean departure (worker drained): deregister + purge.
+    fn expire_worker(&self, worker: WorkerId) -> usize;
+
+    /// Connection died: forget the worker's staged chunks.
+    fn purge_worker(&self, worker: WorkerId) -> usize;
+
+    /// Re-issue leases a dead connection was holding.
+    fn requeue_stale(&self, leases: &[u64]) -> usize;
+
+    /// Expire workers that missed their lease; returns `(worker,
+    /// requeued)` per expired worker.
+    fn sweep_leases(&self) -> Vec<(WorkerId, usize)>;
+
+    /// Block until this endpoint is finished serving (single job: the
+    /// workflow completed or failed; service: explicit shutdown).
+    fn wait_done(&self);
+
+    /// Submit a workflow (service only).  Returns the new job id.
+    fn submit(&self, _tenant: &str, _workflow_json: &str, _priority: u32) -> Result<u64> {
+        Err(Error::Scheduler(
+            "this manager runs a single workflow and does not accept submissions \
+             (start it with `htap serve` for service mode)"
+                .into(),
+        ))
+    }
+
+    /// Cancel a job (service only).
+    fn cancel_job(&self, _job: u64) -> Result<()> {
+        Err(Error::Scheduler("not a service-mode manager (nothing to cancel)".into()))
+    }
+
+    /// Status rows for `job`, or all jobs when `job == 0`.
+    fn job_report(&self, _job: u64) -> Vec<JobSummary> {
+        Vec::new()
+    }
+
+    /// A job's `(tenant, workflow_json)` — workers fetch this to compile
+    /// workflows for jobs they haven't seen yet.
+    fn job_spec(&self, _job: u64) -> Result<(String, String)> {
+        Err(Error::Scheduler("not a service-mode manager (no job specs)".into()))
+    }
+}
+
+/// The single-job endpoint: `htap manager` serving one workflow.
+impl Endpoint for Manager {
+    fn request_work(&self, req: &WorkRequest) -> WorkBatch {
+        WorkSource::request_work(self, req)
+    }
+
+    fn complete(&self, instance: u64, outputs: Vec<Value>) {
+        self.complete_instance(instance, outputs)
+    }
+
+    fn fail(&self, msg: String) {
+        Manager::fail(self, msg)
+    }
+
+    fn register_worker(&self, worker: WorkerId, lease_ms: u64) {
+        Manager::register_worker(self, worker, lease_ms)
+    }
+
+    fn heartbeat_worker(&self, worker: WorkerId) {
+        Manager::heartbeat_worker(self, worker)
+    }
+
+    fn expire_worker(&self, worker: WorkerId) -> usize {
+        Manager::expire_worker(self, worker)
+    }
+
+    fn purge_worker(&self, worker: WorkerId) -> usize {
+        Manager::purge_worker(self, worker)
+    }
+
+    fn requeue_stale(&self, leases: &[u64]) -> usize {
+        Manager::requeue_stale(self, leases)
+    }
+
+    fn sweep_leases(&self) -> Vec<(WorkerId, usize)> {
+        Manager::sweep_leases(self)
+    }
+
+    fn wait_done(&self) {
+        Manager::wait_done(self)
+    }
+}
+
+/// Stage-instance count a workflow expands to over `n_chunks` chunks.
+pub fn total_instances(wf: &Workflow, n_chunks: usize) -> u64 {
+    wf.stages
+        .iter()
+        .map(|s| match s.kind {
+            StageKind::PerChunk => n_chunks as u64,
+            StageKind::Reduce => 1,
+        })
+        .sum()
+}
+
+/// Render a value the way run summaries print reduce outputs: scalars as
+/// shortest round-trip, tensors as shape + FNV-1a of the little-endian
+/// payload.  Shared by `htap run`/`htap manager` summaries and the
+/// service's per-job announcements, so smoke tests can diff the lines
+/// bit-for-bit between single-job and service runs.
+pub fn render_value(v: &Value) -> String {
+    match v {
+        Value::Scalar(s) => format!("{s}"),
+        Value::Tensor(t) => {
+            let mut h: u64 = 0xcbf2_9ce4_8422_2325;
+            for f in t.data() {
+                for b in f.to_le_bytes() {
+                    h ^= b as u64;
+                    h = h.wrapping_mul(0x100_0000_01b3);
+                }
+            }
+            format!("tensor{:?}#{h:016x}", t.shape())
+        }
+    }
+}
+
+/// One submitted workflow and its runtime state.
+struct Job {
+    id: u64,
+    tenant: String,
+    priority: u32,
+    workflow_json: String,
+    workflow: Arc<Workflow>,
+    state: JobState,
+    /// Live while `Running`; kept after `Done` so reduce outputs stay
+    /// readable; dropped on `Failed`/`Cancelled` (frees in-flight state).
+    manager: Option<Arc<Manager>>,
+    /// Assignments handed out for this job.
+    assigned: u64,
+    /// Cancel requested: the terminal transition maps the manager error
+    /// to `Cancelled` instead of `Failed`.
+    cancelled: bool,
+    error: Option<String>,
+    /// A checkpointed journal + catalog to replay when this job gets its
+    /// run slot (`htap serve --resume`).
+    pending_restore: Option<(
+        Vec<crate::coordinator::manager::CompletionRecord>,
+        Vec<(WorkerId, crate::coordinator::manager::ChunkId, crate::data::staging::Tier)>,
+    )>,
+    /// Progress for manager-less jobs (queued, or terminal after the
+    /// manager was dropped / a resume).
+    done_hint: u64,
+    total_hint: u64,
+    /// Locality stats frozen at the terminal transition.
+    loc_hint: (u64, u64, u64),
+}
+
+impl Job {
+    fn summary(&self) -> JobSummary {
+        let (done, total, loc) = match &self.manager {
+            Some(m) => {
+                let (d, t) = m.progress();
+                (d as u64, t as u64, m.locality_stats())
+            }
+            None => (self.done_hint, self.total_hint, self.loc_hint),
+        };
+        JobSummary {
+            job: self.id,
+            tenant: self.tenant.clone(),
+            state: self.state.name().to_string(),
+            workflow: self.workflow.name.clone(),
+            done,
+            total,
+            assigned: self.assigned,
+            hits: loc.0,
+            cold: loc.1,
+            steals: loc.2,
+            priority: self.priority,
+        }
+    }
+}
+
+/// Per-tenant fair-share bookkeeping (deficit round-robin).
+struct TenantShare {
+    /// Submission priority (latest submission wins); the DRR quantum.
+    weight: u32,
+    /// Unspent assignment credit carried between rounds.
+    deficit: u64,
+    /// Total assignments granted (the fair-share acceptance metric).
+    assigned: u64,
+}
+
+struct TableState {
+    jobs: BTreeMap<u64, Job>,
+    next_job: u64,
+    tenants: BTreeMap<String, TenantShare>,
+    /// Registered workers and their lease terms, forwarded to every
+    /// manager a new job starts with.
+    members: HashMap<WorkerId, u64>,
+    /// Rotates which tenant a DRR sweep starts from.
+    rr_cursor: usize,
+    /// Shutdown: request_work answers with a non-idle empty batch so
+    /// workers wind down, and `wait_done` returns.
+    stop: bool,
+}
+
+/// The multi-job service endpoint: admission, fair-share, lifecycle.
+pub struct JobTable {
+    registry: Arc<OpRegistry>,
+    n_chunks: usize,
+    policy: AssignPolicy,
+    max_jobs: usize,
+    tenant_queue_depth: usize,
+    /// Print per-job lifecycle + reduce-output announcements.
+    announce: AtomicBool,
+    /// Enable the completion journal on every manager (checkpointing).
+    journal: AtomicBool,
+    table: Mutex<TableState>,
+    cv: Condvar,
+}
+
+impl JobTable {
+    /// `registry` resolves ops in submitted workflows; every job is
+    /// instantiated over the same `n_chunks`-chunk source with the same
+    /// assignment `policy`.
+    pub fn new(
+        registry: Arc<OpRegistry>,
+        n_chunks: usize,
+        policy: AssignPolicy,
+        max_jobs: usize,
+        tenant_queue_depth: usize,
+    ) -> Arc<JobTable> {
+        Arc::new(JobTable {
+            registry,
+            n_chunks,
+            policy,
+            max_jobs: max_jobs.max(1),
+            tenant_queue_depth: tenant_queue_depth.max(1),
+            announce: AtomicBool::new(false),
+            journal: AtomicBool::new(false),
+            table: Mutex::new(TableState {
+                jobs: BTreeMap::new(),
+                next_job: 1,
+                tenants: BTreeMap::new(),
+                members: HashMap::new(),
+                rr_cursor: 0,
+                stop: false,
+            }),
+            cv: Condvar::new(),
+        })
+    }
+
+    /// Print lifecycle transitions (stderr) and reduce outputs (stdout).
+    pub fn set_announce(&self, on: bool) {
+        self.announce.store(on, Ordering::Release);
+    }
+
+    /// Journal completions on every job's manager so [`JobTable::snapshot`]
+    /// is replayable.  Call before any submission.
+    pub fn enable_journal(&self) {
+        self.journal.store(true, Ordering::Release);
+    }
+
+    /// Stop serving: workers get shut-down batches, `wait_done` returns.
+    pub fn shutdown(&self) {
+        let mut t = sync::lock_clean(&self.table);
+        t.stop = true;
+        drop(t);
+        self.cv.notify_all();
+    }
+
+    /// Block until `job` reaches a terminal state (or disappears).
+    pub fn wait_job(&self, job: u64) {
+        let mut t = sync::lock_clean(&self.table);
+        loop {
+            match t.jobs.get(&job) {
+                Some(j) if !j.state.terminal() => {}
+                _ => return,
+            }
+            t = match self.cv.wait(t) {
+                Ok(g) => g,
+                Err(p) => p.into_inner(),
+            };
+        }
+    }
+
+    /// Reduce outputs of a completed job's stage (by name), mirroring
+    /// [`Manager::reduce_outputs`].
+    pub fn reduce_outputs(&self, job: u64, stage: &str) -> Option<Vec<Value>> {
+        let mgr = {
+            let t = sync::lock_clean(&self.table);
+            t.jobs.get(&job).and_then(|j| j.manager.clone())
+        };
+        mgr.and_then(|m| m.reduce_outputs(stage))
+    }
+
+    /// Per-tenant `(weight, total assignments granted)` — the fair-share
+    /// acceptance metric.
+    pub fn tenant_assignments(&self) -> Vec<(String, u32, u64)> {
+        let t = sync::lock_clean(&self.table);
+        t.tenants.iter().map(|(n, s)| (n.clone(), s.weight, s.assigned)).collect()
+    }
+
+    /// Managers of currently-running jobs (for delta broadcast / sweeps).
+    fn running_managers(&self) -> Vec<Arc<Manager>> {
+        let t = sync::lock_clean(&self.table);
+        t.jobs
+            .values()
+            .filter(|j| j.state == JobState::Running)
+            .filter_map(|j| j.manager.clone())
+            .collect()
+    }
+
+    /// Create and wire up the manager for an admitted job.  Runs under
+    /// the table lock (manager locks nest inside it).
+    fn start_job_locked(&self, ts: &mut TableState, id: u64) -> Result<()> {
+        let members: Vec<(WorkerId, u64)> =
+            ts.members.iter().map(|(&w, &lease)| (w, lease)).collect();
+        let Some(job) = ts.jobs.get_mut(&id) else {
+            return Ok(());
+        };
+        let mgr = Manager::new_staged(job.workflow.clone(), self.n_chunks, self.policy.clone())?;
+        if self.journal.load(Ordering::Acquire) {
+            mgr.enable_journal();
+        }
+        for (w, lease) in members {
+            mgr.register_worker(w, lease);
+        }
+        if let Some((journal, catalog)) = job.pending_restore.take() {
+            mgr.restore_from(journal, catalog)?;
+        }
+        job.manager = Some(mgr);
+        job.state = JobState::Running;
+        Ok(())
+    }
+
+    /// Advance the lifecycle: retire running jobs whose manager finished
+    /// or failed, then promote queued jobs into free run slots.
+    /// Announcements are collected under the lock and printed outside it.
+    fn reap(&self) {
+        let mut info: Vec<String> = Vec::new();
+        let mut lines: Vec<String> = Vec::new();
+        let mut changed = false;
+        {
+            let mut t = sync::lock_clean(&self.table);
+            let ts = &mut *t;
+            for job in ts.jobs.values_mut() {
+                if job.state != JobState::Running {
+                    continue;
+                }
+                let Some(mgr) = job.manager.clone() else {
+                    continue;
+                };
+                if let Some(err) = mgr.error() {
+                    let (d, tot) = mgr.progress();
+                    job.done_hint = d as u64;
+                    job.total_hint = tot as u64;
+                    job.loc_hint = mgr.locality_stats();
+                    job.error = Some(err.clone());
+                    job.state =
+                        if job.cancelled { JobState::Cancelled } else { JobState::Failed };
+                    // free the in-flight state; nothing gets requeued
+                    job.manager = None;
+                    changed = true;
+                    info.push(format!(
+                        "job {} [{}] -> {} ({err})",
+                        job.id,
+                        job.tenant,
+                        job.state.name()
+                    ));
+                } else if mgr.is_done() {
+                    job.state = JobState::Done;
+                    changed = true;
+                    info.push(format!("job {} [{}] -> Done", job.id, job.tenant));
+                    // reduce outputs, rendered exactly like a single-job
+                    // run summary (prefixed so tenants' lines untangle)
+                    for (si, stage) in job.workflow.stages.iter().enumerate() {
+                        if stage.kind != StageKind::Reduce {
+                            continue;
+                        }
+                        let _ = si;
+                        if let Some(outs) = mgr.reduce_outputs(&stage.name) {
+                            for (i, v) in outs.iter().enumerate() {
+                                lines.push(format!(
+                                    "job {} [{}] reduce '{}' [{}] = {}",
+                                    job.id,
+                                    job.tenant,
+                                    stage.name,
+                                    i,
+                                    render_value(v)
+                                ));
+                            }
+                        }
+                    }
+                }
+            }
+            // promotion: fill free run slots in job-id (submission) order
+            let mut running =
+                ts.jobs.values().filter(|j| j.state == JobState::Running).count();
+            let queued: Vec<u64> = ts
+                .jobs
+                .values()
+                .filter(|j| j.state == JobState::Queued)
+                .map(|j| j.id)
+                .collect();
+            for id in queued {
+                if running >= self.max_jobs {
+                    break;
+                }
+                match self.start_job_locked(ts, id) {
+                    Ok(()) => {
+                        running += 1;
+                        changed = true;
+                        if let Some(job) = ts.jobs.get(&id) {
+                            info.push(format!(
+                                "job {} [{}] -> Running ('{}', {} instances)",
+                                job.id,
+                                job.tenant,
+                                job.workflow.name,
+                                job.total_hint
+                            ));
+                        }
+                    }
+                    Err(e) => {
+                        changed = true;
+                        if let Some(job) = ts.jobs.get_mut(&id) {
+                            job.error = Some(e.to_string());
+                            job.state = JobState::Failed;
+                            info.push(format!(
+                                "job {} [{}] -> Failed ({e})",
+                                job.id, job.tenant
+                            ));
+                        }
+                    }
+                }
+            }
+        }
+        if self.announce.load(Ordering::Acquire) {
+            for l in &info {
+                eprintln!("htap serve: {l}");
+            }
+            for l in &lines {
+                println!("{l}");
+            }
+        }
+        if changed {
+            self.cv.notify_all();
+        }
+    }
+
+    /// The deficit-round-robin sweep behind [`Endpoint::request_work`]:
+    /// each active tenant earns `weight` credit per round and spends it
+    /// one assignment at a time across its running jobs (id order), until
+    /// the request's capacity is filled or nothing more is assignable.
+    /// A tenant with nothing assignable forfeits its accumulated credit
+    /// (the classic DRR empty-queue rule), so idle tenants cannot hoard
+    /// bursts.
+    fn poll_assign(&self, req: &WorkRequest) -> WorkBatch {
+        let mut t = sync::lock_clean(&self.table);
+        let ts = &mut *t;
+        if ts.stop {
+            // non-idle empty batch: the worker shuts down
+            return WorkBatch::default();
+        }
+        let mut out = WorkBatch::default();
+        let tenants: Vec<String> = ts.tenants.keys().cloned().collect();
+        let mut remaining = req.capacity.max(1);
+        if !tenants.is_empty() {
+            let n = tenants.len();
+            let start = ts.rr_cursor % n;
+            ts.rr_cursor = ts.rr_cursor.wrapping_add(1);
+            loop {
+                let mut granted_this_round = 0usize;
+                for k in 0..n {
+                    if remaining == 0 {
+                        break;
+                    }
+                    let name = &tenants[(start + k) % n];
+                    let quantum = {
+                        let Some(share) = ts.tenants.get_mut(name) else { continue };
+                        share.deficit += u64::from(share.weight.max(1));
+                        (share.deficit).min(remaining as u64) as usize
+                    };
+                    let mut got = 0usize;
+                    for job in ts.jobs.values_mut() {
+                        if got >= quantum {
+                            break;
+                        }
+                        if job.state != JobState::Running || job.tenant != *name {
+                            continue;
+                        }
+                        let Some(mgr) = job.manager.clone() else { continue };
+                        // deltas were broadcast via observe_worker before
+                        // this sweep; the sub-request carries identity only
+                        let sub = WorkRequest {
+                            capacity: quantum - got,
+                            worker: req.worker,
+                            prefetch_budget: req.prefetch_budget,
+                            ..Default::default()
+                        };
+                        let batch = mgr.try_request_work(&sub);
+                        if batch.assignments.is_empty() {
+                            continue;
+                        }
+                        got += batch.assignments.len();
+                        job.assigned += batch.assignments.len() as u64;
+                        for mut a in batch.assignments {
+                            a.instance_id = tag_instance(job.id, a.instance_id);
+                            out.assignments.push(a);
+                        }
+                        for c in batch.prefetch {
+                            if !out.prefetch.contains(&c) {
+                                out.prefetch.push(c);
+                            }
+                        }
+                        for c in batch.replicate {
+                            if !out.replicate.contains(&c) {
+                                out.replicate.push(c);
+                            }
+                        }
+                    }
+                    if let Some(share) = ts.tenants.get_mut(name) {
+                        if got == 0 {
+                            share.deficit = 0;
+                        } else {
+                            share.deficit = share.deficit.saturating_sub(got as u64);
+                            share.assigned += got as u64;
+                        }
+                    }
+                    remaining = remaining.saturating_sub(got);
+                    granted_this_round += got;
+                }
+                if remaining == 0 || granted_this_round == 0 {
+                    break;
+                }
+            }
+        }
+        // the service never ends by exhaustion — an empty batch means
+        // "poll again", not "shut down"
+        out.idle = out.assignments.is_empty();
+        out
+    }
+
+    /// Snapshot every job for a service checkpoint.  Table metadata is
+    /// captured under the table lock; each running manager's journal +
+    /// catalog snapshot takes that manager's lock afterwards (table →
+    /// manager order, no overlap).
+    pub fn snapshot(&self) -> Vec<JobCheckpoint> {
+        struct Meta {
+            job: u64,
+            tenant: String,
+            priority: u32,
+            state: String,
+            workflow_json: String,
+            done: u64,
+            total: u64,
+            manager: Option<Arc<Manager>>,
+        }
+        let metas: Vec<Meta> = {
+            let t = sync::lock_clean(&self.table);
+            t.jobs
+                .values()
+                .map(|j| {
+                    let (done, total) = match &j.manager {
+                        Some(m) => {
+                            let (d, tt) = m.progress();
+                            (d as u64, tt as u64)
+                        }
+                        None => (j.done_hint, j.total_hint),
+                    };
+                    Meta {
+                        job: j.id,
+                        tenant: j.tenant.clone(),
+                        priority: j.priority,
+                        state: j.state.name().to_string(),
+                        workflow_json: j.workflow_json.clone(),
+                        done,
+                        total,
+                        manager: if j.state == JobState::Running {
+                            j.manager.clone()
+                        } else {
+                            None
+                        },
+                    }
+                })
+                .collect()
+        };
+        metas
+            .into_iter()
+            .map(|m| {
+                let (journal, catalog) = match &m.manager {
+                    Some(mgr) => mgr.checkpoint_state(),
+                    None => (Vec::new(), Vec::new()),
+                };
+                JobCheckpoint {
+                    job: m.job,
+                    tenant: m.tenant,
+                    priority: m.priority,
+                    state: m.state,
+                    workflow_json: m.workflow_json,
+                    done: m.done,
+                    total: m.total,
+                    journal,
+                    catalog,
+                }
+            })
+            .collect()
+    }
+
+    /// Rebuild the table from a service checkpoint (`htap serve
+    /// --resume`).  Non-terminal jobs come back `Queued` with their
+    /// journal + catalog pending; admission replays them (in job-id
+    /// order) into free run slots, where the restore happens against a
+    /// fresh manager.  Terminal jobs come back manager-less with their
+    /// snapshot progress.  Returns how many non-terminal jobs resumed.
+    pub fn restore(&self, jobs: Vec<JobCheckpoint>) -> Result<usize> {
+        let mut resumed = 0usize;
+        // compile workflows outside the table lock
+        let mut prepared = Vec::with_capacity(jobs.len());
+        for jc in jobs {
+            let state = JobState::parse(&jc.state).ok_or_else(|| {
+                Error::Config(format!("service checkpoint: unknown job state '{}'", jc.state))
+            })?;
+            let wf = Arc::new(workflow_from_str(&jc.workflow_json, self.registry.clone())?);
+            prepared.push((jc, state, wf));
+        }
+        {
+            let mut t = sync::lock_clean(&self.table);
+            let ts = &mut *t;
+            for (jc, state, wf) in prepared {
+                if jc.job == 0 || jc.job >= MAX_JOB_ID {
+                    return Err(Error::Config(format!(
+                        "service checkpoint: job id {} out of range",
+                        jc.job
+                    )));
+                }
+                if ts.jobs.contains_key(&jc.job) {
+                    return Err(Error::Config(format!(
+                        "service checkpoint: duplicate job id {}",
+                        jc.job
+                    )));
+                }
+                ts.next_job = ts.next_job.max(jc.job + 1);
+                let share = ts
+                    .tenants
+                    .entry(jc.tenant.clone())
+                    .or_insert(TenantShare { weight: 1, deficit: 0, assigned: 0 });
+                share.weight = jc.priority.max(1);
+                let terminal = state.terminal();
+                let total = if jc.total > 0 {
+                    jc.total
+                } else {
+                    total_instances(&wf, self.n_chunks)
+                };
+                ts.jobs.insert(
+                    jc.job,
+                    Job {
+                        id: jc.job,
+                        tenant: jc.tenant,
+                        priority: jc.priority,
+                        workflow_json: jc.workflow_json,
+                        workflow: wf,
+                        state: if terminal { state } else { JobState::Queued },
+                        manager: None,
+                        assigned: 0,
+                        cancelled: state == JobState::Cancelled,
+                        error: None,
+                        pending_restore: if terminal {
+                            None
+                        } else {
+                            Some((jc.journal, jc.catalog))
+                        },
+                        done_hint: jc.done,
+                        total_hint: total,
+                        loc_hint: (0, 0, 0),
+                    },
+                );
+                if !terminal {
+                    resumed += 1;
+                }
+            }
+        }
+        self.reap();
+        Ok(resumed)
+    }
+}
+
+impl Endpoint for JobTable {
+    fn request_work(&self, req: &WorkRequest) -> WorkBatch {
+        // lifecycle first, so a job finished by the previous completion
+        // frees its run slot before this sweep
+        self.reap();
+        // broadcast the (consumed-once) staging deltas and the liveness
+        // signal to *every* running job's catalog — the DRR sweep only
+        // asks some managers for work, but all of them track this worker
+        for mgr in self.running_managers() {
+            mgr.observe_worker(req);
+        }
+        self.poll_assign(req)
+    }
+
+    fn complete(&self, instance: u64, outputs: Vec<Value>) {
+        let mgr = {
+            let t = sync::lock_clean(&self.table);
+            t.jobs.get(&job_of(instance)).and_then(|j| j.manager.clone())
+        };
+        if let Some(m) = mgr {
+            m.complete_instance(local_of(instance), outputs);
+        }
+        // else: completion for a cancelled/failed job — drop it
+        self.reap();
+    }
+
+    fn fail(&self, msg: String) {
+        // a worker-fatal error poisons every running job: the workers
+        // share one runtime, so no job's results can be trusted past it
+        for mgr in self.running_managers() {
+            mgr.fail(msg.clone());
+        }
+        self.reap();
+    }
+
+    fn register_worker(&self, worker: WorkerId, lease_ms: u64) {
+        {
+            let mut t = sync::lock_clean(&self.table);
+            t.members.insert(worker, lease_ms);
+        }
+        for mgr in self.running_managers() {
+            mgr.register_worker(worker, lease_ms);
+        }
+    }
+
+    fn heartbeat_worker(&self, worker: WorkerId) {
+        for mgr in self.running_managers() {
+            mgr.heartbeat_worker(worker);
+        }
+    }
+
+    fn expire_worker(&self, worker: WorkerId) -> usize {
+        {
+            let mut t = sync::lock_clean(&self.table);
+            t.members.remove(&worker);
+        }
+        let mut requeued = 0;
+        for mgr in self.running_managers() {
+            requeued += mgr.expire_worker(worker);
+        }
+        self.reap();
+        requeued
+    }
+
+    fn purge_worker(&self, worker: WorkerId) -> usize {
+        let mut purged = 0;
+        for mgr in self.running_managers() {
+            purged += mgr.purge_worker(worker);
+        }
+        purged
+    }
+
+    fn requeue_stale(&self, leases: &[u64]) -> usize {
+        // group tagged leases by owning job, requeue per manager
+        let mut by_job: BTreeMap<u64, Vec<u64>> = BTreeMap::new();
+        for &gid in leases {
+            by_job.entry(job_of(gid)).or_default().push(local_of(gid));
+        }
+        let mut requeued = 0;
+        for (job, locals) in by_job {
+            let mgr = {
+                let t = sync::lock_clean(&self.table);
+                t.jobs.get(&job).and_then(|j| j.manager.clone())
+            };
+            if let Some(m) = mgr {
+                requeued += m.requeue_stale(&locals);
+            }
+        }
+        requeued
+    }
+
+    fn sweep_leases(&self) -> Vec<(WorkerId, usize)> {
+        let mut merged: BTreeMap<WorkerId, usize> = BTreeMap::new();
+        for mgr in self.running_managers() {
+            for (w, n) in mgr.sweep_leases() {
+                *merged.entry(w).or_insert(0) += n;
+            }
+        }
+        if !merged.is_empty() {
+            let mut t = sync::lock_clean(&self.table);
+            for w in merged.keys() {
+                t.members.remove(w);
+            }
+        }
+        merged.into_iter().collect()
+    }
+
+    fn wait_done(&self) {
+        let mut t = sync::lock_clean(&self.table);
+        while !t.stop {
+            t = match self.cv.wait(t) {
+                Ok(g) => g,
+                Err(p) => p.into_inner(),
+            };
+        }
+    }
+
+    fn submit(&self, tenant: &str, workflow_json: &str, priority: u32) -> Result<u64> {
+        if tenant.is_empty() {
+            return Err(Error::Scheduler("submit: tenant name must not be empty".into()));
+        }
+        // compile + validate outside the table lock: a malformed
+        // submission is rejected before it touches any shared state
+        let wf = Arc::new(workflow_from_str(workflow_json, self.registry.clone())?);
+        let total = total_instances(&wf, self.n_chunks);
+        let id = {
+            let mut t = sync::lock_clean(&self.table);
+            let ts = &mut *t;
+            if ts.stop {
+                return Err(Error::Scheduler("submit: service is shutting down".into()));
+            }
+            let depth = ts
+                .jobs
+                .values()
+                .filter(|j| j.tenant == tenant && !j.state.terminal())
+                .count();
+            if depth >= self.tenant_queue_depth {
+                return Err(Error::Scheduler(format!(
+                    "submit: tenant '{tenant}' already has {depth} queued/running jobs \
+                     (limit {})",
+                    self.tenant_queue_depth
+                )));
+            }
+            let id = ts.next_job;
+            if id >= MAX_JOB_ID {
+                return Err(Error::Scheduler("submit: job id space exhausted".into()));
+            }
+            ts.next_job += 1;
+            let share = ts
+                .tenants
+                .entry(tenant.to_string())
+                .or_insert(TenantShare { weight: 1, deficit: 0, assigned: 0 });
+            // the latest submission sets the tenant's fair-share weight
+            share.weight = priority.max(1);
+            ts.jobs.insert(
+                id,
+                Job {
+                    id,
+                    tenant: tenant.to_string(),
+                    priority,
+                    workflow_json: workflow_json.to_string(),
+                    workflow: wf,
+                    state: JobState::Queued,
+                    manager: None,
+                    assigned: 0,
+                    cancelled: false,
+                    error: None,
+                    pending_restore: None,
+                    done_hint: 0,
+                    total_hint: total,
+                    loc_hint: (0, 0, 0),
+                },
+            );
+            id
+        };
+        // admission may promote it straight into a free run slot
+        self.reap();
+        Ok(id)
+    }
+
+    fn cancel_job(&self, job: u64) -> Result<()> {
+        let mgr = {
+            let mut t = sync::lock_clean(&self.table);
+            let Some(j) = t.jobs.get_mut(&job) else {
+                return Err(Error::Scheduler(format!("cancel: no job {job}")));
+            };
+            match j.state {
+                JobState::Queued => {
+                    j.cancelled = true;
+                    j.state = JobState::Cancelled;
+                    None
+                }
+                JobState::Running => {
+                    j.cancelled = true;
+                    j.manager.clone()
+                }
+                s => {
+                    return Err(Error::Scheduler(format!(
+                        "cancel: job {job} is already {}",
+                        s.name()
+                    )))
+                }
+            }
+        };
+        if let Some(m) = mgr {
+            // failing the manager unblocks everything waiting on it; the
+            // reap maps the error to Cancelled (cancelled flag is set) and
+            // drops the manager — in-flight leases die with it, nothing
+            // is requeued, and late completions are dropped in complete()
+            m.fail(format!("job {job} cancelled by operator"));
+        }
+        self.reap();
+        Ok(())
+    }
+
+    fn job_report(&self, job: u64) -> Vec<JobSummary> {
+        self.reap();
+        let t = sync::lock_clean(&self.table);
+        t.jobs
+            .values()
+            .filter(|j| job == 0 || j.id == job)
+            .map(Job::summary)
+            .collect()
+    }
+
+    fn job_spec(&self, job: u64) -> Result<(String, String)> {
+        let t = sync::lock_clean(&self.table);
+        match t.jobs.get(&job) {
+            Some(j) => Ok((j.tenant.clone(), j.workflow_json.clone())),
+            None => Err(Error::Scheduler(format!("job spec: no job {job}"))),
+        }
+    }
+}
+
+/// In-process test/driver convenience: a [`JobTable`] is a [`WorkSource`]
+/// too, so the threaded worker harness can drive it directly.
+impl WorkSource for JobTable {
+    fn request_work(&self, req: &WorkRequest) -> WorkBatch {
+        Endpoint::request_work(self, req)
+    }
+
+    fn complete(&self, instance_id: u64, outputs: Vec<Value>) {
+        Endpoint::complete(self, instance_id, outputs)
+    }
+
+    fn register(&self, worker: WorkerId, lease_ms: u64) {
+        Endpoint::register_worker(self, worker, lease_ms)
+    }
+
+    fn heartbeat(&self, worker: WorkerId) {
+        Endpoint::heartbeat_worker(self, worker)
+    }
+
+    fn goodbye(&self, worker: WorkerId) {
+        Endpoint::expire_worker(self, worker);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn reg() -> Arc<OpRegistry> {
+        let mut r = OpRegistry::new();
+        r.register_cpu("double", 1, |args: &[Value]| {
+            Ok(vec![Value::Scalar(args[0].as_scalar()? * 2.0)])
+        })
+        .unwrap();
+        r.register_cpu("sum", 1, |args: &[Value]| {
+            let mut s = 0.0;
+            for a in args {
+                s += a.as_scalar()?;
+            }
+            Ok(vec![Value::Scalar(s)])
+        })
+        .unwrap();
+        Arc::new(r)
+    }
+
+    const DOUBLE_SUM: &str = r#"{
+        "name": "double-sum",
+        "stages": [
+            {
+                "name": "double", "kind": "per_chunk", "inputs": ["chunk"],
+                "ops": [ { "op": "double", "inputs": [ {"input": 0} ] } ],
+                "outputs": [ {"op": "double"} ]
+            },
+            {
+                "name": "total", "kind": "reduce",
+                "inputs": [ {"stage": "double", "output": 0} ],
+                "ops": [ { "op": "sum", "inputs": "all" } ],
+                "outputs": [ {"op": "sum"} ]
+            }
+        ]
+    }"#;
+
+    fn table(max_jobs: usize, depth: usize) -> Arc<JobTable> {
+        JobTable::new(reg(), 4, AssignPolicy::default(), max_jobs, depth)
+    }
+
+    /// Drive the table to completion as one synthetic worker: chunk
+    /// payloads are `Scalar(chunk)`, per-chunk stage doubles, reduce
+    /// sums the shipped upstream inputs.
+    fn drive(table: &JobTable, worker: WorkerId) -> usize {
+        let mut executed = 0;
+        loop {
+            let req = WorkRequest { capacity: 3, worker, ..Default::default() };
+            let batch = Endpoint::request_work(table, &req);
+            if batch.assignments.is_empty() {
+                if batch.idle {
+                    // nothing assignable right now: are we actually done?
+                    let open = Endpoint::job_report(table, 0)
+                        .iter()
+                        .filter(|s| !matches!(s.state.as_str(), "Done" | "Failed" | "Cancelled"))
+                        .count();
+                    if open == 0 {
+                        return executed;
+                    }
+                    std::thread::yield_now();
+                    continue;
+                }
+                return executed; // stop: shut down
+            }
+            for a in batch.assignments {
+                let out = if a.needs_chunk {
+                    // per-chunk stage: payload is Scalar(chunk), doubled
+                    Value::Scalar(a.chunk as f32 * 2.0)
+                } else {
+                    // reduce stage: upstream values ship in the inputs
+                    let mut s = 0.0;
+                    for v in &a.inputs {
+                        s += v.as_scalar().unwrap();
+                    }
+                    Value::Scalar(s)
+                };
+                Endpoint::complete(table, a.instance_id, vec![out]);
+                executed += 1;
+            }
+        }
+    }
+
+    #[test]
+    fn instance_tagging_roundtrips() {
+        for &(job, local) in
+            &[(0u64, 0u64), (1, 0), (1, 1), (42, 12345), (MAX_JOB_ID - 1, LOCAL_MASK)]
+        {
+            let gid = tag_instance(job, local);
+            assert_eq!(job_of(gid), job);
+            assert_eq!(local_of(gid), local);
+        }
+    }
+
+    #[test]
+    fn job_state_names_roundtrip() {
+        for s in [
+            JobState::Queued,
+            JobState::Running,
+            JobState::Done,
+            JobState::Failed,
+            JobState::Cancelled,
+        ] {
+            assert_eq!(JobState::parse(s.name()), Some(s));
+        }
+        assert_eq!(JobState::parse("Zombie"), None);
+        assert!(JobState::Done.terminal() && !JobState::Running.terminal());
+    }
+
+    #[test]
+    fn submit_runs_to_done_with_correct_reduce() {
+        let t = table(4, 8);
+        let job = Endpoint::submit(&*t, "alice", DOUBLE_SUM, 1).unwrap();
+        assert_eq!(job, 1);
+        let report = Endpoint::job_report(&*t, job);
+        assert_eq!(report.len(), 1);
+        assert_eq!(report[0].state, "Running"); // promoted immediately
+        assert_eq!(report[0].total, 5); // 4 per-chunk + 1 reduce
+        drive(&t, 7);
+        let report = Endpoint::job_report(&*t, job);
+        assert_eq!(report[0].state, "Done");
+        assert_eq!(report[0].done, 5);
+        // chunks 0..4 doubled and summed: 2*(0+1+2+3) = 12
+        let outs = t.reduce_outputs(job, "total").unwrap();
+        assert_eq!(outs, vec![Value::Scalar(12.0)]);
+    }
+
+    #[test]
+    fn admission_queues_beyond_max_jobs_and_rejects_beyond_depth() {
+        let t = table(1, 2);
+        let a = Endpoint::submit(&*t, "alice", DOUBLE_SUM, 1).unwrap();
+        let b = Endpoint::submit(&*t, "alice", DOUBLE_SUM, 1).unwrap();
+        // depth limit: two non-terminal jobs already
+        assert!(Endpoint::submit(&*t, "alice", DOUBLE_SUM, 1).is_err());
+        // another tenant is unaffected
+        let c = Endpoint::submit(&*t, "bob", DOUBLE_SUM, 1).unwrap();
+        let states: Vec<(u64, String)> = Endpoint::job_report(&*t, 0)
+            .into_iter()
+            .map(|s| (s.job, s.state))
+            .collect();
+        assert_eq!(
+            states,
+            vec![
+                (a, "Running".to_string()),
+                (b, "Queued".to_string()),
+                (c, "Queued".to_string())
+            ]
+        );
+        drive(&t, 7);
+        for s in Endpoint::job_report(&*t, 0) {
+            assert_eq!(s.state, "Done", "job {} should finish", s.job);
+        }
+    }
+
+    #[test]
+    fn malformed_submission_is_rejected_cleanly() {
+        let t = table(4, 8);
+        assert!(Endpoint::submit(&*t, "alice", "{ not json", 1).is_err());
+        assert!(Endpoint::submit(&*t, "", DOUBLE_SUM, 1).is_err());
+        let doc = r#"{"name":"bad","stages":[{"name":"s","kind":"per_chunk",
+            "inputs":["chunk"],"ops":[{"op":"ghost","inputs":[{"input":0}]}],
+            "outputs":[{"op":"ghost"}]}]}"#;
+        assert!(Endpoint::submit(&*t, "alice", doc, 1).is_err());
+        assert!(Endpoint::job_report(&*t, 0).is_empty());
+    }
+
+    #[test]
+    fn cancel_queued_and_running_jobs() {
+        let t = table(1, 8);
+        let a = Endpoint::submit(&*t, "alice", DOUBLE_SUM, 1).unwrap();
+        let b = Endpoint::submit(&*t, "alice", DOUBLE_SUM, 1).unwrap();
+        // b is queued; cancelling it never starts it
+        Endpoint::cancel_job(&*t, b).unwrap();
+        // a is running; cancel mid-run
+        Endpoint::cancel_job(&*t, a).unwrap();
+        let report = Endpoint::job_report(&*t, 0);
+        assert_eq!(report[0].state, "Cancelled");
+        assert_eq!(report[1].state, "Cancelled");
+        // cancelling again is an error, not a panic
+        assert!(Endpoint::cancel_job(&*t, a).is_err());
+        assert!(Endpoint::cancel_job(&*t, 99).is_err());
+        // the queue depth was freed: a new submission is admitted and runs
+        let c = Endpoint::submit(&*t, "alice", DOUBLE_SUM, 1).unwrap();
+        drive(&t, 7);
+        assert_eq!(Endpoint::job_report(&*t, c)[0].state, "Done");
+    }
+
+    #[test]
+    fn shutdown_sends_workers_home() {
+        let t = table(4, 8);
+        t.shutdown();
+        let batch =
+            Endpoint::request_work(&*t, &WorkRequest { capacity: 2, ..Default::default() });
+        assert!(batch.assignments.is_empty() && !batch.idle);
+        assert!(Endpoint::submit(&*t, "alice", DOUBLE_SUM, 1).is_err());
+        Endpoint::wait_done(&*t); // returns immediately after shutdown
+    }
+
+    #[test]
+    fn single_job_manager_rejects_service_calls() {
+        let wf = Arc::new(
+            workflow_from_str(DOUBLE_SUM, reg()).unwrap(),
+        );
+        let mgr = Manager::new_staged(wf, 2, AssignPolicy::default()).unwrap();
+        assert!(Endpoint::submit(&*mgr, "alice", DOUBLE_SUM, 1).is_err());
+        assert!(Endpoint::cancel_job(&*mgr, 1).is_err());
+        assert!(Endpoint::job_spec(&*mgr, 1).is_err());
+        assert!(Endpoint::job_report(&*mgr, 0).is_empty());
+    }
+
+    #[test]
+    fn job_spec_serves_the_submitted_json() {
+        let t = table(4, 8);
+        let job = Endpoint::submit(&*t, "alice", DOUBLE_SUM, 3).unwrap();
+        let (tenant, json) = Endpoint::job_spec(&*t, job).unwrap();
+        assert_eq!(tenant, "alice");
+        assert_eq!(json, DOUBLE_SUM);
+        assert!(Endpoint::job_spec(&*t, 99).is_err());
+    }
+
+    #[test]
+    fn snapshot_restore_roundtrip_resumes_progress() {
+        let t = table(4, 8);
+        t.enable_journal();
+        let job = Endpoint::submit(&*t, "alice", DOUBLE_SUM, 2).unwrap();
+        // complete two per-chunk instances, then snapshot
+        let req = WorkRequest { capacity: 2, worker: 7, ..Default::default() };
+        let batch = Endpoint::request_work(&*t, &req);
+        assert_eq!(batch.assignments.len(), 2);
+        for a in batch.assignments {
+            Endpoint::complete(&*t, a.instance_id, vec![Value::Scalar(a.chunk as f32 * 2.0)]);
+        }
+        let snap = t.snapshot();
+        assert_eq!(snap.len(), 1);
+        assert_eq!(snap[0].journal.len(), 2);
+
+        let t2 = table(4, 8);
+        t2.enable_journal();
+        assert_eq!(t2.restore(snap).unwrap(), 1);
+        let report = Endpoint::job_report(&*t2, job);
+        assert_eq!(report[0].state, "Running");
+        assert_eq!(report[0].done, 2, "replayed completions count as progress");
+        drive(&t2, 7);
+        let outs = t2.reduce_outputs(job, "total").unwrap();
+        assert_eq!(outs, vec![Value::Scalar(12.0)], "resumed run is bit-identical");
+    }
+
+    #[test]
+    fn restore_keeps_terminal_jobs_without_managers() {
+        let t = table(4, 8);
+        let job = Endpoint::submit(&*t, "bob", DOUBLE_SUM, 1).unwrap();
+        drive(&t, 7);
+        let snap = t.snapshot();
+        assert_eq!(snap[0].state, "Done");
+        let t2 = table(4, 8);
+        assert_eq!(t2.restore(snap).unwrap(), 0, "terminal jobs are not resumed");
+        let report = Endpoint::job_report(&*t2, job);
+        assert_eq!(report[0].state, "Done");
+        assert_eq!(report[0].done, 5);
+        assert_eq!(report[0].total, 5);
+    }
+
+    #[test]
+    fn deficit_round_robin_respects_weights() {
+        // two tenants, weights 1:4, both with deep backlogs on a big
+        // chunk set; a capacity-10 sweep should split ~2:8
+        let t = JobTable::new(reg(), 50, AssignPolicy::default(), 4, 8);
+        Endpoint::submit(&*t, "alice", DOUBLE_SUM, 1).unwrap();
+        Endpoint::submit(&*t, "bob", DOUBLE_SUM, 4).unwrap();
+        let req = WorkRequest { capacity: 10, worker: 7, ..Default::default() };
+        let batch = Endpoint::request_work(&*t, &req);
+        assert_eq!(batch.assignments.len(), 10);
+        let shares = t.tenant_assignments();
+        let alice = shares.iter().find(|(n, _, _)| n == "alice").unwrap().2;
+        let bob = shares.iter().find(|(n, _, _)| n == "bob").unwrap().2;
+        assert_eq!(alice + bob, 10);
+        assert_eq!(alice, 2, "weight-1 tenant gets 2 of 10");
+        assert_eq!(bob, 8, "weight-4 tenant gets 8 of 10");
+    }
+
+    #[test]
+    fn drained_tenant_forfeits_deficit_and_others_fill_capacity() {
+        // alice has a tiny job (2 instances assignable: 2 chunks), bob a
+        // bigger one; alice's queue drains mid-sweep and bob takes the rest
+        let t = JobTable::new(reg(), 6, AssignPolicy::default(), 4, 8);
+        const TINY: &str = r#"{
+            "name": "tiny",
+            "stages": [
+                { "name": "double", "kind": "per_chunk", "inputs": ["chunk"],
+                  "ops": [ { "op": "double", "inputs": [ {"input": 0} ] } ],
+                  "outputs": [ {"op": "double"} ] }
+            ]
+        }"#;
+        let _ = TINY;
+        Endpoint::submit(&*t, "alice", DOUBLE_SUM, 5).unwrap();
+        Endpoint::submit(&*t, "bob", DOUBLE_SUM, 1).unwrap();
+        // both per-chunk backlogs are 6; alice (weight 5) may take at most
+        // 6 before draining, bob fills the remaining capacity regardless
+        // of his weight-1 trickle
+        let req = WorkRequest { capacity: 12, worker: 7, ..Default::default() };
+        let batch = Endpoint::request_work(&*t, &req);
+        assert_eq!(batch.assignments.len(), 12, "capacity fills even past one tenant");
+        let mut by_job: BTreeMap<u64, usize> = BTreeMap::new();
+        for a in &batch.assignments {
+            *by_job.entry(job_of(a.instance_id)).or_insert(0) += 1;
+        }
+        assert_eq!(by_job.get(&1), Some(&6), "alice drained her backlog");
+        assert_eq!(by_job.get(&2), Some(&6), "bob filled the rest");
+    }
+
+    #[test]
+    fn render_value_matches_run_summary_format() {
+        assert_eq!(render_value(&Value::Scalar(12.0)), "12");
+        let t = crate::runtime::HostTensor::new(vec![2], vec![1.0, 2.0]).unwrap();
+        let s = render_value(&Value::Tensor(t));
+        assert!(s.starts_with("tensor[2]#"), "{s}");
+    }
+}

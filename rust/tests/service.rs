@@ -1,0 +1,452 @@
+//! Service mode: many tenants' workflows multiplexed over one shared
+//! worker pool.  Covers the multi-tenant acceptance criteria end to end:
+//! concurrent jobs with reduce outputs bit-identical to single-job runs,
+//! weighted fair share (deficit round-robin) within tolerance, per-tenant
+//! staging-cache quotas that never evict a neighbour, and cancellation
+//! that frees the tenant's admission slot without requeueing anything.
+
+use htap::config::{CacheCap, RunConfig};
+use htap::coordinator::worker::{run_worker_opts, JobResolver, WorkerOpts};
+use htap::coordinator::{AssignPolicy, Assignment, ChunkId, WorkRequest};
+use htap::coordinator::WorkerStaging;
+use htap::data::{ChunkSource, StagingCache};
+use htap::dataflow::{workflow_from_str, OpRegistry};
+use htap::metrics::MetricsHub;
+use htap::net::{fetch_job_spec, ManagerServer, RemoteManager};
+use htap::runtime::{ArtifactManifest, SharedProfiles, Value};
+use htap::service::{job_of, Endpoint, JobTable};
+use std::collections::HashMap;
+use std::sync::Arc;
+
+/// Ops for the test workflows: two distinguishable per-chunk transforms
+/// plus an order-sensitive float reduce.
+fn reg() -> Arc<OpRegistry> {
+    let mut r = OpRegistry::new();
+    r.register_cpu("double", 1, |args: &[Value]| {
+        Ok(vec![Value::Scalar(args[0].as_scalar()? * 2.0)])
+    })
+    .unwrap();
+    r.register_cpu("triple", 1, |args: &[Value]| {
+        Ok(vec![Value::Scalar(args[0].as_scalar()? * 3.0)])
+    })
+    .unwrap();
+    r.register_cpu("sum", 1, |args: &[Value]| {
+        let mut s = 0.0f32;
+        for a in args {
+            s += a.as_scalar()?;
+        }
+        Ok(vec![Value::Scalar(s)])
+    })
+    .unwrap();
+    Arc::new(r)
+}
+
+const DOUBLE_SUM: &str = r#"{
+    "name": "double-sum",
+    "stages": [
+        {
+            "name": "double", "kind": "per_chunk", "inputs": ["chunk"],
+            "ops": [ { "op": "double", "inputs": [ {"input": 0} ] } ],
+            "outputs": [ {"op": "double"} ]
+        },
+        {
+            "name": "total", "kind": "reduce",
+            "inputs": [ {"stage": "double", "output": 0} ],
+            "ops": [ { "op": "sum", "inputs": "all" } ],
+            "outputs": [ {"op": "sum"} ]
+        }
+    ]
+}"#;
+
+const TRIPLE_SUM: &str = r#"{
+    "name": "triple-sum",
+    "stages": [
+        {
+            "name": "triple", "kind": "per_chunk", "inputs": ["chunk"],
+            "ops": [ { "op": "triple", "inputs": [ {"input": 0} ] } ],
+            "outputs": [ {"op": "triple"} ]
+        },
+        {
+            "name": "total", "kind": "reduce",
+            "inputs": [ {"stage": "triple", "output": 0} ],
+            "ops": [ { "op": "sum", "inputs": "all" } ],
+            "outputs": [ {"op": "sum"} ]
+        }
+    ]
+}"#;
+
+/// Per-chunk payload: irrational-ish values so float summation order is
+/// observable — bit-identical results mean chunk-order accumulation held.
+fn payload(chunk: ChunkId) -> f32 {
+    (chunk as f32 + 0.25).sqrt()
+}
+
+/// What the reduce must produce: per-chunk outputs summed in chunk order.
+fn expected_total(n: usize, factor: f32) -> f32 {
+    let mut s = 0.0f32;
+    for c in 0..n {
+        s += payload(c as ChunkId) * factor;
+    }
+    s
+}
+
+fn bits(vals: &[Value]) -> Vec<u32> {
+    vals.iter().map(|v| v.as_scalar().unwrap().to_bits()).collect()
+}
+
+/// Complete one assignment the way a worker would: per-chunk stages map
+/// `payload(chunk) * factor`, the reduce folds its shipped inputs in
+/// order.
+fn complete_scalar(table: &JobTable, a: &Assignment, factors: &[(u64, f32)]) {
+    let job = job_of(a.instance_id);
+    let factor = factors
+        .iter()
+        .find(|(j, _)| *j == job)
+        .map(|(_, f)| *f)
+        .unwrap_or_else(|| panic!("assignment for unexpected job {job}"));
+    let out = if a.needs_chunk {
+        Value::Scalar(payload(a.chunk) * factor)
+    } else {
+        let mut s = 0.0f32;
+        for v in &a.inputs {
+            s += v.as_scalar().unwrap();
+        }
+        Value::Scalar(s)
+    };
+    Endpoint::complete(table, a.instance_id, vec![out]);
+}
+
+fn open_jobs(table: &JobTable) -> usize {
+    Endpoint::job_report(table, 0)
+        .iter()
+        .filter(|s| !matches!(s.state.as_str(), "Done" | "Failed" | "Cancelled"))
+        .count()
+}
+
+/// Drive the table as one synthetic worker until every job is terminal.
+fn drive_all(
+    table: &JobTable,
+    worker: u64,
+    capacity: usize,
+    factors: &[(u64, f32)],
+    mut seen: impl FnMut(&Assignment),
+) {
+    loop {
+        let req = WorkRequest { capacity, worker, ..Default::default() };
+        let batch = Endpoint::request_work(table, &req);
+        if batch.assignments.is_empty() {
+            if !batch.idle {
+                return; // shut down (table stopped)
+            }
+            if open_jobs(table) == 0 {
+                return;
+            }
+            std::thread::yield_now();
+            continue;
+        }
+        for a in batch.assignments {
+            seen(&a);
+            complete_scalar(table, &a, factors);
+        }
+    }
+}
+
+#[test]
+fn two_tenants_run_concurrently_with_solo_identical_outputs() {
+    const N: usize = 8;
+    // solo baselines: each workflow as the only job in its own table
+    let solo_double = {
+        let t = JobTable::new(reg(), N, AssignPolicy::default(), 4, 8);
+        let j = Endpoint::submit(&*t, "alice", DOUBLE_SUM, 1).unwrap();
+        drive_all(&t, 1, 3, &[(j, 2.0)], |_| {});
+        t.reduce_outputs(j, "total").unwrap()
+    };
+    let solo_triple = {
+        let t = JobTable::new(reg(), N, AssignPolicy::default(), 4, 8);
+        let j = Endpoint::submit(&*t, "bob", TRIPLE_SUM, 1).unwrap();
+        drive_all(&t, 1, 3, &[(j, 3.0)], |_| {});
+        t.reduce_outputs(j, "total").unwrap()
+    };
+
+    let t = JobTable::new(reg(), N, AssignPolicy::default(), 4, 8);
+    let j1 = Endpoint::submit(&*t, "alice", DOUBLE_SUM, 1).unwrap();
+    let j2 = Endpoint::submit(&*t, "bob", TRIPLE_SUM, 1).unwrap();
+    let mut order = Vec::new();
+    drive_all(&t, 1, 3, &[(j1, 2.0), (j2, 3.0)], |a| order.push(job_of(a.instance_id)));
+
+    for s in Endpoint::job_report(&*t, 0) {
+        assert_eq!(s.state, "Done", "job {} ended {}", s.job, s.state);
+    }
+    // DRR no-starvation: with equal weights both tenants get assignments
+    // from the very first requests — neither queues behind the other
+    let head: Vec<u64> = order.iter().take(4).copied().collect();
+    assert!(
+        head.contains(&j1) && head.contains(&j2),
+        "first assignments served one tenant only: {order:?}"
+    );
+    // reduce outputs are bit-identical to the single-job runs
+    let svc_double = t.reduce_outputs(j1, "total").unwrap();
+    let svc_triple = t.reduce_outputs(j2, "total").unwrap();
+    assert_eq!(bits(&svc_double), bits(&solo_double));
+    assert_eq!(bits(&svc_triple), bits(&solo_triple));
+    assert_eq!(bits(&svc_double), vec![expected_total(N, 2.0).to_bits()]);
+    assert_eq!(bits(&svc_triple), vec![expected_total(N, 3.0).to_bits()]);
+}
+
+#[test]
+fn fair_share_respects_weights_within_20_percent() {
+    const N: usize = 64;
+    let t = JobTable::new(reg(), N, AssignPolicy::default(), 4, 8);
+    let j_alice = Endpoint::submit(&*t, "alice", DOUBLE_SUM, 1).unwrap();
+    let j_bob = Endpoint::submit(&*t, "bob", TRIPLE_SUM, 4).unwrap();
+
+    // tally per-chunk grants, but only across requests issued while BOTH
+    // tenants still had per-chunk backlog — the DRR ratio is only defined
+    // while there is contention
+    let mut granted: HashMap<u64, u64> = HashMap::new();
+    let (mut tally_alice, mut tally_bob) = (0u64, 0u64);
+    loop {
+        let backlog = |job: u64| granted.get(&job).copied().unwrap_or(0) < N as u64;
+        let tallying = backlog(j_alice) && backlog(j_bob);
+        let req = WorkRequest { capacity: 10, worker: 1, ..Default::default() };
+        let batch = Endpoint::request_work(&*t, &req);
+        if batch.assignments.is_empty() {
+            if !batch.idle || open_jobs(&t) == 0 {
+                break;
+            }
+            std::thread::yield_now();
+            continue;
+        }
+        for a in batch.assignments {
+            let job = job_of(a.instance_id);
+            if a.needs_chunk {
+                *granted.entry(job).or_insert(0) += 1;
+                if tallying {
+                    if job == j_alice {
+                        tally_alice += 1;
+                    } else {
+                        tally_bob += 1;
+                    }
+                }
+            }
+            complete_scalar(&t, &a, &[(j_alice, 2.0), (j_bob, 3.0)]);
+        }
+    }
+
+    for s in Endpoint::job_report(&*t, 0) {
+        assert_eq!(s.state, "Done", "job {} ended {}", s.job, s.state);
+    }
+    // weights 1:4 -> the contended-window assignment ratio within 20%
+    assert!(tally_alice > 0, "alice starved during contention");
+    let ratio = tally_bob as f64 / tally_alice as f64;
+    assert!(
+        (ratio - 4.0).abs() <= 0.8,
+        "fair-share ratio {ratio:.2} (bob {tally_bob} : alice {tally_alice}) \
+         outside 4.0 +/- 20%"
+    );
+    // the table's own fair-share accounting agrees on weights and totals
+    let shares: HashMap<String, (u32, u64)> = t
+        .tenant_assignments()
+        .into_iter()
+        .map(|(name, w, n)| (name, (w, n)))
+        .collect();
+    assert_eq!(shares["alice"].0, 1);
+    assert_eq!(shares["bob"].0, 4);
+    // every instance (N per-chunk + 1 reduce) was eventually assigned
+    assert_eq!(shares["alice"].1, N as u64 + 1);
+    assert_eq!(shares["bob"].1, N as u64 + 1);
+}
+
+#[test]
+fn tenant_quota_evicts_only_the_over_quota_tenant() {
+    struct TensorSource {
+        n: usize,
+    }
+    impl ChunkSource for TensorSource {
+        fn n_chunks(&self) -> usize {
+            self.n
+        }
+        fn load(&self, chunk: ChunkId) -> htap::Result<Vec<Value>> {
+            Ok(vec![Value::tensor(vec![256], vec![chunk as f32; 256])?])
+        }
+        fn describe(&self) -> String {
+            format!("test tensor source ({} chunks)", self.n)
+        }
+    }
+
+    // global cap far above everything: only the tenant quota can evict
+    let cache = StagingCache::new(Arc::new(TensorSource { n: 32 }), CacheCap::Chunks(64), 0);
+    cache.get_for("alice", 0).unwrap();
+    let per_chunk = cache.tenant_bytes("alice");
+    assert!(per_chunk > 0, "tenant attribution recorded no bytes");
+    cache.set_tenant_quota(Some(CacheCap::Bytes(2 * per_chunk)));
+
+    // bob stages a two-chunk working set: exactly at quota, never over
+    cache.get_for("bob", 10).unwrap();
+    cache.get_for("bob", 11).unwrap();
+    let bob_bytes = cache.tenant_bytes("bob");
+    assert_eq!(bob_bytes, 2 * per_chunk);
+
+    // alice floods: only her own oldest chunks are evicted
+    for c in 1..8 {
+        cache.get_for("alice", c).unwrap();
+    }
+    assert!(
+        cache.tenant_bytes("alice") <= 2 * per_chunk,
+        "alice over quota: {} > {}",
+        cache.tenant_bytes("alice"),
+        2 * per_chunk
+    );
+    assert_eq!(
+        cache.tenant_bytes("bob"),
+        bob_bytes,
+        "alice's flood evicted bob's working set"
+    );
+
+    // evicted chunks reload correctly (and re-billing stays fenced)
+    let v = cache.get_for("alice", 3).unwrap();
+    assert_eq!(v[0].as_tensor().unwrap().data()[0], 3.0);
+    assert!(cache.tenant_bytes("alice") <= 2 * per_chunk);
+    assert_eq!(cache.tenant_bytes("bob"), bob_bytes);
+    cache.shutdown();
+}
+
+#[test]
+fn cancel_mid_run_stops_assignments_and_frees_the_queue_slot() {
+    const N: usize = 8;
+    // queue depth 1: one non-terminal job per tenant at a time
+    let t = JobTable::new(reg(), N, AssignPolicy::default(), 4, 1);
+    let j1 = Endpoint::submit(&*t, "alice", DOUBLE_SUM, 1).unwrap();
+
+    // partially run job 1, holding one assignment in flight
+    let req = WorkRequest { capacity: 2, worker: 1, ..Default::default() };
+    let batch = Endpoint::request_work(&*t, &req);
+    assert_eq!(batch.assignments.len(), 2);
+    complete_scalar(&t, &batch.assignments[0], &[(j1, 2.0)]);
+    let held = &batch.assignments[1];
+
+    // the admission slot is taken ...
+    let err = Endpoint::submit(&*t, "alice", TRIPLE_SUM, 1).unwrap_err();
+    assert!(err.to_string().contains("already has"), "unexpected error: {err}");
+
+    // ... until cancel frees it
+    Endpoint::cancel_job(&*t, j1).unwrap();
+    assert_eq!(Endpoint::job_report(&*t, j1)[0].state, "Cancelled");
+    let j2 = Endpoint::submit(&*t, "alice", TRIPLE_SUM, 1).unwrap();
+
+    // the in-flight completion from the cancelled job is dropped, not
+    // requeued, and cannot resurrect the job
+    Endpoint::complete(&*t, held.instance_id, vec![Value::Scalar(0.0)]);
+    assert_eq!(Endpoint::job_report(&*t, j1)[0].state, "Cancelled");
+
+    // the replacement job runs to completion; the cancelled job never
+    // hands out another assignment
+    drive_all(&t, 1, 3, &[(j2, 3.0)], |a| {
+        assert_eq!(job_of(a.instance_id), j2, "cancelled job handed out work");
+    });
+    assert_eq!(Endpoint::job_report(&*t, j2)[0].state, "Done");
+    assert_eq!(
+        bits(&t.reduce_outputs(j2, "total").unwrap()),
+        vec![expected_total(N, 3.0).to_bits()]
+    );
+
+    // double-cancel and unknown ids are clean errors
+    assert!(Endpoint::cancel_job(&*t, j1).is_err());
+    assert!(Endpoint::cancel_job(&*t, 99).is_err());
+}
+
+#[test]
+fn service_jobs_run_over_tcp_through_real_workers() {
+    const N: usize = 6;
+    struct ScalarSource {
+        n: usize,
+    }
+    impl ChunkSource for ScalarSource {
+        fn n_chunks(&self) -> usize {
+            self.n
+        }
+        fn load(&self, chunk: ChunkId) -> htap::Result<Vec<Value>> {
+            Ok(vec![Value::Scalar(payload(chunk))])
+        }
+        fn describe(&self) -> String {
+            format!("scalar source ({} chunks)", self.n)
+        }
+    }
+
+    let table = JobTable::new(reg(), N, AssignPolicy::default(), 4, 8);
+    let server = ManagerServer::bind("127.0.0.1:0", table.clone()).unwrap();
+    let addr = server.local_addr();
+    let srv = std::thread::spawn(move || server.serve());
+
+    let j1 = Endpoint::submit(&*table, "alice", DOUBLE_SUM, 1).unwrap();
+    let j2 = Endpoint::submit(&*table, "bob", TRIPLE_SUM, 2).unwrap();
+
+    // two real workers: full WRM stack, job resolver fetching specs over
+    // the wire, staged chunk payloads billed to the submitting tenant
+    let mut workers = Vec::new();
+    for i in 0..2u64 {
+        let addr = addr.clone();
+        workers.push(std::thread::spawn(move || {
+            let source = Arc::new(RemoteManager::connect(&addr).unwrap());
+            let registry = reg();
+            let resolver: JobResolver = {
+                let addr = addr.clone();
+                Arc::new(move |job| {
+                    let (tenant, json) = fetch_job_spec(&addr, job)?;
+                    let wf = Arc::new(workflow_from_str(&json, registry.clone())?);
+                    Ok((tenant, wf))
+                })
+            };
+            let staging = WorkerStaging {
+                cache: StagingCache::new(Arc::new(ScalarSource { n: N }), 8, 0),
+                worker_id: i + 1,
+                prefetch_budget: 0,
+            };
+            let cfg = RunConfig {
+                n_tiles: N,
+                cpu_workers: 1,
+                gpu_workers: 0,
+                window: 2,
+                ..Default::default()
+            };
+            // the default workflow only serves job 0 (legacy single-job
+            // mode); every service assignment resolves through the resolver
+            let fallback = Arc::new(workflow_from_str(DOUBLE_SUM, reg()).unwrap());
+            run_worker_opts(
+                source,
+                fallback,
+                cfg,
+                Arc::new(ArtifactManifest::discover_or_empty()),
+                Arc::new(MetricsHub::new()),
+                HashMap::new(),
+                SharedProfiles::fresh(),
+                Some(staging),
+                WorkerOpts { resolver: Some(resolver), drain: None },
+            )
+            .unwrap();
+        }));
+    }
+
+    table.wait_job(j1);
+    table.wait_job(j2);
+    for s in Endpoint::job_report(&*table, 0) {
+        assert_eq!(s.state, "Done", "job {} ended {}", s.job, s.state);
+    }
+    // outputs match the chunk-order accumulation regardless of which
+    // worker ran which instance in which order
+    assert_eq!(
+        bits(&table.reduce_outputs(j1, "total").unwrap()),
+        vec![expected_total(N, 2.0).to_bits()]
+    );
+    assert_eq!(
+        bits(&table.reduce_outputs(j2, "total").unwrap()),
+        vec![expected_total(N, 3.0).to_bits()]
+    );
+
+    // shutdown: workers see a non-idle empty batch and exit cleanly
+    table.shutdown();
+    for w in workers {
+        w.join().unwrap();
+    }
+    srv.join().unwrap().unwrap();
+}

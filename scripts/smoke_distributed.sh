@@ -159,3 +159,166 @@ cmp -s "$log/reduce-base.txt" "$log/reduce-kill.txt" || {
     exit 1
 }
 echo "kill-and-rejoin smoke OK (reduce outputs bit-identical)"
+
+# --- multi-tenant service phase --------------------------------------------
+# One `htap serve` daemon, two job-agnostic workers, two tenants submitting
+# different workflows with different fair-share weights.  Each job's reduce
+# lines (prefixed `job N [tenant] `) must be bit-identical to a single-job
+# manager run of the same workflow, and the workers must drain gracefully
+# (finish leases, demote to spill, Goodbye, exit 0) on their --drain-on file.
+echo "=== multi-tenant service phase (port $((port + 200))) ===" >&2
+svc_tiles=8
+svc_common=(--tiles "$svc_tiles" --tile-size "$tile_size")
+
+# bob's workflow: an edge-density variant over the same generic op set
+edge_wf="$log/edge_stats.json"
+cat >"$edge_wf" <<'EOF'
+{
+    "name": "edge-stats",
+    "stages": [
+        {
+            "name": "edges",
+            "kind": "per_chunk",
+            "inputs": ["chunk"],
+            "ops": [
+                { "op": "grayscale",    "inputs": [ {"input": 0} ] },
+                { "op": "sobel",        "inputs": [ {"op": "grayscale"} ] },
+                { "op": "binarize",     "inputs": [ {"op": "sobel"}, {"param": 96.0} ] },
+                { "op": "cc_label",     "inputs": [ {"op": "binarize"} ] },
+                { "op": "region_stats", "inputs": [ {"op": "cc_label"} ] }
+            ],
+            "outputs": [ {"op": "region_stats"} ]
+        },
+        {
+            "name": "aggregate",
+            "kind": "reduce",
+            "inputs": [ {"stage": "edges", "output": 0} ],
+            "ops": [ { "op": "mean_stats", "inputs": "all" } ],
+            "outputs": [ {"op": "mean_stats"} ]
+        }
+    ]
+}
+EOF
+
+# single-job baselines: one manager + one worker per workflow
+cell_port=$((port + 203))
+"$bin" manager --listen "127.0.0.1:$cell_port" --workflow examples/cell_stats.json \
+    "${svc_common[@]}" --workers 1 >"$log/mgr-cell.txt" 2>&1 &
+cell_mgr=$!
+sleep 1
+"$bin" worker --connect "127.0.0.1:$cell_port" --worker-id 1 \
+    --workflow examples/cell_stats.json "${svc_common[@]}" --cpus 1 --gpus 0 \
+    --window 2 --chunk-source synth >"$log/worker-cell.txt" 2>&1
+wait "$cell_mgr"
+grep "^reduce '" "$log/mgr-cell.txt" >"$log/reduce-cell-base.txt"
+[[ -s "$log/reduce-cell-base.txt" ]] || {
+    echo "cell-stats baseline produced no reduce outputs" >&2
+    exit 1
+}
+
+edge_port=$((port + 204))
+"$bin" manager --listen "127.0.0.1:$edge_port" --workflow "$edge_wf" \
+    "${svc_common[@]}" --workers 1 >"$log/mgr-edge.txt" 2>&1 &
+edge_mgr=$!
+sleep 1
+"$bin" worker --connect "127.0.0.1:$edge_port" --worker-id 1 \
+    --workflow "$edge_wf" "${svc_common[@]}" --cpus 1 --gpus 0 \
+    --window 2 --chunk-source synth >"$log/worker-edge.txt" 2>&1
+wait "$edge_mgr"
+grep "^reduce '" "$log/mgr-edge.txt" >"$log/reduce-edge-base.txt"
+[[ -s "$log/reduce-edge-base.txt" ]] || {
+    echo "edge-stats baseline produced no reduce outputs" >&2
+    exit 1
+}
+
+# the service: job table + checkpointing; workers are job-agnostic (no
+# --workflow — they fetch each job's spec over the wire) and drain on file
+svc_port=$((port + 200))
+"$bin" serve --listen "127.0.0.1:$svc_port" "${svc_common[@]}" --max-jobs 4 \
+    --tenant-queue-depth 4 --checkpoint-dir "$log/svc-ckpt" \
+    >"$log/serve.txt" 2>&1 &
+serve_pid=$!
+sleep 1
+
+svc_workers=()
+for w in 1 2; do
+    rm -f "$log/drain-$w"
+    "$bin" worker --connect "127.0.0.1:$svc_port" --worker-id "$w" \
+        "${svc_common[@]}" --cpus 1 --gpus 0 --window 2 --chunk-source synth \
+        --tenant-quota 16 --drain-on "file:$log/drain-$w" \
+        >"$log/worker-s$w.txt" 2>&1 &
+    svc_workers+=($!)
+done
+
+"$bin" submit --connect "127.0.0.1:$svc_port" --workflow examples/cell_stats.json \
+    --tenant alice --priority 1 >"$log/submit1.txt"
+"$bin" submit --connect "127.0.0.1:$svc_port" --workflow "$edge_wf" \
+    --tenant bob --priority 4 >"$log/submit2.txt"
+grep -q "^job 1 \[alice\]" "$log/submit1.txt" || {
+    echo "unexpected submit reply:" >&2
+    cat "$log/submit1.txt" >&2
+    exit 1
+}
+grep -q "^job 2 \[bob\]" "$log/submit2.txt" || {
+    echo "unexpected submit reply:" >&2
+    cat "$log/submit2.txt" >&2
+    exit 1
+}
+
+# poll `htap jobs` until both rows are Done (state is column 3)
+for _ in $(seq 1 120); do
+    "$bin" jobs --connect "127.0.0.1:$svc_port" >"$log/jobs.txt" 2>&1 || true
+    [[ "$(awk '$3 == "Done"' "$log/jobs.txt" | wc -l)" == "2" ]] && break
+    sleep 0.5
+done
+[[ "$(awk '$3 == "Done"' "$log/jobs.txt" | wc -l)" == "2" ]] || {
+    echo "service jobs did not complete:" >&2
+    cat "$log/jobs.txt" >&2
+    cat "$log/serve.txt" >&2
+    exit 1
+}
+
+# graceful drain: touch the trigger files; both workers must exit 0
+touch "$log/drain-1" "$log/drain-2"
+svc_rc=0
+for pid in "${svc_workers[@]}"; do
+    wait "$pid" || svc_rc=$?
+done
+if [[ $svc_rc -ne 0 ]]; then
+    echo "a draining worker exited nonzero (rc=$svc_rc)" >&2
+    cat "$log/worker-s1.txt" "$log/worker-s2.txt" >&2
+    exit 1
+fi
+grep -q "drained; demoted" "$log/worker-s1.txt" "$log/worker-s2.txt" || {
+    echo "no worker demoted its memory tier on drain" >&2
+    exit 1
+}
+
+# cancel path: a third job on the now-workerless service cancels cleanly
+"$bin" submit --connect "127.0.0.1:$svc_port" --workflow "$edge_wf" \
+    --tenant alice --priority 1 >"$log/submit3.txt"
+"$bin" cancel --connect "127.0.0.1:$svc_port" --job 3 | grep -q "Cancelled" || {
+    echo "cancel did not report Cancelled" >&2
+    exit 1
+}
+
+# per-tenant reduce lines, stripped of their `job N [tenant] ` prefix, are
+# bit-identical to the single-job baselines
+sed -nE 's/^job 1 \[alice\] //p' "$log/serve.txt" | grep "^reduce '" \
+    >"$log/reduce-cell-svc.txt" || true
+sed -nE 's/^job 2 \[bob\] //p' "$log/serve.txt" | grep "^reduce '" \
+    >"$log/reduce-edge-svc.txt" || true
+cmp -s "$log/reduce-cell-base.txt" "$log/reduce-cell-svc.txt" || {
+    echo "alice's service reduce outputs diverged from the single-job run:" >&2
+    diff "$log/reduce-cell-base.txt" "$log/reduce-cell-svc.txt" >&2 || true
+    exit 1
+}
+cmp -s "$log/reduce-edge-base.txt" "$log/reduce-edge-svc.txt" || {
+    echo "bob's service reduce outputs diverged from the single-job run:" >&2
+    diff "$log/reduce-edge-base.txt" "$log/reduce-edge-svc.txt" >&2 || true
+    exit 1
+}
+
+kill "$serve_pid" 2>/dev/null || true
+wait "$serve_pid" 2>/dev/null || true
+echo "multi-tenant service smoke OK (2 tenants, reduce outputs bit-identical, graceful drain)"
