@@ -152,6 +152,9 @@ impl Cli {
         if let Some(v) = self.get("tenant-quota") {
             cfg.tenant_quota = Some(crate::config::CacheCap::parse(v)?);
         }
+        if let Some(v) = self.get("trace-out") {
+            cfg.trace_out = Some(v.to_string());
+        }
         cfg.validate()?;
         Ok(cfg)
     }
@@ -167,6 +170,7 @@ USAGE:
                  [--save-profiles out.json] [--chunk-source synth|dir:PATH]
                  [--staging-cap N|NMB] [--prefetch-depth N] [--no-locality]
                  [--spill-dir PATH] [--spill-cap N|NMB] [--read-latency-ms MS]
+                 [--trace-out PATH]
         run a workflow locally (default: the built-in WSI app; --workflow
         loads a declarative JSON workflow over the registered op set — see
         docs/workflow_api.md).  Chunks come from --chunk-source (synthetic
@@ -179,11 +183,15 @@ USAGE:
         caps take a chunk count (N) or a byte budget (NMB, from tensor
         dims).  --profiles seeds PATS with measured
         estimates from `htap calibrate`; --save-profiles writes the
-        post-run EWMA estimates out
+        post-run EWMA estimates out.  --trace-out records structured
+        execution events (op spans, queue waits, staging activity) and
+        writes a Chrome trace_event JSON (open in Perfetto) plus a .jsonl
+        sidecar — see docs/observability.md
 
     htap sim     [--nodes N] [--tiles N] [--policy fcfs|pats]
                  [--profiles profiles.json] [--no-locality] [--no-replication]
                  [--kill-worker-at F] [--jobs N] [--job-weights W1,W2,...]
+                 [--trace-out PATH]
         discrete-event simulation at cluster scale (Keeneland model);
         --profiles calibrates the cost model from measured estimates
         (including the chunk-read cost a calibrate --read-latency-ms run
@@ -196,7 +204,9 @@ USAGE:
         re-executed on the survivors (the fault-injection mirror of the
         distributed lease-expiry path); --jobs N models N identical jobs
         sharing the cluster under weighted fair-share (--job-weights,
-        default all 1) and prints each job's analytic makespan
+        default all 1) and prints each job's analytic makespan;
+        --trace-out writes the simulated schedule in the same Chrome
+        trace_event schema real runs emit (virtual-time op spans per node)
 
     htap calibrate [--quick] [--tile-size S] [--tiles N] [--reps N]
                    [--seed N] [--read-latency-ms MS] [--out profiles.json]
@@ -209,6 +219,7 @@ USAGE:
                  [--chunk-source synth|dir:PATH] [--workflow wf.json]
                  [--no-locality] [--no-replication] [--partition demand|init]
                  [--lease-ms MS] [--checkpoint-dir PATH] [--resume]
+                 [--trace-out PATH]
         serve stage instances to TCP workers.  Staged protocol: workers
         read chunk payloads from their own --chunk-source (tiles never
         cross the wire) and assignment is locality-aware via the chunk
@@ -222,13 +233,17 @@ USAGE:
         survivors and its catalog entries purge.  --checkpoint-dir
         periodically snapshots manager progress (completion journal +
         chunk catalog); --resume restarts from that snapshot instead of
-        from scratch after a manager crash
+        from scratch after a manager crash.  --trace-out merges the trace
+        batches workers ship at heartbeat cadence with the manager's own
+        membership events and writes the cluster-wide stream when the run
+        completes
 
     htap serve   --listen HOST:PORT [--tiles N] [--tile-size S]
                  [--chunk-source synth|dir:PATH] [--max-jobs N]
                  [--tenant-queue-depth N] [--tenant-quota N|NMB]
                  [--no-locality] [--no-replication] [--lease-ms MS]
                  [--checkpoint-dir PATH] [--resume] [--run-for MS]
+                 [--trace-out PATH]
         multi-tenant workflow service: a long-running manager that accepts
         wire submissions (`htap submit`) and runs many workflows
         concurrently over one shared elastic worker pool.  Tenants get
@@ -239,7 +254,16 @@ USAGE:
         fences each tenant's share of every worker's staging cache.
         --checkpoint-dir snapshots the whole job table; --resume restores
         queued and in-flight jobs after a crash.  --run-for exits after MS
-        milliseconds (tests); default runs until killed
+        milliseconds (tests); default runs until killed.  --trace-out
+        writes the merged cluster-wide trace (every worker's shipped
+        batches + membership events) when the service exits
+
+    htap top     --connect HOST:PORT [--interval-ms MS] [--iterations N]
+        live per-tenant / per-worker utilization of a running `htap serve`
+        (or `htap manager`) daemon: ops completed and busy-µs from the
+        manager's merged trace rollups, polled every --interval-ms
+        (default 1000).  --iterations N stops after N polls (default 0 =
+        until interrupted); --iterations 1 prints one table and exits
 
     htap submit  --connect HOST:PORT --workflow wf.json [--tenant NAME]
                  [--priority N]
@@ -262,6 +286,7 @@ USAGE:
                  [--spill-dir PATH] [--spill-cap N|NMB] [--read-latency-ms MS]
                  [--heartbeat-ms MS] [--lease-ms MS] [--warm-restart]
                  [--tenant-quota N|NMB] [--drain-on file:PATH|signal[:term|int]]
+                 [--trace-out PATH]
         join a distributed run; --chunk-source must serve the same dataset
         the manager was pointed at (same synth seed/tile count, or the
         same shared directory), and --workflow must load the same file the
@@ -275,7 +300,12 @@ USAGE:
         --tenant-quota.  --drain-on arms graceful drain: when the trigger
         fires (the file appears, or SIGTERM/SIGINT arrives) the worker
         finishes its in-flight instances, demotes its memory tier to the
-        spill tier, sends Goodbye, and exits 0
+        spill tier, sends Goodbye, and exits 0.  --trace-out arms
+        structured tracing: op spans and staging events ship to the
+        manager at heartbeat cadence (the manager's own --trace-out writes
+        the merged cluster stream; `htap top` reads the live rollups);
+        PATH only receives events a lost manager connection stranded
+        locally
 
     htap export-tiles --dir PATH [--tiles N] [--tile-size S] [--seed N]
         write the synthetic dataset as .tile files for dir: chunk sources
@@ -482,6 +512,33 @@ mod tests {
         assert_eq!(c.get("job"), Some("7"));
         let c = Cli::parse(&args(&["worker", "--drain-on", "file:/tmp/drain"])).unwrap();
         assert_eq!(c.get("drain-on"), Some("file:/tmp/drain"));
+    }
+
+    #[test]
+    fn observability_flags_parse() {
+        let c = Cli::parse(&args(&["run", "--trace-out", "/tmp/trace.json"])).unwrap();
+        let cfg = c.run_config().unwrap();
+        assert_eq!(cfg.trace_out.as_deref(), Some("/tmp/trace.json"));
+        // default: tracing off
+        let cfg = Cli::parse(&args(&["run"])).unwrap().run_config().unwrap();
+        assert!(cfg.trace_out.is_none());
+        // a forgotten path stays a hard error
+        assert!(Cli::parse(&args(&["run", "--trace-out"])).is_err());
+        // htap top flags (consumed by main, not RunConfig)
+        let c = Cli::parse(&args(&[
+            "top",
+            "--connect",
+            "h:1",
+            "--interval-ms",
+            "250",
+            "--iterations",
+            "3",
+        ]))
+        .unwrap();
+        assert_eq!(c.command, "top");
+        assert_eq!(c.get("connect"), Some("h:1"));
+        assert_eq!(c.get_usize("interval-ms", 1000).unwrap(), 250);
+        assert_eq!(c.get_usize("iterations", 0).unwrap(), 3);
     }
 
     #[test]

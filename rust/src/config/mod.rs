@@ -235,6 +235,10 @@ pub struct RunConfig {
     /// Service mode: per-tenant staging-cache budget layered on
     /// `staging_cap` (None = tenants share the global budget unfenced).
     pub tenant_quota: Option<CacheCap>,
+    /// Observability: write a Chrome `trace_event` JSON (plus a `.jsonl`
+    /// event log) of the run to this path (None = tracing disabled; the
+    /// record path is then a single atomic load).
+    pub trace_out: Option<String>,
     /// RNG seed for synthetic data.
     pub seed: u64,
 }
@@ -265,6 +269,7 @@ impl Default for RunConfig {
             max_jobs: 4,
             tenant_queue_depth: 8,
             tenant_quota: None,
+            trace_out: None,
             seed: 42,
         }
     }
@@ -323,6 +328,7 @@ impl RunConfig {
                 "max_jobs" => self.max_jobs = req_usize(v, k)?,
                 "tenant_queue_depth" => self.tenant_queue_depth = req_usize(v, k)?,
                 "tenant_quota" => self.tenant_quota = Some(req_cap(v, k)?),
+                "trace_out" => self.trace_out = Some(req_str(v, k)?.to_string()),
                 other => return Err(Error::Config(format!("unknown config key '{other}'"))),
             }
         }
@@ -555,6 +561,16 @@ mod tests {
         c.tenant_queue_depth = 1;
         c.tenant_quota = Some(CacheCap::Chunks(0));
         assert!(c.validate().is_err());
+    }
+
+    #[test]
+    fn trace_out_parses() {
+        let mut c = RunConfig::default();
+        assert_eq!(c.trace_out, None);
+        c.apply_json(&Json::parse(r#"{"trace_out": "/tmp/trace.json"}"#).unwrap()).unwrap();
+        assert_eq!(c.trace_out.as_deref(), Some("/tmp/trace.json"));
+        c.validate().unwrap();
+        assert!(c.apply_json(&Json::parse(r#"{"trace_out": 3}"#).unwrap()).is_err());
     }
 
     #[test]

@@ -15,6 +15,7 @@
 
 use crate::data::staging::{ChunkCatalog, Tier, WorkerId, ANON_WORKER};
 use crate::dataflow::{StageInput, StageKind, Workflow};
+use crate::obs::{self, EventKind, TraceEvent, UtilRow};
 use crate::runtime::Value;
 use crate::{Error, Result};
 use crate::runtime::sync::{self, Condvar, Mutex};
@@ -170,6 +171,12 @@ pub trait WorkSource: Send + Sync {
 
     /// Clean departure: the worker drained its in-flight work and leaves.
     fn goodbye(&self, _worker: WorkerId) {}
+
+    /// Ship a drained batch of trace events to the manager side (proto v6
+    /// `TraceBatch`).  Default no-op so legacy sources and untraced runs
+    /// cost nothing; the TCP client forwards the batch on the completion
+    /// channel, the in-process Manager merges it into its collector.
+    fn trace_events(&self, _worker: WorkerId, _events: Vec<TraceEvent>) {}
 }
 
 /// One replayable completion: which `(stage, chunk)` instance finished and
@@ -252,6 +259,9 @@ pub struct Manager {
     home: HashMap<ChunkId, WorkerId>,
     /// record a [`CompletionRecord`] per completion for checkpointing
     journal_enabled: AtomicBool,
+    /// Merge point for trace batches shipped by workers (proto v6) plus
+    /// the manager's own membership events.
+    collector: Arc<obs::Collector>,
     state: Mutex<MgrState>,
     cv: Condvar,
 }
@@ -339,6 +349,7 @@ impl Manager {
             replication: policy.replication,
             home,
             journal_enabled: AtomicBool::new(false),
+            collector: Arc::new(obs::Collector::new()),
             state: Mutex::new(MgrState {
                 pending: VecDeque::new(),
                 next_id: 0,
@@ -583,6 +594,7 @@ impl Manager {
         if worker == ANON_WORKER {
             return;
         }
+        self.membership_event(EventKind::WorkerJoin, worker);
         // lint: critical-section — admit a worker to the membership table
         let mut st = sync::lock_clean(&self.state);
         st.purged.remove(&worker);
@@ -610,6 +622,7 @@ impl Manager {
         if worker == ANON_WORKER {
             return 0;
         }
+        self.membership_event(EventKind::WorkerLeave, worker);
         // lint: critical-section — fold a departed worker out of all state
         let mut st = sync::lock_clean(&self.state);
         st.members.remove(&worker);
@@ -652,12 +665,51 @@ impl Manager {
                 .map(|(&w, _)| w)
                 .collect()
         };
-        expired.into_iter().map(|w| (w, self.expire_worker(w))).collect()
+        expired
+            .into_iter()
+            .map(|w| {
+                // a missed lease gets its own event; expire_worker adds the
+                // generic WorkerLeave, so a crash reads Expire + Leave while
+                // a clean Goodbye reads Leave alone
+                self.membership_event(EventKind::WorkerExpire, w);
+                (w, self.expire_worker(w))
+            })
+            .collect()
     }
 
     /// Registered (lease-tracked) workers — diagnostics/test hook.
     pub fn member_count(&self) -> usize {
         sync::lock_clean(&self.state).members.len()
+    }
+
+    /// Record a membership transition into the collector, stamped with
+    /// wall-clock µs so it merges cleanly with worker-shipped spans.
+    /// Membership changes are rare, so these are collected unconditionally
+    /// (no tracer required on the manager side).
+    fn membership_event(&self, kind: EventKind, worker: WorkerId) {
+        let ts_us = std::time::SystemTime::now()
+            .duration_since(std::time::UNIX_EPOCH)
+            .map(|d| d.as_micros() as u64)
+            .unwrap_or(0);
+        self.collector.ingest_local(vec![TraceEvent { ts_us, worker, ..TraceEvent::of(kind) }]);
+    }
+
+    /// Merge a worker's drained trace batch (proto v6 `TraceBatch`).
+    pub fn ingest_trace(&self, worker: WorkerId, events: Vec<TraceEvent>) {
+        self.collector.ingest(worker, events);
+    }
+
+    /// The manager-side merge point for cluster-wide traces: every
+    /// worker-shipped batch plus local membership events, one ordered
+    /// stream for export.
+    pub fn collector(&self) -> &Arc<obs::Collector> {
+        &self.collector
+    }
+
+    /// Live per-(worker, job) utilization rows (proto v6 `StatsQuery`).
+    /// Single-job managers leave tenant attribution empty.
+    pub fn utilization(&self) -> Vec<UtilRow> {
+        self.collector.util_rows()
     }
 
     /// Block until the workflow completes or a worker reports a fatal
@@ -793,6 +845,10 @@ impl WorkSource for Manager {
 
     fn goodbye(&self, worker: WorkerId) {
         self.expire_worker(worker);
+    }
+
+    fn trace_events(&self, worker: WorkerId, events: Vec<TraceEvent>) {
+        self.ingest_trace(worker, events);
     }
 }
 

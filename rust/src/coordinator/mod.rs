@@ -31,6 +31,7 @@ use crate::config::RunConfig;
 use crate::data::staging::{ChunkSource, SpillTier, StagingCache};
 use crate::dataflow::Workflow;
 use crate::metrics::{MetricsHub, MetricsReport};
+use crate::obs::{self, Tracer};
 use crate::runtime::calibrate::SharedProfiles;
 use crate::runtime::ArtifactManifest;
 use crate::Result;
@@ -72,7 +73,19 @@ pub fn run_local_profiled(
     profiles: Arc<SharedProfiles>,
 ) -> Result<RunOutcome> {
     let manager = Manager::new(workflow.clone(), loader, n_chunks)?;
-    run_local_inner(workflow, manager, cfg, stage_bindings, profiles, None)
+    let metrics = hub_from_config(&cfg, 1);
+    run_local_inner(workflow, manager, cfg, stage_bindings, profiles, None, metrics)
+}
+
+/// Build the run's metrics hub.  With `--trace-out` set, the hub carries a
+/// live tracer (events stamped with `worker`) and a shared instrument
+/// registry; otherwise tracing is a single relaxed load per call site.
+pub fn hub_from_config(cfg: &RunConfig, worker: u64) -> Arc<MetricsHub> {
+    if cfg.trace_out.is_some() {
+        Arc::new(MetricsHub::with_obs(Arc::new(obs::Registry::new()), Tracer::new(worker)))
+    } else {
+        Arc::new(MetricsHub::new())
+    }
 }
 
 /// Build the optional local-disk spill tier for a worker from the run
@@ -115,12 +128,20 @@ pub fn run_local_staged(
     let policy = AssignPolicy::from_config(&cfg, vec![1]);
     let manager = Manager::new_staged(workflow.clone(), n_chunks, policy)?;
     let spill = spill_from_config(&cfg, 1, false)?;
+    let metrics = hub_from_config(&cfg, 1);
     let staging = worker::WorkerStaging {
-        cache: StagingCache::new_tiered(source, cfg.staging_cap, cfg.prefetch_depth, spill),
+        cache: StagingCache::with_obs(
+            source,
+            cfg.staging_cap,
+            cfg.prefetch_depth,
+            spill,
+            metrics.registry(),
+            metrics.tracer().clone(),
+        ),
         worker_id: 1,
         prefetch_budget: cfg.prefetch_depth,
     };
-    run_local_inner(workflow, manager, cfg, stage_bindings, profiles, Some(staging))
+    run_local_inner(workflow, manager, cfg, stage_bindings, profiles, Some(staging), metrics)
 }
 
 /// Shared single-node run harness: one in-process Worker against `manager`.
@@ -131,10 +152,11 @@ fn run_local_inner(
     stage_bindings: HashMap<String, String>,
     profiles: Arc<SharedProfiles>,
     staging: Option<worker::WorkerStaging>,
+    metrics: Arc<MetricsHub>,
 ) -> Result<RunOutcome> {
     // No artifacts built => every variant degrades to its CPU member.
     let manifest = Arc::new(ArtifactManifest::discover_or_empty());
-    let metrics = Arc::new(MetricsHub::new());
+    let trace_out = cfg.trace_out.clone();
     metrics.mark_start();
     worker::run_worker_staged(
         manager.clone(),
@@ -149,6 +171,16 @@ fn run_local_inner(
     metrics.mark_finish();
     if let Some(e) = manager.error() {
         return Err(crate::Error::Scheduler(e));
+    }
+    if let Some(path) = &trace_out {
+        // one stream: events the worker shipped to the manager's collector
+        // (plus the manager's own membership events), then whatever is
+        // still sitting in the local rings
+        let mut events = manager.collector().merged();
+        events.extend(metrics.tracer().drain());
+        events.sort_by_key(|e| (e.ts_us, e.worker, e.lane));
+        obs::write_trace(path, &events)?;
+        eprintln!("htap: wrote {} trace events to {path} (+ {path}.jsonl)", events.len());
     }
     Ok(RunOutcome { metrics: metrics.report(), manager, profiles })
 }

@@ -229,6 +229,7 @@ pub fn run_worker_opts(
                 let stop = stop_heartbeat.clone();
                 let src = source.clone();
                 let worker_id = s.worker_id;
+                let tracer = metrics.tracer().clone();
                 let tick = std::time::Duration::from_millis(cfg.heartbeat_ms.max(1));
                 // fine-grained sleep so shutdown never waits a full tick
                 let step = std::time::Duration::from_millis(25).min(tick);
@@ -243,6 +244,14 @@ pub fn run_worker_opts(
                                 if since_beat >= tick {
                                     since_beat = std::time::Duration::ZERO;
                                     src.heartbeat(worker_id);
+                                    // trace shipping piggybacks on the
+                                    // heartbeat cadence: drain this
+                                    // worker's rings and batch them to the
+                                    // manager (a no-op when tracing is off)
+                                    let events = tracer.drain();
+                                    if !events.is_empty() {
+                                        src.trace_events(worker_id, events);
+                                    }
                                 }
                             }
                         })
@@ -424,8 +433,16 @@ pub fn run_worker_opts(
         if let Some(h) = hb {
             let _ = h.join();
         }
-        if clean {
-            if let Some(s) = &staging {
+        if let Some(s) = &staging {
+            // final trace drain: ship whatever the heartbeat cadence
+            // hasn't (also the only shipment when leases are off).  Runs
+            // on failure exits too — the tail of a failing run is exactly
+            // what the merged trace is for.
+            let events = metrics.tracer().drain();
+            if !events.is_empty() {
+                source.trace_events(s.worker_id, events);
+            }
+            if clean {
                 source.goodbye(s.worker_id);
             }
         }

@@ -55,6 +55,7 @@ use super::sched::{OpInstKey, OpScheduler, ReadyTask};
 use crate::config::{Placement, RunConfig};
 use crate::dataflow::{OpDef, PortRef, StageDef, Workflow};
 use crate::metrics::{DeviceKind, MetricsHub};
+use crate::obs::{EventKind, Name, TraceEvent, DEV_CPU, DEV_GPU};
 use crate::runtime::calibrate::SharedProfiles;
 use crate::runtime::pjrt::{DeviceExecutor, ExecInput, PayloadKey};
 use crate::runtime::{ArtifactManifest, Value};
@@ -82,6 +83,9 @@ struct InstExec {
     /// per op: count of distinct producer ops not yet finished
     dep_remaining: Vec<usize>,
     ops_remaining: usize,
+    /// Chunk this instance processes, carried from the [`Assignment`] so
+    /// op-execution trace spans can be tied back to their pipeline input.
+    chunk: u64,
     /// op idx -> (gpu id, resident payload key).
     ///
     /// INVARIANT: only **single-output** op results are ever inserted here
@@ -100,6 +104,12 @@ struct WrmInner {
     seq: u64,
     shutdown: bool,
     poked: bool,
+    /// Enqueue timestamps for queued tasks, maintained only when tracing
+    /// is enabled (the map stays empty otherwise).  Insert-at-push /
+    /// remove-at-pop are O(1) hash ops — fine inside the critical
+    /// sections; the [`EventKind::QueueWait`] event itself is recorded
+    /// outside the lock.
+    enqueued: HashMap<OpInstKey, Instant>,
 }
 
 /// One port of a GPU dispatch snapshot: a payload resident on this device,
@@ -148,6 +158,7 @@ impl Wrm {
                 seq: 0,
                 shutdown: false,
                 poked: false,
+                enqueued: HashMap::new(),
             }),
             cv_cpu: Condvar::new(),
             cv_gpu: Condvar::new(),
@@ -222,6 +233,37 @@ impl Wrm {
         }
     }
 
+    /// Record one op-lifecycle trace event ([`EventKind::QueueWait`] /
+    /// [`EventKind::OpBegin`] / [`EventKind::OpEnd`]) against the hub's
+    /// tracer.  `job` is decoded from the instance id's service tag (0 for
+    /// single-job runs, whose instance ids carry no tag).  Callers sit on
+    /// device threads *outside* the dispatch critical sections.
+    fn trace_op(
+        &self,
+        kind: EventKind,
+        task: &ReadyTask,
+        device: u8,
+        lane: u32,
+        stage_idx: usize,
+        chunk: u64,
+        dur_us: u64,
+    ) {
+        let tracer = self.metrics.tracer();
+        if !tracer.is_enabled() {
+            return;
+        }
+        tracer.record(TraceEvent {
+            dur_us,
+            device,
+            lane,
+            job: crate::service::job_of(task.key.0),
+            stage: stage_idx as u32,
+            chunk,
+            name: Name::new(&task.name),
+            ..TraceEvent::of(kind)
+        });
+    }
+
     /// Acquire the WRM mutex, surfacing poisoning (a panic inside some
     /// critical section) to the caller instead of cascading the panic
     /// through every device thread.  Callers convert the error into an
@@ -270,6 +312,8 @@ impl Wrm {
             producers.dedup();
             dep_remaining[oi] = producers.len();
         }
+        let traced = self.metrics.tracer().is_enabled();
+        let now = Instant::now();
         let Ok(mut inner) = self.lock_inner() else {
             // poisoned: the run is failing; wait_completions reports it
             return;
@@ -283,6 +327,7 @@ impl Wrm {
             produced: vec![None; n_ops],
             dep_remaining: dep_remaining.clone(),
             ops_remaining: n_ops,
+            chunk: a.chunk,
             resident: HashMap::new(),
         };
         inner.insts.insert(a.instance_id, exec);
@@ -303,6 +348,9 @@ impl Wrm {
                     resident_on: None,
                     has_gpu_impl,
                 });
+                if traced {
+                    inner.enqueued.insert((a.instance_id, oi), now);
+                }
                 n_new += 1;
                 any_gpu |= has_gpu_impl;
             }
@@ -363,11 +411,12 @@ impl Wrm {
     /// payload copies inside the critical section.  Also returns the
     /// instance's workflow handle and stage index so the caller needs no
     /// second lock (and resolves ops against the *instance's* workflow,
-    /// which in service mode differs per job).
+    /// which in service mode differs per job).  The instance's chunk id
+    /// rides along so the caller can label its trace span.
     fn gather_host_inputs(
         inner: &WrmInner,
         key: OpInstKey,
-    ) -> std::result::Result<(Vec<Value>, Arc<Workflow>, usize), String> {
+    ) -> std::result::Result<(Vec<Value>, Arc<Workflow>, usize, u64), String> {
         let exec = inner.insts.get(&key.0).ok_or("instance vanished")?;
         let workflow = exec.workflow.clone();
         let stage = &workflow.stages[exec.stage_idx];
@@ -389,7 +438,7 @@ impl Wrm {
                 PortRef::Param(v) => vals.push(v.clone()),
             }
         }
-        Ok((vals, workflow, exec.stage_idx))
+        Ok((vals, workflow, exec.stage_idx, exec.chunk))
     }
 
     /// Resolve a completed instance's stage outputs from its shared
@@ -437,6 +486,8 @@ impl Wrm {
         resident: Option<(usize, PayloadKey)>,
     ) -> Vec<u64> {
         let mut completed = Vec::new();
+        let traced = self.metrics.tracer().is_enabled();
+        let now = Instant::now();
         let Ok(mut inner) = self.lock_inner() else {
             // poisoned: drop the result; wait_completions reports the failure
             return completed;
@@ -531,6 +582,9 @@ impl Wrm {
                     resident_on: hint,
                     has_gpu_impl,
                 });
+                if traced {
+                    inner.enqueued.insert((key.0, oi), now);
+                }
                 n_new += 1;
                 any_gpu |= has_gpu_impl;
             }
@@ -576,10 +630,10 @@ impl Wrm {
     }
 
     /// CPU computing-thread main loop.
-    pub fn cpu_thread(self: &Arc<Self>, _core: usize) {
+    pub fn cpu_thread(self: &Arc<Self>, core: usize) {
         loop {
             // critical section: pop + O(ports) handle gather, nothing else
-            let (task, vals, wf, stage_idx) = {
+            let (task, vals, wf, stage_idx, chunk, waited) = {
                 let Ok(mut inner) = self.lock_inner() else { return };
                 // lint: critical-section — pop + O(ports) handle gather only
                 loop {
@@ -588,8 +642,11 @@ impl Wrm {
                     }
                     if let Some(task) = inner.queue.pop(DeviceKind::Cpu, 0, false) {
                         let hold = HoldWatchdog::new("wrm.cpu_pop");
+                        let waited = inner.enqueued.remove(&task.key);
                         match Self::gather_host_inputs(&inner, task.key) {
-                            Ok((vals, wf, stage_idx)) => break (task, vals, wf, stage_idx),
+                            Ok((vals, wf, stage_idx, chunk)) => {
+                                break (task, vals, wf, stage_idx, chunk, waited)
+                            }
                             Err(e) => {
                                 inner.completions.push_back((task.key.0, Err(e)));
                                 self.cv_done.notify_all();
@@ -606,6 +663,12 @@ impl Wrm {
                     };
                 }
             };
+            let lane = core as u32;
+            if let Some(t) = waited {
+                let dur = t.elapsed().as_micros() as u64;
+                self.trace_op(EventKind::QueueWait, &task, DEV_CPU, lane, stage_idx, chunk, dur);
+            }
+            self.trace_op(EventKind::OpBegin, &task, DEV_CPU, lane, stage_idx, chunk, 0);
             let op = &wf.stages[stage_idx].ops[task.key.1];
             let t0 = Instant::now();
             // run_cpu_member converts a panicking op into an error
@@ -614,6 +677,8 @@ impl Wrm {
             let elapsed = t0.elapsed();
             self.metrics.record_op(&op.name, DeviceKind::Cpu, elapsed);
             self.profiles.record(&op.op, DeviceKind::Cpu, elapsed);
+            let dur_us = elapsed.as_micros() as u64;
+            self.trace_op(EventKind::OpEnd, &task, DEV_CPU, lane, stage_idx, chunk, dur_us);
             match result {
                 Ok(outs) => {
                     self.finish_op(task.key, outs, None);
@@ -662,11 +727,13 @@ impl Wrm {
                         inner.queue.pop(DeviceKind::Gpu, gpu_id, self.cfg.data_locality)
                     {
                         let hold = HoldWatchdog::new("wrm.gpu_pop");
+                        let waited = inner.enqueued.remove(&task.key);
                         let Some(exec) = inner.insts.get(&task.key.0) else {
                             drop(hold);
                             continue;
                         };
                         let stage_idx = exec.stage_idx;
+                        let chunk = exec.chunk;
                         // Arc bump: the instance's own workflow travels
                         // with the snapshot (per-job pipeline in service
                         // mode)
@@ -725,7 +792,7 @@ impl Wrm {
                             drop(hold);
                             continue;
                         }
-                        break Some((task, wf, stage_idx, plan));
+                        break Some((task, wf, stage_idx, chunk, plan, waited));
                     }
                     inner = match self.cv_gpu.wait(inner) {
                         Ok(g) => g,
@@ -734,7 +801,12 @@ impl Wrm {
                     };
                 }
             };
-            let Some((task, wf, stage_idx, plan)) = picked else { return };
+            let Some((task, wf, stage_idx, chunk, plan, waited)) = picked else { return };
+            let lane = gpu_id as u32;
+            if let Some(t) = waited {
+                let dur = t.elapsed().as_micros() as u64;
+                self.trace_op(EventKind::QueueWait, &task, DEV_GPU, lane, stage_idx, chunk, dur);
+            }
             let op = &wf.stages[stage_idx].ops[task.key.1];
             // Try the accelerator member first.  A missing artifact or a
             // failed accelerator execution (e.g. the offline xla shim, or a
@@ -742,6 +814,7 @@ impl Wrm {
             // failing the stage instance.
             if let Some(artifact) = self.resolve_artifact(&op.variant.gpu_artifact) {
                 // upload -> process -> download (paper §IV-D phases)
+                self.trace_op(EventKind::OpBegin, &task, DEV_GPU, lane, stage_idx, chunk, 0);
                 let t0 = Instant::now();
                 let up0 = (executor.stats.bytes_up, executor.stats.bytes_down);
                 let inputs: Vec<ExecInput<'_>> = plan
@@ -767,6 +840,10 @@ impl Wrm {
                         self.profiles.record_accelerator(&op.op, elapsed);
                         let (u1, d1) = (executor.stats.bytes_up, executor.stats.bytes_down);
                         self.metrics.record_transfer(&op.name, u1 - up0.0, d1 - up0.1);
+                        let dur_us = elapsed.as_micros() as u64;
+                        self.trace_op(
+                            EventKind::OpEnd, &task, DEV_GPU, lane, stage_idx, chunk, dur_us,
+                        );
                         // keep single-output results resident for DL
                         // chaining; multi-output (tuple) results are
                         // evicted — they cannot feed a dependent execution
@@ -809,6 +886,12 @@ impl Wrm {
                         continue;
                     }
                     Err(e) => {
+                        // close the degraded attempt's span; the CPU-member
+                        // fallback below opens its own
+                        let dur_us = t0.elapsed().as_micros() as u64;
+                        self.trace_op(
+                            EventKind::OpEnd, &task, DEV_GPU, lane, stage_idx, chunk, dur_us,
+                        );
                         if !warned_fallback {
                             warned_fallback = true;
                             eprintln!(
@@ -842,13 +925,17 @@ impl Wrm {
                 self.push_error(task.key.0, e);
                 continue;
             }
+            self.trace_op(EventKind::OpBegin, &task, DEV_GPU, lane, stage_idx, chunk, 0);
             let t0 = Instant::now();
             // same panic discipline as the CPU thread (via run_cpu_member):
             // a panicking op, or a tripped debug aliasing assert, becomes
             // an error completion, not a silently dead controller thread
-            match Self::run_cpu_member(op, &vals) {
+            let result = Self::run_cpu_member(op, &vals);
+            let elapsed = t0.elapsed();
+            let fallback_us = elapsed.as_micros() as u64;
+            self.trace_op(EventKind::OpEnd, &task, DEV_GPU, lane, stage_idx, chunk, fallback_us);
+            match result {
                 Ok(outs) => {
-                    let elapsed = t0.elapsed();
                     // metrics attribute this to the controller's device,
                     // but the *profile* records it as a CPU-member sample —
                     // the controller only emulated the accelerator, and a

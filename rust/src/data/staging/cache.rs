@@ -34,11 +34,11 @@ use super::tiers::SpillTier;
 use crate::config::CacheCap;
 use crate::coordinator::ChunkId;
 use crate::metrics::StagingReport;
+use crate::obs::{self, EventKind, TraceEvent, Tracer};
 use crate::runtime::sync::{self, Condvar, HoldWatchdog, Mutex};
 use crate::runtime::Value;
 use crate::{Error, Result};
 use std::collections::{HashMap, VecDeque};
-use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::Arc;
 use std::time::{Duration, Instant};
 
@@ -102,16 +102,22 @@ pub struct StagingCache {
     depth: usize,
     inner: Mutex<Inner>,
     cv: Condvar,
-    hits: AtomicU64,
-    misses: AtomicU64,
-    prefetched: AtomicU64,
-    evictions: AtomicU64,
-    spill_hits: AtomicU64,
-    spill_evicted: AtomicU64,
-    promoted: AtomicU64,
-    replicated: AtomicU64,
-    hidden_ns: AtomicU64,
-    stall_ns: AtomicU64,
+    /// Trace stream for staging events (disabled outside `--trace-out`
+    /// runs; recording is then a single atomic load).
+    tracer: Tracer,
+    // Counters live in the run's obs registry (`staging.*` instruments);
+    // these are lock-free handles, same cost as the AtomicU64 fields they
+    // replaced.
+    hits: obs::Counter,
+    misses: obs::Counter,
+    prefetched: obs::Counter,
+    evictions: obs::Counter,
+    spill_hits: obs::Counter,
+    spill_evicted: obs::Counter,
+    promoted: obs::Counter,
+    replicated: obs::Counter,
+    hidden_ns: obs::Counter,
+    stall_ns: obs::Counter,
 }
 
 enum Lookup {
@@ -140,6 +146,21 @@ impl StagingCache {
         cap: impl Into<CacheCap>,
         depth: usize,
         spill: Option<SpillTier>,
+    ) -> Arc<Self> {
+        Self::with_obs(source, cap, depth, spill, &obs::Registry::new(), Tracer::disabled())
+    }
+
+    /// [`StagingCache::new_tiered`] wired into the observability layer:
+    /// counters register as `staging.*` instruments in `registry` and
+    /// cache activity (hit/miss/promote/demote/prefetch/evict) records
+    /// trace events through `tracer`.
+    pub fn with_obs(
+        source: Arc<dyn ChunkSource>,
+        cap: impl Into<CacheCap>,
+        depth: usize,
+        spill: Option<SpillTier>,
+        registry: &obs::Registry,
+        tracer: Tracer,
     ) -> Arc<Self> {
         let cap = match cap.into() {
             CacheCap::Chunks(n) => CacheCap::Chunks(n.max(1)),
@@ -171,16 +192,17 @@ impl StagingCache {
                 shutdown: false,
             }),
             cv: Condvar::new(),
-            hits: AtomicU64::new(0),
-            misses: AtomicU64::new(0),
-            prefetched: AtomicU64::new(0),
-            evictions: AtomicU64::new(0),
-            spill_hits: AtomicU64::new(0),
-            spill_evicted: AtomicU64::new(0),
-            promoted: AtomicU64::new(0),
-            replicated: AtomicU64::new(0),
-            hidden_ns: AtomicU64::new(0),
-            stall_ns: AtomicU64::new(0),
+            tracer,
+            hits: registry.counter("staging.hits"),
+            misses: registry.counter("staging.misses"),
+            prefetched: registry.counter("staging.prefetched"),
+            evictions: registry.counter("staging.evictions"),
+            spill_hits: registry.counter("staging.spill_hits"),
+            spill_evicted: registry.counter("staging.spill_evicted"),
+            promoted: registry.counter("staging.promoted"),
+            replicated: registry.counter("staging.replicated"),
+            hidden_ns: registry.counter("staging.hidden_ns"),
+            stall_ns: registry.counter("staging.stall_ns"),
         });
         if depth > 0 {
             let c = cache.clone();
@@ -191,6 +213,13 @@ impl StagingCache {
                 .expect("spawn prefetcher");
         }
         cache
+    }
+
+    /// Record a per-chunk staging trace event.  Non-blocking and
+    /// allocation-free, so it is safe inside the cache's lint-marked
+    /// critical sections (a disabled tracer reduces to one atomic load).
+    fn trace_chunk(&self, kind: EventKind, chunk: ChunkId) {
+        self.tracer.record(TraceEvent { chunk, ..TraceEvent::of(kind) });
     }
 
     /// Queue chunks for background staging (first-come order;
@@ -239,7 +268,7 @@ impl StagingCache {
         }
         drop(inner);
         if n > 0 {
-            self.replicated.fetch_add(n, Ordering::Relaxed);
+            self.replicated.add(n);
             self.cv.notify_all();
         }
     }
@@ -272,10 +301,11 @@ impl StagingCache {
         inner.order.push_back(chunk);
         // re-announce: the catalog entry tiers back up to memory
         inner.staged.push(chunk);
-        self.promoted.fetch_add(1, Ordering::Relaxed);
+        self.promoted.inc();
+        self.trace_chunk(EventKind::StagingPromote, chunk);
         if claimed {
             // demand-path promotion: the consumer is served from disk now
-            self.spill_hits.fetch_add(1, Ordering::Relaxed);
+            self.spill_hits.inc();
         }
         self.evict_excess(inner);
         Some(vals)
@@ -301,7 +331,7 @@ impl StagingCache {
                         Some(c) => {
                             // cheap local-disk promotion before the source
                             if self.try_promote(&mut inner, c, true, false).is_some() {
-                                self.prefetched.fetch_add(1, Ordering::Relaxed);
+                                self.prefetched.inc();
                                 break Next::Promoted;
                             }
                             inner.slots.insert(c, Slot::Loading);
@@ -343,7 +373,8 @@ impl StagingCache {
                     inner.slots.insert(chunk, slot);
                     inner.order.push_back(chunk);
                     inner.staged.push(chunk);
-                    self.prefetched.fetch_add(1, Ordering::Relaxed);
+                    self.prefetched.inc();
+                    self.trace_chunk(EventKind::StagingPrefetch, chunk);
                     self.evict_excess(&mut inner);
                 }
                 // drop the slot: the demand path will retry the read and
@@ -387,20 +418,21 @@ impl StagingCache {
             match lookup {
                 Lookup::Ready(vals, newly) => {
                     if !counted {
-                        self.hits.fetch_add(1, Ordering::Relaxed);
+                        self.hits.inc();
+                        self.trace_chunk(EventKind::StagingHit, chunk);
                     }
                     if let Some((_, _, true)) = newly {
                         // first consumer of a prefetch-promoted chunk: the
                         // fetch was served by the local-disk tier
-                        self.spill_hits.fetch_add(1, Ordering::Relaxed);
+                        self.spill_hits.inc();
                     }
                     if let Some((true, load, false)) = newly {
                         // the part of the read that ran before (or while) we
                         // blocked here was hidden behind compute
                         let waited = t_req.elapsed().min(load);
                         let hidden = load.saturating_sub(waited);
-                        self.hidden_ns.fetch_add(hidden.as_nanos() as u64, Ordering::Relaxed);
-                        self.stall_ns.fetch_add(waited.as_nanos() as u64, Ordering::Relaxed);
+                        self.hidden_ns.add(hidden.as_nanos() as u64);
+                        self.stall_ns.add(waited.as_nanos() as u64);
                     }
                     // refresh recency for the eviction scan
                     if let Some(pos) = inner.order.iter().position(|&c| c == chunk) {
@@ -413,7 +445,8 @@ impl StagingCache {
                     if !counted {
                         // an in-flight prefetch still counts as a hit: part
                         // of the read is overlapped
-                        self.hits.fetch_add(1, Ordering::Relaxed);
+                        self.hits.inc();
+                        self.trace_chunk(EventKind::StagingHit, chunk);
                         counted = true;
                     }
                     inner = match self.cv.wait(inner) {
@@ -423,7 +456,8 @@ impl StagingCache {
                 }
                 Lookup::Load => {
                     if !counted {
-                        self.misses.fetch_add(1, Ordering::Relaxed);
+                        self.misses.inc();
+                        self.trace_chunk(EventKind::StagingMiss, chunk);
                         counted = true;
                     }
                     // memory miss: the local-disk tier answers before the
@@ -463,7 +497,7 @@ impl StagingCache {
                             );
                             inner.order.push_back(chunk);
                             inner.staged.push(chunk);
-                            self.stall_ns.fetch_add(load.as_nanos() as u64, Ordering::Relaxed);
+                            self.stall_ns.add(load.as_nanos() as u64);
                             self.evict_excess(&mut inner);
                             drop(hold);
                             drop(inner);
@@ -597,19 +631,22 @@ impl StagingCache {
             }
         }
         if demoted {
-            self.spill_evicted.fetch_add(1, Ordering::Relaxed);
+            self.spill_evicted.inc();
+            self.trace_chunk(EventKind::StagingDemote, c);
             inner.demoted.push(c);
             for d in dropped_from_disk {
                 // a chunk pushed out of the disk tier is gone from this
                 // worker — unless a promoted copy still sits in memory
                 if !inner.slots.contains_key(&d) {
                     inner.evicted.push(d);
-                    self.evictions.fetch_add(1, Ordering::Relaxed);
+                    self.evictions.inc();
+                    self.trace_chunk(EventKind::StagingEvict, d);
                 }
             }
         } else {
             inner.evicted.push(c);
-            self.evictions.fetch_add(1, Ordering::Relaxed);
+            self.evictions.inc();
+            self.trace_chunk(EventKind::StagingEvict, c);
         }
     }
 
@@ -704,19 +741,22 @@ impl StagingCache {
         self.cv.notify_all();
     }
 
-    /// Snapshot of the staging counters.
+    /// Snapshot of the staging counters.  Since the counters are registry
+    /// instruments, the same numbers are visible as `staging.*` in the
+    /// run's [`obs::Registry`] snapshot; this struct remains the stable
+    /// report shape the Manager and `MetricsReport` consume.
     pub fn report(&self) -> StagingReport {
         StagingReport {
-            hits: self.hits.load(Ordering::Relaxed),
-            misses: self.misses.load(Ordering::Relaxed),
-            prefetched: self.prefetched.load(Ordering::Relaxed),
-            evictions: self.evictions.load(Ordering::Relaxed),
-            spill_hits: self.spill_hits.load(Ordering::Relaxed),
-            spill_evicted: self.spill_evicted.load(Ordering::Relaxed),
-            promoted: self.promoted.load(Ordering::Relaxed),
-            replicated: self.replicated.load(Ordering::Relaxed),
-            hidden: Duration::from_nanos(self.hidden_ns.load(Ordering::Relaxed)),
-            stall: Duration::from_nanos(self.stall_ns.load(Ordering::Relaxed)),
+            hits: self.hits.get(),
+            misses: self.misses.get(),
+            prefetched: self.prefetched.get(),
+            evictions: self.evictions.get(),
+            spill_hits: self.spill_hits.get(),
+            spill_evicted: self.spill_evicted.get(),
+            promoted: self.promoted.get(),
+            replicated: self.replicated.get(),
+            hidden: Duration::from_nanos(self.hidden_ns.get()),
+            stall: Duration::from_nanos(self.stall_ns.get()),
         }
     }
 }
@@ -1026,6 +1066,32 @@ mod tests {
         let (_, dropped, demoted) = cache.take_staged_delta();
         assert_eq!(dropped, vec![0]);
         assert!(demoted.is_empty());
+        cache.shutdown();
+    }
+
+    #[test]
+    fn obs_wiring_mirrors_counters_and_traces_events() {
+        let registry = crate::obs::Registry::new();
+        let tracer = Tracer::new(1);
+        let cache =
+            StagingCache::with_obs(source(8, 0), 2, 0, None, &registry, tracer.clone());
+        cache.get(0).unwrap(); // miss
+        cache.get(0).unwrap(); // hit
+        cache.get(1).unwrap(); // miss
+        cache.get(2).unwrap(); // miss, evicts 0
+        let r = cache.report();
+        let snap = registry.snapshot();
+        // the registry sees exactly what the report sees
+        assert_eq!(snap.counter("staging.hits"), r.hits);
+        assert_eq!(snap.counter("staging.misses"), r.misses);
+        assert_eq!(snap.counter("staging.evictions"), r.evictions);
+        // and the trace stream carries one event per counted fetch
+        let evs = tracer.drain();
+        let count = |k: EventKind| evs.iter().filter(|e| e.kind == k).count() as u64;
+        assert_eq!(count(EventKind::StagingHit), r.hits);
+        assert_eq!(count(EventKind::StagingMiss), r.misses);
+        assert_eq!(count(EventKind::StagingEvict), r.evictions);
+        assert!(evs.iter().all(|e| e.worker == 1));
         cache.shutdown();
     }
 

@@ -52,6 +52,7 @@ pub mod error;
 pub mod imgproc;
 pub mod metrics;
 pub mod net;
+pub mod obs;
 pub mod runtime;
 pub mod service;
 pub mod sim;

@@ -4,21 +4,20 @@ use htap::app::{self, build_workflow_with, stage_bindings, AppParams};
 use htap::cli::{Cli, USAGE};
 use htap::config::{PartitionMode, Policy, RunConfig};
 use htap::coordinator::{
-    checkpoint, run_local_staged, spill_from_config,
+    checkpoint, hub_from_config, run_local_staged, spill_from_config,
     worker::{run_worker_opts, JobResolver, WorkerOpts},
     AssignPolicy, Manager, WorkerStaging,
 };
 use htap::data::staging::{source_from_spec, ChunkSource, StagingCache};
 use htap::data::{DirSource, SynthConfig, TileStore};
 use htap::dataflow::{workflow_from_file, workflow_from_str, StageKind, Workflow};
-use htap::metrics::MetricsHub;
 use htap::net::{self, ManagerServer, RemoteManager};
 use htap::service::{render_value, JobTable};
 use htap::runtime::calibrate::{
     calibrate_workflows, CalibrationConfig, SharedProfiles, CHUNK_READ_OP,
 };
 use htap::runtime::{ArtifactManifest, ProfileStore};
-use htap::sim::{simulate, SimParams, SimWorkflow};
+use htap::sim::{simulate, simulate_traced, SimParams, SimWorkflow};
 use std::sync::Arc;
 use std::time::Duration;
 
@@ -47,6 +46,7 @@ fn dispatch(cli: &Cli) -> htap::Result<()> {
         "submit" => cmd_submit(cli),
         "jobs" => cmd_jobs(cli),
         "cancel" => cmd_cancel(cli),
+        "top" => cmd_top(cli),
         "worker" => cmd_worker(cli),
         "export-tiles" => cmd_export_tiles(cli),
         "help" | "--help" | "-h" => {
@@ -230,7 +230,20 @@ fn cmd_sim(cli: &Cli) -> htap::Result<()> {
         p.tile_io_base = ms / 1e3;
         println!("calibrated tile I/O base: {ms:.2} ms/chunk (measured {CHUNK_READ_OP})");
     }
-    let r = simulate(&p);
+    // --trace-out: record the simulated schedule as virtual-time op spans
+    // in the same trace_event schema real runs emit
+    let trace_out = cli.get("trace-out");
+    let (r, trace_events) = match trace_out {
+        Some(_) => simulate_traced(&p),
+        None => (simulate(&p), Vec::new()),
+    };
+    if let Some(path) = trace_out {
+        htap::obs::write_trace(path, &trace_events)?;
+        println!(
+            "wrote {} simulated trace events to {path} (+ {path}.jsonl)",
+            trace_events.len()
+        );
+    }
     println!(
         "simulated {} tiles on {} Keeneland nodes ({}, locality {}, replication {}): \
          makespan {:.1}s, {:.1} tiles/s",
@@ -401,6 +414,13 @@ fn cmd_manager(cli: &Cli) -> htap::Result<()> {
         // final snapshot so a post-run --resume sees the finished state
         checkpoint::write_checkpoint(dir, &manager)?;
     }
+    if let Some(path) = &cfg.trace_out {
+        // the cluster-wide stream: every worker's shipped trace batches
+        // merged with this manager's membership events
+        let events = manager.collector().merged();
+        htap::obs::write_trace(path, &events)?;
+        println!("wrote {} trace events to {path} (+ {path}.jsonl)", events.len());
+    }
     let (done, total) = manager.progress();
     let (hits, cold, steals) = manager.locality_stats();
     println!("workflow complete: {done}/{total}");
@@ -511,6 +531,11 @@ fn cmd_serve(cli: &Cli) -> htap::Result<()> {
         // final snapshot so a post-shutdown --resume sees terminal states
         checkpoint::write_service_checkpoint(dir, &table.snapshot())?;
     }
+    if let Some(path) = &cfg.trace_out {
+        let events = table.collector().merged();
+        htap::obs::write_trace(path, &events)?;
+        println!("wrote {} trace events to {path} (+ {path}.jsonl)", events.len());
+    }
     let rows = htap::service::Endpoint::job_report(&*table, 0);
     println!("service stopped: {} job(s) on the table", rows.len());
     for r in rows {
@@ -571,6 +596,28 @@ fn cmd_jobs(cli: &Cli) -> htap::Result<()> {
             r.priority,
             r.workflow
         );
+    }
+    Ok(())
+}
+
+fn cmd_top(cli: &Cli) -> htap::Result<()> {
+    let addr = cli
+        .get("connect")
+        .ok_or_else(|| htap::Error::Config("top needs --connect HOST:PORT".into()))?;
+    let interval = cli.get_usize("interval-ms", 1000)? as u64;
+    let iterations = cli.get_usize("iterations", 0)?;
+    let mut polls = 0usize;
+    loop {
+        // one-shot StatsQuery per poll: the daemon answers from its merged
+        // trace rollups, so rows only appear once workers run with tracing
+        // armed (--trace-out)
+        let rows = net::utilization(addr)?;
+        println!("{}", htap::obs::render_util_table(&rows));
+        polls += 1;
+        if iterations > 0 && polls >= iterations {
+            break;
+        }
+        std::thread::sleep(Duration::from_millis(interval.max(1)));
     }
     Ok(())
 }
@@ -636,8 +683,15 @@ fn cmd_worker(cli: &Cli) -> htap::Result<()> {
     // measured profiles reach PATS through the SharedProfiles seed below
     let store = load_profiles(cli, cfg.tile_size)?;
     let workflow = resolve_workflow(cli, &cfg, false)?;
-    let source = Arc::new(RemoteManager::connect(addr)?);
-    let metrics = Arc::new(MetricsHub::new());
+    let worker_id = cli.get_usize("worker-id", std::process::id() as usize)?.max(1) as u64;
+    // --trace-out arms the tracer; events ship to the manager at heartbeat
+    // cadence, and net frame counters register alongside the WRM's
+    let metrics = hub_from_config(&cfg, worker_id);
+    let source = Arc::new(RemoteManager::connect_with_obs(
+        addr,
+        metrics.registry(),
+        metrics.tracer().clone(),
+    )?);
     let profiles = match store {
         Some(s) => SharedProfiles::from_store(s),
         None => SharedProfiles::fresh(),
@@ -647,7 +701,6 @@ fn cmd_worker(cli: &Cli) -> htap::Result<()> {
     // --spill-dir, evictions demote to a local-disk tier instead of
     // dropping
     let (chunks, _) = chunk_source(cli, &cfg)?;
-    let worker_id = cli.get_usize("worker-id", std::process::id() as usize)?.max(1) as u64;
     // --warm-restart: keep whatever survived in the spill directory and
     // re-advertise it to the manager as disk-tier chunks (crash recovery);
     // the default cold start clears the directory
@@ -662,7 +715,14 @@ fn cmd_worker(cli: &Cli) -> htap::Result<()> {
         }
     }
     let staging = WorkerStaging {
-        cache: StagingCache::new_tiered(chunks, cfg.staging_cap, cfg.prefetch_depth, spill),
+        cache: StagingCache::with_obs(
+            chunks,
+            cfg.staging_cap,
+            cfg.prefetch_depth,
+            spill,
+            metrics.registry(),
+            metrics.tracer().clone(),
+        ),
         worker_id,
         prefetch_budget: cfg.prefetch_depth,
     };
@@ -695,6 +755,16 @@ fn cmd_worker(cli: &Cli) -> htap::Result<()> {
     let report = metrics.report();
     println!("{}", report.profile_table());
     println!("{}", report.staging.summary());
+    if let Some(path) = &cfg.trace_out {
+        // the worker's events all shipped to the manager (which owns the
+        // merged stream); anything still in the rings here means the final
+        // shipment was stranded (e.g. the manager went away) — keep it
+        let events = metrics.tracer().drain();
+        if !events.is_empty() {
+            htap::obs::write_trace(path, &events)?;
+            println!("wrote {} stranded trace events to {path}", events.len());
+        }
+    }
     if let Some(path) = cli.get("save-profiles") {
         let snap = profiles.snapshot();
         snap.save(path)?;

@@ -7,8 +7,10 @@
 //! and EXPERIMENTS.md read the aggregated [`MetricsReport`].
 
 use std::collections::BTreeMap;
-use std::sync::Mutex;
+use std::sync::{Arc, Mutex};
 use std::time::{Duration, Instant};
+
+use crate::obs::{self, Tracer};
 
 /// Which kind of device executed an operation.
 #[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord, Hash)]
@@ -137,17 +139,67 @@ impl StagingReport {
 }
 
 /// Thread-safe metrics collector.
-#[derive(Debug, Default)]
+///
+/// Since the observability subsystem landed, the hub is also the home of
+/// the run's typed-instrument [`obs::Registry`] and its [`Tracer`]: the
+/// per-op dispatch counts double as registry counters (`wrm.ops_cpu` /
+/// `wrm.ops_gpu`, `wrm.op_us` histogram, `wrm.upload_bytes` /
+/// `wrm.download_bytes`), and layers that only see the hub (the WRM)
+/// reach the trace stream through [`MetricsHub::tracer`].
+#[derive(Debug)]
 pub struct MetricsHub {
     ops: Mutex<BTreeMap<String, OpRecord>>,
     staging: Mutex<StagingReport>,
     started: Mutex<Option<Instant>>,
     finished: Mutex<Option<Instant>>,
+    registry: Arc<obs::Registry>,
+    tracer: Tracer,
+    ops_cpu: obs::Counter,
+    ops_gpu: obs::Counter,
+    op_us: obs::Histogram,
+    upload_bytes: obs::Counter,
+    download_bytes: obs::Counter,
+}
+
+impl Default for MetricsHub {
+    fn default() -> Self {
+        Self::new()
+    }
 }
 
 impl MetricsHub {
+    /// A hub with a private registry and tracing disabled — the default
+    /// everywhere observability wasn't explicitly requested.
     pub fn new() -> Self {
-        Self::default()
+        Self::with_obs(Arc::new(obs::Registry::new()), Tracer::disabled())
+    }
+
+    /// A hub registering its instruments in a shared `registry` and
+    /// recording through `tracer` (enabled by `--trace-out`).
+    pub fn with_obs(registry: Arc<obs::Registry>, tracer: Tracer) -> Self {
+        MetricsHub {
+            ops: Mutex::default(),
+            staging: Mutex::default(),
+            started: Mutex::default(),
+            finished: Mutex::default(),
+            ops_cpu: registry.counter("wrm.ops_cpu"),
+            ops_gpu: registry.counter("wrm.ops_gpu"),
+            op_us: registry.histogram("wrm.op_us"),
+            upload_bytes: registry.counter("wrm.upload_bytes"),
+            download_bytes: registry.counter("wrm.download_bytes"),
+            registry,
+            tracer,
+        }
+    }
+
+    /// The run's instrument registry.
+    pub fn registry(&self) -> &Arc<obs::Registry> {
+        &self.registry
+    }
+
+    /// The run's trace stream (disabled unless `--trace-out` was given).
+    pub fn tracer(&self) -> &Tracer {
+        &self.tracer
     }
 
     pub fn mark_start(&self) {
@@ -160,6 +212,11 @@ impl MetricsHub {
 
     /// Record one executed operation instance.
     pub fn record_op(&self, op: &str, device: DeviceKind, elapsed: Duration) {
+        match device {
+            DeviceKind::Cpu => self.ops_cpu.inc(),
+            DeviceKind::Gpu => self.ops_gpu.inc(),
+        }
+        self.op_us.observe(elapsed.as_micros() as u64);
         let mut map = self.ops.lock().unwrap();
         let rec = map.entry(op.to_string()).or_default();
         match device {
@@ -176,6 +233,8 @@ impl MetricsHub {
 
     /// Record bytes moved across the host/device boundary for an op.
     pub fn record_transfer(&self, op: &str, up: u64, down: u64) {
+        self.upload_bytes.add(up);
+        self.download_bytes.add(down);
         let mut map = self.ops.lock().unwrap();
         let rec = map.entry(op.to_string()).or_default();
         rec.upload_bytes += up;
@@ -278,6 +337,29 @@ mod tests {
         assert!((p.gpu_fraction() - 2.0 / 3.0).abs() < 1e-9);
         assert_eq!(p.upload_bytes, 100);
         assert_eq!(r.total_executed(), 3);
+    }
+
+    #[test]
+    fn op_counts_mirror_into_registry() {
+        let reg = Arc::new(obs::Registry::new());
+        let m = MetricsHub::with_obs(reg.clone(), Tracer::disabled());
+        m.record_op("canny", DeviceKind::Cpu, Duration::from_micros(100));
+        m.record_op("canny", DeviceKind::Gpu, Duration::from_micros(40));
+        m.record_transfer("canny", 64, 32);
+        let snap = reg.snapshot();
+        assert_eq!(snap.counter("wrm.ops_cpu"), 1);
+        assert_eq!(snap.counter("wrm.ops_gpu"), 1);
+        assert_eq!(snap.counter("wrm.upload_bytes"), 64);
+        assert_eq!(snap.counter("wrm.download_bytes"), 32);
+        let h = snap.histogram("wrm.op_us").unwrap();
+        assert_eq!(h.count, 2);
+        assert_eq!(h.sum, 140);
+        // registry totals agree with the report the run prints
+        let r = m.report();
+        assert_eq!(
+            r.total_executed(),
+            snap.counter("wrm.ops_cpu") + snap.counter("wrm.ops_gpu")
+        );
     }
 
     #[test]

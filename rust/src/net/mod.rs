@@ -38,11 +38,18 @@
 //! one-shot client calls ([`submit_job`], [`job_reports`],
 //! [`cancel_job`], [`fetch_job_spec`]) each use a short-lived
 //! connection, so control traffic never blocks behind a work channel.
+//!
+//! Observability (proto v6) piggybacks on the same channels: a tracing
+//! worker ships its drained event rings as fire-and-forget `TraceBatch`
+//! frames on the completion channel (heartbeat cadence, so tracing adds
+//! no connections and no round-trips), and `htap top` polls the live
+//! per-worker utilization with a one-shot `StatsQuery` ([`utilization`]).
 
 pub mod proto;
 
 use crate::coordinator::manager::{WorkBatch, WorkRequest, WorkSource};
 use crate::data::staging::WorkerId;
+use crate::obs::{self, EventKind, TraceEvent, Tracer, UtilRow};
 use crate::runtime::sync::{self, Mutex};
 use crate::service::{Endpoint, JobSummary};
 use crate::{Error, Result};
@@ -259,6 +266,18 @@ fn serve_connection_inner(
                 };
                 proto::write_message_buf(&mut writer, &reply, &mut scratch)?;
             }
+            Message::TraceBatch { worker, events } => {
+                // completion channel, fire-and-forget: merge and move on
+                ep.trace_batch(worker, events);
+            }
+            Message::StatsQuery => {
+                let rows = ep.utilization();
+                proto::write_message_buf(
+                    &mut writer,
+                    &Message::StatsReport { rows },
+                    &mut scratch,
+                )?;
+            }
             other => {
                 return Err(Error::Net(format!("unexpected message {other:?} on server")));
             }
@@ -272,10 +291,23 @@ fn serve_connection_inner(
 pub struct RemoteManager {
     work: Mutex<(BufReader<TcpStream>, BufWriter<TcpStream>, Vec<u8>)>,
     completion: Mutex<(BufWriter<TcpStream>, Vec<u8>)>,
+    /// Frame send/recv events land here (disabled by default).
+    tracer: Tracer,
+    tx_frames: obs::Counter,
+    tx_bytes: obs::Counter,
+    rx_frames: obs::Counter,
 }
 
 impl RemoteManager {
     pub fn connect(addr: &str) -> Result<Self> {
+        Self::connect_with_obs(addr, &obs::Registry::new(), Tracer::disabled())
+    }
+
+    /// [`RemoteManager::connect`] with instrumentation: frame/byte
+    /// counters register as `net.*` in `registry`, and every work-channel
+    /// frame records a `FrameSend`/`FrameRecv` event when `tracer` is
+    /// enabled (`chunk` carries the payload size in bytes).
+    pub fn connect_with_obs(addr: &str, registry: &obs::Registry, tracer: Tracer) -> Result<Self> {
         let work = TcpStream::connect(addr).map_err(|e| Error::Net(e.to_string()))?;
         work.set_nodelay(true).ok();
         let completion = TcpStream::connect(addr).map_err(|e| Error::Net(e.to_string()))?;
@@ -284,7 +316,21 @@ impl RemoteManager {
         Ok(RemoteManager {
             work: Mutex::new((BufReader::new(work), BufWriter::new(wr), Vec::new())),
             completion: Mutex::new((BufWriter::new(completion), Vec::new())),
+            tracer,
+            tx_frames: registry.counter("net.tx_frames"),
+            tx_bytes: registry.counter("net.tx_bytes"),
+            rx_frames: registry.counter("net.rx_frames"),
         })
+    }
+
+    /// Count (and, when tracing, record) one sent frame of `bytes` bytes.
+    fn note_tx(&self, bytes: usize) {
+        self.tx_frames.inc();
+        self.tx_bytes.add(bytes as u64);
+        self.tracer.record(TraceEvent {
+            chunk: bytes as u64,
+            ..TraceEvent::of(EventKind::FrameSend)
+        });
     }
 
     /// Fire-and-forget a membership message on the completion channel.
@@ -320,8 +366,14 @@ impl WorkSource for RemoteManager {
         if proto::write_message_buf(writer, &msg, scratch).is_err() {
             return WorkBatch::default();
         }
+        self.note_tx(scratch.len());
         match proto::read_message(reader) {
             Ok(Message::Assign { assignments, prefetch, replicate }) => {
+                self.rx_frames.inc();
+                self.tracer.record(TraceEvent {
+                    chunk: assignments.len() as u64,
+                    ..TraceEvent::of(EventKind::FrameRecv)
+                });
                 WorkBatch { assignments, prefetch, replicate, idle: false }
             }
             // service endpoint, nothing assignable right now: surface the
@@ -338,11 +390,17 @@ impl WorkSource for RemoteManager {
             return;
         };
         let (writer, scratch) = &mut *chan;
-        let _ = proto::write_message_buf(
+        let sent = proto::write_message_buf(
             writer,
             &Message::Complete { instance: instance_id, outputs },
             scratch,
-        );
+        )
+        .is_ok();
+        let bytes = scratch.len();
+        drop(chan);
+        if sent {
+            self.note_tx(bytes);
+        }
     }
 
     fn register(&self, worker: WorkerId, lease_ms: u64) {
@@ -367,6 +425,13 @@ impl WorkSource for RemoteManager {
 
     fn goodbye(&self, worker: WorkerId) {
         self.send_completion(&Message::Goodbye { worker });
+    }
+
+    fn trace_events(&self, worker: WorkerId, events: Vec<TraceEvent>) {
+        // fire-and-forget on the completion channel, like heartbeats; the
+        // batch itself is deliberately not counted as a FrameSend (the
+        // trace transport must not feed its own trace)
+        self.send_completion(&Message::TraceBatch { worker, events });
     }
 }
 
@@ -429,6 +494,15 @@ pub fn fetch_job_spec(addr: &str, job: u64) -> Result<(String, String)> {
     match call_service(addr, &Message::GetJob { job })? {
         Message::JobSpec { tenant, workflow_json, .. } => Ok((tenant, workflow_json)),
         other => Err(Error::Net(format!("unexpected job-spec reply {other:?}"))),
+    }
+}
+
+/// Poll a running manager/service for its live per-(worker, job)
+/// utilization rows — the `htap top` feed (proto v6 `StatsQuery`).
+pub fn utilization(addr: &str) -> Result<Vec<UtilRow>> {
+    match call_service(addr, &Message::StatsQuery)? {
+        Message::StatsReport { rows } => Ok(rows),
+        other => Err(Error::Net(format!("unexpected stats reply {other:?}"))),
     }
 }
 
@@ -524,6 +598,59 @@ mod tests {
         drop(remote);
         srv.join().unwrap().unwrap();
         assert_eq!(mgr.member_count(), 0);
+        assert!(mgr.error().is_none());
+    }
+
+    #[test]
+    fn trace_batches_and_stats_polls_flow_over_tcp() {
+        let wf = tiny_workflow();
+        let loader: crate::coordinator::ChunkLoader =
+            Arc::new(|c| Ok(vec![Value::Scalar(c as f32)]));
+        let mgr = Manager::new(wf, loader, 3).unwrap();
+        let server = ManagerServer::bind("127.0.0.1:0", mgr.clone()).unwrap();
+        let addr = server.local_addr();
+        let srv = std::thread::spawn(move || server.serve());
+
+        let remote = RemoteManager::connect(&addr).unwrap();
+        // a drained worker ring ships on the completion channel...
+        remote.trace_events(
+            5,
+            vec![TraceEvent {
+                ts_us: 10,
+                dur_us: 7,
+                worker: 5,
+                job: 1,
+                ..TraceEvent::of(EventKind::OpEnd)
+            }],
+        );
+        // ...and lands in the manager's collector (async channel)
+        for _ in 0..200 {
+            if !mgr.collector().is_empty() {
+                break;
+            }
+            std::thread::sleep(std::time::Duration::from_millis(5));
+        }
+        assert_eq!(mgr.collector().len(), 1);
+
+        // the htap-top poll sees the merged rollup over a one-shot call
+        let rows = utilization(&addr).unwrap();
+        assert_eq!(rows.len(), 1);
+        assert_eq!((rows[0].worker, rows[0].job), (5, 1));
+        assert_eq!((rows[0].ops, rows[0].busy_us), (1, 7));
+
+        // drain the workflow so serve() returns
+        loop {
+            let batch = remote.request(4);
+            if batch.is_empty() {
+                break;
+            }
+            for a in batch {
+                let v = a.inputs[0].as_scalar().unwrap();
+                remote.complete(a.instance_id, vec![Value::Scalar(v * 2.0)]);
+            }
+        }
+        drop(remote);
+        srv.join().unwrap().unwrap();
         assert!(mgr.error().is_none());
     }
 

@@ -20,10 +20,14 @@
 //! lifecycle queries), `CancelJob`, `GetJob`/`JobSpec` (workers fetch
 //! the workflow of a job they were assigned), and `Idle` (the
 //! long-running service has nothing assignable *right now* — poll
-//! again; an empty `Assign` still means shut down).  A version mismatch
-//! is a decode error, not a silent misparse.
+//! again; an empty `Assign` still means shut down).  v6 added the
+//! observability surface: `TraceBatch` (a worker ships its drained trace
+//! ring, piggybacked on the heartbeat cadence) and `StatsQuery` /
+//! `StatsReport` (the `htap top` live per-tenant/per-worker utilization
+//! poll).  A version mismatch is a decode error, not a silent misparse.
 
 use crate::coordinator::manager::Assignment;
+use crate::obs::{EventKind, Name, TraceEvent, UtilRow};
 use crate::service::JobSummary;
 use crate::runtime::tensor::{f32s_from_le, f32s_to_le};
 use crate::runtime::{HostTensor, Value};
@@ -38,10 +42,11 @@ const MAX_FRAME: u32 = 1 << 30;
 /// and locality flags, prefetch hints) were added, to 3 for the
 /// storage-tier fields (demoted deltas, replica flags, replicate hints),
 /// to 4 for the elastic-membership messages (Hello / Heartbeat /
-/// Goodbye with a lease term), and to 5 for the multi-tenant service
+/// Goodbye with a lease term), to 5 for the multi-tenant service
 /// messages (Submit / JobStatus / JobReport / CancelJob / GetJob /
-/// JobSpec / Idle).
-pub const PROTO_VERSION: u8 = 5;
+/// JobSpec / Idle), and to 6 for the observability messages
+/// (TraceBatch / StatsQuery / StatsReport).
+pub const PROTO_VERSION: u8 = 6;
 
 /// Protocol messages.
 #[derive(Debug, Clone, PartialEq)]
@@ -107,6 +112,18 @@ pub enum Message {
     /// Service -> Worker (v5): reply to `GetJob` — the tenant (staging
     /// quota identity) and workflow JSON to compile against the registry.
     JobSpec { job: u64, tenant: String, workflow_json: String },
+    /// Worker -> Manager (v6): a drained batch of trace events, shipped
+    /// on the completion channel at the heartbeat cadence (plus one final
+    /// drain at exit).  Fire-and-forget: the manager merges the batch
+    /// into its collector, no reply.
+    TraceBatch { worker: u64, events: Vec<TraceEvent> },
+    /// Client -> Manager/Service (v6): ask for the live per-worker
+    /// utilization rollups (`htap top`).  Replied with `StatsReport`.
+    StatsQuery,
+    /// Manager/Service -> Client (v6): reply to `StatsQuery` — one row
+    /// per (worker, job) with tenant attribution joined in by the
+    /// service layer.
+    StatsReport { rows: Vec<UtilRow> },
 }
 
 const TAG_REQUEST: u8 = 1;
@@ -123,6 +140,9 @@ const TAG_CANCEL_JOB: u8 = 11;
 const TAG_JOB_REPORT: u8 = 12;
 const TAG_GET_JOB: u8 = 13;
 const TAG_JOB_SPEC: u8 = 14;
+const TAG_TRACE_BATCH: u8 = 15;
+const TAG_STATS_QUERY: u8 = 16;
+const TAG_STATS_REPORT: u8 = 17;
 
 /// Assignment flag bits (v2; FLAG_REPLICA since v3).
 const FLAG_NEEDS_CHUNK: u8 = 1;
@@ -174,6 +194,39 @@ fn put_ids(buf: &mut Vec<u8>, ids: &[u64]) {
 fn put_str(buf: &mut Vec<u8>, s: &str) {
     put_u32(buf, s.len() as u32);
     buf.extend_from_slice(s.as_bytes());
+}
+
+/// Trace-event wire layout (v6): fixed numeric fields then a one-byte
+/// length-prefixed name (names are capped at [`crate::obs::NAME_CAP`]
+/// bytes, so a u8 length suffices).  51 bytes minimum per event — the
+/// `count()` bound for `TraceBatch`.
+const MIN_EVENT_BYTES: usize = 51;
+
+fn put_event(buf: &mut Vec<u8>, ev: &TraceEvent) {
+    put_u64(buf, ev.ts_us);
+    put_u64(buf, ev.dur_us);
+    buf.push(ev.kind as u8);
+    buf.push(ev.device);
+    put_u64(buf, ev.worker);
+    put_u32(buf, ev.lane);
+    put_u64(buf, ev.job);
+    put_u32(buf, ev.stage);
+    put_u64(buf, ev.chunk);
+    buf.push(ev.name.as_bytes().len() as u8);
+    buf.extend_from_slice(ev.name.as_bytes());
+}
+
+/// Utilization-row wire layout (v6): worker + job + tenant string +
+/// ops + busy_us.  36 bytes minimum per row — the `count()` bound for
+/// `StatsReport`.
+const MIN_UTIL_ROW_BYTES: usize = 36;
+
+fn put_util_row(buf: &mut Vec<u8>, r: &UtilRow) {
+    put_u64(buf, r.worker);
+    put_u64(buf, r.job);
+    put_str(buf, &r.tenant);
+    put_u64(buf, r.ops);
+    put_u64(buf, r.busy_us);
 }
 
 struct Cursor<'a> {
@@ -274,6 +327,33 @@ impl<'a> Cursor<'a> {
     fn string(&mut self) -> Result<String> {
         let n = self.u32()? as usize;
         String::from_utf8(self.take(n)?.to_vec()).map_err(|_| Error::Net("bad utf8".into()))
+    }
+
+    fn event(&mut self) -> Result<TraceEvent> {
+        let ts_us = self.u64()?;
+        let dur_us = self.u64()?;
+        let kind_byte = self.u8()?;
+        let kind = EventKind::from_u8(kind_byte)
+            .ok_or_else(|| Error::Net(format!("bad trace event kind {kind_byte}")))?;
+        let device = self.u8()?;
+        let worker = self.u64()?;
+        let lane = self.u32()?;
+        let job = self.u64()?;
+        let stage = self.u32()?;
+        let chunk = self.u64()?;
+        let name_len = self.u8()? as usize;
+        let name = Name::from_bytes(self.take(name_len)?)
+            .ok_or_else(|| Error::Net("bad trace event name".into()))?;
+        Ok(TraceEvent { ts_us, dur_us, kind, device, worker, lane, job, stage, chunk, name })
+    }
+
+    fn util_row(&mut self) -> Result<UtilRow> {
+        let worker = self.u64()?;
+        let job = self.u64()?;
+        let tenant = self.string()?;
+        let ops = self.u64()?;
+        let busy_us = self.u64()?;
+        Ok(UtilRow { worker, job, tenant, ops, busy_us })
     }
 }
 
@@ -385,6 +465,8 @@ pub fn encode_into(msg: &Message, buf: &mut Vec<u8>) {
                 put_u64(buf, j.cold);
                 put_u64(buf, j.steals);
                 put_u32(buf, j.priority);
+                put_u64(buf, j.ops);
+                put_u64(buf, j.busy_us);
             }
         }
         Message::GetJob { job } => {
@@ -396,6 +478,25 @@ pub fn encode_into(msg: &Message, buf: &mut Vec<u8>) {
             put_u64(buf, *job);
             put_str(buf, tenant);
             put_str(buf, workflow_json);
+        }
+        Message::TraceBatch { worker, events } => {
+            buf.push(TAG_TRACE_BATCH);
+            put_u64(buf, *worker);
+            buf.reserve(4 + events.len() * MIN_EVENT_BYTES);
+            put_u32(buf, events.len() as u32);
+            for ev in events {
+                put_event(buf, ev);
+            }
+        }
+        Message::StatsQuery => {
+            buf.push(TAG_STATS_QUERY);
+        }
+        Message::StatsReport { rows } => {
+            buf.push(TAG_STATS_REPORT);
+            put_u32(buf, rows.len() as u32);
+            for r in rows {
+                put_util_row(buf, r);
+            }
         }
     }
 }
@@ -470,8 +571,8 @@ pub fn decode(data: &[u8]) -> Result<Message> {
         TAG_CANCEL_JOB => Message::CancelJob { job: c.u64()? },
         TAG_JOB_REPORT => {
             // job + 3 string lengths + done/total/assigned +
-            // hits/cold/steals + priority
-            let n = c.count(72)?;
+            // hits/cold/steals + priority + ops/busy_us (v6)
+            let n = c.count(88)?;
             let mut jobs = Vec::with_capacity(n);
             for _ in 0..n {
                 let job = c.u64()?;
@@ -485,6 +586,8 @@ pub fn decode(data: &[u8]) -> Result<Message> {
                 let cold = c.u64()?;
                 let steals = c.u64()?;
                 let priority = c.u32()?;
+                let ops = c.u64()?;
+                let busy_us = c.u64()?;
                 jobs.push(JobSummary {
                     job,
                     tenant,
@@ -497,6 +600,8 @@ pub fn decode(data: &[u8]) -> Result<Message> {
                     cold,
                     steals,
                     priority,
+                    ops,
+                    busy_us,
                 });
             }
             Message::JobReport { jobs }
@@ -507,6 +612,24 @@ pub fn decode(data: &[u8]) -> Result<Message> {
             let tenant = c.string()?;
             let workflow_json = c.string()?;
             Message::JobSpec { job, tenant, workflow_json }
+        }
+        TAG_TRACE_BATCH => {
+            let worker = c.u64()?;
+            let n = c.count(MIN_EVENT_BYTES)?;
+            let mut events = Vec::with_capacity(n);
+            for _ in 0..n {
+                events.push(c.event()?);
+            }
+            Message::TraceBatch { worker, events }
+        }
+        TAG_STATS_QUERY => Message::StatsQuery,
+        TAG_STATS_REPORT => {
+            let n = c.count(MIN_UTIL_ROW_BYTES)?;
+            let mut rows = Vec::with_capacity(n);
+            for _ in 0..n {
+                rows.push(c.util_row()?);
+            }
+            Message::StatsReport { rows }
         }
         t => return Err(Error::Net(format!("unknown message tag {t}"))),
     };
@@ -690,6 +813,8 @@ mod tests {
                     cold: 1,
                     steals: 0,
                     priority: 1,
+                    ops: 4,
+                    busy_us: 1234,
                 },
                 JobSummary {
                     job: 2,
@@ -703,6 +828,8 @@ mod tests {
                     cold: 0,
                     steals: 0,
                     priority: 4,
+                    ops: 0,
+                    busy_us: 0,
                 },
             ],
         });
@@ -731,6 +858,83 @@ mod tests {
         assert!(decode(&evil).is_err());
     }
 
+    fn event(kind: crate::obs::EventKind, ts_us: u64) -> TraceEvent {
+        TraceEvent {
+            ts_us,
+            dur_us: 120,
+            device: crate::obs::DEV_GPU,
+            worker: 3,
+            lane: 2,
+            job: 7,
+            stage: 1,
+            chunk: 42,
+            name: Name::new("normalization"),
+            ..TraceEvent::of(kind)
+        }
+    }
+
+    #[test]
+    fn trace_messages_roundtrip() {
+        roundtrip(Message::StatsQuery);
+        roundtrip(Message::TraceBatch { worker: 0, events: vec![] });
+        // every event kind must survive the wire — the kind byte is
+        // validated on decode, so a missing arm would show up here
+        let events: Vec<TraceEvent> =
+            EventKind::ALL.iter().enumerate().map(|(i, &k)| event(k, i as u64 * 10)).collect();
+        roundtrip(Message::TraceBatch { worker: 3, events });
+        // unicode + empty names
+        roundtrip(Message::TraceBatch {
+            worker: 1,
+            events: vec![
+                TraceEvent { name: Name::new("op ✓ µs"), ..TraceEvent::of(EventKind::OpEnd) },
+                TraceEvent::of(EventKind::Dropped),
+            ],
+        });
+        roundtrip(Message::StatsReport { rows: vec![] });
+        roundtrip(Message::StatsReport {
+            rows: vec![
+                UtilRow { worker: 1, job: 2, tenant: "alice".into(), ops: 9, busy_us: 4200 },
+                UtilRow { worker: 2, job: 2, tenant: "bob — ✓".into(), ops: 1, busy_us: 17 },
+            ],
+        });
+    }
+
+    #[test]
+    fn truncated_trace_frames_rejected() {
+        // every strict prefix of a TraceBatch must be a decode error, not
+        // a panic or a silently short batch
+        let enc = encode(&Message::TraceBatch {
+            worker: 3,
+            events: vec![event(EventKind::OpEnd, 100), event(EventKind::StagingHit, 200)],
+        });
+        for cut in 1..enc.len() {
+            assert!(decode(&enc[..cut]).is_err(), "prefix of {cut} bytes decoded");
+        }
+        let enc = encode(&Message::StatsReport {
+            rows: vec![UtilRow { worker: 1, job: 1, tenant: "t".into(), ops: 1, busy_us: 1 }],
+        });
+        for cut in 1..enc.len() {
+            assert!(decode(&enc[..cut]).is_err(), "prefix of {cut} bytes decoded");
+        }
+        // a hostile event count must fail before preallocation
+        let mut evil = vec![PROTO_VERSION, TAG_TRACE_BATCH];
+        put_u64(&mut evil, 1); // worker
+        put_u32(&mut evil, u32::MAX);
+        assert!(decode(&evil).is_err());
+        let mut evil = vec![PROTO_VERSION, TAG_STATS_REPORT];
+        put_u32(&mut evil, u32::MAX);
+        assert!(decode(&evil).is_err());
+        // an unknown kind byte is a decode error, not a transmuted enum
+        let mut enc = encode(&Message::TraceBatch {
+            worker: 1,
+            events: vec![event(EventKind::OpBegin, 5)],
+        });
+        let kind_at = 1 + 1 + 8 + 4 + 8 + 8; // version, tag, worker, count, ts, dur
+        enc[kind_at] = 0xEE;
+        let err = decode(&enc).unwrap_err();
+        assert!(err.to_string().contains("kind"), "{err}");
+    }
+
     #[test]
     fn truncated_membership_frames_rejected() {
         let enc = encode(&Message::Hello { worker: 7, lease_ms: 500 });
@@ -746,7 +950,7 @@ mod tests {
     fn version_mismatch_is_a_decode_error() {
         let mut enc = encode(&request(1));
         assert_eq!(enc[0], PROTO_VERSION);
-        enc[0] = PROTO_VERSION - 1; // a v4 peer without the service messages
+        enc[0] = PROTO_VERSION - 1; // a v5 peer without the trace messages
         let err = decode(&enc).unwrap_err();
         assert!(err.to_string().contains("protocol version"), "{err}");
         // and through the framed reader

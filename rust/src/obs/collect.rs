@@ -1,0 +1,234 @@
+//! Cluster-wide trace collection: merge worker batches into one ordered
+//! stream and compute per-job / per-worker utilization rollups.
+//!
+//! Workers drain their rings and ship [`TraceEvent`] batches to the
+//! manager piggybacked on the heartbeat cycle (proto v6 `TraceBatch`);
+//! the manager ingests them here next to its own locally recorded
+//! events.  [`Collector::merged`] is the export stream; the rollup views
+//! feed `JobReport` and the `htap top` utilization table.
+
+use std::sync::Mutex;
+
+use super::trace::{EventKind, TraceEvent};
+
+/// Per-job utilization rollup: op executions attributed to one job.
+#[derive(Debug, Clone, Default, PartialEq, Eq)]
+pub struct JobRollup {
+    pub job: u64,
+    /// Op instances completed.
+    pub ops: u64,
+    /// Execution time summed over those ops, µs.
+    pub busy_us: u64,
+}
+
+/// One row of the `htap top` table: a (worker, job) cell.  `tenant` is
+/// joined in by the service layer (the collector doesn't know tenants).
+#[derive(Debug, Clone, Default, PartialEq, Eq)]
+pub struct UtilRow {
+    pub worker: u64,
+    pub job: u64,
+    pub tenant: String,
+    pub ops: u64,
+    pub busy_us: u64,
+}
+
+#[derive(Debug, Default)]
+struct Inner {
+    events: Vec<TraceEvent>,
+    dropped: u64,
+}
+
+/// Thread-safe merge point for trace batches from every worker plus the
+/// local process.
+#[derive(Debug, Default)]
+pub struct Collector {
+    inner: Mutex<Inner>,
+}
+
+impl Collector {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    fn lock(&self) -> std::sync::MutexGuard<'_, Inner> {
+        match self.inner.lock() {
+            Ok(g) => g,
+            Err(p) => p.into_inner(),
+        }
+    }
+
+    /// Ingest a batch shipped by `worker`; events that were recorded
+    /// before the worker learned its id (`worker == 0`) get stamped.
+    pub fn ingest(&self, worker: u64, mut events: Vec<TraceEvent>) {
+        for ev in &mut events {
+            if ev.worker == 0 {
+                ev.worker = worker;
+            }
+        }
+        self.ingest_local(events);
+    }
+
+    /// Ingest locally recorded events as-is.
+    pub fn ingest_local(&self, events: Vec<TraceEvent>) {
+        let mut inner = self.lock();
+        for ev in &events {
+            if ev.kind == EventKind::Dropped {
+                inner.dropped += ev.chunk;
+            }
+        }
+        inner.events.extend(events);
+    }
+
+    pub fn len(&self) -> usize {
+        self.lock().events.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Total events lost to ring overflow across all ingested batches.
+    pub fn dropped(&self) -> u64 {
+        self.lock().dropped
+    }
+
+    /// The merged stream, ordered by timestamp (ties broken by worker
+    /// then lane so repeated exports are deterministic).
+    pub fn merged(&self) -> Vec<TraceEvent> {
+        let mut evs = self.lock().events.clone();
+        evs.sort_by_key(|e| (e.ts_us, e.worker, e.lane));
+        evs
+    }
+
+    /// Per-job rollup over completed op spans, job-sorted.
+    pub fn job_rollups(&self) -> Vec<JobRollup> {
+        let inner = self.lock();
+        let mut rollups: Vec<JobRollup> = Vec::new();
+        for ev in inner.events.iter().filter(|e| e.kind == EventKind::OpEnd) {
+            match rollups.iter_mut().find(|r| r.job == ev.job) {
+                Some(r) => {
+                    r.ops += 1;
+                    r.busy_us += ev.dur_us;
+                }
+                None => rollups.push(JobRollup { job: ev.job, ops: 1, busy_us: ev.dur_us }),
+            }
+        }
+        rollups.sort_by_key(|r| r.job);
+        rollups
+    }
+
+    /// Per-(worker, job) rollup rows for the live utilization table,
+    /// sorted by worker then job.  Tenants are left blank here.
+    pub fn util_rows(&self) -> Vec<UtilRow> {
+        let inner = self.lock();
+        let mut rows: Vec<UtilRow> = Vec::new();
+        for ev in inner.events.iter().filter(|e| e.kind == EventKind::OpEnd) {
+            match rows.iter_mut().find(|r| r.worker == ev.worker && r.job == ev.job) {
+                Some(r) => {
+                    r.ops += 1;
+                    r.busy_us += ev.dur_us;
+                }
+                None => rows.push(UtilRow {
+                    worker: ev.worker,
+                    job: ev.job,
+                    tenant: String::new(),
+                    ops: 1,
+                    busy_us: ev.dur_us,
+                }),
+            }
+        }
+        rows.sort_by_key(|r| (r.worker, r.job));
+        rows
+    }
+}
+
+/// Render utilization rows as the `htap top` text table.
+pub fn render_util_table(rows: &[UtilRow]) -> String {
+    let mut out = format!(
+        "{:<8} {:<6} {:<12} {:>8} {:>12}\n",
+        "worker", "job", "tenant", "ops", "busy(ms)"
+    );
+    for r in rows {
+        let tenant = if r.tenant.is_empty() { "-" } else { r.tenant.as_str() };
+        out.push_str(&format!(
+            "{:<8} {:<6} {:<12} {:>8} {:>12.1}\n",
+            r.worker,
+            r.job,
+            tenant,
+            r.ops,
+            r.busy_us as f64 / 1e3
+        ));
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn op_end(worker: u64, job: u64, dur_us: u64) -> TraceEvent {
+        let mut ev = TraceEvent::of(EventKind::OpEnd);
+        ev.ts_us = 1;
+        ev.worker = worker;
+        ev.job = job;
+        ev.dur_us = dur_us;
+        ev
+    }
+
+    #[test]
+    fn ingest_stamps_unidentified_workers() {
+        let c = Collector::new();
+        let mut ev = TraceEvent::of(EventKind::StagingHit);
+        ev.ts_us = 5;
+        c.ingest(3, vec![ev]);
+        assert_eq!(c.merged()[0].worker, 3);
+        // pre-stamped events pass through
+        let mut ev = TraceEvent::of(EventKind::StagingHit);
+        ev.ts_us = 6;
+        ev.worker = 9;
+        c.ingest(3, vec![ev]);
+        assert_eq!(c.merged()[1].worker, 9);
+    }
+
+    #[test]
+    fn merged_orders_by_timestamp() {
+        let c = Collector::new();
+        c.ingest(2, vec![op_end(2, 0, 10)]);
+        let mut early = op_end(1, 0, 5);
+        early.ts_us = 0; // ingest does not stamp ts, only worker
+        early.ts_us = 1;
+        c.ingest(1, vec![early]);
+        let m = c.merged();
+        assert_eq!(m.len(), 2);
+        assert!(m[0].ts_us <= m[1].ts_us);
+    }
+
+    #[test]
+    fn rollups_group_by_job_and_worker() {
+        let c = Collector::new();
+        c.ingest(1, vec![op_end(1, 7, 100), op_end(1, 7, 50), op_end(1, 8, 25)]);
+        c.ingest(2, vec![op_end(2, 7, 10)]);
+        let jobs = c.job_rollups();
+        assert_eq!(jobs.len(), 2);
+        assert_eq!(jobs[0], JobRollup { job: 7, ops: 3, busy_us: 160 });
+        assert_eq!(jobs[1], JobRollup { job: 8, ops: 1, busy_us: 25 });
+        let rows = c.util_rows();
+        assert_eq!(rows.len(), 3);
+        assert_eq!((rows[0].worker, rows[0].job, rows[0].ops), (1, 7, 2));
+        assert_eq!((rows[2].worker, rows[2].job, rows[2].busy_us), (2, 7, 10));
+        let table = render_util_table(&rows);
+        assert!(table.contains("worker"), "{table}");
+        assert!(table.contains("0.2"), "busy ms column: {table}");
+    }
+
+    #[test]
+    fn dropped_counts_accumulate() {
+        let c = Collector::new();
+        let mut d = TraceEvent::of(EventKind::Dropped);
+        d.ts_us = 1;
+        d.chunk = 4;
+        c.ingest(1, vec![d]);
+        c.ingest(2, vec![d]);
+        assert_eq!(c.dropped(), 8);
+    }
+}

@@ -1,0 +1,207 @@
+//! Trace export: Chrome `trace_event` JSON (perfetto / chrome://tracing)
+//! and a line-per-event JSONL log.
+//!
+//! The Chrome stream renders completed op spans ([`EventKind::OpEnd`],
+//! [`EventKind::QueueWait`]) as `"ph":"X"` complete events — `ts` is the
+//! span *start*, so a span whose end was stamped at drain time still
+//! lands where it began — and every other kind as a thread-scoped
+//! instant.  `pid` is the worker id and `tid` the executor lane, so the
+//! perfetto track layout reads as "one process per worker, one track per
+//! device thread".  `htap sim --trace-out` emits the same schema with
+//! virtual timestamps, so simulated and real timelines diff directly.
+//!
+//! JSON is hand-rolled: events are flat records over a closed field set,
+//! and the crate deliberately has no serialization dependency.
+
+use std::io::Write;
+
+use crate::Result;
+
+use super::trace::{device_name, EventKind, TraceEvent};
+
+/// Minimal JSON string escaping (names are short ASCII identifiers in
+/// practice, but tenants are user input).
+fn esc(s: &str) -> String {
+    let mut out = String::with_capacity(s.len());
+    for c in s.chars() {
+        match c {
+            '"' => out.push_str("\\\""),
+            '\\' => out.push_str("\\\\"),
+            '\n' => out.push_str("\\n"),
+            '\r' => out.push_str("\\r"),
+            '\t' => out.push_str("\\t"),
+            c if (c as u32) < 0x20 => out.push_str(&format!("\\u{:04x}", c as u32)),
+            c => out.push(c),
+        }
+    }
+    out
+}
+
+fn chrome_args(ev: &TraceEvent) -> String {
+    format!(
+        "{{\"job\":{},\"stage\":{},\"chunk\":{},\"device\":\"{}\"}}",
+        ev.job,
+        ev.stage,
+        ev.chunk,
+        device_name(ev.device)
+    )
+}
+
+fn chrome_record(ev: &TraceEvent) -> Option<String> {
+    let name = if ev.name.is_empty() { ev.kind.name() } else { ev.name.as_str() };
+    match ev.kind {
+        // OpBegin is implied by the X event built from its OpEnd; keeping
+        // both would double-draw every span.
+        EventKind::OpBegin => None,
+        EventKind::OpEnd | EventKind::QueueWait => Some(format!(
+            "{{\"name\":\"{}\",\"cat\":\"{}\",\"ph\":\"X\",\"ts\":{},\"dur\":{},\
+             \"pid\":{},\"tid\":{},\"args\":{}}}",
+            esc(name),
+            ev.kind.category(),
+            ev.ts_us.saturating_sub(ev.dur_us),
+            ev.dur_us,
+            ev.worker,
+            ev.lane,
+            chrome_args(ev)
+        )),
+        _ => Some(format!(
+            "{{\"name\":\"{}\",\"cat\":\"{}\",\"ph\":\"i\",\"ts\":{},\"s\":\"t\",\
+             \"pid\":{},\"tid\":{},\"args\":{}}}",
+            esc(name),
+            ev.kind.category(),
+            ev.ts_us,
+            ev.worker,
+            ev.lane,
+            chrome_args(ev)
+        )),
+    }
+}
+
+/// The full Chrome-trace document for an event stream.
+pub fn chrome_trace_json(events: &[TraceEvent]) -> String {
+    let mut out = String::from("{\"traceEvents\":[\n");
+    let mut first = true;
+    for ev in events {
+        if let Some(rec) = chrome_record(ev) {
+            if !first {
+                out.push_str(",\n");
+            }
+            out.push_str(&rec);
+            first = false;
+        }
+    }
+    out.push_str("\n]}\n");
+    out
+}
+
+/// One JSON object per event, every field, nothing dropped — the
+/// machine-diffable log next to the Chrome view.
+pub fn jsonl(events: &[TraceEvent]) -> String {
+    let mut out = String::new();
+    for ev in events {
+        out.push_str(&format!(
+            "{{\"ts_us\":{},\"kind\":\"{}\",\"dur_us\":{},\"worker\":{},\
+             \"device\":\"{}\",\"lane\":{},\"job\":{},\"stage\":{},\"chunk\":{},\
+             \"name\":\"{}\"}}\n",
+            ev.ts_us,
+            ev.kind.name(),
+            ev.dur_us,
+            ev.worker,
+            device_name(ev.device),
+            ev.lane,
+            ev.job,
+            ev.stage,
+            ev.chunk,
+            esc(ev.name.as_str())
+        ));
+    }
+    out
+}
+
+/// Write the Chrome trace to `path` and the JSONL log to `path.jsonl`.
+pub fn write_trace(path: &str, events: &[TraceEvent]) -> Result<()> {
+    let mut f = std::fs::File::create(path)?;
+    f.write_all(chrome_trace_json(events).as_bytes())?;
+    f.sync_all()?;
+    let jl = format!("{path}.jsonl");
+    let mut f = std::fs::File::create(&jl)?;
+    f.write_all(jsonl(events).as_bytes())?;
+    f.sync_all()?;
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::obs::trace::{Name, DEV_GPU};
+
+    fn span(ts: u64, dur: u64, name: &str) -> TraceEvent {
+        let mut ev = TraceEvent::of(EventKind::OpEnd);
+        ev.ts_us = ts;
+        ev.dur_us = dur;
+        ev.worker = 1;
+        ev.lane = 2;
+        ev.device = DEV_GPU;
+        ev.name = Name::new(name);
+        ev
+    }
+
+    #[test]
+    fn chrome_span_starts_at_begin() {
+        let doc = chrome_trace_json(&[span(150, 50, "watershed")]);
+        assert!(doc.contains("\"ph\":\"X\""), "{doc}");
+        assert!(doc.contains("\"ts\":100"), "{doc}");
+        assert!(doc.contains("\"dur\":50"), "{doc}");
+        assert!(doc.contains("\"pid\":1"), "{doc}");
+        assert!(doc.contains("\"tid\":2"), "{doc}");
+        assert!(doc.contains("\"name\":\"watershed\""), "{doc}");
+        assert!(doc.contains("\"device\":\"gpu\""), "{doc}");
+    }
+
+    #[test]
+    fn chrome_skips_op_begin_keeps_instants() {
+        let mut begin = TraceEvent::of(EventKind::OpBegin);
+        begin.ts_us = 100;
+        let mut hit = TraceEvent::of(EventKind::StagingHit);
+        hit.ts_us = 120;
+        hit.chunk = 9;
+        let doc = chrome_trace_json(&[begin, hit]);
+        assert!(!doc.contains("op-begin"), "{doc}");
+        assert!(doc.contains("\"name\":\"staging-hit\""), "{doc}");
+        assert!(doc.contains("\"ph\":\"i\""), "{doc}");
+        assert!(doc.contains("\"chunk\":9"), "{doc}");
+    }
+
+    #[test]
+    fn jsonl_keeps_every_event_and_field() {
+        let mut begin = TraceEvent::of(EventKind::OpBegin);
+        begin.ts_us = 100;
+        let out = jsonl(&[begin, span(150, 50, "canny")]);
+        assert_eq!(out.lines().count(), 2);
+        assert!(out.contains("\"kind\":\"op-begin\""), "{out}");
+        assert!(out.contains("\"kind\":\"op-end\""), "{out}");
+        assert!(out.contains("\"name\":\"canny\""), "{out}");
+    }
+
+    #[test]
+    fn escapes_hostile_names() {
+        let doc = chrome_trace_json(&[span(10, 5, "a\"b\\c")]);
+        assert!(doc.contains("a\\\"b\\\\c"), "{doc}");
+        assert_eq!(esc("tab\there"), "tab\\there");
+        assert_eq!(esc("\u{1}"), "\\u0001");
+    }
+
+    #[test]
+    fn write_trace_emits_both_files() {
+        let dir =
+            std::env::temp_dir().join(format!("htap-obs-export-{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("trace.json").to_string_lossy().to_string();
+        write_trace(&path, &[span(10, 5, "op")]).unwrap();
+        let doc = std::fs::read_to_string(&path).unwrap();
+        assert!(doc.starts_with("{\"traceEvents\":["), "{doc}");
+        let jl = std::fs::read_to_string(format!("{path}.jsonl")).unwrap();
+        assert!(jl.contains("\"kind\":\"op-end\""), "{jl}");
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+}

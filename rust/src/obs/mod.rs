@@ -1,0 +1,42 @@
+//! Observability: typed metrics registry, structured event tracing, and
+//! cluster-wide trace collection/export.
+//!
+//! The paper's claims are utilization claims — Figs. 8–10 are timelines
+//! and per-device busy fractions — so this subsystem makes every run
+//! *inspectable* instead of merely summarized:
+//!
+//! * [`registry`] — counters / gauges / log2-bucket histograms.  Hot
+//!   paths hold clonable atomic handles; the staging cache, WRM, net
+//!   framing and service layers register named instruments here instead
+//!   of hand-rolled `AtomicU64` struct fields.
+//! * [`trace`] — fixed-size [`TraceEvent`] records (op exec begin/end
+//!   with device + stage + chunk + job, WRM queue wait, staging
+//!   hit/miss/promote/demote/prefetch, frame send/recv, membership and
+//!   job lifecycle) written to per-thread bounded rings.  Recording
+//!   never blocks and never allocates in steady state; overflow is a
+//!   counted drop — safe inside `// lint: critical-section` regions.
+//! * [`collect`] — workers drain their rings on the heartbeat cadence
+//!   and ship batches to the manager (proto v6 `TraceBatch`); the
+//!   [`Collector`] merges them with locally recorded events into one
+//!   ordered stream with per-job / per-worker rollups.
+//! * [`export`] — Chrome `trace_event` JSON (open in perfetto or
+//!   chrome://tracing) plus a JSONL event log, written by `--trace-out`;
+//!   `htap sim --trace-out` emits the same schema so simulated and real
+//!   timelines diff directly, and `htap top` renders the live rollups.
+//!
+//! See `docs/observability.md` for the schema and workflows.
+
+pub mod collect;
+pub mod export;
+pub mod registry;
+pub mod trace;
+
+pub use collect::{render_util_table, Collector, JobRollup, UtilRow};
+pub use export::{chrome_trace_json, jsonl, write_trace};
+pub use registry::{
+    Counter, Gauge, HistSnapshot, Histogram, Registry, RegistrySnapshot, HIST_BUCKETS,
+};
+pub use trace::{
+    device_name, EventKind, Name, TraceEvent, Tracer, DEFAULT_RING_CAP, DEV_CPU, DEV_GPU,
+    DEV_NONE, NAME_CAP,
+};

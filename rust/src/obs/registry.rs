@@ -1,0 +1,322 @@
+//! Typed metrics registry: counters, gauges and log2-bucket histograms.
+//!
+//! Instruments are registered once (by name) and then written lock-free:
+//! each handle is a clonable `Arc` around atomics, so the hot paths that
+//! used to bump ad-hoc `AtomicU64` struct fields (staging cache, WRM
+//! dispatch, net framing, service admission) bump a [`Counter`] instead —
+//! same cost, but every instrument is now discoverable through one
+//! [`Registry::snapshot`] instead of scattered report structs.  The
+//! registry lock is touched only at registration and snapshot time, never
+//! on the increment path.
+
+use std::sync::atomic::{AtomicI64, AtomicU64, Ordering};
+use std::sync::{Arc, Mutex, MutexGuard};
+
+/// Number of histogram buckets.  Bucket 0 counts zero values; bucket
+/// `i >= 1` counts values in `[2^(i-1), 2^i)`; the last bucket absorbs
+/// everything at or above `2^(HIST_BUCKETS-2)`.
+pub const HIST_BUCKETS: usize = 32;
+
+/// Acquire `m`, recovering the guard if poisoned.  Registry state is
+/// plain counter lists; the last consistent view is always usable.
+fn lock_clean<T>(m: &Mutex<T>) -> MutexGuard<'_, T> {
+    match m.lock() {
+        Ok(g) => g,
+        Err(p) => p.into_inner(),
+    }
+}
+
+/// Monotone event counter.  `Clone` shares the underlying cell.
+#[derive(Debug, Clone, Default)]
+pub struct Counter(Arc<AtomicU64>);
+
+impl Counter {
+    pub fn inc(&self) {
+        self.add(1);
+    }
+
+    pub fn add(&self, n: u64) {
+        self.0.fetch_add(n, Ordering::Relaxed);
+    }
+
+    pub fn get(&self) -> u64 {
+        self.0.load(Ordering::Relaxed)
+    }
+}
+
+/// Instantaneous level (queue depths, resident bytes).  Signed so
+/// transient imbalance in add/sub pairs can't wrap.
+#[derive(Debug, Clone, Default)]
+pub struct Gauge(Arc<AtomicI64>);
+
+impl Gauge {
+    pub fn set(&self, v: i64) {
+        self.0.store(v, Ordering::Relaxed);
+    }
+
+    pub fn add(&self, d: i64) {
+        self.0.fetch_add(d, Ordering::Relaxed);
+    }
+
+    pub fn get(&self) -> i64 {
+        self.0.load(Ordering::Relaxed)
+    }
+}
+
+#[derive(Debug)]
+struct HistCells {
+    buckets: [AtomicU64; HIST_BUCKETS],
+    count: AtomicU64,
+    sum: AtomicU64,
+}
+
+/// Fixed log2-bucket histogram (latencies in µs, sizes in bytes).
+/// Observation is three relaxed atomic adds — no lock, no allocation.
+#[derive(Debug, Clone)]
+pub struct Histogram(Arc<HistCells>);
+
+impl Default for Histogram {
+    fn default() -> Self {
+        Histogram(Arc::new(HistCells {
+            buckets: std::array::from_fn(|_| AtomicU64::new(0)),
+            count: AtomicU64::new(0),
+            sum: AtomicU64::new(0),
+        }))
+    }
+}
+
+impl Histogram {
+    /// Bucket holding `v`: 0 for zero, else `floor(log2(v)) + 1`, clamped
+    /// to the last bucket.
+    pub fn bucket_index(v: u64) -> usize {
+        if v == 0 {
+            0
+        } else {
+            (64 - v.leading_zeros() as usize).min(HIST_BUCKETS - 1)
+        }
+    }
+
+    pub fn observe(&self, v: u64) {
+        self.0.buckets[Self::bucket_index(v)].fetch_add(1, Ordering::Relaxed);
+        self.0.count.fetch_add(1, Ordering::Relaxed);
+        self.0.sum.fetch_add(v, Ordering::Relaxed);
+    }
+
+    pub fn count(&self) -> u64 {
+        self.0.count.load(Ordering::Relaxed)
+    }
+
+    pub fn snapshot(&self) -> HistSnapshot {
+        HistSnapshot {
+            buckets: self.0.buckets.iter().map(|b| b.load(Ordering::Relaxed)).collect(),
+            count: self.0.count.load(Ordering::Relaxed),
+            sum: self.0.sum.load(Ordering::Relaxed),
+        }
+    }
+}
+
+/// Point-in-time copy of one histogram.
+#[derive(Debug, Clone, Default, PartialEq, Eq)]
+pub struct HistSnapshot {
+    pub buckets: Vec<u64>,
+    pub count: u64,
+    pub sum: u64,
+}
+
+impl HistSnapshot {
+    pub fn mean(&self) -> f64 {
+        if self.count == 0 {
+            0.0
+        } else {
+            self.sum as f64 / self.count as f64
+        }
+    }
+}
+
+#[derive(Debug, Default)]
+struct Instruments {
+    counters: Vec<(String, Counter)>,
+    gauges: Vec<(String, Gauge)>,
+    histograms: Vec<(String, Histogram)>,
+}
+
+/// Named-instrument registry.  Registration is get-or-create by name, so
+/// two subsystems asking for `"staging.hits"` share one cell.
+#[derive(Debug, Default)]
+pub struct Registry {
+    inner: Mutex<Instruments>,
+}
+
+impl Registry {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn counter(&self, name: &str) -> Counter {
+        let mut inner = lock_clean(&self.inner);
+        if let Some((_, c)) = inner.counters.iter().find(|(n, _)| n == name) {
+            return c.clone();
+        }
+        let c = Counter::default();
+        inner.counters.push((name.to_string(), c.clone()));
+        c
+    }
+
+    pub fn gauge(&self, name: &str) -> Gauge {
+        let mut inner = lock_clean(&self.inner);
+        if let Some((_, g)) = inner.gauges.iter().find(|(n, _)| n == name) {
+            return g.clone();
+        }
+        let g = Gauge::default();
+        inner.gauges.push((name.to_string(), g.clone()));
+        g
+    }
+
+    pub fn histogram(&self, name: &str) -> Histogram {
+        let mut inner = lock_clean(&self.inner);
+        if let Some((_, h)) = inner.histograms.iter().find(|(n, _)| n == name) {
+            return h.clone();
+        }
+        let h = Histogram::default();
+        inner.histograms.push((name.to_string(), h.clone()));
+        h
+    }
+
+    /// Name-sorted copy of every registered instrument's current value.
+    pub fn snapshot(&self) -> RegistrySnapshot {
+        let inner = lock_clean(&self.inner);
+        let mut counters: Vec<(String, u64)> =
+            inner.counters.iter().map(|(n, c)| (n.clone(), c.get())).collect();
+        let mut gauges: Vec<(String, i64)> =
+            inner.gauges.iter().map(|(n, g)| (n.clone(), g.get())).collect();
+        let mut histograms: Vec<(String, HistSnapshot)> =
+            inner.histograms.iter().map(|(n, h)| (n.clone(), h.snapshot())).collect();
+        counters.sort_by(|a, b| a.0.cmp(&b.0));
+        gauges.sort_by(|a, b| a.0.cmp(&b.0));
+        histograms.sort_by(|a, b| a.0.cmp(&b.0));
+        RegistrySnapshot { counters, gauges, histograms }
+    }
+}
+
+/// Point-in-time copy of a whole registry, name-sorted.
+#[derive(Debug, Clone, Default)]
+pub struct RegistrySnapshot {
+    pub counters: Vec<(String, u64)>,
+    pub gauges: Vec<(String, i64)>,
+    pub histograms: Vec<(String, HistSnapshot)>,
+}
+
+impl RegistrySnapshot {
+    /// A counter's value by name (0 if never registered).
+    pub fn counter(&self, name: &str) -> u64 {
+        self.counters.iter().find(|(n, _)| n == name).map(|(_, v)| *v).unwrap_or(0)
+    }
+
+    pub fn gauge(&self, name: &str) -> i64 {
+        self.gauges.iter().find(|(n, _)| n == name).map(|(_, v)| *v).unwrap_or(0)
+    }
+
+    pub fn histogram(&self, name: &str) -> Option<&HistSnapshot> {
+        self.histograms.iter().find(|(n, _)| n == name).map(|(_, h)| h)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn counters_share_by_name() {
+        let r = Registry::new();
+        let a = r.counter("x");
+        let b = r.counter("x");
+        a.inc();
+        b.add(2);
+        assert_eq!(a.get(), 3);
+        assert_eq!(r.snapshot().counter("x"), 3);
+        assert_eq!(r.snapshot().counter("missing"), 0);
+    }
+
+    #[test]
+    fn gauges_track_levels() {
+        let r = Registry::new();
+        let g = r.gauge("depth");
+        g.set(5);
+        g.add(-2);
+        assert_eq!(g.get(), 3);
+        assert_eq!(r.snapshot().gauge("depth"), 3);
+    }
+
+    #[test]
+    fn histogram_bucket_edges() {
+        // bucket 0: zero; bucket i >= 1: [2^(i-1), 2^i)
+        assert_eq!(Histogram::bucket_index(0), 0);
+        assert_eq!(Histogram::bucket_index(1), 1);
+        assert_eq!(Histogram::bucket_index(2), 2);
+        assert_eq!(Histogram::bucket_index(3), 2);
+        assert_eq!(Histogram::bucket_index(4), 3);
+        assert_eq!(Histogram::bucket_index(7), 3);
+        assert_eq!(Histogram::bucket_index(8), 4);
+        for k in 0..63 {
+            assert_eq!(Histogram::bucket_index(1u64 << k), (k as usize + 1).min(HIST_BUCKETS - 1));
+            if k > 0 {
+                // top of the bucket: 2^k - 1 lands one lower than 2^k
+                assert_eq!(
+                    Histogram::bucket_index((1u64 << k) - 1),
+                    (k as usize).min(HIST_BUCKETS - 1)
+                );
+            }
+        }
+        assert_eq!(Histogram::bucket_index(u64::MAX), HIST_BUCKETS - 1);
+    }
+
+    #[test]
+    fn histogram_observe_and_snapshot() {
+        let h = Histogram::default();
+        h.observe(0);
+        h.observe(1);
+        h.observe(1000);
+        let s = h.snapshot();
+        assert_eq!(s.count, 3);
+        assert_eq!(s.sum, 1001);
+        assert_eq!(s.buckets[0], 1);
+        assert_eq!(s.buckets[1], 1);
+        assert_eq!(s.buckets[Histogram::bucket_index(1000)], 1);
+        assert!((s.mean() - 1001.0 / 3.0).abs() < 1e-9);
+        assert_eq!(HistSnapshot::default().mean(), 0.0);
+    }
+
+    #[test]
+    fn concurrent_writers_lose_nothing() {
+        let r = std::sync::Arc::new(Registry::new());
+        let h = r.histogram("lat");
+        let c = r.counter("n");
+        let mut threads = Vec::new();
+        for t in 0..8 {
+            let h = h.clone();
+            let c = c.clone();
+            threads.push(std::thread::spawn(move || {
+                for i in 0..1000u64 {
+                    h.observe(t * 1000 + i);
+                    c.inc();
+                }
+            }));
+        }
+        for t in threads {
+            t.join().unwrap();
+        }
+        assert_eq!(c.get(), 8000);
+        assert_eq!(h.snapshot().count, 8000);
+        assert_eq!(h.snapshot().buckets.iter().sum::<u64>(), 8000);
+    }
+
+    #[test]
+    fn snapshot_is_name_sorted() {
+        let r = Registry::new();
+        r.counter("zz");
+        r.counter("aa");
+        let names: Vec<&str> =
+            r.snapshot().counters.iter().map(|(n, _)| n.as_str()).collect();
+        assert_eq!(names, ["aa", "zz"]);
+    }
+}

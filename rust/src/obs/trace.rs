@@ -1,0 +1,593 @@
+//! Structured event tracing: cheap fixed-size records in per-thread rings.
+//!
+//! Design constraints (from the PR 5/6 lock discipline):
+//!
+//! * **Recording never blocks.**  Each thread writes to its own bounded
+//!   ring; the only lock taken is the ring's own mutex via `try_lock`,
+//!   which can only be contended by a drain in progress — contention is a
+//!   *counted drop*, not a wait.
+//! * **Recording never allocates in steady state.**  [`TraceEvent`] is
+//!   `Copy` (op names live in a fixed [`Name`] buffer) and each ring's
+//!   backing `VecDeque` is preallocated to capacity; the only allocations
+//!   happen the first time a thread touches a tracer (ring registration).
+//! * **Overflow is a counted drop.**  A full ring drops the new event and
+//!   bumps a counter that rides along with the next drain, so trace
+//!   consumers can see exactly how much they lost.
+//!
+//! Timestamps are unix-epoch microseconds (an epoch captured at tracer
+//! creation plus a monotonic offset), so events recorded by different
+//! processes on one machine merge into a sensibly ordered stream.  The
+//! simulator stamps virtual time through the same field.
+
+use std::cell::RefCell;
+use std::collections::VecDeque;
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::{Arc, Mutex, TryLockError};
+use std::time::{Instant, SystemTime, UNIX_EPOCH};
+
+/// Fixed capacity of a [`Name`] buffer, bytes.
+pub const NAME_CAP: usize = 24;
+
+/// Default per-thread ring capacity, events.
+pub const DEFAULT_RING_CAP: usize = 16 * 1024;
+
+/// Device tag on an event: not device-specific.
+pub const DEV_NONE: u8 = 0;
+/// Device tag on an event: a CPU compute thread.
+pub const DEV_CPU: u8 = 1;
+/// Device tag on an event: a GPU controller thread.
+pub const DEV_GPU: u8 = 2;
+
+/// Human name for a device tag.
+pub fn device_name(d: u8) -> &'static str {
+    match d {
+        DEV_CPU => "cpu",
+        DEV_GPU => "gpu",
+        _ => "-",
+    }
+}
+
+/// What happened.  The discriminant is the wire encoding (proto v6), so
+/// values are stable: append only.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord, Hash)]
+#[repr(u8)]
+pub enum EventKind {
+    /// An op instance started executing (`dur_us` = 0).
+    OpBegin = 1,
+    /// An op instance finished; `dur_us` is the execution time.
+    OpEnd = 2,
+    /// Time a ready task waited in the WRM queue before dispatch.
+    QueueWait = 3,
+    StagingHit = 4,
+    StagingMiss = 5,
+    StagingPromote = 6,
+    StagingDemote = 7,
+    StagingPrefetch = 8,
+    StagingEvict = 9,
+    /// A protocol frame left this endpoint (`chunk` = payload bytes).
+    FrameSend = 10,
+    /// A protocol frame arrived at this endpoint (`chunk` = payload bytes).
+    FrameRecv = 11,
+    WorkerJoin = 12,
+    WorkerExpire = 13,
+    WorkerLeave = 14,
+    JobStart = 15,
+    JobDone = 16,
+    /// Synthesized at drain time: `chunk` events were dropped to ring
+    /// overflow or drain contention since the previous drain.
+    Dropped = 17,
+}
+
+impl EventKind {
+    /// Every kind, for round-trip tests.
+    pub const ALL: [EventKind; 17] = [
+        EventKind::OpBegin,
+        EventKind::OpEnd,
+        EventKind::QueueWait,
+        EventKind::StagingHit,
+        EventKind::StagingMiss,
+        EventKind::StagingPromote,
+        EventKind::StagingDemote,
+        EventKind::StagingPrefetch,
+        EventKind::StagingEvict,
+        EventKind::FrameSend,
+        EventKind::FrameRecv,
+        EventKind::WorkerJoin,
+        EventKind::WorkerExpire,
+        EventKind::WorkerLeave,
+        EventKind::JobStart,
+        EventKind::JobDone,
+        EventKind::Dropped,
+    ];
+
+    pub fn from_u8(v: u8) -> Option<EventKind> {
+        EventKind::ALL.iter().copied().find(|k| *k as u8 == v)
+    }
+
+    pub fn name(self) -> &'static str {
+        match self {
+            EventKind::OpBegin => "op-begin",
+            EventKind::OpEnd => "op-end",
+            EventKind::QueueWait => "queue-wait",
+            EventKind::StagingHit => "staging-hit",
+            EventKind::StagingMiss => "staging-miss",
+            EventKind::StagingPromote => "staging-promote",
+            EventKind::StagingDemote => "staging-demote",
+            EventKind::StagingPrefetch => "staging-prefetch",
+            EventKind::StagingEvict => "staging-evict",
+            EventKind::FrameSend => "frame-send",
+            EventKind::FrameRecv => "frame-recv",
+            EventKind::WorkerJoin => "worker-join",
+            EventKind::WorkerExpire => "worker-expire",
+            EventKind::WorkerLeave => "worker-leave",
+            EventKind::JobStart => "job-start",
+            EventKind::JobDone => "job-done",
+            EventKind::Dropped => "dropped",
+        }
+    }
+
+    /// Chrome-trace category for this kind.
+    pub fn category(self) -> &'static str {
+        match self {
+            EventKind::OpBegin | EventKind::OpEnd => "op",
+            EventKind::QueueWait => "wrm",
+            EventKind::StagingHit
+            | EventKind::StagingMiss
+            | EventKind::StagingPromote
+            | EventKind::StagingDemote
+            | EventKind::StagingPrefetch
+            | EventKind::StagingEvict => "staging",
+            EventKind::FrameSend | EventKind::FrameRecv => "net",
+            EventKind::WorkerJoin | EventKind::WorkerExpire | EventKind::WorkerLeave => {
+                "membership"
+            }
+            EventKind::JobStart | EventKind::JobDone => "service",
+            EventKind::Dropped => "obs",
+        }
+    }
+}
+
+/// Inline fixed-capacity string: op/stage names on events without heap
+/// allocation.  Construction truncates to the largest prefix that fits on
+/// a UTF-8 character boundary.
+#[derive(Clone, Copy, PartialEq, Eq, Hash)]
+pub struct Name {
+    len: u8,
+    bytes: [u8; NAME_CAP],
+}
+
+impl Name {
+    pub fn new(s: &str) -> Name {
+        let mut end = s.len().min(NAME_CAP);
+        while end > 0 && !s.is_char_boundary(end) {
+            end -= 1;
+        }
+        let mut bytes = [0u8; NAME_CAP];
+        bytes[..end].copy_from_slice(&s.as_bytes()[..end]);
+        Name { len: end as u8, bytes }
+    }
+
+    pub fn empty() -> Name {
+        Name { len: 0, bytes: [0u8; NAME_CAP] }
+    }
+
+    /// Rebuild from wire bytes; `None` if too long or not UTF-8.
+    pub fn from_bytes(b: &[u8]) -> Option<Name> {
+        if b.len() > NAME_CAP || std::str::from_utf8(b).is_err() {
+            return None;
+        }
+        let mut bytes = [0u8; NAME_CAP];
+        bytes[..b.len()].copy_from_slice(b);
+        Some(Name { len: b.len() as u8, bytes })
+    }
+
+    pub fn as_str(&self) -> &str {
+        std::str::from_utf8(&self.bytes[..self.len as usize]).unwrap_or("")
+    }
+
+    pub fn as_bytes(&self) -> &[u8] {
+        &self.bytes[..self.len as usize]
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len == 0
+    }
+}
+
+impl std::fmt::Debug for Name {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "{:?}", self.as_str())
+    }
+}
+
+impl std::fmt::Display for Name {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(self.as_str())
+    }
+}
+
+/// One trace record.  `Copy`, fixed size, no heap.
+///
+/// Field meaning varies slightly by kind (documented on [`EventKind`]):
+/// `chunk` carries the chunk id for op/staging events, payload bytes for
+/// frame events, and the drop count for [`EventKind::Dropped`].
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct TraceEvent {
+    /// Unix-epoch microseconds (virtual µs in `htap sim` traces).
+    /// Zero means "stamp me at record time".
+    pub ts_us: u64,
+    /// Span duration in µs; 0 for instant events.
+    pub dur_us: u64,
+    pub kind: EventKind,
+    /// [`DEV_NONE`] / [`DEV_CPU`] / [`DEV_GPU`].
+    pub device: u8,
+    /// Worker id (0 = "stamp with the tracer's worker id").
+    pub worker: u64,
+    /// Executor lane (WRM device-thread index) or 0.
+    pub lane: u32,
+    /// Service-mode job id (0 outside service mode).
+    pub job: u64,
+    /// Workflow stage index.
+    pub stage: u32,
+    /// Chunk id / payload bytes / drop count, by kind.
+    pub chunk: u64,
+    /// Op or peer name ("" when the kind says it all).
+    pub name: Name,
+}
+
+impl TraceEvent {
+    /// A zeroed event of `kind`; fill the fields that matter with struct
+    /// update syntax and let [`Tracer::record`] stamp `ts_us`/`worker`.
+    pub fn of(kind: EventKind) -> TraceEvent {
+        TraceEvent {
+            ts_us: 0,
+            dur_us: 0,
+            kind,
+            device: DEV_NONE,
+            worker: 0,
+            lane: 0,
+            job: 0,
+            stage: 0,
+            chunk: 0,
+            name: Name::empty(),
+        }
+    }
+}
+
+/// One thread's bounded event ring.
+struct Ring {
+    slots: Mutex<VecDeque<TraceEvent>>,
+    cap: usize,
+    /// Events lost to overflow or drain contention.
+    dropped: AtomicU64,
+}
+
+impl Ring {
+    fn new(cap: usize) -> Ring {
+        Ring {
+            slots: Mutex::new(VecDeque::with_capacity(cap)),
+            cap,
+            dropped: AtomicU64::new(0),
+        }
+    }
+
+    /// Non-blocking push: a held lock (drain in progress) or a full ring
+    /// both count a drop instead of waiting or growing.
+    fn push(&self, ev: TraceEvent) {
+        let mut slots = match self.slots.try_lock() {
+            Ok(g) => g,
+            Err(TryLockError::Poisoned(p)) => p.into_inner(),
+            Err(TryLockError::WouldBlock) => {
+                self.dropped.fetch_add(1, Ordering::Relaxed);
+                return;
+            }
+        };
+        if slots.len() >= self.cap {
+            self.dropped.fetch_add(1, Ordering::Relaxed);
+        } else {
+            slots.push_back(ev);
+        }
+    }
+
+    fn drain(&self, into: &mut Vec<TraceEvent>) {
+        let mut slots = match self.slots.lock() {
+            Ok(g) => g,
+            Err(p) => p.into_inner(),
+        };
+        into.extend(slots.drain(..));
+    }
+}
+
+struct Shared {
+    /// Distinguishes tracers in thread-local ring lookup (tests run many
+    /// tracers on one thread).
+    id: u64,
+    enabled: AtomicBool,
+    ring_cap: usize,
+    /// Unix µs at construction; `origin.elapsed()` added on top.
+    epoch_us: u64,
+    origin: Instant,
+    /// Default worker id stamped on events recorded with `worker == 0`.
+    worker: AtomicU64,
+    rings: Mutex<Vec<Arc<Ring>>>,
+}
+
+thread_local! {
+    /// This thread's rings, one per tracer it has recorded to.  A short
+    /// linear scan — threads touch one or two tracers in practice.
+    static THREAD_RINGS: RefCell<Vec<(u64, Arc<Ring>)>> = const { RefCell::new(Vec::new()) };
+}
+
+fn next_tracer_id() -> u64 {
+    static NEXT: AtomicU64 = AtomicU64::new(1);
+    NEXT.fetch_add(1, Ordering::Relaxed)
+}
+
+/// Handle to a trace stream.  Cloning shares the stream; a disabled
+/// tracer's [`Tracer::record`] is a single relaxed load.
+#[derive(Clone)]
+pub struct Tracer {
+    shared: Arc<Shared>,
+}
+
+impl std::fmt::Debug for Tracer {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("Tracer")
+            .field("enabled", &self.is_enabled())
+            .field("worker", &self.worker())
+            .finish()
+    }
+}
+
+impl Default for Tracer {
+    fn default() -> Self {
+        Tracer::disabled()
+    }
+}
+
+impl Tracer {
+    /// An enabled tracer stamping `worker` on its events.
+    pub fn new(worker: u64) -> Tracer {
+        Tracer::build(worker, DEFAULT_RING_CAP, true)
+    }
+
+    /// An enabled tracer with an explicit per-thread ring capacity.
+    pub fn with_capacity(worker: u64, ring_cap: usize) -> Tracer {
+        Tracer::build(worker, ring_cap.max(1), true)
+    }
+
+    /// A no-op tracer: the default everywhere tracing wasn't requested.
+    pub fn disabled() -> Tracer {
+        Tracer::build(0, 1, false)
+    }
+
+    fn build(worker: u64, ring_cap: usize, enabled: bool) -> Tracer {
+        let epoch_us = SystemTime::now()
+            .duration_since(UNIX_EPOCH)
+            .map(|d| d.as_micros() as u64)
+            .unwrap_or(0);
+        Tracer {
+            shared: Arc::new(Shared {
+                id: next_tracer_id(),
+                enabled: AtomicBool::new(enabled),
+                ring_cap,
+                epoch_us,
+                origin: Instant::now(),
+                worker: AtomicU64::new(worker),
+                rings: Mutex::new(Vec::new()),
+            }),
+        }
+    }
+
+    pub fn is_enabled(&self) -> bool {
+        self.shared.enabled.load(Ordering::Relaxed)
+    }
+
+    pub fn set_worker(&self, worker: u64) {
+        self.shared.worker.store(worker, Ordering::Relaxed);
+    }
+
+    pub fn worker(&self) -> u64 {
+        self.shared.worker.load(Ordering::Relaxed)
+    }
+
+    /// Current timestamp in the trace's clock (unix-epoch µs).
+    pub fn now_us(&self) -> u64 {
+        self.shared.epoch_us + self.shared.origin.elapsed().as_micros() as u64
+    }
+
+    /// Record one event.  Never blocks, never allocates in steady state;
+    /// `ts_us == 0` and `worker == 0` are stamped here.
+    pub fn record(&self, mut ev: TraceEvent) {
+        if !self.shared.enabled.load(Ordering::Relaxed) {
+            return;
+        }
+        if ev.ts_us == 0 {
+            ev.ts_us = self.now_us();
+        }
+        if ev.worker == 0 {
+            ev.worker = self.shared.worker.load(Ordering::Relaxed);
+        }
+        let id = self.shared.id;
+        THREAD_RINGS.with(|cell| {
+            let mut rings = match cell.try_borrow_mut() {
+                Ok(r) => r,
+                // unreachable re-entrancy guard: count, don't panic
+                Err(_) => return,
+            };
+            if let Some((_, ring)) = rings.iter().find(|(rid, _)| *rid == id) {
+                ring.push(ev);
+                return;
+            }
+            // first record from this thread: register a ring (allocates,
+            // once per thread per tracer)
+            let ring = Arc::new(Ring::new(self.shared.ring_cap));
+            match self.shared.rings.lock() {
+                Ok(mut all) => all.push(ring.clone()),
+                Err(p) => p.into_inner().push(ring.clone()),
+            }
+            ring.push(ev);
+            rings.push((id, ring));
+        });
+    }
+
+    /// Shorthand: record an instant event of `kind`.
+    pub fn instant(&self, kind: EventKind) {
+        self.record(TraceEvent::of(kind));
+    }
+
+    /// Drain every thread's ring into one timestamp-sorted batch and
+    /// append a [`EventKind::Dropped`] record when events were lost since
+    /// the previous drain.  Called off the hot path (heartbeat cadence).
+    pub fn drain(&self) -> Vec<TraceEvent> {
+        let rings: Vec<Arc<Ring>> = {
+            let all = match self.shared.rings.lock() {
+                Ok(g) => g,
+                Err(p) => p.into_inner(),
+            };
+            all.clone()
+        };
+        let mut out = Vec::new();
+        let mut dropped = 0u64;
+        for ring in rings {
+            ring.drain(&mut out);
+            dropped += ring.dropped.swap(0, Ordering::Relaxed);
+        }
+        out.sort_by_key(|e| (e.ts_us, e.worker, e.lane));
+        if dropped > 0 {
+            let mut ev = TraceEvent::of(EventKind::Dropped);
+            ev.ts_us = self.now_us();
+            ev.worker = self.worker();
+            ev.chunk = dropped;
+            out.push(ev);
+        }
+        out
+    }
+
+    /// Events currently buffered across all rings (diagnostics/tests).
+    pub fn pending(&self) -> usize {
+        let rings = match self.shared.rings.lock() {
+            Ok(g) => g,
+            Err(p) => p.into_inner(),
+        };
+        rings
+            .iter()
+            .map(|r| match r.slots.lock() {
+                Ok(s) => s.len(),
+                Err(p) => p.into_inner().len(),
+            })
+            .sum()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn name_truncates_on_char_boundary() {
+        assert_eq!(Name::new("watershed").as_str(), "watershed");
+        let long = "a".repeat(NAME_CAP + 10);
+        assert_eq!(Name::new(&long).as_str().len(), NAME_CAP);
+        // multibyte char straddling the cap is dropped whole
+        let tricky = format!("{}é", "a".repeat(NAME_CAP - 1));
+        let n = Name::new(&tricky);
+        assert_eq!(n.as_str(), "a".repeat(NAME_CAP - 1));
+        assert!(Name::from_bytes(&[0xff, 0xfe]).is_none(), "invalid utf-8 rejected");
+        assert!(Name::from_bytes(&vec![b'x'; NAME_CAP + 1]).is_none(), "overlong rejected");
+        assert_eq!(Name::from_bytes(b"ok").map(|n| n.as_str().to_string()).as_deref(), Some("ok"));
+    }
+
+    #[test]
+    fn kind_wire_codes_round_trip() {
+        for k in EventKind::ALL {
+            assert_eq!(EventKind::from_u8(k as u8), Some(k), "{k:?}");
+            assert!(!k.name().is_empty());
+            assert!(!k.category().is_empty());
+        }
+        assert_eq!(EventKind::from_u8(0), None);
+        assert_eq!(EventKind::from_u8(200), None);
+    }
+
+    #[test]
+    fn disabled_tracer_records_nothing() {
+        let t = Tracer::disabled();
+        t.instant(EventKind::StagingHit);
+        assert!(t.drain().is_empty());
+    }
+
+    #[test]
+    fn record_stamps_ts_and_worker() {
+        let t = Tracer::new(7);
+        t.instant(EventKind::StagingHit);
+        let evs = t.drain();
+        assert_eq!(evs.len(), 1);
+        assert_eq!(evs[0].worker, 7);
+        assert!(evs[0].ts_us > 0);
+        // explicit fields pass through untouched
+        let mut ev = TraceEvent::of(EventKind::OpEnd);
+        ev.ts_us = 123;
+        ev.worker = 9;
+        t.record(ev);
+        let evs = t.drain();
+        assert_eq!((evs[0].ts_us, evs[0].worker), (123, 9));
+    }
+
+    #[test]
+    fn overflow_counts_drops() {
+        let t = Tracer::with_capacity(1, 4);
+        for _ in 0..10 {
+            t.instant(EventKind::StagingMiss);
+        }
+        let evs = t.drain();
+        // 4 kept + 1 synthesized Dropped record carrying the count
+        assert_eq!(evs.len(), 5);
+        let drop_ev = evs.iter().find(|e| e.kind == EventKind::Dropped).unwrap();
+        assert_eq!(drop_ev.chunk, 6);
+        // after a drain the ring has room again and drops reset
+        t.instant(EventKind::StagingMiss);
+        let evs = t.drain();
+        assert_eq!(evs.len(), 1);
+        assert_eq!(evs[0].kind, EventKind::StagingMiss);
+    }
+
+    #[test]
+    fn concurrent_writers_each_get_a_ring() {
+        let t = Tracer::new(1);
+        let mut threads = Vec::new();
+        for i in 0..4u32 {
+            let t = t.clone();
+            threads.push(std::thread::spawn(move || {
+                for _ in 0..100 {
+                    let mut ev = TraceEvent::of(EventKind::OpEnd);
+                    ev.lane = i;
+                    t.record(ev);
+                }
+            }));
+        }
+        for th in threads {
+            th.join().unwrap();
+        }
+        let evs = t.drain();
+        assert_eq!(evs.len(), 400);
+        for lane in 0..4 {
+            assert_eq!(evs.iter().filter(|e| e.lane == lane).count(), 100);
+        }
+        // drained in timestamp order
+        assert!(evs.windows(2).all(|w| w[0].ts_us <= w[1].ts_us));
+    }
+
+    #[test]
+    fn two_tracers_on_one_thread_stay_separate() {
+        let a = Tracer::new(1);
+        let b = Tracer::new(2);
+        a.instant(EventKind::StagingHit);
+        b.instant(EventKind::StagingMiss);
+        let ea = a.drain();
+        let eb = b.drain();
+        assert_eq!(ea.len(), 1);
+        assert_eq!(eb.len(), 1);
+        assert_eq!(ea[0].kind, EventKind::StagingHit);
+        assert_eq!(eb[0].kind, EventKind::StagingMiss);
+    }
+}

@@ -46,6 +46,7 @@ use crate::coordinator::manager::{
 };
 use crate::data::staging::WorkerId;
 use crate::dataflow::{workflow_from_str, OpRegistry, StageKind, Workflow};
+use crate::obs::{self, TraceEvent, UtilRow};
 use crate::runtime::sync::{self, Condvar, Mutex};
 use crate::runtime::Value;
 use crate::{Error, Result};
@@ -148,6 +149,11 @@ pub struct JobSummary {
     pub steals: u64,
     /// The tenant weight this job was submitted with.
     pub priority: u32,
+    /// Ops executed for this job, from the merged trace rollup (0 when
+    /// no worker traced).
+    pub ops: u64,
+    /// Execution time summed over those ops, µs (trace rollup).
+    pub busy_us: u64,
 }
 
 /// What the network layer serves: both the single-job [`Manager`]
@@ -212,6 +218,16 @@ pub trait Endpoint: Send + Sync {
     fn job_spec(&self, _job: u64) -> Result<(String, String)> {
         Err(Error::Scheduler("not a service-mode manager (no job specs)".into()))
     }
+
+    /// Merge a worker's drained trace batch (proto v6 `TraceBatch`).
+    /// Default drop, so endpoints without a collector stay valid.
+    fn trace_batch(&self, _worker: WorkerId, _events: Vec<TraceEvent>) {}
+
+    /// Live per-(worker, job) utilization rows (proto v6 `StatsQuery`,
+    /// the `htap top` feed).  Default empty.
+    fn utilization(&self) -> Vec<UtilRow> {
+        Vec::new()
+    }
 }
 
 /// The single-job endpoint: `htap manager` serving one workflow.
@@ -254,6 +270,14 @@ impl Endpoint for Manager {
 
     fn wait_done(&self) {
         Manager::wait_done(self)
+    }
+
+    fn trace_batch(&self, worker: WorkerId, events: Vec<TraceEvent>) {
+        self.ingest_trace(worker, events);
+    }
+
+    fn utilization(&self) -> Vec<UtilRow> {
+        Manager::utilization(self)
     }
 }
 
@@ -341,6 +365,9 @@ impl Job {
             cold: loc.1,
             steals: loc.2,
             priority: self.priority,
+            // joined in by JobTable::job_report from the merged trace
+            ops: 0,
+            busy_us: 0,
         }
     }
 }
@@ -380,6 +407,10 @@ pub struct JobTable {
     announce: AtomicBool,
     /// Enable the completion journal on every manager (checkpointing).
     journal: AtomicBool,
+    /// Merge point for worker-shipped trace batches; per-job managers also
+    /// collect (membership events), but the service-level rollups and the
+    /// `htap top` feed read from here.
+    collector: obs::Collector,
     table: Mutex<TableState>,
     cv: Condvar,
 }
@@ -403,6 +434,7 @@ impl JobTable {
             tenant_queue_depth: tenant_queue_depth.max(1),
             announce: AtomicBool::new(false),
             journal: AtomicBool::new(false),
+            collector: obs::Collector::new(),
             table: Mutex::new(TableState {
                 jobs: BTreeMap::new(),
                 next_job: 1,
@@ -457,6 +489,12 @@ impl JobTable {
             t.jobs.get(&job).and_then(|j| j.manager.clone())
         };
         mgr.and_then(|m| m.reduce_outputs(stage))
+    }
+
+    /// The service-wide trace merge point (worker batches land here via
+    /// [`Endpoint::trace_batch`]); `htap serve --trace-out` exports it.
+    pub fn collector(&self) -> &obs::Collector {
+        &self.collector
     }
 
     /// Per-tenant `(weight, total assignments granted)` — the fair-share
@@ -1067,12 +1105,24 @@ impl Endpoint for JobTable {
 
     fn job_report(&self, job: u64) -> Vec<JobSummary> {
         self.reap();
-        let t = sync::lock_clean(&self.table);
-        t.jobs
-            .values()
-            .filter(|j| job == 0 || j.id == job)
-            .map(Job::summary)
-            .collect()
+        let mut rows: Vec<JobSummary> = {
+            let t = sync::lock_clean(&self.table);
+            t.jobs
+                .values()
+                .filter(|j| job == 0 || j.id == job)
+                .map(Job::summary)
+                .collect()
+        };
+        // join the per-job trace rollups in (collector lock only, after
+        // the table lock is released)
+        let rollups = self.collector.job_rollups();
+        for row in &mut rows {
+            if let Some(r) = rollups.iter().find(|r| r.job == row.job) {
+                row.ops = r.ops;
+                row.busy_us = r.busy_us;
+            }
+        }
+        rows
     }
 
     fn job_spec(&self, job: u64) -> Result<(String, String)> {
@@ -1081,6 +1131,22 @@ impl Endpoint for JobTable {
             Some(j) => Ok((j.tenant.clone(), j.workflow_json.clone())),
             None => Err(Error::Scheduler(format!("job spec: no job {job}"))),
         }
+    }
+
+    fn trace_batch(&self, worker: WorkerId, events: Vec<TraceEvent>) {
+        self.collector.ingest(worker, events);
+    }
+
+    fn utilization(&self) -> Vec<UtilRow> {
+        let mut rows = self.collector.util_rows();
+        // tenant attribution: the collector only knows job ids
+        let t = sync::lock_clean(&self.table);
+        for row in &mut rows {
+            if let Some(j) = t.jobs.get(&row.job) {
+                row.tenant.clone_from(&j.tenant);
+            }
+        }
+        rows
     }
 }
 
@@ -1105,6 +1171,10 @@ impl WorkSource for JobTable {
 
     fn goodbye(&self, worker: WorkerId) {
         Endpoint::expire_worker(self, worker);
+    }
+
+    fn trace_events(&self, worker: WorkerId, events: Vec<TraceEvent>) {
+        Endpoint::trace_batch(self, worker, events)
     }
 }
 

@@ -40,6 +40,7 @@ use crate::coordinator::placement::NodeTopology;
 use crate::coordinator::sched::{make_scheduler, OpScheduler, ReadyTask};
 use crate::dataflow::OpRegistry;
 use crate::metrics::DeviceKind;
+use crate::obs::{EventKind, Name, TraceEvent, DEV_CPU, DEV_GPU};
 use crate::runtime::calibrate::ProfileStore;
 use crate::testing::Rng;
 use std::cmp::Reverse;
@@ -424,6 +425,24 @@ struct NodeState {
 
 /// Run one simulation.
 pub fn simulate(params: &SimParams) -> SimResult {
+    simulate_impl(params, None)
+}
+
+/// [`simulate`], also returning the virtual-time schedule as trace events
+/// in the live schema (`htap sim --trace-out`): one begin/end span per
+/// dispatched op (`worker` = node index + 1, `lane` = device id, `ts_us` =
+/// simulated seconds scaled to microseconds) plus a [`EventKind::StagingMiss`]
+/// record per Lustre tile fetch and a [`EventKind::WorkerExpire`] marker at
+/// fault injection, so the export opens in Perfetto exactly like a real
+/// run's trace.
+pub fn simulate_traced(params: &SimParams) -> (SimResult, Vec<TraceEvent>) {
+    let mut events = Vec::new();
+    let r = simulate_impl(params, Some(&mut events));
+    events.sort_by_key(|e| (e.ts_us, e.worker, e.lane));
+    (r, events)
+}
+
+fn simulate_impl(params: &SimParams, mut trace: Option<&mut Vec<TraceEvent>>) -> SimResult {
     // GPU-only nodes: the controller thread runs CPU-only ops itself (the
     // real WRM's fallback path), at CPU cost and zero transfer.
     let owned_params;
@@ -568,7 +587,10 @@ pub fn simulate(params: &SimParams) -> SimResult {
         }
     }
 
-    // per-node dispatch: fill idle devices from the node queue
+    // per-node dispatch: fill idle devices from the node queue.  `now` and
+    // `node` only feed the optional trace sink: spans are emitted at
+    // dispatch time because the whole (compute, transfer, total) cost is
+    // known up front in virtual time.
     #[allow(clippy::too_many_arguments)]
     fn dispatch_node(
         node_state: &mut NodeState,
@@ -578,6 +600,9 @@ pub fn simulate(params: &SimParams) -> SimResult {
         profile: &mut HashMap<String, (u64, u64)>,
         busy_time: &mut f64,
         transfer_time: &mut f64,
+        now: f64,
+        node: usize,
+        mut trace: Option<&mut Vec<TraceEvent>>,
     ) -> Vec<(usize, f64)> {
         let mut started = Vec::new();
         loop {
@@ -634,6 +659,28 @@ pub fn simulate(params: &SimParams) -> SimResult {
                     DeviceKind::Cpu => e.0 += 1,
                     DeviceKind::Gpu => e.1 += 1,
                 }
+                if let Some(tr) = trace.as_deref_mut() {
+                    let begin = TraceEvent {
+                        ts_us: (now * 1e6) as u64,
+                        device: match kind {
+                            DeviceKind::Cpu => DEV_CPU,
+                            DeviceKind::Gpu => DEV_GPU,
+                        },
+                        worker: node as u64 + 1,
+                        lane: id as u32,
+                        stage: stage as u32,
+                        chunk,
+                        name: Name::new(&op.name),
+                        ..TraceEvent::of(EventKind::OpBegin)
+                    };
+                    tr.push(begin);
+                    tr.push(TraceEvent {
+                        kind: EventKind::OpEnd,
+                        ts_us: ((now + total) * 1e6) as u64,
+                        dur_us: (total * 1e6) as u64,
+                        ..begin
+                    });
+                }
                 started.push((di, total));
                 any = true;
             }
@@ -653,6 +700,9 @@ pub fn simulate(params: &SimParams) -> SimResult {
             &mut profile,
             &mut busy_time,
             &mut transfer_time,
+            now,
+            node,
+            trace.as_deref_mut(),
         ) {
             push_event!(now + total, Event::OpDone { node, dev: di });
         }
@@ -687,6 +737,13 @@ pub fn simulate(params: &SimParams) -> SimResult {
             }
             Event::Kill { node } => {
                 dead[node] = true;
+                if let Some(tr) = trace.as_deref_mut() {
+                    tr.push(TraceEvent {
+                        ts_us: (now * 1e6) as u64,
+                        worker: node as u64 + 1,
+                        ..TraceEvent::of(EventKind::WorkerExpire)
+                    });
+                }
                 // every in-flight stage instance dies with the node; each
                 // re-issues to a survivor behind a cold re-read — exactly
                 // what the manager's lease-expiry requeue does.  Sorted so
@@ -713,6 +770,18 @@ pub fn simulate(params: &SimParams) -> SimResult {
             Event::Fetched { node, chunk } => {
                 nodes[node].fetching -= 1;
                 nodes[node].assigned += 1;
+                // every simulated tile read is a cold staging miss: the
+                // span covers the contended Lustre fetch that just landed
+                if let Some(tr) = trace.as_deref_mut() {
+                    tr.push(TraceEvent {
+                        ts_us: (now * 1e6) as u64,
+                        dur_us: (io_time_per_tile * 1e6) as u64,
+                        worker: node as u64 + 1,
+                        chunk,
+                        name: Name::new("tile-read"),
+                        ..TraceEvent::of(EventKind::StagingMiss)
+                    });
+                }
                 let inst = next_inst;
                 next_inst += 1;
                 submit_stage(&mut nodes[node], &params.workflow, inst, 0, chunk, &mut task_seq);
@@ -878,6 +947,9 @@ pub fn simulate(params: &SimParams) -> SimResult {
             &mut profile,
             &mut busy_time,
             &mut transfer_time,
+            now,
+            node,
+            trace.as_deref_mut(),
         ) {
             push_event!(now + total, Event::OpDone { node, dev: di });
         }
@@ -1037,6 +1109,35 @@ mod tests {
         assert!(r.makespan > 0.0);
         let total_ops: u64 = r.profile.values().map(|(c, g)| c + g).sum();
         assert_eq!(total_ops, 50 * 12);
+    }
+
+    #[test]
+    fn traced_run_matches_untraced_and_spans_balance() {
+        let mut p = base(20);
+        p.n_nodes = 2;
+        let plain = simulate(&p);
+        let (traced, events) = simulate_traced(&p);
+        // the sink is write-only: tracing must not perturb the schedule
+        assert_eq!(traced.makespan, plain.makespan);
+        assert_eq!(traced.tiles, plain.tiles);
+        // one begin/end pair per dispatched op, matching the profile
+        let total_ops: u64 = traced.profile.values().map(|(c, g)| c + g).sum();
+        let begins = events.iter().filter(|e| e.kind == EventKind::OpBegin).count() as u64;
+        let ends = events.iter().filter(|e| e.kind == EventKind::OpEnd).count() as u64;
+        assert_eq!(begins, total_ops);
+        assert_eq!(ends, total_ops);
+        // one cold staging miss per contended tile read
+        let misses = events.iter().filter(|e| e.kind == EventKind::StagingMiss).count();
+        assert!(misses >= traced.tiles, "{misses} misses < {} tiles", traced.tiles);
+        // virtual timestamps: sorted, inside the makespan, workers 1-based
+        assert!(events.windows(2).all(|w| w[0].ts_us <= w[1].ts_us));
+        let end_us = (traced.makespan * 1e6) as u64 + 1;
+        assert!(events.iter().all(|e| e.ts_us <= end_us));
+        assert!(events.iter().all(|e| (1..=2).contains(&e.worker)));
+        assert!(events
+            .iter()
+            .filter(|e| e.kind == EventKind::OpEnd)
+            .all(|e| e.dur_us > 0 && !e.name.is_empty()));
     }
 
     #[test]

@@ -2,21 +2,25 @@
 //! Manager/Worker framing can receive must come back as `Err(..)`, never
 //! a panic, never a pre-error multi-gigabyte allocation.
 //!
-//! Three attack families, over all four [`Message`] kinds:
+//! Three attack families, over the work-cycle [`Message`] kinds plus the
+//! v6 observability surface (`TraceBatch` / `StatsQuery` / `StatsReport`):
 //!
 //! 1. **truncation** — every strict prefix of a valid encoding;
 //! 2. **random frames** — deterministic xorshift fuzzing (replayable via
 //!    `HTAP_PROPTEST_SEED`), raw and with a valid version/tag header;
 //! 3. **hostile counts** — tiny frames whose length prefixes claim 2^32
-//!    elements (ids, values, assignments, string bytes, tensor dims);
-//!    these must fail fast on the count bound, not preallocate.
+//!    elements (ids, values, assignments, string bytes, tensor dims,
+//!    trace events, utilization rows); these must fail fast on the count
+//!    bound, not preallocate.
 
 use htap::coordinator::manager::Assignment;
 use htap::net::proto::{decode, encode, read_message, Message, PROTO_VERSION};
+use htap::obs::{EventKind, Name, TraceEvent, UtilRow, DEV_GPU};
 use htap::runtime::{HostTensor, Value};
 use htap::testing::Rng;
 
-const TAGS: [u8; 4] = [1, 2, 3, 4]; // request / assign / complete / fail
+// request / assign / complete / fail / trace-batch / stats-query / stats-report
+const TAGS: [u8; 7] = [1, 2, 3, 4, 15, 16, 17];
 
 /// One representative (non-trivial) message per wire kind.
 fn specimens() -> Vec<Message> {
@@ -45,6 +49,34 @@ fn specimens() -> Vec<Message> {
         },
         Message::Complete { instance: 7, outputs: vec![tensor, Value::Scalar(-2.0)] },
         Message::Fail { msg: "device lost".into() },
+        Message::TraceBatch {
+            worker: 3,
+            events: vec![
+                TraceEvent {
+                    ts_us: 1_000,
+                    dur_us: 250,
+                    device: DEV_GPU,
+                    worker: 3,
+                    lane: 1,
+                    job: 9,
+                    stage: 2,
+                    chunk: 41,
+                    name: Name::new("watershed"),
+                    ..TraceEvent::of(EventKind::OpEnd)
+                },
+                TraceEvent::of(EventKind::StagingMiss),
+            ],
+        },
+        Message::StatsQuery,
+        Message::StatsReport {
+            rows: vec![UtilRow {
+                worker: 3,
+                job: 9,
+                tenant: "alice".into(),
+                ops: 12,
+                busy_us: 34_000,
+            }],
+        },
     ]
 }
 
@@ -144,6 +176,36 @@ fn hostile_count_prefixes_fail_before_preallocation() {
     }
     let e = decode(&hostile(3, &body)).unwrap_err();
     assert!(e.to_string().contains("overflow"), "unexpected error: {e}");
+
+    // TraceBatch: worker id then an event count claiming 2^32 - 1 events
+    // in an empty body — the 51-byte-per-event bound must reject it
+    // before Vec::with_capacity runs
+    let mut body = Vec::new();
+    body.extend_from_slice(&3u64.to_le_bytes()); // worker
+    body.extend_from_slice(&le(u32::MAX)); // event count
+    let e = decode(&hostile(15, &body)).unwrap_err();
+    assert!(e.to_string().contains("count"), "unexpected error: {e}");
+
+    // StatsReport: hostile utilization-row count, same treatment
+    let e = decode(&hostile(17, &le(u32::MAX))).unwrap_err();
+    assert!(e.to_string().contains("count"), "unexpected error: {e}");
+
+    // a trace event whose name length byte points past the frame
+    let mut body = Vec::new();
+    body.extend_from_slice(&3u64.to_le_bytes()); // worker
+    body.extend_from_slice(&le(1)); // one event
+    body.extend_from_slice(&[0u8; 8]); // ts_us
+    body.extend_from_slice(&[0u8; 8]); // dur_us
+    body.push(EventKind::OpEnd as u8); // kind
+    body.push(0); // device
+    body.extend_from_slice(&[0u8; 8]); // worker
+    body.extend_from_slice(&le(0)); // lane
+    body.extend_from_slice(&[0u8; 8]); // job
+    body.extend_from_slice(&le(0)); // stage
+    body.extend_from_slice(&[0u8; 8]); // chunk
+    body.push(200); // name length: past both NAME_CAP and the frame end
+    let e = decode(&hostile(15, &body)).unwrap_err();
+    assert!(!e.to_string().is_empty());
 }
 
 #[test]

@@ -1,0 +1,227 @@
+//! The observability subsystem end to end: a staged run with
+//! `--trace-out` must produce a trace whose op spans pair up (one
+//! begin/end per executed op) and whose per-job rollups reconcile
+//! exactly with the run's `MetricsReport` counters; the service job
+//! report must join per-tenant rollups from the same merged stream.
+
+use htap::config::RunConfig;
+use htap::coordinator::{run_local_staged, AssignPolicy, ChunkId};
+use htap::data::staging::ChunkSource;
+use htap::dataflow::{param, OpRegistry, StageKind, Workflow, WorkflowBuilder};
+use htap::obs::{render_util_table, EventKind, TraceEvent};
+use htap::runtime::calibrate::SharedProfiles;
+use htap::runtime::Value;
+use htap::service::{Endpoint, JobTable};
+use htap::Result;
+use std::collections::HashMap;
+use std::sync::Arc;
+
+/// Chunk `c` loads as `Scalar(c)` — enough to drive the staged path.
+struct ScalarSource {
+    n: usize,
+}
+
+impl ChunkSource for ScalarSource {
+    fn n_chunks(&self) -> usize {
+        self.n
+    }
+
+    fn load(&self, chunk: ChunkId) -> Result<Vec<Value>> {
+        Ok(vec![Value::Scalar(chunk as f32)])
+    }
+
+    fn describe(&self) -> String {
+        format!("scalar({})", self.n)
+    }
+}
+
+/// Two PerChunk stages (stage 1 consumes stage 0) plus a Reduce total:
+/// `2 * n + 1` op executions for `n` chunks.
+fn workflow() -> Arc<Workflow> {
+    let mut reg = OpRegistry::new();
+    reg.register_cpu("add", 1, |args: &[Value]| {
+        let mut s = 0.0;
+        for v in args {
+            s += v.as_scalar()?;
+        }
+        Ok(vec![Value::Scalar(s)])
+    })
+    .unwrap();
+    reg.register_cpu("sum", 1, |args: &[Value]| {
+        let mut s = 0.0;
+        for v in args {
+            s += v.as_scalar()?;
+        }
+        Ok(vec![Value::Scalar(s)])
+    })
+    .unwrap();
+    let mut wb = WorkflowBuilder::new("obs-test", reg);
+    let mut s0 = wb.stage("s0", StageKind::PerChunk);
+    let c = s0.input_chunk();
+    let op = s0.add_op("add", &[c, param(1.0)]).unwrap();
+    s0.export(op.out()).unwrap();
+    let s0 = wb.add_stage(s0).unwrap();
+    let mut s1 = wb.stage("s1", StageKind::PerChunk);
+    let c = s1.input_chunk();
+    let up = s1.input_upstream(s0.output(0));
+    let op = s1.add_op("add", &[c, up]).unwrap();
+    s1.export(op.out()).unwrap();
+    let s1 = wb.add_stage(s1).unwrap();
+    let mut red = wb.stage("total", StageKind::Reduce);
+    red.input_upstream(s1.output(0));
+    let op = red.add_reduce_op("sum").unwrap();
+    red.export(op.out()).unwrap();
+    wb.add_stage(red).unwrap();
+    Arc::new(wb.build().unwrap())
+}
+
+#[test]
+fn traced_staged_run_reconciles_with_metrics() {
+    let n = 6;
+    let dir = std::env::temp_dir().join(format!("htap-obs-e2e-{}", std::process::id()));
+    std::fs::create_dir_all(&dir).unwrap();
+    let path = dir.join("trace.json").to_string_lossy().to_string();
+    let cfg = RunConfig {
+        n_tiles: n,
+        cpu_workers: 2,
+        gpu_workers: 0,
+        window: 2,
+        staging_cap: htap::config::CacheCap::Chunks(8),
+        prefetch_depth: 2,
+        trace_out: Some(path.clone()),
+        ..Default::default()
+    };
+    let source = Arc::new(ScalarSource { n });
+    let outcome =
+        run_local_staged(workflow(), source, n, cfg, HashMap::new(), SharedProfiles::fresh())
+            .unwrap();
+    let (done, total) = outcome.manager.progress();
+    assert_eq!((done, total), (2 * n + 1, 2 * n + 1));
+    let executed = outcome.metrics.total_executed();
+    assert_eq!(executed, (2 * n + 1) as u64);
+
+    // the worker's final drain ships everything to the manager's
+    // collector before the run returns, so the merged stream is complete
+    let events = outcome.manager.collector().merged();
+    assert!(!events.is_empty(), "traced run produced no events");
+    assert_eq!(outcome.manager.collector().dropped(), 0, "bounded rings overflowed");
+
+    // matching begin/end spans per executed op: every OpBegin is closed
+    // by an OpEnd with the same (job, stage, chunk, name) identity
+    let mut open: HashMap<(u64, u32, u64, String), i64> = HashMap::new();
+    let (mut begins, mut ends) = (0u64, 0u64);
+    for ev in &events {
+        let key = (ev.job, ev.stage, ev.chunk, ev.name.as_str().to_string());
+        match ev.kind {
+            EventKind::OpBegin => {
+                begins += 1;
+                *open.entry(key).or_insert(0) += 1;
+            }
+            EventKind::OpEnd => {
+                ends += 1;
+                *open.entry(key).or_insert(0) -= 1;
+            }
+            _ => {}
+        }
+    }
+    assert_eq!(begins, executed, "one OpBegin per executed op");
+    assert_eq!(ends, executed, "one OpEnd per executed op");
+    for (key, balance) in &open {
+        assert_eq!(*balance, 0, "unbalanced span for {key:?}");
+    }
+
+    // the rollups the service surfaces reconcile with the metrics report
+    let rollups = outcome.manager.collector().job_rollups();
+    let rollup_ops: u64 = rollups.iter().map(|r| r.ops).sum();
+    assert_eq!(rollup_ops, executed, "rollup ops must sum to MetricsReport total");
+    assert!(rollups.iter().all(|r| r.job == 0), "local run is job 0: {rollups:?}");
+    assert!(rollups.iter().map(|r| r.busy_us).sum::<u64>() > 0);
+
+    // staging + queue instrumentation rode along
+    assert!(events.iter().any(|e| e.kind == EventKind::StagingMiss), "no staging events");
+    assert!(events.iter().any(|e| e.kind == EventKind::QueueWait), "no queue-wait events");
+
+    // the export pair landed on disk in the documented shapes
+    let doc = std::fs::read_to_string(&path).unwrap();
+    assert!(doc.starts_with("{\"traceEvents\":["), "not a Chrome trace: {doc:.40}");
+    assert!(doc.contains("\"ph\":\"X\""), "no complete spans in the Chrome view");
+    assert!(doc.contains("\"name\":\"add\""), "op names missing from spans");
+    let jl = std::fs::read_to_string(format!("{path}.jsonl")).unwrap();
+    let jl_ends = jl.lines().filter(|l| l.contains("\"kind\":\"op-end\"")).count() as u64;
+    assert_eq!(jl_ends, executed, "jsonl must carry every op span");
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+const DOUBLE_SUM: &str = r#"{
+    "name": "double-sum",
+    "stages": [
+        {
+            "name": "double", "kind": "per_chunk", "inputs": ["chunk"],
+            "ops": [ { "op": "double", "inputs": [ {"input": 0} ] } ],
+            "outputs": [ {"op": "double"} ]
+        },
+        {
+            "name": "total", "kind": "reduce",
+            "inputs": [ {"stage": "double", "output": 0} ],
+            "ops": [ { "op": "sum", "inputs": "all" } ],
+            "outputs": [ {"op": "sum"} ]
+        }
+    ]
+}"#;
+
+fn service_reg() -> Arc<OpRegistry> {
+    let mut r = OpRegistry::new();
+    r.register_cpu("double", 1, |args: &[Value]| {
+        Ok(vec![Value::Scalar(args[0].as_scalar()? * 2.0)])
+    })
+    .unwrap();
+    r.register_cpu("sum", 1, |args: &[Value]| {
+        let mut s = 0.0f32;
+        for a in args {
+            s += a.as_scalar()?;
+        }
+        Ok(vec![Value::Scalar(s)])
+    })
+    .unwrap();
+    Arc::new(r)
+}
+
+fn op_end(worker: u64, job: u64, dur_us: u64) -> TraceEvent {
+    let mut ev = TraceEvent::of(EventKind::OpEnd);
+    ev.ts_us = 1;
+    ev.worker = worker;
+    ev.job = job;
+    ev.dur_us = dur_us;
+    ev
+}
+
+#[test]
+fn service_job_report_joins_per_tenant_rollups() {
+    let t = JobTable::new(service_reg(), 4, AssignPolicy::default(), 4, 8);
+    let ja = Endpoint::submit(&*t, "alice", DOUBLE_SUM, 1).unwrap();
+    let jb = Endpoint::submit(&*t, "bob", DOUBLE_SUM, 1).unwrap();
+
+    // two workers ship heartbeat batches attributing spans to both jobs
+    Endpoint::trace_batch(&*t, 1, vec![op_end(1, ja, 100), op_end(1, jb, 40)]);
+    Endpoint::trace_batch(&*t, 2, vec![op_end(2, ja, 60)]);
+
+    let rows = Endpoint::job_report(&*t, 0);
+    let ra = rows.iter().find(|r| r.job == ja).unwrap();
+    let rb = rows.iter().find(|r| r.job == jb).unwrap();
+    assert_eq!((ra.ops, ra.busy_us), (2, 160), "{ra:?}");
+    assert_eq!((rb.ops, rb.busy_us), (1, 40), "{rb:?}");
+    assert_eq!(ra.tenant, "alice");
+    assert_eq!(rb.tenant, "bob");
+
+    // the `htap top` feed: per-(worker, job) rows with tenants joined in
+    let util = Endpoint::utilization(&*t);
+    assert_eq!(util.len(), 3, "{util:?}");
+    let w1a = util.iter().find(|r| r.worker == 1 && r.job == ja).unwrap();
+    assert_eq!((w1a.ops, w1a.busy_us, w1a.tenant.as_str()), (1, 100, "alice"));
+    let table = render_util_table(&util);
+    assert!(table.contains("alice") && table.contains("bob"), "{table}");
+
+    // per-tenant rollups sum to everything the collector ingested
+    let total_ops: u64 = t.collector().job_rollups().iter().map(|r| r.ops).sum();
+    assert_eq!(total_ops, 3);
+}

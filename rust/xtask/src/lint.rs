@@ -14,7 +14,7 @@
 //!    later-ordered one (or the same one) is denied.
 //! 3. **panic** — `.unwrap()` / `.expect(` / `panic!(` / `unreachable!(`
 //!    are denied in the runtime modules (`coordinator/`, `data/`, `net/`,
-//!    `runtime/`, `service/`), outside `#[cfg(test)]` regions.
+//!    `obs/`, `runtime/`, `service/`), outside `#[cfg(test)]` regions.
 //! 4. **proto-coverage** — every `net::proto::Message` variant must be
 //!    referenced by the module's round-trip tests.
 //!
@@ -87,7 +87,8 @@ const PANIC_DENY: &[&str] =
     &[".unwrap()", ".expect(", "panic!(", "unreachable!(", "todo!(", "unimplemented!("];
 
 /// Directories (relative to `src/`) where the panic rule applies.
-const PANIC_DIRS: &[&str] = &["coordinator/", "data/", "net/", "runtime/", "service/"];
+const PANIC_DIRS: &[&str] =
+    &["coordinator/", "data/", "net/", "obs/", "runtime/", "service/"];
 
 /// Files exempt from the panic rule.  The model scheduler is test-only
 /// machinery compiled under `cfg(htap_model)`; panicking on internal

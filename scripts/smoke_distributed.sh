@@ -36,6 +36,7 @@ trap 'rm -rf "$log"; kill $(jobs -p) 2>/dev/null || true' EXIT
 
 "$bin" manager --listen "127.0.0.1:$port" --tiles "$tiles" \
     --tile-size "$tile_size" --workers 2 $locality_flag \
+    --trace-out "$log/trace.json" \
     >"$log/manager.txt" 2>&1 &
 manager_pid=$!
 sleep 1
@@ -88,6 +89,20 @@ grep -Eq "tiers: [1-9][0-9]* demoted" "$log/worker1.txt" || {
     echo "worker 1 never demoted to its spill tier" >&2
     exit 1
 }
+# the manager-merged trace must contain execution events shipped over the
+# heartbeat channel from BOTH workers, not just the manager's own records
+python3 - "$log/trace.json.jsonl" <<'EOF'
+import json, sys
+workers = set()
+ops = 0
+for line in open(sys.argv[1]):
+    ev = json.loads(line)
+    if ev["kind"] == "op-end":
+        workers.add(ev["worker"])
+        ops += 1
+assert workers >= {1, 2}, f"trace missing a worker's op spans: {sorted(workers)}"
+print(f"merged trace OK: {ops} op spans from workers {sorted(workers)}")
+EOF
 echo "distributed smoke OK ($label)"
 
 # --- kill-and-rejoin phase -------------------------------------------------
