@@ -12,8 +12,16 @@ use std::collections::BTreeMap;
 /// Flags that take no value.  Everything else still requires one, so a
 /// forgotten value for a string/path flag is an error, not a silent
 /// `"true"`.
-const BOOL_FLAGS: &[&str] =
-    &["quick", "no-dl", "no-prefetch", "no-locality", "no-replication", "resume", "warm-restart"];
+const BOOL_FLAGS: &[&str] = &[
+    "quick",
+    "no-dl",
+    "no-prefetch",
+    "no-locality",
+    "no-replication",
+    "resume",
+    "warm-restart",
+    "standby",
+];
 
 /// Parsed command line.
 #[derive(Debug, Clone)]
@@ -155,6 +163,13 @@ impl Cli {
         if let Some(v) = self.get("trace-out") {
             cfg.trace_out = Some(v.to_string());
         }
+        if let Some(v) = self.get("fault-plan") {
+            cfg.fault_plan = Some(v.to_string());
+        }
+        if let Some(v) = self.get("fault-seed") {
+            cfg.fault_seed =
+                v.parse().map_err(|_| Error::Config("bad --fault-seed".into()))?;
+        }
         cfg.validate()?;
         Ok(cfg)
     }
@@ -170,7 +185,7 @@ USAGE:
                  [--save-profiles out.json] [--chunk-source synth|dir:PATH]
                  [--staging-cap N|NMB] [--prefetch-depth N] [--no-locality]
                  [--spill-dir PATH] [--spill-cap N|NMB] [--read-latency-ms MS]
-                 [--trace-out PATH]
+                 [--trace-out PATH] [--fault-plan SPEC] [--fault-seed N]
         run a workflow locally (default: the built-in WSI app; --workflow
         loads a declarative JSON workflow over the registered op set — see
         docs/workflow_api.md).  Chunks come from --chunk-source (synthetic
@@ -186,12 +201,15 @@ USAGE:
         post-run EWMA estimates out.  --trace-out records structured
         execution events (op spans, queue waits, staging activity) and
         writes a Chrome trace_event JSON (open in Perfetto) plus a .jsonl
-        sidecar — see docs/observability.md
+        sidecar — see docs/observability.md.  --fault-plan arms seeded
+        fault injection (`site=rate[@delay_ms][#max],...` — see
+        docs/operations.md) and --fault-seed fixes where the faults land;
+        the HTAP_FAULTS env var is a lower-precedence alternative
 
     htap sim     [--nodes N] [--tiles N] [--policy fcfs|pats]
                  [--profiles profiles.json] [--no-locality] [--no-replication]
                  [--kill-worker-at F] [--jobs N] [--job-weights W1,W2,...]
-                 [--trace-out PATH]
+                 [--net-fault-rate F] [--fault-seed N] [--trace-out PATH]
         discrete-event simulation at cluster scale (Keeneland model);
         --profiles calibrates the cost model from measured estimates
         (including the chunk-read cost a calibrate --read-latency-ms run
@@ -205,8 +223,12 @@ USAGE:
         distributed lease-expiry path); --jobs N models N identical jobs
         sharing the cluster under weighted fair-share (--job-weights,
         default all 1) and prints each job's analytic makespan;
-        --trace-out writes the simulated schedule in the same Chrome
-        trace_event schema real runs emit (virtual-time op spans per node)
+        --net-fault-rate F drops fraction F (0..1) of manager round-trips,
+        each retried under the same bounded-backoff schedule real workers
+        use (--fault-seed fixes which round-trips fail) and reports the
+        retried-frame count; --trace-out writes the simulated schedule in
+        the same Chrome trace_event schema real runs emit (virtual-time op
+        spans per node)
 
     htap calibrate [--quick] [--tile-size S] [--tiles N] [--reps N]
                    [--seed N] [--read-latency-ms MS] [--out profiles.json]
@@ -219,7 +241,8 @@ USAGE:
                  [--chunk-source synth|dir:PATH] [--workflow wf.json]
                  [--no-locality] [--no-replication] [--partition demand|init]
                  [--lease-ms MS] [--checkpoint-dir PATH] [--resume]
-                 [--trace-out PATH]
+                 [--standby --primary HOST:PORT [--promote-after-ms MS]]
+                 [--trace-out PATH] [--fault-plan SPEC] [--fault-seed N]
         serve stage instances to TCP workers.  Staged protocol: workers
         read chunk payloads from their own --chunk-source (tiles never
         cross the wire) and assignment is locality-aware via the chunk
@@ -233,7 +256,13 @@ USAGE:
         survivors and its catalog entries purge.  --checkpoint-dir
         periodically snapshots manager progress (completion journal +
         chunk catalog); --resume restarts from that snapshot instead of
-        from scratch after a manager crash.  --trace-out merges the trace
+        from scratch after a manager crash.  --standby turns the process
+        into a warm standby instead: it health-checks --primary, and when
+        the primary stays silent for --promote-after-ms (default 3000) it
+        restores the newest snapshot under --checkpoint-dir and starts
+        serving on --listen — workers started with a multi-address
+        --connect fail over to it through their retry policy.
+        --trace-out merges the trace
         batches workers ship at heartbeat cadence with the manager's own
         membership events and writes the cluster-wide stream when the run
         completes
@@ -280,14 +309,18 @@ USAGE:
         running jobs stop issuing new instances and release their tenant's
         cache claim
 
-    htap worker  --connect HOST:PORT [--cpus N] [--gpus N] [--window N]
+    htap worker  --connect HOST:PORT[,HOST:PORT...] [--cpus N] [--gpus N] [--window N]
                  [--chunk-source synth|dir:PATH] [--workflow wf.json]
                  [--worker-id N] [--staging-cap N|NMB] [--prefetch-depth N]
                  [--spill-dir PATH] [--spill-cap N|NMB] [--read-latency-ms MS]
                  [--heartbeat-ms MS] [--lease-ms MS] [--warm-restart]
                  [--tenant-quota N|NMB] [--drain-on file:PATH|signal[:term|int]]
-                 [--trace-out PATH]
-        join a distributed run; --chunk-source must serve the same dataset
+                 [--trace-out PATH] [--fault-plan SPEC] [--fault-seed N]
+        join a distributed run; --connect takes a comma-separated failover
+        list (primary first, then standbys): a lost manager reconnects
+        through bounded exponential backoff, rotating addresses until one
+        answers, then re-identifies and re-advertises every staged and
+        spilled chunk it still holds.  --chunk-source must serve the same dataset
         the manager was pointed at (same synth seed/tile count, or the
         same shared directory), and --workflow must load the same file the
         manager did.  The worker announces itself with a lease term
@@ -539,6 +572,57 @@ mod tests {
         assert_eq!(c.get("connect"), Some("h:1"));
         assert_eq!(c.get_usize("interval-ms", 1000).unwrap(), 250);
         assert_eq!(c.get_usize("iterations", 0).unwrap(), 3);
+    }
+
+    #[test]
+    fn fault_and_failover_flags_parse() {
+        let c = Cli::parse(&args(&[
+            "run",
+            "--fault-plan",
+            "frame-drop=0.1#5,spill-io=1#2",
+            "--fault-seed",
+            "9",
+        ]))
+        .unwrap();
+        let cfg = c.run_config().unwrap();
+        assert_eq!(cfg.fault_plan.as_deref(), Some("frame-drop=0.1#5,spill-io=1#2"));
+        assert_eq!(cfg.fault_seed, 9);
+        // defaults: no faults armed
+        let cfg = Cli::parse(&args(&["run"])).unwrap().run_config().unwrap();
+        assert!(cfg.fault_plan.is_none());
+        assert_eq!(cfg.fault_seed, 0);
+        // a malformed plan is rejected at run_config time, not mid-run
+        assert!(Cli::parse(&args(&["run", "--fault-plan", "bogus-site=1"]))
+            .unwrap()
+            .run_config()
+            .is_err());
+        assert!(Cli::parse(&args(&["run", "--fault-plan", "frame-drop=2.0"]))
+            .unwrap()
+            .run_config()
+            .is_err());
+        // --standby is boolean; --primary/--promote-after-ms are consumed
+        // by main, not RunConfig
+        let c = Cli::parse(&args(&[
+            "manager",
+            "--standby",
+            "--primary",
+            "h:1",
+            "--promote-after-ms",
+            "500",
+            "--checkpoint-dir",
+            "/tmp/ck",
+        ]))
+        .unwrap();
+        assert!(c.get_flag("standby"));
+        assert_eq!(c.get("primary"), Some("h:1"));
+        assert_eq!(c.get_usize("promote-after-ms", 3000).unwrap(), 500);
+        // multi-address worker connect stays a single flag value
+        let c = Cli::parse(&args(&["worker", "--connect", "h:1,h:2"])).unwrap();
+        assert_eq!(c.get("connect"), Some("h:1,h:2"));
+        // sim's fault mirror parses
+        let c = Cli::parse(&args(&["sim", "--net-fault-rate", "0.2", "--fault-seed", "3"]))
+            .unwrap();
+        assert_eq!(c.get("net-fault-rate"), Some("0.2"));
     }
 
     #[test]

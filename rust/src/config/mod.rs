@@ -239,6 +239,14 @@ pub struct RunConfig {
     /// event log) of the run to this path (None = tracing disabled; the
     /// record path is then a single atomic load).
     pub trace_out: Option<String>,
+    /// Fault-injection plan (`site=rate[@delay_ms][#max],...`): reproducible
+    /// chaos at named sites in the net/staging layers (None = no faults; the
+    /// probe path is then a single atomic load).  `HTAP_FAULTS` and
+    /// `--fault-plan` override this.
+    pub fault_plan: Option<String>,
+    /// Seed for the fault plan's injection decisions (independent of the
+    /// data seed so chaos placement can vary while inputs stay fixed).
+    pub fault_seed: u64,
     /// RNG seed for synthetic data.
     pub seed: u64,
 }
@@ -270,6 +278,8 @@ impl Default for RunConfig {
             tenant_queue_depth: 8,
             tenant_quota: None,
             trace_out: None,
+            fault_plan: None,
+            fault_seed: 0,
             seed: 42,
         }
     }
@@ -329,6 +339,8 @@ impl RunConfig {
                 "tenant_queue_depth" => self.tenant_queue_depth = req_usize(v, k)?,
                 "tenant_quota" => self.tenant_quota = Some(req_cap(v, k)?),
                 "trace_out" => self.trace_out = Some(req_str(v, k)?.to_string()),
+                "fault_plan" => self.fault_plan = Some(req_str(v, k)?.to_string()),
+                "fault_seed" => self.fault_seed = req_usize(v, k)? as u64,
                 other => return Err(Error::Config(format!("unknown config key '{other}'"))),
             }
         }
@@ -372,6 +384,10 @@ impl RunConfig {
                 "heartbeat_ms ({}) must be < lease_ms ({})",
                 self.heartbeat_ms, self.lease_ms
             )));
+        }
+        // surface a malformed fault plan at config time, not mid-run
+        if let Some(plan) = &self.fault_plan {
+            crate::faults::FaultPlan::parse(plan, self.fault_seed)?;
         }
         Ok(())
     }
@@ -578,6 +594,22 @@ mod tests {
         let mut c = RunConfig::default();
         c.cpu_workers = 0;
         c.gpu_workers = 0;
+        assert!(c.validate().is_err());
+    }
+
+    #[test]
+    fn fault_knobs_parse_and_validate() {
+        let mut c = RunConfig::default();
+        c.apply_json(
+            &Json::parse(r#"{"fault_plan": "frame-drop=0.05#3,spill-io=1@10", "fault_seed": 7}"#)
+                .unwrap(),
+        )
+        .unwrap();
+        assert_eq!(c.fault_plan.as_deref(), Some("frame-drop=0.05#3,spill-io=1@10"));
+        assert_eq!(c.fault_seed, 7);
+        c.validate().unwrap();
+        // malformed plans are a config error, caught before any run starts
+        c.fault_plan = Some("no-such-site=1".into());
         assert!(c.validate().is_err());
     }
 

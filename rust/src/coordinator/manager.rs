@@ -177,6 +177,12 @@ pub trait WorkSource: Send + Sync {
     /// cost nothing; the TCP client forwards the batch on the completion
     /// channel, the in-process Manager merges it into its collector.
     fn trace_events(&self, _worker: WorkerId, _events: Vec<TraceEvent>) {}
+
+    /// Install a hook the source fires after reconnecting to a (possibly
+    /// different, e.g. freshly promoted) manager, so worker-side state
+    /// like the staged-chunk catalog can be re-advertised in full.
+    /// Default no-op: in-process sources never lose the manager.
+    fn set_resync(&self, _resync: crate::net::ResyncFn) {}
 }
 
 /// One replayable completion: which `(stage, chunk)` instance finished and

@@ -127,8 +127,25 @@ pub fn run_local_staged(
 ) -> Result<RunOutcome> {
     let policy = AssignPolicy::from_config(&cfg, vec![1]);
     let manager = Manager::new_staged(workflow.clone(), n_chunks, policy)?;
-    let spill = spill_from_config(&cfg, 1, false)?;
+    let mut spill = spill_from_config(&cfg, 1, false)?;
     let metrics = hub_from_config(&cfg, 1);
+    // `cfg.fault_plan` arms the staging-layer fault sites for local runs
+    // (the net sites have no wire to fault here); flag-level overrides
+    // were already merged into the config by the CLI layer
+    let faults = crate::faults::Faults::from_sources(
+        None,
+        cfg.fault_plan.as_deref(),
+        cfg.fault_seed,
+        metrics.registry(),
+    )?;
+    let source = if faults.is_armed() {
+        if let Some(tier) = spill.as_mut() {
+            tier.set_faults(faults.clone());
+        }
+        crate::data::staging::FaultySource::wrap(source, faults)
+    } else {
+        source
+    };
     let staging = worker::WorkerStaging {
         cache: StagingCache::with_obs(
             source,

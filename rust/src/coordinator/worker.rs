@@ -225,6 +225,14 @@ pub fn run_worker_opts(
     let heartbeat = match &staging {
         Some(s) => {
             source.register(s.worker_id, cfg.lease_ms);
+            // On reconnect the manager at the far end may be a freshly
+            // promoted standby whose catalog is checkpoint-stale: re-stage
+            // everything this worker actually holds so the next staged
+            // delta re-advertises the full tiered holding set.
+            source.set_resync({
+                let cache = s.cache.clone();
+                Arc::new(move || cache.resync_staged())
+            });
             if cfg.lease_ms > 0 {
                 let stop = stop_heartbeat.clone();
                 let src = source.clone();

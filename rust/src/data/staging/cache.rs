@@ -725,6 +725,37 @@ impl StagingCache {
         )
     }
 
+    /// Reconnect hook: repopulate the next staged delta with
+    /// *everything* this worker holds — every memory-tier (Ready) chunk
+    /// as staged, every disk-only spill resident as demoted — so a
+    /// freshly promoted manager's checkpoint-stale catalog relearns the
+    /// full set on the next `Request`.  Catalog inserts are idempotent,
+    /// so re-advertising to the original manager is harmless; pending
+    /// eviction deltas are dropped (stale locality hints only cost a
+    /// cache miss, never correctness).
+    pub fn resync_staged(&self) {
+        let mut inner = sync::lock_clean(&self.inner);
+        // lint: critical-section — id collection only
+        let ready: Vec<ChunkId> = inner
+            .order
+            .iter()
+            .copied()
+            .filter(|c| matches!(inner.slots.get(c), Some(Slot::Ready { .. })))
+            .collect();
+        let spilled: Vec<ChunkId> = inner
+            .spill
+            .as_ref()
+            .map(|s| s.resident_chunks())
+            .unwrap_or_default()
+            .into_iter()
+            // dual residents advertise at the memory tier
+            .filter(|c| !matches!(inner.slots.get(c), Some(Slot::Ready { .. })))
+            .collect();
+        inner.staged = ready;
+        inner.evicted.clear();
+        inner.demoted = spilled;
+    }
+
     /// Whether a chunk is currently staged (Ready) — test/diagnostic hook.
     pub fn is_staged(&self, chunk: ChunkId) -> bool {
         matches!(sync::lock_clean(&self.inner).slots.get(&chunk), Some(Slot::Ready { .. }))
@@ -1093,6 +1124,28 @@ mod tests {
         assert_eq!(count(EventKind::StagingEvict), r.evictions);
         assert!(evs.iter().all(|e| e.worker == 1));
         cache.shutdown();
+    }
+
+    #[test]
+    fn resync_readvertises_the_full_tiered_holding_set() {
+        let dir = spill_dir("resync");
+        let spill = SpillTier::create(&dir, 8).unwrap();
+        let cache = StagingCache::new_tiered(source(4, 0), 2, 0, Some(spill));
+        cache.get(0).unwrap();
+        cache.get(1).unwrap();
+        cache.get(2).unwrap(); // demotes 0 to disk
+        // deltas already drained: the manager has been told everything
+        let _ = cache.take_staged_delta();
+        assert!(cache.take_staged_delta().0.is_empty());
+        // a reconnect to a promoted standby must re-advertise it all
+        cache.resync_staged();
+        let (mut add, dropped, demoted) = cache.take_staged_delta();
+        add.sort_unstable();
+        assert_eq!(add, vec![1, 2], "memory tier re-advertises as staged");
+        assert_eq!(demoted, vec![0], "disk tier re-advertises as demoted");
+        assert!(dropped.is_empty());
+        cache.shutdown();
+        let _ = std::fs::remove_dir_all(&dir);
     }
 
     #[test]

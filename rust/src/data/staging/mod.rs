@@ -38,7 +38,7 @@ pub mod tiers;
 
 pub use cache::StagingCache;
 pub use catalog::{ChunkCatalog, Tier, WorkerId, ANON_WORKER};
-pub use source::{source_loader, ChunkSource, DirSource, SynthSource};
+pub use source::{source_loader, ChunkSource, DirSource, FaultySource, SynthSource};
 pub use tiers::SpillTier;
 
 use crate::data::SynthConfig;

@@ -34,6 +34,43 @@ pub fn source_loader(src: Arc<dyn ChunkSource>) -> ChunkLoader {
     Arc::new(move |chunk| src.load(chunk))
 }
 
+/// Chaos wrapper over any [`ChunkSource`]: the `source-io` site fails a
+/// read outright (the worker fails that assignment; the manager
+/// re-issues it), the `source-slow` site stalls before delegating (a
+/// congested shared filesystem).  Wrapping keeps every concrete source
+/// fault-free — the injection surface lives in one place.
+pub struct FaultySource {
+    inner: Arc<dyn ChunkSource>,
+    faults: crate::faults::Faults,
+}
+
+impl FaultySource {
+    /// Wrap `inner`; with a disabled handle the wrapper is a pure
+    /// pass-through (one relaxed load per read).
+    pub fn wrap(inner: Arc<dyn ChunkSource>, faults: crate::faults::Faults) -> Arc<dyn ChunkSource> {
+        Arc::new(FaultySource { inner, faults })
+    }
+}
+
+impl ChunkSource for FaultySource {
+    fn n_chunks(&self) -> usize {
+        self.inner.n_chunks()
+    }
+
+    fn load(&self, chunk: ChunkId) -> Result<Vec<Value>> {
+        use crate::faults::Site;
+        if self.faults.inject(Site::SourceIo).is_some() {
+            return Err(Error::Config(format!("injected: source read failed (chunk {chunk})")));
+        }
+        self.faults.maybe_stall(Site::SourceSlow);
+        self.inner.load(chunk)
+    }
+
+    fn describe(&self) -> String {
+        format!("faulty({})", self.inner.describe())
+    }
+}
+
 /// Deterministic synthetic tiles (wraps [`TileStore`]): every process that
 /// constructs a `SynthSource` with the same config serves bit-identical
 /// chunks, which is what lets staged distributed runs skip shipping tile

@@ -23,6 +23,7 @@
 use super::source::{decode_tensor, encode_tensor, take_bytes};
 use crate::config::CacheCap;
 use crate::coordinator::ChunkId;
+use crate::faults::{Faults, Site};
 use crate::runtime::Value;
 use crate::{Error, Result};
 use std::collections::{HashMap, VecDeque};
@@ -49,6 +50,8 @@ pub struct SpillTier {
     disk_bytes: u64,
     /// spilled chunk ids, least-recently-touched first (eviction order)
     order: VecDeque<ChunkId>,
+    /// chaos handle: `spill-io` / `spill-slow` sites (disabled by default)
+    faults: Faults,
 }
 
 impl SpillTier {
@@ -75,6 +78,7 @@ impl SpillTier {
             resident: HashMap::new(),
             disk_bytes: 0,
             order: VecDeque::new(),
+            faults: Faults::disabled(),
         })
     }
 
@@ -93,8 +97,14 @@ impl SpillTier {
             CacheCap::Chunks(n) => CacheCap::Chunks(n.max(1)),
             b => b,
         };
-        let mut tier =
-            SpillTier { dir, cap, resident: HashMap::new(), disk_bytes: 0, order: VecDeque::new() };
+        let mut tier = SpillTier {
+            dir,
+            cap,
+            resident: HashMap::new(),
+            disk_bytes: 0,
+            order: VecDeque::new(),
+            faults: Faults::disabled(),
+        };
         let mut found: Vec<(ChunkId, u64)> = Vec::new();
         for entry in std::fs::read_dir(&tier.dir)?.filter_map(|e| e.ok()) {
             let p = entry.path();
@@ -130,6 +140,13 @@ impl SpillTier {
             let _ = std::fs::remove_file(tier.path(old));
         }
         Ok(tier)
+    }
+
+    /// Arm the `spill-io` / `spill-slow` chaos sites on this tier.  Call
+    /// before handing the tier to the staging cache (which owns it under
+    /// its lock afterwards).
+    pub fn set_faults(&mut self, faults: Faults) {
+        self.faults = faults;
     }
 
     /// The chunks currently resident on disk, ascending — the warm-restart
@@ -173,6 +190,11 @@ impl SpillTier {
     /// whose file survives from an earlier promotion only refreshes its
     /// recency — payloads are immutable.
     pub fn put(&mut self, chunk: ChunkId, vals: &[Value]) -> Result<Vec<ChunkId>> {
+        // chaos site: a refused demotion degrades to a plain eviction in
+        // the caller (the chunk drops instead of spilling), never a crash
+        if self.faults.inject(Site::SpillIo).is_some() {
+            return Err(Error::Config("injected: spill write refused".into()));
+        }
         if self.contains(chunk) {
             self.touch(chunk);
             return Ok(Vec::new());
@@ -221,7 +243,16 @@ impl SpillTier {
         if !self.contains(chunk) {
             return None;
         }
-        match self.read(chunk) {
+        // chaos sites: a slow disk stalls the promotion; a failed read
+        // takes the same degraded path as a corrupt file below (drop the
+        // entry, fall back to the source tier)
+        self.faults.maybe_stall(Site::SpillSlow);
+        let read = if self.faults.inject(Site::SpillIo).is_some() {
+            Err(Error::Config("injected: spill read failed".into()))
+        } else {
+            self.read(chunk)
+        };
+        match read {
             Ok(vals) => {
                 self.touch(chunk);
                 Some(vals)
@@ -384,6 +415,24 @@ mod tests {
         std::fs::write(tier.path(1), b"garbage").unwrap();
         assert!(tier.get(1).is_none(), "corruption must fall back to the source tier");
         assert!(!tier.contains(1));
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn injected_spill_faults_degrade_not_die() {
+        use crate::faults::{FaultPlan, Faults};
+        let dir = tmp_dir("faults");
+        let mut tier = SpillTier::create(&dir, 4).unwrap();
+        let reg = crate::obs::Registry::new();
+        let plan = FaultPlan::parse("spill-io=1#1", 3).unwrap();
+        tier.set_faults(Faults::armed(&plan, &reg));
+        // the first put eats the injected write error...
+        assert!(tier.put(0, &payload(0)).is_err());
+        // ...the #1 cap restores service: the retry demotes cleanly and
+        // round-trips, and the injection was counted in the registry
+        assert!(tier.put(0, &payload(0)).unwrap().is_empty());
+        assert_eq!(tier.get(0).unwrap(), payload(0));
+        assert_eq!(reg.snapshot().counter("faults.spill-io.injected"), 1);
         let _ = std::fs::remove_dir_all(&dir);
     }
 

@@ -1,0 +1,478 @@
+//! Deterministic fault injection (`--fault-plan` / `HTAP_FAULTS`).
+//!
+//! A [`FaultPlan`] names *sites* in the runtime — protocol framing,
+//! connect, spill-tier and chunk-source I/O, the worker request loop —
+//! and attaches a seeded injection rule to each.  The plan is decided
+//! entirely by a counter-keyed hash of the plan seed, so a given
+//! `(seed, site, occurrence)` triple always injects (or not) the same
+//! way: a chaos test that failed in CI replays bit-identically from its
+//! spec string, and no wall-clock randomness leaks into the model/lint
+//! suites.
+//!
+//! The handle follows the `obs::Tracer` discipline: a disabled
+//! [`Faults`] costs one relaxed atomic load per probe and never locks,
+//! allocates, or branches further, so production paths keep the
+//! instrumentation compiled in.  Armed handles export one
+//! `faults.<site>.injected` counter per active site through the
+//! [`obs::Registry`], so tests (and `htap top` snapshots) can assert a
+//! plan actually fired rather than silently doing nothing.
+//!
+//! Spec grammar (comma-separated clauses):
+//!
+//! ```text
+//!   site=rate[@delay_ms][#max]
+//!   frame-drop=0.25#8,spill-io=0.1,frame-delay=0.5@20,connect=1#2
+//! ```
+//!
+//! `rate` is an injection probability in `[0, 1]` evaluated per
+//! occurrence; `@delay_ms` sets the stall length for delay-flavoured
+//! sites (default 10 ms); `#max` caps the total injections at that site
+//! (unbounded when absent).  The same grammar is accepted from the
+//! `--fault-plan` flag, the `fault_plan` config key, and the
+//! `HTAP_FAULTS` environment variable (flag > config > env).
+
+use crate::obs;
+use crate::{Error, Result};
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::Arc;
+
+/// Environment variable consulted when neither the flag nor the config
+/// names a plan.
+pub const FAULTS_ENV: &str = "HTAP_FAULTS";
+
+/// Default stall length for delay-flavoured sites without `@delay_ms`.
+const DEFAULT_DELAY_MS: u64 = 10;
+
+/// A named injection site.  The discriminant indexes the plan's rule
+/// table, so the probe path is one array load — keep the list dense.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+#[repr(usize)]
+pub enum Site {
+    /// Drop an outgoing protocol frame (never written to the socket).
+    FrameDrop = 0,
+    /// Stall before an outgoing protocol frame is written.
+    FrameDelay = 1,
+    /// Corrupt an outgoing frame's payload (one byte flipped).
+    FrameCorrupt = 2,
+    /// Refuse a `TcpStream::connect` before it is attempted.
+    Connect = 3,
+    /// Stall before a protocol read (a slow peer).
+    ReadStall = 4,
+    /// Stall before a protocol write flush (a slow pipe).
+    WriteStall = 5,
+    /// Spill-tier put/get fails as an I/O error.
+    SpillIo = 6,
+    /// Spill-tier read is slow.
+    SpillSlow = 7,
+    /// Chunk-source `load` fails as an I/O error.
+    SourceIo = 8,
+    /// Chunk-source `load` is slow.
+    SourceSlow = 9,
+    /// Worker pauses before issuing a work request.
+    WorkerPause = 10,
+}
+
+/// Number of sites (rule-table length).
+const N_SITES: usize = 11;
+
+/// Every site with its spec-grammar name.
+pub const SITES: [(Site, &str); N_SITES] = [
+    (Site::FrameDrop, "frame-drop"),
+    (Site::FrameDelay, "frame-delay"),
+    (Site::FrameCorrupt, "frame-corrupt"),
+    (Site::Connect, "connect"),
+    (Site::ReadStall, "read-stall"),
+    (Site::WriteStall, "write-stall"),
+    (Site::SpillIo, "spill-io"),
+    (Site::SpillSlow, "spill-slow"),
+    (Site::SourceIo, "source-io"),
+    (Site::SourceSlow, "source-slow"),
+    (Site::WorkerPause, "worker-pause"),
+];
+
+impl Site {
+    /// The spec-grammar name (`faults.<name>.injected` counter key).
+    pub fn name(self) -> &'static str {
+        SITES[self as usize].1
+    }
+}
+
+/// One parsed clause: inject with probability `rate_ppm`/1e6 per
+/// occurrence, stalling `delay_ms` on delay sites, at most `max` times
+/// (`u64::MAX` = unbounded).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct Rule {
+    pub rate_ppm: u32,
+    pub delay_ms: u64,
+    pub max: u64,
+}
+
+/// A parsed, seeded fault plan: rules per site.  Immutable once built;
+/// arm it into a [`Faults`] handle to start injecting.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct FaultPlan {
+    pub seed: u64,
+    rules: [Option<Rule>; N_SITES],
+}
+
+impl FaultPlan {
+    /// An empty plan (no sites armed).
+    pub fn empty(seed: u64) -> FaultPlan {
+        FaultPlan { seed, rules: [None; N_SITES] }
+    }
+
+    /// Parse the spec grammar (see module docs).  An empty spec is the
+    /// empty plan.
+    pub fn parse(spec: &str, seed: u64) -> Result<FaultPlan> {
+        let mut plan = FaultPlan::empty(seed);
+        for clause in spec.split(',').map(str::trim).filter(|c| !c.is_empty()) {
+            let (name, rest) = clause
+                .split_once('=')
+                .ok_or_else(|| Error::Config(format!("fault clause '{clause}' needs site=rate")))?;
+            let site = SITES
+                .iter()
+                .find(|(_, n)| *n == name.trim())
+                .map(|(s, _)| *s)
+                .ok_or_else(|| {
+                    Error::Config(format!(
+                        "unknown fault site '{}' (want one of: {})",
+                        name.trim(),
+                        SITES.map(|(_, n)| n).join(", ")
+                    ))
+                })?;
+            // rate[@delay][#max] — suffixes in either order
+            let mut rest = rest.trim();
+            let mut delay_ms = DEFAULT_DELAY_MS;
+            let mut max = u64::MAX;
+            loop {
+                if let Some((head, tail)) = rest.rsplit_once('#') {
+                    if !tail.contains('@') {
+                        max = tail.trim().parse().map_err(|_| {
+                            Error::Config(format!("bad fault cap '#{tail}' in '{clause}'"))
+                        })?;
+                        rest = head.trim();
+                        continue;
+                    }
+                }
+                if let Some((head, tail)) = rest.rsplit_once('@') {
+                    if !tail.contains('#') {
+                        delay_ms = tail.trim().parse().map_err(|_| {
+                            Error::Config(format!("bad fault delay '@{tail}' in '{clause}'"))
+                        })?;
+                        rest = head.trim();
+                        continue;
+                    }
+                }
+                break;
+            }
+            let rate: f64 = rest
+                .parse()
+                .map_err(|_| Error::Config(format!("bad fault rate '{rest}' in '{clause}'")))?;
+            if !(0.0..=1.0).contains(&rate) {
+                return Err(Error::Config(format!(
+                    "fault rate {rate} out of [0, 1] in '{clause}'"
+                )));
+            }
+            plan.rules[site as usize] =
+                Some(Rule { rate_ppm: (rate * 1e6) as u32, delay_ms, max });
+        }
+        Ok(plan)
+    }
+
+    /// The rule for `site`, if the plan arms it.
+    pub fn rule(&self, site: Site) -> Option<Rule> {
+        self.rules[site as usize]
+    }
+
+    /// Whether any site is armed.
+    pub fn is_empty(&self) -> bool {
+        self.rules.iter().all(|r| r.is_none())
+    }
+}
+
+/// Per-site injection state: the occurrence counter keys the seeded
+/// hash; `fired` enforces `#max` and feeds the registry counter.
+struct SiteState {
+    rule: Rule,
+    occurrences: AtomicU64,
+    fired: AtomicU64,
+    injected: obs::Counter,
+}
+
+struct Inner {
+    seed: u64,
+    sites: [Option<SiteState>; N_SITES],
+}
+
+/// Cloneable injection handle.  [`Faults::disabled`] is the production
+/// default: probes cost one relaxed load.  Cloning shares state, so a
+/// worker's net, spill, and source sites all draw from one plan.
+#[derive(Clone)]
+pub struct Faults {
+    enabled: Arc<AtomicBool>,
+    inner: Arc<Inner>,
+}
+
+impl std::fmt::Debug for Faults {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("Faults")
+            .field("armed", &self.is_armed())
+            .field("seed", &self.inner.seed)
+            .finish()
+    }
+}
+
+/// What a probe asks the caller to do.  Delay-flavoured sites carry the
+/// stall length; error-flavoured sites are unit verdicts.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Injection {
+    /// Fail / drop / corrupt — the site's error flavour.
+    Fault,
+    /// Stall this long, then proceed normally.
+    Delay(std::time::Duration),
+}
+
+impl Faults {
+    /// The zero-cost production handle: never injects.
+    pub fn disabled() -> Faults {
+        Faults {
+            enabled: Arc::new(AtomicBool::new(false)),
+            inner: Arc::new(Inner { seed: 0, sites: std::array::from_fn(|_| None) }),
+        }
+    }
+
+    /// Arm `plan`, registering one `faults.<site>.injected` counter per
+    /// active site in `registry`.  An empty plan stays disabled.
+    pub fn armed(plan: &FaultPlan, registry: &obs::Registry) -> Faults {
+        let sites = std::array::from_fn(|i| {
+            plan.rules[i].map(|rule| SiteState {
+                rule,
+                occurrences: AtomicU64::new(0),
+                fired: AtomicU64::new(0),
+                injected: registry.counter(&format!("faults.{}.injected", SITES[i].1)),
+            })
+        });
+        Faults {
+            enabled: Arc::new(AtomicBool::new(!plan.is_empty())),
+            inner: Arc::new(Inner { seed: plan.seed, sites }),
+        }
+    }
+
+    /// Resolve the active plan source (flag > config > env) into a
+    /// handle.  `None`/empty everywhere stays disabled.
+    pub fn from_sources(
+        flag: Option<&str>,
+        config: Option<&str>,
+        seed: u64,
+        registry: &obs::Registry,
+    ) -> Result<Faults> {
+        let env = std::env::var(FAULTS_ENV).ok();
+        let spec = flag.or(config).or(env.as_deref()).unwrap_or("");
+        if spec.trim().is_empty() {
+            return Ok(Faults::disabled());
+        }
+        Ok(Faults::armed(&FaultPlan::parse(spec, seed)?, registry))
+    }
+
+    /// Whether any site is armed (one relaxed load).
+    pub fn is_armed(&self) -> bool {
+        self.enabled.load(Ordering::Relaxed)
+    }
+
+    /// Probe `site`: `None` on the overwhelmingly common no-inject path.
+    /// The verdict is a pure function of `(seed, site, occurrence)`.
+    pub fn inject(&self, site: Site) -> Option<Injection> {
+        if !self.enabled.load(Ordering::Relaxed) {
+            return None;
+        }
+        let st = self.inner.sites[site as usize].as_ref()?;
+        let n = st.occurrences.fetch_add(1, Ordering::Relaxed);
+        let h = splitmix64(self.inner.seed ^ ((site as u64 + 1) << 56) ^ n);
+        if (h % 1_000_000) >= st.rule.rate_ppm as u64 {
+            return None;
+        }
+        // #max cap: fetch_update so concurrent probes never overshoot
+        if st
+            .fired
+            .fetch_update(Ordering::Relaxed, Ordering::Relaxed, |f| {
+                (f < st.rule.max).then_some(f + 1)
+            })
+            .is_err()
+        {
+            return None;
+        }
+        st.injected.inc();
+        Some(match site {
+            Site::FrameDelay
+            | Site::ReadStall
+            | Site::WriteStall
+            | Site::SpillSlow
+            | Site::SourceSlow
+            | Site::WorkerPause => {
+                Injection::Delay(std::time::Duration::from_millis(st.rule.delay_ms))
+            }
+            _ => Injection::Fault,
+        })
+    }
+
+    /// Probe a delay-flavoured site and serve the stall inline.  Returns
+    /// whether a stall was injected.
+    pub fn maybe_stall(&self, site: Site) -> bool {
+        match self.inject(site) {
+            Some(Injection::Delay(d)) => {
+                std::thread::sleep(d);
+                true
+            }
+            Some(Injection::Fault) => true,
+            None => false,
+        }
+    }
+
+    /// Times `site` has actually injected so far.
+    pub fn fired(&self, site: Site) -> u64 {
+        self.inner.sites[site as usize]
+            .as_ref()
+            .map(|s| s.fired.load(Ordering::Relaxed))
+            .unwrap_or(0)
+    }
+
+    /// One-line blast-radius report (`faults: frame-drop=3 spill-io=2`)
+    /// for end-of-run logs; `None` when injection is disarmed so quiet
+    /// runs stay quiet.
+    pub fn summary(&self) -> Option<String> {
+        if !self.is_armed() {
+            return None;
+        }
+        let mut out = String::from("faults:");
+        let mut any = false;
+        for (site, name) in SITES {
+            let n = self.fired(site);
+            if n > 0 {
+                out.push_str(&format!(" {name}={n}"));
+                any = true;
+            }
+        }
+        if !any {
+            out.push_str(" none fired");
+        }
+        Some(out)
+    }
+}
+
+/// SplitMix64: the seeded occurrence hash.  Small, stateless, and
+/// well-mixed — the same generator the synth tile source family uses.
+/// Public so the simulator's net-fault mirror draws its drop decisions
+/// from the same hash the live injector uses.
+pub fn splitmix64(mut x: u64) -> u64 {
+    x = x.wrapping_add(0x9e37_79b9_7f4a_7c15);
+    let mut z = x;
+    z = (z ^ (z >> 30)).wrapping_mul(0xbf58_476d_1ce4_e5b9);
+    z = (z ^ (z >> 27)).wrapping_mul(0x94d0_49bb_1331_11eb);
+    z ^ (z >> 31)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn spec_grammar_parses() {
+        let p = FaultPlan::parse("frame-drop=0.25#8, spill-io=0.1, frame-delay=0.5@20", 7)
+            .unwrap();
+        assert_eq!(
+            p.rule(Site::FrameDrop),
+            Some(Rule { rate_ppm: 250_000, delay_ms: DEFAULT_DELAY_MS, max: 8 })
+        );
+        assert_eq!(
+            p.rule(Site::SpillIo),
+            Some(Rule { rate_ppm: 100_000, delay_ms: DEFAULT_DELAY_MS, max: u64::MAX })
+        );
+        assert_eq!(
+            p.rule(Site::FrameDelay),
+            Some(Rule { rate_ppm: 500_000, delay_ms: 20, max: u64::MAX })
+        );
+        assert_eq!(p.rule(Site::Connect), None);
+        // suffixes compose in either order
+        let p = FaultPlan::parse("source-slow=1@5#3", 7).unwrap();
+        assert_eq!(p.rule(Site::SourceSlow), Some(Rule { rate_ppm: 1_000_000, delay_ms: 5, max: 3 }));
+        let p = FaultPlan::parse("source-slow=1#3@5", 7).unwrap();
+        assert_eq!(p.rule(Site::SourceSlow), Some(Rule { rate_ppm: 1_000_000, delay_ms: 5, max: 3 }));
+        // empty spec = empty plan
+        assert!(FaultPlan::parse("", 1).unwrap().is_empty());
+        assert!(FaultPlan::parse("  ,  ", 1).unwrap().is_empty());
+    }
+
+    #[test]
+    fn bad_specs_are_rejected() {
+        assert!(FaultPlan::parse("bogus-site=0.5", 1).is_err());
+        assert!(FaultPlan::parse("frame-drop", 1).is_err());
+        assert!(FaultPlan::parse("frame-drop=1.5", 1).is_err());
+        assert!(FaultPlan::parse("frame-drop=-0.1", 1).is_err());
+        assert!(FaultPlan::parse("frame-drop=0.5@ten", 1).is_err());
+        assert!(FaultPlan::parse("frame-drop=0.5#lots", 1).is_err());
+    }
+
+    #[test]
+    fn disabled_handle_never_injects() {
+        let f = Faults::disabled();
+        assert!(!f.is_armed());
+        for _ in 0..100 {
+            assert_eq!(f.inject(Site::FrameDrop), None);
+        }
+    }
+
+    #[test]
+    fn injection_is_seed_deterministic() {
+        let plan = FaultPlan::parse("frame-drop=0.3", 42).unwrap();
+        let run = |plan: &FaultPlan| {
+            let f = Faults::armed(plan, &obs::Registry::new());
+            (0..200).map(|_| f.inject(Site::FrameDrop).is_some()).collect::<Vec<_>>()
+        };
+        let a = run(&plan);
+        let b = run(&plan);
+        assert_eq!(a, b, "same seed must replay identically");
+        assert!(a.iter().any(|&x| x), "rate 0.3 over 200 trials must fire");
+        assert!(a.iter().any(|&x| !x), "rate 0.3 over 200 trials must also skip");
+        let other = run(&FaultPlan::parse("frame-drop=0.3", 43).unwrap());
+        assert_ne!(a, other, "different seeds must differ");
+    }
+
+    #[test]
+    fn max_cap_bounds_injections_and_counters_export() {
+        let reg = obs::Registry::new();
+        let plan = FaultPlan::parse("connect=1#3", 9).unwrap();
+        let f = Faults::armed(&plan, &reg);
+        let hits = (0..50).filter(|_| f.inject(Site::Connect).is_some()).count();
+        assert_eq!(hits, 3);
+        assert_eq!(f.fired(Site::Connect), 3);
+        assert_eq!(reg.snapshot().counter("faults.connect.injected"), 3);
+    }
+
+    #[test]
+    fn delay_sites_yield_delays_and_error_sites_faults() {
+        let reg = obs::Registry::new();
+        let plan = FaultPlan::parse("frame-delay=1@7,spill-io=1", 1).unwrap();
+        let f = Faults::armed(&plan, &reg);
+        assert_eq!(
+            f.inject(Site::FrameDelay),
+            Some(Injection::Delay(std::time::Duration::from_millis(7)))
+        );
+        assert_eq!(f.inject(Site::SpillIo), Some(Injection::Fault));
+        assert_eq!(f.inject(Site::FrameDrop), None, "unarmed site stays quiet");
+    }
+
+    #[test]
+    fn source_precedence_flag_config_env() {
+        let reg = obs::Registry::new();
+        // flag wins over config
+        let f =
+            Faults::from_sources(Some("connect=1"), Some("frame-drop=1"), 1, &reg).unwrap();
+        assert!(f.inject(Site::Connect).is_some());
+        assert!(f.inject(Site::FrameDrop).is_none());
+        // absent everywhere stays disabled (HTAP_FAULTS unset in tests)
+        if std::env::var(FAULTS_ENV).is_err() {
+            let f = Faults::from_sources(None, None, 1, &reg).unwrap();
+            assert!(!f.is_armed());
+        }
+    }
+}

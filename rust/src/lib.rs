@@ -49,6 +49,7 @@ pub mod coordinator;
 pub mod data;
 pub mod dataflow;
 pub mod error;
+pub mod faults;
 pub mod imgproc;
 pub mod metrics;
 pub mod net;

@@ -213,6 +213,23 @@ fn cmd_sim(cli: &Cli) -> htap::Result<()> {
         }
         None => None,
     };
+    // --net-fault-rate: the distributed frame-drop plan's analytic mirror
+    // (drops delay fetch round-trips behind the live retry backoff)
+    let net_fault_rate = match cli.get("net-fault-rate") {
+        Some(v) => {
+            let f: f64 = v
+                .parse()
+                .map_err(|_| htap::Error::Config("bad --net-fault-rate".into()))?;
+            if !(0.0..=1.0).contains(&f) {
+                return Err(htap::Error::Config(
+                    "--net-fault-rate takes a fraction in [0, 1]".into(),
+                ));
+            }
+            f
+        }
+        None => 0.0,
+    };
+    let fault_seed = cli.get_usize("fault-seed", 0)? as u64;
     let mut p = SimParams {
         workflow,
         n_nodes: nodes,
@@ -221,6 +238,8 @@ fn cmd_sim(cli: &Cli) -> htap::Result<()> {
         chunk_locality,
         replication,
         kill_worker_at,
+        net_fault_rate,
+        fault_seed,
         ..Default::default()
     };
     // a calibrate --read-latency-ms run measured the per-chunk read cost;
@@ -267,6 +286,14 @@ fn cmd_sim(cli: &Cli) -> htap::Result<()> {
             nodes - 1,
             f * 100.0,
             r.reexecuted
+        );
+    }
+    if net_fault_rate > 0.0 {
+        println!(
+            "net faults: {:.0}% of fetch round-trips dropped a frame; \
+             {} frames retried under bounded backoff (seed {fault_seed})",
+            net_fault_rate * 100.0,
+            r.retried_frames
         );
     }
     // --jobs N: model N identical copies of this run sharing the cluster
@@ -336,6 +363,47 @@ fn cmd_calibrate(cli: &Cli) -> htap::Result<()> {
 /// once the run finishes.
 const CKPT_INTERVAL_MS: u64 = 1000;
 
+/// How often a standby health-checks its primary.
+const PROBE_INTERVAL_MS: u64 = 250;
+
+/// `--standby`: block until the primary goes silent.  A warm standby
+/// probes `--primary` every [`PROBE_INTERVAL_MS`]; any successful probe
+/// resets the silence clock, so transient hiccups (one dropped probe, a
+/// GC-length stall) never trigger a split-brain promotion — only
+/// `--promote-after-ms` of *continuous* silence does.  Returns once the
+/// caller should promote: restore the newest snapshot under
+/// `--checkpoint-dir` and start serving on `--listen`.
+fn standby_wait(cli: &Cli) -> htap::Result<()> {
+    let primary = cli
+        .get("primary")
+        .ok_or_else(|| htap::Error::Config("--standby needs --primary HOST:PORT".into()))?;
+    if cli.get("checkpoint-dir").is_none() {
+        return Err(htap::Error::Config(
+            "--standby needs --checkpoint-dir (the promotion state source)".into(),
+        ));
+    }
+    let promote_after = cli.get_usize("promote-after-ms", 3000)? as u64;
+    println!(
+        "standby: watching primary {primary} (promote after {promote_after} ms of silence)"
+    );
+    let mut silent_ms = 0u64;
+    loop {
+        match net::probe(primary) {
+            Ok(()) => silent_ms = 0,
+            Err(_) => {
+                silent_ms += PROBE_INTERVAL_MS;
+                if silent_ms >= promote_after {
+                    println!(
+                        "standby: promoting — primary {primary} silent for {silent_ms} ms"
+                    );
+                    return Ok(());
+                }
+            }
+        }
+        std::thread::sleep(Duration::from_millis(PROBE_INTERVAL_MS));
+    }
+}
+
 fn cmd_manager(cli: &Cli) -> htap::Result<()> {
     let listen = cli
         .get("listen")
@@ -356,10 +424,18 @@ fn cmd_manager(cli: &Cli) -> htap::Result<()> {
     // restarted manager does not re-execute finished stage instances.
     // The journal goes on *before* the restore so replayed completions
     // land in the new journal and survive the next checkpoint too.
+    // --standby: wait out the primary first; a promotion then restores
+    // the newest snapshot exactly like --resume would
+    let promoted = if cli.get_flag("standby") {
+        standby_wait(cli)?;
+        true
+    } else {
+        false
+    };
     let ckpt_dir = cli.get("checkpoint-dir").map(std::path::PathBuf::from);
     if let Some(dir) = &ckpt_dir {
         manager.enable_journal();
-        if cli.get_flag("resume") {
+        if cli.get_flag("resume") || promoted {
             match checkpoint::load_checkpoint(dir)? {
                 Some((journal, catalog)) => {
                     let replayed = manager.restore_from(journal, catalog)?;
@@ -461,10 +537,18 @@ fn cmd_serve(cli: &Cli) -> htap::Result<()> {
     table.set_announce(true);
     // --checkpoint-dir snapshots the whole job table (queued + running
     // jobs, each with its journal and catalog); --resume restores it
+    // --standby: wait out the primary first; a promotion then restores
+    // the newest job-table snapshot exactly like --resume would
+    let promoted = if cli.get_flag("standby") {
+        standby_wait(cli)?;
+        true
+    } else {
+        false
+    };
     let ckpt_dir = cli.get("checkpoint-dir").map(std::path::PathBuf::from);
     if let Some(dir) = &ckpt_dir {
         table.enable_journal();
-        if cli.get_flag("resume") {
+        if cli.get_flag("resume") || promoted {
             match checkpoint::load_service_checkpoint(dir)? {
                 Some(jobs) => {
                     let restored = table.restore(jobs)?;
@@ -674,6 +758,16 @@ fn cmd_worker(cli: &Cli) -> htap::Result<()> {
     let addr = cli
         .get("connect")
         .ok_or_else(|| htap::Error::Config("worker needs --connect HOST:PORT".into()))?;
+    // --connect takes a comma-separated failover list (primary first,
+    // then standbys); reconnects rotate through it until one answers
+    let addrs: Vec<String> = addr
+        .split(',')
+        .map(|a| a.trim().to_string())
+        .filter(|a| !a.is_empty())
+        .collect();
+    if addrs.is_empty() {
+        return Err(htap::Error::Config("worker needs --connect HOST:PORT".into()));
+    }
     let cfg = cli.run_config()?;
     // --drain-on parses before anything connects so a bad spec fails fast
     let drain = match cli.get("drain-on") {
@@ -687,10 +781,20 @@ fn cmd_worker(cli: &Cli) -> htap::Result<()> {
     // --trace-out arms the tracer; events ship to the manager at heartbeat
     // cadence, and net frame counters register alongside the WRM's
     let metrics = hub_from_config(&cfg, worker_id);
-    let source = Arc::new(RemoteManager::connect_with_obs(
-        addr,
+    // --fault-plan / HTAP_FAULTS arm seeded chaos at the worker's net and
+    // staging fault sites (flag-level already merged into cfg by the CLI)
+    let faults = htap::faults::Faults::from_sources(
+        None,
+        cfg.fault_plan.as_deref(),
+        cfg.fault_seed,
+        metrics.registry(),
+    )?;
+    let source = Arc::new(RemoteManager::connect_opts(
+        &addrs,
         metrics.registry(),
         metrics.tracer().clone(),
+        faults.clone(),
+        net::RetryPolicy::reconnect(),
     )?);
     let profiles = match store {
         Some(s) => SharedProfiles::from_store(s),
@@ -701,11 +805,21 @@ fn cmd_worker(cli: &Cli) -> htap::Result<()> {
     // --spill-dir, evictions demote to a local-disk tier instead of
     // dropping
     let (chunks, _) = chunk_source(cli, &cfg)?;
+    let chunks = if faults.is_armed() {
+        htap::data::staging::FaultySource::wrap(chunks, faults.clone())
+    } else {
+        chunks
+    };
     // --warm-restart: keep whatever survived in the spill directory and
     // re-advertise it to the manager as disk-tier chunks (crash recovery);
     // the default cold start clears the directory
     let warm = cli.get_flag("warm-restart");
-    let spill = spill_from_config(&cfg, worker_id, warm)?;
+    let mut spill = spill_from_config(&cfg, worker_id, warm)?;
+    if faults.is_armed() {
+        if let Some(tier) = spill.as_mut() {
+            tier.set_faults(faults.clone());
+        }
+    }
     if warm {
         if let Some(tier) = &spill {
             println!(
@@ -732,10 +846,11 @@ fn cmd_worker(cli: &Cli) -> htap::Result<()> {
     // spec over the wire and compiling it against the full registry
     // (single-manager runs tag everything job 0 and never call this)
     let resolver: JobResolver = {
-        let addr = addr.to_string();
+        let addrs = addrs.clone();
         let registry = service_registry()?;
         Arc::new(move |job| {
-            let (tenant, json) = net::fetch_job_spec(&addr, job)?;
+            let (tenant, json) =
+                net::fetch_job_spec_at(&addrs, job, &net::RetryPolicy::reconnect())?;
             let wf = Arc::new(workflow_from_str(&json, registry.clone())?);
             Ok((tenant, wf))
         })
@@ -755,6 +870,10 @@ fn cmd_worker(cli: &Cli) -> htap::Result<()> {
     let report = metrics.report();
     println!("{}", report.profile_table());
     println!("{}", report.staging.summary());
+    if let Some(line) = faults.summary() {
+        // chaos runs end with their blast radius on record
+        println!("{line}");
+    }
     if let Some(path) = &cfg.trace_out {
         // the worker's events all shipped to the manager (which owns the
         // merged stream); anything still in the rings here means the final

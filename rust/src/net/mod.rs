@@ -49,20 +49,118 @@ pub mod proto;
 
 use crate::coordinator::manager::{WorkBatch, WorkRequest, WorkSource};
 use crate::data::staging::WorkerId;
+use crate::faults::{Faults, Injection, Site};
 use crate::obs::{self, EventKind, TraceEvent, Tracer, UtilRow};
 use crate::runtime::sync::{self, Mutex};
+use crate::runtime::Value;
 use crate::service::{Endpoint, JobSummary};
 use crate::{Error, Result};
 use proto::Message;
+use std::collections::VecDeque;
 use std::io::{BufReader, BufWriter};
 use std::net::{TcpListener, TcpStream};
 use std::sync::atomic::{AtomicBool, Ordering};
 use std::sync::Arc;
+use std::time::Duration;
 
 /// How often the manager scans member leases for expiry.  Much shorter
 /// than any sensible lease term, so detection latency is dominated by the
 /// lease itself, not the sweep cadence.
 const LEASE_SWEEP_MS: u64 = 50;
+
+/// Socket read deadline on server-side connections.  Not a liveness
+/// verdict — an expiry only unblocks the connection thread so it can
+/// re-check the stop flag (idle keepalive); slow-but-alive peers stay
+/// connected and lease expiry remains the sweeper's job.
+const SERVER_READ_TIMEOUT_MS: u64 = 250;
+
+/// Socket read deadline on client-side channels.  Same keepalive
+/// discipline: a blocked `Request` legitimately waits minutes for its
+/// `Assign`, so expiries loop; only EOF/reset tears the channel down.
+const CLIENT_READ_TIMEOUT_MS: u64 = 500;
+
+/// Socket write deadline everywhere: a peer that stops draining its
+/// receive window for this long is treated as gone (the reconnect path
+/// on clients, connection teardown + lease requeue on the server).
+const WRITE_TIMEOUT_MS: u64 = 10_000;
+
+/// Completions kept for replay after a reconnect.  The manager ignores
+/// duplicates (`stale_completions`), so replaying the recent tail is
+/// safe; the cap bounds worker memory, not correctness — anything older
+/// has long been journaled or will be re-issued via lease requeue.
+const REPLAY_CAP: usize = 32;
+
+/// Error-message marker for faults the injection layer manufactured.
+/// Injected frame drops are retried in place (resend); everything else
+/// tears the channel down and reconnects.
+const INJECTED: &str = "injected:";
+
+fn is_injected(e: &Error) -> bool {
+    matches!(e, Error::Net(m) if m.starts_with(INJECTED))
+}
+
+fn net_err(e: std::io::Error) -> Error {
+    Error::Net(e.to_string())
+}
+
+/// Bounded, deterministic exponential backoff shared by every RPC path:
+/// worker→manager connect, request, complete, heartbeat, the server's
+/// shutdown self-poke, and the one-shot control calls.  Deliberately no
+/// jitter — retry timing must be a pure function of the attempt number
+/// so chaos runs replay bit-identically and the model/lint suites stay
+/// valid.  (Workers already desynchronise naturally: their attempt
+/// clocks start at independent failure times.)
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct RetryPolicy {
+    /// Total attempts (>= 1); the last failure is returned.
+    pub max_attempts: u32,
+    /// Backoff before the second attempt, doubling per attempt.
+    pub base_ms: u64,
+    /// Ceiling on any single backoff.
+    pub cap_ms: u64,
+}
+
+impl RetryPolicy {
+    /// In-band RPC default: ~5 attempts over a few seconds.
+    pub fn rpc() -> RetryPolicy {
+        RetryPolicy { max_attempts: 5, base_ms: 50, cap_ms: 2000 }
+    }
+
+    /// Reconnect/failover default: patient enough to ride out a standby
+    /// promotion window (~10 attempts, ~13 s of cumulative backoff).
+    pub fn reconnect() -> RetryPolicy {
+        RetryPolicy { max_attempts: 10, base_ms: 100, cap_ms: 2000 }
+    }
+
+    /// Backoff after attempt `attempt` (0-based): `base * 2^attempt`,
+    /// capped.  Deterministic by design.
+    pub fn backoff_ms(&self, attempt: u32) -> u64 {
+        self.base_ms.saturating_mul(1u64 << attempt.min(20)).min(self.cap_ms)
+    }
+
+    /// Run `op` until it succeeds or attempts are exhausted, sleeping
+    /// the deterministic backoff between attempts.
+    pub fn run<T>(&self, mut op: impl FnMut(u32) -> Result<T>) -> Result<T> {
+        let attempts = self.max_attempts.max(1);
+        let mut last = Error::Net("retry: no attempts".into());
+        for attempt in 0..attempts {
+            match op(attempt) {
+                Ok(v) => return Ok(v),
+                Err(e) => last = e,
+            }
+            if attempt + 1 < attempts {
+                std::thread::sleep(Duration::from_millis(self.backoff_ms(attempt)));
+            }
+        }
+        Err(last)
+    }
+}
+
+impl Default for RetryPolicy {
+    fn default() -> Self {
+        RetryPolicy::rpc()
+    }
+}
 
 /// Serve an in-process [`Endpoint`] (a single-job `Manager` or the
 /// service-mode `JobTable`) to remote Workers and control clients.
@@ -99,8 +197,21 @@ impl ManagerServer {
                 ep.wait_done();
                 stop.store(true, Ordering::SeqCst);
                 // poke the listener so the blocking accept() observes the
-                // stop flag instead of waiting for one more worker
-                let _ = TcpStream::connect(&addr);
+                // stop flag instead of waiting for one more worker.  A
+                // failed poke would leave the accept loop (and therefore
+                // serve()) blocked forever, so it retries with backoff and
+                // the final failure is at least visible to the operator.
+                let poke = RetryPolicy::rpc();
+                if let Err(e) =
+                    poke.run(|_| TcpStream::connect(&addr).map(|_| ()).map_err(net_err))
+                {
+                    eprintln!(
+                        "htap manager: shutdown self-poke to {addr} failed after \
+                         {} attempts ({e}); accept loop may linger until the next \
+                         connection",
+                        poke.max_attempts
+                    );
+                }
             })
         };
         let sweeper = {
@@ -126,7 +237,8 @@ impl ManagerServer {
                 break;
             }
             let ep = self.endpoint.clone();
-            handles.push(std::thread::spawn(move || serve_connection(stream, ep)));
+            let stop = self.stop.clone();
+            handles.push(std::thread::spawn(move || serve_connection(stream, ep, stop)));
         }
         for h in handles {
             let _ = h.join();
@@ -141,14 +253,14 @@ impl ManagerServer {
     }
 }
 
-fn serve_connection(stream: TcpStream, ep: Arc<dyn Endpoint>) {
+fn serve_connection(stream: TcpStream, ep: Arc<dyn Endpoint>, stop: Arc<AtomicBool>) {
     // leases handed out on this connection; if the worker dies (EOF or
     // protocol error) before completing them, they are re-issued to the
     // surviving workers — the fault-tolerance path.
     let mut leases: Vec<u64> = Vec::new();
     let mut worker_id = 0u64;
     let mut clean = false;
-    let result = serve_connection_inner(stream, &ep, &mut leases, &mut worker_id, &mut clean);
+    let result = serve_connection_inner(stream, &ep, &stop, &mut leases, &mut worker_id, &mut clean);
     let requeued = ep.requeue_stale(&leases);
     // the channel closed: whatever this worker had staged is gone — purge
     // it from the catalog so its chunks go back to cold instead of being
@@ -165,20 +277,36 @@ fn serve_connection(stream: TcpStream, ep: Arc<dyn Endpoint>) {
 fn serve_connection_inner(
     stream: TcpStream,
     ep: &Arc<dyn Endpoint>,
+    stop: &Arc<AtomicBool>,
     leases: &mut Vec<u64>,
     worker_id: &mut u64,
     clean: &mut bool,
 ) -> Result<()> {
     stream.set_nodelay(true).ok();
-    let mut reader = BufReader::new(stream.try_clone().map_err(|e| Error::Net(e.to_string()))?);
+    // read deadline + keepalive loop below: an idle (or hung) peer no
+    // longer pins this thread past shutdown, but a slow-and-alive one is
+    // never torn down — only the lease sweeper renders liveness verdicts.
+    stream
+        .set_read_timeout(Some(Duration::from_millis(SERVER_READ_TIMEOUT_MS)))
+        .map_err(net_err)?;
+    stream
+        .set_write_timeout(Some(Duration::from_millis(WRITE_TIMEOUT_MS)))
+        .map_err(net_err)?;
+    let mut reader = BufReader::new(stream.try_clone().map_err(net_err)?);
     let mut writer = BufWriter::new(stream);
     // one frame buffer per connection: tensor frames encode into it with a
     // single bulk copy and its capacity is reused for the connection's life
     let mut scratch: Vec<u8> = Vec::new();
     loop {
-        let msg = match proto::read_message(&mut reader) {
+        let msg = match proto::read_message_keepalive(&mut reader, || !stop.load(Ordering::SeqCst))
+        {
             Ok(m) => m,
             Err(Error::Net(ref e)) if e == "eof" => return Ok(()),
+            // stop flag observed while idle between frames: clean shutdown
+            Err(Error::Net(ref e)) if e == "timeout" => {
+                *clean = true;
+                return Ok(());
+            }
             Err(e) => return Err(e),
         };
         match msg {
@@ -285,18 +413,77 @@ fn serve_connection_inner(
     }
 }
 
+/// The work channel: request/assign round trips.
+struct WorkChan {
+    reader: BufReader<TcpStream>,
+    writer: BufWriter<TcpStream>,
+    scratch: Vec<u8>,
+}
+
+impl WorkChan {
+    fn new(stream: TcpStream) -> Result<WorkChan> {
+        let wr = stream.try_clone().map_err(net_err)?;
+        Ok(WorkChan {
+            reader: BufReader::new(stream),
+            writer: BufWriter::new(wr),
+            scratch: Vec::new(),
+        })
+    }
+}
+
+/// The completion channel: one-way completions / membership / traces.
+struct CompChan {
+    writer: BufWriter<TcpStream>,
+    scratch: Vec<u8>,
+}
+
 /// Client-side [`WorkSource`] speaking the protocol over two sockets.
 /// Each channel owns a reusable frame buffer — the completion channel
 /// ships every stage output tensor, so per-frame allocation matters.
+///
+/// The client is **self-healing** (proto v7 behaviour, same frames): a
+/// channel is `None` while down, and each path re-dials through the
+/// shared [`RetryPolicy`], walking the `addrs` failover list (primary
+/// first, then standbys) from the last address that answered.  A
+/// reconnect re-`Hello`s under the original worker identity, fires the
+/// resync hook so the staging cache re-advertises every chunk it holds,
+/// and replays the buffered completion tail — the manager drops the
+/// duplicates (`stale_completions`), so replay is always safe.  The two
+/// channels recover independently: the requester owns the work channel,
+/// the heartbeat cadence doubles as the completion channel's
+/// reconnection driver, and neither ever blocks on the other's lock.
 pub struct RemoteManager {
-    work: Mutex<(BufReader<TcpStream>, BufWriter<TcpStream>, Vec<u8>)>,
-    completion: Mutex<(BufWriter<TcpStream>, Vec<u8>)>,
+    addrs: Vec<String>,
+    retry: RetryPolicy,
+    faults: Faults,
+    /// Index into `addrs` of the last successful dial; reconnects start
+    /// here so both channels converge on the same (promoted) manager.
+    active: std::sync::atomic::AtomicUsize,
+    work: Mutex<Option<WorkChan>>,
+    completion: Mutex<Option<CompChan>>,
+    /// `(worker, lease_ms)` from `register`, replayed as the `Hello` of
+    /// every reconnected channel so the manager sees one continuous
+    /// worker, not a stranger.
+    identity: Mutex<Option<(WorkerId, u64)>>,
+    /// Reconnect hook: tells the staging cache to re-advertise its full
+    /// staged/spill set on the next `Request` (a promoted standby's
+    /// catalog is only as fresh as the last checkpoint).
+    resync: Mutex<Option<ResyncFn>>,
+    /// Tail of recently sent completions, replayed after a reconnect in
+    /// case the originals died in a TCP buffer.  Lock order: completion
+    /// before replay, everywhere.
+    replay: Mutex<VecDeque<(u64, Vec<Value>)>>,
     /// Frame send/recv events land here (disabled by default).
     tracer: Tracer,
     tx_frames: obs::Counter,
     tx_bytes: obs::Counter,
     rx_frames: obs::Counter,
+    reconnects: obs::Counter,
 }
+
+/// Callback a [`WorkSource`] fires after reconnecting to (possibly) a
+/// different manager, so worker-side state can be re-advertised.
+pub type ResyncFn = Arc<dyn Fn() + Send + Sync>;
 
 impl RemoteManager {
     pub fn connect(addr: &str) -> Result<Self> {
@@ -308,19 +495,206 @@ impl RemoteManager {
     /// frame records a `FrameSend`/`FrameRecv` event when `tracer` is
     /// enabled (`chunk` carries the payload size in bytes).
     pub fn connect_with_obs(addr: &str, registry: &obs::Registry, tracer: Tracer) -> Result<Self> {
-        let work = TcpStream::connect(addr).map_err(|e| Error::Net(e.to_string()))?;
-        work.set_nodelay(true).ok();
-        let completion = TcpStream::connect(addr).map_err(|e| Error::Net(e.to_string()))?;
-        completion.set_nodelay(true).ok();
-        let wr = work.try_clone().map_err(|e| Error::Net(e.to_string()))?;
+        Self::connect_opts(
+            &[addr.to_string()],
+            registry,
+            tracer,
+            Faults::disabled(),
+            RetryPolicy::rpc(),
+        )
+    }
+
+    /// Full-control constructor: `addrs` is the failover list (primary
+    /// first), `faults` the armed injection handle, `retry` the policy
+    /// every connect/request/complete shares.
+    pub fn connect_opts(
+        addrs: &[String],
+        registry: &obs::Registry,
+        tracer: Tracer,
+        faults: Faults,
+        retry: RetryPolicy,
+    ) -> Result<Self> {
+        if addrs.is_empty() {
+            return Err(Error::Net("no manager address".into()));
+        }
+        let active = std::sync::atomic::AtomicUsize::new(0);
+        let work = Self::dial_one(addrs, &retry, &faults, &active)?;
+        let completion = Self::dial_one(addrs, &retry, &faults, &active)?;
         Ok(RemoteManager {
-            work: Mutex::new((BufReader::new(work), BufWriter::new(wr), Vec::new())),
-            completion: Mutex::new((BufWriter::new(completion), Vec::new())),
+            addrs: addrs.to_vec(),
+            retry,
+            faults,
+            active,
+            work: Mutex::new(Some(WorkChan::new(work)?)),
+            completion: Mutex::new(Some(CompChan {
+                writer: BufWriter::new(completion),
+                scratch: Vec::new(),
+            })),
+            identity: Mutex::new(None),
+            resync: Mutex::new(None),
+            replay: Mutex::new(VecDeque::new()),
             tracer,
             tx_frames: registry.counter("net.tx_frames"),
             tx_bytes: registry.counter("net.tx_bytes"),
             rx_frames: registry.counter("net.rx_frames"),
+            reconnects: registry.counter("net.reconnects"),
         })
+    }
+
+    /// Dial one stream, walking the failover list from the last address
+    /// that answered, with retry/backoff and the connect-refusal fault
+    /// site applied per attempt.
+    fn dial_one(
+        addrs: &[String],
+        retry: &RetryPolicy,
+        faults: &Faults,
+        active: &std::sync::atomic::AtomicUsize,
+    ) -> Result<TcpStream> {
+        let start = active.load(Ordering::Relaxed);
+        retry.run(|attempt| {
+            let idx = (start + attempt as usize) % addrs.len();
+            let addr = &addrs[idx];
+            if faults.inject(Site::Connect).is_some() {
+                return Err(Error::Net(format!("{INJECTED} connect refused ({addr})")));
+            }
+            let stream = TcpStream::connect(addr).map_err(net_err)?;
+            stream.set_nodelay(true).ok();
+            stream
+                .set_read_timeout(Some(Duration::from_millis(CLIENT_READ_TIMEOUT_MS)))
+                .map_err(net_err)?;
+            stream
+                .set_write_timeout(Some(Duration::from_millis(WRITE_TIMEOUT_MS)))
+                .map_err(net_err)?;
+            active.store(idx, Ordering::Relaxed);
+            Ok(stream)
+        })
+    }
+
+    /// Write one data-plane frame with the framing fault sites applied.
+    /// An injected drop returns an `injected:` error *without touching
+    /// the socket* — the retry layer resends, so exactly one copy
+    /// reaches the server per successful attempt and a dropped `Request`
+    /// can never deadlock against its own `Assign`.  Control-plane
+    /// frames (`Hello`/`Heartbeat`/`Goodbye`/`TraceBatch`) bypass this
+    /// helper: a chaos plan must not silently unregister a worker.
+    fn send_frame<W: std::io::Write>(
+        faults: &Faults,
+        writer: &mut W,
+        scratch: &mut Vec<u8>,
+        msg: &Message,
+    ) -> Result<()> {
+        if faults.is_armed() {
+            if faults.inject(Site::FrameDrop).is_some() {
+                return Err(Error::Net(format!("{INJECTED} frame dropped")));
+            }
+            faults.maybe_stall(Site::FrameDelay);
+            faults.maybe_stall(Site::WriteStall);
+            if faults.inject(Site::FrameCorrupt).is_some() {
+                // flip the version byte: the receiver must reject the
+                // frame (tearing the connection down) rather than ever
+                // misparse its payload
+                proto::encode_into(msg, scratch);
+                if let Some(b) = scratch.first_mut() {
+                    *b ^= 0x80;
+                }
+                return proto::write_raw_frame(writer, scratch);
+            }
+        }
+        proto::write_message_buf(writer, msg, scratch)
+    }
+
+    fn current_identity(&self) -> Option<(WorkerId, u64)> {
+        sync::lock_or_poisoned(&self.identity).ok().and_then(|g| *g)
+    }
+
+    /// Re-establish the work channel.  Called with the work lock held
+    /// (the caller owns `chan`); never touches the completion lock.
+    fn reconnect_work(&self, chan: &mut Option<WorkChan>) -> Result<()> {
+        *chan = None;
+        let stream = Self::dial_one(&self.addrs, &self.retry, &self.faults, &self.active)?;
+        let mut fresh = WorkChan::new(stream)?;
+        if let Some((worker, lease_ms)) = self.current_identity() {
+            proto::write_message_buf(
+                &mut fresh.writer,
+                &Message::Hello { worker, lease_ms },
+                &mut fresh.scratch,
+            )?;
+        }
+        *chan = Some(fresh);
+        self.reconnects.inc();
+        // the manager on the other end may be a freshly promoted standby
+        // whose catalog is checkpoint-stale: re-advertise everything this
+        // worker holds on the next Request
+        let resync = sync::lock_or_poisoned(&self.resync).ok().and_then(|g| g.clone());
+        if let Some(cb) = resync {
+            cb();
+        }
+        Ok(())
+    }
+
+    /// Re-establish the completion channel and replay the buffered
+    /// completion tail.  Called with the completion lock held; never
+    /// touches the work lock (lock order: completion before replay).
+    fn reconnect_completion(&self, chan: &mut Option<CompChan>) -> Result<()> {
+        *chan = None;
+        let stream = Self::dial_one(&self.addrs, &self.retry, &self.faults, &self.active)?;
+        let mut fresh = CompChan { writer: BufWriter::new(stream), scratch: Vec::new() };
+        if let Some((worker, lease_ms)) = self.current_identity() {
+            proto::write_message_buf(
+                &mut fresh.writer,
+                &Message::Hello { worker, lease_ms },
+                &mut fresh.scratch,
+            )?;
+        }
+        // replay the recent tail in order: completions that died in a TCP
+        // buffer are re-delivered, already-landed ones are dropped by the
+        // manager as stale duplicates.  Replays bypass injection — a
+        // recovery path that re-rolls the fault dice never converges.
+        let tail: Vec<(u64, Vec<Value>)> = match sync::lock_or_poisoned(&self.replay) {
+            Ok(r) => r.iter().cloned().collect(),
+            Err(_) => Vec::new(),
+        };
+        for (instance, outputs) in tail {
+            proto::write_message_buf(
+                &mut fresh.writer,
+                &Message::Complete { instance, outputs },
+                &mut fresh.scratch,
+            )?;
+            self.note_tx(fresh.scratch.len());
+        }
+        *chan = Some(fresh);
+        self.reconnects.inc();
+        Ok(())
+    }
+
+    /// One request/assign round trip on the current work channel.
+    fn try_request(&self, chan: &mut Option<WorkChan>, msg: &Message) -> Result<WorkBatch> {
+        let ch = chan.as_mut().ok_or_else(|| Error::Net("work channel down".into()))?;
+        Self::send_frame(&self.faults, &mut ch.writer, &mut ch.scratch, msg)?;
+        self.note_tx(ch.scratch.len());
+        self.faults.maybe_stall(Site::ReadStall);
+        // wait patiently while the channel is healthy: a blocked Request
+        // legitimately waits for stragglers ahead of it in the window,
+        // and heartbeats ride the other channel.  A dead manager surfaces
+        // as EOF/reset here, which the retry loop turns into a reconnect.
+        match proto::read_message_keepalive(&mut ch.reader, || true) {
+            Ok(Message::Assign { assignments, prefetch, replicate }) => {
+                self.rx_frames.inc();
+                self.tracer.record(TraceEvent {
+                    chunk: assignments.len() as u64,
+                    ..TraceEvent::of(EventKind::FrameRecv)
+                });
+                Ok(WorkBatch { assignments, prefetch, replicate, idle: false })
+            }
+            // service endpoint, nothing assignable right now: surface the
+            // poll-again marker so the worker sleeps instead of exiting
+            Ok(Message::Idle) => {
+                self.rx_frames.inc();
+                Ok(WorkBatch { idle: true, ..WorkBatch::default() })
+            }
+            Ok(other) => Err(Error::Net(format!("unexpected reply {other:?}"))),
+            Err(e) => Err(e),
+        }
     }
 
     /// Count (and, when tracing, record) one sent frame of `bytes` bytes.
@@ -333,28 +707,36 @@ impl RemoteManager {
         });
     }
 
-    /// Fire-and-forget a membership message on the completion channel.
-    /// Send failures are ignored: a broken channel means the manager is
-    /// gone (or going), and the server-side disconnect path already covers
-    /// cleanup.
-    fn send_completion(&self, msg: &Message) {
+    /// Fire-and-forget a control-plane message on the completion channel
+    /// (no fault injection — see [`RemoteManager::send_frame`]).  Returns
+    /// whether the write succeeded; a failure marks the channel down so
+    /// the next heartbeat reconnects it.
+    fn send_completion(&self, msg: &Message) -> bool {
         let Ok(mut chan) = sync::lock_or_poisoned(&self.completion) else {
-            return;
+            return false;
         };
-        let (writer, scratch) = &mut *chan;
-        let _ = proto::write_message_buf(writer, msg, scratch);
+        let Some(ch) = chan.as_mut() else {
+            return false;
+        };
+        if proto::write_message_buf(&mut ch.writer, msg, &mut ch.scratch).is_err() {
+            *chan = None;
+            return false;
+        }
+        true
     }
 }
 
 impl WorkSource for RemoteManager {
     fn request_work(&self, req: &WorkRequest) -> WorkBatch {
+        // chaos site: a paused worker must only ever look slow (its lease
+        // is kept alive by the heartbeat thread), never wrong
+        self.faults.maybe_stall(Site::WorkerPause);
         // a poisoned channel means a frame writer panicked mid-stream: the
         // connection state is unusable, so report "workflow over" and let
         // the worker wind down instead of cascading the panic
         let Ok(mut chan) = sync::lock_or_poisoned(&self.work) else {
             return WorkBatch::default();
         };
-        let (reader, writer, scratch) = &mut *chan;
         let msg = Message::Request {
             capacity: req.capacity as u32,
             worker: req.worker,
@@ -363,64 +745,116 @@ impl WorkSource for RemoteManager {
             staged_drop: req.staged_drop.clone(),
             demoted: req.demoted.clone(),
         };
-        if proto::write_message_buf(writer, &msg, scratch).is_err() {
-            return WorkBatch::default();
-        }
-        self.note_tx(scratch.len());
-        match proto::read_message(reader) {
-            Ok(Message::Assign { assignments, prefetch, replicate }) => {
-                self.rx_frames.inc();
-                self.tracer.record(TraceEvent {
-                    chunk: assignments.len() as u64,
-                    ..TraceEvent::of(EventKind::FrameRecv)
-                });
-                WorkBatch { assignments, prefetch, replicate, idle: false }
+        let attempts = self.retry.max_attempts.max(1);
+        let mut attempt = 0u32;
+        loop {
+            match self.try_request(&mut chan, &msg) {
+                Ok(batch) => return batch,
+                Err(e) => {
+                    if !is_injected(&e) {
+                        // real I/O failure: the channel state is suspect
+                        *chan = None;
+                    }
+                    attempt += 1;
+                    if attempt >= attempts {
+                        eprintln!(
+                            "htap worker: giving up on manager after {attempts} \
+                             request attempts ({e})"
+                        );
+                        return WorkBatch::default();
+                    }
+                    std::thread::sleep(Duration::from_millis(self.retry.backoff_ms(attempt - 1)));
+                    if chan.is_none() {
+                        // reconnect failures just consume attempts; the
+                        // next try_request reports the channel as down
+                        let _ = self.reconnect_work(&mut chan);
+                    }
+                }
             }
-            // service endpoint, nothing assignable right now: surface the
-            // poll-again marker so the worker sleeps instead of exiting
-            Ok(Message::Idle) => WorkBatch { idle: true, ..WorkBatch::default() },
-            _ => WorkBatch::default(),
         }
     }
 
-    fn complete(&self, instance_id: u64, outputs: Vec<crate::runtime::Value>) {
+    fn complete(&self, instance_id: u64, outputs: Vec<Value>) {
         // poisoned → drop the completion; the manager's fault-tolerance
         // path re-issues the lease when the connection dies
         let Ok(mut chan) = sync::lock_or_poisoned(&self.completion) else {
             return;
         };
-        let (writer, scratch) = &mut *chan;
-        let sent = proto::write_message_buf(
-            writer,
-            &Message::Complete { instance: instance_id, outputs },
-            scratch,
-        )
-        .is_ok();
-        let bytes = scratch.len();
-        drop(chan);
-        if sent {
-            self.note_tx(bytes);
+        // remember the tail for replay-after-reconnect before trying to
+        // send: a completion that dies in a TCP buffer is invisible here
+        if let Ok(mut r) = sync::lock_or_poisoned(&self.replay) {
+            r.push_back((instance_id, outputs.clone()));
+            while r.len() > REPLAY_CAP {
+                r.pop_front();
+            }
         }
+        let msg = Message::Complete { instance: instance_id, outputs };
+        let attempts = self.retry.max_attempts.max(1);
+        for attempt in 0..attempts {
+            match chan.as_mut() {
+                Some(ch) => {
+                    match Self::send_frame(&self.faults, &mut ch.writer, &mut ch.scratch, &msg) {
+                        Ok(()) => {
+                            let bytes = ch.scratch.len();
+                            self.note_tx(bytes);
+                            return;
+                        }
+                        // injected drop: the frame never left, resend on
+                        // the same (healthy) channel after backoff
+                        Err(ref e) if is_injected(e) => {}
+                        Err(_) => *chan = None,
+                    }
+                }
+                None => {
+                    // a successful reconnect replays the ring, which
+                    // includes this completion — done
+                    if self.reconnect_completion(&mut chan).is_ok() {
+                        return;
+                    }
+                }
+            }
+            if attempt + 1 < attempts {
+                std::thread::sleep(Duration::from_millis(self.retry.backoff_ms(attempt)));
+            }
+        }
+        // still down: the completion stays in the replay ring and ships
+        // with the next successful (heartbeat-driven) reconnect; if even
+        // that never comes, the lease sweeper re-issues the instance
     }
 
     fn register(&self, worker: WorkerId, lease_ms: u64) {
+        // remembered so every reconnected channel re-Hellos as the same
+        // worker — reconnect-and-resume, not a stranger joining
+        if let Ok(mut id) = sync::lock_or_poisoned(&self.identity) {
+            *id = Some((worker, lease_ms));
+        }
         // Hello goes out on *both* channels so each server-side connection
         // thread learns the worker id for purge attribution on disconnect
         // (the work channel also learns it from the first Request, but a
         // worker can die before ever requesting).
+        let msg = Message::Hello { worker, lease_ms };
         if let Ok(mut chan) = sync::lock_or_poisoned(&self.work) {
-            let (_, writer, scratch) = &mut *chan;
-            let _ =
-                proto::write_message_buf(writer, &Message::Hello { worker, lease_ms }, scratch);
+            if let Some(ch) = chan.as_mut() {
+                let _ = proto::write_message_buf(&mut ch.writer, &msg, &mut ch.scratch);
+            }
         }
-        self.send_completion(&Message::Hello { worker, lease_ms });
+        self.send_completion(&msg);
     }
 
     fn heartbeat(&self, worker: WorkerId) {
         // never the work channel: a Request may be blocked on its Assign
         // there, and the whole point of heartbeats is staying alive while
         // long stage instances keep the work channel busy
-        self.send_completion(&Message::Heartbeat { worker });
+        if !self.send_completion(&Message::Heartbeat { worker }) {
+            // the completion channel is down; the heartbeat cadence
+            // doubles as its reconnection driver (the requester never
+            // holds this lock, so no cross-channel blocking)
+            if let Ok(mut chan) = sync::lock_or_poisoned(&self.completion) {
+                if chan.is_none() {
+                    let _ = self.reconnect_completion(&mut chan);
+                }
+            }
+        }
     }
 
     fn goodbye(&self, worker: WorkerId) {
@@ -433,23 +867,74 @@ impl WorkSource for RemoteManager {
         // trace transport must not feed its own trace)
         self.send_completion(&Message::TraceBatch { worker, events });
     }
+
+    fn set_resync(&self, resync: ResyncFn) {
+        if let Ok(mut cb) = sync::lock_or_poisoned(&self.resync) {
+            *cb = Some(resync);
+        }
+    }
 }
+
+/// Read deadline for one-shot control calls: the reply to a control
+/// frame is computed immediately, so a silent peer this long is down.
+const ONE_SHOT_TIMEOUT_MS: u64 = 5000;
 
 /// One round-trip over a short-lived connection: connect, send `msg`,
 /// read the reply, disconnect.  Control traffic (submit / status /
 /// cancel / job-spec fetch) stays off the long-lived work channels, so a
 /// blocked `Request` can never stall a status query.  A server-side
 /// `Fail` reply is surfaced as the error it carries.
-fn call_service(addr: &str, msg: &Message) -> Result<Message> {
-    let stream = TcpStream::connect(addr).map_err(|e| Error::Net(e.to_string()))?;
+fn call_service_once(addr: &str, msg: &Message) -> Result<Message> {
+    let stream = TcpStream::connect(addr).map_err(net_err)?;
     stream.set_nodelay(true).ok();
-    let mut reader = BufReader::new(stream.try_clone().map_err(|e| Error::Net(e.to_string()))?);
+    stream
+        .set_read_timeout(Some(Duration::from_millis(ONE_SHOT_TIMEOUT_MS)))
+        .map_err(net_err)?;
+    stream
+        .set_write_timeout(Some(Duration::from_millis(WRITE_TIMEOUT_MS)))
+        .map_err(net_err)?;
+    let mut reader = BufReader::new(stream.try_clone().map_err(net_err)?);
     let mut writer = BufWriter::new(stream);
     proto::write_message(&mut writer, msg)?;
     match proto::read_message(&mut reader)? {
         Message::Fail { msg } => Err(Error::Scheduler(msg)),
         reply => Ok(reply),
     }
+}
+
+/// [`call_service_once`] with retry/backoff across a failover list.
+/// Transport errors rotate to the next address; an application-level
+/// `Fail` came over a healthy connection, so retrying cannot change the
+/// verdict and it returns immediately.
+pub fn call_service_at(addrs: &[String], msg: &Message, retry: &RetryPolicy) -> Result<Message> {
+    if addrs.is_empty() {
+        return Err(Error::Net("no manager address".into()));
+    }
+    let attempts = retry.max_attempts.max(1);
+    let mut last = Error::Net("retry: no attempts".into());
+    for attempt in 0..attempts {
+        let addr = &addrs[attempt as usize % addrs.len()];
+        match call_service_once(addr, msg) {
+            Ok(reply) => return Ok(reply),
+            Err(e @ Error::Scheduler(_)) => return Err(e),
+            Err(e) => last = e,
+        }
+        if attempt + 1 < attempts {
+            std::thread::sleep(Duration::from_millis(retry.backoff_ms(attempt)));
+        }
+    }
+    Err(last)
+}
+
+fn call_service(addr: &str, msg: &Message) -> Result<Message> {
+    call_service_at(&[addr.to_string()], msg, &RetryPolicy::rpc())
+}
+
+/// Single-attempt liveness probe — no retry, no backoff: can `addr`
+/// answer a `StatsQuery` right now?  The standby's failure detector
+/// wants the raw verdict each tick; patience is its own policy.
+pub fn probe(addr: &str) -> Result<()> {
+    call_service_once(addr, &Message::StatsQuery).map(|_| ())
 }
 
 /// Submit a workflow to a service-mode manager; returns the accepted
@@ -491,7 +976,17 @@ pub fn cancel_job(addr: &str, job: u64) -> Result<JobSummary> {
 /// Fetch a job's `(tenant, workflow_json)` — workers call this the first
 /// time they see an assignment tagged with a job they haven't compiled.
 pub fn fetch_job_spec(addr: &str, job: u64) -> Result<(String, String)> {
-    match call_service(addr, &Message::GetJob { job })? {
+    fetch_job_spec_at(&[addr.to_string()], job, &RetryPolicy::rpc())
+}
+
+/// [`fetch_job_spec`] across a failover list: a worker resolving a job
+/// mid-failover asks whichever manager answers.
+pub fn fetch_job_spec_at(
+    addrs: &[String],
+    job: u64,
+    retry: &RetryPolicy,
+) -> Result<(String, String)> {
+    match call_service_at(addrs, &Message::GetJob { job }, retry)? {
         Message::JobSpec { tenant, workflow_json, .. } => Ok((tenant, workflow_json)),
         other => Err(Error::Net(format!("unexpected job-spec reply {other:?}"))),
     }
@@ -527,6 +1022,33 @@ mod tests {
         s.export(d.out()).unwrap();
         wb.add_stage(s).unwrap();
         Arc::new(wb.build().unwrap())
+    }
+
+    #[test]
+    fn retry_policy_backoff_is_deterministic_and_bounded() {
+        let p = RetryPolicy { max_attempts: 6, base_ms: 50, cap_ms: 400 };
+        let seq: Vec<u64> = (0..6).map(|a| p.backoff_ms(a)).collect();
+        assert_eq!(seq, vec![50, 100, 200, 400, 400, 400]);
+        // run() surfaces the final error once attempts are exhausted...
+        let mut calls = 0;
+        let r: Result<()> = RetryPolicy { max_attempts: 3, base_ms: 0, cap_ms: 0 }.run(|_| {
+            calls += 1;
+            Err(Error::Net("nope".into()))
+        });
+        assert!(r.is_err());
+        assert_eq!(calls, 3);
+        // ...and returns the first success without further attempts
+        let mut calls = 0;
+        let r = RetryPolicy { max_attempts: 5, base_ms: 0, cap_ms: 0 }.run(|a| {
+            calls += 1;
+            if a == 2 {
+                Ok(a)
+            } else {
+                Err(Error::Net("not yet".into()))
+            }
+        });
+        assert_eq!(r.unwrap(), 2);
+        assert_eq!(calls, 3);
     }
 
     #[test]

@@ -656,7 +656,21 @@ pub fn write_message_buf<W: Write>(w: &mut W, msg: &Message, scratch: &mut Vec<u
         .map_err(|e| Error::Net(e.to_string()))
 }
 
-/// Read one framed message.  Returns `Error::Net("eof")` on clean EOF.
+/// Whether an I/O error is a socket read/write deadline expiring (the
+/// `set_read_timeout`/`set_write_timeout` path), not a real failure.
+/// Unix reports `WouldBlock`, Windows `TimedOut`; both mean "no bytes
+/// yet, the peer may still be alive".
+pub fn is_timeout(e: &std::io::Error) -> bool {
+    matches!(
+        e.kind(),
+        std::io::ErrorKind::WouldBlock | std::io::ErrorKind::TimedOut
+    )
+}
+
+/// Read one framed message.  Returns `Error::Net("eof")` on clean EOF
+/// and `Error::Net("timeout")` when a socket read deadline expired
+/// before the frame *started* (an expiry mid-frame is a real error: the
+/// stream is desynced and the connection must be torn down).
 pub fn read_message<R: Read>(r: &mut R) -> Result<Message> {
     let mut len_buf = [0u8; 4];
     match r.read_exact(&mut len_buf) {
@@ -664,6 +678,7 @@ pub fn read_message<R: Read>(r: &mut R) -> Result<Message> {
         Err(e) if e.kind() == std::io::ErrorKind::UnexpectedEof => {
             return Err(Error::Net("eof".into()))
         }
+        Err(e) if is_timeout(&e) => return Err(Error::Net("timeout".into())),
         Err(e) => return Err(Error::Net(e.to_string())),
     }
     let len = u32::from_le_bytes(len_buf);
@@ -673,6 +688,44 @@ pub fn read_message<R: Read>(r: &mut R) -> Result<Message> {
     let mut payload = vec![0u8; len as usize];
     r.read_exact(&mut payload).map_err(|e| Error::Net(e.to_string()))?;
     decode(&payload)
+}
+
+/// Read one framed message off a stream whose socket has a read
+/// timeout, looping on idle expiries while `keep_waiting` says to.
+/// This is the idle-keepalive discipline: a slow-but-alive peer is never
+/// torn down just because no frame arrived within one timeout window —
+/// only a mid-frame stall (stream desync) or `keep_waiting() == false`
+/// surfaces an error.  `BufRead` is required so the pre-frame wait can
+/// use `fill_buf`, which consumes nothing on expiry: `read_exact` after
+/// a partial read would lose bytes and desync the framing.
+pub fn read_message_keepalive<R: std::io::BufRead>(
+    r: &mut R,
+    keep_waiting: impl Fn() -> bool,
+) -> Result<Message> {
+    loop {
+        match r.fill_buf() {
+            Ok([]) => return Err(Error::Net("eof".into())),
+            Ok(_) => break, // frame bytes are flowing: commit to the read
+            Err(e) if is_timeout(&e) => {
+                if !keep_waiting() {
+                    return Err(Error::Net("timeout".into()));
+                }
+            }
+            Err(e) => return Err(Error::Net(e.to_string())),
+        }
+    }
+    read_message(r)
+}
+
+/// Write one already-encoded payload as a frame, bypassing
+/// [`encode_into`].  The fault-injection layer uses this to ship a
+/// deliberately corrupted payload; the receiver must reject it as a
+/// decode error, never misparse it.
+pub fn write_raw_frame<W: Write>(w: &mut W, payload: &[u8]) -> Result<()> {
+    w.write_all(&(payload.len() as u32).to_le_bytes())
+        .and_then(|_| w.write_all(payload))
+        .and_then(|_| w.flush())
+        .map_err(|e| Error::Net(e.to_string()))
 }
 
 #[cfg(test)]

@@ -310,6 +310,15 @@ pub struct SimParams {
     /// manager's lease-expiry requeue path (`htap sim --kill-worker-at`).
     /// Ignored on single-node runs (there are no survivors).
     pub kill_worker_at: Option<f64>,
+    /// Net-fault mirror (`htap sim --net-fault-rate`): each tile fetch is
+    /// preceded by a manager round-trip, and this fraction of round-trips
+    /// drop a frame — retried under the same bounded-backoff schedule real
+    /// workers use, delaying the fetch without losing it.  0 = clean wire.
+    pub net_fault_rate: f64,
+    /// Seed for the mirror's drop decisions (`--fault-seed`): independent
+    /// of `seed` so chaos placement can vary while the schedule's cost
+    /// jitter stays fixed.
+    pub fault_seed: u64,
 }
 
 impl Default for SimParams {
@@ -340,6 +349,8 @@ impl Default for SimParams {
             mem_contention: 0.03,
             seed: 42,
             kill_worker_at: None,
+            net_fault_rate: 0.0,
+            fault_seed: 0,
         }
     }
 }
@@ -365,6 +376,9 @@ pub struct SimResult {
     /// stage instances re-issued to surviving nodes after a fault-injected
     /// crash (`SimParams::kill_worker_at`); 0 on fault-free runs
     pub reexecuted: u64,
+    /// manager round-trip frames dropped and retried under the net-fault
+    /// mirror (`SimParams::net_fault_rate`); 0 on a clean wire
+    pub retried_frames: u64,
     pub tiles: usize,
 }
 
@@ -482,6 +496,42 @@ fn simulate_impl(params: &SimParams, mut trace: Option<&mut Vec<TraceEvent>>) ->
     let io_time_per_tile =
         params.tile_io_base * (1.0 + params.io_contention * (n_nodes as f64 - 1.0));
 
+    // net-fault mirror: the k-th fetch-issuing round-trip drops its frame
+    // while hash(fault_seed, k, attempt) says so, paying the live
+    // RetryPolicy's backoff per drop.  The last attempt always lands (the
+    // live path surfaces an error past the budget; the mirror keeps the
+    // run alive), so faults delay fetches without losing them.
+    let net_retry = crate::net::RetryPolicy::rpc();
+    let mut rtt_seq = 0u64;
+    let mut retried_frames = 0u64;
+    let net_delay_of = |rtt: u64| -> (f64, u64) {
+        if params.net_fault_rate <= 0.0 {
+            return (0.0, 0);
+        }
+        let threshold = (params.net_fault_rate.min(1.0) * 1e6) as u64;
+        let mut delay = 0.0;
+        let mut drops = 0u32;
+        while (drops + 1) < net_retry.max_attempts.max(1) {
+            let h = crate::faults::splitmix64(
+                params.fault_seed ^ rtt.wrapping_mul(0x9E37_79B9_7F4A_7C15) ^ ((drops as u64) << 48),
+            );
+            if h % 1_000_000 >= threshold {
+                break;
+            }
+            delay += net_retry.backoff_ms(drops) as f64 / 1e3;
+            drops += 1;
+        }
+        (delay, drops as u64)
+    };
+    macro_rules! net_delay {
+        () => {{
+            let (d, n) = net_delay_of(rtt_seq);
+            rtt_seq += 1;
+            retried_frames += n;
+            d
+        }};
+    }
+
     let mut heap: BinaryHeap<Reverse<(u64, u64, usize)>> = BinaryHeap::new();
     let mut events: Vec<Event> = Vec::new();
     let mut seq = 0u64;
@@ -536,7 +586,7 @@ fn simulate_impl(params: &SimParams, mut trace: Option<&mut Vec<TraceEvent>>) ->
             next_chunk += 1;
             nodes[node].fetching += 1;
             io_total += io_time_per_tile;
-            push_event!(io_time_per_tile, Event::Fetched { node, chunk });
+            push_event!(net_delay!() + io_time_per_tile, Event::Fetched { node, chunk });
         }
     }
 
@@ -720,7 +770,7 @@ fn simulate_impl(params: &SimParams, mut trace: Option<&mut Vec<TraceEvent>>) ->
                 let s = survivor(chunk);
                 nodes[s].fetching += 1;
                 io_total += io_time_per_tile;
-                push_event!(now + io_time_per_tile, Event::Fetched { node: s, chunk });
+                push_event!(now + net_delay!() + io_time_per_tile, Event::Fetched { node: s, chunk });
                 s
             }
             Event::OpDone { node, .. } if dead[node] => node,
@@ -794,7 +844,7 @@ fn simulate_impl(params: &SimParams, mut trace: Option<&mut Vec<TraceEvent>>) ->
                     next_chunk += 1;
                     nodes[node].fetching += 1;
                     io_total += io_time_per_tile;
-                    push_event!(now + io_time_per_tile, Event::Fetched { node, chunk: c });
+                    push_event!(now + net_delay!() + io_time_per_tile, Event::Fetched { node, chunk: c });
                 }
                 node
             }
@@ -888,7 +938,7 @@ fn simulate_impl(params: &SimParams, mut trace: Option<&mut Vec<TraceEvent>>) ->
                                 node_state.fetching += 1;
                                 io_total += io_time_per_tile;
                                 push_event!(
-                                    now + io_time_per_tile,
+                                    now + net_delay!() + io_time_per_tile,
                                     Event::Fetched { node, chunk: c }
                                 );
                             }
@@ -925,7 +975,7 @@ fn simulate_impl(params: &SimParams, mut trace: Option<&mut Vec<TraceEvent>>) ->
                             next_chunk += 1;
                             node_state.fetching += 1;
                             io_total += io_time_per_tile;
-                            push_event!(now + io_time_per_tile, Event::Fetched { node, chunk: c });
+                            push_event!(now + net_delay!() + io_time_per_tile, Event::Fetched { node, chunk: c });
                         }
                     }
                 }
@@ -964,6 +1014,7 @@ fn simulate_impl(params: &SimParams, mut trace: Option<&mut Vec<TraceEvent>>) ->
         steal_migrations,
         cold_rereads,
         reexecuted,
+        retried_frames,
         tiles: tiles_done,
     }
 }
@@ -1138,6 +1189,40 @@ mod tests {
             .iter()
             .filter(|e| e.kind == EventKind::OpEnd)
             .all(|e| e.dur_us > 0 && !e.name.is_empty()));
+    }
+
+    #[test]
+    fn net_faults_delay_but_never_lose_tiles() {
+        let mut p = base(30);
+        p.n_nodes = 2;
+        let clean = simulate(&p);
+        assert_eq!(clean.retried_frames, 0);
+        p.net_fault_rate = 0.3;
+        p.fault_seed = 11;
+        let faulty = simulate(&p);
+        // every tile still completes — faults delay fetches, never drop them
+        assert_eq!(faulty.tiles, 30);
+        assert!(faulty.retried_frames > 0, "30% drop rate must retry something");
+        assert!(
+            faulty.makespan > clean.makespan,
+            "retry backoff must cost wall-clock: {} !> {}",
+            faulty.makespan,
+            clean.makespan
+        );
+        // the drop pattern is a pure function of the fault seed
+        let again = simulate(&p);
+        assert_eq!(again.makespan, faulty.makespan);
+        assert_eq!(again.retried_frames, faulty.retried_frames);
+        // a different fault seed lands the drops elsewhere (same count
+        // class, different schedule) without changing completion
+        p.fault_seed = 12;
+        let other = simulate(&p);
+        assert_eq!(other.tiles, 30);
+        // tracing must not perturb the faulty schedule either
+        p.fault_seed = 11;
+        let (traced, _) = simulate_traced(&p);
+        assert_eq!(traced.makespan, faulty.makespan);
+        assert_eq!(traced.retried_frames, faulty.retried_frames);
     }
 
     #[test]

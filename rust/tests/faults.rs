@@ -1,0 +1,336 @@
+//! Chaos integration: seeded fault plans over real sockets.
+//!
+//! Every test follows the same shape — run the WSI workflow clean, run it
+//! again under an active fault plan, and assert the chaotic run completes
+//! with *bit-identical* reduce outputs while the injection counters show
+//! the faults actually fired.  Robustness that only works when nothing
+//! goes wrong is not robustness.
+
+use htap::app::{build_workflow, stage_bindings, AppParams};
+use htap::config::RunConfig;
+use htap::coordinator::{
+    checkpoint, worker::run_worker_staged, AssignPolicy, Manager, WorkRequest, WorkSource,
+    WorkerStaging,
+};
+use htap::data::staging::{ChunkSource, FaultySource, SpillTier};
+use htap::data::{StagingCache, SynthConfig, SynthSource};
+use htap::faults::{FaultPlan, Faults, Site};
+use htap::metrics::{MetricsHub, MetricsReport};
+use htap::net::{ManagerServer, RemoteManager, RetryPolicy};
+use htap::obs::{Registry, Tracer};
+use htap::runtime::calibrate::SharedProfiles;
+use htap::runtime::{ArtifactManifest, Value};
+use std::sync::Arc;
+
+const TILE: usize = 64;
+const SEED: u64 = 31;
+
+fn worker_cfg(n_tiles: usize) -> RunConfig {
+    RunConfig {
+        tile_size: TILE,
+        n_tiles,
+        cpu_workers: 1,
+        gpu_workers: 0,
+        window: 2,
+        // fast heartbeat: a completion swallowed by a torn-down socket is
+        // replayed at the next heartbeat-driven reconnect, so chaos tests
+        // recover in tenths of seconds instead of lease terms
+        heartbeat_ms: 100,
+        lease_ms: 1000,
+        ..Default::default()
+    }
+}
+
+/// Run one full staged TCP worker against `addrs` with `faults` armed on
+/// its RPC layer (and optionally on a spill tier), returning its report.
+#[allow(clippy::too_many_arguments)]
+fn run_chaos_worker(
+    addrs: Vec<String>,
+    workflow: Arc<htap::dataflow::Workflow>,
+    n_tiles: usize,
+    worker_id: u64,
+    faults: Faults,
+    registry: Arc<Registry>,
+    spill: Option<SpillTier>,
+    cap: usize,
+) -> MetricsReport {
+    let source = Arc::new(
+        RemoteManager::connect_opts(
+            &addrs,
+            &registry,
+            Tracer::disabled(),
+            faults,
+            RetryPolicy::reconnect(),
+        )
+        .unwrap(),
+    );
+    let chunks = Arc::new(SynthSource::new(SynthConfig::for_tile_size(TILE, SEED), n_tiles));
+    let staging = WorkerStaging {
+        cache: StagingCache::new_tiered(chunks, cap, 2, spill),
+        worker_id,
+        prefetch_budget: 2,
+    };
+    let metrics = Arc::new(MetricsHub::new());
+    run_worker_staged(
+        source,
+        workflow,
+        worker_cfg(n_tiles),
+        Arc::new(ArtifactManifest::discover_or_empty()),
+        metrics.clone(),
+        stage_bindings(),
+        SharedProfiles::fresh(),
+        Some(staging),
+    )
+    .unwrap();
+    metrics.report()
+}
+
+/// One clean staged run (the fault-free control); returns the reduce
+/// outputs every chaotic run must reproduce bit-for-bit.
+fn clean_reduce_outputs(n_tiles: usize) -> Vec<Value> {
+    let workflow = Arc::new(build_workflow(&AppParams::for_tile_size(TILE), true));
+    let manager = Manager::new_staged(workflow.clone(), n_tiles, AssignPolicy::default()).unwrap();
+    let server = ManagerServer::bind("127.0.0.1:0", manager.clone()).unwrap();
+    let addr = server.local_addr();
+    let srv = std::thread::spawn(move || server.serve());
+    let registry = Arc::new(Registry::new());
+    run_chaos_worker(
+        vec![addr],
+        workflow,
+        n_tiles,
+        1,
+        Faults::disabled(),
+        registry,
+        None,
+        16,
+    );
+    srv.join().unwrap().unwrap();
+    assert!(manager.error().is_none(), "{:?}", manager.error());
+    manager.reduce_outputs("classification").expect("classification ran")
+}
+
+/// Run the workflow under `plan` and return (reduce outputs, faults
+/// handle, registry, report, manager stale-completion count).
+fn chaotic_reduce_outputs(
+    n_tiles: usize,
+    plan: &str,
+    seed: u64,
+    spill_dir: Option<&std::path::Path>,
+) -> (Vec<Value>, Faults, Arc<Registry>, MetricsReport, u64) {
+    let workflow = Arc::new(build_workflow(&AppParams::for_tile_size(TILE), true));
+    let manager = Manager::new_staged(workflow.clone(), n_tiles, AssignPolicy::default()).unwrap();
+    let server = ManagerServer::bind("127.0.0.1:0", manager.clone()).unwrap();
+    let addr = server.local_addr();
+    let srv = std::thread::spawn(move || server.serve());
+    let registry = Arc::new(Registry::new());
+    let faults = Faults::armed(&FaultPlan::parse(plan, seed).unwrap(), &registry);
+    let (spill, cap) = match spill_dir {
+        Some(dir) => {
+            let mut tier = SpillTier::create(dir.join("worker-1"), 32).unwrap();
+            tier.set_faults(faults.clone());
+            (Some(tier), 1) // one-slot memory tier forces spill traffic
+        }
+        None => (None, 16),
+    };
+    let report = run_chaos_worker(
+        vec![addr],
+        workflow,
+        n_tiles,
+        1,
+        faults.clone(),
+        registry.clone(),
+        spill,
+        cap,
+    );
+    srv.join().unwrap().unwrap();
+    assert!(manager.error().is_none(), "{:?}", manager.error());
+    let (done, total) = manager.progress();
+    assert_eq!(done, total, "the workflow must complete under plan '{plan}'");
+    let outs = manager.reduce_outputs("classification").expect("classification ran");
+    (outs, faults, registry, report, manager.stale_completions())
+}
+
+#[test]
+fn dropped_and_delayed_frames_complete_bit_identically() {
+    let n_tiles = 5;
+    let baseline = clean_reduce_outputs(n_tiles);
+    // the first three data-plane frames drop outright (retried in place),
+    // two more stall 5 ms, and the first work request pauses the worker —
+    // rate-1 rules with #caps make every injection deterministic
+    let plan = "frame-drop=1#3,frame-delay=1@5#2,worker-pause=1@10#1";
+    let (outs, faults, registry, _, _) = chaotic_reduce_outputs(n_tiles, plan, 7, None);
+    assert_eq!(outs, baseline, "reduce outputs must survive frame chaos bit-for-bit");
+    assert_eq!(faults.fired(Site::FrameDrop), 3);
+    assert_eq!(faults.fired(Site::FrameDelay), 2);
+    assert_eq!(faults.fired(Site::WorkerPause), 1);
+    // counters export through the shared registry for operators
+    let snap = registry.snapshot();
+    assert_eq!(snap.counter("faults.frame-drop.injected"), 3);
+    assert_eq!(snap.counter("faults.frame-delay.injected"), 2);
+    // dropped frames retry in place on a healthy socket: no reconnect
+    assert_eq!(snap.counter("net.reconnects"), 0);
+}
+
+#[test]
+fn corrupt_frames_tear_down_reconnect_and_still_complete() {
+    let n_tiles = 5;
+    let baseline = clean_reduce_outputs(n_tiles);
+    // two corrupted frames: the server rejects each at decode and drops
+    // the connection, so the worker must reconnect, re-identify, and
+    // resume — replaying any completion the dead socket swallowed
+    let plan = "frame-corrupt=1#2";
+    let (outs, faults, registry, _, _) = chaotic_reduce_outputs(n_tiles, plan, 3, None);
+    assert_eq!(outs, baseline, "reduce outputs must survive corrupt-frame teardown");
+    assert_eq!(faults.fired(Site::FrameCorrupt), 2);
+    assert!(
+        registry.snapshot().counter("net.reconnects") >= 1,
+        "a corrupted frame must force at least one reconnect"
+    );
+}
+
+#[test]
+fn spill_io_faults_degrade_to_plain_eviction_not_death() {
+    let n_tiles = 6;
+    let baseline = clean_reduce_outputs(n_tiles);
+    let dir = std::env::temp_dir().join(format!("htap-faults-spill-{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&dir);
+    // the first two spill writes refuse: the tier degrades those
+    // evictions to plain drops (re-read from source later) instead of
+    // failing the run
+    let plan = "spill-io=1#2";
+    let (outs, faults, _, report, _) = chaotic_reduce_outputs(n_tiles, plan, 5, Some(&dir));
+    assert_eq!(outs, baseline, "reduce outputs must survive spill I/O errors");
+    assert_eq!(faults.fired(Site::SpillIo), 2);
+    // the one-slot memory tier still demoted once the fault budget drained
+    assert!(report.staging.spill_evicted > 0, "spill tier never engaged after degradation");
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+#[test]
+fn faulty_source_surfaces_bounded_read_errors() {
+    // SourceIo is the one fatal site (a worker cannot invent tile bytes);
+    // the wrapper surfaces it as a plain load error the manager's lease
+    // machinery handles, and the #cap bounds the blast radius
+    let inner = Arc::new(SynthSource::new(SynthConfig::for_tile_size(TILE, SEED), 4));
+    let registry = Registry::new();
+    let faults =
+        Faults::armed(&FaultPlan::parse("source-io=1#1,source-slow=1@1#1", 9).unwrap(), &registry);
+    let src = FaultySource::wrap(inner.clone(), faults.clone());
+    assert!(src.load(0).is_err(), "the first read must fail");
+    // past the cap the wrapper is transparent (bit-identical payloads)
+    assert_eq!(src.load(0).unwrap(), inner.load(0).unwrap());
+    assert_eq!(faults.fired(Site::SourceIo), 1);
+    assert_eq!(faults.fired(Site::SourceSlow), 1);
+    assert_eq!(src.n_chunks(), 4);
+    assert!(src.describe().starts_with("faulty("));
+}
+
+#[test]
+fn duplicate_completions_are_absorbed_idempotently() {
+    let n_tiles = 3;
+    let workflow = Arc::new(build_workflow(&AppParams::for_tile_size(TILE), true));
+    let manager = Manager::new_staged(workflow.clone(), n_tiles, AssignPolicy::default()).unwrap();
+    let batch =
+        manager.request_work(&WorkRequest { capacity: 1, worker: 1, ..Default::default() });
+    assert_eq!(batch.assignments.len(), 1);
+    let a = &batch.assignments[0];
+    let chunks = Arc::new(SynthSource::new(SynthConfig::for_tile_size(TILE, SEED), n_tiles));
+    let payload = chunks.load(a.chunk).unwrap();
+    let outs = htap::dataflow::run_stage_serial(&workflow.stages[a.stage_idx], &payload).unwrap();
+    // the replay ring can deliver the same completion twice after a
+    // reconnect; the manager must count the work exactly once
+    manager.complete(a.instance_id, outs.clone());
+    let done_once = manager.progress().0;
+    manager.complete(a.instance_id, outs.clone());
+    manager.complete(a.instance_id, outs);
+    assert_eq!(manager.progress().0, done_once, "duplicates must not advance progress");
+    assert_eq!(manager.stale_completions(), 2, "both duplicates are counted as stale");
+}
+
+#[test]
+fn worker_fails_over_to_promoted_standby_without_reexecution() {
+    let n_tiles = 4;
+    let workflow = Arc::new(build_workflow(&AppParams::for_tile_size(TILE), false));
+    let ckpt_dir =
+        std::env::temp_dir().join(format!("htap-faults-failover-{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&ckpt_dir);
+
+    // the primary: journal on, two completions land, checkpoint, crash
+    let primary =
+        Manager::new_staged(workflow.clone(), n_tiles, AssignPolicy::default()).unwrap();
+    primary.enable_journal();
+    let batch =
+        primary.request_work(&WorkRequest { capacity: 2, worker: 1, ..Default::default() });
+    assert_eq!(batch.assignments.len(), 2);
+    let chunks = Arc::new(SynthSource::new(SynthConfig::for_tile_size(TILE, SEED), n_tiles));
+    for a in &batch.assignments {
+        let payload = chunks.load(a.chunk).unwrap();
+        let outs =
+            htap::dataflow::run_stage_serial(&workflow.stages[a.stage_idx], &payload).unwrap();
+        primary.complete(a.instance_id, outs);
+    }
+    checkpoint::write_checkpoint(&ckpt_dir, &primary).unwrap();
+    drop(primary);
+
+    // a dead address: bind a port, note it, release it — connects now
+    // refuse, exactly what a SIGKILLed primary's address does
+    let dead_addr = {
+        let l = std::net::TcpListener::bind("127.0.0.1:0").unwrap();
+        l.local_addr().unwrap().to_string()
+    };
+
+    // the promoted standby: restore the snapshot, serve on a fresh port
+    let standby =
+        Manager::new_staged(workflow.clone(), n_tiles, AssignPolicy::default()).unwrap();
+    standby.enable_journal();
+    let (journal, catalog) = checkpoint::load_checkpoint(&ckpt_dir).unwrap().expect("snapshot");
+    let replayed = standby.restore_from(journal, catalog).unwrap();
+    assert_eq!(replayed, 2);
+    let server = ManagerServer::bind("127.0.0.1:0", standby.clone()).unwrap();
+    let live_addr = server.local_addr();
+    let srv = std::thread::spawn(move || server.serve());
+
+    // the worker's failover list leads with the dead primary: the dial
+    // must rotate through it onto the standby under the retry policy
+    let registry = Arc::new(Registry::new());
+    let report = run_chaos_worker(
+        vec![dead_addr, live_addr],
+        workflow,
+        n_tiles,
+        1,
+        Faults::disabled(),
+        registry,
+        None,
+        16,
+    );
+    srv.join().unwrap().unwrap();
+    assert!(standby.error().is_none(), "{:?}", standby.error());
+    let (done, total) = standby.progress();
+    assert_eq!(done, total);
+    // exact no-reexecution accounting: the worker ran only what the
+    // checkpoint had not already journalled — the remaining segmentation
+    // instances (9 ops each) plus every features instance (3 ops each)
+    assert_eq!(report.total_executed(), (9 * (n_tiles - 2) + 3 * n_tiles) as u64);
+    let _ = std::fs::remove_dir_all(&ckpt_dir);
+}
+
+#[test]
+fn identical_plans_inject_identically_and_seeds_move_the_chaos() {
+    // the injection verdict is a pure function of (seed, site, occurrence):
+    // two handles armed from the same plan agree call-for-call, and a
+    // different seed produces a different (but equally reproducible) trace
+    let plan = FaultPlan::parse("frame-drop=0.4", 21).unwrap();
+    let r1 = Registry::new();
+    let r2 = Registry::new();
+    let a = Faults::armed(&plan, &r1);
+    let b = Faults::armed(&plan, &r2);
+    let trace_a: Vec<bool> = (0..64).map(|_| a.inject(Site::FrameDrop).is_some()).collect();
+    let trace_b: Vec<bool> = (0..64).map(|_| b.inject(Site::FrameDrop).is_some()).collect();
+    assert_eq!(trace_a, trace_b, "same plan + seed must inject identically");
+    assert!(trace_a.iter().any(|&x| x), "a 40% rate over 64 draws must fire");
+    assert!(!trace_a.iter().all(|&x| x), "a 40% rate over 64 draws must also pass");
+    let other = Faults::armed(&FaultPlan::parse("frame-drop=0.4", 22).unwrap(), &Registry::new());
+    let trace_c: Vec<bool> =
+        (0..64).map(|_| other.inject(Site::FrameDrop).is_some()).collect();
+    assert_ne!(trace_a, trace_c, "a different seed must move the chaos");
+}

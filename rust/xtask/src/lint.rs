@@ -88,7 +88,7 @@ const PANIC_DENY: &[&str] =
 
 /// Directories (relative to `src/`) where the panic rule applies.
 const PANIC_DIRS: &[&str] =
-    &["coordinator/", "data/", "net/", "obs/", "runtime/", "service/"];
+    &["coordinator/", "data/", "faults/", "net/", "obs/", "runtime/", "service/"];
 
 /// Files exempt from the panic rule.  The model scheduler is test-only
 /// machinery compiled under `cfg(htap_model)`; panicking on internal

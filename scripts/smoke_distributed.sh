@@ -337,3 +337,71 @@ cmp -s "$log/reduce-edge-base.txt" "$log/reduce-edge-svc.txt" || {
 kill "$serve_pid" 2>/dev/null || true
 wait "$serve_pid" 2>/dev/null || true
 echo "multi-tenant service smoke OK (2 tenants, reduce outputs bit-identical, graceful drain)"
+
+# --- chaos-failover phase ---------------------------------------------------
+# The full robustness stack at once: a fault plan drops 10% of data-plane
+# frames and fails the first spill writes, the worker lists both managers
+# in --connect, and the primary is SIGKILLed mid-run.  The standby must
+# promote after --promote-after-ms of silence, restore the primary's
+# checkpoint, absorb the worker's reconnect + replay, and finish with
+# reduce outputs bit-identical to the fault-free baseline from the
+# kill-and-rejoin phase (same workflow, same tiles).
+echo "=== chaos-failover phase (ports $((port + 300))/$((port + 301))) ===" >&2
+pri_port=$((port + 300))
+sby_port=$((port + 301))
+"$bin" manager --listen "127.0.0.1:$pri_port" "${common[@]}" --workers 1 \
+    --checkpoint-dir "$log/ha-ckpt" >"$log/mgr-pri.txt" 2>&1 &
+pri=$!
+"$bin" manager --listen "127.0.0.1:$sby_port" "${common[@]}" --workers 1 \
+    --checkpoint-dir "$log/ha-ckpt" \
+    --standby --primary "127.0.0.1:$pri_port" --promote-after-ms 1500 \
+    >"$log/mgr-sby.txt" 2>&1 &
+sby=$!
+sleep 1
+# frame drops retry in place under the rpc policy; spill-io failures
+# degrade the one-chunk memory tier to plain eviction — neither may cost
+# correctness.  HTAP_FAULTS (lowest precedence) + --fault-seed keeps the
+# chaos reproducible
+HTAP_FAULTS='frame-drop=0.1#20,spill-io=1#4' \
+"$bin" worker --connect "127.0.0.1:$pri_port,127.0.0.1:$sby_port" --worker-id 1 \
+    "${common[@]}" --cpus 1 --gpus 0 --window 2 --chunk-source synth \
+    --read-latency-ms 250 --staging-cap 1 --spill-dir "$log/ha-spill" \
+    --spill-cap 16 --fault-seed 7 --heartbeat-ms 100 --lease-ms 3000 \
+    >"$log/worker-ha.txt" 2>&1 &
+ha_worker=$!
+# let the primary checkpoint a few seconds of progress, then kill it dead
+sleep 3
+kill -9 "$pri" 2>/dev/null || true
+wait "$pri" 2>/dev/null || true
+rc=0
+wait "$ha_worker" || rc=$?
+wait "$sby" || rc=$?
+if [[ $rc -ne 0 ]]; then
+    echo "chaos-failover phase FAILED (rc=$rc)" >&2
+    cat "$log/mgr-sby.txt" "$log/worker-ha.txt" >&2
+    exit "$rc"
+fi
+grep -q "standby: promoting" "$log/mgr-sby.txt" || {
+    echo "the standby never promoted" >&2
+    cat "$log/mgr-sby.txt" >&2
+    exit 1
+}
+grep -q "workflow complete: $((kr_tiles + 1))/$((kr_tiles + 1))" "$log/mgr-sby.txt" || {
+    echo "the promoted standby did not finish the workflow" >&2
+    cat "$log/mgr-sby.txt" >&2
+    exit 1
+}
+grep "^reduce '" "$log/mgr-sby.txt" >"$log/reduce-ha.txt"
+cmp -s "$log/reduce-base.txt" "$log/reduce-ha.txt" || {
+    echo "reduce outputs diverged across the chaos failover:" >&2
+    diff "$log/reduce-base.txt" "$log/reduce-ha.txt" >&2 || true
+    exit 1
+}
+# the blast radius must be on record: the worker prints per-site counters
+# and the plan's frame drops must actually have fired
+grep -Eq "^faults: .*frame-drop=[1-9]" "$log/worker-ha.txt" || {
+    echo "worker reported no injected frame drops:" >&2
+    grep "^faults:" "$log/worker-ha.txt" >&2 || echo "(no faults line at all)" >&2
+    exit 1
+}
+echo "chaos-failover smoke OK (frame drops + spill faults + primary SIGKILL, reduce outputs bit-identical)"
